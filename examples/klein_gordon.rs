@@ -1,0 +1,71 @@
+//! Klein–Gordon equation via a DOF-trained PINN.
+//!
+//! `u_tt − Δ_x u + m² u = f` on `[0,1] × [0,1]`: the coefficient matrix
+//! `A = diag(−1, +1)` is **indefinite** — the "general operator" class that
+//! motivates DOF over Forward Laplacian (which only handles `A = I`). The
+//! decomposition produces `D = diag(−1, +1)` and the forward pass contracts
+//! tangents through those signs.
+//!
+//! ```sh
+//! cargo run --release --example klein_gordon [-- --steps 400]
+//! ```
+
+use dof::graph::Act;
+use dof::nn::{Mlp, MlpSpec};
+use dof::pde::klein_gordon;
+use dof::pde::trainer::{PinnConfig, PinnTrainer};
+use dof::train::AdamConfig;
+use dof::util::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let steps = args.usize_or("steps", 400);
+    let mass = args.f64_or("mass", 1.0);
+
+    let problem = klein_gordon(1, mass);
+    println!(
+        "problem: {} | A signs: +{} / −{} (indefinite) | c = m² = {}",
+        problem.name,
+        problem.operator.ldl.positive_directions(),
+        problem.operator.rank() - problem.operator.ldl.positive_directions(),
+        mass * mass
+    );
+
+    let model = Mlp::init(
+        MlpSpec {
+            in_dim: 2,
+            hidden: args.usize_or("hidden", 48),
+            layers: args.usize_or("layers", 3),
+            out_dim: 1,
+            act: Act::Tanh,
+        },
+        args.u64_or("seed", 0),
+    );
+
+    let cfg = PinnConfig {
+        interior_batch: args.usize_or("batch", 128),
+        boundary_batch: 64,
+        boundary_weight: 10.0,
+        adam: AdamConfig {
+            lr: args.f64_or("lr", 2e-3),
+            ..Default::default()
+        },
+        seed: 0,
+    };
+    let mut trainer = PinnTrainer::new(problem, model, cfg);
+
+    println!("\nstep   residual      boundary      total");
+    for step in 0..steps {
+        let r = trainer.train_step();
+        if step % (steps / 10).max(1) == 0 || step + 1 == steps {
+            println!(
+                "{:>5}  {:.4e}   {:.4e}   {:.4e}",
+                r.step, r.residual_loss, r.boundary_loss, r.total_loss
+            );
+        }
+    }
+    let err = trainer.rel_l2_error(4096);
+    println!("\nrelative L2 error vs manufactured solution: {err:.4e}");
+    assert!(err.is_finite());
+    println!("klein_gordon OK");
+}

@@ -1,0 +1,163 @@
+//! END-TO-END VALIDATION DRIVER (recorded in EXPERIMENTS.md).
+//!
+//! Proves all three layers compose on a real workload:
+//!
+//! 1. **Rust path** — train a PINN on the 2+1-D non-homogeneous heat
+//!    equation for several hundred Adam steps, with the residual computed
+//!    by the DOF engine and gradients taken *through* the operator
+//!    (third-order AD); log the loss curve and the final relative-L2 error
+//!    against the manufactured solution.
+//! 2. **XLA path** — train the same PDE through the AOT artifact
+//!    `pinn_heat_step.hlo.txt` (jax-lowered loss+grad, Rust-owned Adam),
+//!    executing on the PJRT CPU client that the serving stack uses.
+//! 3. **Cross-check** — one residual batch evaluated on both the Rust
+//!    engine and the `dof_mlp_*` artifact family must agree (done in
+//!    `cargo test --test xla_cross_check`; here we verify the loss curves
+//!    of both training paths fall).
+//!
+//! ```sh
+//! cargo run --release --example train_pinn_e2e [-- --steps 500]
+//! ```
+
+use dof::graph::Act;
+use dof::nn::serialize::read_dofw;
+use dof::nn::{Mlp, MlpSpec};
+use dof::pde::heat_equation;
+use dof::pde::trainer::{PinnConfig, PinnTrainer};
+use dof::runtime::{ArtifactRegistry, Executor};
+use dof::train::{Adam, AdamConfig};
+use dof::util::{Args, CsvTable, Xoshiro256};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let steps = args.usize_or("steps", 500);
+    let out_csv = args.get_or("csv", "target/e2e_loss_curve.csv");
+
+    // ---------------------------------------------------------------
+    // Path 1: pure-Rust DOF training (engine + tape + Adam).
+    // ---------------------------------------------------------------
+    println!("=== path 1: Rust DOF engine training ===");
+    let problem = heat_equation(2);
+    println!(
+        "{}: N = {}, rank(A) = {} (low-rank operator for free)",
+        problem.name,
+        problem.operator.n(),
+        problem.operator.rank()
+    );
+    let model = Mlp::init(
+        MlpSpec {
+            in_dim: 3,
+            hidden: args.usize_or("hidden", 48),
+            layers: args.usize_or("layers", 3),
+            out_dim: 1,
+            act: Act::Tanh,
+        },
+        0,
+    );
+    println!("model: {} params", model.spec.param_count());
+    let cfg = PinnConfig {
+        interior_batch: 128,
+        boundary_batch: 64,
+        boundary_weight: 10.0,
+        adam: AdamConfig { lr: 2e-3, ..Default::default() },
+        seed: 0,
+    };
+    let mut trainer = PinnTrainer::new(problem, model, cfg);
+    let mut curve = CsvTable::new(vec!["step", "rust_residual", "rust_total"]);
+    let t0 = std::time::Instant::now();
+    let mut rust_losses = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let r = trainer.train_step();
+        rust_losses.push(r.total_loss);
+        curve.push(vec![
+            r.step.to_string(),
+            format!("{:.6e}", r.residual_loss),
+            format!("{:.6e}", r.total_loss),
+        ]);
+        if step % (steps / 10).max(1) == 0 || step + 1 == steps {
+            println!(
+                "step {:>5}  residual {:.4e}  total {:.4e}",
+                r.step, r.residual_loss, r.total_loss
+            );
+        }
+    }
+    let rust_secs = t0.elapsed().as_secs_f64();
+    let err = trainer.rel_l2_error(4096);
+    println!(
+        "rust path: {steps} steps in {rust_secs:.1}s ({:.1} steps/s), rel-L2 error {err:.4e}",
+        steps as f64 / rust_secs
+    );
+    let first5: f64 = rust_losses[..5].iter().sum::<f64>() / 5.0;
+    let last5: f64 = rust_losses[steps - 5..].iter().sum::<f64>() / 5.0;
+    anyhow::ensure!(
+        last5 < 0.2 * first5,
+        "rust loss should drop ≥5×: {first5:.3e} → {last5:.3e}"
+    );
+
+    // ---------------------------------------------------------------
+    // Path 2: XLA artifact training (jax-lowered step, Rust Adam).
+    // ---------------------------------------------------------------
+    println!("\n=== path 2: XLA pinn_heat_step artifact training ===");
+    match ArtifactRegistry::open(args.get_or("artifacts", "artifacts")) {
+        Err(e) => {
+            println!("skipping XLA path ({e}); run `make artifacts` first");
+        }
+        Ok(reg) => {
+            let mut exec = Executor::cpu()?;
+            exec.load("pinn_heat_step", &reg.path("pinn_heat_step")?)?;
+            let theta0 = read_dofw(reg.dir.join("pinn_heat_theta0.dofw"))?;
+            let mut theta: Vec<f32> =
+                theta0[0].tensor.data().iter().map(|&v| v as f32).collect();
+            let p = theta.len();
+            let batch = reg.batch_of("pinn_heat_step").unwrap_or(128);
+            println!("artifact: θ ∈ R^{p}, batch {batch}");
+
+            let mut adam = Adam::new(p, AdamConfig { lr: 2e-3, ..Default::default() });
+            let mut rng = Xoshiro256::new(1);
+            let xla_steps = args.usize_or("xla-steps", steps.min(300));
+            let t1 = std::time::Instant::now();
+            let mut first_loss = 0.0f32;
+            let mut last_loss = 0.0f32;
+            let mut params64 = vec![0.0f64; p];
+            let mut grads64 = vec![0.0f64; p];
+            for step in 0..xla_steps {
+                let x: Vec<f32> =
+                    (0..batch * 3).map(|_| rng.next_f64() as f32).collect();
+                let outs =
+                    exec.run_f32("pinn_heat_step", &[(&theta, &[p]), (&x, &[batch, 3])])?;
+                let loss = outs[0][0];
+                if step == 0 {
+                    first_loss = loss;
+                }
+                last_loss = loss;
+                for (d, &s) in params64.iter_mut().zip(&theta) {
+                    *d = s as f64;
+                }
+                for (d, &s) in grads64.iter_mut().zip(&outs[1]) {
+                    *d = s as f64;
+                }
+                adam.step(&mut params64, &grads64);
+                for (d, &s) in theta.iter_mut().zip(&params64) {
+                    *d = s as f32;
+                }
+                if step % (xla_steps / 10).max(1) == 0 || step + 1 == xla_steps {
+                    println!("step {:>5}  residual loss {:.4e}", step, loss);
+                }
+            }
+            let xla_secs = t1.elapsed().as_secs_f64();
+            println!(
+                "xla path: {xla_steps} steps in {xla_secs:.1}s ({:.1} steps/s), loss {first_loss:.3e} → {last_loss:.3e}",
+                xla_steps as f64 / xla_secs
+            );
+            anyhow::ensure!(
+                (last_loss as f64) < 0.5 * first_loss as f64,
+                "xla loss should drop ≥2×"
+            );
+        }
+    }
+
+    curve.write_to(&out_csv)?;
+    println!("\nloss curve written to {out_csv}");
+    println!("train_pinn_e2e OK — all layers compose");
+    Ok(())
+}

@@ -1,0 +1,197 @@
+"""AOT pipeline: lower every serving entry point to HLO **text** in
+``artifacts/``.
+
+HLO text — not ``lowered.compiler_ir().serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the published xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Artifacts (batch sizes fixed at lowering time; the Rust batcher pads):
+
+    dof_mlp_{elliptic,lowrank,general}.hlo.txt      x[B,64] -> (phi, Lphi)
+    hessian_mlp_{elliptic,lowrank,general}.hlo.txt  x[B,64] -> (phi, Lphi)
+    dof_sparse_{elliptic,lowrank,general}.hlo.txt   x[B,64] -> (phi, Lphi)
+    hessian_sparse_general.hlo.txt                  x[B,64] -> (phi, Lphi)
+    pinn_heat_step.hlo.txt             (theta[P], x[B,3]) -> (loss, grad[P])
+    mlp_weights.dofw / sparse_weights.dofw / coeff_*.dofw / manifest.txt
+
+Weights are baked into the operator artifacts as constants (the serving
+path evaluates a fixed trained/initialized model); the PINN step keeps
+parameters as a runtime argument so Rust owns the optimizer loop.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import coeffs
+from .decomp import ldl_decompose
+from .dof_engine import dof_mlp, dof_sparse, sparse_blocks_from_a
+from .hessian_engine import hessian_operator_mlp, hessian_operator_sparse
+from .model import init_mlp, init_sparse, mlp_entries, write_dofw, make_heat_step
+
+# Serving batch for the operator artifacts.
+BATCH = 32
+SEED = 7
+# Reduced serving copies of the Table 3 architectures: same input dim and
+# depth structure, narrower hidden width so Hessian-baseline artifacts
+# compile in seconds (width does not change who-wins, only constants).
+MLP_DIMS = [64, 128, 128, 128, 1]
+SPARSE_BLOCKS = 16
+SPARSE_BLOCK_DIMS = [4, 32, 32, 8]
+HEAT_DIMS = [3, 32, 32, 1]
+HEAT_BATCH = 128
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default printer elides big arrays as `constant({...})`,
+    # silently dropping baked weights from the text round-trip. Print with
+    # full constants so the Rust loader reconstructs the exact module.
+    # Metadata must be off: jax 0.8 emits `source_end_line` etc., which the
+    # 0.5.1-era parser in the rust-side XLA rejects.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_to(path: str, fn, *example_args) -> None:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1024:.0f} KiB)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts directory (default: ../artifacts)")
+    ap.add_argument("--skip-sparse-hessian", action="store_true",
+                    help="skip the slow dense-Hessian sparse artifacts")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest = []
+
+    # ---- weights ----------------------------------------------------------
+    mlp_params = init_mlp(MLP_DIMS, SEED)
+    write_dofw(os.path.join(outdir, "mlp_weights.dofw"), mlp_entries(mlp_params))
+    manifest.append(f"mlp_weights.dofw dims={MLP_DIMS} act=tanh seed={SEED}")
+
+    sparse_params = init_sparse(SPARSE_BLOCKS, SPARSE_BLOCK_DIMS, SEED)
+    sparse_entries = []
+    for bi, stack in enumerate(sparse_params):
+        for li, (w, b) in enumerate(stack):
+            sparse_entries.append((f"blk{bi}_w{li}", np.asarray(w, np.float64)))
+            sparse_entries.append(
+                (f"blk{bi}_b{li}", np.asarray(b, np.float64).reshape(-1, 1)))
+    write_dofw(os.path.join(outdir, "sparse_weights.dofw"), sparse_entries)
+    manifest.append(
+        f"sparse_weights.dofw blocks={SPARSE_BLOCKS} dims={SPARSE_BLOCK_DIMS}")
+
+    # ---- coefficient matrices --------------------------------------------
+    mlp_ops = coeffs.table4_mlp(SEED)
+    sparse_ops = coeffs.table4_sparse(SEED)
+    for name, a in {**{f"mlp_{k}": v for k, v in mlp_ops.items()},
+                    **{f"sparse_{k}": v for k, v in sparse_ops.items()}}.items():
+        write_dofw(os.path.join(outdir, f"coeff_{name}.dofw"), [("a", a)])
+        manifest.append(f"coeff_{name}.dofw n={a.shape[0]}")
+
+    xspec = jax.ShapeDtypeStruct((BATCH, 64), jnp.float32)
+
+    # ---- MLP operator artifacts -------------------------------------------
+    for op_name, a in mlp_ops.items():
+        l_mat, d_signs = ldl_decompose(a)
+        l32 = l_mat.astype(np.float32)
+        d32 = d_signs.astype(np.float32)
+
+        def dof_fn(x, l32=l32, d32=d32):
+            phi, _, s = dof_mlp(mlp_params, x, l32, d32, "tanh",
+                                use_kernel=True, interpret=True)
+            return phi, s
+
+        lower_to(os.path.join(outdir, f"dof_mlp_{op_name}.hlo.txt"),
+                 dof_fn, xspec)
+        manifest.append(
+            f"dof_mlp_{op_name}.hlo.txt in=x[{BATCH},64]f32 out=(phi,lphi) rank={l32.shape[0]}")
+
+        # jnp-path variant: identical math through pure-XLA einsums instead
+        # of the interpret-mode Pallas kernel. On CPU the interpreter's
+        # emulation HLO (grid loops, bounds checks) dominates; this variant
+        # is the serving-optimal CPU artifact (see EXPERIMENTS.md §Perf).
+        def dof_jnp_fn(x, l32=l32, d32=d32):
+            phi, _, s = dof_mlp(mlp_params, x, l32, d32, "tanh",
+                                use_kernel=False)
+            return phi, s
+
+        lower_to(os.path.join(outdir, f"dof_mlp_{op_name}_jnp.hlo.txt"),
+                 dof_jnp_fn, xspec)
+        manifest.append(
+            f"dof_mlp_{op_name}_jnp.hlo.txt in=x[{BATCH},64]f32 out=(phi,lphi) rank={l32.shape[0]}")
+
+        def hes_fn(x, a=a):
+            return hessian_operator_mlp(mlp_params, x, a.astype(np.float32))
+
+        lower_to(os.path.join(outdir, f"hessian_mlp_{op_name}.hlo.txt"),
+                 hes_fn, xspec)
+        manifest.append(
+            f"hessian_mlp_{op_name}.hlo.txt in=x[{BATCH},64]f32 out=(phi,lphi)")
+
+    # ---- sparse-architecture artifacts -------------------------------------
+    for op_name, a in sparse_ops.items():
+        ls, ds = sparse_blocks_from_a(a, SPARSE_BLOCKS)
+
+        def dof_sp_fn(x, ls=ls, ds=ds):
+            phi, s = dof_sparse(sparse_params, x, ls, ds, "tanh",
+                                use_kernel=False)
+            return phi, s
+
+        lower_to(os.path.join(outdir, f"dof_sparse_{op_name}.hlo.txt"),
+                 dof_sp_fn, xspec)
+        manifest.append(
+            f"dof_sparse_{op_name}.hlo.txt in=x[{BATCH},64]f32 out=(phi,lphi)")
+
+    if not args.skip_sparse_hessian:
+        a = sparse_ops["general"]
+
+        def hes_sp_fn(x, a=a):
+            return hessian_operator_sparse(sparse_params, x,
+                                           a.astype(np.float32))
+
+        lower_to(os.path.join(outdir, "hessian_sparse_general.hlo.txt"),
+                 hes_sp_fn, xspec)
+        manifest.append(
+            f"hessian_sparse_general.hlo.txt in=x[{BATCH},64]f32 out=(phi,lphi)")
+
+    # ---- PINN train step ----------------------------------------------------
+    step, flat0 = make_heat_step(HEAT_DIMS, "tanh", SEED)
+    write_dofw(os.path.join(outdir, "pinn_heat_theta0.dofw"),
+               [("theta0", flat0.reshape(-1, 1))])
+    tspec = jax.ShapeDtypeStruct((flat0.size,), jnp.float32)
+    zspec = jax.ShapeDtypeStruct((HEAT_BATCH, 3), jnp.float32)
+    lower_to(os.path.join(outdir, "pinn_heat_step.hlo.txt"), step, tspec, zspec)
+    manifest.append(
+        f"pinn_heat_step.hlo.txt in=(theta[{flat0.size}],x[{HEAT_BATCH},3])f32 "
+        f"out=(loss,grad) dims={HEAT_DIMS}")
+
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"  wrote manifest with {len(manifest)} entries")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,64 @@
+"""Coefficient matrices of Table 4 (NumPy mirror of
+``rust/src/operators/coeff.rs``).
+
+All constructions are deterministic in a single integer seed so the same
+matrices can be rebuilt on the Rust side for cross-checks.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def elliptic_gram(n: int, rank: int, seed: int) -> np.ndarray:
+    """a_ij = sum_{k<=rank} alpha_ik alpha_jk, alpha ~ N(0,1) — PSD."""
+    rng = np.random.default_rng(seed)
+    alpha = rng.standard_normal((n, rank))
+    return alpha @ alpha.T
+
+
+def signed_diag(n: int) -> np.ndarray:
+    """diag(s), s_0 = -1, s_i = 1 — the paper's 'general' operator."""
+    a = np.eye(n)
+    a[0, 0] = -1.0
+    return a
+
+
+def block_diag_gram(blocks: int, block: int, rank: int, seed: int) -> np.ndarray:
+    """Block-diagonal Gram (Table 4 row 2, elliptic/low-rank)."""
+    rng = np.random.default_rng(seed)
+    n = blocks * block
+    a = np.zeros((n, n))
+    for l in range(blocks):
+        sigma = rng.standard_normal((block, rank))
+        g = sigma @ sigma.T
+        a[l * block:(l + 1) * block, l * block:(l + 1) * block] = g
+    return a
+
+
+def block_diag_signed(blocks: int, block: int) -> np.ndarray:
+    """Block-diagonal signed identity (Table 4 row 2, general)."""
+    n = blocks * block
+    a = np.zeros((n, n))
+    for l in range(blocks):
+        for i in range(block):
+            a[l * block + i, l * block + i] = -1.0 if i == 0 else 1.0
+    return a
+
+
+def table4_mlp(seed: int) -> dict[str, np.ndarray]:
+    """The three MLP-experiment matrices (N = 64)."""
+    return {
+        "elliptic": elliptic_gram(64, 64, seed),
+        "lowrank": elliptic_gram(64, 32, seed),
+        "general": signed_diag(64),
+    }
+
+
+def table4_sparse(seed: int) -> dict[str, np.ndarray]:
+    """The three sparse-experiment matrices (16 blocks x 4)."""
+    return {
+        "elliptic": block_diag_gram(16, 4, 4, seed),
+        "lowrank": block_diag_gram(16, 4, 2, seed),
+        "general": block_diag_signed(16, 4),
+    }

@@ -1,0 +1,45 @@
+"""Coefficient-matrix decomposition A = L^T D L (paper section 2.2).
+
+NumPy mirror of ``rust/src/linalg/decomp.rs``: eigendecompose the symmetric
+coefficient matrix, keep eigenpairs above a relative tolerance, and return
+``L = |Sigma|^{1/2} S`` (rows are scaled eigenvectors) together with the
+sign vector ``d`` (+-1 per retained direction). Rank-deficient directions
+are dropped, which is what shrinks the DOF tangent width for low-rank
+operators.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+RANK_TOL = 1e-10
+
+
+def ldl_decompose(a: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Return (L, d) with A = L.T @ diag(d) @ L, L: (r, n), d in {+-1}^r.
+
+    The input is symmetrized first; the operator only sees the symmetric
+    part of A.
+    """
+    a = np.asarray(a, dtype=np.float64)
+    assert a.ndim == 2 and a.shape[0] == a.shape[1], "A must be square"
+    sym = 0.5 * (a + a.T)
+    # eigh returns ascending eigenvalues; sort by |lambda| descending so the
+    # retained block is a prefix (matches the rust implementation).
+    vals, vecs = np.linalg.eigh(sym)
+    order = np.argsort(-np.abs(vals))
+    vals = vals[order]
+    vecs = vecs[:, order]
+    tol = np.abs(vals).max(initial=0.0) * RANK_TOL
+    keep = np.abs(vals) > tol
+    vals = vals[keep]
+    vecs = vecs[:, keep]
+    l_mat = (np.sqrt(np.abs(vals))[:, None]) * vecs.T
+    d = np.sign(vals)
+    d[d == 0] = 1.0
+    return l_mat, d
+
+
+def reconstruct(l_mat: np.ndarray, d: np.ndarray) -> np.ndarray:
+    """L.T @ diag(d) @ L — test helper."""
+    return l_mat.T @ (d[:, None] * l_mat)

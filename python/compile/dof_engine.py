@@ -1,0 +1,141 @@
+"""Layer-2: full-network DOF forward propagation in JAX.
+
+Composes the Layer-1 fused kernel (``kernels.dof_layer``) across an MLP
+stack, and implements the block-sparse architecture with *structural*
+Jacobian sparsity: per-block tangents carry only that block's rows of L
+(section 3.2 of the paper), and with a block-diagonal coefficient matrix
+the cross-block terms of eq. 9 vanish identically at the product-sum head.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .decomp import ldl_decompose
+from .kernels.dof_layer import dof_layer
+from .kernels.ref import dof_layer_ref
+
+
+def dof_mlp(params, x, l_mat, d_signs, activation="tanh", use_kernel=True,
+            interpret=True):
+    """DOF pass over an MLP parameter stack.
+
+    Args:
+        params: list of (W [M,K], b [M]) pairs; last layer has no activation.
+        x: input batch [B, N].
+        l_mat: L factor [R, N] (numpy or jnp).
+        d_signs: D diagonal [R].
+        activation: hidden activation name.
+        use_kernel: route hidden layers through the Pallas kernel (True) or
+            the pure-jnp reference (False) — numerics must match either way.
+
+    Returns:
+        (phi [B, 1], g_out [B, R, out], s_out [B, 1]); ``s_out`` is
+        ``sum_ij a_ij d2phi/dx_i dx_j`` (pure second-order part).
+    """
+    bsz = x.shape[0]
+    r = l_mat.shape[0]
+    u = x
+    g = jnp.broadcast_to(jnp.asarray(l_mat, x.dtype)[None, :, :], (bsz, r, x.shape[1]))
+    s = jnp.zeros_like(x)
+    d_signs = jnp.asarray(d_signs, x.dtype)
+
+    layer_fn = dof_layer if use_kernel else (
+        lambda *a, **k: dof_layer_ref(*a, **{kk: vv for kk, vv in k.items()
+                                             if kk == "activation"}))
+    n_layers = len(params)
+    for i, (w, b) in enumerate(params):
+        act_name = activation if i < n_layers - 1 else "identity"
+        if use_kernel:
+            # Tile sizes: keep the whole feature dim per program unless it
+            # exceeds 128 (paper dims are 256 -> two tiles).
+            m = w.shape[0]
+            bm = m if m <= 128 else 128
+            bb = bsz if bsz <= 8 else 8
+            # Fall back to full-tensor tiles when shapes do not divide.
+            if bsz % bb != 0:
+                bb = bsz
+            if m % bm != 0:
+                bm = m
+            u, g, s = dof_layer(u, g, s, jnp.asarray(w, x.dtype),
+                                jnp.asarray(b, x.dtype), d_signs,
+                                activation=act_name, block_b=bb, block_m=bm,
+                                interpret=interpret)
+        else:
+            u, g, s = dof_layer_ref(u, g, s, jnp.asarray(w, x.dtype),
+                                    jnp.asarray(b, x.dtype), d_signs,
+                                    activation=act_name)
+    return u, g, s
+
+
+def dof_operator_mlp(params, x, a_mat, activation="tanh", use_kernel=True,
+                     interpret=True):
+    """Convenience: decompose A and return (phi, L[phi]) for an MLP."""
+    l_mat, d_signs = ldl_decompose(np.asarray(a_mat))
+    phi, _, s = dof_mlp(params, x, l_mat.astype(np.float32),
+                        d_signs.astype(np.float32), activation,
+                        use_kernel, interpret)
+    return phi, s
+
+
+def dof_sparse(block_params, x, block_ls, block_ds, activation="tanh",
+               use_kernel=False, interpret=True):
+    """DOF pass over the Jacobian-sparse architecture (Appendix E).
+
+    output = sum_d prod_i [MLP^i(x_i)]_d, with a *block-diagonal* A:
+    per-block tangents only carry that block's L rows (width r_i), and the
+    cross-block sigma''-terms of eq. 9 are exactly zero because distinct
+    blocks' tangents have disjoint support through D.
+
+    Args:
+        block_params: per-block list of (W, b) stacks.
+        x: [B, N] with N = sum of block input dims.
+        block_ls: per-block L_i [r_i, n_i] (from the block-diagonal A).
+        block_ds: per-block D_i signs [r_i].
+
+    Returns:
+        (phi [B, 1], s [B, 1]).
+    """
+    k = len(block_params)
+    bsz = x.shape[0]
+    n_i = block_ls[0].shape[1]
+    # Per-block DOF tuples.
+    ys, gs, ss = [], [], []
+    for i in range(k):
+        xi = x[:, i * n_i:(i + 1) * n_i]
+        yi, gi, si = dof_mlp(block_params[i], xi, block_ls[i], block_ds[i],
+                             activation, use_kernel, interpret)
+        ys.append(yi)   # [B, d_out]
+        gs.append(gi)   # [B, r_i, d_out]
+        ss.append(si)   # [B, d_out]
+
+    # Product-sum head. For each output index d:
+    #   v    = prod_i y_i
+    #   s    = sum_i (prod_{j!=i} y_j) s_i   (cross terms vanish: disjoint D)
+    # then reduce over d.
+    y_stack = jnp.stack(ys, axis=0)              # [k, B, d_out]
+    prod_all = jnp.prod(y_stack, axis=0)         # [B, d_out]
+    phi = jnp.sum(prod_all, axis=1, keepdims=True)
+
+    s_total = jnp.zeros_like(prod_all)
+    for i in range(k):
+        # prod_{j != i} y_j — numerically safe leave-one-out product.
+        loo = jnp.prod(jnp.concatenate([y_stack[:i], y_stack[i + 1:]], axis=0),
+                       axis=0)
+        s_total = s_total + loo * ss[i]
+    s = jnp.sum(s_total, axis=1, keepdims=True)
+    return phi, s
+
+
+def sparse_blocks_from_a(a_mat: np.ndarray, blocks: int):
+    """Split a block-diagonal A into per-block (L_i, D_i) factors."""
+    n = a_mat.shape[0]
+    nb = n // blocks
+    ls, ds = [], []
+    for i in range(blocks):
+        sub = a_mat[i * nb:(i + 1) * nb, i * nb:(i + 1) * nb]
+        l_i, d_i = ldl_decompose(sub)
+        ls.append(l_i.astype(np.float32))
+        ds.append(d_i.astype(np.float32))
+    return ls, ds

@@ -1,0 +1,65 @@
+"""Layer-2 baseline: Hessian-based operator evaluation via jax.hessian.
+
+This is what a standard AutoDiff user writes (and what the paper's
+baseline measures): materialize H = d2phi/dx2 per point with
+forward-over-reverse, then contract with A. Used both as the comparator in
+the XLA benches and as ground truth for the DOF engine's unit tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_forward(params, x, activation="tanh"):
+    """Plain MLP forward, x [B, N] -> [B, 1]."""
+    act = {"tanh": jnp.tanh, "sin": jnp.sin}[activation]
+    u = x
+    for i, (w, b) in enumerate(params):
+        u = u @ w.T + b
+        if i < len(params) - 1:
+            u = act(u)
+    return u
+
+
+def sparse_forward(block_params, x, activation="tanh"):
+    """Jacobian-sparse architecture forward (Appendix E)."""
+    k = len(block_params)
+    n_i = x.shape[1] // k
+    ys = []
+    for i in range(k):
+        xi = x[:, i * n_i:(i + 1) * n_i]
+        ys.append(mlp_forward(block_params[i], xi, activation))
+    prod = ys[0]
+    for y in ys[1:]:
+        prod = prod * y
+    return jnp.sum(prod, axis=1, keepdims=True)
+
+
+def hessian_operator(forward_fn, x, a_mat):
+    """L[phi](x) = sum_ij a_ij H_ij via the full per-point Hessian.
+
+    forward_fn maps [N] -> scalar for a single point; vmapped over the
+    batch. Returns (phi [B, 1], Lphi [B, 1]).
+    """
+    a_mat = jnp.asarray(a_mat, x.dtype)
+
+    def scalar_fn(z):
+        return forward_fn(z[None, :])[0, 0]
+
+    def per_point(z):
+        h = jax.hessian(scalar_fn)(z)
+        return scalar_fn(z), jnp.sum(a_mat * h)
+
+    phi, lphi = jax.vmap(per_point)(x)
+    return phi[:, None], lphi[:, None]
+
+
+def hessian_operator_mlp(params, x, a_mat, activation="tanh"):
+    return hessian_operator(lambda z: mlp_forward(params, z, activation), x, a_mat)
+
+
+def hessian_operator_sparse(block_params, x, a_mat, activation="tanh"):
+    return hessian_operator(lambda z: sparse_forward(block_params, z, activation),
+                            x, a_mat)

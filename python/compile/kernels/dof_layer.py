@@ -1,0 +1,134 @@
+"""Layer-1 Pallas kernel: fused DOF layer propagation.
+
+One kernel invocation advances the whole DOF tuple (u, G, s) through a
+Linear+activation layer — eqs. 7-9 specialised to the MLP with the
+Appendix C fast path (the sigma'' contraction uses the *output-side*
+tangent G1, eq. 23), so the tuple never round-trips to HBM between the
+affine map and the activation epilogue.
+
+TPU mapping (see DESIGN.md section Hardware-Adaptation):
+
+* grid over (batch tiles, output-feature tiles); each program owns a
+  (bB x bM) output tile of all three streams;
+* ``u``/``s``/``G`` tiles and the ``W`` tile are staged into VMEM via
+  BlockSpec; the three matmuls (h, G1, s1) hit the MXU with the K axis
+  kept whole per program (K <= 256 in all paper configs, so a [bB*R, K] x
+  [K, bM] product fits VMEM comfortably);
+* the activation epilogue (sigma, sigma', sigma'' * sum_r d_r G1^2) is fused in
+  registers/VMEM before the single store per stream.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU numbers are estimated analytically in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import act, act_d, act_d2
+
+
+def _dof_layer_kernel(u_ref, g_ref, s_ref, w_ref, b_ref, d_ref,
+                      uo_ref, go_ref, so_ref, *, activation: str):
+    """Pallas program body for one (batch-tile, out-tile) grid cell.
+
+    Block shapes (leading grid axes already sliced away):
+        u_ref: [bB, K]     g_ref: [bB, R, K]   s_ref: [bB, K]
+        w_ref: [bM, K]     b_ref: [bM]         d_ref: [R]
+        uo_ref: [bB, bM]   go_ref: [bB, R, bM] so_ref: [bB, bM]
+    """
+    u = u_ref[...]
+    g = g_ref[...]
+    s = s_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    d_signs = d_ref[...]
+
+    bb, r, k = g.shape
+    bm = w.shape[0]
+
+    # Affine stage — three MXU matmuls sharing the W tile.
+    h = jnp.dot(u, w.T, preferred_element_type=jnp.float32) + b[None, :]
+    # Fold (B, R) so the tangent push-through is a single [bB*R, K] @ [K, bM].
+    g1 = jnp.dot(g.reshape(bb * r, k), w.T,
+                 preferred_element_type=jnp.float32).reshape(bb, r, bm)
+    s1 = jnp.dot(s, w.T, preferred_element_type=jnp.float32)
+
+    # Fused epilogue (Appendix C, eq. 23): quad uses the output-side tangent.
+    quad = jnp.einsum("r,brm->bm", d_signs, g1 * g1)
+    uo_ref[...] = act(activation, h)
+    go_ref[...] = act_d(activation, h)[:, None, :] * g1
+    so_ref[...] = act_d(activation, h) * s1 + act_d2(activation, h) * quad
+
+
+def dof_layer(u, g, s, w, b, d_signs, activation: str = "tanh",
+              block_b: int = 8, block_m: int = 128, interpret: bool = True):
+    """Fused DOF layer via pallas_call.
+
+    Shapes: u [B,K], g [B,R,K], s [B,K], w [M,K], b [M], d_signs [R].
+    Returns (u', g', s'): [B,M], [B,R,M], [B,M].
+
+    Grid: (B/bB, M/bM). Tile sizes are clamped to the actual dims; the
+    paper configs (K,M <= 256, R <= 64) keep each program's VMEM footprint
+    around (bB*R*K + bM*K + bB*R*bM) * 4 bytes ~ a few MB.
+    """
+    bsz, k = u.shape
+    _, r, _ = g.shape
+    m = w.shape[0]
+    bb = min(block_b, bsz)
+    bm = min(block_m, m)
+    assert bsz % bb == 0, f"batch {bsz} not divisible by tile {bb}"
+    assert m % bm == 0, f"out dim {m} not divisible by tile {bm}"
+
+    grid = (bsz // bb, m // bm)
+    kernel = functools.partial(_dof_layer_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),          # u
+            pl.BlockSpec((bb, r, k), lambda i, j: (i, 0, 0)),    # g
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),          # s
+            pl.BlockSpec((bm, k), lambda i, j: (j, 0)),          # w
+            pl.BlockSpec((bm,), lambda i, j: (j,)),              # b
+            pl.BlockSpec((r,), lambda i, j: (0,)),               # d_signs
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bm), lambda i, j: (i, j)),         # u'
+            pl.BlockSpec((bb, r, bm), lambda i, j: (i, 0, j)),   # g'
+            pl.BlockSpec((bb, bm), lambda i, j: (i, j)),         # s'
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, m), u.dtype),
+            jax.ShapeDtypeStruct((bsz, r, m), g.dtype),
+            jax.ShapeDtypeStruct((bsz, m), s.dtype),
+        ],
+        interpret=interpret,
+    )(u, g, s, w, b, d_signs)
+
+
+def vmem_bytes(bb: int, bm: int, k: int, r: int, dtype_bytes: int = 4) -> int:
+    """Analytic per-program VMEM footprint of the kernel (DESIGN.md Perf).
+
+    Inputs staged: u (bb*k) + g (bb*r*k) + s (bb*k) + w (bm*k) + b (bm)
+    + d (r); outputs: u' (bb*bm) + g' (bb*r*bm) + s' (bb*bm); plus the h/g1
+    intermediates (~ outputs again).
+    """
+    inputs = bb * k * 2 + bb * r * k + bm * k + bm + r
+    outputs = bb * bm * 2 + bb * r * bm
+    return (inputs + 2 * outputs) * dtype_bytes
+
+
+def mxu_utilization_estimate(bb: int, bm: int, k: int, r: int) -> float:
+    """Fraction of MXU 128x128 tile occupancy for the dominant G1 matmul.
+
+    The folded tangent matmul is [bb*r, k] @ [k, bm]; the MXU prefers both
+    output dims >= 128. Utilization ~ min(bb*r,128)/128 * min(bm,128)/128.
+    """
+    rows = min(bb * r, 128) / 128.0
+    cols = min(bm, 128) / 128.0
+    return rows * cols

@@ -1,0 +1,76 @@
+"""Pure-jnp oracle for the fused DOF layer kernel.
+
+The hot-spot of the DOF forward pass is one MLP layer's tuple propagation
+(eqs. 7-9 with the Appendix C fast path):
+
+    h  = u @ W.T + b          # pre-activation                    [B, M]
+    G1 = G @ W.T              # tangent through the affine map    [B, R, M]
+    s1 = s @ W.T              # operator stream through affine    [B, M]
+    u' = sigma(h)
+    G' = sigma'(h) * G1
+    s' = sigma'(h) * s1 + sigma''(h) * sum_r d_r * G1_r^2
+
+This module is the correctness reference the Pallas kernel is tested
+against (and is itself validated against jax.hessian in the engine tests).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def act(name: str, x):
+    if name == "tanh":
+        return jnp.tanh(x)
+    if name == "sin":
+        return jnp.sin(x)
+    if name == "identity":
+        return x
+    raise ValueError(f"unknown activation {name}")
+
+
+def act_d(name: str, x):
+    if name == "tanh":
+        t = jnp.tanh(x)
+        return 1.0 - t * t
+    if name == "sin":
+        return jnp.cos(x)
+    if name == "identity":
+        return jnp.ones_like(x)
+    raise ValueError(f"unknown activation {name}")
+
+
+def act_d2(name: str, x):
+    if name == "tanh":
+        t = jnp.tanh(x)
+        return -2.0 * t * (1.0 - t * t)
+    if name == "sin":
+        return -jnp.sin(x)
+    if name == "identity":
+        return jnp.zeros_like(x)
+    raise ValueError(f"unknown activation {name}")
+
+
+def dof_layer_ref(u, g, s, w, b, d_signs, activation: str = "tanh"):
+    """Reference fused DOF layer.
+
+    Args:
+        u: values, [B, K]
+        g: tangents, [B, R, K]
+        s: operator stream, [B, K]
+        w: weights, [M, K]
+        b: bias, [M]
+        d_signs: D diagonal (+-1), [R]
+        activation: sigma name ('identity' = affine-only layer / head)
+
+    Returns:
+        (u', g', s') with shapes [B, M], [B, R, M], [B, M].
+    """
+    h = u @ w.T + b
+    g1 = jnp.einsum("brk,mk->brm", g, w)
+    s1 = s @ w.T
+    quad = jnp.einsum("r,brm->bm", d_signs, g1 * g1)
+    u_out = act(activation, h)
+    g_out = act_d(activation, h)[:, None, :] * g1
+    s_out = act_d(activation, h) * s1 + act_d2(activation, h) * quad
+    return u_out, g_out, s_out

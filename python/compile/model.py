@@ -1,0 +1,135 @@
+"""Layer-2 model definitions: parameter init, weight export for the Rust
+side, and the PINN train-step computation that gets AOT-lowered.
+
+Python never runs at serving time — everything here exists to be lowered
+to HLO text by ``aot.py`` or to generate weights consumed by the Rust
+coordinator.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hessian_engine import mlp_forward
+
+
+def init_mlp(dims, seed: int, scale_mode: str = "lecun"):
+    """Random MLP params [(W, b), ...] as float32 numpy arrays."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for k, (n_in, n_out) in enumerate(zip(dims[:-1], dims[1:])):
+        std = 1.0 / np.sqrt(n_in) if scale_mode == "lecun" else 1.0
+        w = rng.standard_normal((n_out, n_in)).astype(np.float32) * std
+        b = (0.1 * rng.standard_normal(n_out)).astype(np.float32)
+        params.append((w, b))
+        del k
+    return params
+
+
+def init_sparse(blocks: int, block_dims, seed: int):
+    """Per-block MLP stacks for the Jacobian-sparse architecture."""
+    return [init_mlp(block_dims, seed + 1000 * i) for i in range(blocks)]
+
+
+# ---------------------------------------------------------------------------
+# .dofw weight exchange (mirror of rust/src/nn/serialize.rs)
+# ---------------------------------------------------------------------------
+
+def write_dofw(path, entries):
+    """entries: list of (name, 2-D float array). Binary payload is f64 LE."""
+    header = "dofw v1\n"
+    header += f"tensors {len(entries)}\n"
+    for name, arr in entries:
+        arr = np.asarray(arr)
+        assert arr.ndim == 2, f"{name}: dofw stores 2-D tensors"
+        header += f"{name} {arr.shape[0]} {arr.shape[1]}\n"
+    header += "@\n"
+    with open(path, "wb") as f:
+        f.write(header.encode())
+        for _, arr in entries:
+            f.write(np.asarray(arr, dtype="<f8").tobytes())
+
+
+def read_dofw(path):
+    """Inverse of write_dofw; returns list of (name, float64 array)."""
+    with open(path, "rb") as f:
+        blob = f.read()
+    sent = b"\n@\n"
+    pos = blob.index(sent)
+    lines = blob[:pos].decode().splitlines()
+    assert lines[0] == "dofw v1", lines[0]
+    count = int(lines[1].split()[1])
+    shapes = []
+    for line in lines[2:2 + count]:
+        name, rows, cols = line.split()
+        shapes.append((name, int(rows), int(cols)))
+    off = pos + len(sent)
+    out = []
+    for name, rows, cols in shapes:
+        n = rows * cols
+        arr = np.frombuffer(blob, dtype="<f8", count=n, offset=off).reshape(rows, cols)
+        off += n * 8
+        out.append((name, arr))
+    return out
+
+
+def mlp_entries(params):
+    """(W,b) stack -> dofw entries, biases as column vectors."""
+    entries = []
+    for i, (w, b) in enumerate(params):
+        entries.append((f"w{i}", np.asarray(w, dtype=np.float64)))
+        entries.append((f"b{i}", np.asarray(b, dtype=np.float64).reshape(-1, 1)))
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# PINN train step (heat equation) — AOT-lowered whole, Adam kept in Rust
+# ---------------------------------------------------------------------------
+
+def heat_residual_loss(flat_params, unravel, x, activation="tanh"):
+    """Residual loss for u_t = Laplacian_x u + q on z = (x_1..x_d, t).
+
+    The manufactured solution is u* = sin(w.z + 0.4) with w = (pi,..,pi,1),
+    matching rust/src/pde/problems.rs::heat_equation so both stacks train
+    the same problem. Derivatives here are plain JAX autodiff (this is the
+    jax-side *baseline* train step; the Rust engine trains through DOF).
+    """
+    params = unravel(flat_params)
+    d = x.shape[1] - 1
+    w_vec = jnp.array([jnp.pi] * d + [1.0], dtype=x.dtype)
+
+    def u_fn(z):
+        return mlp_forward(params, z[None, :], activation)[0, 0]
+
+    def source(z):
+        arg = jnp.dot(w_vec, z) + 0.4
+        # L[u*] = sum_i<d (-w_i^2 sin) - w_t cos  (A = diag(1..1,0), b_t=-1)
+        lap = -jnp.sum(w_vec[:d] ** 2) * jnp.sin(arg)
+        ut = w_vec[d] * jnp.cos(arg)
+        return lap - ut
+
+    def residual(z):
+        h = jax.hessian(u_fn)(z)
+        g = jax.grad(u_fn)(z)
+        lap = jnp.trace(h[:d, :d])
+        return lap - g[d] - source(z)
+
+    res = jax.vmap(residual)(x)
+    return jnp.mean(res ** 2)
+
+
+def make_heat_step(dims, activation="tanh", seed=0):
+    """Build (step_fn, flat_params0): step maps (theta, x) -> (loss, grad)."""
+    from jax.flatten_util import ravel_pytree
+
+    params0 = [(jnp.asarray(w), jnp.asarray(b)) for w, b in init_mlp(dims, seed)]
+    flat0, unravel = ravel_pytree(params0)
+
+    def step(flat_params, x):
+        loss, grad = jax.value_and_grad(heat_residual_loss)(
+            flat_params, unravel, x, activation)
+        return loss, grad
+
+    return step, np.asarray(flat0)

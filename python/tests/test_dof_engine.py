@@ -1,0 +1,130 @@
+"""L2 correctness: full-network DOF (kernel-composed) vs jax.hessian
+ground truth, for MLP and the Jacobian-sparse architecture, across the
+three Table 4 operator classes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import coeffs
+from compile.decomp import ldl_decompose
+from compile.dof_engine import dof_mlp, dof_operator_mlp, dof_sparse, sparse_blocks_from_a
+from compile.hessian_engine import (hessian_operator_mlp,
+                                    hessian_operator_sparse, mlp_forward,
+                                    sparse_forward)
+from compile.model import init_mlp, init_sparse
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="module")
+def mlp_setup():
+    params = init_mlp([6, 16, 16, 1], seed=0)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((4, 6)).astype(np.float32)
+    return params, x
+
+
+@pytest.mark.parametrize("op_builder", [
+    lambda: coeffs.elliptic_gram(6, 6, 2),
+    lambda: coeffs.elliptic_gram(6, 3, 2),
+    lambda: coeffs.signed_diag(6),
+    lambda: np.eye(6),
+])
+def test_dof_mlp_matches_hessian(mlp_setup, op_builder):
+    params, x = mlp_setup
+    a = op_builder()
+    phi_d, lphi_d = dof_operator_mlp(params, x, a, use_kernel=True)
+    phi_h, lphi_h = hessian_operator_mlp(params, x, a.astype(np.float32))
+    np.testing.assert_allclose(np.asarray(phi_d), np.asarray(phi_h),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lphi_d), np.asarray(lphi_h),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_dof_kernel_and_ref_paths_agree(mlp_setup):
+    params, x = mlp_setup
+    a = coeffs.elliptic_gram(6, 6, 3)
+    l_mat, d = ldl_decompose(a)
+    l32, d32 = l_mat.astype(np.float32), d.astype(np.float32)
+    k = dof_mlp(params, x, l32, d32, use_kernel=True)
+    r = dof_mlp(params, x, l32, d32, use_kernel=False)
+    for kk, rr in zip(k, r):
+        np.testing.assert_allclose(np.asarray(kk), np.asarray(rr),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_low_rank_tangent_width(mlp_setup):
+    params, x = mlp_setup
+    a = coeffs.elliptic_gram(6, 2, 4)
+    l_mat, d = ldl_decompose(a)
+    assert l_mat.shape[0] == 2
+    phi, g, s = dof_mlp(params, x, l_mat.astype(np.float32),
+                        d.astype(np.float32))
+    assert g.shape == (4, 2, 1)
+    # Exactness preserved under rank truncation.
+    _, lphi_h = hessian_operator_mlp(params, x, a.astype(np.float32))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(lphi_h),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_dof_gradient_stream_is_l_grad(mlp_setup):
+    params, x = mlp_setup
+    a = np.eye(6)
+    l_mat, d = ldl_decompose(a)
+    _, g, _ = dof_mlp(params, x, l_mat.astype(np.float32),
+                      d.astype(np.float32))
+
+    def scalar(z):
+        return mlp_forward(params, z[None, :])[0, 0]
+
+    grads = jax.vmap(jax.grad(scalar))(jnp.asarray(x))  # [B, 6]
+    want = jnp.einsum("rn,bn->br", jnp.asarray(l_mat, jnp.float32), grads)
+    np.testing.assert_allclose(np.asarray(g[:, :, 0]), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.fixture(scope="module")
+def sparse_setup():
+    blocks = 4
+    params = init_sparse(blocks, [3, 8, 4], seed=0)
+    rng = np.random.default_rng(2)
+    x = (0.5 * rng.standard_normal((3, 12))).astype(np.float32)
+    return blocks, params, x
+
+
+@pytest.mark.parametrize("kind", ["elliptic", "lowrank", "general"])
+def test_dof_sparse_matches_hessian(sparse_setup, kind):
+    blocks, params, x = sparse_setup
+    if kind == "elliptic":
+        a = coeffs.block_diag_gram(blocks, 3, 3, 5)
+    elif kind == "lowrank":
+        a = coeffs.block_diag_gram(blocks, 3, 1, 5)
+    else:
+        a = coeffs.block_diag_signed(blocks, 3)
+    ls, ds = sparse_blocks_from_a(a, blocks)
+    phi_d, lphi_d = dof_sparse(params, x, ls, ds)
+    phi_h, lphi_h = hessian_operator_sparse(params, x, a.astype(np.float32))
+    np.testing.assert_allclose(np.asarray(phi_d), np.asarray(phi_h),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lphi_d), np.asarray(lphi_h),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_sparse_forward_matches_manual(sparse_setup):
+    blocks, params, x = sparse_setup
+    phi = sparse_forward(params, x)
+    # Manual product-sum.
+    outs = []
+    for i in range(blocks):
+        outs.append(np.asarray(mlp_forward(params[i], x[:, 3 * i:3 * i + 3])))
+    prod = np.ones_like(outs[0])
+    for o in outs:
+        prod = prod * o
+    want = prod.sum(axis=1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(phi), want, rtol=1e-5, atol=1e-6)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

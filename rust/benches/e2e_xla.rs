@@ -1,0 +1,168 @@
+//! Bench: the XLA serving path — AOT artifacts (jax/pallas-lowered DOF and
+//! Hessian operators) executed via PJRT from the Rust coordinator, plus
+//! batching-server throughput/latency.
+//!
+//! Requires `make artifacts`. Exits 0 with a notice when absent so
+//! `cargo bench` works on a fresh clone.
+//!
+//! ```sh
+//! cargo bench --bench e2e_xla
+//! ```
+
+use std::time::{Duration, Instant};
+
+use dof::coordinator::ModelServer;
+use dof::runtime::{ArtifactRegistry, Executor};
+use dof::util::{fmt_duration, CsvTable, Summary, Xoshiro256};
+
+fn median_time(
+    exec: &Executor,
+    name: &str,
+    x: &[f32],
+    batch: usize,
+    reps: usize,
+) -> anyhow::Result<Summary> {
+    exec.run_f32(name, &[(x, &[batch, 64])])?; // warmup
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let out = exec.run_f32(name, &[(x, &[batch, 64])])?;
+        std::hint::black_box(&out);
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(Summary::of(&times))
+}
+
+fn main() -> anyhow::Result<()> {
+    let reg = match ArtifactRegistry::open("artifacts") {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("e2e_xla: skipping ({e})");
+            return Ok(());
+        }
+    };
+    let reps = 20;
+    let mut exec = Executor::cpu()?;
+    let mut rng = Xoshiro256::new(31);
+    let mut csv = CsvTable::new(vec!["artifact", "median_ms", "p95_ms"]);
+
+    // ---- operator artifact pairs -------------------------------------------
+    println!("## XLA artifact wall-clock (PJRT CPU, batch = artifact batch)\n");
+    println!("| artifact | median | p95 | vs pair |");
+    println!("|----------|--------|-----|---------|");
+    let groups: [(&str, Vec<&str>); 2] = [
+        (
+            "mlp",
+            vec![
+                "dof_mlp_elliptic",
+                "dof_mlp_lowrank",
+                "dof_mlp_general",
+                "dof_mlp_elliptic_jnp",
+                "dof_mlp_lowrank_jnp",
+                "dof_mlp_general_jnp",
+                "hessian_mlp_elliptic",
+                "hessian_mlp_lowrank",
+                "hessian_mlp_general",
+            ],
+        ),
+        (
+            "sparse",
+            vec![
+                "dof_sparse_elliptic",
+                "dof_sparse_lowrank",
+                "dof_sparse_general",
+                "hessian_sparse_general",
+            ],
+        ),
+    ];
+    let mut medians: std::collections::HashMap<String, f64> = Default::default();
+    for (_, names) in &groups {
+        for name in names {
+            if reg.path(name).is_err() {
+                continue;
+            }
+            let batch = reg.batch_of(name).unwrap_or(32);
+            exec.load(name, &reg.path(name)?)?;
+            let x: Vec<f32> = (0..batch * 64)
+                .map(|_| (0.4 * rng.normal()) as f32)
+                .collect();
+            let s = median_time(&exec, name, &x, batch, reps)?;
+            medians.insert(name.to_string(), s.median);
+            let pair_note = if let Some(h) = name.strip_prefix("dof_") {
+                medians
+                    .get(&format!("hessian_{h}"))
+                    .map(|hm| format!("{:.2}×", hm / s.median))
+                    .unwrap_or_default()
+            } else if let Some(d) = name.strip_prefix("hessian_") {
+                medians
+                    .get(&format!("dof_{d}"))
+                    .map(|dm| format!("dof is {:.2}×", s.median / dm))
+                    .unwrap_or_default()
+            } else {
+                String::new()
+            };
+            println!(
+                "| {name} | {} | {} | {pair_note} |",
+                fmt_duration(s.median),
+                fmt_duration(s.p95)
+            );
+            csv.push(vec![
+                name.to_string(),
+                format!("{:.4}", s.median * 1e3),
+                format!("{:.4}", s.p95 * 1e3),
+            ]);
+        }
+    }
+
+    // ---- batching server throughput ---------------------------------------
+    println!("\n## Batching-server throughput (dof_mlp_lowrank)\n");
+    let artifact = "dof_mlp_lowrank";
+    if reg.path(artifact).is_ok() {
+        let batch = reg.batch_of(artifact).unwrap_or(32);
+        println!("| clients | rows/req | rows/s | mean latency | p95 | batch efficiency |");
+        println!("|---------|----------|--------|--------------|-----|------------------|");
+        for (clients, rows) in [(1usize, 32usize), (4, 8), (8, 4), (16, 1)] {
+            let server = ModelServer::spawn_xla(
+                reg.dir.clone(),
+                artifact.to_string(),
+                64,
+                batch,
+                Duration::from_millis(2),
+            )?;
+            let h = server.handle();
+            let per_client = 24;
+            let t0 = Instant::now();
+            let joins: Vec<_> = (0..clients)
+                .map(|c| {
+                    let h = h.clone();
+                    std::thread::spawn(move || {
+                        let mut rng = Xoshiro256::new(500 + c as u64);
+                        for _ in 0..per_client {
+                            let pts: Vec<f32> =
+                                (0..rows * 64).map(|_| rng.normal() as f32).collect();
+                            h.eval_blocking(pts).expect("eval");
+                        }
+                    })
+                })
+                .collect();
+            for j in joins {
+                j.join().expect("client");
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let snap = h.metrics.snapshot();
+            println!(
+                "| {clients} | {rows} | {:.0} | {} | {} | {:.0}% |",
+                snap.rows as f64 / wall,
+                fmt_duration(snap.mean_latency),
+                fmt_duration(snap.p95_latency),
+                snap.batch_efficiency * 100.0
+            );
+            server.shutdown();
+        }
+    }
+
+    let path = "target/bench_e2e_xla.csv";
+    csv.write_to(path)?;
+    eprintln!("\nseries written to {path}");
+    Ok(())
+}

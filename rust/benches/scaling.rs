@@ -1,0 +1,170 @@
+//! Bench: theorem sweeps — the FLOP and memory claims (Theorems 2.1/2.2)
+//! as *series* over input dimension, depth, width, and operator rank.
+//! The paper has no figures; these CSVs are the curves its theorems
+//! describe, measured and analytic side by side.
+//!
+//! ```sh
+//! cargo bench --bench scaling
+//! ```
+
+use dof::autodiff::{CostModel, DofEngine, HessianEngine, MemoryModel};
+use dof::graph::{builder::random_layers, mlp_graph, Act};
+use dof::operators::CoeffSpec;
+use dof::tensor::Tensor;
+use dof::util::{CsvTable, Xoshiro256};
+
+fn engines_at(
+    dims: &[usize],
+    rank: usize,
+    seed: u64,
+) -> (u64, u64, u64, u64, f64, f64) {
+    let mut rng = Xoshiro256::new(seed);
+    let graph = mlp_graph(&random_layers(dims, &mut rng), Act::Tanh);
+    let n = dims[0];
+    let spec = if rank < n {
+        CoeffSpec::EllipticGram { n, rank, seed }
+    } else {
+        CoeffSpec::EllipticGram { n, rank: n, seed }
+    };
+    let a = spec.build();
+    let x = Tensor::randn(&[1, n], &mut rng);
+    let dof = DofEngine::new(&a).compute(&graph, &x);
+    let hes = HessianEngine::new(&a).compute(&graph, &x);
+    let model = CostModel::new(&graph, rank.min(n));
+    (
+        dof.cost.muls,
+        hes.cost.muls,
+        dof.peak_tangent_bytes,
+        hes.peak_tangent_bytes,
+        model.dof_muls() as f64,
+        model.hessian_muls() as f64,
+    )
+}
+
+fn main() {
+    // ---- sweep 1: input dimension N (width fixed) ------------------------
+    let mut csv = CsvTable::new(vec![
+        "sweep", "param", "dof_muls", "hessian_muls", "flop_ratio",
+        "dof_peak_bytes", "hessian_peak_bytes", "mem_ratio",
+        "analytic_dof_muls", "analytic_hessian_muls",
+    ]);
+    println!("## Theorem sweeps\n");
+    println!("### FLOP & memory ratio vs input dimension N (hidden 128×4)");
+    println!("| N | measured FLOP ratio | analytic | memory ratio |");
+    println!("|---|---------------------|----------|--------------|");
+    for n in [4usize, 8, 16, 32, 64] {
+        let dims = [n, 128, 128, 128, 128, 1];
+        let (dm, hm, dp, hp, adm, ahm) = engines_at(&dims, n, 11);
+        println!(
+            "| {n} | {:.2} | {:.2} | {:.2} |",
+            hm as f64 / dm as f64,
+            ahm / adm,
+            hp as f64 / dp as f64
+        );
+        csv.push(vec![
+            "input_dim".to_string(),
+            n.to_string(),
+            dm.to_string(),
+            hm.to_string(),
+            format!("{:.3}", hm as f64 / dm as f64),
+            dp.to_string(),
+            hp.to_string(),
+            format!("{:.3}", hp as f64 / dp as f64),
+            format!("{adm:.0}"),
+            format!("{ahm:.0}"),
+        ]);
+    }
+
+    // ---- sweep 2: depth (Theorem 2.2's 2/L memory scaling) ----------------
+    println!("\n### Memory ratio vs depth L (Theorem 2.2: M₁/M₂ ≲ 2/L)");
+    println!("| L | mem ratio (Hessian/DOF) | 2/L reference |");
+    println!("|---|--------------------------|---------------|");
+    for depth in [2usize, 4, 8, 12, 16] {
+        let mut dims = vec![16usize];
+        dims.extend(std::iter::repeat(96).take(depth));
+        dims.push(1);
+        let (_, _, dp, hp, _, _) = engines_at(&dims, 16, 13);
+        println!(
+            "| {depth} | {:.2} | {:.2} |",
+            hp as f64 / dp as f64,
+            depth as f64 / 2.0
+        );
+        csv.push(vec![
+            "depth".to_string(),
+            depth.to_string(),
+            String::new(),
+            String::new(),
+            String::new(),
+            dp.to_string(),
+            hp.to_string(),
+            format!("{:.3}", hp as f64 / dp as f64),
+            String::new(),
+            String::new(),
+        ]);
+    }
+
+    // ---- sweep 3: operator rank (the low-rank r/N law, §2.2) --------------
+    println!("\n### FLOP ratio vs operator rank r (N = 32): DOF cost ∝ r");
+    println!("| r | measured FLOP ratio | expected ≈ (2N+1)/(r+2) |");
+    println!("|---|---------------------|--------------------------|");
+    for rank in [2usize, 4, 8, 16, 32] {
+        let dims = [32usize, 128, 128, 128, 1];
+        let (dm, hm, _, _, _, _) = engines_at(&dims, rank, 17);
+        println!(
+            "| {rank} | {:.2} | {:.2} |",
+            hm as f64 / dm as f64,
+            (2.0 * 32.0 + 1.0) / (rank as f64 + 2.0)
+        );
+        csv.push(vec![
+            "rank".to_string(),
+            rank.to_string(),
+            dm.to_string(),
+            hm.to_string(),
+            format!("{:.3}", hm as f64 / dm as f64),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+        ]);
+    }
+
+    // ---- sweep 4: analytic liveness profile C(j) (eq. 25) -----------------
+    println!("\n### Analytic forward-liveness peak vs width (eq. 25/26)");
+    println!("| hidden | M₁ scalars (t=16) | N·|V| bound |");
+    println!("|--------|-------------------|-------------|");
+    let mut rng = Xoshiro256::new(19);
+    for hidden in [32usize, 64, 128, 256] {
+        let dims = [16usize, hidden, hidden, hidden, 1];
+        let graph = mlp_graph(&random_layers(&dims, &mut rng), Act::Tanh);
+        let m = MemoryModel::new(&graph);
+        let fwd = m.forward_peak_scalars(16);
+        let bound = 16 * graph.scalar_node_count();
+        println!("| {hidden} | {fwd} | {bound} |");
+        csv.push(vec![
+            "liveness".to_string(),
+            hidden.to_string(),
+            String::new(),
+            String::new(),
+            String::new(),
+            fwd.to_string(),
+            bound.to_string(),
+            String::new(),
+            String::new(),
+            String::new(),
+        ]);
+    }
+
+    let path = "target/bench_scaling.csv";
+    csv.write_to(path).expect("csv written");
+    eprintln!("\nseries written to {path}");
+
+    // Assertions: ratios behave per theory.
+    let (dm32, hm32, _, _, _, _) = engines_at(&[32, 128, 128, 1], 32, 23);
+    let (dm4, hm4, _, _, _, _) = engines_at(&[32, 128, 128, 1], 4, 23);
+    let full = hm32 as f64 / dm32 as f64;
+    let low = hm4 as f64 / dm4 as f64;
+    assert!(full > 1.5, "full-rank ratio {full:.2}");
+    assert!(low > 2.5 * full, "rank-4 ratio {low:.2} vs full {full:.2}");
+    eprintln!("scaling assertions OK");
+}

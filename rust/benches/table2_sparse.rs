@@ -1,0 +1,105 @@
+//! Bench: regenerate **Table 2** — DOF vs Hessian-based on the MLP with
+//! Jacobian sparsity (16 blocks × 4 input dims, hidden 256 × 8 layers,
+//! per-block output 8, product-sum head; block-diagonal operators of
+//! Table 4 row 2).
+//!
+//! Paper ratios: ≈21.5/24.6/21.5 memory, ≈19.4/28.9/19.4 time. The win is
+//! dominated by DOF's structural exploitation of the per-block tangent
+//! support (active-row tracking), which the dense Hessian path cannot use.
+//!
+//! ```sh
+//! cargo bench --bench table2_sparse
+//! DOF_BENCH_FAST=1 cargo bench --bench table2_sparse
+//! ```
+
+use dof::bench_harness::table2::{run_table2, Table2Config};
+use dof::bench_harness::{render_table, BenchConfig};
+use dof::util::CsvTable;
+
+fn main() {
+    let fast = std::env::var("DOF_BENCH_FAST").is_ok();
+    let cfg = if fast {
+        Table2Config {
+            blocks: 8,
+            block_in: 4,
+            hidden: 64,
+            layers: 3,
+            block_out: 8,
+            batch: 2,
+            seed: 7,
+            bench: BenchConfig {
+                warmup_iters: 1,
+                measure_iters: 3,
+                max_seconds: 120.0,
+            },
+        }
+    } else {
+        Table2Config {
+            batch: 4,
+            bench: BenchConfig {
+                warmup_iters: 1,
+                measure_iters: 3,
+                max_seconds: 600.0,
+            },
+            ..Default::default()
+        }
+    };
+    eprintln!(
+        "table2_sparse: {}×{} blocks, hidden {}×{}, out {}, batch {} (fast={fast})",
+        cfg.blocks, cfg.block_in, cfg.hidden, cfg.layers, cfg.block_out, cfg.batch
+    );
+    let rows = run_table2(&cfg);
+    println!(
+        "{}",
+        render_table(
+            &format!(
+                "Table 2 — MLP with Jacobian sparsity ({}×{} blocks, batch {})",
+                cfg.blocks, cfg.block_in, cfg.batch
+            ),
+            &rows
+        )
+    );
+
+    let mut csv = CsvTable::new(vec![
+        "operator",
+        "hessian_ms",
+        "dof_ms",
+        "time_ratio",
+        "hessian_bytes",
+        "dof_bytes",
+        "mem_ratio",
+        "flop_ratio",
+    ]);
+    for r in &rows {
+        csv.push(vec![
+            r.operator.clone(),
+            format!("{:.3}", r.hessian.seconds.median * 1e3),
+            format!("{:.3}", r.dof.seconds.median * 1e3),
+            format!("{:.2}", r.time_ratio()),
+            r.hessian.peak_bytes.unwrap_or(0).to_string(),
+            r.dof.peak_bytes.unwrap_or(0).to_string(),
+            format!("{:.2}", r.memory_ratio().unwrap_or(0.0)),
+            format!("{:.2}", r.flop_ratio().unwrap_or(0.0)),
+        ]);
+    }
+    let path = "target/bench_table2.csv";
+    csv.write_to(path).expect("csv written");
+    eprintln!("series written to {path}");
+
+    // Paper-shape assertions: the sparsity win must be far beyond dense 2×.
+    for r in &rows {
+        assert!(
+            r.time_ratio() > 4.0,
+            "{}: sparse DOF should win ≫2× wall-clock, got {:.1}",
+            r.operator,
+            r.time_ratio()
+        );
+        assert!(
+            r.memory_ratio().unwrap_or(0.0) > 4.0,
+            "{}: sparse DOF should win ≫2× memory, got {:.1}",
+            r.operator,
+            r.memory_ratio().unwrap_or(0.0)
+        );
+    }
+    eprintln!("table2 shape assertions OK");
+}

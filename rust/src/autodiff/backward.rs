@@ -1,0 +1,264 @@
+//! Reverse-mode adjoint propagation (eq. 12): `v̄ⁱ = ∂φ/∂vⁱ`.
+//!
+//! Used in two places: inside the Hessian-based baseline (the `Ĝ` graph of
+//! Appendix B), and by the training loop for parameter gradients of the
+//! PINN loss.
+
+use crate::graph::{Graph, Op};
+use crate::tensor::{matmul, matmul_tn, Tensor};
+
+use super::Cost;
+
+/// Result of a reverse sweep.
+pub struct BackwardResult {
+    /// Adjoint `∂(Σ_c seed_c · φ_c)/∂vⁱ` per node, `[batch, dim_i]`.
+    pub adjoints: Vec<Tensor>,
+    /// For each Linear node id: (∂/∂W `[out, in]`, ∂/∂b `[out]`), summed
+    /// over the batch. Empty unless `with_params`.
+    pub param_grads: Vec<(usize, Tensor, Vec<f64>)>,
+    pub cost: Cost,
+}
+
+/// Run a reverse sweep from the output node.
+///
+/// `values` must come from `graph.eval_all`. `out_seed` is the cotangent of
+/// the output node, `[batch, out_dim]` (all-ones for a plain scalar `∂φ/∂v`).
+/// When `with_params` is set, Linear weight/bias gradients are accumulated
+/// (needed for training; skipped in the operator benchmarks to keep the
+/// baseline's cost exactly eq. 12's).
+pub fn backward(
+    graph: &Graph,
+    values: &[Tensor],
+    out_seed: &Tensor,
+    with_params: bool,
+) -> BackwardResult {
+    let batch = out_seed.dims()[0];
+    let mut cost = Cost::zero();
+    let mut adjoints: Vec<Tensor> = graph
+        .nodes()
+        .iter()
+        .map(|n| Tensor::zeros(&[batch, n.dim]))
+        .collect();
+    adjoints[graph.output()] = out_seed.clone();
+    let mut param_grads = Vec::new();
+
+    for id in (0..graph.len()).rev() {
+        let node = graph.node(id);
+        // Take the accumulated adjoint of this node.
+        let vbar = adjoints[id].clone();
+        match &node.op {
+            Op::Input { .. } => {}
+            Op::Linear { weight, .. } => {
+                let p = node.inputs[0];
+                // parent += v̄ · W : [batch,out]·[out,in] → [batch,in]
+                let contrib = matmul(&vbar, weight);
+                adjoints[p] = adjoints[p].add(&contrib);
+                let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+                cost.muls += (batch * out_d * in_d) as u64;
+                cost.adds += (batch * out_d * in_d) as u64;
+                if with_params {
+                    // ∂/∂W = v̄ᵀ · v_parent (summed over batch).
+                    let gw = matmul_tn(&vbar, &values[p]);
+                    let mut gb = vec![0.0; out_d];
+                    for b in 0..batch {
+                        for (g, &v) in gb.iter_mut().zip(vbar.row(b)) {
+                            *g += v;
+                        }
+                    }
+                    cost.muls += (batch * out_d * in_d) as u64;
+                    param_grads.push((id, gw, gb));
+                }
+            }
+            Op::Activation { act } => {
+                let p = node.inputs[0];
+                let h = &values[p];
+                let contrib = vbar.zip_with(h, |v, hh| v * act.df(hh));
+                adjoints[p] = adjoints[p].add(&contrib);
+                cost.muls += (batch * node.dim) as u64;
+            }
+            Op::Slice { start, len } => {
+                let p = node.inputs[0];
+                for b in 0..batch {
+                    let src = vbar.row(b).to_vec();
+                    let dst = adjoints[p].row_mut(b);
+                    for j in 0..*len {
+                        dst[*start + j] += src[j];
+                    }
+                }
+            }
+            Op::Add => {
+                for &p in &node.inputs {
+                    adjoints[p] = adjoints[p].add(&vbar);
+                    cost.adds += (batch * node.dim) as u64;
+                }
+            }
+            Op::Mul => {
+                let k = node.inputs.len();
+                for (pi, &p) in node.inputs.iter().enumerate() {
+                    // parent_p += v̄ ⊙ Π_{q≠p} v^q
+                    let mut contrib = vbar.clone();
+                    for (qi, &q) in node.inputs.iter().enumerate() {
+                        if qi != pi {
+                            contrib = contrib.mul(&values[q]);
+                        }
+                    }
+                    cost.muls += (batch * node.dim * (k - 1)) as u64;
+                    adjoints[p] = adjoints[p].add(&contrib);
+                }
+            }
+            Op::SumReduce => {
+                let p = node.inputs[0];
+                let pd = graph.node(p).dim;
+                for b in 0..batch {
+                    let v = vbar.at(b, 0);
+                    for x in adjoints[p].row_mut(b) {
+                        *x += v;
+                    }
+                    let _ = pd;
+                }
+            }
+            Op::Concat => {
+                for b in 0..batch {
+                    let mut off = 0;
+                    let src = vbar.row(b).to_vec();
+                    for &p in &node.inputs {
+                        let pd = graph.node(p).dim;
+                        let dst = adjoints[p].row_mut(b);
+                        for j in 0..pd {
+                            dst[j] += src[off + j];
+                        }
+                        off += pd;
+                    }
+                }
+            }
+        }
+    }
+
+    BackwardResult {
+        adjoints,
+        param_grads,
+        cost,
+    }
+}
+
+/// Gradient of a scalar-output graph w.r.t. its input, `[batch, N]`.
+pub fn input_gradient(graph: &Graph, x: &Tensor) -> Tensor {
+    let values = graph.eval_all(x);
+    let batch = x.dims()[0];
+    let out_dim = graph.node(graph.output()).dim;
+    assert_eq!(out_dim, 1, "input_gradient expects scalar output");
+    let seed = Tensor::full(&[batch, 1], 1.0);
+    let res = backward(graph, &values, &seed, false);
+    // Gather input-node adjoints into a flat [batch, N].
+    let n = graph.input_dim();
+    let mut grad = Tensor::zeros(&[batch, n]);
+    let mut off = 0;
+    for &i in graph.input_ids() {
+        let d = graph.node(i).dim;
+        for b in 0..batch {
+            grad.row_mut(b)[off..off + d].copy_from_slice(res.adjoints[i].row(b));
+        }
+        off += d;
+    }
+    grad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::forward_jacobian::jacobian;
+    use crate::graph::{builder::random_layers, mlp_graph, sparse_mlp_graph, Act, Graph};
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn backward_matches_forward_jacobian_mlp() {
+        let mut rng = Xoshiro256::new(8);
+        let g = mlp_graph(&random_layers(&[6, 11, 9, 1], &mut rng), Act::Tanh);
+        let x = Tensor::randn(&[4, 6], &mut rng);
+        let grad = input_gradient(&g, &x);
+        let jac = jacobian(&g, &x); // [batch, 1, N]
+        for b in 0..4 {
+            for i in 0..6 {
+                let jv = jac.data()[b * 6 + i];
+                assert!(
+                    (grad.at(b, i) - jv).abs() < 1e-10,
+                    "b={b} i={i}: {} vs {jv}",
+                    grad.at(b, i)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backward_matches_forward_jacobian_sparse() {
+        let mut rng = Xoshiro256::new(9);
+        let blocks: Vec<_> = (0..4)
+            .map(|_| random_layers(&[3, 7, 5], &mut rng))
+            .collect();
+        let g = sparse_mlp_graph(&blocks, Act::Gelu);
+        let x = Tensor::randn(&[2, 12], &mut rng);
+        let grad = input_gradient(&g, &x);
+        let jac = jacobian(&g, &x);
+        for b in 0..2 {
+            for i in 0..12 {
+                let jv = jac.data()[b * 12 + i];
+                assert!((grad.at(b, i) - jv).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn param_grads_match_finite_difference() {
+        let mut rng = Xoshiro256::new(10);
+        let layers = random_layers(&[3, 4, 1], &mut rng);
+        let g = mlp_graph(&layers, Act::Tanh);
+        let x = Tensor::randn(&[5, 3], &mut rng);
+        let values = g.eval_all(&x);
+        let seed = Tensor::full(&[5, 1], 1.0);
+        let res = backward(&g, &values, &seed, true);
+        // Locate the first Linear node (id 1) and its weight grad.
+        let (nid, gw, gb) = &res.param_grads[res
+            .param_grads
+            .iter()
+            .position(|(id, _, _)| *id == 1)
+            .unwrap()];
+        assert_eq!(*nid, 1);
+
+        // Finite-difference check on W[0][1] and b[2].
+        let h = 1e-6;
+        let loss = |layers: &crate::graph::builder::LayerWeights| -> f64 {
+            let g2 = mlp_graph(layers, Act::Tanh);
+            g2.eval(&x).sum()
+        };
+        let w01 = layers[0].0.at(0, 1);
+        let mut lp = layers.clone();
+        lp[0].0.set(0, 1, w01 + h);
+        let mut lm = layers.clone();
+        lm[0].0.set(0, 1, w01 - h);
+        let fd_w = (loss(&lp) - loss(&lm)) / (2.0 * h);
+        assert!((gw.at(0, 1) - fd_w).abs() < 1e-5, "{} vs {fd_w}", gw.at(0, 1));
+
+        let mut lp = layers.clone();
+        lp[0].1[2] += h;
+        let mut lm = layers.clone();
+        lm[0].1[2] -= h;
+        let fd_b = (loss(&lp) - loss(&lm)) / (2.0 * h);
+        assert!((gb[2] - fd_b).abs() < 1e-5, "{} vs {fd_b}", gb[2]);
+    }
+
+    #[test]
+    fn slice_concat_adjoints_roundtrip() {
+        // φ = sum(concat(x[0..2], x[2..4])) ⇒ ∇φ = 1.
+        let mut g = Graph::new();
+        let x = g.input(4);
+        let a = g.slice(x, 0, 2);
+        let b = g.slice(x, 2, 2);
+        let c = g.push(Op::Concat, vec![a, b]);
+        g.sum_reduce(c);
+        let xin = Tensor::from_vec(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let grad = input_gradient(&g, &xin);
+        for i in 0..4 {
+            assert!((grad.at(0, i) - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,359 @@
+//! Forward-mode tangent propagation (eq. 13 for the full Jacobian seed,
+//! eq. 17 for the DOF seed `g = L∇v`).
+//!
+//! A node's tangent is a matrix `G ∈ R^{t×d}` per batch point, where `t` is
+//! the tangent width (`N` for the full gradient, `rank(A)` for DOF) and `d`
+//! the node dimension. Batched storage folds the batch and tangent axes
+//! into rows: `[batch·t, d]` with row index `b·t + k`, so the hot operation
+//! — pushing a tangent through a Linear node — is a single `[batch·t, in] ×
+//! [out, in]ᵀ` GEMM.
+
+use crate::graph::{Node, Op};
+use crate::graph::Graph;
+use crate::tensor::{matmul_nt, Tensor};
+
+use super::Cost;
+
+/// Batched tangent block for one node: rows are `(batch, tangent-row)`
+/// pairs, columns are node components.
+#[derive(Debug, Clone)]
+pub struct TangentBatch {
+    /// `[batch·t, d]`.
+    pub data: Tensor,
+    pub batch: usize,
+    /// Tangent width `t`.
+    pub t: usize,
+}
+
+impl TangentBatch {
+    pub fn zeros(batch: usize, t: usize, dim: usize) -> Self {
+        Self {
+            data: Tensor::zeros(&[batch * t, dim]),
+            batch,
+            t,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.data.dims()[1]
+    }
+
+    /// Bytes of the underlying buffer (f64).
+    pub fn bytes(&self) -> u64 {
+        (self.data.numel() * std::mem::size_of::<f64>()) as u64
+    }
+
+    /// Row of the tangent for batch point `b`, tangent index `k`.
+    pub fn row(&self, b: usize, k: usize) -> &[f64] {
+        self.data.row(b * self.t + k)
+    }
+
+    pub fn row_mut(&mut self, b: usize, k: usize) -> &mut [f64] {
+        self.data.row_mut(b * self.t + k)
+    }
+
+    /// Extract the `t×d` tangent matrix of one batch point.
+    pub fn point(&self, b: usize) -> Tensor {
+        let d = self.dim();
+        let mut m = Tensor::zeros(&[self.t, d]);
+        for k in 0..self.t {
+            m.row_mut(k).copy_from_slice(self.row(b, k));
+        }
+        m
+    }
+}
+
+/// Seed tangent for an input node spanning flat-input coordinates
+/// `[offset, offset+dim)`: `G[k, j] = seed[k, offset + j]`, replicated
+/// across the batch. `seed` is the `t×N` seed matrix (`I_N` for the full
+/// Jacobian, `L` for DOF).
+pub fn seed_input(seed: &Tensor, offset: usize, dim: usize, batch: usize) -> TangentBatch {
+    let t = seed.dims()[0];
+    let mut g = TangentBatch::zeros(batch, t, dim);
+    for b in 0..batch {
+        for k in 0..t {
+            g.row_mut(b, k)
+                .copy_from_slice(&seed.row(k)[offset..offset + dim]);
+        }
+    }
+    g
+}
+
+/// Propagate a tangent through one node given parent tangents and parent
+/// *values* (`vals[p]` is `[batch, dim_p]`). Returns the node tangent and
+/// the exact multiplication/addition cost of the propagation (eq. 17's
+/// `t·|E|`-type terms).
+///
+/// `node_val` is the node's own value tensor (needed by none of the ops
+/// here but kept in the signature for symmetry with the DOF scalar rule).
+pub fn propagate_tangent(
+    node: &Node,
+    parent_tangents: &[&TangentBatch],
+    parent_vals: &[&Tensor],
+    cost: &mut Cost,
+) -> TangentBatch {
+    match &node.op {
+        Op::Input { .. } => unreachable!("inputs are seeded, not propagated"),
+        Op::Linear { weight, .. } => {
+            let g = parent_tangents[0];
+            // G' = G Wᵀ — one GEMM over folded rows.
+            let out = matmul_nt(&g.data, weight);
+            let (rows, k, m) = (g.data.dims()[0], weight.dims()[1], weight.dims()[0]);
+            cost.muls += (rows * k * m) as u64;
+            cost.adds += (rows * k * m) as u64;
+            TangentBatch {
+                data: out,
+                batch: g.batch,
+                t: g.t,
+            }
+        }
+        Op::Activation { act } => {
+            let g = parent_tangents[0];
+            let h = parent_vals[0]; // pre-activation values [batch, d]
+            let d = node.dim;
+            let mut out = g.clone();
+            for b in 0..g.batch {
+                let hrow = h.row(b);
+                for k in 0..g.t {
+                    let row = out.row_mut(b, k);
+                    for j in 0..d {
+                        row[j] *= act.df(hrow[j]);
+                    }
+                }
+            }
+            // σ'(h) evaluated once per (b, j); the scaling is t·d muls per
+            // batch point. We charge only the scaling (σ' itself is shared
+            // with the value pass in a fused implementation).
+            cost.muls += (g.batch * g.t * d) as u64;
+            out
+        }
+        Op::Slice { start, len } => {
+            let g = parent_tangents[0];
+            let mut out = TangentBatch::zeros(g.batch, g.t, *len);
+            for r in 0..g.batch * g.t {
+                out.data
+                    .row_mut(r)
+                    .copy_from_slice(&g.data.row(r)[*start..*start + *len]);
+            }
+            out
+        }
+        Op::Add => {
+            let mut out = parent_tangents[0].clone();
+            for g in &parent_tangents[1..] {
+                out.data = out.data.add(&g.data);
+                cost.adds += out.data.numel() as u64;
+            }
+            out
+        }
+        Op::Mul => {
+            // v = Π_p v^p ⇒ g'_j = Σ_p (Π_{q≠p} v^q_j) g^p_j.
+            let k = parent_tangents.len();
+            let batch = parent_tangents[0].batch;
+            let t = parent_tangents[0].t;
+            let d = node.dim;
+            let mut out = TangentBatch::zeros(batch, t, d);
+            for p in 0..k {
+                // coefficient c_p[b][j] = Π_{q≠p} v^q[b][j]
+                for b in 0..batch {
+                    let mut coef = vec![1.0; d];
+                    for (q, pv) in parent_vals.iter().enumerate() {
+                        if q != p {
+                            for (c, &v) in coef.iter_mut().zip(pv.row(b)) {
+                                *c *= v;
+                            }
+                        }
+                    }
+                    cost.muls += ((k - 1) * d) as u64;
+                    for kk in 0..t {
+                        let src = parent_tangents[p].row(b, kk).to_vec();
+                        let dst = out.row_mut(b, kk);
+                        for j in 0..d {
+                            dst[j] += coef[j] * src[j];
+                        }
+                    }
+                    cost.muls += (t * d) as u64;
+                    cost.adds += (t * d) as u64;
+                }
+            }
+            out
+        }
+        Op::SumReduce => {
+            let g = parent_tangents[0];
+            let mut out = TangentBatch::zeros(g.batch, g.t, 1);
+            for r in 0..g.batch * g.t {
+                out.data.data_mut()[r] = g.data.row(r).iter().sum();
+            }
+            cost.adds += g.data.numel() as u64;
+            out
+        }
+        Op::Concat => {
+            let batch = parent_tangents[0].batch;
+            let t = parent_tangents[0].t;
+            let mut out = TangentBatch::zeros(batch, t, node.dim);
+            for r in 0..batch * t {
+                let mut off = 0;
+                for g in parent_tangents {
+                    let src = g.data.row(r);
+                    out.data.row_mut(r)[off..off + src.len()].copy_from_slice(src);
+                    off += src.len();
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Compute the full Jacobian `∂φ/∂x ∈ R^{batch × out × N}` of a graph by
+/// seeding with `I_N` and propagating forward. Returns per-node tangents as
+/// well (used by the Hessian engine) and the cost.
+pub struct ForwardJacobian {
+    /// Tangent of every node (`t = N`).
+    pub tangents: Vec<TangentBatch>,
+    /// Node values.
+    pub values: Vec<Tensor>,
+    pub cost: Cost,
+}
+
+/// Run the forward-Jacobian pass with an arbitrary seed matrix `seed ∈
+/// R^{t×N}` (use `I_N` for the true Jacobian, `L` for the DOF tangent).
+pub fn forward_with_seed(graph: &Graph, x: &Tensor, seed: &Tensor) -> ForwardJacobian {
+    assert_eq!(seed.dims()[1], graph.input_dim(), "seed width must be N");
+    let batch = x.dims()[0];
+    let values = graph.eval_all(x);
+    let mut cost = Cost::zero();
+    let mut tangents: Vec<TangentBatch> = Vec::with_capacity(graph.len());
+    let mut in_off = 0usize;
+    for (id, node) in graph.nodes().iter().enumerate() {
+        let g = match &node.op {
+            Op::Input { dim } => {
+                let g = seed_input(seed, in_off, *dim, batch);
+                in_off += dim;
+                g
+            }
+            _ => {
+                let pts: Vec<&TangentBatch> = node.inputs.iter().map(|&p| &tangents[p]).collect();
+                let pvs: Vec<&Tensor> = node.inputs.iter().map(|&p| &values[p]).collect();
+                propagate_tangent(node, &pts, &pvs, &mut cost)
+            }
+        };
+        debug_assert_eq!(g.dim(), node.dim, "node {id} tangent dim");
+        tangents.push(g);
+    }
+    ForwardJacobian {
+        tangents,
+        values,
+        cost,
+    }
+}
+
+/// Jacobian of the output node, shape `[batch, out_dim, N]`.
+pub fn jacobian(graph: &Graph, x: &Tensor) -> Tensor {
+    let n = graph.input_dim();
+    let fj = forward_with_seed(graph, x, &Tensor::eye(n));
+    let out = &fj.tangents[graph.output()];
+    let batch = out.batch;
+    let d = out.dim();
+    let mut j = Tensor::zeros(&[batch, d, n]);
+    for b in 0..batch {
+        for k in 0..n {
+            for c in 0..d {
+                let idx = (b * d + c) * n + k;
+                j.data_mut()[idx] = out.row(b, k)[c];
+            }
+        }
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{builder::random_layers, mlp_graph, sparse_mlp_graph, Act};
+    use crate::util::Xoshiro256;
+
+    /// Finite-difference Jacobian of the graph output (scalar outputs).
+    fn fd_jacobian(graph: &Graph, x: &[f64]) -> Vec<f64> {
+        let n = x.len();
+        let h = 1e-6;
+        let mut jac = vec![0.0; n];
+        for i in 0..n {
+            let mut xp = x.to_vec();
+            let mut xm = x.to_vec();
+            xp[i] += h;
+            xm[i] -= h;
+            let fp = graph.eval(&Tensor::from_vec(&[1, n], xp)).item();
+            let fm = graph.eval(&Tensor::from_vec(&[1, n], xm)).item();
+            jac[i] = (fp - fm) / (2.0 * h);
+        }
+        jac
+    }
+
+    #[test]
+    fn jacobian_matches_finite_difference_mlp() {
+        let mut rng = Xoshiro256::new(4);
+        let g = mlp_graph(&random_layers(&[5, 9, 7, 1], &mut rng), Act::Tanh);
+        let x: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        let j = jacobian(&g, &Tensor::from_vec(&[1, 5], x.clone()));
+        let fd = fd_jacobian(&g, &x);
+        for i in 0..5 {
+            assert!(
+                (j.data()[i] - fd[i]).abs() < 1e-6,
+                "∂φ/∂x_{i}: {} vs {}",
+                j.data()[i],
+                fd[i]
+            );
+        }
+    }
+
+    #[test]
+    fn jacobian_matches_finite_difference_sparse() {
+        let mut rng = Xoshiro256::new(5);
+        let blocks: Vec<_> = (0..3)
+            .map(|_| random_layers(&[2, 6, 4], &mut rng))
+            .collect();
+        let g = sparse_mlp_graph(&blocks, Act::Sin);
+        let x: Vec<f64> = (0..6).map(|_| 0.5 * rng.normal()).collect();
+        let j = jacobian(&g, &Tensor::from_vec(&[1, 6], x.clone()));
+        let fd = fd_jacobian(&g, &x);
+        for i in 0..6 {
+            assert!(
+                (j.data()[i] - fd[i]).abs() < 1e-5,
+                "∂φ/∂x_{i}: {} vs {}",
+                j.data()[i],
+                fd[i]
+            );
+        }
+    }
+
+    #[test]
+    fn seeded_tangent_is_seed_times_jacobian() {
+        // g^M = seed · (∂φ/∂x)ᵀ — check against full Jacobian.
+        let mut rng = Xoshiro256::new(6);
+        let g = mlp_graph(&random_layers(&[4, 8, 1], &mut rng), Act::Gelu);
+        let x = Tensor::randn(&[3, 4], &mut rng);
+        let seed = Tensor::randn(&[2, 4], &mut rng); // t=2
+        let fj = forward_with_seed(&g, &x, &seed);
+        let out = &fj.tangents[g.output()];
+        let jac = jacobian(&g, &x);
+        for b in 0..3 {
+            for k in 0..2 {
+                let mut expect = 0.0;
+                for i in 0..4 {
+                    expect += seed.at(k, i) * jac.data()[b * 4 + i];
+                }
+                let got = out.row(b, k)[0];
+                assert!((got - expect).abs() < 1e-10, "b={b} k={k}: {got} vs {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn linear_cost_counted() {
+        let mut rng = Xoshiro256::new(7);
+        let g = mlp_graph(&random_layers(&[3, 5, 1], &mut rng), Act::Tanh);
+        let x = Tensor::randn(&[1, 3], &mut rng);
+        let fj = forward_with_seed(&g, &x, &Tensor::eye(3));
+        // Linear1: 3·(3·5); act: 3·5; Linear2: 3·(5·1) muls.
+        assert_eq!(fj.cost.muls, 3 * 15 + 15 + 3 * 5);
+    }
+}

@@ -1,0 +1,501 @@
+//! The Hessian-based baseline (Appendix B, eqs. 12–14).
+//!
+//! This is what standard AutoDiff packages do for `Σ a_ij ∂²_ij φ`:
+//!
+//! 1. forward pass for values;
+//! 2. forward-mode Jacobian `∇vⁱ` seeded with `I_N` (eq. 13);
+//! 3. reverse pass for adjoints `v̄ⁱ = ∂φ/∂vⁱ` (eq. 12);
+//! 4. a second-order reverse sweep propagating `∇v̄ⁱ` (eq. 14), whose value
+//!    at the input nodes is the full Hessian `H = ∇²φ`;
+//! 5. contraction `Σ_ij a_ij H_ij`.
+//!
+//! The engine tracks the exact multiplication count and — via
+//! [`PeakTracker`] — the peak number of live tangent bytes, which is the
+//! quantity Theorem 2.2 bounds. All `∇vⁱ` must stay alive across the
+//! reverse sweep (the `∇v̄` recursion consumes them), which is why this
+//! method's peak memory exceeds `N·|V|` (Appendix D).
+
+use crate::graph::{Graph, Op};
+use crate::tensor::{matmul, Tensor};
+
+use super::backward::backward;
+use super::forward_jacobian::{forward_with_seed, TangentBatch};
+use super::memory::PeakTracker;
+use super::Cost;
+
+/// Hessian-based operator evaluation.
+pub struct HessianEngine {
+    /// Symmetric coefficient matrix `A ∈ R^{N×N}`.
+    pub a: Tensor,
+    /// Optional first-order coefficients `b ∈ R^N`.
+    pub b: Option<Vec<f64>>,
+    /// Optional zeroth-order coefficient `c`.
+    pub c: Option<f64>,
+}
+
+/// Output of [`HessianEngine::compute`].
+pub struct HessianResult {
+    /// `φ(x)`, `[batch, 1]`.
+    pub values: Tensor,
+    /// `∇φ(x)`, `[batch, N]`.
+    pub gradient: Tensor,
+    /// Full Hessian `∇²φ(x)`, `[batch, N, N]`.
+    pub hessian: Tensor,
+    /// `L[φ](x)`, `[batch, 1]`.
+    pub operator_values: Tensor,
+    /// Exact FLOP count of the run.
+    pub cost: Cost,
+    /// Peak live tangent bytes (the Theorem 2.2 `M₂` measurement).
+    pub peak_tangent_bytes: u64,
+}
+
+impl HessianEngine {
+    /// Engine for the pure second-order operator `Σ a_ij ∂²_ij`.
+    pub fn new(a: &Tensor) -> Self {
+        assert_eq!(a.rank(), 2);
+        assert_eq!(a.dims()[0], a.dims()[1]);
+        Self {
+            a: a.clone(),
+            b: None,
+            c: None,
+        }
+    }
+
+    /// Add first-order (`Σ b_i ∂_i`) and zeroth-order (`c·`) terms.
+    pub fn with_lower_order(mut self, b: Option<Vec<f64>>, c: Option<f64>) -> Self {
+        if let Some(ref bv) = b {
+            assert_eq!(bv.len(), self.a.dims()[0]);
+        }
+        self.b = b;
+        self.c = c;
+        self
+    }
+
+    /// Evaluate `L[φ]` on a batch `x: [batch, N]` of points.
+    pub fn compute(&self, graph: &Graph, x: &Tensor) -> HessianResult {
+        let n = graph.input_dim();
+        assert_eq!(self.a.dims()[0], n, "A must be N×N with N = input dim");
+        let batch = x.dims()[0];
+        let mut peak = PeakTracker::new();
+        let mut cost = Cost::zero();
+
+        // (1) + (2): forward values and full-Jacobian tangents (eq. 13).
+        let fj = forward_with_seed(graph, x, &Tensor::eye(n));
+        cost += fj.cost;
+        for t in &fj.tangents {
+            peak.alloc(t.bytes());
+        }
+
+        // (3): reverse adjoints (eq. 12).
+        let seed = Tensor::full(&[batch, 1], 1.0);
+        let bw = backward(graph, &fj.values, &seed, false);
+        cost += bw.cost;
+
+        // (4): second-order reverse sweep (eq. 14) on folded tangents.
+        let mut grad_adjoint: Vec<Option<TangentBatch>> =
+            (0..graph.len()).map(|_| None).collect();
+        // ∇v̄^M = ∇(1) = 0.
+        let out_id = graph.output();
+        let out_dim = graph.node(out_id).dim;
+        let init = TangentBatch::zeros(batch, n, out_dim);
+        peak.alloc(init.bytes());
+        grad_adjoint[out_id] = Some(init);
+
+        for j in (0..graph.len()).rev() {
+            let node = graph.node(j);
+            let gbar_j = match grad_adjoint[j].take() {
+                Some(g) => g,
+                None => {
+                    // Node does not influence the output; nothing flows.
+                    TangentBatch::zeros(batch, n, node.dim)
+                }
+            };
+            let vbar_j = &bw.adjoints[j];
+            match &node.op {
+                Op::Input { .. } => {
+                    // Keep: its ∇v̄ is a block of Hessian rows (extracted
+                    // below). Re-store.
+                    grad_adjoint[j] = Some(gbar_j);
+                    continue;
+                }
+                Op::Linear { weight, .. } => {
+                    let p = node.inputs[0];
+                    // ∇v̄^p += ∇v̄^j · W (linear op, no second-derivative term)
+                    let contrib = matmul(&gbar_j.data, weight);
+                    let rows = gbar_j.data.dims()[0];
+                    cost.muls += (rows * weight.dims()[0] * weight.dims()[1]) as u64;
+                    cost.adds += (rows * weight.dims()[0] * weight.dims()[1]) as u64;
+                    accumulate(
+                        &mut grad_adjoint[p],
+                        TangentBatch {
+                            data: contrib,
+                            batch,
+                            t: n,
+                        },
+                        &mut peak,
+                    );
+                }
+                Op::Activation { act } => {
+                    let p = node.inputs[0];
+                    let h = &fj.values[p];
+                    let gp = &fj.tangents[p];
+                    let d = node.dim;
+                    let mut contrib = TangentBatch::zeros(batch, n, d);
+                    for b in 0..batch {
+                        let hrow = h.row(b);
+                        // coef1 = σ'(h), coef2 = σ''(h)·v̄^j — shared across
+                        // tangent rows (this is the |T|-term of eq. 14).
+                        let coef1: Vec<f64> = hrow.iter().map(|&v| act.df(v)).collect();
+                        let coef2: Vec<f64> = hrow
+                            .iter()
+                            .zip(vbar_j.row(b))
+                            .map(|(&hv, &vb)| act.d2f(hv) * vb)
+                            .collect();
+                        cost.muls += d as u64; // σ''·v̄ products
+                        for k in 0..n {
+                            let gj = gbar_j.row(b, k).to_vec();
+                            let gpt = gp.row(b, k).to_vec();
+                            let dst = contrib.row_mut(b, k);
+                            for c in 0..d {
+                                dst[c] = coef1[c] * gj[c] + coef2[c] * gpt[c];
+                            }
+                        }
+                        cost.muls += (2 * n * d) as u64;
+                        cost.adds += (n * d) as u64;
+                    }
+                    accumulate(&mut grad_adjoint[p], contrib, &mut peak);
+                }
+                Op::Slice { start, len } => {
+                    let p = node.inputs[0];
+                    let pd = graph.node(p).dim;
+                    let mut contrib = TangentBatch::zeros(batch, n, pd);
+                    for r in 0..batch * n {
+                        let src = gbar_j.data.row(r);
+                        contrib.data.row_mut(r)[*start..*start + *len].copy_from_slice(src);
+                    }
+                    accumulate(&mut grad_adjoint[p], contrib, &mut peak);
+                }
+                Op::Add => {
+                    for &p in &node.inputs {
+                        accumulate(&mut grad_adjoint[p], gbar_j.clone(), &mut peak);
+                    }
+                }
+                Op::Mul => {
+                    let d = node.dim;
+                    for (pi, &p) in node.inputs.iter().enumerate() {
+                        let mut contrib = TangentBatch::zeros(batch, n, d);
+                        for b in 0..batch {
+                            // coef_p = Π_{q≠p} v^q (first-derivative factor)
+                            let mut coefp = vec![1.0; d];
+                            for (qi, &q) in node.inputs.iter().enumerate() {
+                                if qi != pi {
+                                    for (cc, &v) in
+                                        coefp.iter_mut().zip(fj.values[q].row(b))
+                                    {
+                                        *cc *= v;
+                                    }
+                                }
+                            }
+                            for k in 0..n {
+                                let gj = gbar_j.row(b, k).to_vec();
+                                let dst = contrib.row_mut(b, k);
+                                for c in 0..d {
+                                    dst[c] = coefp[c] * gj[c];
+                                }
+                            }
+                            cost.muls += (n * d) as u64;
+                            // Second-derivative terms: Σ_{q≠p} (Π_{r≠p,q} v^r)
+                            // ⊙ v̄^j ⊙ ∇v^q.
+                            for (qi, &q) in node.inputs.iter().enumerate() {
+                                if qi == pi {
+                                    continue;
+                                }
+                                let mut coefpq = vec![1.0; d];
+                                for (ri, &r) in node.inputs.iter().enumerate() {
+                                    if ri != pi && ri != qi {
+                                        for (cc, &v) in
+                                            coefpq.iter_mut().zip(fj.values[r].row(b))
+                                        {
+                                            *cc *= v;
+                                        }
+                                    }
+                                }
+                                let scal: Vec<f64> = coefpq
+                                    .iter()
+                                    .zip(vbar_j.row(b))
+                                    .map(|(&cc, &vb)| cc * vb)
+                                    .collect();
+                                cost.muls += d as u64;
+                                let gq = &fj.tangents[q];
+                                for k in 0..n {
+                                    let gqt = gq.row(b, k).to_vec();
+                                    let dst = contrib.row_mut(b, k);
+                                    for c in 0..d {
+                                        dst[c] += scal[c] * gqt[c];
+                                    }
+                                }
+                                cost.muls += (n * d) as u64;
+                                cost.adds += (n * d) as u64;
+                            }
+                        }
+                        accumulate(&mut grad_adjoint[p], contrib, &mut peak);
+                    }
+                }
+                Op::SumReduce => {
+                    let p = node.inputs[0];
+                    let pd = graph.node(p).dim;
+                    let mut contrib = TangentBatch::zeros(batch, n, pd);
+                    for r in 0..batch * n {
+                        let v = gbar_j.data.row(r)[0];
+                        for c in contrib.data.row_mut(r) {
+                            *c = v;
+                        }
+                    }
+                    accumulate(&mut grad_adjoint[p], contrib, &mut peak);
+                }
+                Op::Concat => {
+                    let mut off = 0;
+                    for &p in &node.inputs {
+                        let pd = graph.node(p).dim;
+                        let mut contrib = TangentBatch::zeros(batch, n, pd);
+                        for r in 0..batch * n {
+                            contrib
+                                .data
+                                .row_mut(r)
+                                .copy_from_slice(&gbar_j.data.row(r)[off..off + pd]);
+                        }
+                        accumulate(&mut grad_adjoint[p], contrib, &mut peak);
+                        off += pd;
+                    }
+                }
+            }
+            // ∇v̄^j consumed; its forward tangent ∇v^j is also dead now
+            // (all consumers already processed in reverse order).
+            peak.free(gbar_j.bytes());
+            peak.free(fj.tangents[j].bytes());
+        }
+
+        // Assemble Hessian from input-node ∇v̄ blocks.
+        let mut hessian = Tensor::zeros(&[batch, n, n]);
+        let mut off = 0;
+        for &i in graph.input_ids() {
+            let d = graph.node(i).dim;
+            if let Some(g) = &grad_adjoint[i] {
+                for b in 0..batch {
+                    for k in 0..n {
+                        let row = g.row(b, k);
+                        for c in 0..d {
+                            hessian.data_mut()[(b * n + k) * n + off + c] = row[c];
+                        }
+                    }
+                }
+            }
+            off += d;
+        }
+        // Free input blocks + remaining forward tangents of inputs.
+        for &i in graph.input_ids() {
+            if let Some(g) = grad_adjoint[i].take() {
+                peak.free(g.bytes());
+            }
+        }
+
+        // (5): contract with A (+ optional lower-order terms).
+        let mut op_vals = Tensor::zeros(&[batch, 1]);
+        let ad = self.a.data();
+        for b in 0..batch {
+            let hb = &hessian.data()[b * n * n..(b + 1) * n * n];
+            let mut acc = 0.0;
+            for idx in 0..n * n {
+                acc += ad[idx] * hb[idx];
+            }
+            cost.muls += (n * n) as u64;
+            cost.adds += (n * n) as u64;
+            op_vals.set(b, 0, acc);
+        }
+
+        // Gradient from adjoints at inputs.
+        let grad = super::backward::input_gradient(graph, x);
+        if let Some(ref bv) = self.b {
+            for b in 0..batch {
+                let extra: f64 = bv.iter().zip(grad.row(b)).map(|(&c, &g)| c * g).sum();
+                op_vals.set(b, 0, op_vals.at(b, 0) + extra);
+            }
+            cost.muls += (batch * n) as u64;
+        }
+        let values = fj.values[graph.output()].clone();
+        if let Some(c) = self.c {
+            for b in 0..batch {
+                op_vals.set(b, 0, op_vals.at(b, 0) + c * values.at(b, 0));
+            }
+            cost.muls += batch as u64;
+        }
+
+        HessianResult {
+            values,
+            gradient: grad,
+            hessian,
+            operator_values: op_vals,
+            cost,
+            peak_tangent_bytes: peak.peak(),
+        }
+    }
+}
+
+/// Accumulate a tangent contribution into an optional slot, tracking
+/// allocations.
+fn accumulate(slot: &mut Option<TangentBatch>, contrib: TangentBatch, peak: &mut PeakTracker) {
+    match slot {
+        None => {
+            peak.alloc(contrib.bytes());
+            *slot = Some(contrib);
+        }
+        Some(existing) => {
+            existing.data = existing.data.add(&contrib.data);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{builder::random_layers, mlp_graph, sparse_mlp_graph, Act, Graph};
+    use crate::util::Xoshiro256;
+
+    /// Finite-difference Hessian of a scalar-output graph at one point.
+    fn fd_hessian(graph: &Graph, x: &[f64]) -> Tensor {
+        let n = x.len();
+        let h = 1e-4;
+        let f = |xv: &[f64]| -> f64 {
+            graph.eval(&Tensor::from_vec(&[1, n], xv.to_vec())).item()
+        };
+        let mut hes = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            for j in 0..n {
+                let mut xpp = x.to_vec();
+                let mut xpm = x.to_vec();
+                let mut xmp = x.to_vec();
+                let mut xmm = x.to_vec();
+                xpp[i] += h;
+                xpp[j] += h;
+                xpm[i] += h;
+                xpm[j] -= h;
+                xmp[i] -= h;
+                xmp[j] += h;
+                xmm[i] -= h;
+                xmm[j] -= h;
+                hes.set(i, j, (f(&xpp) - f(&xpm) - f(&xmp) + f(&xmm)) / (4.0 * h * h));
+            }
+        }
+        hes
+    }
+
+    #[test]
+    fn hessian_matches_finite_difference_mlp() {
+        let mut rng = Xoshiro256::new(21);
+        let g = mlp_graph(&random_layers(&[4, 7, 6, 1], &mut rng), Act::Tanh);
+        let x: Vec<f64> = (0..4).map(|_| 0.5 * rng.normal()).collect();
+        let eng = HessianEngine::new(&Tensor::eye(4));
+        let res = eng.compute(&g, &Tensor::from_vec(&[1, 4], x.clone()));
+        let fd = fd_hessian(&g, &x);
+        for i in 0..4 {
+            for j in 0..4 {
+                let got = res.hessian.data()[i * 4 + j];
+                let want = fd.at(i, j);
+                assert!(
+                    (got - want).abs() < 1e-4,
+                    "H[{i}][{j}] = {got} vs fd {want}"
+                );
+            }
+        }
+        // With A = I the operator is the Laplacian = trace of H.
+        let trace: f64 = (0..4).map(|i| res.hessian.data()[i * 4 + i]).sum();
+        assert!((res.operator_values.item() - trace).abs() < 1e-10);
+    }
+
+    #[test]
+    fn hessian_matches_finite_difference_sparse() {
+        let mut rng = Xoshiro256::new(22);
+        let blocks: Vec<_> = (0..3)
+            .map(|_| random_layers(&[2, 5, 3], &mut rng))
+            .collect();
+        let g = sparse_mlp_graph(&blocks, Act::Sin);
+        let x: Vec<f64> = (0..6).map(|_| 0.3 * rng.normal()).collect();
+        let eng = HessianEngine::new(&Tensor::eye(6));
+        let res = eng.compute(&g, &Tensor::from_vec(&[1, 6], x.clone()));
+        let fd = fd_hessian(&g, &x);
+        for i in 0..6 {
+            for j in 0..6 {
+                let got = res.hessian.data()[i * 6 + j];
+                assert!(
+                    (got - fd.at(i, j)).abs() < 1e-4,
+                    "H[{i}][{j}] = {got} vs {}",
+                    fd.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hessian_is_symmetric() {
+        let mut rng = Xoshiro256::new(23);
+        let g = mlp_graph(&random_layers(&[5, 8, 1], &mut rng), Act::Gelu);
+        let x = Tensor::randn(&[3, 5], &mut rng);
+        let eng = HessianEngine::new(&Tensor::eye(5));
+        let res = eng.compute(&g, &x);
+        for b in 0..3 {
+            for i in 0..5 {
+                for j in 0..5 {
+                    let hij = res.hessian.data()[(b * 5 + i) * 5 + j];
+                    let hji = res.hessian.data()[(b * 5 + j) * 5 + i];
+                    assert!((hij - hji).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn general_a_contraction() {
+        let mut rng = Xoshiro256::new(24);
+        let g = mlp_graph(&random_layers(&[3, 6, 1], &mut rng), Act::Tanh);
+        let x = Tensor::randn(&[1, 3], &mut rng);
+        let araw = Tensor::randn(&[3, 3], &mut rng);
+        let a = araw.add(&araw.transpose()).scale(0.5);
+        let eng = HessianEngine::new(&a);
+        let res = eng.compute(&g, &x);
+        let mut expect = 0.0;
+        for i in 0..3 {
+            for j in 0..3 {
+                expect += a.at(i, j) * res.hessian.data()[i * 3 + j];
+            }
+        }
+        assert!((res.operator_values.item() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lower_order_terms() {
+        let mut rng = Xoshiro256::new(25);
+        let g = mlp_graph(&random_layers(&[3, 5, 1], &mut rng), Act::Tanh);
+        let x = Tensor::randn(&[1, 3], &mut rng);
+        let a = Tensor::zeros(&[3, 3]); // pure first/zeroth-order operator
+        let bvec = vec![1.0, -2.0, 0.5];
+        let eng = HessianEngine::new(&a).with_lower_order(Some(bvec.clone()), Some(3.0));
+        let res = eng.compute(&g, &x);
+        let expect: f64 = bvec
+            .iter()
+            .zip(res.gradient.row(0))
+            .map(|(&c, &gv)| c * gv)
+            .sum::<f64>()
+            + 3.0 * res.values.item();
+        assert!((res.operator_values.item() - expect).abs() < 1e-10);
+    }
+
+    #[test]
+    fn peak_memory_positive_and_cost_counted() {
+        let mut rng = Xoshiro256::new(26);
+        let g = mlp_graph(&random_layers(&[4, 16, 16, 1], &mut rng), Act::Tanh);
+        let x = Tensor::randn(&[2, 4], &mut rng);
+        let res = HessianEngine::new(&Tensor::eye(4)).compute(&g, &x);
+        assert!(res.peak_tangent_bytes > 0);
+        assert!(res.cost.muls > 0);
+    }
+}

@@ -1,0 +1,185 @@
+//! Peak-memory accounting (Appendix D).
+//!
+//! Two complementary instruments:
+//!
+//! * [`PeakTracker`] — a live counter the engines drive with real
+//!   allocation/free events of tangent buffers; its `peak()` is the
+//!   *measured* `M₁`/`M₂` of Theorem 2.2.
+//! * [`MemoryModel`] — the analytic model: `C(j) = t · Σ_{i: i ≤ j ≤ τ(i)} dim(i)`
+//!   (eq. 25 generalized to vector nodes), whose max over `j` is the
+//!   forward-mode peak (eq. 26), and the Hessian-method lower bound
+//!   `M₂ > N·|V|` from Appendix D.
+
+use crate::graph::Graph;
+
+/// Running live-byte counter with peak.
+#[derive(Debug, Default, Clone)]
+pub struct PeakTracker {
+    current: u64,
+    peak: u64,
+}
+
+impl PeakTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&mut self, bytes: u64) {
+        self.current += bytes;
+        if self.current > self.peak {
+            self.peak = self.current;
+        }
+    }
+
+    pub fn free(&mut self, bytes: u64) {
+        debug_assert!(self.current >= bytes, "free underflow");
+        self.current = self.current.saturating_sub(bytes);
+    }
+
+    pub fn current(&self) -> u64 {
+        self.current
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+}
+
+/// Analytic peak-memory model for a graph.
+pub struct MemoryModel<'g> {
+    graph: &'g Graph,
+}
+
+impl<'g> MemoryModel<'g> {
+    pub fn new(graph: &'g Graph) -> Self {
+        Self { graph }
+    }
+
+    /// Peak live tangent *scalars* for a forward pass with tangent width
+    /// `t`, assuming each node's tangent is freed once its last consumer
+    /// (`τ(i)`, eq. 24) has been computed. This is eq. 26's `M₁` (per batch
+    /// point, in scalars; multiply by 8 for f64 bytes).
+    pub fn forward_peak_scalars(&self, t: usize) -> u64 {
+        let tau = self.graph.tau();
+        let n = self.graph.len();
+        let mut peak = 0u64;
+        let mut live = 0u64;
+        // Sweep j in topological order: node i is live while i ≤ j ≤ τ(i).
+        // Incremental: at step j, allocate node j, then free every i with
+        // τ(i) == j (including j itself if it has no consumers, except we
+        // keep the output).
+        let mut frees_at: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for i in 0..n {
+            frees_at[tau[i]].push(i);
+        }
+        for j in 0..n {
+            live += (t * self.graph.node(j).dim) as u64;
+            if live > peak {
+                peak = live;
+            }
+            for &i in &frees_at[j] {
+                if i != self.graph.output() {
+                    live -= (t * self.graph.node(i).dim) as u64;
+                }
+            }
+        }
+        peak
+    }
+
+    /// Lower bound on the Hessian method's peak live tangent scalars: all
+    /// `∇vⁱ` (width `N`) are simultaneously live when the reverse sweep
+    /// starts (Appendix D: "every ∇vⁱ ... could not be released since v̂ⁱ
+    /// have not been computed yet"), i.e. `N·|V|` scalars, plus the largest
+    /// `∇v̄` buffer.
+    pub fn hessian_peak_scalars(&self) -> u64 {
+        let n = self.graph.input_dim() as u64;
+        let v = self.graph.scalar_node_count() as u64;
+        let max_dim = self
+            .graph
+            .nodes()
+            .iter()
+            .map(|nd| nd.dim)
+            .max()
+            .unwrap_or(0) as u64;
+        n * v + n * max_dim
+    }
+
+    /// The Theorem 2.2 ratio bound for an MLP: `M₁ ≲ (2/L)·M₂` — returns
+    /// `(forward_peak, hessian_peak)` with tangent width `t`.
+    pub fn theorem22_pair(&self, t: usize) -> (u64, u64) {
+        (self.forward_peak_scalars(t), self.hessian_peak_scalars())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{builder::random_layers, mlp_graph, Act};
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn tracker_peak_semantics() {
+        let mut t = PeakTracker::new();
+        t.alloc(100);
+        t.alloc(50);
+        t.free(100);
+        t.alloc(20);
+        assert_eq!(t.current(), 70);
+        assert_eq!(t.peak(), 150);
+    }
+
+    #[test]
+    fn forward_peak_is_adjacent_layer_pair_for_mlp() {
+        // For a chain MLP the live set at any Linear node is {parent, self},
+        // so peak ≈ t · max_l (N_l + N_{l+1}) — Appendix D's eq. 28.
+        let mut rng = Xoshiro256::new(31);
+        let dims = [8usize, 32, 32, 32, 1];
+        let g = mlp_graph(&random_layers(&dims, &mut rng), Act::Tanh);
+        let m = MemoryModel::new(&g);
+        let t = 8;
+        let peak = m.forward_peak_scalars(t);
+        // Max adjacent sum: 32+32 = 64 → peak = t·64 (+ output retention ≤ t).
+        let bound = (t * (32 + 32 + 1)) as u64;
+        assert!(peak <= bound, "peak {peak} > bound {bound}");
+        assert!(peak >= (t * 64) as u64, "peak {peak} too small");
+    }
+
+    #[test]
+    fn hessian_peak_exceeds_forward_peak() {
+        // Theorem 2.2: M₁ < M₂ for any architecture; check on MLPs of
+        // several depths with t = N.
+        let mut rng = Xoshiro256::new(32);
+        for depth in [2usize, 4, 8] {
+            let mut dims = vec![16usize];
+            dims.extend(std::iter::repeat(64).take(depth));
+            dims.push(1);
+            let g = mlp_graph(&random_layers(&dims, &mut rng), Act::Tanh);
+            let m = MemoryModel::new(&g);
+            let (fwd, hess) = m.theorem22_pair(16);
+            assert!(
+                fwd < hess,
+                "depth {depth}: forward {fwd} !< hessian {hess}"
+            );
+        }
+    }
+
+    #[test]
+    fn theorem22_mlp_ratio_scales_with_depth() {
+        // M₁/M₂ ≲ 2/L: the ratio should shrink as the MLP deepens.
+        let mut rng = Xoshiro256::new(33);
+        let ratio_for_depth = |l: usize, rng: &mut Xoshiro256| -> f64 {
+            let mut dims = vec![16usize];
+            dims.extend(std::iter::repeat(64).take(l));
+            dims.push(1);
+            let g = mlp_graph(&random_layers(&dims, rng), Act::Tanh);
+            let m = MemoryModel::new(&g);
+            let (fwd, hess) = m.theorem22_pair(16);
+            fwd as f64 / hess as f64
+        };
+        let r2 = ratio_for_depth(2, &mut rng);
+        let r8 = ratio_for_depth(8, &mut rng);
+        assert!(r8 < r2, "ratio should fall with depth: {r2} → {r8}");
+        // And the 2/L bound (loose, up to constants): for L=8 expect < 0.5.
+        assert!(r8 < 0.5, "r8 = {r8}");
+    }
+}

@@ -1,0 +1,79 @@
+//! Automatic differentiation engines — the paper's contribution and its
+//! baseline, both exactly instrumented.
+//!
+//! * [`forward_jacobian`] — forward-mode tangent propagation (eq. 13 /
+//!   eq. 17): the shared machinery that pushes an `r×N`-seeded tangent
+//!   through the graph.
+//! * [`backward`] — reverse-mode adjoints `∂φ/∂vⁱ` (eq. 12), also used by
+//!   the training loop for parameter gradients.
+//! * [`hessian`] — the **Hessian-based baseline**: forward Jacobian +
+//!   reverse pass + the second-order reverse sweep of eq. 14, yielding the
+//!   full Hessian, then contracted with `A`. This mirrors what standard
+//!   AutoDiff packages do and is the comparator in Tables 1–2.
+//! * [`dof`] — **DOF** (eqs. 7–9): one forward pass over the tuple
+//!   `(v, g, s) = (v, L∇v, L[v])`.
+//! * [`flops`] — analytic FLOP accounting (`|E|`, `|R|`, `|T|` of
+//!   Appendix B) plus the closed-form cost of both methods.
+//! * [`memory`] — liveness-based peak-memory accounting (`τ(i)`, `C(j)` of
+//!   Appendix D).
+//!
+//! ### Op granularity and Appendix C
+//!
+//! The graph decomposes each MLP layer into an affine node (zero second
+//! derivative) followed by an elementwise activation (diagonal second
+//! derivative). This decomposition *is* the Appendix C fast path: the
+//! Hessian-contraction term of eq. 9 touches only `Σ_l N_{l+1}` diagonal
+//! pairs instead of `Σ_l N_l(N_l−1)` cross pairs, for both engines alike,
+//! so the comparison between methods stays apples-to-apples.
+
+pub mod backward;
+pub mod dof;
+pub mod dof_tape;
+pub mod flops;
+pub mod forward_jacobian;
+pub mod hessian;
+pub mod memory;
+
+pub use dof::{DofEngine, DofResult};
+pub use flops::{CostModel, GraphCounts};
+pub use forward_jacobian::TangentBatch;
+pub use hessian::{HessianEngine, HessianResult};
+pub use memory::{MemoryModel, PeakTracker};
+
+/// Exact floating-point operation counts accumulated by an engine run.
+///
+/// Multiplications and additions are tracked separately; the paper's proofs
+/// count multiplications ("we only count multiplications", Appendix B), so
+/// comparisons use [`Cost::muls`] while `adds` is kept for completeness.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Cost {
+    pub muls: u64,
+    pub adds: u64,
+}
+
+impl Cost {
+    pub fn zero() -> Self {
+        Self::default()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.muls + self.adds
+    }
+}
+
+impl std::ops::Add for Cost {
+    type Output = Cost;
+    fn add(self, o: Cost) -> Cost {
+        Cost {
+            muls: self.muls + o.muls,
+            adds: self.adds + o.adds,
+        }
+    }
+}
+
+impl std::ops::AddAssign for Cost {
+    fn add_assign(&mut self, o: Cost) {
+        self.muls += o.muls;
+        self.adds += o.adds;
+    }
+}

@@ -1,0 +1,208 @@
+//! Benchmark harness — replaces `criterion` in the offline build.
+//!
+//! [`Bencher`] runs a closure with warmup + repetitions and reports a
+//! [`Measurement`] (wall-clock summary + optional FLOP/byte annotations);
+//! [`table`] renders rows in the paper's Table 1/2 format
+//! (`Operator | Memory Hessian/DOF/ratio | Time Hessian/DOF/ratio`).
+
+pub mod table1;
+pub mod table2;
+
+use std::time::Instant;
+
+use crate::util::{fmt_bytes, fmt_duration, Summary};
+
+/// Wall-clock measurement with optional annotations.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-iteration seconds.
+    pub seconds: Summary,
+    /// FLOPs per iteration (multiplications), if known.
+    pub muls: Option<u64>,
+    /// Peak tangent bytes per iteration, if known.
+    pub peak_bytes: Option<u64>,
+}
+
+impl Measurement {
+    /// Effective multiply throughput (muls/s) at the median.
+    pub fn mul_rate(&self) -> Option<f64> {
+        self.muls.map(|m| m as f64 / self.seconds.median.max(1e-12))
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Hard cap on total measured time; reps stop early past this.
+    pub max_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            measure_iters: 10,
+            max_seconds: 30.0,
+        }
+    }
+}
+
+/// Timing driver.
+pub struct Bencher {
+    pub cfg: BenchConfig,
+}
+
+impl Bencher {
+    pub fn new(cfg: BenchConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Run `f` with warmup and repetitions; `f` returns optional
+    /// (muls, peak_bytes) annotations (from the engines' exact counters).
+    pub fn run<F>(&self, name: &str, mut f: F) -> Measurement
+    where
+        F: FnMut() -> (Option<u64>, Option<u64>),
+    {
+        let mut muls = None;
+        let mut peak = None;
+        for _ in 0..self.cfg.warmup_iters {
+            let (m, p) = f();
+            muls = m.or(muls);
+            peak = p.or(peak);
+        }
+        let mut times = Vec::with_capacity(self.cfg.measure_iters);
+        let start_all = Instant::now();
+        for _ in 0..self.cfg.measure_iters {
+            let t0 = Instant::now();
+            let (m, p) = f();
+            times.push(t0.elapsed().as_secs_f64());
+            muls = m.or(muls);
+            peak = p.or(peak);
+            if start_all.elapsed().as_secs_f64() > self.cfg.max_seconds {
+                break;
+            }
+        }
+        Measurement {
+            name: name.to_string(),
+            seconds: Summary::of(&times),
+            muls,
+            peak_bytes: peak,
+        }
+    }
+}
+
+/// One paper-style comparison row: operator class, Hessian vs DOF.
+#[derive(Debug, Clone)]
+pub struct CompareRow {
+    pub operator: String,
+    pub hessian: Measurement,
+    pub dof: Measurement,
+}
+
+impl CompareRow {
+    pub fn time_ratio(&self) -> f64 {
+        self.hessian.seconds.median / self.dof.seconds.median.max(1e-12)
+    }
+
+    pub fn memory_ratio(&self) -> Option<f64> {
+        match (self.hessian.peak_bytes, self.dof.peak_bytes) {
+            (Some(h), Some(d)) if d > 0 => Some(h as f64 / d as f64),
+            _ => None,
+        }
+    }
+
+    pub fn flop_ratio(&self) -> Option<f64> {
+        match (self.hessian.muls, self.dof.muls) {
+            (Some(h), Some(d)) if d > 0 => Some(h as f64 / d as f64),
+            _ => None,
+        }
+    }
+}
+
+/// Render rows in the paper's table format.
+pub fn render_table(title: &str, rows: &[CompareRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("## {title}\n\n"));
+    out.push_str(
+        "| Operator | Mem Hessian | Mem DOF | ratio | Time Hessian | Time DOF | ratio | FLOP ratio |\n",
+    );
+    out.push_str(
+        "|----------|-------------|---------|-------|--------------|----------|-------|------------|\n",
+    );
+    for r in rows {
+        let mh = r
+            .hessian
+            .peak_bytes
+            .map(fmt_bytes)
+            .unwrap_or_else(|| "-".into());
+        let md = r.dof.peak_bytes.map(fmt_bytes).unwrap_or_else(|| "-".into());
+        let mr = r
+            .memory_ratio()
+            .map(|v| format!("{v:.1}"))
+            .unwrap_or_else(|| "-".into());
+        let fr = r
+            .flop_ratio()
+            .map(|v| format!("{v:.2}"))
+            .unwrap_or_else(|| "-".into());
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {:.1} | {} |\n",
+            r.operator,
+            mh,
+            md,
+            mr,
+            fmt_duration(r.hessian.seconds.median),
+            fmt_duration(r.dof.seconds.median),
+            r.time_ratio(),
+            fr,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_measures_and_annotates() {
+        let b = Bencher::new(BenchConfig {
+            warmup_iters: 1,
+            measure_iters: 5,
+            max_seconds: 5.0,
+        });
+        let m = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+            (Some(10_000), Some(1024))
+        });
+        assert_eq!(m.seconds.n, 5);
+        assert!(m.seconds.median > 0.0);
+        assert_eq!(m.muls, Some(10_000));
+        assert!(m.mul_rate().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn table_rendering() {
+        let mk = |name: &str, t: f64, mem: u64, muls: u64| Measurement {
+            name: name.into(),
+            seconds: Summary::of(&[t, t, t]),
+            muls: Some(muls),
+            peak_bytes: Some(mem),
+        };
+        let rows = vec![CompareRow {
+            operator: "Elliptic".into(),
+            hessian: mk("h", 0.2, 10_000_000, 2_000_000),
+            dof: mk("d", 0.1, 3_000_000, 1_000_000),
+        }];
+        let s = render_table("Table 1", &rows);
+        assert!(s.contains("Elliptic"));
+        assert!(s.contains("2.0")); // time & flop ratio
+        assert!(s.contains("3.3")); // memory ratio
+    }
+}

@@ -1,0 +1,192 @@
+//! Dynamic batcher: accumulates requests into fixed-capacity batches.
+//!
+//! The AOT artifacts have a fixed batch dimension `B`; the batcher packs
+//! incoming requests' rows into a `B×width` buffer, cutting a batch when
+//! (a) it is full, (b) the oldest request has waited past `max_wait`, or
+//! (c) `flush()` is called. A request larger than `B` is split across
+//! batches transparently.
+
+use std::time::{Duration, Instant};
+
+use super::EvalRequest;
+
+/// Flush policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Artifact batch capacity `B` (rows).
+    pub capacity: usize,
+    /// Max time the oldest row may wait before a partial batch is cut.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            capacity: 32,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A request fragment tracked inside the batcher.
+#[derive(Debug)]
+pub struct PendingRequest<T> {
+    /// Caller-provided tag used to route the response (e.g. a channel).
+    pub tag: T,
+    /// Rows of this request (in submit order) inside the *current* batch:
+    /// `(batch_row_start, rows)`.
+    pub span: (usize, usize),
+}
+
+/// A cut batch: padded flat buffer + the spans of each member request.
+#[derive(Debug)]
+pub struct CutBatch<T> {
+    pub data: Vec<f32>,
+    pub rows_used: usize,
+    pub members: Vec<PendingRequest<T>>,
+}
+
+/// Accumulator. `T` is the per-request routing tag.
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    width: usize,
+    buf: Vec<f32>,
+    rows: usize,
+    members: Vec<PendingRequest<T>>,
+    oldest: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(width: usize, policy: BatchPolicy) -> Self {
+        Self {
+            policy,
+            width,
+            buf: vec![0.0; policy.capacity * width],
+            rows: 0,
+            members: Vec::new(),
+            oldest: None,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    pub fn free_rows(&self) -> usize {
+        self.policy.capacity - self.rows
+    }
+
+    /// Push a request; returns any batches that became full while packing
+    /// (a request larger than the capacity spans several).
+    pub fn push(&mut self, req: EvalRequest, tag_for_fragment: impl Fn(usize) -> T) -> Vec<CutBatch<T>> {
+        assert_eq!(req.width, self.width, "request width mismatch");
+        let mut cut = Vec::new();
+        let mut row_off = 0usize;
+        let mut fragment = 0usize;
+        while row_off < req.rows {
+            if self.rows == self.policy.capacity {
+                cut.push(self.cut());
+            }
+            let take = (req.rows - row_off).min(self.free_rows());
+            let src =
+                &req.points[row_off * self.width..(row_off + take) * self.width];
+            let dst_start = self.rows * self.width;
+            self.buf[dst_start..dst_start + src.len()].copy_from_slice(src);
+            self.members.push(PendingRequest {
+                tag: tag_for_fragment(fragment),
+                span: (self.rows, take),
+            });
+            self.rows += take;
+            if self.oldest.is_none() {
+                self.oldest = Some(Instant::now());
+            }
+            row_off += take;
+            fragment += 1;
+        }
+        if self.rows == self.policy.capacity {
+            cut.push(self.cut());
+        }
+        cut
+    }
+
+    /// Should a partial batch be cut due to the wait deadline?
+    pub fn deadline_expired(&self) -> bool {
+        match self.oldest {
+            Some(t) => t.elapsed() >= self.policy.max_wait && self.rows > 0,
+            None => false,
+        }
+    }
+
+    /// Cut whatever is accumulated (pads with zero rows).
+    pub fn cut(&mut self) -> CutBatch<T> {
+        let data = std::mem::replace(
+            &mut self.buf,
+            vec![0.0; self.policy.capacity * self.width],
+        );
+        let rows_used = self.rows;
+        let members = std::mem::take(&mut self.members);
+        self.rows = 0;
+        self.oldest = None;
+        CutBatch {
+            data,
+            rows_used,
+            members,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(rows: usize, width: usize, fill: f32) -> EvalRequest {
+        EvalRequest::new(vec![fill; rows * width], width)
+    }
+
+    #[test]
+    fn packs_multiple_requests_into_one_batch() {
+        let mut b: Batcher<usize> = Batcher::new(2, BatchPolicy { capacity: 8, max_wait: Duration::from_secs(1) });
+        assert!(b.push(req(3, 2, 1.0), |_| 0).is_empty());
+        assert!(b.push(req(4, 2, 2.0), |_| 1).is_empty());
+        let cut = b.cut();
+        assert_eq!(cut.rows_used, 7);
+        assert_eq!(cut.members.len(), 2);
+        assert_eq!(cut.members[0].span, (0, 3));
+        assert_eq!(cut.members[1].span, (3, 4));
+        // Padding rows are zero.
+        assert_eq!(&cut.data[14..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn full_batch_auto_cuts() {
+        let mut b: Batcher<usize> = Batcher::new(1, BatchPolicy { capacity: 4, max_wait: Duration::from_secs(1) });
+        let cuts = b.push(req(4, 1, 3.0), |_| 7);
+        assert_eq!(cuts.len(), 1);
+        assert_eq!(cuts[0].rows_used, 4);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn oversize_request_spans_batches() {
+        let mut b: Batcher<usize> = Batcher::new(1, BatchPolicy { capacity: 4, max_wait: Duration::from_secs(1) });
+        let cuts = b.push(req(10, 1, 1.0), |frag| frag);
+        // 10 rows over capacity 4: two full cuts, 2 rows remain.
+        assert_eq!(cuts.len(), 2);
+        assert_eq!(b.free_rows(), 2);
+        // Fragments tagged in order.
+        assert_eq!(cuts[0].members[0].tag, 0);
+        assert_eq!(cuts[1].members[0].tag, 1);
+        let tail = b.cut();
+        assert_eq!(tail.rows_used, 2);
+        assert_eq!(tail.members[0].tag, 2);
+    }
+
+    #[test]
+    fn deadline() {
+        let mut b: Batcher<usize> = Batcher::new(1, BatchPolicy { capacity: 4, max_wait: Duration::from_millis(1) });
+        assert!(!b.deadline_expired());
+        b.push(req(1, 1, 1.0), |_| 0);
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.deadline_expired());
+    }
+}

@@ -1,0 +1,107 @@
+//! Serving metrics: request/batch counters, latency histogram, padding
+//! efficiency.
+
+use std::sync::Mutex;
+
+use crate::util::LatencyHistogram;
+
+/// Shared metrics (interior mutability; cloneable via Arc by callers).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    rows: u64,
+    batches: u64,
+    padded_rows: u64,
+    latency: Option<LatencyHistogram>,
+    exec_latency: Option<LatencyHistogram>,
+}
+
+/// Point-in-time snapshot for display.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub rows: u64,
+    pub batches: u64,
+    pub padded_rows: u64,
+    pub mean_latency: f64,
+    pub p95_latency: f64,
+    pub mean_exec_latency: f64,
+    /// Fraction of executed rows that were real (non-padding).
+    pub batch_efficiency: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self, rows: usize, latency_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        g.rows += rows as u64;
+        g.latency
+            .get_or_insert_with(LatencyHistogram::new)
+            .record(latency_s);
+    }
+
+    pub fn record_batch(&self, rows_used: usize, capacity: usize, exec_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.padded_rows += (capacity - rows_used) as u64;
+        g.exec_latency
+            .get_or_insert_with(LatencyHistogram::new)
+            .record(exec_s);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let executed = g.rows + g.padded_rows;
+        MetricsSnapshot {
+            requests: g.requests,
+            rows: g.rows,
+            batches: g.batches,
+            padded_rows: g.padded_rows,
+            mean_latency: g.latency.as_ref().map(|h| h.mean()).unwrap_or(0.0),
+            p95_latency: g.latency.as_ref().map(|h| h.quantile(0.95)).unwrap_or(0.0),
+            mean_exec_latency: g.exec_latency.as_ref().map(|h| h.mean()).unwrap_or(0.0),
+            batch_efficiency: if executed == 0 {
+                1.0
+            } else {
+                g.rows as f64 / executed as f64
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_efficiency() {
+        let m = Metrics::new();
+        m.record_request(10, 0.002);
+        m.record_request(6, 0.004);
+        m.record_batch(16, 32, 0.001);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.rows, 16);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.padded_rows, 16);
+        assert!((s.batch_efficiency - 0.5).abs() < 1e-12);
+        assert!(s.mean_latency > 0.0);
+        assert!(s.p95_latency >= s.mean_latency * 0.5);
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.batch_efficiency, 1.0);
+    }
+}

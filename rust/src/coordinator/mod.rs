@@ -1,0 +1,46 @@
+//! L3 coordinator: request routing, dynamic batching, and worker threads
+//! that own the PJRT executables.
+//!
+//! The serving model: clients submit variable-size point sets for operator
+//! evaluation (`(φ, L[φ])` at collocation points); a per-model worker
+//! thread batches them up to the artifact's fixed AOT batch size (padding
+//! the tail), executes, splits results back per request, and records
+//! latency/throughput metrics. PJRT handles are not `Send`, so each worker
+//! owns its own [`crate::runtime::Executor`]; the handle side is plain
+//! `mpsc`, so any number of producer threads can submit.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher, PendingRequest};
+pub use metrics::Metrics;
+pub use server::{ModelServer, ServerHandle};
+
+/// A request: evaluate the operator at `rows` points of width `width`
+/// (flat row-major).
+#[derive(Debug, Clone)]
+pub struct EvalRequest {
+    pub points: Vec<f32>,
+    pub rows: usize,
+    pub width: usize,
+}
+
+impl EvalRequest {
+    pub fn new(points: Vec<f32>, width: usize) -> Self {
+        assert!(width > 0 && points.len() % width == 0, "ragged request");
+        let rows = points.len() / width;
+        Self {
+            points,
+            rows,
+            width,
+        }
+    }
+}
+
+/// A response: `φ` and `L[φ]` per requested point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalResponse {
+    pub phi: Vec<f32>,
+    pub lphi: Vec<f32>,
+}

@@ -1,0 +1,338 @@
+//! Model server: a worker thread that owns the compute (PJRT executable or
+//! a Rust-engine closure), batches incoming requests, and routes results.
+//!
+//! PJRT handles are **not** `Send`, so the XLA executor is constructed
+//! *inside* its worker thread; only the request channel crosses threads.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{BatchPolicy, Batcher, CutBatch};
+use super::metrics::Metrics;
+use super::{EvalRequest, EvalResponse};
+
+/// Batch compute signature: padded flat batch + width → `(phi, lphi)` flat
+/// over the full padded batch.
+pub type BatchFn = Box<dyn FnMut(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)> + Send>;
+
+type RespTx = mpsc::Sender<Result<EvalResponse, String>>;
+
+enum Msg {
+    Eval(EvalRequest, RespTx),
+    Shutdown,
+}
+
+/// Handle for submitting requests to a running [`ModelServer`].
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Msg>,
+    width: usize,
+    pub metrics: Arc<Metrics>,
+}
+
+impl ServerHandle {
+    /// Submit a request; blocks until the response is ready. Requests
+    /// larger than the batch capacity are split and reassembled here.
+    pub fn eval_blocking(&self, points: Vec<f32>) -> Result<EvalResponse> {
+        let req = EvalRequest::new(points, self.width);
+        let rows = req.rows;
+        let t0 = Instant::now();
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Eval(req, rtx))
+            .map_err(|_| anyhow!("server stopped"))?;
+        let mut phi = Vec::with_capacity(rows);
+        let mut lphi = Vec::with_capacity(rows);
+        while phi.len() < rows {
+            let part = rrx
+                .recv()
+                .map_err(|_| anyhow!("server dropped response channel"))?
+                .map_err(|e| anyhow!(e))?;
+            phi.extend(part.phi);
+            lphi.extend(part.lphi);
+        }
+        self.metrics.record_request(rows, t0.elapsed().as_secs_f64());
+        Ok(EvalResponse { phi, lphi })
+    }
+}
+
+/// The worker event loop — runs on the worker thread; `compute` need not
+/// be `Send` because it never leaves this thread.
+fn worker_loop<F>(
+    rx: mpsc::Receiver<Msg>,
+    width: usize,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    mut compute: F,
+) where
+    F: FnMut(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)>,
+{
+    let mut batcher: Batcher<RespTx> = Batcher::new(width, policy);
+    let run_batch = |cut: CutBatch<RespTx>, compute: &mut F| {
+        let t0 = Instant::now();
+        let result = compute(&cut.data, width);
+        let exec_s = t0.elapsed().as_secs_f64();
+        metrics.record_batch(cut.rows_used, policy.capacity, exec_s);
+        match result {
+            Ok((phi, lphi)) => {
+                for m in cut.members {
+                    let (start, rows) = m.span;
+                    let _ = m.tag.send(Ok(EvalResponse {
+                        phi: phi[start..start + rows].to_vec(),
+                        lphi: lphi[start..start + rows].to_vec(),
+                    }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("batch compute failed: {e:#}");
+                for m in cut.members {
+                    let _ = m.tag.send(Err(msg.clone()));
+                }
+            }
+        }
+    };
+    loop {
+        match rx.recv_timeout(policy.max_wait) {
+            Ok(Msg::Eval(req, rtx)) => {
+                let cuts = batcher.push(req, |_frag| rtx.clone());
+                for cut in cuts {
+                    run_batch(cut, &mut compute);
+                }
+            }
+            Ok(Msg::Shutdown) => {
+                if !batcher.is_empty() {
+                    run_batch(batcher.cut(), &mut compute);
+                }
+                break;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if batcher.deadline_expired() {
+                    run_batch(batcher.cut(), &mut compute);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                if !batcher.is_empty() {
+                    run_batch(batcher.cut(), &mut compute);
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// A running worker.
+pub struct ModelServer {
+    handle: ServerHandle,
+    join: Option<JoinHandle<()>>,
+    tx: mpsc::Sender<Msg>,
+}
+
+impl ModelServer {
+    /// Spawn a worker around an arbitrary (Send) batch compute.
+    pub fn spawn(width: usize, policy: BatchPolicy, compute: BatchFn) -> Self {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let metrics = Arc::new(Metrics::new());
+        let worker_metrics = Arc::clone(&metrics);
+        let join = std::thread::spawn(move || {
+            worker_loop(rx, width, policy, worker_metrics, compute);
+        });
+        let handle = ServerHandle {
+            tx: tx.clone(),
+            width,
+            metrics,
+        };
+        Self {
+            handle,
+            join: Some(join),
+            tx,
+        }
+    }
+
+    /// Spawn a worker that executes a PJRT artifact. The executor is
+    /// created inside the worker thread (PJRT handles are not `Send`);
+    /// load/compile errors are surfaced synchronously.
+    pub fn spawn_xla(
+        artifact_dir: std::path::PathBuf,
+        artifact: String,
+        width: usize,
+        batch: usize,
+        policy_wait: std::time::Duration,
+    ) -> Result<Self> {
+        let policy = BatchPolicy {
+            capacity: batch,
+            max_wait: policy_wait,
+        };
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let metrics = Arc::new(Metrics::new());
+        let worker_metrics = Arc::clone(&metrics);
+        let art = artifact.clone();
+        let join = std::thread::spawn(move || {
+            use crate::runtime::{ArtifactRegistry, Executor};
+            let exec = (|| -> Result<Executor> {
+                let reg = ArtifactRegistry::open(&artifact_dir)?;
+                let mut e = Executor::cpu()?;
+                e.load(&art, &reg.path(&art)?)?;
+                Ok(e)
+            })();
+            let exec = match exec {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            // Non-Send closure is fine: it stays on this thread.
+            let compute = move |data: &[f32], w: usize| {
+                let rows = data.len() / w;
+                let outs = exec.run_f32(&art, &[(data, &[rows, w])])?;
+                Ok((outs[0].clone(), outs[1].clone()))
+            };
+            worker_loop(rx, width, policy, worker_metrics, compute);
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(anyhow!("worker failed to load {artifact}: {e}")),
+            Err(_) => return Err(anyhow!("worker died during startup")),
+        }
+        let handle = ServerHandle {
+            tx: tx.clone(),
+            width,
+            metrics,
+        };
+        Ok(Self {
+            handle,
+            join: Some(join),
+            tx,
+        })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    /// Graceful stop (flushes the partial batch).
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ModelServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn mock_compute() -> BatchFn {
+        // phi = sum of row; lphi = 2 * sum of row.
+        Box::new(|data: &[f32], width: usize| {
+            let rows = data.len() / width;
+            let mut phi = Vec::with_capacity(rows);
+            let mut lphi = Vec::with_capacity(rows);
+            for r in 0..rows {
+                let s: f32 = data[r * width..(r + 1) * width].iter().sum();
+                phi.push(s);
+                lphi.push(2.0 * s);
+            }
+            Ok((phi, lphi))
+        })
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let server = ModelServer::spawn(
+            3,
+            BatchPolicy {
+                capacity: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            mock_compute(),
+        );
+        let h = server.handle();
+        let resp = h.eval_blocking(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(resp.phi, vec![6.0, 15.0]);
+        assert_eq!(resp.lphi, vec![12.0, 30.0]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn serves_concurrent_requests_with_batching() {
+        let server = ModelServer::spawn(
+            2,
+            BatchPolicy {
+                capacity: 16,
+                max_wait: Duration::from_millis(2),
+            },
+            mock_compute(),
+        );
+        let h = server.handle();
+        let mut joins = Vec::new();
+        for i in 0..8 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                let v = i as f32;
+                let resp = h.eval_blocking(vec![v, v + 1.0]).unwrap();
+                assert_eq!(resp.phi, vec![2.0 * v + 1.0]);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let snap = h.metrics.snapshot();
+        assert_eq!(snap.requests, 8);
+        assert!(snap.batches >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn oversize_request_reassembled() {
+        let server = ModelServer::spawn(
+            1,
+            BatchPolicy {
+                capacity: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            mock_compute(),
+        );
+        let h = server.handle();
+        let pts: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let resp = h.eval_blocking(pts.clone()).unwrap();
+        assert_eq!(resp.phi, pts);
+        server.shutdown();
+    }
+
+    #[test]
+    fn compute_error_propagates() {
+        let failing: BatchFn = Box::new(|_, _| Err(anyhow!("backend exploded")));
+        let server = ModelServer::spawn(
+            1,
+            BatchPolicy {
+                capacity: 2,
+                max_wait: Duration::from_millis(1),
+            },
+            failing,
+        );
+        let h = server.handle();
+        let err = h.eval_blocking(vec![1.0]).unwrap_err();
+        assert!(err.to_string().contains("backend exploded"));
+        server.shutdown();
+    }
+}

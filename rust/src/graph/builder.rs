@@ -1,0 +1,155 @@
+//! Graph constructors for the paper's two benchmark architectures
+//! (Appendix E): the plain MLP and the "MLP with Jacobian sparsity"
+//! (block-split input, per-block MLPs, product-sum head — the separable-PINN
+//! style architecture of Cho et al. 2023).
+
+use super::{Act, Graph, NodeId};
+use crate::tensor::Tensor;
+
+/// Per-layer weights of an MLP: `(W_l, b_l)` with `W_l: N_{l+1}×N_l`.
+pub type LayerWeights = Vec<(Tensor, Vec<f64>)>;
+
+/// Build the plain-MLP graph: alternating Linear / Activation nodes, with a
+/// final Linear (no activation on the last layer, matching Example A.1's
+/// `u^{L+1} = φ(x)` scalar head).
+pub fn mlp_graph(layers: &LayerWeights, act: Act) -> Graph {
+    assert!(!layers.is_empty());
+    let in_dim = layers[0].0.dims()[1];
+    let mut g = Graph::new();
+    let x = g.input(in_dim);
+    append_mlp(&mut g, x, layers, act);
+    g
+}
+
+/// Append an MLP chain starting from `parent`; returns the output node.
+/// Activation is applied after every layer except the last.
+pub fn append_mlp(g: &mut Graph, parent: NodeId, layers: &LayerWeights, act: Act) -> NodeId {
+    let mut cur = parent;
+    let last = layers.len() - 1;
+    for (i, (w, b)) in layers.iter().enumerate() {
+        cur = g.linear(cur, w.clone(), b.clone());
+        if i != last {
+            cur = g.activation(cur, act);
+        }
+    }
+    cur
+}
+
+/// Build the Jacobian-sparse architecture (Appendix E):
+///
+/// ```text
+/// x = (x_1 … x_k)  (each block of dim N/k)
+/// output = Σ_d Π_i [MLP^i(x_i)]_d
+/// ```
+///
+/// Each block MLP maps `N/k → hidden → … → out_dim`; block outputs are
+/// multiplied elementwise across blocks and summed over `d`. The Jacobian of
+/// every intermediate neuron w.r.t. the input is supported on its own block,
+/// which is exactly the sparsity DOF exploits (§3.2).
+pub fn sparse_mlp_graph(block_layers: &[LayerWeights], act: Act) -> Graph {
+    let k = block_layers.len();
+    assert!(k >= 2, "sparse MLP needs ≥2 blocks");
+    let block_in: usize = block_layers[0][0].0.dims()[1];
+    let out_dim = block_layers[0].last().unwrap().0.dims()[0];
+    for bl in block_layers {
+        assert_eq!(bl[0].0.dims()[1], block_in, "uniform block input dims");
+        assert_eq!(
+            bl.last().unwrap().0.dims()[0],
+            out_dim,
+            "uniform block output dims"
+        );
+    }
+    let mut g = Graph::new();
+    let x = g.input(block_in * k);
+    let mut heads = Vec::with_capacity(k);
+    for (i, bl) in block_layers.iter().enumerate() {
+        let xi = g.slice(x, i * block_in, block_in);
+        heads.push(append_mlp(&mut g, xi, bl, act));
+    }
+    let prod = g.mul(heads);
+    g.sum_reduce(prod);
+    g
+}
+
+/// Random layer stack `dims[0] → dims[1] → …` with N(0, 1/fan_in) init
+/// (the init used in the paper's benchmarks is unspecified; Lecun-style
+/// keeps tanh pre-activations O(1) so σ'' terms are exercised).
+pub fn random_layers(dims: &[usize], rng: &mut crate::util::Xoshiro256) -> LayerWeights {
+    dims.windows(2)
+        .map(|w| {
+            let (n_in, n_out) = (w[0], w[1]);
+            let scale = 1.0 / (n_in as f64).sqrt();
+            let wt = Tensor::randn(&[n_out, n_in], rng).scale(scale);
+            let b = (0..n_out).map(|_| 0.1 * rng.normal()).collect();
+            (wt, b)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn mlp_graph_shape() {
+        let mut rng = Xoshiro256::new(1);
+        let layers = random_layers(&[4, 8, 8, 1], &mut rng);
+        let g = mlp_graph(&layers, Act::Tanh);
+        // input + 3 linear + 2 activation = 6 nodes
+        assert_eq!(g.len(), 6);
+        assert_eq!(g.node(g.output()).dim, 1);
+        let x = Tensor::randn(&[3, 4], &mut rng);
+        let y = g.eval(&x);
+        assert_eq!(y.dims(), &[3, 1]);
+        assert!(y.all_finite());
+    }
+
+    #[test]
+    fn sparse_mlp_matches_manual_product_sum() {
+        let mut rng = Xoshiro256::new(2);
+        let k = 3;
+        let blocks: Vec<LayerWeights> = (0..k)
+            .map(|_| random_layers(&[2, 5, 4], &mut rng))
+            .collect();
+        let g = sparse_mlp_graph(&blocks, Act::Tanh);
+        let x = Tensor::randn(&[2, 6], &mut rng);
+        let y = g.eval(&x);
+
+        // Manual: per-block MLP eval then product-sum.
+        for b in 0..2 {
+            let mut expected = 0.0;
+            let mut prod = vec![1.0; 4];
+            for (i, bl) in blocks.iter().enumerate() {
+                let xi = Tensor::from_vec(&[1, 2], x.row(b)[2 * i..2 * i + 2].to_vec());
+                let gi = mlp_graph(bl, Act::Tanh);
+                let oi = gi.eval(&xi);
+                for d in 0..4 {
+                    prod[d] *= oi.at(0, d);
+                }
+            }
+            for d in 0..4 {
+                expected += prod[d];
+            }
+            assert!((y.at(b, 0) - expected).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn paper_table3_shapes_build() {
+        // MLP: in 64, hidden 256, 8 layers. Sparse: 16 blocks × 4, out 8.
+        let mut rng = Xoshiro256::new(3);
+        let dims: Vec<usize> =
+            std::iter::once(64).chain(std::iter::repeat(256).take(8)).chain(std::iter::once(1)).collect();
+        let g = mlp_graph(&random_layers(&dims, &mut rng), Act::Tanh);
+        assert_eq!(g.input_dim(), 64);
+
+        let bdims: Vec<usize> =
+            std::iter::once(4).chain(std::iter::repeat(256).take(8)).chain(std::iter::once(8)).collect();
+        let blocks: Vec<LayerWeights> =
+            (0..16).map(|_| random_layers(&bdims, &mut rng)).collect();
+        let sg = sparse_mlp_graph(&blocks, Act::Tanh);
+        assert_eq!(sg.input_dim(), 64);
+        assert_eq!(sg.node(sg.output()).dim, 1);
+    }
+}

@@ -1,0 +1,365 @@
+//! Computation-graph engine.
+//!
+//! A directed acyclic graph of vector-valued nodes (Appendix A of the
+//! paper), constructed in topological order. The autodiff engines
+//! ([`crate::autodiff`]) walk this structure; this module owns construction,
+//! validation, plain forward evaluation (batched), and the liveness
+//! analysis `τ(i) = max{j : i → j}` (eq. 24) that drives the
+//! peak-memory accounting of Theorem 2.2.
+
+pub mod builder;
+pub mod node;
+
+pub use builder::{mlp_graph, sparse_mlp_graph};
+pub use node::{Act, Node, NodeId, Op};
+
+use crate::tensor::{matmul_nt, Tensor};
+
+/// A computation graph. Node ids are indices into `nodes` and are
+/// guaranteed topological (an op may only reference earlier ids).
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    nodes: Vec<Node>,
+    inputs: Vec<NodeId>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an input node of the given dimension.
+    pub fn input(&mut self, dim: usize) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            op: Op::Input { dim },
+            inputs: vec![],
+            dim,
+        });
+        self.inputs.push(id);
+        id
+    }
+
+    /// Add a generic op node; validates parent ids and dimensions.
+    pub fn push(&mut self, op: Op, inputs: Vec<NodeId>) -> NodeId {
+        let id = self.nodes.len();
+        for &p in &inputs {
+            assert!(p < id, "inputs must be earlier nodes (topological order)");
+        }
+        let dim = self.infer_dim(&op, &inputs);
+        self.nodes.push(Node { op, inputs, dim });
+        id
+    }
+
+    fn infer_dim(&self, op: &Op, inputs: &[NodeId]) -> usize {
+        match op {
+            Op::Input { dim } => *dim,
+            Op::Linear { weight, bias } => {
+                assert_eq!(inputs.len(), 1, "linear takes one parent");
+                let in_dim = self.nodes[inputs[0]].dim;
+                assert_eq!(
+                    weight.dims()[1],
+                    in_dim,
+                    "linear weight in-dim {} != parent dim {}",
+                    weight.dims()[1],
+                    in_dim
+                );
+                assert_eq!(weight.dims()[0], bias.len(), "bias length mismatch");
+                weight.dims()[0]
+            }
+            Op::Activation { .. } => {
+                assert_eq!(inputs.len(), 1, "activation takes one parent");
+                self.nodes[inputs[0]].dim
+            }
+            Op::Slice { start, len } => {
+                assert_eq!(inputs.len(), 1, "slice takes one parent");
+                let d = self.nodes[inputs[0]].dim;
+                assert!(start + len <= d, "slice [{start}, {start}+{len}) out of dim {d}");
+                *len
+            }
+            Op::Add | Op::Mul => {
+                assert!(inputs.len() >= 2, "add/mul take ≥2 parents");
+                let d = self.nodes[inputs[0]].dim;
+                for &p in inputs {
+                    assert_eq!(self.nodes[p].dim, d, "add/mul dims must match");
+                }
+                d
+            }
+            Op::SumReduce => {
+                assert_eq!(inputs.len(), 1, "sum_reduce takes one parent");
+                1
+            }
+            Op::Concat => {
+                assert!(!inputs.is_empty(), "concat needs ≥1 parent");
+                inputs.iter().map(|&p| self.nodes[p].dim).sum()
+            }
+        }
+    }
+
+    // ---- convenience builders --------------------------------------------
+
+    pub fn linear(&mut self, parent: NodeId, weight: Tensor, bias: Vec<f64>) -> NodeId {
+        self.push(Op::Linear { weight, bias }, vec![parent])
+    }
+
+    pub fn activation(&mut self, parent: NodeId, act: Act) -> NodeId {
+        self.push(Op::Activation { act }, vec![parent])
+    }
+
+    pub fn slice(&mut self, parent: NodeId, start: usize, len: usize) -> NodeId {
+        self.push(Op::Slice { start, len }, vec![parent])
+    }
+
+    pub fn add(&mut self, parents: Vec<NodeId>) -> NodeId {
+        self.push(Op::Add, parents)
+    }
+
+    pub fn mul(&mut self, parents: Vec<NodeId>) -> NodeId {
+        self.push(Op::Mul, parents)
+    }
+
+    pub fn sum_reduce(&mut self, parent: NodeId) -> NodeId {
+        self.push(Op::SumReduce, vec![parent])
+    }
+
+    // ---- accessors --------------------------------------------------------
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn input_ids(&self) -> &[NodeId] {
+        &self.inputs
+    }
+
+    /// The output node (by convention, the last node).
+    pub fn output(&self) -> NodeId {
+        assert!(!self.nodes.is_empty());
+        self.nodes.len() - 1
+    }
+
+    /// Total input dimension `N` (sum over input nodes).
+    pub fn input_dim(&self) -> usize {
+        self.inputs.iter().map(|&i| self.nodes[i].dim).sum()
+    }
+
+    /// For each node, the list of consumer node ids (`{j : i → j}`).
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut cons = vec![Vec::new(); self.nodes.len()];
+        for (j, n) in self.nodes.iter().enumerate() {
+            for &i in &n.inputs {
+                cons[i].push(j);
+            }
+        }
+        cons
+    }
+
+    /// Liveness horizon `τ(i) = max{j : i → j}` (eq. 24); `i` itself if the
+    /// node has no consumers (its buffer dies immediately after creation,
+    /// except the output which the caller holds).
+    pub fn tau(&self) -> Vec<NodeId> {
+        let mut tau: Vec<NodeId> = (0..self.nodes.len()).collect();
+        for (j, n) in self.nodes.iter().enumerate() {
+            for &i in &n.inputs {
+                if j > tau[i] {
+                    tau[i] = j;
+                }
+            }
+        }
+        tau
+    }
+
+    /// Total scalar neuron count `|V|` (Appendix D counts scalar nodes).
+    pub fn scalar_node_count(&self) -> usize {
+        self.nodes.iter().map(|n| n.dim).sum()
+    }
+
+    /// Batched forward evaluation of every node. `x` is `[batch, N]`.
+    /// Returns per-node value tensors `[batch, dim]`.
+    pub fn eval_all(&self, x: &Tensor) -> Vec<Tensor> {
+        assert_eq!(x.rank(), 2, "input must be [batch, N]");
+        let batch = x.dims()[0];
+        assert_eq!(x.dims()[1], self.input_dim(), "input dim mismatch");
+        let mut vals: Vec<Tensor> = Vec::with_capacity(self.nodes.len());
+        // Split the flat input across input nodes in declaration order.
+        let mut in_off = 0usize;
+        for (id, n) in self.nodes.iter().enumerate() {
+            let v = match &n.op {
+                Op::Input { dim } => {
+                    let mut t = Tensor::zeros(&[batch, *dim]);
+                    for b in 0..batch {
+                        t.row_mut(b).copy_from_slice(&x.row(b)[in_off..in_off + dim]);
+                    }
+                    in_off += dim;
+                    t
+                }
+                Op::Linear { weight, bias } => {
+                    // [batch, in] · Wᵀ → [batch, out]; then add bias.
+                    let mut out = matmul_nt(&vals[n.inputs[0]], weight);
+                    for b in 0..batch {
+                        for (o, &bi) in out.row_mut(b).iter_mut().zip(bias.iter()) {
+                            *o += bi;
+                        }
+                    }
+                    out
+                }
+                Op::Activation { act } => vals[n.inputs[0]].map(|v| act.f(v)),
+                Op::Slice { start, len } => {
+                    let p = &vals[n.inputs[0]];
+                    let mut t = Tensor::zeros(&[batch, *len]);
+                    for b in 0..batch {
+                        t.row_mut(b).copy_from_slice(&p.row(b)[*start..*start + *len]);
+                    }
+                    t
+                }
+                Op::Add => {
+                    let mut acc = vals[n.inputs[0]].clone();
+                    for &p in &n.inputs[1..] {
+                        acc = acc.add(&vals[p]);
+                    }
+                    acc
+                }
+                Op::Mul => {
+                    let mut acc = vals[n.inputs[0]].clone();
+                    for &p in &n.inputs[1..] {
+                        acc = acc.mul(&vals[p]);
+                    }
+                    acc
+                }
+                Op::SumReduce => {
+                    let p = &vals[n.inputs[0]];
+                    let mut t = Tensor::zeros(&[batch, 1]);
+                    for b in 0..batch {
+                        t.set(b, 0, p.row(b).iter().sum());
+                    }
+                    t
+                }
+                Op::Concat => {
+                    let mut t = Tensor::zeros(&[batch, n.dim]);
+                    for b in 0..batch {
+                        let mut off = 0;
+                        for &p in &n.inputs {
+                            let pr = vals[p].row(b);
+                            t.row_mut(b)[off..off + pr.len()].copy_from_slice(pr);
+                            off += pr.len();
+                        }
+                    }
+                    t
+                }
+            };
+            debug_assert_eq!(v.dims(), &[batch, n.dim], "node {id} dim mismatch");
+            vals.push(v);
+        }
+        vals
+    }
+
+    /// Forward evaluation returning only the output node value `[batch, out]`.
+    pub fn eval(&self, x: &Tensor) -> Tensor {
+        self.eval_all(x).pop().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    /// Build  φ(x) = sum( tanh(W x + b) )  for quick checks.
+    fn tiny_graph(n_in: usize, n_hid: usize, seed: u64) -> Graph {
+        let mut rng = Xoshiro256::new(seed);
+        let mut g = Graph::new();
+        let x = g.input(n_in);
+        let w = Tensor::randn(&[n_hid, n_in], &mut rng);
+        let b = (0..n_hid).map(|_| rng.normal()).collect();
+        let lin = g.linear(x, w, b);
+        let act = g.activation(lin, Act::Tanh);
+        g.sum_reduce(act);
+        g
+    }
+
+    #[test]
+    fn topology_and_dims() {
+        let g = tiny_graph(3, 5, 1);
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.input_dim(), 3);
+        assert_eq!(g.node(1).dim, 5);
+        assert_eq!(g.node(g.output()).dim, 1);
+    }
+
+    #[test]
+    fn eval_matches_manual() {
+        let mut g = Graph::new();
+        let x = g.input(2);
+        let w = Tensor::matrix(&[vec![1.0, 2.0], vec![-1.0, 0.5]]);
+        let lin = g.linear(x, w, vec![0.1, -0.2]);
+        let act = g.activation(lin, Act::Square);
+        g.sum_reduce(act);
+        let input = Tensor::from_vec(&[1, 2], vec![3.0, -1.0]);
+        let out = g.eval(&input);
+        // Wx+b = [3-2+0.1, -3-0.5-0.2] = [1.1, -3.7]; squares: 1.21, 13.69
+        assert!((out.item() - (1.21 + 13.69)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_eval_is_rowwise() {
+        let g = tiny_graph(4, 6, 2);
+        let mut rng = Xoshiro256::new(3);
+        let x = Tensor::randn(&[5, 4], &mut rng);
+        let batch_out = g.eval(&x);
+        for b in 0..5 {
+            let single = Tensor::from_vec(&[1, 4], x.row(b).to_vec());
+            let so = g.eval(&single);
+            assert!((batch_out.at(b, 0) - so.item()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tau_liveness() {
+        // x → lin → act → out; also x reused by a second lin consumed last.
+        let mut g = Graph::new();
+        let x = g.input(2);
+        let l1 = g.linear(x, Tensor::eye(2), vec![0.0; 2]);
+        let a1 = g.activation(l1, Act::Tanh);
+        let l2 = g.linear(x, Tensor::eye(2), vec![0.0; 2]);
+        let out = g.add(vec![a1, l2]);
+        let tau = g.tau();
+        assert_eq!(tau[x], l2); // x last used by l2
+        assert_eq!(tau[a1], out);
+        assert_eq!(tau[out], out); // no consumers
+    }
+
+    #[test]
+    fn slice_concat_mul() {
+        let mut g = Graph::new();
+        let x = g.input(4);
+        let a = g.slice(x, 0, 2);
+        let b = g.slice(x, 2, 2);
+        let m = g.mul(vec![a, b]);
+        let c = g.push(Op::Concat, vec![m, a]);
+        assert_eq!(g.node(c).dim, 4);
+        let input = Tensor::from_vec(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let vals = g.eval_all(&input);
+        assert_eq!(vals[m].row(0), &[3.0, 8.0]);
+        assert_eq!(vals[c].row(0), &[3.0, 8.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        let mut g = Graph::new();
+        let x = g.input(3);
+        let _ = g.linear(x, Tensor::eye(2), vec![0.0; 2]); // 2×2 weight on dim-3 parent
+    }
+}

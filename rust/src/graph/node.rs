@@ -1,0 +1,255 @@
+//! Graph node operations.
+//!
+//! Nodes are *vector-valued* (a node holds a whole layer's worth of neurons),
+//! matching how the paper's cost analysis groups the MLP computation graph
+//! (Appendix A, Example A.1). Scalar-level quantities (`|E|`, `|R|`, `|T|`
+//! from Appendix B) are derived analytically per op in
+//! [`crate::autodiff::flops`].
+
+use crate::tensor::Tensor;
+
+/// Elementwise activation functions with first and second derivatives —
+/// both are needed by the DOF propagation rule (eq. 9 uses `∂²F`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Act {
+    Tanh,
+    Sin,
+    /// Gaussian error linear unit (tanh approximation).
+    Gelu,
+    Softplus,
+    /// `x ↦ x²`, used in tests for its trivial second derivative.
+    Square,
+    Identity,
+}
+
+impl Act {
+    /// σ(x)
+    pub fn f(self, x: f64) -> f64 {
+        match self {
+            Act::Tanh => x.tanh(),
+            Act::Sin => x.sin(),
+            Act::Gelu => {
+                let c = (2.0 / std::f64::consts::PI).sqrt();
+                0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+            }
+            Act::Softplus => {
+                // Numerically stable log(1+e^x).
+                if x > 30.0 {
+                    x
+                } else {
+                    x.exp().ln_1p()
+                }
+            }
+            Act::Square => x * x,
+            Act::Identity => x,
+        }
+    }
+
+    /// σ'(x)
+    pub fn df(self, x: f64) -> f64 {
+        match self {
+            Act::Tanh => {
+                let t = x.tanh();
+                1.0 - t * t
+            }
+            Act::Sin => x.cos(),
+            Act::Gelu => {
+                let c = (2.0 / std::f64::consts::PI).sqrt();
+                let u = c * (x + 0.044715 * x * x * x);
+                let t = u.tanh();
+                let du = c * (1.0 + 3.0 * 0.044715 * x * x);
+                0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+            }
+            Act::Softplus => 1.0 / (1.0 + (-x).exp()),
+            Act::Square => 2.0 * x,
+            Act::Identity => 1.0,
+        }
+    }
+
+    /// σ''(x)
+    pub fn d2f(self, x: f64) -> f64 {
+        match self {
+            Act::Tanh => {
+                let t = x.tanh();
+                -2.0 * t * (1.0 - t * t)
+            }
+            Act::Sin => -x.sin(),
+            Act::Gelu => {
+                let c = (2.0 / std::f64::consts::PI).sqrt();
+                let u = c * (x + 0.044715 * x * x * x);
+                let t = u.tanh();
+                let sech2 = 1.0 - t * t;
+                let du = c * (1.0 + 3.0 * 0.044715 * x * x);
+                let d2u = c * 6.0 * 0.044715 * x;
+                // d/dx [0.5(1+t) + 0.5 x sech2 du]
+                0.5 * sech2 * du
+                    + 0.5 * (sech2 * du + x * (-2.0 * t * sech2 * du * du + sech2 * d2u))
+            }
+            Act::Softplus => {
+                let s = 1.0 / (1.0 + (-x).exp());
+                s * (1.0 - s)
+            }
+            Act::Square => 2.0,
+            Act::Identity => 0.0,
+        }
+    }
+
+    /// σ'''(x) — needed only when *training through* the DOF operator
+    /// (the eq. 9 term `σ''·|g|²` differentiates to `σ'''`). Returns `None`
+    /// for activations where we have not implemented the closed form; the
+    /// training tape rejects those with a clear error.
+    pub fn d3f(self, x: f64) -> Option<f64> {
+        match self {
+            Act::Tanh => {
+                let t = x.tanh();
+                let s = 1.0 - t * t; // sech²
+                // d/dx(-2 t s) = -2 s² + 4 t² s = s·(4t² − 2s)
+                Some(s * (4.0 * t * t - 2.0 * s))
+            }
+            Act::Sin => Some(-x.cos()),
+            Act::Softplus => {
+                let s = 1.0 / (1.0 + (-x).exp());
+                Some(s * (1.0 - s) * (1.0 - 2.0 * s))
+            }
+            Act::Square => Some(0.0),
+            Act::Identity => Some(0.0),
+            // The tanh-approximated GELU third derivative is unwieldy;
+            // PINN training uses tanh/sin in this release.
+            Act::Gelu => None,
+        }
+    }
+
+    /// Is σ linear (zero second derivative everywhere)?
+    pub fn is_linear(self) -> bool {
+        matches!(self, Act::Identity)
+    }
+}
+
+/// Node identifier (index into the graph's arena, topological by
+/// construction).
+pub type NodeId = usize;
+
+/// Vector-valued operation.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Graph input of dimension `dim` (the PDE coordinate block).
+    Input { dim: usize },
+    /// Affine map `W x + b`, `W: out×in`.
+    Linear { weight: Tensor, bias: Vec<f64> },
+    /// Elementwise activation.
+    Activation { act: Act },
+    /// Contiguous slice `x[start .. start+len]` of a single parent.
+    Slice { start: usize, len: usize },
+    /// Elementwise sum of ≥2 same-dimension parents.
+    Add,
+    /// Elementwise (Hadamard) product of ≥2 same-dimension parents — the
+    /// sparse-MLP head multiplies per-block outputs elementwise.
+    Mul,
+    /// Sum all components of a single parent to a scalar (dim-1) output —
+    /// the sparse-MLP head reduces `Σ_d Π_i [MLP^i]_d`.
+    SumReduce,
+    /// Concatenate parents along the feature axis.
+    Concat,
+}
+
+impl Op {
+    /// Short name for diagnostics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Input { .. } => "input",
+            Op::Linear { .. } => "linear",
+            Op::Activation { .. } => "activation",
+            Op::Slice { .. } => "slice",
+            Op::Add => "add",
+            Op::Mul => "mul",
+            Op::SumReduce => "sum_reduce",
+            Op::Concat => "concat",
+        }
+    }
+
+    /// Does this op have a nonzero second derivative in any argument pair?
+    /// (Determines whether it contributes to the `|T|` term of eq. 9/14.)
+    pub fn is_nonlinear(&self) -> bool {
+        match self {
+            Op::Activation { act } => !act.is_linear(),
+            Op::Mul => true,
+            _ => false,
+        }
+    }
+}
+
+/// A node: an op applied to parent nodes, with a known output dimension.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+    pub dim: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Check df/d2f against central finite differences.
+    fn check_derivs(act: Act, xs: &[f64], tol: f64) {
+        let h = 1e-5;
+        for &x in xs {
+            let fd1 = (act.f(x + h) - act.f(x - h)) / (2.0 * h);
+            let fd2 = (act.f(x + h) - 2.0 * act.f(x) + act.f(x - h)) / (h * h);
+            assert!(
+                (act.df(x) - fd1).abs() < tol,
+                "{act:?} df({x}) = {} vs fd {}",
+                act.df(x),
+                fd1
+            );
+            // Central second differences have ~ε/h² ≈ 1e-6 roundoff floor.
+            assert!(
+                (act.d2f(x) - fd2).abs() < (tol * 10.0).max(5e-5),
+                "{act:?} d2f({x}) = {} vs fd {}",
+                act.d2f(x),
+                fd2
+            );
+        }
+    }
+
+    #[test]
+    fn activation_derivatives_match_finite_difference() {
+        let xs = [-2.0, -0.7, -0.1, 0.0, 0.3, 1.1, 2.5];
+        check_derivs(Act::Tanh, &xs, 1e-8);
+        check_derivs(Act::Sin, &xs, 1e-8);
+        check_derivs(Act::Gelu, &xs, 1e-6);
+        check_derivs(Act::Softplus, &xs, 1e-8);
+        check_derivs(Act::Square, &xs, 1e-6);
+        check_derivs(Act::Identity, &xs, 1e-9);
+    }
+
+    #[test]
+    fn third_derivatives_match_finite_difference() {
+        let xs = [-1.5, -0.4, 0.0, 0.6, 1.8];
+        let h = 1e-4;
+        for act in [Act::Tanh, Act::Sin, Act::Softplus, Act::Square, Act::Identity] {
+            for &x in &xs {
+                let fd3 = (act.d2f(x + h) - act.d2f(x - h)) / (2.0 * h);
+                let got = act.d3f(x).unwrap();
+                assert!(
+                    (got - fd3).abs() < 1e-5,
+                    "{act:?} d3f({x}) = {got} vs fd {fd3}"
+                );
+            }
+        }
+        assert!(Act::Gelu.d3f(0.5).is_none());
+    }
+
+    #[test]
+    fn linearity_flags() {
+        assert!(Act::Identity.is_linear());
+        assert!(!Act::Tanh.is_linear());
+        assert!(Op::Mul.is_nonlinear());
+        assert!(!Op::Add.is_nonlinear());
+        assert!(!Op::Linear {
+            weight: Tensor::eye(2),
+            bias: vec![0.0; 2]
+        }
+        .is_nonlinear());
+    }
+}

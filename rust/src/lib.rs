@@ -1,0 +1,34 @@
+//! # DOF — Differential Operators with Forward propagation
+//!
+//! A full-system reproduction of *"DOF: Accelerating High-order Differential
+//! Operators with Forward Propagation"* (Li, Wang, Ye, He, Wang, 2024).
+//!
+//! DOF computes arbitrary second-order differential operators
+//! `L[φ] = Σ a_ij ∂²_ij φ + Σ b_i ∂_i φ + c φ` of a neural network `φ` in a
+//! **single forward pass**, by decomposing the symmetric coefficient matrix
+//! `A = Lᵀ D L` and propagating the tuple `(v, L∇v, L[v])` through the
+//! computation graph — exactly, with provably ≤½ the FLOPs and lower peak
+//! memory than Hessian-based AutoDiff (Theorems 2.1/2.2 of the paper).
+//!
+//! ## Crate layout
+//!
+//! * substrates: [`util`], [`prop`], [`tensor`], [`linalg`], [`graph`]
+//! * the contribution: [`autodiff`] (DOF + the Hessian-based baseline,
+//!   both instrumented with exact FLOP and peak-memory accounting)
+//! * applications: [`operators`], [`nn`], [`pde`], [`train`]
+//! * infrastructure: [`runtime`] (XLA-PJRT artifact execution),
+//!   [`coordinator`] (batching / serving), [`bench_harness`]
+
+pub mod autodiff;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod graph;
+pub mod linalg;
+pub mod nn;
+pub mod operators;
+pub mod pde;
+pub mod prop;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

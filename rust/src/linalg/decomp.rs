@@ -1,0 +1,186 @@
+//! The DOF coefficient-matrix decomposition `A = Lᵀ D L` (paper §2.2).
+//!
+//! Given the symmetric coefficient matrix `A` of a second-order operator
+//! `Σ a_ij ∂²_ij`, DOF seeds its tangent with `g⁰ = L` and contracts pairs of
+//! tangents through `D`. The paper's construction: eigendecompose
+//! `A = Sᵀ Σ S`, take `L = |Σ|^{1/2} S` and `D = sgn(Σ)`; rows of `L`
+//! associated with zero eigenvalues are dropped, so for a rank-`r` operator
+//! `L ∈ R^{r×N}` and the tangent dimension shrinks from `N` to `r` — the
+//! source of the paper's low-rank speedup (§2.2 "Low-rank Coefficient
+//! Matrix").
+
+use super::eigen::eigh;
+use crate::tensor::{matmul, Tensor};
+
+/// Relative eigenvalue threshold below which a direction is treated as rank
+/// deficient and dropped from `L`.
+pub const RANK_TOL: f64 = 1e-10;
+
+/// `A = Lᵀ D L` with `L ∈ R^{r×N}` and `D = diag(±1) ∈ R^{r×r}`.
+#[derive(Debug, Clone)]
+pub struct LdlDecomposition {
+    /// `r × N` factor; row `k` is `|λ_k|^{1/2} · s_kᵀ`.
+    pub l: Tensor,
+    /// Signs of the retained eigenvalues, each ±1.
+    pub d: Vec<f64>,
+    /// Input dimension `N`.
+    pub n: usize,
+}
+
+impl LdlDecomposition {
+    /// Decompose a symmetric matrix. `a` is symmetrized (`(A+Aᵀ)/2`) first —
+    /// the operator `Σ a_ij ∂²_ij` only sees the symmetric part anyway.
+    pub fn of(a: &Tensor) -> Self {
+        assert_eq!(a.rank(), 2);
+        let n = a.dims()[0];
+        assert_eq!(n, a.dims()[1]);
+        let sym = a.add(&a.transpose()).scale(0.5);
+        let e = eigh(&sym);
+        let max_abs = e.values.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        let tol = max_abs * RANK_TOL;
+
+        let kept: Vec<usize> = (0..n).filter(|&i| e.values[i].abs() > tol).collect();
+        let r = kept.len();
+        let mut l = Tensor::zeros(&[r, n]);
+        let mut d = Vec::with_capacity(r);
+        for (row, &i) in kept.iter().enumerate() {
+            let lam = e.values[i];
+            let scale = lam.abs().sqrt();
+            d.push(if lam >= 0.0 { 1.0 } else { -1.0 });
+            for col in 0..n {
+                // Eigenvectors are columns of `vectors`; row of L is the
+                // scaled transposed eigenvector.
+                l.set(row, col, scale * e.vectors.at(col, i));
+            }
+        }
+        Self { l, d, n }
+    }
+
+    /// Rank `r` of the retained decomposition.
+    pub fn rank(&self) -> usize {
+        self.d.len()
+    }
+
+    /// `rank(D)` restricted to +1 entries (number of positive directions).
+    pub fn positive_directions(&self) -> usize {
+        self.d.iter().filter(|&&s| s > 0.0).count()
+    }
+
+    /// Is the operator elliptic-definite (all retained signs +1)?
+    pub fn is_elliptic(&self) -> bool {
+        self.d.iter().all(|&s| s > 0.0)
+    }
+
+    /// Reconstruct `Lᵀ D L` (test/diagnostic helper).
+    pub fn reconstruct(&self) -> Tensor {
+        let r = self.rank();
+        let mut dl = self.l.clone();
+        for i in 0..r {
+            let s = self.d[i];
+            for v in dl.row_mut(i) {
+                *v *= s;
+            }
+        }
+        matmul_t_first(&self.l, &dl)
+    }
+
+    /// Contract a pair of tangent vectors through `D`:
+    /// `⟨u, v⟩_D = Σ_k d_k u_k v_k`. This is the inner product appearing in
+    /// eq. (9)'s first term.
+    pub fn d_inner(&self, u: &[f64], v: &[f64]) -> f64 {
+        debug_assert_eq!(u.len(), self.rank());
+        debug_assert_eq!(v.len(), self.rank());
+        self.d
+            .iter()
+            .zip(u.iter().zip(v.iter()))
+            .map(|(&s, (&a, &b))| s * a * b)
+            .sum()
+    }
+}
+
+/// `Aᵀ · B` helper (A: r×n, B: r×n → n×n).
+fn matmul_t_first(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul(&a.transpose(), b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn random_symmetric(n: usize, seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::new(seed);
+        let b = Tensor::randn(&[n, n], &mut rng);
+        b.add(&b.transpose()).scale(0.5)
+    }
+
+    #[test]
+    fn reconstructs_full_rank() {
+        for seed in [1, 5, 9] {
+            let a = random_symmetric(10, seed);
+            let dec = LdlDecomposition::of(&a);
+            assert_eq!(dec.rank(), 10);
+            assert!(dec.reconstruct().max_abs_diff(&a) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn identity_gives_orthogonal_l_and_unit_d() {
+        let a = Tensor::eye(6);
+        let dec = LdlDecomposition::of(&a);
+        assert_eq!(dec.rank(), 6);
+        assert!(dec.is_elliptic());
+        assert!(dec.reconstruct().max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn low_rank_gram_truncates() {
+        // A = B Bᵀ with B: 8×3 → rank 3, elliptic.
+        let mut rng = Xoshiro256::new(3);
+        let b = Tensor::randn(&[8, 3], &mut rng);
+        let a = matmul(&b, &b.transpose());
+        let dec = LdlDecomposition::of(&a);
+        assert_eq!(dec.rank(), 3, "rank should be 3, got {}", dec.rank());
+        assert!(dec.is_elliptic());
+        assert!(dec.reconstruct().max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn indefinite_signs() {
+        // diag(1, -1, 0, 2): rank 3, one negative direction.
+        let mut a = Tensor::zeros(&[4, 4]);
+        a.set(0, 0, 1.0);
+        a.set(1, 1, -1.0);
+        a.set(3, 3, 2.0);
+        let dec = LdlDecomposition::of(&a);
+        assert_eq!(dec.rank(), 3);
+        assert!(!dec.is_elliptic());
+        assert_eq!(dec.d.iter().filter(|&&s| s < 0.0).count(), 1);
+        assert!(dec.reconstruct().max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn d_inner_matches_quadratic_form() {
+        // For any x: xᵀ A x == (Lx)ᵀ D (Lx).
+        let a = random_symmetric(7, 11);
+        let dec = LdlDecomposition::of(&a);
+        let mut rng = Xoshiro256::new(12);
+        for _ in 0..10 {
+            let x = Tensor::randn(&[7, 1], &mut rng);
+            let lx = matmul(&dec.l, &x);
+            let quad_ldl = dec.d_inner(lx.data(), lx.data());
+            let ax = matmul(&a, &x);
+            let quad_direct = x.data().iter().zip(ax.data()).map(|(&u, &v)| u * v).sum::<f64>();
+            assert!((quad_ldl - quad_direct).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn asymmetric_input_uses_symmetric_part() {
+        let mut rng = Xoshiro256::new(20);
+        let a = Tensor::randn(&[5, 5], &mut rng);
+        let sym = a.add(&a.transpose()).scale(0.5);
+        let dec = LdlDecomposition::of(&a);
+        assert!(dec.reconstruct().max_abs_diff(&sym) < 1e-9);
+    }
+}

@@ -1,0 +1,192 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! The DOF decomposition `A = Lᵀ D L` (paper §2.2) needs the full spectrum of
+//! the symmetric coefficient matrix `A`. Matrices here are small (`N ≤ a few
+//! hundred` — the PDE input dimension), so cyclic Jacobi is simple, robust,
+//! and accurate (it converges quadratically and keeps eigenvectors
+//! orthogonal to machine precision).
+
+use crate::tensor::Tensor;
+
+/// Result of a symmetric eigendecomposition `A = V · diag(λ) · Vᵀ`.
+#[derive(Debug, Clone)]
+pub struct EigenDecomposition {
+    /// Eigenvalues, sorted descending by absolute value.
+    pub values: Vec<f64>,
+    /// Orthogonal matrix whose *columns* are the corresponding eigenvectors.
+    pub vectors: Tensor,
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+///
+/// Panics if `a` is not square; asymmetry beyond `1e-9` relative is treated
+/// as a caller bug (the operator layer symmetrizes first).
+pub fn eigh(a: &Tensor) -> EigenDecomposition {
+    assert_eq!(a.rank(), 2, "eigh expects a matrix");
+    let n = a.dims()[0];
+    assert_eq!(n, a.dims()[1], "eigh expects a square matrix");
+    // Work on a copy; accumulate rotations into V.
+    let mut m = a.clone();
+    let mut v = Tensor::eye(n);
+
+    let max_sweeps = 100;
+    for _sweep in 0..max_sweeps {
+        let off = off_diagonal_norm(&m);
+        let scale = m.max_abs().max(1e-300);
+        if off / scale < 1e-14 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.at(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                // Stable computation of the rotation angle.
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                apply_rotation(&mut m, p, q, c, s);
+                rotate_columns(&mut v, p, q, c, s);
+            }
+        }
+    }
+
+    // Extract and sort by |λ| descending (the paper truncates zero
+    // eigenvalues for low-rank A; putting large |λ| first makes the
+    // truncation a prefix).
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m.at(i, i), i)).collect();
+    pairs.sort_by(|a, b| b.0.abs().partial_cmp(&a.0.abs()).unwrap());
+    let values: Vec<f64> = pairs.iter().map(|&(l, _)| l).collect();
+    let mut vectors = Tensor::zeros(&[n, n]);
+    for (new_col, &(_, old_col)) in pairs.iter().enumerate() {
+        for r in 0..n {
+            vectors.set(r, new_col, v.at(r, old_col));
+        }
+    }
+    EigenDecomposition { values, vectors }
+}
+
+/// Frobenius norm of the strictly-off-diagonal part.
+fn off_diagonal_norm(m: &Tensor) -> f64 {
+    let n = m.dims()[0];
+    let mut s = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                s += m.at(i, j) * m.at(i, j);
+            }
+        }
+    }
+    s.sqrt()
+}
+
+/// Two-sided Jacobi rotation `m ← Jᵀ m J` on rows/cols p, q.
+fn apply_rotation(m: &mut Tensor, p: usize, q: usize, c: f64, s: f64) {
+    let n = m.dims()[0];
+    for k in 0..n {
+        let mkp = m.at(k, p);
+        let mkq = m.at(k, q);
+        m.set(k, p, c * mkp - s * mkq);
+        m.set(k, q, s * mkp + c * mkq);
+    }
+    for k in 0..n {
+        let mpk = m.at(p, k);
+        let mqk = m.at(q, k);
+        m.set(p, k, c * mpk - s * mqk);
+        m.set(q, k, s * mpk + c * mqk);
+    }
+}
+
+/// Right-multiply `v` by the rotation (accumulates eigenvectors).
+fn rotate_columns(v: &mut Tensor, p: usize, q: usize, c: f64, s: f64) {
+    let n = v.dims()[0];
+    for k in 0..n {
+        let vkp = v.at(k, p);
+        let vkq = v.at(k, q);
+        v.set(k, p, c * vkp - s * vkq);
+        v.set(k, q, s * vkp + c * vkq);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul;
+    use crate::util::Xoshiro256;
+
+    fn reconstruct(e: &EigenDecomposition) -> Tensor {
+        let n = e.values.len();
+        let mut lam = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            lam.set(i, i, e.values[i]);
+        }
+        let vl = matmul(&e.vectors, &lam);
+        matmul(&vl, &e.vectors.transpose())
+    }
+
+    fn random_symmetric(n: usize, seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::new(seed);
+        let b = Tensor::randn(&[n, n], &mut rng);
+        let bt = b.transpose();
+        b.add(&bt).scale(0.5)
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let mut a = Tensor::zeros(&[3, 3]);
+        a.set(0, 0, 2.0);
+        a.set(1, 1, -5.0);
+        a.set(2, 2, 1.0);
+        let e = eigh(&a);
+        // Sorted by |λ| desc: -5, 2, 1
+        assert!((e.values[0] + 5.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_random() {
+        for seed in [1, 2, 3] {
+            let a = random_symmetric(16, seed);
+            let e = eigh(&a);
+            let r = reconstruct(&e);
+            assert!(a.max_abs_diff(&r) < 1e-9, "seed {seed}: {}", a.max_abs_diff(&r));
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = random_symmetric(20, 7);
+        let e = eigh(&a);
+        let vtv = matmul(&e.vectors.transpose(), &e.vectors);
+        assert!(vtv.max_abs_diff(&Tensor::eye(20)) < 1e-10);
+    }
+
+    #[test]
+    fn psd_gram_matrix_nonnegative_spectrum() {
+        let mut rng = Xoshiro256::new(9);
+        let b = Tensor::randn(&[12, 12], &mut rng);
+        let a = matmul(&b, &b.transpose());
+        let e = eigh(&a);
+        for &l in &e.values {
+            assert!(l > -1e-9, "negative eigenvalue {l} for PSD matrix");
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Tensor::matrix(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let e = eigh(&a);
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 1.0).abs() < 1e-12);
+    }
+}

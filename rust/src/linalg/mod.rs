@@ -1,0 +1,9 @@
+//! Linear-algebra substrate: symmetric eigendecomposition (cyclic Jacobi)
+//! and the paper's `A = Lᵀ D L` coefficient decomposition with rank
+//! truncation.
+
+pub mod decomp;
+pub mod eigen;
+
+pub use decomp::{LdlDecomposition, RANK_TOL};
+pub use eigen::{eigh, EigenDecomposition};

@@ -1,0 +1,346 @@
+//! `dof` — CLI for the DOF reproduction.
+//!
+//! ```text
+//! dof bench table1 [--batch 8 --reps 10 --n 64 --hidden 256 --layers 8]
+//! dof bench table2 [--batch 8 --reps 10]
+//! dof bench xla    [--artifact dof_mlp_elliptic --reps 20]
+//! dof train  [--pde heat|klein-gordon|poisson|fokker-planck --steps 300 ...]
+//! dof decompose [--spec elliptic|lowrank|general --n 64]
+//! dof inspect [--artifacts artifacts]
+//! dof serve  [--artifact dof_mlp_elliptic --requests 64 --rows 8]
+//! ```
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+use dof::bench_harness::table1::{run_table1, Table1Config};
+use dof::bench_harness::table2::{run_table2, Table2Config};
+use dof::bench_harness::{render_table, BenchConfig};
+use dof::coordinator::ModelServer;
+use dof::graph::Act;
+use dof::nn::{Mlp, MlpSpec};
+use dof::operators::{CoeffSpec, Operator};
+use dof::pde::trainer::{PinnConfig, PinnTrainer};
+use dof::pde::{fokker_planck, heat_equation, klein_gordon, poisson};
+use dof::runtime::{ArtifactRegistry, Executor};
+use dof::train::AdamConfig;
+use dof::util::{fmt_bytes, fmt_duration, Args, Xoshiro256};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("bench") => cmd_bench(args),
+        Some("train") => cmd_train(args),
+        Some("decompose") => cmd_decompose(args),
+        Some("inspect") => cmd_inspect(args),
+        Some("serve") => cmd_serve(args),
+        Some(other) => Err(anyhow!("unknown command {other:?}\n{USAGE}")),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "dof — Differential Operators with Forward propagation
+
+USAGE:
+  dof bench table1|table2|xla [options]   regenerate the paper's tables
+  dof train [--pde heat] [--steps 300]    train a PINN through DOF
+  dof decompose [--spec elliptic --n 64]  show an A = LᵀDL decomposition
+  dof inspect [--artifacts artifacts]     list AOT artifacts
+  dof serve [--artifact dof_mlp_elliptic] run the batching server demo";
+
+fn bench_config(args: &Args) -> BenchConfig {
+    BenchConfig {
+        warmup_iters: args.usize_or("warmup", 2),
+        measure_iters: args.usize_or("reps", 10),
+        max_seconds: args.f64_or("max-seconds", 60.0),
+    }
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("table1");
+    match which {
+        "table1" => {
+            let cfg = Table1Config {
+                n: args.usize_or("n", 64),
+                hidden: args.usize_or("hidden", 256),
+                layers: args.usize_or("layers", 8),
+                batch: args.usize_or("batch", 8),
+                seed: args.u64_or("seed", 7),
+                bench: bench_config(args),
+            };
+            eprintln!(
+                "table1: MLP {}→{}×{}→1, batch {} …",
+                cfg.n, cfg.hidden, cfg.layers, cfg.batch
+            );
+            let rows = run_table1(&cfg);
+            println!(
+                "{}",
+                render_table(
+                    &format!(
+                        "Table 1 — MLP (N={}, hidden={}, layers={}, batch={})",
+                        cfg.n, cfg.hidden, cfg.layers, cfg.batch
+                    ),
+                    &rows
+                )
+            );
+        }
+        "table2" => {
+            let cfg = Table2Config {
+                blocks: args.usize_or("blocks", 16),
+                block_in: args.usize_or("block-in", 4),
+                hidden: args.usize_or("hidden", 256),
+                layers: args.usize_or("layers", 8),
+                block_out: args.usize_or("block-out", 8),
+                batch: args.usize_or("batch", 8),
+                seed: args.u64_or("seed", 7),
+                bench: bench_config(args),
+            };
+            eprintln!(
+                "table2: sparse MLP {}×{}→{}×{}→{}, batch {} …",
+                cfg.blocks, cfg.block_in, cfg.hidden, cfg.layers, cfg.block_out, cfg.batch
+            );
+            let rows = run_table2(&cfg);
+            println!(
+                "{}",
+                render_table(
+                    &format!(
+                        "Table 2 — MLP with Jacobian sparsity ({}×{} blocks, batch {})",
+                        cfg.blocks, cfg.block_in, cfg.batch
+                    ),
+                    &rows
+                )
+            );
+        }
+        "xla" => cmd_bench_xla(args)?,
+        other => return Err(anyhow!("unknown bench {other:?} (table1|table2|xla)")),
+    }
+    Ok(())
+}
+
+fn cmd_bench_xla(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let reg = ArtifactRegistry::open(&dir)?;
+    let reps = args.usize_or("reps", 20);
+    let pairs = [
+        ("dof_mlp_elliptic", "hessian_mlp_elliptic"),
+        ("dof_mlp_lowrank", "hessian_mlp_lowrank"),
+        ("dof_mlp_general", "hessian_mlp_general"),
+    ];
+    let mut exec = Executor::cpu()?;
+    println!("platform: {}", exec.platform());
+    println!("| pair | DOF median | Hessian median | ratio |");
+    println!("|------|------------|----------------|-------|");
+    let mut rng = Xoshiro256::new(11);
+    for (dof_name, hes_name) in pairs {
+        let batch = reg.batch_of(dof_name).unwrap_or(32);
+        exec.load(dof_name, &reg.path(dof_name)?)?;
+        exec.load(hes_name, &reg.path(hes_name)?)?;
+        let x: Vec<f32> = (0..batch * 64).map(|_| rng.normal() as f32).collect();
+        let time_it = |exec: &Executor, name: &str| -> Result<f64> {
+            // warmup
+            exec.run_f32(name, &[(&x, &[batch, 64])])?;
+            let mut times = Vec::with_capacity(reps);
+            for _ in 0..reps {
+                let t0 = std::time::Instant::now();
+                let out = exec.run_f32(name, &[(&x, &[batch, 64])])?;
+                std::hint::black_box(&out);
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            Ok(times[times.len() / 2])
+        };
+        let td = time_it(&exec, dof_name)?;
+        let th = time_it(&exec, hes_name)?;
+        println!(
+            "| {dof_name} | {} | {} | {:.2} |",
+            fmt_duration(td),
+            fmt_duration(th),
+            th / td
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let pde = args.get_or("pde", "heat");
+    let d = args.usize_or("dim", 2);
+    let problem = match pde.as_str() {
+        "heat" => heat_equation(d),
+        "klein-gordon" | "kg" => klein_gordon(d, args.f64_or("mass", 1.0)),
+        "poisson" => poisson(d),
+        "fokker-planck" | "fp" => fokker_planck(d, args.u64_or("seed", 3)),
+        other => return Err(anyhow!("unknown pde {other:?}")),
+    };
+    let n = problem.operator.n();
+    let model = Mlp::init(
+        MlpSpec {
+            in_dim: n,
+            hidden: args.usize_or("hidden", 64),
+            layers: args.usize_or("layers", 3),
+            out_dim: 1,
+            act: Act::Tanh,
+        },
+        args.u64_or("seed", 0),
+    );
+    let steps = args.usize_or("steps", 300);
+    let cfg = PinnConfig {
+        interior_batch: args.usize_or("batch", 128),
+        boundary_batch: args.usize_or("boundary-batch", 64),
+        boundary_weight: args.f64_or("boundary-weight", 10.0),
+        adam: AdamConfig {
+            lr: args.f64_or("lr", 2e-3),
+            ..Default::default()
+        },
+        seed: args.u64_or("seed", 0),
+    };
+    println!(
+        "training {} (N={n}) for {steps} steps, DOF tangent width {}",
+        problem.name,
+        problem.operator.rank()
+    );
+    let mut tr = PinnTrainer::new(problem, model, cfg);
+    let log_every = args.usize_or("log-every", 25.max(steps / 20));
+    for step in 0..steps {
+        let rep = tr.train_step();
+        if step % log_every == 0 || step + 1 == steps {
+            println!(
+                "step {:>5}  residual {:.6e}  boundary {:.6e}  total {:.6e}",
+                rep.step, rep.residual_loss, rep.boundary_loss, rep.total_loss
+            );
+        }
+    }
+    let err = tr.rel_l2_error(2048);
+    println!("final relative L2 error vs exact solution: {err:.4e}");
+    Ok(())
+}
+
+fn cmd_decompose(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 64);
+    let spec = match args.get_or("spec", "elliptic").as_str() {
+        "elliptic" => CoeffSpec::EllipticGram { n, rank: n, seed: args.u64_or("seed", 7) },
+        "lowrank" => CoeffSpec::EllipticGram { n, rank: n / 2, seed: args.u64_or("seed", 7) },
+        "general" => CoeffSpec::SignedDiag { n },
+        "identity" => CoeffSpec::Identity { n },
+        other => return Err(anyhow!("unknown spec {other:?}")),
+    };
+    let op = Operator::from_spec(spec);
+    println!("operator: {} (N = {})", op.label, op.n());
+    println!("rank(A)  = {} → DOF tangent width", op.rank());
+    println!("elliptic = {}", op.ldl.is_elliptic());
+    println!(
+        "D signs  = +{} / −{}",
+        op.ldl.positive_directions(),
+        op.rank() - op.ldl.positive_directions()
+    );
+    let recon_err = op.ldl.reconstruct().max_abs_diff(&op.a);
+    println!("‖LᵀDL − A‖∞ = {recon_err:.3e}");
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let reg = ArtifactRegistry::open(&dir)?;
+    println!("artifacts in {}:", reg.dir.display());
+    for (group, specs) in reg.grouped() {
+        println!("  [{group}]");
+        for s in specs {
+            println!("    {:<32} {}", s.name, s.detail);
+        }
+    }
+    if args.flag("compile") {
+        let mut exec = Executor::cpu()?;
+        for name in reg.names().into_iter().map(String::from).collect::<Vec<_>>() {
+            let t0 = std::time::Instant::now();
+            exec.load(&name, &reg.path(&name)?)?;
+            println!(
+                "  compiled {name} in {}",
+                fmt_duration(t0.elapsed().as_secs_f64())
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let artifact = args.get_or("artifact", "dof_mlp_elliptic");
+    let reg = ArtifactRegistry::open(&dir)?;
+    let batch = reg
+        .batch_of(&artifact)
+        .ok_or_else(|| anyhow!("no batch in manifest for {artifact}"))?;
+    let width = 64;
+    let requests = args.usize_or("requests", 64);
+    let rows = args.usize_or("rows", 8);
+    let clients = args.usize_or("clients", 4);
+    println!("serving {artifact} (batch {batch}, width {width})");
+    let server = ModelServer::spawn_xla(
+        reg.dir.clone(),
+        artifact.clone(),
+        width,
+        batch,
+        Duration::from_millis(args.u64_or("max-wait-ms", 2)),
+    )?;
+    let h = server.handle();
+    let t0 = std::time::Instant::now();
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let h = h.clone();
+            let per_client = requests / clients.max(1);
+            std::thread::spawn(move || -> Result<usize> {
+                let mut rng = Xoshiro256::new(100 + c as u64);
+                let mut done = 0;
+                for _ in 0..per_client {
+                    let pts: Vec<f32> =
+                        (0..rows * width).map(|_| rng.normal() as f32).collect();
+                    let resp = h.eval_blocking(pts)?;
+                    anyhow::ensure!(resp.phi.len() == rows, "short response");
+                    done += 1;
+                }
+                Ok(done)
+            })
+        })
+        .collect();
+    let mut total = 0;
+    for t in threads {
+        total += t.join().map_err(|_| anyhow!("client panicked"))??;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = h.metrics.snapshot();
+    println!(
+        "served {total} requests ({} rows) in {}",
+        snap.rows,
+        fmt_duration(wall)
+    );
+    println!(
+        "throughput: {:.0} rows/s | mean latency {} | p95 {} | batches {} | efficiency {:.0}%",
+        snap.rows as f64 / wall,
+        fmt_duration(snap.mean_latency),
+        fmt_duration(snap.p95_latency),
+        snap.batches,
+        snap.batch_efficiency * 100.0
+    );
+    println!(
+        "total padding data: {}",
+        fmt_bytes(snap.padded_rows * width as u64 * 4)
+    );
+    server.shutdown();
+    Ok(())
+}

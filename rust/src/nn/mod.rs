@@ -1,0 +1,296 @@
+//! Neural-network model definitions: the plain MLP and the Jacobian-sparse
+//! block MLP of Appendix E, with flat-parameter views for the optimizer and
+//! binary import/export for cross-language weight exchange with the
+//! JAX/Pallas build path.
+
+pub mod serialize;
+
+use crate::graph::builder::{mlp_graph, sparse_mlp_graph, LayerWeights};
+use crate::graph::{Act, Graph};
+use crate::tensor::Tensor;
+use crate::util::Xoshiro256;
+
+/// Parse an activation name (shared with configs and the CLI).
+pub fn act_from_str(s: &str) -> Option<Act> {
+    match s.to_ascii_lowercase().as_str() {
+        "tanh" => Some(Act::Tanh),
+        "sin" => Some(Act::Sin),
+        "gelu" => Some(Act::Gelu),
+        "softplus" => Some(Act::Softplus),
+        "square" => Some(Act::Square),
+        "identity" | "linear" => Some(Act::Identity),
+        _ => None,
+    }
+}
+
+/// Activation name for serialization.
+pub fn act_name(a: Act) -> &'static str {
+    match a {
+        Act::Tanh => "tanh",
+        Act::Sin => "sin",
+        Act::Gelu => "gelu",
+        Act::Softplus => "softplus",
+        Act::Square => "square",
+        Act::Identity => "identity",
+    }
+}
+
+/// Architecture of a plain MLP (Table 3 defaults: 64 → 256×8 → 1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MlpSpec {
+    pub in_dim: usize,
+    pub hidden: usize,
+    /// Number of hidden layers (Linear→act pairs before the head).
+    pub layers: usize,
+    pub out_dim: usize,
+    pub act: Act,
+}
+
+impl MlpSpec {
+    /// The paper's Table 3 MLP.
+    pub fn table3() -> Self {
+        Self {
+            in_dim: 64,
+            hidden: 256,
+            layers: 8,
+            out_dim: 1,
+            act: Act::Tanh,
+        }
+    }
+
+    /// Dimension sequence `in → hidden×layers → out`.
+    pub fn dims(&self) -> Vec<usize> {
+        let mut d = vec![self.in_dim];
+        d.extend(std::iter::repeat(self.hidden).take(self.layers));
+        d.push(self.out_dim);
+        d
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.dims()
+            .windows(2)
+            .map(|w| w[0] * w[1] + w[1])
+            .sum()
+    }
+}
+
+/// A plain MLP with owned weights.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub spec: MlpSpec,
+    pub layers: LayerWeights,
+}
+
+impl Mlp {
+    /// Random initialization (Lecun-style 1/√fan_in).
+    pub fn init(spec: MlpSpec, seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed);
+        let layers = crate::graph::builder::random_layers(&spec.dims(), &mut rng);
+        Self { spec, layers }
+    }
+
+    /// Build the computation graph for the current weights.
+    pub fn to_graph(&self) -> Graph {
+        mlp_graph(&self.layers, self.spec.act)
+    }
+
+    /// Flatten all parameters (layer-major, weights row-major then bias).
+    pub fn flatten(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.spec.param_count());
+        for (w, b) in &self.layers {
+            out.extend_from_slice(w.data());
+            out.extend_from_slice(b);
+        }
+        out
+    }
+
+    /// Overwrite parameters from a flat vector (inverse of `flatten`).
+    pub fn unflatten(&mut self, flat: &[f64]) {
+        assert_eq!(flat.len(), self.spec.param_count(), "param count mismatch");
+        let mut off = 0;
+        for (w, b) in &mut self.layers {
+            let wn = w.numel();
+            w.data_mut().copy_from_slice(&flat[off..off + wn]);
+            off += wn;
+            let bn = b.len();
+            b.copy_from_slice(&flat[off..off + bn]);
+            off += bn;
+        }
+    }
+
+    /// Map per-Linear-node parameter gradients (from
+    /// [`crate::autodiff::backward::backward`] or the DOF tape) into a flat
+    /// gradient aligned with `flatten`. `grads` is `(linear_index, ∂W, ∂b)`
+    /// where `linear_index` counts Linear nodes in graph order.
+    pub fn flat_gradient(&self, grads: &[(usize, Tensor, Vec<f64>)]) -> Vec<f64> {
+        let mut flat = vec![0.0; self.spec.param_count()];
+        // Offsets of each layer in the flat vector.
+        let mut offsets = Vec::with_capacity(self.layers.len());
+        let mut off = 0;
+        for (w, b) in &self.layers {
+            offsets.push(off);
+            off += w.numel() + b.len();
+        }
+        for (li, gw, gb) in grads {
+            let base = offsets[*li];
+            let wn = gw.numel();
+            for (i, &v) in gw.data().iter().enumerate() {
+                flat[base + i] += v;
+            }
+            for (i, &v) in gb.iter().enumerate() {
+                flat[base + wn + i] += v;
+            }
+        }
+        flat
+    }
+}
+
+/// Architecture of the Jacobian-sparse block MLP (Table 3: 16 blocks × 4
+/// input dims, hidden 256 × 8 layers, per-block output 8).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SparseMlpSpec {
+    pub blocks: usize,
+    pub block_in: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    /// Per-block MLP output dimension (`d` index in the product-sum head).
+    pub block_out: usize,
+    pub act: Act,
+}
+
+impl SparseMlpSpec {
+    /// The paper's Table 3 sparse architecture.
+    pub fn table3() -> Self {
+        Self {
+            blocks: 16,
+            block_in: 4,
+            hidden: 256,
+            layers: 8,
+            block_out: 8,
+            act: Act::Tanh,
+        }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.blocks * self.block_in
+    }
+
+    /// Per-block dimension sequence.
+    pub fn block_dims(&self) -> Vec<usize> {
+        let mut d = vec![self.block_in];
+        d.extend(std::iter::repeat(self.hidden).take(self.layers));
+        d.push(self.block_out);
+        d
+    }
+}
+
+/// Sparse block MLP with owned weights.
+#[derive(Debug, Clone)]
+pub struct SparseMlp {
+    pub spec: SparseMlpSpec,
+    pub blocks: Vec<LayerWeights>,
+}
+
+impl SparseMlp {
+    pub fn init(spec: SparseMlpSpec, seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed);
+        let dims = spec.block_dims();
+        let blocks = (0..spec.blocks)
+            .map(|_| crate::graph::builder::random_layers(&dims, &mut rng))
+            .collect();
+        Self { spec, blocks }
+    }
+
+    pub fn to_graph(&self) -> Graph {
+        sparse_mlp_graph(&self.blocks, self.spec.act)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_specs() {
+        let m = MlpSpec::table3();
+        assert_eq!(m.dims(), vec![64, 256, 256, 256, 256, 256, 256, 256, 256, 1]);
+        let s = SparseMlpSpec::table3();
+        assert_eq!(s.in_dim(), 64);
+        assert_eq!(s.block_dims().len(), 10);
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let spec = MlpSpec {
+            in_dim: 3,
+            hidden: 5,
+            layers: 2,
+            out_dim: 1,
+            act: Act::Tanh,
+        };
+        let mut m = Mlp::init(spec.clone(), 7);
+        let flat = m.flatten();
+        assert_eq!(flat.len(), spec.param_count());
+        let mut perturbed = flat.clone();
+        perturbed[0] += 1.5;
+        perturbed[flat.len() - 1] -= 2.0;
+        m.unflatten(&perturbed);
+        assert_eq!(m.flatten(), perturbed);
+    }
+
+    #[test]
+    fn graph_agrees_with_weights() {
+        let m = Mlp::init(
+            MlpSpec {
+                in_dim: 2,
+                hidden: 4,
+                layers: 1,
+                out_dim: 1,
+                act: Act::Square,
+            },
+            3,
+        );
+        let g = m.to_graph();
+        let x = Tensor::from_vec(&[1, 2], vec![0.3, -0.7]);
+        // Manual forward.
+        let (w0, b0) = &m.layers[0];
+        let (w1, b1) = &m.layers[1];
+        let mut h = vec![0.0; 4];
+        for i in 0..4 {
+            h[i] = w0.at(i, 0) * 0.3 + w0.at(i, 1) * (-0.7) + b0[i];
+            h[i] = h[i] * h[i];
+        }
+        let mut y = b1[0];
+        for i in 0..4 {
+            y += w1.at(0, i) * h[i];
+        }
+        assert!((g.eval(&x).item() - y).abs() < 1e-12);
+    }
+
+    #[test]
+    fn act_parsing() {
+        assert_eq!(act_from_str("Tanh"), Some(Act::Tanh));
+        assert_eq!(act_from_str("SIN"), Some(Act::Sin));
+        assert_eq!(act_from_str("nope"), None);
+        assert_eq!(act_from_str(act_name(Act::Gelu)), Some(Act::Gelu));
+    }
+
+    #[test]
+    fn flat_gradient_alignment() {
+        let spec = MlpSpec {
+            in_dim: 2,
+            hidden: 3,
+            layers: 1,
+            out_dim: 1,
+            act: Act::Tanh,
+        };
+        let m = Mlp::init(spec, 11);
+        // Gradient only on layer 1 (the head): W [1×3], b [1].
+        let gw = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let flat = m.flat_gradient(&[(1, gw, vec![4.0])]);
+        let head_off = 2 * 3 + 3; // layer0: W(3×2) + b(3)
+        assert_eq!(&flat[head_off..head_off + 4], &[1.0, 2.0, 3.0, 4.0]);
+        assert!(flat[..head_off].iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,205 @@
+//! Cross-language weight exchange.
+//!
+//! Format (`.dofw`): a UTF-8 header terminated by a newline-`@`-newline
+//! sentinel, followed by raw little-endian f64 data. The header lists
+//! tensors as `name rows cols` lines so NumPy can read the payload with
+//! `np.fromfile(..., offset=header_len)` and Rust without any JSON
+//! dependency.
+//!
+//! ```text
+//! dofw v1
+//! tensors 4
+//! w0 256 64
+//! b0 256 1
+//! w1 1 256
+//! b1 1 1
+//! @
+//! <raw f64 LE data, concatenated in header order>
+//! ```
+
+use std::fs;
+use std::io::{self, Write as _};
+use std::path::Path;
+
+use crate::tensor::Tensor;
+
+/// A named 2-D tensor entry (biases are stored as `n×1`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    pub name: String,
+    pub tensor: Tensor,
+}
+
+/// Write entries to a `.dofw` file.
+pub fn write_dofw<P: AsRef<Path>>(path: P, entries: &[Entry]) -> io::Result<()> {
+    let mut header = String::from("dofw v1\n");
+    header.push_str(&format!("tensors {}\n", entries.len()));
+    for e in entries {
+        assert_eq!(e.tensor.rank(), 2, "dofw stores 2-D tensors");
+        header.push_str(&format!(
+            "{} {} {}\n",
+            e.name,
+            e.tensor.dims()[0],
+            e.tensor.dims()[1]
+        ));
+    }
+    header.push_str("@\n");
+    if let Some(parent) = path.as_ref().parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut f = fs::File::create(path)?;
+    f.write_all(header.as_bytes())?;
+    for e in entries {
+        for &v in e.tensor.data() {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read a `.dofw` file.
+pub fn read_dofw<P: AsRef<Path>>(path: P) -> io::Result<Vec<Entry>> {
+    let bytes = fs::read(path)?;
+    // Find the header sentinel "\n@\n".
+    let sentinel = b"\n@\n";
+    let pos = bytes
+        .windows(sentinel.len())
+        .position(|w| w == sentinel)
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "missing dofw sentinel"))?;
+    let header = std::str::from_utf8(&bytes[..pos])
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+    let mut lines = header.lines();
+    let magic = lines.next().unwrap_or("");
+    if magic != "dofw v1" {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("bad magic {magic:?}"),
+        ));
+    }
+    let count: usize = lines
+        .next()
+        .and_then(|l| l.strip_prefix("tensors "))
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad tensor count"))?;
+    let mut shapes = Vec::with_capacity(count);
+    for _ in 0..count {
+        let line = lines
+            .next()
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "truncated header"))?;
+        let mut it = line.split_whitespace();
+        let name = it
+            .next()
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "missing name"))?
+            .to_string();
+        let rows: usize = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad rows"))?;
+        let cols: usize = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad cols"))?;
+        shapes.push((name, rows, cols));
+    }
+    let mut data_off = pos + sentinel.len();
+    let mut entries = Vec::with_capacity(count);
+    for (name, rows, cols) in shapes {
+        let n = rows * cols;
+        let end = data_off + n * 8;
+        if end > bytes.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "truncated payload",
+            ));
+        }
+        let mut data = Vec::with_capacity(n);
+        for chunk in bytes[data_off..end].chunks_exact(8) {
+            data.push(f64::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        data_off = end;
+        entries.push(Entry {
+            name,
+            tensor: Tensor::from_vec(&[rows, cols], data),
+        });
+    }
+    Ok(entries)
+}
+
+/// Export an MLP's layers as dofw entries (`w0, b0, w1, b1, …`).
+pub fn mlp_entries(layers: &crate::graph::builder::LayerWeights) -> Vec<Entry> {
+    let mut out = Vec::with_capacity(layers.len() * 2);
+    for (i, (w, b)) in layers.iter().enumerate() {
+        out.push(Entry {
+            name: format!("w{i}"),
+            tensor: w.clone(),
+        });
+        out.push(Entry {
+            name: format!("b{i}"),
+            tensor: Tensor::from_vec(&[b.len(), 1], b.clone()),
+        });
+    }
+    out
+}
+
+/// Reassemble MLP layers from dofw entries (inverse of [`mlp_entries`]).
+pub fn entries_to_mlp(entries: &[Entry]) -> crate::graph::builder::LayerWeights {
+    assert!(entries.len() % 2 == 0, "expected w/b pairs");
+    let mut layers = Vec::with_capacity(entries.len() / 2);
+    for pair in entries.chunks_exact(2) {
+        let w = pair[0].tensor.clone();
+        let b = pair[1].tensor.data().to_vec();
+        assert_eq!(w.dims()[0], b.len(), "bias/weight mismatch");
+        layers.push((w, b));
+    }
+    layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Mlp, MlpSpec};
+    use crate::graph::Act;
+
+    #[test]
+    fn roundtrip_file() {
+        let m = Mlp::init(
+            MlpSpec {
+                in_dim: 3,
+                hidden: 4,
+                layers: 2,
+                out_dim: 1,
+                act: Act::Tanh,
+            },
+            5,
+        );
+        let entries = mlp_entries(&m.layers);
+        let p = std::env::temp_dir().join("dof_test_weights.dofw");
+        write_dofw(&p, &entries).unwrap();
+        let back = read_dofw(&p).unwrap();
+        assert_eq!(back.len(), entries.len());
+        for (a, b) in entries.iter().zip(&back) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.tensor, b.tensor);
+        }
+        let layers = entries_to_mlp(&back);
+        assert_eq!(layers.len(), m.layers.len());
+        assert_eq!(layers[0].0, m.layers[0].0);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = std::env::temp_dir().join("dof_bad_magic.dofw");
+        std::fs::write(&p, b"not a dofw\n@\n").unwrap();
+        assert!(read_dofw(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let p = std::env::temp_dir().join("dof_trunc.dofw");
+        std::fs::write(&p, b"dofw v1\ntensors 1\nw0 2 2\n@\n\x00\x00").unwrap();
+        assert!(read_dofw(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,214 @@
+//! Coefficient-matrix constructions (Table 4 of the paper).
+//!
+//! Each experiment in §3 pairs an architecture with a coefficient matrix:
+//!
+//! | structure         | elliptic                     | low-rank                     | general            |
+//! |-------------------|------------------------------|------------------------------|--------------------|
+//! | MLP               | `a_ij = Σ_{k≤64} α_ik α_jk`  | `a_ij = Σ_{k≤32} α_ik α_jk`  | `a_ij = δ_ij s_i`  |
+//! | MLP w/ sparsity   | block-diag Gram (4×4, k≤4)   | block-diag Gram (4×4, k≤2)   | block-diag `δ s`   |
+//!
+//! with `α, σ ~ N(0,1)`, `s_0 = −1`, `s_i = 1` otherwise.
+
+use crate::tensor::{matmul, Tensor};
+use crate::util::Xoshiro256;
+
+/// Declarative description of a coefficient matrix; `build()` materializes
+/// the symmetric `N×N` matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoeffSpec {
+    /// Gram matrix `α αᵀ` with `α ∈ R^{N×rank}` i.i.d. N(0,1) — PSD;
+    /// full-rank elliptic for `rank = n`, low-rank elliptic for `rank < n`.
+    EllipticGram { n: usize, rank: usize, seed: u64 },
+    /// `diag(s)` with `s_0 = −1`, `s_i = 1` — the paper's "general"
+    /// (indefinite, hyperbolic-like) operator.
+    SignedDiag { n: usize },
+    /// Identity — plain Laplacian (DOF reduces to Forward Laplacian).
+    Identity { n: usize },
+    /// Block-diagonal Gram: `blocks` blocks of size `block`, each
+    /// `σ σᵀ` with `σ ∈ R^{block×rank}` — Table 4 row 2 (elliptic/low-rank).
+    BlockDiagGram {
+        blocks: usize,
+        block: usize,
+        rank: usize,
+        seed: u64,
+    },
+    /// Block-diagonal signed identity: `δ_lm δ_ij s_i` — Table 4 row 2
+    /// (general).
+    BlockDiagSigned { blocks: usize, block: usize },
+}
+
+impl CoeffSpec {
+    /// Total dimension `N`.
+    pub fn n(&self) -> usize {
+        match *self {
+            CoeffSpec::EllipticGram { n, .. } => n,
+            CoeffSpec::SignedDiag { n } => n,
+            CoeffSpec::Identity { n } => n,
+            CoeffSpec::BlockDiagGram { blocks, block, .. } => blocks * block,
+            CoeffSpec::BlockDiagSigned { blocks, block } => blocks * block,
+        }
+    }
+
+    /// Expected rank of the built matrix (with probability 1 for the random
+    /// Gram constructions).
+    pub fn expected_rank(&self) -> usize {
+        match *self {
+            CoeffSpec::EllipticGram { n, rank, .. } => rank.min(n),
+            CoeffSpec::SignedDiag { n } => n,
+            CoeffSpec::Identity { n } => n,
+            CoeffSpec::BlockDiagGram {
+                blocks,
+                block,
+                rank,
+                ..
+            } => blocks * rank.min(block),
+            CoeffSpec::BlockDiagSigned { blocks, block } => blocks * block,
+        }
+    }
+
+    /// Human-readable operator class, for bench tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            CoeffSpec::EllipticGram { n, rank, .. } if rank < n => "low-rank",
+            CoeffSpec::EllipticGram { .. } => "elliptic",
+            CoeffSpec::SignedDiag { .. } => "general",
+            CoeffSpec::Identity { .. } => "laplacian",
+            CoeffSpec::BlockDiagGram { block, rank, .. } if rank < block => "low-rank",
+            CoeffSpec::BlockDiagGram { .. } => "elliptic",
+            CoeffSpec::BlockDiagSigned { .. } => "general",
+        }
+    }
+
+    /// Materialize the symmetric coefficient matrix.
+    pub fn build(&self) -> Tensor {
+        match *self {
+            CoeffSpec::EllipticGram { n, rank, seed } => {
+                let mut rng = Xoshiro256::new(seed);
+                let alpha = Tensor::randn(&[n, rank], &mut rng);
+                matmul(&alpha, &alpha.transpose())
+            }
+            CoeffSpec::SignedDiag { n } => {
+                let mut a = Tensor::eye(n);
+                a.set(0, 0, -1.0);
+                a
+            }
+            CoeffSpec::Identity { n } => Tensor::eye(n),
+            CoeffSpec::BlockDiagGram {
+                blocks,
+                block,
+                rank,
+                seed,
+            } => {
+                let n = blocks * block;
+                let mut a = Tensor::zeros(&[n, n]);
+                let mut rng = Xoshiro256::new(seed);
+                for l in 0..blocks {
+                    let sigma = Tensor::randn(&[block, rank], &mut rng);
+                    let g = matmul(&sigma, &sigma.transpose());
+                    for i in 0..block {
+                        for j in 0..block {
+                            a.set(l * block + i, l * block + j, g.at(i, j));
+                        }
+                    }
+                }
+                a
+            }
+            CoeffSpec::BlockDiagSigned { blocks, block } => {
+                let n = blocks * block;
+                let mut a = Tensor::zeros(&[n, n]);
+                for l in 0..blocks {
+                    for i in 0..block {
+                        let s = if i == 0 { -1.0 } else { 1.0 };
+                        a.set(l * block + i, l * block + i, s);
+                    }
+                }
+                a
+            }
+        }
+    }
+}
+
+/// The exact Table 4 specs for the MLP experiments (N = 64).
+pub fn table4_mlp(seed: u64) -> [(&'static str, CoeffSpec); 3] {
+    [
+        ("Elliptic", CoeffSpec::EllipticGram { n: 64, rank: 64, seed }),
+        ("Low-rank", CoeffSpec::EllipticGram { n: 64, rank: 32, seed }),
+        ("General", CoeffSpec::SignedDiag { n: 64 }),
+    ]
+}
+
+/// The exact Table 4 specs for the sparse-MLP experiments
+/// (16 blocks × 4 dims).
+pub fn table4_sparse(seed: u64) -> [(&'static str, CoeffSpec); 3] {
+    [
+        (
+            "Elliptic",
+            CoeffSpec::BlockDiagGram { blocks: 16, block: 4, rank: 4, seed },
+        ),
+        (
+            "Low-rank",
+            CoeffSpec::BlockDiagGram { blocks: 16, block: 4, rank: 2, seed },
+        ),
+        ("General", CoeffSpec::BlockDiagSigned { blocks: 16, block: 4 }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::LdlDecomposition;
+
+    #[test]
+    fn gram_is_symmetric_psd_with_expected_rank() {
+        let spec = CoeffSpec::EllipticGram { n: 16, rank: 7, seed: 1 };
+        let a = spec.build();
+        assert!(a.max_abs_diff(&a.transpose()) < 1e-12);
+        let dec = LdlDecomposition::of(&a);
+        assert_eq!(dec.rank(), 7);
+        assert!(dec.is_elliptic());
+    }
+
+    #[test]
+    fn signed_diag_is_indefinite_full_rank() {
+        let a = CoeffSpec::SignedDiag { n: 8 }.build();
+        let dec = LdlDecomposition::of(&a);
+        assert_eq!(dec.rank(), 8);
+        assert!(!dec.is_elliptic());
+        assert_eq!(a.at(0, 0), -1.0);
+        assert_eq!(a.at(3, 3), 1.0);
+    }
+
+    #[test]
+    fn block_diag_gram_structure() {
+        let spec = CoeffSpec::BlockDiagGram { blocks: 4, block: 3, rank: 2, seed: 5 };
+        let a = spec.build();
+        assert_eq!(a.dims(), &[12, 12]);
+        // Off-block entries are exactly zero.
+        assert_eq!(a.at(0, 5), 0.0);
+        assert_eq!(a.at(10, 2), 0.0);
+        let dec = LdlDecomposition::of(&a);
+        assert_eq!(dec.rank(), spec.expected_rank());
+        assert_eq!(dec.rank(), 8);
+    }
+
+    #[test]
+    fn table4_dimensions() {
+        for (_, spec) in table4_mlp(3) {
+            assert_eq!(spec.n(), 64);
+        }
+        for (_, spec) in table4_sparse(3) {
+            assert_eq!(spec.n(), 64);
+        }
+        // Low-rank MLP spec must have rank 32.
+        assert_eq!(table4_mlp(3)[1].1.expected_rank(), 32);
+        // Sparse low-rank: 16 blocks × rank 2 = 32.
+        assert_eq!(table4_sparse(3)[1].1.expected_rank(), 32);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(CoeffSpec::EllipticGram { n: 4, rank: 4, seed: 0 }.label(), "elliptic");
+        assert_eq!(CoeffSpec::EllipticGram { n: 4, rank: 2, seed: 0 }.label(), "low-rank");
+        assert_eq!(CoeffSpec::SignedDiag { n: 4 }.label(), "general");
+    }
+}

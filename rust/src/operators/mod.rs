@@ -1,0 +1,139 @@
+//! Second-order differential operators `L[φ] = Σ a_ij ∂²_ij φ + Σ b_i ∂_i φ
+//! + c φ` — coefficient constructions (Table 4) and a cached operator
+//! wrapper that pairs a coefficient spec with its `LᵀDL` decomposition and
+//! hands out configured engines.
+
+pub mod coeff;
+
+pub use coeff::{table4_mlp, table4_sparse, CoeffSpec};
+
+use crate::autodiff::{DofEngine, HessianEngine};
+use crate::linalg::LdlDecomposition;
+use crate::tensor::Tensor;
+
+/// A fully-specified second-order operator: coefficient matrix, optional
+/// lower-order terms, and the cached decomposition.
+pub struct Operator {
+    /// The symmetric coefficient matrix `A`.
+    pub a: Tensor,
+    /// First-order coefficients `b` (constant over x in this release).
+    pub b: Option<Vec<f64>>,
+    /// Zeroth-order coefficient `c`.
+    pub c: Option<f64>,
+    /// Cached `A = Lᵀ D L`.
+    pub ldl: LdlDecomposition,
+    /// Display label.
+    pub label: String,
+}
+
+impl Operator {
+    /// Build from a coefficient spec (pure second-order).
+    pub fn from_spec(spec: CoeffSpec) -> Self {
+        let a = spec.build();
+        let ldl = LdlDecomposition::of(&a);
+        Self {
+            a,
+            b: None,
+            c: None,
+            ldl,
+            label: spec.label().to_string(),
+        }
+    }
+
+    /// Build from an explicit matrix.
+    pub fn from_matrix(a: Tensor, label: impl Into<String>) -> Self {
+        let ldl = LdlDecomposition::of(&a);
+        Self {
+            a,
+            b: None,
+            c: None,
+            ldl,
+            label: label.into(),
+        }
+    }
+
+    /// Attach lower-order terms.
+    pub fn with_lower_order(mut self, b: Option<Vec<f64>>, c: Option<f64>) -> Self {
+        self.b = b;
+        self.c = c;
+        self
+    }
+
+    /// Input dimension `N`.
+    pub fn n(&self) -> usize {
+        self.a.dims()[0]
+    }
+
+    /// Rank of the second-order part (DOF tangent width).
+    pub fn rank(&self) -> usize {
+        self.ldl.rank()
+    }
+
+    /// Configured DOF engine (shares the cached decomposition).
+    pub fn dof_engine(&self) -> DofEngine {
+        DofEngine::from_ldl(self.ldl.clone())
+            .with_lower_order(self.b.clone(), self.c)
+    }
+
+    /// Configured Hessian-baseline engine.
+    pub fn hessian_engine(&self) -> HessianEngine {
+        HessianEngine::new(&self.a).with_lower_order(self.b.clone(), self.c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{builder::random_layers, mlp_graph, Act};
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn operator_engines_agree_for_every_table4_mlp_spec() {
+        let mut rng = Xoshiro256::new(61);
+        // Scaled-down Table 1 shapes for test speed (N = 8).
+        let g = mlp_graph(&random_layers(&[8, 16, 16, 1], &mut rng), Act::Tanh);
+        let x = Tensor::randn(&[3, 8], &mut rng);
+        let specs = [
+            CoeffSpec::EllipticGram { n: 8, rank: 8, seed: 2 },
+            CoeffSpec::EllipticGram { n: 8, rank: 4, seed: 2 },
+            CoeffSpec::SignedDiag { n: 8 },
+        ];
+        for spec in specs {
+            let op = Operator::from_spec(spec);
+            let dof = op.dof_engine().compute(&g, &x);
+            let hes = op.hessian_engine().compute(&g, &x);
+            for b in 0..3 {
+                let dv = dof.operator_values.at(b, 0);
+                let hv = hes.operator_values.at(b, 0);
+                assert!(
+                    (dv - hv).abs() < 1e-8 * hv.abs().max(1.0),
+                    "{}: {dv} vs {hv}",
+                    op.label
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rank_drives_engine_tangent_width() {
+        let op = Operator::from_spec(CoeffSpec::EllipticGram { n: 8, rank: 3, seed: 1 });
+        assert_eq!(op.rank(), 3);
+        assert_eq!(op.dof_engine().rank(), 3);
+    }
+
+    #[test]
+    fn lower_order_passthrough() {
+        let op = Operator::from_spec(CoeffSpec::Identity { n: 4 })
+            .with_lower_order(Some(vec![1.0; 4]), Some(0.5));
+        let mut rng = Xoshiro256::new(62);
+        let g = mlp_graph(&random_layers(&[4, 6, 1], &mut rng), Act::Sin);
+        let x = Tensor::randn(&[2, 4], &mut rng);
+        let dof = op.dof_engine().compute(&g, &x);
+        let hes = op.hessian_engine().compute(&g, &x);
+        for b in 0..2 {
+            assert!(
+                (dof.operator_values.at(b, 0) - hes.operator_values.at(b, 0)).abs() < 1e-9
+            );
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! PDE library: second-order problems with manufactured solutions, DOF-based
+//! residuals, and a PINN trainer that differentiates *through* the operator.
+//!
+//! Every problem is posed as `L[u](z) = f(z)` on a box, with `L` a constant-
+//! coefficient second-order operator (`A`, `b`, `c`) and `f` manufactured
+//! from a closed-form exact solution `u*`: `f := L[u*]`. Closed-form
+//! gradients/Hessians of `u*` make `f` exact to machine precision, so PINN
+//! training error measures the solver, not the data.
+
+pub mod problems;
+pub mod trainer;
+
+pub use problems::{fokker_planck, heat_equation, klein_gordon, poisson};
+pub use trainer::{PinnTrainer, TrainReport};
+
+use crate::operators::Operator;
+use crate::tensor::Tensor;
+use crate::train::BoxSampler;
+
+/// Closed-form exact solutions with value / gradient / Hessian.
+#[derive(Debug, Clone)]
+pub enum ExactSolution {
+    /// `u(z) = amp · sin(w·z + phase)`.
+    SineWave {
+        w: Vec<f64>,
+        phase: f64,
+        amp: f64,
+    },
+    /// `u(z) = exp(−|z − c|² / (2σ²))`.
+    Gaussian { center: Vec<f64>, sigma: f64 },
+    /// Sum of sine waves (richer spectrum).
+    SumOfSines(Vec<(Vec<f64>, f64, f64)>),
+}
+
+impl ExactSolution {
+    pub fn dim(&self) -> usize {
+        match self {
+            ExactSolution::SineWave { w, .. } => w.len(),
+            ExactSolution::Gaussian { center, .. } => center.len(),
+            ExactSolution::SumOfSines(terms) => terms[0].0.len(),
+        }
+    }
+
+    /// `u*(z)`.
+    pub fn value(&self, z: &[f64]) -> f64 {
+        match self {
+            ExactSolution::SineWave { w, phase, amp } => {
+                let arg: f64 = w.iter().zip(z).map(|(&a, &b)| a * b).sum::<f64>() + phase;
+                amp * arg.sin()
+            }
+            ExactSolution::Gaussian { center, sigma } => {
+                let d2: f64 = center
+                    .iter()
+                    .zip(z)
+                    .map(|(&c, &x)| (x - c) * (x - c))
+                    .sum();
+                (-d2 / (2.0 * sigma * sigma)).exp()
+            }
+            ExactSolution::SumOfSines(terms) => terms
+                .iter()
+                .map(|(w, phase, amp)| {
+                    let arg: f64 =
+                        w.iter().zip(z).map(|(&a, &b)| a * b).sum::<f64>() + phase;
+                    amp * arg.sin()
+                })
+                .sum(),
+        }
+    }
+
+    /// `∇u*(z)`.
+    pub fn gradient(&self, z: &[f64]) -> Vec<f64> {
+        match self {
+            ExactSolution::SineWave { w, phase, amp } => {
+                let arg: f64 = w.iter().zip(z).map(|(&a, &b)| a * b).sum::<f64>() + phase;
+                let c = amp * arg.cos();
+                w.iter().map(|&wi| c * wi).collect()
+            }
+            ExactSolution::Gaussian { center, sigma } => {
+                let u = self.value(z);
+                let s2 = sigma * sigma;
+                center
+                    .iter()
+                    .zip(z)
+                    .map(|(&c, &x)| -u * (x - c) / s2)
+                    .collect()
+            }
+            ExactSolution::SumOfSines(terms) => {
+                let n = self.dim();
+                let mut g = vec![0.0; n];
+                for (w, phase, amp) in terms {
+                    let arg: f64 =
+                        w.iter().zip(z).map(|(&a, &b)| a * b).sum::<f64>() + phase;
+                    let c = amp * arg.cos();
+                    for (gi, &wi) in g.iter_mut().zip(w) {
+                        *gi += c * wi;
+                    }
+                }
+                g
+            }
+        }
+    }
+
+    /// `∇²u*(z)` as a flat row-major `n×n`.
+    pub fn hessian(&self, z: &[f64]) -> Vec<f64> {
+        let n = self.dim();
+        match self {
+            ExactSolution::SineWave { w, phase, amp } => {
+                let arg: f64 = w.iter().zip(z).map(|(&a, &b)| a * b).sum::<f64>() + phase;
+                let s = -amp * arg.sin();
+                let mut h = vec![0.0; n * n];
+                for i in 0..n {
+                    for j in 0..n {
+                        h[i * n + j] = s * w[i] * w[j];
+                    }
+                }
+                h
+            }
+            ExactSolution::Gaussian { center, sigma } => {
+                let u = self.value(z);
+                let s2 = sigma * sigma;
+                let d: Vec<f64> = z.iter().zip(center).map(|(&x, &c)| x - c).collect();
+                let mut h = vec![0.0; n * n];
+                for i in 0..n {
+                    for j in 0..n {
+                        let mut v = u * d[i] * d[j] / (s2 * s2);
+                        if i == j {
+                            v -= u / s2;
+                        }
+                        h[i * n + j] = v;
+                    }
+                }
+                h
+            }
+            ExactSolution::SumOfSines(terms) => {
+                let mut h = vec![0.0; n * n];
+                for (w, phase, amp) in terms {
+                    let arg: f64 =
+                        w.iter().zip(z).map(|(&a, &b)| a * b).sum::<f64>() + phase;
+                    let s = -amp * arg.sin();
+                    for i in 0..n {
+                        for j in 0..n {
+                            h[i * n + j] += s * w[i] * w[j];
+                        }
+                    }
+                }
+                h
+            }
+        }
+    }
+}
+
+/// A PDE problem `L[u] = f` on a box, with manufactured `f = L[u*]`.
+pub struct PdeProblem {
+    pub name: String,
+    pub operator: Operator,
+    pub exact: ExactSolution,
+    pub domain: BoxSampler,
+}
+
+impl PdeProblem {
+    /// Exact source term `f(z) = L[u*](z)` from the closed forms.
+    pub fn source(&self, z: &[f64]) -> f64 {
+        let n = self.operator.n();
+        let h = self.exact.hessian(z);
+        let a = self.operator.a.data();
+        let mut val = 0.0;
+        for idx in 0..n * n {
+            val += a[idx] * h[idx];
+        }
+        if let Some(ref b) = self.operator.b {
+            let g = self.exact.gradient(z);
+            val += b.iter().zip(&g).map(|(&bi, &gi)| bi * gi).sum::<f64>();
+        }
+        if let Some(c) = self.operator.c {
+            val += c * self.exact.value(z);
+        }
+        val
+    }
+
+    /// Batched source, `[batch, 1]`.
+    pub fn source_batch(&self, z: &Tensor) -> Tensor {
+        let batch = z.dims()[0];
+        let mut f = Tensor::zeros(&[batch, 1]);
+        for b in 0..batch {
+            f.set(b, 0, self.source(z.row(b)));
+        }
+        f
+    }
+
+    /// Exact solution values, `[batch, 1]`.
+    pub fn exact_batch(&self, z: &Tensor) -> Tensor {
+        let batch = z.dims()[0];
+        let mut u = Tensor::zeros(&[batch, 1]);
+        for b in 0..batch {
+            u.set(b, 0, self.exact.value(z.row(b)));
+        }
+        u
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::CoeffSpec;
+
+    fn fd_check_solution(sol: &ExactSolution, z: &[f64]) {
+        let n = sol.dim();
+        let h = 1e-5;
+        let g = sol.gradient(z);
+        let hess = sol.hessian(z);
+        for i in 0..n {
+            let mut zp = z.to_vec();
+            let mut zm = z.to_vec();
+            zp[i] += h;
+            zm[i] -= h;
+            let fd = (sol.value(&zp) - sol.value(&zm)) / (2.0 * h);
+            assert!((g[i] - fd).abs() < 1e-7, "grad[{i}]: {} vs {fd}", g[i]);
+            for j in 0..n {
+                let gp = sol.gradient(&zp)[j];
+                let gm = sol.gradient(&zm)[j];
+                let fd2 = (gp - gm) / (2.0 * h);
+                assert!(
+                    (hess[i * n + j] - fd2).abs() < 1e-6,
+                    "hess[{i}][{j}]: {} vs {fd2}",
+                    hess[i * n + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sine_wave_derivatives() {
+        let sol = ExactSolution::SineWave {
+            w: vec![1.5, -0.7, 2.0],
+            phase: 0.3,
+            amp: 1.2,
+        };
+        fd_check_solution(&sol, &[0.2, -0.4, 0.9]);
+    }
+
+    #[test]
+    fn gaussian_derivatives() {
+        let sol = ExactSolution::Gaussian {
+            center: vec![0.5, 0.5],
+            sigma: 0.8,
+        };
+        fd_check_solution(&sol, &[0.1, 0.9]);
+    }
+
+    #[test]
+    fn sum_of_sines_derivatives() {
+        let sol = ExactSolution::SumOfSines(vec![
+            (vec![1.0, 2.0], 0.0, 1.0),
+            (vec![-0.5, 1.5], 1.0, 0.3),
+        ]);
+        fd_check_solution(&sol, &[0.3, 0.6]);
+    }
+
+    #[test]
+    fn manufactured_source_consistency() {
+        // f = L[u*] must satisfy: DOF on a graph that *is* u* would return
+        // f. We verify via the operator contraction against the Hessian
+        // engine's ground truth using a random A.
+        let sol = ExactSolution::SineWave {
+            w: vec![2.0, 1.0, -1.0],
+            phase: 0.5,
+            amp: 0.9,
+        };
+        let op = Operator::from_spec(CoeffSpec::EllipticGram { n: 3, rank: 3, seed: 3 })
+            .with_lower_order(Some(vec![0.5, -1.0, 0.2]), Some(1.5));
+        let prob = PdeProblem {
+            name: "test".into(),
+            operator: op,
+            exact: sol,
+            domain: BoxSampler::unit(3),
+        };
+        let z = [0.1, 0.7, 0.4];
+        // Manual: Σ a_ij H_ij + b·g + c·u.
+        let hess = prob.exact.hessian(&z);
+        let grad = prob.exact.gradient(&z);
+        let mut expect = 0.0;
+        for i in 0..3 {
+            for j in 0..3 {
+                expect += prob.operator.a.at(i, j) * hess[i * 3 + j];
+            }
+        }
+        for i in 0..3 {
+            expect += prob.operator.b.as_ref().unwrap()[i] * grad[i];
+        }
+        expect += prob.operator.c.unwrap() * prob.exact.value(&z);
+        assert!((prob.source(&z) - expect).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,160 @@
+//! Concrete PDE problems. Coordinates are `z = (x_1 … x_d, t)` for
+//! evolution equations (time last), matching the paper's convention that
+//! "the time variable is comprised in x".
+
+use super::{ExactSolution, PdeProblem};
+use crate::operators::Operator;
+use crate::tensor::{matmul, Tensor};
+use crate::train::BoxSampler;
+use crate::util::Xoshiro256;
+
+/// Poisson equation `Δu = f` on `[0,1]^d` — elliptic, `A = I`.
+///
+/// DOF reduces exactly to Forward Laplacian here (§2.2 "Elliptic
+/// Operator").
+pub fn poisson(d: usize) -> PdeProblem {
+    let a = Tensor::eye(d);
+    let w: Vec<f64> = (0..d)
+        .map(|i| std::f64::consts::PI * (1.0 + (i % 3) as f64))
+        .collect();
+    PdeProblem {
+        name: format!("poisson-{d}d"),
+        operator: Operator::from_matrix(a, "laplacian"),
+        exact: ExactSolution::SineWave {
+            w,
+            phase: 0.25,
+            amp: 1.0,
+        },
+        domain: BoxSampler::unit(d),
+    }
+}
+
+/// Non-homogeneous heat equation `u_t = Δ_x u + q(x,t)` on `[0,1]^d ×
+/// [0,1]`, rewritten as `L[u] = f` with `L = Δ_x − ∂_t`:
+/// `A = diag(1,…,1,0)` (rank d of d+1 — a *naturally low-rank* operator,
+/// §2.2), `b = (0,…,0,−1)`.
+pub fn heat_equation(d: usize) -> PdeProblem {
+    let n = d + 1;
+    let mut a = Tensor::zeros(&[n, n]);
+    for i in 0..d {
+        a.set(i, i, 1.0);
+    }
+    let mut b = vec![0.0; n];
+    b[d] = -1.0;
+    let mut w: Vec<f64> = (0..d).map(|_| std::f64::consts::PI).collect();
+    w.push(1.0); // temporal frequency
+    PdeProblem {
+        name: format!("heat-{d}d"),
+        operator: Operator::from_matrix(a, "heat").with_lower_order(Some(b), None),
+        exact: ExactSolution::SineWave {
+            w,
+            phase: 0.4,
+            amp: 1.0,
+        },
+        domain: BoxSampler::unit(n),
+    }
+}
+
+/// Klein–Gordon equation `u_tt − Δ_x u + m² u = f` on `[0,1]^d × [0,1]`:
+/// `A = diag(−1,…,−1, +1)` (time last) — a *genuinely indefinite* operator,
+/// the paper's "general" class — and `c = m²`.
+pub fn klein_gordon(d: usize, mass: f64) -> PdeProblem {
+    let n = d + 1;
+    let mut a = Tensor::zeros(&[n, n]);
+    for i in 0..d {
+        a.set(i, i, -1.0);
+    }
+    a.set(d, d, 1.0);
+    let mut w: Vec<f64> = (0..d).map(|_| std::f64::consts::PI).collect();
+    w.push(2.0);
+    PdeProblem {
+        name: format!("klein-gordon-{d}d"),
+        operator: Operator::from_matrix(a, "klein-gordon")
+            .with_lower_order(None, Some(mass * mass)),
+        exact: ExactSolution::SineWave {
+            w,
+            phase: 0.1,
+            amp: 1.0,
+        },
+        domain: BoxSampler::unit(n),
+    }
+}
+
+/// Stationary Fokker–Planck-type operator `Σ D_ij ∂²_ij p + Σ b_i ∂_i p`
+/// with an anisotropic PSD diffusion matrix `D = M Mᵀ` — exercises a dense
+/// non-identity `A` (the case generic Forward-Laplacian packages cannot
+/// handle and DOF exists for).
+pub fn fokker_planck(d: usize, seed: u64) -> PdeProblem {
+    let mut rng = Xoshiro256::new(seed);
+    let m = Tensor::randn(&[d, d], &mut rng).scale(1.0 / (d as f64).sqrt());
+    let diff = matmul(&m, &m.transpose());
+    // Drift towards the center.
+    let b: Vec<f64> = (0..d).map(|_| -0.5).collect();
+    PdeProblem {
+        name: format!("fokker-planck-{d}d"),
+        operator: Operator::from_matrix(diff, "fokker-planck")
+            .with_lower_order(Some(b), None),
+        exact: ExactSolution::Gaussian {
+            center: vec![0.5; d],
+            sigma: 0.6,
+        },
+        domain: BoxSampler::unit(d),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heat_operator_is_low_rank() {
+        let p = heat_equation(3);
+        assert_eq!(p.operator.n(), 4);
+        assert_eq!(p.operator.rank(), 3, "heat A has rank d");
+        assert!(p.operator.ldl.is_elliptic());
+    }
+
+    #[test]
+    fn klein_gordon_is_indefinite() {
+        let p = klein_gordon(2, 1.0);
+        assert_eq!(p.operator.rank(), 3);
+        assert!(!p.operator.ldl.is_elliptic());
+        // one positive (time), two negative (space) directions
+        assert_eq!(p.operator.ldl.positive_directions(), 1);
+    }
+
+    #[test]
+    fn poisson_elliptic_identity() {
+        let p = poisson(4);
+        assert!(p.operator.ldl.is_elliptic());
+        assert_eq!(p.operator.rank(), 4);
+    }
+
+    #[test]
+    fn fokker_planck_dense_psd() {
+        let p = fokker_planck(5, 7);
+        assert!(p.operator.ldl.is_elliptic());
+        assert_eq!(p.operator.rank(), 5);
+        // Dense: off-diagonal entries present.
+        let mut off = 0.0;
+        for i in 0..5 {
+            for j in 0..5 {
+                if i != j {
+                    off += p.operator.a.at(i, j).abs();
+                }
+            }
+        }
+        assert!(off > 1e-3, "diffusion matrix should be anisotropic");
+    }
+
+    #[test]
+    fn heat_source_satisfies_pde() {
+        // For the manufactured u*, check f = Δu* − u*_t pointwise.
+        let p = heat_equation(2);
+        let z = [0.3, 0.6, 0.2];
+        let hess = p.exact.hessian(&z);
+        let grad = p.exact.gradient(&z);
+        let expect = hess[0] + hess[4] - grad[2]; // Δ_x − ∂_t (n = 3)
+        assert!((p.source(&z) - expect).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,145 @@
+//! Property-based testing substrate (no `proptest` in the offline build).
+//!
+//! A small, deterministic framework: a [`Gen`] wraps the repo PRNG with
+//! convenience samplers; [`run_prop`] drives N seeded cases and reports the
+//! first failing seed so failures are reproducible by pinning that seed.
+
+use crate::util::Xoshiro256;
+
+/// Generator context handed to property bodies.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Seed of this case (for failure reporting).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256::new(seed),
+            case_seed: seed,
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+
+    /// usize in `[lo, hi]` inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// f64 uniform in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Standard normal.
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    /// Pick one of the listed values.
+    pub fn choice<T: Copy>(&mut self, xs: &[T]) -> T {
+        *self.rng.choose(xs)
+    }
+
+    /// Boolean with probability `p`.
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.bernoulli(p)
+    }
+}
+
+/// Outcome of a property body: `Ok(())` passes, `Err(msg)` fails with a
+/// diagnostic.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` seeded instances of the property. Panics (test failure) on
+/// the first failing case, printing the case seed for reproduction.
+pub fn run_prop(name: &str, cases: u64, base_seed: u64, mut body: impl FnMut(&mut Gen) -> PropResult) {
+    for c in 0..cases {
+        // Derive a well-separated per-case seed.
+        let case_seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(c.wrapping_mul(0xD1B54A32D192ED03));
+        let mut g = Gen::new(case_seed);
+        if let Err(msg) = body(&mut g) {
+            panic!(
+                "property '{name}' failed at case {c}/{cases} (seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two floats are close (absolute or relative); returns a PropResult.
+pub fn close(a: f64, b: f64, tol: f64) -> PropResult {
+    let diff = (a - b).abs();
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if diff <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("|{a} - {b}| = {diff} > {tol}·{scale}"))
+    }
+}
+
+/// Assert slices are elementwise close.
+pub fn close_slice(a: &[f64], b: &[f64], tol: f64) -> PropResult {
+    if a.len() != b.len() {
+        return Err(format!("length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        close(x, y, tol).map_err(|e| format!("index {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_prop("sum-commutes", 50, 1, |g| {
+            count += 1;
+            let a = g.normal();
+            let b = g.normal();
+            close(a + b, b + a, 1e-15)
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        run_prop("always-fails", 10, 2, |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<f64> = Vec::new();
+        run_prop("collect", 5, 3, |g| {
+            first.push(g.normal());
+            Ok(())
+        });
+        let mut second: Vec<f64> = Vec::new();
+        run_prop("collect", 5, 3, |g| {
+            second.push(g.normal());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn close_slice_reports_index() {
+        let e = close_slice(&[1.0, 2.0], &[1.0, 3.0], 1e-9).unwrap_err();
+        assert!(e.contains("index 1"));
+    }
+}

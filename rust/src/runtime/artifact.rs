@@ -1,0 +1,156 @@
+//! Artifact registry: discovery and lazy compilation of `artifacts/*.hlo.txt`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Parsed manifest entry for one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// File name, e.g. `dof_mlp_elliptic.hlo.txt`.
+    pub file: String,
+    /// Logical name (file stem before `.hlo.txt`).
+    pub name: String,
+    /// Free-form description from the manifest (shapes etc.).
+    pub detail: String,
+}
+
+/// Registry over an artifacts directory.
+#[derive(Debug)]
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl ArtifactRegistry {
+    /// Scan a directory: reads `manifest.txt` when present, otherwise
+    /// globs `*.hlo.txt`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            return Err(anyhow!(
+                "artifacts directory {} does not exist — run `make artifacts`",
+                dir.display()
+            ));
+        }
+        let manifest = dir.join("manifest.txt");
+        let mut specs = Vec::new();
+        if manifest.is_file() {
+            let text = std::fs::read_to_string(&manifest)
+                .with_context(|| format!("reading {}", manifest.display()))?;
+            for line in text.lines() {
+                let mut it = line.split_whitespace();
+                if let Some(file) = it.next() {
+                    if file.ends_with(".hlo.txt") {
+                        specs.push(ArtifactSpec {
+                            name: file.trim_end_matches(".hlo.txt").to_string(),
+                            file: file.to_string(),
+                            detail: it.collect::<Vec<_>>().join(" "),
+                        });
+                    }
+                }
+            }
+        } else {
+            for entry in std::fs::read_dir(&dir)? {
+                let p = entry?.path();
+                let fname = p
+                    .file_name()
+                    .and_then(|s| s.to_str())
+                    .unwrap_or_default()
+                    .to_string();
+                if fname.ends_with(".hlo.txt") {
+                    specs.push(ArtifactSpec {
+                        name: fname.trim_end_matches(".hlo.txt").to_string(),
+                        file: fname,
+                        detail: String::new(),
+                    });
+                }
+            }
+            specs.sort_by(|a, b| a.name.cmp(&b.name));
+        }
+        Ok(Self { dir, specs })
+    }
+
+    /// Full path of an artifact by logical name.
+    pub fn path(&self, name: &str) -> Result<PathBuf> {
+        let spec = self
+            .specs
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown artifact {name:?}; available: {}",
+                    self.specs
+                        .iter()
+                        .map(|s| s.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?;
+        Ok(self.dir.join(&spec.file))
+    }
+
+    /// Names of all artifacts.
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    /// Parse the batch size from a manifest detail like `in=x[32,64]f32`.
+    pub fn batch_of(&self, name: &str) -> Option<usize> {
+        let spec = self.specs.iter().find(|s| s.name == name)?;
+        let detail = &spec.detail;
+        let start = detail.find("x[")? + 2;
+        let rest = &detail[start..];
+        let comma = rest.find(',')?;
+        rest[..comma].parse().ok()
+    }
+
+    /// Group artifacts by prefix (dof / hessian / pinn) for display.
+    pub fn grouped(&self) -> BTreeMap<String, Vec<&ArtifactSpec>> {
+        let mut map: BTreeMap<String, Vec<&ArtifactSpec>> = BTreeMap::new();
+        for s in &self.specs {
+            let group = s.name.split('_').next().unwrap_or("misc").to_string();
+            map.entry(group).or_default().push(s);
+        }
+        map
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dof_artifacts_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "dof_mlp_elliptic.hlo.txt in=x[32,64]f32 out=(phi,lphi) rank=64\n\
+             weights.dofw dims=[64,1]\n\
+             pinn_heat_step.hlo.txt in=(theta[100],x[128,3])f32 out=(loss,grad)\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("dof_mlp_elliptic.hlo.txt"), "HloModule m\n").unwrap();
+        std::fs::write(dir.join("pinn_heat_step.hlo.txt"), "HloModule p\n").unwrap();
+        dir
+    }
+
+    #[test]
+    fn manifest_parsing_and_lookup() {
+        let dir = fixture_dir();
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        assert_eq!(reg.names(), vec!["dof_mlp_elliptic", "pinn_heat_step"]);
+        assert!(reg.path("dof_mlp_elliptic").unwrap().is_file());
+        assert!(reg.path("nope").is_err());
+        assert_eq!(reg.batch_of("dof_mlp_elliptic"), Some(32));
+        assert_eq!(reg.batch_of("pinn_heat_step"), Some(128));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_is_friendly_error() {
+        let err = ArtifactRegistry::open("/definitely/not/here").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

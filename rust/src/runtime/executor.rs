@@ -1,0 +1,137 @@
+//! Compiled-executable cache and typed execution helpers over the PJRT
+//! CPU client.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Owns the PJRT client and a cache of compiled executables.
+///
+/// PJRT handles are not `Send`; an [`Executor`] lives on one thread (the
+/// coordinator gives each model-worker thread its own).
+pub struct Executor {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    /// Create a CPU-backed executor.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact, caching by name.
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Is an executable cached?
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.cache.contains_key(name)
+    }
+
+    /// Execute a loaded artifact on f32 inputs.
+    ///
+    /// `inputs`: (flat data, dims) per parameter, row-major. Returns the
+    /// flattened f32 contents of every tuple element (AOT lowers with
+    /// `return_tuple=True`, so the single output is a tuple).
+    pub fn run_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self
+            .cache
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not loaded"))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let expect: usize = dims.iter().product();
+            if expect != data.len() {
+                return Err(anyhow!(
+                    "input length {} != shape {:?} product {}",
+                    data.len(),
+                    dims,
+                    expect
+                ));
+            }
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims_i64)
+                .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        let elems = out
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {name}: {e:?}"))?;
+        elems
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// Pad a `[rows, width]` row-major batch with zero rows up to `target`
+/// rows; returns the padded flat buffer.
+pub fn pad_batch(data: &[f32], rows: usize, width: usize, target: usize) -> Vec<f32> {
+    assert_eq!(data.len(), rows * width, "flat batch length mismatch");
+    assert!(rows <= target, "batch {rows} exceeds artifact batch {target}");
+    let mut out = vec![0.0f32; target * width];
+    out[..data.len()].copy_from_slice(data);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_batch_zero_fills() {
+        let d = vec![1.0, 2.0, 3.0, 4.0];
+        let p = pad_batch(&d, 2, 2, 4);
+        assert_eq!(p.len(), 8);
+        assert_eq!(&p[..4], &d[..]);
+        assert_eq!(&p[4..], &[0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pad_batch_rejects_oversize() {
+        let d = vec![0.0; 6];
+        let _ = pad_batch(&d, 3, 2, 2);
+    }
+
+    // End-to-end executor tests live in rust/tests/xla_cross_check.rs —
+    // they need the artifacts directory and the PJRT runtime, which are
+    // integration-level concerns.
+}

@@ -1,0 +1,13 @@
+//! XLA-PJRT runtime: load AOT-compiled HLO-text artifacts (produced by
+//! `python/compile/aot.py`) and execute them from the Rust hot path.
+//!
+//! Python never runs here — after `make artifacts` the `dof` binary is
+//! self-contained. The interchange format is HLO *text* (the published
+//! xla crate's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos; the
+//! text parser reassigns ids — see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactRegistry, ArtifactSpec};
+pub use executor::{pad_batch, Executor};

@@ -1,0 +1,231 @@
+//! Dense tensor substrate.
+//!
+//! A deliberately small, fast, row-major dense tensor over `f64`, sufficient
+//! for the DOF/Hessian execution engines, the PDE training loop, and the
+//! bench harness. No external BLAS: `matmul` uses a cache-blocked
+//! micro-kernel (see [`matmul`]).
+
+mod matmul;
+mod ops;
+mod shape;
+
+pub use matmul::{matmul, matmul_into, matmul_nt, matmul_tn, matvec};
+pub use shape::Shape;
+
+use crate::util::Xoshiro256;
+
+/// Row-major dense tensor of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Shape,
+    data: Vec<f64>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Self {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(dims: &[usize], v: f64) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Self {
+            shape,
+            data: vec![v; n],
+        }
+    }
+
+    /// Build from existing data; panics on length mismatch.
+    pub fn from_vec(dims: &[usize], data: Vec<f64>) -> Self {
+        let shape = Shape::new(dims);
+        assert_eq!(
+            shape.numel(),
+            data.len(),
+            "shape {:?} needs {} elements, got {}",
+            dims,
+            shape.numel(),
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    /// 1-D tensor from a slice.
+    pub fn vector(xs: &[f64]) -> Self {
+        Self::from_vec(&[xs.len()], xs.to_vec())
+    }
+
+    /// 2-D tensor from rows; panics if ragged.
+    pub fn matrix(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged matrix rows");
+            data.extend_from_slice(row);
+        }
+        Self::from_vec(&[r, c], data)
+    }
+
+    /// Identity matrix of size `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut t = Self::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    /// i.i.d. N(0,1) entries.
+    pub fn randn(dims: &[usize], rng: &mut Xoshiro256) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        let data = (0..n).map(|_| rng.normal()).collect();
+        Self { shape, data }
+    }
+
+    /// i.i.d. U[lo,hi) entries.
+    pub fn rand_uniform(dims: &[usize], lo: f64, hi: f64, rng: &mut Xoshiro256) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        let data = (0..n).map(|_| rng.uniform(lo, hi)).collect();
+        Self { shape, data }
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.rank()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Scalar extraction; panics unless numel == 1.
+    pub fn item(&self) -> f64 {
+        assert_eq!(self.numel(), 1, "item() on non-scalar tensor");
+        self.data[0]
+    }
+
+    /// 2-D element access.
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert_eq!(self.rank(), 2);
+        let c = self.dims()[1];
+        self.data[i * c + j]
+    }
+
+    /// 2-D element mutation.
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert_eq!(self.rank(), 2);
+        let c = self.dims()[1];
+        self.data[i * c + j] = v;
+    }
+
+    /// Reshape (same numel), returning a new view-by-copy of the metadata.
+    pub fn reshape(&self, dims: &[usize]) -> Tensor {
+        let shape = Shape::new(dims);
+        assert_eq!(shape.numel(), self.numel(), "reshape numel mismatch");
+        Tensor {
+            shape,
+            data: self.data.clone(),
+        }
+    }
+
+    /// Row `i` of a 2-D tensor as a slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        assert_eq!(self.rank(), 2);
+        let c = self.dims()[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    /// Mutable row.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        assert_eq!(self.rank(), 2);
+        let c = self.dims()[1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Transpose of a 2-D tensor.
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (r, c) = (self.dims()[0], self.dims()[1]);
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::matrix(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(t.dims(), &[2, 2]);
+        assert_eq!(t.at(1, 0), 3.0);
+        assert_eq!(t.transpose().at(0, 1), 3.0);
+    }
+
+    #[test]
+    fn eye_and_item() {
+        let i = Tensor::eye(3);
+        assert_eq!(i.at(2, 2), 1.0);
+        assert_eq!(i.at(0, 1), 0.0);
+        let s = Tensor::from_vec(&[1], vec![7.0]);
+        assert_eq!(s.item(), 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_mismatch_panics() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::vector(&[1.0, 2.0, 3.0, 4.0]);
+        let m = t.reshape(&[2, 2]);
+        assert_eq!(m.at(1, 1), 4.0);
+    }
+
+    #[test]
+    fn randn_deterministic_by_seed() {
+        let mut r1 = Xoshiro256::new(9);
+        let mut r2 = Xoshiro256::new(9);
+        let a = Tensor::randn(&[4, 4], &mut r1);
+        let b = Tensor::randn(&[4, 4], &mut r2);
+        assert_eq!(a, b);
+    }
+}

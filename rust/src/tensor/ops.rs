@@ -1,0 +1,160 @@
+//! Elementwise and reduction operations on [`Tensor`].
+
+use super::Tensor;
+
+impl Tensor {
+    /// Elementwise binary op with another tensor of identical shape.
+    pub fn zip_with(&self, other: &Tensor, f: impl Fn(f64, f64) -> f64) -> Tensor {
+        assert_eq!(self.dims(), other.dims(), "zip_with shape mismatch");
+        let data = self
+            .data()
+            .iter()
+            .zip(other.data())
+            .map(|(&a, &b)| f(a, b))
+            .collect();
+        Tensor::from_vec(self.dims(), data)
+    }
+
+    /// Elementwise unary map.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Tensor {
+        Tensor::from_vec(self.dims(), self.data().iter().map(|&x| f(x)).collect())
+    }
+
+    /// In-place elementwise map.
+    pub fn map_inplace(&mut self, f: impl Fn(f64) -> f64) {
+        for x in self.data_mut() {
+            *x = f(*x);
+        }
+    }
+
+    pub fn add(&self, o: &Tensor) -> Tensor {
+        self.zip_with(o, |a, b| a + b)
+    }
+
+    pub fn sub(&self, o: &Tensor) -> Tensor {
+        self.zip_with(o, |a, b| a - b)
+    }
+
+    pub fn mul(&self, o: &Tensor) -> Tensor {
+        self.zip_with(o, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f64) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    /// `self += alpha * other` (AXPY), in place.
+    pub fn axpy(&mut self, alpha: f64, other: &Tensor) {
+        assert_eq!(self.dims(), other.dims(), "axpy shape mismatch");
+        for (a, &b) in self.data_mut().iter_mut().zip(other.data()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Sum of all elements.
+    pub fn sum(&self) -> f64 {
+        self.data().iter().sum()
+    }
+
+    /// Mean of all elements (0 for empty).
+    pub fn mean(&self) -> f64 {
+        if self.numel() == 0 {
+            0.0
+        } else {
+            self.sum() / self.numel() as f64
+        }
+    }
+
+    /// Dot product with another tensor of identical shape.
+    pub fn dot(&self, o: &Tensor) -> f64 {
+        assert_eq!(self.dims(), o.dims(), "dot shape mismatch");
+        self.data().iter().zip(o.data()).map(|(&a, &b)| a * b).sum()
+    }
+
+    /// Squared Frobenius/L2 norm.
+    pub fn norm_sq(&self) -> f64 {
+        self.data().iter().map(|&x| x * x).sum()
+    }
+
+    /// Frobenius/L2 norm.
+    pub fn norm(&self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+
+    /// Max absolute element (0 for empty).
+    pub fn max_abs(&self) -> f64 {
+        self.data().iter().fold(0.0, |m, &x| m.max(x.abs()))
+    }
+
+    /// Max absolute difference against another tensor.
+    pub fn max_abs_diff(&self, o: &Tensor) -> f64 {
+        assert_eq!(self.dims(), o.dims());
+        self.data()
+            .iter()
+            .zip(o.data())
+            .fold(0.0, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+
+    /// Relative L2 error `|self - o| / max(|o|, eps)`.
+    pub fn rel_l2_error(&self, o: &Tensor) -> f64 {
+        let diff = self.sub(o).norm();
+        diff / o.norm().max(1e-30)
+    }
+
+    /// True when all elements are finite.
+    pub fn all_finite(&self) -> bool {
+        self.data().iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Tensor::vector(&[1.0, 2.0, 3.0]);
+        let b = Tensor::vector(&[4.0, 5.0, 6.0]);
+        assert_eq!(a.add(&b).data(), &[5.0, 7.0, 9.0]);
+        assert_eq!(b.sub(&a).data(), &[3.0, 3.0, 3.0]);
+        assert_eq!(a.mul(&b).data(), &[4.0, 10.0, 18.0]);
+        assert_eq!(a.scale(2.0).data(), &[2.0, 4.0, 6.0]);
+        assert_eq!(a.dot(&b), 32.0);
+    }
+
+    #[test]
+    fn axpy_inplace() {
+        let mut a = Tensor::vector(&[1.0, 1.0]);
+        let b = Tensor::vector(&[2.0, 3.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[2.0, 2.5]);
+    }
+
+    #[test]
+    fn reductions() {
+        let a = Tensor::vector(&[3.0, -4.0]);
+        assert_eq!(a.sum(), -1.0);
+        assert_eq!(a.mean(), -0.5);
+        assert_eq!(a.norm(), 5.0);
+        assert_eq!(a.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn error_metrics() {
+        let a = Tensor::vector(&[1.0, 2.0]);
+        let b = Tensor::vector(&[1.0, 2.5]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-12);
+        assert!(a.rel_l2_error(&a) < 1e-15);
+        assert!(a.all_finite());
+        let nan = Tensor::vector(&[f64::NAN]);
+        assert!(!nan.all_finite());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Tensor::vector(&[1.0]);
+        let b = Tensor::vector(&[1.0, 2.0]);
+        let _ = a.add(&b);
+    }
+}

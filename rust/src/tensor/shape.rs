@@ -1,0 +1,92 @@
+//! Shape metadata for dense tensors.
+
+/// Immutable list of dimension sizes with cached element count.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Shape {
+    dims: Vec<usize>,
+    numel: usize,
+}
+
+impl Shape {
+    /// New shape from dimension sizes. Zero-sized dims are allowed.
+    pub fn new(dims: &[usize]) -> Self {
+        let numel = dims.iter().product();
+        Self {
+            dims: dims.to_vec(),
+            numel,
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.numel
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut strides = vec![1usize; self.dims.len()];
+        for i in (0..self.dims.len().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * self.dims[i + 1];
+        }
+        strides
+    }
+
+    /// Linear index of a multi-index; panics if out of bounds in debug.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.dims.len());
+        let strides = self.strides();
+        idx.iter()
+            .zip(strides.iter())
+            .map(|(&i, &s)| {
+                debug_assert!(i < self.dims[idx.len() - strides.len() + 0].max(usize::MAX));
+                i * s
+            })
+            .sum()
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "[{}]",
+            self.dims
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_strides() {
+        let s = Shape::new(&[2, 3, 4]);
+        assert_eq!(s.numel(), 24);
+        assert_eq!(s.strides(), vec![12, 4, 1]);
+        assert_eq!(s.offset(&[1, 2, 3]), 12 + 8 + 3);
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let s = Shape::new(&[]);
+        assert_eq!(s.numel(), 1);
+        assert_eq!(s.rank(), 0);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Shape::new(&[2, 3]).to_string(), "[2, 3]");
+    }
+}

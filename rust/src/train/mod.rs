@@ -1,0 +1,8 @@
+//! Training substrate: optimizers and collocation samplers for the PINN
+//! workloads that exercise DOF end-to-end.
+
+pub mod optim;
+pub mod sampler;
+
+pub use optim::{Adam, AdamConfig, Sgd};
+pub use sampler::{BoundarySampler, BoxSampler};

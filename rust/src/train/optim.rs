@@ -1,0 +1,148 @@
+//! First-order optimizers over flat parameter vectors.
+
+/// Adam hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamConfig {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    /// Decoupled weight decay (AdamW style); 0 disables.
+    pub weight_decay: f64,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        Self {
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+        }
+    }
+}
+
+/// Adam with bias correction.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub cfg: AdamConfig,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(n_params: usize, cfg: AdamConfig) -> Self {
+        Self {
+            cfg,
+            m: vec![0.0; n_params],
+            v: vec![0.0; n_params],
+            t: 0,
+        }
+    }
+
+    /// One update step: `params ← params − lr·m̂/(√v̂ + ε)`.
+    pub fn step(&mut self, params: &mut [f64], grads: &[f64]) {
+        assert_eq!(params.len(), self.m.len(), "param count changed");
+        assert_eq!(grads.len(), self.m.len(), "grad count mismatch");
+        self.t += 1;
+        let c = &self.cfg;
+        let bc1 = 1.0 - c.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - c.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grads[i];
+            self.m[i] = c.beta1 * self.m[i] + (1.0 - c.beta1) * g;
+            self.v[i] = c.beta2 * self.v[i] + (1.0 - c.beta2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            let mut upd = mhat / (vhat.sqrt() + c.eps);
+            if c.weight_decay > 0.0 {
+                upd += c.weight_decay * params[i];
+            }
+            params[i] -= c.lr * upd;
+        }
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.t
+    }
+}
+
+/// Plain SGD with optional momentum.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f64,
+    pub momentum: f64,
+    velocity: Vec<f64>,
+}
+
+impl Sgd {
+    pub fn new(n_params: usize, lr: f64, momentum: f64) -> Self {
+        Self {
+            lr,
+            momentum,
+            velocity: vec![0.0; n_params],
+        }
+    }
+
+    pub fn step(&mut self, params: &mut [f64], grads: &[f64]) {
+        assert_eq!(params.len(), self.velocity.len());
+        for i in 0..params.len() {
+            self.velocity[i] = self.momentum * self.velocity[i] + grads[i];
+            params[i] -= self.lr * self.velocity[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Adam minimizes a convex quadratic.
+    #[test]
+    fn adam_minimizes_quadratic() {
+        let mut params = vec![5.0, -3.0, 2.0];
+        let target = [1.0, 2.0, -1.0];
+        let mut opt = Adam::new(3, AdamConfig { lr: 0.05, ..Default::default() });
+        for _ in 0..2000 {
+            let grads: Vec<f64> = params
+                .iter()
+                .zip(&target)
+                .map(|(&p, &t)| 2.0 * (p - t))
+                .collect();
+            opt.step(&mut params, &grads);
+        }
+        for (p, t) in params.iter().zip(&target) {
+            assert!((p - t).abs() < 1e-3, "{p} vs {t}");
+        }
+    }
+
+    #[test]
+    fn sgd_with_momentum_converges() {
+        let mut params = vec![4.0];
+        let mut opt = Sgd::new(1, 0.05, 0.9);
+        for _ in 0..500 {
+            let g = vec![2.0 * params[0]];
+            opt.step(&mut params, &g);
+        }
+        assert!(params[0].abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_bias_correction_first_step() {
+        // After one step with g = 1, update ≈ lr·1 regardless of betas.
+        let mut params = vec![0.0];
+        let mut opt = Adam::new(1, AdamConfig { lr: 0.1, ..Default::default() });
+        opt.step(&mut params, &[1.0]);
+        assert!((params[0] + 0.1).abs() < 1e-6, "{}", params[0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn grad_len_mismatch_panics() {
+        let mut opt = Adam::new(2, AdamConfig::default());
+        let mut p = vec![0.0, 0.0];
+        opt.step(&mut p, &[1.0]);
+    }
+}

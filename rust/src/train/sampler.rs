@@ -1,0 +1,126 @@
+//! Collocation-point samplers for PINN training: interior points in an
+//! axis-aligned box and boundary/initial-condition points on its faces.
+
+use crate::tensor::Tensor;
+use crate::util::Xoshiro256;
+
+/// Uniform sampler over the box `Π_i [lo_i, hi_i]`.
+#[derive(Debug, Clone)]
+pub struct BoxSampler {
+    pub lo: Vec<f64>,
+    pub hi: Vec<f64>,
+}
+
+impl BoxSampler {
+    pub fn new(lo: Vec<f64>, hi: Vec<f64>) -> Self {
+        assert_eq!(lo.len(), hi.len());
+        for (l, h) in lo.iter().zip(&hi) {
+            assert!(l < h, "degenerate box [{l}, {h}]");
+        }
+        Self { lo, hi }
+    }
+
+    /// Unit cube `[0,1]^n`.
+    pub fn unit(n: usize) -> Self {
+        Self::new(vec![0.0; n], vec![1.0; n])
+    }
+
+    pub fn dim(&self) -> usize {
+        self.lo.len()
+    }
+
+    /// Sample `count` interior points, `[count, dim]`.
+    pub fn sample(&self, count: usize, rng: &mut Xoshiro256) -> Tensor {
+        let d = self.dim();
+        let mut t = Tensor::zeros(&[count, d]);
+        for b in 0..count {
+            let row = t.row_mut(b);
+            for i in 0..d {
+                row[i] = rng.uniform(self.lo[i], self.hi[i]);
+            }
+        }
+        t
+    }
+}
+
+/// Sampler on the faces of a box. Each sample picks a face uniformly among
+/// the selected ones and samples the remaining coordinates uniformly.
+#[derive(Debug, Clone)]
+pub struct BoundarySampler {
+    pub box_: BoxSampler,
+    /// Faces as `(axis, at_hi)`; e.g. `(2, false)` = the `x_2 = lo_2` face.
+    pub faces: Vec<(usize, bool)>,
+}
+
+impl BoundarySampler {
+    /// All `2·dim` faces.
+    pub fn all_faces(box_: BoxSampler) -> Self {
+        let d = box_.dim();
+        let faces = (0..d).flat_map(|i| [(i, false), (i, true)]).collect();
+        Self { box_, faces }
+    }
+
+    /// Only selected faces (e.g. the `t = 0` slab for initial conditions).
+    pub fn faces(box_: BoxSampler, faces: Vec<(usize, bool)>) -> Self {
+        for &(axis, _) in &faces {
+            assert!(axis < box_.dim());
+        }
+        Self { box_, faces }
+    }
+
+    pub fn sample(&self, count: usize, rng: &mut Xoshiro256) -> Tensor {
+        let mut t = self.box_.sample(count, rng);
+        for b in 0..count {
+            let &(axis, at_hi) = rng.choose(&self.faces);
+            let v = if at_hi { self.box_.hi[axis] } else { self.box_.lo[axis] };
+            t.row_mut(b)[axis] = v;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interior_points_in_box() {
+        let s = BoxSampler::new(vec![-1.0, 0.0], vec![1.0, 2.0]);
+        let mut rng = Xoshiro256::new(1);
+        let pts = s.sample(500, &mut rng);
+        for b in 0..500 {
+            let r = pts.row(b);
+            assert!((-1.0..=1.0).contains(&r[0]));
+            assert!((0.0..=2.0).contains(&r[1]));
+        }
+    }
+
+    #[test]
+    fn boundary_points_on_faces() {
+        let s = BoundarySampler::all_faces(BoxSampler::unit(3));
+        let mut rng = Xoshiro256::new(2);
+        let pts = s.sample(300, &mut rng);
+        for b in 0..300 {
+            let r = pts.row(b);
+            let on_face = r.iter().any(|&v| v == 0.0 || v == 1.0);
+            assert!(on_face, "point {r:?} not on any face");
+        }
+    }
+
+    #[test]
+    fn initial_condition_face_only() {
+        // t = x_2 = 0 slab.
+        let s = BoundarySampler::faces(BoxSampler::unit(3), vec![(2, false)]);
+        let mut rng = Xoshiro256::new(3);
+        let pts = s.sample(100, &mut rng);
+        for b in 0..100 {
+            assert_eq!(pts.row(b)[2], 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn degenerate_box_panics() {
+        let _ = BoxSampler::new(vec![1.0], vec![1.0]);
+    }
+}

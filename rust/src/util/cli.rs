@@ -1,0 +1,183 @@
+//! Minimal command-line argument parser.
+//!
+//! The environment has no `clap`; this module provides the small subset the
+//! `dof` binary needs: subcommands, `--flag`, `--key value` / `--key=value`
+//! options with typed accessors and defaults, and positional arguments.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed command line: a subcommand, options, flags, and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-option token (subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` or `--key=value` pairs.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` tokens.
+    pub flags: Vec<String>,
+    /// Remaining positional arguments after the subcommand.
+    pub positionals: Vec<String>,
+}
+
+/// Error produced when an option fails to parse into its typed form.
+#[derive(Debug)]
+pub struct ParseError {
+    pub key: String,
+    pub value: String,
+    pub ty: &'static str,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "option --{} has value {:?} which is not a valid {}",
+            self.key, self.value, self.ty
+        )
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Args {
+    /// Parse from an iterator of argument tokens (excluding `argv[0]`).
+    ///
+    /// Rules: a token starting with `--` is a flag; if the *next* token does
+    /// not start with `--`, it is consumed as that flag's value (so boolean
+    /// flags should come last or be followed by other `--` tokens;
+    /// `--key=value` is unambiguous). The first bare token becomes the
+    /// subcommand; later bare tokens are positionals.
+    pub fn parse<I, S>(tokens: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let toks: Vec<String> = tokens.into_iter().map(Into::into).collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.options
+                        .insert(stripped.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(t.clone());
+            } else {
+                args.positionals.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Is the given boolean flag present (either `--name` or `--name true`)?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self
+                .options
+                .get(name)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+
+    /// Raw string option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; returns Err on malformed value.
+    pub fn get_parsed_or<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, ParseError> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| ParseError {
+                key: name.to_string(),
+                value: v.clone(),
+                ty: std::any::type_name::<T>(),
+            }),
+        }
+    }
+
+    /// usize option with default (panics with a readable message on error —
+    /// appropriate for CLI entry points).
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get_parsed_or(name, default).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// u64 option with default.
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get_parsed_or(name, default).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// f64 option with default.
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get_parsed_or(name, default).unwrap_or_else(|e| panic!("{e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(vec![
+            "bench", "table1", "--reps", "20", "--operator=elliptic", "--verbose",
+        ]);
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.positionals, vec!["table1"]);
+        assert_eq!(a.get("reps"), Some("20"));
+        assert_eq!(a.get("operator"), Some("elliptic"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(vec!["run", "--n", "64", "--lr", "0.001"]);
+        assert_eq!(a.usize_or("n", 1), 64);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert!((a.f64_or("lr", 0.1) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn malformed_value_is_error() {
+        let a = Args::parse(vec!["run", "--n", "sixty"]);
+        assert!(a.get_parsed_or::<usize>("n", 1).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(vec!["x", "--fast", "--n", "3"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+
+    #[test]
+    fn empty_input() {
+        let a = Args::parse(Vec::<String>::new());
+        assert!(a.command.is_none());
+        assert!(a.options.is_empty());
+    }
+}

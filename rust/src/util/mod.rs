@@ -1,0 +1,13 @@
+//! General-purpose substrates: deterministic RNG, CLI parsing, CSV output,
+//! and statistics. These replace external crates (`rand`, `clap`, `csv`,
+//! `criterion`'s stats) that are unavailable in the offline build.
+
+pub mod cli;
+pub mod csv;
+pub mod prng;
+pub mod stats;
+
+pub use cli::Args;
+pub use csv::CsvTable;
+pub use prng::{SplitMix64, Xoshiro256};
+pub use stats::{fmt_bytes, fmt_duration, LatencyHistogram, Summary};

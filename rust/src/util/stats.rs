@@ -1,0 +1,219 @@
+//! Small statistics helpers shared by the bench harness and metrics.
+
+/// Summary statistics over a sample of f64 measurements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns a zeroed summary for an empty slice.
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                max: 0.0,
+                median: 0.0,
+                p95: 0.0,
+            };
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / (n.max(2) - 1) as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice, `q` in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Fixed-bucket latency histogram (log-spaced), used by coordinator metrics.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Bucket upper bounds in seconds (log spaced from 1us to ~100s).
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        // 1us .. 100s, 4 buckets per decade.
+        let mut bounds = Vec::new();
+        let mut b = 1e-6;
+        while b <= 100.0 {
+            for m in [1.0, 1.78, 3.16, 5.62] {
+                bounds.push(b * m);
+            }
+            b *= 10.0;
+        }
+        let n = bounds.len();
+        Self {
+            bounds,
+            counts: vec![0; n + 1],
+            total: 0,
+            sum: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| seconds <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += seconds;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut cum = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    *self.bounds.last().unwrap()
+                };
+            }
+        }
+        *self.bounds.last().unwrap()
+    }
+}
+
+/// Human-friendly duration formatting (ns/µs/ms/s).
+pub fn fmt_duration(seconds: f64) -> String {
+    if seconds < 1e-6 {
+        format!("{:.1}ns", seconds * 1e9)
+    } else if seconds < 1e-3 {
+        format!("{:.2}µs", seconds * 1e6)
+    } else if seconds < 1.0 {
+        format!("{:.3}ms", seconds * 1e3)
+    } else {
+        format!("{:.3}s", seconds)
+    }
+}
+
+/// Human-friendly byte-count formatting.
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes}B")
+    } else {
+        format!("{v:.2}{}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-5);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.quantile(0.5) <= h.quantile(0.95));
+        assert!(h.mean() > 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert!(fmt_duration(2.5e-3).contains("ms"));
+        assert!(fmt_duration(3.0).contains('s'));
+        assert_eq!(fmt_bytes(512), "512B");
+        assert!(fmt_bytes(10 * 1024 * 1024).contains("MiB"));
+    }
+}

@@ -1,0 +1,214 @@
+//! Property-based integration tests: random graphs × random operators,
+//! checked against ground truth and the paper's theorems, via the in-repo
+//! property-testing substrate ([`dof::prop`]).
+
+use dof::autodiff::{CostModel, DofEngine, HessianEngine, MemoryModel};
+use dof::graph::{builder::random_layers, mlp_graph, sparse_mlp_graph, Act, Graph};
+use dof::linalg::LdlDecomposition;
+use dof::prop::{close, run_prop, Gen};
+use dof::tensor::{matmul, Tensor};
+
+/// Random symmetric matrix with a controlled rank.
+fn random_coeff(g: &mut Gen, n: usize) -> Tensor {
+    let kind = g.usize_in(0, 2);
+    match kind {
+        0 => {
+            // full-rank symmetric (possibly indefinite)
+            let b = Tensor::randn(&[n, n], g.rng());
+            b.add(&b.transpose()).scale(0.5)
+        }
+        1 => {
+            // low-rank PSD
+            let r = g.usize_in(1, n);
+            let b = Tensor::randn(&[n, r], g.rng());
+            matmul(&b, &b.transpose())
+        }
+        _ => {
+            // signed diagonal
+            let mut a = Tensor::eye(n);
+            for i in 0..n {
+                if g.bool_with(0.3) {
+                    a.set(i, i, -1.0);
+                }
+            }
+            a
+        }
+    }
+}
+
+/// Random small MLP graph.
+fn random_mlp(g: &mut Gen, n: usize) -> Graph {
+    let depth = g.usize_in(1, 3);
+    let mut dims = vec![n];
+    for _ in 0..depth {
+        dims.push(g.usize_in(2, 12));
+    }
+    dims.push(1);
+    let act = g.choice(&[Act::Tanh, Act::Sin, Act::Gelu, Act::Softplus]);
+    mlp_graph(&random_layers(&dims, g.rng()), act)
+}
+
+#[test]
+fn prop_dof_equals_hessian_on_random_mlps() {
+    run_prop("dof == hessian (mlp)", 40, 101, |g| {
+        let n = g.usize_in(2, 8);
+        let graph = random_mlp(g, n);
+        let a = random_coeff(g, n);
+        let batch = g.usize_in(1, 3);
+        let x = Tensor::randn(&[batch, n], g.rng());
+        let dof = DofEngine::new(&a).compute(&graph, &x);
+        let hes = HessianEngine::new(&a).compute(&graph, &x);
+        for b in 0..batch {
+            close(
+                dof.operator_values.at(b, 0),
+                hes.operator_values.at(b, 0),
+                1e-7,
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dof_equals_hessian_on_random_sparse_graphs() {
+    run_prop("dof == hessian (sparse)", 20, 202, |g| {
+        let k = g.usize_in(2, 4);
+        let block_in = g.usize_in(1, 3);
+        let out_dim = g.usize_in(1, 4);
+        let hidden = g.usize_in(2, 8);
+        let blocks: Vec<_> = (0..k)
+            .map(|_| random_layers(&[block_in, hidden, out_dim], g.rng()))
+            .collect();
+        let graph = sparse_mlp_graph(&blocks, g.choice(&[Act::Tanh, Act::Sin]));
+        let n = k * block_in;
+        let a = random_coeff(g, n);
+        let x = Tensor::randn(&[2, n], g.rng()).scale(0.5);
+        let dof = DofEngine::new(&a).compute(&graph, &x);
+        let hes = HessianEngine::new(&a).compute(&graph, &x);
+        for b in 0..2 {
+            close(
+                dof.operator_values.at(b, 0),
+                hes.operator_values.at(b, 0),
+                1e-7,
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_theorem21_flops_on_random_architectures() {
+    run_prop("theorem 2.1 (FLOPs ≤ ~half)", 25, 303, |g| {
+        let n = g.usize_in(4, 10);
+        let graph = random_mlp(g, n);
+        let a = {
+            let b = Tensor::randn(&[n, n], g.rng());
+            b.add(&b.transpose()).scale(0.5)
+        };
+        let x = Tensor::randn(&[1, n], g.rng());
+        let dof = DofEngine::new(&a).compute(&graph, &x);
+        let hes = HessianEngine::new(&a).compute(&graph, &x);
+        // Theorem 2.1 counts only the tangent sweeps; our engines also run
+        // the value and s streams (+2 widths on the DOF side, +1 backward
+        // sweep on the Hessian side), so the finite-N bound is
+        // (N+2)/(2N+1) → ½ as N grows. Allow 10% slack for the nonlinear
+        // |T|-terms of narrow random graphs.
+        let bound = (n as f64 + 2.0) / (2.0 * n as f64 + 1.0) * 1.10;
+        let ratio = dof.cost.muls as f64 / hes.cost.muls as f64;
+        if ratio <= bound {
+            Ok(())
+        } else {
+            Err(format!("DOF/Hessian mul ratio {ratio:.3} > bound {bound:.3}"))
+        }
+    });
+}
+
+#[test]
+fn prop_theorem22_memory_on_random_architectures() {
+    run_prop("theorem 2.2 (peak memory)", 25, 404, |g| {
+        let n = g.usize_in(4, 10);
+        let graph = random_mlp(g, n);
+        let a = {
+            let b = Tensor::randn(&[n, n], g.rng());
+            b.add(&b.transpose()).scale(0.5)
+        };
+        let x = Tensor::randn(&[1, n], g.rng());
+        let dof = DofEngine::new(&a).compute(&graph, &x);
+        let hes = HessianEngine::new(&a).compute(&graph, &x);
+        if dof.peak_tangent_bytes < hes.peak_tangent_bytes {
+            Ok(())
+        } else {
+            Err(format!(
+                "DOF peak {} !< Hessian peak {}",
+                dof.peak_tangent_bytes, hes.peak_tangent_bytes
+            ))
+        }
+    });
+}
+
+#[test]
+fn prop_ldl_reconstruction_and_quadratic_form() {
+    run_prop("A = LᵀDL", 60, 505, |g| {
+        let n = g.usize_in(2, 12);
+        let a = random_coeff(g, n);
+        let dec = LdlDecomposition::of(&a);
+        let sym = a.add(&a.transpose()).scale(0.5);
+        let err = dec.reconstruct().max_abs_diff(&sym);
+        if err > 1e-8 {
+            return Err(format!("reconstruction error {err}"));
+        }
+        // Quadratic-form identity on random vectors.
+        let x = Tensor::randn(&[n, 1], g.rng());
+        let lx = matmul(&dec.l, &x);
+        let q1 = dec.d_inner(lx.data(), lx.data());
+        let ax = matmul(&sym, &x);
+        let q2: f64 = x.data().iter().zip(ax.data()).map(|(&u, &v)| u * v).sum();
+        close(q1, q2, 1e-8)
+    });
+}
+
+#[test]
+fn prop_memory_model_bounds_measured_peak() {
+    // The analytic forward-peak model (eq. 25/26) must upper-bound the
+    // engine's measured tangent bytes (per batch point, model counts only
+    // tangent scalars; engine peak includes exactly those).
+    run_prop("analytic C(j) ≥ measured", 20, 606, |g| {
+        let n = g.usize_in(3, 8);
+        let graph = random_mlp(g, n);
+        let a = Tensor::eye(n);
+        let x = Tensor::randn(&[1, n], g.rng());
+        let dof = DofEngine::new(&a).dense().compute(&graph, &x);
+        let model = MemoryModel::new(&graph).forward_peak_scalars(n) * 8;
+        if dof.peak_tangent_bytes <= model {
+            Ok(())
+        } else {
+            Err(format!(
+                "measured {} > analytic bound {model}",
+                dof.peak_tangent_bytes
+            ))
+        }
+    });
+}
+
+#[test]
+fn prop_analytic_cost_model_tracks_measured() {
+    run_prop("analytic FLOPs ≈ measured", 20, 707, |g| {
+        let n = g.usize_in(4, 8);
+        // Wider layers so the model's ignored terms are relatively small.
+        let dims = [n, 32, 32, 1];
+        let graph = mlp_graph(&random_layers(&dims, g.rng()), Act::Tanh);
+        let a = {
+            let b = Tensor::randn(&[n, n], g.rng());
+            b.add(&b.transpose()).scale(0.5)
+        };
+        let x = Tensor::randn(&[1, n], g.rng());
+        let dof = DofEngine::new(&a).compute(&graph, &x);
+        let model = CostModel::new(&graph, n);
+        let ratio = dof.cost.muls as f64 / model.dof_muls() as f64;
+        if (0.7..1.6).contains(&ratio) {
+            Ok(())
+        } else {
+            Err(format!("measured/analytic = {ratio:.3}"))
+        }
+    });
+}

@@ -1,0 +1,195 @@
+//! Integration: the Rust DOF/Hessian engines and the AOT XLA artifacts must
+//! agree on identical weights — closing the loop
+//! `rust engine (f64) == jax DOF (f32, pallas) == jax.hessian (f32)`.
+//!
+//! Requires `make artifacts`. Tests are skipped (not failed) when the
+//! artifacts directory is absent so `cargo test` works on a fresh clone.
+
+use dof::graph::{builder::LayerWeights, mlp_graph, Act};
+use dof::nn::serialize::{entries_to_mlp, read_dofw};
+use dof::operators::Operator;
+use dof::runtime::{ArtifactRegistry, Executor};
+use dof::tensor::Tensor;
+use dof::util::Xoshiro256;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").is_file() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn load_mlp(dir: &std::path::Path) -> LayerWeights {
+    let entries = read_dofw(dir.join("mlp_weights.dofw")).expect("weights readable");
+    entries_to_mlp(&entries)
+}
+
+fn load_coeff(dir: &std::path::Path, name: &str) -> Tensor {
+    let entries = read_dofw(dir.join(format!("coeff_mlp_{name}.dofw"))).expect("coeff");
+    entries[0].tensor.clone()
+}
+
+/// Engine-vs-engine on the *exported* weights (no XLA needed beyond files).
+#[test]
+fn rust_engines_agree_on_exported_weights() {
+    let Some(dir) = artifacts_dir() else { return };
+    let layers = load_mlp(&dir);
+    let graph = mlp_graph(&layers, Act::Tanh);
+    let mut rng = Xoshiro256::new(42);
+    let x = Tensor::randn(&[4, 64], &mut rng);
+    for name in ["elliptic", "lowrank", "general"] {
+        let a = load_coeff(&dir, name);
+        let op = Operator::from_matrix(a, name);
+        let dof = op.dof_engine().compute(&graph, &x);
+        let hes = op.hessian_engine().compute(&graph, &x);
+        for b in 0..4 {
+            let dv = dof.operator_values.at(b, 0);
+            let hv = hes.operator_values.at(b, 0);
+            assert!(
+                (dv - hv).abs() < 1e-6 * hv.abs().max(1.0),
+                "{name} b={b}: {dv} vs {hv}"
+            );
+        }
+    }
+}
+
+/// The real cross-language check: XLA artifact vs Rust engine numerics.
+#[test]
+fn xla_artifacts_match_rust_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::open(&dir).expect("registry");
+    let mut exec = Executor::cpu().expect("PJRT cpu client");
+    let layers = load_mlp(&dir);
+    let graph = mlp_graph(&layers, Act::Tanh);
+
+    let mut rng = Xoshiro256::new(7);
+    let batch = reg.batch_of("dof_mlp_elliptic").unwrap_or(32);
+    let xf: Vec<f32> = (0..batch * 64).map(|_| rng.normal() as f32).collect();
+    let xd = Tensor::from_vec(
+        &[batch, 64],
+        xf.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
+    );
+
+    for name in ["elliptic", "lowrank", "general"] {
+        let a = load_coeff(&dir, name);
+        let op = Operator::from_matrix(a, name);
+        let rust = op.dof_engine().compute(&graph, &xd);
+
+        for artifact in [format!("dof_mlp_{name}"), format!("hessian_mlp_{name}")] {
+            exec.load(&artifact, &reg.path(&artifact).unwrap()).unwrap();
+            let outs = exec
+                .run_f32(&artifact, &[(&xf, &[batch, 64])])
+                .unwrap_or_else(|e| panic!("running {artifact}: {e:#}"));
+            let (phi, lphi) = (&outs[0], &outs[1]);
+            assert_eq!(phi.len(), batch);
+            assert_eq!(lphi.len(), batch);
+            for b in 0..batch {
+                let pv = rust.values.at(b, 0);
+                assert!(
+                    (phi[b] as f64 - pv).abs() < 1e-3 * pv.abs().max(1.0),
+                    "{artifact} phi[{b}]: xla {} vs rust {pv}",
+                    phi[b]
+                );
+                let lv = rust.operator_values.at(b, 0);
+                // f32 second derivatives of an 8-layer-deep f32 graph:
+                // allow 1e-2 relative.
+                assert!(
+                    (lphi[b] as f64 - lv).abs() < 1e-2 * lv.abs().max(1.0),
+                    "{artifact} lphi[{b}]: xla {} vs rust {lv}",
+                    lphi[b]
+                );
+            }
+        }
+    }
+}
+
+/// The PINN train-step artifact must produce a finite loss and a gradient
+/// that decreases the loss when applied (one SGD step).
+#[test]
+fn pinn_step_artifact_trains() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::open(&dir).expect("registry");
+    let mut exec = Executor::cpu().expect("client");
+    exec.load("pinn_heat_step", &reg.path("pinn_heat_step").unwrap())
+        .unwrap();
+
+    let theta_entries = read_dofw(dir.join("pinn_heat_theta0.dofw")).unwrap();
+    let mut theta: Vec<f32> = theta_entries[0]
+        .tensor
+        .data()
+        .iter()
+        .map(|&v| v as f32)
+        .collect();
+    let p = theta.len();
+
+    let mut rng = Xoshiro256::new(5);
+    let batch = reg.batch_of("pinn_heat_step").unwrap_or(128);
+    let x: Vec<f32> = (0..batch * 3).map(|_| rng.next_f64() as f32).collect();
+
+    let run = |exec: &Executor, theta: &[f32]| -> (f32, Vec<f32>) {
+        let outs = exec
+            .run_f32("pinn_heat_step", &[(theta, &[p]), (&x, &[batch, 3])])
+            .expect("step runs");
+        (outs[0][0], outs[1].clone())
+    };
+    let (loss0, grad) = run(&exec, &theta);
+    assert!(loss0.is_finite() && loss0 > 0.0, "loss0 = {loss0}");
+    assert_eq!(grad.len(), p);
+    assert!(grad.iter().all(|g| g.is_finite()));
+
+    // One gradient step on the same batch must reduce the loss.
+    let gnorm: f32 = grad.iter().map(|g| g * g).sum::<f32>().sqrt();
+    let lr = 0.05 / gnorm.max(1e-6);
+    for (t, g) in theta.iter_mut().zip(&grad) {
+        *t -= lr * g;
+    }
+    let (loss1, _) = run(&exec, &theta);
+    assert!(
+        loss1 < loss0,
+        "gradient step should reduce loss: {loss0} -> {loss1}"
+    );
+}
+
+/// Sparse-architecture artifacts: DOF (structurally sparse) vs the dense
+/// Hessian artifact on identical inputs.
+#[test]
+fn sparse_artifacts_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::open(&dir).expect("registry");
+    if reg.path("hessian_sparse_general").is_err() {
+        eprintln!("skipping: hessian_sparse_general not built");
+        return;
+    }
+    let mut exec = Executor::cpu().expect("client");
+    let batch = reg.batch_of("dof_sparse_general").unwrap_or(32);
+    let mut rng = Xoshiro256::new(9);
+    let x: Vec<f32> = (0..batch * 64)
+        .map(|_| (0.4 * rng.normal()) as f32)
+        .collect();
+    for name in ["dof_sparse_general", "hessian_sparse_general"] {
+        exec.load(name, &reg.path(name).unwrap()).unwrap();
+    }
+    let dof = exec
+        .run_f32("dof_sparse_general", &[(&x, &[batch, 64])])
+        .unwrap();
+    let hes = exec
+        .run_f32("hessian_sparse_general", &[(&x, &[batch, 64])])
+        .unwrap();
+    for b in 0..batch {
+        assert!(
+            (dof[0][b] - hes[0][b]).abs() < 1e-3 * hes[0][b].abs().max(1.0),
+            "phi[{b}]: {} vs {}",
+            dof[0][b],
+            hes[0][b]
+        );
+        assert!(
+            (dof[1][b] - hes[1][b]).abs() < 2e-2 * hes[1][b].abs().max(1.0),
+            "lphi[{b}]: {} vs {}",
+            dof[1][b],
+            hes[1][b]
+        );
+    }
+}
