@@ -26,6 +26,7 @@ fn main() {
             layers: 3,
             block_out: 8,
             batch: 2,
+            threads: 1,
             seed: 7,
             bench: BenchConfig {
                 warmup_iters: 1,

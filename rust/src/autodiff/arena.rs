@@ -1,0 +1,301 @@
+//! Tangent arena: a reusable buffer pool for the engines' per-node tensors.
+//!
+//! The DOF pass allocates a fresh `(v, g, s)` tuple per graph node and the
+//! liveness rule (eq. 24) frees it a few nodes later — on an 8-layer MLP
+//! that is hundreds of multi-megabyte allocator round-trips per batch. The
+//! arena breaks the churn: freed buffers are parked in a size-bucketed free
+//! list and handed back to the next allocation of a compatible size —
+//! zeroed by default ([`TangentArena::take`]), or as-is for destinations
+//! the engine fully overwrites ([`TangentArena::take_scratch`], skipping
+//! the memset on the hottest buffers) — so a steady-state engine pass
+//! performs **no heap allocation** for tangent storage after its first
+//! iteration.
+//!
+//! Buffers are keyed by *capacity* (a `BTreeMap` bucket per capacity) and an
+//! allocation takes the smallest parked buffer that fits, so the pool also
+//! serves mixed shapes (e.g. the `[batch·(t+2), d]` stacked GEMM input next
+//! to `[batch, d]` value rows).
+//!
+//! The arena is **accounting-neutral**: [`crate::autodiff::PeakTracker`] is
+//! driven by the engines' logical alloc/free events, which do not change
+//! when the backing store is recycled — the Theorem 2.2 `M₁`/`M₂`
+//! measurements are bit-identical with or without pooling (asserted by
+//! `rust/tests/parallel_determinism.rs`).
+//!
+//! Serial engine passes use the calling thread's arena
+//! ([`with_thread_arena`]); sharded parallel passes check arenas out of a
+//! process-wide depot ([`with_pooled_arena`]) instead, because pool workers
+//! are fresh scoped threads whose thread-locals die with each parallel
+//! region — only the depot preserves the warmed pools across regions. In
+//! both cases no lock sits inside the per-node hot path; the depot is
+//! touched twice per *shard*.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::tensor::Tensor;
+
+use super::forward_jacobian::TangentBatch;
+
+/// Size-bucketed free list of `f64` buffers.
+#[derive(Debug, Default)]
+pub struct TangentArena {
+    /// capacity → parked buffers of exactly that capacity.
+    free: BTreeMap<usize, Vec<Vec<f64>>>,
+    hits: u64,
+    misses: u64,
+    recycled: u64,
+}
+
+/// Reuse counters (diagnostics and tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Allocations served from the free list.
+    pub hits: u64,
+    /// Allocations that fell through to the heap.
+    pub misses: u64,
+    /// Buffers returned to the pool.
+    pub recycled: u64,
+}
+
+impl TangentArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A zeroed buffer of exactly `len` elements, recycled when possible.
+    pub fn take(&mut self, len: usize) -> Vec<f64> {
+        match self.take_recycled(len) {
+            Some(mut buf) => {
+                buf.clear();
+                buf.resize(len, 0.0);
+                buf
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// A buffer of exactly `len` elements **without zeroing** the recycled
+    /// prefix — the cheap path for buffers the caller fully overwrites
+    /// before reading (the Linear stack/copy targets, activation outputs).
+    /// Never hand one to an accumulating consumer.
+    pub fn take_scratch(&mut self, len: usize) -> Vec<f64> {
+        match self.take_recycled(len) {
+            Some(mut buf) => {
+                // Stale values may remain in 0..min(old_len, len); only the
+                // grown tail is zero-filled (no uninitialized memory).
+                buf.resize(len, 0.0);
+                buf
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// Pop the smallest parked buffer with capacity ≥ `len`, counting
+    /// hits/misses. `None` for len 0 or an empty-fit pool.
+    fn take_recycled(&mut self, len: usize) -> Option<Vec<f64>> {
+        if len == 0 {
+            return None;
+        }
+        if let Some((&cap, _)) = self.free.range(len..).next() {
+            let bucket = self.free.get_mut(&cap).expect("bucket exists");
+            let buf = bucket.pop().expect("bucket non-empty");
+            if bucket.is_empty() {
+                self.free.remove(&cap);
+            }
+            self.hits += 1;
+            return Some(buf);
+        }
+        self.misses += 1;
+        None
+    }
+
+    /// Park a buffer for reuse.
+    pub fn put(&mut self, buf: Vec<f64>) {
+        let cap = buf.capacity();
+        if cap == 0 {
+            return;
+        }
+        self.recycled += 1;
+        self.free.entry(cap).or_default().push(buf);
+    }
+
+    /// A zeroed tensor backed by recycled storage.
+    pub fn tensor(&mut self, dims: &[usize]) -> Tensor {
+        let n: usize = dims.iter().product();
+        Tensor::from_vec(dims, self.take(n))
+    }
+
+    /// A tensor backed by recycled storage **without zeroing** (see
+    /// [`Self::take_scratch`]): only for fully-overwritten destinations.
+    pub fn tensor_scratch(&mut self, dims: &[usize]) -> Tensor {
+        let n: usize = dims.iter().product();
+        Tensor::from_vec(dims, self.take_scratch(n))
+    }
+
+    /// A tangent block backed by recycled storage **without zeroing** (see
+    /// [`Self::take_scratch`]): only for fully-overwritten destinations.
+    pub fn tangent_scratch(&mut self, batch: usize, t: usize, dim: usize) -> TangentBatch {
+        TangentBatch {
+            data: self.tensor_scratch(&[batch * t, dim]),
+            batch,
+            t,
+        }
+    }
+
+    /// Recycle a tensor's storage.
+    pub fn put_tensor(&mut self, t: Tensor) {
+        self.put(t.into_vec());
+    }
+
+    /// A zeroed tangent block backed by recycled storage.
+    pub fn tangent(&mut self, batch: usize, t: usize, dim: usize) -> TangentBatch {
+        TangentBatch {
+            data: self.tensor(&[batch * t, dim]),
+            batch,
+            t,
+        }
+    }
+
+    /// Recycle a tangent block's storage.
+    pub fn put_tangent(&mut self, g: TangentBatch) {
+        self.put_tensor(g.data);
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            hits: self.hits,
+            misses: self.misses,
+            recycled: self.recycled,
+        }
+    }
+
+    /// Number of parked buffers.
+    pub fn pooled(&self) -> usize {
+        self.free.values().map(Vec::len).sum()
+    }
+}
+
+thread_local! {
+    static THREAD_ARENA: RefCell<TangentArena> = RefCell::new(TangentArena::new());
+}
+
+/// Run `f` with the calling thread's persistent arena (serial engine paths).
+pub fn with_thread_arena<R>(f: impl FnOnce(&mut TangentArena) -> R) -> R {
+    THREAD_ARENA.with(|a| f(&mut a.borrow_mut()))
+}
+
+/// Cap on parked depot arenas — bounds retention at roughly the maximum
+/// number of concurrently running shard workers ever observed.
+const DEPOT_CAP: usize = 64;
+
+static DEPOT: Mutex<Vec<TangentArena>> = Mutex::new(Vec::new());
+
+/// Check an arena out of the process-wide depot for the duration of `f`,
+/// then park it again. Shard workers use this instead of a thread-local:
+/// scoped worker threads die with their parallel region, so thread-local
+/// arenas would start cold every region, re-heap-allocating the whole
+/// working set each bench rep / server batch.
+pub fn with_pooled_arena<R>(f: impl FnOnce(&mut TangentArena) -> R) -> R {
+    let mut arena = DEPOT
+        .lock()
+        .expect("arena depot poisoned")
+        .pop()
+        .unwrap_or_default();
+    let out = f(&mut arena);
+    let mut depot = DEPOT.lock().expect("arena depot poisoned");
+    if depot.len() < DEPOT_CAP {
+        depot.push(arena);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_roundtrip_reuses() {
+        let mut a = TangentArena::new();
+        let b1 = a.take(100);
+        assert_eq!(a.stats().misses, 1);
+        a.put(b1);
+        let b2 = a.take(64); // smaller fits in the 100-cap buffer
+        assert_eq!(a.stats().hits, 1);
+        assert_eq!(b2.len(), 64);
+        assert!(b2.iter().all(|&v| v == 0.0));
+        assert_eq!(a.pooled(), 0);
+    }
+
+    #[test]
+    fn recycled_buffers_are_zeroed() {
+        let mut a = TangentArena::new();
+        let mut t = a.tensor(&[4, 4]);
+        t.data_mut().iter_mut().for_each(|v| *v = 7.0);
+        a.put_tensor(t);
+        let t2 = a.tensor(&[2, 8]);
+        assert!(t2.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn scratch_skips_zeroing_but_sizes_exactly() {
+        let mut a = TangentArena::new();
+        let mut t = a.tensor(&[4, 4]);
+        t.data_mut().iter_mut().for_each(|v| *v = 9.0);
+        a.put_tensor(t);
+        let s = a.tensor_scratch(&[2, 4]);
+        assert_eq!(s.numel(), 8);
+        // Stale contents are allowed — that is the point — but a grown
+        // request must still zero-fill its tail past any recycled prefix.
+        let mut a2 = TangentArena::new();
+        let mut parked = Vec::with_capacity(12);
+        parked.extend_from_slice(&[7.0; 4]);
+        a2.put(parked);
+        let big = a2.take_scratch(10);
+        assert_eq!(big.len(), 10);
+        assert!(big[..4].iter().all(|&v| v == 7.0), "stale prefix kept");
+        assert!(big[4..].iter().all(|&v| v == 0.0), "grown tail zeroed");
+    }
+
+    #[test]
+    fn oversized_requests_fall_through() {
+        let mut a = TangentArena::new();
+        a.put(vec![0.0; 8]);
+        let b = a.take(1000);
+        assert_eq!(b.len(), 1000);
+        assert_eq!(a.stats().misses, 1);
+        assert_eq!(a.pooled(), 1); // small buffer still parked
+    }
+
+    #[test]
+    fn pooled_arena_roundtrip() {
+        // The depot is process-global (shared with concurrently running
+        // tests), so assert behaviour, not counters: buffers survive one
+        // checkout and are served zeroed on the next.
+        with_pooled_arena(|a| {
+            let mut t = a.tensor(&[8, 8]);
+            t.data_mut()[0] = 3.5;
+            a.put_tensor(t);
+        });
+        let ok = with_pooled_arena(|a| {
+            let t = a.tensor(&[8, 8]);
+            t.data().iter().all(|&v| v == 0.0)
+        });
+        assert!(ok);
+    }
+
+    #[test]
+    fn thread_arena_is_reusable() {
+        let first = with_thread_arena(|a| {
+            let b = a.take(32);
+            a.put(b);
+            a.stats()
+        });
+        let second = with_thread_arena(|a| {
+            let _ = a.take(32);
+            a.stats()
+        });
+        assert!(second.hits > first.hits);
+    }
+}

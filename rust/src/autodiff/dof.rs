@@ -31,8 +31,10 @@
 
 use crate::graph::{Graph, Op};
 use crate::linalg::LdlDecomposition;
-use crate::tensor::{matmul_nt, Tensor};
+use crate::parallel::{self, Pool};
+use crate::tensor::{matmul_nt_into, Tensor};
 
+use super::arena::{with_pooled_arena, with_thread_arena, TangentArena};
 use super::forward_jacobian::TangentBatch;
 use super::memory::PeakTracker;
 use super::Cost;
@@ -121,6 +123,66 @@ impl DofEngine {
 
     /// Evaluate `L[φ]` on a batch `x: [batch, N]` in one forward pass.
     pub fn compute(&self, graph: &Graph, x: &Tensor) -> DofResult {
+        self.compute_with_arena(graph, x, &mut TangentArena::new())
+    }
+
+    /// [`Self::compute`] sharded across the process-wide pool (`--threads` /
+    /// `DOF_THREADS`) in [`parallel::DEFAULT_SHARD_ROWS`]-row chunks.
+    pub fn compute_parallel(&self, graph: &Graph, x: &Tensor) -> DofResult {
+        self.compute_sharded(graph, x, &parallel::global(), parallel::DEFAULT_SHARD_ROWS)
+    }
+
+    /// Evaluate `L[φ]` with the batch partitioned into fixed `shard_rows`-row
+    /// chunks executed across `pool`, each worker using a [`TangentArena`]
+    /// checked out of the process-wide depot (warm across calls).
+    ///
+    /// Determinism contract: chunk boundaries depend only on the batch size
+    /// and `shard_rows` — never on the pool width — and shard results are
+    /// reduced in shard order, so `values`, `operator_values`, `cost`, and
+    /// `peak_tangent_bytes` (the per-shard maximum) are bit-identical across
+    /// thread counts. Per-row arithmetic is independent of the rows it is
+    /// batched with, so `values`/`operator_values` also match the unsharded
+    /// [`Self::compute`] exactly.
+    pub fn compute_sharded(
+        &self,
+        graph: &Graph,
+        x: &Tensor,
+        pool: &Pool,
+        shard_rows: usize,
+    ) -> DofResult {
+        let batch = x.dims()[0];
+        let n = x.dims()[1];
+        let ranges = parallel::split_rows(batch, shard_rows);
+        if ranges.len() <= 1 {
+            let serial = || with_thread_arena(|arena| self.compute_with_arena(graph, x, arena));
+            // A 1-thread pool means genuinely serial, including the GEMMs.
+            if pool.threads() == 1 {
+                return parallel::with_serial_guard(serial);
+            }
+            return serial();
+        }
+        let shards = pool.run_sharded(ranges, |_, r| {
+            let rows = r.end - r.start;
+            let xs = Tensor::from_vec(&[rows, n], x.data()[r.start * n..r.end * n].to_vec());
+            // Depot (not thread-local) arenas: pool workers are fresh scoped
+            // threads per region, so only a process-wide depot preserves the
+            // warmed buffer pools across bench reps / server batches.
+            with_pooled_arena(|arena| self.compute_with_arena(graph, &xs, arena))
+        });
+        merge_dof_shards(shards, batch)
+    }
+
+    /// [`Self::compute`] with caller-supplied tangent storage. The arena
+    /// recycles every per-node buffer the liveness pass frees, so repeated
+    /// calls (training steps, bench reps, shards on one worker) run
+    /// allocation-free at steady state. Accounting is unaffected: the
+    /// [`PeakTracker`] counts logical tangent bytes, not allocator traffic.
+    pub fn compute_with_arena(
+        &self,
+        graph: &Graph,
+        x: &Tensor,
+        arena: &mut TangentArena,
+    ) -> DofResult {
         let n = graph.input_dim();
         assert_eq!(self.ldl.n, n, "decomposition N != graph input dim");
         let batch = x.dims()[0];
@@ -138,13 +200,12 @@ impl DofEngine {
         let mut states: Vec<Option<NodeState>> = (0..graph.len()).map(|_| None).collect();
         let mut in_off = 0usize;
         let out_id = graph.output();
-        let mut result: Option<(Tensor, TangentBatch, Vec<usize>, Tensor)> = None;
 
         for j in 0..graph.len() {
             let node = graph.node(j);
             let st = match &node.op {
                 Op::Input { dim } => {
-                    let mut v = Tensor::zeros(&[batch, *dim]);
+                    let mut v = arena.tensor(&[batch, *dim]);
                     for b in 0..batch {
                         v.row_mut(b)
                             .copy_from_slice(&x.row(b)[in_off..in_off + dim]);
@@ -163,14 +224,14 @@ impl DofEngine {
                         (0..r).collect()
                     };
                     let t = active.len();
-                    let mut g = TangentBatch::zeros(batch, t, *dim);
+                    let mut g = arena.tangent(batch, t, *dim);
                     for b in 0..batch {
                         for (kk, &k) in active.iter().enumerate() {
                             g.row_mut(b, kk)
                                 .copy_from_slice(&self.ldl.l.row(k)[in_off..in_off + dim]);
                         }
                     }
-                    let mut s = Tensor::zeros(&[batch, *dim]);
+                    let mut s = arena.tensor(&[batch, *dim]);
                     if let Some(ref bv) = self.b {
                         for b in 0..batch {
                             s.row_mut(b)
@@ -189,57 +250,57 @@ impl DofEngine {
                     // and run ONE GEMM (one W transpose, full micro-kernel
                     // utilization on the small v/s rows).
                     let rows = batch * (t + 2);
-                    let mut stacked = Tensor::zeros(&[rows, in_d]);
+                    // Scratch (non-zeroed) storage: every element is written
+                    // by the copies below before any read. The GEMM output
+                    // stays zero-initialized — matmul_nt_into accumulates.
+                    let mut stacked = arena.tensor_scratch(&[rows, in_d]);
                     {
                         let sd = stacked.data_mut();
                         sd[..batch * in_d].copy_from_slice(p.v.data());
                         sd[batch * in_d..2 * batch * in_d].copy_from_slice(p.s.data());
                         sd[2 * batch * in_d..].copy_from_slice(p.g.data.data());
                     }
-                    let out = matmul_nt(&stacked, weight);
+                    let mut out = arena.tensor(&[rows, out_d]);
+                    matmul_nt_into(stacked.data(), weight.data(), out.data_mut(), rows, in_d, out_d);
                     cost.muls += (rows * out_d * in_d) as u64;
                     cost.adds += (batch * t * out_d * in_d) as u64;
-                    let od = out.data();
-                    let mut v = Tensor::from_vec(
-                        &[batch, out_d],
-                        od[..batch * out_d].to_vec(),
-                    );
+                    let mut v = arena.tensor_scratch(&[batch, out_d]);
+                    let mut s = arena.tensor_scratch(&[batch, out_d]);
+                    let mut g = arena.tangent_scratch(batch, t, out_d);
+                    {
+                        let od = out.data();
+                        v.data_mut().copy_from_slice(&od[..batch * out_d]);
+                        s.data_mut()
+                            .copy_from_slice(&od[batch * out_d..2 * batch * out_d]);
+                        g.data.data_mut().copy_from_slice(&od[2 * batch * out_d..]);
+                    }
                     for b in 0..batch {
                         for (o, &bi) in v.row_mut(b).iter_mut().zip(bias.iter()) {
                             *o += bi;
                         }
                     }
-                    let s = Tensor::from_vec(
-                        &[batch, out_d],
-                        od[batch * out_d..2 * batch * out_d].to_vec(),
-                    );
-                    let g = TangentBatch {
-                        data: Tensor::from_vec(
-                            &[batch * t, out_d],
-                            od[2 * batch * out_d..].to_vec(),
-                        ),
-                        batch,
-                        t,
-                    };
-                    NodeState {
-                        v,
-                        g,
-                        active: p.active.clone(),
-                        s,
-                    }
+                    let active = p.active.clone();
+                    arena.put_tensor(stacked);
+                    arena.put_tensor(out);
+                    NodeState { v, g, active, s }
                 }
                 Op::Activation { act } => {
                     let p = states[node.inputs[0]].as_ref().unwrap();
                     let d = node.dim;
                     let t = p.active.len();
                     let h = &p.v;
-                    let v = h.map(|x| act.f(x));
+                    // Scratch (non-zeroed): v, g, and s are each assigned in
+                    // full below (every row, every component) before reads.
+                    let mut v = arena.tensor_scratch(&[batch, d]);
+                    for (dst, &src) in v.data_mut().iter_mut().zip(h.data()) {
+                        *dst = act.f(src);
+                    }
                     // Perf (§Perf): single fused pass per tangent row —
                     // read g once, accumulate the signed square into quad
                     // and write the σ'-scaled value, instead of separate
                     // quad / scale sweeps over the (large) tangent buffer.
-                    let mut g = TangentBatch::zeros(batch, t, d);
-                    let mut s = Tensor::zeros(&[batch, d]);
+                    let mut g = arena.tangent_scratch(batch, t, d);
+                    let mut s = arena.tensor_scratch(&[batch, d]);
                     for b in 0..batch {
                         let hrow = h.row(b);
                         let df: Vec<f64> = hrow.iter().map(|&x| act.df(x)).collect();
@@ -274,13 +335,13 @@ impl DofEngine {
                 Op::Slice { start, len } => {
                     let p = states[node.inputs[0]].as_ref().unwrap();
                     let t = p.active.len();
-                    let mut v = Tensor::zeros(&[batch, *len]);
-                    let mut s = Tensor::zeros(&[batch, *len]);
+                    let mut v = arena.tensor(&[batch, *len]);
+                    let mut s = arena.tensor(&[batch, *len]);
                     for b in 0..batch {
                         v.row_mut(b).copy_from_slice(&p.v.row(b)[*start..*start + *len]);
                         s.row_mut(b).copy_from_slice(&p.s.row(b)[*start..*start + *len]);
                     }
-                    let mut g = TangentBatch::zeros(batch, t, *len);
+                    let mut g = arena.tangent(batch, t, *len);
                     for row in 0..batch * t {
                         g.data
                             .row_mut(row)
@@ -289,7 +350,8 @@ impl DofEngine {
                     // Re-scan for rows that became all-zero after slicing
                     // (e.g. slicing one block out of a block-diagonal seed).
                     let (g, active) = if self.exploit_sparsity {
-                        compact_zero_rows(g, &p.active)
+                        let active = p.active.clone();
+                        compact_zero_rows(g, &active, arena)
                     } else {
                         (g, p.active.clone())
                     };
@@ -307,9 +369,9 @@ impl DofEngine {
                     let t = union.len();
                     let aligned: Vec<TangentBatch> = parents
                         .iter()
-                        .map(|p| expand_to(&p.g, &p.active, &union, batch))
+                        .map(|p| expand_to(&p.g, &p.active, &union, batch, arena))
                         .collect();
-                    match &node.op {
+                    let st = match &node.op {
                         Op::Add => {
                             let mut v = parents[0].v.clone();
                             let mut s = parents[0].s.clone();
@@ -328,9 +390,9 @@ impl DofEngine {
                             }
                         }
                         Op::Concat => {
-                            let mut v = Tensor::zeros(&[batch, node.dim]);
-                            let mut s = Tensor::zeros(&[batch, node.dim]);
-                            let mut g = TangentBatch::zeros(batch, t, node.dim);
+                            let mut v = arena.tensor(&[batch, node.dim]);
+                            let mut s = arena.tensor(&[batch, node.dim]);
+                            let mut g = arena.tangent(batch, t, node.dim);
                             for b in 0..batch {
                                 let mut off = 0;
                                 for p in &parents {
@@ -360,8 +422,8 @@ impl DofEngine {
                                 v = v.mul(&p.v);
                                 cost.muls += v.numel() as u64;
                             }
-                            let mut g = TangentBatch::zeros(batch, t, d);
-                            let mut s = Tensor::zeros(&[batch, d]);
+                            let mut g = arena.tangent(batch, t, d);
+                            let mut s = arena.tensor(&[batch, d]);
                             for b in 0..batch {
                                 let prows: Vec<&[f64]> =
                                     parents.iter().map(|p| p.v.row(b)).collect();
@@ -418,18 +480,24 @@ impl DofEngine {
                             NodeState { v, g, active: union, s }
                         }
                         _ => unreachable!(),
+                    };
+                    // The union-aligned scratch tangents are dead now; park
+                    // their storage instead of dropping it.
+                    for al in aligned {
+                        arena.put_tangent(al);
                     }
+                    st
                 }
                 Op::SumReduce => {
                     let p = states[node.inputs[0]].as_ref().unwrap();
                     let t = p.active.len();
-                    let mut v = Tensor::zeros(&[batch, 1]);
-                    let mut s = Tensor::zeros(&[batch, 1]);
+                    let mut v = arena.tensor(&[batch, 1]);
+                    let mut s = arena.tensor(&[batch, 1]);
                     for b in 0..batch {
                         v.set(b, 0, p.v.row(b).iter().sum());
                         s.set(b, 0, p.s.row(b).iter().sum());
                     }
-                    let mut g = TangentBatch::zeros(batch, t, 1);
+                    let mut g = arena.tangent(batch, t, 1);
                     for row in 0..batch * t {
                         g.data.data_mut()[row] = p.g.data.row(row).iter().sum();
                     }
@@ -452,16 +520,22 @@ impl DofEngine {
                 }
                 if let Some(st) = states[i].take() {
                     peak.free(st.g.bytes());
+                    // Logical free recorded above; the storage itself is
+                    // parked for the next node's allocations.
+                    arena.put_tangent(st.g);
+                    arena.put_tensor(st.v);
+                    arena.put_tensor(st.s);
                 }
-            }
-            if j == out_id {
-                let st = states[j].as_ref().unwrap();
-                result = Some((st.v.clone(), st.g.clone(), st.active.clone(), st.s.clone()));
             }
         }
 
-        let (vals, out_tangent, out_active, mut op_vals) =
-            result.expect("graph has an output node");
+        let out_state = states[out_id].take().expect("graph has an output node");
+        let NodeState {
+            v: vals,
+            g: out_tangent,
+            active: out_active,
+            s: mut op_vals,
+        } = out_state;
         if let Some(c) = self.c {
             for b in 0..batch {
                 for o in 0..op_vals.dims()[1] {
@@ -500,12 +574,13 @@ fn expand_to(
     active: &[usize],
     union: &[usize],
     batch: usize,
+    arena: &mut TangentArena,
 ) -> TangentBatch {
     if active.len() == union.len() && active == union {
         return g.clone();
     }
     let d = g.dim();
-    let mut out = TangentBatch::zeros(batch, union.len(), d);
+    let mut out = arena.tangent(batch, union.len(), d);
     // Map each own-row to its union position.
     for (kk, &k) in active.iter().enumerate() {
         let pos = union.binary_search(&k).expect("active ⊆ union");
@@ -518,7 +593,11 @@ fn expand_to(
 
 /// Drop tangent rows that are exactly zero across the batch, returning the
 /// compacted tangent and its new active set.
-fn compact_zero_rows(g: TangentBatch, active: &[usize]) -> (TangentBatch, Vec<usize>) {
+fn compact_zero_rows(
+    g: TangentBatch,
+    active: &[usize],
+    arena: &mut TangentArena,
+) -> (TangentBatch, Vec<usize>) {
     let t = active.len();
     let batch = g.batch;
     let d = g.dim();
@@ -538,7 +617,7 @@ fn compact_zero_rows(g: TangentBatch, active: &[usize]) -> (TangentBatch, Vec<us
     if keep.len() == t {
         return (g, active.to_vec());
     }
-    let mut out = TangentBatch::zeros(batch, keep.len(), d);
+    let mut out = arena.tangent(batch, keep.len(), d);
     let mut new_active = Vec::with_capacity(keep.len());
     for (nk, &kk) in keep.iter().enumerate() {
         new_active.push(active[kk]);
@@ -546,7 +625,58 @@ fn compact_zero_rows(g: TangentBatch, active: &[usize]) -> (TangentBatch, Vec<us
             out.row_mut(b, nk).copy_from_slice(g.row(b, kk));
         }
     }
+    arena.put_tangent(g);
     (out, new_active)
+}
+
+/// Stitch per-shard results back into one batch-ordered [`DofResult`].
+///
+/// Values and operator values are concatenated in shard order; the output
+/// tangent is re-laid-out onto the union of the shards' active row sets
+/// (shards of a block-sparse batch may have compacted different rows). The
+/// cost is the exact sum over shards and the peak is the per-shard maximum —
+/// the quantity Theorem 2.2 bounds for a shard-sized batch.
+fn merge_dof_shards(shards: Vec<DofResult>, batch: usize) -> DofResult {
+    let out_d = shards[0].values.dims()[1];
+    let mut union: Vec<usize> = Vec::new();
+    for s in &shards {
+        union.extend_from_slice(&s.out_active);
+    }
+    union.sort_unstable();
+    union.dedup();
+    let t = union.len();
+
+    let mut values = Tensor::zeros(&[batch, out_d]);
+    let mut op_vals = Tensor::zeros(&[batch, out_d]);
+    let mut out_tangent = TangentBatch::zeros(batch, t, out_d);
+    let mut cost = Cost::zero();
+    let mut peak = 0u64;
+    let mut row = 0usize;
+    for s in shards {
+        let rows = s.values.dims()[0];
+        values.data_mut()[row * out_d..(row + rows) * out_d].copy_from_slice(s.values.data());
+        op_vals.data_mut()[row * out_d..(row + rows) * out_d]
+            .copy_from_slice(s.operator_values.data());
+        for b in 0..rows {
+            for (kk, &kglob) in s.out_active.iter().enumerate() {
+                let pos = union.binary_search(&kglob).expect("active ⊆ union");
+                out_tangent
+                    .row_mut(row + b, pos)
+                    .copy_from_slice(s.out_tangent.row(b, kk));
+            }
+        }
+        cost += s.cost;
+        peak = peak.max(s.peak_tangent_bytes);
+        row += rows;
+    }
+    DofResult {
+        values,
+        out_tangent,
+        out_active: union,
+        operator_values: op_vals,
+        cost,
+        peak_tangent_bytes: peak,
+    }
 }
 
 #[cfg(test)]

@@ -16,6 +16,7 @@
 //! method's peak memory exceeds `N·|V|` (Appendix D).
 
 use crate::graph::{Graph, Op};
+use crate::parallel::{self, Pool};
 use crate::tensor::{matmul, Tensor};
 
 use super::backward::backward;
@@ -69,6 +70,47 @@ impl HessianEngine {
         self.b = b;
         self.c = c;
         self
+    }
+
+    /// [`Self::compute`] sharded across the process-wide pool (`--threads` /
+    /// `DOF_THREADS`) in [`parallel::DEFAULT_SHARD_ROWS`]-row chunks.
+    pub fn compute_parallel(&self, graph: &Graph, x: &Tensor) -> HessianResult {
+        self.compute_sharded(graph, x, &parallel::global(), parallel::DEFAULT_SHARD_ROWS)
+    }
+
+    /// Evaluate `L[φ]` with the batch partitioned into fixed `shard_rows`-row
+    /// chunks executed across `pool`. Same determinism contract as
+    /// [`crate::autodiff::DofEngine::compute_sharded`]: shard boundaries are
+    /// thread-count-independent, reduction is shard-ordered, and the Hessian
+    /// method's per-row passes (forward Jacobian, reverse adjoints, the
+    /// eq. 14 sweep) are row-independent, so results are bit-identical
+    /// across thread counts.
+    pub fn compute_sharded(
+        &self,
+        graph: &Graph,
+        x: &Tensor,
+        pool: &Pool,
+        shard_rows: usize,
+    ) -> HessianResult {
+        let batch = x.dims()[0];
+        let nin = x.dims()[1];
+        let ranges = parallel::split_rows(batch, shard_rows);
+        if ranges.len() <= 1 {
+            // A 1-thread pool means genuinely serial, including the GEMMs.
+            if pool.threads() == 1 {
+                return parallel::with_serial_guard(|| self.compute(graph, x));
+            }
+            return self.compute(graph, x);
+        }
+        let shards = pool.run_sharded(ranges, |_, r| {
+            let rows = r.end - r.start;
+            let xs = Tensor::from_vec(
+                &[rows, nin],
+                x.data()[r.start * nin..r.end * nin].to_vec(),
+            );
+            self.compute(graph, &xs)
+        });
+        merge_hessian_shards(shards, batch)
     }
 
     /// Evaluate `L[φ]` on a batch `x: [batch, N]` of points.
@@ -338,6 +380,41 @@ impl HessianEngine {
             cost,
             peak_tangent_bytes: peak.peak(),
         }
+    }
+}
+
+/// Stitch per-shard results back into one batch-ordered [`HessianResult`]:
+/// row-concatenated tensors, exact cost sum, per-shard peak maximum.
+fn merge_hessian_shards(shards: Vec<HessianResult>, batch: usize) -> HessianResult {
+    let out_d = shards[0].values.dims()[1];
+    let op_d = shards[0].operator_values.dims()[1];
+    let n = shards[0].gradient.dims()[1];
+    let mut values = Tensor::zeros(&[batch, out_d]);
+    let mut gradient = Tensor::zeros(&[batch, n]);
+    let mut hessian = Tensor::zeros(&[batch, n, n]);
+    let mut op_vals = Tensor::zeros(&[batch, op_d]);
+    let mut cost = Cost::zero();
+    let mut peak = 0u64;
+    let mut row = 0usize;
+    for s in shards {
+        let rows = s.values.dims()[0];
+        values.data_mut()[row * out_d..(row + rows) * out_d].copy_from_slice(s.values.data());
+        gradient.data_mut()[row * n..(row + rows) * n].copy_from_slice(s.gradient.data());
+        hessian.data_mut()[row * n * n..(row + rows) * n * n]
+            .copy_from_slice(s.hessian.data());
+        op_vals.data_mut()[row * op_d..(row + rows) * op_d]
+            .copy_from_slice(s.operator_values.data());
+        cost += s.cost;
+        peak = peak.max(s.peak_tangent_bytes);
+        row += rows;
+    }
+    HessianResult {
+        values,
+        gradient,
+        hessian,
+        operator_values: op_vals,
+        cost,
+        peak_tangent_bytes: peak,
     }
 }
 

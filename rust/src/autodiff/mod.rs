@@ -16,6 +16,20 @@
 //!   Appendix B) plus the closed-form cost of both methods.
 //! * [`memory`] — liveness-based peak-memory accounting (`τ(i)`, `C(j)` of
 //!   Appendix D).
+//! * [`arena`] — reusable tangent-buffer pool: the liveness-freed `(v, g, s)`
+//!   storage is recycled instead of returned to the allocator, so repeated
+//!   engine passes run allocation-free while the [`PeakTracker`] accounting
+//!   stays bit-identical.
+//!
+//! ### Parallel execution
+//!
+//! Both engines expose `compute_sharded` / `compute_parallel`: the batch is
+//! split into fixed 8-row shards ([`crate::parallel::DEFAULT_SHARD_ROWS`])
+//! executed across a scoped thread pool ([`crate::parallel::Pool`]), each
+//! worker running with an arena checked out of the process-wide depot
+//! ([`arena::with_pooled_arena`]). Shard boundaries depend only on the
+//! batch size and reduction is shard-ordered, so values, `L[φ]`, FLOP
+//! tallies, and per-shard peak bytes are bit-identical across thread counts.
 //!
 //! ### Op granularity and Appendix C
 //!
@@ -26,6 +40,7 @@
 //! pairs instead of `Σ_l N_l(N_l−1)` cross pairs, for both engines alike,
 //! so the comparison between methods stays apples-to-apples.
 
+pub mod arena;
 pub mod backward;
 pub mod dof;
 pub mod dof_tape;
@@ -34,6 +49,7 @@ pub mod forward_jacobian;
 pub mod hessian;
 pub mod memory;
 
+pub use arena::{ArenaStats, TangentArena};
 pub use dof::{DofEngine, DofResult};
 pub use flops::{CostModel, GraphCounts};
 pub use forward_jacobian::TangentBatch;

@@ -3,8 +3,11 @@
 //! [`Bencher`] runs a closure with warmup + repetitions and reports a
 //! [`Measurement`] (wall-clock summary + optional FLOP/byte annotations);
 //! [`table`] renders rows in the paper's Table 1/2 format
-//! (`Operator | Memory Hessian/DOF/ratio | Time Hessian/DOF/ratio`).
+//! (`Operator | Memory Hessian/DOF/ratio | Time Hessian/DOF/ratio`);
+//! [`report`] sweeps the batch × threads grid and emits the
+//! machine-readable `BENCH_table1.json` perf-trajectory file.
 
+pub mod report;
 pub mod table1;
 pub mod table2;
 

@@ -1,0 +1,190 @@
+//! Machine-readable perf reports: the batch × threads grid behind
+//! `BENCH_table1.json`, so future changes can track the perf trajectory
+//! without scraping terminal tables.
+//!
+//! The JSON is hand-rolled (no `serde` in the offline build) and carries,
+//! per grid cell, DOF and Hessian wall-clock plus the exact peak-tangent
+//! bytes and multiplication counts from the engines' own instrumentation.
+//!
+//! Produced by `dof bench grid [--batches 8,64,256 --threads-grid 1,2,4,8]`
+//! and by `cargo bench --bench table1_mlp`.
+
+use std::io::Write as _;
+
+use crate::nn::{Mlp, MlpSpec};
+use crate::operators::{CoeffSpec, Operator};
+use crate::parallel::{Pool, DEFAULT_SHARD_ROWS};
+use crate::tensor::Tensor;
+use crate::util::Xoshiro256;
+
+use super::table1::Table1Config;
+use super::Bencher;
+
+/// One (batch, threads) measurement of the Table-1 elliptic operator.
+#[derive(Debug, Clone)]
+pub struct GridCell {
+    pub batch: usize,
+    pub threads: usize,
+    pub dof_seconds: f64,
+    pub hessian_seconds: f64,
+    pub dof_peak_bytes: u64,
+    pub hessian_peak_bytes: u64,
+    pub dof_muls: u64,
+    pub hessian_muls: u64,
+}
+
+impl GridCell {
+    /// Hessian / DOF wall-clock ratio.
+    pub fn time_ratio(&self) -> f64 {
+        self.hessian_seconds / self.dof_seconds.max(1e-12)
+    }
+}
+
+/// Sweep the Table-1 MLP (elliptic full-rank operator) over a batch ×
+/// threads grid. The model, graph, and operator are built once; per cell
+/// the engines run through the same sharded path the CLI exposes.
+pub fn run_table1_grid(
+    cfg: &Table1Config,
+    batches: &[usize],
+    threads: &[usize],
+) -> Vec<GridCell> {
+    let model = Mlp::init(
+        MlpSpec {
+            in_dim: cfg.n,
+            hidden: cfg.hidden,
+            layers: cfg.layers,
+            out_dim: 1,
+            act: crate::graph::Act::Tanh,
+        },
+        cfg.seed,
+    );
+    let graph = model.to_graph();
+    let op = Operator::from_spec(CoeffSpec::EllipticGram {
+        n: cfg.n,
+        rank: cfg.n,
+        seed: cfg.seed,
+    });
+    let bencher = Bencher::new(cfg.bench);
+    let mut rng = Xoshiro256::new(cfg.seed ^ 0xBEEF);
+    let mut cells = Vec::with_capacity(batches.len() * threads.len());
+    // The cell's thread count must also govern the row-parallel GEMM, which
+    // consults the process-global pool (reached on single-shard batches
+    // where no worker suppression applies) — otherwise small-batch cells
+    // would be mislabeled. Restored after the sweep.
+    let ambient_threads = Pool::from_env().threads();
+    for &batch in batches {
+        let x = Tensor::randn(&[batch, cfg.n], &mut rng);
+        for &t in threads {
+            let pool = Pool::new(t.max(1));
+            crate::parallel::set_global_threads(t.max(1));
+            let dof_engine = op.dof_engine();
+            let dof = bencher.run(&format!("grid/dof/b{batch}t{t}"), || {
+                let r = dof_engine.compute_sharded(&graph, &x, &pool, DEFAULT_SHARD_ROWS);
+                std::hint::black_box(&r.operator_values);
+                (Some(r.cost.muls), Some(r.peak_tangent_bytes))
+            });
+            let hes_engine = op.hessian_engine();
+            let hes = bencher.run(&format!("grid/hessian/b{batch}t{t}"), || {
+                let r = hes_engine.compute_sharded(&graph, &x, &pool, DEFAULT_SHARD_ROWS);
+                std::hint::black_box(&r.operator_values);
+                (Some(r.cost.muls), Some(r.peak_tangent_bytes))
+            });
+            cells.push(GridCell {
+                batch,
+                threads: t.max(1),
+                dof_seconds: dof.seconds.median,
+                hessian_seconds: hes.seconds.median,
+                dof_peak_bytes: dof.peak_bytes.unwrap_or(0),
+                hessian_peak_bytes: hes.peak_bytes.unwrap_or(0),
+                dof_muls: dof.muls.unwrap_or(0),
+                hessian_muls: hes.muls.unwrap_or(0),
+            });
+        }
+    }
+    crate::parallel::set_global_threads(ambient_threads);
+    cells
+}
+
+/// Serialize a grid to the `BENCH_table1.json` schema.
+pub fn grid_json(cfg: &Table1Config, cells: &[GridCell]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"table1_mlp_grid\",\n");
+    s.push_str("  \"operator\": \"elliptic\",\n");
+    s.push_str(&format!(
+        "  \"config\": {{\"n\": {}, \"hidden\": {}, \"layers\": {}, \"seed\": {}, \"shard_rows\": {}}},\n",
+        cfg.n, cfg.hidden, cfg.layers, cfg.seed, DEFAULT_SHARD_ROWS
+    ));
+    s.push_str("  \"cells\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"batch\": {}, \"threads\": {}, \"dof_ms\": {:.4}, \"hessian_ms\": {:.4}, \
+             \"time_ratio\": {:.3}, \"dof_peak_bytes\": {}, \"hessian_peak_bytes\": {}, \
+             \"dof_muls\": {}, \"hessian_muls\": {}}}{}\n",
+            c.batch,
+            c.threads,
+            c.dof_seconds * 1e3,
+            c.hessian_seconds * 1e3,
+            c.time_ratio(),
+            c.dof_peak_bytes,
+            c.hessian_peak_bytes,
+            c.dof_muls,
+            c.hessian_muls,
+            if i + 1 < cells.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Write the grid JSON to `path`.
+pub fn write_grid_json(
+    path: &str,
+    cfg: &Table1Config,
+    cells: &[GridCell],
+) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(grid_json(cfg, cells).as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::BenchConfig;
+
+    #[test]
+    fn grid_runs_and_serializes() {
+        let cfg = Table1Config {
+            n: 8,
+            hidden: 16,
+            layers: 2,
+            batch: 4,
+            threads: 1,
+            seed: 11,
+            bench: BenchConfig {
+                warmup_iters: 0,
+                measure_iters: 1,
+                max_seconds: 10.0,
+            },
+        };
+        let cells = run_table1_grid(&cfg, &[4, 9], &[1, 2]);
+        assert_eq!(cells.len(), 4);
+        // FLOP counts are exact and thread-count-invariant (the determinism
+        // contract): same batch → identical muls across the threads axis.
+        assert_eq!(cells[0].dof_muls, cells[1].dof_muls);
+        assert_eq!(cells[2].hessian_muls, cells[3].hessian_muls);
+        let json = grid_json(&cfg, &cells);
+        assert!(json.contains("\"bench\": \"table1_mlp_grid\""));
+        assert!(json.contains("\"batch\": 9"));
+        assert!(json.ends_with("}\n"));
+        // Balanced braces/brackets as a cheap well-formedness check.
+        assert_eq!(
+            json.matches('{').count(),
+            json.matches('}').count()
+        );
+        assert_eq!(
+            json.matches('[').count(),
+            json.matches(']').count()
+        );
+    }
+}

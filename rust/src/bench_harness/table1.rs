@@ -9,6 +9,7 @@
 use crate::graph::Act;
 use crate::nn::{Mlp, MlpSpec};
 use crate::operators::{table4_mlp, Operator};
+use crate::parallel::{Pool, DEFAULT_SHARD_ROWS};
 use crate::tensor::Tensor;
 use crate::util::Xoshiro256;
 
@@ -25,6 +26,8 @@ pub struct Table1Config {
     pub layers: usize,
     /// Batch of collocation points per evaluation.
     pub batch: usize,
+    /// Worker threads for batch sharding (1 = the legacy serial engines).
+    pub threads: usize,
     pub seed: u64,
     pub bench: BenchConfig,
 }
@@ -36,6 +39,7 @@ impl Default for Table1Config {
             hidden: 256,
             layers: 8,
             batch: 8,
+            threads: 1,
             seed: 7,
             bench: BenchConfig::default(),
         }
@@ -91,18 +95,22 @@ pub fn run_table1(cfg: &Table1Config) -> Vec<CompareRow> {
         ]
     };
 
+    // Always the sharded path: at `threads: 1` it runs inline under a serial
+    // guard, so the FLOP and per-shard peak-byte columns are identical across
+    // thread counts (the determinism contract) and only wall-clock moves.
+    let pool = Pool::new(cfg.threads.max(1));
     specs
         .into_iter()
         .map(|(name, op)| {
             let hes_engine = op.hessian_engine();
             let hessian = bencher.run(&format!("hessian/{name}"), || {
-                let r = hes_engine.compute(&graph, &x);
+                let r = hes_engine.compute_sharded(&graph, &x, &pool, DEFAULT_SHARD_ROWS);
                 std::hint::black_box(&r.operator_values);
                 (Some(r.cost.muls), Some(r.peak_tangent_bytes))
             });
             let dof_engine = op.dof_engine();
             let dof = bencher.run(&format!("dof/{name}"), || {
-                let r = dof_engine.compute(&graph, &x);
+                let r = dof_engine.compute_sharded(&graph, &x, &pool, DEFAULT_SHARD_ROWS);
                 std::hint::black_box(&r.operator_values);
                 (Some(r.cost.muls), Some(r.peak_tangent_bytes))
             });
@@ -128,6 +136,7 @@ mod tests {
             hidden: 32,
             layers: 3,
             batch: 2,
+            threads: 1,
             seed: 3,
             bench: BenchConfig {
                 warmup_iters: 1,

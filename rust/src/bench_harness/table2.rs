@@ -10,6 +10,7 @@
 use crate::graph::Act;
 use crate::nn::{SparseMlp, SparseMlpSpec};
 use crate::operators::{table4_sparse, Operator};
+use crate::parallel::{Pool, DEFAULT_SHARD_ROWS};
 use crate::tensor::Tensor;
 use crate::util::Xoshiro256;
 
@@ -29,6 +30,8 @@ pub struct Table2Config {
     /// Per-block output dim (paper: 8).
     pub block_out: usize,
     pub batch: usize,
+    /// Worker threads for batch sharding (1 = the legacy serial engines).
+    pub threads: usize,
     pub seed: u64,
     pub bench: BenchConfig,
 }
@@ -42,6 +45,7 @@ impl Default for Table2Config {
             layers: 8,
             block_out: 8,
             batch: 8,
+            threads: 1,
             seed: 7,
             bench: BenchConfig::default(),
         }
@@ -103,18 +107,21 @@ pub fn run_table2(cfg: &Table2Config) -> Vec<CompareRow> {
         ]
     };
 
+    // Always the sharded path (see table1.rs): serial at `threads: 1`, and
+    // the exact-count columns stay invariant under the thread knob.
+    let pool = Pool::new(cfg.threads.max(1));
     specs
         .into_iter()
         .map(|(name, op)| {
             let hes_engine = op.hessian_engine();
             let hessian = bencher.run(&format!("hessian/{name}"), || {
-                let r = hes_engine.compute(&graph, &x);
+                let r = hes_engine.compute_sharded(&graph, &x, &pool, DEFAULT_SHARD_ROWS);
                 std::hint::black_box(&r.operator_values);
                 (Some(r.cost.muls), Some(r.peak_tangent_bytes))
             });
             let dof_engine = op.dof_engine();
             let dof = bencher.run(&format!("dof/{name}"), || {
-                let r = dof_engine.compute(&graph, &x);
+                let r = dof_engine.compute_sharded(&graph, &x, &pool, DEFAULT_SHARD_ROWS);
                 std::hint::black_box(&r.operator_values);
                 (Some(r.cost.muls), Some(r.peak_tangent_bytes))
             });
@@ -142,6 +149,7 @@ mod tests {
             layers: 2,
             block_out: 4,
             batch: 2,
+            threads: 1,
             seed: 5,
             bench: BenchConfig {
                 warmup_iters: 1,

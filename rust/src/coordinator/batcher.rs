@@ -46,6 +46,15 @@ pub struct CutBatch<T> {
     pub members: Vec<PendingRequest<T>>,
 }
 
+impl<T> CutBatch<T> {
+    /// Total rows in the padded buffer (the batch capacity it was cut at) —
+    /// what the server's executed-rows metrics are measured against.
+    pub fn padded_rows(&self, width: usize) -> usize {
+        debug_assert_eq!(self.data.len() % width.max(1), 0);
+        self.data.len() / width.max(1)
+    }
+}
+
 /// Accumulator. `T` is the per-request routing tag.
 pub struct Batcher<T> {
     policy: BatchPolicy,
@@ -179,6 +188,16 @@ mod tests {
         let tail = b.cut();
         assert_eq!(tail.rows_used, 2);
         assert_eq!(tail.members[0].tag, 2);
+    }
+
+    #[test]
+    fn cut_batch_padded_rows() {
+        let mut b: Batcher<usize> =
+            Batcher::new(2, BatchPolicy { capacity: 8, max_wait: Duration::from_secs(1) });
+        b.push(req(5, 2, 1.0), |_| 0);
+        let cut = b.cut();
+        assert_eq!(cut.padded_rows(2), 8);
+        assert_eq!(cut.rows_used, 5);
     }
 
     #[test]

@@ -19,6 +19,11 @@ struct Inner {
     padded_rows: u64,
     latency: Option<LatencyHistogram>,
     exec_latency: Option<LatencyHistogram>,
+    // Parallel (sharded BatchFn) path.
+    shards: u64,
+    shard_seconds: f64,
+    sharded_batches: u64,
+    sharded_wall_seconds: f64,
 }
 
 /// Point-in-time snapshot for display.
@@ -33,6 +38,14 @@ pub struct MetricsSnapshot {
     pub mean_exec_latency: f64,
     /// Fraction of executed rows that were real (non-padding).
     pub batch_efficiency: f64,
+    /// Shards executed by the parallel `BatchFn` path.
+    pub shards: u64,
+    /// Batches that went through the parallel path.
+    pub sharded_batches: u64,
+    /// Effective concurrency of the parallel path: summed per-shard compute
+    /// seconds over wall seconds (≈ threads actually kept busy; 1.0 when
+    /// serial, 0.0 when the parallel path was never used).
+    pub parallel_occupancy: f64,
 }
 
 impl Metrics {
@@ -58,6 +71,16 @@ impl Metrics {
             .record(exec_s);
     }
 
+    /// Record one parallel (sharded) batch execution: per-shard compute
+    /// seconds plus the wall time of the whole sharded region.
+    pub fn record_shards(&self, shard_secs: &[f64], wall_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.shards += shard_secs.len() as u64;
+        g.shard_seconds += shard_secs.iter().sum::<f64>();
+        g.sharded_batches += 1;
+        g.sharded_wall_seconds += wall_s;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         let executed = g.rows + g.padded_rows;
@@ -73,6 +96,13 @@ impl Metrics {
                 1.0
             } else {
                 g.rows as f64 / executed as f64
+            },
+            shards: g.shards,
+            sharded_batches: g.sharded_batches,
+            parallel_occupancy: if g.sharded_wall_seconds > 0.0 {
+                g.shard_seconds / g.sharded_wall_seconds
+            } else {
+                0.0
             },
         }
     }
@@ -103,5 +133,19 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.batch_efficiency, 1.0);
+        assert_eq!(s.shards, 0);
+        assert_eq!(s.parallel_occupancy, 0.0);
+    }
+
+    #[test]
+    fn shard_metrics_accumulate() {
+        let m = Metrics::new();
+        m.record_shards(&[0.010, 0.012, 0.011, 0.009], 0.014);
+        m.record_shards(&[0.008, 0.008], 0.009);
+        let s = m.snapshot();
+        assert_eq!(s.shards, 6);
+        assert_eq!(s.sharded_batches, 2);
+        // 0.058 compute seconds over 0.023 wall seconds ≈ 2.5× concurrency.
+        assert!(s.parallel_occupancy > 2.0 && s.parallel_occupancy < 3.0);
     }
 }

@@ -15,7 +15,7 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher, PendingRequest};
 pub use metrics::Metrics;
-pub use server::{ModelServer, ServerHandle};
+pub use server::{BatchFn, ModelServer, ServerHandle};
 
 /// A request: evaluate the operator at `rows` points of width `width`
 /// (flat row-major).

@@ -11,6 +11,8 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::parallel::{split_rows, Pool};
+
 use super::batcher::{BatchPolicy, Batcher, CutBatch};
 use super::metrics::Metrics;
 use super::{EvalRequest, EvalResponse};
@@ -62,6 +64,11 @@ impl ServerHandle {
 
 /// The worker event loop — runs on the worker thread; `compute` need not
 /// be `Send` because it never leaves this thread.
+///
+/// `compute` receives `(padded_data, width, rows_used)`: fixed-shape
+/// backends (XLA artifacts) consume the whole padded buffer, while
+/// shape-flexible backends may compute only the first `rows_used` rows —
+/// response routing reads nothing past them.
 fn worker_loop<F>(
     rx: mpsc::Receiver<Msg>,
     width: usize,
@@ -69,14 +76,14 @@ fn worker_loop<F>(
     metrics: Arc<Metrics>,
     mut compute: F,
 ) where
-    F: FnMut(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)>,
+    F: FnMut(&[f32], usize, usize) -> Result<(Vec<f32>, Vec<f32>)>,
 {
     let mut batcher: Batcher<RespTx> = Batcher::new(width, policy);
     let run_batch = |cut: CutBatch<RespTx>, compute: &mut F| {
         let t0 = Instant::now();
-        let result = compute(&cut.data, width);
+        let result = compute(&cut.data, width, cut.rows_used);
         let exec_s = t0.elapsed().as_secs_f64();
-        metrics.record_batch(cut.rows_used, policy.capacity, exec_s);
+        metrics.record_batch(cut.rows_used, cut.padded_rows(width), exec_s);
         match result {
             Ok((phi, lphi)) => {
                 for m in cut.members {
@@ -132,10 +139,12 @@ pub struct ModelServer {
 }
 
 impl ModelServer {
-    /// Spawn a worker around an arbitrary (Send) batch compute.
-    pub fn spawn(width: usize, policy: BatchPolicy, compute: BatchFn) -> Self {
+    /// Shared wiring: channel, worker thread around [`worker_loop`], handle.
+    fn spawn_with<F>(width: usize, policy: BatchPolicy, metrics: Arc<Metrics>, compute: F) -> Self
+    where
+        F: FnMut(&[f32], usize, usize) -> Result<(Vec<f32>, Vec<f32>)> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Msg>();
-        let metrics = Arc::new(Metrics::new());
         let worker_metrics = Arc::clone(&metrics);
         let join = std::thread::spawn(move || {
             worker_loop(rx, width, policy, worker_metrics, compute);
@@ -150,6 +159,61 @@ impl ModelServer {
             join: Some(join),
             tx,
         }
+    }
+
+    /// Spawn a worker around an arbitrary (Send) batch compute.
+    pub fn spawn(width: usize, policy: BatchPolicy, compute: BatchFn) -> Self {
+        let mut compute = compute;
+        Self::spawn_with(width, policy, Arc::new(Metrics::new()), move |data, w, _rows| {
+            compute(data, w)
+        })
+    }
+
+    /// Spawn a worker whose batches are **row-sharded across a thread
+    /// pool**: each cut batch is split into `shard_rows`-row chunks, `inner`
+    /// runs per chunk on the pool's workers, and the chunk outputs are
+    /// reassembled in shard order (same determinism contract as the
+    /// engines' `compute_sharded`). Per-shard compute seconds land in the
+    /// server's [`Metrics`] (`shards` / `parallel_occupancy`).
+    pub fn spawn_sharded<F>(
+        width: usize,
+        policy: BatchPolicy,
+        pool: Pool,
+        shard_rows: usize,
+        inner: F,
+    ) -> Self
+    where
+        F: Fn(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)> + Send + Sync + 'static,
+    {
+        let metrics = Arc::new(Metrics::new());
+        let shard_metrics = Arc::clone(&metrics);
+        let compute = move |data: &[f32],
+                            w: usize,
+                            rows_used: usize|
+              -> Result<(Vec<f32>, Vec<f32>)> {
+            // The Rust engines have no fixed-batch constraint, so padding
+            // rows (zeros nobody reads) are skipped entirely.
+            let rows = rows_used.min(data.len() / w);
+            let ranges = split_rows(rows, shard_rows.max(1));
+            let t0 = Instant::now();
+            let shard_out = pool.run_sharded(ranges, |_, r| {
+                let ts = Instant::now();
+                let res = inner(&data[r.start * w..r.end * w], w);
+                (res, ts.elapsed().as_secs_f64())
+            });
+            let mut phi = Vec::with_capacity(rows);
+            let mut lphi = Vec::with_capacity(rows);
+            let mut shard_secs = Vec::with_capacity(shard_out.len());
+            for (res, secs) in shard_out {
+                let (p, l) = res?;
+                phi.extend(p);
+                lphi.extend(l);
+                shard_secs.push(secs);
+            }
+            shard_metrics.record_shards(&shard_secs, t0.elapsed().as_secs_f64());
+            Ok((phi, lphi))
+        };
+        Self::spawn_with(width, policy, metrics, compute)
     }
 
     /// Spawn a worker that executes a PJRT artifact. The executor is
@@ -189,8 +253,10 @@ impl ModelServer {
                     return;
                 }
             };
-            // Non-Send closure is fine: it stays on this thread.
-            let compute = move |data: &[f32], w: usize| {
+            // Non-Send closure is fine: it stays on this thread. The
+            // artifact has a fixed batch shape, so the padded rows are
+            // executed regardless of rows_used.
+            let compute = move |data: &[f32], w: usize, _rows_used: usize| {
                 let rows = data.len() / w;
                 let outs = exec.run_f32(&art, &[(data, &[rows, w])])?;
                 Ok((outs[0].clone(), outs[1].clone()))
@@ -316,6 +382,65 @@ mod tests {
         let pts: Vec<f32> = (0..10).map(|i| i as f32).collect();
         let resp = h.eval_blocking(pts.clone()).unwrap();
         assert_eq!(resp.phi, pts);
+        server.shutdown();
+    }
+
+    #[test]
+    fn sharded_backend_matches_serial_and_records_shards() {
+        let row_sum = |data: &[f32], width: usize| -> Result<(Vec<f32>, Vec<f32>)> {
+            let rows = data.len() / width;
+            let mut phi = Vec::with_capacity(rows);
+            let mut lphi = Vec::with_capacity(rows);
+            for r in 0..rows {
+                let s: f32 = data[r * width..(r + 1) * width].iter().sum();
+                phi.push(s);
+                lphi.push(2.0 * s);
+            }
+            Ok((phi, lphi))
+        };
+        let server = ModelServer::spawn_sharded(
+            3,
+            BatchPolicy {
+                capacity: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            Pool::new(4),
+            2,
+            row_sum,
+        );
+        let h = server.handle();
+        let pts: Vec<f32> = (0..7 * 3).map(|i| i as f32).collect();
+        let resp = h.eval_blocking(pts.clone()).unwrap();
+        // Same answers as the serial mock backend.
+        for r in 0..7 {
+            let want: f32 = pts[r * 3..(r + 1) * 3].iter().sum();
+            assert_eq!(resp.phi[r], want);
+            assert_eq!(resp.lphi[r], 2.0 * want);
+        }
+        let snap = h.metrics.snapshot();
+        assert!(snap.shards >= 4, "expected ≥4 shards, got {}", snap.shards);
+        assert!(snap.sharded_batches >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn sharded_backend_propagates_errors() {
+        let failing = |_: &[f32], _: usize| -> Result<(Vec<f32>, Vec<f32>)> {
+            Err(anyhow!("shard exploded"))
+        };
+        let server = ModelServer::spawn_sharded(
+            1,
+            BatchPolicy {
+                capacity: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            Pool::new(2),
+            1,
+            failing,
+        );
+        let h = server.handle();
+        let err = h.eval_blocking(vec![1.0, 2.0]).unwrap_err();
+        assert!(err.to_string().contains("shard exploded"));
         server.shutdown();
     }
 

@@ -12,12 +12,48 @@
 //!
 //! ## Crate layout
 //!
-//! * substrates: [`util`], [`prop`], [`tensor`], [`linalg`], [`graph`]
+//! * substrates: [`util`], [`prop`], [`tensor`], [`linalg`], [`graph`],
+//!   [`parallel`]
 //! * the contribution: [`autodiff`] (DOF + the Hessian-based baseline,
 //!   both instrumented with exact FLOP and peak-memory accounting)
 //! * applications: [`operators`], [`nn`], [`pde`], [`train`]
 //! * infrastructure: [`runtime`] (XLA-PJRT artifact execution),
 //!   [`coordinator`] (batching / serving), [`bench_harness`]
+//!
+//! ## Parallel execution
+//!
+//! The hot path scales across cores without giving up exactness:
+//!
+//! * [`parallel`] — a std-only scoped thread pool sized by `--threads` /
+//!   `DOF_THREADS` / `available_parallelism`, plus the deterministic
+//!   sharding helpers.
+//! * **Batch sharding** — `DofEngine::compute_sharded` /
+//!   `HessianEngine::compute_sharded` split `[batch, N]` into fixed
+//!   8-row shards ([`parallel::DEFAULT_SHARD_ROWS`]); each worker runs the
+//!   full tuple propagation on its shard with a [`autodiff::TangentArena`]
+//!   checked out of a process-wide depot (no per-node alloc/free churn,
+//!   warm across bench reps and server batches; serial paths use a
+//!   thread-local arena) and results are reduced in shard order.
+//! * **Row-parallel GEMM** — [`tensor::matmul_into`] splits output rows
+//!   (4-aligned, matching the micro-kernel grouping) across the global pool
+//!   for large single-shard products; nested parallelism inside pool
+//!   workers is suppressed.
+//! * **Serving** — `coordinator::ModelServer::spawn_sharded` runs a
+//!   row-sharded `BatchFn` over the pool and records per-shard metrics.
+//!
+//! **Determinism contract:** shard boundaries are a function of the batch
+//! size alone (never the thread count) and every reduction is shard-ordered
+//! with no atomics-based float accumulation, so values, `L[φ]`, FLOP counts,
+//! and per-shard peak-tangent bytes are bit-identical across
+//! `--threads 1/2/4/8` — and per-row arithmetic is row-independent, so
+//! sharded values match the unsharded engines exactly. Peak-memory
+//! measurements are reported per shard, which is what Theorem 2.2 bounds at
+//! the shard's batch size.
+//!
+//! **Choosing thread counts for benches:** physical cores is the right
+//! ceiling (the engines are compute-bound); batches below one shard run
+//! inline. `dof bench table1 --threads N` and `dof bench grid` sweep the
+//! knob and emit `BENCH_table1.json` for trend tracking.
 
 pub mod autodiff;
 pub mod bench_harness;
@@ -26,6 +62,7 @@ pub mod graph;
 pub mod linalg;
 pub mod nn;
 pub mod operators;
+pub mod parallel;
 pub mod pde;
 pub mod prop;
 pub mod runtime;

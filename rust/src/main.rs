@@ -1,28 +1,32 @@
 //! `dof` — CLI for the DOF reproduction.
 //!
 //! ```text
-//! dof bench table1 [--batch 8 --reps 10 --n 64 --hidden 256 --layers 8]
-//! dof bench table2 [--batch 8 --reps 10]
+//! dof bench table1 [--batch 8 --reps 10 --n 64 --hidden 256 --layers 8 --threads 8]
+//! dof bench table2 [--batch 8 --reps 10 --threads 8]
+//! dof bench grid   [--batches 8,64,256 --threads-grid 1,2,4,8 --out BENCH_table1.json]
 //! dof bench xla    [--artifact dof_mlp_elliptic --reps 20]
 //! dof train  [--pde heat|klein-gordon|poisson|fokker-planck --steps 300 ...]
 //! dof decompose [--spec elliptic|lowrank|general --n 64]
 //! dof inspect [--artifacts artifacts]
-//! dof serve  [--artifact dof_mlp_elliptic --requests 64 --rows 8]
+//! dof serve  [--engine rust|xla --artifact dof_mlp_elliptic --requests 64 --rows 8]
 //! ```
 
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
+use dof::bench_harness::report::{run_table1_grid, write_grid_json};
 use dof::bench_harness::table1::{run_table1, Table1Config};
 use dof::bench_harness::table2::{run_table2, Table2Config};
 use dof::bench_harness::{render_table, BenchConfig};
-use dof::coordinator::ModelServer;
+use dof::coordinator::{BatchPolicy, ModelServer};
 use dof::graph::Act;
 use dof::nn::{Mlp, MlpSpec};
 use dof::operators::{CoeffSpec, Operator};
+use dof::parallel::{self, Pool};
 use dof::pde::trainer::{PinnConfig, PinnTrainer};
 use dof::pde::{fokker_planck, heat_equation, klein_gordon, poisson};
 use dof::runtime::{ArtifactRegistry, Executor};
+use dof::tensor::Tensor;
 use dof::train::AdamConfig;
 use dof::util::{fmt_bytes, fmt_duration, Args, Xoshiro256};
 
@@ -39,6 +43,16 @@ fn main() {
 }
 
 fn run(args: &Args) -> Result<()> {
+    // Process-wide thread knob (also drives the row-parallel GEMM); the
+    // `DOF_THREADS` env var is the non-CLI equivalent.
+    if let Some(t) = args.get("threads") {
+        let parsed: usize = t
+            .parse()
+            .ok()
+            .filter(|&t| t > 0)
+            .ok_or_else(|| anyhow!("--threads must be a positive integer, got {t:?}"))?;
+        parallel::set_global_threads(parsed);
+    }
     match args.command.as_deref() {
         Some("bench") => cmd_bench(args),
         Some("train") => cmd_train(args),
@@ -57,10 +71,18 @@ const USAGE: &str = "dof — Differential Operators with Forward propagation
 
 USAGE:
   dof bench table1|table2|xla [options]   regenerate the paper's tables
+  dof bench grid [--batches 8,64,256]     batch × threads sweep → BENCH_table1.json
+            [--threads-grid 1,2,4,8]
   dof train [--pde heat] [--steps 300]    train a PINN through DOF
   dof decompose [--spec elliptic --n 64]  show an A = LᵀDL decomposition
   dof inspect [--artifacts artifacts]     list AOT artifacts
-  dof serve [--artifact dof_mlp_elliptic] run the batching server demo";
+  dof serve [--artifact dof_mlp_elliptic] run the batching server demo
+            [--engine rust|xla]           (default: rust unless built with
+                                           the pjrt feature; rust = sharded
+                                           DOF engine backend)
+
+  --threads N (or DOF_THREADS=N) sizes the worker pool for batch sharding
+  and the row-parallel GEMM; results are bit-identical at any N.";
 
 fn bench_config(args: &Args) -> BenchConfig {
     BenchConfig {
@@ -83,20 +105,21 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 hidden: args.usize_or("hidden", 256),
                 layers: args.usize_or("layers", 8),
                 batch: args.usize_or("batch", 8),
+                threads: args.usize_or("threads", parallel::env_threads().unwrap_or(1)),
                 seed: args.u64_or("seed", 7),
                 bench: bench_config(args),
             };
             eprintln!(
-                "table1: MLP {}→{}×{}→1, batch {} …",
-                cfg.n, cfg.hidden, cfg.layers, cfg.batch
+                "table1: MLP {}→{}×{}→1, batch {}, threads {} …",
+                cfg.n, cfg.hidden, cfg.layers, cfg.batch, cfg.threads
             );
             let rows = run_table1(&cfg);
             println!(
                 "{}",
                 render_table(
                     &format!(
-                        "Table 1 — MLP (N={}, hidden={}, layers={}, batch={})",
-                        cfg.n, cfg.hidden, cfg.layers, cfg.batch
+                        "Table 1 — MLP (N={}, hidden={}, layers={}, batch={}, threads={})",
+                        cfg.n, cfg.hidden, cfg.layers, cfg.batch, cfg.threads
                     ),
                     &rows
                 )
@@ -110,12 +133,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 layers: args.usize_or("layers", 8),
                 block_out: args.usize_or("block-out", 8),
                 batch: args.usize_or("batch", 8),
+                threads: args.usize_or("threads", parallel::env_threads().unwrap_or(1)),
                 seed: args.u64_or("seed", 7),
                 bench: bench_config(args),
             };
             eprintln!(
-                "table2: sparse MLP {}×{}→{}×{}→{}, batch {} …",
-                cfg.blocks, cfg.block_in, cfg.hidden, cfg.layers, cfg.block_out, cfg.batch
+                "table2: sparse MLP {}×{}→{}×{}→{}, batch {}, threads {} …",
+                cfg.blocks,
+                cfg.block_in,
+                cfg.hidden,
+                cfg.layers,
+                cfg.block_out,
+                cfg.batch,
+                cfg.threads
             );
             let rows = run_table2(&cfg);
             println!(
@@ -129,8 +159,41 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 )
             );
         }
+        "grid" => {
+            let cfg = Table1Config {
+                n: args.usize_or("n", 64),
+                hidden: args.usize_or("hidden", 256),
+                layers: args.usize_or("layers", 8),
+                batch: 0, // per-cell batches come from --batches
+                threads: 1,
+                seed: args.u64_or("seed", 7),
+                bench: bench_config(args),
+            };
+            let batches = args.usize_list_or("batches", &[8, 64, 256]);
+            let threads = args.usize_list_or("threads-grid", &[1, 2, 4, 8]);
+            let out = args.get_or("out", "BENCH_table1.json");
+            eprintln!(
+                "grid: MLP {}→{}×{}→1, batches {batches:?} × threads {threads:?} …",
+                cfg.n, cfg.hidden, cfg.layers
+            );
+            let cells = run_table1_grid(&cfg, &batches, &threads);
+            println!("| batch | threads | DOF | Hessian | H/D ratio |");
+            println!("|-------|---------|-----|---------|-----------|");
+            for c in &cells {
+                println!(
+                    "| {} | {} | {} | {} | {:.2} |",
+                    c.batch,
+                    c.threads,
+                    fmt_duration(c.dof_seconds),
+                    fmt_duration(c.hessian_seconds),
+                    c.time_ratio()
+                );
+            }
+            write_grid_json(&out, &cfg, &cells)?;
+            eprintln!("grid written to {out}");
+        }
         "xla" => cmd_bench_xla(args)?,
-        other => return Err(anyhow!("unknown bench {other:?} (table1|table2|xla)")),
+        other => return Err(anyhow!("unknown bench {other:?} (table1|table2|grid|xla)")),
     }
     Ok(())
 }
@@ -280,24 +343,35 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let dir = args.get_or("artifacts", "artifacts");
-    let artifact = args.get_or("artifact", "dof_mlp_elliptic");
-    let reg = ArtifactRegistry::open(&dir)?;
-    let batch = reg
-        .batch_of(&artifact)
-        .ok_or_else(|| anyhow!("no batch in manifest for {artifact}"))?;
-    let width = 64;
     let requests = args.usize_or("requests", 64);
     let rows = args.usize_or("rows", 8);
     let clients = args.usize_or("clients", 4);
-    println!("serving {artifact} (batch {batch}, width {width})");
-    let server = ModelServer::spawn_xla(
-        reg.dir.clone(),
-        artifact.clone(),
-        width,
-        batch,
-        Duration::from_millis(args.u64_or("max-wait-ms", 2)),
-    )?;
+    // Default to the engine that can actually run in this build: the XLA
+    // executor is a stub unless the `pjrt` feature (plus the xla crate) is
+    // compiled in, so the out-of-the-box demo uses the Rust backend.
+    let default_engine = if cfg!(feature = "pjrt") { "xla" } else { "rust" };
+    let (server, width) = match args.get_or("engine", default_engine).as_str() {
+        "rust" => serve_rust_backend(args)?,
+        "xla" => {
+            let dir = args.get_or("artifacts", "artifacts");
+            let artifact = args.get_or("artifact", "dof_mlp_elliptic");
+            let reg = ArtifactRegistry::open(&dir)?;
+            let batch = reg
+                .batch_of(&artifact)
+                .ok_or_else(|| anyhow!("no batch in manifest for {artifact}"))?;
+            let width = 64;
+            println!("serving {artifact} (batch {batch}, width {width})");
+            let server = ModelServer::spawn_xla(
+                reg.dir.clone(),
+                artifact.clone(),
+                width,
+                batch,
+                Duration::from_millis(args.u64_or("max-wait-ms", 2)),
+            )?;
+            (server, width)
+        }
+        other => return Err(anyhow!("unknown engine {other:?} (rust|xla)")),
+    };
     let h = server.handle();
     let t0 = std::time::Instant::now();
     let threads: Vec<_> = (0..clients)
@@ -341,6 +415,69 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "total padding data: {}",
         fmt_bytes(snap.padded_rows * width as u64 * 4)
     );
+    if snap.sharded_batches > 0 {
+        println!(
+            "parallel path: {} shards over {} batches | occupancy {:.2}× threads busy",
+            snap.shards, snap.sharded_batches, snap.parallel_occupancy
+        );
+    }
     server.shutdown();
     Ok(())
+}
+
+/// `dof serve --engine rust`: the pure-Rust DOF engine as a sharded serving
+/// backend — batches cut by the coordinator are row-sharded across the pool,
+/// each worker running the tuple propagation on its shard with a tangent
+/// arena checked out of the process-wide depot (scoped workers' thread-locals
+/// would die with each batch's parallel region).
+fn serve_rust_backend(args: &Args) -> Result<(ModelServer, usize)> {
+    let n = args.usize_or("n", 64);
+    let seed = args.u64_or("seed", 0);
+    let model = Mlp::init(
+        MlpSpec {
+            in_dim: n,
+            hidden: args.usize_or("hidden", 64),
+            layers: args.usize_or("layers", 3),
+            out_dim: 1,
+            act: Act::Tanh,
+        },
+        seed,
+    );
+    let graph = model.to_graph();
+    let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed });
+    let engine = op.dof_engine();
+    let pool = Pool::from_env();
+    let batch = args.usize_or("batch", 32);
+    println!(
+        "serving rust DOF engine (N={n}, rank {}, batch {batch}, {} threads)",
+        op.rank(),
+        pool.threads()
+    );
+    let compute = move |data: &[f32], width: usize| -> Result<(Vec<f32>, Vec<f32>)> {
+        let rows = data.len() / width;
+        let x = Tensor::from_vec(
+            &[rows, width],
+            data.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
+        );
+        // Depot arenas: this closure runs on scoped pool workers, whose
+        // thread-locals die with each batch's parallel region.
+        let res = dof::autodiff::arena::with_pooled_arena(|arena| {
+            engine.compute_with_arena(&graph, &x, arena)
+        });
+        Ok((
+            res.values.data().iter().map(|&v| v as f32).collect(),
+            res.operator_values.data().iter().map(|&v| v as f32).collect(),
+        ))
+    };
+    let server = ModelServer::spawn_sharded(
+        n,
+        BatchPolicy {
+            capacity: batch,
+            max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)),
+        },
+        pool,
+        parallel::DEFAULT_SHARD_ROWS,
+        compute,
+    );
+    Ok((server, n))
 }

@@ -1,0 +1,279 @@
+//! Std-only parallel execution substrate: a scoped thread pool, deterministic
+//! batch sharding, and the global thread-count knob (`--threads` /
+//! `DOF_THREADS`).
+//!
+//! ## Design
+//!
+//! * [`Pool`] is a *scoped* worker team: each parallel region spawns its
+//!   workers with [`std::thread::scope`], so jobs may borrow stack data
+//!   (shards of the input batch, weight tensors, output slices) without any
+//!   `Arc`/`'static` gymnastics or unsafe code. Spawn cost is a few tens of
+//!   microseconds per region — noise against the multi-millisecond engine
+//!   passes this pool exists to shard.
+//! * Work is expressed as an ordered list of **shards** (contiguous row
+//!   ranges). Workers pull shard indices from an atomic counter (dynamic
+//!   load balance) but results are *always* reduced in shard order, never in
+//!   completion order — the first half of the determinism contract.
+//! * Shard boundaries are a function of the batch size alone (fixed
+//!   [`DEFAULT_SHARD_ROWS`]-row chunks), never of the thread count — the
+//!   second half of the contract. Together they make every reduced quantity
+//!   (values, `L[φ]`, FLOP tallies, per-shard peak bytes) bit-identical
+//!   across `--threads 1/2/4/8`.
+//! * [`in_worker`] is a thread-local flag set inside pool workers; nested
+//!   parallel regions (e.g. the row-parallel GEMM of
+//!   [`crate::tensor::matmul_into`] called from a shard worker) detect it
+//!   and stay serial instead of oversubscribing the machine.
+//!
+//! ## Choosing thread counts
+//!
+//! The engines are compute-bound with streaming access patterns, so physical
+//! cores is the right ceiling; the default is
+//! `std::thread::available_parallelism()`. Override with `DOF_THREADS=n` or
+//! `--threads n` on the CLI. Batches smaller than one shard
+//! ([`DEFAULT_SHARD_ROWS`] rows) run inline regardless of the knob.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Rows per work unit for batch sharding. Fixed (thread-count-independent)
+/// so that shard decomposition — and therefore every per-shard measurement —
+/// is invariant under the `--threads` knob.
+pub const DEFAULT_SHARD_ROWS: usize = 8;
+
+thread_local! {
+    static IN_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Is the current thread a pool worker? (Nested parallel regions must stay
+/// serial.)
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|f| f.get())
+}
+
+struct WorkerGuard {
+    prev: bool,
+}
+
+impl WorkerGuard {
+    fn enter() -> Self {
+        let prev = IN_WORKER.with(|f| f.replace(true));
+        WorkerGuard { prev }
+    }
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_WORKER.with(|f| f.set(prev));
+    }
+}
+
+/// Run `f` with nested parallel regions suppressed, exactly as if it were
+/// executing inside a pool worker. A `--threads 1` execution must be
+/// *genuinely* serial — including the row-parallel GEMM, which would
+/// otherwise consult the process-global pool — or single-thread baselines
+/// silently run multi-core.
+pub fn with_serial_guard<R>(f: impl FnOnce() -> R) -> R {
+    let _guard = WorkerGuard::enter();
+    f()
+}
+
+/// Global thread count: 0 = not yet resolved.
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// The `DOF_THREADS` env var, when set to a positive integer (anything
+/// else — unset, non-numeric, or 0 — is ignored).
+pub fn env_threads() -> Option<usize> {
+    std::env::var("DOF_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t > 0)
+}
+
+fn resolve_global_threads() -> usize {
+    let current = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if current != 0 {
+        return current;
+    }
+    let t = env_threads().unwrap_or_else(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    });
+    // First resolver wins; a racing thread reads the same env either way.
+    let _ = GLOBAL_THREADS.compare_exchange(0, t, Ordering::Relaxed, Ordering::Relaxed);
+    GLOBAL_THREADS.load(Ordering::Relaxed)
+}
+
+/// Override the process-wide thread count (the `--threads` CLI knob).
+pub fn set_global_threads(threads: usize) {
+    GLOBAL_THREADS.store(threads.max(1), Ordering::Relaxed);
+}
+
+/// The process-wide pool, sized from `--threads` / `DOF_THREADS` /
+/// `available_parallelism` (in that precedence).
+pub fn global() -> Pool {
+    Pool::new(resolve_global_threads())
+}
+
+/// A scoped worker team of a fixed size.
+#[derive(Debug, Clone, Copy)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// A pool of `threads` workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Pool sized from the environment (see module docs).
+    pub fn from_env() -> Self {
+        Self::new(resolve_global_threads())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(shard_index, range)` for every shard, in parallel, and return
+    /// the results **in shard order** (deterministic reduction regardless of
+    /// which worker finished first).
+    ///
+    /// Runs inline when the pool is single-threaded, there is ≤ 1 shard, or
+    /// the caller is itself a pool worker (no nested oversubscription).
+    pub fn run_sharded<R, F>(&self, ranges: Vec<Range<usize>>, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, Range<usize>) -> R + Sync,
+    {
+        let n = ranges.len();
+        if self.threads == 1 || n <= 1 || in_worker() {
+            // A 1-thread pool means serial all the way down (no nested GEMM
+            // parallelism); a single shard on a wider pool may still use it.
+            let _guard = (self.threads == 1).then(WorkerGuard::enter);
+            return ranges
+                .into_iter()
+                .enumerate()
+                .map(|(i, r)| f(i, r))
+                .collect();
+        }
+        let next = AtomicUsize::new(0);
+        let workers = self.threads.min(n);
+        let mut collected: Vec<(usize, R)> = Vec::with_capacity(n);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let next = &next;
+                    let ranges = &ranges;
+                    let f = &f;
+                    s.spawn(move || {
+                        let _guard = WorkerGuard::enter();
+                        let mut out = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= ranges.len() {
+                                break;
+                            }
+                            out.push((i, f(i, ranges[i].clone())));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            for h in handles {
+                collected.extend(h.join().expect("pool worker panicked"));
+            }
+        });
+        collected.sort_by_key(|&(i, _)| i);
+        collected.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+/// Fixed-size row chunks `[0..s), [s..2s), …` covering `0..rows` (last chunk
+/// may be short). Chunking depends only on `rows` and `shard_rows`.
+pub fn split_rows(rows: usize, shard_rows: usize) -> Vec<Range<usize>> {
+    let s = shard_rows.max(1);
+    let mut out = Vec::with_capacity(div_ceil(rows, s));
+    let mut start = 0;
+    while start < rows {
+        let end = (start + s).min(rows);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+/// Split `0..rows` into at most `parts` contiguous chunks whose boundaries
+/// are multiples of `align` (the last chunk takes the remainder). Alignment
+/// keeps the 4-row GEMM micro-kernel grouping identical to the serial sweep,
+/// which is what makes the row-parallel matmul bit-exact.
+pub fn split_rows_aligned(rows: usize, parts: usize, align: usize) -> Vec<Range<usize>> {
+    let align = align.max(1);
+    let parts = parts.max(1);
+    let per = div_ceil(div_ceil(rows, parts), align) * align;
+    split_rows(rows, per.max(align))
+}
+
+/// `ceil(a / b)` without the 1.73+ `usize::div_ceil` (keeps the MSRV low).
+fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_rows_covers_exactly() {
+        let rs = split_rows(37, 8);
+        assert_eq!(rs.len(), 5);
+        assert_eq!(rs[0], 0..8);
+        assert_eq!(rs[4], 32..37);
+        let total: usize = rs.iter().map(|r| r.len()).sum();
+        assert_eq!(total, 37);
+    }
+
+    #[test]
+    fn split_aligned_boundaries() {
+        let rs = split_rows_aligned(100, 8, 4);
+        for r in &rs[..rs.len() - 1] {
+            assert_eq!(r.start % 4, 0);
+            assert_eq!(r.len() % 4, 0);
+        }
+        assert_eq!(rs.last().unwrap().end, 100);
+        assert!(rs.len() <= 8);
+    }
+
+    #[test]
+    fn run_sharded_order_is_deterministic() {
+        let pool = Pool::new(4);
+        let ranges = split_rows(100, 7);
+        let out = pool.run_sharded(ranges.clone(), |i, r| (i, r.start, r.end));
+        for (i, (j, s, e)) in out.iter().enumerate() {
+            assert_eq!(i, *j);
+            assert_eq!(*s, ranges[i].start);
+            assert_eq!(*e, ranges[i].end);
+        }
+    }
+
+    #[test]
+    fn run_sharded_single_thread_matches_parallel() {
+        let work = |_, r: Range<usize>| -> u64 { r.map(|x| (x as u64) * (x as u64)).sum() };
+        let ranges = split_rows(1000, 13);
+        let serial = Pool::new(1).run_sharded(ranges.clone(), work);
+        let parallel = Pool::new(8).run_sharded(ranges, work);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn workers_report_in_worker() {
+        let pool = Pool::new(2);
+        let flags = pool.run_sharded(split_rows(4, 1), |_, _| in_worker());
+        assert!(flags.iter().all(|&f| f));
+        assert!(!in_worker());
+    }
+}

@@ -5,6 +5,11 @@
 //! self-contained. The interchange format is HLO *text* (the published
 //! xla crate's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos; the
 //! text parser reassigns ids — see /opt/xla-example/README.md).
+//!
+//! PJRT execution is gated behind the `pjrt` cargo feature and additionally
+//! requires adding the external `xla` crate to `[dependencies]` (it is not
+//! vendored); the default build ships an API-compatible stub whose
+//! constructor fails with a descriptive error (see [`executor`]).
 
 pub mod artifact;
 pub mod executor;

@@ -1,14 +1,34 @@
-//! Cache-blocked matrix multiplication.
+//! Cache-blocked, optionally row-parallel matrix multiplication.
 //!
 //! The DOF hot path is tangent propagation `G' = G Wᵀ` (an `r×k` by `m×k`ᵀ
 //! product); the Hessian baseline is dominated by the same shape with
 //! `r = N`. These kernels are the single biggest wall-clock contributor in
 //! the Rust engine, so they are written with an i-k-j loop order (unit-stride
-//! inner loop, friendly to auto-vectorization) plus 64×64×64 cache blocking.
+//! inner loop, friendly to auto-vectorization) plus `BLOCK`×`BLOCK` cache
+//! blocking over the k and j dimensions.
+//!
+//! Large products additionally split their **output rows** across the
+//! process-wide thread pool ([`crate::parallel`]). Row chunks are aligned to
+//! the 4-row micro-kernel so every row sees the same grouping — and
+//! therefore the same floating-point operation order — as the serial sweep,
+//! keeping the parallel product bit-identical. Nested parallelism is
+//! suppressed: a GEMM issued from inside a pool worker (e.g. a shard of the
+//! DOF batch) always runs serially.
 
 use super::Tensor;
 
+/// Cache-block edge for the k and j dimensions, chosen empirically: with
+/// `BLOCK = 128` the inner sweep keeps one 128-wide `B` row segment against
+/// four live `C` row segments (~5 KiB, L1-resident) while a full 128×128 `B`
+/// panel (128 KiB) stays L2-resident across the whole `i` sweep; 64 halves
+/// the panel reuse per load without improving L1 behaviour, and 256 spills
+/// the panel out of L2 on smaller parts.
 const BLOCK: usize = 128;
+
+/// Row-parallel dispatch thresholds: below either, the spawn cost of a
+/// scoped parallel region is not worth it.
+const PAR_MIN_ROWS: usize = 64;
+const PAR_MIN_MACS: usize = 1 << 21;
 
 /// `C = A · B` where `A` is `m×k`, `B` is `k×n`.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
@@ -23,14 +43,68 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 /// Raw blocked GEMM on slices: `C[m×n] += A[m×k] · B[k×n]` (C assumed zeroed
 /// by the caller when a fresh product is wanted).
 ///
+/// Large products run row-parallel on the global pool; the result is
+/// bit-identical to the serial kernel (see module docs and
+/// [`matmul_into_threads`]).
+pub fn matmul_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    let threads = if crate::parallel::in_worker()
+        || m < PAR_MIN_ROWS
+        || m * k * n < PAR_MIN_MACS
+    {
+        1
+    } else {
+        crate::parallel::global().threads()
+    };
+    matmul_into_threads(a, b, c, m, k, n, threads);
+}
+
+/// [`matmul_into`] with an explicit worker count (1 = serial). Row chunks
+/// are 4-aligned so the micro-kernel grouping — and therefore the exact
+/// FP operation order per output row — matches the serial sweep.
+pub fn matmul_into_threads(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if threads > 1 && m >= 8 {
+        let ranges = crate::parallel::split_rows_aligned(m, threads, 4);
+        if ranges.len() > 1 {
+            std::thread::scope(|s| {
+                let mut rest = c;
+                let mut handles = Vec::with_capacity(ranges.len());
+                for r in &ranges {
+                    let rows = r.len();
+                    let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(rows * n);
+                    rest = tail;
+                    let a_chunk = &a[r.start * k..r.end * k];
+                    handles.push(s.spawn(move || {
+                        matmul_into_serial(a_chunk, b, chunk, rows, k, n);
+                    }));
+                }
+                for h in handles {
+                    h.join().expect("matmul worker panicked");
+                }
+            });
+            return;
+        }
+    }
+    matmul_into_serial(a, b, c, m, k, n);
+}
+
+/// The serial blocked kernel.
+///
 /// Perf (§Perf): the inner kernel processes **four rows of A per sweep** of
 /// a `B` row, so each `B` load feeds four FMAs (the 1-row AXPY form is
 /// L1-bandwidth-bound at ~9 GFLOP/s on this machine; the 4-row form
 /// measured ~2× that).
-pub fn matmul_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
+fn matmul_into_serial(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
     for kk in (0..k).step_by(BLOCK) {
         let k_end = (kk + BLOCK).min(k);
         for jj in (0..n).step_by(BLOCK) {
@@ -273,6 +347,23 @@ mod tests {
         let y2 = matmul(&a, &x);
         for i in 0..9 {
             assert!((y[i] - y2.at(i, 0)).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn parallel_rows_bit_identical_to_serial() {
+        let mut rng = Xoshiro256::new(5);
+        // Sizes straddling the 4-row alignment and the remainder path.
+        for &(m, k, n) in &[(97, 64, 51), (128, 33, 40), (66, 80, 19)] {
+            let a = Tensor::randn(&[m, k], &mut rng);
+            let b = Tensor::randn(&[k, n], &mut rng);
+            let mut serial = vec![0.0; m * n];
+            matmul_into_threads(a.data(), b.data(), &mut serial, m, k, n, 1);
+            for threads in [2usize, 3, 4, 8] {
+                let mut par = vec![0.0; m * n];
+                matmul_into_threads(a.data(), b.data(), &mut par, m, k, n, threads);
+                assert_eq!(serial, par, "threads={threads} m={m} k={k} n={n}");
+            }
         }
     }
 

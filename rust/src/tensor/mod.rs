@@ -9,7 +9,9 @@ mod matmul;
 mod ops;
 mod shape;
 
-pub use matmul::{matmul, matmul_into, matmul_nt, matmul_tn, matvec};
+pub use matmul::{
+    matmul, matmul_into, matmul_into_threads, matmul_nt, matmul_nt_into, matmul_tn, matvec,
+};
 pub use shape::Shape;
 
 use crate::util::Xoshiro256;

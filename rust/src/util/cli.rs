@@ -134,6 +134,26 @@ impl Args {
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
         self.get_parsed_or(name, default).unwrap_or_else(|e| panic!("{e}"))
     }
+
+    /// Comma-separated usize list with default (e.g. `--threads 1,2,4,8`);
+    /// panics with a readable message on malformed entries.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| {
+                    s.trim().parse::<usize>().unwrap_or_else(|_| {
+                        panic!(
+                            "option --{name} has value {v:?} which is not a \
+                             comma-separated usize list"
+                        )
+                    })
+                })
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -159,6 +179,14 @@ mod tests {
         assert_eq!(a.usize_or("n", 1), 64);
         assert_eq!(a.usize_or("missing", 7), 7);
         assert!((a.f64_or("lr", 0.1) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn usize_lists() {
+        let a = Args::parse(vec!["bench", "--threads", "1,2,4,8", "--batches=64,256"]);
+        assert_eq!(a.usize_list_or("threads", &[1]), vec![1, 2, 4, 8]);
+        assert_eq!(a.usize_list_or("batches", &[8]), vec![64, 256]);
+        assert_eq!(a.usize_list_or("missing", &[3, 5]), vec![3, 5]);
     }
 
     #[test]

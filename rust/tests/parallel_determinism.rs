@@ -1,0 +1,226 @@
+//! The parallel subsystem's determinism contract, tested end to end:
+//!
+//! * sharded DOF / Hessian runs are **bit-identical** across 1/2/4/8
+//!   threads — values, `L[φ]`, exact FLOP counts, and per-shard peak
+//!   tangent bytes;
+//! * sharded values match the unsharded engines exactly (per-row
+//!   arithmetic never mixes rows);
+//! * tangent-arena pooling changes allocator traffic only — the
+//!   `PeakTracker` measurements (Theorem 2.2's `M₁`) are unchanged;
+//! * per-shard peaks stay bounded by the analytic memory model.
+
+use dof::autodiff::{DofEngine, HessianEngine, MemoryModel, TangentArena};
+use dof::graph::{builder::random_layers, mlp_graph, sparse_mlp_graph, Act, Graph};
+use dof::operators::CoeffSpec;
+use dof::parallel::{Pool, DEFAULT_SHARD_ROWS};
+use dof::tensor::Tensor;
+use dof::util::Xoshiro256;
+
+fn random_symmetric(n: usize, rng: &mut Xoshiro256) -> Tensor {
+    let b = Tensor::randn(&[n, n], rng);
+    b.add(&b.transpose()).scale(0.5)
+}
+
+fn mlp_fixture() -> (Graph, Tensor, Tensor) {
+    let mut rng = Xoshiro256::new(2026);
+    let g = mlp_graph(&random_layers(&[12, 48, 48, 48, 1], &mut rng), Act::Tanh);
+    // Deliberately awkward batch: not a multiple of the shard size, so the
+    // last shard is short and the GEMM remainder paths get exercised.
+    let x = Tensor::randn(&[37, 12], &mut rng);
+    let a = random_symmetric(12, &mut rng);
+    (g, x, a)
+}
+
+#[test]
+fn dof_bit_identical_across_thread_counts() {
+    let (g, x, a) = mlp_fixture();
+    let eng = DofEngine::new(&a);
+    let base = eng.compute_sharded(&g, &x, &Pool::new(1), DEFAULT_SHARD_ROWS);
+    for threads in [2usize, 4, 8] {
+        let r = eng.compute_sharded(&g, &x, &Pool::new(threads), DEFAULT_SHARD_ROWS);
+        assert_eq!(r.values, base.values, "values differ at {threads} threads");
+        assert_eq!(
+            r.operator_values, base.operator_values,
+            "L[φ] differs at {threads} threads"
+        );
+        assert_eq!(r.cost, base.cost, "FLOP counts differ at {threads} threads");
+        assert_eq!(
+            r.peak_tangent_bytes, base.peak_tangent_bytes,
+            "peak tangent bytes differ at {threads} threads"
+        );
+        assert_eq!(r.out_active, base.out_active);
+        assert_eq!(r.out_tangent.data, base.out_tangent.data);
+    }
+}
+
+#[test]
+fn dof_sharded_matches_unsharded_engine() {
+    let (g, x, a) = mlp_fixture();
+    let eng = DofEngine::new(&a);
+    let full = eng.compute(&g, &x);
+    let sharded = eng.compute_sharded(&g, &x, &Pool::new(4), DEFAULT_SHARD_ROWS);
+    // Per-row arithmetic is row-independent → exact equality, not tolerance.
+    assert_eq!(sharded.values, full.values);
+    assert_eq!(sharded.operator_values, full.operator_values);
+    // Cost is exactly linear in batch rows on an MLP (no data-dependent
+    // sparsity), so the shard sum reproduces the full-batch count.
+    assert_eq!(sharded.cost, full.cost);
+    // Peak is per shard: full-batch peak scales as batch/max_shard_rows.
+    let batch = x.dims()[0] as u64;
+    let max_shard = DEFAULT_SHARD_ROWS as u64;
+    assert_eq!(
+        sharded.peak_tangent_bytes * batch,
+        full.peak_tangent_bytes * max_shard,
+        "peak should scale exactly with shard rows"
+    );
+}
+
+#[test]
+fn dof_sharded_respects_theorem22_bound_per_shard() {
+    let (g, x, a) = mlp_fixture();
+    let eng = DofEngine::new(&a);
+    let r = eng.compute_sharded(&g, &x, &Pool::new(4), DEFAULT_SHARD_ROWS);
+    // The analytic forward-liveness peak (eq. 26) at the shard's batch size
+    // bounds the measured per-shard peak.
+    let model = MemoryModel::new(&g);
+    let bound_bytes = model.forward_peak_scalars(eng.rank()) * 8 * DEFAULT_SHARD_ROWS as u64;
+    assert!(
+        r.peak_tangent_bytes <= bound_bytes,
+        "per-shard peak {} exceeds the Theorem 2.2 model bound {}",
+        r.peak_tangent_bytes,
+        bound_bytes
+    );
+}
+
+#[test]
+fn dof_sparse_architecture_bit_identical_across_threads() {
+    let mut rng = Xoshiro256::new(404);
+    let blocks: Vec<_> = (0..4)
+        .map(|_| random_layers(&[3, 10, 4], &mut rng))
+        .collect();
+    let g = sparse_mlp_graph(&blocks, Act::Tanh);
+    let x = Tensor::randn(&[21, 12], &mut rng).scale(0.4);
+    let a = CoeffSpec::BlockDiagGram {
+        blocks: 4,
+        block: 3,
+        rank: 3,
+        seed: 5,
+    }
+    .build();
+    let eng = DofEngine::new(&a);
+    let base = eng.compute_sharded(&g, &x, &Pool::new(1), 4);
+    for threads in [2usize, 4, 8] {
+        let r = eng.compute_sharded(&g, &x, &Pool::new(threads), 4);
+        assert_eq!(r.operator_values, base.operator_values);
+        assert_eq!(r.values, base.values);
+        assert_eq!(r.cost, base.cost);
+        assert_eq!(r.peak_tangent_bytes, base.peak_tangent_bytes);
+    }
+}
+
+#[test]
+fn hessian_bit_identical_across_thread_counts_and_matches_unsharded() {
+    let (g, x, a) = mlp_fixture();
+    let eng = HessianEngine::new(&a);
+    let full = eng.compute(&g, &x);
+    let base = eng.compute_sharded(&g, &x, &Pool::new(1), DEFAULT_SHARD_ROWS);
+    assert_eq!(base.values, full.values);
+    assert_eq!(base.operator_values, full.operator_values);
+    assert_eq!(base.gradient, full.gradient);
+    assert_eq!(base.hessian, full.hessian);
+    assert_eq!(base.cost, full.cost);
+    for threads in [2usize, 4, 8] {
+        let r = eng.compute_sharded(&g, &x, &Pool::new(threads), DEFAULT_SHARD_ROWS);
+        assert_eq!(r.values, base.values);
+        assert_eq!(r.operator_values, base.operator_values);
+        assert_eq!(r.gradient, base.gradient);
+        assert_eq!(r.hessian, base.hessian);
+        assert_eq!(r.cost, base.cost);
+        assert_eq!(r.peak_tangent_bytes, base.peak_tangent_bytes);
+    }
+}
+
+#[test]
+fn dof_and_hessian_still_agree_under_sharding() {
+    let (g, x, a) = mlp_fixture();
+    let dof = DofEngine::new(&a).compute_sharded(&g, &x, &Pool::new(4), DEFAULT_SHARD_ROWS);
+    let hes = HessianEngine::new(&a).compute_sharded(&g, &x, &Pool::new(4), DEFAULT_SHARD_ROWS);
+    for b in 0..x.dims()[0] {
+        let dv = dof.operator_values.at(b, 0);
+        let hv = hes.operator_values.at(b, 0);
+        assert!(
+            (dv - hv).abs() < 1e-8 * hv.abs().max(1.0),
+            "b={b}: DOF {dv} vs Hessian {hv}"
+        );
+    }
+}
+
+#[test]
+fn arena_reuse_leaves_results_and_peaks_unchanged() {
+    let (g, x, a) = mlp_fixture();
+    let eng = DofEngine::new(&a);
+    let fresh = eng.compute(&g, &x);
+
+    let mut arena = TangentArena::new();
+    let r1 = eng.compute_with_arena(&g, &x, &mut arena);
+    let after_first = arena.stats();
+    assert!(after_first.recycled > 0, "liveness frees should park buffers");
+
+    let r2 = eng.compute_with_arena(&g, &x, &mut arena);
+    let after_second = arena.stats();
+
+    // Pooling is invisible to results and to the Theorem 2.2 measurement.
+    assert_eq!(r1.values, fresh.values);
+    assert_eq!(r1.operator_values, fresh.operator_values);
+    assert_eq!(r2.values, fresh.values);
+    assert_eq!(r2.operator_values, fresh.operator_values);
+    assert_eq!(r1.peak_tangent_bytes, fresh.peak_tangent_bytes);
+    assert_eq!(r2.peak_tangent_bytes, fresh.peak_tangent_bytes);
+    assert_eq!(r1.cost, fresh.cost);
+    assert_eq!(r2.cost, fresh.cost);
+
+    // The second pass is served from the pool: it adds hits, and adds no
+    // more misses than the handful of result buffers that left the arena.
+    assert!(
+        after_second.hits > after_first.hits,
+        "second run should reuse parked buffers ({after_first:?} → {after_second:?})"
+    );
+    let second_misses = after_second.misses - after_first.misses;
+    assert!(
+        second_misses <= 4,
+        "steady-state pass should be ~allocation-free, got {second_misses} misses"
+    );
+}
+
+/// Wall-clock sanity for the tentpole claim (ignored by default: timing
+/// asserts are machine-dependent; run with `cargo test -- --ignored`).
+#[test]
+#[ignore]
+fn parallel_speedup_at_large_batch() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores < 8 {
+        eprintln!("skipping: only {cores} cores");
+        return;
+    }
+    let mut rng = Xoshiro256::new(7);
+    let g = mlp_graph(&random_layers(&[64, 256, 256, 256, 256, 1], &mut rng), Act::Tanh);
+    let x = Tensor::randn(&[256, 64], &mut rng);
+    let a = random_symmetric(64, &mut rng);
+    let eng = DofEngine::new(&a);
+    let time = |pool: &Pool| {
+        // Warm the per-thread arenas, then take the best of 3.
+        eng.compute_sharded(&g, &x, pool, DEFAULT_SHARD_ROWS);
+        (0..3)
+            .map(|_| {
+                let t0 = std::time::Instant::now();
+                std::hint::black_box(eng.compute_sharded(&g, &x, pool, DEFAULT_SHARD_ROWS));
+                t0.elapsed().as_secs_f64()
+            })
+            .fold(f64::INFINITY, f64::min)
+    };
+    let t1 = time(&Pool::new(1));
+    let t8 = time(&Pool::new(8));
+    let speedup = t1 / t8.max(1e-12);
+    eprintln!("batch 256: 1 thread {t1:.4}s, 8 threads {t8:.4}s → {speedup:.2}×");
+    assert!(speedup >= 3.0, "expected ≥3× speedup, got {speedup:.2}×");
+}

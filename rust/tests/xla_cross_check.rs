@@ -22,6 +22,18 @@ fn artifacts_dir() -> Option<std::path::PathBuf> {
     }
 }
 
+/// The PJRT executor is a stub without the `pjrt` feature; tests that
+/// execute artifacts must skip (not panic) on the default build even when
+/// the artifacts directory exists.
+fn pjrt_available() -> bool {
+    if cfg!(feature = "pjrt") {
+        true
+    } else {
+        eprintln!("skipping: built without the pjrt feature (stub executor)");
+        false
+    }
+}
+
 fn load_mlp(dir: &std::path::Path) -> LayerWeights {
     let entries = read_dofw(dir.join("mlp_weights.dofw")).expect("weights readable");
     entries_to_mlp(&entries)
@@ -59,6 +71,9 @@ fn rust_engines_agree_on_exported_weights() {
 /// The real cross-language check: XLA artifact vs Rust engine numerics.
 #[test]
 fn xla_artifacts_match_rust_engine() {
+    if !pjrt_available() {
+        return;
+    }
     let Some(dir) = artifacts_dir() else { return };
     let reg = ArtifactRegistry::open(&dir).expect("registry");
     let mut exec = Executor::cpu().expect("PJRT cpu client");
@@ -110,6 +125,9 @@ fn xla_artifacts_match_rust_engine() {
 /// that decreases the loss when applied (one SGD step).
 #[test]
 fn pinn_step_artifact_trains() {
+    if !pjrt_available() {
+        return;
+    }
     let Some(dir) = artifacts_dir() else { return };
     let reg = ArtifactRegistry::open(&dir).expect("registry");
     let mut exec = Executor::cpu().expect("client");
@@ -157,6 +175,9 @@ fn pinn_step_artifact_trains() {
 /// Hessian artifact on identical inputs.
 #[test]
 fn sparse_artifacts_agree() {
+    if !pjrt_available() {
+        return;
+    }
     let Some(dir) = artifacts_dir() else { return };
     let reg = ArtifactRegistry::open(&dir).expect("registry");
     if reg.path("hessian_sparse_general").is_err() {

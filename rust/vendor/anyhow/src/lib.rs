@@ -1,0 +1,174 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access and no registry cache, so the
+//! real `anyhow` cannot be fetched. This vendored crate implements the small
+//! surface the repository actually uses — [`Error`], [`Result`], the
+//! [`anyhow!`] / [`ensure!`] macros, and the [`Context`] extension trait —
+//! with the same observable semantics:
+//!
+//! * `Display` prints the outermost message; the alternate form (`{:#}`)
+//!   prints the whole context chain joined by `": "`.
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` (the
+//!   standard anyhow blanket conversion; `Error` itself deliberately does
+//!   not implement `std::error::Error`, which is what makes the blanket
+//!   `From` coherent).
+
+use std::fmt;
+
+/// Dynamic error: an ordered chain of messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Prepend a context message (the new outermost layer).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// `Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to fallible results.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error {
+            chain: vec![context.to_string(), e.to_string()],
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error {
+            chain: vec![f().to_string(), e.to_string()],
+        })
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)+) => {
+        $crate::Error::msg(format!($fmt, $($arg)+))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Result::<(), _>::Err(io_err())
+            .with_context(|| "reading config")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing thing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing thing"));
+    }
+
+    #[test]
+    fn macros() {
+        fn guard(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(guard(3).unwrap(), 3);
+        let e = guard(-1).unwrap_err();
+        assert_eq!(e.to_string(), "x must be positive, got -1");
+        let owned = anyhow!(String::from("owned message"));
+        assert_eq!(owned.to_string(), "owned message");
+    }
+}
