@@ -87,6 +87,18 @@ fn main() -> anyhow::Result<()> {
         "rust path: {steps} steps in {rust_secs:.1}s ({:.1} steps/s), rel-L2 error {err:.4e}",
         steps as f64 / rust_secs
     );
+    // Compile-once in action: every step rebuilds the graph with moved
+    // weights, but plan keys are weight-value independent, so the operator
+    // program compiled at step 1 served every later step from the cache.
+    let plan_stats = PinnTrainer::plan_stats();
+    println!(
+        "plan cache: {} compile(s), {} hits over {steps} steps",
+        plan_stats.misses, plan_stats.hits
+    );
+    anyhow::ensure!(
+        plan_stats.hits >= steps as u64 - 1,
+        "training should hit the plan cache from step 2 onward: {plan_stats:?}"
+    );
     let first5: f64 = rust_losses[..5].iter().sum::<f64>() / 5.0;
     let last5: f64 = rust_losses[steps - 5..].iter().sum::<f64>() / 5.0;
     anyhow::ensure!(

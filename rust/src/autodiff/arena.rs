@@ -29,6 +29,13 @@
 //! region — only the depot preserves the warmed pools across regions. In
 //! both cases no lock sits inside the per-node hot path; the depot is
 //! touched twice per *shard*.
+//!
+//! Since the plan subsystem landed, the **planned** executor
+//! ([`crate::plan::exec`]) no longer allocates per node at all: it checks
+//! one slab out of the arena per execution (`take_scratch`/`put`), so the
+//! arena's per-node traffic now belongs to the reference interpreter
+//! (`DofEngine::compute_with_arena`) and the warm-buffer behavior carries
+//! over to slabs unchanged.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;

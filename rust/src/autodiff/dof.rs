@@ -28,10 +28,19 @@
 //! First-order (`Σ b_i ∂_i`) and zeroth-order (`c·φ`) terms compose
 //! exactly: the `b`-part seeds `s` at the inputs and propagates through the
 //! same linear recursion; `c·φ` is added at the output.
+//!
+//! Execution is **planned**: every `compute*` entry point compiles (or
+//! fetches from [`crate::plan::global_cache`]) an
+//! [`crate::plan::OperatorProgram`] — fused schedule, static slab slots,
+//! precomputed §3.2 active rows, exact analytic costs — and runs the thin
+//! slab executor ([`crate::plan::exec`]). The original per-call graph walk
+//! survives as [`DofEngine::compute_with_arena`], the differential-testing
+//! reference the planned path is asserted bit-identical to.
 
 use crate::graph::{Graph, Op};
 use crate::linalg::LdlDecomposition;
 use crate::parallel::{self, Pool};
+use crate::plan::{self, OperatorProgram, PlanOptions};
 use crate::tensor::{matmul_nt_into, Tensor};
 
 use super::arena::{with_pooled_arena, with_thread_arena, TangentArena};
@@ -121,9 +130,64 @@ impl DofEngine {
         self.ldl.rank()
     }
 
+    /// Plan options implied by this engine's configuration (part of the
+    /// program cache key).
+    pub fn plan_options(&self) -> PlanOptions {
+        PlanOptions {
+            sparsity: self.exploit_sparsity,
+            lower_order_c: self.c.is_some(),
+        }
+    }
+
+    /// Compile the operator program for `graph` — the static side of the
+    /// eq. 7–9 pass (schedule with fused `Linear→Activation` steps,
+    /// liveness, slab slot assignment, §3.2 active rows, exact analytic
+    /// costs). Uncached; the `compute*` wrappers go through
+    /// [`plan::global_cache`] instead.
+    pub fn plan(&self, graph: &Graph) -> OperatorProgram {
+        OperatorProgram::compile(graph, &self.ldl, self.plan_options())
+    }
+
     /// Evaluate `L[φ]` on a batch `x: [batch, N]` in one forward pass.
+    ///
+    /// Compile-then-run wrapper: the [`OperatorProgram`] comes from the
+    /// keyed [`plan::global_cache`] (compiled on first use, value-
+    /// independent so training steps reuse it) and executes over the
+    /// calling thread's slab.
     pub fn compute(&self, graph: &Graph, x: &Tensor) -> DofResult {
-        self.compute_with_arena(graph, x, &mut TangentArena::new())
+        let program = plan::global_cache().get_or_compile(graph, &self.ldl, self.plan_options());
+        self.execute(&program, graph, x)
+    }
+
+    /// Execute a precompiled program, with slab storage checked out of the
+    /// calling thread's [`TangentArena`] (one arena transaction per call —
+    /// the per-node hot path touches no allocator and no arena).
+    pub fn execute(&self, program: &OperatorProgram, graph: &Graph, x: &Tensor) -> DofResult {
+        with_thread_arena(|arena| {
+            let mut slab = arena.take_scratch(program.slab_len(x.dims()[0]));
+            let res = self.execute_with_slab(program, graph, x, &mut slab);
+            arena.put(slab);
+            res
+        })
+    }
+
+    /// Execute a precompiled program with caller-supplied slab storage.
+    pub fn execute_with_slab(
+        &self,
+        program: &OperatorProgram,
+        graph: &Graph,
+        x: &Tensor,
+        slab: &mut Vec<f64>,
+    ) -> DofResult {
+        // A program compiled under different options would execute with
+        // the wrong active sets / cost accounting for this engine (e.g.
+        // the `dense()` ablation handed a sparse plan) — reject loudly.
+        assert_eq!(
+            program.options(),
+            self.plan_options(),
+            "program options do not match this engine's configuration"
+        );
+        plan::exec::execute_dof(program, graph, &self.ldl, self.b.as_deref(), self.c, x, slab)
     }
 
     /// [`Self::compute`] sharded across the process-wide pool (`--threads` /
@@ -150,11 +214,27 @@ impl DofEngine {
         pool: &Pool,
         shard_rows: usize,
     ) -> DofResult {
+        // Compile once per (structure, operator); the program is
+        // shard-invariant, so every shard executes the same plan.
+        let program = plan::global_cache().get_or_compile(graph, &self.ldl, self.plan_options());
+        self.execute_sharded(&program, graph, x, pool, shard_rows)
+    }
+
+    /// [`Self::compute_sharded`] over a precompiled program (the
+    /// compile-once half already done by the caller).
+    pub fn execute_sharded(
+        &self,
+        program: &OperatorProgram,
+        graph: &Graph,
+        x: &Tensor,
+        pool: &Pool,
+        shard_rows: usize,
+    ) -> DofResult {
         let batch = x.dims()[0];
         let n = x.dims()[1];
         let ranges = parallel::split_rows(batch, shard_rows);
         if ranges.len() <= 1 {
-            let serial = || with_thread_arena(|arena| self.compute_with_arena(graph, x, arena));
+            let serial = || self.execute(program, graph, x);
             // A 1-thread pool means genuinely serial, including the GEMMs.
             if pool.threads() == 1 {
                 return parallel::with_serial_guard(serial);
@@ -164,19 +244,26 @@ impl DofEngine {
         let shards = pool.run_sharded(ranges, |_, r| {
             let rows = r.end - r.start;
             let xs = Tensor::from_vec(&[rows, n], x.data()[r.start * n..r.end * n].to_vec());
-            // Depot (not thread-local) arenas: pool workers are fresh scoped
-            // threads per region, so only a process-wide depot preserves the
-            // warmed buffer pools across bench reps / server batches.
-            with_pooled_arena(|arena| self.compute_with_arena(graph, &xs, arena))
+            // Depot (not thread-local) slab storage: pool workers are fresh
+            // scoped threads per region, so only a process-wide depot
+            // preserves the warmed slabs across bench reps / server batches.
+            with_pooled_arena(|arena| {
+                let mut slab = arena.take_scratch(program.slab_len(rows));
+                let res = self.execute_with_slab(program, graph, &xs, &mut slab);
+                arena.put(slab);
+                res
+            })
         });
         merge_dof_shards(shards, batch)
     }
 
-    /// [`Self::compute`] with caller-supplied tangent storage. The arena
-    /// recycles every per-node buffer the liveness pass frees, so repeated
-    /// calls (training steps, bench reps, shards on one worker) run
-    /// allocation-free at steady state. Accounting is unaffected: the
-    /// [`PeakTracker`] counts logical tangent bytes, not allocator traffic.
+    /// The **reference interpreter**: the original per-call graph walk with
+    /// arena-recycled tangent storage. The planned executor
+    /// ([`Self::execute`]) replicates this pass operation for operation;
+    /// `rust/tests/plan_equivalence.rs` asserts the two agree bit for bit
+    /// on values, `L[φ]`, FLOP counts, and peak tangent bytes. Kept as the
+    /// differential-testing oracle (and as the spec of the runtime
+    /// semantics the plan compiler precomputes).
     pub fn compute_with_arena(
         &self,
         graph: &Graph,

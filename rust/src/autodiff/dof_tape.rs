@@ -21,9 +21,10 @@
 
 use crate::graph::{Graph, Op};
 use crate::linalg::LdlDecomposition;
-use crate::tensor::{matmul, matmul_nt, matmul_tn, Tensor};
+use crate::plan::{self, OperatorProgram, PlanOptions};
+use crate::tensor::{matmul, matmul_tn, Tensor};
 
-use super::forward_jacobian::{seed_input, TangentBatch};
+use super::forward_jacobian::TangentBatch;
 use super::Cost;
 
 /// Recorded DOF forward pass: all per-node tuples retained.
@@ -44,241 +45,40 @@ pub struct DofGrads {
 }
 
 /// Forward DOF pass that retains the full tape.
+///
+/// Compile-then-run wrapper: the schedule comes from the same
+/// [`OperatorProgram`] the benchmark engines execute (fetched from
+/// [`plan::global_cache`], so a training loop compiles once on step 1 and
+/// hits the cache from step 2 onward — plan keys are weight-value
+/// independent). Tape programs are compiled **dense** (`sparsity: false`):
+/// the reverse sweep needs the full rank-`r` tangent at every node, the
+/// same trade the pre-plan implementation made.
 pub fn dof_forward_tape(
     graph: &Graph,
     ldl: &LdlDecomposition,
     b_coef: Option<&[f64]>,
     x: &Tensor,
 ) -> DofTape {
-    let n = graph.input_dim();
-    assert_eq!(ldl.n, n);
-    let batch = x.dims()[0];
-    let r = ldl.rank();
-    let mut cost = Cost::zero();
-    let mut values: Vec<Tensor> = Vec::with_capacity(graph.len());
-    let mut tangents: Vec<TangentBatch> = Vec::with_capacity(graph.len());
-    let mut scalars: Vec<Tensor> = Vec::with_capacity(graph.len());
-    let mut in_off = 0usize;
+    let program = plan::global_cache().get_or_compile(
+        graph,
+        ldl,
+        PlanOptions {
+            sparsity: false,
+            lower_order_c: false,
+        },
+    );
+    dof_forward_tape_with_program(&program, graph, ldl, b_coef, x)
+}
 
-    for node in graph.nodes() {
-        let (v, g, s) = match &node.op {
-            Op::Input { dim } => {
-                let mut v = Tensor::zeros(&[batch, *dim]);
-                for b in 0..batch {
-                    v.row_mut(b).copy_from_slice(&x.row(b)[in_off..in_off + dim]);
-                }
-                let g = seed_input(&ldl.l, in_off, *dim, batch);
-                let mut s = Tensor::zeros(&[batch, *dim]);
-                if let Some(bv) = b_coef {
-                    for b in 0..batch {
-                        s.row_mut(b).copy_from_slice(&bv[in_off..in_off + dim]);
-                    }
-                }
-                in_off += dim;
-                (v, g, s)
-            }
-            Op::Linear { weight, bias } => {
-                let p = node.inputs[0];
-                let mut v = matmul_nt(&values[p], weight);
-                for b in 0..batch {
-                    for (o, &bi) in v.row_mut(b).iter_mut().zip(bias.iter()) {
-                        *o += bi;
-                    }
-                }
-                let g = TangentBatch {
-                    data: matmul_nt(&tangents[p].data, weight),
-                    batch,
-                    t: r,
-                };
-                let s = matmul_nt(&scalars[p], weight);
-                let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
-                cost.muls += ((batch * (r + 2)) * out_d * in_d) as u64;
-                (v, g, s)
-            }
-            Op::Activation { act } => {
-                let p = node.inputs[0];
-                let h = &values[p];
-                let d = node.dim;
-                let v = h.map(|x| act.f(x));
-                let mut g = tangents[p].clone();
-                let mut s = Tensor::zeros(&[batch, d]);
-                for b in 0..batch {
-                    let hrow = h.row(b);
-                    let df: Vec<f64> = hrow.iter().map(|&x| act.df(x)).collect();
-                    let d2f: Vec<f64> = hrow.iter().map(|&x| act.d2f(x)).collect();
-                    let mut quad = vec![0.0; d];
-                    for k in 0..r {
-                        let sign = ldl.d[k];
-                        let row = tangents[p].row(b, k);
-                        for c in 0..d {
-                            quad[c] += sign * row[c] * row[c];
-                        }
-                    }
-                    for k in 0..r {
-                        let row = g.row_mut(b, k);
-                        for c in 0..d {
-                            row[c] *= df[c];
-                        }
-                    }
-                    let sp = s.row_mut(b);
-                    let psr = scalars[p].row(b);
-                    for c in 0..d {
-                        sp[c] = d2f[c] * quad[c] + df[c] * psr[c];
-                    }
-                }
-                cost.muls += (batch * d * (2 * r + 2)) as u64;
-                (v, g, s)
-            }
-            Op::Slice { start, len } => {
-                let p = node.inputs[0];
-                let mut v = Tensor::zeros(&[batch, *len]);
-                let mut s = Tensor::zeros(&[batch, *len]);
-                for b in 0..batch {
-                    v.row_mut(b)
-                        .copy_from_slice(&values[p].row(b)[*start..*start + *len]);
-                    s.row_mut(b)
-                        .copy_from_slice(&scalars[p].row(b)[*start..*start + *len]);
-                }
-                let mut g = TangentBatch::zeros(batch, r, *len);
-                for row in 0..batch * r {
-                    g.data
-                        .row_mut(row)
-                        .copy_from_slice(&tangents[p].data.row(row)[*start..*start + *len]);
-                }
-                (v, g, s)
-            }
-            Op::Add => {
-                let p0 = node.inputs[0];
-                let mut v = values[p0].clone();
-                let mut gd = tangents[p0].data.clone();
-                let mut s = scalars[p0].clone();
-                for &p in &node.inputs[1..] {
-                    v = v.add(&values[p]);
-                    gd = gd.add(&tangents[p].data);
-                    s = s.add(&scalars[p]);
-                }
-                (v, TangentBatch { data: gd, batch, t: r }, s)
-            }
-            Op::Mul => {
-                let k = node.inputs.len();
-                let d = node.dim;
-                let mut v = values[node.inputs[0]].clone();
-                for &p in &node.inputs[1..] {
-                    v = v.mul(&values[p]);
-                }
-                let mut g = TangentBatch::zeros(batch, r, d);
-                let mut s = Tensor::zeros(&[batch, d]);
-                for b in 0..batch {
-                    let prows: Vec<&[f64]> = node
-                        .inputs
-                        .iter()
-                        .map(|&p| values[p].row(b))
-                        .collect();
-                    for pi in 0..k {
-                        let mut coef = vec![1.0; d];
-                        for (qi, pr) in prows.iter().enumerate() {
-                            if qi != pi {
-                                for (c, &xv) in coef.iter_mut().zip(*pr) {
-                                    *c *= xv;
-                                }
-                            }
-                        }
-                        let pg = &tangents[node.inputs[pi]];
-                        for kk in 0..r {
-                            let src = pg.row(b, kk).to_vec();
-                            let dst = g.row_mut(b, kk);
-                            for c in 0..d {
-                                dst[c] += coef[c] * src[c];
-                            }
-                        }
-                        let ps = &scalars[node.inputs[pi]];
-                        {
-                            let srow = s.row_mut(b);
-                            for c in 0..d {
-                                srow[c] += coef[c] * ps.row(b)[c];
-                            }
-                        }
-                        for qi in (pi + 1)..k {
-                            let mut coef2 = vec![1.0; d];
-                            for (ri, pr) in prows.iter().enumerate() {
-                                if ri != pi && ri != qi {
-                                    for (c, &xv) in coef2.iter_mut().zip(*pr) {
-                                        *c *= xv;
-                                    }
-                                }
-                            }
-                            let gq = &tangents[node.inputs[qi]];
-                            let mut cross = vec![0.0; d];
-                            for kk in 0..r {
-                                let sign = ldl.d[kk];
-                                let gp_row = pg.row(b, kk);
-                                let gq_row = gq.row(b, kk);
-                                for c in 0..d {
-                                    cross[c] += sign * gp_row[c] * gq_row[c];
-                                }
-                            }
-                            let srow = s.row_mut(b);
-                            for c in 0..d {
-                                srow[c] += 2.0 * coef2[c] * cross[c];
-                            }
-                        }
-                    }
-                }
-                cost.muls += (batch * d * k * (r + k)) as u64;
-                (v, g, s)
-            }
-            Op::SumReduce => {
-                let p = node.inputs[0];
-                let mut v = Tensor::zeros(&[batch, 1]);
-                let mut s = Tensor::zeros(&[batch, 1]);
-                for b in 0..batch {
-                    v.set(b, 0, values[p].row(b).iter().sum());
-                    s.set(b, 0, scalars[p].row(b).iter().sum());
-                }
-                let mut g = TangentBatch::zeros(batch, r, 1);
-                for row in 0..batch * r {
-                    g.data.data_mut()[row] = tangents[p].data.row(row).iter().sum();
-                }
-                (v, g, s)
-            }
-            Op::Concat => {
-                let mut v = Tensor::zeros(&[batch, node.dim]);
-                let mut s = Tensor::zeros(&[batch, node.dim]);
-                let mut g = TangentBatch::zeros(batch, r, node.dim);
-                for b in 0..batch {
-                    let mut off = 0;
-                    for &p in &node.inputs {
-                        let pv = values[p].row(b);
-                        v.row_mut(b)[off..off + pv.len()].copy_from_slice(pv);
-                        let ps = scalars[p].row(b);
-                        s.row_mut(b)[off..off + ps.len()].copy_from_slice(ps);
-                        off += pv.len();
-                    }
-                }
-                for row in 0..batch * r {
-                    let mut off = 0;
-                    for &p in &node.inputs {
-                        let src = tangents[p].data.row(row);
-                        g.data.row_mut(row)[off..off + src.len()].copy_from_slice(src);
-                        off += src.len();
-                    }
-                }
-                (v, g, s)
-            }
-        };
-        values.push(v);
-        tangents.push(g);
-        scalars.push(s);
-    }
-
-    DofTape {
-        values,
-        tangents,
-        scalars,
-        batch,
-        r,
-        cost,
-    }
+/// [`dof_forward_tape`] over a caller-held (dense) program.
+pub fn dof_forward_tape_with_program(
+    program: &OperatorProgram,
+    graph: &Graph,
+    ldl: &LdlDecomposition,
+    b_coef: Option<&[f64]>,
+    x: &Tensor,
+) -> DofTape {
+    plan::exec::execute_tape(program, graph, ldl, b_coef, x)
 }
 
 /// Reverse sweep over the tape.

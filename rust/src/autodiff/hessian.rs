@@ -17,6 +17,7 @@
 
 use crate::graph::{Graph, Op};
 use crate::parallel::{self, Pool};
+use crate::plan::OperatorProgram;
 use crate::tensor::{matmul, Tensor};
 
 use super::backward::backward;
@@ -92,15 +93,41 @@ impl HessianEngine {
         pool: &Pool,
         shard_rows: usize,
     ) -> HessianResult {
+        self.execute_sharded(None, graph, x, pool, shard_rows)
+    }
+
+    /// [`Self::compute_sharded`] over a caller-held [`OperatorProgram`]
+    /// (typically shared with the DOF engine through the plan cache): the
+    /// program is compiled once and every shard reuses its metadata and
+    /// cached Jacobian seed.
+    pub fn compute_sharded_with_program(
+        &self,
+        program: &OperatorProgram,
+        graph: &Graph,
+        x: &Tensor,
+        pool: &Pool,
+        shard_rows: usize,
+    ) -> HessianResult {
+        self.execute_sharded(Some(program), graph, x, pool, shard_rows)
+    }
+
+    fn execute_sharded(
+        &self,
+        program: Option<&OperatorProgram>,
+        graph: &Graph,
+        x: &Tensor,
+        pool: &Pool,
+        shard_rows: usize,
+    ) -> HessianResult {
         let batch = x.dims()[0];
         let nin = x.dims()[1];
         let ranges = parallel::split_rows(batch, shard_rows);
         if ranges.len() <= 1 {
             // A 1-thread pool means genuinely serial, including the GEMMs.
             if pool.threads() == 1 {
-                return parallel::with_serial_guard(|| self.compute(graph, x));
+                return parallel::with_serial_guard(|| self.execute(program, graph, x));
             }
-            return self.compute(graph, x);
+            return self.execute(program, graph, x);
         }
         let shards = pool.run_sharded(ranges, |_, r| {
             let rows = r.end - r.start;
@@ -108,21 +135,61 @@ impl HessianEngine {
                 &[rows, nin],
                 x.data()[r.start * nin..r.end * nin].to_vec(),
             );
-            self.compute(graph, &xs)
+            self.execute(program, graph, &xs)
         });
         merge_hessian_shards(shards, batch)
     }
 
     /// Evaluate `L[φ]` on a batch `x: [batch, N]` of points.
     pub fn compute(&self, graph: &Graph, x: &Tensor) -> HessianResult {
+        self.execute(None, graph, x)
+    }
+
+    /// [`Self::compute`] as a thin executor over a shared
+    /// [`OperatorProgram`]: the program supplies validated schedule
+    /// metadata and the cached `I_N` Jacobian seed (rebuilt per call on
+    /// the plain path), and its [`crate::plan::PlanAnalytics`] carry this
+    /// method's closed-form Appendix B/D numbers so benches can report
+    /// them without executing. Measured results (values, Hessian, exact
+    /// FLOPs, peak bytes) are identical on both entry points.
+    pub fn compute_with_program(
+        &self,
+        program: &OperatorProgram,
+        graph: &Graph,
+        x: &Tensor,
+    ) -> HessianResult {
+        assert_eq!(
+            program.input_dim(),
+            graph.input_dim(),
+            "program/graph mismatch"
+        );
+        assert_eq!(program.node_count(), graph.len(), "program/graph mismatch");
+        self.execute(Some(program), graph, x)
+    }
+
+    fn execute(
+        &self,
+        program: Option<&OperatorProgram>,
+        graph: &Graph,
+        x: &Tensor,
+    ) -> HessianResult {
         let n = graph.input_dim();
         assert_eq!(self.a.dims()[0], n, "A must be N×N with N = input dim");
         let batch = x.dims()[0];
         let mut peak = PeakTracker::new();
         let mut cost = Cost::zero();
 
-        // (1) + (2): forward values and full-Jacobian tangents (eq. 13).
-        let fj = forward_with_seed(graph, x, &Tensor::eye(n));
+        // (1) + (2): forward values and full-Jacobian tangents (eq. 13),
+        // seeded with the program's cached identity when one is shared.
+        let owned_seed;
+        let seed = match program {
+            Some(p) => p.identity_seed(),
+            None => {
+                owned_seed = Tensor::eye(n);
+                &owned_seed
+            }
+        };
+        let fj = forward_with_seed(graph, x, seed);
         cost += fj.cost;
         for t in &fj.tangents {
             peak.alloc(t.bytes());

@@ -21,13 +21,27 @@
 //!   engine passes run allocation-free while the [`PeakTracker`] accounting
 //!   stays bit-identical.
 //!
+//! ### Planned execution
+//!
+//! The engines are thin executors over compiled
+//! [`crate::plan::OperatorProgram`]s: every `compute*` entry point fetches
+//! the program for its `(graph structure, operator)` pair from the keyed
+//! [`crate::plan::global_cache`] (compiling on first use) and runs the
+//! slab executor — fused schedule, static buffer slots, precomputed §3.2
+//! active rows, analytic cost/peak accounting. The pre-plan interpreter is
+//! retained as `DofEngine::compute_with_arena`, the differential-testing
+//! reference. `dof_tape`'s forward pass executes the same program in
+//! retain-all mode; the Hessian baseline shares the program's metadata and
+//! cached Jacobian seed via `compute_with_program`.
+//!
 //! ### Parallel execution
 //!
 //! Both engines expose `compute_sharded` / `compute_parallel`: the batch is
 //! split into fixed 8-row shards ([`crate::parallel::DEFAULT_SHARD_ROWS`])
 //! executed across a scoped thread pool ([`crate::parallel::Pool`]), each
-//! worker running with an arena checked out of the process-wide depot
-//! ([`arena::with_pooled_arena`]). Shard boundaries depend only on the
+//! worker running with slab storage checked out of the process-wide depot
+//! ([`arena::with_pooled_arena`]). The program is compiled once per batch
+//! call and is shard-invariant; shard boundaries depend only on the
 //! batch size and reduction is shard-ordered, so values, `L[φ]`, FLOP
 //! tallies, and per-shard peak bytes are bit-identical across thread counts.
 //!

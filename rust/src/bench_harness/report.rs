@@ -8,6 +8,12 @@
 //!
 //! Produced by `dof bench grid [--batches 8,64,256 --threads-grid 1,2,4,8]`
 //! and by `cargo bench --bench table1_mlp`.
+//!
+//! Since the plan subsystem landed, the grid separates **plan-compile
+//! time** (paid once per `(architecture, operator)` pair, measured
+//! uncached) from **per-batch execute time** (every cell reuses one
+//! compiled [`crate::plan::OperatorProgram`], which is what serving and
+//! training see at steady state). Both land in the JSON.
 
 use std::io::Write as _;
 
@@ -40,6 +46,28 @@ impl GridCell {
     }
 }
 
+/// One-time plan-compile measurement for the grid's (model, operator)
+/// pair, reported alongside the per-batch execute times it amortizes.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanTiming {
+    /// Median wall-clock of an uncached `OperatorProgram` compile.
+    pub compile_seconds: f64,
+    /// Slab scalars per batch row (static slot assignment footprint).
+    pub slab_per_row: usize,
+    /// Fused `Linear→Activation` steps in the schedule.
+    pub fused_steps: usize,
+    /// Exact DOF multiplications per batch row (analytic, no execution).
+    pub dof_muls_per_row: u64,
+}
+
+/// Grid sweep output: per-cell execute measurements plus the one-time
+/// plan-compile datum.
+#[derive(Debug, Clone)]
+pub struct GridReport {
+    pub cells: Vec<GridCell>,
+    pub plan: PlanTiming,
+}
+
 /// Sweep the Table-1 MLP (elliptic full-rank operator) over a batch ×
 /// threads grid. The model, graph, and operator are built once; per cell
 /// the engines run through the same sharded path the CLI exposes.
@@ -47,7 +75,7 @@ pub fn run_table1_grid(
     cfg: &Table1Config,
     batches: &[usize],
     threads: &[usize],
-) -> Vec<GridCell> {
+) -> GridReport {
     let model = Mlp::init(
         MlpSpec {
             in_dim: cfg.n,
@@ -67,6 +95,25 @@ pub fn run_table1_grid(
     let bencher = Bencher::new(cfg.bench);
     let mut rng = Xoshiro256::new(cfg.seed ^ 0xBEEF);
     let mut cells = Vec::with_capacity(batches.len() * threads.len());
+    // Plan-compile cost, measured uncached (the cost the keyed cache
+    // amortizes away); every cell below reuses this one program.
+    let dof_engine = op.dof_engine();
+    let hes_engine = op.hessian_engine();
+    let compile_reps = 5usize;
+    let mut compile_times = Vec::with_capacity(compile_reps);
+    for _ in 0..compile_reps {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(dof_engine.plan(&graph));
+        compile_times.push(t0.elapsed().as_secs_f64());
+    }
+    compile_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let program = dof_engine.plan(&graph);
+    let plan = PlanTiming {
+        compile_seconds: compile_times[compile_reps / 2],
+        slab_per_row: program.slab_per_row(),
+        fused_steps: program.fused_steps(),
+        dof_muls_per_row: program.cost(1).muls,
+    };
     // The cell's thread count must also govern the row-parallel GEMM, which
     // consults the process-global pool (reached on single-shard batches
     // where no worker suppression applies) — otherwise small-batch cells
@@ -77,15 +124,19 @@ pub fn run_table1_grid(
         for &t in threads {
             let pool = Pool::new(t.max(1));
             crate::parallel::set_global_threads(t.max(1));
-            let dof_engine = op.dof_engine();
             let dof = bencher.run(&format!("grid/dof/b{batch}t{t}"), || {
-                let r = dof_engine.compute_sharded(&graph, &x, &pool, DEFAULT_SHARD_ROWS);
+                let r = dof_engine.execute_sharded(&program, &graph, &x, &pool, DEFAULT_SHARD_ROWS);
                 std::hint::black_box(&r.operator_values);
                 (Some(r.cost.muls), Some(r.peak_tangent_bytes))
             });
-            let hes_engine = op.hessian_engine();
             let hes = bencher.run(&format!("grid/hessian/b{batch}t{t}"), || {
-                let r = hes_engine.compute_sharded(&graph, &x, &pool, DEFAULT_SHARD_ROWS);
+                let r = hes_engine.compute_sharded_with_program(
+                    &program,
+                    &graph,
+                    &x,
+                    &pool,
+                    DEFAULT_SHARD_ROWS,
+                );
                 std::hint::black_box(&r.operator_values);
                 (Some(r.cost.muls), Some(r.peak_tangent_bytes))
             });
@@ -102,11 +153,14 @@ pub fn run_table1_grid(
         }
     }
     crate::parallel::set_global_threads(ambient_threads);
-    cells
+    GridReport { cells, plan }
 }
 
-/// Serialize a grid to the `BENCH_table1.json` schema.
-pub fn grid_json(cfg: &Table1Config, cells: &[GridCell]) -> String {
+/// Serialize a grid to the `BENCH_table1.json` schema. `dof_ms` /
+/// `hessian_ms` are per-batch *execute* times over one reused compiled
+/// program; the one-time compile cost is the top-level `plan` object.
+pub fn grid_json(cfg: &Table1Config, report: &GridReport) -> String {
+    let cells = &report.cells;
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"table1_mlp_grid\",\n");
@@ -114,6 +168,13 @@ pub fn grid_json(cfg: &Table1Config, cells: &[GridCell]) -> String {
     s.push_str(&format!(
         "  \"config\": {{\"n\": {}, \"hidden\": {}, \"layers\": {}, \"seed\": {}, \"shard_rows\": {}}},\n",
         cfg.n, cfg.hidden, cfg.layers, cfg.seed, DEFAULT_SHARD_ROWS
+    ));
+    s.push_str(&format!(
+        "  \"plan\": {{\"compile_ms\": {:.4}, \"slab_scalars_per_row\": {}, \"fused_steps\": {}, \"dof_muls_per_row\": {}, \"execution\": \"plan-reused\"}},\n",
+        report.plan.compile_seconds * 1e3,
+        report.plan.slab_per_row,
+        report.plan.fused_steps,
+        report.plan.dof_muls_per_row
     ));
     s.push_str("  \"cells\": [\n");
     for (i, c) in cells.iter().enumerate() {
@@ -141,10 +202,10 @@ pub fn grid_json(cfg: &Table1Config, cells: &[GridCell]) -> String {
 pub fn write_grid_json(
     path: &str,
     cfg: &Table1Config,
-    cells: &[GridCell],
+    report: &GridReport,
 ) -> std::io::Result<()> {
     let mut f = std::fs::File::create(path)?;
-    f.write_all(grid_json(cfg, cells).as_bytes())
+    f.write_all(grid_json(cfg, report).as_bytes())
 }
 
 #[cfg(test)]
@@ -167,14 +228,21 @@ mod tests {
                 max_seconds: 10.0,
             },
         };
-        let cells = run_table1_grid(&cfg, &[4, 9], &[1, 2]);
+        let report = run_table1_grid(&cfg, &[4, 9], &[1, 2]);
+        let cells = &report.cells;
         assert_eq!(cells.len(), 4);
         // FLOP counts are exact and thread-count-invariant (the determinism
         // contract): same batch → identical muls across the threads axis.
         assert_eq!(cells[0].dof_muls, cells[1].dof_muls);
         assert_eq!(cells[2].hessian_muls, cells[3].hessian_muls);
-        let json = grid_json(&cfg, &cells);
+        // The analytic per-row count matches the executed cell exactly.
+        assert_eq!(cells[0].dof_muls, report.plan.dof_muls_per_row * 4);
+        assert!(report.plan.compile_seconds >= 0.0);
+        assert!(report.plan.slab_per_row > 0);
+        let json = grid_json(&cfg, &report);
         assert!(json.contains("\"bench\": \"table1_mlp_grid\""));
+        assert!(json.contains("\"plan\""));
+        assert!(json.contains("\"compile_ms\""));
         assert!(json.contains("\"batch\": 9"));
         assert!(json.ends_with("}\n"));
         // Balanced braces/brackets as a cheap well-formedness check.

@@ -11,7 +11,12 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::autodiff::arena::with_pooled_arena;
+use crate::autodiff::DofEngine;
+use crate::graph::Graph;
 use crate::parallel::{split_rows, Pool};
+use crate::plan;
+use crate::tensor::Tensor;
 
 use super::batcher::{BatchPolicy, Batcher, CutBatch};
 use super::metrics::Metrics;
@@ -214,6 +219,45 @@ impl ModelServer {
             Ok((phi, lphi))
         };
         Self::spawn_with(width, policy, metrics, compute)
+    }
+
+    /// Spawn a sharded worker around the pure-Rust DOF engine with
+    /// **compile-once execution**: the operator program is fetched from
+    /// the keyed global plan cache at spawn (so respawning a server for
+    /// the same `(model, operator)` pair — rolling restarts, per-model
+    /// router instances — reuses the compiled program), and every batch
+    /// the coordinator cuts executes that precompiled program per shard
+    /// with a depot-checked slab. Width is the model input dimension.
+    pub fn spawn_dof(
+        graph: Graph,
+        engine: DofEngine,
+        policy: BatchPolicy,
+        pool: Pool,
+        shard_rows: usize,
+    ) -> Self {
+        let width = graph.input_dim();
+        let program =
+            plan::global_cache().get_or_compile(&graph, &engine.ldl, engine.plan_options());
+        let compute = move |data: &[f32], w: usize| -> Result<(Vec<f32>, Vec<f32>)> {
+            let rows = data.len() / w;
+            let x = Tensor::from_vec(
+                &[rows, w],
+                data.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
+            );
+            // Depot slabs: this closure runs on scoped pool workers whose
+            // thread-locals die with each batch's parallel region.
+            let res = with_pooled_arena(|arena| {
+                let mut slab = arena.take_scratch(program.slab_len(rows));
+                let r = engine.execute_with_slab(&program, &graph, &x, &mut slab);
+                arena.put(slab);
+                r
+            });
+            Ok((
+                res.values.data().iter().map(|&v| v as f32).collect(),
+                res.operator_values.data().iter().map(|&v| v as f32).collect(),
+            ))
+        };
+        Self::spawn_sharded(width, policy, pool, shard_rows, compute)
     }
 
     /// Spawn a worker that executes a PJRT artifact. The executor is
@@ -441,6 +485,49 @@ mod tests {
         let h = server.handle();
         let err = h.eval_blocking(vec![1.0, 2.0]).unwrap_err();
         assert!(err.to_string().contains("shard exploded"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn dof_backend_serves_with_compiled_program() {
+        use crate::graph::{builder::random_layers, mlp_graph, Act};
+        use crate::operators::{CoeffSpec, Operator};
+        use crate::util::Xoshiro256;
+        let mut rng = Xoshiro256::new(77);
+        let n = 4;
+        let graph = mlp_graph(&random_layers(&[n, 8, 1], &mut rng), Act::Tanh);
+        let op = Operator::from_spec(CoeffSpec::EllipticGram {
+            n,
+            rank: n,
+            seed: 1,
+        });
+        let server = ModelServer::spawn_dof(
+            graph.clone(),
+            op.dof_engine(),
+            BatchPolicy {
+                capacity: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            Pool::new(2),
+            2,
+        );
+        let h = server.handle();
+        let pts: Vec<f32> = (0..5 * n).map(|i| (i as f32) * 0.1).collect();
+        let resp = h.eval_blocking(pts.clone()).unwrap();
+        assert_eq!(resp.phi.len(), 5);
+        assert_eq!(resp.lphi.len(), 5);
+        // Cross-check against a direct engine evaluation (serving casts
+        // through f32, so compare loosely).
+        let x = Tensor::from_vec(&[5, n], pts.iter().map(|&v| v as f64).collect::<Vec<f64>>());
+        let direct = op.dof_engine().compute(&graph, &x);
+        for b in 0..5 {
+            assert!(
+                (resp.lphi[b] as f64 - direct.operator_values.at(b, 0)).abs() < 1e-3,
+                "row {b}: served {} vs direct {}",
+                resp.lphi[b],
+                direct.operator_values.at(b, 0)
+            );
+        }
         server.shutdown();
     }
 

@@ -16,9 +16,39 @@
 //!   [`parallel`]
 //! * the contribution: [`autodiff`] (DOF + the Hessian-based baseline,
 //!   both instrumented with exact FLOP and peak-memory accounting)
+//! * the planned execution layer: [`plan`] (compile-once operator
+//!   programs under every engine)
 //! * applications: [`operators`], [`nn`], [`pde`], [`train`]
 //! * infrastructure: [`runtime`] (XLA-PJRT artifact execution),
 //!   [`coordinator`] (batching / serving), [`bench_harness`]
+//!
+//! ## Compile-once operator programs
+//!
+//! Everything about the eq. 7–9 pass that is static per
+//! `(architecture, operator)` is compiled **once** into a
+//! [`plan::OperatorProgram`] and reused for every batch:
+//!
+//! * the node schedule with fused `Linear→Activation` steps;
+//! * the liveness table (eq. 24) and a **static slab slot assignment** —
+//!   each node's `(v, s, g)` tuple lives at a fixed offset in one
+//!   contiguous per-shard slab, so the hot path performs no arena lookups
+//!   and no per-node allocation (the `PeakTracker` numbers are replayed
+//!   from the identical alloc/free event order, so Theorem 2.2
+//!   measurements are unchanged);
+//! * the §3.2 active-tangent-row sets, precomputed structurally instead of
+//!   rescanned from `L` per call;
+//! * exact analytic FLOP and peak-byte costs (both linear in the batch),
+//!   so benches report them without executing.
+//!
+//! `DofEngine::compute*` are compile-then-run wrappers over the keyed
+//! [`plan::global_cache`]; cache keys are **weight-value independent**
+//! (structure + zero patterns), so serving and the PINN trainer compile on
+//! the first batch and execute thereafter. Programs are shard-invariant —
+//! they depend on neither batch size nor thread count — which is how the
+//! planned path upholds the determinism contract below by construction.
+//! The pre-plan interpreter survives as `DofEngine::compute_with_arena`,
+//! the differential-testing reference (`rust/tests/plan_equivalence.rs`
+//! asserts bit-identical values, `L[φ]`, FLOP counts, and peak bytes).
 //!
 //! ## Parallel execution
 //!
@@ -64,6 +94,7 @@ pub mod nn;
 pub mod operators;
 pub mod parallel;
 pub mod pde;
+pub mod plan;
 pub mod prop;
 pub mod runtime;
 pub mod tensor;

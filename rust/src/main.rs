@@ -26,7 +26,6 @@ use dof::parallel::{self, Pool};
 use dof::pde::trainer::{PinnConfig, PinnTrainer};
 use dof::pde::{fokker_planck, heat_equation, klein_gordon, poisson};
 use dof::runtime::{ArtifactRegistry, Executor};
-use dof::tensor::Tensor;
 use dof::train::AdamConfig;
 use dof::util::{fmt_bytes, fmt_duration, Args, Xoshiro256};
 
@@ -44,14 +43,18 @@ fn main() {
 
 fn run(args: &Args) -> Result<()> {
     // Process-wide thread knob (also drives the row-parallel GEMM); the
-    // `DOF_THREADS` env var is the non-CLI equivalent.
-    if let Some(t) = args.get("threads") {
-        let parsed: usize = t
-            .parse()
-            .ok()
-            .filter(|&t| t > 0)
-            .ok_or_else(|| anyhow!("--threads must be a positive integer, got {t:?}"))?;
-        parallel::set_global_threads(parsed);
+    // `DOF_THREADS` env var is the non-CLI equivalent. Both are validated
+    // up front — unconditionally, so a malformed `DOF_THREADS` is a hard
+    // error naming the offending value even when `--threads` would win —
+    // never a panic or a silent fall-back to all cores.
+    let env_threads = parallel::env_threads_checked().map_err(|e| anyhow!(e))?;
+    match args.thread_count("threads").map_err(|e| anyhow!(e))? {
+        Some(t) => parallel::set_global_threads(t),
+        None => {
+            if let Some(t) = env_threads {
+                parallel::set_global_threads(t);
+            }
+        }
     }
     match args.command.as_deref() {
         Some("bench") => cmd_bench(args),
@@ -176,10 +179,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 "grid: MLP {}→{}×{}→1, batches {batches:?} × threads {threads:?} …",
                 cfg.n, cfg.hidden, cfg.layers
             );
-            let cells = run_table1_grid(&cfg, &batches, &threads);
-            println!("| batch | threads | DOF | Hessian | H/D ratio |");
-            println!("|-------|---------|-----|---------|-----------|");
-            for c in &cells {
+            let report = run_table1_grid(&cfg, &batches, &threads);
+            println!(
+                "plan compile: {} once per (architecture, operator) — \
+                 {} fused steps, {} slab scalars/row, {} muls/row analytic; \
+                 per-batch rows below execute the reused program",
+                fmt_duration(report.plan.compile_seconds),
+                report.plan.fused_steps,
+                report.plan.slab_per_row,
+                report.plan.dof_muls_per_row
+            );
+            println!("| batch | threads | DOF exec | Hessian exec | H/D ratio |");
+            println!("|-------|---------|----------|--------------|-----------|");
+            for c in &report.cells {
                 println!(
                     "| {} | {} | {} | {} | {:.2} |",
                     c.batch,
@@ -189,7 +201,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                     c.time_ratio()
                 );
             }
-            write_grid_json(&out, &cfg, &cells)?;
+            write_grid_json(&out, &cfg, &report)?;
             eprintln!("grid written to {out}");
         }
         "xla" => cmd_bench_xla(args)?,
@@ -426,10 +438,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// `dof serve --engine rust`: the pure-Rust DOF engine as a sharded serving
-/// backend — batches cut by the coordinator are row-sharded across the pool,
-/// each worker running the tuple propagation on its shard with a tangent
-/// arena checked out of the process-wide depot (scoped workers' thread-locals
-/// would die with each batch's parallel region).
+/// backend with **compile-once execution** — the operator program is keyed
+/// into the global plan cache at spawn, and every batch the coordinator
+/// cuts executes that precompiled program per shard (slab storage from the
+/// process-wide depot; scoped workers' thread-locals would die with each
+/// batch's parallel region).
 fn serve_rust_backend(args: &Args) -> Result<(ModelServer, usize)> {
     let n = args.usize_or("n", 64);
     let seed = args.u64_or("seed", 0);
@@ -445,39 +458,33 @@ fn serve_rust_backend(args: &Args) -> Result<(ModelServer, usize)> {
     );
     let graph = model.to_graph();
     let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed });
-    let engine = op.dof_engine();
     let pool = Pool::from_env();
     let batch = args.usize_or("batch", 32);
+    let t0 = std::time::Instant::now();
+    let program = op.dof_program(&graph);
     println!(
         "serving rust DOF engine (N={n}, rank {}, batch {batch}, {} threads)",
         op.rank(),
         pool.threads()
     );
-    let compute = move |data: &[f32], width: usize| -> Result<(Vec<f32>, Vec<f32>)> {
-        let rows = data.len() / width;
-        let x = Tensor::from_vec(
-            &[rows, width],
-            data.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
-        );
-        // Depot arenas: this closure runs on scoped pool workers, whose
-        // thread-locals die with each batch's parallel region.
-        let res = dof::autodiff::arena::with_pooled_arena(|arena| {
-            engine.compute_with_arena(&graph, &x, arena)
-        });
-        Ok((
-            res.values.data().iter().map(|&v| v as f32).collect(),
-            res.operator_values.data().iter().map(|&v| v as f32).collect(),
-        ))
-    };
-    let server = ModelServer::spawn_sharded(
-        n,
+    println!(
+        "compiled operator program in {}: {} steps ({} fused), {} slab scalars/row, \
+         {} muls/row analytic",
+        fmt_duration(t0.elapsed().as_secs_f64()),
+        program.steps().len(),
+        program.fused_steps(),
+        program.slab_per_row(),
+        program.cost(1).muls
+    );
+    let server = ModelServer::spawn_dof(
+        graph,
+        op.dof_engine(),
         BatchPolicy {
             capacity: batch,
             max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)),
         },
         pool,
         parallel::DEFAULT_SHARD_ROWS,
-        compute,
     );
     Ok((server, n))
 }

@@ -7,8 +7,12 @@ pub mod coeff;
 
 pub use coeff::{table4_mlp, table4_sparse, CoeffSpec};
 
+use std::sync::Arc;
+
 use crate::autodiff::{DofEngine, HessianEngine};
+use crate::graph::Graph;
 use crate::linalg::LdlDecomposition;
+use crate::plan::{self, OperatorProgram, PlanOptions};
 use crate::tensor::Tensor;
 
 /// A fully-specified second-order operator: coefficient matrix, optional
@@ -78,6 +82,20 @@ impl Operator {
     /// Configured Hessian-baseline engine.
     pub fn hessian_engine(&self) -> HessianEngine {
         HessianEngine::new(&self.a).with_lower_order(self.b.clone(), self.c)
+    }
+
+    /// The compile-once DOF program for `graph`, fetched from the keyed
+    /// global plan cache (compiled on first use). This is the explicit
+    /// form of the compile-then-execute split the engines' `compute*`
+    /// wrappers perform internally; hold it to amortize compilation across
+    /// many `execute*` calls and to read the analytic cost/peak numbers
+    /// without running a batch.
+    pub fn dof_program(&self, graph: &Graph) -> Arc<OperatorProgram> {
+        // Derive the options from the engine this operator hands out, so
+        // the program's cache key can never drift from what
+        // `dof_engine().compute*` would compile.
+        let opts: PlanOptions = self.dof_engine().plan_options();
+        plan::global_cache().get_or_compile(graph, &self.ldl, opts)
     }
 }
 

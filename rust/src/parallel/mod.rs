@@ -81,13 +81,27 @@ pub fn with_serial_guard<R>(f: impl FnOnce() -> R) -> R {
 /// Global thread count: 0 = not yet resolved.
 static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
 
-/// The `DOF_THREADS` env var, when set to a positive integer (anything
-/// else — unset, non-numeric, or 0 — is ignored).
+/// The `DOF_THREADS` env var, when set to a valid positive integer.
+/// Library contexts resolve lazily and cannot surface an error, so invalid
+/// values are ignored here; binaries should call [`env_threads_checked`]
+/// at startup to reject `0` / non-numeric values with a clear message
+/// instead of a silent fallback (the `dof` CLI does).
 pub fn env_threads() -> Option<usize> {
     std::env::var("DOF_THREADS")
         .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .filter(|&t| t > 0)
+        .and_then(|v| crate::util::parse_thread_count(&v).ok())
+}
+
+/// Validated read of `DOF_THREADS`: `Ok(None)` when unset, `Err` with a
+/// clear message naming the offending value when set to `0` or a
+/// non-number.
+pub fn env_threads_checked() -> Result<Option<usize>, String> {
+    match std::env::var("DOF_THREADS") {
+        Err(_) => Ok(None),
+        Ok(v) => crate::util::parse_thread_count(&v)
+            .map(Some)
+            .map_err(|e| format!("DOF_THREADS: {e}")),
+    }
 }
 
 fn resolve_global_threads() -> usize {

@@ -8,10 +8,18 @@
 //! [`crate::autodiff::dof_tape`]; boundary gradients via the plain reverse
 //! pass. This is the end-to-end workload that proves the three pieces
 //! (graph engine, DOF, optimizer) compose.
+//!
+//! The tape's forward pass runs a compiled
+//! [`crate::plan::OperatorProgram`] fetched from the keyed global plan
+//! cache. Plan keys are weight-value independent, so although each step
+//! rebuilds the graph with updated weights, the program is compiled once
+//! on step 1 and every later step is a cache hit — compile once, execute
+//! per batch ([`PinnTrainer::plan_stats`] exposes the counters).
 
 use crate::autodiff::backward::backward;
 use crate::autodiff::dof_tape::{dof_backward_tape, dof_forward_tape};
 use crate::nn::Mlp;
+use crate::plan;
 use crate::tensor::Tensor;
 use crate::train::{Adam, AdamConfig, BoundarySampler, BoxSampler};
 use crate::util::Xoshiro256;
@@ -167,6 +175,14 @@ impl PinnTrainer {
         (0..n).map(|_| self.train_step()).collect()
     }
 
+    /// Process-wide plan-cache counters — steady-state training is one
+    /// compile (step 1) followed by hits, because plan keys hash the graph
+    /// structure and weight zero patterns, not the weight values Adam
+    /// moves.
+    pub fn plan_stats() -> plan::PlanCacheStats {
+        plan::global_cache().stats()
+    }
+
     /// Relative L2 error of the model against `u*` on a fresh sample.
     pub fn rel_l2_error(&mut self, n_points: usize) -> f64 {
         let graph = self.model.to_graph();
@@ -259,6 +275,31 @@ mod tests {
         let reports = tr.run(50);
         assert!(reports.iter().all(|r| r.total_loss.is_finite()));
         assert!(reports.last().unwrap().total_loss < reports[0].total_loss);
+    }
+
+    #[test]
+    fn training_steps_hit_the_plan_cache() {
+        let before = PinnTrainer::plan_stats();
+        let p = poisson(2);
+        let model = small_model(2);
+        let mut tr = PinnTrainer::new(
+            p,
+            model,
+            PinnConfig {
+                interior_batch: 8,
+                boundary_batch: 4,
+                ..Default::default()
+            },
+        );
+        tr.run(3);
+        let after = PinnTrainer::plan_stats();
+        // Steps 2 and 3 rebuild the graph with moved weights but must reuse
+        // the step-1 program (counters are process-global, so only assert
+        // the delta this trainer is guaranteed to produce).
+        assert!(
+            after.hits >= before.hits + 2,
+            "expected ≥2 plan-cache hits from steps 2-3: {before:?} → {after:?}"
+        );
     }
 
     #[test]

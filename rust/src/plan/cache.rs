@@ -1,0 +1,189 @@
+//! Keyed cache of compiled [`OperatorProgram`]s.
+//!
+//! Serving and training evaluate the *same* `(architecture, operator)` pair
+//! over and over; the cache makes "compile once, execute per batch" the
+//! default behavior of every `DofEngine::compute*` entry point without the
+//! callers threading programs around. Keys are value-independent
+//! ([`super::plan_key`] hashes structure and zero patterns, not weight
+//! values), so a PINN training loop that rebuilds its graph each step with
+//! updated weights hits the cache from step 2 onward.
+//!
+//! The store is a small associative list behind a `Mutex` (a handful of
+//! model/operator pairs at most in any realistic process): lookups are a
+//! key comparison per entry, insertion evicts the oldest entry past
+//! [`CACHE_CAP`]. Compilation happens *outside* the lock; a racing compile
+//! of the same key keeps the first inserted program.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::graph::Graph;
+use crate::linalg::LdlDecomposition;
+
+use super::{plan_key, OperatorProgram, PlanKey, PlanOptions};
+
+/// Bound on retained programs (oldest evicted past this).
+pub const CACHE_CAP: usize = 64;
+
+/// Hit/miss counters plus current occupancy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Lookups served by an already-compiled program.
+    pub hits: u64,
+    /// Lookups that compiled.
+    pub misses: u64,
+    /// Programs currently retained.
+    pub entries: usize,
+}
+
+/// A keyed program cache (see module docs).
+pub struct PlanCache {
+    entries: Mutex<Vec<(PlanKey, Arc<OperatorProgram>)>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub const fn new() -> Self {
+        Self {
+            entries: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch the program for `(graph, ldl, opts)`, compiling on first use.
+    pub fn get_or_compile(
+        &self,
+        graph: &Graph,
+        ldl: &LdlDecomposition,
+        opts: PlanOptions,
+    ) -> Arc<OperatorProgram> {
+        let key = plan_key(graph, ldl, opts);
+        {
+            let entries = self.entries.lock().expect("plan cache poisoned");
+            if let Some((_, p)) = entries.iter().find(|(k, _)| *k == key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(p);
+            }
+        }
+        // Compile outside the lock; first insert wins on a race.
+        let program = Arc::new(OperatorProgram::compile(graph, ldl, opts));
+        let mut entries = self.entries.lock().expect("plan cache poisoned");
+        if let Some((_, p)) = entries.iter().find(|(k, _)| *k == key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(p);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        if entries.len() >= CACHE_CAP {
+            entries.remove(0);
+        }
+        entries.push((key, Arc::clone(&program)));
+        program
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.entries.lock().expect("plan cache poisoned").len(),
+        }
+    }
+
+    /// Drop every retained program (counters are kept).
+    pub fn clear(&self) {
+        self.entries.lock().expect("plan cache poisoned").clear();
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+static GLOBAL: PlanCache = PlanCache::new();
+
+/// The process-wide program cache used by the engines' `compute*`
+/// wrappers, the serving backend, and the training tape.
+pub fn global_cache() -> &'static PlanCache {
+    &GLOBAL
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{builder::random_layers, mlp_graph, Act};
+    use crate::tensor::Tensor;
+    use crate::util::Xoshiro256;
+
+    fn fixture(seed: u64) -> (Graph, LdlDecomposition) {
+        let mut rng = Xoshiro256::new(seed);
+        let g = mlp_graph(&random_layers(&[4, 7, 1], &mut rng), Act::Tanh);
+        let b = Tensor::randn(&[4, 4], &mut rng);
+        let a = b.add(&b.transpose()).scale(0.5);
+        (g, LdlDecomposition::of(&a))
+    }
+
+    #[test]
+    fn second_lookup_hits() {
+        let cache = PlanCache::new();
+        let (g, ldl) = fixture(9);
+        let opts = PlanOptions {
+            sparsity: true,
+            lower_order_c: false,
+        };
+        let p1 = cache.get_or_compile(&g, &ldl, opts);
+        let p2 = cache.get_or_compile(&g, &ldl, opts);
+        assert!(Arc::ptr_eq(&p1, &p2), "same key must reuse the program");
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn weight_value_changes_reuse_weight_structure_changes_do_not() {
+        let cache = PlanCache::new();
+        let mut rng = Xoshiro256::new(10);
+        let layers = random_layers(&[3, 5, 1], &mut rng);
+        let layers_moved = random_layers(&[3, 5, 1], &mut rng); // same shape, new values
+        let g1 = mlp_graph(&layers, Act::Tanh);
+        let g2 = mlp_graph(&layers_moved, Act::Tanh);
+        let g3 = mlp_graph(&random_layers(&[3, 5, 5, 1], &mut rng), Act::Tanh);
+        let b = Tensor::randn(&[3, 3], &mut rng);
+        let ldl = LdlDecomposition::of(&b.add(&b.transpose()).scale(0.5));
+        let opts = PlanOptions {
+            sparsity: true,
+            lower_order_c: false,
+        };
+        let p1 = cache.get_or_compile(&g1, &ldl, opts);
+        let p2 = cache.get_or_compile(&g2, &ldl, opts);
+        let p3 = cache.get_or_compile(&g3, &ldl, opts);
+        assert!(Arc::ptr_eq(&p1, &p2), "training-step weight moves must hit");
+        assert!(!Arc::ptr_eq(&p1, &p3), "different topology must recompile");
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn options_partition_the_key_space() {
+        let cache = PlanCache::new();
+        let (g, ldl) = fixture(11);
+        let a = cache.get_or_compile(
+            &g,
+            &ldl,
+            PlanOptions {
+                sparsity: true,
+                lower_order_c: false,
+            },
+        );
+        let b = cache.get_or_compile(
+            &g,
+            &ldl,
+            PlanOptions {
+                sparsity: false,
+                lower_order_c: false,
+            },
+        );
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.stats().entries, 2);
+    }
+}

@@ -1,0 +1,896 @@
+//! Executors over a compiled [`OperatorProgram`].
+//!
+//! * [`execute_dof`] — the benchmark-engine pass (eqs. 7–9) running on one
+//!   contiguous slab with statically assigned buffer slots: no arena
+//!   lookups, no per-node allocation, no runtime liveness bookkeeping. The
+//!   arithmetic replicates the reference interpreter
+//!   (`DofEngine::compute_with_arena`) operation for operation, in the same
+//!   order, so results — values, `L[φ]`, FLOP counts, peak tangent bytes —
+//!   are identical (asserted by `rust/tests/plan_equivalence.rs`).
+//! * [`execute_tape`] — the training-tape pass: same schedule, but every
+//!   node tuple is retained as an owned tensor for the reverse sweep
+//!   (`dof_backward_tape`), and the tangent width is the full rank `r`
+//!   (tape programs are compiled with sparsity off).
+//!
+//! Zeroing discipline: the slab is *not* cleared between calls (slots are
+//! reused within and across calls), so every step either fully overwrites
+//! its destination or explicitly zero-fills accumulation targets first —
+//! the same contract the arena's scratch buffers had.
+
+use std::ops::Range;
+
+use crate::autodiff::dof::DofResult;
+use crate::autodiff::dof_tape::DofTape;
+use crate::autodiff::forward_jacobian::{seed_input, TangentBatch};
+use crate::autodiff::Cost;
+use crate::graph::{Graph, Op};
+use crate::linalg::LdlDecomposition;
+use crate::tensor::{matmul_nt, matmul_nt_into, Tensor};
+
+use super::{NodePlan, OperatorProgram, StepKind};
+
+// ---- slab addressing -----------------------------------------------------
+
+fn v_rng(np: &NodePlan, batch: usize) -> Range<usize> {
+    let lo = np.slot * batch;
+    lo..lo + batch * np.dim
+}
+
+fn s_rng(np: &NodePlan, batch: usize) -> Range<usize> {
+    let lo = (np.slot + np.dim) * batch;
+    lo..lo + batch * np.dim
+}
+
+fn g_rng(np: &NodePlan, batch: usize) -> Range<usize> {
+    let lo = (np.slot + 2 * np.dim) * batch;
+    lo..lo + batch * np.t() * np.dim
+}
+
+fn node_rng(np: &NodePlan, batch: usize) -> Range<usize> {
+    let lo = np.slot * batch;
+    lo..lo + (np.t() + 2) * np.dim * batch
+}
+
+fn scratch_rng(np: &NodePlan, batch: usize) -> Range<usize> {
+    let lo = np.scratch * batch;
+    lo..lo + np.scratch_len * batch
+}
+
+/// Split the slab around the write window `w`: `(prefix, window, suffix)`.
+fn split3<'a>(slab: &'a mut [f64], w: &Range<usize>) -> (&'a [f64], &'a mut [f64], &'a [f64]) {
+    let (pre, rest) = slab.split_at_mut(w.start);
+    let (win, post) = rest.split_at_mut(w.end - w.start);
+    (&*pre, win, &*post)
+}
+
+/// Read a slab range that the layout guarantees is disjoint from the write
+/// window `w` (addresses are absolute slab offsets).
+fn rd<'a>(pre: &'a [f64], post: &'a [f64], w: &Range<usize>, r: Range<usize>) -> &'a [f64] {
+    if r.end <= w.start {
+        &pre[r]
+    } else {
+        debug_assert!(r.start >= w.end, "overlapping slab access");
+        &post[r.start - w.end..r.end - w.end]
+    }
+}
+
+/// Row `kk` of parent `pi`'s union-aligned tangent inside the Mul scratch.
+fn aligned_row(
+    aligned: &[f64],
+    batch: usize,
+    t: usize,
+    d: usize,
+    pi: usize,
+    b: usize,
+    kk: usize,
+) -> &[f64] {
+    let o = pi * batch * t * d + (b * t + kk) * d;
+    &aligned[o..o + d]
+}
+
+// ---- the planned DOF pass ------------------------------------------------
+
+/// Execute the compiled program on `x: [batch, N]`, using `slab` as the
+/// only tangent storage (grown on first use, reused verbatim afterwards —
+/// steady-state executions perform no heap allocation beyond the returned
+/// result tensors).
+pub fn execute_dof(
+    program: &OperatorProgram,
+    graph: &Graph,
+    ldl: &LdlDecomposition,
+    b_coef: Option<&[f64]>,
+    c_coef: Option<f64>,
+    x: &Tensor,
+    slab: &mut Vec<f64>,
+) -> DofResult {
+    assert_eq!(x.rank(), 2, "input must be [batch, N]");
+    let batch = x.dims()[0];
+    assert_eq!(x.dims()[1], program.input_dim(), "input dim mismatch");
+    assert_eq!(ldl.rank(), program.rank(), "program/operator rank mismatch");
+    assert_eq!(graph.len(), program.node_count(), "program/graph mismatch");
+    assert_eq!(
+        program.options().lower_order_c,
+        c_coef.is_some(),
+        "program compiled with different lower-order options"
+    );
+    let need = program.slab_len(batch);
+    if slab.len() < need {
+        slab.resize(need, 0.0);
+    }
+    let slab = &mut slab[..need];
+
+    for step in program.steps() {
+        match &step.kind {
+            StepKind::Input { in_off } => {
+                input_step(program, ldl, b_coef, x, batch, slab, step.node, *in_off)
+            }
+            StepKind::Linear { fused_act } => {
+                linear_step(program, graph, batch, slab, step.node);
+                if let Some(a) = fused_act {
+                    activation_step(program, graph, ldl, batch, slab, *a);
+                }
+            }
+            StepKind::Activation => activation_step(program, graph, ldl, batch, slab, step.node),
+            StepKind::Slice => slice_step(program, graph, batch, slab, step.node),
+            StepKind::Add => add_step(program, graph, batch, slab, step.node),
+            StepKind::Mul => mul_step(program, graph, ldl, batch, slab, step.node),
+            StepKind::SumReduce => sum_reduce_step(program, graph, batch, slab, step.node),
+            StepKind::Concat => concat_step(program, graph, batch, slab, step.node),
+        }
+    }
+
+    // Extract the output tuple into owned tensors.
+    let np = program.node_plan(program.output());
+    let d = np.dim;
+    let t = np.t();
+    let values = Tensor::from_vec(&[batch, d], slab[v_rng(np, batch)].to_vec());
+    let mut op_vals = Tensor::from_vec(&[batch, d], slab[s_rng(np, batch)].to_vec());
+    let out_tangent = TangentBatch {
+        data: Tensor::from_vec(&[batch * t, d], slab[g_rng(np, batch)].to_vec()),
+        batch,
+        t,
+    };
+    if let Some(c) = c_coef {
+        for b in 0..batch {
+            for o in 0..d {
+                op_vals.set(b, o, op_vals.at(b, o) + c * values.at(b, o));
+            }
+        }
+    }
+    DofResult {
+        values,
+        out_tangent,
+        out_active: np.active.clone(),
+        operator_values: op_vals,
+        cost: program.cost(batch),
+        peak_tangent_bytes: program.peak_tangent_bytes(batch),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn input_step(
+    program: &OperatorProgram,
+    ldl: &LdlDecomposition,
+    b_coef: Option<&[f64]>,
+    x: &Tensor,
+    batch: usize,
+    slab: &mut [f64],
+    id: usize,
+    in_off: usize,
+) {
+    let np = program.node_plan(id);
+    let d = np.dim;
+    let t = np.t();
+    let w = node_rng(np, batch);
+    let (_pre, win, _post) = split3(slab, &w);
+    let s_rel = batch * d;
+    let g_rel = 2 * batch * d;
+    for b in 0..batch {
+        win[b * d..(b + 1) * d].copy_from_slice(&x.row(b)[in_off..in_off + d]);
+    }
+    match b_coef {
+        Some(bv) => {
+            for b in 0..batch {
+                win[s_rel + b * d..s_rel + (b + 1) * d]
+                    .copy_from_slice(&bv[in_off..in_off + d]);
+            }
+        }
+        None => win[s_rel..s_rel + batch * d].fill(0.0),
+    }
+    for b in 0..batch {
+        for (kk, &k) in np.active.iter().enumerate() {
+            let o = g_rel + (b * t + kk) * d;
+            win[o..o + d].copy_from_slice(&ldl.l.row(k)[in_off..in_off + d]);
+        }
+    }
+}
+
+fn linear_step(program: &OperatorProgram, graph: &Graph, batch: usize, slab: &mut [f64], id: usize) {
+    let node = graph.node(id);
+    let (weight, bias) = match &node.op {
+        Op::Linear { weight, bias } => (weight, bias),
+        _ => unreachable!("linear step on non-linear node"),
+    };
+    let p = node.inputs[0];
+    let np = program.node_plan(id);
+    let pp = program.node_plan(p);
+    let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+    let t = pp.t();
+    debug_assert_eq!(np.t(), t);
+    let rows = batch * (t + 2);
+    let sc = scratch_rng(np, batch);
+    let stacked = sc.start..sc.start + rows * in_d;
+    let gout = stacked.end..stacked.end + rows * out_d;
+    debug_assert_eq!(gout.end, sc.end);
+
+    // Phase 1: stack [v; s; G] of the parent — one GEMM serves all three
+    // streams (one Wᵀ pass, full micro-kernel utilization).
+    {
+        let (pre, win, post) = split3(slab, &stacked);
+        win[..batch * in_d].copy_from_slice(rd(pre, post, &stacked, v_rng(pp, batch)));
+        win[batch * in_d..2 * batch * in_d]
+            .copy_from_slice(rd(pre, post, &stacked, s_rng(pp, batch)));
+        win[2 * batch * in_d..].copy_from_slice(rd(pre, post, &stacked, g_rng(pp, batch)));
+    }
+    // Phase 2: accumulate the GEMM into zeroed scratch.
+    {
+        let (pre, win, post) = split3(slab, &gout);
+        win.fill(0.0);
+        let a = rd(pre, post, &gout, stacked.clone());
+        matmul_nt_into(a, weight.data(), win, rows, in_d, out_d);
+    }
+    // Phase 3: scatter into the node's slots; bias on the value stream.
+    {
+        let w = node_rng(np, batch);
+        let (pre, win, post) = split3(slab, &w);
+        let od = rd(pre, post, &w, gout);
+        win[..batch * out_d].copy_from_slice(&od[..batch * out_d]);
+        win[batch * out_d..2 * batch * out_d]
+            .copy_from_slice(&od[batch * out_d..2 * batch * out_d]);
+        win[2 * batch * out_d..].copy_from_slice(&od[2 * batch * out_d..]);
+        for b in 0..batch {
+            for (o, &bi) in win[b * out_d..(b + 1) * out_d].iter_mut().zip(bias.iter()) {
+                *o += bi;
+            }
+        }
+    }
+}
+
+fn activation_step(
+    program: &OperatorProgram,
+    graph: &Graph,
+    ldl: &LdlDecomposition,
+    batch: usize,
+    slab: &mut [f64],
+    id: usize,
+) {
+    let node = graph.node(id);
+    let act = match &node.op {
+        Op::Activation { act } => *act,
+        _ => unreachable!("activation step on non-activation node"),
+    };
+    let p = node.inputs[0];
+    let np = program.node_plan(id);
+    let pp = program.node_plan(p);
+    let d = np.dim;
+    let t = np.t();
+    let signs = &ldl.d;
+    let w = node_rng(np, batch);
+    let (pre, win, post) = split3(slab, &w);
+    let h = rd(pre, post, &w, v_rng(pp, batch));
+    let ps = rd(pre, post, &w, s_rng(pp, batch));
+    let pg = rd(pre, post, &w, g_rng(pp, batch));
+    let s_rel = batch * d;
+    let g_rel = 2 * batch * d;
+    // Value stream: σ(h), whole-buffer sweep (matches the interpreter).
+    for (dst, &src) in win[..batch * d].iter_mut().zip(h.iter()) {
+        *dst = act.f(src);
+    }
+    // Fused tangent pass: read g once, accumulate the signed square into
+    // quad and write the σ'-scaled value.
+    let mut df = vec![0.0; d];
+    let mut quad = vec![0.0; d];
+    for b in 0..batch {
+        let hrow = &h[b * d..(b + 1) * d];
+        for (dv, &hv) in df.iter_mut().zip(hrow.iter()) {
+            *dv = act.df(hv);
+        }
+        quad.iter_mut().for_each(|q| *q = 0.0);
+        for (kk, &k) in np.active.iter().enumerate() {
+            let sign = signs[k];
+            let src = &pg[(b * t + kk) * d..(b * t + kk + 1) * d];
+            let o = g_rel + (b * t + kk) * d;
+            let dst = &mut win[o..o + d];
+            for c in 0..d {
+                let gv = src[c];
+                quad[c] += sign * gv * gv;
+                dst[c] = df[c] * gv;
+            }
+        }
+        let psr = &ps[b * d..(b + 1) * d];
+        let sp = &mut win[s_rel + b * d..s_rel + (b + 1) * d];
+        for c in 0..d {
+            sp[c] = act.d2f(hrow[c]) * quad[c] + df[c] * psr[c];
+        }
+    }
+}
+
+fn slice_step(program: &OperatorProgram, graph: &Graph, batch: usize, slab: &mut [f64], id: usize) {
+    let node = graph.node(id);
+    let (start, len) = match &node.op {
+        Op::Slice { start, len } => (*start, *len),
+        _ => unreachable!("slice step on non-slice node"),
+    };
+    let p = node.inputs[0];
+    let np = program.node_plan(id);
+    let pp = program.node_plan(p);
+    let pd = pp.dim;
+    let tp = pp.t();
+    let t = np.t();
+    let w = node_rng(np, batch);
+    let (pre, win, post) = split3(slab, &w);
+    let pv = rd(pre, post, &w, v_rng(pp, batch));
+    let psl = rd(pre, post, &w, s_rng(pp, batch));
+    let pg = rd(pre, post, &w, g_rng(pp, batch));
+    let s_rel = batch * len;
+    let g_rel = 2 * batch * len;
+    for b in 0..batch {
+        win[b * len..(b + 1) * len]
+            .copy_from_slice(&pv[b * pd + start..b * pd + start + len]);
+        win[s_rel + b * len..s_rel + (b + 1) * len]
+            .copy_from_slice(&psl[b * pd + start..b * pd + start + len]);
+    }
+    // Only the rows the compile-time compaction kept are copied; rows that
+    // are structurally zero inside the slice window were pruned at compile.
+    for b in 0..batch {
+        for (nk, &kk) in np.keep.iter().enumerate() {
+            let src = &pg[(b * tp + kk) * pd + start..(b * tp + kk) * pd + start + len];
+            let o = g_rel + (b * t + nk) * len;
+            win[o..o + len].copy_from_slice(src);
+        }
+    }
+}
+
+fn add_step(program: &OperatorProgram, graph: &Graph, batch: usize, slab: &mut [f64], id: usize) {
+    let node = graph.node(id);
+    let np = program.node_plan(id);
+    let d = np.dim;
+    let t = np.t();
+    let w = node_rng(np, batch);
+    let (pre, win, post) = split3(slab, &w);
+    let s_rel = batch * d;
+    let g_rel = 2 * batch * d;
+    for (pi, &p) in node.inputs.iter().enumerate() {
+        let pp = program.node_plan(p);
+        let pv = rd(pre, post, &w, v_rng(pp, batch));
+        let psl = rd(pre, post, &w, s_rng(pp, batch));
+        if pi == 0 {
+            win[..batch * d].copy_from_slice(pv);
+            win[s_rel..s_rel + batch * d].copy_from_slice(psl);
+        } else {
+            for (dst, &sv) in win[..batch * d].iter_mut().zip(pv.iter()) {
+                *dst += sv;
+            }
+            for (dst, &sv) in win[s_rel..s_rel + batch * d].iter_mut().zip(psl.iter()) {
+                *dst += sv;
+            }
+        }
+    }
+    // Union-aligned tangent sum: zero, then accumulate each parent's rows
+    // at their precomputed union positions.
+    win[g_rel..g_rel + batch * t * d].fill(0.0);
+    for (pi, &p) in node.inputs.iter().enumerate() {
+        let pp = program.node_plan(p);
+        let tp = pp.t();
+        let pg = rd(pre, post, &w, g_rng(pp, batch));
+        let pos = &np.parent_pos[pi];
+        for b in 0..batch {
+            for (kk, &u) in pos.iter().enumerate() {
+                let src = &pg[(b * tp + kk) * d..(b * tp + kk + 1) * d];
+                let o = g_rel + (b * t + u) * d;
+                let dst = &mut win[o..o + d];
+                for c in 0..d {
+                    dst[c] += src[c];
+                }
+            }
+        }
+    }
+}
+
+fn concat_step(program: &OperatorProgram, graph: &Graph, batch: usize, slab: &mut [f64], id: usize) {
+    let node = graph.node(id);
+    let np = program.node_plan(id);
+    let d = np.dim;
+    let t = np.t();
+    let w = node_rng(np, batch);
+    let (pre, win, post) = split3(slab, &w);
+    let s_rel = batch * d;
+    let g_rel = 2 * batch * d;
+    let mut off = 0usize;
+    for &p in &node.inputs {
+        let pp = program.node_plan(p);
+        let pd = pp.dim;
+        let pv = rd(pre, post, &w, v_rng(pp, batch));
+        let psl = rd(pre, post, &w, s_rng(pp, batch));
+        for b in 0..batch {
+            win[b * d + off..b * d + off + pd].copy_from_slice(&pv[b * pd..(b + 1) * pd]);
+            win[s_rel + b * d + off..s_rel + b * d + off + pd]
+                .copy_from_slice(&psl[b * pd..(b + 1) * pd]);
+        }
+        off += pd;
+    }
+    win[g_rel..g_rel + batch * t * d].fill(0.0);
+    let mut off = 0usize;
+    for (pi, &p) in node.inputs.iter().enumerate() {
+        let pp = program.node_plan(p);
+        let pd = pp.dim;
+        let tp = pp.t();
+        let pg = rd(pre, post, &w, g_rng(pp, batch));
+        let pos = &np.parent_pos[pi];
+        for b in 0..batch {
+            for (kk, &u) in pos.iter().enumerate() {
+                let src = &pg[(b * tp + kk) * pd..(b * tp + kk + 1) * pd];
+                let o = g_rel + (b * t + u) * d + off;
+                win[o..o + pd].copy_from_slice(src);
+            }
+        }
+        off += pd;
+    }
+}
+
+fn mul_step(
+    program: &OperatorProgram,
+    graph: &Graph,
+    ldl: &LdlDecomposition,
+    batch: usize,
+    slab: &mut [f64],
+    id: usize,
+) {
+    let node = graph.node(id);
+    let np = program.node_plan(id);
+    let d = np.dim;
+    let t = np.t();
+    let k = node.inputs.len();
+    let signs = &ldl.d;
+
+    // Phase 1: materialize every parent's union-aligned tangent in the step
+    // scratch (zero-filled missing rows) — the `expand_to` of the
+    // interpreter, but into preassigned storage.
+    let sc = scratch_rng(np, batch);
+    {
+        let (pre, win, post) = split3(slab, &sc);
+        win.fill(0.0);
+        for (pi, &p) in node.inputs.iter().enumerate() {
+            let pp = program.node_plan(p);
+            let tp = pp.t();
+            let pg = rd(pre, post, &sc, g_rng(pp, batch));
+            let pos = &np.parent_pos[pi];
+            let block = pi * batch * t * d;
+            for b in 0..batch {
+                for (kk, &u) in pos.iter().enumerate() {
+                    let src = &pg[(b * tp + kk) * d..(b * tp + kk + 1) * d];
+                    let o = block + (b * t + u) * d;
+                    win[o..o + d].copy_from_slice(src);
+                }
+            }
+        }
+    }
+
+    // Phase 2: the eq. 9 product rule over the aligned tangents.
+    let w = node_rng(np, batch);
+    let (pre, win, post) = split3(slab, &w);
+    let s_rel = batch * d;
+    let g_rel = 2 * batch * d;
+    {
+        let p0 = program.node_plan(node.inputs[0]);
+        let pv0 = rd(pre, post, &w, v_rng(p0, batch));
+        win[..batch * d].copy_from_slice(pv0);
+    }
+    for &p in &node.inputs[1..] {
+        let pp = program.node_plan(p);
+        let pv = rd(pre, post, &w, v_rng(pp, batch));
+        for (dst, &sv) in win[..batch * d].iter_mut().zip(pv.iter()) {
+            *dst *= sv;
+        }
+    }
+    win[s_rel..s_rel + batch * d].fill(0.0);
+    win[g_rel..g_rel + batch * t * d].fill(0.0);
+
+    let pvals: Vec<&[f64]> = node
+        .inputs
+        .iter()
+        .map(|&p| rd(pre, post, &w, v_rng(program.node_plan(p), batch)))
+        .collect();
+    let psums: Vec<&[f64]> = node
+        .inputs
+        .iter()
+        .map(|&p| rd(pre, post, &w, s_rng(program.node_plan(p), batch)))
+        .collect();
+    let aligned = rd(pre, post, &w, sc.clone());
+
+    let mut coef = vec![1.0; d];
+    let mut coef2 = vec![1.0; d];
+    let mut cross = vec![0.0; d];
+    for b in 0..batch {
+        for pi in 0..k {
+            coef.iter_mut().for_each(|c| *c = 1.0);
+            for (qi, pv) in pvals.iter().enumerate() {
+                if qi != pi {
+                    for (c, &xv) in coef.iter_mut().zip(&pv[b * d..(b + 1) * d]) {
+                        *c *= xv;
+                    }
+                }
+            }
+            for kk in 0..t {
+                let src = aligned_row(aligned, batch, t, d, pi, b, kk);
+                let o = g_rel + (b * t + kk) * d;
+                let dst = &mut win[o..o + d];
+                for c in 0..d {
+                    dst[c] += coef[c] * src[c];
+                }
+            }
+            {
+                let psr = &psums[pi][b * d..(b + 1) * d];
+                let srow = &mut win[s_rel + b * d..s_rel + (b + 1) * d];
+                for c in 0..d {
+                    srow[c] += coef[c] * psr[c];
+                }
+            }
+            for qi in (pi + 1)..k {
+                coef2.iter_mut().for_each(|c| *c = 1.0);
+                for (ri, pv) in pvals.iter().enumerate() {
+                    if ri != pi && ri != qi {
+                        for (c, &xv) in coef2.iter_mut().zip(&pv[b * d..(b + 1) * d]) {
+                            *c *= xv;
+                        }
+                    }
+                }
+                cross.iter_mut().for_each(|c| *c = 0.0);
+                for (kk, &kglob) in np.active.iter().enumerate() {
+                    let sign = signs[kglob];
+                    let gp = aligned_row(aligned, batch, t, d, pi, b, kk);
+                    let gq = aligned_row(aligned, batch, t, d, qi, b, kk);
+                    for c in 0..d {
+                        cross[c] += sign * gp[c] * gq[c];
+                    }
+                }
+                let srow = &mut win[s_rel + b * d..s_rel + (b + 1) * d];
+                for c in 0..d {
+                    srow[c] += 2.0 * coef2[c] * cross[c];
+                }
+            }
+        }
+    }
+}
+
+fn sum_reduce_step(
+    program: &OperatorProgram,
+    graph: &Graph,
+    batch: usize,
+    slab: &mut [f64],
+    id: usize,
+) {
+    let node = graph.node(id);
+    let p = node.inputs[0];
+    let np = program.node_plan(id);
+    let pp = program.node_plan(p);
+    let pd = pp.dim;
+    let t = np.t();
+    let w = node_rng(np, batch);
+    let (pre, win, post) = split3(slab, &w);
+    let pv = rd(pre, post, &w, v_rng(pp, batch));
+    let psl = rd(pre, post, &w, s_rng(pp, batch));
+    let pg = rd(pre, post, &w, g_rng(pp, batch));
+    let s_rel = batch; // node dim is 1
+    let g_rel = 2 * batch;
+    for b in 0..batch {
+        win[b] = pv[b * pd..(b + 1) * pd].iter().sum::<f64>();
+        win[s_rel + b] = psl[b * pd..(b + 1) * pd].iter().sum::<f64>();
+    }
+    for row in 0..batch * t {
+        win[g_rel + row] = pg[row * pd..(row + 1) * pd].iter().sum::<f64>();
+    }
+}
+
+// ---- the planned training tape -------------------------------------------
+
+/// Forward DOF pass over the program schedule that retains every node
+/// tuple as owned tensors — the input to [`crate::autodiff::dof_tape`]'s
+/// reverse sweep. Requires a program compiled with `sparsity: false` (the
+/// tape always carries the full rank-`r` tangent, like the pre-plan
+/// implementation).
+pub fn execute_tape(
+    program: &OperatorProgram,
+    graph: &Graph,
+    ldl: &LdlDecomposition,
+    b_coef: Option<&[f64]>,
+    x: &Tensor,
+) -> DofTape {
+    assert!(
+        !program.options().sparsity,
+        "tape programs are compiled dense (full tangent width)"
+    );
+    assert_eq!(graph.len(), program.node_count(), "program/graph mismatch");
+    let n = graph.input_dim();
+    assert_eq!(ldl.n, n);
+    let batch = x.dims()[0];
+    let r = ldl.rank();
+    let mut cost = Cost::zero();
+    let mut values: Vec<Tensor> = Vec::with_capacity(graph.len());
+    let mut tangents: Vec<TangentBatch> = Vec::with_capacity(graph.len());
+    let mut scalars: Vec<Tensor> = Vec::with_capacity(graph.len());
+
+    for step in program.steps() {
+        tape_node(
+            graph,
+            ldl,
+            b_coef,
+            x,
+            batch,
+            r,
+            step.node,
+            &step.kind,
+            &mut values,
+            &mut tangents,
+            &mut scalars,
+            &mut cost,
+        );
+        if let StepKind::Linear { fused_act: Some(a) } = &step.kind {
+            tape_node(
+                graph,
+                ldl,
+                b_coef,
+                x,
+                batch,
+                r,
+                *a,
+                &StepKind::Activation,
+                &mut values,
+                &mut tangents,
+                &mut scalars,
+                &mut cost,
+            );
+        }
+    }
+
+    DofTape {
+        values,
+        tangents,
+        scalars,
+        batch,
+        r,
+        cost,
+    }
+}
+
+/// One node of the retained-tape pass (numerically identical to the
+/// pre-plan `dof_forward_tape` body).
+#[allow(clippy::too_many_arguments)]
+fn tape_node(
+    graph: &Graph,
+    ldl: &LdlDecomposition,
+    b_coef: Option<&[f64]>,
+    x: &Tensor,
+    batch: usize,
+    r: usize,
+    id: usize,
+    kind: &StepKind,
+    values: &mut Vec<Tensor>,
+    tangents: &mut Vec<TangentBatch>,
+    scalars: &mut Vec<Tensor>,
+    cost: &mut Cost,
+) {
+    debug_assert_eq!(values.len(), id, "tape must fill nodes in graph order");
+    let node = graph.node(id);
+    let (v, g, s) = match &node.op {
+        Op::Input { dim } => {
+            let in_off = match kind {
+                StepKind::Input { in_off } => *in_off,
+                _ => unreachable!("input node scheduled as non-input step"),
+            };
+            let mut v = Tensor::zeros(&[batch, *dim]);
+            for b in 0..batch {
+                v.row_mut(b).copy_from_slice(&x.row(b)[in_off..in_off + dim]);
+            }
+            let g = seed_input(&ldl.l, in_off, *dim, batch);
+            let mut s = Tensor::zeros(&[batch, *dim]);
+            if let Some(bv) = b_coef {
+                for b in 0..batch {
+                    s.row_mut(b).copy_from_slice(&bv[in_off..in_off + dim]);
+                }
+            }
+            (v, g, s)
+        }
+        Op::Linear { weight, bias } => {
+            let p = node.inputs[0];
+            let mut v = matmul_nt(&values[p], weight);
+            for b in 0..batch {
+                for (o, &bi) in v.row_mut(b).iter_mut().zip(bias.iter()) {
+                    *o += bi;
+                }
+            }
+            let g = TangentBatch {
+                data: matmul_nt(&tangents[p].data, weight),
+                batch,
+                t: r,
+            };
+            let s = matmul_nt(&scalars[p], weight);
+            let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+            cost.muls += ((batch * (r + 2)) * out_d * in_d) as u64;
+            (v, g, s)
+        }
+        Op::Activation { act } => {
+            let p = node.inputs[0];
+            let h = &values[p];
+            let d = node.dim;
+            let v = h.map(|xv| act.f(xv));
+            let mut g = tangents[p].clone();
+            let mut s = Tensor::zeros(&[batch, d]);
+            for b in 0..batch {
+                let hrow = h.row(b);
+                let df: Vec<f64> = hrow.iter().map(|&xv| act.df(xv)).collect();
+                let d2f: Vec<f64> = hrow.iter().map(|&xv| act.d2f(xv)).collect();
+                let mut quad = vec![0.0; d];
+                for k in 0..r {
+                    let sign = ldl.d[k];
+                    let row = tangents[p].row(b, k);
+                    for c in 0..d {
+                        quad[c] += sign * row[c] * row[c];
+                    }
+                }
+                for k in 0..r {
+                    let row = g.row_mut(b, k);
+                    for c in 0..d {
+                        row[c] *= df[c];
+                    }
+                }
+                let sp = s.row_mut(b);
+                let psr = scalars[p].row(b);
+                for c in 0..d {
+                    sp[c] = d2f[c] * quad[c] + df[c] * psr[c];
+                }
+            }
+            cost.muls += (batch * d * (2 * r + 2)) as u64;
+            (v, g, s)
+        }
+        Op::Slice { start, len } => {
+            let p = node.inputs[0];
+            let mut v = Tensor::zeros(&[batch, *len]);
+            let mut s = Tensor::zeros(&[batch, *len]);
+            for b in 0..batch {
+                v.row_mut(b)
+                    .copy_from_slice(&values[p].row(b)[*start..*start + *len]);
+                s.row_mut(b)
+                    .copy_from_slice(&scalars[p].row(b)[*start..*start + *len]);
+            }
+            let mut g = TangentBatch::zeros(batch, r, *len);
+            for row in 0..batch * r {
+                g.data
+                    .row_mut(row)
+                    .copy_from_slice(&tangents[p].data.row(row)[*start..*start + *len]);
+            }
+            (v, g, s)
+        }
+        Op::Add => {
+            let p0 = node.inputs[0];
+            let mut v = values[p0].clone();
+            let mut gd = tangents[p0].data.clone();
+            let mut s = scalars[p0].clone();
+            for &p in &node.inputs[1..] {
+                v = v.add(&values[p]);
+                gd = gd.add(&tangents[p].data);
+                s = s.add(&scalars[p]);
+            }
+            (v, TangentBatch { data: gd, batch, t: r }, s)
+        }
+        Op::Mul => {
+            let k = node.inputs.len();
+            let d = node.dim;
+            let mut v = values[node.inputs[0]].clone();
+            for &p in &node.inputs[1..] {
+                v = v.mul(&values[p]);
+            }
+            let mut g = TangentBatch::zeros(batch, r, d);
+            let mut s = Tensor::zeros(&[batch, d]);
+            for b in 0..batch {
+                let prows: Vec<&[f64]> = node
+                    .inputs
+                    .iter()
+                    .map(|&p| values[p].row(b))
+                    .collect();
+                for pi in 0..k {
+                    let mut coef = vec![1.0; d];
+                    for (qi, pr) in prows.iter().enumerate() {
+                        if qi != pi {
+                            for (c, &xv) in coef.iter_mut().zip(*pr) {
+                                *c *= xv;
+                            }
+                        }
+                    }
+                    let pg = &tangents[node.inputs[pi]];
+                    for kk in 0..r {
+                        let src = pg.row(b, kk).to_vec();
+                        let dst = g.row_mut(b, kk);
+                        for c in 0..d {
+                            dst[c] += coef[c] * src[c];
+                        }
+                    }
+                    let psc = &scalars[node.inputs[pi]];
+                    {
+                        let srow = s.row_mut(b);
+                        for c in 0..d {
+                            srow[c] += coef[c] * psc.row(b)[c];
+                        }
+                    }
+                    for qi in (pi + 1)..k {
+                        let mut coef2 = vec![1.0; d];
+                        for (ri, pr) in prows.iter().enumerate() {
+                            if ri != pi && ri != qi {
+                                for (c, &xv) in coef2.iter_mut().zip(*pr) {
+                                    *c *= xv;
+                                }
+                            }
+                        }
+                        let gq = &tangents[node.inputs[qi]];
+                        let mut cross = vec![0.0; d];
+                        for kk in 0..r {
+                            let sign = ldl.d[kk];
+                            let gp_row = pg.row(b, kk);
+                            let gq_row = gq.row(b, kk);
+                            for c in 0..d {
+                                cross[c] += sign * gp_row[c] * gq_row[c];
+                            }
+                        }
+                        let srow = s.row_mut(b);
+                        for c in 0..d {
+                            srow[c] += 2.0 * coef2[c] * cross[c];
+                        }
+                    }
+                }
+            }
+            cost.muls += (batch * d * k * (r + k)) as u64;
+            (v, g, s)
+        }
+        Op::SumReduce => {
+            let p = node.inputs[0];
+            let mut v = Tensor::zeros(&[batch, 1]);
+            let mut s = Tensor::zeros(&[batch, 1]);
+            for b in 0..batch {
+                v.set(b, 0, values[p].row(b).iter().sum());
+                s.set(b, 0, scalars[p].row(b).iter().sum());
+            }
+            let mut g = TangentBatch::zeros(batch, r, 1);
+            for row in 0..batch * r {
+                g.data.data_mut()[row] = tangents[p].data.row(row).iter().sum();
+            }
+            (v, g, s)
+        }
+        Op::Concat => {
+            let mut v = Tensor::zeros(&[batch, node.dim]);
+            let mut s = Tensor::zeros(&[batch, node.dim]);
+            let mut g = TangentBatch::zeros(batch, r, node.dim);
+            for b in 0..batch {
+                let mut off = 0;
+                for &p in &node.inputs {
+                    let pv = values[p].row(b);
+                    v.row_mut(b)[off..off + pv.len()].copy_from_slice(pv);
+                    let psc = scalars[p].row(b);
+                    s.row_mut(b)[off..off + psc.len()].copy_from_slice(psc);
+                    off += pv.len();
+                }
+            }
+            for row in 0..batch * r {
+                let mut off = 0;
+                for &p in &node.inputs {
+                    let src = tangents[p].data.row(row);
+                    g.data.row_mut(row)[off..off + src.len()].copy_from_slice(src);
+                    off += src.len();
+                }
+            }
+            (v, g, s)
+        }
+    };
+    values.push(v);
+    tangents.push(g);
+    scalars.push(s);
+}

@@ -1,0 +1,142 @@
+//! Static slab layout: a compile-time free-list allocator that maps every
+//! node's `(v, s, g)` tuple — and every step's scratch — to a fixed offset
+//! in one contiguous per-shard slab.
+//!
+//! Offsets are assigned in **per-row scalar units** by replaying the
+//! program schedule against the liveness table (`frees_at`, eq. 24): a
+//! node's interval is allocated at its step and returned to the free list
+//! at its last consumer, exactly mirroring the runtime alloc/free sequence
+//! the interpreter used to drive the [`crate::autodiff::PeakTracker`].
+//! Because every buffer's size is `per_row_size × batch` and the slab is
+//! scaled the same way at execution time, interval disjointness in per-row
+//! units implies disjointness for any batch size — the layout is compiled
+//! once and reused for every batch.
+//!
+//! The allocator is first-fit with gap coalescing: deterministic (the
+//! layout is part of the program, so executions are reproducible) and tight
+//! enough that the slab high-water mark tracks the liveness peak.
+
+/// First-fit free-list allocator over a growable address space.
+#[derive(Debug, Default)]
+pub struct SlabLayout {
+    /// Sorted, disjoint, coalesced `(offset, len)` gaps.
+    gaps: Vec<(usize, usize)>,
+    /// High-water mark: total per-row slab length required.
+    len: usize,
+}
+
+impl SlabLayout {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate `size` units: smallest-offset gap that fits, else extend.
+    pub fn alloc(&mut self, size: usize) -> usize {
+        if size == 0 {
+            return 0;
+        }
+        for i in 0..self.gaps.len() {
+            let (off, glen) = self.gaps[i];
+            if glen >= size {
+                if glen == size {
+                    self.gaps.remove(i);
+                } else {
+                    self.gaps[i] = (off + size, glen - size);
+                }
+                return off;
+            }
+        }
+        let off = self.len;
+        self.len += size;
+        off
+    }
+
+    /// Return `[off, off+size)` to the free list, coalescing neighbors.
+    pub fn free(&mut self, off: usize, size: usize) {
+        if size == 0 {
+            return;
+        }
+        let pos = self.gaps.partition_point(|&(o, _)| o < off);
+        self.gaps.insert(pos, (off, size));
+        if pos + 1 < self.gaps.len()
+            && self.gaps[pos].0 + self.gaps[pos].1 == self.gaps[pos + 1].0
+        {
+            self.gaps[pos].1 += self.gaps[pos + 1].1;
+            self.gaps.remove(pos + 1);
+        }
+        if pos > 0 && self.gaps[pos - 1].0 + self.gaps[pos - 1].1 == self.gaps[pos].0 {
+            self.gaps[pos - 1].1 += self.gaps[pos].1;
+            self.gaps.remove(pos);
+        }
+    }
+
+    /// Total per-row slab length required by every allocation so far.
+    pub fn high_water(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_extends_then_reuses() {
+        let mut l = SlabLayout::new();
+        let a = l.alloc(10);
+        let b = l.alloc(5);
+        assert_eq!((a, b), (0, 10));
+        assert_eq!(l.high_water(), 15);
+        l.free(a, 10);
+        // Smaller request carves the front of the freed gap.
+        let c = l.alloc(4);
+        assert_eq!(c, 0);
+        // Remaining gap [4, 10) serves the next fit; no growth.
+        let d = l.alloc(6);
+        assert_eq!(d, 4);
+        assert_eq!(l.high_water(), 15);
+    }
+
+    #[test]
+    fn free_coalesces_adjacent_gaps() {
+        let mut l = SlabLayout::new();
+        let a = l.alloc(8);
+        let b = l.alloc(8);
+        let c = l.alloc(8);
+        l.free(a, 8);
+        l.free(c, 8);
+        l.free(b, 8); // middle free must merge all three
+        let big = l.alloc(24);
+        assert_eq!(big, 0);
+        assert_eq!(l.high_water(), 24);
+    }
+
+    #[test]
+    fn zero_size_is_noop() {
+        let mut l = SlabLayout::new();
+        assert_eq!(l.alloc(0), 0);
+        l.free(0, 0);
+        assert_eq!(l.high_water(), 0);
+    }
+
+    #[test]
+    fn interleaved_lifetimes_stay_disjoint() {
+        // Simulate a chain: each step allocates, frees the predecessor.
+        let mut l = SlabLayout::new();
+        let mut prev: Option<(usize, usize)> = None;
+        let mut peak = 0usize;
+        for step in 0..50 {
+            let size = 16 + (step % 3) * 8;
+            let off = l.alloc(size);
+            if let Some((po, ps)) = prev.take() {
+                // Live intervals must not overlap.
+                assert!(off + size <= po || po + ps <= off || off >= po + ps);
+                l.free(po, ps);
+            }
+            prev = Some((off, size));
+            peak = peak.max(l.high_water());
+        }
+        // Steady-state chain should not grow the slab unboundedly.
+        assert!(l.high_water() <= 2 * (16 + 16 + 24));
+    }
+}

@@ -1,0 +1,934 @@
+//! Compile-once operator programs: the planned execution layer under every
+//! DOF engine.
+//!
+//! Everything the eq. 7–9 propagation needs that is *static per
+//! (architecture, operator)* is derived once here and reused for every
+//! batch:
+//!
+//! * **schedule** — the topological node walk with `Linear → Activation`
+//!   pairs fused into single steps (the MLP hot path dispatches once per
+//!   layer instead of twice);
+//! * **liveness** — the `τ(i)` table (eq. 24) and, from it, a **static
+//!   buffer-slot assignment**: each node's `(v, s, g)` tuple is mapped to a
+//!   fixed offset in one contiguous per-shard slab
+//!   ([`layout::SlabLayout`]), replacing the per-call
+//!   [`crate::autodiff::TangentArena`] lookups on the hot path while
+//!   keeping the [`crate::autodiff::PeakTracker`] numbers identical (the
+//!   peak is replayed analytically from the same alloc/free event order);
+//! * **§3.2 active tangent rows** — per-node active-row sets precomputed by
+//!   a structural support propagation (bitsets of possibly-nonzero
+//!   components pushed through the graph), so the per-call rescans of `L`
+//!   at input nodes and the runtime zero-row compaction at slice nodes
+//!   disappear from execution;
+//! * **analytic costs** — exact per-row FLOP counts and peak tangent bytes
+//!   (both are exactly linear in the batch), so benches can report them
+//!   without executing, plus the Appendix B/D closed-form models.
+//!
+//! A program is **shard-invariant**: it depends only on the graph
+//! structure, the `L` zero pattern, and the options — never on the batch
+//! size or thread count — so `compute_sharded` compiles once and executes
+//! the same program on every shard (the PR 1 determinism contract holds by
+//! construction). Programs are value-independent (weight *values* may
+//! change under a fixed zero pattern, as in training), which is what makes
+//! the keyed [`cache::PlanCache`] effective for the PINN trainer.
+
+pub mod cache;
+pub mod exec;
+pub mod layout;
+
+pub use cache::{global_cache, PlanCache, PlanCacheStats};
+
+use std::sync::OnceLock;
+
+use crate::autodiff::flops::{graph_counts, CostModel, GraphCounts};
+use crate::autodiff::Cost;
+use crate::graph::{Act, Graph, Op};
+use crate::linalg::LdlDecomposition;
+use crate::tensor::Tensor;
+
+use layout::SlabLayout;
+
+/// Compile options — part of the cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanOptions {
+    /// Exploit §3.2 active-tangent-row sparsity (compile-time row pruning).
+    /// Off: every node carries the full rank-`r` tangent (the ablation the
+    /// engines expose as [`crate::autodiff::DofEngine::dense`]).
+    pub sparsity: bool,
+    /// Whether the zeroth-order `c·φ` term participates (affects the exact
+    /// FLOP count of the output step).
+    pub lower_order_c: bool,
+}
+
+/// Cache key for a compiled program. The fingerprint hashes the graph
+/// *structure* (op kinds, dims, wiring, weight zero patterns, activation
+/// kinds) and the operator's `L` zero pattern plus signs — not the weight
+/// values — so training steps that only move weight values reuse the plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub fingerprint: u64,
+    pub nodes: usize,
+    pub n: usize,
+    pub rank: usize,
+    pub sparsity: bool,
+    pub lower_order_c: bool,
+}
+
+/// One executable step of the schedule.
+#[derive(Debug, Clone)]
+pub enum StepKind {
+    /// Seed an input node from the batch rows and `L` (flat-input offset
+    /// precomputed).
+    Input { in_off: usize },
+    /// Affine node; `fused_act` is the id of the following activation node
+    /// when the pair was fused into one step.
+    Linear { fused_act: Option<usize> },
+    Activation,
+    Slice,
+    Add,
+    Mul,
+    SumReduce,
+    Concat,
+}
+
+/// A scheduled step materializing graph node `node` (for fused steps, the
+/// Linear node; the activation id lives in the kind).
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub node: usize,
+    pub kind: StepKind,
+}
+
+/// Per-node compiled facts.
+#[derive(Debug, Clone)]
+pub struct NodePlan {
+    /// Node output dimension.
+    pub dim: usize,
+    /// Global (row-of-`L`) indices of the node's active tangent rows,
+    /// sorted. `t = active.len()` is the node's tangent width.
+    pub active: Vec<usize>,
+    /// Per-row slab offset of the node's contiguous `[v | s | g]` block
+    /// (`(t + 2) · dim` per-row scalars).
+    pub slot: usize,
+    /// Per-row slab offset/length of the node's step scratch (stacked GEMM
+    /// buffers for Linear, union-aligned tangents for Mul); 0-length when
+    /// the step needs none.
+    pub scratch: usize,
+    pub scratch_len: usize,
+    /// Multi-parent ops: for each parent, the position of each of its
+    /// tangent rows inside this node's (union) active set.
+    pub parent_pos: Vec<Vec<usize>>,
+    /// Slice: indices into the *parent's* tangent rows that survive the
+    /// compile-time zero-row compaction.
+    pub keep: Vec<usize>,
+}
+
+impl NodePlan {
+    /// Tangent width.
+    pub fn t(&self) -> usize {
+        self.active.len()
+    }
+}
+
+/// Closed-form model numbers carried for reporting without execution.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanAnalytics {
+    /// Appendix B DOF multiplication model (per batch row).
+    pub dof_muls_model: u64,
+    /// Appendix B Hessian-method multiplication model (per batch row).
+    pub hessian_muls_model: u64,
+    /// Appendix D Hessian-method peak tangent scalars (per batch row).
+    pub hessian_peak_scalars: u64,
+}
+
+/// A compiled, reusable execution program for one `(graph, operator)` pair.
+pub struct OperatorProgram {
+    steps: Vec<Step>,
+    nodes: Vec<NodePlan>,
+    out_id: usize,
+    n: usize,
+    rank: usize,
+    slab_per_row: usize,
+    cost_per_row: Cost,
+    peak_per_row_scalars: u64,
+    opts: PlanOptions,
+    key: PlanKey,
+    analytics: PlanAnalytics,
+    counts: GraphCounts,
+    /// Lazily built `I_N` seed for the Hessian baseline (only programs a
+    /// Hessian executor actually touches pay the N×N allocation).
+    identity_seed: OnceLock<Tensor>,
+}
+
+impl OperatorProgram {
+    /// Compile a program. Cost is O(nodes + weight scalars); no floating
+    /// arithmetic on batch data happens here.
+    pub fn compile(graph: &Graph, ldl: &LdlDecomposition, opts: PlanOptions) -> Self {
+        let n = graph.input_dim();
+        assert_eq!(ldl.n, n, "decomposition N != graph input dim");
+        let r = ldl.rank();
+        let len = graph.len();
+        assert!(len > 0, "cannot compile an empty graph");
+        let out_id = graph.output();
+
+        // ---- liveness (eq. 24) ------------------------------------------
+        let tau = graph.tau();
+        let mut frees_at: Vec<Vec<usize>> = vec![Vec::new(); len];
+        for i in 0..len {
+            frees_at[tau[i]].push(i);
+        }
+
+        // ---- §3.2 active rows via structural support propagation --------
+        let (actives, keeps, parent_poss) = propagate_support(graph, ldl, r, opts.sparsity);
+
+        // ---- schedule with Linear→Activation fusion ---------------------
+        let mut steps: Vec<Step> = Vec::with_capacity(len);
+        let mut in_off = 0usize;
+        let mut j = 0usize;
+        while j < len {
+            let node = graph.node(j);
+            let kind = match &node.op {
+                Op::Input { dim } => {
+                    let k = StepKind::Input { in_off };
+                    in_off += *dim;
+                    k
+                }
+                Op::Linear { .. } => {
+                    // Fuse iff the linear's only consumer is the next node
+                    // and that node is an activation (consumer ids are > j,
+                    // so τ(j) == j+1 pins the consumer set to {j+1}).
+                    let fusable = j + 1 < len
+                        && tau[j] == j + 1
+                        && matches!(graph.node(j + 1).op, Op::Activation { .. })
+                        && graph.node(j + 1).inputs == [j];
+                    StepKind::Linear {
+                        fused_act: if fusable { Some(j + 1) } else { None },
+                    }
+                }
+                Op::Activation { .. } => StepKind::Activation,
+                Op::Slice { .. } => StepKind::Slice,
+                Op::Add => StepKind::Add,
+                Op::Mul => StepKind::Mul,
+                Op::SumReduce => StepKind::SumReduce,
+                Op::Concat => StepKind::Concat,
+            };
+            let fused = matches!(kind, StepKind::Linear { fused_act: Some(_) });
+            steps.push(Step { node: j, kind });
+            j += if fused { 2 } else { 1 };
+        }
+
+        // ---- static slot assignment (per-row units) ---------------------
+        let mut nodes: Vec<NodePlan> = (0..len)
+            .map(|i| NodePlan {
+                dim: graph.node(i).dim,
+                active: actives[i].clone(),
+                slot: 0,
+                scratch: 0,
+                scratch_len: 0,
+                parent_pos: parent_poss[i].clone(),
+                keep: keeps[i].clone(),
+            })
+            .collect();
+        let mut lay = SlabLayout::new();
+        let node_size = |np: &NodePlan| (np.t() + 2) * np.dim;
+        for step in &steps {
+            let id = step.node;
+            let t = nodes[id].t();
+            let dim = nodes[id].dim;
+            nodes[id].slot = lay.alloc(node_size(&nodes[id]));
+            // Step scratch, freed at end of step.
+            let scratch_len = match &step.kind {
+                StepKind::Linear { .. } => {
+                    let in_d = graph.node(graph.node(id).inputs[0]).dim;
+                    (t + 2) * in_d + (t + 2) * dim
+                }
+                StepKind::Mul => graph.node(id).inputs.len() * t * dim,
+                _ => 0,
+            };
+            if scratch_len > 0 {
+                nodes[id].scratch = lay.alloc(scratch_len);
+                nodes[id].scratch_len = scratch_len;
+            }
+            lay.free(nodes[id].scratch, nodes[id].scratch_len);
+            for &i in &frees_at[id] {
+                if i != out_id {
+                    lay.free(nodes[i].slot, node_size(&nodes[i]));
+                }
+            }
+            if let StepKind::Linear {
+                fused_act: Some(a),
+            } = &step.kind
+            {
+                let a = *a;
+                nodes[a].slot = lay.alloc(node_size(&nodes[a]));
+                for &i in &frees_at[a] {
+                    if i != out_id {
+                        lay.free(nodes[i].slot, node_size(&nodes[i]));
+                    }
+                }
+            }
+        }
+        let slab_per_row = lay.high_water();
+
+        // ---- exact per-row cost & liveness peak (both linear in batch) --
+        let cost_per_row = cost_per_row(graph, &nodes, opts, out_id);
+        let peak_per_row_scalars = peak_per_row(graph, &nodes, &frees_at, out_id);
+
+        // ---- closed-form models (Appendix B/D) --------------------------
+        let counts = graph_counts(graph);
+        let model = CostModel {
+            counts,
+            n: n as u64,
+            r: r as u64,
+        };
+        let hessian_peak_scalars = {
+            // Appendix D: all width-N forward tangents live at once, plus
+            // the widest reverse buffer (mirrors MemoryModel).
+            let v = graph.scalar_node_count() as u64;
+            let max_dim = graph.nodes().iter().map(|nd| nd.dim).max().unwrap_or(0) as u64;
+            (n as u64) * v + (n as u64) * max_dim
+        };
+        let analytics = PlanAnalytics {
+            dof_muls_model: model.dof_muls(),
+            hessian_muls_model: model.hessian_muls(),
+            hessian_peak_scalars,
+        };
+
+        let key = plan_key(graph, ldl, opts);
+        OperatorProgram {
+            steps,
+            nodes,
+            out_id,
+            n,
+            rank: r,
+            slab_per_row,
+            cost_per_row,
+            peak_per_row_scalars,
+            opts,
+            key,
+            analytics,
+            counts,
+            identity_seed: OnceLock::new(),
+        }
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    pub fn steps(&self) -> &[Step] {
+        &self.steps
+    }
+
+    pub fn node_plan(&self, id: usize) -> &NodePlan {
+        &self.nodes[id]
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn output(&self) -> usize {
+        self.out_id
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.n
+    }
+
+    /// DOF tangent width `r = rank(A)`.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn options(&self) -> PlanOptions {
+        self.opts
+    }
+
+    pub fn key(&self) -> PlanKey {
+        self.key
+    }
+
+    /// Number of fused `Linear→Activation` steps in the schedule.
+    pub fn fused_steps(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| matches!(s.kind, StepKind::Linear { fused_act: Some(_) }))
+            .count()
+    }
+
+    /// Per-row slab scalars; one shard's slab is `slab_per_row · rows`.
+    pub fn slab_per_row(&self) -> usize {
+        self.slab_per_row
+    }
+
+    /// Slab length (f64 scalars) for a `batch`-row execution.
+    pub fn slab_len(&self, batch: usize) -> usize {
+        self.slab_per_row * batch
+    }
+
+    /// Exact FLOP count of executing `batch` rows — identical to what the
+    /// reference interpreter accumulates at runtime (every term of the
+    /// eq. 7–9 pass is linear in the batch).
+    pub fn cost(&self, batch: usize) -> Cost {
+        Cost {
+            muls: self.cost_per_row.muls * batch as u64,
+            adds: self.cost_per_row.adds * batch as u64,
+        }
+    }
+
+    /// Exact peak live tangent bytes of a `batch`-row execution — the
+    /// Theorem 2.2 `M₁` measurement, replayed from the same alloc/free
+    /// event order the interpreter's [`crate::autodiff::PeakTracker`] sees.
+    pub fn peak_tangent_bytes(&self, batch: usize) -> u64 {
+        self.peak_per_row_scalars * 8 * batch as u64
+    }
+
+    /// Closed-form Appendix B/D model numbers.
+    pub fn analytics(&self) -> PlanAnalytics {
+        self.analytics
+    }
+
+    /// Scalar-level structural counts (`|E|`, `|R|`, `|T|`, `|V|`).
+    pub fn graph_counts(&self) -> GraphCounts {
+        self.counts
+    }
+
+    /// Active rows of the output node (global `L`-row indices).
+    pub fn out_active(&self) -> &[usize] {
+        &self.nodes[self.out_id].active
+    }
+
+    /// The `I_N` seed shared with the Hessian baseline executor, built on
+    /// first use and cached for the program's lifetime.
+    pub fn identity_seed(&self) -> &Tensor {
+        self.identity_seed.get_or_init(|| Tensor::eye(self.n))
+    }
+}
+
+/// Exact per-row FLOP accumulation, mirroring the reference interpreter's
+/// counting term by term (see `DofEngine::compute_with_arena`).
+fn cost_per_row(graph: &Graph, nodes: &[NodePlan], opts: PlanOptions, out_id: usize) -> Cost {
+    let mut c = Cost::zero();
+    for (j, node) in graph.nodes().iter().enumerate() {
+        let d = nodes[j].dim;
+        let t = nodes[j].t();
+        match &node.op {
+            Op::Input { .. } | Op::Slice { .. } | Op::Concat => {}
+            Op::Linear { weight, .. } => {
+                let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+                c.muls += ((t + 2) * out_d * in_d) as u64;
+                c.adds += (t * out_d * in_d) as u64;
+            }
+            Op::Activation { .. } => {
+                c.muls += (2 * t * d + 2 * d) as u64;
+                c.adds += (t * d + d) as u64;
+            }
+            Op::Add => {
+                let extra = node.inputs.len().saturating_sub(1);
+                c.adds += (extra * (t * d + 2 * d)) as u64;
+            }
+            Op::Mul => {
+                let k = node.inputs.len();
+                // Value chain (outside the per-row loop in the interpreter,
+                // but batch-linear all the same).
+                c.muls += ((k - 1) * d) as u64;
+                // Per parent: leave-one-out coefficient, tangent scale,
+                // scalar-stream scale.
+                c.muls += (k * ((k - 1) * d + t * d + d)) as u64;
+                // Per unordered pair: cross contraction + 2× scale.
+                let pairs = k * (k - 1) / 2;
+                c.muls += (pairs * (t * d + 2 * d)) as u64;
+            }
+            Op::SumReduce => {
+                let p = node.inputs[0];
+                let pd = nodes[p].dim;
+                let pt = nodes[p].t();
+                c.adds += (pt * pd + 2 * pd) as u64;
+            }
+        }
+    }
+    if opts.lower_order_c {
+        c.muls += nodes[out_id].dim as u64;
+    }
+    c
+}
+
+/// Replay the interpreter's tangent alloc/free event order analytically:
+/// at node `j` allocate `t_j·d_j`, then free every `i` with `τ(i) = j`
+/// except the output. Returns the peak in per-row scalars.
+fn peak_per_row(
+    graph: &Graph,
+    nodes: &[NodePlan],
+    frees_at: &[Vec<usize>],
+    out_id: usize,
+) -> u64 {
+    let mut live = 0u64;
+    let mut peak = 0u64;
+    for j in 0..graph.len() {
+        live += (nodes[j].t() * nodes[j].dim) as u64;
+        if live > peak {
+            peak = live;
+        }
+        for &i in &frees_at[j] {
+            if i != out_id {
+                live -= (nodes[i].t() * nodes[i].dim) as u64;
+            }
+        }
+    }
+    peak
+}
+
+// ---- structural support propagation (§3.2) ------------------------------
+
+fn words(bits: usize) -> usize {
+    (bits + 63) / 64
+}
+
+fn bit_get(mask: &[u64], i: usize) -> bool {
+    mask[i / 64] & (1u64 << (i % 64)) != 0
+}
+
+fn bit_set(mask: &mut [u64], i: usize) {
+    mask[i / 64] |= 1u64 << (i % 64);
+}
+
+fn any_bit(mask: &[u64]) -> bool {
+    mask.iter().any(|&w| w != 0)
+}
+
+fn or_into(dst: &mut [u64], src: &[u64]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d |= s;
+    }
+}
+
+/// Compute per-node active tangent rows, slice keep-maps, and multi-parent
+/// union position maps.
+///
+/// With sparsity on, a per-(row, component) *support* bitmask (could this
+/// entry be nonzero for some input?) is pushed through the graph; the
+/// active-set rules mirror the interpreter exactly: rows are pruned only
+/// where the interpreter prunes them — at input nodes (scanning `L`'s
+/// columns) and at slice nodes (zero-row compaction, which for slices of
+/// input nodes is purely structural: the sliced tangent rows *are* rows of
+/// `L`). Everywhere else the active set is inherited (chain ops) or
+/// union-merged (multi-parent ops), pruned or not.
+#[allow(clippy::type_complexity)]
+fn propagate_support(
+    graph: &Graph,
+    ldl: &LdlDecomposition,
+    r: usize,
+    sparsity: bool,
+) -> (Vec<Vec<usize>>, Vec<Vec<usize>>, Vec<Vec<Vec<usize>>>) {
+    let len = graph.len();
+    let mut actives: Vec<Vec<usize>> = vec![Vec::new(); len];
+    let mut keeps: Vec<Vec<usize>> = vec![Vec::new(); len];
+    let mut parent_poss: Vec<Vec<Vec<usize>>> = vec![Vec::new(); len];
+
+    if !sparsity {
+        // Dense mode: full-width tangents everywhere; identity maps.
+        let full: Vec<usize> = (0..r).collect();
+        for (j, node) in graph.nodes().iter().enumerate() {
+            actives[j] = full.clone();
+            match &node.op {
+                Op::Slice { .. } => keeps[j] = full.clone(),
+                Op::Add | Op::Mul | Op::Concat => {
+                    parent_poss[j] = node.inputs.iter().map(|_| full.clone()).collect();
+                }
+                _ => {}
+            }
+        }
+        return (actives, keeps, parent_poss);
+    }
+
+    // masks[j]: per active row, a bitmask over the node's components.
+    let mut masks: Vec<Vec<Vec<u64>>> = vec![Vec::new(); len];
+    let mut in_off = 0usize;
+
+    for j in 0..len {
+        let node = graph.node(j);
+        let d = node.dim;
+        match &node.op {
+            Op::Input { dim } => {
+                let mut active = Vec::new();
+                let mut rows = Vec::new();
+                for k in 0..r {
+                    let lrow = &ldl.l.row(k)[in_off..in_off + dim];
+                    if lrow.iter().any(|&v| v != 0.0) {
+                        let mut m = vec![0u64; words(d)];
+                        for (c, &v) in lrow.iter().enumerate() {
+                            if v != 0.0 {
+                                bit_set(&mut m, c);
+                            }
+                        }
+                        active.push(k);
+                        rows.push(m);
+                    }
+                }
+                in_off += dim;
+                actives[j] = active;
+                masks[j] = rows;
+            }
+            Op::Linear { weight, .. } => {
+                let p = node.inputs[0];
+                let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+                // Column support of W: which outputs each input touches.
+                let w = weight.data();
+                let ow = words(out_d);
+                let mut cols: Vec<Vec<u64>> = vec![vec![0u64; ow]; in_d];
+                for o in 0..out_d {
+                    for (c, col) in cols.iter_mut().enumerate() {
+                        if w[o * in_d + c] != 0.0 {
+                            bit_set(col, o);
+                        }
+                    }
+                }
+                actives[j] = actives[p].clone();
+                masks[j] = masks[p]
+                    .iter()
+                    .map(|prow| {
+                        let mut out = vec![0u64; ow];
+                        for c in 0..in_d {
+                            if bit_get(prow, c) {
+                                or_into(&mut out, &cols[c]);
+                            }
+                        }
+                        out
+                    })
+                    .collect();
+            }
+            Op::Activation { .. } => {
+                let p = node.inputs[0];
+                actives[j] = actives[p].clone();
+                masks[j] = masks[p].clone();
+            }
+            Op::Slice { start, len: slen } => {
+                let p = node.inputs[0];
+                let mut keep = Vec::new();
+                let mut active = Vec::new();
+                let mut rows = Vec::new();
+                for (kk, prow) in masks[p].iter().enumerate() {
+                    let mut m = vec![0u64; words(*slen)];
+                    for i in 0..*slen {
+                        if bit_get(prow, start + i) {
+                            bit_set(&mut m, i);
+                        }
+                    }
+                    if any_bit(&m) {
+                        keep.push(kk);
+                        active.push(actives[p][kk]);
+                        rows.push(m);
+                    }
+                }
+                keeps[j] = keep;
+                actives[j] = active;
+                masks[j] = rows;
+            }
+            Op::Add | Op::Mul | Op::Concat => {
+                let mut union: Vec<usize> = Vec::new();
+                for &p in &node.inputs {
+                    union.extend_from_slice(&actives[p]);
+                }
+                union.sort_unstable();
+                union.dedup();
+                let pos: Vec<Vec<usize>> = node
+                    .inputs
+                    .iter()
+                    .map(|&p| {
+                        actives[p]
+                            .iter()
+                            .map(|k| union.binary_search(k).expect("active ⊆ union"))
+                            .collect()
+                    })
+                    .collect();
+                let wdim = words(d);
+                let mut rows: Vec<Vec<u64>> = vec![vec![0u64; wdim]; union.len()];
+                match &node.op {
+                    Op::Concat => {
+                        let mut off = 0usize;
+                        for (pi, &p) in node.inputs.iter().enumerate() {
+                            let pd = graph.node(p).dim;
+                            for (kk, prow) in masks[p].iter().enumerate() {
+                                let u = pos[pi][kk];
+                                for i in 0..pd {
+                                    if bit_get(prow, i) {
+                                        bit_set(&mut rows[u], off + i);
+                                    }
+                                }
+                            }
+                            off += pd;
+                        }
+                    }
+                    _ => {
+                        // Add / Mul: component-aligned union of supports.
+                        for (pi, &p) in node.inputs.iter().enumerate() {
+                            for (kk, prow) in masks[p].iter().enumerate() {
+                                or_into(&mut rows[pos[pi][kk]], prow);
+                            }
+                        }
+                    }
+                }
+                actives[j] = union;
+                parent_poss[j] = pos;
+                masks[j] = rows;
+            }
+            Op::SumReduce => {
+                let p = node.inputs[0];
+                actives[j] = actives[p].clone();
+                masks[j] = masks[p]
+                    .iter()
+                    .map(|prow| {
+                        let mut m = vec![0u64; 1];
+                        if any_bit(prow) {
+                            bit_set(&mut m, 0);
+                        }
+                        m
+                    })
+                    .collect();
+            }
+        }
+    }
+    (actives, keeps, parent_poss)
+}
+
+// ---- fingerprinting ------------------------------------------------------
+
+/// FNV-1a 64-bit accumulator.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    fn bits(&mut self, it: impl Iterator<Item = bool>) {
+        let mut word = 0u64;
+        let mut nb = 0u32;
+        for b in it {
+            word = (word << 1) | b as u64;
+            nb += 1;
+            if nb == 64 {
+                self.u64(word);
+                word = 0;
+                nb = 0;
+            }
+        }
+        if nb > 0 {
+            self.u64(word);
+            self.u64(nb as u64);
+        }
+    }
+}
+
+fn act_tag(act: Act) -> u64 {
+    match act {
+        Act::Tanh => 1,
+        Act::Sin => 2,
+        Act::Gelu => 3,
+        Act::Softplus => 4,
+        Act::Square => 5,
+        Act::Identity => 6,
+    }
+}
+
+/// Value-independent structural fingerprint of `(graph, ldl, opts)` — the
+/// cache key under which a compiled program is valid.
+pub fn plan_key(graph: &Graph, ldl: &LdlDecomposition, opts: PlanOptions) -> PlanKey {
+    let mut h = Fnv::new();
+    h.u64(graph.len() as u64);
+    for node in graph.nodes() {
+        h.u64(node.dim as u64);
+        h.u64(node.inputs.len() as u64);
+        for &p in &node.inputs {
+            h.u64(p as u64);
+        }
+        match &node.op {
+            Op::Input { dim } => {
+                h.u64(10);
+                h.u64(*dim as u64);
+            }
+            Op::Linear { weight, bias } => {
+                h.u64(11);
+                h.u64(weight.dims()[0] as u64);
+                h.u64(weight.dims()[1] as u64);
+                h.u64(bias.len() as u64);
+                h.bits(weight.data().iter().map(|&v| v != 0.0));
+            }
+            Op::Activation { act } => {
+                h.u64(12);
+                h.u64(act_tag(*act));
+            }
+            Op::Slice { start, len } => {
+                h.u64(13);
+                h.u64(*start as u64);
+                h.u64(*len as u64);
+            }
+            Op::Add => h.u64(14),
+            Op::Mul => h.u64(15),
+            Op::SumReduce => h.u64(16),
+            Op::Concat => h.u64(17),
+        }
+    }
+    h.u64(ldl.n as u64);
+    h.u64(ldl.rank() as u64);
+    h.bits(ldl.l.data().iter().map(|&v| v != 0.0));
+    h.bits(ldl.d.iter().map(|&s| s >= 0.0));
+    h.u64(opts.sparsity as u64);
+    h.u64(opts.lower_order_c as u64);
+    PlanKey {
+        fingerprint: h.0,
+        nodes: graph.len(),
+        n: graph.input_dim(),
+        rank: ldl.rank(),
+        sparsity: opts.sparsity,
+        lower_order_c: opts.lower_order_c,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{builder::random_layers, mlp_graph, sparse_mlp_graph};
+    use crate::operators::CoeffSpec;
+    use crate::util::Xoshiro256;
+
+    fn random_symmetric(n: usize, rng: &mut Xoshiro256) -> Tensor {
+        let b = Tensor::randn(&[n, n], rng);
+        b.add(&b.transpose()).scale(0.5)
+    }
+
+    #[test]
+    fn mlp_schedule_is_fully_fused() {
+        let mut rng = Xoshiro256::new(1);
+        let g = mlp_graph(&random_layers(&[6, 12, 12, 1], &mut rng), Act::Tanh);
+        let ldl = LdlDecomposition::of(&random_symmetric(6, &mut rng));
+        let p = OperatorProgram::compile(
+            &g,
+            &ldl,
+            PlanOptions {
+                sparsity: true,
+                lower_order_c: false,
+            },
+        );
+        // input + 2 fused (lin,act) + final linear = 4 steps over 6 nodes.
+        assert_eq!(p.steps().len(), 4);
+        assert_eq!(p.fused_steps(), 2);
+        assert_eq!(p.rank(), 6);
+        assert!(p.slab_per_row() > 0);
+    }
+
+    #[test]
+    fn block_diag_operator_prunes_rows_per_block() {
+        let mut rng = Xoshiro256::new(2);
+        let blocks: Vec<_> = (0..4)
+            .map(|_| random_layers(&[3, 8, 4], &mut rng))
+            .collect();
+        let g = sparse_mlp_graph(&blocks, Act::Tanh);
+        let a = CoeffSpec::BlockDiagGram {
+            blocks: 4,
+            block: 3,
+            rank: 3,
+            seed: 5,
+        }
+        .build();
+        let ldl = LdlDecomposition::of(&a);
+        let r = ldl.rank();
+        let sparse = OperatorProgram::compile(
+            &g,
+            &ldl,
+            PlanOptions {
+                sparsity: true,
+                lower_order_c: false,
+            },
+        );
+        let dense = OperatorProgram::compile(
+            &g,
+            &ldl,
+            PlanOptions {
+                sparsity: false,
+                lower_order_c: false,
+            },
+        );
+        // Per-block slices must carry ~r/4 rows, not all r.
+        let mut pruned = false;
+        for (id, node) in g.nodes().iter().enumerate() {
+            if matches!(node.op, Op::Slice { .. }) {
+                assert!(sparse.node_plan(id).t() < r);
+                assert_eq!(dense.node_plan(id).t(), r);
+                pruned = true;
+            }
+        }
+        assert!(pruned, "sparse architecture should have slice nodes");
+        assert!(sparse.cost(1).muls < dense.cost(1).muls);
+        assert!(sparse.peak_tangent_bytes(1) < dense.peak_tangent_bytes(1));
+    }
+
+    #[test]
+    fn cost_and_peak_scale_exactly_with_batch() {
+        let mut rng = Xoshiro256::new(3);
+        let g = mlp_graph(&random_layers(&[4, 9, 1], &mut rng), Act::Sin);
+        let ldl = LdlDecomposition::of(&random_symmetric(4, &mut rng));
+        let p = OperatorProgram::compile(
+            &g,
+            &ldl,
+            PlanOptions {
+                sparsity: true,
+                lower_order_c: true,
+            },
+        );
+        let c1 = p.cost(1);
+        let c7 = p.cost(7);
+        assert_eq!(c7.muls, 7 * c1.muls);
+        assert_eq!(c7.adds, 7 * c1.adds);
+        assert_eq!(p.peak_tangent_bytes(7), 7 * p.peak_tangent_bytes(1));
+        assert_eq!(p.slab_len(7), 7 * p.slab_per_row());
+    }
+
+    #[test]
+    fn key_ignores_weight_values_but_not_structure() {
+        let mut rng = Xoshiro256::new(4);
+        let layers = random_layers(&[3, 5, 1], &mut rng);
+        let g1 = mlp_graph(&layers, Act::Tanh);
+        // Same topology, different (still dense) values.
+        let layers2 = random_layers(&[3, 5, 1], &mut rng);
+        let g2 = mlp_graph(&layers2, Act::Tanh);
+        let g3 = mlp_graph(&random_layers(&[3, 6, 1], &mut rng), Act::Tanh);
+        let ldl = LdlDecomposition::of(&random_symmetric(3, &mut rng));
+        let opts = PlanOptions {
+            sparsity: true,
+            lower_order_c: false,
+        };
+        assert_eq!(plan_key(&g1, &ldl, opts), plan_key(&g2, &ldl, opts));
+        assert_ne!(plan_key(&g1, &ldl, opts), plan_key(&g3, &ldl, opts));
+        let opts2 = PlanOptions {
+            sparsity: false,
+            lower_order_c: false,
+        };
+        assert_ne!(plan_key(&g1, &ldl, opts), plan_key(&g1, &ldl, opts2));
+    }
+
+    #[test]
+    fn analytics_match_cost_model() {
+        let mut rng = Xoshiro256::new(5);
+        let g = mlp_graph(&random_layers(&[8, 16, 16, 1], &mut rng), Act::Tanh);
+        let ldl = LdlDecomposition::of(&random_symmetric(8, &mut rng));
+        let p = OperatorProgram::compile(
+            &g,
+            &ldl,
+            PlanOptions {
+                sparsity: true,
+                lower_order_c: false,
+            },
+        );
+        let m = CostModel::new(&g, p.rank());
+        assert_eq!(p.analytics().dof_muls_model, m.dof_muls());
+        assert_eq!(p.analytics().hessian_muls_model, m.hessian_muls());
+        assert!(p.analytics().hessian_peak_scalars > 0);
+    }
+}

@@ -135,6 +135,17 @@ impl Args {
         self.get_parsed_or(name, default).unwrap_or_else(|e| panic!("{e}"))
     }
 
+    /// Validated thread-count option (`--threads`): `Ok(None)` when absent,
+    /// a clear error for `0`, negative, or non-numeric values.
+    pub fn thread_count(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => parse_thread_count(v)
+                .map(Some)
+                .map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
     /// Comma-separated usize list with default (e.g. `--threads 1,2,4,8`);
     /// panics with a readable message on malformed entries.
     pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
@@ -156,9 +167,54 @@ impl Args {
     }
 }
 
+/// Parse a worker thread count: a positive integer. Shared by the
+/// `--threads` CLI option and the `DOF_THREADS` environment variable so
+/// both reject `0` and non-numeric values with the same clear message
+/// instead of panicking or silently falling back.
+pub fn parse_thread_count(raw: &str) -> Result<usize, String> {
+    match raw.trim().parse::<usize>() {
+        Ok(0) => Err(format!(
+            "thread count must be a positive integer (≥ 1), got {raw:?}"
+        )),
+        Ok(t) => Ok(t),
+        Err(_) => Err(format!(
+            "thread count must be a positive integer (≥ 1), got {raw:?}"
+        )),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn thread_count_accepts_positive_integers() {
+        assert_eq!(parse_thread_count("1"), Ok(1));
+        assert_eq!(parse_thread_count("8"), Ok(8));
+        assert_eq!(parse_thread_count(" 4 "), Ok(4));
+    }
+
+    #[test]
+    fn thread_count_rejects_zero_and_garbage() {
+        for bad in ["0", "-2", "eight", "", "4.5", "1e2"] {
+            let err = parse_thread_count(bad).unwrap_err();
+            assert!(
+                err.contains("positive integer") && err.contains(bad.trim()),
+                "error for {bad:?} should name the value: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn thread_count_option_accessor() {
+        let a = Args::parse(vec!["bench", "--threads", "6"]);
+        assert_eq!(a.thread_count("threads"), Ok(Some(6)));
+        let missing = Args::parse(vec!["bench"]);
+        assert_eq!(missing.thread_count("threads"), Ok(None));
+        let bad = Args::parse(vec!["bench", "--threads", "zero"]);
+        let err = bad.thread_count("threads").unwrap_err();
+        assert!(err.starts_with("--threads:"), "{err}");
+    }
 
     #[test]
     fn parses_subcommand_options_flags() {

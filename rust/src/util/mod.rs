@@ -7,7 +7,7 @@ pub mod csv;
 pub mod prng;
 pub mod stats;
 
-pub use cli::Args;
+pub use cli::{parse_thread_count, Args};
 pub use csv::CsvTable;
 pub use prng::{SplitMix64, Xoshiro256};
 pub use stats::{fmt_bytes, fmt_duration, LatencyHistogram, Summary};

@@ -118,6 +118,119 @@ fn dof_sparse_architecture_bit_identical_across_threads() {
     }
 }
 
+/// Satellite coverage: the sparse product-head architecture (`Op::Mul`)
+/// through the **Hessian** baseline — its eq. 14 reverse sweep has
+/// dedicated Mul handling that the plain-MLP fixture never touches.
+#[test]
+fn hessian_sparse_architecture_bit_identical_across_threads() {
+    let mut rng = Xoshiro256::new(405);
+    let blocks: Vec<_> = (0..3)
+        .map(|_| random_layers(&[2, 8, 3], &mut rng))
+        .collect();
+    let g = sparse_mlp_graph(&blocks, Act::Tanh);
+    let x = Tensor::randn(&[13, 6], &mut rng).scale(0.4);
+    let a = CoeffSpec::BlockDiagGram {
+        blocks: 3,
+        block: 2,
+        rank: 2,
+        seed: 8,
+    }
+    .build();
+    let eng = HessianEngine::new(&a);
+    let full = eng.compute(&g, &x);
+    let base = eng.compute_sharded(&g, &x, &Pool::new(1), 4);
+    assert_eq!(base.values, full.values);
+    assert_eq!(base.operator_values, full.operator_values);
+    assert_eq!(base.hessian, full.hessian);
+    assert_eq!(base.cost, full.cost);
+    for threads in [2usize, 4, 8] {
+        let r = eng.compute_sharded(&g, &x, &Pool::new(threads), 4);
+        assert_eq!(r.values, base.values);
+        assert_eq!(r.operator_values, base.operator_values);
+        assert_eq!(r.hessian, base.hessian);
+        assert_eq!(r.cost, base.cost);
+        assert_eq!(r.peak_tangent_bytes, base.peak_tangent_bytes);
+    }
+}
+
+/// Satellite coverage: operators with lower-order `(b, c)` terms — the
+/// `b`-seeded scalar stream and the output `c·φ` correction must survive
+/// sharding bit-identically on both engines, and the engines must still
+/// agree with each other.
+#[test]
+fn lower_order_terms_bit_identical_across_threads_both_engines() {
+    let mut rng = Xoshiro256::new(406);
+    let g = mlp_graph(&random_layers(&[7, 20, 20, 1], &mut rng), Act::Sin);
+    let x = Tensor::randn(&[19, 7], &mut rng);
+    let a = random_symmetric(7, &mut rng);
+    let bvec: Vec<f64> = (0..7).map(|_| rng.normal()).collect();
+    let c = 1.3;
+    let dof_eng = DofEngine::new(&a).with_lower_order(Some(bvec.clone()), Some(c));
+    let hes_eng = HessianEngine::new(&a).with_lower_order(Some(bvec), Some(c));
+
+    let dof_base = dof_eng.compute_sharded(&g, &x, &Pool::new(1), DEFAULT_SHARD_ROWS);
+    let hes_base = hes_eng.compute_sharded(&g, &x, &Pool::new(1), DEFAULT_SHARD_ROWS);
+    for threads in [2usize, 4, 8] {
+        let d = dof_eng.compute_sharded(&g, &x, &Pool::new(threads), DEFAULT_SHARD_ROWS);
+        assert_eq!(d.values, dof_base.values, "DOF values at {threads} threads");
+        assert_eq!(d.operator_values, dof_base.operator_values);
+        assert_eq!(d.cost, dof_base.cost);
+        assert_eq!(d.peak_tangent_bytes, dof_base.peak_tangent_bytes);
+        let h = hes_eng.compute_sharded(&g, &x, &Pool::new(threads), DEFAULT_SHARD_ROWS);
+        assert_eq!(h.operator_values, hes_base.operator_values);
+        assert_eq!(h.cost, hes_base.cost);
+    }
+    // The two exact methods agree on the full operator (2nd + 1st + 0th).
+    for b in 0..x.dims()[0] {
+        let dv = dof_base.operator_values.at(b, 0);
+        let hv = hes_base.operator_values.at(b, 0);
+        assert!(
+            (dv - hv).abs() < 1e-8 * hv.abs().max(1.0),
+            "b={b}: DOF {dv} vs Hessian {hv}"
+        );
+    }
+}
+
+/// Satellite coverage: lower-order terms on the sparse (`Op::Mul`)
+/// architecture — the union-aligned scalar stream at the product head.
+#[test]
+fn lower_order_terms_sparse_architecture_across_threads() {
+    let mut rng = Xoshiro256::new(407);
+    let blocks: Vec<_> = (0..4)
+        .map(|_| random_layers(&[3, 9, 4], &mut rng))
+        .collect();
+    let g = sparse_mlp_graph(&blocks, Act::Tanh);
+    let x = Tensor::randn(&[11, 12], &mut rng).scale(0.4);
+    let a = CoeffSpec::BlockDiagGram {
+        blocks: 4,
+        block: 3,
+        rank: 3,
+        seed: 6,
+    }
+    .build();
+    let bvec: Vec<f64> = (0..12).map(|_| 0.3 * rng.normal()).collect();
+    let eng = DofEngine::new(&a).with_lower_order(Some(bvec.clone()), Some(-0.4));
+    let base = eng.compute_sharded(&g, &x, &Pool::new(1), 4);
+    for threads in [2usize, 4, 8] {
+        let r = eng.compute_sharded(&g, &x, &Pool::new(threads), 4);
+        assert_eq!(r.operator_values, base.operator_values);
+        assert_eq!(r.values, base.values);
+        assert_eq!(r.cost, base.cost);
+        assert_eq!(r.peak_tangent_bytes, base.peak_tangent_bytes);
+    }
+    let hes = HessianEngine::new(&a)
+        .with_lower_order(Some(bvec), Some(-0.4))
+        .compute_sharded(&g, &x, &Pool::new(4), 4);
+    for b in 0..11 {
+        let dv = base.operator_values.at(b, 0);
+        let hv = hes.operator_values.at(b, 0);
+        assert!(
+            (dv - hv).abs() < 1e-8 * hv.abs().max(1.0),
+            "b={b}: DOF {dv} vs Hessian {hv}"
+        );
+    }
+}
+
 #[test]
 fn hessian_bit_identical_across_thread_counts_and_matches_unsharded() {
     let (g, x, a) = mlp_fixture();

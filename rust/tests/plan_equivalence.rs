@@ -1,0 +1,213 @@
+//! The plan subsystem's contract, tested differentially: **planned
+//! execution is bit-identical to the pre-refactor interpreter path** —
+//! values, `L[φ]`, the output tangent, exact FLOP counts, and peak tangent
+//! bytes — across architectures (plain MLP, sparse `Op::Mul`
+//! product-head), operator classes (dense symmetric, block-diagonal,
+//! low-rank, lower-order `(b, c)` terms), sparsity on/off, and 1/2/4/8
+//! threads. The interpreter (`DofEngine::compute_with_arena`) is retained
+//! in-tree precisely to serve as this oracle.
+
+use dof::autodiff::{DofEngine, DofResult, TangentArena};
+use dof::graph::{builder::random_layers, mlp_graph, sparse_mlp_graph, Act, Graph};
+use dof::operators::CoeffSpec;
+use dof::parallel::Pool;
+use dof::tensor::Tensor;
+use dof::util::Xoshiro256;
+
+fn random_symmetric(n: usize, rng: &mut Xoshiro256) -> Tensor {
+    let b = Tensor::randn(&[n, n], rng);
+    b.add(&b.transpose()).scale(0.5)
+}
+
+/// Bitwise equality of every observable field.
+fn assert_bit_identical(planned: &DofResult, reference: &DofResult, what: &str) {
+    assert_eq!(planned.values, reference.values, "{what}: values differ");
+    assert_eq!(
+        planned.operator_values, reference.operator_values,
+        "{what}: L[φ] differs"
+    );
+    assert_eq!(
+        planned.out_active, reference.out_active,
+        "{what}: active output rows differ"
+    );
+    assert_eq!(
+        planned.out_tangent.data, reference.out_tangent.data,
+        "{what}: output tangent differs"
+    );
+    assert_eq!(planned.cost, reference.cost, "{what}: FLOP counts differ");
+    assert_eq!(
+        planned.peak_tangent_bytes, reference.peak_tangent_bytes,
+        "{what}: peak tangent bytes differ"
+    );
+}
+
+fn interpreter(eng: &DofEngine, g: &Graph, x: &Tensor) -> DofResult {
+    eng.compute_with_arena(g, x, &mut TangentArena::new())
+}
+
+#[test]
+fn planned_matches_interpreter_mlp_bitwise() {
+    let mut rng = Xoshiro256::new(2101);
+    let g = mlp_graph(&random_layers(&[10, 32, 32, 1], &mut rng), Act::Tanh);
+    let x = Tensor::randn(&[9, 10], &mut rng);
+    let a = random_symmetric(10, &mut rng);
+    let eng = DofEngine::new(&a);
+    assert_bit_identical(&eng.compute(&g, &x), &interpreter(&eng, &g, &x), "mlp");
+}
+
+#[test]
+fn planned_matches_interpreter_sparse_architecture_bitwise() {
+    let mut rng = Xoshiro256::new(2102);
+    let blocks: Vec<_> = (0..4)
+        .map(|_| random_layers(&[3, 12, 5], &mut rng))
+        .collect();
+    let g = sparse_mlp_graph(&blocks, Act::Tanh);
+    let x = Tensor::randn(&[7, 12], &mut rng).scale(0.4);
+    let a = CoeffSpec::BlockDiagGram {
+        blocks: 4,
+        block: 3,
+        rank: 3,
+        seed: 5,
+    }
+    .build();
+    // Sparsity on (the §3.2 path: pruned slices, unions at Mul/Concat)…
+    let sparse = DofEngine::new(&a);
+    assert_bit_identical(
+        &sparse.compute(&g, &x),
+        &interpreter(&sparse, &g, &x),
+        "sparse arch, §3.2 on",
+    );
+    // …and off (full-width tangents everywhere).
+    let dense = DofEngine::new(&a).dense();
+    assert_bit_identical(
+        &dense.compute(&g, &x),
+        &interpreter(&dense, &g, &x),
+        "sparse arch, §3.2 off",
+    );
+}
+
+#[test]
+fn planned_matches_interpreter_lower_order_and_low_rank() {
+    let mut rng = Xoshiro256::new(2103);
+    let g = mlp_graph(&random_layers(&[6, 14, 1], &mut rng), Act::Sin);
+    let x = Tensor::randn(&[5, 6], &mut rng);
+    // Low-rank second-order part (tangent width 2 < N).
+    let bmat = Tensor::randn(&[6, 2], &mut rng);
+    let a = dof::tensor::matmul(&bmat, &bmat.transpose());
+    let bvec: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+    let eng = DofEngine::new(&a).with_lower_order(Some(bvec), Some(-0.9));
+    assert_eq!(eng.rank(), 2);
+    assert_bit_identical(
+        &eng.compute(&g, &x),
+        &interpreter(&eng, &g, &x),
+        "low-rank + (b, c)",
+    );
+}
+
+#[test]
+fn planned_sharded_matches_interpreter_across_thread_counts() {
+    let mut rng = Xoshiro256::new(2104);
+    let g = mlp_graph(&random_layers(&[8, 24, 24, 1], &mut rng), Act::Tanh);
+    // Awkward batch: short last shard exercises per-shard slab sizing.
+    let x = Tensor::randn(&[21, 8], &mut rng);
+    let a = random_symmetric(8, &mut rng);
+    let eng = DofEngine::new(&a);
+    let reference = interpreter(&eng, &g, &x);
+    let program = eng.plan(&g);
+    let shard_rows = 8usize;
+    let base = eng.execute_sharded(&program, &g, &x, &Pool::new(1), shard_rows);
+    // Values are row-independent → sharded output equals the unsharded
+    // interpreter bitwise; cost is exactly linear in rows → the shard sum
+    // reproduces the full-batch count; peaks relate by the shard size.
+    assert_eq!(base.values, reference.values);
+    assert_eq!(base.operator_values, reference.operator_values);
+    assert_eq!(base.cost, reference.cost);
+    assert_eq!(
+        base.peak_tangent_bytes * 21,
+        reference.peak_tangent_bytes * shard_rows as u64,
+        "per-shard peak must scale exactly with shard rows"
+    );
+    for threads in [2usize, 4, 8] {
+        let r = eng.execute_sharded(&program, &g, &x, &Pool::new(threads), shard_rows);
+        assert_eq!(r.values, base.values, "values differ at {threads} threads");
+        assert_eq!(r.operator_values, base.operator_values);
+        assert_eq!(r.out_tangent.data, base.out_tangent.data);
+        assert_eq!(r.cost, base.cost);
+        assert_eq!(r.peak_tangent_bytes, base.peak_tangent_bytes);
+    }
+}
+
+#[test]
+fn one_program_many_batches_is_bit_stable() {
+    // Compile once, execute on several fresh batches: each result must be
+    // identical to a freshly compiled run (no state leaks through the
+    // reused slab between executions).
+    let mut rng = Xoshiro256::new(2105);
+    let blocks: Vec<_> = (0..3)
+        .map(|_| random_layers(&[2, 8, 3], &mut rng))
+        .collect();
+    let g = sparse_mlp_graph(&blocks, Act::Gelu);
+    let a = CoeffSpec::BlockDiagGram {
+        blocks: 3,
+        block: 2,
+        rank: 2,
+        seed: 9,
+    }
+    .build();
+    let eng = DofEngine::new(&a);
+    let program = eng.plan(&g);
+    for i in 0..3 {
+        let x = Tensor::randn(&[4 + i, 6], &mut rng).scale(0.5);
+        let reused = eng.execute(&program, &g, &x);
+        let fresh = interpreter(&eng, &g, &x);
+        assert_bit_identical(&reused, &fresh, &format!("batch {i}"));
+    }
+}
+
+#[test]
+fn program_analytics_match_execution_without_running() {
+    let mut rng = Xoshiro256::new(2106);
+    let g = mlp_graph(&random_layers(&[5, 16, 16, 1], &mut rng), Act::Tanh);
+    let a = random_symmetric(5, &mut rng);
+    let eng = DofEngine::new(&a);
+    let program = eng.plan(&g);
+    for batch in [1usize, 3, 8] {
+        let x = Tensor::randn(&[batch, 5], &mut rng);
+        let run = interpreter(&eng, &g, &x);
+        assert_eq!(
+            program.cost(batch),
+            run.cost,
+            "analytic cost must equal the interpreter's measured count"
+        );
+        assert_eq!(
+            program.peak_tangent_bytes(batch),
+            run.peak_tangent_bytes,
+            "analytic peak must equal the interpreter's PeakTracker"
+        );
+    }
+}
+
+#[test]
+fn planned_tape_values_agree_with_engine_and_eval() {
+    // The training tape runs the same program schedule (dense mode); its
+    // value stream must match plain evaluation and its operator stream the
+    // engine's L[φ] to numerical precision.
+    let mut rng = Xoshiro256::new(2107);
+    let g = mlp_graph(&random_layers(&[4, 10, 1], &mut rng), Act::Tanh);
+    let x = Tensor::randn(&[6, 4], &mut rng);
+    let a = random_symmetric(4, &mut rng);
+    let ldl = dof::linalg::LdlDecomposition::of(&a);
+    let tape = dof::autodiff::dof_tape::dof_forward_tape(&g, &ldl, None, &x);
+    let eval = g.eval(&x);
+    let eng = DofEngine::new(&a).dense();
+    let res = eng.compute(&g, &x);
+    let out = g.output();
+    for b in 0..6 {
+        assert!((tape.values[out].at(b, 0) - eval.at(b, 0)).abs() < 1e-12);
+        assert!(
+            (tape.scalars[out].at(b, 0) - res.operator_values.at(b, 0)).abs()
+                < 1e-9 * res.operator_values.at(b, 0).abs().max(1.0),
+            "tape L[φ] vs engine L[φ] at row {b}"
+        );
+    }
+}
