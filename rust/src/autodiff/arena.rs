@@ -30,15 +30,18 @@
 //! both cases no lock sits inside the per-node hot path; the depot is
 //! touched twice per *shard*.
 //!
-//! Since the plan subsystem landed, the **planned** executor
-//! ([`crate::plan::exec`]) no longer allocates per node at all: it checks
-//! one slab out of the arena per execution (`take_scratch`/`put`), so the
-//! arena's per-node traffic now belongs to the reference interpreter
-//! (`DofEngine::compute_with_arena`) and the warm-buffer behavior carries
-//! over to slabs unchanged.
+//! Since the plan subsystem landed, the **planned** executors
+//! ([`crate::plan::exec`], [`crate::jet::program`]) no longer allocate per
+//! node at all: they check one slab out per execution, so the arena's
+//! per-node traffic now belongs to the reference interpreters
+//! (`DofEngine::compute_with_arena`, `JetEngine::compute_with_arena`).
+//! Slab checkout goes through the **program-keyed slab pool**
+//! ([`with_program_slab`]): slabs are keyed by `(program fingerprint,
+//! shard rows)` and returned exact-fit, skipping the size-bucket search
+//! entirely on the steady-state serving/bench path.
 
 use std::cell::RefCell;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 
 use crate::tensor::Tensor;
@@ -218,6 +221,115 @@ pub fn with_pooled_arena<R>(f: impl FnOnce(&mut TangentArena) -> R) -> R {
     out
 }
 
+// ---- program-keyed slab pool ---------------------------------------------
+
+/// Key of a program-shaped slab: the compiled program's structural
+/// fingerprint plus the shard row count it was sized for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SlabKey {
+    /// `OperatorProgram`/`JetProgram` cache-key fingerprint.
+    pub program: u64,
+    /// Rows the slab was sized for (shard rows or the full batch).
+    pub rows: usize,
+}
+
+/// Reuse counters for the slab pool (diagnostics and tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlabPoolStats {
+    /// Checkouts served by a parked exact-fit slab.
+    pub hits: u64,
+    /// Checkouts that heap-allocated.
+    pub misses: u64,
+    /// Slabs currently parked.
+    pub retained: usize,
+}
+
+/// Cap on parked slabs across all keys — bounds steady-state retention at
+/// roughly (live programs × shard shapes × concurrent workers).
+const SLAB_POOL_CAP: usize = 64;
+
+struct SlabPool {
+    slabs: HashMap<SlabKey, Vec<Vec<f64>>>,
+    retained: usize,
+    hits: u64,
+    misses: u64,
+}
+
+static SLAB_POOL: Mutex<Option<SlabPool>> = Mutex::new(None);
+
+fn with_slab_pool<R>(f: impl FnOnce(&mut SlabPool) -> R) -> R {
+    let mut guard = SLAB_POOL.lock().expect("slab pool poisoned");
+    let pool = guard.get_or_insert_with(|| SlabPool {
+        slabs: HashMap::new(),
+        retained: 0,
+        hits: 0,
+        misses: 0,
+    });
+    f(pool)
+}
+
+/// Check an **exact-fit** slab out of the process-wide pool for the
+/// duration of `f`, then park it again under its key.
+///
+/// Unlike the arena's size-bucketed scratch path, slabs here are keyed by
+/// `(program, rows)`: a steady-state serving or bench loop executing the
+/// same compiled program on same-shaped shards gets its own warmed slab
+/// back without any best-fit search, and slabs of different programs never
+/// alias (ROADMAP PR 2 follow-up; used by both `DofEngine` and
+/// `JetEngine`). The slab is handed to `f` as-is — executors fully assign
+/// their slots before reading, the same contract as
+/// [`TangentArena::take_scratch`].
+pub fn with_program_slab<R>(key: SlabKey, f: impl FnOnce(&mut Vec<f64>) -> R) -> R {
+    let mut slab = with_slab_pool(|pool| {
+        match pool.slabs.get_mut(&key).and_then(Vec::pop) {
+            Some(s) => {
+                pool.retained -= 1;
+                pool.hits += 1;
+                Some(s)
+            }
+            None => {
+                pool.misses += 1;
+                None
+            }
+        }
+    })
+    .unwrap_or_default();
+    let out = f(&mut slab);
+    with_slab_pool(|pool| {
+        // Always park the just-used slab — it belongs to a live key — and
+        // evict from a *different* key when over the cap, so key churn
+        // (changing batch shapes, model rollovers) ages stale slabs out
+        // instead of permanently locking new keys out of the pool.
+        pool.slabs.entry(key).or_default().push(slab);
+        pool.retained += 1;
+        if pool.retained > SLAB_POOL_CAP {
+            let victim = pool
+                .slabs
+                .keys()
+                .find(|&&k| k != key)
+                .copied()
+                .unwrap_or(key);
+            if let Some(bucket) = pool.slabs.get_mut(&victim) {
+                bucket.pop();
+                if bucket.is_empty() {
+                    pool.slabs.remove(&victim);
+                }
+                pool.retained -= 1;
+            }
+        }
+    });
+    out
+}
+
+/// Current slab-pool counters.
+pub fn slab_pool_stats() -> SlabPoolStats {
+    with_slab_pool(|pool| SlabPoolStats {
+        hits: pool.hits,
+        misses: pool.misses,
+        retained: pool.retained,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,6 +402,35 @@ mod tests {
             t.data().iter().all(|&v| v == 0.0)
         });
         assert!(ok);
+    }
+
+    #[test]
+    fn program_slab_pool_is_exact_fit_per_key() {
+        // The pool is process-global and other tests run concurrently, so a
+        // parked slab may be evicted between calls once the cap is reached;
+        // assert the invariants that hold regardless: a warm hit under the
+        // same key returns the slab *verbatim* (exact length, stale
+        // contents — executors overwrite before reading), and a different
+        // key never aliases it.
+        let ka = SlabKey { program: 0xA11CE, rows: 3 };
+        let kb = SlabKey { program: 0xA11CE, rows: 5 };
+        with_program_slab(ka, |s| {
+            s.clear();
+            s.resize(30, 0.0);
+            s[0] = 1.25;
+        });
+        let (len, first) = with_program_slab(ka, |s| (s.len(), s.first().copied()));
+        if len != 0 {
+            // Warm hit (no concurrent eviction raced us): exact fit.
+            assert_eq!(len, 30);
+            assert_eq!(first, Some(1.25));
+        }
+        // Different rows under the same program: a distinct (possibly also
+        // warmed by this test's earlier runs — but never 30-long) slab.
+        let len_b = with_program_slab(kb, |s| s.len());
+        assert_ne!(len_b, 30, "different key must not alias");
+        let st = slab_pool_stats();
+        assert!(st.hits + st.misses >= 3, "all three checkouts counted");
     }
 
     #[test]

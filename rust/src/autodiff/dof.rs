@@ -43,7 +43,7 @@ use crate::parallel::{self, Pool};
 use crate::plan::{self, OperatorProgram, PlanOptions};
 use crate::tensor::{matmul_nt_into, Tensor};
 
-use super::arena::{with_pooled_arena, with_thread_arena, TangentArena};
+use super::arena::{with_program_slab, SlabKey, TangentArena};
 use super::forward_jacobian::TangentBatch;
 use super::memory::PeakTracker;
 use super::Cost;
@@ -160,15 +160,15 @@ impl DofEngine {
     }
 
     /// Execute a precompiled program, with slab storage checked out of the
-    /// calling thread's [`TangentArena`] (one arena transaction per call —
-    /// the per-node hot path touches no allocator and no arena).
+    /// process-wide **program-keyed slab pool** (exact fit by
+    /// `(program, rows)` — no size-bucket search; one pool transaction per
+    /// call, and the per-node hot path touches no allocator).
     pub fn execute(&self, program: &OperatorProgram, graph: &Graph, x: &Tensor) -> DofResult {
-        with_thread_arena(|arena| {
-            let mut slab = arena.take_scratch(program.slab_len(x.dims()[0]));
-            let res = self.execute_with_slab(program, graph, x, &mut slab);
-            arena.put(slab);
-            res
-        })
+        let key = SlabKey {
+            program: program.key().fingerprint,
+            rows: x.dims()[0],
+        };
+        with_program_slab(key, |slab| self.execute_with_slab(program, graph, x, slab))
     }
 
     /// Execute a precompiled program with caller-supplied slab storage.
@@ -244,15 +244,15 @@ impl DofEngine {
         let shards = pool.run_sharded(ranges, |_, r| {
             let rows = r.end - r.start;
             let xs = Tensor::from_vec(&[rows, n], x.data()[r.start * n..r.end * n].to_vec());
-            // Depot (not thread-local) slab storage: pool workers are fresh
-            // scoped threads per region, so only a process-wide depot
-            // preserves the warmed slabs across bench reps / server batches.
-            with_pooled_arena(|arena| {
-                let mut slab = arena.take_scratch(program.slab_len(rows));
-                let res = self.execute_with_slab(program, graph, &xs, &mut slab);
-                arena.put(slab);
-                res
-            })
+            // Process-wide (not thread-local) slab storage: pool workers are
+            // fresh scoped threads per region, so only the program-keyed
+            // pool preserves the warmed slabs across bench reps / server
+            // batches — and returns them exact-fit by (program, rows).
+            let key = SlabKey {
+                program: program.key().fingerprint,
+                rows,
+            };
+            with_program_slab(key, |slab| self.execute_with_slab(program, graph, &xs, slab))
         });
         merge_dof_shards(shards, batch)
     }

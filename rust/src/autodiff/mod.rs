@@ -39,8 +39,11 @@
 //! Both engines expose `compute_sharded` / `compute_parallel`: the batch is
 //! split into fixed 8-row shards ([`crate::parallel::DEFAULT_SHARD_ROWS`])
 //! executed across a scoped thread pool ([`crate::parallel::Pool`]), each
-//! worker running with slab storage checked out of the process-wide depot
-//! ([`arena::with_pooled_arena`]). The program is compiled once per batch
+//! worker running with slab storage checked out of the process-wide
+//! **program-keyed slab pool** ([`arena::with_program_slab`]; exact fit by
+//! `(program, rows)` — the size-bucketed [`arena::with_pooled_arena`] depot
+//! remains available for arena-based callers such as the reference
+//! interpreters). The program is compiled once per batch
 //! call and is shard-invariant; shard boundaries depend only on the
 //! batch size and reduction is shard-ordered, so values, `L[φ]`, FLOP
 //! tallies, and per-shard peak bytes are bit-identical across thread counts.
@@ -63,7 +66,9 @@ pub mod forward_jacobian;
 pub mod hessian;
 pub mod memory;
 
-pub use arena::{ArenaStats, TangentArena};
+pub use arena::{
+    slab_pool_stats, with_program_slab, ArenaStats, SlabKey, SlabPoolStats, TangentArena,
+};
 pub use dof::{DofEngine, DofResult};
 pub use flops::{CostModel, GraphCounts};
 pub use forward_jacobian::TangentBatch;

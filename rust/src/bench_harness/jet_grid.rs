@@ -1,0 +1,271 @@
+//! Order-4 grid bench: the biharmonic operator evaluated by the jet
+//! subsystem on both shipped architectures (plain MLP and the sparse
+//! `Op::Mul` product-head), swept over batch × threads.
+//!
+//! Reports, per architecture: the one-time **plan-compile** cost of the
+//! [`crate::jet::JetProgram`] (measured uncached, the cost the keyed jet
+//! cache amortizes) plus the program's analytic columns (slab scalars/row,
+//! direction count, exact muls/row and peak bytes/row, Appendix B-style —
+//! derived per op kind from the same closed counts the executor's runtime
+//! accumulation uses, so they are exact, not estimates). Per cell: the
+//! per-batch **execute** wall-clock of the reused program through the same
+//! sharded path serving uses. Emitted as schema-v2 JSON next to the
+//! order-2 grid (`dof bench grid --order 4`).
+
+use std::io::Write as _;
+
+use crate::graph::{builder::random_layers, mlp_graph, sparse_mlp_graph, Act, Graph};
+use crate::operators::{HigherOrderOperator, HigherOrderSpec};
+use crate::parallel::{Pool, DEFAULT_SHARD_ROWS};
+use crate::tensor::Tensor;
+use crate::util::Xoshiro256;
+
+use super::{BenchConfig, Bencher};
+
+/// Order-4 grid configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct JetGridConfig {
+    /// Input dimension `N` (jet directions scale as `N²` — keep modest).
+    pub n: usize,
+    /// Hidden width of the MLP architecture.
+    pub hidden: usize,
+    /// Hidden layers of the MLP architecture.
+    pub layers: usize,
+    pub seed: u64,
+    pub bench: BenchConfig,
+}
+
+impl Default for JetGridConfig {
+    fn default() -> Self {
+        Self {
+            n: 8,
+            hidden: 32,
+            layers: 3,
+            seed: 7,
+            bench: BenchConfig::default(),
+        }
+    }
+}
+
+/// One-time plan-compile datum per architecture.
+#[derive(Debug, Clone)]
+pub struct JetPlanTiming {
+    pub arch: String,
+    /// Median wall-clock of an uncached `JetProgram` compile.
+    pub compile_seconds: f64,
+    pub slab_per_row: usize,
+    /// Jet directions `t` (`N²` for the biharmonic).
+    pub dirs: usize,
+    pub fused_steps: usize,
+    /// Exact jet multiplications per batch row (analytic, no execution).
+    pub muls_per_row: u64,
+    /// Exact peak jet bytes per batch row (analytic).
+    pub peak_bytes_per_row: u64,
+}
+
+/// One (arch, batch, threads) execute measurement.
+#[derive(Debug, Clone)]
+pub struct JetGridCell {
+    pub arch: String,
+    pub batch: usize,
+    pub threads: usize,
+    pub jet_seconds: f64,
+    /// Exact FLOPs of the cell (analytic = measured; thread-invariant).
+    pub jet_muls: u64,
+    /// Exact per-shard peak jet bytes (thread-invariant).
+    pub jet_peak_bytes: u64,
+}
+
+/// Grid sweep output.
+#[derive(Debug, Clone)]
+pub struct JetGridReport {
+    pub plans: Vec<JetPlanTiming>,
+    pub cells: Vec<JetGridCell>,
+}
+
+/// Build the two shipped architectures at input dimension `n`.
+fn architectures(cfg: &JetGridConfig) -> Vec<(String, Graph)> {
+    let mut rng = Xoshiro256::new(cfg.seed);
+    let mut dims = vec![cfg.n];
+    dims.extend(std::iter::repeat(cfg.hidden).take(cfg.layers));
+    dims.push(1);
+    let mlp = mlp_graph(&random_layers(&dims, &mut rng), Act::Tanh);
+    // Sparse-Mul architecture: n/2 blocks of 2 inputs each (requires even
+    // n ≥ 4, validated by the CLI).
+    let blocks_n = cfg.n / 2;
+    let bdims = vec![2usize, cfg.hidden / 2, 4];
+    let blocks: Vec<_> = (0..blocks_n)
+        .map(|_| random_layers(&bdims, &mut rng))
+        .collect();
+    let sparse = sparse_mlp_graph(&blocks, Act::Tanh);
+    vec![("mlp".to_string(), mlp), ("sparse".to_string(), sparse)]
+}
+
+/// Sweep the biharmonic jet operator over arch × batch × threads.
+pub fn run_jet_grid(cfg: &JetGridConfig, batches: &[usize], threads: &[usize]) -> JetGridReport {
+    assert!(
+        cfg.n >= 4 && cfg.n % 2 == 0,
+        "--order 4 grid needs an even N ≥ 4 (sparse architecture blocks), got {}",
+        cfg.n
+    );
+    let op = HigherOrderOperator::from_spec(HigherOrderSpec::Biharmonic { d: cfg.n });
+    let engine = op.jet_engine();
+    let bencher = Bencher::new(cfg.bench);
+    let mut rng = Xoshiro256::new(cfg.seed ^ 0x4A45);
+    let mut plans = Vec::new();
+    let mut cells = Vec::new();
+    // The cell's thread count also governs the row-parallel GEMM via the
+    // process-global pool; restored after the sweep (same discipline as
+    // the order-2 grid).
+    let ambient_threads = Pool::from_env().threads();
+    for (arch, graph) in architectures(cfg) {
+        // Plan-compile cost, measured uncached; every cell reuses one
+        // compiled program.
+        let compile_reps = 5usize;
+        let mut compile_times = Vec::with_capacity(compile_reps);
+        for _ in 0..compile_reps {
+            let t0 = std::time::Instant::now();
+            std::hint::black_box(engine.plan(&graph));
+            compile_times.push(t0.elapsed().as_secs_f64());
+        }
+        compile_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let program = engine.plan(&graph);
+        plans.push(JetPlanTiming {
+            arch: arch.clone(),
+            compile_seconds: compile_times[compile_reps / 2],
+            slab_per_row: program.slab_per_row(),
+            dirs: program.directions(),
+            fused_steps: program.fused_steps(),
+            muls_per_row: program.cost(1).muls,
+            peak_bytes_per_row: program.peak_jet_bytes(1),
+        });
+        for &batch in batches {
+            let x = Tensor::rand_uniform(&[batch, cfg.n], -1.0, 1.0, &mut rng);
+            for &t in threads {
+                let pool = Pool::new(t.max(1));
+                crate::parallel::set_global_threads(t.max(1));
+                let m = bencher.run(&format!("jet/{arch}/b{batch}t{t}"), || {
+                    let r = engine.execute_sharded(
+                        &program,
+                        &graph,
+                        &x,
+                        &pool,
+                        DEFAULT_SHARD_ROWS,
+                    );
+                    std::hint::black_box(&r.operator_values);
+                    (Some(r.cost.muls), Some(r.peak_jet_bytes))
+                });
+                cells.push(JetGridCell {
+                    arch: arch.clone(),
+                    batch,
+                    threads: t.max(1),
+                    jet_seconds: m.seconds.median,
+                    jet_muls: m.muls.unwrap_or(0),
+                    jet_peak_bytes: m.peak_bytes.unwrap_or(0),
+                });
+            }
+        }
+    }
+    crate::parallel::set_global_threads(ambient_threads);
+    JetGridReport { plans, cells }
+}
+
+/// Serialize an order-4 grid to the schema-v2 JSON (see
+/// [`super::report::grid_json`] for the order-2 twin; `schema: 2` added the
+/// `order` discriminator and the provenance note).
+pub fn jet_grid_json(cfg: &JetGridConfig, report: &JetGridReport) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"jet_grid\",\n");
+    s.push_str("  \"schema\": 2,\n");
+    s.push_str("  \"order\": 4,\n");
+    s.push_str("  \"operator\": \"biharmonic\",\n");
+    s.push_str(
+        "  \"provenance\": \"schema v2 (jet subsystem): adds order + per-arch plan objects; \
+         flop/peak columns are exact analytic counts from the compiled JetProgram\",\n",
+    );
+    s.push_str(&format!(
+        "  \"config\": {{\"n\": {}, \"hidden\": {}, \"layers\": {}, \"seed\": {}, \"shard_rows\": {}}},\n",
+        cfg.n, cfg.hidden, cfg.layers, cfg.seed, DEFAULT_SHARD_ROWS
+    ));
+    s.push_str("  \"plans\": [\n");
+    for (i, p) in report.plans.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"arch\": \"{}\", \"compile_ms\": {:.4}, \"slab_scalars_per_row\": {}, \
+             \"dirs\": {}, \"fused_steps\": {}, \"jet_muls_per_row\": {}, \
+             \"jet_peak_bytes_per_row\": {}}}{}\n",
+            p.arch,
+            p.compile_seconds * 1e3,
+            p.slab_per_row,
+            p.dirs,
+            p.fused_steps,
+            p.muls_per_row,
+            p.peak_bytes_per_row,
+            if i + 1 < report.plans.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"cells\": [\n");
+    for (i, c) in report.cells.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"arch\": \"{}\", \"batch\": {}, \"threads\": {}, \"jet_ms\": {:.4}, \
+             \"jet_muls\": {}, \"jet_peak_bytes\": {}}}{}\n",
+            c.arch,
+            c.batch,
+            c.threads,
+            c.jet_seconds * 1e3,
+            c.jet_muls,
+            c.jet_peak_bytes,
+            if i + 1 < report.cells.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Write the order-4 grid JSON to `path`.
+pub fn write_jet_grid_json(
+    path: &str,
+    cfg: &JetGridConfig,
+    report: &JetGridReport,
+) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(jet_grid_json(cfg, report).as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jet_grid_runs_and_serializes() {
+        let cfg = JetGridConfig {
+            n: 4,
+            hidden: 8,
+            layers: 2,
+            seed: 11,
+            bench: BenchConfig {
+                warmup_iters: 0,
+                measure_iters: 1,
+                max_seconds: 10.0,
+            },
+        };
+        let report = run_jet_grid(&cfg, &[3, 9], &[1, 2]);
+        assert_eq!(report.plans.len(), 2);
+        assert_eq!(report.cells.len(), 8);
+        // Thread-invariant exact counters (determinism contract).
+        assert_eq!(report.cells[0].jet_muls, report.cells[1].jet_muls);
+        assert_eq!(report.cells[0].jet_peak_bytes, report.cells[1].jet_peak_bytes);
+        // Analytic per-row numbers match the executed cells exactly.
+        let mlp_plan = &report.plans[0];
+        assert_eq!(report.cells[0].jet_muls, mlp_plan.muls_per_row * 3);
+        assert_eq!(mlp_plan.dirs, 16);
+        let json = jet_grid_json(&cfg, &report);
+        assert!(json.contains("\"schema\": 2"));
+        assert!(json.contains("\"order\": 4"));
+        assert!(json.contains("\"arch\": \"sparse\""));
+        assert!(json.ends_with("}\n"));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+}

@@ -7,6 +7,7 @@
 //! [`report`] sweeps the batch × threads grid and emits the
 //! machine-readable `BENCH_table1.json` perf-trajectory file.
 
+pub mod jet_grid;
 pub mod report;
 pub mod table1;
 pub mod table2;

@@ -164,7 +164,13 @@ pub fn grid_json(cfg: &Table1Config, report: &GridReport) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"table1_mlp_grid\",\n");
+    s.push_str("  \"schema\": 2,\n");
+    s.push_str("  \"order\": 2,\n");
     s.push_str("  \"operator\": \"elliptic\",\n");
+    s.push_str(
+        "  \"provenance\": \"schema v2 (jet subsystem): adds the order column so order-2 \
+         (DOF) and order-4 (jet) grids share one trajectory format; v1 files predate it\",\n",
+    );
     s.push_str(&format!(
         "  \"config\": {{\"n\": {}, \"hidden\": {}, \"layers\": {}, \"seed\": {}, \"shard_rows\": {}}},\n",
         cfg.n, cfg.hidden, cfg.layers, cfg.seed, DEFAULT_SHARD_ROWS
@@ -241,6 +247,8 @@ mod tests {
         assert!(report.plan.slab_per_row > 0);
         let json = grid_json(&cfg, &report);
         assert!(json.contains("\"bench\": \"table1_mlp_grid\""));
+        assert!(json.contains("\"schema\": 2"));
+        assert!(json.contains("\"order\": 2"));
         assert!(json.contains("\"plan\""));
         assert!(json.contains("\"compile_ms\""));
         assert!(json.contains("\"batch\": 9"));

@@ -119,6 +119,33 @@ impl Act {
         }
     }
 
+    /// σ''''(x) — needed by order-4 Taylor-mode jet propagation
+    /// ([`crate::jet`]): the Faà di Bruno composition of a fourth-order jet
+    /// through σ carries a `σ''''·a₁⁴/24` term. Like [`Self::d3f`], returns
+    /// `None` where the closed form is not implemented (tanh-approximated
+    /// GELU); the jet compiler rejects those with a clear error instead of
+    /// silently truncating.
+    pub fn d4f(self, x: f64) -> Option<f64> {
+        match self {
+            Act::Tanh => {
+                let t = x.tanh();
+                let s = 1.0 - t * t; // sech²
+                // d/dx [s·(4t² − 2s)] = −2ts·(4t²−2s) + s·(8ts + 4ts)
+                //                     = 8ts² − 8t³s + 8ts² = 8ts(2s − t²)
+                Some(8.0 * t * s * (2.0 * s - t * t))
+            }
+            Act::Sin => Some(x.sin()),
+            Act::Softplus => {
+                let s = 1.0 / (1.0 + (-x).exp());
+                // d/dx [s(1−s)(1−2s)] = s(1−s)·(1 − 6s + 6s²)
+                Some(s * (1.0 - s) * (1.0 - 6.0 * s + 6.0 * s * s))
+            }
+            Act::Square => Some(0.0),
+            Act::Identity => Some(0.0),
+            Act::Gelu => None,
+        }
+    }
+
     /// Is σ linear (zero second derivative everywhere)?
     pub fn is_linear(self) -> bool {
         matches!(self, Act::Identity)
@@ -238,6 +265,23 @@ mod tests {
             }
         }
         assert!(Act::Gelu.d3f(0.5).is_none());
+    }
+
+    #[test]
+    fn fourth_derivatives_match_finite_difference() {
+        let xs = [-1.5, -0.4, 0.0, 0.6, 1.8];
+        let h = 1e-4;
+        for act in [Act::Tanh, Act::Sin, Act::Softplus, Act::Square, Act::Identity] {
+            for &x in &xs {
+                let fd4 = (act.d3f(x + h).unwrap() - act.d3f(x - h).unwrap()) / (2.0 * h);
+                let got = act.d4f(x).unwrap();
+                assert!(
+                    (got - fd4).abs() < 1e-5,
+                    "{act:?} d4f({x}) = {got} vs fd {fd4}"
+                );
+            }
+        }
+        assert!(Act::Gelu.d4f(0.5).is_none());
     }
 
     #[test]

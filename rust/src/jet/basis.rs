@@ -1,0 +1,520 @@
+//! Direction basis: turn a symbolic constant-coefficient operator of order
+//! ≤ 4 into a set of jet directions plus contraction weights.
+//!
+//! The m-th differential of `φ` at `x` is a symmetric m-linear form `Tₘ`;
+//! an order-k jet along direction `u` yields its diagonal values
+//! `Tₘ(u,…,u) = m!·cₘ` for every `m ≤ k` in one propagation. Off-diagonal
+//! entries (mixed partials like `∂⁴/∂xᵢ²∂xⱼ²`) are recovered by
+//! **polarization** — signed combinations of diagonal evaluations along
+//! `{eᵢ, eᵢ±eⱼ, …}`:
+//!
+//! ```text
+//! ∂²ᵢⱼ       =  c₂(eᵢ+eⱼ) − c₂(eᵢ) − c₂(eⱼ)
+//! ∂³ᵢᵢⱼ      =  c₃(eᵢ+eⱼ) − c₃(eᵢ−eⱼ) − 2c₃(eⱼ)
+//! ∂⁴ᵢᵢⱼⱼ     =  2[c₄(eᵢ+eⱼ) + c₄(eᵢ−eⱼ) − 2c₄(eᵢ) − 2c₄(eⱼ)]
+//! ```
+//!
+//! (`cₘ(u)` is the m-th normalized Taylor coefficient of `τ ↦ φ(x+τu)`.)
+//! Terms with at most two distinct axes use these shared identities, so the
+//! biharmonic `Δ² = Σᵢ∂⁴ᵢ + 2Σ_{i<j}∂⁴ᵢᵢⱼⱼ` needs exactly the `d²`
+//! directions `{eᵢ} ∪ {eᵢ±eⱼ}`. Anything rarer (≥3 distinct axes, `iiij`
+//! patterns) falls back to the general polarization identity
+//! `T(u₁…uₘ) = 2⁻ᵐ Σ_{ε∈{±1}ᵐ} (Πε)·cₘ(Σεₗuₗ)`, exact for any multi-index.
+//!
+//! Directions are integer vectors, deduplicated exactly across terms (with
+//! sign canonicalization: `cₘ(−u) = (−1)ᵐ cₘ(u)`), and weights are dyadic
+//! rationals accumulated exactly — the assembly introduces no rounding of
+//! its own. An optional first-order `b·∇` term rides along as one extra
+//! (float) direction with a weight on `c₁`.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::Tensor;
+
+/// One constant-coefficient derivative term `coef · ∂^m φ / ∂x_{axes}`.
+///
+/// `axes` is the multi-index as a list of (repeatable) coordinate axes;
+/// its length is the derivative order `m ∈ 1..=4`. `∂⁴/∂xᵢ²∂xⱼ²` is
+/// `axes = [i, i, j, j]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JetTerm {
+    /// Sorted multi-index (length = derivative order, 1..=4).
+    pub axes: Vec<usize>,
+    /// Constant coefficient.
+    pub coef: f64,
+}
+
+impl JetTerm {
+    /// A term `coef · ∂^{|axes|} / ∂x_axes`; axes are sorted internally.
+    pub fn new(axes: &[usize], coef: f64) -> Self {
+        assert!(
+            (1..=4).contains(&axes.len()),
+            "jet terms support derivative orders 1..=4, got {}",
+            axes.len()
+        );
+        assert!(coef.is_finite(), "non-finite term coefficient");
+        let mut axes = axes.to_vec();
+        axes.sort_unstable();
+        Self { axes, coef }
+    }
+
+    /// Derivative order `m = |axes|`.
+    pub fn order(&self) -> usize {
+        self.axes.len()
+    }
+}
+
+/// Second-order terms `Σ a_ij ∂²_ij` from a symmetric matrix (diagonal
+/// terms once, off-diagonal pairs with coefficient `2·a_ij`) — the bridge
+/// between the [`crate::operators::Operator`] world and the jet basis,
+/// used by the order-2 cross-check tests.
+pub fn terms_from_symmetric(a: &Tensor) -> Vec<JetTerm> {
+    let n = a.dims()[0];
+    assert_eq!(a.dims(), &[n, n], "coefficient matrix must be square");
+    let mut terms = Vec::new();
+    for i in 0..n {
+        if a.at(i, i) != 0.0 {
+            terms.push(JetTerm::new(&[i, i], a.at(i, i)));
+        }
+        for j in (i + 1)..n {
+            let v = a.at(i, j);
+            if v != 0.0 {
+                terms.push(JetTerm::new(&[i, j], 2.0 * v));
+            }
+        }
+    }
+    terms
+}
+
+/// Laplacian terms `Σᵢ ∂²ᵢ` scaled by `coef`.
+pub fn laplacian_terms(d: usize, coef: f64) -> Vec<JetTerm> {
+    (0..d).map(|i| JetTerm::new(&[i, i], coef)).collect()
+}
+
+/// Biharmonic terms `coef·Δ² = coef·(Σᵢ ∂⁴ᵢ + 2Σ_{i<j} ∂⁴ᵢᵢⱼⱼ)`.
+pub fn biharmonic_terms(d: usize, coef: f64) -> Vec<JetTerm> {
+    let mut terms = Vec::new();
+    for i in 0..d {
+        terms.push(JetTerm::new(&[i, i, i, i], coef));
+    }
+    for i in 0..d {
+        for j in (i + 1)..d {
+            terms.push(JetTerm::new(&[i, i, j, j], 2.0 * coef));
+        }
+    }
+    terms
+}
+
+/// A compiled direction basis: `t` jet directions (rows of `dirs`) and the
+/// contraction `L[φ] = Σ weights (dir, m, w) → w · cₘ^{(dir)}[φ]` (each
+/// weight already folds in the `m!` and the polarization factors).
+#[derive(Debug, Clone)]
+pub struct DirectionBasis {
+    /// Input dimension `N`.
+    pub n: usize,
+    /// Jet order `k` (max derivative order over the terms; ≥ 1).
+    pub order: usize,
+    /// Direction matrix `[t, N]` — the jet seed.
+    pub dirs: Tensor,
+    /// Contraction weights `(direction index, coefficient order m, weight)`,
+    /// sorted by `(direction, m)`, zero entries dropped.
+    pub weights: Vec<(usize, usize, f64)>,
+}
+
+impl DirectionBasis {
+    /// Number of jet directions `t`.
+    pub fn directions(&self) -> usize {
+        self.dirs.dims()[0]
+    }
+
+    /// Assemble a basis for `Σ terms + b·∇` on `R^n` by polarization.
+    pub fn from_terms(n: usize, terms: &[JetTerm], b: Option<&[f64]>) -> Self {
+        assert!(
+            !terms.is_empty() || b.is_some(),
+            "operator needs at least one term"
+        );
+        let mut order = terms.iter().map(JetTerm::order).max().unwrap_or(0);
+        if b.is_some() {
+            order = order.max(1);
+        }
+        let mut builder = Builder::new(n);
+        for t in terms {
+            assert!(
+                t.axes.iter().all(|&a| a < n),
+                "term axis out of range: {:?} for N = {n}",
+                t.axes
+            );
+            builder.push_term(t);
+        }
+        if let Some(bv) = b {
+            assert_eq!(bv.len(), n, "b length must be N");
+            builder.push_float_direction(bv, 1, 1.0);
+        }
+        builder.finish(order)
+    }
+}
+
+/// Incremental basis assembly: exact integer-direction dedup plus exact
+/// (dyadic-rational) weight accumulation.
+struct Builder {
+    n: usize,
+    /// Canonicalized integer direction → index.
+    int_dirs: BTreeMap<Vec<i64>, usize>,
+    /// Direction rows in insertion order (floats, ready for the seed).
+    rows: Vec<Vec<f64>>,
+    /// (direction, m) → accumulated weight.
+    weights: BTreeMap<(usize, usize), f64>,
+}
+
+impl Builder {
+    fn new(n: usize) -> Self {
+        Self {
+            n,
+            int_dirs: BTreeMap::new(),
+            rows: Vec::new(),
+            weights: BTreeMap::new(),
+        }
+    }
+
+    /// Intern an integer direction, canonicalizing the sign so `u` and `−u`
+    /// share one row. Returns `(index, flipped)`.
+    fn intern(&mut self, mut u: Vec<i64>) -> (usize, bool) {
+        let first = u.iter().find(|&&v| v != 0).copied().unwrap_or(0);
+        debug_assert!(first != 0, "zero direction must be skipped by callers");
+        let flipped = first < 0;
+        if flipped {
+            for v in u.iter_mut() {
+                *v = -*v;
+            }
+        }
+        if let Some(&idx) = self.int_dirs.get(&u) {
+            return (idx, flipped);
+        }
+        let idx = self.rows.len();
+        self.rows.push(u.iter().map(|&v| v as f64).collect());
+        self.int_dirs.insert(u, idx);
+        (idx, flipped)
+    }
+
+    /// Add `w · cₘ(u)` for an integer direction (sign-folded through the
+    /// parity `cₘ(−u) = (−1)ᵐ cₘ(u)`).
+    fn add(&mut self, u: Vec<i64>, m: usize, w: f64) {
+        if u.iter().all(|&v| v == 0) || w == 0.0 {
+            return;
+        }
+        let (idx, flipped) = self.intern(u);
+        let w = if flipped && m % 2 == 1 { -w } else { w };
+        *self.weights.entry((idx, m)).or_insert(0.0) += w;
+    }
+
+    /// Add `w · cₘ(u)` for an arbitrary float direction (no dedup — used
+    /// for the `b·∇` row).
+    fn push_float_direction(&mut self, u: &[f64], m: usize, w: f64) {
+        let idx = self.rows.len();
+        self.rows.push(u.to_vec());
+        *self.weights.entry((idx, m)).or_insert(0.0) += w;
+    }
+
+    fn axis(&self, i: usize) -> Vec<i64> {
+        let mut u = vec![0i64; self.n];
+        u[i] = 1;
+        u
+    }
+
+    fn pair(&self, i: usize, j: usize, sign: i64) -> Vec<i64> {
+        let mut u = vec![0i64; self.n];
+        u[i] = 1;
+        u[j] = sign;
+        u
+    }
+
+    /// Expand one term into weighted diagonal evaluations.
+    fn push_term(&mut self, term: &JetTerm) {
+        let m = term.order();
+        let coef = term.coef;
+        // Distinct axes with multiplicities (axes are sorted).
+        let mut counts: Vec<(usize, usize)> = Vec::new();
+        for &a in &term.axes {
+            match counts.last_mut() {
+                Some((ax, c)) if *ax == a => *c += 1,
+                _ => counts.push((a, 1)),
+            }
+        }
+        match counts.as_slice() {
+            // Pure power ∂ᵐᵢ = m!·cₘ(eᵢ).
+            [(i, _)] => {
+                let fact = [1.0, 1.0, 2.0, 6.0, 24.0][m];
+                let ei = self.axis(*i);
+                self.add(ei, m, coef * fact);
+            }
+            // ∂²ᵢⱼ = c₂(eᵢ+eⱼ) − c₂(eᵢ) − c₂(eⱼ).
+            [(i, 1), (j, 1)] if m == 2 => {
+                let (i, j) = (*i, *j);
+                let (pij, ei, ej) = (self.pair(i, j, 1), self.axis(i), self.axis(j));
+                self.add(pij, 2, coef);
+                self.add(ei, 2, -coef);
+                self.add(ej, 2, -coef);
+            }
+            // ∂³ₚₚᵩ = c₃(eₚ+eᵩ) − c₃(eₚ−eᵩ) − 2c₃(eᵩ), p the doubled axis.
+            [(p, 2), (q, 1)] | [(q, 1), (p, 2)] if m == 3 => {
+                let (p, q) = (*p, *q);
+                // pair(p, q, −1) is eₚ−eᵩ regardless of p<q ordering; the
+                // intern step canonicalizes the sign with odd-m parity.
+                let (plus, minus, eq) =
+                    (self.pair(p, q, 1), self.pair(p, q, -1), self.axis(q));
+                self.add(plus, 3, coef);
+                self.add(minus, 3, -coef);
+                self.add(eq, 3, -2.0 * coef);
+            }
+            // ∂⁴ᵢᵢⱼⱼ = 2[c₄(eᵢ+eⱼ) + c₄(eᵢ−eⱼ) − 2c₄(eᵢ) − 2c₄(eⱼ)].
+            [(i, 2), (j, 2)] if m == 4 => {
+                let (i, j) = (*i, *j);
+                let (plus, minus, ei, ej) = (
+                    self.pair(i, j, 1),
+                    self.pair(i, j, -1),
+                    self.axis(i),
+                    self.axis(j),
+                );
+                self.add(plus, 4, 2.0 * coef);
+                self.add(minus, 4, 2.0 * coef);
+                self.add(ei, 4, -4.0 * coef);
+                self.add(ej, 4, -4.0 * coef);
+            }
+            // General polarization: T(u₁…uₘ) = 2⁻ᵐ Σ_ε (Πε)·cₘ(Σ εₗuₗ).
+            _ => {
+                let scale = coef / (1u64 << m) as f64;
+                for eps in 0..(1u32 << m) {
+                    let mut u = vec![0i64; self.n];
+                    let mut parity = 1.0;
+                    for (l, &a) in term.axes.iter().enumerate() {
+                        if eps & (1 << l) != 0 {
+                            u[a] += 1;
+                        } else {
+                            u[a] -= 1;
+                            parity = -parity;
+                        }
+                    }
+                    self.add(u, m, scale * parity);
+                }
+            }
+        }
+    }
+
+    fn finish(self, order: usize) -> DirectionBasis {
+        let n = self.n;
+        let t = self.rows.len();
+        assert!(t > 0, "basis assembled zero directions");
+        let mut data = Vec::with_capacity(t * n);
+        for row in &self.rows {
+            data.extend_from_slice(row);
+        }
+        let mut weights: Vec<(usize, usize, f64)> = self
+            .weights
+            .into_iter()
+            .filter(|&(_, w)| w != 0.0)
+            .map(|((d, m), w)| (d, m, w))
+            .collect();
+        weights.sort_by_key(|&(d, m, _)| (d, m));
+        DirectionBasis {
+            n,
+            order,
+            dirs: Tensor::from_vec(&[t, n], data),
+            weights,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Evaluate the basis contraction on a function with known derivatives:
+    /// φ(x) = Π xᵢ^{pᵢ} — every directional Taylor coefficient is computable
+    /// in closed form, so the assembled weights can be checked exactly.
+    fn contract_on_monomial(basis: &DirectionBasis, pows: &[usize], x: &[f64]) -> f64 {
+        // cₘ(u) at x for φ = Π xᵢ^{pᵢ}: coefficient of τᵐ in Π (xᵢ+τuᵢ)^{pᵢ}.
+        let t = basis.directions();
+        let k = basis.order;
+        let mut c = vec![vec![0.0; k + 1]; t];
+        for (ti, cm) in c.iter_mut().enumerate() {
+            let u = basis.dirs.row(ti);
+            // Polynomial multiply of per-axis binomial expansions.
+            let mut poly = vec![1.0];
+            for (i, &p) in pows.iter().enumerate() {
+                for _ in 0..p {
+                    // multiply by (xᵢ + τ uᵢ)
+                    let mut next = vec![0.0; poly.len() + 1];
+                    for (deg, &pc) in poly.iter().enumerate() {
+                        next[deg] += pc * x[i];
+                        next[deg + 1] += pc * u[i];
+                    }
+                    poly = next;
+                }
+            }
+            for m in 0..=k.min(poly.len() - 1) {
+                cm[m] = poly[m];
+            }
+        }
+        let mut out = 0.0;
+        for &(d, m, w) in &basis.weights {
+            out += w * c[d][m];
+        }
+        out
+    }
+
+    /// Exact partial derivative of the monomial Π xᵢ^{pᵢ}.
+    fn monomial_partial(pows: &[usize], axes: &[usize], x: &[f64]) -> f64 {
+        let mut p: Vec<i64> = pows.iter().map(|&v| v as i64).collect();
+        let mut coef = 1.0;
+        for &a in axes {
+            coef *= p[a] as f64;
+            p[a] -= 1;
+            if p[a] < 0 {
+                return 0.0;
+            }
+        }
+        let mut v = coef;
+        for (i, &pi) in p.iter().enumerate() {
+            v *= x[i].powi(pi as i32);
+        }
+        v
+    }
+
+    fn check_term(axes: &[usize], n: usize) {
+        let term = JetTerm::new(axes, 1.0);
+        let basis = DirectionBasis::from_terms(n, &[term], None);
+        // Check against several monomials of total degree ≥ the order.
+        let x = [1.3, -0.7, 0.9, 1.1];
+        for pows in [
+            vec![4, 0, 0, 0],
+            vec![2, 2, 0, 0],
+            vec![1, 1, 1, 1],
+            vec![2, 1, 1, 0],
+            vec![3, 1, 0, 0],
+            vec![0, 2, 1, 1],
+        ] {
+            let got = contract_on_monomial(&basis, &pows[..n], &x[..n]);
+            let want = monomial_partial(&pows[..n], axes, &x[..n]);
+            assert!(
+                (got - want).abs() < 1e-9 * want.abs().max(1.0),
+                "∂{axes:?} on x^{pows:?}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn pure_powers_exact() {
+        check_term(&[0], 3);
+        check_term(&[1, 1], 3);
+        check_term(&[2, 2, 2], 3);
+        check_term(&[0, 0, 0, 0], 3);
+    }
+
+    #[test]
+    fn two_axis_identities_exact() {
+        check_term(&[0, 1], 3); // ∂²ᵢⱼ
+        check_term(&[0, 0, 1], 3); // ∂³ᵢᵢⱼ
+        check_term(&[0, 2, 2], 3); // ∂³ᵢⱼⱼ (doubled axis second)
+        check_term(&[1, 1, 2, 2], 3); // ∂⁴ᵢᵢⱼⱼ
+    }
+
+    #[test]
+    fn general_polarization_exact() {
+        check_term(&[0, 1, 2], 3); // three distinct axes, order 3
+        check_term(&[0, 0, 0, 1], 3); // iiij pattern
+        check_term(&[0, 1, 2, 3], 4); // four distinct axes
+        check_term(&[0, 0, 1, 2], 3); // iijl pattern
+    }
+
+    #[test]
+    fn biharmonic_directions_are_d_squared() {
+        for d in [2usize, 3, 5] {
+            let basis = DirectionBasis::from_terms(d, &biharmonic_terms(d, 1.0), None);
+            assert_eq!(basis.directions(), d * d, "d = {d}");
+            assert_eq!(basis.order, 4);
+        }
+    }
+
+    #[test]
+    fn biharmonic_of_radial_quartic() {
+        // φ = (Σ xᵢ²)² has Δ²φ = 8d + 16·d... compute exactly instead via
+        // monomials: Δ²(x₀⁴) = 24; Δ²(x₀²x₁²) = 8. φ = Σᵢ xᵢ⁴ + Σ_{i≠j} xᵢ²xⱼ².
+        let d = 3;
+        let basis = DirectionBasis::from_terms(d, &biharmonic_terms(d, 1.0), None);
+        let x = [0.4, -1.2, 0.8];
+        let mut got = 0.0;
+        let mut want = 0.0;
+        for i in 0..d {
+            let mut pows = vec![0usize; d];
+            pows[i] = 4;
+            got += contract_on_monomial(&basis, &pows, &x);
+            want += 24.0;
+            for j in 0..d {
+                if j != i {
+                    let mut pw = vec![0usize; d];
+                    pw[i] = 2;
+                    pw[j] = 2;
+                    got += contract_on_monomial(&basis, &pw, &x);
+                    want += 8.0;
+                }
+            }
+        }
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn symmetric_matrix_terms_match_quadratic_form() {
+        // L = Σ a_ij ∂²_ij on φ = xᵀMx has L[φ] = Σ a_ij (M + Mᵀ)_ij.
+        let a = Tensor::matrix(&[
+            vec![2.0, 0.5, 0.0],
+            vec![0.5, -1.0, 1.5],
+            vec![0.0, 1.5, 3.0],
+        ]);
+        let terms = terms_from_symmetric(&a);
+        let basis = DirectionBasis::from_terms(3, &terms, None);
+        // φ = x₀² + x₀x₁ + 2x₁x₂: Hessian H = [[2,1,0],[1,0,2],[0,2,0]].
+        let x = [0.3, 0.7, -0.2];
+        let got = contract_on_monomial(&basis, &[2, 0, 0], &x)
+            + contract_on_monomial2(&basis, &[(0, 1), (1, 1)], &x)
+            + 2.0 * contract_on_monomial2(&basis, &[(1, 1), (2, 1)], &x);
+        let h = [[2.0, 1.0, 0.0], [1.0, 0.0, 2.0], [0.0, 2.0, 0.0]];
+        let mut want = 0.0;
+        for i in 0..3 {
+            for j in 0..3 {
+                want += a.at(i, j) * h[i][j];
+            }
+        }
+        assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+    }
+
+    /// contract_on_monomial with sparse (axis, power) spec.
+    fn contract_on_monomial2(
+        basis: &DirectionBasis,
+        spec: &[(usize, usize)],
+        x: &[f64],
+    ) -> f64 {
+        let mut pows = vec![0usize; basis.n];
+        for &(a, p) in spec {
+            pows[a] = p;
+        }
+        contract_on_monomial(basis, &pows, x)
+    }
+
+    #[test]
+    fn b_direction_rides_along() {
+        let b = [0.5, -1.0];
+        let basis =
+            DirectionBasis::from_terms(2, &laplacian_terms(2, 1.0), Some(&b[..]));
+        assert_eq!(basis.order, 2);
+        assert_eq!(basis.directions(), 3); // e₀, e₁, b
+        // On φ = x₀ (pows [1,0]): L = Δφ + b·∇φ = 0 + 0.5.
+        let got = contract_on_monomial(&basis, &[1, 0], &[0.9, 0.1]);
+        assert!((got - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn order_five_rejected() {
+        let _ = JetTerm::new(&[0, 0, 0, 0, 0], 1.0);
+    }
+}

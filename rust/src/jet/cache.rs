@@ -1,0 +1,127 @@
+//! Keyed cache of compiled [`JetProgram`]s — the jet-side twin of
+//! [`crate::plan::PlanCache`].
+//!
+//! Keys are value-independent ([`super::program::jet_key`] hashes graph
+//! structure, the direction-matrix zero pattern, `(t, k)`, and the
+//! zeroth-order flag — never weight or direction *values*), so serving and
+//! repeated evaluation of the same `(architecture, operator)` pair compile
+//! once and execute thereafter. Compilation happens outside the lock; a
+//! racing compile of the same key keeps the first inserted program.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::graph::Graph;
+
+use super::basis::DirectionBasis;
+use super::program::{jet_key, JetKey, JetProgram};
+
+/// Bound on retained programs (oldest evicted past this).
+pub const JET_CACHE_CAP: usize = 32;
+
+/// Hit/miss counters plus current occupancy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JetCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+/// A keyed jet-program cache (see module docs).
+pub struct JetCache {
+    entries: Mutex<Vec<(JetKey, Arc<JetProgram>)>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl JetCache {
+    pub const fn new() -> Self {
+        Self {
+            entries: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch the program for `(graph, basis, has_c)`, compiling on first
+    /// use.
+    pub fn get_or_compile(
+        &self,
+        graph: &Graph,
+        basis: &DirectionBasis,
+        has_c: bool,
+    ) -> Arc<JetProgram> {
+        let key = jet_key(graph, basis, has_c);
+        {
+            let entries = self.entries.lock().expect("jet cache poisoned");
+            if let Some((_, p)) = entries.iter().find(|(k, _)| *k == key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(p);
+            }
+        }
+        let program = Arc::new(JetProgram::compile(graph, basis, has_c));
+        let mut entries = self.entries.lock().expect("jet cache poisoned");
+        if let Some((_, p)) = entries.iter().find(|(k, _)| *k == key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(p);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        if entries.len() >= JET_CACHE_CAP {
+            entries.remove(0);
+        }
+        entries.push((key, Arc::clone(&program)));
+        program
+    }
+
+    pub fn stats(&self) -> JetCacheStats {
+        JetCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.entries.lock().expect("jet cache poisoned").len(),
+        }
+    }
+
+    /// Drop every retained program (counters are kept).
+    pub fn clear(&self) {
+        self.entries.lock().expect("jet cache poisoned").clear();
+    }
+}
+
+impl Default for JetCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+static GLOBAL: JetCache = JetCache::new();
+
+/// The process-wide jet-program cache used by
+/// [`super::JetEngine::compute*`](super::JetEngine) and the serving
+/// backend.
+pub fn global_jet_cache() -> &'static JetCache {
+    &GLOBAL
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{builder::random_layers, mlp_graph, Act};
+    use crate::jet::basis::{biharmonic_terms, laplacian_terms};
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn second_lookup_hits_and_orders_partition() {
+        let cache = JetCache::new();
+        let mut rng = Xoshiro256::new(71);
+        let g = mlp_graph(&random_layers(&[3, 7, 1], &mut rng), Act::Tanh);
+        let b4 = DirectionBasis::from_terms(3, &biharmonic_terms(3, 1.0), None);
+        let b2 = DirectionBasis::from_terms(3, &laplacian_terms(3, 1.0), None);
+        let p1 = cache.get_or_compile(&g, &b4, false);
+        let p2 = cache.get_or_compile(&g, &b4, false);
+        assert!(Arc::ptr_eq(&p1, &p2), "same key must reuse the program");
+        let p3 = cache.get_or_compile(&g, &b2, false);
+        assert!(!Arc::ptr_eq(&p1, &p3), "different order must recompile");
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 2, 2));
+    }
+}

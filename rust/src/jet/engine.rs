@@ -1,0 +1,528 @@
+//! The jet operator engine: compile-then-run evaluation of higher-order
+//! constant-coefficient operators, on the same rails as
+//! [`crate::autodiff::DofEngine`] — keyed program cache, program-keyed
+//! slab pool, deterministic batch sharding, and a retained reference
+//! interpreter for differential testing.
+
+use crate::autodiff::arena::{with_program_slab, SlabKey, TangentArena};
+use crate::autodiff::{Cost, PeakTracker};
+use crate::graph::{Graph, Op};
+use crate::parallel::{self, Pool};
+use crate::tensor::{matmul_nt, Tensor};
+
+use super::basis::DirectionBasis;
+use super::cache::global_jet_cache;
+use super::program::{execute_jet, JetProgram};
+use super::{
+    cauchy5, compose5, contract_output, extract_values, jet_bytes, validate_graph, JetBatch,
+};
+use std::sync::Arc;
+
+/// Output of [`JetEngine::compute`].
+pub struct JetResult {
+    /// `φ(x)`, `[batch, out]`.
+    pub values: Tensor,
+    /// `L[φ](x)`, `[batch, out]` — the contracted higher-order operator.
+    pub operator_values: Tensor,
+    /// The full output jet, `[batch·t·(k+1), out]`.
+    pub out_jet: JetBatch,
+    /// Exact FLOP count of the run.
+    pub cost: Cost,
+    /// Peak live jet bytes (the jet analogue of Theorem 2.2's `M₁`;
+    /// `m = 0` value rows included).
+    pub peak_jet_bytes: u64,
+}
+
+/// The Taylor-mode jet engine, seeded by a direction basis.
+pub struct JetEngine {
+    basis: DirectionBasis,
+    /// Optional zeroth-order coefficient `c` (adds `c·φ` at the output).
+    c: Option<f64>,
+}
+
+impl JetEngine {
+    pub fn new(basis: DirectionBasis) -> Self {
+        Self { basis, c: None }
+    }
+
+    /// Add a zeroth-order `c·φ` term.
+    pub fn with_constant(mut self, c: Option<f64>) -> Self {
+        self.c = c;
+        self
+    }
+
+    pub fn basis(&self) -> &DirectionBasis {
+        &self.basis
+    }
+
+    pub fn constant(&self) -> Option<f64> {
+        self.c
+    }
+
+    /// Input dimension `N`.
+    pub fn n(&self) -> usize {
+        self.basis.n
+    }
+
+    /// Jet order `k`.
+    pub fn order(&self) -> usize {
+        self.basis.order
+    }
+
+    /// Direction count `t` (the jet tangent width).
+    pub fn directions(&self) -> usize {
+        self.basis.directions()
+    }
+
+    /// Compile the jet program for `graph` — uncached; the `compute*`
+    /// wrappers go through [`global_jet_cache`] instead.
+    pub fn plan(&self, graph: &Graph) -> JetProgram {
+        JetProgram::compile(graph, &self.basis, self.c.is_some())
+    }
+
+    /// The cached program for `graph` (compiled on first use).
+    pub fn program(&self, graph: &Graph) -> Arc<JetProgram> {
+        global_jet_cache().get_or_compile(graph, &self.basis, self.c.is_some())
+    }
+
+    /// Evaluate `L[φ]` on a batch `x: [batch, N]` in one forward jet pass
+    /// (compile-then-run wrapper over the keyed global cache).
+    pub fn compute(&self, graph: &Graph, x: &Tensor) -> JetResult {
+        let program = self.program(graph);
+        self.execute(&program, graph, x)
+    }
+
+    /// Execute a precompiled program with an exact-fit slab from the
+    /// program-keyed pool.
+    pub fn execute(&self, program: &JetProgram, graph: &Graph, x: &Tensor) -> JetResult {
+        let key = SlabKey {
+            program: program.key().fingerprint,
+            rows: x.dims()[0],
+        };
+        with_program_slab(key, |slab| self.execute_with_slab(program, graph, x, slab))
+    }
+
+    /// Execute a precompiled program with caller-supplied slab storage.
+    pub fn execute_with_slab(
+        &self,
+        program: &JetProgram,
+        graph: &Graph,
+        x: &Tensor,
+        slab: &mut Vec<f64>,
+    ) -> JetResult {
+        execute_jet(program, graph, &self.basis, self.c, x, slab)
+    }
+
+    /// [`Self::compute`] sharded across the process-wide pool
+    /// (`--threads` / `DOF_THREADS`) in
+    /// [`parallel::DEFAULT_SHARD_ROWS`]-row chunks.
+    pub fn compute_parallel(&self, graph: &Graph, x: &Tensor) -> JetResult {
+        self.compute_sharded(graph, x, &parallel::global(), parallel::DEFAULT_SHARD_ROWS)
+    }
+
+    /// Evaluate with the batch partitioned into fixed `shard_rows`-row
+    /// chunks executed across `pool`.
+    ///
+    /// Determinism contract (same as the DOF engines): chunk boundaries
+    /// depend only on the batch size and `shard_rows` — never on the pool
+    /// width — and shard results are reduced in shard order, so `values`,
+    /// `operator_values`, the output jet, `cost`, and `peak_jet_bytes`
+    /// (the per-shard maximum) are bit-identical across thread counts, and
+    /// per-row arithmetic is row-independent so they also match the
+    /// unsharded [`Self::compute`] exactly.
+    pub fn compute_sharded(
+        &self,
+        graph: &Graph,
+        x: &Tensor,
+        pool: &Pool,
+        shard_rows: usize,
+    ) -> JetResult {
+        let program = self.program(graph);
+        self.execute_sharded(&program, graph, x, pool, shard_rows)
+    }
+
+    /// [`Self::compute_sharded`] over a precompiled program.
+    pub fn execute_sharded(
+        &self,
+        program: &JetProgram,
+        graph: &Graph,
+        x: &Tensor,
+        pool: &Pool,
+        shard_rows: usize,
+    ) -> JetResult {
+        let batch = x.dims()[0];
+        let n = x.dims()[1];
+        let ranges = parallel::split_rows(batch, shard_rows);
+        if ranges.len() <= 1 {
+            let serial = || self.execute(program, graph, x);
+            // A 1-thread pool means genuinely serial, including the GEMMs.
+            if pool.threads() == 1 {
+                return parallel::with_serial_guard(serial);
+            }
+            return serial();
+        }
+        let shards = pool.run_sharded(ranges, |_, r| {
+            let rows = r.end - r.start;
+            let xs = Tensor::from_vec(&[rows, n], x.data()[r.start * n..r.end * n].to_vec());
+            let key = SlabKey {
+                program: program.key().fingerprint,
+                rows,
+            };
+            with_program_slab(key, |slab| self.execute_with_slab(program, graph, &xs, slab))
+        });
+        merge_jet_shards(shards, batch)
+    }
+
+    /// The **reference interpreter**: a per-call graph walk with
+    /// arena-recycled jet storage and runtime liveness bookkeeping. The
+    /// planned executor replicates this pass operation for operation
+    /// (sharing the [`compose5`]/[`cauchy5`] kernels), so
+    /// `rust/tests/jet_equivalence.rs` asserts the two agree bit for bit on
+    /// values, `L[φ]`, the output jet, FLOP counts, and peak jet bytes.
+    pub fn compute_with_arena(
+        &self,
+        graph: &Graph,
+        x: &Tensor,
+        arena: &mut TangentArena,
+    ) -> JetResult {
+        let n = graph.input_dim();
+        assert_eq!(self.basis.n, n, "basis N != graph input dim");
+        let batch = x.dims()[0];
+        let t = self.basis.directions();
+        let k = self.basis.order;
+        validate_graph(graph, k);
+        let mut cost = Cost::zero();
+        let mut peak = PeakTracker::new();
+
+        let tau = graph.tau();
+        let mut frees_at: Vec<Vec<usize>> = vec![Vec::new(); graph.len()];
+        for i in 0..graph.len() {
+            frees_at[tau[i]].push(i);
+        }
+
+        let mut jets: Vec<Option<JetBatch>> = (0..graph.len()).map(|_| None).collect();
+        let mut in_off = 0usize;
+        let out_id = graph.output();
+
+        for j in 0..graph.len() {
+            let node = graph.node(j);
+            let jet = match &node.op {
+                Op::Input { dim } => {
+                    let d = *dim;
+                    let mut g = arena_jet(arena, batch, t, k, d);
+                    for b in 0..batch {
+                        let xrow = &x.row(b)[in_off..in_off + d];
+                        for dj in 0..t {
+                            g.row_mut(b, dj, 0).copy_from_slice(xrow);
+                            g.row_mut(b, dj, 1)
+                                .copy_from_slice(&self.basis.dirs.row(dj)[in_off..in_off + d]);
+                            // Orders ≥ 2 stay zero (arena jets are zeroed).
+                        }
+                    }
+                    in_off += d;
+                    g
+                }
+                Op::Linear { weight, bias } => {
+                    let p = jets[node.inputs[0]].as_ref().unwrap();
+                    let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+                    let rows = batch * t * (k + 1);
+                    let data = matmul_nt(&p.data, weight);
+                    cost.muls += (rows * out_d * in_d) as u64;
+                    cost.adds += (rows * out_d * in_d) as u64;
+                    let mut g = JetBatch { data, batch, t, k };
+                    for b in 0..batch {
+                        for dj in 0..t {
+                            for (dst, &bi) in
+                                g.row_mut(b, dj, 0).iter_mut().zip(bias.iter())
+                            {
+                                *dst += bi;
+                            }
+                        }
+                    }
+                    cost.adds += (batch * t * out_d) as u64;
+                    g
+                }
+                Op::Activation { act } => {
+                    let p = jets[node.inputs[0]].as_ref().unwrap();
+                    let d = node.dim;
+                    let mut g = arena_jet_scratch(arena, batch, t, k, d);
+                    let mut a = [0.0; 5];
+                    for b in 0..batch {
+                        for dj in 0..t {
+                            for c in 0..d {
+                                for (m, am) in a.iter_mut().enumerate().take(k + 1) {
+                                    *am = p.row(b, dj, m)[c];
+                                }
+                                let y = compose5(*act, k, &a);
+                                for m in 0..=k {
+                                    g.row_mut(b, dj, m)[c] = y[m];
+                                }
+                            }
+                        }
+                    }
+                    let (cm, ca) = super::compose_flops(k);
+                    cost.muls += (batch * t * d) as u64 * cm;
+                    cost.adds += (batch * t * d) as u64 * ca;
+                    g
+                }
+                Op::Slice { start, len } => {
+                    let p = jets[node.inputs[0]].as_ref().unwrap();
+                    let pd = p.dim();
+                    let mut g = arena_jet_scratch(arena, batch, t, k, *len);
+                    for r in 0..batch * t * (k + 1) {
+                        g.data
+                            .row_mut(r)
+                            .copy_from_slice(&p.data.row(r)[*start..*start + *len]);
+                    }
+                    debug_assert_eq!(pd, graph.node(node.inputs[0]).dim);
+                    g
+                }
+                Op::Add => {
+                    let p0 = jets[node.inputs[0]].as_ref().unwrap();
+                    let mut g = arena_jet_scratch(arena, batch, t, k, node.dim);
+                    g.data.data_mut().copy_from_slice(p0.data.data());
+                    for &p in &node.inputs[1..] {
+                        let pj = jets[p].as_ref().unwrap();
+                        for (dst, &sv) in
+                            g.data.data_mut().iter_mut().zip(pj.data.data().iter())
+                        {
+                            *dst += sv;
+                        }
+                        cost.adds += g.data.numel() as u64;
+                    }
+                    g
+                }
+                Op::Mul => {
+                    let d = node.dim;
+                    let p0 = jets[node.inputs[0]].as_ref().unwrap();
+                    let mut g = arena_jet_scratch(arena, batch, t, k, d);
+                    g.data.data_mut().copy_from_slice(p0.data.data());
+                    let mut a = [0.0; 5];
+                    let mut q = [0.0; 5];
+                    let (cm, ca) = super::cauchy_flops(k);
+                    for &p in &node.inputs[1..] {
+                        let pj = jets[p].as_ref().unwrap();
+                        for b in 0..batch {
+                            for dj in 0..t {
+                                for c in 0..d {
+                                    for m in 0..=k {
+                                        a[m] = g.row(b, dj, m)[c];
+                                        q[m] = pj.row(b, dj, m)[c];
+                                    }
+                                    let y = cauchy5(k, &a, &q);
+                                    for m in 0..=k {
+                                        g.row_mut(b, dj, m)[c] = y[m];
+                                    }
+                                }
+                            }
+                        }
+                        cost.muls += (batch * t * d) as u64 * cm;
+                        cost.adds += (batch * t * d) as u64 * ca;
+                    }
+                    g
+                }
+                Op::SumReduce => {
+                    let p = jets[node.inputs[0]].as_ref().unwrap();
+                    let pd = p.dim();
+                    let mut g = arena_jet_scratch(arena, batch, t, k, 1);
+                    for r in 0..batch * t * (k + 1) {
+                        g.data.data_mut()[r] = p.data.row(r)[..pd].iter().sum::<f64>();
+                    }
+                    cost.adds += (batch * t * (k + 1) * pd) as u64;
+                    g
+                }
+                Op::Concat => {
+                    let mut g = arena_jet_scratch(arena, batch, t, k, node.dim);
+                    let d = node.dim;
+                    let mut off = 0usize;
+                    for &p in &node.inputs {
+                        let pj = jets[p].as_ref().unwrap();
+                        let pd = pj.dim();
+                        for r in 0..batch * t * (k + 1) {
+                            g.data.row_mut(r)[off..off + pd]
+                                .copy_from_slice(pj.data.row(r));
+                        }
+                        off += pd;
+                    }
+                    debug_assert_eq!(off, d);
+                    g
+                }
+            };
+
+            peak.alloc(jet.bytes());
+            jets[j] = Some(jet);
+
+            for &i in &frees_at[j] {
+                if i == out_id {
+                    continue;
+                }
+                if let Some(g) = jets[i].take() {
+                    peak.free(g.bytes());
+                    arena.put_tensor(g.data);
+                }
+            }
+        }
+
+        let out_jet = jets[out_id].take().expect("graph has an output node");
+        let d = out_jet.dim();
+        let values = extract_values(out_jet.data.data(), batch, t, k, d);
+        let operator_values =
+            contract_output(&self.basis, self.c, out_jet.data.data(), &values, batch, d);
+        // Contraction cost is batch-linear (the helper charges one row).
+        let one = super::contract_flops(self.basis.weights.len(), self.c.is_some(), d);
+        cost.muls += one.muls * batch as u64;
+        cost.adds += one.adds * batch as u64;
+        debug_assert_eq!(jet_bytes(batch, t, k, d), out_jet.bytes());
+        JetResult {
+            values,
+            operator_values,
+            out_jet,
+            cost,
+            peak_jet_bytes: peak.peak(),
+        }
+    }
+}
+
+/// Zeroed jet block backed by recycled arena storage.
+fn arena_jet(arena: &mut TangentArena, batch: usize, t: usize, k: usize, dim: usize) -> JetBatch {
+    JetBatch {
+        data: arena.tensor(&[batch * t * (k + 1), dim]),
+        batch,
+        t,
+        k,
+    }
+}
+
+/// Non-zeroed jet block (every row fully assigned before reads).
+fn arena_jet_scratch(
+    arena: &mut TangentArena,
+    batch: usize,
+    t: usize,
+    k: usize,
+    dim: usize,
+) -> JetBatch {
+    JetBatch {
+        data: arena.tensor_scratch(&[batch * t * (k + 1), dim]),
+        batch,
+        t,
+        k,
+    }
+}
+
+/// Stitch per-shard results back into one batch-ordered [`JetResult`]:
+/// shard order is batch order, every node carries the full direction set,
+/// so merging is pure concatenation (values, operator values, jet rows);
+/// cost is the exact sum and the peak the per-shard maximum.
+fn merge_jet_shards(shards: Vec<JetResult>, batch: usize) -> JetResult {
+    let d = shards[0].values.dims()[1];
+    let t = shards[0].out_jet.t;
+    let k = shards[0].out_jet.k;
+    let mut values = Tensor::zeros(&[batch, d]);
+    let mut op_vals = Tensor::zeros(&[batch, d]);
+    let mut out_jet = JetBatch::zeros(batch, t, k, d);
+    let mut cost = Cost::zero();
+    let mut peak = 0u64;
+    let mut row = 0usize;
+    let mut jrow = 0usize;
+    for s in shards {
+        let rows = s.values.dims()[0];
+        values.data_mut()[row * d..(row + rows) * d].copy_from_slice(s.values.data());
+        op_vals.data_mut()[row * d..(row + rows) * d]
+            .copy_from_slice(s.operator_values.data());
+        let jn = rows * t * (k + 1) * d;
+        out_jet.data.data_mut()[jrow..jrow + jn].copy_from_slice(s.out_jet.data.data());
+        cost += s.cost;
+        peak = peak.max(s.peak_jet_bytes);
+        row += rows;
+        jrow += jn;
+    }
+    JetResult {
+        values,
+        operator_values: op_vals,
+        out_jet,
+        cost,
+        peak_jet_bytes: peak,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{builder::random_layers, mlp_graph, sparse_mlp_graph, Act};
+    use crate::jet::basis::{biharmonic_terms, laplacian_terms};
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn values_match_plain_eval() {
+        let mut rng = Xoshiro256::new(81);
+        let g = mlp_graph(&random_layers(&[3, 8, 1], &mut rng), Act::Tanh);
+        let x = Tensor::randn(&[4, 3], &mut rng);
+        let basis = DirectionBasis::from_terms(3, &laplacian_terms(3, 1.0), None);
+        let res = JetEngine::new(basis).compute(&g, &x);
+        let eval = g.eval(&x);
+        for b in 0..4 {
+            assert_eq!(res.values.at(b, 0), eval.at(b, 0), "row {b}");
+        }
+    }
+
+    #[test]
+    fn biharmonic_of_quadratic_is_zero() {
+        // φ = (w·x + b)² has all third and fourth derivatives ≡ 0.
+        let mut g = crate::graph::Graph::new();
+        let x = g.input(3);
+        let lin = g.linear(
+            x,
+            Tensor::matrix(&[vec![0.7, -1.2, 0.4]]),
+            vec![0.3],
+        );
+        g.activation(lin, Act::Square);
+        let basis = DirectionBasis::from_terms(3, &biharmonic_terms(3, 1.0), None);
+        let xs = Tensor::matrix(&[vec![0.2, 0.5, -0.8], vec![1.0, -0.3, 0.6]]);
+        let res = JetEngine::new(basis).compute(&g, &xs);
+        for b in 0..2 {
+            assert!(
+                res.operator_values.at(b, 0).abs() < 1e-9,
+                "Δ² of a quadratic must vanish, got {}",
+                res.operator_values.at(b, 0)
+            );
+        }
+    }
+
+    #[test]
+    fn laplacian_of_quadratic_matches_closed_form() {
+        // φ = (w·x)²: Δφ = 2|w|².
+        let w = [0.7, -1.2, 0.4];
+        let mut g = crate::graph::Graph::new();
+        let x = g.input(3);
+        let lin = g.linear(x, Tensor::matrix(&[w.to_vec()]), vec![0.0]);
+        g.activation(lin, Act::Square);
+        let basis = DirectionBasis::from_terms(3, &laplacian_terms(3, 1.0), None);
+        let xs = Tensor::matrix(&[vec![0.3, 0.9, -0.2]]);
+        let res = JetEngine::new(basis).compute(&g, &xs);
+        let want = 2.0 * w.iter().map(|v| v * v).sum::<f64>();
+        assert!(
+            (res.operator_values.at(0, 0) - want).abs() < 1e-12,
+            "{} vs {want}",
+            res.operator_values.at(0, 0)
+        );
+    }
+
+    #[test]
+    fn interpreter_matches_planned_bitwise_on_sparse_arch() {
+        let mut rng = Xoshiro256::new(82);
+        let blocks: Vec<_> = (0..3)
+            .map(|_| random_layers(&[2, 6, 3], &mut rng))
+            .collect();
+        let g = sparse_mlp_graph(&blocks, Act::Sin);
+        let x = Tensor::randn(&[3, 6], &mut rng).scale(0.4);
+        let basis = DirectionBasis::from_terms(6, &biharmonic_terms(6, 1.0), None);
+        let eng = JetEngine::new(basis).with_constant(Some(0.7));
+        let planned = eng.compute(&g, &x);
+        let reference = eng.compute_with_arena(&g, &x, &mut TangentArena::new());
+        assert_eq!(planned.values, reference.values);
+        assert_eq!(planned.operator_values, reference.operator_values);
+        assert_eq!(planned.out_jet.data, reference.out_jet.data);
+        assert_eq!(planned.cost, reference.cost);
+        assert_eq!(planned.peak_jet_bytes, reference.peak_jet_bytes);
+    }
+}

@@ -1,0 +1,364 @@
+//! **Jet subsystem** — deterministic, exact Taylor-mode forward propagation
+//! for third- and fourth-order differential operators.
+//!
+//! DOF (eqs. 7–9) pushes the order-2 tuple `(v, L∇v, L[v])` through the
+//! graph. The same amortization extends to higher order: an **order-k
+//! univariate jet** along direction `u` is the truncated Taylor expansion
+//! of `τ ↦ φ(x + τu)`, carried as `k+1` normalized coefficients
+//! `(c₀, c₁, …, c_k)` per node — `c₀` is the value itself and
+//! `m!·c_m = ∂ᵐ/∂τᵐ φ(x+τu)`. Every graph op has an exact propagation
+//! rule:
+//!
+//! * **Linear** — coefficient-wise affine map: one GEMM over all
+//!   `t·(k+1)` folded rows (bias on the `m = 0` rows only), the same
+//!   GEMM-shaped hot path as [`crate::autodiff::forward_jacobian`];
+//! * **Activation** — Faà di Bruno composition through σ using
+//!   `σ' … σ''''` ([`crate::graph::Act::d4f`]);
+//! * **Mul** — the Cauchy (Leibniz) product of parent jets, folded
+//!   pairwise in place;
+//! * **Add / Slice / Concat / SumReduce** — coefficient-wise.
+//!
+//! Mixed derivatives (`∂⁴/∂xᵢ²∂xⱼ²` and friends) are assembled from
+//! *diagonal* jet evaluations by polarization ([`basis`]): the biharmonic
+//! `Δ²` needs exactly `d²` directions `{eᵢ} ∪ {eᵢ±eⱼ}`. A
+//! [`basis::DirectionBasis`] holds the seed directions and the contraction
+//! weights; [`engine::JetEngine`] runs the pass; [`JetProgram`] is the
+//! compile-once plan (schedule with fused `Linear→Activation` steps,
+//! static slab layout, exact analytic FLOP/peak), cached in
+//! [`cache::global_jet_cache`] and executed shard-parallel under the PR 1
+//! determinism contract (shard boundaries batch-only, shard-ordered
+//! reduction — bit-identical across 1/2/4/8 threads;
+//! `rust/tests/jet_equivalence.rs`).
+//!
+//! Storage folds batch, direction, and order into rows:
+//! `[batch·t·(k+1), d]` with row index `(b·t + j)·(k+1) + m` — see
+//! [`JetBatch`].
+//!
+//! At `k = 2` with directions `{rows of L}` and weights `2·sign` on `c₂`,
+//! the jet pass computes exactly the DOF operator (the order-2 cross-check
+//! asserts value bit-identity and `L[φ]` agreement to float-summation
+//! order); at `k = 4` it reaches the biharmonic / Swift–Hohenberg /
+//! Kuramoto–Sivashinsky class that the second-order engines cannot.
+
+pub mod basis;
+pub mod cache;
+pub mod engine;
+pub mod program;
+
+pub use basis::{biharmonic_terms, laplacian_terms, terms_from_symmetric, DirectionBasis, JetTerm};
+pub use cache::global_jet_cache;
+pub use engine::{JetEngine, JetResult};
+pub use program::JetProgram;
+
+use crate::autodiff::Cost;
+use crate::graph::{Act, Graph, Op};
+use crate::tensor::Tensor;
+
+/// Maximum supported jet order.
+pub const MAX_ORDER: usize = 4;
+
+/// Batched jet block for one node: rows are `(batch, direction, order)`
+/// triples — row index `(b·t + j)·(k+1) + m` — columns are node
+/// components. The `m = 0` rows carry the node *value* (replicated per
+/// direction), which is what lets every op propagate the whole jet in one
+/// uniform sweep (and the Linear op in one GEMM).
+#[derive(Debug, Clone)]
+pub struct JetBatch {
+    /// `[batch·t·(k+1), d]`.
+    pub data: Tensor,
+    pub batch: usize,
+    /// Direction count `t`.
+    pub t: usize,
+    /// Jet order `k` (each direction carries `k+1` coefficient rows).
+    pub k: usize,
+}
+
+impl JetBatch {
+    pub fn zeros(batch: usize, t: usize, k: usize, dim: usize) -> Self {
+        Self {
+            data: Tensor::zeros(&[batch * t * (k + 1), dim]),
+            batch,
+            t,
+            k,
+        }
+    }
+
+    /// Node dimension `d`.
+    pub fn dim(&self) -> usize {
+        self.data.dims()[1]
+    }
+
+    /// Bytes of the underlying buffer (f64).
+    pub fn bytes(&self) -> u64 {
+        (self.data.numel() * std::mem::size_of::<f64>()) as u64
+    }
+
+    /// Flat row index of `(b, j, m)`.
+    #[inline]
+    pub fn row_index(&self, b: usize, j: usize, m: usize) -> usize {
+        (b * self.t + j) * (self.k + 1) + m
+    }
+
+    /// Coefficient row `c_m` of direction `j` at batch point `b`.
+    pub fn row(&self, b: usize, j: usize, m: usize) -> &[f64] {
+        self.data.row(self.row_index(b, j, m))
+    }
+
+    pub fn row_mut(&mut self, b: usize, j: usize, m: usize) -> &mut [f64] {
+        let r = self.row_index(b, j, m);
+        self.data.row_mut(r)
+    }
+}
+
+/// Jet bytes of a node: `batch·t·(k+1)·d` f64 scalars. The `m = 0` value
+/// rows are counted too — they live in the same buffer (unlike DOF, jets
+/// carry no separate value stream).
+pub fn jet_bytes(batch: usize, t: usize, k: usize, dim: usize) -> u64 {
+    (batch * t * (k + 1) * dim * std::mem::size_of::<f64>()) as u64
+}
+
+// ---- shared arithmetic kernels -------------------------------------------
+//
+// Both execution paths — the reference interpreter
+// (`JetEngine::compute_with_arena`) and the planned slab executor
+// (`program::execute_jet`) — call these exact same functions per
+// (batch, direction, component), which is what makes them bit-identical by
+// construction.
+
+/// Faà di Bruno composition of σ over one scalar jet: `a[0..=k]` are the
+/// input Taylor coefficients (`a[0]` the pre-activation value), returns the
+/// output coefficients. Entries above `k` are ignored.
+///
+/// For `k ≥ 3` the caller must have validated σ via [`validate_graph`]
+/// (`d3f`/`d4f` return `Some`).
+#[inline]
+pub(crate) fn compose5(act: Act, k: usize, a: &[f64; 5]) -> [f64; 5] {
+    let mut y = [0.0; 5];
+    let h = a[0];
+    y[0] = act.f(h);
+    let d1 = act.df(h);
+    y[1] = d1 * a[1];
+    if k >= 2 {
+        let d2 = act.d2f(h);
+        y[2] = d1 * a[2] + 0.5 * d2 * a[1] * a[1];
+        if k >= 3 {
+            let d3 = act.d3f(h).expect("validated: σ''' available");
+            y[3] = d1 * a[3]
+                + d2 * a[1] * a[2]
+                + (d3 * (1.0 / 6.0)) * a[1] * a[1] * a[1];
+            if k >= 4 {
+                let d4 = act.d4f(h).expect("validated: σ'''' available");
+                y[4] = d1 * a[4]
+                    + d2 * (a[1] * a[3] + 0.5 * a[2] * a[2])
+                    + (0.5 * d3) * a[1] * a[1] * a[2]
+                    + (d4 * (1.0 / 24.0)) * a[1] * a[1] * a[1] * a[1];
+            }
+        }
+    }
+    y
+}
+
+/// Exact per-component FLOP charge of [`compose5`] (multiplications,
+/// additions), counted off the expression tree above. σ, σ', … evaluations
+/// are not charged (they are shared with the value pass, matching the DOF
+/// engines' convention).
+pub(crate) fn compose_flops(k: usize) -> (u64, u64) {
+    match k {
+        0 => (0, 0),
+        1 => (1, 0),
+        2 => (5, 1),   // + d1·a2, 0.5·d2·a1·a1
+        3 => (12, 3),  // + d1·a3, d2·a1·a2, (d3/6)·a1³
+        _ => (26, 7),  // + d1·a4, d2·(a1a3 + ½a2²), ½d3·a1²a2, (d4/24)·a1⁴
+    }
+}
+
+/// Cauchy (truncated Taylor) product of two scalar jets:
+/// `out[m] = Σ_{i≤m} a[i]·b[m−i]`, ascending `i`.
+#[inline]
+pub(crate) fn cauchy5(k: usize, a: &[f64; 5], b: &[f64; 5]) -> [f64; 5] {
+    let mut out = [0.0; 5];
+    for m in 0..=k {
+        let mut acc = 0.0;
+        for i in 0..=m {
+            acc += a[i] * b[m - i];
+        }
+        out[m] = acc;
+    }
+    out
+}
+
+/// Exact per-component FLOP charge of one [`cauchy5`] fold:
+/// `Σ_{m≤k} (m+1)` muls, `Σ_{m≤k} m` adds.
+pub(crate) fn cauchy_flops(k: usize) -> (u64, u64) {
+    let k = k as u64;
+    ((k + 1) * (k + 2) / 2, k * (k + 1) / 2)
+}
+
+/// Per-batch-row FLOP cost of the contraction
+/// `L[φ] = Σ weights w·c_m + c·φ` over an `out_d`-dim output.
+pub(crate) fn contract_flops(n_weights: usize, has_c: bool, out_d: usize) -> Cost {
+    let mut c = Cost::zero();
+    c.muls += (n_weights * out_d) as u64;
+    c.adds += (n_weights * out_d) as u64;
+    if has_c {
+        c.muls += out_d as u64;
+        c.adds += out_d as u64;
+    }
+    c
+}
+
+/// Contract an output jet (flat `[batch·t·(k+1), d]` slice) against the
+/// basis weights: `L[φ][b, o] = Σ_{(j,m,w)} w·c_m^{(j)}[o] (+ c·φ[b, o])`.
+/// `values` must be the `[batch, d]` output values (for the `c` term).
+/// Shared by the interpreter and the planned executor.
+pub(crate) fn contract_output(
+    basis: &DirectionBasis,
+    c_coef: Option<f64>,
+    jet: &[f64],
+    values: &Tensor,
+    batch: usize,
+    d: usize,
+) -> Tensor {
+    let t = basis.directions();
+    let k = basis.order;
+    debug_assert_eq!(jet.len(), batch * t * (k + 1) * d);
+    let mut out = Tensor::zeros(&[batch, d]);
+    for b in 0..batch {
+        let orow = out.row_mut(b);
+        for &(j, m, w) in &basis.weights {
+            let r = (b * t + j) * (k + 1) + m;
+            let src = &jet[r * d..(r + 1) * d];
+            for (o, &s) in orow.iter_mut().zip(src.iter()) {
+                *o += w * s;
+            }
+        }
+        if let Some(c) = c_coef {
+            for (o, &v) in orow.iter_mut().zip(values.row(b).iter()) {
+                *o += c * v;
+            }
+        }
+    }
+    out
+}
+
+/// Extract the `[batch, d]` output values (direction 0, order 0 rows) from
+/// a flat jet slice.
+pub(crate) fn extract_values(jet: &[f64], batch: usize, t: usize, k: usize, d: usize) -> Tensor {
+    let mut v = Tensor::zeros(&[batch, d]);
+    for b in 0..batch {
+        let r = b * t * (k + 1);
+        v.row_mut(b).copy_from_slice(&jet[r * d..r * d + d]);
+    }
+    v
+}
+
+/// Reject graphs whose activations lack the σ-derivatives an order-`k` jet
+/// needs (e.g. GELU above order 2) with a clear error, instead of failing
+/// deep inside a propagation sweep.
+pub(crate) fn validate_graph(graph: &Graph, k: usize) {
+    assert!(
+        (1..=MAX_ORDER).contains(&k),
+        "jet order must be in 1..={MAX_ORDER}, got {k}"
+    );
+    for (id, node) in graph.nodes().iter().enumerate() {
+        if let Op::Activation { act } = &node.op {
+            if k >= 3 && act.d3f(0.0).is_none() {
+                panic!(
+                    "order-{k} jets need σ''' but {act:?} (node {id}) has no \
+                     closed form; use tanh/sin/softplus or lower the order"
+                );
+            }
+            if k >= 4 && act.d4f(0.0).is_none() {
+                panic!(
+                    "order-{k} jets need σ'''' but {act:?} (node {id}) has no \
+                     closed form; use tanh/sin/softplus or lower the order"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// compose5 must reproduce the Taylor coefficients of σ(g(τ)) for a
+    /// concrete polynomial g, checked against finite differences of the
+    /// composed scalar function.
+    #[test]
+    fn compose_matches_taylor_of_composition() {
+        let a = [0.3, 0.8, -0.5, 0.25, -0.1];
+        let g = |tau: f64| {
+            a[0] + a[1] * tau + a[2] * tau * tau + a[3] * tau.powi(3) + a[4] * tau.powi(4)
+        };
+        for act in [Act::Tanh, Act::Sin, Act::Softplus, Act::Square] {
+            let y = compose5(act, 4, &a);
+            let f = |tau: f64| act.f(g(tau));
+            // Central finite differences of f at 0, each order at its own
+            // sweet-spot step (truncation vs roundoff).
+            let f0 = f(0.0);
+            let d1 = {
+                let h = 1e-6;
+                (f(h) - f(-h)) / (2.0 * h)
+            };
+            let d2 = {
+                let h = 1e-4;
+                (f(h) - 2.0 * f0 + f(-h)) / (h * h)
+            };
+            let d3 = {
+                let h = 1e-3;
+                (f(2.0 * h) - 2.0 * f(h) + 2.0 * f(-h) - f(-2.0 * h)) / (2.0 * h * h * h)
+            };
+            let d4 = {
+                let h = 5e-3;
+                (f(2.0 * h) - 4.0 * f(h) + 6.0 * f0 - 4.0 * f(-h) + f(-2.0 * h)) / h.powi(4)
+            };
+            let fd = [f0, d1, d2 / 2.0, d3 / 6.0, d4 / 24.0];
+            for (m, (&got, &want)) in y.iter().zip(fd.iter()).enumerate() {
+                let tol = [1e-12, 1e-7, 1e-6, 1e-4, 2e-3][m];
+                assert!(
+                    (got - want).abs() < tol * want.abs().max(1.0),
+                    "{act:?} c{m}: {got} vs fd {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cauchy_matches_polynomial_product() {
+        let a = [1.0, 2.0, -1.0, 0.5, 0.0];
+        let b = [3.0, -1.0, 0.25, 0.0, 1.0];
+        let y = cauchy5(4, &a, &b);
+        // Direct convolution.
+        for m in 0..=4 {
+            let mut want = 0.0;
+            for i in 0..=m {
+                want += a[i] * b[m - i];
+            }
+            assert_eq!(y[m], want);
+        }
+        // Truncation: k = 2 leaves higher entries zero.
+        let y2 = cauchy5(2, &a, &b);
+        assert_eq!(y2[3], 0.0);
+        assert_eq!(y2[4], 0.0);
+    }
+
+    #[test]
+    fn jet_batch_indexing_roundtrip() {
+        let mut jb = JetBatch::zeros(2, 3, 4, 5);
+        jb.row_mut(1, 2, 3)[4] = 7.0;
+        assert_eq!(jb.row(1, 2, 3)[4], 7.0);
+        assert_eq!(jb.data.dims(), &[2 * 3 * 5, 5]);
+        assert_eq!(jb.bytes(), (2 * 3 * 5 * 5 * 8) as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "σ'''")]
+    fn gelu_rejected_at_order_three() {
+        let mut g = Graph::new();
+        let x = g.input(2);
+        let l = g.linear(x, Tensor::eye(2), vec![0.0; 2]);
+        g.activation(l, Act::Gelu);
+        validate_graph(&g, 3);
+    }
+}

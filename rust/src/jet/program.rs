@@ -1,0 +1,663 @@
+//! Compile-once jet programs: the planned execution layer under the
+//! [`crate::jet::JetEngine`], mirroring [`crate::plan::OperatorProgram`] on
+//! the same rails.
+//!
+//! A [`JetProgram`] is compiled once per `(graph structure, direction
+//! count, order)` and reused for every batch. It carries:
+//!
+//! * the **schedule** — the shared [`crate::plan`] step walk with
+//!   `Linear → Activation` pairs fused;
+//! * a **static slab layout** — every node's jet block
+//!   (`t·(k+1)·dim` per-row scalars) at a fixed offset, assigned by
+//!   replaying the liveness table (eq. 24) through the same first-fit
+//!   [`crate::plan::layout::SlabLayout`]; no step needs scratch (the
+//!   Linear GEMM reads the parent block directly and the Mul fold is
+//!   in-place descending);
+//! * **exact analytic costs** — per-row FLOPs and peak jet bytes, both
+//!   linear in the batch, identical to what the reference interpreter
+//!   accumulates at runtime.
+//!
+//! Programs are **shard-invariant** (they depend on neither batch size nor
+//! thread count) and value-independent (weight values and direction values
+//! are execution inputs; only zero patterns key the cache), so
+//! `compute_sharded` compiles once and every shard executes the same plan —
+//! the PR 1 determinism contract holds by construction.
+
+use std::ops::Range;
+
+use crate::autodiff::Cost;
+use crate::graph::{Graph, Op};
+use crate::plan::layout::SlabLayout;
+use crate::plan::{self, Step, StepKind};
+use crate::tensor::{matmul_nt_into, Tensor};
+
+use super::basis::DirectionBasis;
+use super::{
+    cauchy_flops, cauchy5, compose_flops, compose5, contract_flops, contract_output,
+    extract_values, validate_graph,
+};
+use super::engine::JetResult;
+use super::JetBatch;
+
+/// Cache key for a compiled jet program: graph structure, direction-matrix
+/// zero pattern, `(t, k)`, the contraction-weight *structure* (the
+/// `(direction, order)` pairs — their count feeds the program's exact
+/// contraction FLOPs, and two operators can share a direction set while
+/// weighting different orders, e.g. biharmonic vs Kuramoto–Sivashinsky),
+/// and whether a zeroth-order `c·φ` term participates. Direction and
+/// weight *values* are execution inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct JetKey {
+    pub fingerprint: u64,
+    pub nodes: usize,
+    pub n: usize,
+    /// Direction count.
+    pub t: usize,
+    /// Jet order.
+    pub k: usize,
+    /// Contraction weight-entry count (part of the exact cost).
+    pub weights: usize,
+    pub has_c: bool,
+}
+
+/// Value-independent fingerprint of `(graph, basis, has_c)`.
+pub fn jet_key(graph: &Graph, basis: &DirectionBasis, has_c: bool) -> JetKey {
+    let mut h = plan::Fnv::new();
+    plan::hash_graph_structure(&mut h, graph);
+    h.u64(basis.n as u64);
+    h.u64(basis.directions() as u64);
+    h.u64(basis.order as u64);
+    h.bits(basis.dirs.data().iter().map(|&v| v != 0.0));
+    h.u64(basis.weights.len() as u64);
+    for &(d, m, _) in &basis.weights {
+        h.u64(d as u64);
+        h.u64(m as u64);
+    }
+    h.u64(has_c as u64);
+    JetKey {
+        fingerprint: h.0,
+        nodes: graph.len(),
+        n: graph.input_dim(),
+        t: basis.directions(),
+        k: basis.order,
+        weights: basis.weights.len(),
+        has_c,
+    }
+}
+
+/// Per-node compiled facts.
+#[derive(Debug, Clone)]
+pub struct JetNodePlan {
+    /// Node output dimension.
+    pub dim: usize,
+    /// Per-row slab offset of the node's jet block (`t·(k+1)·dim` per-row
+    /// scalars).
+    pub slot: usize,
+}
+
+/// A compiled, reusable jet execution program for one
+/// `(graph, direction basis)` pair.
+pub struct JetProgram {
+    steps: Vec<Step>,
+    nodes: Vec<JetNodePlan>,
+    out_id: usize,
+    n: usize,
+    t: usize,
+    k: usize,
+    has_c: bool,
+    slab_per_row: usize,
+    cost_per_row: Cost,
+    peak_per_row_scalars: u64,
+    key: JetKey,
+}
+
+impl JetProgram {
+    /// Compile a program. Cost is O(nodes); no batch-data arithmetic.
+    pub fn compile(graph: &Graph, basis: &DirectionBasis, has_c: bool) -> Self {
+        let n = graph.input_dim();
+        assert_eq!(basis.n, n, "basis N != graph input dim");
+        assert!(!graph.is_empty(), "cannot compile an empty graph");
+        let t = basis.directions();
+        let k = basis.order;
+        validate_graph(graph, k);
+        let out_id = graph.output();
+
+        let tau = graph.tau();
+        let mut frees_at: Vec<Vec<usize>> = vec![Vec::new(); graph.len()];
+        for i in 0..graph.len() {
+            frees_at[tau[i]].push(i);
+        }
+        let steps = plan::build_schedule(graph, &tau);
+
+        // ---- static slot assignment (per-row scalar units) --------------
+        let mut nodes: Vec<JetNodePlan> = graph
+            .nodes()
+            .iter()
+            .map(|nd| JetNodePlan { dim: nd.dim, slot: 0 })
+            .collect();
+        let node_size = |dim: usize| t * (k + 1) * dim;
+        let mut lay = SlabLayout::new();
+        for step in &steps {
+            let id = step.node;
+            nodes[id].slot = lay.alloc(node_size(nodes[id].dim));
+            for &i in &frees_at[id] {
+                if i != out_id {
+                    lay.free(nodes[i].slot, node_size(nodes[i].dim));
+                }
+            }
+            if let StepKind::Linear { fused_act: Some(a) } = &step.kind {
+                let a = *a;
+                nodes[a].slot = lay.alloc(node_size(nodes[a].dim));
+                for &i in &frees_at[a] {
+                    if i != out_id {
+                        lay.free(nodes[i].slot, node_size(nodes[i].dim));
+                    }
+                }
+            }
+        }
+        let slab_per_row = lay.high_water();
+
+        // ---- exact per-row cost (mirrors the executor term by term) -----
+        let mut cost = Cost::zero();
+        for node in graph.nodes() {
+            match &node.op {
+                Op::Input { .. } | Op::Slice { .. } | Op::Concat => {}
+                Op::Linear { weight, .. } => {
+                    let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+                    let rows = (t * (k + 1)) as u64;
+                    cost.muls += rows * (out_d * in_d) as u64;
+                    cost.adds += rows * (out_d * in_d) as u64;
+                    cost.adds += (t * out_d) as u64; // bias on m = 0 rows
+                }
+                Op::Activation { .. } => {
+                    let (cm, ca) = compose_flops(k);
+                    cost.muls += (t * node.dim) as u64 * cm;
+                    cost.adds += (t * node.dim) as u64 * ca;
+                }
+                Op::Add => {
+                    let extra = (node.inputs.len() - 1) as u64;
+                    cost.adds += extra * (t * (k + 1) * node.dim) as u64;
+                }
+                Op::Mul => {
+                    let (cm, ca) = cauchy_flops(k);
+                    let folds = (node.inputs.len() - 1) as u64;
+                    cost.muls += folds * (t * node.dim) as u64 * cm;
+                    cost.adds += folds * (t * node.dim) as u64 * ca;
+                }
+                Op::SumReduce => {
+                    let pd = graph.node(node.inputs[0]).dim;
+                    cost.adds += (t * (k + 1) * pd) as u64;
+                }
+            }
+        }
+        cost += contract_flops(basis.weights.len(), has_c, graph.node(out_id).dim);
+
+        // ---- peak replay (same alloc/free event order as the arena) -----
+        let mut live = 0u64;
+        let mut peak = 0u64;
+        for j in 0..graph.len() {
+            live += node_size(nodes[j].dim) as u64;
+            if live > peak {
+                peak = live;
+            }
+            for &i in &frees_at[j] {
+                if i != out_id {
+                    live -= node_size(nodes[i].dim) as u64;
+                }
+            }
+        }
+
+        let key = jet_key(graph, basis, has_c);
+        JetProgram {
+            steps,
+            nodes,
+            out_id,
+            n,
+            t,
+            k,
+            has_c,
+            slab_per_row,
+            cost_per_row: cost,
+            peak_per_row_scalars: peak,
+            key,
+        }
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    pub fn steps(&self) -> &[Step] {
+        &self.steps
+    }
+
+    pub fn node_plan(&self, id: usize) -> &JetNodePlan {
+        &self.nodes[id]
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn output(&self) -> usize {
+        self.out_id
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.n
+    }
+
+    /// Direction count `t`.
+    pub fn directions(&self) -> usize {
+        self.t
+    }
+
+    /// Jet order `k`.
+    pub fn order(&self) -> usize {
+        self.k
+    }
+
+    pub fn has_c(&self) -> bool {
+        self.has_c
+    }
+
+    pub fn key(&self) -> JetKey {
+        self.key
+    }
+
+    /// Number of fused `Linear→Activation` steps in the schedule.
+    pub fn fused_steps(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| matches!(s.kind, StepKind::Linear { fused_act: Some(_) }))
+            .count()
+    }
+
+    /// Per-row slab scalars; one shard's slab is `slab_per_row · rows`.
+    pub fn slab_per_row(&self) -> usize {
+        self.slab_per_row
+    }
+
+    /// Slab length (f64 scalars) for a `batch`-row execution.
+    pub fn slab_len(&self, batch: usize) -> usize {
+        self.slab_per_row * batch
+    }
+
+    /// Exact FLOP count of executing `batch` rows — identical to the
+    /// reference interpreter's runtime accumulation (every term of the jet
+    /// pass is linear in the batch).
+    pub fn cost(&self, batch: usize) -> Cost {
+        Cost {
+            muls: self.cost_per_row.muls * batch as u64,
+            adds: self.cost_per_row.adds * batch as u64,
+        }
+    }
+
+    /// Exact peak live jet bytes of a `batch`-row execution (the jet
+    /// analogue of the Theorem 2.2 `M₁` measurement; `m = 0` value rows
+    /// included — jets carry no separate value stream).
+    pub fn peak_jet_bytes(&self, batch: usize) -> u64 {
+        self.peak_per_row_scalars * 8 * batch as u64
+    }
+}
+
+// ---- slab addressing -----------------------------------------------------
+
+fn block_rng(np: &JetNodePlan, batch: usize, t: usize, k: usize) -> Range<usize> {
+    let lo = np.slot * batch;
+    lo..lo + batch * t * (k + 1) * np.dim
+}
+
+/// Split the slab around the write window `w`: `(prefix, window, suffix)`.
+fn split3<'a>(slab: &'a mut [f64], w: &Range<usize>) -> (&'a [f64], &'a mut [f64], &'a [f64]) {
+    let (pre, rest) = slab.split_at_mut(w.start);
+    let (win, post) = rest.split_at_mut(w.end - w.start);
+    (&*pre, win, &*post)
+}
+
+/// Read a slab range the layout guarantees is disjoint from the write
+/// window `w` (addresses are absolute slab offsets).
+fn rd<'a>(pre: &'a [f64], post: &'a [f64], w: &Range<usize>, r: Range<usize>) -> &'a [f64] {
+    if r.end <= w.start {
+        &pre[r]
+    } else {
+        debug_assert!(r.start >= w.end, "overlapping slab access");
+        &post[r.start - w.end..r.end - w.end]
+    }
+}
+
+// ---- the planned jet pass ------------------------------------------------
+
+/// Execute the compiled program on `x: [batch, N]` with `slab` as the only
+/// jet storage (grown on first use, reused verbatim afterwards). The
+/// arithmetic shares its per-component kernels ([`compose5`], [`cauchy5`])
+/// with the reference interpreter, so the two paths are bit-identical.
+pub fn execute_jet(
+    program: &JetProgram,
+    graph: &Graph,
+    basis: &DirectionBasis,
+    c_coef: Option<f64>,
+    x: &Tensor,
+    slab: &mut Vec<f64>,
+) -> JetResult {
+    assert_eq!(x.rank(), 2, "input must be [batch, N]");
+    let batch = x.dims()[0];
+    assert_eq!(x.dims()[1], program.input_dim(), "input dim mismatch");
+    assert_eq!(basis.directions(), program.directions(), "basis/program t mismatch");
+    assert_eq!(basis.order, program.order(), "basis/program order mismatch");
+    assert_eq!(graph.len(), program.node_count(), "program/graph mismatch");
+    assert_eq!(
+        program.has_c(),
+        c_coef.is_some(),
+        "program compiled with different zeroth-order options"
+    );
+    let (t, k) = (program.directions(), program.order());
+    let need = program.slab_len(batch);
+    if slab.len() < need {
+        slab.resize(need, 0.0);
+    }
+    let slab = &mut slab[..need];
+
+    for step in program.steps() {
+        match &step.kind {
+            StepKind::Input { in_off } => {
+                input_step(program, basis, x, batch, slab, step.node, *in_off)
+            }
+            StepKind::Linear { fused_act } => {
+                linear_step(program, graph, batch, slab, step.node);
+                if let Some(a) = fused_act {
+                    activation_step(program, graph, batch, slab, *a);
+                }
+            }
+            StepKind::Activation => activation_step(program, graph, batch, slab, step.node),
+            StepKind::Slice => slice_step(program, graph, batch, slab, step.node),
+            StepKind::Add => add_step(program, graph, batch, slab, step.node),
+            StepKind::Mul => mul_step(program, graph, batch, slab, step.node),
+            StepKind::SumReduce => sum_reduce_step(program, graph, batch, slab, step.node),
+            StepKind::Concat => concat_step(program, graph, batch, slab, step.node),
+        }
+    }
+
+    // Extract the output jet, values, and the contraction.
+    let np = program.node_plan(program.output());
+    let d = np.dim;
+    let jet = &slab[block_rng(np, batch, t, k)];
+    let values = extract_values(jet, batch, t, k, d);
+    let operator_values = contract_output(basis, c_coef, jet, &values, batch, d);
+    let out_jet = JetBatch {
+        data: Tensor::from_vec(&[batch * t * (k + 1), d], jet.to_vec()),
+        batch,
+        t,
+        k,
+    };
+    JetResult {
+        values,
+        operator_values,
+        out_jet,
+        cost: program.cost(batch),
+        peak_jet_bytes: program.peak_jet_bytes(batch),
+    }
+}
+
+fn input_step(
+    program: &JetProgram,
+    basis: &DirectionBasis,
+    x: &Tensor,
+    batch: usize,
+    slab: &mut [f64],
+    id: usize,
+    in_off: usize,
+) {
+    let (t, k) = (program.directions(), program.order());
+    let np = program.node_plan(id);
+    let d = np.dim;
+    let w = block_rng(np, batch, t, k);
+    let (_pre, win, _post) = split3(slab, &w);
+    for b in 0..batch {
+        let xrow = &x.row(b)[in_off..in_off + d];
+        for j in 0..t {
+            let base = ((b * t + j) * (k + 1)) * d;
+            win[base..base + d].copy_from_slice(xrow);
+            win[base + d..base + 2 * d]
+                .copy_from_slice(&basis.dirs.row(j)[in_off..in_off + d]);
+            win[base + 2 * d..base + (k + 1) * d].fill(0.0);
+        }
+    }
+}
+
+fn linear_step(program: &JetProgram, graph: &Graph, batch: usize, slab: &mut [f64], id: usize) {
+    let node = graph.node(id);
+    let (weight, bias) = match &node.op {
+        Op::Linear { weight, bias } => (weight, bias),
+        _ => unreachable!("linear step on non-linear node"),
+    };
+    let (t, k) = (program.directions(), program.order());
+    let p = node.inputs[0];
+    let np = program.node_plan(id);
+    let pp = program.node_plan(p);
+    let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+    let rows = batch * t * (k + 1);
+    let w = block_rng(np, batch, t, k);
+    let (pre, win, post) = split3(slab, &w);
+    let pg = rd(pre, post, &w, block_rng(pp, batch, t, k));
+    // One GEMM over every (batch, direction, order) row; matmul_nt_into
+    // accumulates, so the destination is zeroed first.
+    win.fill(0.0);
+    matmul_nt_into(pg, weight.data(), win, rows, in_d, out_d);
+    // Bias on the m = 0 (value) rows only.
+    for b in 0..batch {
+        for j in 0..t {
+            let o = ((b * t + j) * (k + 1)) * out_d;
+            for (dst, &bi) in win[o..o + out_d].iter_mut().zip(bias.iter()) {
+                *dst += bi;
+            }
+        }
+    }
+}
+
+fn activation_step(program: &JetProgram, graph: &Graph, batch: usize, slab: &mut [f64], id: usize) {
+    let node = graph.node(id);
+    let act = match &node.op {
+        Op::Activation { act } => *act,
+        _ => unreachable!("activation step on non-activation node"),
+    };
+    let (t, k) = (program.directions(), program.order());
+    let p = node.inputs[0];
+    let np = program.node_plan(id);
+    let pp = program.node_plan(p);
+    let d = np.dim;
+    let w = block_rng(np, batch, t, k);
+    let (pre, win, post) = split3(slab, &w);
+    let pg = rd(pre, post, &w, block_rng(pp, batch, t, k));
+    let mut a = [0.0; 5];
+    for bj in 0..batch * t {
+        let base = bj * (k + 1) * d;
+        for c in 0..d {
+            for (m, am) in a.iter_mut().enumerate().take(k + 1) {
+                *am = pg[base + m * d + c];
+            }
+            let y = compose5(act, k, &a);
+            for (m, &ym) in y.iter().enumerate().take(k + 1) {
+                win[base + m * d + c] = ym;
+            }
+        }
+    }
+}
+
+fn slice_step(program: &JetProgram, graph: &Graph, batch: usize, slab: &mut [f64], id: usize) {
+    let node = graph.node(id);
+    let (start, len) = match &node.op {
+        Op::Slice { start, len } => (*start, *len),
+        _ => unreachable!("slice step on non-slice node"),
+    };
+    let (t, k) = (program.directions(), program.order());
+    let p = node.inputs[0];
+    let np = program.node_plan(id);
+    let pp = program.node_plan(p);
+    let pd = pp.dim;
+    let w = block_rng(np, batch, t, k);
+    let (pre, win, post) = split3(slab, &w);
+    let pg = rd(pre, post, &w, block_rng(pp, batch, t, k));
+    for r in 0..batch * t * (k + 1) {
+        win[r * len..(r + 1) * len].copy_from_slice(&pg[r * pd + start..r * pd + start + len]);
+    }
+}
+
+fn add_step(program: &JetProgram, graph: &Graph, batch: usize, slab: &mut [f64], id: usize) {
+    let node = graph.node(id);
+    let (t, k) = (program.directions(), program.order());
+    let np = program.node_plan(id);
+    let w = block_rng(np, batch, t, k);
+    let (pre, win, post) = split3(slab, &w);
+    for (pi, &p) in node.inputs.iter().enumerate() {
+        let pp = program.node_plan(p);
+        let pg = rd(pre, post, &w, block_rng(pp, batch, t, k));
+        if pi == 0 {
+            win.copy_from_slice(pg);
+        } else {
+            for (dst, &sv) in win.iter_mut().zip(pg.iter()) {
+                *dst += sv;
+            }
+        }
+    }
+}
+
+fn concat_step(program: &JetProgram, graph: &Graph, batch: usize, slab: &mut [f64], id: usize) {
+    let node = graph.node(id);
+    let (t, k) = (program.directions(), program.order());
+    let np = program.node_plan(id);
+    let d = np.dim;
+    let w = block_rng(np, batch, t, k);
+    let (pre, win, post) = split3(slab, &w);
+    let mut off = 0usize;
+    for &p in &node.inputs {
+        let pp = program.node_plan(p);
+        let pd = pp.dim;
+        let pg = rd(pre, post, &w, block_rng(pp, batch, t, k));
+        for r in 0..batch * t * (k + 1) {
+            win[r * d + off..r * d + off + pd].copy_from_slice(&pg[r * pd..(r + 1) * pd]);
+        }
+        off += pd;
+    }
+}
+
+fn mul_step(program: &JetProgram, graph: &Graph, batch: usize, slab: &mut [f64], id: usize) {
+    let node = graph.node(id);
+    let (t, k) = (program.directions(), program.order());
+    let np = program.node_plan(id);
+    let d = np.dim;
+    let w = block_rng(np, batch, t, k);
+    let (pre, win, post) = split3(slab, &w);
+    // Fold parents pairwise with the Cauchy product. The accumulator lives
+    // in the node's own block (seeded from parent 0).
+    let mut a = [0.0; 5];
+    let mut q = [0.0; 5];
+    for (pi, &p) in node.inputs.iter().enumerate() {
+        let pp = program.node_plan(p);
+        let pg = rd(pre, post, &w, block_rng(pp, batch, t, k));
+        if pi == 0 {
+            win.copy_from_slice(pg);
+            continue;
+        }
+        for bj in 0..batch * t {
+            let base = bj * (k + 1) * d;
+            for c in 0..d {
+                for m in 0..=k {
+                    a[m] = win[base + m * d + c];
+                    q[m] = pg[base + m * d + c];
+                }
+                let y = cauchy5(k, &a, &q);
+                for (m, &ym) in y.iter().enumerate().take(k + 1) {
+                    win[base + m * d + c] = ym;
+                }
+            }
+        }
+    }
+}
+
+fn sum_reduce_step(program: &JetProgram, graph: &Graph, batch: usize, slab: &mut [f64], id: usize) {
+    let node = graph.node(id);
+    let (t, k) = (program.directions(), program.order());
+    let p = node.inputs[0];
+    let np = program.node_plan(id);
+    let pp = program.node_plan(p);
+    let pd = pp.dim;
+    let w = block_rng(np, batch, t, k);
+    let (pre, win, post) = split3(slab, &w);
+    let pg = rd(pre, post, &w, block_rng(pp, batch, t, k));
+    for r in 0..batch * t * (k + 1) {
+        win[r] = pg[r * pd..(r + 1) * pd].iter().sum::<f64>();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{builder::random_layers, mlp_graph, Act};
+    use crate::jet::basis::biharmonic_terms;
+    use crate::util::Xoshiro256;
+
+    fn fixture() -> (Graph, DirectionBasis) {
+        let mut rng = Xoshiro256::new(31);
+        let g = mlp_graph(&random_layers(&[4, 9, 9, 1], &mut rng), Act::Tanh);
+        let basis = DirectionBasis::from_terms(4, &biharmonic_terms(4, 1.0), None);
+        (g, basis)
+    }
+
+    #[test]
+    fn schedule_fuses_and_layout_is_positive() {
+        let (g, basis) = fixture();
+        let p = JetProgram::compile(&g, &basis, false);
+        assert_eq!(p.order(), 4);
+        assert_eq!(p.directions(), 16);
+        assert_eq!(p.fused_steps(), 2);
+        assert!(p.slab_per_row() > 0);
+        assert!(p.cost(1).muls > 0);
+        assert!(p.peak_jet_bytes(1) > 0);
+    }
+
+    #[test]
+    fn cost_and_peak_scale_exactly_with_batch() {
+        let (g, basis) = fixture();
+        let p = JetProgram::compile(&g, &basis, true);
+        let c1 = p.cost(1);
+        let c5 = p.cost(5);
+        assert_eq!(c5.muls, 5 * c1.muls);
+        assert_eq!(c5.adds, 5 * c1.adds);
+        assert_eq!(p.peak_jet_bytes(5), 5 * p.peak_jet_bytes(1));
+        assert_eq!(p.slab_len(5), 5 * p.slab_per_row());
+    }
+
+    #[test]
+    fn key_ignores_weight_values_but_not_structure_or_order() {
+        let mut rng = Xoshiro256::new(32);
+        let layers = random_layers(&[3, 6, 1], &mut rng);
+        let layers2 = random_layers(&[3, 6, 1], &mut rng);
+        let g1 = mlp_graph(&layers, Act::Tanh);
+        let g2 = mlp_graph(&layers2, Act::Tanh);
+        let b4 = DirectionBasis::from_terms(3, &biharmonic_terms(3, 1.0), None);
+        let b2 = DirectionBasis::from_terms(3, &crate::jet::laplacian_terms(3, 1.0), None);
+        assert_eq!(jet_key(&g1, &b4, false), jet_key(&g2, &b4, false));
+        assert_ne!(jet_key(&g1, &b4, false), jet_key(&g1, &b2, false));
+        assert_ne!(jet_key(&g1, &b4, false), jet_key(&g1, &b4, true));
+    }
+
+    #[test]
+    fn key_separates_same_directions_different_weight_structure() {
+        // Biharmonic and the KS linear part share the exact same direction
+        // set, order, and has_c — but KS weights the `c₂` coefficients too,
+        // so its contraction cost differs; the keys must not collide.
+        let mut rng = Xoshiro256::new(33);
+        let g = mlp_graph(&random_layers(&[3, 6, 1], &mut rng), Act::Tanh);
+        let bih = DirectionBasis::from_terms(3, &biharmonic_terms(3, 1.0), None);
+        let mut ks_terms = biharmonic_terms(3, -1.0);
+        ks_terms.extend(crate::jet::laplacian_terms(3, -1.0));
+        let ks = DirectionBasis::from_terms(3, &ks_terms, None);
+        assert_eq!(bih.directions(), ks.directions(), "same direction set");
+        let kb = jet_key(&g, &bih, false);
+        let kk = jet_key(&g, &ks, false);
+        assert_ne!(kb, kk, "weight structure must partition the key space");
+        // And the compiled programs carry different exact contraction costs.
+        let pb = JetProgram::compile(&g, &bih, false);
+        let pk = JetProgram::compile(&g, &ks, false);
+        assert_ne!(pb.cost(1).muls, pk.cost(1).muls);
+    }
+}

@@ -18,6 +18,9 @@
 //!   both instrumented with exact FLOP and peak-memory accounting)
 //! * the planned execution layer: [`plan`] (compile-once operator
 //!   programs under every engine)
+//! * higher order: [`jet`] (deterministic Taylor-mode forward propagation
+//!   for order-3/4 operators — biharmonic, Swift–Hohenberg,
+//!   Kuramoto–Sivashinsky — on the same plan/parallel rails)
 //! * applications: [`operators`], [`nn`], [`pde`], [`train`]
 //! * infrastructure: [`runtime`] (XLA-PJRT artifact execution),
 //!   [`coordinator`] (batching / serving), [`bench_harness`]
@@ -49,6 +52,21 @@
 //! The pre-plan interpreter survives as `DofEngine::compute_with_arena`,
 //! the differential-testing reference (`rust/tests/plan_equivalence.rs`
 //! asserts bit-identical values, `L[φ]`, FLOP counts, and peak bytes).
+//!
+//! ## Taylor-mode jets (third/fourth order)
+//!
+//! The second-order engines stop at `Σ a_ij ∂²_ij + Σ b_i ∂_i + c`. The
+//! [`jet`] subsystem extends the forward-propagation trick to order 3/4:
+//! order-k univariate jets (`k+1` Taylor coefficients per direction,
+//! folded `[batch·t·(k+1), d]` so the Linear hot path stays one GEMM) are
+//! pushed through exact per-op rules (Faà di Bruno through σ, Cauchy
+//! products at `Mul`), and mixed derivatives are assembled by
+//! **polarization** over `O(d²)` integer directions — `Δ²` needs exactly
+//! `d²` of them. `jet::JetEngine` mirrors `DofEngine` end to end: keyed
+//! program cache (`jet::JetProgram`), exact-fit program-keyed slab pool,
+//! `compute_sharded` under the same determinism contract (bit-identical
+//! across 1/2/4/8 threads — `rust/tests/jet_equivalence.rs`), serving via
+//! `ModelServer::spawn_jet`, and `dof bench grid --order 4`.
 //!
 //! ## Parallel execution
 //!
@@ -89,6 +107,7 @@ pub mod autodiff;
 pub mod bench_harness;
 pub mod coordinator;
 pub mod graph;
+pub mod jet;
 pub mod linalg;
 pub mod nn;
 pub mod operators;

@@ -14,6 +14,7 @@
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
+use dof::bench_harness::jet_grid::{run_jet_grid, write_jet_grid_json, JetGridConfig};
 use dof::bench_harness::report::{run_table1_grid, write_grid_json};
 use dof::bench_harness::table1::{run_table1, Table1Config};
 use dof::bench_harness::table2::{run_table2, Table2Config};
@@ -21,7 +22,7 @@ use dof::bench_harness::{render_table, BenchConfig};
 use dof::coordinator::{BatchPolicy, ModelServer};
 use dof::graph::Act;
 use dof::nn::{Mlp, MlpSpec};
-use dof::operators::{CoeffSpec, Operator};
+use dof::operators::{CoeffSpec, HigherOrderOperator, HigherOrderSpec, Operator};
 use dof::parallel::{self, Pool};
 use dof::pde::trainer::{PinnConfig, PinnTrainer};
 use dof::pde::{fokker_planck, heat_equation, klein_gordon, poisson};
@@ -76,6 +77,8 @@ USAGE:
   dof bench table1|table2|xla [options]   regenerate the paper's tables
   dof bench grid [--batches 8,64,256]     batch × threads sweep → BENCH_table1.json
             [--threads-grid 1,2,4,8]
+            [--order 2|4]                 4 = biharmonic Δ² via the jet
+                                          subsystem → BENCH_jet_grid.json
   dof train [--pde heat] [--steps 300]    train a PINN through DOF
   dof decompose [--spec elliptic --n 64]  show an A = LᵀDL decomposition
   dof inspect [--artifacts artifacts]     list AOT artifacts
@@ -83,6 +86,8 @@ USAGE:
             [--engine rust|xla]           (default: rust unless built with
                                            the pjrt feature; rust = sharded
                                            DOF engine backend)
+            [--order 2|4]                 rust engine: 4 serves precompiled
+                                          biharmonic jet programs
 
   --threads N (or DOF_THREADS=N) sizes the worker pool for batch sharding
   and the row-parallel GEMM; results are bit-identical at any N.";
@@ -163,6 +168,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
             );
         }
         "grid" => {
+            match args.usize_or("order", 2) {
+                2 => {}
+                4 => return cmd_bench_jet_grid(args),
+                other => {
+                    return Err(anyhow!(
+                        "unsupported --order {other} (2 = DOF grid, 4 = biharmonic jet grid)"
+                    ))
+                }
+            }
             let cfg = Table1Config {
                 n: args.usize_or("n", 64),
                 hidden: args.usize_or("hidden", 256),
@@ -207,6 +221,64 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "xla" => cmd_bench_xla(args)?,
         other => return Err(anyhow!("unknown bench {other:?} (table1|table2|grid|xla)")),
     }
+    Ok(())
+}
+
+/// `dof bench grid --order 4`: the biharmonic jet operator swept over
+/// batch × threads on both shipped architectures, reporting plan-compile vs
+/// per-batch execute time plus the program's exact analytic FLOP/peak
+/// columns (schema-v2 JSON).
+fn cmd_bench_jet_grid(args: &Args) -> Result<()> {
+    let cfg = JetGridConfig {
+        n: args.usize_or("n", 8),
+        hidden: args.usize_or("hidden", 32),
+        layers: args.usize_or("layers", 3),
+        seed: args.u64_or("seed", 7),
+        bench: bench_config(args),
+    };
+    if cfg.n < 4 || cfg.n % 2 != 0 {
+        return Err(anyhow!(
+            "--order 4 grid needs an even --n ≥ 4 (sparse blocks of 2), got {}",
+            cfg.n
+        ));
+    }
+    let batches = args.usize_list_or("batches", &[8, 64]);
+    let threads = args.usize_list_or("threads-grid", &[1, 2, 4, 8]);
+    let out = args.get_or("out", "BENCH_jet_grid.json");
+    eprintln!(
+        "jet grid: biharmonic Δ² (N={}, {} directions), batches {batches:?} × threads {threads:?} …",
+        cfg.n,
+        cfg.n * cfg.n
+    );
+    let report = run_jet_grid(&cfg, &batches, &threads);
+    for p in &report.plans {
+        println!(
+            "plan compile [{}]: {} once per (architecture, operator) — {} fused steps, \
+             {} dirs × order 4, {} slab scalars/row, {} muls/row and {} peak bytes/row analytic",
+            p.arch,
+            fmt_duration(p.compile_seconds),
+            p.fused_steps,
+            p.dirs,
+            p.slab_per_row,
+            p.muls_per_row,
+            p.peak_bytes_per_row
+        );
+    }
+    println!("| arch | batch | threads | jet exec | muls (exact) | peak bytes |");
+    println!("|------|-------|---------|----------|--------------|------------|");
+    for c in &report.cells {
+        println!(
+            "| {} | {} | {} | {} | {} | {} |",
+            c.arch,
+            c.batch,
+            c.threads,
+            fmt_duration(c.jet_seconds),
+            c.jet_muls,
+            c.jet_peak_bytes
+        );
+    }
+    write_jet_grid_json(&out, &cfg, &report)?;
+    eprintln!("jet grid written to {out}");
     Ok(())
 }
 
@@ -437,14 +509,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `dof serve --engine rust`: the pure-Rust DOF engine as a sharded serving
+/// `dof serve --engine rust`: the pure-Rust engines as a sharded serving
 /// backend with **compile-once execution** — the operator program is keyed
-/// into the global plan cache at spawn, and every batch the coordinator
-/// cuts executes that precompiled program per shard (slab storage from the
-/// process-wide depot; scoped workers' thread-locals would die with each
-/// batch's parallel region).
+/// into the global plan/jet cache at spawn, and every batch the coordinator
+/// cuts executes that precompiled program per shard (exact-fit slabs from
+/// the program-keyed pool; scoped workers' thread-locals would die with
+/// each batch's parallel region). `--order 4` serves the biharmonic jet
+/// operator instead of the second-order DOF elliptic.
 fn serve_rust_backend(args: &Args) -> Result<(ModelServer, usize)> {
-    let n = args.usize_or("n", 64);
+    let order = args.usize_or("order", 2);
+    let n = args.usize_or("n", if order == 4 { 8 } else { 64 });
     let seed = args.u64_or("seed", 0);
     let model = Mlp::init(
         MlpSpec {
@@ -457,34 +531,70 @@ fn serve_rust_backend(args: &Args) -> Result<(ModelServer, usize)> {
         seed,
     );
     let graph = model.to_graph();
-    let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed });
     let pool = Pool::from_env();
     let batch = args.usize_or("batch", 32);
-    let t0 = std::time::Instant::now();
-    let program = op.dof_program(&graph);
-    println!(
-        "serving rust DOF engine (N={n}, rank {}, batch {batch}, {} threads)",
-        op.rank(),
-        pool.threads()
-    );
-    println!(
-        "compiled operator program in {}: {} steps ({} fused), {} slab scalars/row, \
-         {} muls/row analytic",
-        fmt_duration(t0.elapsed().as_secs_f64()),
-        program.steps().len(),
-        program.fused_steps(),
-        program.slab_per_row(),
-        program.cost(1).muls
-    );
-    let server = ModelServer::spawn_dof(
-        graph,
-        op.dof_engine(),
-        BatchPolicy {
-            capacity: batch,
-            max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)),
-        },
-        pool,
-        parallel::DEFAULT_SHARD_ROWS,
-    );
-    Ok((server, n))
+    let policy = BatchPolicy {
+        capacity: batch,
+        max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)),
+    };
+    match order {
+        2 => {
+            let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed });
+            let t0 = std::time::Instant::now();
+            let program = op.dof_program(&graph);
+            println!(
+                "serving rust DOF engine (N={n}, rank {}, batch {batch}, {} threads)",
+                op.rank(),
+                pool.threads()
+            );
+            println!(
+                "compiled operator program in {}: {} steps ({} fused), {} slab scalars/row, \
+                 {} muls/row analytic",
+                fmt_duration(t0.elapsed().as_secs_f64()),
+                program.steps().len(),
+                program.fused_steps(),
+                program.slab_per_row(),
+                program.cost(1).muls
+            );
+            let server = ModelServer::spawn_dof(
+                graph,
+                op.dof_engine(),
+                policy,
+                pool,
+                parallel::DEFAULT_SHARD_ROWS,
+            );
+            Ok((server, n))
+        }
+        4 => {
+            let op = HigherOrderOperator::from_spec(HigherOrderSpec::Biharmonic { d: n });
+            let t0 = std::time::Instant::now();
+            let program = op.jet_program(&graph);
+            println!(
+                "serving rust jet engine (N={n}, Δ² with {} directions × order 4, \
+                 batch {batch}, {} threads)",
+                op.directions(),
+                pool.threads()
+            );
+            println!(
+                "compiled jet program in {}: {} steps ({} fused), {} slab scalars/row, \
+                 {} muls/row analytic",
+                fmt_duration(t0.elapsed().as_secs_f64()),
+                program.steps().len(),
+                program.fused_steps(),
+                program.slab_per_row(),
+                program.cost(1).muls
+            );
+            let server = ModelServer::spawn_jet(
+                graph,
+                op.jet_engine(),
+                policy,
+                pool,
+                parallel::DEFAULT_SHARD_ROWS,
+            );
+            Ok((server, n))
+        }
+        other => Err(anyhow!(
+            "unsupported --order {other} for serve (2 = DOF, 4 = biharmonic jets)"
+        )),
+    }
 }

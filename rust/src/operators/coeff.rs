@@ -1,6 +1,8 @@
-//! Coefficient-matrix constructions (Table 4 of the paper).
+//! Coefficient constructions — the single home of every operator
+//! coefficient recipe in the crate.
 //!
-//! Each experiment in §3 pairs an architecture with a coefficient matrix:
+//! Second order (Table 4 of the paper): each experiment in §3 pairs an
+//! architecture with a coefficient matrix:
 //!
 //! | structure         | elliptic                     | low-rank                     | general            |
 //! |-------------------|------------------------------|------------------------------|--------------------|
@@ -8,7 +10,14 @@
 //! | MLP w/ sparsity   | block-diag Gram (4×4, k≤4)   | block-diag Gram (4×4, k≤2)   | block-diag `δ s`   |
 //!
 //! with `α, σ ~ N(0,1)`, `s_0 = −1`, `s_i = 1` otherwise.
+//!
+//! Higher order (the jet subsystem): [`HigherOrderSpec`] builds the
+//! symbolic term lists for the order-3/4 operators (biharmonic plate,
+//! Swift–Hohenberg linearization, Kuramoto–Sivashinsky linear part) that
+//! [`super::higher::HigherOrderOperator`] turns into polarization bases —
+//! declarative specs instead of ad-hoc term assembly at call sites.
 
+use crate::jet::{biharmonic_terms, laplacian_terms, JetTerm};
 use crate::tensor::{matmul, Tensor};
 use crate::util::Xoshiro256;
 
@@ -128,6 +137,66 @@ impl CoeffSpec {
     }
 }
 
+/// Declarative description of a higher-order (order-3/4) operator;
+/// `build()` materializes the symbolic term list plus the zeroth-order
+/// coefficient. The derivative terms are assembled into jet directions by
+/// [`crate::jet::DirectionBasis::from_terms`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HigherOrderSpec {
+    /// Biharmonic plate operator `Δ²` on `R^d` — order 4, elliptic,
+    /// exactly `d²` jet directions.
+    Biharmonic { d: usize },
+    /// Stationary linearization of Swift–Hohenberg about `u = 0`:
+    /// `L = r − (1+Δ)² = −Δ² − 2Δ + (r−1)` — order 4 with a second-order
+    /// tail and a constant term.
+    SwiftHohenberg { d: usize, r: f64 },
+    /// Linear part of the Kuramoto–Sivashinsky operator (gradient form):
+    /// `L = −Δ² − Δ` — order 4, destabilizing second-order tail.
+    KuramotoSivashinsky { d: usize },
+}
+
+impl HigherOrderSpec {
+    /// Total dimension `N`.
+    pub fn n(&self) -> usize {
+        match *self {
+            HigherOrderSpec::Biharmonic { d }
+            | HigherOrderSpec::SwiftHohenberg { d, .. }
+            | HigherOrderSpec::KuramotoSivashinsky { d } => d,
+        }
+    }
+
+    /// Operator order (the jet order `k`).
+    pub fn order(&self) -> usize {
+        4
+    }
+
+    /// Human-readable operator class, for bench tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            HigherOrderSpec::Biharmonic { .. } => "biharmonic",
+            HigherOrderSpec::SwiftHohenberg { .. } => "swift-hohenberg",
+            HigherOrderSpec::KuramotoSivashinsky { .. } => "kuramoto-sivashinsky",
+        }
+    }
+
+    /// Materialize `(derivative terms, zeroth-order coefficient)`.
+    pub fn build(&self) -> (Vec<JetTerm>, Option<f64>) {
+        match *self {
+            HigherOrderSpec::Biharmonic { d } => (biharmonic_terms(d, 1.0), None),
+            HigherOrderSpec::SwiftHohenberg { d, r } => {
+                let mut terms = biharmonic_terms(d, -1.0);
+                terms.extend(laplacian_terms(d, -2.0));
+                (terms, Some(r - 1.0))
+            }
+            HigherOrderSpec::KuramotoSivashinsky { d } => {
+                let mut terms = biharmonic_terms(d, -1.0);
+                terms.extend(laplacian_terms(d, -1.0));
+                (terms, None)
+            }
+        }
+    }
+}
+
 /// The exact Table 4 specs for the MLP experiments (N = 64).
 pub fn table4_mlp(seed: u64) -> [(&'static str, CoeffSpec); 3] {
     [
@@ -203,6 +272,19 @@ mod tests {
         assert_eq!(table4_mlp(3)[1].1.expected_rank(), 32);
         // Sparse low-rank: 16 blocks × rank 2 = 32.
         assert_eq!(table4_sparse(3)[1].1.expected_rank(), 32);
+    }
+
+    #[test]
+    fn higher_order_specs_build() {
+        let (terms, c) = HigherOrderSpec::Biharmonic { d: 3 }.build();
+        assert_eq!(terms.len(), 3 + 3); // d pure powers + C(3,2) pairs
+        assert!(c.is_none());
+        let (terms, c) = HigherOrderSpec::SwiftHohenberg { d: 2, r: 0.3 }.build();
+        // 2 + 1 biharmonic terms + 2 laplacian terms, c = r − 1.
+        assert_eq!(terms.len(), 3 + 2);
+        assert!((c.unwrap() - (0.3 - 1.0)).abs() < 1e-15);
+        assert_eq!(HigherOrderSpec::KuramotoSivashinsky { d: 2 }.order(), 4);
+        assert_eq!(HigherOrderSpec::Biharmonic { d: 5 }.n(), 5);
     }
 
     #[test]

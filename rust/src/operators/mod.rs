@@ -1,11 +1,29 @@
-//! Second-order differential operators `L[φ] = Σ a_ij ∂²_ij φ + Σ b_i ∂_i φ
-//! + c φ` — coefficient constructions (Table 4) and a cached operator
-//! wrapper that pairs a coefficient spec with its `LᵀDL` decomposition and
-//! hands out configured engines.
+//! Differential operators — coefficient constructions and cached operator
+//! wrappers that pair a spec with its precomputed engine seed.
+//!
+//! * [`Operator`] — second order, `L[φ] = Σ a_ij ∂²_ij φ + Σ b_i ∂_i φ +
+//!   c φ`, cached `A = LᵀDL`, hands out DOF/Hessian engines;
+//! * [`higher::HigherOrderOperator`] — order 3/4 (biharmonic class),
+//!   cached polarization [`crate::jet::DirectionBasis`], hands out jet
+//!   engines.
+//!
+//! **Coefficient contract** (the single statement of it — engine and field
+//! docs refer here): every coefficient in this release — `A`, `b`, `c`,
+//! and the higher-order term list — is **constant in `x`**. The engines
+//! exploit this: `b` is seeded once into the scalar stream at the input
+//! nodes (or, for jets, rides as one extra direction weighted on `c₁`) and
+//! `c·φ` is applied once at the output; none of them is re-evaluated per
+//! collocation point. Variable coefficients `a(x), b(x)` would need
+//! per-point seeding — a ROADMAP follow-up, not a supported mode. All
+//! coefficient *constructions* live in [`coeff`]; build operators from a
+//! [`CoeffSpec`] / [`coeff::HigherOrderSpec`] rather than assembling
+//! matrices or term lists ad hoc.
 
 pub mod coeff;
+pub mod higher;
 
-pub use coeff::{table4_mlp, table4_sparse, CoeffSpec};
+pub use coeff::{table4_mlp, table4_sparse, CoeffSpec, HigherOrderSpec};
+pub use higher::HigherOrderOperator;
 
 use std::sync::Arc;
 
@@ -20,9 +38,11 @@ use crate::tensor::Tensor;
 pub struct Operator {
     /// The symmetric coefficient matrix `A`.
     pub a: Tensor,
-    /// First-order coefficients `b` (constant over x in this release).
+    /// First-order coefficients `b ∈ R^N` (see the module-level
+    /// coefficient contract: constant in `x`, seeded once at the inputs).
     pub b: Option<Vec<f64>>,
-    /// Zeroth-order coefficient `c`.
+    /// Zeroth-order coefficient `c` (same contract; applied once at the
+    /// output).
     pub c: Option<f64>,
     /// Cached `A = Lᵀ D L`.
     pub ldl: LdlDecomposition,

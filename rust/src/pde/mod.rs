@@ -10,7 +10,10 @@
 pub mod problems;
 pub mod trainer;
 
-pub use problems::{fokker_planck, heat_equation, klein_gordon, poisson};
+pub use problems::{
+    biharmonic_plate, fokker_planck, heat_equation, klein_gordon, poisson, swift_hohenberg,
+    HigherOrderProblem,
+};
 pub use trainer::{PinnTrainer, TrainReport};
 
 use crate::operators::Operator;
@@ -100,6 +103,49 @@ impl ExactSolution {
         }
     }
 
+    /// Arbitrary mixed partial `∂^{|axes|} u* / ∂z_axes` — needed by the
+    /// manufactured sources of the higher-order (jet) problems. Closed
+    /// forms exist for the sine-family solutions (the m-th derivative of
+    /// `sin` cycles through `sin, cos, −sin, −cos`); the Gaussian supports
+    /// orders ≤ 2 via [`Self::gradient`]/[`Self::hessian`] and panics
+    /// above (higher-order problems ship with sine solutions).
+    pub fn partial(&self, axes: &[usize], z: &[f64]) -> f64 {
+        let m = axes.len();
+        if m == 0 {
+            return self.value(z);
+        }
+        fn sine_partial(w: &[f64], phase: f64, amp: f64, axes: &[usize], z: &[f64]) -> f64 {
+            let arg: f64 = w.iter().zip(z).map(|(&a, &b)| a * b).sum::<f64>() + phase;
+            let m = axes.len();
+            // d^m/darg^m sin(arg), cycling with period 4.
+            let trig = match m % 4 {
+                0 => arg.sin(),
+                1 => arg.cos(),
+                2 => -arg.sin(),
+                _ => -arg.cos(),
+            };
+            let wprod: f64 = axes.iter().map(|&a| w[a]).product();
+            amp * wprod * trig
+        }
+        match self {
+            ExactSolution::SineWave { w, phase, amp } => {
+                sine_partial(w, *phase, *amp, axes, z)
+            }
+            ExactSolution::SumOfSines(terms) => terms
+                .iter()
+                .map(|(w, phase, amp)| sine_partial(w, *phase, *amp, axes, z))
+                .sum(),
+            ExactSolution::Gaussian { .. } => match m {
+                1 => self.gradient(z)[axes[0]],
+                2 => self.hessian(z)[axes[0] * self.dim() + axes[1]],
+                _ => panic!(
+                    "Gaussian exact solutions support derivatives up to order 2; \
+                     use a sine-family solution for order-{m} problems"
+                ),
+            },
+        }
+    }
+
     /// `∇²u*(z)` as a flat row-major `n×n`.
     pub fn hessian(&self, z: &[f64]) -> Vec<f64> {
         let n = self.dim();
@@ -149,6 +195,18 @@ impl ExactSolution {
     }
 }
 
+/// Evaluate a pointwise scalar function over the rows of `z`, returning
+/// `[batch, 1]` — the shared body of every `source_batch`/`exact_batch`
+/// (second-order and higher-order problems alike).
+pub(crate) fn batch_column(z: &Tensor, f: impl Fn(&[f64]) -> f64) -> Tensor {
+    let batch = z.dims()[0];
+    let mut out = Tensor::zeros(&[batch, 1]);
+    for b in 0..batch {
+        out.set(b, 0, f(z.row(b)));
+    }
+    out
+}
+
 /// A PDE problem `L[u] = f` on a box, with manufactured `f = L[u*]`.
 pub struct PdeProblem {
     pub name: String,
@@ -179,22 +237,12 @@ impl PdeProblem {
 
     /// Batched source, `[batch, 1]`.
     pub fn source_batch(&self, z: &Tensor) -> Tensor {
-        let batch = z.dims()[0];
-        let mut f = Tensor::zeros(&[batch, 1]);
-        for b in 0..batch {
-            f.set(b, 0, self.source(z.row(b)));
-        }
-        f
+        batch_column(z, |row| self.source(row))
     }
 
     /// Exact solution values, `[batch, 1]`.
     pub fn exact_batch(&self, z: &Tensor) -> Tensor {
-        let batch = z.dims()[0];
-        let mut u = Tensor::zeros(&[batch, 1]);
-        for b in 0..batch {
-            u.set(b, 0, self.exact.value(z.row(b)));
-        }
-        u
+        batch_column(z, |row| self.exact.value(row))
     }
 }
 
@@ -245,6 +293,28 @@ mod tests {
             sigma: 0.8,
         };
         fd_check_solution(&sol, &[0.1, 0.9]);
+    }
+
+    #[test]
+    fn partial_matches_gradient_hessian_and_cycles() {
+        let sol = ExactSolution::SineWave {
+            w: vec![1.5, -0.7, 2.0],
+            phase: 0.3,
+            amp: 1.2,
+        };
+        let z = [0.2, -0.4, 0.9];
+        let g = sol.gradient(&z);
+        let h = sol.hessian(&z);
+        for i in 0..3 {
+            assert!((sol.partial(&[i], &z) - g[i]).abs() < 1e-14);
+            for j in 0..3 {
+                assert!((sol.partial(&[i, j], &z) - h[i * 3 + j]).abs() < 1e-14);
+            }
+        }
+        // 4th derivative of sin is sin: ∂⁴ along one axis scales by w⁴.
+        let p4 = sol.partial(&[0, 0, 0, 0], &z);
+        let w0 = 1.5f64;
+        assert!((p4 - w0.powi(4) * sol.value(&z)).abs() < 1e-12);
     }
 
     #[test]

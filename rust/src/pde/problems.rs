@@ -3,7 +3,7 @@
 //! "the time variable is comprised in x".
 
 use super::{ExactSolution, PdeProblem};
-use crate::operators::Operator;
+use crate::operators::{HigherOrderOperator, HigherOrderSpec, Operator};
 use crate::tensor::{matmul, Tensor};
 use crate::train::BoxSampler;
 use crate::util::Xoshiro256;
@@ -102,6 +102,87 @@ pub fn fokker_planck(d: usize, seed: u64) -> PdeProblem {
     }
 }
 
+// ---- higher-order (jet) problems -----------------------------------------
+
+/// A PDE problem `L[u] = f` whose operator is third/fourth order —
+/// evaluated by the jet subsystem instead of the second-order engines.
+/// The source is manufactured from the closed-form exact solution via
+/// [`ExactSolution::partial`], so it is exact to machine precision.
+pub struct HigherOrderProblem {
+    pub name: String,
+    pub operator: HigherOrderOperator,
+    pub exact: ExactSolution,
+    pub domain: BoxSampler,
+}
+
+impl HigherOrderProblem {
+    /// Exact source term `f(z) = L[u*](z)` from the closed forms.
+    pub fn source(&self, z: &[f64]) -> f64 {
+        let mut val = 0.0;
+        for term in &self.operator.terms {
+            val += term.coef * self.exact.partial(&term.axes, z);
+        }
+        if let Some(ref b) = self.operator.b {
+            let g = self.exact.gradient(z);
+            val += b.iter().zip(&g).map(|(&bi, &gi)| bi * gi).sum::<f64>();
+        }
+        if let Some(c) = self.operator.c {
+            val += c * self.exact.value(z);
+        }
+        val
+    }
+
+    /// Batched source, `[batch, 1]`.
+    pub fn source_batch(&self, z: &Tensor) -> Tensor {
+        super::batch_column(z, |row| self.source(row))
+    }
+
+    /// Exact solution values, `[batch, 1]`.
+    pub fn exact_batch(&self, z: &Tensor) -> Tensor {
+        super::batch_column(z, |row| self.exact.value(row))
+    }
+}
+
+/// Biharmonic plate equation `Δ²u = f` on `[0,1]^d` — the canonical
+/// fourth-order elliptic problem (Kirchhoff–Love plate bending). The jet
+/// basis needs exactly `d²` directions; for the manufactured sine solution
+/// `Δ²u* = |w|⁴·u*`.
+pub fn biharmonic_plate(d: usize) -> HigherOrderProblem {
+    let w: Vec<f64> = (0..d)
+        .map(|i| std::f64::consts::PI * (1.0 + (i % 2) as f64 * 0.5))
+        .collect();
+    HigherOrderProblem {
+        name: format!("biharmonic-plate-{d}d"),
+        operator: HigherOrderOperator::from_spec(HigherOrderSpec::Biharmonic { d }),
+        exact: ExactSolution::SineWave {
+            w,
+            phase: 0.35,
+            amp: 1.0,
+        },
+        domain: BoxSampler::unit(d),
+    }
+}
+
+/// Stationary Swift–Hohenberg linearization
+/// `(r − (1+Δ)²)u = −Δ²u − 2Δu + (r−1)u = f` on `[0,1]^d` — fourth order
+/// with a second-order tail and a constant term, the linear pattern-forming
+/// operator.
+pub fn swift_hohenberg(d: usize, r: f64) -> HigherOrderProblem {
+    let w: Vec<f64> = (0..d)
+        .map(|i| std::f64::consts::PI * (1.0 + (i % 3) as f64 * 0.25))
+        .collect();
+    HigherOrderProblem {
+        name: format!("swift-hohenberg-{d}d"),
+        operator: HigherOrderOperator::from_spec(HigherOrderSpec::SwiftHohenberg { d, r }),
+        exact: ExactSolution::SineWave {
+            w,
+            phase: 0.15,
+            amp: 0.8,
+        },
+        domain: BoxSampler::unit(d),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,6 +226,45 @@ mod tests {
             }
         }
         assert!(off > 1e-3, "diffusion matrix should be anisotropic");
+    }
+
+    #[test]
+    fn biharmonic_source_is_w4_times_u() {
+        // Δ²(sin(w·z + φ)) = |w|⁴·sin(w·z + φ) exactly.
+        let p = biharmonic_plate(3);
+        let z = [0.2, 0.7, 0.4];
+        let w = match &p.exact {
+            ExactSolution::SineWave { w, .. } => w.clone(),
+            _ => unreachable!(),
+        };
+        let w2: f64 = w.iter().map(|v| v * v).sum();
+        let want = w2 * w2 * p.exact.value(&z);
+        assert!(
+            (p.source(&z) - want).abs() < 1e-9 * want.abs().max(1.0),
+            "{} vs {want}",
+            p.source(&z)
+        );
+        assert_eq!(p.operator.order(), 4);
+        assert_eq!(p.operator.directions(), 9);
+    }
+
+    #[test]
+    fn swift_hohenberg_source_matches_symbol() {
+        // On sin(w·z+φ): L = −|w|⁴ + 2|w|² + (r−1) times u*.
+        let r = 0.25;
+        let p = swift_hohenberg(2, r);
+        let z = [0.6, 0.3];
+        let w = match &p.exact {
+            ExactSolution::SineWave { w, .. } => w.clone(),
+            _ => unreachable!(),
+        };
+        let w2: f64 = w.iter().map(|v| v * v).sum();
+        let want = (-w2 * w2 + 2.0 * w2 + (r - 1.0)) * p.exact.value(&z);
+        assert!(
+            (p.source(&z) - want).abs() < 1e-9 * want.abs().max(1.0),
+            "{} vs {want}",
+            p.source(&z)
+        );
     }
 
     #[test]

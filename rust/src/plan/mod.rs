@@ -182,40 +182,7 @@ impl OperatorProgram {
         let (actives, keeps, parent_poss) = propagate_support(graph, ldl, r, opts.sparsity);
 
         // ---- schedule with Linear→Activation fusion ---------------------
-        let mut steps: Vec<Step> = Vec::with_capacity(len);
-        let mut in_off = 0usize;
-        let mut j = 0usize;
-        while j < len {
-            let node = graph.node(j);
-            let kind = match &node.op {
-                Op::Input { dim } => {
-                    let k = StepKind::Input { in_off };
-                    in_off += *dim;
-                    k
-                }
-                Op::Linear { .. } => {
-                    // Fuse iff the linear's only consumer is the next node
-                    // and that node is an activation (consumer ids are > j,
-                    // so τ(j) == j+1 pins the consumer set to {j+1}).
-                    let fusable = j + 1 < len
-                        && tau[j] == j + 1
-                        && matches!(graph.node(j + 1).op, Op::Activation { .. })
-                        && graph.node(j + 1).inputs == [j];
-                    StepKind::Linear {
-                        fused_act: if fusable { Some(j + 1) } else { None },
-                    }
-                }
-                Op::Activation { .. } => StepKind::Activation,
-                Op::Slice { .. } => StepKind::Slice,
-                Op::Add => StepKind::Add,
-                Op::Mul => StepKind::Mul,
-                Op::SumReduce => StepKind::SumReduce,
-                Op::Concat => StepKind::Concat,
-            };
-            let fused = matches!(kind, StepKind::Linear { fused_act: Some(_) });
-            steps.push(Step { node: j, kind });
-            j += if fused { 2 } else { 1 };
-        }
+        let steps = build_schedule(graph, &tau);
 
         // ---- static slot assignment (per-row units) ---------------------
         let mut nodes: Vec<NodePlan> = (0..len)
@@ -402,6 +369,50 @@ impl OperatorProgram {
     pub fn identity_seed(&self) -> &Tensor {
         self.identity_seed.get_or_init(|| Tensor::eye(self.n))
     }
+}
+
+/// Build the step schedule for `graph`: the topological node walk with
+/// `Linear → Activation` pairs fused into single steps. Shared by
+/// [`OperatorProgram::compile`] and the jet compiler
+/// ([`crate::jet::JetProgram`]) so both subsystems dispatch the same fused
+/// MLP hot path.
+pub(crate) fn build_schedule(graph: &Graph, tau: &[usize]) -> Vec<Step> {
+    let len = graph.len();
+    let mut steps: Vec<Step> = Vec::with_capacity(len);
+    let mut in_off = 0usize;
+    let mut j = 0usize;
+    while j < len {
+        let node = graph.node(j);
+        let kind = match &node.op {
+            Op::Input { dim } => {
+                let k = StepKind::Input { in_off };
+                in_off += *dim;
+                k
+            }
+            Op::Linear { .. } => {
+                // Fuse iff the linear's only consumer is the next node
+                // and that node is an activation (consumer ids are > j,
+                // so τ(j) == j+1 pins the consumer set to {j+1}).
+                let fusable = j + 1 < len
+                    && tau[j] == j + 1
+                    && matches!(graph.node(j + 1).op, Op::Activation { .. })
+                    && graph.node(j + 1).inputs == [j];
+                StepKind::Linear {
+                    fused_act: if fusable { Some(j + 1) } else { None },
+                }
+            }
+            Op::Activation { .. } => StepKind::Activation,
+            Op::Slice { .. } => StepKind::Slice,
+            Op::Add => StepKind::Add,
+            Op::Mul => StepKind::Mul,
+            Op::SumReduce => StepKind::SumReduce,
+            Op::Concat => StepKind::Concat,
+        };
+        let fused = matches!(kind, StepKind::Linear { fused_act: Some(_) });
+        steps.push(Step { node: j, kind });
+        j += if fused { 2 } else { 1 };
+    }
+    steps
 }
 
 /// Exact per-row FLOP accumulation, mirroring the reference interpreter's
@@ -692,22 +703,22 @@ fn propagate_support(
 
 // ---- fingerprinting ------------------------------------------------------
 
-/// FNV-1a 64-bit accumulator.
-struct Fnv(u64);
+/// FNV-1a 64-bit accumulator (shared with the jet subsystem's key).
+pub(crate) struct Fnv(pub(crate) u64);
 
 impl Fnv {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Fnv(0xcbf29ce484222325)
     }
 
-    fn u64(&mut self, v: u64) {
+    pub(crate) fn u64(&mut self, v: u64) {
         for b in v.to_le_bytes() {
             self.0 ^= b as u64;
             self.0 = self.0.wrapping_mul(0x100000001b3);
         }
     }
 
-    fn bits(&mut self, it: impl Iterator<Item = bool>) {
+    pub(crate) fn bits(&mut self, it: impl Iterator<Item = bool>) {
         let mut word = 0u64;
         let mut nb = 0u32;
         for b in it {
@@ -737,10 +748,10 @@ fn act_tag(act: Act) -> u64 {
     }
 }
 
-/// Value-independent structural fingerprint of `(graph, ldl, opts)` — the
-/// cache key under which a compiled program is valid.
-pub fn plan_key(graph: &Graph, ldl: &LdlDecomposition, opts: PlanOptions) -> PlanKey {
-    let mut h = Fnv::new();
+/// Hash the value-independent *structure* of a graph into `h`: op kinds,
+/// dims, wiring, activation tags, and weight zero patterns — never weight
+/// values. Shared by [`plan_key`] and the jet subsystem's program key.
+pub(crate) fn hash_graph_structure(h: &mut Fnv, graph: &Graph) {
     h.u64(graph.len() as u64);
     for node in graph.nodes() {
         h.u64(node.dim as u64);
@@ -775,6 +786,13 @@ pub fn plan_key(graph: &Graph, ldl: &LdlDecomposition, opts: PlanOptions) -> Pla
             Op::Concat => h.u64(17),
         }
     }
+}
+
+/// Value-independent structural fingerprint of `(graph, ldl, opts)` — the
+/// cache key under which a compiled program is valid.
+pub fn plan_key(graph: &Graph, ldl: &LdlDecomposition, opts: PlanOptions) -> PlanKey {
+    let mut h = Fnv::new();
+    hash_graph_structure(&mut h, graph);
     h.u64(ldl.n as u64);
     h.u64(ldl.rank() as u64);
     h.bits(ldl.l.data().iter().map(|&v| v != 0.0));

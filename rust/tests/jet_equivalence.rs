@@ -1,0 +1,363 @@
+//! The jet subsystem's contract, tested differentially:
+//!
+//! * **order-2 cross-check** — the jet path at `k = 2` (directions = rows
+//!   of `L`, weights `2·sign` on `c₂`) reproduces the `DofEngine`
+//!   Laplacian: values bit-identical (same GEMM kernels, row-independent),
+//!   `L[φ]` to summation-order precision (the two algorithms sum the same
+//!   exact real terms in different orders — the same reason the Hessian
+//!   baseline is compared at tolerance), peak accounting comparable;
+//! * **order-4 oracle** — biharmonic `Δ²φ` against a central finite
+//!   difference of the *exactly computed* `DofEngine` Laplacian
+//!   (`Δ²φ = Σᵢ ∂²ᵢ(Δφ)`), 1e-6 relative, on both shipped architectures;
+//! * **determinism** — sharded jet execution is bit-identical (values,
+//!   `L[φ]`, output jet, FLOP counts, per-shard peak bytes) across
+//!   1/2/4/8 threads and matches the unsharded run exactly;
+//! * **planned vs interpreter** — the slab executor is bit-identical to
+//!   the retained reference interpreter (shared per-component kernels).
+
+use dof::autodiff::{DofEngine, TangentArena};
+use dof::graph::{builder::random_layers, mlp_graph, sparse_mlp_graph, Act, Graph};
+use dof::jet::{terms_from_symmetric, DirectionBasis, JetEngine, JetResult};
+use dof::operators::{HigherOrderOperator, HigherOrderSpec};
+use dof::parallel::Pool;
+use dof::tensor::Tensor;
+use dof::util::Xoshiro256;
+
+/// Laplacian jet engine at order 2: one direction per axis, weight `2` on
+/// `c₂` (so `Σᵢ 2c₂^{(i)} = Σᵢ ∂²ᵢφ = Δφ`).
+fn laplacian_jets(n: usize) -> JetEngine {
+    JetEngine::new(DirectionBasis::from_terms(
+        n,
+        &dof::jet::laplacian_terms(n, 1.0),
+        None,
+    ))
+}
+
+#[test]
+fn order2_laplacian_matches_dof_engine_mlp_across_thread_counts() {
+    let mut rng = Xoshiro256::new(3101);
+    let n = 6;
+    let g = mlp_graph(&random_layers(&[n, 20, 20, 1], &mut rng), Act::Tanh);
+    // Multi-shard batch so the 2/4/8-thread sweeps genuinely parallelize.
+    let x = Tensor::randn(&[21, n], &mut rng);
+    let jet_engine = laplacian_jets(n);
+    let dof_engine = DofEngine::new(&Tensor::eye(n));
+    let shard_rows = 8usize;
+    let jet1 = jet_engine.compute_sharded(&g, &x, &Pool::new(1), shard_rows);
+    for threads in [1usize, 2, 4, 8] {
+        let pool = Pool::new(threads);
+        let jet = jet_engine.compute_sharded(&g, &x, &pool, shard_rows);
+        let dof = dof_engine.compute_sharded(&g, &x, &pool, shard_rows);
+        // Values go through identical row-independent kernels → the two
+        // *algorithms* agree bitwise, at every thread count.
+        assert_eq!(
+            jet.values, dof.values,
+            "values must be bit-identical at {threads} threads"
+        );
+        // The jet path itself is bit-identical across thread counts
+        // (values, L[φ], jet, FLOPs, per-shard peaks).
+        assert_jet_bit_identical(&jet, &jet1, &format!("order-2, {threads} threads"));
+        // L[φ]: both sum the same exact real terms, in different orders
+        // (DOF collapses directions into one s-stream per node; jets carry
+        // per-direction c₂ and contract at the output) — equality is to
+        // float-summation order, the same reason the Hessian baseline is
+        // compared at tolerance.
+        for b in 0..21 {
+            let jv = jet.operator_values.at(b, 0);
+            let dv = dof.operator_values.at(b, 0);
+            assert!(
+                (jv - dv).abs() < 1e-10 * dv.abs().max(1.0),
+                "row {b} at {threads} threads: jet Δφ {jv} vs DOF {dv}"
+            );
+        }
+        // Peak accounting comparable: both report batch-linear per-shard
+        // footprints; the jet carries (k+1) rows per direction vs DOF's
+        // one, so the ratio is bounded by a small constant.
+        assert!(jet.peak_jet_bytes > 0 && dof.peak_tangent_bytes > 0);
+        assert!(jet.peak_jet_bytes <= 4 * dof.peak_tangent_bytes);
+    }
+}
+
+#[test]
+fn order2_laplacian_matches_dof_engine_sparse_arch() {
+    let mut rng = Xoshiro256::new(3102);
+    let blocks: Vec<_> = (0..3)
+        .map(|_| random_layers(&[2, 8, 4], &mut rng))
+        .collect();
+    let g = sparse_mlp_graph(&blocks, Act::Sin);
+    let n = 6;
+    let x = Tensor::randn(&[5, n], &mut rng).scale(0.4);
+    let jet = laplacian_jets(n).compute(&g, &x);
+    // Compare against the *dense* DOF engine: its value stream performs the
+    // same row-independent ops (§3.2 pruning only affects tangent rows).
+    let dof = DofEngine::new(&Tensor::eye(n)).dense().compute(&g, &x);
+    assert_eq!(jet.values, dof.values, "values must be bit-identical");
+    for b in 0..5 {
+        let jv = jet.operator_values.at(b, 0);
+        let dv = dof.operator_values.at(b, 0);
+        assert!(
+            (jv - dv).abs() < 1e-10 * dv.abs().max(1.0),
+            "row {b}: jet Δφ {jv} vs DOF {dv}"
+        );
+    }
+}
+
+#[test]
+fn order2_general_operator_matches_dof_engine() {
+    // Full polarization at order 2: random symmetric A as term list.
+    let mut rng = Xoshiro256::new(3103);
+    let n = 5;
+    let g = mlp_graph(&random_layers(&[n, 14, 1], &mut rng), Act::Tanh);
+    let x = Tensor::randn(&[4, n], &mut rng);
+    let b = Tensor::randn(&[n, n], &mut rng);
+    let a = b.add(&b.transpose()).scale(0.5);
+    let basis = DirectionBasis::from_terms(n, &terms_from_symmetric(&a), None);
+    let jet = JetEngine::new(basis).compute(&g, &x);
+    let dof = DofEngine::new(&a).compute(&g, &x);
+    for bi in 0..4 {
+        let jv = jet.operator_values.at(bi, 0);
+        let dv = dof.operator_values.at(bi, 0);
+        assert!(
+            (jv - dv).abs() < 1e-9 * dv.abs().max(1.0),
+            "row {bi}: jet {jv} vs DOF {dv}"
+        );
+    }
+}
+
+/// FD oracle for `Δ²φ`: second central difference of the exactly computed
+/// `DofEngine` Laplacian, `Δ²φ(x) ≈ Σᵢ [Δφ(x+heᵢ) − 2Δφ(x) + Δφ(x−heᵢ)]/h²`.
+/// Differencing an exact smooth quantity keeps the error at
+/// `O(h²) + O(ε/h²)` ≈ 1e-8 for `h = 1e-4`.
+fn fd_biharmonic(g: &Graph, x: &[f64]) -> f64 {
+    let n = x.len();
+    let eng = DofEngine::new(&Tensor::eye(n));
+    let lap = |z: &[f64]| -> f64 {
+        eng.compute(g, &Tensor::from_vec(&[1, n], z.to_vec()))
+            .operator_values
+            .item()
+    };
+    let h = 1e-4;
+    let center = lap(x);
+    let mut out = 0.0;
+    for i in 0..n {
+        let mut zp = x.to_vec();
+        let mut zm = x.to_vec();
+        zp[i] += h;
+        zm[i] -= h;
+        out += (lap(&zp) - 2.0 * center + lap(&zm)) / (h * h);
+    }
+    out
+}
+
+#[test]
+fn biharmonic_matches_fd_oracle_mlp() {
+    let mut rng = Xoshiro256::new(3104);
+    let n = 4;
+    let g = mlp_graph(&random_layers(&[n, 12, 12, 1], &mut rng), Act::Tanh);
+    let op = HigherOrderOperator::from_spec(HigherOrderSpec::Biharmonic { d: n });
+    let engine = op.jet_engine();
+    let x = Tensor::randn(&[3, n], &mut rng).scale(0.5);
+    let res = engine.compute(&g, &x);
+    for b in 0..3 {
+        let got = res.operator_values.at(b, 0);
+        let want = fd_biharmonic(&g, x.row(b));
+        assert!(
+            (got - want).abs() < 1e-6 * want.abs().max(1.0),
+            "row {b}: jet Δ²φ {got} vs FD oracle {want}"
+        );
+    }
+}
+
+#[test]
+fn biharmonic_matches_fd_oracle_sparse_arch() {
+    let mut rng = Xoshiro256::new(3105);
+    let blocks: Vec<_> = (0..2)
+        .map(|_| random_layers(&[2, 8, 3], &mut rng))
+        .collect();
+    let g = sparse_mlp_graph(&blocks, Act::Tanh);
+    let n = 4;
+    let op = HigherOrderOperator::from_spec(HigherOrderSpec::Biharmonic { d: n });
+    let engine = op.jet_engine();
+    let x = Tensor::randn(&[2, n], &mut rng).scale(0.4);
+    let res = engine.compute(&g, &x);
+    for b in 0..2 {
+        let got = res.operator_values.at(b, 0);
+        let want = fd_biharmonic(&g, x.row(b));
+        assert!(
+            (got - want).abs() < 1e-6 * want.abs().max(1.0),
+            "row {b}: jet Δ²φ {got} vs FD oracle {want}"
+        );
+    }
+}
+
+#[test]
+fn mixed_third_and_fourth_order_terms_match_nested_oracle() {
+    // L = ∂³/∂x₀²∂x₁ — oracle: first central difference over x₁ of the
+    // exactly computed ∂²₀₀φ (DofEngine with A = e₀e₀ᵀ).
+    let mut rng = Xoshiro256::new(3106);
+    let n = 3;
+    let g = mlp_graph(&random_layers(&[n, 10, 1], &mut rng), Act::Sin);
+    let basis = DirectionBasis::from_terms(
+        n,
+        &[dof::jet::JetTerm::new(&[0, 0, 1], 1.0)],
+        None,
+    );
+    let engine = JetEngine::new(basis);
+    let x = Tensor::randn(&[2, n], &mut rng).scale(0.5);
+    let res = engine.compute(&g, &x);
+    let mut a00 = Tensor::zeros(&[n, n]);
+    a00.set(0, 0, 1.0);
+    let d00 = DofEngine::new(&a00);
+    let h = 1e-5;
+    for b in 0..2 {
+        let mut zp = x.row(b).to_vec();
+        let mut zm = x.row(b).to_vec();
+        zp[1] += h;
+        zm[1] -= h;
+        let fp = d00
+            .compute(&g, &Tensor::from_vec(&[1, n], zp))
+            .operator_values
+            .item();
+        let fm = d00
+            .compute(&g, &Tensor::from_vec(&[1, n], zm))
+            .operator_values
+            .item();
+        let want = (fp - fm) / (2.0 * h);
+        let got = res.operator_values.at(b, 0);
+        assert!(
+            (got - want).abs() < 1e-6 * want.abs().max(1.0),
+            "row {b}: jet ∂³₀₀₁φ {got} vs oracle {want}"
+        );
+    }
+}
+
+#[test]
+fn swift_hohenberg_problem_source_consistency() {
+    // End-to-end: represent the exact sine solution as a graph
+    // (Linear → Sin → Linear) and check the jet-computed L_SH[u*] equals
+    // the manufactured source to near machine precision.
+    let d = 3;
+    let prob = dof::pde::swift_hohenberg(d, 0.3);
+    let (w, phase, amp) = match &prob.exact {
+        dof::pde::ExactSolution::SineWave { w, phase, amp } => (w.clone(), *phase, *amp),
+        _ => unreachable!(),
+    };
+    let mut g = Graph::new();
+    let xin = g.input(d);
+    let lin = g.linear(xin, Tensor::from_vec(&[1, d], w), vec![phase]);
+    let act = g.activation(lin, Act::Sin);
+    g.linear(act, Tensor::from_vec(&[1, 1], vec![amp]), vec![0.0]);
+    let x = Tensor::rand_uniform(&[5, d], 0.0, 1.0, &mut Xoshiro256::new(3107));
+    let res = prob.operator.jet_engine().compute(&g, &x);
+    let f = prob.source_batch(&x);
+    for b in 0..5 {
+        let got = res.operator_values.at(b, 0);
+        let want = f.at(b, 0);
+        assert!(
+            (got - want).abs() < 1e-9 * want.abs().max(1.0),
+            "row {b}: L_SH[u*] {got} vs manufactured f {want}"
+        );
+    }
+}
+
+fn assert_jet_bit_identical(a: &JetResult, b: &JetResult, what: &str) {
+    assert_eq!(a.values, b.values, "{what}: values differ");
+    assert_eq!(
+        a.operator_values, b.operator_values,
+        "{what}: L[φ] differs"
+    );
+    assert_eq!(a.out_jet.data, b.out_jet.data, "{what}: output jet differs");
+    assert_eq!(a.cost, b.cost, "{what}: FLOP counts differ");
+    assert_eq!(
+        a.peak_jet_bytes, b.peak_jet_bytes,
+        "{what}: peak jet bytes differ"
+    );
+}
+
+#[test]
+fn planned_matches_interpreter_bitwise() {
+    let mut rng = Xoshiro256::new(3108);
+    let n = 4;
+    let g = mlp_graph(&random_layers(&[n, 10, 10, 1], &mut rng), Act::Tanh);
+    let x = Tensor::randn(&[6, n], &mut rng);
+    let op = HigherOrderOperator::from_spec(HigherOrderSpec::SwiftHohenberg { d: n, r: 0.2 });
+    let engine = op.jet_engine();
+    let planned = engine.compute(&g, &x);
+    let reference = engine.compute_with_arena(&g, &x, &mut TangentArena::new());
+    assert_jet_bit_identical(&planned, &reference, "mlp swift-hohenberg");
+}
+
+#[test]
+fn sharded_jet_bit_identical_across_thread_counts() {
+    let mut rng = Xoshiro256::new(3109);
+    let n = 4;
+    // Awkward batch: short last shard exercises per-shard slab keying.
+    let g = mlp_graph(&random_layers(&[n, 12, 1], &mut rng), Act::Tanh);
+    let x = Tensor::randn(&[21, n], &mut rng).scale(0.5);
+    let op = HigherOrderOperator::from_spec(HigherOrderSpec::Biharmonic { d: n });
+    let engine = op.jet_engine();
+    let program = engine.plan(&g);
+    let shard_rows = 8usize;
+    let reference = engine.compute_with_arena(&g, &x, &mut TangentArena::new());
+    let base = engine.execute_sharded(&program, &g, &x, &Pool::new(1), shard_rows);
+    // Per-row arithmetic is row-independent → sharded equals unsharded
+    // bitwise; cost is exactly batch-linear; peak is per-shard.
+    assert_eq!(base.values, reference.values);
+    assert_eq!(base.operator_values, reference.operator_values);
+    assert_eq!(base.out_jet.data, reference.out_jet.data);
+    assert_eq!(base.cost, reference.cost);
+    assert_eq!(
+        base.peak_jet_bytes * 21,
+        reference.peak_jet_bytes * shard_rows as u64,
+        "per-shard peak must scale exactly with shard rows"
+    );
+    for threads in [2usize, 4, 8] {
+        let r = engine.execute_sharded(&program, &g, &x, &Pool::new(threads), shard_rows);
+        assert_jet_bit_identical(&r, &base, &format!("{threads} threads"));
+    }
+}
+
+#[test]
+fn program_analytics_match_execution_without_running() {
+    let mut rng = Xoshiro256::new(3110);
+    let n = 4;
+    let g = mlp_graph(&random_layers(&[n, 9, 9, 1], &mut rng), Act::Tanh);
+    let op = HigherOrderOperator::from_spec(HigherOrderSpec::Biharmonic { d: n });
+    let engine = op.jet_engine();
+    let program = engine.plan(&g);
+    for batch in [1usize, 3, 8] {
+        let x = Tensor::randn(&[batch, n], &mut rng);
+        let run = engine.compute_with_arena(&g, &x, &mut TangentArena::new());
+        assert_eq!(
+            program.cost(batch),
+            run.cost,
+            "analytic cost must equal the interpreter's measured count"
+        );
+        assert_eq!(
+            program.peak_jet_bytes(batch),
+            run.peak_jet_bytes,
+            "analytic peak must equal the interpreter's PeakTracker"
+        );
+    }
+}
+
+#[test]
+fn one_program_many_batches_is_bit_stable() {
+    // Compile once, execute fresh batches of varying sizes: each result
+    // must equal a fresh interpreter run (no state leaks through reused
+    // pool slabs between executions).
+    let mut rng = Xoshiro256::new(3111);
+    let blocks: Vec<_> = (0..2)
+        .map(|_| random_layers(&[2, 6, 3], &mut rng))
+        .collect();
+    let g = sparse_mlp_graph(&blocks, Act::Sin);
+    let op = HigherOrderOperator::from_spec(HigherOrderSpec::KuramotoSivashinsky { d: 4 });
+    let engine = op.jet_engine();
+    let program = engine.plan(&g);
+    for i in 0..3 {
+        let x = Tensor::randn(&[3 + i, 4], &mut rng).scale(0.4);
+        let reused = engine.execute(&program, &g, &x);
+        let fresh = engine.compute_with_arena(&g, &x, &mut TangentArena::new());
+        assert_jet_bit_identical(&reused, &fresh, &format!("batch {i}"));
+    }
+}
