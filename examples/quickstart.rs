@@ -64,7 +64,9 @@ fn main() {
 
     // 5. Cross-check against the Hessian-based method (what standard
     //    AutoDiff does): identical numbers, ~2× the FLOPs, more memory.
-    //    The baseline shares the same program (metadata + cached seed).
+    //    The baseline runs on the same compiled machinery: the program
+    //    lazily holds its Hessian plan (schedule + static slab layout),
+    //    so both sides of the comparison are program-scheduled.
     let hes = op.hessian_engine().compute_with_program(&program, &graph, &x);
     let mut max_diff: f64 = 0.0;
     for b in 0..4 {

@@ -40,8 +40,8 @@
 use crate::graph::{Graph, Op};
 use crate::linalg::LdlDecomposition;
 use crate::parallel::{self, Pool};
-use crate::plan::{self, OperatorProgram, PlanOptions};
-use crate::tensor::{matmul_nt_into, Tensor};
+use crate::plan::{self, kernels, OperatorProgram, PlanOptions};
+use crate::tensor::Tensor;
 
 use super::arena::{with_program_slab, SlabKey, TangentArena};
 use super::forward_jacobian::TangentBatch;
@@ -258,12 +258,15 @@ impl DofEngine {
     }
 
     /// The **reference interpreter**: the original per-call graph walk with
-    /// arena-recycled tangent storage. The planned executor
-    /// ([`Self::execute`]) replicates this pass operation for operation;
-    /// `rust/tests/plan_equivalence.rs` asserts the two agree bit for bit
+    /// arena-recycled tangent storage and runtime liveness/FLOP accounting.
+    /// It dispatches the same shared op kernels
+    /// ([`crate::plan::kernels`]) as the planned executor
+    /// ([`Self::execute`]) — one arithmetic definition, different storage
+    /// policy — so `rust/tests/plan_equivalence.rs` and
+    /// `rust/tests/cross_engine_fuzz.rs` assert the two agree bit for bit
     /// on values, `L[φ]`, FLOP counts, and peak tangent bytes. Kept as the
     /// differential-testing oracle (and as the spec of the runtime
-    /// semantics the plan compiler precomputes).
+    /// semantics the plan compiler precomputes analytically).
     pub fn compute_with_arena(
         &self,
         graph: &Graph,
@@ -292,11 +295,6 @@ impl DofEngine {
             let node = graph.node(j);
             let st = match &node.op {
                 Op::Input { dim } => {
-                    let mut v = arena.tensor(&[batch, *dim]);
-                    for b in 0..batch {
-                        v.row_mut(b)
-                            .copy_from_slice(&x.row(b)[in_off..in_off + dim]);
-                    }
                     // Active rows: rows of L with a nonzero entry in this
                     // input's column range (the §3.2 sparsity hook).
                     let active: Vec<usize> = if self.exploit_sparsity {
@@ -311,20 +309,23 @@ impl DofEngine {
                         (0..r).collect()
                     };
                     let t = active.len();
-                    let mut g = arena.tangent(batch, t, *dim);
-                    for b in 0..batch {
-                        for (kk, &k) in active.iter().enumerate() {
-                            g.row_mut(b, kk)
-                                .copy_from_slice(&self.ldl.l.row(k)[in_off..in_off + dim]);
-                        }
-                    }
-                    let mut s = arena.tensor(&[batch, *dim]);
-                    if let Some(ref bv) = self.b {
-                        for b in 0..batch {
-                            s.row_mut(b)
-                                .copy_from_slice(&bv[in_off..in_off + dim]);
-                        }
-                    }
+                    // Scratch (non-zeroed) storage: input_seed fully assigns
+                    // all three streams.
+                    let mut v = arena.tensor_scratch(&[batch, *dim]);
+                    let mut s = arena.tensor_scratch(&[batch, *dim]);
+                    let mut g = arena.tangent_scratch(batch, t, *dim);
+                    kernels::input_seed(
+                        x,
+                        in_off,
+                        *dim,
+                        batch,
+                        self.b.as_deref(),
+                        &self.ldl.l,
+                        &active,
+                        v.data_mut(),
+                        s.data_mut(),
+                        g.data.data_mut(),
+                    );
                     in_off += dim;
                     NodeState { v, g, active, s }
                 }
@@ -332,40 +333,32 @@ impl DofEngine {
                     let p = states[node.inputs[0]].as_ref().unwrap();
                     let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
                     let t = p.active.len();
-                    // Perf (§Perf): all three streams are right-products by
-                    // Wᵀ — stack [v; s; G] into one (batch·(t+2))×in matrix
-                    // and run ONE GEMM (one W transpose, full micro-kernel
-                    // utilization on the small v/s rows).
+                    // Shared fused-linear kernel (one stacked [v; s; G] GEMM)
+                    // with arena storage: scratch (non-zeroed) buffers are
+                    // safe because the kernel fully assigns or zero-fills
+                    // every destination before reading.
                     let rows = batch * (t + 2);
-                    // Scratch (non-zeroed) storage: every element is written
-                    // by the copies below before any read. The GEMM output
-                    // stays zero-initialized — matmul_nt_into accumulates.
                     let mut stacked = arena.tensor_scratch(&[rows, in_d]);
-                    {
-                        let sd = stacked.data_mut();
-                        sd[..batch * in_d].copy_from_slice(p.v.data());
-                        sd[batch * in_d..2 * batch * in_d].copy_from_slice(p.s.data());
-                        sd[2 * batch * in_d..].copy_from_slice(p.g.data.data());
-                    }
-                    let mut out = arena.tensor(&[rows, out_d]);
-                    matmul_nt_into(stacked.data(), weight.data(), out.data_mut(), rows, in_d, out_d);
-                    cost.muls += (rows * out_d * in_d) as u64;
-                    cost.adds += (batch * t * out_d * in_d) as u64;
+                    let mut out = arena.tensor_scratch(&[rows, out_d]);
                     let mut v = arena.tensor_scratch(&[batch, out_d]);
                     let mut s = arena.tensor_scratch(&[batch, out_d]);
                     let mut g = arena.tangent_scratch(batch, t, out_d);
-                    {
-                        let od = out.data();
-                        v.data_mut().copy_from_slice(&od[..batch * out_d]);
-                        s.data_mut()
-                            .copy_from_slice(&od[batch * out_d..2 * batch * out_d]);
-                        g.data.data_mut().copy_from_slice(&od[2 * batch * out_d..]);
-                    }
-                    for b in 0..batch {
-                        for (o, &bi) in v.row_mut(b).iter_mut().zip(bias.iter()) {
-                            *o += bi;
-                        }
-                    }
+                    kernels::linear_forward(
+                        weight,
+                        bias,
+                        batch,
+                        t,
+                        p.v.data(),
+                        p.s.data(),
+                        p.g.data.data(),
+                        stacked.data_mut(),
+                        out.data_mut(),
+                        v.data_mut(),
+                        s.data_mut(),
+                        g.data.data_mut(),
+                    );
+                    cost.muls += (rows * out_d * in_d) as u64;
+                    cost.adds += (batch * t * out_d * in_d) as u64;
                     let active = p.active.clone();
                     arena.put_tensor(stacked);
                     arena.put_tensor(out);
@@ -375,43 +368,27 @@ impl DofEngine {
                     let p = states[node.inputs[0]].as_ref().unwrap();
                     let d = node.dim;
                     let t = p.active.len();
-                    let h = &p.v;
-                    // Scratch (non-zeroed): v, g, and s are each assigned in
-                    // full below (every row, every component) before reads.
+                    // Shared fused activation kernel (σ value sweep + one
+                    // fused tangent/quad pass + scalar stream), arena
+                    // storage.
                     let mut v = arena.tensor_scratch(&[batch, d]);
-                    for (dst, &src) in v.data_mut().iter_mut().zip(h.data()) {
-                        *dst = act.f(src);
-                    }
-                    // Perf (§Perf): single fused pass per tangent row —
-                    // read g once, accumulate the signed square into quad
-                    // and write the σ'-scaled value, instead of separate
-                    // quad / scale sweeps over the (large) tangent buffer.
-                    let mut g = arena.tangent_scratch(batch, t, d);
                     let mut s = arena.tensor_scratch(&[batch, d]);
-                    for b in 0..batch {
-                        let hrow = h.row(b);
-                        let df: Vec<f64> = hrow.iter().map(|&x| act.df(x)).collect();
-                        let mut quad = vec![0.0; d];
-                        for (kk, &k) in p.active.iter().enumerate() {
-                            let sign = signs[k];
-                            let src = p.g.row(b, kk);
-                            let dst = g.row_mut(b, kk);
-                            for c in 0..d {
-                                let gv = src[c];
-                                quad[c] += sign * gv * gv;
-                                dst[c] = df[c] * gv;
-                            }
-                        }
-                        cost.muls += (2 * t * d) as u64;
-                        cost.adds += (t * d) as u64;
-                        let sp = s.row_mut(b);
-                        let psr = p.s.row(b);
-                        for c in 0..d {
-                            sp[c] = act.d2f(hrow[c]) * quad[c] + df[c] * psr[c];
-                        }
-                        cost.muls += (2 * d) as u64;
-                        cost.adds += d as u64;
-                    }
+                    let mut g = arena.tangent_scratch(batch, t, d);
+                    kernels::activation_forward(
+                        *act,
+                        signs,
+                        &p.active,
+                        batch,
+                        d,
+                        p.v.data(),
+                        p.s.data(),
+                        p.g.data.data(),
+                        v.data_mut(),
+                        s.data_mut(),
+                        g.data.data_mut(),
+                    );
+                    cost.muls += (batch * (2 * t * d + 2 * d)) as u64;
+                    cost.adds += (batch * (t * d + d)) as u64;
                     NodeState {
                         v,
                         g,
@@ -504,66 +481,35 @@ impl DofEngine {
                         Op::Mul => {
                             let k = parents.len();
                             let d = node.dim;
-                            let mut v = parents[0].v.clone();
-                            for p in &parents[1..] {
-                                v = v.mul(&p.v);
-                                cost.muls += v.numel() as u64;
+                            // Shared eq. 9 product-rule kernel (incl. the
+                            // cross term) over the union-aligned tangents.
+                            let mut v = arena.tensor_scratch(&[batch, d]);
+                            let mut s = arena.tensor_scratch(&[batch, d]);
+                            let mut g = arena.tangent_scratch(batch, t, d);
+                            {
+                                let pvals: Vec<&[f64]> =
+                                    parents.iter().map(|p| p.v.data()).collect();
+                                let psums: Vec<&[f64]> =
+                                    parents.iter().map(|p| p.s.data()).collect();
+                                let arefs: Vec<&[f64]> =
+                                    aligned.iter().map(|a| a.data.data()).collect();
+                                kernels::mul_forward(
+                                    signs,
+                                    &union,
+                                    batch,
+                                    d,
+                                    &pvals,
+                                    &psums,
+                                    &arefs,
+                                    v.data_mut(),
+                                    s.data_mut(),
+                                    g.data.data_mut(),
+                                );
                             }
-                            let mut g = arena.tangent(batch, t, d);
-                            let mut s = arena.tensor(&[batch, d]);
-                            for b in 0..batch {
-                                let prows: Vec<&[f64]> =
-                                    parents.iter().map(|p| p.v.row(b)).collect();
-                                for pi in 0..k {
-                                    let mut coef = vec![1.0; d];
-                                    for (qi, pr) in prows.iter().enumerate() {
-                                        if qi != pi {
-                                            for (c, &xv) in coef.iter_mut().zip(*pr) {
-                                                *c *= xv;
-                                            }
-                                        }
-                                    }
-                                    cost.muls += ((k - 1) * d) as u64;
-                                    for kk in 0..t {
-                                        let src = aligned[pi].row(b, kk).to_vec();
-                                        let dst = g.row_mut(b, kk);
-                                        for c in 0..d {
-                                            dst[c] += coef[c] * src[c];
-                                        }
-                                    }
-                                    cost.muls += (t * d) as u64;
-                                    let srow = s.row_mut(b);
-                                    for c in 0..d {
-                                        srow[c] += coef[c] * parents[pi].s.row(b)[c];
-                                    }
-                                    cost.muls += d as u64;
-                                    for qi in (pi + 1)..k {
-                                        let mut coef2 = vec![1.0; d];
-                                        for (ri, pr) in prows.iter().enumerate() {
-                                            if ri != pi && ri != qi {
-                                                for (c, &xv) in coef2.iter_mut().zip(*pr) {
-                                                    *c *= xv;
-                                                }
-                                            }
-                                        }
-                                        let mut cross = vec![0.0; d];
-                                        for (kk, &kglob) in union.iter().enumerate() {
-                                            let sign = signs[kglob];
-                                            let gp_row = aligned[pi].row(b, kk);
-                                            let gq_row = aligned[qi].row(b, kk);
-                                            for c in 0..d {
-                                                cross[c] += sign * gp_row[c] * gq_row[c];
-                                            }
-                                        }
-                                        cost.muls += (t * d) as u64;
-                                        let srow = s.row_mut(b);
-                                        for c in 0..d {
-                                            srow[c] += 2.0 * coef2[c] * cross[c];
-                                        }
-                                        cost.muls += (2 * d) as u64;
-                                    }
-                                }
-                            }
+                            cost.muls += ((k - 1) * batch * d) as u64;
+                            cost.muls += (batch * k * ((k - 1) * d + t * d + d)) as u64;
+                            cost.muls +=
+                                (batch * (k * (k - 1) / 2) * (t * d + 2 * d)) as u64;
                             NodeState { v, g, active: union, s }
                         }
                         _ => unreachable!(),

@@ -111,16 +111,18 @@ pub fn propagate_tangent(
             let g = parent_tangents[0];
             let h = parent_vals[0]; // pre-activation values [batch, d]
             let d = node.dim;
-            let mut out = g.clone();
-            for b in 0..g.batch {
-                let hrow = h.row(b);
-                for k in 0..g.t {
-                    let row = out.row_mut(b, k);
-                    for j in 0..d {
-                        row[j] *= act.df(hrow[j]);
-                    }
-                }
-            }
+            // Shared σ'-scaling kernel (also run by the program-scheduled
+            // Hessian slab executor).
+            let mut out = TangentBatch::zeros(g.batch, g.t, d);
+            crate::plan::kernels::jac_activation(
+                *act,
+                g.batch,
+                g.t,
+                d,
+                h.data(),
+                g.data.data(),
+                out.data.data_mut(),
+            );
             // σ'(h) evaluated once per (b, j); the scaling is t·d muls per
             // batch point. We charge only the scaling (σ' itself is shared
             // with the value pass in a fused implementation).
@@ -146,35 +148,19 @@ pub fn propagate_tangent(
             out
         }
         Op::Mul => {
-            // v = Π_p v^p ⇒ g'_j = Σ_p (Π_{q≠p} v^q_j) g^p_j.
+            // v = Π_p v^p ⇒ g'_j = Σ_p (Π_{q≠p} v^q_j) g^p_j — the shared
+            // first-order product-rule kernel (also run by the
+            // program-scheduled Hessian slab executor).
             let k = parent_tangents.len();
             let batch = parent_tangents[0].batch;
             let t = parent_tangents[0].t;
             let d = node.dim;
             let mut out = TangentBatch::zeros(batch, t, d);
-            for p in 0..k {
-                // coefficient c_p[b][j] = Π_{q≠p} v^q[b][j]
-                for b in 0..batch {
-                    let mut coef = vec![1.0; d];
-                    for (q, pv) in parent_vals.iter().enumerate() {
-                        if q != p {
-                            for (c, &v) in coef.iter_mut().zip(pv.row(b)) {
-                                *c *= v;
-                            }
-                        }
-                    }
-                    cost.muls += ((k - 1) * d) as u64;
-                    for kk in 0..t {
-                        let src = parent_tangents[p].row(b, kk).to_vec();
-                        let dst = out.row_mut(b, kk);
-                        for j in 0..d {
-                            dst[j] += coef[j] * src[j];
-                        }
-                    }
-                    cost.muls += (t * d) as u64;
-                    cost.adds += (t * d) as u64;
-                }
-            }
+            let pvals: Vec<&[f64]> = parent_vals.iter().map(|v| v.data()).collect();
+            let ptans: Vec<&[f64]> = parent_tangents.iter().map(|g| g.data.data()).collect();
+            crate::plan::kernels::jac_mul(batch, t, d, &pvals, &ptans, out.data.data_mut());
+            cost.muls += (batch * k * ((k - 1) * d + t * d)) as u64;
+            cost.adds += (batch * k * t * d) as u64;
             out
         }
         Op::SumReduce => {

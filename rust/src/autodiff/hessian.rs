@@ -14,12 +14,25 @@
 //! quantity Theorem 2.2 bounds. All `∇vⁱ` must stay alive across the
 //! reverse sweep (the `∇v̄` recursion consumes them), which is why this
 //! method's peak memory exceeds `N·|V|` (Appendix D).
+//!
+//! Execution is **planned**: every `compute*` entry point fetches (or
+//! compiles) a [`crate::plan::hessian::HessianPlan`] — the shared program
+//! schedule, a static slab layout for the forward tangents and the eq. 14
+//! reverse pass, and exact analytic FLOP/peak replays — and runs the slab
+//! executor with storage from the program-keyed slab pool
+//! ([`crate::autodiff::arena::with_program_slab`]). The original per-call
+//! graph walk survives as [`HessianEngine::compute_reference`], the
+//! differential-testing oracle the planned path is asserted bit-identical
+//! to; both paths run the same shared op kernels
+//! ([`crate::plan::kernels`]).
 
 use crate::graph::{Graph, Op};
 use crate::parallel::{self, Pool};
-use crate::plan::OperatorProgram;
-use crate::tensor::{matmul, Tensor};
+use crate::plan::hessian::{execute_hessian, global_hessian_cache, HessianPlan};
+use crate::plan::{kernels, OperatorProgram};
+use crate::tensor::Tensor;
 
+use super::arena::{with_program_slab, SlabKey};
 use super::backward::backward;
 use super::forward_jacobian::{forward_with_seed, TangentBatch};
 use super::memory::PeakTracker;
@@ -85,7 +98,8 @@ impl HessianEngine {
     /// thread-count-independent, reduction is shard-ordered, and the Hessian
     /// method's per-row passes (forward Jacobian, reverse adjoints, the
     /// eq. 14 sweep) are row-independent, so results are bit-identical
-    /// across thread counts.
+    /// across thread counts. The plan is compiled once (shard-invariant)
+    /// and every shard executes it with a pool slab.
     pub fn compute_sharded(
         &self,
         graph: &Graph,
@@ -93,13 +107,14 @@ impl HessianEngine {
         pool: &Pool,
         shard_rows: usize,
     ) -> HessianResult {
-        self.execute_sharded(None, graph, x, pool, shard_rows)
+        let plan = global_hessian_cache().get_or_compile(graph);
+        self.execute_sharded_planned(&plan, graph, x, pool, shard_rows)
     }
 
     /// [`Self::compute_sharded`] over a caller-held [`OperatorProgram`]
     /// (typically shared with the DOF engine through the plan cache): the
-    /// program is compiled once and every shard reuses its metadata and
-    /// cached Jacobian seed.
+    /// program's lazily attached [`HessianPlan`] is compiled once and every
+    /// shard executes it.
     pub fn compute_sharded_with_program(
         &self,
         program: &OperatorProgram,
@@ -108,12 +123,13 @@ impl HessianEngine {
         pool: &Pool,
         shard_rows: usize,
     ) -> HessianResult {
-        self.execute_sharded(Some(program), graph, x, pool, shard_rows)
+        let plan = program.hessian_plan(graph);
+        self.execute_sharded_planned(&plan, graph, x, pool, shard_rows)
     }
 
-    fn execute_sharded(
+    fn execute_sharded_planned(
         &self,
-        program: Option<&OperatorProgram>,
+        plan: &HessianPlan,
         graph: &Graph,
         x: &Tensor,
         pool: &Pool,
@@ -125,9 +141,9 @@ impl HessianEngine {
         if ranges.len() <= 1 {
             // A 1-thread pool means genuinely serial, including the GEMMs.
             if pool.threads() == 1 {
-                return parallel::with_serial_guard(|| self.execute(program, graph, x));
+                return parallel::with_serial_guard(|| self.execute_planned(plan, graph, x));
             }
-            return self.execute(program, graph, x);
+            return self.execute_planned(plan, graph, x);
         }
         let shards = pool.run_sharded(ranges, |_, r| {
             let rows = r.end - r.start;
@@ -135,23 +151,27 @@ impl HessianEngine {
                 &[rows, nin],
                 x.data()[r.start * nin..r.end * nin].to_vec(),
             );
-            self.execute(program, graph, &xs)
+            self.execute_planned(plan, graph, &xs)
         });
         merge_hessian_shards(shards, batch)
     }
 
     /// Evaluate `L[φ]` on a batch `x: [batch, N]` of points.
+    ///
+    /// Compile-then-run wrapper: the [`HessianPlan`] comes from the keyed
+    /// [`global_hessian_cache`] (structure-keyed, so training steps and
+    /// repeated evaluation reuse it) and executes on a slab from the
+    /// program-keyed pool.
     pub fn compute(&self, graph: &Graph, x: &Tensor) -> HessianResult {
-        self.execute(None, graph, x)
+        let plan = global_hessian_cache().get_or_compile(graph);
+        self.execute_planned(&plan, graph, x)
     }
 
-    /// [`Self::compute`] as a thin executor over a shared
-    /// [`OperatorProgram`]: the program supplies validated schedule
-    /// metadata and the cached `I_N` Jacobian seed (rebuilt per call on
-    /// the plain path), and its [`crate::plan::PlanAnalytics`] carry this
-    /// method's closed-form Appendix B/D numbers so benches can report
-    /// them without executing. Measured results (values, Hessian, exact
-    /// FLOPs, peak bytes) are identical on both entry points.
+    /// [`Self::compute`] over a shared [`OperatorProgram`]: the program
+    /// lazily holds the (globally cached) [`HessianPlan`] for its graph, so
+    /// bench/serving callers that already compiled the DOF program get the
+    /// baseline on the same compiled machinery without extra plumbing.
+    /// Results are identical on both entry points.
     pub fn compute_with_program(
         &self,
         program: &OperatorProgram,
@@ -164,32 +184,49 @@ impl HessianEngine {
             "program/graph mismatch"
         );
         assert_eq!(program.node_count(), graph.len(), "program/graph mismatch");
-        self.execute(Some(program), graph, x)
+        let plan = program.hessian_plan(graph);
+        self.execute_planned(&plan, graph, x)
     }
 
-    fn execute(
-        &self,
-        program: Option<&OperatorProgram>,
-        graph: &Graph,
-        x: &Tensor,
-    ) -> HessianResult {
+    /// Execute a compiled plan with an exact-fit slab from the
+    /// program-keyed pool (the plan's key fingerprint is domain-tagged, so
+    /// Hessian slabs never alias DOF program slabs).
+    fn execute_planned(&self, plan: &HessianPlan, graph: &Graph, x: &Tensor) -> HessianResult {
+        let key = SlabKey {
+            program: plan.key().fingerprint,
+            rows: x.dims()[0],
+        };
+        with_program_slab(key, |slab| {
+            execute_hessian(
+                plan,
+                graph,
+                &self.a,
+                self.b.as_deref(),
+                self.c,
+                x,
+                slab,
+            )
+        })
+    }
+
+    /// The **reference path**: the original per-call graph walk with owned
+    /// tangent storage, runtime [`PeakTracker`] accounting, and runtime
+    /// FLOP accumulation. The planned executor replicates this pass through
+    /// the same shared kernels, so `rust/tests/cross_engine_fuzz.rs` and
+    /// the determinism suite assert the two agree bit for bit on values,
+    /// gradient, Hessian, `L[φ]`, FLOP counts, and peak tangent bytes.
+    /// Kept as the differential-testing oracle (and as the spec of the
+    /// event order the plan's analytic replays mirror).
+    pub fn compute_reference(&self, graph: &Graph, x: &Tensor) -> HessianResult {
         let n = graph.input_dim();
         assert_eq!(self.a.dims()[0], n, "A must be N×N with N = input dim");
         let batch = x.dims()[0];
         let mut peak = PeakTracker::new();
         let mut cost = Cost::zero();
 
-        // (1) + (2): forward values and full-Jacobian tangents (eq. 13),
-        // seeded with the program's cached identity when one is shared.
-        let owned_seed;
-        let seed = match program {
-            Some(p) => p.identity_seed(),
-            None => {
-                owned_seed = Tensor::eye(n);
-                &owned_seed
-            }
-        };
-        let fj = forward_with_seed(graph, x, seed);
+        // (1) + (2): forward values and full-Jacobian tangents (eq. 13).
+        let seed = Tensor::eye(n);
+        let fj = forward_with_seed(graph, x, &seed);
         cost += fj.cost;
         for t in &fj.tangents {
             peak.alloc(t.bytes());
@@ -229,49 +266,40 @@ impl HessianEngine {
                 }
                 Op::Linear { weight, .. } => {
                     let p = node.inputs[0];
-                    // ∇v̄^p += ∇v̄^j · W (linear op, no second-derivative term)
-                    let contrib = matmul(&gbar_j.data, weight);
+                    // ∇v̄^p += ∇v̄^j · W (linear op, no second-derivative
+                    // term) — shared kernel.
                     let rows = gbar_j.data.dims()[0];
+                    let in_d = weight.dims()[1];
+                    let mut contrib = TangentBatch::zeros(batch, n, in_d);
+                    kernels::hess_linear_reverse(
+                        weight,
+                        rows,
+                        gbar_j.data.data(),
+                        contrib.data.data_mut(),
+                    );
                     cost.muls += (rows * weight.dims()[0] * weight.dims()[1]) as u64;
                     cost.adds += (rows * weight.dims()[0] * weight.dims()[1]) as u64;
-                    accumulate(
-                        &mut grad_adjoint[p],
-                        TangentBatch {
-                            data: contrib,
-                            batch,
-                            t: n,
-                        },
-                        &mut peak,
-                    );
+                    accumulate(&mut grad_adjoint[p], contrib, &mut peak);
                 }
                 Op::Activation { act } => {
                     let p = node.inputs[0];
-                    let h = &fj.values[p];
-                    let gp = &fj.tangents[p];
                     let d = node.dim;
+                    // coef1 = σ'(h), coef2 = σ''(h)·v̄^j — the |T|-term of
+                    // eq. 14, shared kernel.
                     let mut contrib = TangentBatch::zeros(batch, n, d);
-                    for b in 0..batch {
-                        let hrow = h.row(b);
-                        // coef1 = σ'(h), coef2 = σ''(h)·v̄^j — shared across
-                        // tangent rows (this is the |T|-term of eq. 14).
-                        let coef1: Vec<f64> = hrow.iter().map(|&v| act.df(v)).collect();
-                        let coef2: Vec<f64> = hrow
-                            .iter()
-                            .zip(vbar_j.row(b))
-                            .map(|(&hv, &vb)| act.d2f(hv) * vb)
-                            .collect();
-                        cost.muls += d as u64; // σ''·v̄ products
-                        for k in 0..n {
-                            let gj = gbar_j.row(b, k).to_vec();
-                            let gpt = gp.row(b, k).to_vec();
-                            let dst = contrib.row_mut(b, k);
-                            for c in 0..d {
-                                dst[c] = coef1[c] * gj[c] + coef2[c] * gpt[c];
-                            }
-                        }
-                        cost.muls += (2 * n * d) as u64;
-                        cost.adds += (n * d) as u64;
-                    }
+                    kernels::hess_activation_reverse(
+                        *act,
+                        batch,
+                        n,
+                        d,
+                        fj.values[p].data(),
+                        vbar_j.data(),
+                        gbar_j.data.data(),
+                        fj.tangents[p].data.data(),
+                        contrib.data.data_mut(),
+                    );
+                    cost.muls += (batch * (d + 2 * n * d)) as u64;
+                    cost.adds += (batch * n * d) as u64;
                     accumulate(&mut grad_adjoint[p], contrib, &mut peak);
                 }
                 Op::Slice { start, len } => {
@@ -291,64 +319,34 @@ impl HessianEngine {
                 }
                 Op::Mul => {
                     let d = node.dim;
+                    let k = node.inputs.len();
+                    // First-derivative factor (Π_{q≠p} v^q) ⊙ ∇v̄^j plus the
+                    // second-derivative cross terms Σ_{q≠p} (Π_{r≠p,q} v^r)
+                    // ⊙ v̄^j ⊙ ∇v^q — shared kernel, one call per parent.
+                    let pvals: Vec<&[f64]> =
+                        node.inputs.iter().map(|&q| fj.values[q].data()).collect();
+                    let ptans: Vec<&[f64]> = node
+                        .inputs
+                        .iter()
+                        .map(|&q| fj.tangents[q].data.data())
+                        .collect();
                     for (pi, &p) in node.inputs.iter().enumerate() {
                         let mut contrib = TangentBatch::zeros(batch, n, d);
-                        for b in 0..batch {
-                            // coef_p = Π_{q≠p} v^q (first-derivative factor)
-                            let mut coefp = vec![1.0; d];
-                            for (qi, &q) in node.inputs.iter().enumerate() {
-                                if qi != pi {
-                                    for (cc, &v) in
-                                        coefp.iter_mut().zip(fj.values[q].row(b))
-                                    {
-                                        *cc *= v;
-                                    }
-                                }
-                            }
-                            for k in 0..n {
-                                let gj = gbar_j.row(b, k).to_vec();
-                                let dst = contrib.row_mut(b, k);
-                                for c in 0..d {
-                                    dst[c] = coefp[c] * gj[c];
-                                }
-                            }
-                            cost.muls += (n * d) as u64;
-                            // Second-derivative terms: Σ_{q≠p} (Π_{r≠p,q} v^r)
-                            // ⊙ v̄^j ⊙ ∇v^q.
-                            for (qi, &q) in node.inputs.iter().enumerate() {
-                                if qi == pi {
-                                    continue;
-                                }
-                                let mut coefpq = vec![1.0; d];
-                                for (ri, &r) in node.inputs.iter().enumerate() {
-                                    if ri != pi && ri != qi {
-                                        for (cc, &v) in
-                                            coefpq.iter_mut().zip(fj.values[r].row(b))
-                                        {
-                                            *cc *= v;
-                                        }
-                                    }
-                                }
-                                let scal: Vec<f64> = coefpq
-                                    .iter()
-                                    .zip(vbar_j.row(b))
-                                    .map(|(&cc, &vb)| cc * vb)
-                                    .collect();
-                                cost.muls += d as u64;
-                                let gq = &fj.tangents[q];
-                                for k in 0..n {
-                                    let gqt = gq.row(b, k).to_vec();
-                                    let dst = contrib.row_mut(b, k);
-                                    for c in 0..d {
-                                        dst[c] += scal[c] * gqt[c];
-                                    }
-                                }
-                                cost.muls += (n * d) as u64;
-                                cost.adds += (n * d) as u64;
-                            }
-                        }
+                        kernels::hess_mul_reverse_parent(
+                            batch,
+                            n,
+                            d,
+                            pi,
+                            &pvals,
+                            vbar_j.data(),
+                            gbar_j.data.data(),
+                            &ptans,
+                            contrib.data.data_mut(),
+                        );
                         accumulate(&mut grad_adjoint[p], contrib, &mut peak);
                     }
+                    cost.muls += (batch * k * (n * d + (k - 1) * (d + n * d))) as u64;
+                    cost.adds += (batch * k * (k - 1) * n * d) as u64;
                 }
                 Op::SumReduce => {
                     let p = node.inputs[0];

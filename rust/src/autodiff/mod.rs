@@ -31,8 +31,11 @@
 //! active rows, analytic cost/peak accounting. The pre-plan interpreter is
 //! retained as `DofEngine::compute_with_arena`, the differential-testing
 //! reference. `dof_tape`'s forward pass executes the same program in
-//! retain-all mode; the Hessian baseline shares the program's metadata and
-//! cached Jacobian seed via `compute_with_program`.
+//! retain-all mode; the Hessian baseline runs its own program-scheduled
+//! slab executor ([`crate::plan::hessian`]) with the per-call walk
+//! retained as `HessianEngine::compute_reference`. All executors dispatch
+//! the **shared op kernels** ([`crate::plan::kernels`]) — one numeric
+//! definition per op, N storage policies.
 //!
 //! ### Parallel execution
 //!

@@ -51,7 +51,7 @@ pub use engine::{JetEngine, JetResult};
 pub use program::JetProgram;
 
 use crate::autodiff::Cost;
-use crate::graph::{Act, Graph, Op};
+use crate::graph::{Graph, Op};
 use crate::tensor::Tensor;
 
 /// Maximum supported jet order.
@@ -121,46 +121,18 @@ pub fn jet_bytes(batch: usize, t: usize, k: usize, dim: usize) -> u64 {
 //
 // Both execution paths — the reference interpreter
 // (`JetEngine::compute_with_arena`) and the planned slab executor
-// (`program::execute_jet`) — call these exact same functions per
-// (batch, direction, component), which is what makes them bit-identical by
-// construction.
+// (`program::execute_jet`) — call the exact same per-(batch, direction,
+// component) kernels, which is what makes them bit-identical by
+// construction. The kernels themselves live in the crate-wide shared
+// op-kernel module ([`crate::plan::kernels`]), alongside the DOF tuple and
+// Hessian kernels; this module re-exports them and keeps the jet-side FLOP
+// accounting.
 
-/// Faà di Bruno composition of σ over one scalar jet: `a[0..=k]` are the
-/// input Taylor coefficients (`a[0]` the pre-activation value), returns the
-/// output coefficients. Entries above `k` are ignored.
-///
-/// For `k ≥ 3` the caller must have validated σ via [`validate_graph`]
-/// (`d3f`/`d4f` return `Some`).
-#[inline]
-pub(crate) fn compose5(act: Act, k: usize, a: &[f64; 5]) -> [f64; 5] {
-    let mut y = [0.0; 5];
-    let h = a[0];
-    y[0] = act.f(h);
-    let d1 = act.df(h);
-    y[1] = d1 * a[1];
-    if k >= 2 {
-        let d2 = act.d2f(h);
-        y[2] = d1 * a[2] + 0.5 * d2 * a[1] * a[1];
-        if k >= 3 {
-            let d3 = act.d3f(h).expect("validated: σ''' available");
-            y[3] = d1 * a[3]
-                + d2 * a[1] * a[2]
-                + (d3 * (1.0 / 6.0)) * a[1] * a[1] * a[1];
-            if k >= 4 {
-                let d4 = act.d4f(h).expect("validated: σ'''' available");
-                y[4] = d1 * a[4]
-                    + d2 * (a[1] * a[3] + 0.5 * a[2] * a[2])
-                    + (0.5 * d3) * a[1] * a[1] * a[2]
-                    + (d4 * (1.0 / 24.0)) * a[1] * a[1] * a[1] * a[1];
-            }
-        }
-    }
-    y
-}
+pub(crate) use crate::plan::kernels::{cauchy5, compose5};
 
 /// Exact per-component FLOP charge of [`compose5`] (multiplications,
-/// additions), counted off the expression tree above. σ, σ', … evaluations
-/// are not charged (they are shared with the value pass, matching the DOF
+/// additions), counted off its expression tree. σ, σ', … evaluations are
+/// not charged (they are shared with the value pass, matching the DOF
 /// engines' convention).
 pub(crate) fn compose_flops(k: usize) -> (u64, u64) {
     match k {
@@ -170,21 +142,6 @@ pub(crate) fn compose_flops(k: usize) -> (u64, u64) {
         3 => (12, 3),  // + d1·a3, d2·a1·a2, (d3/6)·a1³
         _ => (26, 7),  // + d1·a4, d2·(a1a3 + ½a2²), ½d3·a1²a2, (d4/24)·a1⁴
     }
-}
-
-/// Cauchy (truncated Taylor) product of two scalar jets:
-/// `out[m] = Σ_{i≤m} a[i]·b[m−i]`, ascending `i`.
-#[inline]
-pub(crate) fn cauchy5(k: usize, a: &[f64; 5], b: &[f64; 5]) -> [f64; 5] {
-    let mut out = [0.0; 5];
-    for m in 0..=k {
-        let mut acc = 0.0;
-        for i in 0..=m {
-            acc += a[i] * b[m - i];
-        }
-        out[m] = acc;
-    }
-    out
 }
 
 /// Exact per-component FLOP charge of one [`cauchy5`] fold:
@@ -281,6 +238,7 @@ pub(crate) fn validate_graph(graph: &Graph, k: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::Act;
 
     /// compose5 must reproduce the Taylor coefficients of σ(g(τ)) for a
     /// concrete polynomial g, checked against finite differences of the

@@ -53,6 +53,55 @@
 //! the differential-testing reference (`rust/tests/plan_equivalence.rs`
 //! asserts bit-identical values, `L[φ]`, FLOP counts, and peak bytes).
 //!
+//! The **Hessian baseline runs on the same compiled machinery**: every
+//! `HessianEngine::compute*` entry point executes a structure-keyed
+//! [`plan::hessian::HessianPlan`] (shared schedule, static slab layout for
+//! the forward tangents and the eq. 14 reverse pass, program-keyed slab
+//! pooling, exact analytic FLOP/peak replays), with the original graph
+//! walk retained as `HessianEngine::compute_reference` — so the Table 1
+//! comparison's two sides are produced by the same planned execution
+//! stack.
+//!
+//! ## One kernel definition, N storage policies
+//!
+//! Every numeric propagation rule — the eq. 7–9 DOF tuple ops (including
+//! the `Mul` cross term and the fused `Linear→Activation` pair), the
+//! forward-Jacobian ops, the eq. 14 Hessian reverse ops, and the jet
+//! `compose5`/`cauchy5` kernels — is defined **exactly once**, in
+//! `plan::kernels`. The slab executors, the retain-all training tape, and
+//! the reference interpreters are thin storage policies over those
+//! kernels: they resolve where each buffer lives and hand the kernels flat
+//! slices. A numeric fix lands in one place; future PRs must preserve this
+//! single-kernel invariant (add a storage policy, never a second copy of
+//! the arithmetic).
+//!
+//! ## Testing strategy: the oracle hierarchy
+//!
+//! Correctness rests on three independent layers, each checked in CI:
+//!
+//! 1. **Interpreter oracles (bitwise).** Every planned/slab path is
+//!    asserted *bit-identical* — values, operator values, tangents/jets,
+//!    exact FLOP counts, peak bytes — to a retained per-call interpreter
+//!    with runtime accounting (`plan_equivalence.rs`,
+//!    `jet_equivalence.rs`, the Hessian half of
+//!    `parallel_determinism.rs`). Shared kernels make agreement
+//!    by-construction; the asserts catch storage-policy bugs (slab
+//!    aliasing, stale scratch, layout drift) and analytic-replay drift.
+//! 2. **Cross-engine agreement (tolerance).** DOF ≡ Hessian baseline and
+//!    order-2 jets ≡ DOF on the same operator: three different exact
+//!    algorithms summing the same real terms in different orders.
+//! 3. **Finite differences (independent).** Central differences of the
+//!    plain forward evaluation — the only oracle sharing no code with any
+//!    engine — bound everything at FD accuracy.
+//!
+//! `rust/tests/cross_engine_fuzz.rs` drives all three layers over ≥200
+//! seeded random `(architecture, operator)` cases per run
+//! ([`prop::generator`]; `DOF_FUZZ_CASES` scales the scheduled CI job),
+//! printing the reproducing seed on failure. `cache_soundness.rs` pins the
+//! compile-once caches' contract: weight-value moves hit by pointer
+//! identity; zero-pattern, topology, or `L`-pattern changes recompile, and
+//! recompiled plans are re-verified against a fresh interpreter run.
+//!
 //! ## Taylor-mode jets (third/fourth order)
 //!
 //! The second-order engines stop at `Σ a_ij ∂²_ij + Σ b_i ∂_i + c`. The

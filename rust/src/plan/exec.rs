@@ -2,18 +2,23 @@
 //!
 //! * [`execute_dof`] — the benchmark-engine pass (eqs. 7–9) running on one
 //!   contiguous slab with statically assigned buffer slots: no arena
-//!   lookups, no per-node allocation, no runtime liveness bookkeeping. The
-//!   arithmetic replicates the reference interpreter
-//!   (`DofEngine::compute_with_arena`) operation for operation, in the same
-//!   order, so results — values, `L[φ]`, FLOP counts, peak tangent bytes —
-//!   are identical (asserted by `rust/tests/plan_equivalence.rs`).
+//!   lookups, no per-node allocation, no runtime liveness bookkeeping.
 //! * [`execute_tape`] — the training-tape pass: same schedule, but every
 //!   node tuple is retained as an owned tensor for the reverse sweep
 //!   (`dof_backward_tape`), and the tangent width is the full rank `r`
 //!   (tape programs are compiled with sparsity off).
 //!
+//! Both are **storage policies over the shared kernels**
+//! ([`super::kernels`]): this module only resolves where each node's
+//! `(v, s, g)` tuple lives (slab windows here, owned tensors for the tape)
+//! and hands flat slices to the one arithmetic definition the reference
+//! interpreter (`DofEngine::compute_with_arena`) also executes — which is
+//! why `rust/tests/plan_equivalence.rs` and `rust/tests/cross_engine_fuzz.rs`
+//! can assert the paths bit-identical (values, `L[φ]`, FLOP counts, peak
+//! tangent bytes).
+//!
 //! Zeroing discipline: the slab is *not* cleared between calls (slots are
-//! reused within and across calls), so every step either fully overwrites
+//! reused within and across calls), so every kernel either fully overwrites
 //! its destination or explicitly zero-fills accumulation targets first —
 //! the same contract the arena's scratch buffers had.
 
@@ -21,12 +26,13 @@ use std::ops::Range;
 
 use crate::autodiff::dof::DofResult;
 use crate::autodiff::dof_tape::DofTape;
-use crate::autodiff::forward_jacobian::{seed_input, TangentBatch};
+use crate::autodiff::forward_jacobian::TangentBatch;
 use crate::autodiff::Cost;
 use crate::graph::{Graph, Op};
 use crate::linalg::LdlDecomposition;
-use crate::tensor::{matmul_nt, matmul_nt_into, Tensor};
+use crate::tensor::Tensor;
 
+use super::kernels;
 use super::{NodePlan, OperatorProgram, StepKind};
 
 // ---- slab addressing -----------------------------------------------------
@@ -56,36 +62,62 @@ fn scratch_rng(np: &NodePlan, batch: usize) -> Range<usize> {
     lo..lo + np.scratch_len * batch
 }
 
-/// Split the slab around the write window `w`: `(prefix, window, suffix)`.
-fn split3<'a>(slab: &'a mut [f64], w: &Range<usize>) -> (&'a [f64], &'a mut [f64], &'a [f64]) {
+/// Carve one mutable window out of the slab; the remainder is returned as
+/// `(absolute offset, slice)` read-only pieces for [`rd`]. Shared with the
+/// program-scheduled Hessian executor ([`super::hessian`]).
+pub(crate) fn carve1<'a>(
+    slab: &'a mut [f64],
+    w: &Range<usize>,
+) -> (&'a mut [f64], [(usize, &'a [f64]); 2]) {
     let (pre, rest) = slab.split_at_mut(w.start);
     let (win, post) = rest.split_at_mut(w.end - w.start);
-    (&*pre, win, &*post)
+    let pre: &'a [f64] = pre;
+    let post: &'a [f64] = post;
+    (win, [(0, pre), (w.end, post)])
 }
 
-/// Read a slab range that the layout guarantees is disjoint from the write
-/// window `w` (addresses are absolute slab offsets).
-fn rd<'a>(pre: &'a [f64], post: &'a [f64], w: &Range<usize>, r: Range<usize>) -> &'a [f64] {
-    if r.end <= w.start {
-        &pre[r]
+/// Carve two disjoint mutable windows (`a`, `b`, in caller order) out of
+/// the slab, plus read-only pieces of the remainder.
+#[allow(clippy::type_complexity)]
+fn carve2<'a>(
+    slab: &'a mut [f64],
+    a: &Range<usize>,
+    b: &Range<usize>,
+) -> (&'a mut [f64], &'a mut [f64], [(usize, &'a [f64]); 3]) {
+    let swap = b.start < a.start;
+    let (lo, hi) = if swap { (b, a) } else { (a, b) };
+    debug_assert!(lo.end <= hi.start, "carve2 windows overlap");
+    let (p0, rest) = slab.split_at_mut(lo.start);
+    let (w_lo, rest) = rest.split_at_mut(lo.end - lo.start);
+    let (p1, rest) = rest.split_at_mut(hi.start - lo.end);
+    let (w_hi, p2) = rest.split_at_mut(hi.end - hi.start);
+    let p0: &'a [f64] = p0;
+    let p1: &'a [f64] = p1;
+    let p2: &'a [f64] = p2;
+    let ros = [(0, p0), (lo.end, p1), (hi.end, p2)];
+    if swap {
+        (w_hi, w_lo, ros)
     } else {
-        debug_assert!(r.start >= w.end, "overlapping slab access");
-        &post[r.start - w.end..r.end - w.end]
+        (w_lo, w_hi, ros)
     }
 }
 
-/// Row `kk` of parent `pi`'s union-aligned tangent inside the Mul scratch.
-fn aligned_row(
-    aligned: &[f64],
-    batch: usize,
-    t: usize,
-    d: usize,
-    pi: usize,
-    b: usize,
-    kk: usize,
-) -> &[f64] {
-    let o = pi * batch * t * d + (b * t + kk) * d;
-    &aligned[o..o + d]
+/// Read a slab range the layout guarantees is disjoint from every write
+/// window (addresses are absolute slab offsets).
+pub(crate) fn rd<'a>(ros: &[(usize, &'a [f64])], r: Range<usize>) -> &'a [f64] {
+    for &(off, s) in ros {
+        if r.start >= off && r.end <= off + s.len() {
+            return &s[r.start - off..r.end - off];
+        }
+    }
+    panic!("slab read {r:?} overlaps a write window");
+}
+
+/// Split a node window into its `(v, s, g)` stream slices.
+fn streams(win: &mut [f64], batch: usize, d: usize) -> (&mut [f64], &mut [f64], &mut [f64]) {
+    let (v, rest) = win.split_at_mut(batch * d);
+    let (s, g) = rest.split_at_mut(batch * d);
+    (v, s, g)
 }
 
 // ---- the planned DOF pass ------------------------------------------------
@@ -179,30 +211,12 @@ fn input_step(
     in_off: usize,
 ) {
     let np = program.node_plan(id);
-    let d = np.dim;
-    let t = np.t();
     let w = node_rng(np, batch);
-    let (_pre, win, _post) = split3(slab, &w);
-    let s_rel = batch * d;
-    let g_rel = 2 * batch * d;
-    for b in 0..batch {
-        win[b * d..(b + 1) * d].copy_from_slice(&x.row(b)[in_off..in_off + d]);
-    }
-    match b_coef {
-        Some(bv) => {
-            for b in 0..batch {
-                win[s_rel + b * d..s_rel + (b + 1) * d]
-                    .copy_from_slice(&bv[in_off..in_off + d]);
-            }
-        }
-        None => win[s_rel..s_rel + batch * d].fill(0.0),
-    }
-    for b in 0..batch {
-        for (kk, &k) in np.active.iter().enumerate() {
-            let o = g_rel + (b * t + kk) * d;
-            win[o..o + d].copy_from_slice(&ldl.l.row(k)[in_off..in_off + d]);
-        }
-    }
+    let (win, _ros) = carve1(slab, &w);
+    let (v, s, g) = streams(win, batch, np.dim);
+    kernels::input_seed(
+        x, in_off, np.dim, batch, b_coef, &ldl.l, &np.active, v, s, g,
+    );
 }
 
 fn linear_step(program: &OperatorProgram, graph: &Graph, batch: usize, slab: &mut [f64], id: usize) {
@@ -214,46 +228,19 @@ fn linear_step(program: &OperatorProgram, graph: &Graph, batch: usize, slab: &mu
     let p = node.inputs[0];
     let np = program.node_plan(id);
     let pp = program.node_plan(p);
-    let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+    let in_d = weight.dims()[1];
     let t = pp.t();
     debug_assert_eq!(np.t(), t);
     let rows = batch * (t + 2);
     let sc = scratch_rng(np, batch);
-    let stacked = sc.start..sc.start + rows * in_d;
-    let gout = stacked.end..stacked.end + rows * out_d;
-    debug_assert_eq!(gout.end, sc.end);
-
-    // Phase 1: stack [v; s; G] of the parent — one GEMM serves all three
-    // streams (one Wᵀ pass, full micro-kernel utilization).
-    {
-        let (pre, win, post) = split3(slab, &stacked);
-        win[..batch * in_d].copy_from_slice(rd(pre, post, &stacked, v_rng(pp, batch)));
-        win[batch * in_d..2 * batch * in_d]
-            .copy_from_slice(rd(pre, post, &stacked, s_rng(pp, batch)));
-        win[2 * batch * in_d..].copy_from_slice(rd(pre, post, &stacked, g_rng(pp, batch)));
-    }
-    // Phase 2: accumulate the GEMM into zeroed scratch.
-    {
-        let (pre, win, post) = split3(slab, &gout);
-        win.fill(0.0);
-        let a = rd(pre, post, &gout, stacked.clone());
-        matmul_nt_into(a, weight.data(), win, rows, in_d, out_d);
-    }
-    // Phase 3: scatter into the node's slots; bias on the value stream.
-    {
-        let w = node_rng(np, batch);
-        let (pre, win, post) = split3(slab, &w);
-        let od = rd(pre, post, &w, gout);
-        win[..batch * out_d].copy_from_slice(&od[..batch * out_d]);
-        win[batch * out_d..2 * batch * out_d]
-            .copy_from_slice(&od[batch * out_d..2 * batch * out_d]);
-        win[2 * batch * out_d..].copy_from_slice(&od[2 * batch * out_d..]);
-        for b in 0..batch {
-            for (o, &bi) in win[b * out_d..(b + 1) * out_d].iter_mut().zip(bias.iter()) {
-                *o += bi;
-            }
-        }
-    }
+    let w = node_rng(np, batch);
+    let (sc_win, w_win, ros) = carve2(slab, &sc, &w);
+    let (stacked, gout) = sc_win.split_at_mut(rows * in_d);
+    let (v, s, g) = streams(w_win, batch, np.dim);
+    let pv = rd(&ros, v_rng(pp, batch));
+    let ps = rd(&ros, s_rng(pp, batch));
+    let pg = rd(&ros, g_rng(pp, batch));
+    kernels::linear_forward(weight, bias, batch, t, pv, ps, pg, stacked, gout, v, s, g);
 }
 
 fn activation_step(
@@ -272,47 +259,13 @@ fn activation_step(
     let p = node.inputs[0];
     let np = program.node_plan(id);
     let pp = program.node_plan(p);
-    let d = np.dim;
-    let t = np.t();
-    let signs = &ldl.d;
     let w = node_rng(np, batch);
-    let (pre, win, post) = split3(slab, &w);
-    let h = rd(pre, post, &w, v_rng(pp, batch));
-    let ps = rd(pre, post, &w, s_rng(pp, batch));
-    let pg = rd(pre, post, &w, g_rng(pp, batch));
-    let s_rel = batch * d;
-    let g_rel = 2 * batch * d;
-    // Value stream: σ(h), whole-buffer sweep (matches the interpreter).
-    for (dst, &src) in win[..batch * d].iter_mut().zip(h.iter()) {
-        *dst = act.f(src);
-    }
-    // Fused tangent pass: read g once, accumulate the signed square into
-    // quad and write the σ'-scaled value.
-    let mut df = vec![0.0; d];
-    let mut quad = vec![0.0; d];
-    for b in 0..batch {
-        let hrow = &h[b * d..(b + 1) * d];
-        for (dv, &hv) in df.iter_mut().zip(hrow.iter()) {
-            *dv = act.df(hv);
-        }
-        quad.iter_mut().for_each(|q| *q = 0.0);
-        for (kk, &k) in np.active.iter().enumerate() {
-            let sign = signs[k];
-            let src = &pg[(b * t + kk) * d..(b * t + kk + 1) * d];
-            let o = g_rel + (b * t + kk) * d;
-            let dst = &mut win[o..o + d];
-            for c in 0..d {
-                let gv = src[c];
-                quad[c] += sign * gv * gv;
-                dst[c] = df[c] * gv;
-            }
-        }
-        let psr = &ps[b * d..(b + 1) * d];
-        let sp = &mut win[s_rel + b * d..s_rel + (b + 1) * d];
-        for c in 0..d {
-            sp[c] = act.d2f(hrow[c]) * quad[c] + df[c] * psr[c];
-        }
-    }
+    let (win, ros) = carve1(slab, &w);
+    let h = rd(&ros, v_rng(pp, batch));
+    let ps = rd(&ros, s_rng(pp, batch));
+    let pg = rd(&ros, g_rng(pp, batch));
+    let (v, s, g) = streams(win, batch, np.dim);
+    kernels::activation_forward(act, &ldl.d, &np.active, batch, np.dim, h, ps, pg, v, s, g);
 }
 
 fn slice_step(program: &OperatorProgram, graph: &Graph, batch: usize, slab: &mut [f64], id: usize) {
@@ -328,25 +281,22 @@ fn slice_step(program: &OperatorProgram, graph: &Graph, batch: usize, slab: &mut
     let tp = pp.t();
     let t = np.t();
     let w = node_rng(np, batch);
-    let (pre, win, post) = split3(slab, &w);
-    let pv = rd(pre, post, &w, v_rng(pp, batch));
-    let psl = rd(pre, post, &w, s_rng(pp, batch));
-    let pg = rd(pre, post, &w, g_rng(pp, batch));
-    let s_rel = batch * len;
-    let g_rel = 2 * batch * len;
+    let (win, ros) = carve1(slab, &w);
+    let pv = rd(&ros, v_rng(pp, batch));
+    let psl = rd(&ros, s_rng(pp, batch));
+    let pg = rd(&ros, g_rng(pp, batch));
+    let (v, s, g) = streams(win, batch, len);
     for b in 0..batch {
-        win[b * len..(b + 1) * len]
-            .copy_from_slice(&pv[b * pd + start..b * pd + start + len]);
-        win[s_rel + b * len..s_rel + (b + 1) * len]
-            .copy_from_slice(&psl[b * pd + start..b * pd + start + len]);
+        v[b * len..(b + 1) * len].copy_from_slice(&pv[b * pd + start..b * pd + start + len]);
+        s[b * len..(b + 1) * len].copy_from_slice(&psl[b * pd + start..b * pd + start + len]);
     }
     // Only the rows the compile-time compaction kept are copied; rows that
     // are structurally zero inside the slice window were pruned at compile.
     for b in 0..batch {
         for (nk, &kk) in np.keep.iter().enumerate() {
             let src = &pg[(b * tp + kk) * pd + start..(b * tp + kk) * pd + start + len];
-            let o = g_rel + (b * t + nk) * len;
-            win[o..o + len].copy_from_slice(src);
+            let o = (b * t + nk) * len;
+            g[o..o + len].copy_from_slice(src);
         }
     }
 }
@@ -357,38 +307,36 @@ fn add_step(program: &OperatorProgram, graph: &Graph, batch: usize, slab: &mut [
     let d = np.dim;
     let t = np.t();
     let w = node_rng(np, batch);
-    let (pre, win, post) = split3(slab, &w);
-    let s_rel = batch * d;
-    let g_rel = 2 * batch * d;
+    let (win, ros) = carve1(slab, &w);
+    let (v, s, g) = streams(win, batch, d);
     for (pi, &p) in node.inputs.iter().enumerate() {
         let pp = program.node_plan(p);
-        let pv = rd(pre, post, &w, v_rng(pp, batch));
-        let psl = rd(pre, post, &w, s_rng(pp, batch));
+        let pv = rd(&ros, v_rng(pp, batch));
+        let psl = rd(&ros, s_rng(pp, batch));
         if pi == 0 {
-            win[..batch * d].copy_from_slice(pv);
-            win[s_rel..s_rel + batch * d].copy_from_slice(psl);
+            v.copy_from_slice(pv);
+            s.copy_from_slice(psl);
         } else {
-            for (dst, &sv) in win[..batch * d].iter_mut().zip(pv.iter()) {
+            for (dst, &sv) in v.iter_mut().zip(pv.iter()) {
                 *dst += sv;
             }
-            for (dst, &sv) in win[s_rel..s_rel + batch * d].iter_mut().zip(psl.iter()) {
+            for (dst, &sv) in s.iter_mut().zip(psl.iter()) {
                 *dst += sv;
             }
         }
     }
     // Union-aligned tangent sum: zero, then accumulate each parent's rows
     // at their precomputed union positions.
-    win[g_rel..g_rel + batch * t * d].fill(0.0);
+    g.fill(0.0);
     for (pi, &p) in node.inputs.iter().enumerate() {
         let pp = program.node_plan(p);
         let tp = pp.t();
-        let pg = rd(pre, post, &w, g_rng(pp, batch));
+        let pg = rd(&ros, g_rng(pp, batch));
         let pos = &np.parent_pos[pi];
         for b in 0..batch {
             for (kk, &u) in pos.iter().enumerate() {
                 let src = &pg[(b * tp + kk) * d..(b * tp + kk + 1) * d];
-                let o = g_rel + (b * t + u) * d;
-                let dst = &mut win[o..o + d];
+                let dst = &mut g[(b * t + u) * d..(b * t + u + 1) * d];
                 for c in 0..d {
                     dst[c] += src[c];
                 }
@@ -403,35 +351,33 @@ fn concat_step(program: &OperatorProgram, graph: &Graph, batch: usize, slab: &mu
     let d = np.dim;
     let t = np.t();
     let w = node_rng(np, batch);
-    let (pre, win, post) = split3(slab, &w);
-    let s_rel = batch * d;
-    let g_rel = 2 * batch * d;
+    let (win, ros) = carve1(slab, &w);
+    let (v, s, g) = streams(win, batch, d);
     let mut off = 0usize;
     for &p in &node.inputs {
         let pp = program.node_plan(p);
         let pd = pp.dim;
-        let pv = rd(pre, post, &w, v_rng(pp, batch));
-        let psl = rd(pre, post, &w, s_rng(pp, batch));
+        let pv = rd(&ros, v_rng(pp, batch));
+        let psl = rd(&ros, s_rng(pp, batch));
         for b in 0..batch {
-            win[b * d + off..b * d + off + pd].copy_from_slice(&pv[b * pd..(b + 1) * pd]);
-            win[s_rel + b * d + off..s_rel + b * d + off + pd]
-                .copy_from_slice(&psl[b * pd..(b + 1) * pd]);
+            v[b * d + off..b * d + off + pd].copy_from_slice(&pv[b * pd..(b + 1) * pd]);
+            s[b * d + off..b * d + off + pd].copy_from_slice(&psl[b * pd..(b + 1) * pd]);
         }
         off += pd;
     }
-    win[g_rel..g_rel + batch * t * d].fill(0.0);
+    g.fill(0.0);
     let mut off = 0usize;
     for (pi, &p) in node.inputs.iter().enumerate() {
         let pp = program.node_plan(p);
         let pd = pp.dim;
         let tp = pp.t();
-        let pg = rd(pre, post, &w, g_rng(pp, batch));
+        let pg = rd(&ros, g_rng(pp, batch));
         let pos = &np.parent_pos[pi];
         for b in 0..batch {
             for (kk, &u) in pos.iter().enumerate() {
                 let src = &pg[(b * tp + kk) * pd..(b * tp + kk + 1) * pd];
-                let o = g_rel + (b * t + u) * d + off;
-                win[o..o + pd].copy_from_slice(src);
+                let o = (b * t + u) * d + off;
+                g[o..o + pd].copy_from_slice(src);
             }
         }
         off += pd;
@@ -451,19 +397,19 @@ fn mul_step(
     let d = np.dim;
     let t = np.t();
     let k = node.inputs.len();
-    let signs = &ldl.d;
 
     // Phase 1: materialize every parent's union-aligned tangent in the step
     // scratch (zero-filled missing rows) — the `expand_to` of the
-    // interpreter, but into preassigned storage.
+    // interpreter, but into preassigned storage. Alignment is storage
+    // policy; the product rule itself is the shared kernel below.
     let sc = scratch_rng(np, batch);
     {
-        let (pre, win, post) = split3(slab, &sc);
+        let (win, ros) = carve1(slab, &sc);
         win.fill(0.0);
         for (pi, &p) in node.inputs.iter().enumerate() {
             let pp = program.node_plan(p);
             let tp = pp.t();
-            let pg = rd(pre, post, &sc, g_rng(pp, batch));
+            let pg = rd(&ros, g_rng(pp, batch));
             let pos = &np.parent_pos[pi];
             let block = pi * batch * t * d;
             for b in 0..batch {
@@ -476,91 +422,28 @@ fn mul_step(
         }
     }
 
-    // Phase 2: the eq. 9 product rule over the aligned tangents.
+    // Phase 2: the eq. 9 product rule (shared kernel) over the aligned
+    // tangents.
     let w = node_rng(np, batch);
-    let (pre, win, post) = split3(slab, &w);
-    let s_rel = batch * d;
-    let g_rel = 2 * batch * d;
-    {
-        let p0 = program.node_plan(node.inputs[0]);
-        let pv0 = rd(pre, post, &w, v_rng(p0, batch));
-        win[..batch * d].copy_from_slice(pv0);
-    }
-    for &p in &node.inputs[1..] {
-        let pp = program.node_plan(p);
-        let pv = rd(pre, post, &w, v_rng(pp, batch));
-        for (dst, &sv) in win[..batch * d].iter_mut().zip(pv.iter()) {
-            *dst *= sv;
-        }
-    }
-    win[s_rel..s_rel + batch * d].fill(0.0);
-    win[g_rel..g_rel + batch * t * d].fill(0.0);
-
+    let (win, ros) = carve1(slab, &w);
+    let (v, s, g) = streams(win, batch, d);
     let pvals: Vec<&[f64]> = node
         .inputs
         .iter()
-        .map(|&p| rd(pre, post, &w, v_rng(program.node_plan(p), batch)))
+        .map(|&p| rd(&ros, v_rng(program.node_plan(p), batch)))
         .collect();
     let psums: Vec<&[f64]> = node
         .inputs
         .iter()
-        .map(|&p| rd(pre, post, &w, s_rng(program.node_plan(p), batch)))
+        .map(|&p| rd(&ros, s_rng(program.node_plan(p), batch)))
         .collect();
-    let aligned = rd(pre, post, &w, sc.clone());
-
-    let mut coef = vec![1.0; d];
-    let mut coef2 = vec![1.0; d];
-    let mut cross = vec![0.0; d];
-    for b in 0..batch {
-        for pi in 0..k {
-            coef.iter_mut().for_each(|c| *c = 1.0);
-            for (qi, pv) in pvals.iter().enumerate() {
-                if qi != pi {
-                    for (c, &xv) in coef.iter_mut().zip(&pv[b * d..(b + 1) * d]) {
-                        *c *= xv;
-                    }
-                }
-            }
-            for kk in 0..t {
-                let src = aligned_row(aligned, batch, t, d, pi, b, kk);
-                let o = g_rel + (b * t + kk) * d;
-                let dst = &mut win[o..o + d];
-                for c in 0..d {
-                    dst[c] += coef[c] * src[c];
-                }
-            }
-            {
-                let psr = &psums[pi][b * d..(b + 1) * d];
-                let srow = &mut win[s_rel + b * d..s_rel + (b + 1) * d];
-                for c in 0..d {
-                    srow[c] += coef[c] * psr[c];
-                }
-            }
-            for qi in (pi + 1)..k {
-                coef2.iter_mut().for_each(|c| *c = 1.0);
-                for (ri, pv) in pvals.iter().enumerate() {
-                    if ri != pi && ri != qi {
-                        for (c, &xv) in coef2.iter_mut().zip(&pv[b * d..(b + 1) * d]) {
-                            *c *= xv;
-                        }
-                    }
-                }
-                cross.iter_mut().for_each(|c| *c = 0.0);
-                for (kk, &kglob) in np.active.iter().enumerate() {
-                    let sign = signs[kglob];
-                    let gp = aligned_row(aligned, batch, t, d, pi, b, kk);
-                    let gq = aligned_row(aligned, batch, t, d, qi, b, kk);
-                    for c in 0..d {
-                        cross[c] += sign * gp[c] * gq[c];
-                    }
-                }
-                let srow = &mut win[s_rel + b * d..s_rel + (b + 1) * d];
-                for c in 0..d {
-                    srow[c] += 2.0 * coef2[c] * cross[c];
-                }
-            }
-        }
-    }
+    let aligned_all = rd(&ros, sc.clone());
+    let aligned: Vec<&[f64]> = if batch * t * d == 0 {
+        vec![&[][..]; k]
+    } else {
+        aligned_all.chunks_exact(batch * t * d).collect()
+    };
+    kernels::mul_forward(&ldl.d, &np.active, batch, d, &pvals, &psums, &aligned, v, s, g);
 }
 
 fn sum_reduce_step(
@@ -577,18 +460,17 @@ fn sum_reduce_step(
     let pd = pp.dim;
     let t = np.t();
     let w = node_rng(np, batch);
-    let (pre, win, post) = split3(slab, &w);
-    let pv = rd(pre, post, &w, v_rng(pp, batch));
-    let psl = rd(pre, post, &w, s_rng(pp, batch));
-    let pg = rd(pre, post, &w, g_rng(pp, batch));
-    let s_rel = batch; // node dim is 1
-    let g_rel = 2 * batch;
+    let (win, ros) = carve1(slab, &w);
+    let pv = rd(&ros, v_rng(pp, batch));
+    let psl = rd(&ros, s_rng(pp, batch));
+    let pg = rd(&ros, g_rng(pp, batch));
+    let (v, s, g) = streams(win, batch, 1);
     for b in 0..batch {
-        win[b] = pv[b * pd..(b + 1) * pd].iter().sum::<f64>();
-        win[s_rel + b] = psl[b * pd..(b + 1) * pd].iter().sum::<f64>();
+        v[b] = pv[b * pd..(b + 1) * pd].iter().sum::<f64>();
+        s[b] = psl[b * pd..(b + 1) * pd].iter().sum::<f64>();
     }
     for row in 0..batch * t {
-        win[g_rel + row] = pg[row * pd..(row + 1) * pd].iter().sum::<f64>();
+        g[row] = pg[row * pd..(row + 1) * pd].iter().sum::<f64>();
     }
 }
 
@@ -598,7 +480,8 @@ fn sum_reduce_step(
 /// tuple as owned tensors — the input to [`crate::autodiff::dof_tape`]'s
 /// reverse sweep. Requires a program compiled with `sparsity: false` (the
 /// tape always carries the full rank-`r` tangent, like the pre-plan
-/// implementation).
+/// implementation). Runs the same shared kernels as the slab executor and
+/// the interpreter, with owned tensors as the storage policy.
 pub fn execute_tape(
     program: &OperatorProgram,
     graph: &Graph,
@@ -615,6 +498,7 @@ pub fn execute_tape(
     assert_eq!(ldl.n, n);
     let batch = x.dims()[0];
     let r = ldl.rank();
+    let full: Vec<usize> = (0..r).collect();
     let mut cost = Cost::zero();
     let mut values: Vec<Tensor> = Vec::with_capacity(graph.len());
     let mut tangents: Vec<TangentBatch> = Vec::with_capacity(graph.len());
@@ -628,6 +512,7 @@ pub fn execute_tape(
             x,
             batch,
             r,
+            &full,
             step.node,
             &step.kind,
             &mut values,
@@ -643,6 +528,7 @@ pub fn execute_tape(
                 x,
                 batch,
                 r,
+                &full,
                 *a,
                 &StepKind::Activation,
                 &mut values,
@@ -663,8 +549,8 @@ pub fn execute_tape(
     }
 }
 
-/// One node of the retained-tape pass (numerically identical to the
-/// pre-plan `dof_forward_tape` body).
+/// One node of the retained-tape pass: the shared kernels with owned-tensor
+/// storage and the tape's (coarser, muls-focused) accounting convention.
 #[allow(clippy::too_many_arguments)]
 fn tape_node(
     graph: &Graph,
@@ -673,6 +559,7 @@ fn tape_node(
     x: &Tensor,
     batch: usize,
     r: usize,
+    full: &[usize],
     id: usize,
     kind: &StepKind,
     values: &mut Vec<Tensor>,
@@ -689,67 +576,67 @@ fn tape_node(
                 _ => unreachable!("input node scheduled as non-input step"),
             };
             let mut v = Tensor::zeros(&[batch, *dim]);
-            for b in 0..batch {
-                v.row_mut(b).copy_from_slice(&x.row(b)[in_off..in_off + dim]);
-            }
-            let g = seed_input(&ldl.l, in_off, *dim, batch);
+            let mut g = TangentBatch::zeros(batch, r, *dim);
             let mut s = Tensor::zeros(&[batch, *dim]);
-            if let Some(bv) = b_coef {
-                for b in 0..batch {
-                    s.row_mut(b).copy_from_slice(&bv[in_off..in_off + dim]);
-                }
-            }
+            kernels::input_seed(
+                x,
+                in_off,
+                *dim,
+                batch,
+                b_coef,
+                &ldl.l,
+                full,
+                v.data_mut(),
+                s.data_mut(),
+                g.data.data_mut(),
+            );
             (v, g, s)
         }
         Op::Linear { weight, bias } => {
             let p = node.inputs[0];
-            let mut v = matmul_nt(&values[p], weight);
-            for b in 0..batch {
-                for (o, &bi) in v.row_mut(b).iter_mut().zip(bias.iter()) {
-                    *o += bi;
-                }
-            }
-            let g = TangentBatch {
-                data: matmul_nt(&tangents[p].data, weight),
-                batch,
-                t: r,
-            };
-            let s = matmul_nt(&scalars[p], weight);
             let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+            let rows = batch * (r + 2);
+            let mut stacked = Tensor::zeros(&[rows, in_d]);
+            let mut gout = Tensor::zeros(&[rows, out_d]);
+            let mut v = Tensor::zeros(&[batch, out_d]);
+            let mut s = Tensor::zeros(&[batch, out_d]);
+            let mut g = TangentBatch::zeros(batch, r, out_d);
+            kernels::linear_forward(
+                weight,
+                bias,
+                batch,
+                r,
+                values[p].data(),
+                scalars[p].data(),
+                tangents[p].data.data(),
+                stacked.data_mut(),
+                gout.data_mut(),
+                v.data_mut(),
+                s.data_mut(),
+                g.data.data_mut(),
+            );
             cost.muls += ((batch * (r + 2)) * out_d * in_d) as u64;
             (v, g, s)
         }
         Op::Activation { act } => {
             let p = node.inputs[0];
-            let h = &values[p];
             let d = node.dim;
-            let v = h.map(|xv| act.f(xv));
-            let mut g = tangents[p].clone();
+            let mut v = Tensor::zeros(&[batch, d]);
             let mut s = Tensor::zeros(&[batch, d]);
-            for b in 0..batch {
-                let hrow = h.row(b);
-                let df: Vec<f64> = hrow.iter().map(|&xv| act.df(xv)).collect();
-                let d2f: Vec<f64> = hrow.iter().map(|&xv| act.d2f(xv)).collect();
-                let mut quad = vec![0.0; d];
-                for k in 0..r {
-                    let sign = ldl.d[k];
-                    let row = tangents[p].row(b, k);
-                    for c in 0..d {
-                        quad[c] += sign * row[c] * row[c];
-                    }
-                }
-                for k in 0..r {
-                    let row = g.row_mut(b, k);
-                    for c in 0..d {
-                        row[c] *= df[c];
-                    }
-                }
-                let sp = s.row_mut(b);
-                let psr = scalars[p].row(b);
-                for c in 0..d {
-                    sp[c] = d2f[c] * quad[c] + df[c] * psr[c];
-                }
-            }
+            let mut g = TangentBatch::zeros(batch, r, d);
+            kernels::activation_forward(
+                *act,
+                &ldl.d,
+                full,
+                batch,
+                d,
+                values[p].data(),
+                scalars[p].data(),
+                tangents[p].data.data(),
+                v.data_mut(),
+                s.data_mut(),
+                g.data.data_mut(),
+            );
             cost.muls += (batch * d * (2 * r + 2)) as u64;
             (v, g, s)
         }
@@ -786,68 +673,28 @@ fn tape_node(
         Op::Mul => {
             let k = node.inputs.len();
             let d = node.dim;
-            let mut v = values[node.inputs[0]].clone();
-            for &p in &node.inputs[1..] {
-                v = v.mul(&values[p]);
-            }
-            let mut g = TangentBatch::zeros(batch, r, d);
+            let pvals: Vec<&[f64]> = node.inputs.iter().map(|&p| values[p].data()).collect();
+            let psums: Vec<&[f64]> = node.inputs.iter().map(|&p| scalars[p].data()).collect();
+            let aligned: Vec<&[f64]> = node
+                .inputs
+                .iter()
+                .map(|&p| tangents[p].data.data())
+                .collect();
+            let mut v = Tensor::zeros(&[batch, d]);
             let mut s = Tensor::zeros(&[batch, d]);
-            for b in 0..batch {
-                let prows: Vec<&[f64]> = node
-                    .inputs
-                    .iter()
-                    .map(|&p| values[p].row(b))
-                    .collect();
-                for pi in 0..k {
-                    let mut coef = vec![1.0; d];
-                    for (qi, pr) in prows.iter().enumerate() {
-                        if qi != pi {
-                            for (c, &xv) in coef.iter_mut().zip(*pr) {
-                                *c *= xv;
-                            }
-                        }
-                    }
-                    let pg = &tangents[node.inputs[pi]];
-                    for kk in 0..r {
-                        let src = pg.row(b, kk).to_vec();
-                        let dst = g.row_mut(b, kk);
-                        for c in 0..d {
-                            dst[c] += coef[c] * src[c];
-                        }
-                    }
-                    let psc = &scalars[node.inputs[pi]];
-                    {
-                        let srow = s.row_mut(b);
-                        for c in 0..d {
-                            srow[c] += coef[c] * psc.row(b)[c];
-                        }
-                    }
-                    for qi in (pi + 1)..k {
-                        let mut coef2 = vec![1.0; d];
-                        for (ri, pr) in prows.iter().enumerate() {
-                            if ri != pi && ri != qi {
-                                for (c, &xv) in coef2.iter_mut().zip(*pr) {
-                                    *c *= xv;
-                                }
-                            }
-                        }
-                        let gq = &tangents[node.inputs[qi]];
-                        let mut cross = vec![0.0; d];
-                        for kk in 0..r {
-                            let sign = ldl.d[kk];
-                            let gp_row = pg.row(b, kk);
-                            let gq_row = gq.row(b, kk);
-                            for c in 0..d {
-                                cross[c] += sign * gp_row[c] * gq_row[c];
-                            }
-                        }
-                        let srow = s.row_mut(b);
-                        for c in 0..d {
-                            srow[c] += 2.0 * coef2[c] * cross[c];
-                        }
-                    }
-                }
-            }
+            let mut g = TangentBatch::zeros(batch, r, d);
+            kernels::mul_forward(
+                &ldl.d,
+                full,
+                batch,
+                d,
+                &pvals,
+                &psums,
+                &aligned,
+                v.data_mut(),
+                s.data_mut(),
+                g.data.data_mut(),
+            );
             cost.muls += (batch * d * k * (r + k)) as u64;
             (v, g, s)
         }

@@ -1,0 +1,806 @@
+//! Program-scheduled execution of the **Hessian baseline** (Appendix B,
+//! eqs. 12–14) — the compile-once twin of [`super::exec::execute_dof`],
+//! closing the ROADMAP PR-2 follow-up: the baseline the paper's Table 1
+//! compares against now runs on the same compiled machinery as the DOF
+//! engine, so its FLOP/peak numbers come from the same analytic replay the
+//! slab executors use.
+//!
+//! A [`HessianPlan`] is compiled once per graph *structure* (the Hessian
+//! method is operator-value-independent: `A`, `b`, `c` only enter the final
+//! contraction) and carries:
+//!
+//! * the shared **schedule** ([`super::build_schedule`], fused
+//!   `Linear → Activation` steps) driving the forward value/Jacobian sweep;
+//! * a **static slab layout**: every node's width-`N` forward tangent
+//!   `∇vⁱ` and reverse second-order adjoint `∇v̄ⁱ` at a fixed per-row
+//!   offset, assigned by replaying the reference path's exact alloc/free
+//!   event order (forward tangents live until their own reverse step —
+//!   that is Appendix D's memory story — `∇v̄ⁱ` from its first contributing
+//!   consumer to its own step), plus one contribution scratch block;
+//! * **exact analytic costs** — per-row FLOPs mirroring every charge of
+//!   the reference path (forward Jacobian, eq. 12 adjoints, eq. 14 sweep,
+//!   contraction) and the peak-byte replay of its [`PeakTracker`] events,
+//!   both exactly linear in the batch;
+//! * the cached `I_N` Jacobian seed.
+//!
+//! [`execute_hessian`] then runs values (graph order), the forward
+//! Jacobian (schedule order, slab slots, shared [`super::kernels`]), the
+//! eq. 12 adjoint sweep ([`crate::autodiff::backward`] — tiny `[batch, d]`
+//! buffers, no tangents), and the eq. 14 reverse sweep (reverse schedule
+//! order, slab slots, shared kernels). The arithmetic is the reference
+//! path's ([`crate::autodiff::HessianEngine::compute_reference`]) through
+//! the same kernels, so the two are bit-identical — asserted by
+//! `rust/tests/cross_engine_fuzz.rs` and the determinism suite, including
+//! FLOP counts and peak bytes (analytic here ≡ measured there).
+//!
+//! Plans are **shard-invariant** (structure only — never batch size or
+//! thread count), so `compute_sharded` compiles once and every shard
+//! executes the same plan under the PR 1 determinism contract.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::autodiff::backward::backward;
+use crate::autodiff::hessian::HessianResult;
+use crate::autodiff::Cost;
+use crate::graph::{Graph, Op};
+use crate::tensor::{matmul_nt_into, Tensor};
+
+use super::exec::{carve1, rd};
+use super::kernels;
+use super::layout::SlabLayout;
+use super::{build_schedule, hash_graph_structure, Fnv, Step, StepKind};
+
+/// Cache key: graph structure + `N`, domain-tagged so Hessian slabs never
+/// collide with DOF program slabs of the same graph in the program-keyed
+/// slab pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct HessianKey {
+    pub fingerprint: u64,
+    pub nodes: usize,
+    pub n: usize,
+}
+
+/// Value-independent structural fingerprint of a graph, in the Hessian
+/// plan's key domain.
+pub fn hessian_key(graph: &Graph) -> HessianKey {
+    let mut h = Fnv::new();
+    h.u64(0x4845_5353); // "HESS" domain tag
+    hash_graph_structure(&mut h, graph);
+    h.u64(graph.input_dim() as u64);
+    HessianKey {
+        fingerprint: h.0,
+        nodes: graph.len(),
+        n: graph.input_dim(),
+    }
+}
+
+/// A compiled, reusable Hessian-method execution plan for one graph
+/// structure (see module docs).
+pub struct HessianPlan {
+    steps: Vec<Step>,
+    /// Per-row slab offset of each node's forward tangent (`n·dim` units).
+    fwd_slot: Vec<usize>,
+    /// Per-row slab offset of each node's `∇v̄` block (`n·dim` units);
+    /// `usize::MAX` for nodes that never receive one (unconsumed inputs).
+    gbar_slot: Vec<usize>,
+    /// Per-row offset/length of the contribution scratch (`n·max_dim`).
+    scratch_slot: usize,
+    scratch_len: usize,
+    out_id: usize,
+    n: usize,
+    slab_per_row: usize,
+    cost_per_row: Cost,
+    peak_per_row: u64,
+    key: HessianKey,
+    identity_seed: OnceLock<Tensor>,
+}
+
+impl HessianPlan {
+    /// Compile a plan. Cost is O(nodes); no batch-data arithmetic.
+    pub fn compile(graph: &Graph) -> Self {
+        let n = graph.input_dim();
+        let len = graph.len();
+        assert!(len > 0, "cannot compile an empty graph");
+        let out_id = graph.output();
+        let tau = graph.tau();
+        let steps = build_schedule(graph, &tau);
+        let dim = |j: usize| graph.node(j).dim;
+        let is_input = |j: usize| matches!(graph.node(j).op, Op::Input { .. });
+
+        // ---- static slab layout: replay the reference lifetimes ---------
+        let mut lay = SlabLayout::new();
+        let mut fwd_slot = vec![0usize; len];
+        for (j, slot) in fwd_slot.iter_mut().enumerate() {
+            *slot = lay.alloc(n * dim(j));
+        }
+        let max_dim = graph.nodes().iter().map(|nd| nd.dim).max().unwrap_or(0);
+        let scratch_len = n * max_dim;
+        let scratch_slot = lay.alloc(scratch_len);
+        let mut gbar_slot = vec![usize::MAX; len];
+        let mut has = vec![false; len];
+        gbar_slot[out_id] = lay.alloc(n * dim(out_id));
+        has[out_id] = true;
+        for j in (0..len).rev() {
+            if is_input(j) {
+                continue;
+            }
+            if !has[j] {
+                // Never-contributed node: the executor zero-fills a block
+                // of its own (mirroring the reference's untracked zeros).
+                gbar_slot[j] = lay.alloc(n * dim(j));
+                has[j] = true;
+            }
+            for &p in &graph.node(j).inputs {
+                if !has[p] {
+                    gbar_slot[p] = lay.alloc(n * dim(p));
+                    has[p] = true;
+                }
+            }
+            lay.free(gbar_slot[j], n * dim(j));
+            lay.free(fwd_slot[j], n * dim(j));
+        }
+        let slab_per_row = lay.high_water();
+
+        // ---- exact peak replay (the reference PeakTracker's events) -----
+        let mut cur = 0u64;
+        let mut peak = 0u64;
+        fn bump(cur: &mut u64, peak: &mut u64, x: u64) {
+            *cur += x;
+            if *cur > *peak {
+                *peak = *cur;
+            }
+        }
+        for j in 0..len {
+            bump(&mut cur, &mut peak, (n * dim(j)) as u64);
+        }
+        bump(&mut cur, &mut peak, (n * dim(out_id)) as u64);
+        let mut tracked = vec![false; len];
+        tracked[out_id] = true;
+        for j in (0..len).rev() {
+            if is_input(j) {
+                continue;
+            }
+            for &p in &graph.node(j).inputs {
+                if !tracked[p] {
+                    bump(&mut cur, &mut peak, (n * dim(p)) as u64);
+                    tracked[p] = true;
+                }
+            }
+            // ∇v̄^j consumed; its forward tangent dies with it. (A node
+            // that never received a contribution frees untracked zeros —
+            // the reference's tracker saturates identically.)
+            cur = cur.saturating_sub((n * dim(j)) as u64);
+            cur = cur.saturating_sub((n * dim(j)) as u64);
+        }
+
+        // ---- exact per-row cost (mirrors the reference charge by charge)
+        let cost_per_row = cost_per_row(graph, n);
+
+        HessianPlan {
+            steps,
+            fwd_slot,
+            gbar_slot,
+            scratch_slot,
+            scratch_len,
+            out_id,
+            n,
+            slab_per_row,
+            cost_per_row,
+            peak_per_row: peak,
+            key: hessian_key(graph),
+            identity_seed: OnceLock::new(),
+        }
+    }
+
+    pub fn key(&self) -> HessianKey {
+        self.key
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.n
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.fwd_slot.len()
+    }
+
+    /// Per-row slab scalars; one shard's slab is `slab_per_row · rows`.
+    pub fn slab_per_row(&self) -> usize {
+        self.slab_per_row
+    }
+
+    /// Slab length (f64 scalars) for a `batch`-row execution.
+    pub fn slab_len(&self, batch: usize) -> usize {
+        self.slab_per_row * batch
+    }
+
+    /// Exact FLOP count of a `batch`-row execution — identical to the
+    /// reference path's runtime accumulation. The lower-order terms are
+    /// engine configuration, not plan structure, so they are parameters.
+    pub fn cost(&self, batch: usize, has_b: bool, has_c: bool) -> Cost {
+        let mut c = Cost {
+            muls: self.cost_per_row.muls * batch as u64,
+            adds: self.cost_per_row.adds * batch as u64,
+        };
+        if has_b {
+            c.muls += (batch * self.n) as u64;
+        }
+        if has_c {
+            c.muls += batch as u64;
+        }
+        c
+    }
+
+    /// Exact peak live tangent bytes of a `batch`-row execution — the
+    /// Theorem 2.2 `M₂` measurement, replayed from the reference path's
+    /// alloc/free event order.
+    pub fn peak_tangent_bytes(&self, batch: usize) -> u64 {
+        self.peak_per_row * 8 * batch as u64
+    }
+
+    /// The cached `I_N` Jacobian seed (eq. 13), built on first use.
+    pub fn identity_seed(&self) -> &Tensor {
+        self.identity_seed.get_or_init(|| Tensor::eye(self.n))
+    }
+}
+
+/// Every charge the reference path accumulates, per batch row: the forward
+/// Jacobian (eq. 13 via `propagate_tangent`), the eq. 12 adjoint sweep,
+/// the eq. 14 second-order reverse sweep, and the `A`-contraction.
+fn cost_per_row(graph: &Graph, n: usize) -> Cost {
+    let mut c = Cost::zero();
+    for node in graph.nodes() {
+        let d = node.dim;
+        match &node.op {
+            Op::Input { .. } | Op::Slice { .. } | Op::Concat => {}
+            Op::Linear { weight, .. } => {
+                let (o, i) = (weight.dims()[0], weight.dims()[1]);
+                // forward n·o·i (+adds), backward o·i (+adds),
+                // sweep n·o·i (+adds).
+                c.muls += (2 * n * o * i + o * i) as u64;
+                c.adds += (2 * n * o * i + o * i) as u64;
+            }
+            Op::Activation { .. } => {
+                // forward n·d; backward d; sweep d + 2·n·d (+ n·d adds).
+                c.muls += (n * d + d + d + 2 * n * d) as u64;
+                c.adds += (n * d) as u64;
+            }
+            Op::Add => {
+                let k = node.inputs.len();
+                // forward (k−1)·n·d adds; backward k·d adds.
+                c.adds += ((k - 1) * n * d + k * d) as u64;
+            }
+            Op::Mul => {
+                let k = node.inputs.len();
+                // forward: per parent (k−1)·d + n·d muls, n·d adds.
+                c.muls += (k * ((k - 1) * d + n * d)) as u64;
+                c.adds += (k * n * d) as u64;
+                // backward: per parent (k−1)·d muls.
+                c.muls += (k * (k - 1) * d) as u64;
+                // sweep: per parent n·d + (k−1)·(d + n·d) muls,
+                // (k−1)·n·d adds.
+                c.muls += (k * (n * d + (k - 1) * (d + n * d))) as u64;
+                c.adds += (k * (k - 1) * n * d) as u64;
+            }
+            Op::SumReduce => {
+                let pd = graph.node(node.inputs[0]).dim;
+                c.adds += (n * pd) as u64;
+            }
+        }
+    }
+    // Contraction Σ a_ij H_ij.
+    c.muls += (n * n) as u64;
+    c.adds += (n * n) as u64;
+    c
+}
+
+// ---- plan cache ----------------------------------------------------------
+
+/// Bound on retained plans (oldest evicted past this).
+pub const HESSIAN_CACHE_CAP: usize = 32;
+
+/// A keyed Hessian-plan cache (compile outside the lock; first insert wins
+/// on a race) — the Hessian twin of [`super::PlanCache`].
+pub struct HessianPlanCache {
+    entries: Mutex<Vec<(HessianKey, Arc<HessianPlan>)>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Hit/miss counters plus current occupancy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HessianCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl HessianPlanCache {
+    pub const fn new() -> Self {
+        Self {
+            entries: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch the plan for `graph`, compiling on first use.
+    pub fn get_or_compile(&self, graph: &Graph) -> Arc<HessianPlan> {
+        let key = hessian_key(graph);
+        {
+            let entries = self.entries.lock().expect("hessian cache poisoned");
+            if let Some((_, p)) = entries.iter().find(|(k, _)| *k == key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(p);
+            }
+        }
+        let plan = Arc::new(HessianPlan::compile(graph));
+        let mut entries = self.entries.lock().expect("hessian cache poisoned");
+        if let Some((_, p)) = entries.iter().find(|(k, _)| *k == key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(p);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        if entries.len() >= HESSIAN_CACHE_CAP {
+            entries.remove(0);
+        }
+        entries.push((key, Arc::clone(&plan)));
+        plan
+    }
+
+    pub fn stats(&self) -> HessianCacheStats {
+        HessianCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.entries.lock().expect("hessian cache poisoned").len(),
+        }
+    }
+
+    /// Drop every retained plan (counters are kept).
+    pub fn clear(&self) {
+        self.entries.lock().expect("hessian cache poisoned").clear();
+    }
+}
+
+impl Default for HessianPlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+static GLOBAL: HessianPlanCache = HessianPlanCache::new();
+
+/// The process-wide Hessian-plan cache used by the engine's `compute*`
+/// wrappers and shared with program-held plans.
+pub fn global_hessian_cache() -> &'static HessianPlanCache {
+    &GLOBAL
+}
+
+// ---- the planned Hessian pass --------------------------------------------
+
+fn block(slot: usize, units: usize, batch: usize) -> Range<usize> {
+    let lo = slot * batch;
+    lo..lo + units * batch
+}
+
+/// Execute the compiled plan on `x: [batch, N]` with `slab` as the only
+/// tangent storage. Arithmetic is the reference path's, through the shared
+/// kernels, so results — values, gradient, Hessian, `L[φ]` — are
+/// bit-identical to [`crate::autodiff::HessianEngine::compute_reference`];
+/// `cost` and `peak_tangent_bytes` are the plan's exact analytic replay of
+/// the reference's measured counters.
+pub fn execute_hessian(
+    plan: &HessianPlan,
+    graph: &Graph,
+    a: &Tensor,
+    b_coef: Option<&[f64]>,
+    c_coef: Option<f64>,
+    x: &Tensor,
+    slab: &mut Vec<f64>,
+) -> HessianResult {
+    assert_eq!(x.rank(), 2, "input must be [batch, N]");
+    let n = plan.n;
+    let batch = x.dims()[0];
+    assert_eq!(x.dims()[1], n, "input dim mismatch");
+    assert_eq!(a.dims()[0], n, "A must be N×N with N = input dim");
+    assert_eq!(graph.len(), plan.node_count(), "plan/graph mismatch");
+    let out_id = plan.out_id;
+    assert_eq!(
+        graph.node(out_id).dim,
+        1,
+        "Hessian baseline expects a scalar-output graph"
+    );
+    let need = plan.slab_len(batch);
+    if slab.len() < need {
+        slab.resize(need, 0.0);
+    }
+    let slab = &mut slab[..need];
+    let dim = |j: usize| graph.node(j).dim;
+    let fwd = |j: usize| block(plan.fwd_slot[j], n * dim(j), batch);
+    let gbar = |j: usize| {
+        debug_assert_ne!(plan.gbar_slot[j], usize::MAX, "gbar slot unassigned");
+        block(plan.gbar_slot[j], n * dim(j), batch)
+    };
+
+    // (1) forward values (the schedule is the topological node order).
+    let values = graph.eval_all(x);
+
+    // (2) forward Jacobian tangents (eq. 13) on the slab, schedule-driven.
+    let seed = plan.identity_seed();
+    for step in plan.steps.iter() {
+        forward_node(plan, graph, seed, &values, batch, slab, step.node, &step.kind);
+        if let StepKind::Linear { fused_act: Some(ai) } = &step.kind {
+            forward_node(
+                plan,
+                graph,
+                seed,
+                &values,
+                batch,
+                slab,
+                *ai,
+                &StepKind::Activation,
+            );
+        }
+    }
+
+    // (3) reverse adjoints (eq. 12) — [batch, d] buffers, no tangents.
+    let ones = Tensor::full(&[batch, 1], 1.0);
+    let bw = backward(graph, &values, &ones, false);
+
+    // (4) second-order reverse sweep (eq. 14) on the slab, reverse
+    // schedule order (= reverse node order, fused steps expanded).
+    let mut has_gbar = vec![false; graph.len()];
+    {
+        let (win, _ros) = carve1(slab, &gbar(out_id));
+        win.fill(0.0);
+    }
+    has_gbar[out_id] = true;
+    for j in (0..graph.len()).rev() {
+        let node = graph.node(j);
+        if matches!(node.op, Op::Input { .. }) {
+            // Keep: its ∇v̄ is a block of Hessian rows, extracted below.
+            continue;
+        }
+        if !has_gbar[j] {
+            // Node does not influence the output; nothing flows.
+            let (win, _ros) = carve1(slab, &gbar(j));
+            win.fill(0.0);
+            has_gbar[j] = true;
+        }
+        let d = node.dim;
+        let vbar_j = bw.adjoints[j].data();
+        match &node.op {
+            Op::Input { .. } => unreachable!(),
+            Op::Linear { weight, .. } => {
+                let p = node.inputs[0];
+                let in_d = weight.dims()[1];
+                let scr = scratch_window(plan, batch, n * in_d);
+                {
+                    let (win, ros) = carve1(slab, &scr);
+                    let gj = rd(&ros, gbar(j));
+                    kernels::hess_linear_reverse(weight, batch * n, gj, win);
+                }
+                merge_contrib(slab, &scr, &gbar(p), &mut has_gbar[p]);
+            }
+            Op::Activation { act } => {
+                let p = node.inputs[0];
+                let scr = scratch_window(plan, batch, n * d);
+                {
+                    let (win, ros) = carve1(slab, &scr);
+                    let gj = rd(&ros, gbar(j));
+                    let gp = rd(&ros, fwd(p));
+                    kernels::hess_activation_reverse(
+                        *act,
+                        batch,
+                        n,
+                        d,
+                        values[p].data(),
+                        vbar_j,
+                        gj,
+                        gp,
+                        win,
+                    );
+                }
+                merge_contrib(slab, &scr, &gbar(p), &mut has_gbar[p]);
+            }
+            Op::Slice { start, len } => {
+                let p = node.inputs[0];
+                let pd = dim(p);
+                let scr = scratch_window(plan, batch, n * pd);
+                {
+                    let (win, ros) = carve1(slab, &scr);
+                    let gj = rd(&ros, gbar(j));
+                    win.fill(0.0);
+                    for r in 0..batch * n {
+                        win[r * pd + start..r * pd + start + len]
+                            .copy_from_slice(&gj[r * len..(r + 1) * len]);
+                    }
+                }
+                merge_contrib(slab, &scr, &gbar(p), &mut has_gbar[p]);
+            }
+            Op::Add => {
+                for &p in &node.inputs {
+                    // contrib = ∇v̄^j verbatim.
+                    let scr = scratch_window(plan, batch, n * d);
+                    {
+                        let (win, ros) = carve1(slab, &scr);
+                        win.copy_from_slice(rd(&ros, gbar(j)));
+                    }
+                    merge_contrib(slab, &scr, &gbar(p), &mut has_gbar[p]);
+                }
+            }
+            Op::Mul => {
+                for (pi, &p) in node.inputs.iter().enumerate() {
+                    let scr = scratch_window(plan, batch, n * d);
+                    {
+                        let (win, ros) = carve1(slab, &scr);
+                        let gj = rd(&ros, gbar(j));
+                        let pvals: Vec<&[f64]> =
+                            node.inputs.iter().map(|&q| values[q].data()).collect();
+                        let ptans: Vec<&[f64]> =
+                            node.inputs.iter().map(|&q| rd(&ros, fwd(q))).collect();
+                        kernels::hess_mul_reverse_parent(
+                            batch, n, d, pi, &pvals, vbar_j, gj, &ptans, win,
+                        );
+                    }
+                    merge_contrib(slab, &scr, &gbar(p), &mut has_gbar[p]);
+                }
+            }
+            Op::SumReduce => {
+                let p = node.inputs[0];
+                let pd = dim(p);
+                let scr = scratch_window(plan, batch, n * pd);
+                {
+                    let (win, ros) = carve1(slab, &scr);
+                    let gj = rd(&ros, gbar(j));
+                    for r in 0..batch * n {
+                        let v = gj[r];
+                        for c in win[r * pd..(r + 1) * pd].iter_mut() {
+                            *c = v;
+                        }
+                    }
+                }
+                merge_contrib(slab, &scr, &gbar(p), &mut has_gbar[p]);
+            }
+            Op::Concat => {
+                let mut off = 0usize;
+                for &p in &node.inputs {
+                    let pd = dim(p);
+                    let scr = scratch_window(plan, batch, n * pd);
+                    {
+                        let (win, ros) = carve1(slab, &scr);
+                        let gj = rd(&ros, gbar(j));
+                        for r in 0..batch * n {
+                            win[r * pd..(r + 1) * pd]
+                                .copy_from_slice(&gj[r * d + off..r * d + off + pd]);
+                        }
+                    }
+                    merge_contrib(slab, &scr, &gbar(p), &mut has_gbar[p]);
+                    off += pd;
+                }
+            }
+        }
+    }
+
+    // Assemble the Hessian from input-node ∇v̄ blocks.
+    let mut hessian = Tensor::zeros(&[batch, n, n]);
+    let mut off = 0usize;
+    for &i in graph.input_ids() {
+        let d = dim(i);
+        if has_gbar[i] {
+            let g = &slab[gbar(i)];
+            for b in 0..batch {
+                for k in 0..n {
+                    let row = &g[(b * n + k) * d..(b * n + k + 1) * d];
+                    hessian.data_mut()[(b * n + k) * n + off..(b * n + k) * n + off + d]
+                        .copy_from_slice(row);
+                }
+            }
+        }
+        off += d;
+    }
+
+    // (5) contract with A (+ optional lower-order terms).
+    let mut op_vals = Tensor::zeros(&[batch, 1]);
+    let ad = a.data();
+    for b in 0..batch {
+        let hb = &hessian.data()[b * n * n..(b + 1) * n * n];
+        let mut acc = 0.0;
+        for idx in 0..n * n {
+            acc += ad[idx] * hb[idx];
+        }
+        op_vals.set(b, 0, acc);
+    }
+
+    // Gradient from the eq. 12 adjoints at the input nodes (the reference
+    // recomputes them via `input_gradient`; same deterministic sweep, same
+    // bits — minus one redundant backward pass).
+    let mut gradient = Tensor::zeros(&[batch, n]);
+    let mut off = 0usize;
+    for &i in graph.input_ids() {
+        let d = dim(i);
+        for b in 0..batch {
+            gradient.row_mut(b)[off..off + d].copy_from_slice(bw.adjoints[i].row(b));
+        }
+        off += d;
+    }
+    if let Some(bv) = b_coef {
+        for b in 0..batch {
+            let extra: f64 = bv.iter().zip(gradient.row(b)).map(|(&c, &g)| c * g).sum();
+            op_vals.set(b, 0, op_vals.at(b, 0) + extra);
+        }
+    }
+    let values_out = values[out_id].clone();
+    if let Some(c) = c_coef {
+        for b in 0..batch {
+            op_vals.set(b, 0, op_vals.at(b, 0) + c * values_out.at(b, 0));
+        }
+    }
+
+    HessianResult {
+        values: values_out,
+        gradient,
+        hessian,
+        operator_values: op_vals,
+        cost: plan.cost(batch, b_coef.is_some(), c_coef.is_some()),
+        peak_tangent_bytes: plan.peak_tangent_bytes(batch),
+    }
+}
+
+/// The first `units·batch` scalars of the contribution scratch block.
+fn scratch_window(plan: &HessianPlan, batch: usize, units: usize) -> Range<usize> {
+    assert!(units <= plan.scratch_len, "contribution scratch overflow");
+    let lo = plan.scratch_slot * batch;
+    lo..lo + units * batch
+}
+
+/// Merge the scratch contribution into a parent's `∇v̄` block: copy on the
+/// first contribution, elementwise add thereafter (the reference path's
+/// `accumulate`).
+fn merge_contrib(slab: &mut [f64], scr: &Range<usize>, dst: &Range<usize>, has: &mut bool) {
+    let (win, ros) = carve1(slab, dst);
+    let src = rd(&ros, scr.start..scr.start + win.len());
+    if *has {
+        for (d, &s) in win.iter_mut().zip(src.iter()) {
+            *d += s;
+        }
+    } else {
+        win.copy_from_slice(src);
+        *has = true;
+    }
+}
+
+/// One node of the forward Jacobian sweep (eq. 13) on the slab — the same
+/// per-op arithmetic `propagate_tangent` runs on owned tensors, via the
+/// shared kernels.
+#[allow(clippy::too_many_arguments)]
+fn forward_node(
+    plan: &HessianPlan,
+    graph: &Graph,
+    seed: &Tensor,
+    values: &[Tensor],
+    batch: usize,
+    slab: &mut [f64],
+    id: usize,
+    kind: &StepKind,
+) {
+    let n = plan.n;
+    let node = graph.node(id);
+    let d = node.dim;
+    let fwd = |j: usize| block(plan.fwd_slot[j], n * graph.node(j).dim, batch);
+    let w = fwd(id);
+    let (win, ros) = carve1(slab, &w);
+    match &node.op {
+        Op::Input { .. } => {
+            let in_off = match kind {
+                StepKind::Input { in_off } => *in_off,
+                _ => unreachable!("input node scheduled as non-input step"),
+            };
+            for b in 0..batch {
+                for k in 0..n {
+                    let o = (b * n + k) * d;
+                    win[o..o + d].copy_from_slice(&seed.row(k)[in_off..in_off + d]);
+                }
+            }
+        }
+        Op::Linear { weight, .. } => {
+            let p = node.inputs[0];
+            let in_d = weight.dims()[1];
+            let pg = rd(&ros, fwd(p));
+            win.fill(0.0);
+            matmul_nt_into(pg, weight.data(), win, batch * n, in_d, d);
+        }
+        Op::Activation { act } => {
+            let p = node.inputs[0];
+            let pg = rd(&ros, fwd(p));
+            kernels::jac_activation(*act, batch, n, d, values[p].data(), pg, win);
+        }
+        Op::Slice { start, len } => {
+            let p = node.inputs[0];
+            let pd = graph.node(p).dim;
+            let pg = rd(&ros, fwd(p));
+            for r in 0..batch * n {
+                win[r * len..(r + 1) * len]
+                    .copy_from_slice(&pg[r * pd + start..r * pd + start + len]);
+            }
+        }
+        Op::Add => {
+            for (pi, &p) in node.inputs.iter().enumerate() {
+                let pg = rd(&ros, fwd(p));
+                if pi == 0 {
+                    win.copy_from_slice(pg);
+                } else {
+                    for (dst, &sv) in win.iter_mut().zip(pg.iter()) {
+                        *dst += sv;
+                    }
+                }
+            }
+        }
+        Op::Mul => {
+            let pvals: Vec<&[f64]> = node.inputs.iter().map(|&q| values[q].data()).collect();
+            let ptans: Vec<&[f64]> = node.inputs.iter().map(|&q| rd(&ros, fwd(q))).collect();
+            kernels::jac_mul(batch, n, d, &pvals, &ptans, win);
+        }
+        Op::SumReduce => {
+            let p = node.inputs[0];
+            let pd = graph.node(p).dim;
+            let pg = rd(&ros, fwd(p));
+            for r in 0..batch * n {
+                win[r] = pg[r * pd..(r + 1) * pd].iter().sum::<f64>();
+            }
+        }
+        Op::Concat => {
+            let mut off = 0usize;
+            for &p in &node.inputs {
+                let pd = graph.node(p).dim;
+                let pg = rd(&ros, fwd(p));
+                for r in 0..batch * n {
+                    win[r * d + off..r * d + off + pd]
+                        .copy_from_slice(&pg[r * pd..(r + 1) * pd]);
+                }
+                off += pd;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{builder::random_layers, mlp_graph, Act};
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn plan_is_batch_linear_and_keyed_by_structure() {
+        let mut rng = Xoshiro256::new(61);
+        let layers = random_layers(&[4, 9, 1], &mut rng);
+        let layers_moved = random_layers(&[4, 9, 1], &mut rng);
+        let g1 = mlp_graph(&layers, Act::Tanh);
+        let g2 = mlp_graph(&layers_moved, Act::Tanh);
+        let g3 = mlp_graph(&random_layers(&[4, 10, 1], &mut rng), Act::Tanh);
+        assert_eq!(hessian_key(&g1), hessian_key(&g2), "values must not key");
+        assert_ne!(hessian_key(&g1), hessian_key(&g3), "structure must key");
+        let p = HessianPlan::compile(&g1);
+        let c1 = p.cost(1, false, false);
+        let c7 = p.cost(7, false, false);
+        assert_eq!(c7.muls, 7 * c1.muls);
+        assert_eq!(c7.adds, 7 * c1.adds);
+        assert_eq!(p.peak_tangent_bytes(7), 7 * p.peak_tangent_bytes(1));
+        assert_eq!(p.slab_len(7), 7 * p.slab_per_row());
+        assert!(p.slab_per_row() > 0);
+    }
+
+    #[test]
+    fn cache_hits_on_structure() {
+        let cache = HessianPlanCache::new();
+        let mut rng = Xoshiro256::new(62);
+        let layers = random_layers(&[3, 6, 1], &mut rng);
+        let layers2 = random_layers(&[3, 6, 1], &mut rng);
+        let a = cache.get_or_compile(&mlp_graph(&layers, Act::Sin));
+        let b = cache.get_or_compile(&mlp_graph(&layers2, Act::Sin));
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.stats().misses, 1);
+    }
+}

@@ -1,0 +1,597 @@
+//! **Shared op kernels** — the single home of every numeric propagation
+//! rule the engines execute, parameterized by a *storage policy*: callers
+//! resolve their storage (static slab slots, arena-recycled tensors, or
+//! retained tape tensors) into flat `f64` slices and the kernels do the
+//! arithmetic. One definition, N storage policies:
+//!
+//! * the **slab executor** ([`crate::plan::exec::execute_dof`]) passes
+//!   windows of the per-shard slab;
+//! * the **retain-all tape executor** ([`crate::plan::exec::execute_tape`])
+//!   passes owned tensors that outlive the pass;
+//! * the **reference interpreter**
+//!   ([`crate::autodiff::DofEngine::compute_with_arena`]) passes
+//!   arena-recycled buffers — it stays the differential-testing oracle, but
+//!   an oracle that *shares* these kernels, so a numeric fix to e.g. the
+//!   `Mul` cross term lands in exactly one place;
+//! * the **Hessian baseline** shares the forward-Jacobian kernels
+//!   ([`jac_activation`], [`jac_mul`]) and the eq. 14 reverse kernels
+//!   ([`hess_activation_reverse`], [`hess_mul_reverse_parent`],
+//!   [`hess_linear_reverse`]) between its program-scheduled slab executor
+//!   ([`crate::plan::hessian`]) and the retained reference path
+//!   ([`crate::autodiff::HessianEngine::compute_reference`]);
+//! * the **jet subsystem**'s per-component kernels ([`compose5`],
+//!   [`cauchy5`]) live here too, shared by its slab executor and
+//!   interpreter.
+//!
+//! Layout contract (DOF tuple kernels): value/scalar streams are flat
+//! `[batch, d]` row-major slices; tangents are flat `[batch·t, d]` with row
+//! index `b·t + kk`; `active[kk]` is the global `L`-row index of tangent
+//! row `kk` (the §3.2 active set — the full `0..r` identity in dense mode),
+//! and `signs` is the full `D` diagonal indexed by those global rows.
+//! Kernels either fully overwrite their destinations or zero-fill them
+//! first, so callers may hand them non-zeroed scratch.
+//!
+//! FLOP accounting stays with the callers (the interpreter accumulates at
+//! runtime, the programs carry exact analytic counts) — the kernels are
+//! pure arithmetic, which is what keeps one definition serving executors
+//! with different accounting conventions.
+//!
+//! Bit-identity: for a fixed op the kernels perform the same floating-point
+//! operations in the same order regardless of the storage policy, so the
+//! equivalence suites (`plan_equivalence.rs`, `jet_equivalence.rs`,
+//! `cross_engine_fuzz.rs`) assert planned ≡ interpreter *bitwise* — by
+//! construction, not by coincidence.
+
+use crate::graph::Act;
+use crate::tensor::{matmul_into, matmul_nt_into, Tensor};
+
+// ---- DOF tuple kernels (eqs. 7–9) ----------------------------------------
+
+/// Seed an input node's `(v, s, g)` tuple: `v` from the batch rows of `x`
+/// at flat-input offset `in_off`, `s` from the first-order coefficients
+/// `b` (zero when absent), `g` from the active rows of `L`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn input_seed(
+    x: &Tensor,
+    in_off: usize,
+    d: usize,
+    batch: usize,
+    b_coef: Option<&[f64]>,
+    l: &Tensor,
+    active: &[usize],
+    v: &mut [f64],
+    s: &mut [f64],
+    g: &mut [f64],
+) {
+    let t = active.len();
+    debug_assert_eq!(v.len(), batch * d);
+    debug_assert_eq!(s.len(), batch * d);
+    debug_assert_eq!(g.len(), batch * t * d);
+    for b in 0..batch {
+        v[b * d..(b + 1) * d].copy_from_slice(&x.row(b)[in_off..in_off + d]);
+    }
+    match b_coef {
+        Some(bv) => {
+            for b in 0..batch {
+                s[b * d..(b + 1) * d].copy_from_slice(&bv[in_off..in_off + d]);
+            }
+        }
+        None => s.fill(0.0),
+    }
+    for b in 0..batch {
+        for (kk, &k) in active.iter().enumerate() {
+            let o = (b * t + kk) * d;
+            g[o..o + d].copy_from_slice(&l.row(k)[in_off..in_off + d]);
+        }
+    }
+}
+
+/// The affine node — one half of the **fused `Linear → Activation`** step
+/// (the other half is [`activation_forward`]; the schedule-level pairing is
+/// shared via [`crate::plan::build_schedule`]).
+///
+/// All three streams are right-products by `Wᵀ`: stack `[v; s; G]` of the
+/// parent into `stacked` (`batch·(t+2)` rows of `in_d`), run ONE GEMM into
+/// the zero-filled `gout`, scatter back into the node's streams, and add
+/// the bias on the value rows only.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn linear_forward(
+    weight: &Tensor,
+    bias: &[f64],
+    batch: usize,
+    t: usize,
+    pv: &[f64],
+    ps: &[f64],
+    pg: &[f64],
+    stacked: &mut [f64],
+    gout: &mut [f64],
+    v: &mut [f64],
+    s: &mut [f64],
+    g: &mut [f64],
+) {
+    let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+    let rows = batch * (t + 2);
+    debug_assert_eq!(stacked.len(), rows * in_d);
+    debug_assert_eq!(gout.len(), rows * out_d);
+    stacked[..batch * in_d].copy_from_slice(pv);
+    stacked[batch * in_d..2 * batch * in_d].copy_from_slice(ps);
+    stacked[2 * batch * in_d..].copy_from_slice(pg);
+    gout.fill(0.0);
+    matmul_nt_into(stacked, weight.data(), gout, rows, in_d, out_d);
+    v.copy_from_slice(&gout[..batch * out_d]);
+    s.copy_from_slice(&gout[batch * out_d..2 * batch * out_d]);
+    g.copy_from_slice(&gout[2 * batch * out_d..]);
+    for b in 0..batch {
+        for (o, &bi) in v[b * out_d..(b + 1) * out_d].iter_mut().zip(bias.iter()) {
+            *o += bi;
+        }
+    }
+}
+
+/// The elementwise node — the other half of the fused
+/// `Linear → Activation` step: `v = σ(h)`, then one fused pass per tangent
+/// row that reads `g` once, accumulates the signed square into the eq. 9
+/// quadratic and writes the `σ'`-scaled tangent, and finally the scalar
+/// stream `s = σ''(h)·quad + σ'(h)·s_parent`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn activation_forward(
+    act: Act,
+    signs: &[f64],
+    active: &[usize],
+    batch: usize,
+    d: usize,
+    h: &[f64],
+    ps: &[f64],
+    pg: &[f64],
+    v: &mut [f64],
+    s: &mut [f64],
+    g: &mut [f64],
+) {
+    let t = active.len();
+    debug_assert_eq!(g.len(), batch * t * d);
+    for (dst, &src) in v.iter_mut().zip(h.iter()) {
+        *dst = act.f(src);
+    }
+    let mut df = vec![0.0; d];
+    let mut quad = vec![0.0; d];
+    for b in 0..batch {
+        let hrow = &h[b * d..(b + 1) * d];
+        for (dv, &hv) in df.iter_mut().zip(hrow.iter()) {
+            *dv = act.df(hv);
+        }
+        quad.iter_mut().for_each(|q| *q = 0.0);
+        for (kk, &k) in active.iter().enumerate() {
+            let sign = signs[k];
+            let src = &pg[(b * t + kk) * d..(b * t + kk + 1) * d];
+            let dst = &mut g[(b * t + kk) * d..(b * t + kk + 1) * d];
+            for c in 0..d {
+                let gv = src[c];
+                quad[c] += sign * gv * gv;
+                dst[c] = df[c] * gv;
+            }
+        }
+        let psr = &ps[b * d..(b + 1) * d];
+        let sp = &mut s[b * d..(b + 1) * d];
+        for c in 0..d {
+            sp[c] = act.d2f(hrow[c]) * quad[c] + df[c] * psr[c];
+        }
+    }
+}
+
+/// The Hadamard product node — the eq. 9 product rule, including the
+/// **`Mul` cross term** `2·Σ_{p<q} (Π_{r≠p,q} v^r) ⊙ (g^pᵀ D g^q)`.
+///
+/// `pvals`/`psums` are the parents' value/scalar streams; `aligned[pi]` is
+/// parent `pi`'s tangent already expanded onto this node's union active set
+/// (zero-filled missing rows) — union alignment is storage policy, the
+/// product rule is not. Fully overwrites `v` and zero-fills `s`/`g` before
+/// accumulating.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mul_forward(
+    signs: &[f64],
+    active: &[usize],
+    batch: usize,
+    d: usize,
+    pvals: &[&[f64]],
+    psums: &[&[f64]],
+    aligned: &[&[f64]],
+    v: &mut [f64],
+    s: &mut [f64],
+    g: &mut [f64],
+) {
+    let t = active.len();
+    let k = pvals.len();
+    debug_assert_eq!(psums.len(), k);
+    debug_assert_eq!(aligned.len(), k);
+    debug_assert_eq!(g.len(), batch * t * d);
+
+    // Value chain v = Π_p v^p.
+    v.copy_from_slice(pvals[0]);
+    for pv in &pvals[1..] {
+        for (dst, &sv) in v.iter_mut().zip(pv.iter()) {
+            *dst *= sv;
+        }
+    }
+    s.fill(0.0);
+    g.fill(0.0);
+
+    let mut coef = vec![1.0; d];
+    let mut coef2 = vec![1.0; d];
+    let mut cross = vec![0.0; d];
+    for b in 0..batch {
+        for pi in 0..k {
+            // Leave-one-out coefficient Π_{q≠pi} v^q.
+            coef.iter_mut().for_each(|c| *c = 1.0);
+            for (qi, pv) in pvals.iter().enumerate() {
+                if qi != pi {
+                    for (c, &xv) in coef.iter_mut().zip(&pv[b * d..(b + 1) * d]) {
+                        *c *= xv;
+                    }
+                }
+            }
+            // Tangent stream (eq. 8 term).
+            for kk in 0..t {
+                let src = &aligned[pi][(b * t + kk) * d..(b * t + kk + 1) * d];
+                let dst = &mut g[(b * t + kk) * d..(b * t + kk + 1) * d];
+                for c in 0..d {
+                    dst[c] += coef[c] * src[c];
+                }
+            }
+            // Scalar stream, first-order part.
+            {
+                let psr = &psums[pi][b * d..(b + 1) * d];
+                let srow = &mut s[b * d..(b + 1) * d];
+                for c in 0..d {
+                    srow[c] += coef[c] * psr[c];
+                }
+            }
+            // Cross term over unordered pairs (pi, qi).
+            for qi in (pi + 1)..k {
+                coef2.iter_mut().for_each(|c| *c = 1.0);
+                for (ri, pv) in pvals.iter().enumerate() {
+                    if ri != pi && ri != qi {
+                        for (c, &xv) in coef2.iter_mut().zip(&pv[b * d..(b + 1) * d]) {
+                            *c *= xv;
+                        }
+                    }
+                }
+                cross.iter_mut().for_each(|c| *c = 0.0);
+                for (kk, &kglob) in active.iter().enumerate() {
+                    let sign = signs[kglob];
+                    let gp = &aligned[pi][(b * t + kk) * d..(b * t + kk + 1) * d];
+                    let gq = &aligned[qi][(b * t + kk) * d..(b * t + kk + 1) * d];
+                    for c in 0..d {
+                        cross[c] += sign * gp[c] * gq[c];
+                    }
+                }
+                let srow = &mut s[b * d..(b + 1) * d];
+                for c in 0..d {
+                    srow[c] += 2.0 * coef2[c] * cross[c];
+                }
+            }
+        }
+    }
+}
+
+// ---- forward-Jacobian kernels (eq. 13) -----------------------------------
+//
+// Width-t tangent propagation without the (v, s) streams — the Hessian
+// baseline's forward sweep, shared by `autodiff::forward_jacobian::
+// propagate_tangent` (owned tensors) and `plan::hessian` (slab slots).
+// Linear is a plain `G Wᵀ` GEMM and lives in `tensor::matmul_nt_into`;
+// Slice/Add/SumReduce/Concat are pure copies/sums.
+
+/// `G' = σ'(h) ⊙ G`, full assignment (σ' evaluated per (row, component),
+/// exactly as the pre-kernel interpreter did).
+pub(crate) fn jac_activation(
+    act: Act,
+    batch: usize,
+    t: usize,
+    d: usize,
+    h: &[f64],
+    pg: &[f64],
+    g: &mut [f64],
+) {
+    debug_assert_eq!(g.len(), batch * t * d);
+    for b in 0..batch {
+        let hrow = &h[b * d..(b + 1) * d];
+        for kk in 0..t {
+            let src = &pg[(b * t + kk) * d..(b * t + kk + 1) * d];
+            let dst = &mut g[(b * t + kk) * d..(b * t + kk + 1) * d];
+            for j in 0..d {
+                dst[j] = src[j] * act.df(hrow[j]);
+            }
+        }
+    }
+}
+
+/// `G' = Σ_p (Π_{q≠p} v^q) ⊙ G^p` — the first-order product rule on
+/// full-width tangents. Zero-fills `g` before accumulating.
+pub(crate) fn jac_mul(
+    batch: usize,
+    t: usize,
+    d: usize,
+    pvals: &[&[f64]],
+    ptangents: &[&[f64]],
+    g: &mut [f64],
+) {
+    let k = pvals.len();
+    debug_assert_eq!(ptangents.len(), k);
+    debug_assert_eq!(g.len(), batch * t * d);
+    g.fill(0.0);
+    for pi in 0..k {
+        for b in 0..batch {
+            let mut coef = vec![1.0; d];
+            for (qi, pv) in pvals.iter().enumerate() {
+                if qi != pi {
+                    for (c, &xv) in coef.iter_mut().zip(&pv[b * d..(b + 1) * d]) {
+                        *c *= xv;
+                    }
+                }
+            }
+            for kk in 0..t {
+                let src = &ptangents[pi][(b * t + kk) * d..(b * t + kk + 1) * d];
+                let dst = &mut g[(b * t + kk) * d..(b * t + kk + 1) * d];
+                for j in 0..d {
+                    dst[j] += coef[j] * src[j];
+                }
+            }
+        }
+    }
+}
+
+// ---- Hessian eq. 14 reverse kernels --------------------------------------
+//
+// Per-node contributions ∇v̄^j → ∇v̄^p of the second-order reverse sweep.
+// Each kernel fully assigns `contrib` (the caller merges it into the
+// parent's accumulator: copy on first contribution, add thereafter —
+// mirroring the reference path's `accumulate`).
+
+/// Linear: `contrib = ∇v̄^j · W` (no second-derivative term).
+pub(crate) fn hess_linear_reverse(
+    weight: &Tensor,
+    rows: usize,
+    gbar_j: &[f64],
+    contrib: &mut [f64],
+) {
+    let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+    debug_assert_eq!(gbar_j.len(), rows * out_d);
+    debug_assert_eq!(contrib.len(), rows * in_d);
+    contrib.fill(0.0);
+    matmul_into(gbar_j, weight.data(), contrib, rows, out_d, in_d);
+}
+
+/// Activation: `contrib = σ'(h) ⊙ ∇v̄^j + (σ''(h)·v̄^j) ⊙ ∇v^p` — the
+/// `|T|`-term of eq. 14 (`∇v^p` is the parent's forward tangent, still
+/// live across the reverse sweep).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn hess_activation_reverse(
+    act: Act,
+    batch: usize,
+    t: usize,
+    d: usize,
+    h: &[f64],
+    vbar: &[f64],
+    gbar_j: &[f64],
+    gp: &[f64],
+    contrib: &mut [f64],
+) {
+    debug_assert_eq!(contrib.len(), batch * t * d);
+    for b in 0..batch {
+        let hrow = &h[b * d..(b + 1) * d];
+        let coef1: Vec<f64> = hrow.iter().map(|&v| act.df(v)).collect();
+        let coef2: Vec<f64> = hrow
+            .iter()
+            .zip(&vbar[b * d..(b + 1) * d])
+            .map(|(&hv, &vb)| act.d2f(hv) * vb)
+            .collect();
+        for kk in 0..t {
+            let gj = &gbar_j[(b * t + kk) * d..(b * t + kk + 1) * d];
+            let gpt = &gp[(b * t + kk) * d..(b * t + kk + 1) * d];
+            let dst = &mut contrib[(b * t + kk) * d..(b * t + kk + 1) * d];
+            for c in 0..d {
+                dst[c] = coef1[c] * gj[c] + coef2[c] * gpt[c];
+            }
+        }
+    }
+}
+
+/// Mul, contribution to parent `pi`:
+/// `contrib = (Π_{q≠pi} v^q) ⊙ ∇v̄^j + Σ_{q≠pi} (Π_{r≠pi,q} v^r · v̄^j) ⊙ ∇v^q`
+/// — the Hessian-side cross term (`∇v^q` are the parents' forward
+/// tangents).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn hess_mul_reverse_parent(
+    batch: usize,
+    t: usize,
+    d: usize,
+    pi: usize,
+    pvals: &[&[f64]],
+    vbar: &[f64],
+    gbar_j: &[f64],
+    ptangents: &[&[f64]],
+    contrib: &mut [f64],
+) {
+    let k = pvals.len();
+    debug_assert_eq!(contrib.len(), batch * t * d);
+    for b in 0..batch {
+        let mut coefp = vec![1.0; d];
+        for (qi, pv) in pvals.iter().enumerate() {
+            if qi != pi {
+                for (cc, &v) in coefp.iter_mut().zip(&pv[b * d..(b + 1) * d]) {
+                    *cc *= v;
+                }
+            }
+        }
+        for kk in 0..t {
+            let gj = &gbar_j[(b * t + kk) * d..(b * t + kk + 1) * d];
+            let dst = &mut contrib[(b * t + kk) * d..(b * t + kk + 1) * d];
+            for c in 0..d {
+                dst[c] = coefp[c] * gj[c];
+            }
+        }
+        for qi in 0..k {
+            if qi == pi {
+                continue;
+            }
+            let mut coefpq = vec![1.0; d];
+            for (ri, pv) in pvals.iter().enumerate() {
+                if ri != pi && ri != qi {
+                    for (cc, &v) in coefpq.iter_mut().zip(&pv[b * d..(b + 1) * d]) {
+                        *cc *= v;
+                    }
+                }
+            }
+            let scal: Vec<f64> = coefpq
+                .iter()
+                .zip(&vbar[b * d..(b + 1) * d])
+                .map(|(&cc, &vb)| cc * vb)
+                .collect();
+            for kk in 0..t {
+                let gqt = &ptangents[qi][(b * t + kk) * d..(b * t + kk + 1) * d];
+                let dst = &mut contrib[(b * t + kk) * d..(b * t + kk + 1) * d];
+                for c in 0..d {
+                    dst[c] += scal[c] * gqt[c];
+                }
+            }
+        }
+    }
+}
+
+// ---- jet per-component kernels (Taylor mode) -----------------------------
+
+/// Faà di Bruno composition of σ over one scalar jet: `a[0..=k]` are the
+/// input Taylor coefficients (`a[0]` the pre-activation value), returns the
+/// output coefficients. Entries above `k` are ignored.
+///
+/// For `k ≥ 3` the caller must have validated σ via
+/// [`crate::jet::validate_graph`] (`d3f`/`d4f` return `Some`).
+#[inline]
+pub(crate) fn compose5(act: Act, k: usize, a: &[f64; 5]) -> [f64; 5] {
+    let mut y = [0.0; 5];
+    let h = a[0];
+    y[0] = act.f(h);
+    let d1 = act.df(h);
+    y[1] = d1 * a[1];
+    if k >= 2 {
+        let d2 = act.d2f(h);
+        y[2] = d1 * a[2] + 0.5 * d2 * a[1] * a[1];
+        if k >= 3 {
+            let d3 = act.d3f(h).expect("validated: σ''' available");
+            y[3] = d1 * a[3]
+                + d2 * a[1] * a[2]
+                + (d3 * (1.0 / 6.0)) * a[1] * a[1] * a[1];
+            if k >= 4 {
+                let d4 = act.d4f(h).expect("validated: σ'''' available");
+                y[4] = d1 * a[4]
+                    + d2 * (a[1] * a[3] + 0.5 * a[2] * a[2])
+                    + (0.5 * d3) * a[1] * a[1] * a[2]
+                    + (d4 * (1.0 / 24.0)) * a[1] * a[1] * a[1] * a[1];
+            }
+        }
+    }
+    y
+}
+
+/// Cauchy (truncated Taylor) product of two scalar jets:
+/// `out[m] = Σ_{i≤m} a[i]·b[m−i]`, ascending `i`.
+#[inline]
+pub(crate) fn cauchy5(k: usize, a: &[f64; 5], b: &[f64; 5]) -> [f64; 5] {
+    let mut out = [0.0; 5];
+    for m in 0..=k {
+        let mut acc = 0.0;
+        for i in 0..=m {
+            acc += a[i] * b[m - i];
+        }
+        out[m] = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// mul_forward against a hand-rolled 2-parent scalar case:
+    /// v = v₁v₂, g = v₂g₁ + v₁g₂, s = v₂s₁ + v₁s₂ + 2·Σ d_k g₁g₂.
+    #[test]
+    fn mul_kernel_matches_closed_form_two_parents() {
+        let signs = [1.0, -1.0];
+        let active = [0usize, 1];
+        let (batch, d) = (1usize, 1usize);
+        let (v1, v2) = (2.0, 3.0);
+        let (s1, s2) = (0.5, -0.25);
+        let g1 = [0.7, -0.2];
+        let g2 = [0.1, 0.4];
+        let pvals: Vec<&[f64]> = vec![&[v1], &[v2]];
+        let psums: Vec<&[f64]> = vec![&[s1], &[s2]];
+        let aligned: Vec<&[f64]> = vec![&g1, &g2];
+        let mut v = [0.0];
+        let mut s = [7.0]; // stale scratch; kernel must zero
+        let mut g = [7.0, 7.0];
+        mul_forward(
+            &signs, &active, batch, d, &pvals, &psums, &aligned, &mut v, &mut s, &mut g,
+        );
+        assert_eq!(v[0], v1 * v2);
+        assert_eq!(g[0], v2 * g1[0] + v1 * g2[0]);
+        assert_eq!(g[1], v2 * g1[1] + v1 * g2[1]);
+        let cross = 1.0 * g1[0] * g2[0] + (-1.0) * g1[1] * g2[1];
+        let want_s = v2 * s1 + v1 * s2 + 2.0 * cross;
+        assert!((s[0] - want_s).abs() < 1e-15, "{} vs {want_s}", s[0]);
+    }
+
+    /// activation_forward against the closed-form eq. 9 rule for σ = square.
+    #[test]
+    fn activation_kernel_matches_closed_form() {
+        let signs = [1.0];
+        let active = [0usize];
+        let (batch, d) = (1usize, 2usize);
+        let h = [0.5, -1.5];
+        let ps = [0.3, 0.6];
+        let pg = [2.0, -0.5];
+        let mut v = [0.0; 2];
+        let mut s = [0.0; 2];
+        let mut g = [0.0; 2];
+        activation_forward(
+            Act::Square,
+            &signs,
+            &active,
+            batch,
+            d,
+            &h,
+            &ps,
+            &pg,
+            &mut v,
+            &mut s,
+            &mut g,
+        );
+        for c in 0..2 {
+            assert_eq!(v[c], h[c] * h[c]);
+            assert_eq!(g[c], 2.0 * h[c] * pg[c]);
+            // s = σ''·g² + σ'·s_p = 2g² + 2h·s_p.
+            let want = 2.0 * pg[c] * pg[c] + 2.0 * h[c] * ps[c];
+            assert!((s[c] - want).abs() < 1e-15);
+        }
+    }
+
+    /// hess_mul_reverse_parent on a 2-parent product: the contribution to
+    /// parent 0 is v² ⊙ ∇v̄ + v̄ ⊙ ∇v¹.
+    #[test]
+    fn hess_mul_reverse_matches_closed_form() {
+        let (batch, t, d) = (1usize, 2usize, 1usize);
+        let pvals: Vec<&[f64]> = vec![&[2.0], &[3.0]];
+        let vbar = [0.5];
+        let gbar_j = [1.0, -1.0];
+        let g0 = [0.1, 0.2];
+        let g1 = [0.3, 0.4];
+        let ptangents: Vec<&[f64]> = vec![&g0, &g1];
+        let mut contrib = [0.0; 2];
+        hess_mul_reverse_parent(
+            batch, t, d, 0, &pvals, &vbar, &gbar_j, &ptangents, &mut contrib,
+        );
+        for kk in 0..2 {
+            let want = 3.0 * gbar_j[kk] + 0.5 * g1[kk];
+            assert!((contrib[kk] - want).abs() < 1e-15);
+        }
+    }
+}

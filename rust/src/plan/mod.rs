@@ -34,17 +34,18 @@
 
 pub mod cache;
 pub mod exec;
+pub mod hessian;
+pub(crate) mod kernels;
 pub mod layout;
 
 pub use cache::{global_cache, PlanCache, PlanCacheStats};
 
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 use crate::autodiff::flops::{graph_counts, CostModel, GraphCounts};
 use crate::autodiff::Cost;
 use crate::graph::{Act, Graph, Op};
 use crate::linalg::LdlDecomposition;
-use crate::tensor::Tensor;
 
 use layout::SlabLayout;
 
@@ -155,9 +156,9 @@ pub struct OperatorProgram {
     key: PlanKey,
     analytics: PlanAnalytics,
     counts: GraphCounts,
-    /// Lazily built `I_N` seed for the Hessian baseline (only programs a
-    /// Hessian executor actually touches pay the N×N allocation).
-    identity_seed: OnceLock<Tensor>,
+    /// Lazily attached program-scheduled Hessian plan (shared through the
+    /// global Hessian-plan cache; only baseline-running callers pay it).
+    hessian_plan: OnceLock<Arc<hessian::HessianPlan>>,
 }
 
 impl OperatorProgram {
@@ -275,7 +276,7 @@ impl OperatorProgram {
             key,
             analytics,
             counts,
-            identity_seed: OnceLock::new(),
+            hessian_plan: OnceLock::new(),
         }
     }
 
@@ -364,10 +365,26 @@ impl OperatorProgram {
         &self.nodes[self.out_id].active
     }
 
-    /// The `I_N` seed shared with the Hessian baseline executor, built on
-    /// first use and cached for the program's lifetime.
-    pub fn identity_seed(&self) -> &Tensor {
-        self.identity_seed.get_or_init(|| Tensor::eye(self.n))
+    /// The program-scheduled [`hessian::HessianPlan`] for this program's
+    /// graph, fetched from the global Hessian-plan cache on first use and
+    /// pinned for the program's lifetime — so callers that compiled the DOF
+    /// program once get the baseline on the same compiled machinery.
+    ///
+    /// The pinned plan is only served when its structural fingerprint
+    /// matches `graph` (a value-move variant of the first graph); a caller
+    /// handing a structurally different graph of the same shape gets the
+    /// right plan from the global cache instead of the pinned one.
+    pub fn hessian_plan(&self, graph: &Graph) -> Arc<hessian::HessianPlan> {
+        assert_eq!(graph.len(), self.node_count(), "program/graph mismatch");
+        assert_eq!(graph.input_dim(), self.n, "program/graph mismatch");
+        let pinned = self
+            .hessian_plan
+            .get_or_init(|| hessian::global_hessian_cache().get_or_compile(graph));
+        if pinned.key() == hessian::hessian_key(graph) {
+            Arc::clone(pinned)
+        } else {
+            hessian::global_hessian_cache().get_or_compile(graph)
+        }
     }
 }
 
@@ -812,6 +829,7 @@ pub fn plan_key(graph: &Graph, ldl: &LdlDecomposition, opts: PlanOptions) -> Pla
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::Tensor;
     use crate::graph::{builder::random_layers, mlp_graph, sparse_mlp_graph};
     use crate::operators::CoeffSpec;
     use crate::util::Xoshiro256;

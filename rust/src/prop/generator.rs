@@ -1,0 +1,266 @@
+//! Seeded random `(architecture, operator, batch)` cases for the
+//! cross-engine differential harness (`rust/tests/cross_engine_fuzz.rs`).
+//!
+//! Each draw produces a scalar-output graph from one of four families —
+//! plain MLP, the block-sparse product head (`Slice`/`Mul`/`SumReduce`),
+//! two added branches (`Add`), and a concat head (`Slice`/`Concat`) — with
+//! random depths, widths, activation mix, and (sometimes) sparsified
+//! weight zero patterns, plus a random constant-coefficient operator
+//! `Σ a_ij ∂²_ij + Σ b_i ∂_i + c`: dense symmetric, low-rank PSD
+//! (rank-deficient `L`), block-diagonal Gram, or signed (possibly
+//! rank-deficient) diagonal. Inputs are kept small (`N ≤ 6`) so a central
+//! finite difference of the graph's forward evaluation is a practical
+//! independent oracle for every case.
+//!
+//! Everything is a pure function of the [`Gen`] seed, so a failing case
+//! reproduces from the seed [`super::run_prop`] prints.
+
+use crate::graph::builder::LayerWeights;
+use crate::graph::{builder::append_mlp, mlp_graph, sparse_mlp_graph, Act, Graph};
+use crate::tensor::{matmul, Tensor};
+
+use super::Gen;
+
+/// One random differential-testing case.
+pub struct OperatorCase {
+    pub graph: Graph,
+    /// Symmetric coefficient matrix `A` (never all-zero).
+    pub a: Tensor,
+    /// Optional first-order coefficients.
+    pub b: Option<Vec<f64>>,
+    /// Optional zeroth-order coefficient.
+    pub c: Option<f64>,
+    /// Evaluation batch `[batch, N]`.
+    pub x: Tensor,
+    /// Architecture family tag (diagnostics).
+    pub family: &'static str,
+}
+
+impl OperatorCase {
+    pub fn n(&self) -> usize {
+        self.graph.input_dim()
+    }
+
+    pub fn batch(&self) -> usize {
+        self.x.dims()[0]
+    }
+}
+
+fn random_act(g: &mut Gen) -> Act {
+    g.choice(&[Act::Tanh, Act::Sin, Act::Softplus, Act::Gelu])
+}
+
+/// Random layer stack, sometimes with a sparsified weight zero pattern.
+fn layers(g: &mut Gen, dims: &[usize]) -> LayerWeights {
+    let mut ls = crate::graph::builder::random_layers(dims, g.rng());
+    // Sometimes sparsify weight zero patterns (exercises the structural
+    // support propagation and the value-independent cache keys).
+    if g.bool_with(0.4) {
+        for (w, _) in ls.iter_mut() {
+            let numel = w.numel();
+            // Zero ~30% of entries, but never a whole row (keeps every
+            // neuron — and therefore the whole graph — output-connected).
+            let cols = w.dims()[1];
+            if cols < 2 {
+                continue;
+            }
+            for i in 0..numel {
+                if g.bool_with(0.3) {
+                    let (r, c) = (i / cols, i % cols);
+                    // Keep column 0 of every row as an anchor.
+                    if c != 0 {
+                        w.data_mut()[r * cols + c] = 0.0;
+                    }
+                }
+            }
+        }
+    }
+    ls
+}
+
+/// Random scalar-output architecture on `n` inputs.
+fn random_graph(g: &mut Gen, n: usize) -> (Graph, &'static str) {
+    match g.usize_in(0, 3) {
+        0 => {
+            // Plain MLP.
+            let depth = g.usize_in(1, 3);
+            let mut dims = vec![n];
+            for _ in 0..depth {
+                dims.push(g.usize_in(2, 10));
+            }
+            dims.push(1);
+            let act = random_act(g);
+            let ls = layers(g, &dims);
+            (mlp_graph(&ls, act), "mlp")
+        }
+        1 => {
+            // Block-sparse product head (Slice → per-block MLP → Mul →
+            // SumReduce). Needs n = blocks · block_in with blocks ≥ 2.
+            let blocks = if n % 2 == 0 { 2 } else { 3 };
+            let block_in = n / blocks;
+            debug_assert_eq!(blocks * block_in, n);
+            let hidden = g.usize_in(2, 6);
+            let out_dim = g.usize_in(1, 3);
+            let act = random_act(g);
+            let bls: Vec<LayerWeights> = (0..blocks)
+                .map(|_| layers(g, &[block_in, hidden, out_dim]))
+                .collect();
+            (sparse_mlp_graph(&bls, act), "sparse-product")
+        }
+        2 => {
+            // Two added branches over the same input (Add).
+            let act1 = random_act(g);
+            let act2 = random_act(g);
+            let h1 = g.usize_in(2, 8);
+            let h2 = g.usize_in(2, 8);
+            let l1 = layers(g, &[n, h1, 1]);
+            let l2 = layers(g, &[n, h2, 1]);
+            let mut graph = Graph::new();
+            let x = graph.input(n);
+            let b1 = append_mlp(&mut graph, x, &l1, act1);
+            let b2 = append_mlp(&mut graph, x, &l2, act2);
+            graph.add(vec![b1, b2]);
+            (graph, "add-branches")
+        }
+        _ => {
+            // Concat head: slice the input in two, MLP each part, concat,
+            // linear to a scalar.
+            let n1 = g.usize_in(1, n - 1);
+            let n2 = n - n1;
+            let (d1, d2) = (g.usize_in(1, 3), g.usize_in(1, 3));
+            let act = random_act(g);
+            let l1 = layers(g, &[n1, g.usize_in(2, 6), d1]);
+            let l2 = layers(g, &[n2, g.usize_in(2, 6), d2]);
+            let head = layers(g, &[d1 + d2, 1]);
+            let mut graph = Graph::new();
+            let x = graph.input(n);
+            let s1 = graph.slice(x, 0, n1);
+            let s2 = graph.slice(x, n1, n2);
+            let m1 = append_mlp(&mut graph, s1, &l1, act);
+            let m2 = append_mlp(&mut graph, s2, &l2, act);
+            let cat = graph.push(crate::graph::Op::Concat, vec![m1, m2]);
+            append_mlp(&mut graph, cat, &head, act);
+            (graph, "concat-head")
+        }
+    }
+}
+
+/// Random symmetric coefficient matrix — guaranteed nonzero, sometimes
+/// rank-deficient (`rank(L) < N`), sometimes with a sparse zero pattern.
+fn random_coeff(g: &mut Gen, n: usize) -> Tensor {
+    match g.usize_in(0, 3) {
+        0 => {
+            // Full symmetric (possibly indefinite).
+            let b = Tensor::randn(&[n, n], g.rng());
+            b.add(&b.transpose()).scale(0.5)
+        }
+        1 => {
+            // Low-rank PSD: rank-deficient L is the §2.2 low-rank path.
+            let r = g.usize_in(1, n.max(2) - 1);
+            let b = Tensor::randn(&[n, r], g.rng());
+            matmul(&b, &b.transpose())
+        }
+        2 => {
+            // Signed diagonal with random zeros (sparse, rank-deficient L
+            // pattern; at least one entry kept nonzero).
+            let mut a = Tensor::zeros(&[n, n]);
+            let keep = g.usize_in(0, n - 1);
+            for i in 0..n {
+                let v = if g.bool_with(0.35) && i != keep {
+                    0.0
+                } else if g.bool_with(0.3) {
+                    -1.0
+                } else {
+                    1.0
+                };
+                a.set(i, i, v);
+            }
+            a
+        }
+        _ => {
+            // Block-diagonal Gram (two blocks), the Table 2 operator shape.
+            let b1 = n / 2;
+            let mut a = Tensor::zeros(&[n, n]);
+            for (off, len) in [(0usize, b1), (b1, n - b1)] {
+                if len == 0 {
+                    continue;
+                }
+                let m = Tensor::randn(&[len, len], g.rng());
+                let gram = matmul(&m, &m.transpose());
+                for i in 0..len {
+                    for j in 0..len {
+                        a.set(off + i, off + j, gram.at(i, j));
+                    }
+                }
+            }
+            a
+        }
+    }
+}
+
+/// Draw one full differential-testing case.
+pub fn random_operator_case(g: &mut Gen) -> OperatorCase {
+    // N ∈ 2..=6 keeps the N² finite-difference oracle cheap; the sparse
+    // family needs N divisible by its block count, so draw from shapes
+    // that every family can use.
+    let n = g.choice(&[2usize, 3, 4, 4, 6, 6]);
+    let (graph, family) = random_graph(g, n);
+    let a = random_coeff(g, n);
+    let b = if g.bool_with(0.5) {
+        Some((0..n).map(|_| g.normal()).collect())
+    } else {
+        None
+    };
+    let c = if g.bool_with(0.5) {
+        Some(g.f64_in(-2.0, 2.0))
+    } else {
+        None
+    };
+    let batch = g.usize_in(1, 3);
+    let scale = if family == "sparse-product" { 0.4 } else { 0.6 };
+    let x = Tensor::randn(&[batch, n], g.rng()).scale(scale);
+    OperatorCase {
+        graph,
+        a,
+        b,
+        c,
+        x,
+        family,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::run_prop;
+
+    #[test]
+    fn cases_are_well_formed_and_deterministic() {
+        run_prop("generator well-formed", 60, 9090, |g| {
+            let case = random_operator_case(g);
+            let n = case.n();
+            if case.a.dims() != [n, n] {
+                return Err("A shape".into());
+            }
+            if case.a.data().iter().all(|&v| v == 0.0) {
+                return Err("A must not be all-zero".into());
+            }
+            if case.graph.node(case.graph.output()).dim != 1 {
+                return Err("output must be scalar".into());
+            }
+            let y = case.graph.eval(&case.x);
+            if !y.all_finite() {
+                return Err("forward eval must be finite".into());
+            }
+            Ok(())
+        });
+        // Determinism: same seed, same draw.
+        let mut g1 = crate::prop::Gen::new(777);
+        let mut g2 = crate::prop::Gen::new(777);
+        let c1 = random_operator_case(&mut g1);
+        let c2 = random_operator_case(&mut g2);
+        assert_eq!(c1.family, c2.family);
+        assert_eq!(c1.a, c2.a);
+        assert_eq!(c1.x, c2.x);
+    }
+}

@@ -2,7 +2,11 @@
 //!
 //! A small, deterministic framework: a [`Gen`] wraps the repo PRNG with
 //! convenience samplers; [`run_prop`] drives N seeded cases and reports the
-//! first failing seed so failures are reproducible by pinning that seed.
+//! first failing seed so failures are reproducible by pinning that seed;
+//! [`generator`] draws random `(architecture, operator, batch)` cases for
+//! the cross-engine differential harness.
+
+pub mod generator;
 
 use crate::util::Xoshiro256;
 

@@ -1,0 +1,190 @@
+//! Cache-soundness contract for the compile-once caches
+//! ([`dof::plan::PlanCache`], [`dof::jet::cache::JetCache`]):
+//!
+//! * **value moves hit** — mutating weight *values* under a fixed zero
+//!   pattern (an Adam step) must return the cached program by pointer
+//!   identity;
+//! * **structure recompiles** — a weight becoming exactly `0.0`, a
+//!   topology edit, or an operator `L`-pattern change must miss and
+//!   recompile;
+//! * **recompiled plans are sound** — the recompiled program's §3.2
+//!   active-row sets (and everything downstream) are re-verified against a
+//!   fresh reference-interpreter run, bitwise.
+
+use std::sync::Arc;
+
+use dof::autodiff::{DofEngine, TangentArena};
+use dof::graph::{builder::random_layers, mlp_graph, Act};
+use dof::jet::cache::JetCache;
+use dof::jet::{laplacian_terms, terms_from_symmetric, DirectionBasis, JetEngine};
+use dof::linalg::LdlDecomposition;
+use dof::plan::{PlanCache, PlanOptions};
+use dof::tensor::Tensor;
+use dof::util::Xoshiro256;
+
+fn random_symmetric(n: usize, rng: &mut Xoshiro256) -> Tensor {
+    let b = Tensor::randn(&[n, n], rng);
+    b.add(&b.transpose()).scale(0.5)
+}
+
+const OPTS: PlanOptions = PlanOptions {
+    sparsity: true,
+    lower_order_c: false,
+};
+
+/// The recompiled (or cached) program — the exact `Arc` the cache under
+/// test returned — must execute bit-identically to a fresh interpreter
+/// run: the active-row soundness re-verification.
+fn verify_program_against_interpreter(
+    eng: &DofEngine,
+    program: &dof::plan::OperatorProgram,
+    g: &dof::graph::Graph,
+    x: &Tensor,
+) {
+    let planned = eng.execute(program, g, x);
+    let reference = eng.compute_with_arena(g, x, &mut TangentArena::new());
+    assert_eq!(planned.values, reference.values);
+    assert_eq!(planned.operator_values, reference.operator_values);
+    assert_eq!(planned.out_active, reference.out_active, "active rows drifted");
+    assert_eq!(planned.out_tangent.data, reference.out_tangent.data);
+    assert_eq!(planned.cost, reference.cost);
+    assert_eq!(planned.peak_tangent_bytes, reference.peak_tangent_bytes);
+}
+
+#[test]
+fn plan_cache_value_moves_hit_zero_pattern_recompiles() {
+    let cache = PlanCache::new();
+    let mut rng = Xoshiro256::new(5101);
+    let mut layers = random_layers(&[4, 7, 1], &mut rng);
+    let a = random_symmetric(4, &mut rng);
+    let ldl = LdlDecomposition::of(&a);
+    let g1 = mlp_graph(&layers, Act::Tanh);
+    let p1 = cache.get_or_compile(&g1, &ldl, OPTS);
+
+    // Adam-style value move: every weight nudged, zero pattern untouched.
+    for (w, b) in layers.iter_mut() {
+        for v in w.data_mut().iter_mut() {
+            if *v != 0.0 {
+                *v += 0.01;
+            }
+        }
+        for v in b.iter_mut() {
+            *v -= 0.005;
+        }
+    }
+    let g2 = mlp_graph(&layers, Act::Tanh);
+    let p2 = cache.get_or_compile(&g2, &ldl, OPTS);
+    assert!(
+        Arc::ptr_eq(&p1, &p2),
+        "weight-value mutation must hit the cached plan"
+    );
+    assert_eq!(cache.stats().misses, 1);
+
+    // A weight becoming exactly 0.0 changes the structural key…
+    layers[0].0.set(2, 1, 0.0);
+    let g3 = mlp_graph(&layers, Act::Tanh);
+    let p3 = cache.get_or_compile(&g3, &ldl, OPTS);
+    assert!(
+        !Arc::ptr_eq(&p1, &p3),
+        "a weight hitting exactly 0.0 must recompile (active-row soundness)"
+    );
+    assert_eq!(cache.stats().misses, 2);
+
+    // …and the recompiled plan (the Arc the cache returned) is re-verified
+    // against a fresh interpreter run.
+    let x = Tensor::randn(&[5, 4], &mut rng);
+    let eng = DofEngine::from_ldl(ldl);
+    verify_program_against_interpreter(&eng, &p3, &g3, &x);
+}
+
+#[test]
+fn plan_cache_structure_edit_recompiles() {
+    let cache = PlanCache::new();
+    let mut rng = Xoshiro256::new(5102);
+    let layers = random_layers(&[3, 6, 1], &mut rng);
+    let deeper = random_layers(&[3, 6, 6, 1], &mut rng);
+    let a = random_symmetric(3, &mut rng);
+    let ldl = LdlDecomposition::of(&a);
+    let p1 = cache.get_or_compile(&mlp_graph(&layers, Act::Sin), &ldl, OPTS);
+    let p2 = cache.get_or_compile(&mlp_graph(&deeper, Act::Sin), &ldl, OPTS);
+    assert!(!Arc::ptr_eq(&p1, &p2), "topology edits must recompile");
+    // Activation swap is a structure edit too.
+    let p3 = cache.get_or_compile(&mlp_graph(&layers, Act::Tanh), &ldl, OPTS);
+    assert!(!Arc::ptr_eq(&p1, &p3), "activation swap must recompile");
+    assert_eq!(cache.stats().misses, 3);
+}
+
+#[test]
+fn plan_cache_l_pattern_change_recompiles_and_stays_sound() {
+    let cache = PlanCache::new();
+    let mut rng = Xoshiro256::new(5103);
+    let layers = random_layers(&[4, 8, 1], &mut rng);
+    let g = mlp_graph(&layers, Act::Tanh);
+    // Dense operator vs diagonal operator: different L zero patterns.
+    let dense = LdlDecomposition::of(&random_symmetric(4, &mut rng));
+    let mut diag = Tensor::eye(4);
+    diag.set(2, 2, -1.0);
+    let diagonal = LdlDecomposition::of(&diag);
+    let p1 = cache.get_or_compile(&g, &dense, OPTS);
+    let p2 = cache.get_or_compile(&g, &diagonal, OPTS);
+    assert!(
+        !Arc::ptr_eq(&p1, &p2),
+        "operator L-pattern change must recompile"
+    );
+    // Same pattern again: hit.
+    let p3 = cache.get_or_compile(&g, &diagonal, OPTS);
+    assert!(Arc::ptr_eq(&p2, &p3));
+    // Re-verify the recompiled (diagonal-operator) plan — the returned Arc
+    // itself — end to end.
+    let x = Tensor::randn(&[4, 4], &mut rng);
+    verify_program_against_interpreter(&DofEngine::from_ldl(diagonal), &p3, &g, &x);
+}
+
+#[test]
+fn jet_cache_value_moves_hit_structure_changes_recompile() {
+    let cache = JetCache::new();
+    let mut rng = Xoshiro256::new(5104);
+    let mut layers = random_layers(&[3, 6, 1], &mut rng);
+    let basis = DirectionBasis::from_terms(3, &laplacian_terms(3, 1.0), None);
+    let g1 = mlp_graph(&layers, Act::Tanh);
+    let p1 = cache.get_or_compile(&g1, &basis, false);
+
+    // Value move: hit.
+    for (w, _) in layers.iter_mut() {
+        for v in w.data_mut().iter_mut() {
+            if *v != 0.0 {
+                *v *= 1.01;
+            }
+        }
+    }
+    let g2 = mlp_graph(&layers, Act::Tanh);
+    let p2 = cache.get_or_compile(&g2, &basis, false);
+    assert!(Arc::ptr_eq(&p1, &p2), "jet value moves must hit");
+
+    // Weight hitting exactly 0.0: recompile.
+    layers[0].0.set(1, 2, 0.0);
+    let g3 = mlp_graph(&layers, Act::Tanh);
+    let p3 = cache.get_or_compile(&g3, &basis, false);
+    assert!(!Arc::ptr_eq(&p1, &p3), "jet zero-pattern change must recompile");
+
+    // Direction-pattern change (dense second-order operator): recompile.
+    let a = random_symmetric(3, &mut rng);
+    let dense_basis = DirectionBasis::from_terms(3, &terms_from_symmetric(&a), None);
+    let p4 = cache.get_or_compile(&g3, &dense_basis, false);
+    assert!(!Arc::ptr_eq(&p3, &p4), "direction-pattern change must recompile");
+
+    // has_c partitions the key space.
+    let p5 = cache.get_or_compile(&g3, &basis, true);
+    assert!(!Arc::ptr_eq(&p3, &p5), "has_c must partition the key space");
+
+    // Recompiled jet program re-verified against a fresh jet interpreter.
+    let x = Tensor::randn(&[3, 3], &mut rng).scale(0.5);
+    let eng = JetEngine::new(dense_basis);
+    let planned = eng.execute(&p4, &g3, &x);
+    let reference = eng.compute_with_arena(&g3, &x, &mut TangentArena::new());
+    assert_eq!(planned.values, reference.values);
+    assert_eq!(planned.operator_values, reference.operator_values);
+    assert_eq!(planned.out_jet.data, reference.out_jet.data);
+    assert_eq!(planned.cost, reference.cost);
+    assert_eq!(planned.peak_jet_bytes, reference.peak_jet_bytes);
+}

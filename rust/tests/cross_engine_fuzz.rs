@@ -1,0 +1,351 @@
+//! Randomized cross-engine differential harness — the oracle hierarchy,
+//! fuzzed:
+//!
+//! 1. **interpreter oracle** — the DOF slab executor must be *bitwise*
+//!    identical to the reference interpreter (shared kernels, different
+//!    storage policy), and the program-scheduled Hessian executor bitwise
+//!    identical to its reference path — including exact FLOP counts and
+//!    peak tangent bytes (analytic replay ≡ measured tracker);
+//! 2. **cross-engine** — DOF ≡ Hessian `L[φ]` at tolerance (two exact
+//!    algorithms, different summation orders), order-2 jets ≡ DOF (values
+//!    bitwise, `L[φ]` at tolerance);
+//! 3. **finite differences** — everything ≡ a central finite difference of
+//!    the graph's plain forward evaluation, the only oracle that shares no
+//!    code with any engine.
+//!
+//! ≥200 seeded cases by default; `DOF_FUZZ_CASES=<n>` scales the run (the
+//! scheduled CI job uses a larger count). Failures print the reproducing
+//! case seed via `dof::prop::run_prop`.
+
+use dof::autodiff::{DofEngine, DofResult, HessianEngine, HessianResult, TangentArena};
+use dof::graph::Graph;
+use dof::jet::{terms_from_symmetric, DirectionBasis, JetEngine};
+use dof::parallel::Pool;
+use dof::prop::generator::{random_operator_case, OperatorCase};
+use dof::prop::{close, run_prop, Gen, PropResult};
+use dof::tensor::Tensor;
+
+fn fuzz_cases() -> u64 {
+    std::env::var("DOF_FUZZ_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200)
+}
+
+fn dof_engine(case: &OperatorCase) -> DofEngine {
+    DofEngine::new(&case.a).with_lower_order(case.b.clone(), case.c)
+}
+
+fn hessian_engine(case: &OperatorCase) -> HessianEngine {
+    HessianEngine::new(&case.a).with_lower_order(case.b.clone(), case.c)
+}
+
+fn jet_engine(case: &OperatorCase) -> JetEngine {
+    let n = case.n();
+    let basis = DirectionBasis::from_terms(n, &terms_from_symmetric(&case.a), case.b.as_deref());
+    JetEngine::new(basis).with_constant(case.c)
+}
+
+fn assert_dof_bitwise(planned: &DofResult, reference: &DofResult, what: &str) -> PropResult {
+    if planned.values != reference.values {
+        return Err(format!("{what}: values differ"));
+    }
+    if planned.operator_values != reference.operator_values {
+        return Err(format!("{what}: L[φ] differs"));
+    }
+    if planned.out_active != reference.out_active {
+        return Err(format!("{what}: active rows differ"));
+    }
+    if planned.out_tangent.data != reference.out_tangent.data {
+        return Err(format!("{what}: output tangent differs"));
+    }
+    if planned.cost != reference.cost {
+        return Err(format!(
+            "{what}: FLOPs {:?} vs {:?}",
+            planned.cost, reference.cost
+        ));
+    }
+    if planned.peak_tangent_bytes != reference.peak_tangent_bytes {
+        return Err(format!(
+            "{what}: peak {} vs {}",
+            planned.peak_tangent_bytes, reference.peak_tangent_bytes
+        ));
+    }
+    Ok(())
+}
+
+fn assert_hessian_bitwise(
+    planned: &HessianResult,
+    reference: &HessianResult,
+    what: &str,
+) -> PropResult {
+    if planned.values != reference.values {
+        return Err(format!("{what}: values differ"));
+    }
+    if planned.gradient != reference.gradient {
+        return Err(format!("{what}: gradient differs"));
+    }
+    if planned.hessian != reference.hessian {
+        return Err(format!("{what}: Hessian differs"));
+    }
+    if planned.operator_values != reference.operator_values {
+        return Err(format!("{what}: L[φ] differs"));
+    }
+    if planned.cost != reference.cost {
+        return Err(format!(
+            "{what}: FLOPs {:?} (analytic) vs {:?} (measured)",
+            planned.cost, reference.cost
+        ));
+    }
+    if planned.peak_tangent_bytes != reference.peak_tangent_bytes {
+        return Err(format!(
+            "{what}: peak {} (analytic) vs {} (measured)",
+            planned.peak_tangent_bytes, reference.peak_tangent_bytes
+        ));
+    }
+    Ok(())
+}
+
+/// Central finite difference of `Σ a_ij ∂²_ij φ + Σ b_i ∂_i φ + c·φ` on the
+/// graph's plain forward evaluation — the engine-independent oracle.
+fn fd_operator(
+    graph: &Graph,
+    a: &Tensor,
+    b: &Option<Vec<f64>>,
+    c: Option<f64>,
+    x: &[f64],
+) -> f64 {
+    let n = x.len();
+    let f = |z: &[f64]| graph.eval(&Tensor::from_vec(&[1, n], z.to_vec())).item();
+    let f0 = f(x);
+    let h = 1e-4;
+    let mut out = 0.0;
+    for i in 0..n {
+        for j in i..n {
+            let aij = if i == j {
+                a.at(i, i)
+            } else {
+                a.at(i, j) + a.at(j, i)
+            };
+            if aij == 0.0 {
+                continue;
+            }
+            let hij = if i == j {
+                let mut zp = x.to_vec();
+                zp[i] += h;
+                let mut zm = x.to_vec();
+                zm[i] -= h;
+                (f(&zp) - 2.0 * f0 + f(&zm)) / (h * h)
+            } else {
+                let mut zpp = x.to_vec();
+                zpp[i] += h;
+                zpp[j] += h;
+                let mut zpm = x.to_vec();
+                zpm[i] += h;
+                zpm[j] -= h;
+                let mut zmp = x.to_vec();
+                zmp[i] -= h;
+                zmp[j] += h;
+                let mut zmm = x.to_vec();
+                zmm[i] -= h;
+                zmm[j] -= h;
+                (f(&zpp) - f(&zpm) - f(&zmp) + f(&zmm)) / (4.0 * h * h)
+            };
+            out += aij * hij;
+        }
+    }
+    if let Some(bv) = b {
+        let hb = 1e-5;
+        for (i, &bi) in bv.iter().enumerate() {
+            if bi == 0.0 {
+                continue;
+            }
+            let mut zp = x.to_vec();
+            zp[i] += hb;
+            let mut zm = x.to_vec();
+            zm[i] -= hb;
+            out += bi * (f(&zp) - f(&zm)) / (2.0 * hb);
+        }
+    }
+    if let Some(cc) = c {
+        out += cc * f0;
+    }
+    out
+}
+
+fn one_case(g: &mut Gen) -> PropResult {
+    let case = random_operator_case(g);
+    let what = |s: &str| format!("{} ({s})", case.family);
+
+    // 1a. DOF slab executor ≡ reference interpreter, bitwise.
+    let eng = dof_engine(&case);
+    let planned = eng.compute(&case.graph, &case.x);
+    let interp = eng.compute_with_arena(&case.graph, &case.x, &mut TangentArena::new());
+    assert_dof_bitwise(&planned, &interp, &what("dof planned vs interpreter"))?;
+    // …and occasionally the §3.2-off ablation too.
+    if g.bool_with(0.3) {
+        let dense = dof_engine(&case).dense();
+        let dp = dense.compute(&case.graph, &case.x);
+        let di = dense.compute_with_arena(&case.graph, &case.x, &mut TangentArena::new());
+        assert_dof_bitwise(&dp, &di, &what("dense dof planned vs interpreter"))?;
+        for bi in 0..case.batch() {
+            close(
+                dp.operator_values.at(bi, 0),
+                planned.operator_values.at(bi, 0),
+                1e-9,
+            )
+            .map_err(|e| format!("{}: sparse vs dense L[φ] row {bi}: {e}", case.family))?;
+        }
+    }
+
+    // 1b. Program-scheduled Hessian ≡ reference path, bitwise (incl. the
+    // analytic-vs-measured FLOP/peak equality).
+    let hes = hessian_engine(&case);
+    let hes_planned = hes.compute(&case.graph, &case.x);
+    let hes_ref = hes.compute_reference(&case.graph, &case.x);
+    assert_hessian_bitwise(&hes_planned, &hes_ref, &what("hessian planned vs reference"))?;
+
+    // 2a. DOF ≡ Hessian L[φ] (two exact algorithms, tolerance).
+    for bi in 0..case.batch() {
+        close(
+            planned.operator_values.at(bi, 0),
+            hes_planned.operator_values.at(bi, 0),
+            1e-6,
+        )
+        .map_err(|e| format!("{}: dof vs hessian row {bi}: {e}", case.family))?;
+    }
+
+    // 2b. Order-2 jets ≡ DOF: values bitwise, L[φ] at tolerance.
+    let jet = jet_engine(&case).compute(&case.graph, &case.x);
+    if jet.values != planned.values {
+        return Err(what("jet vs dof: values differ bitwise"));
+    }
+    for bi in 0..case.batch() {
+        close(
+            jet.operator_values.at(bi, 0),
+            planned.operator_values.at(bi, 0),
+            1e-7,
+        )
+        .map_err(|e| format!("{}: jet vs dof row {bi}: {e}", case.family))?;
+    }
+
+    // 3. Everything ≡ central finite differences of the forward graph.
+    for bi in 0..case.batch() {
+        let fd = fd_operator(&case.graph, &case.a, &case.b, case.c, case.x.row(bi));
+        close(planned.operator_values.at(bi, 0), fd, 2e-3)
+            .map_err(|e| format!("{}: dof vs FD row {bi}: {e}", case.family))?;
+    }
+    Ok(())
+}
+
+#[test]
+fn cross_engine_differential_fuzz() {
+    // Pinned base seed: deterministic in CI; DOF_FUZZ_CASES scales depth.
+    run_prop("cross-engine differential", fuzz_cases(), 0xD0F4, one_case);
+}
+
+/// Accounting invariants on random graphs, all three engines: the compiled
+/// program's analytic FLOP/peak equals the measured runtime counters.
+#[test]
+fn accounting_analytic_equals_measured_fuzz() {
+    run_prop("analytic ≡ measured accounting", 25, 0xACC7, |g| {
+        let case = random_operator_case(g);
+        let batch = case.batch();
+
+        // DOF: program analytics vs interpreter-measured counters.
+        let eng = dof_engine(&case);
+        let program = eng.plan(&case.graph);
+        let interp = eng.compute_with_arena(&case.graph, &case.x, &mut TangentArena::new());
+        if program.cost(batch) != interp.cost {
+            return Err(format!(
+                "dof analytic cost {:?} != measured {:?}",
+                program.cost(batch),
+                interp.cost
+            ));
+        }
+        if program.peak_tangent_bytes(batch) != interp.peak_tangent_bytes {
+            return Err(format!(
+                "dof analytic peak {} != measured {}",
+                program.peak_tangent_bytes(batch),
+                interp.peak_tangent_bytes
+            ));
+        }
+
+        // Hessian: plan analytics vs reference-measured counters.
+        let hes = hessian_engine(&case);
+        let planned = hes.compute(&case.graph, &case.x);
+        let reference = hes.compute_reference(&case.graph, &case.x);
+        if planned.cost != reference.cost {
+            return Err(format!(
+                "hessian analytic cost {:?} != measured {:?}",
+                planned.cost, reference.cost
+            ));
+        }
+        if planned.peak_tangent_bytes != reference.peak_tangent_bytes {
+            return Err(format!(
+                "hessian analytic peak {} != measured {}",
+                planned.peak_tangent_bytes, reference.peak_tangent_bytes
+            ));
+        }
+
+        // Jet (order 2): program analytics vs interpreter-measured.
+        let jeng = jet_engine(&case);
+        let jprog = jeng.plan(&case.graph);
+        let jref = jeng.compute_with_arena(&case.graph, &case.x, &mut TangentArena::new());
+        if jprog.cost(batch) != jref.cost {
+            return Err(format!(
+                "jet analytic cost {:?} != measured {:?}",
+                jprog.cost(batch),
+                jref.cost
+            ));
+        }
+        if jprog.peak_jet_bytes(batch) != jref.peak_jet_bytes {
+            return Err(format!(
+                "jet analytic peak {} != measured {}",
+                jprog.peak_jet_bytes(batch),
+                jref.peak_jet_bytes
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Determinism under sharding on random graphs: values, `L[φ]`, FLOPs, and
+/// per-shard peaks are bit-identical across 1/2/4/8 threads on both the
+/// DOF and the program-scheduled Hessian paths.
+#[test]
+fn sharded_runs_thread_invariant_fuzz() {
+    run_prop("sharded thread invariance", 8, 0x7173, |g| {
+        let case = random_operator_case(g);
+        let n = case.n();
+        // Multi-shard batch with a short last shard.
+        let x = Tensor::randn(&[11, n], g.rng()).scale(0.5);
+        let shard_rows = 4usize;
+
+        let eng = dof_engine(&case);
+        let dof_base = eng.compute_sharded(&case.graph, &x, &Pool::new(1), shard_rows);
+        let hes = hessian_engine(&case);
+        let hes_base = hes.compute_sharded(&case.graph, &x, &Pool::new(1), shard_rows);
+        for threads in [2usize, 4, 8] {
+            let pool = Pool::new(threads);
+            let d = eng.compute_sharded(&case.graph, &x, &pool, shard_rows);
+            if d.values != dof_base.values
+                || d.operator_values != dof_base.operator_values
+                || d.cost != dof_base.cost
+                || d.peak_tangent_bytes != dof_base.peak_tangent_bytes
+            {
+                return Err(format!("dof not thread-invariant at {threads} threads"));
+            }
+            let h = hes.compute_sharded(&case.graph, &x, &pool, shard_rows);
+            if h.values != hes_base.values
+                || h.operator_values != hes_base.operator_values
+                || h.hessian != hes_base.hessian
+                || h.cost != hes_base.cost
+                || h.peak_tangent_bytes != hes_base.peak_tangent_bytes
+            {
+                return Err(format!("hessian not thread-invariant at {threads} threads"));
+            }
+        }
+        Ok(())
+    });
+}

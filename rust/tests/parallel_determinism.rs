@@ -305,6 +305,70 @@ fn arena_reuse_leaves_results_and_peaks_unchanged() {
     );
 }
 
+/// The program-scheduled Hessian path (PR 4): bit-identical to the
+/// retained reference walk — values, gradient, Hessian, `L[φ]`, and the
+/// analytic FLOP/peak replay vs the reference's measured counters — and
+/// bit-identical across 1/2/4/8 threads with batch-only per-shard peaks.
+#[test]
+fn hessian_program_path_matches_reference_and_is_thread_invariant() {
+    let (g, x, a) = mlp_fixture();
+    let eng = HessianEngine::new(&a);
+    let reference = eng.compute_reference(&g, &x);
+    let planned = eng.compute(&g, &x);
+    assert_eq!(planned.values, reference.values);
+    assert_eq!(planned.gradient, reference.gradient);
+    assert_eq!(planned.hessian, reference.hessian);
+    assert_eq!(planned.operator_values, reference.operator_values);
+    assert_eq!(
+        planned.cost, reference.cost,
+        "analytic FLOPs must equal the reference's measured count"
+    );
+    assert_eq!(
+        planned.peak_tangent_bytes, reference.peak_tangent_bytes,
+        "analytic peak must equal the reference's PeakTracker"
+    );
+
+    let shard_rows = DEFAULT_SHARD_ROWS;
+    let base = eng.compute_sharded(&g, &x, &Pool::new(1), shard_rows);
+    // Per-shard peak is exactly batch-linear (analytic replay), so the
+    // full-batch and max-shard peaks relate by their row counts.
+    let batch = x.dims()[0] as u64;
+    assert_eq!(
+        base.peak_tangent_bytes * batch,
+        planned.peak_tangent_bytes * shard_rows as u64,
+        "per-shard peak must scale exactly with shard rows"
+    );
+    for threads in [2usize, 4, 8] {
+        let r = eng.compute_sharded(&g, &x, &Pool::new(threads), shard_rows);
+        assert_eq!(r.values, base.values);
+        assert_eq!(r.gradient, base.gradient);
+        assert_eq!(r.hessian, base.hessian);
+        assert_eq!(r.operator_values, base.operator_values);
+        assert_eq!(r.cost, base.cost);
+        assert_eq!(r.peak_tangent_bytes, base.peak_tangent_bytes);
+    }
+}
+
+/// The baseline on a DOF-compiled program (`compute_sharded_with_program`)
+/// must equal the standalone planned path exactly — the bench harness's
+/// steady-state shape.
+#[test]
+fn hessian_with_program_equals_standalone_planned_path() {
+    let (g, x, a) = mlp_fixture();
+    let dof_eng = DofEngine::new(&a);
+    let program = dof_eng.plan(&g);
+    let hes = HessianEngine::new(&a);
+    let pool = Pool::new(4);
+    let via_program =
+        hes.compute_sharded_with_program(&program, &g, &x, &pool, DEFAULT_SHARD_ROWS);
+    let standalone = hes.compute_sharded(&g, &x, &pool, DEFAULT_SHARD_ROWS);
+    assert_eq!(via_program.values, standalone.values);
+    assert_eq!(via_program.operator_values, standalone.operator_values);
+    assert_eq!(via_program.hessian, standalone.hessian);
+    assert_eq!(via_program.cost, standalone.cost);
+    assert_eq!(via_program.peak_tangent_bytes, standalone.peak_tangent_bytes);
+}
+
 /// Wall-clock sanity for the tentpole claim (ignored by default: timing
 /// asserts are machine-dependent; run with `cargo test -- --ignored`).
 #[test]
