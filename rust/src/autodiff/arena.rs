@@ -38,7 +38,11 @@
 //! Slab checkout goes through the **program-keyed slab pool**
 //! ([`with_program_slab`]): slabs are keyed by `(program fingerprint,
 //! shard rows)` and returned exact-fit, skipping the size-bucket search
-//! entirely on the steady-state serving/bench path.
+//! entirely on the steady-state serving/bench path. The pool is
+//! **lock-sharded by key hash** (16 independent mutexes), so concurrent
+//! unsharded `execute()` calls from caller-owned threads —
+//! the multi-model serving router's per-model workers, stress harnesses —
+//! no longer contend on one process-global lock.
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};
@@ -244,9 +248,21 @@ pub struct SlabPoolStats {
     pub retained: usize,
 }
 
-/// Cap on parked slabs across all keys — bounds steady-state retention at
-/// roughly (live programs × shard shapes × concurrent workers).
-const SLAB_POOL_CAP: usize = 64;
+/// Lock shards of the slab pool. Concurrent unsharded `execute()` calls
+/// from caller-owned threads (serving routers, test harnesses) each lock
+/// the pool twice per execution; one global mutex serialized them all
+/// (ROADMAP jet follow-up). Keys hash onto [`SLAB_POOL_SHARDS`] independent
+/// mutexes instead, so contention only arises between executions of the
+/// *same* `(program, rows)` neighborhood.
+const SLAB_POOL_SHARDS: usize = 16;
+
+/// Cap on parked slabs **per lock shard** — a backstop against unbounded
+/// retention, not a working-set budget: real retention is bounded by the
+/// live `(program, rows)` keys actually parked. Sized so that even a
+/// hash-unlucky shard holding many hot keys (a multi-model serving mix
+/// landing on one mutex) keeps them all warm instead of thrash-evicting
+/// on every park.
+const SLAB_SHARD_CAP: usize = 32;
 
 struct SlabPool {
     slabs: HashMap<SlabKey, Vec<Vec<f64>>>,
@@ -255,10 +271,26 @@ struct SlabPool {
     misses: u64,
 }
 
-static SLAB_POOL: Mutex<Option<SlabPool>> = Mutex::new(None);
+#[allow(clippy::declare_interior_mutable_const)]
+const SLAB_SHARD_INIT: Mutex<Option<SlabPool>> = Mutex::new(None);
+static SLAB_POOL: [Mutex<Option<SlabPool>>; SLAB_POOL_SHARDS] =
+    [SLAB_SHARD_INIT; SLAB_POOL_SHARDS];
 
-fn with_slab_pool<R>(f: impl FnOnce(&mut SlabPool) -> R) -> R {
-    let mut guard = SLAB_POOL.lock().expect("slab pool poisoned");
+/// Lock shard for a key: a 64-bit finalizer mix of `(program, rows)` folded
+/// onto the shard array. Purely a function of the key, so a given
+/// `(program, rows)` pair always lands on the same mutex.
+fn slab_shard(key: &SlabKey) -> usize {
+    let mut h = key
+        .program
+        .wrapping_add((key.rows as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    h ^= h >> 33;
+    (h as usize) % SLAB_POOL_SHARDS
+}
+
+fn with_slab_pool<R>(shard: usize, f: impl FnOnce(&mut SlabPool) -> R) -> R {
+    let mut guard = SLAB_POOL[shard].lock().expect("slab pool poisoned");
     let pool = guard.get_or_insert_with(|| SlabPool {
         slabs: HashMap::new(),
         retained: 0,
@@ -275,13 +307,28 @@ fn with_slab_pool<R>(f: impl FnOnce(&mut SlabPool) -> R) -> R {
 /// `(program, rows)`: a steady-state serving or bench loop executing the
 /// same compiled program on same-shaped shards gets its own warmed slab
 /// back without any best-fit search, and slabs of different programs never
-/// alias (ROADMAP PR 2 follow-up; used by both `DofEngine` and
-/// `JetEngine`). The slab is handed to `f` as-is — executors fully assign
-/// their slots before reading, the same contract as
-/// [`TangentArena::take_scratch`].
+/// alias (ROADMAP PR 2 follow-up; used by `DofEngine`, `HessianEngine`,
+/// and `JetEngine`). The pool is **lock-sharded by key hash**, so
+/// concurrent unsharded executions on caller-owned threads no longer
+/// serialize on one global mutex. The slab is handed to
+/// `f` as-is — executors fully assign their slots before reading, the same
+/// contract as [`TangentArena::take_scratch`].
 pub fn with_program_slab<R>(key: SlabKey, f: impl FnOnce(&mut Vec<f64>) -> R) -> R {
-    let mut slab = with_slab_pool(|pool| {
-        match pool.slabs.get_mut(&key).and_then(Vec::pop) {
+    let shard = slab_shard(&key);
+    let mut slab = with_slab_pool(shard, |pool| {
+        let popped = match pool.slabs.get_mut(&key) {
+            Some(bucket) => {
+                let s = bucket.pop();
+                // Drop emptied buckets so the shard's key set always maps
+                // to parked slabs (keeps eviction victims real).
+                if bucket.is_empty() {
+                    pool.slabs.remove(&key);
+                }
+                s
+            }
+            None => None,
+        };
+        match popped {
             Some(s) => {
                 pool.retained -= 1;
                 pool.hits += 1;
@@ -295,14 +342,14 @@ pub fn with_program_slab<R>(key: SlabKey, f: impl FnOnce(&mut Vec<f64>) -> R) ->
     })
     .unwrap_or_default();
     let out = f(&mut slab);
-    with_slab_pool(|pool| {
+    with_slab_pool(shard, |pool| {
         // Always park the just-used slab — it belongs to a live key — and
         // evict from a *different* key when over the cap, so key churn
         // (changing batch shapes, model rollovers) ages stale slabs out
         // instead of permanently locking new keys out of the pool.
         pool.slabs.entry(key).or_default().push(slab);
         pool.retained += 1;
-        if pool.retained > SLAB_POOL_CAP {
+        if pool.retained > SLAB_SHARD_CAP {
             let victim = pool
                 .slabs
                 .keys()
@@ -310,24 +357,35 @@ pub fn with_program_slab<R>(key: SlabKey, f: impl FnOnce(&mut Vec<f64>) -> R) ->
                 .copied()
                 .unwrap_or(key);
             if let Some(bucket) = pool.slabs.get_mut(&victim) {
-                bucket.pop();
+                // A key's bucket can be empty while its slab is checked
+                // out; only a real pop frees retention.
+                if bucket.pop().is_some() {
+                    pool.retained -= 1;
+                }
                 if bucket.is_empty() {
                     pool.slabs.remove(&victim);
                 }
-                pool.retained -= 1;
             }
         }
     });
     out
 }
 
-/// Current slab-pool counters.
+/// Current slab-pool counters, aggregated over the lock shards.
 pub fn slab_pool_stats() -> SlabPoolStats {
-    with_slab_pool(|pool| SlabPoolStats {
-        hits: pool.hits,
-        misses: pool.misses,
-        retained: pool.retained,
-    })
+    let mut out = SlabPoolStats {
+        hits: 0,
+        misses: 0,
+        retained: 0,
+    };
+    for shard in 0..SLAB_POOL_SHARDS {
+        with_slab_pool(shard, |pool| {
+            out.hits += pool.hits;
+            out.misses += pool.misses;
+            out.retained += pool.retained;
+        });
+    }
+    out
 }
 
 #[cfg(test)]

@@ -188,6 +188,14 @@ impl HessianEngine {
         self.execute_planned(&plan, graph, x)
     }
 
+    /// Execute a caller-held compiled plan (the compile-once half already
+    /// done, e.g. fetched from [`global_hessian_cache`] at server spawn).
+    /// Storage comes from the program-keyed slab pool like every other
+    /// `compute*` entry point.
+    pub fn execute(&self, plan: &HessianPlan, graph: &Graph, x: &Tensor) -> HessianResult {
+        self.execute_planned(plan, graph, x)
+    }
+
     /// Execute a compiled plan with an exact-fit slab from the
     /// program-keyed pool (the plan's key fingerprint is domain-tagged, so
     /// Hessian slabs never alias DOF program slabs).

@@ -41,15 +41,18 @@
 //!
 //! Both engines expose `compute_sharded` / `compute_parallel`: the batch is
 //! split into fixed 8-row shards ([`crate::parallel::DEFAULT_SHARD_ROWS`])
-//! executed across a scoped thread pool ([`crate::parallel::Pool`]), each
-//! worker running with slab storage checked out of the process-wide
-//! **program-keyed slab pool** ([`arena::with_program_slab`]; exact fit by
-//! `(program, rows)` — the size-bucketed [`arena::with_pooled_arena`] depot
-//! remains available for arena-based callers such as the reference
-//! interpreters). The program is compiled once per batch
-//! call and is shard-invariant; shard boundaries depend only on the
-//! batch size and reduction is shard-ordered, so values, `L[φ]`, FLOP
-//! tallies, and per-shard peak bytes are bit-identical across thread counts.
+//! executed across the **persistent worker team**
+//! ([`crate::parallel::Pool`] / [`crate::parallel::pool`] — OS threads
+//! spawned once per process, parked between regions), each worker running
+//! with slab storage checked out of the process-wide **program-keyed slab
+//! pool** ([`arena::with_program_slab`]; exact fit by `(program, rows)`,
+//! lock-sharded by key hash so concurrent caller threads don't serialize —
+//! the size-bucketed [`arena::with_pooled_arena`] depot remains available
+//! for arena-based callers such as the reference interpreters). The
+//! program is compiled once per batch call and is shard-invariant; shard
+//! boundaries depend only on the batch size and reduction is
+//! shard-ordered, so values, `L[φ]`, FLOP tallies, and per-shard peak
+//! bytes are bit-identical across thread counts.
 //!
 //! ### Op granularity and Appendix C
 //!

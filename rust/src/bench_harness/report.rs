@@ -60,12 +60,64 @@ pub struct PlanTiming {
     pub dof_muls_per_row: u64,
 }
 
+/// One-time worker-pool lifecycle measurement: what a parallel region
+/// costs **cold** (first region in the process — includes the team's
+/// one-time OS-thread spawn when this process hadn't parallelized yet) vs
+/// **warm** (condvar-parked workers re-used). Both time the same trivial
+/// 8-shard region, so the numbers isolate region dispatch overhead from
+/// engine compute.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolTiming {
+    /// Wall-clock of the first measured region.
+    pub cold_region_seconds: f64,
+    /// Best wall-clock of subsequent identical regions.
+    pub warm_region_seconds: f64,
+    /// Whether the cold measurement actually included the one-time spawn
+    /// (false when something earlier in the process already warmed the
+    /// team).
+    pub cold_included_spawn: bool,
+    /// Spawn events observed at measurement end — stays 1 per process.
+    pub spawn_events: usize,
+    /// Warm helper threads in the team.
+    pub workers: usize,
+}
+
 /// Grid sweep output: per-cell execute measurements plus the one-time
-/// plan-compile datum.
+/// plan-compile and pool-lifecycle data.
 #[derive(Debug, Clone)]
 pub struct GridReport {
     pub cells: Vec<GridCell>,
     pub plan: PlanTiming,
+    pub pool: PoolTiming,
+}
+
+/// Measure [`PoolTiming`]: one region before any other parallel work in
+/// this function (cold — pays the one-time spawn if the process hasn't
+/// parallelized yet), then the best of a few identical warm regions.
+pub fn measure_pool_timing(threads: usize) -> PoolTiming {
+    let before = crate::parallel::pool::stats();
+    let pool = Pool::new(threads.max(2));
+    let region = |p: &Pool| {
+        let t0 = std::time::Instant::now();
+        let out = p.run_sharded(crate::parallel::split_rows(64, 8), |i, r| {
+            std::hint::black_box(i + r.start + r.end)
+        });
+        std::hint::black_box(&out);
+        t0.elapsed().as_secs_f64()
+    };
+    let cold = region(&pool);
+    let mut warm = f64::INFINITY;
+    for _ in 0..5 {
+        warm = warm.min(region(&pool));
+    }
+    let after = crate::parallel::pool::stats();
+    PoolTiming {
+        cold_region_seconds: cold,
+        warm_region_seconds: warm,
+        cold_included_spawn: after.spawn_events > before.spawn_events,
+        spawn_events: after.spawn_events,
+        workers: after.workers,
+    }
 }
 
 /// Sweep the Table-1 MLP (elliptic full-rank operator) over a batch ×
@@ -95,6 +147,19 @@ pub fn run_table1_grid(
     let bencher = Bencher::new(cfg.bench);
     let mut rng = Xoshiro256::new(cfg.seed ^ 0xBEEF);
     let mut cells = Vec::with_capacity(batches.len() * threads.len());
+    // The persistent team is provisioned once, at the first parallel
+    // region, from max(machine width, resolved --threads knob): raise the
+    // knob to the widest grid cell *before* that first region so a
+    // threads-grid above the core count actually gets its lanes (otherwise
+    // wide cells would silently run on a narrower team than their label).
+    // Restored after the sweep.
+    let ambient_threads = Pool::from_env().threads();
+    let grid_max = threads.iter().copied().max().unwrap_or(1);
+    crate::parallel::set_global_threads(grid_max.max(ambient_threads));
+    // Pool lifecycle: measure the cold region before any other parallel
+    // work in this sweep so the one-time spawn (if unpaid so far in this
+    // process) lands in the cold number, never in a grid cell.
+    let pool_timing = measure_pool_timing(grid_max);
     // Plan-compile cost, measured uncached (the cost the keyed cache
     // amortizes away); every cell below reuses this one program.
     let dof_engine = op.dof_engine();
@@ -117,8 +182,7 @@ pub fn run_table1_grid(
     // The cell's thread count must also govern the row-parallel GEMM, which
     // consults the process-global pool (reached on single-shard batches
     // where no worker suppression applies) — otherwise small-batch cells
-    // would be mislabeled. Restored after the sweep.
-    let ambient_threads = Pool::from_env().threads();
+    // would be mislabeled.
     for &batch in batches {
         let x = Tensor::randn(&[batch, cfg.n], &mut rng);
         for &t in threads {
@@ -153,7 +217,11 @@ pub fn run_table1_grid(
         }
     }
     crate::parallel::set_global_threads(ambient_threads);
-    GridReport { cells, plan }
+    GridReport {
+        cells,
+        plan,
+        pool: pool_timing,
+    }
 }
 
 /// Serialize a grid to the `BENCH_table1.json` schema. `dof_ms` /
@@ -164,12 +232,13 @@ pub fn grid_json(cfg: &Table1Config, report: &GridReport) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"table1_mlp_grid\",\n");
-    s.push_str("  \"schema\": 2,\n");
+    s.push_str("  \"schema\": 3,\n");
     s.push_str("  \"order\": 2,\n");
     s.push_str("  \"operator\": \"elliptic\",\n");
     s.push_str(
-        "  \"provenance\": \"schema v2 (jet subsystem): adds the order column so order-2 \
-         (DOF) and order-4 (jet) grids share one trajectory format; v1 files predate it\",\n",
+        "  \"provenance\": \"schema v3 (persistent worker pool): adds the pool object \
+         (cold vs warm region dispatch, spawn events); v2 added the order column so \
+         order-2 (DOF) and order-4 (jet) grids share one trajectory format\",\n",
     );
     s.push_str(&format!(
         "  \"config\": {{\"n\": {}, \"hidden\": {}, \"layers\": {}, \"seed\": {}, \"shard_rows\": {}}},\n",
@@ -181,6 +250,15 @@ pub fn grid_json(cfg: &Table1Config, report: &GridReport) -> String {
         report.plan.slab_per_row,
         report.plan.fused_steps,
         report.plan.dof_muls_per_row
+    ));
+    s.push_str(&format!(
+        "  \"pool\": {{\"cold_region_ms\": {:.4}, \"warm_region_ms\": {:.4}, \
+         \"cold_included_spawn\": {}, \"spawn_events\": {}, \"workers\": {}}},\n",
+        report.pool.cold_region_seconds * 1e3,
+        report.pool.warm_region_seconds * 1e3,
+        report.pool.cold_included_spawn,
+        report.pool.spawn_events,
+        report.pool.workers
     ));
     s.push_str("  \"cells\": [\n");
     for (i, c) in cells.iter().enumerate() {
@@ -245,12 +323,18 @@ mod tests {
         assert_eq!(cells[0].dof_muls, report.plan.dof_muls_per_row * 4);
         assert!(report.plan.compile_seconds >= 0.0);
         assert!(report.plan.slab_per_row > 0);
+        // Pool lifecycle rides along: spawn happened at most once, and the
+        // warm region number is a real measurement.
+        assert_eq!(report.pool.spawn_events, 1);
+        assert!(report.pool.warm_region_seconds.is_finite());
         let json = grid_json(&cfg, &report);
         assert!(json.contains("\"bench\": \"table1_mlp_grid\""));
-        assert!(json.contains("\"schema\": 2"));
+        assert!(json.contains("\"schema\": 3"));
         assert!(json.contains("\"order\": 2"));
         assert!(json.contains("\"plan\""));
         assert!(json.contains("\"compile_ms\""));
+        assert!(json.contains("\"pool\""));
+        assert!(json.contains("\"warm_region_ms\""));
         assert!(json.contains("\"batch\": 9"));
         assert!(json.ends_with("}\n"));
         // Balanced braces/brackets as a cheap well-formedness check.

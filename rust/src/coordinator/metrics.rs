@@ -14,6 +14,11 @@ pub struct Metrics {
 #[derive(Debug, Default)]
 struct Inner {
     requests: u64,
+    /// Requests the worker has pulled off its channel (arrival count; a
+    /// request is counted here before it is batched, so `received` is the
+    /// race-free "safely inside the worker" signal shutdown-drain logic
+    /// and tests key on).
+    received: u64,
     rows: u64,
     batches: u64,
     padded_rows: u64,
@@ -30,6 +35,9 @@ struct Inner {
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
     pub requests: u64,
+    /// Requests the worker has pulled off its channel (≥ `requests`, which
+    /// counts completed responses).
+    pub received: u64,
     pub rows: u64,
     pub batches: u64,
     pub padded_rows: u64,
@@ -51,6 +59,12 @@ pub struct MetricsSnapshot {
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Record a request arriving at the worker (pulled off the channel,
+    /// about to be batched).
+    pub fn record_received(&self) {
+        self.inner.lock().unwrap().received += 1;
     }
 
     pub fn record_request(&self, rows: usize, latency_s: f64) {
@@ -86,6 +100,7 @@ impl Metrics {
         let executed = g.rows + g.padded_rows;
         MetricsSnapshot {
             requests: g.requests,
+            received: g.received,
             rows: g.rows,
             batches: g.batches,
             padded_rows: g.padded_rows,

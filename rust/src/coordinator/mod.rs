@@ -8,13 +8,20 @@
 //! latency/throughput metrics. PJRT handles are not `Send`, so each worker
 //! owns its own [`crate::runtime::Executor`]; the handle side is plain
 //! `mpsc`, so any number of producer threads can submit.
+//!
+//! Multi-model traffic goes through the [`Router`]: per-model
+//! [`ModelServer`]s (DOF / Hessian / jet engines mixed) registered under
+//! names, tagged dispatch, and per-model queue-depth + occupancy metrics
+//! for autoscaling decisions — see [`router`].
 
 pub mod batcher;
 pub mod metrics;
+pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher, PendingRequest};
 pub use metrics::Metrics;
+pub use router::{Router, RouterClient, RouterModelSnapshot};
 pub use server::{BatchFn, ModelServer, ServerHandle};
 
 /// A request: evaluate the operator at `rows` points of width `width`

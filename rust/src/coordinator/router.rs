@@ -1,0 +1,306 @@
+//! Multi-model serving router: one front door over per-model
+//! [`ModelServer`] workers.
+//!
+//! `ModelServer` instances already compose — each owns its worker thread,
+//! batcher, and metrics — but before the router every client had to hold
+//! the right `ServerHandle` itself. The router closes that gap for
+//! multi-model traffic (the ROADMAP serving follow-up):
+//!
+//! * **Registration** — each model (DOF / Hessian-baseline / jet engines
+//!   mixed, or an XLA artifact worker) is registered once under a name;
+//!   widths may differ per model.
+//! * **Tagged dispatch** — a request names its model;
+//!   [`RouterClient::eval_blocking`] routes it to that model's worker and
+//!   blocks for the response. Routing adds counters only — the bytes flow
+//!   through the same `ServerHandle` path as a direct caller, so routed
+//!   results are **bitwise identical** to direct engine calls (asserted by
+//!   `rust/tests/router_serving.rs`).
+//! * **Autoscaling signals** — per-model [`RouterModelSnapshot`]s expose
+//!   exact dispatch/completion counters, the instantaneous and peak
+//!   **queue depth** (requests currently inside the worker, i.e. queued or
+//!   executing), and the underlying server metrics including
+//!   `parallel_occupancy` — the two numbers an autoscaler needs to decide
+//!   when a model wants more shards or another replica.
+//! * **Draining shutdown** — [`Router::shutdown`] stops every worker via
+//!   its graceful path: partial batches are flushed and every in-flight
+//!   request receives its response before the worker exits.
+//!
+//! Concurrency model: the router itself is registration-then-read-only;
+//! clients obtain a cheap [`RouterClient`] per model (cloneable, `Send`)
+//! and submit from as many threads as they like — all counters are
+//! atomics.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::MetricsSnapshot;
+use super::server::{ModelServer, ServerHandle};
+use super::EvalResponse;
+
+/// Per-model routing counters (shared between the router and its clients).
+#[derive(Default)]
+struct Counters {
+    /// Requests routed to the model (== completed + failed + in flight).
+    dispatched: AtomicU64,
+    /// Requests answered successfully.
+    completed: AtomicU64,
+    /// Requests answered with an error.
+    failed: AtomicU64,
+    /// Requests currently inside the worker (queued or executing).
+    queue_depth: AtomicUsize,
+    /// High-water mark of `queue_depth`.
+    peak_queue_depth: AtomicUsize,
+}
+
+struct Entry {
+    name: String,
+    server: ModelServer,
+    counters: Arc<Counters>,
+}
+
+/// The multi-model front door (see module docs).
+#[derive(Default)]
+pub struct Router {
+    models: Vec<Entry>,
+}
+
+/// A client for one registered model: routes requests and maintains the
+/// model's queue-depth and dispatch counters. Cloneable and `Send` — hand
+/// one clone per client thread.
+#[derive(Clone)]
+pub struct RouterClient {
+    model: String,
+    handle: ServerHandle,
+    counters: Arc<Counters>,
+}
+
+/// Point-in-time routing metrics for one model.
+#[derive(Debug, Clone)]
+pub struct RouterModelSnapshot {
+    pub model: String,
+    /// Requests routed to this model.
+    pub dispatched: u64,
+    /// Requests answered successfully.
+    pub completed: u64,
+    /// Requests answered with an error.
+    pub failed: u64,
+    /// Requests currently inside the worker (queued or executing).
+    pub queue_depth: usize,
+    /// High-water mark of `queue_depth` since registration.
+    pub peak_queue_depth: usize,
+    /// The model server's own metrics (latency, batching efficiency,
+    /// shards, `parallel_occupancy`).
+    pub server: MetricsSnapshot,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self { models: Vec::new() }
+    }
+
+    /// Register a model server under `name`. Panics on a duplicate name
+    /// (two workers answering one tag would split the metrics and make
+    /// routing ambiguous).
+    pub fn register(&mut self, name: &str, server: ModelServer) {
+        assert!(
+            self.models.iter().all(|e| e.name != name),
+            "router already has a model named {name:?}"
+        );
+        self.models.push(Entry {
+            name: name.to_string(),
+            server,
+            counters: Arc::new(Counters::default()),
+        });
+    }
+
+    /// Registered model names, in registration order.
+    pub fn models(&self) -> Vec<&str> {
+        self.models.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// A routing client for `model` (error on an unknown tag).
+    pub fn client(&self, model: &str) -> Result<RouterClient> {
+        let entry = self
+            .models
+            .iter()
+            .find(|e| e.name == model)
+            .ok_or_else(|| anyhow!("router has no model named {model:?}"))?;
+        Ok(RouterClient {
+            model: entry.name.clone(),
+            handle: entry.server.handle(),
+            counters: Arc::clone(&entry.counters),
+        })
+    }
+
+    /// Route one request to `model` and block for the response.
+    pub fn eval_blocking(&self, model: &str, points: Vec<f32>) -> Result<EvalResponse> {
+        self.client(model)?.eval_blocking(points)
+    }
+
+    /// Routing + server metrics for every model, in registration order.
+    pub fn snapshot(&self) -> Vec<RouterModelSnapshot> {
+        self.models
+            .iter()
+            .map(|e| RouterModelSnapshot {
+                model: e.name.clone(),
+                dispatched: e.counters.dispatched.load(Ordering::Relaxed),
+                completed: e.counters.completed.load(Ordering::Relaxed),
+                failed: e.counters.failed.load(Ordering::Relaxed),
+                queue_depth: e.counters.queue_depth.load(Ordering::Relaxed),
+                peak_queue_depth: e.counters.peak_queue_depth.load(Ordering::Relaxed),
+                server: e.server.handle().metrics.snapshot(),
+            })
+            .collect()
+    }
+
+    /// Graceful stop: every worker flushes its partial batch and answers
+    /// all in-flight requests before exiting (no request is lost; asserted
+    /// by `rust/tests/router_serving.rs`).
+    pub fn shutdown(self) {
+        for e in self.models {
+            e.server.shutdown();
+        }
+    }
+}
+
+impl RouterClient {
+    /// The model this client routes to.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Row width (input dimension) the model expects.
+    pub fn width(&self) -> usize {
+        self.handle.width()
+    }
+
+    /// Route one request and block for the response, maintaining the
+    /// model's dispatch and queue-depth counters exactly (one dispatched
+    /// per call; depth incremented for the duration of the round trip).
+    pub fn eval_blocking(&self, points: Vec<f32>) -> Result<EvalResponse> {
+        let c = &*self.counters;
+        c.dispatched.fetch_add(1, Ordering::Relaxed);
+        let depth = c.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        c.peak_queue_depth.fetch_max(depth, Ordering::Relaxed);
+        let out = self.handle.eval_blocking(points);
+        // Outcome before depth: a snapshot must never observe a request
+        // missing from dispatched == completed + failed + queue_depth.
+        match &out {
+            Ok(_) => c.completed.fetch_add(1, Ordering::Relaxed),
+            Err(_) => c.failed.fetch_add(1, Ordering::Relaxed),
+        };
+        c.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatchFn, BatchPolicy};
+    use std::time::Duration;
+
+    fn scaled_sum_server(width: usize, scale: f32) -> ModelServer {
+        let compute: BatchFn = Box::new(move |data: &[f32], w: usize| {
+            let rows = data.len() / w;
+            let mut phi = Vec::with_capacity(rows);
+            let mut lphi = Vec::with_capacity(rows);
+            for r in 0..rows {
+                let s: f32 = data[r * w..(r + 1) * w].iter().sum();
+                phi.push(s);
+                lphi.push(scale * s);
+            }
+            Ok((phi, lphi))
+        });
+        ModelServer::spawn(
+            width,
+            BatchPolicy {
+                capacity: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            compute,
+        )
+    }
+
+    #[test]
+    fn routes_by_tag_and_counts_exactly() {
+        let mut router = Router::new();
+        router.register("double", scaled_sum_server(2, 2.0));
+        router.register("triple", scaled_sum_server(3, 3.0));
+        assert_eq!(router.models(), vec!["double", "triple"]);
+
+        let d = router.eval_blocking("double", vec![1.0, 2.0]).unwrap();
+        assert_eq!(d.lphi, vec![6.0]);
+        let t = router.eval_blocking("triple", vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(t.lphi, vec![18.0]);
+        let t2 = router.eval_blocking("triple", vec![0.0, 0.0, 1.0]).unwrap();
+        assert_eq!(t2.lphi, vec![3.0]);
+
+        let snap = router.snapshot();
+        assert_eq!(snap[0].dispatched, 1);
+        assert_eq!(snap[0].completed, 1);
+        assert_eq!(snap[1].dispatched, 2);
+        assert_eq!(snap[1].completed, 2);
+        assert_eq!(snap[0].queue_depth, 0, "no request in flight");
+        assert!(snap[1].peak_queue_depth >= 1);
+        assert!(router.eval_blocking("nope", vec![1.0]).is_err());
+        router.shutdown();
+    }
+
+    #[test]
+    #[should_panic(expected = "already has a model")]
+    fn duplicate_names_rejected() {
+        let mut router = Router::new();
+        router.register("m", scaled_sum_server(1, 1.0));
+        router.register("m", scaled_sum_server(1, 1.0));
+    }
+
+    #[test]
+    fn clients_route_from_many_threads() {
+        let mut router = Router::new();
+        router.register("sum", scaled_sum_server(1, 2.0));
+        let client = router.client("sum").unwrap();
+        assert_eq!(client.width(), 1);
+        let joins: Vec<_> = (0..6)
+            .map(|i| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    let v = i as f32;
+                    let resp = c.eval_blocking(vec![v]).unwrap();
+                    assert_eq!(resp.lphi, vec![2.0 * v]);
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap();
+        }
+        let snap = router.snapshot();
+        assert_eq!(snap[0].dispatched, 6);
+        assert_eq!(snap[0].completed, 6);
+        assert_eq!(snap[0].queue_depth, 0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn failures_counted_separately() {
+        let failing: BatchFn = Box::new(|_, _| Err(anyhow!("backend exploded")));
+        let mut router = Router::new();
+        router.register(
+            "bad",
+            ModelServer::spawn(
+                1,
+                BatchPolicy {
+                    capacity: 2,
+                    max_wait: Duration::from_millis(1),
+                },
+                failing,
+            ),
+        );
+        assert!(router.eval_blocking("bad", vec![1.0]).is_err());
+        let snap = router.snapshot();
+        assert_eq!((snap[0].dispatched, snap[0].completed, snap[0].failed), (1, 0, 1));
+        router.shutdown();
+    }
+}

@@ -12,11 +12,12 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::autodiff::arena::{with_program_slab, SlabKey};
-use crate::autodiff::DofEngine;
+use crate::autodiff::{DofEngine, HessianEngine};
 use crate::graph::Graph;
 use crate::jet::{self, JetEngine};
 use crate::parallel::{split_rows, Pool};
 use crate::plan;
+use crate::plan::hessian::global_hessian_cache;
 use crate::tensor::Tensor;
 
 use super::batcher::{BatchPolicy, Batcher, CutBatch};
@@ -43,6 +44,11 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
+    /// Row width (model input dimension) this server expects.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
     /// Submit a request; blocks until the response is ready. Requests
     /// larger than the batch capacity are split and reassembled here.
     pub fn eval_blocking(&self, points: Vec<f32>) -> Result<EvalResponse> {
@@ -111,6 +117,7 @@ fn worker_loop<F>(
     loop {
         match rx.recv_timeout(policy.max_wait) {
             Ok(Msg::Eval(req, rtx)) => {
+                metrics.record_received();
                 let cuts = batcher.push(req, |_frag| rtx.clone());
                 for cut in cuts {
                     run_batch(cut, &mut compute);
@@ -296,6 +303,39 @@ impl ModelServer {
             let res = with_program_slab(key, |slab| {
                 engine.execute_with_slab(&program, &graph, &x, slab)
             });
+            Ok((
+                res.values.data().iter().map(|&v| v as f32).collect(),
+                res.operator_values.data().iter().map(|&v| v as f32).collect(),
+            ))
+        };
+        Self::spawn_sharded(width, policy, pool, shard_rows, compute)
+    }
+
+    /// Spawn a sharded worker around the **Hessian baseline engine** with
+    /// compile-once execution: the structure-keyed
+    /// [`crate::plan::hessian::HessianPlan`] is fetched from the global
+    /// Hessian-plan cache at spawn, and every batch
+    /// the coordinator cuts executes it per shard with an exact-fit slab
+    /// from the program-keyed pool (domain-tagged key — Hessian slabs never
+    /// alias DOF or jet slabs). `lphi` carries `L[φ]` exactly like the DOF
+    /// backend, so a router can mix the two behind one traffic stream
+    /// (useful for serving-scale baseline comparisons).
+    pub fn spawn_hessian(
+        graph: Graph,
+        engine: HessianEngine,
+        policy: BatchPolicy,
+        pool: Pool,
+        shard_rows: usize,
+    ) -> Self {
+        let width = graph.input_dim();
+        let plan = global_hessian_cache().get_or_compile(&graph);
+        let compute = move |data: &[f32], w: usize| -> Result<(Vec<f32>, Vec<f32>)> {
+            let rows = data.len() / w;
+            let x = Tensor::from_vec(
+                &[rows, w],
+                data.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
+            );
+            let res = engine.execute(&plan, &graph, &x);
             Ok((
                 res.values.data().iter().map(|&v| v as f32).collect(),
                 res.operator_values.data().iter().map(|&v| v as f32).collect(),

@@ -5,13 +5,14 @@
 //! structure, the direction-matrix zero pattern, `(t, k)`, and the
 //! zeroth-order flag — never weight or direction *values*), so serving and
 //! repeated evaluation of the same `(architecture, operator)` pair compile
-//! once and execute thereafter. Compilation happens outside the lock; a
-//! racing compile of the same key keeps the first inserted program.
+//! once and execute thereafter. The double-checked mechanism is the shared
+//! [`KeyedCache`] ([`crate::util::keyed_cache`]); this module only
+//! contributes the key derivation and the compile closure.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::graph::Graph;
+use crate::util::keyed_cache::KeyedCache;
 
 use super::basis::DirectionBasis;
 use super::program::{jet_key, JetKey, JetProgram};
@@ -19,27 +20,19 @@ use super::program::{jet_key, JetKey, JetProgram};
 /// Bound on retained programs (oldest evicted past this).
 pub const JET_CACHE_CAP: usize = 32;
 
-/// Hit/miss counters plus current occupancy.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct JetCacheStats {
-    pub hits: u64,
-    pub misses: u64,
-    pub entries: usize,
-}
+/// Hit/miss counters plus current occupancy (the shared
+/// [`crate::util::CacheStats`] shape).
+pub type JetCacheStats = crate::util::CacheStats;
 
 /// A keyed jet-program cache (see module docs).
 pub struct JetCache {
-    entries: Mutex<Vec<(JetKey, Arc<JetProgram>)>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    inner: KeyedCache<JetKey, JetProgram>,
 }
 
 impl JetCache {
     pub const fn new() -> Self {
         Self {
-            entries: Mutex::new(Vec::new()),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            inner: KeyedCache::new(JET_CACHE_CAP),
         }
     }
 
@@ -52,38 +45,17 @@ impl JetCache {
         has_c: bool,
     ) -> Arc<JetProgram> {
         let key = jet_key(graph, basis, has_c);
-        {
-            let entries = self.entries.lock().expect("jet cache poisoned");
-            if let Some((_, p)) = entries.iter().find(|(k, _)| *k == key) {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                return Arc::clone(p);
-            }
-        }
-        let program = Arc::new(JetProgram::compile(graph, basis, has_c));
-        let mut entries = self.entries.lock().expect("jet cache poisoned");
-        if let Some((_, p)) = entries.iter().find(|(k, _)| *k == key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(p);
-        }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        if entries.len() >= JET_CACHE_CAP {
-            entries.remove(0);
-        }
-        entries.push((key, Arc::clone(&program)));
-        program
+        self.inner
+            .get_or_insert_with(key, || JetProgram::compile(graph, basis, has_c))
     }
 
     pub fn stats(&self) -> JetCacheStats {
-        JetCacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            entries: self.entries.lock().expect("jet cache poisoned").len(),
-        }
+        self.inner.stats()
     }
 
     /// Drop every retained program (counters are kept).
     pub fn clear(&self) {
-        self.entries.lock().expect("jet cache poisoned").clear();
+        self.inner.clear()
     }
 }
 

@@ -98,9 +98,14 @@
 //! seeded random `(architecture, operator)` cases per run
 //! ([`prop::generator`]; `DOF_FUZZ_CASES` scales the scheduled CI job),
 //! printing the reproducing seed on failure. `cache_soundness.rs` pins the
-//! compile-once caches' contract: weight-value moves hit by pointer
-//! identity; zero-pattern, topology, or `L`-pattern changes recompile, and
-//! recompiled plans are re-verified against a fresh interpreter run.
+//! compile-once caches' contract — through all three consumers of the one
+//! generic [`util::KeyedCache`]: weight-value moves hit by pointer
+//! identity; zero-pattern, topology, or `L`-pattern changes recompile;
+//! recompiled plans are re-verified against a fresh interpreter run; and
+//! eviction/stat exactness is pinned at the generic layer. The runtime
+//! layer has its own battery: `concurrency_stress.rs` (slab-pool hammer +
+//! worker-pool lifecycle vs the scoped baseline) and `router_serving.rs`
+//! (routed ≡ direct bitwise, exact metrics, draining shutdown).
 //!
 //! ## Taylor-mode jets (third/fourth order)
 //!
@@ -117,26 +122,46 @@
 //! across 1/2/4/8 threads — `rust/tests/jet_equivalence.rs`), serving via
 //! `ModelServer::spawn_jet`, and `dof bench grid --order 4`.
 //!
-//! ## Parallel execution
+//! ## Parallel execution & the serving runtime
 //!
-//! The hot path scales across cores without giving up exactness:
+//! The hot path scales across cores without giving up exactness, and the
+//! runtime layer amortizes threads, slabs, and routing across requests:
 //!
-//! * [`parallel`] — a std-only scoped thread pool sized by `--threads` /
-//!   `DOF_THREADS` / `available_parallelism`, plus the deterministic
-//!   sharding helpers.
+//! * [`parallel`] — a std-only **persistent worker pool**
+//!   ([`parallel::pool`]): OS threads are spawned exactly once per process
+//!   (lazily, on the first parallel region — a spawn counter proves zero
+//!   thread creation after warmup) and parked on a condvar between
+//!   regions. A `Pool::new(t)` region runs on the calling thread plus at
+//!   most `t − 1` warm helpers; concurrent regions from different caller
+//!   threads (several model servers, say) coexist in the shared queue.
+//!   The PR 1 scoped-spawn implementation survives as
+//!   `Pool::run_sharded_scoped`, the differential baseline
+//!   `rust/tests/concurrency_stress.rs` pins the pooled runtime against,
+//!   bit for bit.
 //! * **Batch sharding** — `DofEngine::compute_sharded` /
 //!   `HessianEngine::compute_sharded` split `[batch, N]` into fixed
 //!   8-row shards ([`parallel::DEFAULT_SHARD_ROWS`]); each worker runs the
-//!   full tuple propagation on its shard with a [`autodiff::TangentArena`]
-//!   checked out of a process-wide depot (no per-node alloc/free churn,
-//!   warm across bench reps and server batches; serial paths use a
-//!   thread-local arena) and results are reduced in shard order.
+//!   full tuple propagation on its shard with a slab from the
+//!   program-keyed pool, and results are reduced in shard order.
 //! * **Row-parallel GEMM** — [`tensor::matmul_into`] splits output rows
-//!   (4-aligned, matching the micro-kernel grouping) across the global pool
-//!   for large single-shard products; nested parallelism inside pool
+//!   (4-aligned, matching the micro-kernel grouping) across the persistent
+//!   team for large single-shard products; nested parallelism inside pool
 //!   workers is suppressed.
-//! * **Serving** — `coordinator::ModelServer::spawn_sharded` runs a
-//!   row-sharded `BatchFn` over the pool and records per-shard metrics.
+//! * **Sharded slab pool** — [`autodiff::arena::with_program_slab`] keys
+//!   slabs by `(program fingerprint, rows)` with exact-fit checkout, and
+//!   the pool is lock-sharded by key hash (16 mutexes), so concurrent
+//!   unsharded `execute()` calls from caller-owned threads no longer
+//!   serialize on one global lock. Program fingerprints are domain-tagged
+//!   (DOF / Hessian / jet), so engines never alias each other's slabs.
+//! * **Serving** — `coordinator::ModelServer::spawn_dof` /
+//!   `spawn_hessian` / `spawn_jet` each own a worker thread executing a
+//!   precompiled program per shard; the multi-model
+//!   [`coordinator::Router`] registers them under names, dispatches
+//!   tagged requests, and exposes per-model queue-depth and
+//!   `parallel_occupancy` metrics — the autoscaling signals. Routed
+//!   results are bitwise identical to direct engine calls
+//!   (`rust/tests/router_serving.rs`), and shutdown drains every queued
+//!   request.
 //!
 //! **Determinism contract:** shard boundaries are a function of the batch
 //! size alone (never the thread count) and every reduction is shard-ordered

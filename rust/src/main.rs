@@ -19,7 +19,7 @@ use dof::bench_harness::report::{run_table1_grid, write_grid_json};
 use dof::bench_harness::table1::{run_table1, Table1Config};
 use dof::bench_harness::table2::{run_table2, Table2Config};
 use dof::bench_harness::{render_table, BenchConfig};
-use dof::coordinator::{BatchPolicy, ModelServer};
+use dof::coordinator::{BatchPolicy, ModelServer, Router};
 use dof::graph::Act;
 use dof::nn::{Mlp, MlpSpec};
 use dof::operators::{CoeffSpec, HigherOrderOperator, HigherOrderSpec, Operator};
@@ -28,7 +28,7 @@ use dof::pde::trainer::{PinnConfig, PinnTrainer};
 use dof::pde::{fokker_planck, heat_equation, klein_gordon, poisson};
 use dof::runtime::{ArtifactRegistry, Executor};
 use dof::train::AdamConfig;
-use dof::util::{fmt_bytes, fmt_duration, Args, Xoshiro256};
+use dof::util::{fmt_duration, Args, Xoshiro256};
 
 fn main() {
     let args = Args::from_env();
@@ -82,15 +82,19 @@ USAGE:
   dof train [--pde heat] [--steps 300]    train a PINN through DOF
   dof decompose [--spec elliptic --n 64]  show an A = LᵀDL decomposition
   dof inspect [--artifacts artifacts]     list AOT artifacts
-  dof serve [--artifact dof_mlp_elliptic] run the batching server demo
+  dof serve [--artifact dof_mlp_elliptic] run the multi-model router demo
             [--engine rust|xla]           (default: rust unless built with
                                            the pjrt feature; rust = sharded
                                            DOF engine backend)
             [--order 2|4]                 rust engine: 4 serves precompiled
                                           biharmonic jet programs
+            [--multi]                     rust engine: DOF + Hessian + jet
+                                          models behind one router (mixed
+                                          tagged traffic)
 
-  --threads N (or DOF_THREADS=N) sizes the worker pool for batch sharding
-  and the row-parallel GEMM; results are bit-identical at any N.";
+  --threads N (or DOF_THREADS=N) sizes the worker team for batch sharding
+  and the row-parallel GEMM; OS threads spawn once per process and are
+  reused across regions; results are bit-identical at any N.";
 
 fn bench_config(args: &Args) -> BenchConfig {
     BenchConfig {
@@ -202,6 +206,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 report.plan.fused_steps,
                 report.plan.slab_per_row,
                 report.plan.dof_muls_per_row
+            );
+            println!(
+                "worker pool: cold region {} ({}), warm region {} — {} threads, \
+                 {} spawn event(s) for the process",
+                fmt_duration(report.pool.cold_region_seconds),
+                if report.pool.cold_included_spawn {
+                    "includes one-time spawn"
+                } else {
+                    "team already warm"
+                },
+                fmt_duration(report.pool.warm_region_seconds),
+                report.pool.workers,
+                report.pool.spawn_events
             );
             println!("| batch | threads | DOF exec | Hessian exec | H/D ratio |");
             println!("|-------|---------|----------|--------------|-----------|");
@@ -434,8 +451,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // executor is a stub unless the `pjrt` feature (plus the xla crate) is
     // compiled in, so the out-of-the-box demo uses the Rust backend.
     let default_engine = if cfg!(feature = "pjrt") { "xla" } else { "rust" };
-    let (server, width) = match args.get_or("engine", default_engine).as_str() {
-        "rust" => serve_rust_backend(args)?,
+    // All traffic flows through the multi-model Router: each backend is a
+    // registered per-model worker, clients dispatch tagged requests, and
+    // the router's per-model queue-depth/occupancy metrics are reported at
+    // the end (the autoscaling signals).
+    let mut router = Router::new();
+    match args.get_or("engine", default_engine).as_str() {
+        "rust" => register_rust_models(args, &mut router)?,
         "xla" => {
             let dir = args.get_or("artifacts", "artifacts");
             let artifact = args.get_or("artifact", "dof_mlp_elliptic");
@@ -452,23 +474,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 batch,
                 Duration::from_millis(args.u64_or("max-wait-ms", 2)),
             )?;
-            (server, width)
+            router.register("xla", server);
         }
         other => return Err(anyhow!("unknown engine {other:?} (rust|xla)")),
-    };
-    let h = server.handle();
+    }
+    let model_clients = router
+        .models()
+        .into_iter()
+        .map(|m| router.client(m))
+        .collect::<Result<Vec<_>>>()?;
+    println!(
+        "router serving {} model(s): {}",
+        model_clients.len(),
+        router.models().join(", ")
+    );
     let t0 = std::time::Instant::now();
     let threads: Vec<_> = (0..clients)
         .map(|c| {
-            let h = h.clone();
+            // Clients round-robin over the registered models (tagged
+            // dispatch; widths may differ per model).
+            let rc = model_clients[c % model_clients.len()].clone();
             let per_client = requests / clients.max(1);
             std::thread::spawn(move || -> Result<usize> {
                 let mut rng = Xoshiro256::new(100 + c as u64);
+                let width = rc.width();
                 let mut done = 0;
                 for _ in 0..per_client {
                     let pts: Vec<f32> =
                         (0..rows * width).map(|_| rng.normal() as f32).collect();
-                    let resp = h.eval_blocking(pts)?;
+                    let resp = rc.eval_blocking(pts)?;
                     anyhow::ensure!(resp.phi.len() == rows, "short response");
                     done += 1;
                 }
@@ -481,120 +515,158 @@ fn cmd_serve(args: &Args) -> Result<()> {
         total += t.join().map_err(|_| anyhow!("client panicked"))??;
     }
     let wall = t0.elapsed().as_secs_f64();
-    let snap = h.metrics.snapshot();
-    println!(
-        "served {total} requests ({} rows) in {}",
-        snap.rows,
-        fmt_duration(wall)
-    );
-    println!(
-        "throughput: {:.0} rows/s | mean latency {} | p95 {} | batches {} | efficiency {:.0}%",
-        snap.rows as f64 / wall,
-        fmt_duration(snap.mean_latency),
-        fmt_duration(snap.p95_latency),
-        snap.batches,
-        snap.batch_efficiency * 100.0
-    );
-    println!(
-        "total padding data: {}",
-        fmt_bytes(snap.padded_rows * width as u64 * 4)
-    );
-    if snap.sharded_batches > 0 {
+    let mut total_rows = 0u64;
+    for m in router.snapshot() {
+        let snap = &m.server;
+        total_rows += snap.rows;
         println!(
-            "parallel path: {} shards over {} batches | occupancy {:.2}× threads busy",
-            snap.shards, snap.sharded_batches, snap.parallel_occupancy
+            "[{}] {} requests routed ({} rows) | queue depth peak {} (now {}) | \
+             mean latency {} | p95 {} | batches {} | efficiency {:.0}%",
+            m.model,
+            m.dispatched,
+            snap.rows,
+            m.peak_queue_depth,
+            m.queue_depth,
+            fmt_duration(snap.mean_latency),
+            fmt_duration(snap.p95_latency),
+            snap.batches,
+            snap.batch_efficiency * 100.0
         );
+        if snap.sharded_batches > 0 {
+            println!(
+                "[{}] parallel path: {} shards over {} batches | occupancy {:.2}× threads busy",
+                m.model, snap.shards, snap.sharded_batches, snap.parallel_occupancy
+            );
+        }
     }
-    server.shutdown();
+    println!(
+        "served {total} requests ({total_rows} rows) in {} | {:.0} rows/s across models",
+        fmt_duration(wall),
+        total_rows as f64 / wall
+    );
+    let pstats = parallel::pool::stats();
+    println!(
+        "worker pool: {} warm threads, {} spawn event(s), {} parallel regions",
+        pstats.workers, pstats.spawn_events, pstats.regions
+    );
+    router.shutdown();
     Ok(())
 }
 
-/// `dof serve --engine rust`: the pure-Rust engines as a sharded serving
-/// backend with **compile-once execution** — the operator program is keyed
-/// into the global plan/jet cache at spawn, and every batch the coordinator
-/// cuts executes that precompiled program per shard (exact-fit slabs from
-/// the program-keyed pool; scoped workers' thread-locals would die with
-/// each batch's parallel region). `--order 4` serves the biharmonic jet
-/// operator instead of the second-order DOF elliptic.
-fn serve_rust_backend(args: &Args) -> Result<(ModelServer, usize)> {
+/// `dof serve --engine rust`: the pure-Rust engines as sharded serving
+/// backends with **compile-once execution** — each model's program/plan is
+/// keyed into the global caches at spawn, and every batch the coordinator
+/// cuts executes it per shard (exact-fit slabs from the hash-sharded
+/// program-keyed pool). `--order 4` serves the biharmonic jet operator
+/// instead of the second-order DOF elliptic; `--multi` registers the DOF,
+/// Hessian-baseline, and jet models together so the router carries mixed
+/// traffic.
+fn register_rust_models(args: &Args, router: &mut Router) -> Result<()> {
     let order = args.usize_or("order", 2);
+    let multi = args.flag("multi");
     let n = args.usize_or("n", if order == 4 { 8 } else { 64 });
     let seed = args.u64_or("seed", 0);
-    let model = Mlp::init(
-        MlpSpec {
-            in_dim: n,
-            hidden: args.usize_or("hidden", 64),
-            layers: args.usize_or("layers", 3),
-            out_dim: 1,
-            act: Act::Tanh,
-        },
-        seed,
-    );
-    let graph = model.to_graph();
+    let mlp = |in_dim: usize| {
+        Mlp::init(
+            MlpSpec {
+                in_dim,
+                hidden: args.usize_or("hidden", 64),
+                layers: args.usize_or("layers", 3),
+                out_dim: 1,
+                act: Act::Tanh,
+            },
+            seed,
+        )
+    };
     let pool = Pool::from_env();
     let batch = args.usize_or("batch", 32);
     let policy = BatchPolicy {
         capacity: batch,
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)),
     };
-    match order {
-        2 => {
-            let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed });
-            let t0 = std::time::Instant::now();
-            let program = op.dof_program(&graph);
-            println!(
-                "serving rust DOF engine (N={n}, rank {}, batch {batch}, {} threads)",
-                op.rank(),
-                pool.threads()
-            );
-            println!(
-                "compiled operator program in {}: {} steps ({} fused), {} slab scalars/row, \
-                 {} muls/row analytic",
-                fmt_duration(t0.elapsed().as_secs_f64()),
-                program.steps().len(),
-                program.fused_steps(),
-                program.slab_per_row(),
-                program.cost(1).muls
-            );
-            let server = ModelServer::spawn_dof(
+    if order != 2 && order != 4 {
+        return Err(anyhow!(
+            "unsupported --order {order} for serve (2 = DOF, 4 = biharmonic jets)"
+        ));
+    }
+    if order == 2 || multi {
+        let graph = mlp(n).to_graph();
+        let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed });
+        let t0 = std::time::Instant::now();
+        let program = op.dof_program(&graph);
+        println!(
+            "[dof] rust DOF engine (N={n}, rank {}, batch {batch}, {} threads)",
+            op.rank(),
+            pool.threads()
+        );
+        println!(
+            "[dof] compiled operator program in {}: {} steps ({} fused), \
+             {} slab scalars/row, {} muls/row analytic",
+            fmt_duration(t0.elapsed().as_secs_f64()),
+            program.steps().len(),
+            program.fused_steps(),
+            program.slab_per_row(),
+            program.cost(1).muls
+        );
+        router.register(
+            "dof",
+            ModelServer::spawn_dof(
                 graph,
                 op.dof_engine(),
                 policy,
                 pool,
                 parallel::DEFAULT_SHARD_ROWS,
+            ),
+        );
+        if multi {
+            // The Table-1 baseline behind the same front door: mixed
+            // DOF/Hessian traffic exercises the serving-scale comparison.
+            let graph = mlp(n).to_graph();
+            router.register(
+                "hessian",
+                ModelServer::spawn_hessian(
+                    graph,
+                    op.hessian_engine(),
+                    policy,
+                    pool,
+                    parallel::DEFAULT_SHARD_ROWS,
+                ),
             );
-            Ok((server, n))
+            println!("[hessian] rust Hessian baseline (N={n}, batch {batch})");
         }
-        4 => {
-            let op = HigherOrderOperator::from_spec(HigherOrderSpec::Biharmonic { d: n });
-            let t0 = std::time::Instant::now();
-            let program = op.jet_program(&graph);
-            println!(
-                "serving rust jet engine (N={n}, Δ² with {} directions × order 4, \
-                 batch {batch}, {} threads)",
-                op.directions(),
-                pool.threads()
-            );
-            println!(
-                "compiled jet program in {}: {} steps ({} fused), {} slab scalars/row, \
-                 {} muls/row analytic",
-                fmt_duration(t0.elapsed().as_secs_f64()),
-                program.steps().len(),
-                program.fused_steps(),
-                program.slab_per_row(),
-                program.cost(1).muls
-            );
-            let server = ModelServer::spawn_jet(
+    }
+    if order == 4 || multi {
+        // Jet width stays modest under --multi (Δ² needs d² directions).
+        let jn = if order == 4 { n } else { args.usize_or("jet-n", 8) };
+        let graph = mlp(jn).to_graph();
+        let op = HigherOrderOperator::from_spec(HigherOrderSpec::Biharmonic { d: jn });
+        let t0 = std::time::Instant::now();
+        let program = op.jet_program(&graph);
+        println!(
+            "[jet] rust jet engine (N={jn}, Δ² with {} directions × order 4, \
+             batch {batch}, {} threads)",
+            op.directions(),
+            pool.threads()
+        );
+        println!(
+            "[jet] compiled jet program in {}: {} steps ({} fused), \
+             {} slab scalars/row, {} muls/row analytic",
+            fmt_duration(t0.elapsed().as_secs_f64()),
+            program.steps().len(),
+            program.fused_steps(),
+            program.slab_per_row(),
+            program.cost(1).muls
+        );
+        router.register(
+            "jet",
+            ModelServer::spawn_jet(
                 graph,
                 op.jet_engine(),
                 policy,
                 pool,
                 parallel::DEFAULT_SHARD_ROWS,
-            );
-            Ok((server, n))
-        }
-        other => Err(anyhow!(
-            "unsupported --order {other} for serve (2 = DOF, 4 = biharmonic jets)"
-        )),
+            ),
+        );
     }
+    Ok(())
 }

@@ -1,15 +1,17 @@
-//! Std-only parallel execution substrate: a scoped thread pool, deterministic
-//! batch sharding, and the global thread-count knob (`--threads` /
-//! `DOF_THREADS`).
+//! Std-only parallel execution substrate: a persistent worker pool,
+//! deterministic batch sharding, and the global thread-count knob
+//! (`--threads` / `DOF_THREADS`).
 //!
 //! ## Design
 //!
-//! * [`Pool`] is a *scoped* worker team: each parallel region spawns its
-//!   workers with [`std::thread::scope`], so jobs may borrow stack data
-//!   (shards of the input batch, weight tensors, output slices) without any
-//!   `Arc`/`'static` gymnastics or unsafe code. Spawn cost is a few tens of
-//!   microseconds per region — noise against the multi-millisecond engine
-//!   passes this pool exists to shard.
+//! * [`Pool`] is a *view* onto the process's persistent worker team
+//!   ([`pool`]): OS threads are spawned **once** on the first parallel
+//!   region, then parked on a condvar between regions, so steady-state
+//!   serving and bench loops pay zero thread-creation cost per region. A
+//!   `Pool::new(t)` region runs on the calling thread plus at most `t − 1`
+//!   warm helpers. The original region-scoped implementation survives as
+//!   [`Pool::run_sharded_scoped`], the differential baseline the
+//!   concurrency suite pins the pooled runtime against.
 //! * Work is expressed as an ordered list of **shards** (contiguous row
 //!   ranges). Workers pull shard indices from an atomic counter (dynamic
 //!   load balance) but results are *always* reduced in shard order, never in
@@ -18,11 +20,12 @@
 //!   [`DEFAULT_SHARD_ROWS`]-row chunks), never of the thread count — the
 //!   second half of the contract. Together they make every reduced quantity
 //!   (values, `L[φ]`, FLOP tallies, per-shard peak bytes) bit-identical
-//!   across `--threads 1/2/4/8`.
-//! * [`in_worker`] is a thread-local flag set inside pool workers; nested
-//!   parallel regions (e.g. the row-parallel GEMM of
-//!   [`crate::tensor::matmul_into`] called from a shard worker) detect it
-//!   and stay serial instead of oversubscribing the machine.
+//!   across `--threads 1/2/4/8`, on either runtime.
+//! * [`in_worker`] is a thread-local flag set inside pool workers (and on
+//!   the caller while it participates in a region); nested parallel regions
+//!   (e.g. the row-parallel GEMM of [`crate::tensor::matmul_into`] called
+//!   from a shard worker) detect it and stay serial instead of
+//!   oversubscribing the machine.
 //!
 //! ## Choosing thread counts
 //!
@@ -31,6 +34,8 @@
 //! `std::thread::available_parallelism()`. Override with `DOF_THREADS=n` or
 //! `--threads n` on the CLI. Batches smaller than one shard
 //! ([`DEFAULT_SHARD_ROWS`] rows) run inline regardless of the knob.
+
+pub mod pool;
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -50,12 +55,12 @@ pub fn in_worker() -> bool {
     IN_WORKER.with(|f| f.get())
 }
 
-struct WorkerGuard {
+pub(crate) struct WorkerGuard {
     prev: bool,
 }
 
 impl WorkerGuard {
-    fn enter() -> Self {
+    pub(crate) fn enter() -> Self {
         let prev = IN_WORKER.with(|f| f.replace(true));
         WorkerGuard { prev }
     }
@@ -130,7 +135,9 @@ pub fn global() -> Pool {
     Pool::new(resolve_global_threads())
 }
 
-/// A scoped worker team of a fixed size.
+/// A thread-budget view onto the process's persistent worker team: a
+/// `Pool::new(t)` region runs on the caller plus at most `t − 1` warm
+/// helpers (see [`pool`]).
 #[derive(Debug, Clone, Copy)]
 pub struct Pool {
     threads: usize,
@@ -159,6 +166,10 @@ impl Pool {
     ///
     /// Runs inline when the pool is single-threaded, there is ≤ 1 shard, or
     /// the caller is itself a pool worker (no nested oversubscription).
+    /// Parallel regions execute on the **persistent worker team**
+    /// ([`pool`]): the caller participates and at most `threads − 1` warm
+    /// helpers join — no OS threads are created after the team's one-time
+    /// spawn.
     pub fn run_sharded<R, F>(&self, ranges: Vec<Range<usize>>, f: F) -> Vec<R>
     where
         R: Send,
@@ -168,6 +179,28 @@ impl Pool {
         if self.threads == 1 || n <= 1 || in_worker() {
             // A 1-thread pool means serial all the way down (no nested GEMM
             // parallelism); a single shard on a wider pool may still use it.
+            let _guard = (self.threads == 1).then(WorkerGuard::enter);
+            return ranges
+                .into_iter()
+                .enumerate()
+                .map(|(i, r)| f(i, r))
+                .collect();
+        }
+        pool::run_region(self.threads, ranges, f)
+    }
+
+    /// The PR 1 region-scoped implementation of [`Self::run_sharded`]:
+    /// spawns fresh scoped threads for this region only. Retained as the
+    /// **differential baseline** the pooled runtime is asserted
+    /// bit-identical to (`rust/tests/concurrency_stress.rs`); production
+    /// paths all go through the persistent team.
+    pub fn run_sharded_scoped<R, F>(&self, ranges: Vec<Range<usize>>, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, Range<usize>) -> R + Sync,
+    {
+        let n = ranges.len();
+        if self.threads == 1 || n <= 1 || in_worker() {
             let _guard = (self.threads == 1).then(WorkerGuard::enter);
             return ranges
                 .into_iter()
@@ -233,6 +266,7 @@ pub fn split_rows_aligned(rows: usize, parts: usize, align: usize) -> Vec<Range<
 }
 
 /// `ceil(a / b)` without the 1.73+ `usize::div_ceil` (keeps the MSRV low).
+#[allow(unknown_lints, clippy::manual_div_ceil)]
 fn div_ceil(a: usize, b: usize) -> usize {
     (a + b - 1) / b
 }

@@ -5,50 +5,38 @@
 //! default behavior of every `DofEngine::compute*` entry point without the
 //! callers threading programs around. Keys are value-independent
 //! ([`super::plan_key`] hashes structure and zero patterns, not weight
-//! values), so a PINN training loop that rebuilds its graph each step with
-//! updated weights hits the cache from step 2 onward.
+//! values), so a PINN training loop that rebuilds its graph each Adam step
+//! hits the cache from step 2 onward.
 //!
-//! The store is a small associative list behind a `Mutex` (a handful of
-//! model/operator pairs at most in any realistic process): lookups are a
-//! key comparison per entry, insertion evicts the oldest entry past
-//! [`CACHE_CAP`]. Compilation happens *outside* the lock; a racing compile
-//! of the same key keeps the first inserted program.
+//! The mechanism — double-checked compile outside the lock, first insert
+//! wins, oldest-entry eviction, hit/miss stats — is the shared
+//! [`KeyedCache`] ([`crate::util::keyed_cache`]); this module only
+//! contributes the key derivation and the compile closure.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::graph::Graph;
 use crate::linalg::LdlDecomposition;
+use crate::util::keyed_cache::KeyedCache;
 
 use super::{plan_key, OperatorProgram, PlanKey, PlanOptions};
 
 /// Bound on retained programs (oldest evicted past this).
 pub const CACHE_CAP: usize = 64;
 
-/// Hit/miss counters plus current occupancy.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct PlanCacheStats {
-    /// Lookups served by an already-compiled program.
-    pub hits: u64,
-    /// Lookups that compiled.
-    pub misses: u64,
-    /// Programs currently retained.
-    pub entries: usize,
-}
+/// Hit/miss counters plus current occupancy (the shared
+/// [`crate::util::CacheStats`] shape).
+pub type PlanCacheStats = crate::util::CacheStats;
 
 /// A keyed program cache (see module docs).
 pub struct PlanCache {
-    entries: Mutex<Vec<(PlanKey, Arc<OperatorProgram>)>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    inner: KeyedCache<PlanKey, OperatorProgram>,
 }
 
 impl PlanCache {
     pub const fn new() -> Self {
         Self {
-            entries: Mutex::new(Vec::new()),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            inner: KeyedCache::new(CACHE_CAP),
         }
     }
 
@@ -60,39 +48,17 @@ impl PlanCache {
         opts: PlanOptions,
     ) -> Arc<OperatorProgram> {
         let key = plan_key(graph, ldl, opts);
-        {
-            let entries = self.entries.lock().expect("plan cache poisoned");
-            if let Some((_, p)) = entries.iter().find(|(k, _)| *k == key) {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                return Arc::clone(p);
-            }
-        }
-        // Compile outside the lock; first insert wins on a race.
-        let program = Arc::new(OperatorProgram::compile(graph, ldl, opts));
-        let mut entries = self.entries.lock().expect("plan cache poisoned");
-        if let Some((_, p)) = entries.iter().find(|(k, _)| *k == key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(p);
-        }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        if entries.len() >= CACHE_CAP {
-            entries.remove(0);
-        }
-        entries.push((key, Arc::clone(&program)));
-        program
+        self.inner
+            .get_or_insert_with(key, || OperatorProgram::compile(graph, ldl, opts))
     }
 
     pub fn stats(&self) -> PlanCacheStats {
-        PlanCacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            entries: self.entries.lock().expect("plan cache poisoned").len(),
-        }
+        self.inner.stats()
     }
 
     /// Drop every retained program (counters are kept).
     pub fn clear(&self) {
-        self.entries.lock().expect("plan cache poisoned").clear();
+        self.inner.clear()
     }
 }
 

@@ -550,7 +550,11 @@ pub fn execute_tape(
 }
 
 /// One node of the retained-tape pass: the shared kernels with owned-tensor
-/// storage and the tape's (coarser, muls-focused) accounting convention.
+/// storage and the engines' **exact** FLOP convention (every mul and add of
+/// the eq. 7–9 pass, term for term the reference interpreter's charges with
+/// `t = r`) — so a dense program's analytic [`OperatorProgram::cost`]
+/// equals the tape's measured `cost` exactly, asserted by
+/// `rust/tests/cross_engine_fuzz.rs`.
 #[allow(clippy::too_many_arguments)]
 fn tape_node(
     graph: &Graph,
@@ -616,6 +620,7 @@ fn tape_node(
                 g.data.data_mut(),
             );
             cost.muls += ((batch * (r + 2)) * out_d * in_d) as u64;
+            cost.adds += (batch * r * out_d * in_d) as u64;
             (v, g, s)
         }
         Op::Activation { act } => {
@@ -637,7 +642,8 @@ fn tape_node(
                 s.data_mut(),
                 g.data.data_mut(),
             );
-            cost.muls += (batch * d * (2 * r + 2)) as u64;
+            cost.muls += (batch * (2 * r * d + 2 * d)) as u64;
+            cost.adds += (batch * (r * d + d)) as u64;
             (v, g, s)
         }
         Op::Slice { start, len } => {
@@ -660,6 +666,7 @@ fn tape_node(
         }
         Op::Add => {
             let p0 = node.inputs[0];
+            let d = node.dim;
             let mut v = values[p0].clone();
             let mut gd = tangents[p0].data.clone();
             let mut s = scalars[p0].clone();
@@ -667,6 +674,7 @@ fn tape_node(
                 v = v.add(&values[p]);
                 gd = gd.add(&tangents[p].data);
                 s = s.add(&scalars[p]);
+                cost.adds += (batch * (r * d + 2 * d)) as u64;
             }
             (v, TangentBatch { data: gd, batch, t: r }, s)
         }
@@ -695,11 +703,14 @@ fn tape_node(
                 s.data_mut(),
                 g.data.data_mut(),
             );
-            cost.muls += (batch * d * k * (r + k)) as u64;
+            cost.muls += ((k - 1) * batch * d) as u64;
+            cost.muls += (batch * k * ((k - 1) * d + r * d + d)) as u64;
+            cost.muls += (batch * (k * (k - 1) / 2) * (r * d + 2 * d)) as u64;
             (v, g, s)
         }
         Op::SumReduce => {
             let p = node.inputs[0];
+            let pd = graph.node(p).dim;
             let mut v = Tensor::zeros(&[batch, 1]);
             let mut s = Tensor::zeros(&[batch, 1]);
             for b in 0..batch {
@@ -710,6 +721,7 @@ fn tape_node(
             for row in 0..batch * r {
                 g.data.data_mut()[row] = tangents[p].data.row(row).iter().sum();
             }
+            cost.adds += (batch * (r * pd + 2 * pd)) as u64;
             (v, g, s)
         }
         Op::Concat => {

@@ -38,14 +38,14 @@
 //! executes the same plan under the PR 1 determinism contract.
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 
 use crate::autodiff::backward::backward;
 use crate::autodiff::hessian::HessianResult;
 use crate::autodiff::Cost;
 use crate::graph::{Graph, Op};
 use crate::tensor::{matmul_nt_into, Tensor};
+use crate::util::keyed_cache::KeyedCache;
 
 use super::exec::{carve1, rd};
 use super::kernels;
@@ -301,66 +301,38 @@ fn cost_per_row(graph: &Graph, n: usize) -> Cost {
 /// Bound on retained plans (oldest evicted past this).
 pub const HESSIAN_CACHE_CAP: usize = 32;
 
-/// A keyed Hessian-plan cache (compile outside the lock; first insert wins
-/// on a race) — the Hessian twin of [`super::PlanCache`].
-pub struct HessianPlanCache {
-    entries: Mutex<Vec<(HessianKey, Arc<HessianPlan>)>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
-}
+/// Hit/miss counters plus current occupancy (the shared
+/// [`crate::util::CacheStats`] shape).
+pub type HessianCacheStats = crate::util::CacheStats;
 
-/// Hit/miss counters plus current occupancy.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct HessianCacheStats {
-    pub hits: u64,
-    pub misses: u64,
-    pub entries: usize,
+/// A keyed Hessian-plan cache — the Hessian consumer of the shared
+/// double-checked [`KeyedCache`] ([`crate::util::keyed_cache`]); this
+/// wrapper only contributes the key derivation and the compile closure.
+pub struct HessianPlanCache {
+    inner: KeyedCache<HessianKey, HessianPlan>,
 }
 
 impl HessianPlanCache {
     pub const fn new() -> Self {
         Self {
-            entries: Mutex::new(Vec::new()),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            inner: KeyedCache::new(HESSIAN_CACHE_CAP),
         }
     }
 
     /// Fetch the plan for `graph`, compiling on first use.
     pub fn get_or_compile(&self, graph: &Graph) -> Arc<HessianPlan> {
         let key = hessian_key(graph);
-        {
-            let entries = self.entries.lock().expect("hessian cache poisoned");
-            if let Some((_, p)) = entries.iter().find(|(k, _)| *k == key) {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                return Arc::clone(p);
-            }
-        }
-        let plan = Arc::new(HessianPlan::compile(graph));
-        let mut entries = self.entries.lock().expect("hessian cache poisoned");
-        if let Some((_, p)) = entries.iter().find(|(k, _)| *k == key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(p);
-        }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        if entries.len() >= HESSIAN_CACHE_CAP {
-            entries.remove(0);
-        }
-        entries.push((key, Arc::clone(&plan)));
-        plan
+        self.inner
+            .get_or_insert_with(key, || HessianPlan::compile(graph))
     }
 
     pub fn stats(&self) -> HessianCacheStats {
-        HessianCacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            entries: self.entries.lock().expect("hessian cache poisoned").len(),
-        }
+        self.inner.stats()
     }
 
     /// Drop every retained plan (counters are kept).
     pub fn clear(&self) {
-        self.entries.lock().expect("hessian cache poisoned").clear();
+        self.inner.clear()
     }
 }
 

@@ -61,6 +61,13 @@ pub fn matmul_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: u
 /// [`matmul_into`] with an explicit worker count (1 = serial). Row chunks
 /// are 4-aligned so the micro-kernel grouping — and therefore the exact
 /// FP operation order per output row — matches the serial sweep.
+///
+/// Parallel chunks run on the **persistent worker team**
+/// ([`crate::parallel::pool`]) instead of spawning scoped threads per
+/// product: chunk boundaries and the per-chunk serial kernel are unchanged,
+/// so the result stays bit-identical to the serial sweep (and to the old
+/// scoped-spawn path) while large GEMMs stop paying per-call thread
+/// creation.
 pub fn matmul_into_threads(
     a: &[f64],
     b: &[f64],
@@ -76,21 +83,23 @@ pub fn matmul_into_threads(
     if threads > 1 && m >= 8 {
         let ranges = crate::parallel::split_rows_aligned(m, threads, 4);
         if ranges.len() > 1 {
-            std::thread::scope(|s| {
-                let mut rest = c;
-                let mut handles = Vec::with_capacity(ranges.len());
-                for r in &ranges {
-                    let rows = r.len();
-                    let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(rows * n);
-                    rest = tail;
-                    let a_chunk = &a[r.start * k..r.end * k];
-                    handles.push(s.spawn(move || {
-                        matmul_into_serial(a_chunk, b, chunk, rows, k, n);
-                    }));
-                }
-                for h in handles {
-                    h.join().expect("matmul worker panicked");
-                }
+            // Disjoint output row chunks, written through a raw pointer the
+            // pool closure can capture by value.
+            struct SendPtr(*mut f64);
+            unsafe impl Send for SendPtr {}
+            unsafe impl Sync for SendPtr {}
+            let cp = SendPtr(c.as_mut_ptr());
+            let cp = &cp;
+            crate::parallel::Pool::new(threads).run_sharded(ranges, |_, r| {
+                let rows = r.len();
+                // SAFETY: ranges partition 0..m, so every chunk
+                // [r.start*n, r.end*n) is a disjoint slice of `c`, each
+                // written by exactly one claimant; `c` outlives the region
+                // (run_sharded blocks until all shards complete).
+                let chunk = unsafe {
+                    std::slice::from_raw_parts_mut(cp.0.add(r.start * n), rows * n)
+                };
+                matmul_into_serial(&a[r.start * k..r.end * k], b, chunk, rows, k, n);
             });
             return;
         }

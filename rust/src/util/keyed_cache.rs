@@ -1,0 +1,168 @@
+//! The one keyed double-checked cache behind every compile-once subsystem.
+//!
+//! `PlanCache`, `JetCache`, and `HessianPlanCache` were three verbatim
+//! copies of the same mechanism (lock → check → compile outside the lock →
+//! recheck → first-insert-wins, oldest-entry eviction, hit/miss counters) —
+//! the same disease the op kernels had before PR 4, cured the same way:
+//! one generic definition, thin consumers. The three caches are now
+//! wrappers over [`KeyedCache`] that only contribute their key derivation
+//! and compile closure; `rust/tests/cache_soundness.rs` exercises the
+//! shared mechanism through all three.
+//!
+//! ## Contract
+//!
+//! * **Double-checked compile** — the value is built *outside* the lock
+//!   (compiles are milliseconds; holding the lock would serialize every
+//!   concurrent consumer on one compile). A racing build of the same key
+//!   keeps the first inserted value; the loser's work is dropped and the
+//!   loser returns the winner's `Arc` (so pointer-identity assertions hold
+//!   across racing callers).
+//! * **Bounded** — insertion past `cap` evicts the oldest entry (plain FIFO
+//!   by insert order; the store is a small associative list, a handful of
+//!   model/operator pairs in any realistic process).
+//! * **Counters** — `hits` counts lookups served by an existing entry
+//!   (including second-check hits after a lost race), `misses` counts
+//!   inserts; `entries` is current occupancy.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Hit/miss counters plus current occupancy, shared by every consumer
+/// (`PlanCacheStats`, `JetCacheStats`, and `HessianCacheStats` are aliases
+/// of this type).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served by an already-present value.
+    pub hits: u64,
+    /// Lookups that built and inserted.
+    pub misses: u64,
+    /// Values currently retained.
+    pub entries: usize,
+}
+
+/// A bounded, keyed, double-checked cache of `Arc<V>` (see module docs).
+pub struct KeyedCache<K, V> {
+    cap: usize,
+    entries: Mutex<Vec<(K, Arc<V>)>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<K: PartialEq + Clone, V> KeyedCache<K, V> {
+    /// An empty cache retaining at most `cap` values.
+    pub const fn new(cap: usize) -> Self {
+        Self {
+            cap,
+            entries: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch the value for `key`, building it with `build` on first use.
+    /// `build` runs outside the lock; on a racing build of the same key the
+    /// first inserted value wins and every caller gets that same `Arc`.
+    pub fn get_or_insert_with(&self, key: K, build: impl FnOnce() -> V) -> Arc<V> {
+        {
+            let entries = self.entries.lock().expect("keyed cache poisoned");
+            if let Some((_, v)) = entries.iter().find(|(k, _)| *k == key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(v);
+            }
+        }
+        let value = Arc::new(build());
+        let mut entries = self.entries.lock().expect("keyed cache poisoned");
+        if let Some((_, v)) = entries.iter().find(|(k, _)| *k == key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(v);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        if entries.len() >= self.cap {
+            entries.remove(0);
+        }
+        entries.push((key, Arc::clone(&value)));
+        value
+    }
+
+    /// Is `key` currently retained? (No counter side effects.)
+    pub fn contains(&self, key: &K) -> bool {
+        self.entries
+            .lock()
+            .expect("keyed cache poisoned")
+            .iter()
+            .any(|(k, _)| k == key)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.entries.lock().expect("keyed cache poisoned").len(),
+        }
+    }
+
+    /// Drop every retained value (counters are kept).
+    pub fn clear(&self) {
+        self.entries.lock().expect("keyed cache poisoned").clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_lookup_hits_by_pointer_identity() {
+        let cache: KeyedCache<u64, u64> = KeyedCache::new(4);
+        let a = cache.get_or_insert_with(1, || 10);
+        let b = cache.get_or_insert_with(1, || 99);
+        assert!(Arc::ptr_eq(&a, &b), "same key must reuse the value");
+        assert_eq!(*b, 10, "losing builder's value must be discarded");
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn evicts_oldest_past_cap() {
+        let cache: KeyedCache<u64, u64> = KeyedCache::new(2);
+        let v1 = cache.get_or_insert_with(1, || 1);
+        let _v2 = cache.get_or_insert_with(2, || 2);
+        let _v3 = cache.get_or_insert_with(3, || 3); // evicts key 1
+        assert_eq!(cache.stats().entries, 2);
+        assert!(!cache.contains(&1), "oldest entry evicted");
+        assert!(cache.contains(&2) && cache.contains(&3));
+        // Re-inserting the evicted key is a miss with a fresh value.
+        let v1b = cache.get_or_insert_with(1, || 4);
+        assert!(!Arc::ptr_eq(&v1, &v1b));
+        assert_eq!(*v1b, 4);
+        assert_eq!(cache.stats().misses, 4);
+    }
+
+    #[test]
+    fn clear_keeps_counters() {
+        let cache: KeyedCache<u64, u64> = KeyedCache::new(4);
+        let _ = cache.get_or_insert_with(1, || 1);
+        let _ = cache.get_or_insert_with(1, || 1);
+        cache.clear();
+        let st = cache.stats();
+        assert_eq!(st.entries, 0);
+        assert_eq!((st.hits, st.misses), (1, 1));
+    }
+
+    #[test]
+    fn concurrent_same_key_returns_one_arc() {
+        let cache: Arc<KeyedCache<u64, Vec<u8>>> = Arc::new(KeyedCache::new(4));
+        let arcs: Vec<_> = (0..8)
+            .map(|_| {
+                let cache = Arc::clone(&cache);
+                std::thread::spawn(move || cache.get_or_insert_with(7, || vec![1, 2, 3]))
+            })
+            .collect();
+        let got: Vec<_> = arcs.into_iter().map(|j| j.join().unwrap()).collect();
+        for v in &got[1..] {
+            assert!(Arc::ptr_eq(&got[0], v), "racing builds must converge");
+        }
+        assert_eq!(cache.stats().entries, 1);
+        assert_eq!(cache.stats().misses, 1);
+    }
+}

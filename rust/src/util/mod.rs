@@ -4,10 +4,12 @@
 
 pub mod cli;
 pub mod csv;
+pub mod keyed_cache;
 pub mod prng;
 pub mod stats;
 
 pub use cli::{parse_thread_count, Args};
 pub use csv::CsvTable;
+pub use keyed_cache::{CacheStats, KeyedCache};
 pub use prng::{SplitMix64, Xoshiro256};
 pub use stats::{fmt_bytes, fmt_duration, LatencyHistogram, Summary};

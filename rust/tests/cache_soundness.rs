@@ -1,5 +1,7 @@
-//! Cache-soundness contract for the compile-once caches
-//! ([`dof::plan::PlanCache`], [`dof::jet::cache::JetCache`]):
+//! Cache-soundness contract for the compile-once caches — all three
+//! consumers ([`dof::plan::PlanCache`], [`dof::jet::cache::JetCache`],
+//! [`dof::plan::hessian::HessianPlanCache`]) of the one generic
+//! double-checked [`dof::util::KeyedCache`]:
 //!
 //! * **value moves hit** — mutating weight *values* under a fixed zero
 //!   pattern (an Adam step) must return the cached program by pointer
@@ -9,15 +11,20 @@
 //!   recompile;
 //! * **recompiled plans are sound** — the recompiled program's §3.2
 //!   active-row sets (and everything downstream) are re-verified against a
-//!   fresh reference-interpreter run, bitwise.
+//!   fresh reference-interpreter run, bitwise;
+//! * **eviction stays sound** — a program pushed out past the cap
+//!   recompiles on re-request, and the recompiled program is re-verified
+//!   (the generic layer's own eviction/stats/racing-build mechanics are
+//!   pinned by `rust/src/util/keyed_cache.rs` unit tests).
 
 use std::sync::Arc;
 
-use dof::autodiff::{DofEngine, TangentArena};
+use dof::autodiff::{DofEngine, HessianEngine, TangentArena};
 use dof::graph::{builder::random_layers, mlp_graph, Act};
 use dof::jet::cache::JetCache;
 use dof::jet::{laplacian_terms, terms_from_symmetric, DirectionBasis, JetEngine};
 use dof::linalg::LdlDecomposition;
+use dof::plan::hessian::HessianPlanCache;
 use dof::plan::{PlanCache, PlanOptions};
 use dof::tensor::Tensor;
 use dof::util::Xoshiro256;
@@ -187,4 +194,87 @@ fn jet_cache_value_moves_hit_structure_changes_recompile() {
     assert_eq!(planned.out_jet.data, reference.out_jet.data);
     assert_eq!(planned.cost, reference.cost);
     assert_eq!(planned.peak_jet_bytes, reference.peak_jet_bytes);
+}
+
+#[test]
+fn hessian_cache_value_moves_hit_structure_changes_recompile_and_stay_sound() {
+    let cache = HessianPlanCache::new();
+    let mut rng = Xoshiro256::new(5105);
+    let mut layers = random_layers(&[4, 7, 1], &mut rng);
+    let g1 = mlp_graph(&layers, Act::Tanh);
+    let p1 = cache.get_or_compile(&g1);
+
+    // Value move: hit by pointer identity (Hessian plans are keyed by
+    // structure alone — the operator only enters the final contraction).
+    for (w, b) in layers.iter_mut() {
+        for v in w.data_mut().iter_mut() {
+            if *v != 0.0 {
+                *v += 0.02;
+            }
+        }
+        for v in b.iter_mut() {
+            *v += 0.01;
+        }
+    }
+    let g2 = mlp_graph(&layers, Act::Tanh);
+    let p2 = cache.get_or_compile(&g2);
+    assert!(Arc::ptr_eq(&p1, &p2), "hessian value moves must hit");
+    let st = cache.stats();
+    assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+
+    // A weight hitting exactly 0.0 is a structural edit: recompile.
+    layers[0].0.set(1, 2, 0.0);
+    let g3 = mlp_graph(&layers, Act::Tanh);
+    let p3 = cache.get_or_compile(&g3);
+    assert!(
+        !Arc::ptr_eq(&p1, &p3),
+        "hessian zero-pattern change must recompile"
+    );
+    assert_eq!(cache.stats().misses, 2);
+
+    // The recompiled plan — the exact Arc the cache returned — re-verified
+    // bitwise against the retained reference path.
+    let a = {
+        let b = Tensor::randn(&[4, 4], &mut rng);
+        b.add(&b.transpose()).scale(0.5)
+    };
+    let x = Tensor::randn(&[4, 4], &mut rng).scale(0.5);
+    let eng = HessianEngine::new(&a);
+    let planned = eng.execute(&p3, &g3, &x);
+    let reference = eng.compute_reference(&g3, &x);
+    assert_eq!(planned.values, reference.values);
+    assert_eq!(planned.gradient, reference.gradient);
+    assert_eq!(planned.hessian, reference.hessian);
+    assert_eq!(planned.operator_values, reference.operator_values);
+    assert_eq!(planned.cost, reference.cost);
+    assert_eq!(planned.peak_tangent_bytes, reference.peak_tangent_bytes);
+}
+
+#[test]
+fn plan_cache_eviction_recompiles_soundly() {
+    // Eviction through a real consumer: a cap-sized parade of distinct
+    // architectures pushes the first program out; re-requesting it
+    // recompiles (miss) and the recompiled program is verified bitwise.
+    let cache = PlanCache::new();
+    let mut rng = Xoshiro256::new(5106);
+    let a = random_symmetric(3, &mut rng);
+    let ldl = LdlDecomposition::of(&a);
+    let first_layers = random_layers(&[3, 4, 1], &mut rng);
+    let g_first = mlp_graph(&first_layers, Act::Tanh);
+    let p_first = cache.get_or_compile(&g_first, &ldl, OPTS);
+    // CACHE_CAP distinct structures (hidden widths 5..5+cap) evict it.
+    for h in 0..dof::plan::cache::CACHE_CAP {
+        let g = mlp_graph(&random_layers(&[3, 5 + h, 1], &mut rng), Act::Tanh);
+        let _ = cache.get_or_compile(&g, &ldl, OPTS);
+    }
+    let misses_before = cache.stats().misses;
+    let p_again = cache.get_or_compile(&g_first, &ldl, OPTS);
+    assert_eq!(
+        cache.stats().misses,
+        misses_before + 1,
+        "evicted program must recompile"
+    );
+    assert!(!Arc::ptr_eq(&p_first, &p_again));
+    let x = Tensor::randn(&[3, 3], &mut rng);
+    verify_program_against_interpreter(&DofEngine::from_ldl(ldl), &p_again, &g_first, &x);
 }

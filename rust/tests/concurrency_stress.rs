@@ -1,0 +1,270 @@
+//! Concurrency battery for the serving runtime layer:
+//!
+//! * **Sharded slab pool** — N caller threads hammer unsharded `execute()`
+//!   across distinct and shared `(program, rows)` keys on the hash-sharded
+//!   pool; every result must stay bit-identical to a single-threaded
+//!   baseline, checkouts must be exact-fit, and the DOF / Hessian / jet
+//!   domains must never alias a slab key.
+//! * **Persistent worker pool** — OS threads spawn exactly once per
+//!   process (spawn-counter assertion) and region results are
+//!   bit-identical to the retained scoped-spawn baseline
+//!   ([`dof::parallel::Pool::run_sharded_scoped`]) across 1/2/4/8
+//!   threads, for both raw regions and full engine `compute_sharded`
+//!   passes.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use dof::autodiff::{slab_pool_stats, with_program_slab, DofEngine, HessianEngine, SlabKey};
+use dof::graph::{builder::random_layers, mlp_graph, Act, Graph};
+use dof::jet::{terms_from_symmetric, DirectionBasis, JetEngine};
+use dof::linalg::LdlDecomposition;
+use dof::operators::CoeffSpec;
+use dof::parallel::{pool, split_rows, Pool};
+use dof::plan::hessian::hessian_key;
+use dof::tensor::Tensor;
+use dof::util::Xoshiro256;
+
+fn random_symmetric(n: usize, rng: &mut Xoshiro256) -> Tensor {
+    let b = Tensor::randn(&[n, n], rng);
+    b.add(&b.transpose()).scale(0.5)
+}
+
+/// One `(graph, operator, input)` configuration shared across threads.
+struct Config {
+    graph: Graph,
+    a: Tensor,
+    x: Tensor,
+}
+
+fn configs() -> Vec<Config> {
+    let mut rng = Xoshiro256::new(0x57AE55);
+    let mut out = Vec::new();
+    // Two distinct architectures/operators (distinct slab keys) ...
+    for (n, hidden, batch) in [(4usize, 9usize, 9usize), (5, 12, 7)] {
+        let graph = mlp_graph(&random_layers(&[n, hidden, 1], &mut rng), Act::Tanh);
+        let a = random_symmetric(n, &mut rng);
+        let x = Tensor::randn(&[batch, n], &mut rng).scale(0.5);
+        out.push(Config { graph, a, x });
+    }
+    // ... plus the first architecture again at a different row count (same
+    // program fingerprint, different `rows` — a distinct slab key that
+    // must not alias the first).
+    let first = &out[0];
+    let graph = first.graph.clone();
+    let a = first.a.clone();
+    let x = Tensor::randn(&[4, 4], &mut rng).scale(0.5);
+    out.push(Config { graph, a, x });
+    out
+}
+
+#[test]
+fn slab_keys_are_domain_tagged_and_row_distinct() {
+    let cfgs = configs();
+    let c = &cfgs[0];
+    let ldl = LdlDecomposition::of(&c.a);
+    let dof_fp = DofEngine::from_ldl(ldl).plan(&c.graph).key().fingerprint;
+    let hes_fp = hessian_key(&c.graph).fingerprint;
+    let basis = DirectionBasis::from_terms(c.a.dims()[0], &terms_from_symmetric(&c.a), None);
+    let jet_fp = JetEngine::new(basis).plan(&c.graph).key().fingerprint;
+    assert_ne!(dof_fp, hes_fp, "DOF and Hessian slabs must never alias");
+    assert_ne!(dof_fp, jet_fp, "DOF and jet slabs must never alias");
+    assert_ne!(hes_fp, jet_fp, "Hessian and jet slabs must never alias");
+    // Same program at different row counts is a distinct key — the pool
+    // hands back a slab sized for exactly (program, rows).
+    let ka = SlabKey { program: dof_fp, rows: 9 };
+    let kb = SlabKey { program: dof_fp, rows: 4 };
+    assert_ne!(ka, kb);
+}
+
+#[test]
+fn concurrent_unsharded_executions_bit_identical_and_exact_fit() {
+    let cfgs = Arc::new(configs());
+
+    // Single-threaded baselines for every engine × config.
+    struct Baseline {
+        dof_vals: Tensor,
+        dof_ops: Tensor,
+        hes_ops: Tensor,
+        hes_hessian: Tensor,
+        jet_ops: Tensor,
+    }
+    let baselines: Arc<Vec<Baseline>> = Arc::new(
+        cfgs.iter()
+            .map(|c| {
+                let dof = DofEngine::new(&c.a).compute(&c.graph, &c.x);
+                let hes = HessianEngine::new(&c.a).compute(&c.graph, &c.x);
+                let basis = DirectionBasis::from_terms(
+                    c.a.dims()[0],
+                    &terms_from_symmetric(&c.a),
+                    None,
+                );
+                let jet = JetEngine::new(basis).compute(&c.graph, &c.x);
+                Baseline {
+                    dof_vals: dof.values,
+                    dof_ops: dof.operator_values,
+                    hes_ops: hes.operator_values,
+                    hes_hessian: hes.hessian,
+                    jet_ops: jet.operator_values,
+                }
+            })
+            .collect(),
+    );
+
+    // Hammer: 8 caller threads × 12 rounds over every (engine, config),
+    // all on the unsharded `compute()` paths — exactly the access pattern
+    // the hash-sharded slab pool exists for. Any cross-key or cross-domain
+    // slab aliasing, lost checkout, or stale-length slab shows up as a
+    // bitwise mismatch (executors assert exact slab sizing internally).
+    let joins: Vec<_> = (0..8)
+        .map(|t| {
+            let cfgs = Arc::clone(&cfgs);
+            let baselines = Arc::clone(&baselines);
+            std::thread::spawn(move || {
+                for round in 0..12 {
+                    // Stagger the config order per thread so shared and
+                    // distinct keys interleave differently each round.
+                    for idx in 0..cfgs.len() {
+                        let i = (idx + t + round) % cfgs.len();
+                        let c = &cfgs[i];
+                        let b = &baselines[i];
+                        let dof = DofEngine::new(&c.a).compute(&c.graph, &c.x);
+                        assert_eq!(dof.values, b.dof_vals, "dof values cfg {i}");
+                        assert_eq!(dof.operator_values, b.dof_ops, "dof L[φ] cfg {i}");
+                        let hes = HessianEngine::new(&c.a).compute(&c.graph, &c.x);
+                        assert_eq!(hes.operator_values, b.hes_ops, "hessian L[φ] cfg {i}");
+                        assert_eq!(hes.hessian, b.hes_hessian, "hessian H cfg {i}");
+                        let basis = DirectionBasis::from_terms(
+                            c.a.dims()[0],
+                            &terms_from_symmetric(&c.a),
+                            None,
+                        );
+                        let jet = JetEngine::new(basis).compute(&c.graph, &c.x);
+                        assert_eq!(jet.operator_values, b.jet_ops, "jet L[φ] cfg {i}");
+                    }
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().expect("stress thread panicked");
+    }
+
+    // Pool accounting: the hammer's checkouts were counted, and a warm
+    // key's parked slab is exact-fit (tolerate eviction by a concurrently
+    // running test — an absent slab is legal, a wrong-sized one is not).
+    let st = slab_pool_stats();
+    assert!(st.hits > 0, "steady-state hammer must hit the warm pool");
+    let c = &cfgs[0];
+    let eng = DofEngine::new(&c.a);
+    let program = eng.plan(&c.graph);
+    let rows = c.x.dims()[0];
+    let key = SlabKey {
+        program: program.key().fingerprint,
+        rows,
+    };
+    let (len, want) = with_program_slab(key, |s| (s.len(), program.slab_len(rows)));
+    if len != 0 {
+        assert_eq!(len, want, "warm checkout must be exact-fit");
+    }
+}
+
+#[test]
+fn worker_pool_spawns_once_and_matches_scoped_baseline() {
+    // Raw regions: order-sensitive float accumulation so any reduction
+    // reorder between the pooled and scoped runtimes is visible.
+    let work = |i: usize, r: Range<usize>| -> f64 {
+        let mut acc = (i as f64) * 0.1;
+        for x in r {
+            acc += (x as f64) * 1.000_000_1 + acc * 1e-7;
+        }
+        acc
+    };
+    let ranges = split_rows(201, 8);
+    let serial = Pool::new(1).run_sharded(ranges.clone(), work);
+    for threads in [2usize, 4, 8] {
+        let p = Pool::new(threads);
+        let pooled = p.run_sharded(ranges.clone(), work);
+        let scoped = p.run_sharded_scoped(ranges.clone(), work);
+        assert_eq!(pooled, scoped, "pooled vs scoped at {threads} threads");
+        assert_eq!(pooled, serial, "pooled vs serial at {threads} threads");
+    }
+
+    let s0 = pool::stats();
+    assert_eq!(s0.spawn_events, 1, "the team spawns exactly once");
+    assert!(s0.workers >= 1);
+
+    // Full engine passes across the thread matrix, all on the pooled
+    // runtime: values, L[φ], FLOPs, and per-shard peaks bit-identical.
+    let mut rng = Xoshiro256::new(0x9001);
+    let graph = mlp_graph(&random_layers(&[6, 14, 1], &mut rng), Act::Sin);
+    let a = CoeffSpec::EllipticGram { n: 6, rank: 6, seed: 3 }.build();
+    let x = Tensor::randn(&[21, 6], &mut rng).scale(0.5);
+    let eng = DofEngine::new(&a);
+    let hes = HessianEngine::new(&a);
+    let dof_base = eng.compute_sharded(&graph, &x, &Pool::new(1), 4);
+    let hes_base = hes.compute_sharded(&graph, &x, &Pool::new(1), 4);
+    for threads in [2usize, 4, 8] {
+        let p = Pool::new(threads);
+        let d = eng.compute_sharded(&graph, &x, &p, 4);
+        assert_eq!(d.values, dof_base.values);
+        assert_eq!(d.operator_values, dof_base.operator_values);
+        assert_eq!(d.cost, dof_base.cost);
+        assert_eq!(d.peak_tangent_bytes, dof_base.peak_tangent_bytes);
+        let h = hes.compute_sharded(&graph, &x, &p, 4);
+        assert_eq!(h.values, hes_base.values);
+        assert_eq!(h.operator_values, hes_base.operator_values);
+        assert_eq!(h.hessian, hes_base.hessian);
+        assert_eq!(h.cost, hes_base.cost);
+        assert_eq!(h.peak_tangent_bytes, hes_base.peak_tangent_bytes);
+    }
+
+    // Zero thread creation after warmup, across all of the above.
+    let s1 = pool::stats();
+    assert_eq!(s1.spawn_events, 1, "no thread creation after warmup");
+    assert_eq!(s1.workers, s0.workers, "team size is fixed for the process");
+    assert!(s1.regions > s0.regions, "regions were actually dispatched");
+}
+
+#[test]
+fn concurrent_sharded_and_unsharded_mix() {
+    // Sharded regions (on the persistent team) racing unsharded callers
+    // (on the hash-sharded slab pool) — the serving-shaped mixed workload.
+    let mut rng = Xoshiro256::new(0xA11C);
+    let graph = mlp_graph(&random_layers(&[4, 10, 1], &mut rng), Act::Tanh);
+    let a = {
+        let b = Tensor::randn(&[4, 4], &mut rng);
+        b.add(&b.transpose()).scale(0.5)
+    };
+    let x = Tensor::randn(&[13, 4], &mut rng).scale(0.5);
+    let base = DofEngine::new(&a).compute(&graph, &x);
+    let graph = Arc::new(graph);
+    let a = Arc::new(a);
+    let x = Arc::new(x);
+    let base_vals = Arc::new(base.values);
+    let base_ops = Arc::new(base.operator_values);
+    let joins: Vec<_> = (0..6)
+        .map(|t| {
+            let graph = Arc::clone(&graph);
+            let a = Arc::clone(&a);
+            let x = Arc::clone(&x);
+            let base_vals = Arc::clone(&base_vals);
+            let base_ops = Arc::clone(&base_ops);
+            std::thread::spawn(move || {
+                let eng = DofEngine::new(&a);
+                for _ in 0..8 {
+                    let res = if t % 2 == 0 {
+                        eng.compute(&graph, &x)
+                    } else {
+                        eng.compute_sharded(&graph, &x, &Pool::new(4), 4)
+                    };
+                    assert_eq!(res.values, *base_vals);
+                    assert_eq!(res.operator_values, *base_ops);
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().expect("mixed-workload thread panicked");
+    }
+}

@@ -17,10 +17,12 @@
 //! scheduled CI job uses a larger count). Failures print the reproducing
 //! case seed via `dof::prop::run_prop`.
 
+use dof::autodiff::dof_tape::dof_forward_tape;
 use dof::autodiff::{DofEngine, DofResult, HessianEngine, HessianResult, TangentArena};
 use dof::graph::Graph;
 use dof::jet::{terms_from_symmetric, DirectionBasis, JetEngine};
 use dof::parallel::Pool;
+use dof::plan::{OperatorProgram, PlanOptions};
 use dof::prop::generator::{random_operator_case, OperatorCase};
 use dof::prop::{close, run_prop, Gen, PropResult};
 use dof::tensor::Tensor;
@@ -285,6 +287,27 @@ fn accounting_analytic_equals_measured_fuzz() {
             return Err(format!(
                 "hessian analytic peak {} != measured {}",
                 planned.peak_tangent_bytes, reference.peak_tangent_bytes
+            ));
+        }
+
+        // Training tape: since the cost-convention unification, the
+        // retain-all forward tape charges the engines' exact FLOP
+        // convention — its measured cost must equal the dense
+        // (sparsity-off, no-c) program's analytic count exactly.
+        let tape_program = OperatorProgram::compile(
+            &case.graph,
+            &eng.ldl,
+            PlanOptions {
+                sparsity: false,
+                lower_order_c: false,
+            },
+        );
+        let tape = dof_forward_tape(&case.graph, &eng.ldl, case.b.as_deref(), &case.x);
+        if tape.cost != tape_program.cost(batch) {
+            return Err(format!(
+                "tape measured cost {:?} != dense program analytic {:?}",
+                tape.cost,
+                tape_program.cost(batch)
             ));
         }
 

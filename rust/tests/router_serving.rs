@@ -1,0 +1,263 @@
+//! Differential battery for the multi-model serving [`Router`]:
+//!
+//! * **Routing is arithmetic-free** — mixed DOF / Hessian-baseline / jet
+//!   traffic routed through the router returns **bitwise-identical** f32
+//!   results to calling each engine directly (same f32→f64→f32 casts, same
+//!   cached compiled programs; batching composition cannot matter because
+//!   per-row arithmetic never mixes rows).
+//! * **Metrics are exact** — dispatched/completed counters equal the
+//!   number of requests sent per model, queue depth returns to zero, and
+//!   the per-model server snapshots account for every request.
+//! * **Shutdown drains** — requests parked in a worker's batcher when
+//!   shutdown is requested are flushed and answered; no request is lost.
+//!
+//! `DOF_ROUTER_REQUESTS` scales the per-model traffic (the weekly
+//! `fuzz-extended` CI job runs a soak-sized count).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dof::autodiff::{DofEngine, HessianEngine};
+use dof::coordinator::{BatchPolicy, ModelServer, Router, RouterClient};
+use dof::graph::{builder::random_layers, mlp_graph, Act, Graph};
+use dof::jet::JetEngine;
+use dof::operators::{CoeffSpec, HigherOrderOperator, HigherOrderSpec, Operator};
+use dof::parallel::Pool;
+use dof::tensor::Tensor;
+use dof::util::Xoshiro256;
+
+fn requests_per_model() -> usize {
+    std::env::var("DOF_ROUTER_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24)
+}
+
+fn policy() -> BatchPolicy {
+    BatchPolicy {
+        capacity: 8,
+        max_wait: Duration::from_millis(1),
+    }
+}
+
+/// Deterministic f32 request points for `(model_tag, client, iter)`.
+fn points(model_tag: u64, client: usize, iter: usize, rows: usize, width: usize) -> Vec<f32> {
+    let mut rng = Xoshiro256::new(
+        0xB00 ^ model_tag.wrapping_mul(0x9E37_79B9) ^ ((client as u64) << 32) ^ iter as u64,
+    );
+    (0..rows * width).map(|_| rng.normal() as f32).collect()
+}
+
+/// The serving cast: f32 points → f64 tensor (exact), engine output → f32.
+fn to_tensor(pts: &[f32], rows: usize, width: usize) -> Tensor {
+    Tensor::from_vec(
+        &[rows, width],
+        pts.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
+    )
+}
+
+fn cast32(t: &Tensor) -> Vec<f32> {
+    t.data().iter().map(|&v| v as f32).collect()
+}
+
+/// Direct (router-free) expectation for one request against one engine.
+enum Direct {
+    Dof(Operator, Graph),
+    Hessian(Operator, Graph),
+    Jet(HigherOrderOperator, Graph),
+}
+
+impl Direct {
+    fn expect(&self, pts: &[f32], rows: usize, width: usize) -> (Vec<f32>, Vec<f32>) {
+        let x = to_tensor(pts, rows, width);
+        match self {
+            Direct::Dof(op, g) => {
+                let r = op.dof_engine().compute(g, &x);
+                (cast32(&r.values), cast32(&r.operator_values))
+            }
+            Direct::Hessian(op, g) => {
+                let r = op.hessian_engine().compute(g, &x);
+                (cast32(&r.values), cast32(&r.operator_values))
+            }
+            Direct::Jet(op, g) => {
+                let r = op.jet_engine().compute(g, &x);
+                (cast32(&r.values), cast32(&r.operator_values))
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_traffic_bitwise_equals_direct_engine_calls() {
+    let mut rng = Xoshiro256::new(0x5EED);
+
+    // DOF model.
+    let n_dof = 4;
+    let g_dof = mlp_graph(&random_layers(&[n_dof, 9, 1], &mut rng), Act::Tanh);
+    let op_dof = Operator::from_spec(CoeffSpec::EllipticGram {
+        n: n_dof,
+        rank: n_dof,
+        seed: 21,
+    });
+    // Hessian-baseline model (its own graph — mixed models, mixed widths).
+    let n_hes = 5;
+    let g_hes = mlp_graph(&random_layers(&[n_hes, 8, 1], &mut rng), Act::Sin);
+    let op_hes = Operator::from_spec(CoeffSpec::EllipticGram {
+        n: n_hes,
+        rank: n_hes,
+        seed: 22,
+    });
+    // Jet model (order-4 biharmonic).
+    let n_jet = 3;
+    let g_jet = mlp_graph(&random_layers(&[n_jet, 7, 1], &mut rng), Act::Tanh);
+    let op_jet = HigherOrderOperator::from_spec(HigherOrderSpec::Biharmonic { d: n_jet });
+
+    let mut router = Router::new();
+    router.register(
+        "dof",
+        ModelServer::spawn_dof(g_dof.clone(), op_dof.dof_engine(), policy(), Pool::new(2), 2),
+    );
+    router.register(
+        "hessian",
+        ModelServer::spawn_hessian(
+            g_hes.clone(),
+            op_hes.hessian_engine(),
+            policy(),
+            Pool::new(2),
+            2,
+        ),
+    );
+    router.register(
+        "jet",
+        ModelServer::spawn_jet(g_jet.clone(), op_jet.jet_engine(), policy(), Pool::new(2), 2),
+    );
+
+    let models: Vec<(u64, RouterClient, Arc<Direct>)> = vec![
+        (1, router.client("dof").unwrap(), Arc::new(Direct::Dof(op_dof, g_dof))),
+        (
+            2,
+            router.client("hessian").unwrap(),
+            Arc::new(Direct::Hessian(op_hes, g_hes)),
+        ),
+        (3, router.client("jet").unwrap(), Arc::new(Direct::Jet(op_jet, g_jet))),
+    ];
+
+    // Mixed traffic: 3 client threads per model, interleaved submissions,
+    // varying request sizes (1..=4 rows, crossing batch boundaries).
+    let clients_per_model = 3;
+    let per_client = (requests_per_model() / clients_per_model).max(1);
+    let mut joins = Vec::new();
+    for (tag, client, direct) in &models {
+        for c in 0..clients_per_model {
+            let tag = *tag;
+            let client = client.clone();
+            let direct = Arc::clone(direct);
+            joins.push(std::thread::spawn(move || {
+                let width = client.width();
+                for it in 0..per_client {
+                    let rows = 1 + (it + c) % 4;
+                    let pts = points(tag, c, it, rows, width);
+                    let resp = client.eval_blocking(pts.clone()).unwrap();
+                    let (want_phi, want_lphi) = direct.expect(&pts, rows, width);
+                    assert_eq!(resp.phi, want_phi, "model {tag} phi (bitwise)");
+                    assert_eq!(resp.lphi, want_lphi, "model {tag} L[φ] (bitwise)");
+                }
+            }));
+        }
+    }
+    for j in joins {
+        j.join().expect("client thread panicked");
+    }
+
+    // Exact metrics: every model saw exactly clients_per_model × per_client
+    // dispatches, all completed, none failed, queue drained.
+    let sent = (clients_per_model * per_client) as u64;
+    for m in router.snapshot() {
+        assert_eq!(m.dispatched, sent, "model {} dispatched", m.model);
+        assert_eq!(m.completed, sent, "model {} completed", m.model);
+        assert_eq!(m.failed, 0, "model {} failed", m.model);
+        assert_eq!(m.queue_depth, 0, "model {} queue drained", m.model);
+        assert!(m.peak_queue_depth >= 1, "model {} saw traffic", m.model);
+        assert_eq!(m.server.requests, sent, "model {} server requests", m.model);
+    }
+    router.shutdown();
+}
+
+#[test]
+fn shutdown_drains_queued_requests_without_loss() {
+    // A long max_wait parks requests in the batcher until shutdown cuts
+    // the partial batch — the drain path under test.
+    let mut rng = Xoshiro256::new(0xD3A1);
+    let n = 3;
+    let graph = mlp_graph(&random_layers(&[n, 6, 1], &mut rng), Act::Tanh);
+    let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed: 7 });
+    let mut router = Router::new();
+    router.register(
+        "dof",
+        ModelServer::spawn_dof(
+            graph.clone(),
+            op.dof_engine(),
+            BatchPolicy {
+                capacity: 64,
+                max_wait: Duration::from_secs(30),
+            },
+            Pool::new(2),
+            2,
+        ),
+    );
+    let client = router.client("dof").unwrap();
+    let direct = Direct::Dof(op, graph);
+    let joins: Vec<_> = (0..4)
+        .map(|c| {
+            let client = client.clone();
+            std::thread::spawn(move || {
+                let width = client.width();
+                let pts = points(9, c, 0, 2, width);
+                let resp = client.eval_blocking(pts.clone()).unwrap();
+                (c, pts, resp)
+            })
+        })
+        .collect();
+    // Wait until the worker has *received* all four requests (the
+    // race-free arrival counter: a request is counted after it is pulled
+    // off the channel, so Shutdown — sent strictly afterwards — cannot
+    // overtake any of them). They cannot complete on their own: capacity
+    // 64 is never filled and the deadline is 30 s away. Bounded wait: a
+    // lost request must fail loudly here, not hang CI.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let received = router.snapshot()[0].server.received;
+        if received >= 4 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "worker received only {received}/4 requests within 10 s — request lost before drain"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    router.shutdown();
+    for j in joins {
+        let (c, pts, resp) = j.join().expect("drained client panicked");
+        let (want_phi, want_lphi) = direct.expect(&pts, 2, 3);
+        assert_eq!(resp.phi, want_phi, "client {c} phi after drain");
+        assert_eq!(resp.lphi, want_lphi, "client {c} L[φ] after drain");
+    }
+}
+
+#[test]
+fn unknown_model_is_an_error() {
+    let mut rng = Xoshiro256::new(0xE44);
+    let n = 3;
+    let graph = mlp_graph(&random_layers(&[n, 5, 1], &mut rng), Act::Tanh);
+    let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed: 1 });
+    let mut router = Router::new();
+    router.register(
+        "only",
+        ModelServer::spawn_dof(graph, op.dof_engine(), policy(), Pool::new(1), 2),
+    );
+    assert!(router.client("missing").is_err());
+    assert!(router.eval_blocking("missing", vec![0.0; 3]).is_err());
+    assert_eq!(router.models(), vec!["only"]);
+    router.shutdown();
+}
