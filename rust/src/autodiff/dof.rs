@@ -148,6 +148,16 @@ impl DofEngine {
         OperatorProgram::compile(graph, &self.ldl, self.plan_options())
     }
 
+    /// Structured batch-input validation against `graph`'s input
+    /// dimension: shape, width, and finiteness, through the shared
+    /// [`crate::tensor::ops::validate_batch_input`] gate — every engine
+    /// rejects a malformed batch with the **identical** message, which the
+    /// serving tier surfaces as `ServeError::InvalidRequest` and the
+    /// cross-engine fuzz harness asserts on.
+    pub fn validate_input(&self, graph: &Graph, x: &Tensor) -> Result<(), String> {
+        crate::tensor::ops::validate_batch_input(graph.input_dim(), x)
+    }
+
     /// Evaluate `L[φ]` on a batch `x: [batch, N]` in one forward pass.
     ///
     /// Compile-then-run wrapper: the [`OperatorProgram`] comes from the

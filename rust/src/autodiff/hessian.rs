@@ -156,6 +156,13 @@ impl HessianEngine {
         merge_hessian_shards(shards, batch)
     }
 
+    /// Structured batch-input validation against `graph`'s input
+    /// dimension (shared [`crate::tensor::ops::validate_batch_input`]
+    /// gate — identical rejection message across every engine).
+    pub fn validate_input(&self, graph: &Graph, x: &Tensor) -> Result<(), String> {
+        crate::tensor::ops::validate_batch_input(graph.input_dim(), x)
+    }
+
     /// Evaluate `L[φ]` on a batch `x: [batch, N]` of points.
     ///
     /// Compile-then-run wrapper: the [`HessianPlan`] comes from the keyed

@@ -17,6 +17,11 @@
 
 use std::io::Write as _;
 
+use crate::coordinator::{
+    BatchPolicy, FaultConfig, FaultInjector, HealthPolicy, HealthState, ModelServer, Router,
+    RouterConfig, ServeConfig, TickClock,
+};
+use crate::graph::Graph;
 use crate::nn::{Mlp, MlpSpec};
 use crate::operators::{CoeffSpec, Operator};
 use crate::parallel::{Pool, DEFAULT_SHARD_ROWS};
@@ -82,13 +87,41 @@ pub struct PoolTiming {
     pub workers: usize,
 }
 
+/// Deterministic fault-tier counters from a scripted routed-serving run
+/// (see [`measure_robustness`]): schema v4 records what the serving tier
+/// did under a known fault schedule, so a regression in failover, health
+/// gating, or probe re-admission shows up as a *counter* change in the
+/// perf trajectory — not just as a test failure.
+#[derive(Debug, Clone, Copy)]
+pub struct RobustnessProbe {
+    /// Requests the probe drove through the router.
+    pub requests: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// Shed with `Overloaded` at admission.
+    pub shed: u64,
+    /// Failover attempts beyond each request's first.
+    pub retries: u64,
+    /// Expired on the logical tick clock.
+    pub deadline_expired: u64,
+    /// Engine-fault attempts (injected panics, per attempt).
+    pub engine_faults: u64,
+    /// Quarantine entries across the replica set.
+    pub quarantine_events: u64,
+    /// Replicas back to `Healthy` when the probe finished (recovery check:
+    /// the quarantined replica must have been probe-readmitted).
+    pub healthy_replicas: usize,
+    pub replicas: usize,
+}
+
 /// Grid sweep output: per-cell execute measurements plus the one-time
-/// plan-compile and pool-lifecycle data.
+/// plan-compile, pool-lifecycle, and fault-tier data.
 #[derive(Debug, Clone)]
 pub struct GridReport {
     pub cells: Vec<GridCell>,
     pub plan: PlanTiming,
     pub pool: PoolTiming,
+    pub robustness: RobustnessProbe,
 }
 
 /// Measure [`PoolTiming`]: one region before any other parallel work in
@@ -117,6 +150,108 @@ pub fn measure_pool_timing(threads: usize) -> PoolTiming {
         cold_included_spawn: after.spawn_events > before.spawn_events,
         spawn_events: after.spawn_events,
         workers: after.workers,
+    }
+}
+
+/// Run the scripted fault-tier probe against the grid's (graph, operator)
+/// pair: two DOF replicas behind the router, replica 0 with a seeded
+/// two-batch failing prefix, aggressive health policy (degrade after 1,
+/// quarantine after 2, probe after 4 ticks, readmit after 1 clean probe),
+/// and a retry budget of 1. Four capacity-sized requests then exercise the
+/// full failure arc — failover, quarantine, and probe re-admission — on an
+/// entirely deterministic schedule (seeded injector + serial traffic), so
+/// every counter in the result is exact and reproducible.
+pub fn measure_robustness(graph: &Graph, op: &Operator) -> RobustnessProbe {
+    let clock = TickClock::new();
+    let mut router = Router::with_config(RouterConfig {
+        deadline_ticks: None,
+        retries: 1,
+        clock: clock.clone(),
+        health: HealthPolicy {
+            degrade_after: 1,
+            quarantine_after: 2,
+            probe_after_ticks: 4,
+            probe_successes: 1,
+        },
+    });
+    let rows = 2usize;
+    let policy = BatchPolicy {
+        // Capacity-sized requests cut immediately; max_wait never gates.
+        capacity: rows,
+        max_wait: std::time::Duration::from_millis(1),
+    };
+    let pool = Pool::new(1);
+    let spawn = |injector| {
+        ModelServer::spawn_dof_cfg(
+            graph.clone(),
+            op.dof_engine(),
+            policy,
+            pool,
+            DEFAULT_SHARD_ROWS,
+            ServeConfig {
+                injector,
+                ..ServeConfig::labeled("robustness-probe")
+            },
+        )
+    };
+    // Replica 0: batches 0 and 1 panic (the deterministic failing prefix),
+    // everything after is clean — so the post-quarantine health probe on
+    // batch 2 succeeds and readmits it. Replica 1: clean failover target.
+    router.register(
+        "robustness-probe",
+        spawn(Some(FaultInjector::new(
+            0xD0F,
+            FaultConfig {
+                panic_first: 2,
+                ..FaultConfig::default()
+            },
+        ))),
+    );
+    router
+        .add_replica("robustness-probe", spawn(None))
+        .expect("replica widths match by construction");
+    let client = router
+        .client("robustness-probe")
+        .expect("model registered above");
+    let n = graph.input_dim();
+    let mut rng = Xoshiro256::new(7);
+    let requests = 4u64;
+    for i in 0..requests {
+        if i == 3 {
+            // Open replica 0's probe window (quarantined at tick 1, probe
+            // due at tick 5) so the last request doubles as its re-
+            // admission probe.
+            clock.advance(4);
+        }
+        let pts: Vec<f32> = (0..rows * n).map(|_| rng.normal() as f32).collect();
+        client
+            .eval_blocking(pts)
+            .expect("probe traffic always fails over to the clean replica");
+        clock.advance(1);
+    }
+    let snap = router
+        .snapshot()
+        .into_iter()
+        .next()
+        .expect("router serves exactly one model");
+    let healthy = snap
+        .replicas
+        .iter()
+        .filter(|r| r.state == HealthState::Healthy)
+        .count();
+    let replicas = snap.replicas.len();
+    router.shutdown();
+    RobustnessProbe {
+        requests,
+        completed: snap.completed,
+        failed: snap.failed,
+        shed: snap.shed,
+        retries: snap.retries,
+        deadline_expired: snap.deadline_expired,
+        engine_faults: snap.engine_faults,
+        quarantine_events: snap.quarantine_events,
+        healthy_replicas: healthy,
+        replicas,
     }
 }
 
@@ -217,10 +352,14 @@ pub fn run_table1_grid(
         }
     }
     crate::parallel::set_global_threads(ambient_threads);
+    // The fault-tier probe runs last so its (tiny, single-threaded) serving
+    // traffic cannot perturb the pool-lifecycle or per-cell measurements.
+    let robustness = measure_robustness(&graph, &op);
     GridReport {
         cells,
         plan,
         pool: pool_timing,
+        robustness,
     }
 }
 
@@ -232,13 +371,15 @@ pub fn grid_json(cfg: &Table1Config, report: &GridReport) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"table1_mlp_grid\",\n");
-    s.push_str("  \"schema\": 3,\n");
+    s.push_str("  \"schema\": 4,\n");
     s.push_str("  \"order\": 2,\n");
     s.push_str("  \"operator\": \"elliptic\",\n");
     s.push_str(
-        "  \"provenance\": \"schema v3 (persistent worker pool): adds the pool object \
-         (cold vs warm region dispatch, spawn events); v2 added the order column so \
-         order-2 (DOF) and order-4 (jet) grids share one trajectory format\",\n",
+        "  \"provenance\": \"schema v4 (fault-tolerant serving tier): adds the robustness \
+         object — exact shed/retry/deadline/quarantine counters from a scripted \
+         fault-injection serving run; v3 added the pool object (cold vs warm region \
+         dispatch, spawn events); v2 added the order column so order-2 (DOF) and \
+         order-4 (jet) grids share one trajectory format\",\n",
     );
     s.push_str(&format!(
         "  \"config\": {{\"n\": {}, \"hidden\": {}, \"layers\": {}, \"seed\": {}, \"shard_rows\": {}}},\n",
@@ -259,6 +400,21 @@ pub fn grid_json(cfg: &Table1Config, report: &GridReport) -> String {
         report.pool.cold_included_spawn,
         report.pool.spawn_events,
         report.pool.workers
+    ));
+    s.push_str(&format!(
+        "  \"robustness\": {{\"requests\": {}, \"completed\": {}, \"failed\": {}, \
+         \"shed\": {}, \"retries\": {}, \"deadline_expired\": {}, \"engine_faults\": {}, \
+         \"quarantine_events\": {}, \"healthy_replicas\": {}, \"replicas\": {}}},\n",
+        report.robustness.requests,
+        report.robustness.completed,
+        report.robustness.failed,
+        report.robustness.shed,
+        report.robustness.retries,
+        report.robustness.deadline_expired,
+        report.robustness.engine_faults,
+        report.robustness.quarantine_events,
+        report.robustness.healthy_replicas,
+        report.robustness.replicas
     ));
     s.push_str("  \"cells\": [\n");
     for (i, c) in cells.iter().enumerate() {
@@ -327,14 +483,30 @@ mod tests {
         // warm region number is a real measurement.
         assert_eq!(report.pool.spawn_events, 1);
         assert!(report.pool.warm_region_seconds.is_finite());
+        // The fault-tier probe runs a deterministic schedule, so every
+        // counter is exact: two scripted engine faults fail over (one
+        // retry each), the failing replica is quarantined once, and the
+        // final request's probe readmits it — both replicas end Healthy.
+        let r = &report.robustness;
+        assert_eq!(
+            (r.requests, r.completed, r.failed),
+            (4, 4, 0),
+            "all probe traffic completes via failover"
+        );
+        assert_eq!((r.shed, r.deadline_expired), (0, 0));
+        assert_eq!((r.retries, r.engine_faults), (2, 2));
+        assert_eq!(r.quarantine_events, 1);
+        assert_eq!((r.healthy_replicas, r.replicas), (2, 2));
         let json = grid_json(&cfg, &report);
         assert!(json.contains("\"bench\": \"table1_mlp_grid\""));
-        assert!(json.contains("\"schema\": 3"));
+        assert!(json.contains("\"schema\": 4"));
         assert!(json.contains("\"order\": 2"));
         assert!(json.contains("\"plan\""));
         assert!(json.contains("\"compile_ms\""));
         assert!(json.contains("\"pool\""));
         assert!(json.contains("\"warm_region_ms\""));
+        assert!(json.contains("\"robustness\""));
+        assert!(json.contains("\"quarantine_events\": 1"));
         assert!(json.contains("\"batch\": 9"));
         assert!(json.ends_with("}\n"));
         // Balanced braces/brackets as a cheap well-formedness check.

@@ -1,0 +1,403 @@
+//! Fault tier of the serving stack: the crate-wide error taxonomy
+//! ([`ServeError`]), the logical tick clock every control-plane decision
+//! is keyed on ([`TickClock`]), the retry/failover budget
+//! ([`RetryPolicy`]), and the seeded deterministic fault injector
+//! ([`FaultInjector`]) behind the `rust/tests/fault_injection.rs` battery.
+//!
+//! ## Why a logical clock
+//!
+//! Deadlines, retry backoff, and quarantine probe windows are *control
+//! plane* — they decide which requests run, not what any request computes.
+//! Driving them from wall clock would make test outcomes depend on
+//! scheduler jitter; driving them from [`TickClock`] (a shared atomic
+//! counter advanced explicitly by the harness, or by latency injection)
+//! keeps every admission/expiry/probe decision a pure function of the
+//! request schedule and the injector seed. The *data plane* is untouched:
+//! batching `max_wait` and latency histograms stay wall clock because they
+//! only shape batch composition and telemetry, which the determinism
+//! contract already proves cannot change any per-row result.
+//!
+//! ## Error semantics (see also the crate docs in `lib.rs`)
+//!
+//! | variant             | meaning                                  | retryable |
+//! |---------------------|------------------------------------------|-----------|
+//! | `InvalidRequest`    | caller bug: shape/width/non-finite input | no        |
+//! | `Overloaded`        | admission control shed the request       | yes       |
+//! | `DeadlineExceeded`  | logical deadline passed                  | no        |
+//! | `EngineFault`       | engine panicked / non-finite output      | yes       |
+//!
+//! `Overloaded` and `EngineFault` are worth failing over: another replica
+//! may have queue room or healthy state. `InvalidRequest` would fail
+//! identically everywhere (all engines share one validation gate), and a
+//! `DeadlineExceeded` request has no budget left by definition.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::SplitMix64;
+
+/// Structured serving error — what a client gets instead of a panic or a
+/// stringly-typed failure at every `ServerHandle` / `Router` boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request itself is malformed: ragged width, empty, or carrying
+    /// non-finite points. Never dispatched, never retried.
+    InvalidRequest { reason: String },
+    /// Admission control rejected the request (bounded queue at cap, or no
+    /// replica currently admitting traffic).
+    Overloaded { model: String, reason: String },
+    /// The request's logical-tick deadline passed before (or while) it was
+    /// served.
+    DeadlineExceeded {
+        model: String,
+        deadline_tick: u64,
+        now_tick: u64,
+    },
+    /// The engine failed: a caught panic (payload preserved, with pool
+    /// shard context when the panic happened inside a parallel region) or
+    /// a non-finite output withheld at the boundary.
+    EngineFault {
+        model: String,
+        /// Failing shard index, when the payload carries pool region
+        /// context (`pool region … shard i …`).
+        shard: Option<usize>,
+        payload: String,
+    },
+}
+
+impl ServeError {
+    /// Is a failover attempt to another replica worth making?
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            ServeError::Overloaded { .. } | ServeError::EngineFault { .. }
+        )
+    }
+
+    /// Build an [`ServeError::EngineFault`] from a caught panic payload
+    /// message, recovering the shard index from pool region context when
+    /// present.
+    pub fn engine_fault(model: &str, payload: String) -> Self {
+        ServeError::EngineFault {
+            model: model.to_string(),
+            shard: shard_in_payload(&payload),
+            payload,
+        }
+    }
+}
+
+/// Parse the shard index out of a pool region panic message
+/// (`pool region "label" shard 3 (rows 12..16) panicked: …`).
+fn shard_in_payload(payload: &str) -> Option<usize> {
+    let rest = payload.split(" shard ").nth(1)?;
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::InvalidRequest { reason } => write!(f, "invalid request: {reason}"),
+            ServeError::Overloaded { model, reason } => {
+                write!(f, "model {model:?} overloaded: {reason}")
+            }
+            ServeError::DeadlineExceeded {
+                model,
+                deadline_tick,
+                now_tick,
+            } => write!(
+                f,
+                "model {model:?} deadline exceeded: deadline tick {deadline_tick}, now tick {now_tick}"
+            ),
+            ServeError::EngineFault {
+                model,
+                shard,
+                payload,
+            } => match shard {
+                Some(i) => write!(f, "model {model:?} engine fault (shard {i}): {payload}"),
+                None => write!(f, "model {model:?} engine fault: {payload}"),
+            },
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Logical time: a shared atomic tick counter.
+///
+/// Nothing in the serving stack ever reads wall clock for a control-plane
+/// decision; ticks advance only when something *advances* them — the CLI
+/// per completed request, the fault injector's latency actions, or a test
+/// harness directly. Share one clock between a [`super::Router`] and the
+/// servers it routes to when using deadlines, so both sides agree on
+/// "now".
+#[derive(Clone, Debug, Default)]
+pub struct TickClock {
+    ticks: Arc<AtomicU64>,
+}
+
+impl TickClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current tick.
+    pub fn now(&self) -> u64 {
+        self.ticks.load(Ordering::Acquire)
+    }
+
+    /// Advance logical time by `n` ticks; returns the new now.
+    pub fn advance(&self, n: u64) -> u64 {
+        self.ticks.fetch_add(n, Ordering::AcqRel) + n
+    }
+}
+
+/// Capped attempt budget for routed requests: the first attempt plus up to
+/// `retries` failovers to other replicas of the same model (retryable
+/// errors only — see [`ServeError::retryable`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Extra attempts after the first (0 = fail fast).
+    pub retries: u32,
+}
+
+impl RetryPolicy {
+    /// Total attempts a request may consume.
+    pub fn max_attempts(&self) -> u64 {
+        self.retries as u64 + 1
+    }
+}
+
+/// What the injector does to one batch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Panic inside the batch compute (exercises the `catch_unwind`
+    /// containment and the `EngineFault` path).
+    pub panic: bool,
+    /// Poison the batch output with NaN after compute (exercises the
+    /// non-finite output gate — the NaN must never reach a client).
+    pub nan_output: bool,
+    /// Logical ticks this batch consumes (drives deadline expiry).
+    pub latency_ticks: u64,
+    /// Admission slots held for the duration of the batch (artificial
+    /// queue pressure: concurrent submissions see a deeper queue).
+    pub occupy_slots: usize,
+}
+
+impl FaultPlan {
+    pub fn is_noop(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+}
+
+/// Deterministic fault schedule configuration. All rates are percents in
+/// `0..=100` drawn per batch from the injector seed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultConfig {
+    /// Percent of batches that panic mid-compute.
+    pub panic_percent: u8,
+    /// Batches with index below this always panic (a deterministic failing
+    /// prefix — used to script quarantine-then-recovery schedules).
+    pub panic_first: u64,
+    /// Percent of batches whose outputs are NaN-poisoned.
+    pub nan_percent: u8,
+    /// Percent of batches that consume [`FaultConfig::latency_ticks`].
+    pub latency_percent: u8,
+    pub latency_ticks: u64,
+    /// Percent of batches that hold [`FaultConfig::occupy_slots`]
+    /// admission slots while computing.
+    pub occupy_percent: u8,
+    pub occupy_slots: usize,
+}
+
+/// Seeded fault injector, wired behind a test-only hook on
+/// [`super::ModelServer`] (see `ServeConfig::injector`). The plan for the
+/// k-th batch a server cuts is a **pure function** of `(seed, config, k)`
+/// — tests replay the exact schedule with [`FaultInjector::plan_for`] and
+/// assert exact failure counters, never approximate ones.
+#[derive(Debug)]
+pub struct FaultInjector {
+    seed: u64,
+    cfg: FaultConfig,
+    batches: AtomicU64,
+    injected_panics: AtomicU64,
+    injected_nans: AtomicU64,
+    injected_latency_ticks: AtomicU64,
+}
+
+/// Point-in-time injector counters (what was actually injected).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultInjectorSnapshot {
+    pub batches: u64,
+    pub injected_panics: u64,
+    pub injected_nans: u64,
+    pub injected_latency_ticks: u64,
+}
+
+impl FaultInjector {
+    pub fn new(seed: u64, cfg: FaultConfig) -> Arc<Self> {
+        Arc::new(Self {
+            seed,
+            cfg,
+            batches: AtomicU64::new(0),
+            injected_panics: AtomicU64::new(0),
+            injected_nans: AtomicU64::new(0),
+            injected_latency_ticks: AtomicU64::new(0),
+        })
+    }
+
+    /// The plan for batch `k` — pure, so a test can precompute the whole
+    /// schedule and derive the expected outcome of every request.
+    pub fn plan_for(seed: u64, cfg: &FaultConfig, k: u64) -> FaultPlan {
+        let mut rng = SplitMix64::new(seed ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        // Fixed draw order — adding a fault family must append draws, never
+        // reorder them, or seeds stop reproducing old schedules.
+        let mut pct = || (rng.next_u64() % 100) as u8;
+        let panic = k < cfg.panic_first || pct() < cfg.panic_percent;
+        let nan_output = pct() < cfg.nan_percent;
+        let latency = pct() < cfg.latency_percent;
+        let occupy = pct() < cfg.occupy_percent;
+        FaultPlan {
+            panic,
+            nan_output,
+            latency_ticks: if latency { cfg.latency_ticks } else { 0 },
+            occupy_slots: if occupy { cfg.occupy_slots } else { 0 },
+        }
+    }
+
+    /// Consume the next batch slot and return its plan (called by the
+    /// server worker once per cut batch, in cut order).
+    pub fn next(&self) -> FaultPlan {
+        let k = self.batches.fetch_add(1, Ordering::AcqRel);
+        let plan = Self::plan_for(self.seed, &self.cfg, k);
+        if plan.panic {
+            self.injected_panics.fetch_add(1, Ordering::Relaxed);
+        }
+        if plan.nan_output {
+            self.injected_nans.fetch_add(1, Ordering::Relaxed);
+        }
+        self.injected_latency_ticks
+            .fetch_add(plan.latency_ticks, Ordering::Relaxed);
+        plan
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn config(&self) -> FaultConfig {
+        self.cfg
+    }
+
+    pub fn snapshot(&self) -> FaultInjectorSnapshot {
+        FaultInjectorSnapshot {
+            batches: self.batches.load(Ordering::Acquire),
+            injected_panics: self.injected_panics.load(Ordering::Relaxed),
+            injected_nans: self.injected_nans.load(Ordering::Relaxed),
+            injected_latency_ticks: self.injected_latency_ticks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn taxonomy_display_and_retryability() {
+        let inv = ServeError::InvalidRequest {
+            reason: "ragged".into(),
+        };
+        assert!(!inv.retryable());
+        assert!(inv.to_string().contains("invalid request: ragged"));
+
+        let over = ServeError::Overloaded {
+            model: "m".into(),
+            reason: "queue depth 4 at cap 4".into(),
+        };
+        assert!(over.retryable());
+        assert!(over.to_string().contains("overloaded"));
+
+        let dl = ServeError::DeadlineExceeded {
+            model: "m".into(),
+            deadline_tick: 10,
+            now_tick: 12,
+        };
+        assert!(!dl.retryable());
+        assert!(dl.to_string().contains("deadline tick 10"));
+
+        let ef = ServeError::engine_fault(
+            "m",
+            "pool region \"serve-batch\" shard 3 (rows 12..16) panicked: boom".into(),
+        );
+        assert!(ef.retryable());
+        match &ef {
+            ServeError::EngineFault { shard, .. } => assert_eq!(*shard, Some(3)),
+            _ => panic!("wrong variant"),
+        }
+        assert!(ef.to_string().contains("(shard 3)"));
+        // Payload without pool context → no shard.
+        match ServeError::engine_fault("m", "plain panic".into()) {
+            ServeError::EngineFault { shard, .. } => assert_eq!(shard, None),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn tick_clock_is_shared_and_monotonic() {
+        let c = TickClock::new();
+        let c2 = c.clone();
+        assert_eq!(c.now(), 0);
+        assert_eq!(c.advance(3), 3);
+        assert_eq!(c2.now(), 3, "clones share the counter");
+        c2.advance(2);
+        assert_eq!(c.now(), 5);
+    }
+
+    #[test]
+    fn injector_schedule_is_pure_and_counted() {
+        let cfg = FaultConfig {
+            panic_percent: 50,
+            panic_first: 2,
+            nan_percent: 20,
+            latency_percent: 30,
+            latency_ticks: 4,
+            ..FaultConfig::default()
+        };
+        // Replay: next() consumes exactly the plan_for schedule.
+        let inj = FaultInjector::new(0xFA017, cfg);
+        let live: Vec<FaultPlan> = (0..64).map(|_| inj.next()).collect();
+        let replay: Vec<FaultPlan> = (0..64)
+            .map(|k| FaultInjector::plan_for(0xFA017, &cfg, k))
+            .collect();
+        assert_eq!(live, replay);
+        // The failing prefix is deterministic.
+        assert!(replay[0].panic && replay[1].panic);
+        // Counters match the schedule exactly.
+        let snap = inj.snapshot();
+        assert_eq!(snap.batches, 64);
+        assert_eq!(
+            snap.injected_panics,
+            replay.iter().filter(|p| p.panic).count() as u64
+        );
+        assert_eq!(
+            snap.injected_latency_ticks,
+            replay.iter().map(|p| p.latency_ticks).sum::<u64>()
+        );
+        // Rates are roughly honored (sanity, not exactness — exactness is
+        // the replay assertion above).
+        assert!(snap.injected_panics > 10);
+        let nans = replay.iter().filter(|p| p.nan_output).count();
+        assert!(nans > 2 && nans < 32, "nan draws way off: {nans}");
+    }
+
+    #[test]
+    fn zero_config_injects_nothing() {
+        let inj = FaultInjector::new(9, FaultConfig::default());
+        for _ in 0..16 {
+            assert!(inj.next().is_noop());
+        }
+    }
+}

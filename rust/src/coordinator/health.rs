@@ -1,0 +1,306 @@
+//! Replica health states and probe-based re-admission.
+//!
+//! Every replica of a routed model carries a [`HealthTracker`]:
+//! consecutive serving failures walk it `Healthy → Degraded → Quarantined`
+//! and a quarantined replica stops receiving traffic until a logical-tick
+//! probe window elapses ([`HealthPolicy::probe_after_ticks`], doubling
+//! after each failed probe — tick-driven exponential backoff). Once the
+//! window is open, the router routes a single live request to the replica
+//! as a **probe**; [`HealthPolicy::probe_successes`] consecutive probe
+//! successes restore `Healthy` and normal dispatch.
+//!
+//! What counts against health: [`super::ServeError::EngineFault`] only.
+//! `Overloaded` is a *healthy* replica shedding by design, `InvalidRequest`
+//! is the caller's fault, and `DeadlineExceeded` measures queue time, not
+//! engine state. The tracker is driven entirely by the
+//! [`super::TickClock`] — no wall-clock reads — so quarantine/re-admission
+//! schedules are reproducible from the request schedule alone.
+
+use std::fmt;
+
+/// Replica health, in escalation order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum HealthState {
+    Healthy,
+    /// Still serving, but consecutive failures ≥ `degrade_after` — an
+    /// autoscaler / operator signal, not yet a routing change.
+    Degraded,
+    /// Not serving; only tick-gated probes may reach it.
+    Quarantined,
+}
+
+impl fmt::Display for HealthState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Quarantined => "quarantined",
+        })
+    }
+}
+
+/// What the router may send to a replica right now.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gate {
+    /// Normal dispatch.
+    Open,
+    /// Quarantined, probe window elapsed: exactly one request may go
+    /// through as a probe (router must call [`HealthTracker::begin_probe`]).
+    ProbeDue,
+    /// Quarantined, window not yet open (or a probe is already in flight).
+    Closed,
+}
+
+/// Thresholds, all in consecutive-failure counts and logical ticks.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthPolicy {
+    /// Consecutive failures before `Healthy → Degraded`.
+    pub degrade_after: u32,
+    /// Consecutive failures before `→ Quarantined`.
+    pub quarantine_after: u32,
+    /// Ticks a quarantined replica waits before its first probe; doubles
+    /// after each failed probe (capped at `<< 6`).
+    pub probe_after_ticks: u64,
+    /// Consecutive probe successes required to restore `Healthy`.
+    pub probe_successes: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        Self {
+            degrade_after: 2,
+            quarantine_after: 4,
+            probe_after_ticks: 8,
+            probe_successes: 2,
+        }
+    }
+}
+
+/// Per-replica health state machine (wrap in a mutex for sharing; all
+/// transitions take `now` as an explicit tick so nothing here can read a
+/// clock).
+#[derive(Debug)]
+pub struct HealthTracker {
+    policy: HealthPolicy,
+    state: HealthState,
+    consecutive_failures: u32,
+    probe_streak: u32,
+    failed_probes: u32,
+    probe_inflight: bool,
+    quarantined_at_tick: u64,
+    quarantine_events: u64,
+}
+
+impl HealthTracker {
+    pub fn new(policy: HealthPolicy) -> Self {
+        Self {
+            policy,
+            state: HealthState::Healthy,
+            consecutive_failures: 0,
+            probe_streak: 0,
+            failed_probes: 0,
+            probe_inflight: false,
+            quarantined_at_tick: 0,
+            quarantine_events: 0,
+        }
+    }
+
+    pub fn state(&self) -> HealthState {
+        self.state
+    }
+
+    pub fn consecutive_failures(&self) -> u32 {
+        self.consecutive_failures
+    }
+
+    /// Times this replica entered quarantine.
+    pub fn quarantine_events(&self) -> u64 {
+        self.quarantine_events
+    }
+
+    /// Current probe wait: base window doubled per failed probe.
+    fn probe_wait_ticks(&self) -> u64 {
+        self.policy
+            .probe_after_ticks
+            .saturating_mul(1u64 << self.failed_probes.min(6))
+    }
+
+    /// May the router dispatch to this replica at tick `now`?
+    pub fn gate(&self, now: u64) -> Gate {
+        match self.state {
+            HealthState::Healthy | HealthState::Degraded => Gate::Open,
+            HealthState::Quarantined => {
+                if self.probe_inflight {
+                    Gate::Closed
+                } else if now >= self.quarantined_at_tick.saturating_add(self.probe_wait_ticks()) {
+                    Gate::ProbeDue
+                } else {
+                    Gate::Closed
+                }
+            }
+        }
+    }
+
+    /// Mark the single admitted probe as in flight (call right after
+    /// [`Self::gate`] returned [`Gate::ProbeDue`], under the same lock).
+    pub fn begin_probe(&mut self) {
+        self.probe_inflight = true;
+    }
+
+    /// A probe whose outcome is neither success nor an engine fault (e.g.
+    /// the replica shed it): clear the in-flight flag so the next probe
+    /// window can open, without judging health either way.
+    pub fn abort_probe(&mut self) {
+        self.probe_inflight = false;
+    }
+
+    /// Record a served success.
+    pub fn on_success(&mut self) {
+        if self.state == HealthState::Quarantined {
+            if self.probe_inflight {
+                self.probe_inflight = false;
+                self.probe_streak += 1;
+                if self.probe_streak >= self.policy.probe_successes.max(1) {
+                    self.state = HealthState::Healthy;
+                    self.consecutive_failures = 0;
+                    self.probe_streak = 0;
+                    self.failed_probes = 0;
+                }
+            }
+            // A late success from a request dispatched before quarantine
+            // is not a probe; re-admission stays probe-gated.
+            return;
+        }
+        self.consecutive_failures = 0;
+        self.state = HealthState::Healthy;
+    }
+
+    /// Record an engine fault at tick `now`.
+    pub fn on_failure(&mut self, now: u64) {
+        if self.state == HealthState::Quarantined {
+            if self.probe_inflight {
+                // Failed probe: stay quarantined, re-arm a longer window.
+                self.probe_inflight = false;
+                self.probe_streak = 0;
+                self.failed_probes += 1;
+                self.quarantined_at_tick = now;
+            }
+            // Late failures from pre-quarantine dispatches don't re-arm.
+            return;
+        }
+        self.consecutive_failures += 1;
+        if self.consecutive_failures >= self.policy.quarantine_after.max(1) {
+            self.state = HealthState::Quarantined;
+            self.quarantined_at_tick = now;
+            self.quarantine_events += 1;
+            self.probe_streak = 0;
+            self.failed_probes = 0;
+        } else if self.consecutive_failures >= self.policy.degrade_after.max(1) {
+            self.state = HealthState::Degraded;
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn policy() -> HealthPolicy {
+        HealthPolicy {
+            degrade_after: 2,
+            quarantine_after: 3,
+            probe_after_ticks: 10,
+            probe_successes: 2,
+        }
+    }
+
+    #[test]
+    fn escalation_walk_and_probe_readmission() {
+        let mut h = HealthTracker::new(policy());
+        assert_eq!(h.state(), HealthState::Healthy);
+        h.on_failure(0);
+        assert_eq!(h.state(), HealthState::Healthy);
+        h.on_failure(1);
+        assert_eq!(h.state(), HealthState::Degraded);
+        h.on_failure(2);
+        assert_eq!(h.state(), HealthState::Quarantined);
+        assert_eq!(h.quarantine_events(), 1);
+
+        // Probe window closed until quarantined_at + probe_after_ticks.
+        assert_eq!(h.gate(11), Gate::Closed);
+        assert_eq!(h.gate(12), Gate::ProbeDue);
+        h.begin_probe();
+        // While the probe is in flight, everything else is refused.
+        assert_eq!(h.gate(50), Gate::Closed);
+        h.on_success();
+        assert_eq!(h.state(), HealthState::Quarantined, "needs 2 probe successes");
+        assert_eq!(h.gate(12), Gate::ProbeDue, "second probe opens immediately");
+        h.begin_probe();
+        h.on_success();
+        assert_eq!(h.state(), HealthState::Healthy);
+        assert_eq!(h.consecutive_failures(), 0);
+        assert_eq!(h.gate(12), Gate::Open);
+    }
+
+    #[test]
+    fn failed_probe_backs_off_exponentially() {
+        let mut h = HealthTracker::new(policy());
+        for t in 0..3 {
+            h.on_failure(t);
+        }
+        assert_eq!(h.state(), HealthState::Quarantined);
+        assert_eq!(h.gate(12), Gate::ProbeDue);
+        h.begin_probe();
+        h.on_failure(12);
+        // Window doubled: 12 + 20.
+        assert_eq!(h.gate(31), Gate::Closed);
+        assert_eq!(h.gate(32), Gate::ProbeDue);
+        h.begin_probe();
+        h.on_failure(32);
+        // Doubled again: 32 + 40.
+        assert_eq!(h.gate(71), Gate::Closed);
+        assert_eq!(h.gate(72), Gate::ProbeDue);
+    }
+
+    #[test]
+    fn success_resets_streak_before_quarantine() {
+        let mut h = HealthTracker::new(policy());
+        h.on_failure(0);
+        h.on_failure(0);
+        assert_eq!(h.state(), HealthState::Degraded);
+        h.on_success();
+        assert_eq!(h.state(), HealthState::Healthy);
+        assert_eq!(h.consecutive_failures(), 0);
+        // The streak restarts from scratch.
+        h.on_failure(1);
+        assert_eq!(h.state(), HealthState::Healthy);
+    }
+
+    #[test]
+    fn late_outcomes_do_not_disturb_quarantine() {
+        let mut h = HealthTracker::new(policy());
+        for t in 0..3 {
+            h.on_failure(t);
+        }
+        // Outcomes from requests dispatched before the quarantine land
+        // late: neither re-arms the window nor counts as a probe.
+        h.on_success();
+        assert_eq!(h.state(), HealthState::Quarantined);
+        h.on_failure(5);
+        assert_eq!(h.gate(12), Gate::ProbeDue, "window not re-armed by late failure");
+    }
+
+    #[test]
+    fn aborted_probe_reopens_window() {
+        let mut h = HealthTracker::new(policy());
+        for t in 0..3 {
+            h.on_failure(t);
+        }
+        assert_eq!(h.gate(12), Gate::ProbeDue);
+        h.begin_probe();
+        assert_eq!(h.gate(12), Gate::Closed);
+        h.abort_probe();
+        assert_eq!(h.gate(12), Gate::ProbeDue);
+    }
+}

@@ -1,7 +1,17 @@
 //! Serving metrics: request/batch counters, latency histogram, padding
-//! efficiency.
+//! efficiency, and the robustness counters (accept/shed, deadline expiry,
+//! engine faults, invalid requests).
+//!
+//! Histogram-backed metrics live behind a mutex; the robustness counters
+//! are plain atomics on the admission fast path (a shed decision must not
+//! contend on the histogram lock). The mutex is taken through a
+//! poison-recovering guard: metrics must stay observable even if a
+//! recording thread panicked mid-update — a counter may then be off by
+//! one, which is still more useful than losing all telemetry during the
+//! exact incident the panic is part of.
 
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 use crate::util::LatencyHistogram;
 
@@ -9,6 +19,17 @@ use crate::util::LatencyHistogram;
 #[derive(Debug, Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// Requests past admission control.
+    accepted: AtomicU64,
+    /// Requests rejected with `Overloaded` at the admission gate.
+    shed: AtomicU64,
+    /// Requests rejected with `InvalidRequest` at the front door.
+    invalid: AtomicU64,
+    /// Requests rejected with `DeadlineExceeded` (at dequeue).
+    deadline_expired: AtomicU64,
+    /// Batches that failed with `EngineFault` (caught panic or non-finite
+    /// output withheld at the boundary).
+    engine_faults: AtomicU64,
 }
 
 #[derive(Debug, Default)]
@@ -54,6 +75,16 @@ pub struct MetricsSnapshot {
     /// seconds over wall seconds (≈ threads actually kept busy; 1.0 when
     /// serial, 0.0 when the parallel path was never used).
     pub parallel_occupancy: f64,
+    /// Requests past admission control.
+    pub accepted: u64,
+    /// Requests shed (`Overloaded`) at the admission gate.
+    pub shed: u64,
+    /// Requests rejected as invalid at the front door.
+    pub invalid: u64,
+    /// Requests expired (`DeadlineExceeded`) at dequeue.
+    pub deadline_expired: u64,
+    /// Batches failed with `EngineFault`.
+    pub engine_faults: u64,
 }
 
 impl Metrics {
@@ -61,14 +92,19 @@ impl Metrics {
         Self::default()
     }
 
+    /// Poison-recovering lock (see module docs).
+    fn guard(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Record a request arriving at the worker (pulled off the channel,
     /// about to be batched).
     pub fn record_received(&self) {
-        self.inner.lock().unwrap().received += 1;
+        self.guard().received += 1;
     }
 
     pub fn record_request(&self, rows: usize, latency_s: f64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.guard();
         g.requests += 1;
         g.rows += rows as u64;
         g.latency
@@ -77,7 +113,7 @@ impl Metrics {
     }
 
     pub fn record_batch(&self, rows_used: usize, capacity: usize, exec_s: f64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.guard();
         g.batches += 1;
         g.padded_rows += (capacity - rows_used) as u64;
         g.exec_latency
@@ -88,15 +124,35 @@ impl Metrics {
     /// Record one parallel (sharded) batch execution: per-shard compute
     /// seconds plus the wall time of the whole sharded region.
     pub fn record_shards(&self, shard_secs: &[f64], wall_s: f64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.guard();
         g.shards += shard_secs.len() as u64;
         g.shard_seconds += shard_secs.iter().sum::<f64>();
         g.sharded_batches += 1;
         g.sharded_wall_seconds += wall_s;
     }
 
+    pub fn record_accepted(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_invalid(&self) {
+        self.invalid.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_deadline_expired(&self) {
+        self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_engine_fault(&self) {
+        self.engine_faults.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let g = self.inner.lock().unwrap();
+        let g = self.guard();
         let executed = g.rows + g.padded_rows;
         MetricsSnapshot {
             requests: g.requests,
@@ -119,11 +175,17 @@ impl Metrics {
             } else {
                 0.0
             },
+            accepted: self.accepted.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            invalid: self.invalid.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            engine_faults: self.engine_faults.load(Ordering::Relaxed),
         }
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -150,6 +212,8 @@ mod tests {
         assert_eq!(s.batch_efficiency, 1.0);
         assert_eq!(s.shards, 0);
         assert_eq!(s.parallel_occupancy, 0.0);
+        assert_eq!((s.accepted, s.shed, s.invalid), (0, 0, 0));
+        assert_eq!((s.deadline_expired, s.engine_faults), (0, 0));
     }
 
     #[test]
@@ -162,5 +226,24 @@ mod tests {
         assert_eq!(s.sharded_batches, 2);
         // 0.058 compute seconds over 0.023 wall seconds ≈ 2.5× concurrency.
         assert!(s.parallel_occupancy > 2.0 && s.parallel_occupancy < 3.0);
+    }
+
+    #[test]
+    fn robustness_counters_are_exact() {
+        let m = Metrics::new();
+        for _ in 0..5 {
+            m.record_accepted();
+        }
+        m.record_shed();
+        m.record_shed();
+        m.record_invalid();
+        m.record_deadline_expired();
+        m.record_engine_fault();
+        let s = m.snapshot();
+        assert_eq!(s.accepted, 5);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.invalid, 1);
+        assert_eq!(s.deadline_expired, 1);
+        assert_eq!(s.engine_faults, 1);
     }
 }

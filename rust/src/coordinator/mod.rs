@@ -1,5 +1,5 @@
-//! L3 coordinator: request routing, dynamic batching, and worker threads
-//! that own the PJRT executables.
+//! L3 coordinator: request routing, dynamic batching, fault tolerance,
+//! and worker threads that own the PJRT executables.
 //!
 //! The serving model: clients submit variable-size point sets for operator
 //! evaluation (`(φ, L[φ])` at collocation points); a per-model worker
@@ -9,20 +9,44 @@
 //! owns its own [`crate::runtime::Executor`]; the handle side is plain
 //! `mpsc`, so any number of producer threads can submit.
 //!
-//! Multi-model traffic goes through the [`Router`]: per-model
-//! [`ModelServer`]s (DOF / Hessian / jet engines mixed) registered under
-//! names, tagged dispatch, and per-model queue-depth + occupancy metrics
-//! for autoscaling decisions — see [`router`].
+//! Multi-model traffic goes through the [`Router`]: per-model replica sets
+//! of [`ModelServer`]s (DOF / Hessian / jet engines mixed) registered
+//! under names, tagged dispatch with retry/failover, and per-model
+//! queue-depth + occupancy + robustness metrics for autoscaling decisions
+//! — see [`router`].
+//!
+//! The fault tier ([`fault`], [`health`]) defines the serving error
+//! taxonomy ([`ServeError`]), admission control, logical-tick deadlines,
+//! panic quarantine, and the seeded fault injector; the crate-level
+//! "error taxonomy & failure semantics" section in `lib.rs` documents the
+//! contract. This module tree denies `unwrap`/`expect` in non-test code:
+//! the serving boundary must degrade through [`ServeError`], never through
+//! a panic.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod batcher;
+pub mod fault;
+pub mod health;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher, PendingRequest};
+pub use fault::{
+    FaultConfig, FaultInjector, FaultInjectorSnapshot, FaultPlan, RetryPolicy, ServeError,
+    TickClock,
+};
+pub use health::{Gate, HealthPolicy, HealthState, HealthTracker};
 pub use metrics::Metrics;
-pub use router::{Router, RouterClient, RouterModelSnapshot};
-pub use server::{BatchFn, ModelServer, ServerHandle};
+pub use router::{ReplicaSnapshot, Router, RouterClient, RouterConfig, RouterModelSnapshot};
+pub use server::{BatchFn, ModelServer, ServeConfig, ServerHandle};
+
+/// Poison-recovering lock used across the coordinator: a panicking holder
+/// must never take the serving control plane down with it (the panic
+/// itself is already being reported through [`ServeError::EngineFault`]).
+pub(crate) fn plock<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// A request: evaluate the operator at `rows` points of width `width`
 /// (flat row-major).
@@ -31,17 +55,55 @@ pub struct EvalRequest {
     pub points: Vec<f32>,
     pub rows: usize,
     pub width: usize,
+    /// Absolute logical-tick deadline (against the server's
+    /// [`TickClock`]); `None` = no deadline. Checked when the worker
+    /// dequeues the request — an expired request is answered with
+    /// [`ServeError::DeadlineExceeded`] instead of entering a batch.
+    pub deadline_tick: Option<u64>,
 }
 
 impl EvalRequest {
+    /// Construct a request, panicking on a ragged point buffer. Internal
+    /// callers reach this only *after* front-door validation
+    /// ([`ServerHandle::eval_blocking`] rejects ragged/non-finite input
+    /// with [`ServeError::InvalidRequest`] first); external callers should
+    /// prefer [`EvalRequest::try_new`].
     pub fn new(points: Vec<f32>, width: usize) -> Self {
-        assert!(width > 0 && points.len() % width == 0, "ragged request");
+        match Self::try_new(points, width, None) {
+            Ok(req) => req,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Construct a request with structured validation: non-zero width, a
+    /// non-empty point buffer that is a whole number of rows, and (unlike
+    /// the panicking path) no further checks — finiteness is the serving
+    /// front door's job, where the model label is known.
+    pub fn try_new(
+        points: Vec<f32>,
+        width: usize,
+        deadline_tick: Option<u64>,
+    ) -> Result<Self, ServeError> {
+        if width == 0 {
+            return Err(ServeError::InvalidRequest {
+                reason: "width must be positive".to_string(),
+            });
+        }
+        if points.is_empty() || points.len() % width != 0 {
+            return Err(ServeError::InvalidRequest {
+                reason: format!(
+                    "ragged request: {} values is not a positive multiple of width {width}",
+                    points.len()
+                ),
+            });
+        }
         let rows = points.len() / width;
-        Self {
+        Ok(Self {
             points,
             rows,
             width,
-        }
+            deadline_tick,
+        })
     }
 }
 

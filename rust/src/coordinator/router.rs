@@ -1,5 +1,5 @@
-//! Multi-model serving router: one front door over per-model
-//! [`ModelServer`] workers.
+//! Multi-model serving router: one front door over per-model **replica
+//! sets** of [`ModelServer`] workers.
 //!
 //! `ModelServer` instances already compose — each owns its worker thread,
 //! batcher, and metrics — but before the router every client had to hold
@@ -8,36 +8,73 @@
 //!
 //! * **Registration** — each model (DOF / Hessian-baseline / jet engines
 //!   mixed, or an XLA artifact worker) is registered once under a name;
-//!   widths may differ per model.
-//! * **Tagged dispatch** — a request names its model;
-//!   [`RouterClient::eval_blocking`] routes it to that model's worker and
-//!   blocks for the response. Routing adds counters only — the bytes flow
-//!   through the same `ServerHandle` path as a direct caller, so routed
-//!   results are **bitwise identical** to direct engine calls (asserted by
-//!   `rust/tests/router_serving.rs`).
+//!   widths may differ per model. [`Router::add_replica`] attaches more
+//!   servers to an existing name — the first slice of the ROADMAP's
+//!   multi-replica direction.
+//! * **Tagged dispatch with failover** — a request names its model;
+//!   [`RouterClient::eval_blocking`] routes it to the least-loaded healthy
+//!   replica and blocks for the response. On a retryable failure
+//!   ([`ServeError::retryable`]) the attempt budget
+//!   ([`RouterConfig::retries`]) fails over to another replica. Routing
+//!   adds counters only — the bytes flow through the same `ServerHandle`
+//!   path as a direct caller, so routed results are **bitwise identical**
+//!   to direct engine calls (asserted by `rust/tests/router_serving.rs`).
+//! * **Health gating** — each replica carries a
+//!   [`HealthTracker`](super::health::HealthTracker): consecutive engine
+//!   faults quarantine it, and once its logical-tick probe window opens the
+//!   next live request is routed to it as a probe (opportunistic probing:
+//!   re-admission needs no background thread and stays deterministic under
+//!   a deterministic request schedule).
+//! * **Deadlines** — [`RouterConfig::deadline_ticks`] stamps each request
+//!   with an absolute deadline on the shared [`TickClock`]; the router
+//!   checks it between attempts and the worker checks it at dequeue. No
+//!   wall clock anywhere in the control plane.
 //! * **Autoscaling signals** — per-model [`RouterModelSnapshot`]s expose
-//!   exact dispatch/completion counters, the instantaneous and peak
-//!   **queue depth** (requests currently inside the worker, i.e. queued or
-//!   executing), and the underlying server metrics including
-//!   `parallel_occupancy` — the two numbers an autoscaler needs to decide
-//!   when a model wants more shards or another replica.
-//! * **Draining shutdown** — [`Router::shutdown`] stops every worker via
-//!   its graceful path: partial batches are flushed and every in-flight
-//!   request receives its response before the worker exits.
+//!   exact dispatch/completion/shed/retry/deadline/fault counters, the
+//!   instantaneous and peak **queue depth**, per-replica health
+//!   ([`ReplicaSnapshot`]), and the underlying server metrics including
+//!   `parallel_occupancy`.
+//! * **Draining shutdown** — [`Router::shutdown`] stops every worker
+//!   (quarantined replicas included) via its graceful path: partial
+//!   batches are flushed and every in-flight request receives its response
+//!   before the worker exits.
 //!
 //! Concurrency model: the router itself is registration-then-read-only;
 //! clients obtain a cheap [`RouterClient`] per model (cloneable, `Send`)
-//! and submit from as many threads as they like — all counters are
-//! atomics.
+//! and submit from as many threads as they like — counters are atomics,
+//! health trackers sit behind poison-recovering mutexes.
+//!
+//! For deadlines and health probes to mean anything, pass the **same**
+//! [`TickClock`] to the [`RouterConfig`] and to every replica's
+//! [`super::ServeConfig`], and advance it from the traffic driver.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
+use super::fault::{ServeError, TickClock};
+use super::health::{Gate, HealthPolicy, HealthState, HealthTracker};
 use super::metrics::MetricsSnapshot;
+use super::plock;
 use super::server::{ModelServer, ServerHandle};
 use super::EvalResponse;
+
+/// Routing policy knobs (all logical-tick based; `Default` reproduces the
+/// PR 5 behaviour: no deadlines, no retries).
+#[derive(Clone, Default)]
+pub struct RouterConfig {
+    /// Relative deadline stamped on every routed request: absolute
+    /// deadline = clock now + this. `None` = no deadlines.
+    pub deadline_ticks: Option<u64>,
+    /// Extra attempts after the first (failover budget). `0` = fail fast.
+    pub retries: u32,
+    /// The shared logical clock (share it with every replica's
+    /// [`super::ServeConfig`]).
+    pub clock: TickClock,
+    /// Health escalation thresholds applied to every replica.
+    pub health: HealthPolicy,
+}
 
 /// Per-model routing counters (shared between the router and its clients).
 #[derive(Default)]
@@ -48,15 +85,50 @@ struct Counters {
     completed: AtomicU64,
     /// Requests answered with an error.
     failed: AtomicU64,
-    /// Requests currently inside the worker (queued or executing).
+    /// Failed requests whose final error was `Overloaded`.
+    shed: AtomicU64,
+    /// Failed requests whose final error was `DeadlineExceeded`.
+    deadline_expired: AtomicU64,
+    /// Failed requests whose final error was `InvalidRequest`.
+    invalid: AtomicU64,
+    /// Engine-fault *attempts* (counted per attempt, so with failover this
+    /// can exceed `failed`).
+    engine_faults: AtomicU64,
+    /// Failover attempts beyond the first (attempt 2, 3, … of a request).
+    retries: AtomicU64,
+    /// Requests currently inside the router (queued or executing).
     queue_depth: AtomicUsize,
     /// High-water mark of `queue_depth`.
     peak_queue_depth: AtomicUsize,
 }
 
+/// Shared per-replica routing state (health + exact attempt accounting).
+struct ReplicaState {
+    health: Mutex<HealthTracker>,
+    attempts: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+}
+
+impl ReplicaState {
+    fn new(policy: HealthPolicy) -> Self {
+        Self {
+            health: Mutex::new(HealthTracker::new(policy)),
+            attempts: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+        }
+    }
+}
+
+struct ReplicaSlot {
+    server: ModelServer,
+    state: Arc<ReplicaState>,
+}
+
 struct Entry {
     name: String,
-    server: ModelServer,
+    replicas: Vec<ReplicaSlot>,
     counters: Arc<Counters>,
 }
 
@@ -64,16 +136,37 @@ struct Entry {
 #[derive(Default)]
 pub struct Router {
     models: Vec<Entry>,
+    cfg: RouterConfig,
 }
 
-/// A client for one registered model: routes requests and maintains the
-/// model's queue-depth and dispatch counters. Cloneable and `Send` — hand
-/// one clone per client thread.
+/// A client for one registered model: routes requests across the model's
+/// replicas and maintains the model's counters. Cloneable and `Send` —
+/// hand one clone per client thread.
 #[derive(Clone)]
 pub struct RouterClient {
     model: String,
-    handle: ServerHandle,
+    replicas: Vec<(ServerHandle, Arc<ReplicaState>)>,
     counters: Arc<Counters>,
+    cfg: RouterConfig,
+}
+
+/// Point-in-time health + accounting for one replica.
+#[derive(Debug, Clone)]
+pub struct ReplicaSnapshot {
+    /// Position in the replica set (registration order).
+    pub index: usize,
+    pub state: HealthState,
+    pub consecutive_failures: u32,
+    /// Times this replica entered quarantine.
+    pub quarantine_events: u64,
+    /// Attempts routed to this replica (probes included).
+    pub attempts: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// Requests currently admitted and unanswered at this replica.
+    pub inflight: usize,
+    /// The replica server's own metrics.
+    pub server: MetricsSnapshot,
 }
 
 /// Point-in-time routing metrics for one model.
@@ -86,23 +179,52 @@ pub struct RouterModelSnapshot {
     pub completed: u64,
     /// Requests answered with an error.
     pub failed: u64,
-    /// Requests currently inside the worker (queued or executing).
+    /// Failed requests shed with `Overloaded`.
+    pub shed: u64,
+    /// Failover attempts beyond each request's first.
+    pub retries: u64,
+    /// Failed requests expired with `DeadlineExceeded`.
+    pub deadline_expired: u64,
+    /// Failed requests rejected with `InvalidRequest`.
+    pub invalid: u64,
+    /// Engine-fault attempts (per attempt, so ≥ the engine-fault share of
+    /// `failed` when failover is on).
+    pub engine_faults: u64,
+    /// Total quarantine entries across the replica set.
+    pub quarantine_events: u64,
+    /// Requests currently inside the router (queued or executing).
     pub queue_depth: usize,
     /// High-water mark of `queue_depth` since registration.
     pub peak_queue_depth: usize,
-    /// The model server's own metrics (latency, batching efficiency,
-    /// shards, `parallel_occupancy`).
+    /// Replica 0's server metrics (kept for single-replica callers; use
+    /// `replicas` for the full set).
     pub server: MetricsSnapshot,
+    /// Per-replica health + accounting, in registration order.
+    pub replicas: Vec<ReplicaSnapshot>,
 }
 
 impl Router {
     pub fn new() -> Self {
-        Self { models: Vec::new() }
+        Self::with_config(RouterConfig::default())
     }
 
-    /// Register a model server under `name`. Panics on a duplicate name
-    /// (two workers answering one tag would split the metrics and make
-    /// routing ambiguous).
+    /// A router with deadlines / retry / health policy.
+    pub fn with_config(cfg: RouterConfig) -> Self {
+        Self {
+            models: Vec::new(),
+            cfg,
+        }
+    }
+
+    /// The router's logical clock (advance it from the traffic driver when
+    /// using deadlines or quarantine probes).
+    pub fn clock(&self) -> &TickClock {
+        &self.cfg.clock
+    }
+
+    /// Register a model server under `name` (replica 0). Panics on a
+    /// duplicate name (two entries answering one tag would split the
+    /// metrics and make routing ambiguous).
     pub fn register(&mut self, name: &str, server: ModelServer) {
         assert!(
             self.models.iter().all(|e| e.name != name),
@@ -110,9 +232,35 @@ impl Router {
         );
         self.models.push(Entry {
             name: name.to_string(),
-            server,
+            replicas: vec![ReplicaSlot {
+                server,
+                state: Arc::new(ReplicaState::new(self.cfg.health)),
+            }],
             counters: Arc::new(Counters::default()),
         });
+    }
+
+    /// Attach another replica to an existing model name (failover target;
+    /// width must match the model's existing replicas).
+    pub fn add_replica(&mut self, name: &str, server: ModelServer) -> Result<()> {
+        let cfg_health = self.cfg.health;
+        let entry = self
+            .models
+            .iter_mut()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("router has no model named {name:?}"))?;
+        let want = entry.replicas[0].server.handle().width();
+        let got = server.handle().width();
+        if got != want {
+            return Err(anyhow!(
+                "replica width {got} does not match model {name:?} width {want}"
+            ));
+        }
+        entry.replicas.push(ReplicaSlot {
+            server,
+            state: Arc::new(ReplicaState::new(cfg_health)),
+        });
+        Ok(())
     }
 
     /// Registered model names, in registration order.
@@ -129,38 +277,76 @@ impl Router {
             .ok_or_else(|| anyhow!("router has no model named {model:?}"))?;
         Ok(RouterClient {
             model: entry.name.clone(),
-            handle: entry.server.handle(),
+            replicas: entry
+                .replicas
+                .iter()
+                .map(|r| (r.server.handle(), Arc::clone(&r.state)))
+                .collect(),
             counters: Arc::clone(&entry.counters),
+            cfg: self.cfg.clone(),
         })
     }
 
     /// Route one request to `model` and block for the response.
     pub fn eval_blocking(&self, model: &str, points: Vec<f32>) -> Result<EvalResponse> {
-        self.client(model)?.eval_blocking(points)
+        Ok(self.client(model)?.eval_blocking(points)?)
     }
 
-    /// Routing + server metrics for every model, in registration order.
+    /// Routing + health + server metrics for every model, in registration
+    /// order.
     pub fn snapshot(&self) -> Vec<RouterModelSnapshot> {
         self.models
             .iter()
-            .map(|e| RouterModelSnapshot {
-                model: e.name.clone(),
-                dispatched: e.counters.dispatched.load(Ordering::Relaxed),
-                completed: e.counters.completed.load(Ordering::Relaxed),
-                failed: e.counters.failed.load(Ordering::Relaxed),
-                queue_depth: e.counters.queue_depth.load(Ordering::Relaxed),
-                peak_queue_depth: e.counters.peak_queue_depth.load(Ordering::Relaxed),
-                server: e.server.handle().metrics.snapshot(),
+            .map(|e| {
+                let replicas: Vec<ReplicaSnapshot> = e
+                    .replicas
+                    .iter()
+                    .enumerate()
+                    .map(|(i, r)| {
+                        let h = plock(&r.state.health);
+                        let handle = r.server.handle();
+                        ReplicaSnapshot {
+                            index: i,
+                            state: h.state(),
+                            consecutive_failures: h.consecutive_failures(),
+                            quarantine_events: h.quarantine_events(),
+                            attempts: r.state.attempts.load(Ordering::Relaxed),
+                            completed: r.state.completed.load(Ordering::Relaxed),
+                            failed: r.state.failed.load(Ordering::Relaxed),
+                            inflight: handle.inflight(),
+                            server: handle.metrics.snapshot(),
+                        }
+                    })
+                    .collect();
+                RouterModelSnapshot {
+                    model: e.name.clone(),
+                    dispatched: e.counters.dispatched.load(Ordering::Relaxed),
+                    completed: e.counters.completed.load(Ordering::Relaxed),
+                    failed: e.counters.failed.load(Ordering::Relaxed),
+                    shed: e.counters.shed.load(Ordering::Relaxed),
+                    retries: e.counters.retries.load(Ordering::Relaxed),
+                    deadline_expired: e.counters.deadline_expired.load(Ordering::Relaxed),
+                    invalid: e.counters.invalid.load(Ordering::Relaxed),
+                    engine_faults: e.counters.engine_faults.load(Ordering::Relaxed),
+                    quarantine_events: replicas.iter().map(|r| r.quarantine_events).sum(),
+                    queue_depth: e.counters.queue_depth.load(Ordering::Relaxed),
+                    peak_queue_depth: e.counters.peak_queue_depth.load(Ordering::Relaxed),
+                    server: e.replicas[0].server.handle().metrics.snapshot(),
+                    replicas,
+                }
             })
             .collect()
     }
 
-    /// Graceful stop: every worker flushes its partial batch and answers
-    /// all in-flight requests before exiting (no request is lost; asserted
-    /// by `rust/tests/router_serving.rs`).
+    /// Graceful stop: every worker — quarantined replicas included —
+    /// flushes its partial batch and answers all in-flight requests before
+    /// exiting (no request is lost; asserted by
+    /// `rust/tests/router_serving.rs`).
     pub fn shutdown(self) {
         for e in self.models {
-            e.server.shutdown();
+            for r in e.replicas {
+                r.server.shutdown();
+            }
         }
     }
 }
@@ -173,34 +359,163 @@ impl RouterClient {
 
     /// Row width (input dimension) the model expects.
     pub fn width(&self) -> usize {
-        self.handle.width()
+        self.replicas[0].0.width()
     }
 
     /// Route one request and block for the response, maintaining the
     /// model's dispatch and queue-depth counters exactly (one dispatched
-    /// per call; depth incremented for the duration of the round trip).
-    pub fn eval_blocking(&self, points: Vec<f32>) -> Result<EvalResponse> {
+    /// per call; depth incremented for the duration of the round trip,
+    /// retries included).
+    pub fn eval_blocking(&self, points: Vec<f32>) -> std::result::Result<EvalResponse, ServeError> {
         let c = &*self.counters;
         c.dispatched.fetch_add(1, Ordering::Relaxed);
         let depth = c.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
         c.peak_queue_depth.fetch_max(depth, Ordering::Relaxed);
-        let out = self.handle.eval_blocking(points);
+        let out = self.route(&points);
         // Outcome before depth: a snapshot must never observe a request
         // missing from dispatched == completed + failed + queue_depth.
         match &out {
-            Ok(_) => c.completed.fetch_add(1, Ordering::Relaxed),
-            Err(_) => c.failed.fetch_add(1, Ordering::Relaxed),
+            Ok(_) => {
+                c.completed.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                c.failed.fetch_add(1, Ordering::Relaxed);
+                match e {
+                    ServeError::Overloaded { .. } => {
+                        c.shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    ServeError::DeadlineExceeded { .. } => {
+                        c.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                    }
+                    ServeError::InvalidRequest { .. } => {
+                        c.invalid.fetch_add(1, Ordering::Relaxed);
+                    }
+                    // Engine faults are counted per attempt inside route().
+                    ServeError::EngineFault { .. } => {}
+                }
+            }
         };
         c.queue_depth.fetch_sub(1, Ordering::Relaxed);
         out
     }
+
+    /// The attempt loop: pick a replica, dispatch, classify the outcome,
+    /// fail over while the budget and deadline allow.
+    fn route(&self, points: &[f32]) -> std::result::Result<EvalResponse, ServeError> {
+        let clock = &self.cfg.clock;
+        let deadline = self
+            .cfg
+            .deadline_ticks
+            .map(|d| clock.now().saturating_add(d));
+        let mut last: Option<ServeError> = None;
+        let mut tried = vec![false; self.replicas.len()];
+        for attempt in 0..u64::from(self.cfg.retries) + 1 {
+            if attempt > 0 {
+                self.counters.retries.fetch_add(1, Ordering::Relaxed);
+            }
+            let now = clock.now();
+            if let Some(dt) = deadline {
+                // Deadline check between attempts: never burn the retry
+                // budget on a request that already expired.
+                if now >= dt {
+                    return Err(ServeError::DeadlineExceeded {
+                        model: self.model.clone(),
+                        deadline_tick: dt,
+                        now_tick: now,
+                    });
+                }
+            }
+            let Some((idx, is_probe)) = self.pick(now, &tried) else {
+                return Err(last.unwrap_or_else(|| ServeError::Overloaded {
+                    model: self.model.clone(),
+                    reason: "no replica available (all quarantined)".to_string(),
+                }));
+            };
+            let (handle, state) = &self.replicas[idx];
+            tried[idx] = true;
+            state.attempts.fetch_add(1, Ordering::Relaxed);
+            match handle.eval_with_deadline(points.to_vec(), deadline) {
+                Ok(resp) => {
+                    state.completed.fetch_add(1, Ordering::Relaxed);
+                    plock(&state.health).on_success();
+                    return Ok(resp);
+                }
+                Err(e) => {
+                    state.failed.fetch_add(1, Ordering::Relaxed);
+                    if matches!(e, ServeError::EngineFault { .. }) {
+                        self.counters.engine_faults.fetch_add(1, Ordering::Relaxed);
+                        plock(&state.health).on_failure(clock.now());
+                    } else if is_probe {
+                        // A shed/expired probe judges nothing: clear the
+                        // in-flight flag so the window can reopen.
+                        plock(&state.health).abort_probe();
+                    }
+                    if !e.retryable() {
+                        return Err(e);
+                    }
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| ServeError::Overloaded {
+            model: self.model.clone(),
+            reason: "attempt budget exhausted".to_string(),
+        }))
+    }
+
+    /// Replica choice at tick `now`: a quarantined replica whose probe
+    /// window is open takes the request as its probe (health recovery
+    /// rides on live traffic); otherwise the least-loaded `Open` replica,
+    /// ties to the lowest index. Replicas already `tried` by this request
+    /// are skipped so a failover attempt actually moves — unless every
+    /// open replica has been tried, in which case retrying one beats
+    /// failing outright. `None` when every replica is gated.
+    fn pick(&self, now: u64, tried: &[bool]) -> Option<(usize, bool)> {
+        for (i, (_, state)) in self.replicas.iter().enumerate() {
+            if tried[i] {
+                continue;
+            }
+            let mut h = plock(&state.health);
+            if h.gate(now) == Gate::ProbeDue {
+                h.begin_probe();
+                return Some((i, true));
+            }
+        }
+        let mut best: Option<(usize, usize)> = None;
+        let mut best_untried = false;
+        for (i, (handle, state)) in self.replicas.iter().enumerate() {
+            if plock(&state.health).gate(now) != Gate::Open {
+                continue;
+            }
+            let untried = !tried[i];
+            let depth = handle.inflight();
+            let better = match (untried, best_untried) {
+                (true, false) => true,
+                (false, true) => false,
+                _ => best.map_or(true, |(_, d)| depth < d),
+            };
+            if better {
+                best = Some((i, depth));
+                best_untried = untried;
+            }
+        }
+        best.map(|(i, _)| (i, false))
+    }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
-    use crate::coordinator::{BatchFn, BatchPolicy};
+    use crate::coordinator::{BatchFn, BatchPolicy, ServeConfig};
     use std::time::Duration;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy {
+            capacity: 8,
+            max_wait: Duration::from_millis(1),
+        }
+    }
 
     fn scaled_sum_server(width: usize, scale: f32) -> ModelServer {
         let compute: BatchFn = Box::new(move |data: &[f32], w: usize| {
@@ -214,14 +529,12 @@ mod tests {
             }
             Ok((phi, lphi))
         });
-        ModelServer::spawn(
-            width,
-            BatchPolicy {
-                capacity: 8,
-                max_wait: Duration::from_millis(1),
-            },
-            compute,
-        )
+        ModelServer::spawn(width, policy(), compute)
+    }
+
+    fn failing_server(width: usize, msg: &'static str) -> ModelServer {
+        let compute: BatchFn = Box::new(move |_, _| Err(anyhow!(msg)));
+        ModelServer::spawn(width, policy(), compute)
     }
 
     #[test]
@@ -245,6 +558,8 @@ mod tests {
         assert_eq!(snap[1].completed, 2);
         assert_eq!(snap[0].queue_depth, 0, "no request in flight");
         assert!(snap[1].peak_queue_depth >= 1);
+        assert_eq!(snap[0].replicas.len(), 1);
+        assert_eq!(snap[0].replicas[0].state, HealthState::Healthy);
         assert!(router.eval_blocking("nope", vec![1.0]).is_err());
         router.shutdown();
     }
@@ -285,22 +600,145 @@ mod tests {
 
     #[test]
     fn failures_counted_separately() {
-        let failing: BatchFn = Box::new(|_, _| Err(anyhow!("backend exploded")));
         let mut router = Router::new();
-        router.register(
-            "bad",
-            ModelServer::spawn(
-                1,
-                BatchPolicy {
-                    capacity: 2,
-                    max_wait: Duration::from_millis(1),
-                },
-                failing,
-            ),
-        );
+        router.register("bad", failing_server(1, "backend exploded"));
         assert!(router.eval_blocking("bad", vec![1.0]).is_err());
         let snap = router.snapshot();
         assert_eq!((snap[0].dispatched, snap[0].completed, snap[0].failed), (1, 0, 1));
+        assert_eq!(snap[0].engine_faults, 1);
+        router.shutdown();
+    }
+
+    #[test]
+    fn replica_width_mismatch_rejected() {
+        let mut router = Router::new();
+        router.register("m", scaled_sum_server(2, 1.0));
+        let err = router.add_replica("m", scaled_sum_server(3, 1.0)).unwrap_err();
+        assert!(err.to_string().contains("width"), "{err}");
+        assert!(router.add_replica("ghost", scaled_sum_server(2, 1.0)).is_err());
+        router.shutdown();
+    }
+
+    #[test]
+    fn retry_fails_over_to_healthy_replica() {
+        let mut router = Router::with_config(RouterConfig {
+            retries: 1,
+            ..RouterConfig::default()
+        });
+        router.register("m", failing_server(1, "replica 0 exploded"));
+        router.add_replica("m", scaled_sum_server(1, 2.0)).unwrap();
+        // Replica 0 is picked first (lowest index on equal depth), faults,
+        // and the retry lands on replica 1.
+        let resp = router.eval_blocking("m", vec![3.0]).unwrap();
+        assert_eq!(resp.lphi, vec![6.0]);
+        let snap = router.snapshot();
+        let m = &snap[0];
+        assert_eq!((m.dispatched, m.completed, m.failed), (1, 1, 0));
+        assert_eq!(m.retries, 1);
+        assert_eq!(m.engine_faults, 1);
+        assert_eq!(m.replicas[0].failed, 1);
+        assert_eq!(m.replicas[1].completed, 1);
+        router.shutdown();
+    }
+
+    #[test]
+    fn engine_faults_quarantine_and_probe_readmits() {
+        let clock = TickClock::new();
+        let cfg = RouterConfig {
+            retries: 0,
+            clock: clock.clone(),
+            health: HealthPolicy {
+                degrade_after: 1,
+                quarantine_after: 2,
+                probe_after_ticks: 4,
+                probe_successes: 1,
+            },
+            ..RouterConfig::default()
+        };
+        // A server that fails while `fail` is set, then recovers.
+        use std::sync::atomic::AtomicBool;
+        let fail = Arc::new(AtomicBool::new(true));
+        let f = Arc::clone(&fail);
+        let compute: BatchFn = Box::new(move |data, _| {
+            if f.load(Ordering::SeqCst) {
+                Err(anyhow!("transient fault"))
+            } else {
+                Ok((data.to_vec(), data.to_vec()))
+            }
+        });
+        let mut router = Router::with_config(cfg);
+        router.register("m", ModelServer::spawn(1, policy(), compute));
+        let client = router.client("m").unwrap();
+
+        // Two faults → quarantine.
+        assert!(client.eval_blocking(vec![1.0]).is_err());
+        assert!(client.eval_blocking(vec![1.0]).is_err());
+        let snap = router.snapshot();
+        assert_eq!(snap[0].replicas[0].state, HealthState::Quarantined);
+        assert_eq!(snap[0].quarantine_events, 1);
+
+        // Gated: no replica available while the window is closed.
+        let err = client.eval_blocking(vec![1.0]).unwrap_err();
+        assert!(matches!(err, ServeError::Overloaded { .. }), "{err}");
+
+        // Window opens on the logical clock; the backend has recovered, so
+        // the probe succeeds and re-admits the replica.
+        fail.store(false, Ordering::SeqCst);
+        clock.advance(10);
+        let resp = client.eval_blocking(vec![7.0]).unwrap();
+        assert_eq!(resp.phi, vec![7.0]);
+        let snap = router.snapshot();
+        assert_eq!(snap[0].replicas[0].state, HealthState::Healthy);
+        router.shutdown();
+    }
+
+    #[test]
+    fn router_deadline_expires_on_logical_clock() {
+        let clock = TickClock::new();
+        let mut router = Router::with_config(RouterConfig {
+            deadline_ticks: Some(5),
+            retries: 3,
+            clock: clock.clone(),
+            ..RouterConfig::default()
+        });
+        // A faulting replica whose batch consumes 100 logical ticks: the
+        // first attempt faults, and by the pre-check of attempt 2 the
+        // deadline (submit + 5) has long expired — so the request fails
+        // with DeadlineExceeded instead of burning the retry budget.
+        let c2 = clock.clone();
+        let compute: BatchFn = Box::new(move |_, _| {
+            c2.advance(100);
+            Err(anyhow!("slow fault"))
+        });
+        router.register(
+            "m",
+            ModelServer::spawn_cfg(
+                1,
+                policy(),
+                ServeConfig {
+                    clock: clock.clone(),
+                    ..ServeConfig::labeled("m")
+                },
+                compute,
+            ),
+        );
+        let client = router.client("m").unwrap();
+        let err = client.eval_blocking(vec![1.0]).unwrap_err();
+        match &err {
+            ServeError::DeadlineExceeded {
+                deadline_tick,
+                now_tick,
+                ..
+            } => {
+                assert_eq!(*deadline_tick, 5);
+                assert_eq!(*now_tick, 100);
+            }
+            other => panic!("expected DeadlineExceeded, got {other}"),
+        }
+        let snap = router.snapshot();
+        assert_eq!((snap[0].failed, snap[0].deadline_expired), (1, 1));
+        assert_eq!(snap[0].retries, 1, "only one retry attempted before expiry");
+        assert_eq!(snap[0].engine_faults, 1);
         router.shutdown();
     }
 }

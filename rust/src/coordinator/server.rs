@@ -3,7 +3,23 @@
 //!
 //! PJRT handles are **not** `Send`, so the XLA executor is constructed
 //! *inside* its worker thread; only the request channel crosses threads.
+//!
+//! ## Fault boundary
+//!
+//! The handle side is the serving **front door**: requests are validated
+//! (shape + finiteness, [`ServeError::InvalidRequest`]) and pass admission
+//! control (bounded in-flight cap, [`ServeError::Overloaded`]) before
+//! anything is enqueued. The worker side checks logical-tick deadlines at
+//! dequeue ([`ServeError::DeadlineExceeded`]), wraps every batch compute
+//! in `catch_unwind` (a panicking batch fails its member requests with
+//! [`ServeError::EngineFault`] — payload and pool shard context preserved
+//! — while the worker thread survives), and withholds non-finite outputs
+//! at the boundary so a NaN produced inside an engine can never reach a
+//! client as a "successful" response. The optional seeded
+//! [`FaultInjector`] hook drives all of these paths deterministically in
+//! `rust/tests/fault_injection.rs`.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -18,9 +34,11 @@ use crate::jet::{self, JetEngine};
 use crate::parallel::{split_rows, Pool};
 use crate::plan;
 use crate::plan::hessian::global_hessian_cache;
+use crate::tensor::ops::first_non_finite_f32;
 use crate::tensor::Tensor;
 
 use super::batcher::{BatchPolicy, Batcher, CutBatch};
+use super::fault::{FaultInjector, ServeError, TickClock};
 use super::metrics::Metrics;
 use super::{EvalRequest, EvalResponse};
 
@@ -28,11 +46,103 @@ use super::{EvalRequest, EvalResponse};
 /// over the full padded batch.
 pub type BatchFn = Box<dyn FnMut(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)> + Send>;
 
-type RespTx = mpsc::Sender<Result<EvalResponse, String>>;
+type RespTx = mpsc::Sender<Result<EvalResponse, ServeError>>;
 
 enum Msg {
     Eval(EvalRequest, RespTx),
     Shutdown,
+}
+
+/// Robustness knobs for one [`ModelServer`] (the PR 5 spawn signatures are
+/// preserved and use [`ServeConfig::default`]).
+#[derive(Clone)]
+pub struct ServeConfig {
+    /// Max requests in flight (admitted, not yet answered) before the
+    /// front door sheds with [`ServeError::Overloaded`]. `0` = unbounded.
+    pub queue_cap: usize,
+    /// Logical clock for deadline checks. Share one clock with the router
+    /// (and advance it from the traffic driver) when using deadlines —
+    /// a never-advanced clock simply never expires anything.
+    pub clock: TickClock,
+    /// Model label stamped into every [`ServeError`] this server emits.
+    pub label: String,
+    /// Deterministic fault injection (test/harness hook; `None` in
+    /// production).
+    pub injector: Option<Arc<FaultInjector>>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            queue_cap: 0,
+            clock: TickClock::new(),
+            label: "model".to_string(),
+            injector: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Default config with a model label.
+    pub fn labeled(label: &str) -> Self {
+        Self {
+            label: label.to_string(),
+            ..Self::default()
+        }
+    }
+}
+
+/// Bounded in-flight gate (0 = unbounded). Shared between the handle
+/// (admission) and the worker (artificial queue-pressure injection).
+#[derive(Debug)]
+struct Admission {
+    cap: usize,
+    inflight: AtomicUsize,
+}
+
+impl Admission {
+    fn new(cap: usize) -> Self {
+        Self {
+            cap,
+            inflight: AtomicUsize::new(0),
+        }
+    }
+
+    /// Take one slot; `Err(depth)` when the gate is at cap.
+    fn try_enter(&self) -> std::result::Result<usize, usize> {
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if self.cap != 0 && cur >= self.cap {
+                return Err(cur);
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Ok(cur + 1),
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn leave(&self) {
+        self.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Artificial queue pressure (fault injection): hold `n` slots.
+    fn occupy(&self, n: usize) {
+        self.inflight.fetch_add(n, Ordering::AcqRel);
+    }
+
+    fn release(&self, n: usize) {
+        self.inflight.fetch_sub(n, Ordering::AcqRel);
+    }
+
+    fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
 }
 
 /// Handle for submitting requests to a running [`ModelServer`].
@@ -41,6 +151,9 @@ pub struct ServerHandle {
     tx: mpsc::Sender<Msg>,
     width: usize,
     pub metrics: Arc<Metrics>,
+    admission: Arc<Admission>,
+    clock: TickClock,
+    label: Arc<str>,
 }
 
 impl ServerHandle {
@@ -49,29 +162,116 @@ impl ServerHandle {
         self.width
     }
 
-    /// Submit a request; blocks until the response is ready. Requests
-    /// larger than the batch capacity are split and reassembled here.
-    pub fn eval_blocking(&self, points: Vec<f32>) -> Result<EvalResponse> {
-        let req = EvalRequest::new(points, self.width);
-        let rows = req.rows;
+    /// Requests currently admitted and unanswered (includes injected
+    /// occupancy). The router's least-depth replica pick reads this.
+    pub fn inflight(&self) -> usize {
+        self.admission.inflight()
+    }
+
+    /// The server's logical clock.
+    pub fn clock(&self) -> &TickClock {
+        &self.clock
+    }
+
+    /// Submit a request with no deadline; blocks until the response is
+    /// ready.
+    pub fn eval_blocking(&self, points: Vec<f32>) -> std::result::Result<EvalResponse, ServeError> {
+        self.eval_with_deadline(points, None)
+    }
+
+    /// Submit a request with an optional absolute logical-tick deadline;
+    /// blocks until the response is ready. The front door validates and
+    /// admits (or sheds) *before* enqueueing; requests larger than the
+    /// batch capacity are split and reassembled here.
+    pub fn eval_with_deadline(
+        &self,
+        points: Vec<f32>,
+        deadline_tick: Option<u64>,
+    ) -> std::result::Result<EvalResponse, ServeError> {
+        // Front door: structured validation instead of the legacy asserts.
+        if self.width == 0 || points.is_empty() || points.len() % self.width != 0 {
+            self.metrics.record_invalid();
+            return Err(ServeError::InvalidRequest {
+                reason: format!(
+                    "ragged request: {} values is not a positive multiple of width {}",
+                    points.len(),
+                    self.width
+                ),
+            });
+        }
+        if let Some(i) = first_non_finite_f32(&points) {
+            self.metrics.record_invalid();
+            return Err(ServeError::InvalidRequest {
+                reason: format!(
+                    "non-finite input at row {}, column {}: {}",
+                    i / self.width,
+                    i % self.width,
+                    points[i]
+                ),
+            });
+        }
+        // Admission control: bounded in-flight requests.
+        if let Err(depth) = self.admission.try_enter() {
+            self.metrics.record_shed();
+            return Err(ServeError::Overloaded {
+                model: self.label.to_string(),
+                reason: format!("queue depth {depth} at cap {}", self.admission.cap),
+            });
+        }
+        self.metrics.record_accepted();
+        let out = self.eval_admitted(points, deadline_tick);
+        self.admission.leave();
+        out
+    }
+
+    fn eval_admitted(
+        &self,
+        points: Vec<f32>,
+        deadline_tick: Option<u64>,
+    ) -> std::result::Result<EvalResponse, ServeError> {
+        let rows = points.len() / self.width;
+        let req = EvalRequest {
+            points,
+            rows,
+            width: self.width,
+            deadline_tick,
+        };
         let t0 = Instant::now();
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .send(Msg::Eval(req, rtx))
-            .map_err(|_| anyhow!("server stopped"))?;
+            .map_err(|_| self.stopped())?;
         let mut phi = Vec::with_capacity(rows);
         let mut lphi = Vec::with_capacity(rows);
         while phi.len() < rows {
-            let part = rrx
-                .recv()
-                .map_err(|_| anyhow!("server dropped response channel"))?
-                .map_err(|e| anyhow!(e))?;
+            let part = rrx.recv().map_err(|_| self.stopped())??;
             phi.extend(part.phi);
             lphi.extend(part.lphi);
         }
         self.metrics.record_request(rows, t0.elapsed().as_secs_f64());
         Ok(EvalResponse { phi, lphi })
     }
+
+    /// A dead worker is a retryable engine fault: failover to another
+    /// replica is exactly the right response.
+    fn stopped(&self) -> ServeError {
+        ServeError::EngineFault {
+            model: self.label.to_string(),
+            shard: None,
+            payload: "server stopped".to_string(),
+        }
+    }
+}
+
+/// Worker-side context shared by every batch.
+struct WorkerCtx {
+    width: usize,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    clock: TickClock,
+    injector: Option<Arc<FaultInjector>>,
+    admission: Arc<Admission>,
+    label: Arc<str>,
 }
 
 /// The worker event loop — runs on the worker thread; `compute` need not
@@ -81,21 +281,70 @@ impl ServerHandle {
 /// backends (XLA artifacts) consume the whole padded buffer, while
 /// shape-flexible backends may compute only the first `rows_used` rows —
 /// response routing reads nothing past them.
-fn worker_loop<F>(
-    rx: mpsc::Receiver<Msg>,
-    width: usize,
-    policy: BatchPolicy,
-    metrics: Arc<Metrics>,
-    mut compute: F,
-) where
+fn worker_loop<F>(rx: mpsc::Receiver<Msg>, ctx: WorkerCtx, mut compute: F)
+where
     F: FnMut(&[f32], usize, usize) -> Result<(Vec<f32>, Vec<f32>)>,
 {
-    let mut batcher: Batcher<RespTx> = Batcher::new(width, policy);
+    let width = ctx.width;
+    let mut batcher: Batcher<RespTx> = Batcher::new(width, ctx.policy);
     let run_batch = |cut: CutBatch<RespTx>, compute: &mut F| {
+        let plan = match &ctx.injector {
+            Some(inj) => inj.next(),
+            None => super::fault::FaultPlan::default(),
+        };
+        if plan.occupy_slots > 0 {
+            ctx.admission.occupy(plan.occupy_slots);
+        }
+        if plan.latency_ticks > 0 {
+            // Injected latency is *logical*: the batch consumes ticks, so
+            // queued requests behind it can expire deterministically.
+            ctx.clock.advance(plan.latency_ticks);
+        }
         let t0 = Instant::now();
-        let result = compute(&cut.data, width, cut.rows_used);
+        // Panic isolation: a panicking engine (or injected panic) fails
+        // this batch's requests with EngineFault; the worker — and every
+        // other request — survives. The pool already contains shard panics
+        // and re-raises them with shard context, which lands in `payload`.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if plan.panic {
+                panic!("injected panic (fault injection)");
+            }
+            compute(&cut.data, width, cut.rows_used)
+        }));
         let exec_s = t0.elapsed().as_secs_f64();
-        metrics.record_batch(cut.rows_used, cut.padded_rows(width), exec_s);
+        ctx.metrics.record_batch(cut.rows_used, cut.padded_rows(width), exec_s);
+        if plan.occupy_slots > 0 {
+            ctx.admission.release(plan.occupy_slots);
+        }
+        let result = match result {
+            Ok(computed) => computed.map_err(|e| {
+                ServeError::engine_fault(&ctx.label, format!("batch compute failed: {e:#}"))
+            }),
+            Err(payload) => Err(ServeError::engine_fault(
+                &ctx.label,
+                crate::util::panic_message(payload),
+            )),
+        };
+        // Output gate: a non-finite value in the used rows (engine bug or
+        // injected poison) must fail loudly, never flow to a client.
+        let result = result.and_then(|(phi, mut lphi)| {
+            if plan.nan_output {
+                if let Some(v) = lphi.first_mut() {
+                    *v = f32::NAN;
+                }
+            }
+            let used_phi = cut.rows_used.min(phi.len());
+            let used_lphi = cut.rows_used.min(lphi.len());
+            if first_non_finite_f32(&phi[..used_phi]).is_some()
+                || first_non_finite_f32(&lphi[..used_lphi]).is_some()
+            {
+                return Err(ServeError::engine_fault(
+                    &ctx.label,
+                    "non-finite engine output (batch withheld at the boundary)".to_string(),
+                ));
+            }
+            Ok((phi, lphi))
+        });
         match result {
             Ok((phi, lphi)) => {
                 for m in cut.members {
@@ -107,17 +356,31 @@ fn worker_loop<F>(
                 }
             }
             Err(e) => {
-                let msg = format!("batch compute failed: {e:#}");
+                ctx.metrics.record_engine_fault();
                 for m in cut.members {
-                    let _ = m.tag.send(Err(msg.clone()));
+                    let _ = m.tag.send(Err(e.clone()));
                 }
             }
         }
     };
     loop {
-        match rx.recv_timeout(policy.max_wait) {
+        match rx.recv_timeout(ctx.policy.max_wait) {
             Ok(Msg::Eval(req, rtx)) => {
-                metrics.record_received();
+                ctx.metrics.record_received();
+                // Deadline check at dequeue: an expired request is
+                // answered immediately instead of entering a batch.
+                if let Some(dt) = req.deadline_tick {
+                    let now = ctx.clock.now();
+                    if now >= dt {
+                        ctx.metrics.record_deadline_expired();
+                        let _ = rtx.send(Err(ServeError::DeadlineExceeded {
+                            model: ctx.label.to_string(),
+                            deadline_tick: dt,
+                            now_tick: now,
+                        }));
+                        continue;
+                    }
+                }
                 let cuts = batcher.push(req, |_frag| rtx.clone());
                 for cut in cuts {
                     run_batch(cut, &mut compute);
@@ -153,19 +416,38 @@ pub struct ModelServer {
 
 impl ModelServer {
     /// Shared wiring: channel, worker thread around [`worker_loop`], handle.
-    fn spawn_with<F>(width: usize, policy: BatchPolicy, metrics: Arc<Metrics>, compute: F) -> Self
+    fn spawn_with<F>(
+        width: usize,
+        policy: BatchPolicy,
+        metrics: Arc<Metrics>,
+        cfg: ServeConfig,
+        compute: F,
+    ) -> Self
     where
         F: FnMut(&[f32], usize, usize) -> Result<(Vec<f32>, Vec<f32>)> + Send + 'static,
     {
         let (tx, rx) = mpsc::channel::<Msg>();
-        let worker_metrics = Arc::clone(&metrics);
+        let admission = Arc::new(Admission::new(cfg.queue_cap));
+        let label: Arc<str> = Arc::from(cfg.label.as_str());
+        let ctx = WorkerCtx {
+            width,
+            policy,
+            metrics: Arc::clone(&metrics),
+            clock: cfg.clock.clone(),
+            injector: cfg.injector,
+            admission: Arc::clone(&admission),
+            label: Arc::clone(&label),
+        };
         let join = std::thread::spawn(move || {
-            worker_loop(rx, width, policy, worker_metrics, compute);
+            worker_loop(rx, ctx, compute);
         });
         let handle = ServerHandle {
             tx: tx.clone(),
             width,
             metrics,
+            admission,
+            clock: cfg.clock,
+            label,
         };
         Self {
             handle,
@@ -176,8 +458,18 @@ impl ModelServer {
 
     /// Spawn a worker around an arbitrary (Send) batch compute.
     pub fn spawn(width: usize, policy: BatchPolicy, compute: BatchFn) -> Self {
+        Self::spawn_cfg(width, policy, ServeConfig::default(), compute)
+    }
+
+    /// [`Self::spawn`] with robustness knobs.
+    pub fn spawn_cfg(
+        width: usize,
+        policy: BatchPolicy,
+        cfg: ServeConfig,
+        compute: BatchFn,
+    ) -> Self {
         let mut compute = compute;
-        Self::spawn_with(width, policy, Arc::new(Metrics::new()), move |data, w, _rows| {
+        Self::spawn_with(width, policy, Arc::new(Metrics::new()), cfg, move |data, w, _rows| {
             compute(data, w)
         })
     }
@@ -198,8 +490,27 @@ impl ModelServer {
     where
         F: Fn(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)> + Send + Sync + 'static,
     {
+        Self::spawn_sharded_cfg(width, policy, pool, shard_rows, ServeConfig::default(), inner)
+    }
+
+    /// [`Self::spawn_sharded`] with robustness knobs. The serve label also
+    /// names the pool region, so a shard panic's re-raised payload carries
+    /// `pool region "<label>" shard i (rows s..e)` context into the
+    /// resulting [`ServeError::EngineFault`].
+    pub fn spawn_sharded_cfg<F>(
+        width: usize,
+        policy: BatchPolicy,
+        pool: Pool,
+        shard_rows: usize,
+        cfg: ServeConfig,
+        inner: F,
+    ) -> Self
+    where
+        F: Fn(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)> + Send + Sync + 'static,
+    {
         let metrics = Arc::new(Metrics::new());
         let shard_metrics = Arc::clone(&metrics);
+        let region_label = cfg.label.clone();
         let compute = move |data: &[f32],
                             w: usize,
                             rows_used: usize|
@@ -209,7 +520,7 @@ impl ModelServer {
             let rows = rows_used.min(data.len() / w);
             let ranges = split_rows(rows, shard_rows.max(1));
             let t0 = Instant::now();
-            let shard_out = pool.run_sharded(ranges, |_, r| {
+            let shard_out = pool.run_sharded_labeled(&region_label, ranges, |_, r| {
                 let ts = Instant::now();
                 let res = inner(&data[r.start * w..r.end * w], w);
                 (res, ts.elapsed().as_secs_f64())
@@ -226,7 +537,7 @@ impl ModelServer {
             shard_metrics.record_shards(&shard_secs, t0.elapsed().as_secs_f64());
             Ok((phi, lphi))
         };
-        Self::spawn_with(width, policy, metrics, compute)
+        Self::spawn_with(width, policy, metrics, cfg, compute)
     }
 
     /// Spawn a sharded worker around the pure-Rust DOF engine with
@@ -243,6 +554,18 @@ impl ModelServer {
         pool: Pool,
         shard_rows: usize,
     ) -> Self {
+        Self::spawn_dof_cfg(graph, engine, policy, pool, shard_rows, ServeConfig::labeled("dof"))
+    }
+
+    /// [`Self::spawn_dof`] with robustness knobs.
+    pub fn spawn_dof_cfg(
+        graph: Graph,
+        engine: DofEngine,
+        policy: BatchPolicy,
+        pool: Pool,
+        shard_rows: usize,
+        cfg: ServeConfig,
+    ) -> Self {
         let width = graph.input_dim();
         let program =
             plan::global_cache().get_or_compile(&graph, &engine.ldl, engine.plan_options());
@@ -252,6 +575,9 @@ impl ModelServer {
                 &[rows, w],
                 data.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
             );
+            // Engine-entry validation (belt over the front door's braces:
+            // the shared gate also guards direct in-process callers).
+            engine.validate_input(&graph, &x).map_err(anyhow::Error::msg)?;
             // Program-keyed pool slabs: this closure runs on scoped pool
             // workers whose thread-locals die with each batch's parallel
             // region; the pool returns the warmed exact-fit slab for this
@@ -268,7 +594,7 @@ impl ModelServer {
                 res.operator_values.data().iter().map(|&v| v as f32).collect(),
             ))
         };
-        Self::spawn_sharded(width, policy, pool, shard_rows, compute)
+        Self::spawn_sharded_cfg(width, policy, pool, shard_rows, cfg, compute)
     }
 
     /// Spawn a sharded worker around the Taylor-mode **jet engine**
@@ -284,6 +610,18 @@ impl ModelServer {
         pool: Pool,
         shard_rows: usize,
     ) -> Self {
+        Self::spawn_jet_cfg(graph, engine, policy, pool, shard_rows, ServeConfig::labeled("jet"))
+    }
+
+    /// [`Self::spawn_jet`] with robustness knobs.
+    pub fn spawn_jet_cfg(
+        graph: Graph,
+        engine: JetEngine,
+        policy: BatchPolicy,
+        pool: Pool,
+        shard_rows: usize,
+        cfg: ServeConfig,
+    ) -> Self {
         let width = graph.input_dim();
         let program = jet::global_jet_cache().get_or_compile(
             &graph,
@@ -296,6 +634,7 @@ impl ModelServer {
                 &[rows, w],
                 data.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
             );
+            engine.validate_input(&graph, &x).map_err(anyhow::Error::msg)?;
             let key = SlabKey {
                 program: program.key().fingerprint,
                 rows,
@@ -308,7 +647,7 @@ impl ModelServer {
                 res.operator_values.data().iter().map(|&v| v as f32).collect(),
             ))
         };
-        Self::spawn_sharded(width, policy, pool, shard_rows, compute)
+        Self::spawn_sharded_cfg(width, policy, pool, shard_rows, cfg, compute)
     }
 
     /// Spawn a sharded worker around the **Hessian baseline engine** with
@@ -327,6 +666,25 @@ impl ModelServer {
         pool: Pool,
         shard_rows: usize,
     ) -> Self {
+        Self::spawn_hessian_cfg(
+            graph,
+            engine,
+            policy,
+            pool,
+            shard_rows,
+            ServeConfig::labeled("hessian"),
+        )
+    }
+
+    /// [`Self::spawn_hessian`] with robustness knobs.
+    pub fn spawn_hessian_cfg(
+        graph: Graph,
+        engine: HessianEngine,
+        policy: BatchPolicy,
+        pool: Pool,
+        shard_rows: usize,
+        cfg: ServeConfig,
+    ) -> Self {
         let width = graph.input_dim();
         let plan = global_hessian_cache().get_or_compile(&graph);
         let compute = move |data: &[f32], w: usize| -> Result<(Vec<f32>, Vec<f32>)> {
@@ -335,13 +693,14 @@ impl ModelServer {
                 &[rows, w],
                 data.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
             );
+            engine.validate_input(&graph, &x).map_err(anyhow::Error::msg)?;
             let res = engine.execute(&plan, &graph, &x);
             Ok((
                 res.values.data().iter().map(|&v| v as f32).collect(),
                 res.operator_values.data().iter().map(|&v| v as f32).collect(),
             ))
         };
-        Self::spawn_sharded(width, policy, pool, shard_rows, compute)
+        Self::spawn_sharded_cfg(width, policy, pool, shard_rows, cfg, compute)
     }
 
     /// Spawn a worker that executes a PJRT artifact. The executor is
@@ -358,10 +717,21 @@ impl ModelServer {
             capacity: batch,
             max_wait: policy_wait,
         };
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let cfg = ServeConfig::labeled(&artifact);
+        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
         let (tx, rx) = mpsc::channel::<Msg>();
         let metrics = Arc::new(Metrics::new());
-        let worker_metrics = Arc::clone(&metrics);
+        let admission = Arc::new(Admission::new(cfg.queue_cap));
+        let label: Arc<str> = Arc::from(cfg.label.as_str());
+        let ctx = WorkerCtx {
+            width,
+            policy,
+            metrics: Arc::clone(&metrics),
+            clock: cfg.clock.clone(),
+            injector: cfg.injector,
+            admission: Arc::clone(&admission),
+            label: Arc::clone(&label),
+        };
         let art = artifact.clone();
         let join = std::thread::spawn(move || {
             use crate::runtime::{ArtifactRegistry, Executor};
@@ -389,7 +759,7 @@ impl ModelServer {
                 let outs = exec.run_f32(&art, &[(data, &[rows, w])])?;
                 Ok((outs[0].clone(), outs[1].clone()))
             };
-            worker_loop(rx, width, policy, worker_metrics, compute);
+            worker_loop(rx, ctx, compute);
         });
         match ready_rx.recv() {
             Ok(Ok(())) => {}
@@ -400,6 +770,9 @@ impl ModelServer {
             tx: tx.clone(),
             width,
             metrics,
+            admission,
+            clock: cfg.clock,
+            label,
         };
         Ok(Self {
             handle,
@@ -431,6 +804,7 @@ impl Drop for ModelServer {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use std::time::Duration;
@@ -492,6 +866,7 @@ mod tests {
         }
         let snap = h.metrics.snapshot();
         assert_eq!(snap.requests, 8);
+        assert_eq!(snap.accepted, 8);
         assert!(snap.batches >= 1);
         server.shutdown();
     }
@@ -569,6 +944,7 @@ mod tests {
         let h = server.handle();
         let err = h.eval_blocking(vec![1.0, 2.0]).unwrap_err();
         assert!(err.to_string().contains("shard exploded"));
+        assert!(matches!(err, ServeError::EngineFault { .. }));
         server.shutdown();
     }
 
@@ -669,6 +1045,169 @@ mod tests {
         let h = server.handle();
         let err = h.eval_blocking(vec![1.0]).unwrap_err();
         assert!(err.to_string().contains("backend exploded"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn front_door_rejects_invalid_requests() {
+        let server = ModelServer::spawn(
+            3,
+            BatchPolicy {
+                capacity: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            mock_compute(),
+        );
+        let h = server.handle();
+        // Ragged.
+        let err = h.eval_blocking(vec![1.0, 2.0]).unwrap_err();
+        assert!(matches!(err, ServeError::InvalidRequest { .. }), "{err}");
+        // Empty.
+        assert!(h.eval_blocking(vec![]).is_err());
+        // Non-finite, position reported.
+        let err = h
+            .eval_blocking(vec![1.0, 2.0, 3.0, 4.0, f32::NAN, 6.0])
+            .unwrap_err();
+        assert!(err.to_string().contains("row 1, column 1"), "{err}");
+        // Nothing was dispatched; the worker never saw them.
+        let snap = h.metrics.snapshot();
+        assert_eq!(snap.invalid, 3);
+        assert_eq!(snap.accepted, 0);
+        assert_eq!(snap.received, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn panicking_compute_is_contained_and_server_survives() {
+        let panicking: BatchFn = Box::new(|data, _| {
+            if data[0] < 0.0 {
+                panic!("negative input blew up the engine");
+            }
+            Ok((vec![data[0]], vec![data[0]]))
+        });
+        let server = ModelServer::spawn(
+            1,
+            BatchPolicy {
+                capacity: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            panicking,
+        );
+        let h = server.handle();
+        let err = h.eval_blocking(vec![-1.0]).unwrap_err();
+        match &err {
+            ServeError::EngineFault { payload, .. } => {
+                assert!(payload.contains("negative input blew up"), "{payload}");
+            }
+            other => panic!("expected EngineFault, got {other}"),
+        }
+        // The worker survived the panic: the next request is served.
+        let resp = h.eval_blocking(vec![2.0]).unwrap();
+        assert_eq!(resp.phi, vec![2.0]);
+        assert_eq!(h.metrics.snapshot().engine_faults, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn non_finite_output_is_withheld() {
+        let nan_compute: BatchFn = Box::new(|data, _| {
+            Ok((vec![f32::NAN; data.len()], vec![0.0; data.len()]))
+        });
+        let server = ModelServer::spawn(
+            1,
+            BatchPolicy {
+                capacity: 2,
+                max_wait: Duration::from_millis(1),
+            },
+            nan_compute,
+        );
+        let h = server.handle();
+        let err = h.eval_blocking(vec![1.0]).unwrap_err();
+        assert!(err.to_string().contains("non-finite engine output"), "{err}");
+        assert_eq!(h.metrics.snapshot().engine_faults, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn admission_cap_sheds_with_overloaded() {
+        // Park requests in a long-wait batcher to hold the gate open.
+        let server = ModelServer::spawn_cfg(
+            1,
+            BatchPolicy {
+                capacity: 64,
+                max_wait: Duration::from_secs(30),
+            },
+            ServeConfig {
+                queue_cap: 2,
+                ..ServeConfig::labeled("capped")
+            },
+            mock_compute(),
+        );
+        let h = server.handle();
+        let parked: Vec<_> = (0..2)
+            .map(|i| {
+                let h = h.clone();
+                std::thread::spawn(move || h.eval_blocking(vec![i as f32]))
+            })
+            .collect();
+        // Race-free gate: admission happens on the submitting thread
+        // before enqueue, so wait until both slots are held.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while h.inflight() < 2 {
+            assert!(std::time::Instant::now() < deadline, "parked requests not admitted");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let err = h.eval_blocking(vec![9.0]).unwrap_err();
+        match &err {
+            ServeError::Overloaded { model, reason } => {
+                assert_eq!(model, "capped");
+                assert!(reason.contains("cap 2"), "{reason}");
+            }
+            other => panic!("expected Overloaded, got {other}"),
+        }
+        let snap = h.metrics.snapshot();
+        assert_eq!(snap.shed, 1);
+        assert_eq!(snap.accepted, 2);
+        server.shutdown();
+        for p in parked {
+            p.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn deadline_checked_on_logical_clock_only() {
+        let clock = TickClock::new();
+        let server = ModelServer::spawn_cfg(
+            1,
+            BatchPolicy {
+                capacity: 2,
+                max_wait: Duration::from_millis(1),
+            },
+            ServeConfig {
+                clock: clock.clone(),
+                ..ServeConfig::labeled("ticked")
+            },
+            mock_compute(),
+        );
+        let h = server.handle();
+        // Wall time passes, logical time does not: the deadline holds.
+        std::thread::sleep(Duration::from_millis(20));
+        let resp = h.eval_with_deadline(vec![1.0], Some(1)).unwrap();
+        assert_eq!(resp.phi, vec![1.0]);
+        // Advance past the deadline: expired at dequeue.
+        clock.advance(5);
+        let err = h.eval_with_deadline(vec![1.0], Some(3)).unwrap_err();
+        match &err {
+            ServeError::DeadlineExceeded {
+                deadline_tick,
+                now_tick,
+                ..
+            } => {
+                assert_eq!((*deadline_tick, *now_tick), (3, 5));
+            }
+            other => panic!("expected DeadlineExceeded, got {other}"),
+        }
+        assert_eq!(h.metrics.snapshot().deadline_expired, 1);
         server.shutdown();
     }
 }

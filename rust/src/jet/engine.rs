@@ -85,6 +85,13 @@ impl JetEngine {
         global_jet_cache().get_or_compile(graph, &self.basis, self.c.is_some())
     }
 
+    /// Structured batch-input validation against `graph`'s input
+    /// dimension (shared [`crate::tensor::ops::validate_batch_input`]
+    /// gate — identical rejection message across every engine).
+    pub fn validate_input(&self, graph: &Graph, x: &Tensor) -> Result<(), String> {
+        crate::tensor::ops::validate_batch_input(graph.input_dim(), x)
+    }
+
     /// Evaluate `L[φ]` on a batch `x: [batch, N]` in one forward jet pass
     /// (compile-then-run wrapper over the keyed global cache).
     pub fn compute(&self, graph: &Graph, x: &Tensor) -> JetResult {

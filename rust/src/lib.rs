@@ -176,6 +176,45 @@
 //! ceiling (the engines are compute-bound); batches below one shard run
 //! inline. `dof bench table1 --threads N` and `dof bench grid` sweep the
 //! knob and emit `BENCH_table1.json` for trend tracking.
+//!
+//! ## Error taxonomy & failure semantics
+//!
+//! The serving tier never panics across a request boundary: every failure
+//! a client can observe is a structured
+//! [`coordinator::ServeError`], and every control-plane decision reads the
+//! **logical tick clock** ([`coordinator::TickClock`]) — never wall time —
+//! so failure schedules are replayable bit for bit.
+//!
+//! * `InvalidRequest` — raised at the front door: malformed input
+//!   (empty, not a multiple of the model width, non-finite values).
+//!   Never retried, never counted against replica health.
+//! * `Overloaded` — raised by the admission gate when the replica's
+//!   bounded in-flight queue (`ServeConfig::queue_cap`) is full. The
+//!   router fails over to another replica if the retry budget allows;
+//!   counted in `shed`.
+//! * `DeadlineExceeded` — raised by router or server when the request's
+//!   logical-tick deadline (`RouterConfig::deadline_ticks`) expired
+//!   before compute started. Not retried (the deadline has passed by
+//!   definition).
+//! * `EngineFault` — raised on the compute path: the engine panicked
+//!   (payload captured via `catch_unwind`, with model label and — on the
+//!   sharded path — the faulting shard index and row range from
+//!   [`parallel::pool`]) or produced non-finite outputs. Retried on
+//!   another replica; counts against the replica's health.
+//!
+//! Replica health walks `Healthy → Degraded → Quarantined`
+//! ([`coordinator::HealthState`], thresholds in
+//! [`coordinator::HealthPolicy`]): only `EngineFault`s advance the
+//! consecutive-failure count, quarantined replicas stop receiving traffic,
+//! and after a tick-based backoff window (doubling per failed probe) live
+//! requests double as **re-admission probes**. Failure accounting is
+//! exact, not sampled: the router classifies each failed request by its
+//! *final* error (`shed` / `deadline_expired` / `invalid`), counts
+//! `engine_faults` per attempt, and `retries` per failover hop — the
+//! fault-injection battery (`rust/tests/fault_injection.rs`) replays
+//! seeded fault schedules via [`coordinator::FaultInjector::plan_for`] and
+//! asserts these counters equal the schedule, while every successful
+//! response stays bitwise identical to its fault-free twin.
 
 pub mod autodiff;
 pub mod bench_harness;

@@ -19,8 +19,10 @@ use dof::bench_harness::report::{run_table1_grid, write_grid_json};
 use dof::bench_harness::table1::{run_table1, Table1Config};
 use dof::bench_harness::table2::{run_table2, Table2Config};
 use dof::bench_harness::{render_table, BenchConfig};
-use dof::coordinator::{BatchPolicy, ModelServer, Router};
-use dof::graph::Act;
+use dof::coordinator::{
+    BatchPolicy, HealthPolicy, ModelServer, Router, RouterConfig, ServeConfig, TickClock,
+};
+use dof::graph::{Act, Graph};
 use dof::nn::{Mlp, MlpSpec};
 use dof::operators::{CoeffSpec, HigherOrderOperator, HigherOrderSpec, Operator};
 use dof::parallel::{self, Pool};
@@ -91,6 +93,16 @@ USAGE:
             [--multi]                     rust engine: DOF + Hessian + jet
                                           models behind one router (mixed
                                           tagged traffic)
+            [--replicas N]                rust engine: N replicas per model
+                                          (retry/failover targets)
+            [--queue-cap N]               per-replica admission cap; past it
+                                          requests shed with Overloaded
+                                          (0 = unbounded)
+            [--deadline-ticks N]          per-request deadline on the
+                                          logical tick clock (one tick per
+                                          completed request; 0 = none)
+            [--retries N]                 failover attempts after the first
+                                          on retryable errors
 
   --threads N (or DOF_THREADS=N) sizes the worker team for batch sharding
   and the row-parallel GEMM; OS threads spawn once per process and are
@@ -219,6 +231,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 fmt_duration(report.pool.warm_region_seconds),
                 report.pool.workers,
                 report.pool.spawn_events
+            );
+            println!(
+                "fault-tier probe: {}/{} requests completed | retries {} | \
+                 engine faults {} | quarantine events {} | {}/{} replicas healthy",
+                report.robustness.completed,
+                report.robustness.requests,
+                report.robustness.retries,
+                report.robustness.engine_faults,
+                report.robustness.quarantine_events,
+                report.robustness.healthy_replicas,
+                report.robustness.replicas
             );
             println!("| batch | threads | DOF exec | Hessian exec | H/D ratio |");
             println!("|-------|---------|----------|--------------|-----------|");
@@ -451,13 +474,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // executor is a stub unless the `pjrt` feature (plus the xla crate) is
     // compiled in, so the out-of-the-box demo uses the Rust backend.
     let default_engine = if cfg!(feature = "pjrt") { "xla" } else { "rust" };
+    // Robustness knobs: a bounded per-replica admission queue, a logical
+    // tick deadline per routed request, and a retry/failover budget. The
+    // tick clock is shared between the router and every replica and
+    // advanced by the traffic drivers (one tick per finished request) —
+    // the control plane never reads wall clock.
+    let clock = TickClock::new();
+    let deadline_ticks = args.u64_or("deadline-ticks", 0);
+    let router_cfg = RouterConfig {
+        deadline_ticks: (deadline_ticks > 0).then_some(deadline_ticks),
+        retries: args.u64_or("retries", 0) as u32,
+        clock: clock.clone(),
+        health: HealthPolicy::default(),
+    };
     // All traffic flows through the multi-model Router: each backend is a
     // registered per-model worker, clients dispatch tagged requests, and
-    // the router's per-model queue-depth/occupancy metrics are reported at
-    // the end (the autoscaling signals).
-    let mut router = Router::new();
+    // the router's per-model queue-depth/occupancy/robustness metrics are
+    // reported at the end (the autoscaling signals).
+    let mut router = Router::with_config(router_cfg);
     match args.get_or("engine", default_engine).as_str() {
-        "rust" => register_rust_models(args, &mut router)?,
+        "rust" => register_rust_models(args, &mut router, &clock)?,
         "xla" => {
             let dir = args.get_or("artifacts", "artifacts");
             let artifact = args.get_or("artifact", "dof_mlp_elliptic");
@@ -495,24 +531,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // dispatch; widths may differ per model).
             let rc = model_clients[c % model_clients.len()].clone();
             let per_client = requests / clients.max(1);
-            std::thread::spawn(move || -> Result<usize> {
+            let clock = clock.clone();
+            std::thread::spawn(move || -> Result<(usize, usize)> {
                 let mut rng = Xoshiro256::new(100 + c as u64);
                 let width = rc.width();
-                let mut done = 0;
+                let (mut done, mut failed) = (0, 0);
                 for _ in 0..per_client {
                     let pts: Vec<f32> =
                         (0..rows * width).map(|_| rng.normal() as f32).collect();
-                    let resp = rc.eval_blocking(pts)?;
-                    anyhow::ensure!(resp.phi.len() == rows, "short response");
-                    done += 1;
+                    // With shedding/deadline knobs on, per-request failures
+                    // are expected operation, not demo failure: count them,
+                    // the router snapshot classifies them exactly.
+                    match rc.eval_blocking(pts) {
+                        Ok(resp) => {
+                            anyhow::ensure!(resp.phi.len() == rows, "short response");
+                            done += 1;
+                        }
+                        Err(_) => failed += 1,
+                    }
+                    // The traffic driver owns logical time: one tick per
+                    // finished request.
+                    clock.advance(1);
                 }
-                Ok(done)
+                Ok((done, failed))
             })
         })
         .collect();
-    let mut total = 0;
+    let (mut total, mut total_failed) = (0, 0);
     for t in threads {
-        total += t.join().map_err(|_| anyhow!("client panicked"))??;
+        let (done, failed) = t.join().map_err(|_| anyhow!("client panicked"))??;
+        total += done;
+        total_failed += failed;
     }
     let wall = t0.elapsed().as_secs_f64();
     let mut total_rows = 0u64;
@@ -538,11 +587,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 m.model, snap.shards, snap.sharded_batches, snap.parallel_occupancy
             );
         }
+        // The fault-tier counters (exact, final-error classified): what was
+        // shed at admission, expired on the tick clock, failed in an
+        // engine, retried to another replica, or quarantined.
+        println!(
+            "[{}] robustness: shed {} | deadline-expired {} | engine-faults {} | \
+             retries {} | quarantine events {} | replicas {}",
+            m.model,
+            m.shed,
+            m.deadline_expired,
+            m.engine_faults,
+            m.retries,
+            m.quarantine_events,
+            m.replicas.len()
+        );
+        for r in &m.replicas {
+            if m.replicas.len() > 1 {
+                println!(
+                    "[{}]   replica {}: {} | attempts {} (ok {}, failed {})",
+                    m.model, r.index, r.state, r.attempts, r.completed, r.failed
+                );
+            }
+        }
     }
     println!(
-        "served {total} requests ({total_rows} rows) in {} | {:.0} rows/s across models",
+        "served {total} requests ({total_rows} rows) in {} | {:.0} rows/s across models \
+         | {total_failed} failed (classified above) | final tick {}",
         fmt_duration(wall),
-        total_rows as f64 / wall
+        total_rows as f64 / wall,
+        clock.now()
     );
     let pstats = parallel::pool::stats();
     println!(
@@ -561,11 +634,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// instead of the second-order DOF elliptic; `--multi` registers the DOF,
 /// Hessian-baseline, and jet models together so the router carries mixed
 /// traffic.
-fn register_rust_models(args: &Args, router: &mut Router) -> Result<()> {
+fn register_rust_models(args: &Args, router: &mut Router, clock: &TickClock) -> Result<()> {
     let order = args.usize_or("order", 2);
     let multi = args.flag("multi");
     let n = args.usize_or("n", if order == 4 { 8 } else { 64 });
     let seed = args.u64_or("seed", 0);
+    // Robustness knobs shared by every replica: a bounded admission queue
+    // and the router's tick clock (deadline checks at the replica front
+    // door use the same logical time as the router).
+    let queue_cap = args.usize_or("queue-cap", 0);
+    let replicas = args.usize_or("replicas", 1).max(1);
+    let serve_cfg = |label: &str| ServeConfig {
+        queue_cap,
+        clock: clock.clone(),
+        label: label.to_string(),
+        injector: None,
+    };
     let mlp = |in_dim: usize| {
         Mlp::init(
             MlpSpec {
@@ -608,30 +692,41 @@ fn register_rust_models(args: &Args, router: &mut Router) -> Result<()> {
             program.slab_per_row(),
             program.cost(1).muls
         );
-        router.register(
-            "dof",
-            ModelServer::spawn_dof(
+        let spawn = |graph: Graph| {
+            ModelServer::spawn_dof_cfg(
                 graph,
                 op.dof_engine(),
                 policy,
                 pool,
                 parallel::DEFAULT_SHARD_ROWS,
-            ),
-        );
+                serve_cfg("dof"),
+            )
+        };
+        router.register("dof", spawn(graph.clone()));
+        for _ in 1..replicas {
+            // Extra replicas are independent failover targets behind the
+            // same model name; the compile-once caches make each spawn a
+            // cache hit, not a recompile.
+            router.add_replica("dof", spawn(graph.clone()))?;
+        }
         if multi {
             // The Table-1 baseline behind the same front door: mixed
             // DOF/Hessian traffic exercises the serving-scale comparison.
             let graph = mlp(n).to_graph();
-            router.register(
-                "hessian",
-                ModelServer::spawn_hessian(
+            let spawn = |graph: Graph| {
+                ModelServer::spawn_hessian_cfg(
                     graph,
                     op.hessian_engine(),
                     policy,
                     pool,
                     parallel::DEFAULT_SHARD_ROWS,
-                ),
-            );
+                    serve_cfg("hessian"),
+                )
+            };
+            router.register("hessian", spawn(graph.clone()));
+            for _ in 1..replicas {
+                router.add_replica("hessian", spawn(graph.clone()))?;
+            }
             println!("[hessian] rust Hessian baseline (N={n}, batch {batch})");
         }
     }
@@ -657,16 +752,20 @@ fn register_rust_models(args: &Args, router: &mut Router) -> Result<()> {
             program.slab_per_row(),
             program.cost(1).muls
         );
-        router.register(
-            "jet",
-            ModelServer::spawn_jet(
+        let spawn = |graph: Graph| {
+            ModelServer::spawn_jet_cfg(
                 graph,
                 op.jet_engine(),
                 policy,
                 pool,
                 parallel::DEFAULT_SHARD_ROWS,
-            ),
-        );
+                serve_cfg("jet"),
+            )
+        };
+        router.register("jet", spawn(graph.clone()));
+        for _ in 1..replicas {
+            router.add_replica("jet", spawn(graph.clone()))?;
+        }
     }
     Ok(())
 }

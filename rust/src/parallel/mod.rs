@@ -175,10 +175,27 @@ impl Pool {
         R: Send,
         F: Fn(usize, Range<usize>) -> R + Sync,
     {
+        self.run_sharded_labeled("region", ranges, f)
+    }
+
+    /// [`Self::run_sharded`] with a diagnostic region label: a shard panic
+    /// re-raised at the region boundary carries
+    /// `pool region {label:?} shard {i} (rows {s}..{e}) panicked: {msg}`,
+    /// so fault reports at the serving boundary name the failing shard
+    /// instead of a bare "worker panicked". The label never affects shard
+    /// decomposition or reduction order (determinism contract unchanged).
+    pub fn run_sharded_labeled<R, F>(&self, label: &str, ranges: Vec<Range<usize>>, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, Range<usize>) -> R + Sync,
+    {
         let n = ranges.len();
         if self.threads == 1 || n <= 1 || in_worker() {
             // A 1-thread pool means serial all the way down (no nested GEMM
             // parallelism); a single shard on a wider pool may still use it.
+            // Inline shards run unguarded by catch_unwind — the caller IS
+            // the worker, so the panic already unwinds with full context on
+            // the submitting thread.
             let _guard = (self.threads == 1).then(WorkerGuard::enter);
             return ranges
                 .into_iter()
@@ -186,7 +203,7 @@ impl Pool {
                 .map(|(i, r)| f(i, r))
                 .collect();
         }
-        pool::run_region(self.threads, ranges, f)
+        pool::run_region(self.threads, label, ranges, f)
     }
 
     /// The PR 1 region-scoped implementation of [`Self::run_sharded`]:

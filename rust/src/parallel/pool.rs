@@ -253,7 +253,20 @@ impl<R> Slot<R> {
 /// and at most `pool_threads − 1` warm helpers join. Results are returned
 /// in shard order. Called by [`crate::parallel::Pool::run_sharded`] after
 /// its inline fast paths (`threads == 1`, single shard, nested region).
-pub(crate) fn run_region<R, F>(pool_threads: usize, ranges: Vec<Range<usize>>, f: F) -> Vec<R>
+///
+/// A shard panic is **contained** here (the team survives; helper threads
+/// return to the condvar) and re-raised on the caller with its context
+/// preserved: the region `label`, the shard index, its row range, and the
+/// original payload message. The serving tier's `catch_unwind` boundary
+/// turns that message into an actionable `EngineFault` report. When
+/// several shards panic in one region, the lowest shard index is reported
+/// (deterministic regardless of which worker observed its panic first).
+pub(crate) fn run_region<R, F>(
+    pool_threads: usize,
+    label: &str,
+    ranges: Vec<Range<usize>>,
+    f: F,
+) -> Vec<R>
 where
     R: Send,
     F: Fn(usize, Range<usize>) -> R + Sync,
@@ -263,7 +276,7 @@ where
     shared.regions.fetch_add(1, Ordering::Relaxed);
 
     let next = AtomicUsize::new(0);
-    let panicked = AtomicBool::new(false);
+    let panicked: Mutex<Option<(usize, String)>> = Mutex::new(None);
     let slots: Vec<Slot<R>> = (0..n).map(|_| Slot::new()).collect();
     let run_one = || -> bool {
         let i = next.fetch_add(1, Ordering::Relaxed);
@@ -275,7 +288,15 @@ where
             // SAFETY: `i` came from the claim counter, so this worker is
             // the slot's unique writer.
             Ok(r) => unsafe { slots[i].put(r) },
-            Err(_) => panicked.store(true, Ordering::Release),
+            Err(payload) => {
+                let msg = crate::util::panic_message(payload);
+                let mut first = panicked
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+                if first.as_ref().map_or(true, |(j, _)| i < *j) {
+                    *first = Some((i, msg));
+                }
+            }
         }
         true
     };
@@ -328,8 +349,16 @@ where
         }
     }
 
-    if panicked.load(Ordering::Acquire) {
-        panic!("pool worker panicked");
+    let first_panic = panicked
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+        .take();
+    if let Some((i, msg)) = first_panic {
+        let r = &ranges[i];
+        panic!(
+            "pool region {label:?} shard {i} (rows {}..{}) panicked: {msg}",
+            r.start, r.end
+        );
     }
     slots
         .into_iter()
@@ -413,7 +442,7 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "pool worker panicked")]
+    #[should_panic(expected = "shard 3 (rows 12..16) panicked: shard exploded")]
     fn shard_panic_propagates() {
         let ranges = split_rows(40, 4);
         let _ = Pool::new(4).run_sharded(ranges, |i, _| {
@@ -422,5 +451,46 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn labeled_region_panic_reports_context() {
+        // The serving tier catches this payload and turns it into an
+        // `EngineFault` — label + shard + row range must survive the trip.
+        let ranges = split_rows(24, 8);
+        let caught = std::panic::catch_unwind(|| {
+            Pool::new(4).run_sharded_labeled("serve-batch", ranges, |i, _| {
+                if i == 2 {
+                    panic!("tanh overflow at row 17");
+                }
+                i
+            })
+        })
+        .expect_err("region must re-raise the shard panic");
+        let msg = crate::util::panic_message(caught);
+        assert!(
+            msg.contains("pool region \"serve-batch\" shard 2 (rows 16..24)"),
+            "missing context: {msg}"
+        );
+        assert!(msg.contains("tanh overflow at row 17"), "missing payload: {msg}");
+    }
+
+    #[test]
+    fn lowest_panicking_shard_wins() {
+        // Two shards panic; the report must deterministically name the
+        // lower index no matter which worker's panic landed first.
+        for _ in 0..8 {
+            let caught = std::panic::catch_unwind(|| {
+                Pool::new(4).run_sharded(split_rows(64, 4), |i, _| {
+                    if i == 5 || i == 11 {
+                        panic!("boom {i}");
+                    }
+                    i
+                })
+            })
+            .expect_err("region must re-raise");
+            let msg = crate::util::panic_message(caught);
+            assert!(msg.contains("shard 5"), "expected shard 5, got: {msg}");
+        }
     }
 }

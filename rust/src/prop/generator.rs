@@ -229,6 +229,37 @@ pub fn random_operator_case(g: &mut Gen) -> OperatorCase {
     }
 }
 
+/// A differential-testing case whose batch carries non-finite values
+/// (NaN/±Inf) at seeded positions — the poisoned-input family for the
+/// serving front door and engine validation gates. Every engine must
+/// reject the batch with the **identical** message (they all delegate to
+/// [`crate::tensor::ops::validate_batch_input`]) *before* any propagation
+/// runs; `rust/tests/cross_engine_fuzz.rs` asserts exactly that.
+pub struct PoisonedCase {
+    pub case: OperatorCase,
+    /// Poisoned positions `(row, col, value)` in draw order (later draws
+    /// may overwrite earlier ones at the same position; `case.x` is the
+    /// ground truth).
+    pub poison: Vec<(usize, usize, f64)>,
+}
+
+/// Draw a well-formed case, then poison 1–3 seeded positions of its batch
+/// with NaN / +Inf / −Inf.
+pub fn poisoned_operator_case(g: &mut Gen) -> PoisonedCase {
+    let mut case = random_operator_case(g);
+    let (batch, n) = (case.batch(), case.n());
+    let k = g.usize_in(1, 3.min(batch * n));
+    let mut poison = Vec::with_capacity(k);
+    for _ in 0..k {
+        let r = g.usize_in(0, batch - 1);
+        let c = g.usize_in(0, n - 1);
+        let v = g.choice(&[f64::NAN, f64::INFINITY, f64::NEG_INFINITY]);
+        case.x.set(r, c, v);
+        poison.push((r, c, v));
+    }
+    PoisonedCase { case, poison }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,5 +293,33 @@ mod tests {
         assert_eq!(c1.family, c2.family);
         assert_eq!(c1.a, c2.a);
         assert_eq!(c1.x, c2.x);
+    }
+
+    #[test]
+    fn poisoned_cases_are_rejected_by_the_shared_gate() {
+        run_prop("poisoned generator", 40, 4242, |g| {
+            let p = poisoned_operator_case(g);
+            if p.poison.is_empty() {
+                return Err("must poison at least one position".into());
+            }
+            if crate::tensor::ops::first_non_finite(p.case.x.data()).is_none() {
+                return Err("x must carry a non-finite value".into());
+            }
+            match crate::tensor::ops::validate_batch_input(p.case.n(), &p.case.x) {
+                Err(msg) if msg.contains("non-finite input at row") => Ok(()),
+                Err(msg) => Err(format!("unexpected rejection message: {msg}")),
+                Ok(()) => Err("validation must reject poisoned input".into()),
+            }
+        });
+        // Determinism: same seed, same poison schedule.
+        let mut g1 = crate::prop::Gen::new(31337);
+        let mut g2 = crate::prop::Gen::new(31337);
+        let p1 = poisoned_operator_case(&mut g1);
+        let p2 = poisoned_operator_case(&mut g2);
+        assert_eq!(p1.poison.len(), p2.poison.len());
+        for (a, b) in p1.poison.iter().zip(&p2.poison) {
+            assert_eq!((a.0, a.1), (b.0, b.1));
+            assert!(a.2 == b.2 || (a.2.is_nan() && b.2.is_nan()));
+        }
     }
 }

@@ -103,8 +103,54 @@ impl Tensor {
 
     /// True when all elements are finite.
     pub fn all_finite(&self) -> bool {
-        self.data().iter().all(|x| x.is_finite())
+        is_finite(self.data())
     }
+}
+
+/// True when every element of `data` is finite (no NaN / ±Inf).
+pub fn is_finite(data: &[f64]) -> bool {
+    first_non_finite(data).is_none()
+}
+
+/// Flat index of the first non-finite element, if any.
+pub fn first_non_finite(data: &[f64]) -> Option<usize> {
+    data.iter().position(|x| !x.is_finite())
+}
+
+/// f32 twin of [`first_non_finite`] for the serving front door, which
+/// validates request points *before* the f32→f64 cast (the cast preserves
+/// finiteness exactly, so the two checks agree).
+pub fn first_non_finite_f32(data: &[f32]) -> Option<usize> {
+    data.iter().position(|x| !x.is_finite())
+}
+
+/// Validate a `[batch, n]` evaluation input against a model input
+/// dimension: 2-D shape, matching width, and all-finite values.
+///
+/// This is the **shared rejection gate** every engine's `validate_input`
+/// delegates to, so the error text for a given bad input is identical
+/// across DOF / Hessian / jet engines (asserted by the poisoned-input
+/// family in `rust/tests/cross_engine_fuzz.rs`) — a router retrying a
+/// rejected request on another engine learns nothing new.
+pub fn validate_batch_input(expect_width: usize, x: &Tensor) -> Result<(), String> {
+    let dims = x.dims();
+    if dims.len() != 2 {
+        return Err(format!("input must be [batch, n], got {dims:?}"));
+    }
+    if dims[1] != expect_width {
+        return Err(format!(
+            "input width {} does not match model input dimension {expect_width}",
+            dims[1]
+        ));
+    }
+    if let Some(i) = first_non_finite(x.data()) {
+        let (r, c) = (i / expect_width.max(1), i % expect_width.max(1));
+        return Err(format!(
+            "non-finite input at row {r}, column {c}: {}",
+            x.data()[i]
+        ));
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -156,5 +202,27 @@ mod tests {
         let a = Tensor::vector(&[1.0]);
         let b = Tensor::vector(&[1.0, 2.0]);
         let _ = a.add(&b);
+    }
+
+    #[test]
+    fn non_finite_position_reported() {
+        assert_eq!(first_non_finite(&[1.0, 2.0]), None);
+        assert_eq!(first_non_finite(&[1.0, f64::NAN, f64::INFINITY]), Some(1));
+        assert_eq!(first_non_finite_f32(&[0.5, f32::NEG_INFINITY]), Some(1));
+        assert!(is_finite(&[0.0, -1.0]));
+    }
+
+    #[test]
+    fn batch_input_validation_messages() {
+        let ok = Tensor::from_vec(&[2, 3], vec![0.0; 6]);
+        assert!(validate_batch_input(3, &ok).is_ok());
+        let e = validate_batch_input(4, &ok).unwrap_err();
+        assert!(e.contains("width 3"), "{e}");
+        let flat = Tensor::vector(&[1.0, 2.0]);
+        assert!(validate_batch_input(2, &flat).unwrap_err().contains("[batch, n]"));
+        let mut bad = Tensor::from_vec(&[2, 3], vec![0.0; 6]);
+        bad.data_mut()[4] = f64::NAN;
+        let e = validate_batch_input(3, &bad).unwrap_err();
+        assert!(e.contains("row 1, column 1"), "{e}");
     }
 }

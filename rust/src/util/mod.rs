@@ -13,3 +13,19 @@ pub use csv::CsvTable;
 pub use keyed_cache::{CacheStats, KeyedCache};
 pub use prng::{SplitMix64, Xoshiro256};
 pub use stats::{fmt_bytes, fmt_duration, LatencyHistogram, Summary};
+
+/// Extract a human-readable message from a `catch_unwind` payload.
+///
+/// Panic payloads are `Box<dyn Any>`; in practice they are a `String`
+/// (from `panic!("…{x}")`) or a `&'static str` (from `panic!("literal")`).
+/// Anything else is reported as opaque rather than dropped — fault reports
+/// at the serving boundary must never lose the cause entirely.
+pub fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    match payload.downcast::<String>() {
+        Ok(s) => *s,
+        Err(payload) => match payload.downcast::<&'static str>() {
+            Ok(s) => (*s).to_string(),
+            Err(_) => "opaque panic payload".to_string(),
+        },
+    }
+}

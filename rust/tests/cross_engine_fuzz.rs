@@ -333,6 +333,53 @@ fn accounting_analytic_equals_measured_fuzz() {
     });
 }
 
+/// Poisoned-input family: every engine must reject a batch carrying
+/// NaN/±Inf at seeded positions with the **identical** structured message
+/// (they all delegate to the shared `tensor::ops::validate_batch_input`
+/// gate) — and the rejection must happen *before* any propagation runs, so
+/// a poisoned request can never warm a cache or emit a partial result.
+#[test]
+fn poisoned_inputs_rejected_identically_by_every_engine() {
+    use dof::prop::generator::poisoned_operator_case;
+    run_prop("poisoned-input rejection", 60, 0xBAD1, |g| {
+        let p = poisoned_operator_case(g);
+        let case = &p.case;
+        let expected = match dof::tensor::ops::validate_batch_input(case.n(), &case.x) {
+            Err(msg) => msg,
+            Ok(()) => return Err("shared gate must reject poisoned input".into()),
+        };
+        if !expected.contains("non-finite input at row") {
+            return Err(format!("unexpected gate message: {expected}"));
+        }
+        let engines: [(&str, Result<(), String>); 3] = [
+            ("dof", dof_engine(case).validate_input(&case.graph, &case.x)),
+            ("hessian", hessian_engine(case).validate_input(&case.graph, &case.x)),
+            ("jet", jet_engine(case).validate_input(&case.graph, &case.x)),
+        ];
+        for (name, res) in engines {
+            match res {
+                Err(msg) if msg == expected => {}
+                Err(msg) => {
+                    return Err(format!(
+                        "{name} rejection differs: {msg:?} vs expected {expected:?}"
+                    ));
+                }
+                Ok(()) => return Err(format!("{name} engine accepted poisoned input")),
+            }
+        }
+        // Width mismatches are rejected identically too (engine-entry
+        // validation, not just finiteness).
+        let wrong = Tensor::zeros(&[2, case.n() + 1]);
+        let e1 = dof_engine(case).validate_input(&case.graph, &wrong);
+        let e2 = hessian_engine(case).validate_input(&case.graph, &wrong);
+        let e3 = jet_engine(case).validate_input(&case.graph, &wrong);
+        if e1.is_ok() || e1 != e2 || e2 != e3 {
+            return Err(format!("width rejection differs: {e1:?} / {e2:?} / {e3:?}"));
+        }
+        Ok(())
+    });
+}
+
 /// Determinism under sharding on random graphs: values, `L[φ]`, FLOPs, and
 /// per-shard peaks are bit-identical across 1/2/4/8 threads on both the
 /// DOF and the program-scheduled Hessian paths.

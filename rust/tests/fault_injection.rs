@@ -1,0 +1,598 @@
+//! Deterministic fault-injection battery for the serving tier.
+//!
+//! Every test drives the stack through the seeded [`FaultInjector`]
+//! (panics, NaN outputs, logical-latency, queue occupancy) and asserts
+//! three things the fault tier promises:
+//!
+//! 1. **No crash, no deadlock** — injected faults fail *requests*, never
+//!    workers; the storm test runs whole seeded schedules (serial and
+//!    concurrent) under a watchdog.
+//! 2. **Bitwise-identical successes** — a response that reports success is
+//!    byte-for-byte what a fault-free run produces; fault handling may
+//!    remove answers, never corrupt them.
+//! 3. **Exact counters** — shed/deadline/engine-fault/retry accounting is
+//!    asserted with `assert_eq!`, not `>=`: the injector schedule is a
+//!    pure function of `(seed, config, k)`, so the expected counts are
+//!    computed by replaying [`FaultInjector::plan_for`].
+//!
+//! Control-plane decisions (deadlines, quarantine windows) run on the
+//! logical [`TickClock`] only; wall clock appears here solely as a harness
+//! watchdog and in batcher `max_wait` (data plane — batch composition
+//! cannot change per-row results).
+//!
+//! `DOF_FAULT_SEEDS=<n>` widens the storm's seed sweep (CI's weekly
+//! fuzz-extended job raises it).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use dof::coordinator::{
+    BatchFn, BatchPolicy, FaultConfig, FaultInjector, HealthPolicy, HealthState, ModelServer,
+    Router, RouterConfig, ServeConfig, ServeError, TickClock,
+};
+use dof::parallel::Pool;
+
+fn policy(capacity: usize) -> BatchPolicy {
+    BatchPolicy {
+        capacity,
+        max_wait: Duration::from_millis(1),
+    }
+}
+
+/// Deterministic mock backend: phi = row sum, lphi = 2·row sum. The
+/// fault-free expectation for any request is computable in the test, which
+/// is what makes "bitwise-identical success" assertable.
+fn sum_compute() -> BatchFn {
+    Box::new(|data: &[f32], width: usize| {
+        let rows = data.len() / width;
+        let mut phi = Vec::with_capacity(rows);
+        let mut lphi = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let s: f32 = data[r * width..(r + 1) * width].iter().sum();
+            phi.push(s);
+            lphi.push(2.0 * s);
+        }
+        Ok((phi, lphi))
+    })
+}
+
+fn expected(points: &[f32], width: usize) -> (Vec<f32>, Vec<f32>) {
+    let rows = points.len() / width;
+    let phi: Vec<f32> = (0..rows)
+        .map(|r| points[r * width..(r + 1) * width].iter().sum())
+        .collect();
+    let lphi: Vec<f32> = phi.iter().map(|s| 2.0 * s).collect();
+    (phi, lphi)
+}
+
+/// Abort the process if a test wedges: a deadlocked router must fail CI,
+/// not hang it. (Wall clock as a harness guard only.)
+struct Watchdog {
+    done: Arc<AtomicBool>,
+}
+
+impl Watchdog {
+    fn arm(secs: u64, what: &'static str) -> Self {
+        let done = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let deadline = std::time::Instant::now() + Duration::from_secs(secs);
+            while std::time::Instant::now() < deadline {
+                if flag.load(Ordering::Acquire) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            eprintln!("watchdog: {what} did not finish in {secs}s — likely deadlock");
+            std::process::exit(2);
+        });
+        Self { done }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.done.store(true, Ordering::Release);
+    }
+}
+
+/// Serial traffic with capacity > rows and a tiny `max_wait` means one
+/// request = one cut batch, so the k-th request consumes the injector's
+/// k-th plan: the whole outcome sequence replays from the seed.
+#[test]
+fn injected_panics_are_contained_and_replay_exactly() {
+    let _wd = Watchdog::arm(120, "panic containment test");
+    let cfg = FaultConfig {
+        panic_percent: 40,
+        ..FaultConfig::default()
+    };
+    let seed = 0xC0FFEE;
+    let injector = FaultInjector::new(seed, cfg);
+    let server = ModelServer::spawn_cfg(
+        2,
+        policy(8),
+        ServeConfig {
+            injector: Some(Arc::clone(&injector)),
+            ..ServeConfig::labeled("panicky")
+        },
+        sum_compute(),
+    );
+    let h = server.handle();
+    let n_requests = 32u64;
+    let mut panics_seen = 0u64;
+    for k in 0..n_requests {
+        let points = vec![k as f32, 0.5 * k as f32];
+        let plan = FaultInjector::plan_for(seed, &cfg, k);
+        match h.eval_blocking(points.clone()) {
+            Ok(resp) => {
+                assert!(!plan.panic, "batch {k}: schedule says panic, got success");
+                let (phi, lphi) = expected(&points, 2);
+                assert_eq!(resp.phi, phi, "batch {k}: phi not bitwise");
+                assert_eq!(resp.lphi, lphi, "batch {k}: lphi not bitwise");
+            }
+            Err(e) => {
+                assert!(plan.panic, "batch {k}: schedule says clean, got {e}");
+                match &e {
+                    ServeError::EngineFault { model, payload, .. } => {
+                        assert_eq!(model, "panicky");
+                        assert!(payload.contains("injected panic"), "{payload}");
+                    }
+                    other => panic!("batch {k}: expected EngineFault, got {other}"),
+                }
+                panics_seen += 1;
+            }
+        }
+    }
+    // Exact accounting: schedule, injector, and metrics all agree.
+    let scheduled_panics = (0..n_requests)
+        .filter(|&k| FaultInjector::plan_for(seed, &cfg, k).panic)
+        .count() as u64;
+    assert!(scheduled_panics >= 3, "seed too tame: {scheduled_panics}");
+    assert!(
+        scheduled_panics < n_requests,
+        "seed too harsh: every batch panics"
+    );
+    assert_eq!(panics_seen, scheduled_panics);
+    let isnap = injector.snapshot();
+    assert_eq!(isnap.batches, n_requests);
+    assert_eq!(isnap.injected_panics, scheduled_panics);
+    let m = h.metrics.snapshot();
+    assert_eq!(m.accepted, n_requests);
+    assert_eq!(m.engine_faults, scheduled_panics);
+    assert_eq!(m.requests, n_requests - scheduled_panics);
+    assert_eq!((m.shed, m.invalid, m.deadline_expired), (0, 0, 0));
+    server.shutdown();
+}
+
+/// A NaN produced inside the engine must be withheld at the boundary —
+/// the client sees a structured EngineFault, never a NaN "success".
+#[test]
+fn injected_nan_outputs_never_reach_a_client() {
+    let _wd = Watchdog::arm(120, "nan withholding test");
+    let cfg = FaultConfig {
+        nan_percent: 100,
+        ..FaultConfig::default()
+    };
+    let injector = FaultInjector::new(7, cfg);
+    let server = ModelServer::spawn_cfg(
+        1,
+        policy(4),
+        ServeConfig {
+            injector: Some(Arc::clone(&injector)),
+            ..ServeConfig::labeled("poisoned")
+        },
+        sum_compute(),
+    );
+    let h = server.handle();
+    for k in 0..8 {
+        let err = h.eval_blocking(vec![k as f32]).unwrap_err();
+        match &err {
+            ServeError::EngineFault { payload, .. } => {
+                assert!(payload.contains("non-finite engine output"), "{payload}");
+            }
+            other => panic!("expected EngineFault, got {other}"),
+        }
+    }
+    let m = h.metrics.snapshot();
+    assert_eq!(m.engine_faults, 8);
+    assert_eq!(m.requests, 0, "no poisoned batch may complete");
+    assert_eq!(injector.snapshot().injected_nans, 8);
+    server.shutdown();
+}
+
+/// Latency injection is *logical*: it advances the shared TickClock by an
+/// exact, replayable number of ticks — and wall time never expires a
+/// deadline on its own.
+#[test]
+fn latency_injection_drives_the_logical_clock_exactly() {
+    let _wd = Watchdog::arm(120, "logical latency test");
+    let cfg = FaultConfig {
+        latency_percent: 100,
+        latency_ticks: 7,
+        ..FaultConfig::default()
+    };
+    let clock = TickClock::new();
+    let injector = FaultInjector::new(3, cfg);
+    let server = ModelServer::spawn_cfg(
+        1,
+        policy(4),
+        ServeConfig {
+            clock: clock.clone(),
+            injector: Some(Arc::clone(&injector)),
+            ..ServeConfig::labeled("slow")
+        },
+        sum_compute(),
+    );
+    let h = server.handle();
+    // Wall time passes; logical time must not.
+    std::thread::sleep(Duration::from_millis(25));
+    assert_eq!(clock.now(), 0);
+    for k in 0..10 {
+        // Generous logical deadline: never expires, every batch lands.
+        let resp = h
+            .eval_with_deadline(vec![k as f32], Some(clock.now() + 1000))
+            .unwrap();
+        assert_eq!(resp.phi, vec![k as f32]);
+    }
+    assert_eq!(clock.now(), 70, "10 batches × 7 injected ticks");
+    assert_eq!(injector.snapshot().injected_latency_ticks, 70);
+    // An already-expired logical deadline fails at dequeue — exactly one
+    // deadline_expired, no batch consumed for it.
+    let batches_before = injector.snapshot().batches;
+    let err = h
+        .eval_with_deadline(vec![1.0], Some(clock.now()))
+        .unwrap_err();
+    assert!(matches!(err, ServeError::DeadlineExceeded { .. }), "{err}");
+    let m = h.metrics.snapshot();
+    assert_eq!(m.deadline_expired, 1);
+    assert_eq!(
+        injector.snapshot().batches,
+        batches_before,
+        "an expired request must not consume a batch slot"
+    );
+    server.shutdown();
+}
+
+/// Scripted replica-failure schedule, exact to the request: a failing
+/// prefix on replica 0 walks it to quarantine while every request fails
+/// over to replica 1; once the logical probe window opens, one live
+/// request probes replica 0 and re-admits it. Every counter is asserted
+/// exactly.
+#[test]
+fn failover_quarantine_and_probe_readmission_schedule_is_exact() {
+    let _wd = Watchdog::arm(120, "failover schedule test");
+    let clock = TickClock::new();
+    let inj_cfg = FaultConfig {
+        panic_first: 2, // batches 0 and 1 on replica 0 panic, then clean
+        ..FaultConfig::default()
+    };
+    let injector = FaultInjector::new(1, inj_cfg);
+    let mut router = Router::with_config(RouterConfig {
+        retries: 1,
+        clock: clock.clone(),
+        health: HealthPolicy {
+            degrade_after: 1,
+            quarantine_after: 2,
+            probe_after_ticks: 4,
+            probe_successes: 1,
+        },
+        ..RouterConfig::default()
+    });
+    router.register(
+        "m",
+        ModelServer::spawn_cfg(
+            1,
+            policy(4),
+            ServeConfig {
+                clock: clock.clone(),
+                injector: Some(Arc::clone(&injector)),
+                ..ServeConfig::labeled("m")
+            },
+            sum_compute(),
+        ),
+    );
+    router
+        .add_replica(
+            "m",
+            ModelServer::spawn_cfg(
+                1,
+                policy(4),
+                ServeConfig {
+                    clock: clock.clone(),
+                    ..ServeConfig::labeled("m")
+                },
+                sum_compute(),
+            ),
+        )
+        .unwrap();
+    let client = router.client("m").unwrap();
+
+    // Request A: replica 0 (batch 0) panics → Degraded; fails over to
+    // replica 1 and succeeds bitwise.
+    let resp = client.eval_blocking(vec![1.0]).unwrap();
+    assert_eq!((resp.phi, resp.lphi), (vec![1.0], vec![2.0]));
+    // Request B: replica 0 (batch 1) panics → Quarantined; fails over.
+    let resp = client.eval_blocking(vec![2.0]).unwrap();
+    assert_eq!(resp.lphi, vec![4.0]);
+    let snap = router.snapshot();
+    assert_eq!(snap[0].replicas[0].state, HealthState::Quarantined);
+    assert_eq!(snap[0].quarantine_events, 1);
+    // Request C: replica 0 gated (window 4 ticks, clock still 0) — served
+    // by replica 1 with no retry burned.
+    let resp = client.eval_blocking(vec![3.0]).unwrap();
+    assert_eq!(resp.lphi, vec![6.0]);
+    assert_eq!(router.snapshot()[0].retries, 2, "C must not retry");
+
+    // Probe window opens on the logical clock; replica 0's injector prefix
+    // is exhausted (batch 2 is clean), so the probe succeeds → Healthy.
+    clock.advance(4);
+    let resp = client.eval_blocking(vec![4.0]).unwrap();
+    assert_eq!(resp.lphi, vec![8.0]);
+
+    let snap = router.snapshot();
+    let m = &snap[0];
+    assert_eq!((m.dispatched, m.completed, m.failed), (4, 4, 0));
+    assert_eq!(m.retries, 2);
+    assert_eq!(m.engine_faults, 2);
+    assert_eq!(m.quarantine_events, 1);
+    assert_eq!(m.replicas[0].state, HealthState::Healthy);
+    assert_eq!(
+        (m.replicas[0].attempts, m.replicas[0].completed, m.replicas[0].failed),
+        (3, 1, 2)
+    );
+    assert_eq!(
+        (m.replicas[1].attempts, m.replicas[1].completed, m.replicas[1].failed),
+        (3, 3, 0)
+    );
+    let isnap = injector.snapshot();
+    assert_eq!(isnap.batches, 3);
+    assert_eq!(isnap.injected_panics, 2);
+    router.shutdown();
+}
+
+/// A shard panic inside a pooled batch carries its pool region label,
+/// shard index, and row range all the way into the client's EngineFault.
+#[test]
+fn shard_panic_context_reaches_the_client() {
+    let _wd = Watchdog::arm(120, "shard context test");
+    let inner = |data: &[f32], width: usize| -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let rows = data.len() / width;
+        for r in 0..rows {
+            if data[r * width] >= 100.0 {
+                panic!("engine exploded on oversized value");
+            }
+        }
+        Ok((vec![0.0; rows], vec![0.0; rows]))
+    };
+    let server = ModelServer::spawn_sharded_cfg(
+        1,
+        policy(8),
+        Pool::new(2),
+        2,
+        ServeConfig::labeled("serve-m"),
+        inner,
+    );
+    let h = server.handle();
+    // 8 rows, shard_rows 2 → shards (0..2)(2..4)(4..6)(6..8); row 4 blows
+    // up shard 2.
+    let mut points = vec![0.0f32; 8];
+    points[4] = 100.0;
+    let err = h.eval_blocking(points).unwrap_err();
+    match &err {
+        ServeError::EngineFault {
+            model,
+            shard,
+            payload,
+        } => {
+            assert_eq!(model, "serve-m");
+            assert_eq!(*shard, Some(2), "payload: {payload}");
+            assert!(
+                payload.contains("pool region \"serve-m\" shard 2 (rows 4..6)"),
+                "{payload}"
+            );
+            assert!(payload.contains("engine exploded on oversized value"), "{payload}");
+        }
+        other => panic!("expected EngineFault, got {other}"),
+    }
+    // The worker survived; clean rows still serve.
+    let resp = h.eval_blocking(vec![1.0, 2.0]).unwrap();
+    assert_eq!(resp.phi, vec![0.0, 0.0]);
+    server.shutdown();
+}
+
+/// Real-engine variant: a DOF server under an injected panic schedule
+/// against a fault-free twin. Successful responses must be bitwise equal —
+/// the fault path may only remove answers, never change surviving ones.
+#[test]
+fn dof_engine_under_faults_matches_fault_free_twin_bitwise() {
+    let _wd = Watchdog::arm(300, "dof fault twin test");
+    use dof::graph::{builder::random_layers, mlp_graph, Act};
+    use dof::operators::{CoeffSpec, Operator};
+    use dof::util::Xoshiro256;
+    let mut rng = Xoshiro256::new(512);
+    let n = 3;
+    let graph = mlp_graph(&random_layers(&[n, 8, 1], &mut rng), Act::Tanh);
+    let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed: 4 });
+    let cfg = FaultConfig {
+        panic_percent: 30,
+        ..FaultConfig::default()
+    };
+    let seed = 0xD0F;
+    let injector = FaultInjector::new(seed, cfg);
+    let faulty = ModelServer::spawn_dof_cfg(
+        graph.clone(),
+        op.dof_engine(),
+        policy(8),
+        Pool::new(2),
+        2,
+        ServeConfig {
+            injector: Some(Arc::clone(&injector)),
+            ..ServeConfig::labeled("dof")
+        },
+    );
+    let clean = ModelServer::spawn_dof(graph, op.dof_engine(), policy(8), Pool::new(2), 2);
+    let hf = faulty.handle();
+    let hc = clean.handle();
+    let mut successes = 0u64;
+    for k in 0..20u64 {
+        let points: Vec<f32> = (0..2 * n).map(|i| 0.05 * (k * 7 + i as u64) as f32).collect();
+        let baseline = hc.eval_blocking(points.clone()).unwrap();
+        let plan = FaultInjector::plan_for(seed, &cfg, k);
+        match hf.eval_blocking(points) {
+            Ok(resp) => {
+                assert!(!plan.panic, "batch {k}: schedule says panic");
+                assert_eq!(resp.phi, baseline.phi, "batch {k}: phi diverged");
+                assert_eq!(resp.lphi, baseline.lphi, "batch {k}: lphi diverged");
+                successes += 1;
+            }
+            Err(e) => {
+                assert!(plan.panic, "batch {k}: unscheduled failure {e}");
+            }
+        }
+    }
+    assert_eq!(
+        successes,
+        (0..20).filter(|&k| !FaultInjector::plan_for(seed, &cfg, k).panic).count() as u64
+    );
+    assert!(successes >= 3, "seed too harsh for a meaningful test");
+    faulty.shutdown();
+    clean.shutdown();
+}
+
+/// The storm: full fault mix (panics, NaN, logical latency, queue
+/// occupancy) on both replicas, serial then concurrent traffic, multiple
+/// seeds. The router must neither crash nor deadlock, every success must
+/// be bitwise-exact, and the accounting identities must hold exactly.
+#[test]
+fn seeded_fault_storm_never_deadlocks_and_accounts_exactly() {
+    let _wd = Watchdog::arm(300, "fault storm");
+    let n_seeds: u64 = std::env::var("DOF_FAULT_SEEDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    for s in 0..n_seeds {
+        let seed = 0x57AB + s * 7919;
+        run_storm(seed);
+    }
+}
+
+fn run_storm(seed: u64) {
+    let width = 2usize;
+    let clock = TickClock::new();
+    let inj_cfg = FaultConfig {
+        panic_percent: 25,
+        nan_percent: 20,
+        latency_percent: 30,
+        latency_ticks: 3,
+        occupy_percent: 25,
+        occupy_slots: 2,
+        ..FaultConfig::default()
+    };
+    let mut router = Router::with_config(RouterConfig {
+        retries: 2,
+        clock: clock.clone(),
+        ..RouterConfig::default()
+    });
+    let mk_server = |inj_seed: u64| {
+        ModelServer::spawn_cfg(
+            width,
+            policy(8),
+            ServeConfig {
+                queue_cap: 16,
+                clock: clock.clone(),
+                injector: Some(FaultInjector::new(inj_seed, inj_cfg)),
+                ..ServeConfig::labeled("storm")
+            },
+            sum_compute(),
+        )
+    };
+    router.register("storm", mk_server(seed));
+    router.add_replica("storm", mk_server(seed ^ 0xABCD)).unwrap();
+    let client = router.client("storm").unwrap();
+
+    let check = |resp: Result<dof::coordinator::EvalResponse, ServeError>, points: &[f32]| {
+        match resp {
+            Ok(r) => {
+                let (phi, lphi) = expected(points, width);
+                assert_eq!(r.phi, phi, "seed {seed}: success not bitwise");
+                assert_eq!(r.lphi, lphi, "seed {seed}: success not bitwise");
+            }
+            Err(e) => {
+                // Structured failure only — and never InvalidRequest: all
+                // inputs here are well-formed.
+                assert!(
+                    !matches!(e, ServeError::InvalidRequest { .. }),
+                    "seed {seed}: spurious InvalidRequest {e}"
+                );
+            }
+        }
+    };
+
+    // Serial phase.
+    for k in 0..40u64 {
+        let points: Vec<f32> = (0..width).map(|i| (k * 3 + i as u64) as f32 * 0.25).collect();
+        check(client.eval_blocking(points.clone()), &points);
+    }
+    // Concurrent phase: 4 clients × 10 requests.
+    let joins: Vec<_> = (0..4u64)
+        .map(|t| {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                for k in 0..10u64 {
+                    let points: Vec<f32> =
+                        (0..width).map(|i| (t * 100 + k * 3 + i as u64) as f32 * 0.25).collect();
+                    let resp = c.eval_blocking(points.clone());
+                    if let Ok(r) = resp {
+                        let rows = points.len() / width;
+                        let phi: Vec<f32> = (0..rows)
+                            .map(|r| points[r * width..(r + 1) * width].iter().sum())
+                            .collect();
+                        assert_eq!(r.phi, phi, "concurrent success not bitwise");
+                    }
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().expect("storm client panicked");
+    }
+
+    // Exact accounting identities.
+    let snap = router.snapshot();
+    let m = &snap[0];
+    assert_eq!(m.queue_depth, 0, "seed {seed}: requests still in flight");
+    assert_eq!(m.dispatched, 80, "seed {seed}");
+    assert_eq!(
+        m.dispatched,
+        m.completed + m.failed,
+        "seed {seed}: dispatched != completed + failed"
+    );
+    // Every attempt iteration beyond a request's first increments
+    // `retries`, but an iteration where no replica is available (all
+    // quarantined) reaches none — so dispatched + retries bounds attempts
+    // from above, and completions bound it from below.
+    let attempts: u64 = m.replicas.iter().map(|r| r.attempts).sum();
+    assert!(
+        attempts <= m.dispatched + m.retries,
+        "seed {seed}: attempts {attempts} > dispatched {} + retries {}",
+        m.dispatched,
+        m.retries
+    );
+    assert!(attempts >= m.completed, "seed {seed}");
+    let replica_completed: u64 = m.replicas.iter().map(|r| r.completed).sum();
+    assert_eq!(replica_completed, m.completed, "seed {seed}");
+    for r in &m.replicas {
+        // Front-door trichotomy: every attempt is invalid, shed, or
+        // accepted — exactly.
+        assert_eq!(
+            r.server.accepted + r.server.shed + r.server.invalid,
+            r.attempts,
+            "seed {seed} replica {}: front-door counters drift",
+            r.index
+        );
+        assert_eq!(r.server.invalid, 0, "seed {seed}: no invalid inputs sent");
+        assert_eq!(r.inflight, 0, "seed {seed}: admission slots leaked");
+    }
+    router.shutdown();
+}

@@ -10,6 +10,13 @@
 //!   the per-model server snapshots account for every request.
 //! * **Shutdown drains** — requests parked in a worker's batcher when
 //!   shutdown is requested are flushed and answered; no request is lost.
+//! * **Drain under failure** — shutdown still answers everything when a
+//!   replica is quarantined, when parked requests are failover *retries*,
+//!   or when admission control is actively shedding; the
+//!   dispatched/completed/failed/shed/retry counters are asserted exactly.
+//! * **Pool-width independence** — routed results are bitwise identical
+//!   across worker pools of 1/2/4/8 threads (shard boundaries are a
+//!   function of batch size only — the determinism contract).
 //!
 //! `DOF_ROUTER_REQUESTS` scales the per-model traffic (the weekly
 //! `fuzz-extended` CI job runs a soak-sized count).
@@ -17,8 +24,12 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use anyhow::anyhow;
 use dof::autodiff::{DofEngine, HessianEngine};
-use dof::coordinator::{BatchPolicy, ModelServer, Router, RouterClient};
+use dof::coordinator::{
+    BatchFn, BatchPolicy, HealthPolicy, HealthState, ModelServer, Router, RouterClient,
+    RouterConfig, ServeConfig, ServeError,
+};
 use dof::graph::{builder::random_layers, mlp_graph, Act, Graph};
 use dof::jet::JetEngine;
 use dof::operators::{CoeffSpec, HigherOrderOperator, HigherOrderSpec, Operator};
@@ -242,6 +253,286 @@ fn shutdown_drains_queued_requests_without_loss() {
         let (want_phi, want_lphi) = direct.expect(&pts, 2, 3);
         assert_eq!(resp.phi, want_phi, "client {c} phi after drain");
         assert_eq!(resp.lphi, want_lphi, "client {c} L[φ] after drain");
+    }
+}
+
+/// Bounded poll for a router-observable condition; panics (instead of
+/// hanging CI) if it never holds.
+fn wait_for(router: &Router, what: &str, cond: impl Fn(&Router) -> bool) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while !cond(router) {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "condition not reached within 10 s: {what}"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn failing_server(width: usize, label: &str) -> ModelServer {
+    let compute: BatchFn = Box::new(|_, _| Err(anyhow!("replica exploded")));
+    ModelServer::spawn_cfg(width, policy(), ServeConfig::labeled(label), compute)
+}
+
+fn doubling_server(width: usize, batch: BatchPolicy, cfg: ServeConfig) -> ModelServer {
+    let compute: BatchFn = Box::new(|data: &[f32], w: usize| {
+        let rows = data.len() / w;
+        let mut phi = Vec::with_capacity(rows);
+        let mut lphi = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let s: f32 = data[r * w..(r + 1) * w].iter().sum();
+            phi.push(s);
+            lphi.push(2.0 * s);
+        }
+        Ok((phi, lphi))
+    });
+    ModelServer::spawn_cfg(width, batch, cfg, compute)
+}
+
+/// Drain while a replica is quarantined: a failing replica 0 walks to
+/// quarantine, live traffic fails over to replica 1 (a real DOF engine),
+/// and shutdown still answers a request parked in replica 1's batcher —
+/// bitwise-equal to the direct engine call, with exact counters.
+#[test]
+fn shutdown_drains_while_a_replica_is_quarantined() {
+    let mut rng = Xoshiro256::new(0x0DA);
+    let n = 3;
+    let graph = mlp_graph(&random_layers(&[n, 6, 1], &mut rng), Act::Tanh);
+    let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed: 9 });
+    let mut router = Router::with_config(RouterConfig {
+        retries: 1,
+        health: HealthPolicy {
+            degrade_after: 1,
+            quarantine_after: 2,
+            probe_after_ticks: 8,
+            probe_successes: 1,
+        },
+        ..RouterConfig::default()
+    });
+    router.register("dof", failing_server(n, "dof"));
+    // Capacity 2 rows: a 2-row request cuts (and completes) immediately; a
+    // 1-row request parks until a second row — or shutdown — arrives.
+    router
+        .add_replica(
+            "dof",
+            ModelServer::spawn_dof(
+                graph.clone(),
+                op.dof_engine(),
+                BatchPolicy {
+                    capacity: 2,
+                    max_wait: Duration::from_secs(30),
+                },
+                Pool::new(2),
+                2,
+            ),
+        )
+        .unwrap();
+    let client = router.client("dof").unwrap();
+    let direct = Direct::Dof(op, graph);
+
+    // Serial phase: two 2-row requests. Each faults on replica 0 first
+    // (least-inflight pick, lowest index on the tie) and fails over; after
+    // the second, replica 0 is quarantined.
+    for it in 0..2 {
+        let pts = points(11, 0, it, 2, n);
+        let resp = client.eval_blocking(pts.clone()).unwrap();
+        let (want_phi, want_lphi) = direct.expect(&pts, 2, n);
+        assert_eq!(resp.phi, want_phi, "failover response not bitwise (it {it})");
+        assert_eq!(resp.lphi, want_lphi);
+    }
+    {
+        let m = &router.snapshot()[0];
+        assert_eq!(m.replicas[0].state, HealthState::Quarantined);
+        assert_eq!(m.quarantine_events, 1);
+        assert_eq!((m.retries, m.engine_faults), (2, 2));
+    }
+
+    // Concurrent phase: three 1-row requests routed straight to replica 1
+    // (replica 0 is gated). Two pair into a full batch and complete; one
+    // parks until shutdown drains it.
+    let joins: Vec<_> = (0..3)
+        .map(|c| {
+            let client = client.clone();
+            std::thread::spawn(move || {
+                let width = client.width();
+                let pts = points(12, c, 0, 1, width);
+                let resp = client.eval_blocking(pts.clone()).unwrap();
+                (pts, resp)
+            })
+        })
+        .collect();
+    wait_for(&router, "replica 1 received all 5 requests, 1 parked", |r| {
+        let m = &r.snapshot()[0];
+        m.replicas[1].server.received >= 5 && m.queue_depth == 1
+    });
+    {
+        let m = &router.snapshot()[0];
+        assert_eq!((m.dispatched, m.completed, m.failed), (5, 4, 0));
+        assert_eq!(m.queue_depth, 1, "exactly the parked request in flight");
+        assert_eq!(m.retries, 2, "gated replica burned no retry budget");
+        assert_eq!(m.engine_faults, 2);
+        assert_eq!(m.replicas[0].state, HealthState::Quarantined);
+        assert_eq!(
+            (m.replicas[0].attempts, m.replicas[0].failed),
+            (2, 2),
+            "no traffic reached the quarantined replica"
+        );
+    }
+    router.shutdown();
+    for j in joins {
+        let (pts, resp) = j.join().expect("drained client panicked");
+        let (want_phi, want_lphi) = direct.expect(&pts, 1, n);
+        assert_eq!(resp.phi, want_phi, "drained response not bitwise");
+        assert_eq!(resp.lphi, want_lphi);
+    }
+}
+
+/// Drain with retries in flight: both parked requests are on their
+/// *failover attempt* (replica 0 already failed them) when shutdown hits —
+/// the drain must answer the retry attempts, and every counter is exact.
+#[test]
+fn shutdown_drains_retries_in_flight() {
+    let mut router = Router::with_config(RouterConfig {
+        retries: 1,
+        ..RouterConfig::default()
+    });
+    router.register("m", failing_server(1, "m"));
+    router
+        .add_replica(
+            "m",
+            doubling_server(
+                1,
+                BatchPolicy {
+                    capacity: 64,
+                    max_wait: Duration::from_secs(30),
+                },
+                ServeConfig::labeled("m"),
+            ),
+        )
+        .unwrap();
+    let client = router.client("m").unwrap();
+
+    // Submit sequentially so each request deterministically tries replica 0
+    // first (least-inflight pick: the prior request is parked at replica 1,
+    // so replica 0's depth 0 wins the tie-free comparison).
+    let mut joins = Vec::new();
+    for i in 0..2u64 {
+        let c = client.clone();
+        joins.push(std::thread::spawn(move || {
+            c.eval_blocking(vec![i as f32 + 2.0])
+        }));
+        let want = i + 1;
+        wait_for(&router, "retry parked at replica 1", move |r| {
+            let m = &r.snapshot()[0];
+            m.replicas[0].failed == want && m.replicas[1].server.received == want
+        });
+    }
+    {
+        let m = &router.snapshot()[0];
+        assert_eq!((m.dispatched, m.completed, m.failed), (2, 0, 0));
+        assert_eq!(m.queue_depth, 2, "both requests mid-retry");
+        assert_eq!((m.retries, m.engine_faults), (2, 2));
+        assert_eq!((m.replicas[0].attempts, m.replicas[0].failed), (2, 2));
+        assert_eq!(m.replicas[0].state, HealthState::Degraded);
+        assert_eq!(m.replicas[1].attempts, 2);
+    }
+    router.shutdown();
+    for (i, j) in joins.into_iter().enumerate() {
+        let resp = j.join().expect("client panicked").expect("retry lost in drain");
+        let v = i as f32 + 2.0;
+        assert_eq!((resp.phi, resp.lphi), (vec![v], vec![2.0 * v]));
+    }
+}
+
+/// Admission-control shed accounting is exact, and shutdown drains the
+/// admitted request that caused the overload.
+#[test]
+fn shed_requests_are_counted_exactly_and_drain_completes() {
+    let mut router = Router::with_config(RouterConfig {
+        retries: 1,
+        ..RouterConfig::default()
+    });
+    router.register(
+        "m",
+        doubling_server(
+            1,
+            BatchPolicy {
+                capacity: 64,
+                max_wait: Duration::from_secs(30),
+            },
+            ServeConfig {
+                queue_cap: 1,
+                ..ServeConfig::labeled("m")
+            },
+        ),
+    );
+    let client = router.client("m").unwrap();
+    let parked = {
+        let c = client.clone();
+        std::thread::spawn(move || c.eval_blocking(vec![5.0]))
+    };
+    wait_for(&router, "parked request admitted", |r| {
+        let m = &r.snapshot()[0];
+        m.replicas[0].inflight == 1 && m.replicas[0].server.received == 1
+    });
+    // The queue is at cap: this request is shed on both attempts.
+    let err = client.eval_blocking(vec![9.0]).unwrap_err();
+    match &err {
+        ServeError::Overloaded { model, reason } => {
+            assert_eq!(model, "m");
+            assert!(reason.contains("cap 1"), "{reason}");
+        }
+        other => panic!("expected Overloaded, got {other}"),
+    }
+    {
+        let m = &router.snapshot()[0];
+        assert_eq!((m.dispatched, m.completed, m.failed), (2, 0, 1));
+        assert_eq!(m.shed, 1, "final-error classification: one shed request");
+        assert_eq!(m.retries, 1, "one failover attempt, also shed");
+        assert_eq!(m.engine_faults, 0);
+        assert_eq!(m.replicas[0].attempts, 3, "1 parked + 2 shed attempts");
+        assert_eq!(m.replicas[0].server.shed, 2, "server counts shed per attempt");
+        assert_eq!(m.replicas[0].server.accepted, 1);
+        assert_eq!(
+            m.replicas[0].state,
+            HealthState::Healthy,
+            "shedding is healthy behaviour, not an engine fault"
+        );
+    }
+    router.shutdown();
+    let resp = parked.join().expect("client panicked").expect("admitted request lost");
+    assert_eq!((resp.phi, resp.lphi), (vec![5.0], vec![10.0]));
+}
+
+/// Routed results are bitwise identical across pool widths 1/2/4/8: shard
+/// boundaries depend on batch size only, never on worker count.
+#[test]
+fn routed_results_bitwise_identical_across_pool_widths() {
+    let mut rng = Xoshiro256::new(0xA11);
+    let n = 4;
+    let graph = mlp_graph(&random_layers(&[n, 8, 1], &mut rng), Act::Tanh);
+    let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed: 31 });
+    let mut baseline: Option<Vec<(Vec<f32>, Vec<f32>)>> = None;
+    for threads in [1usize, 2, 4, 8] {
+        let mut router = Router::new();
+        router.register(
+            "dof",
+            ModelServer::spawn_dof(graph.clone(), op.dof_engine(), policy(), Pool::new(threads), 2),
+        );
+        let client = router.client("dof").unwrap();
+        let mut got = Vec::new();
+        for it in 0..6 {
+            let rows = 1 + it % 4;
+            // Same points regardless of pool width.
+            let pts = points(40, 0, it, rows, n);
+            let resp = client.eval_blocking(pts).unwrap();
+            got.push((resp.phi, resp.lphi));
+        }
+        router.shutdown();
+        match &baseline {
+            None => baseline = Some(got),
+            Some(b) => assert_eq!(b, &got, "pool width {threads} diverged bitwise"),
+        }
     }
 }
 
