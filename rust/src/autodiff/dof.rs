@@ -40,8 +40,8 @@
 use crate::graph::{Graph, Op};
 use crate::linalg::LdlDecomposition;
 use crate::parallel::{self, Pool};
-use crate::plan::{self, kernels, OperatorProgram, PlanOptions};
-use crate::tensor::Tensor;
+use crate::plan::{self, kernels, OperatorProgram, PanelSet, PlanOptions};
+use crate::tensor::{GemmPlan, Tensor};
 
 use super::arena::{with_program_slab, SlabKey, TangentArena};
 use super::forward_jacobian::TangentBatch;
@@ -173,20 +173,29 @@ impl DofEngine {
     /// process-wide **program-keyed slab pool** (exact fit by
     /// `(program, rows)` — no size-bucket search; one pool transaction per
     /// call, and the per-node hot path touches no allocator).
+    ///
+    /// Weight panels for the `PackedAxpy`-form Linear steps are packed once
+    /// here (never cached with the program — panels hold weight values).
     pub fn execute(&self, program: &OperatorProgram, graph: &Graph, x: &Tensor) -> DofResult {
+        let panels = plan::pack_panels(program.steps(), graph);
         let key = SlabKey {
             program: program.key().fingerprint,
             rows: x.dims()[0],
         };
-        with_program_slab(key, |slab| self.execute_with_slab(program, graph, x, slab))
+        with_program_slab(key, |slab| {
+            self.execute_with_slab(program, graph, x, &panels, slab)
+        })
     }
 
-    /// Execute a precompiled program with caller-supplied slab storage.
+    /// Execute a precompiled program with caller-supplied panel set (from
+    /// [`plan::pack_panels`]; an all-`None` set is always valid and
+    /// bit-identical) and slab storage.
     pub fn execute_with_slab(
         &self,
         program: &OperatorProgram,
         graph: &Graph,
         x: &Tensor,
+        panels: &PanelSet,
         slab: &mut Vec<f64>,
     ) -> DofResult {
         // A program compiled under different options would execute with
@@ -197,7 +206,16 @@ impl DofEngine {
             self.plan_options(),
             "program options do not match this engine's configuration"
         );
-        plan::exec::execute_dof(program, graph, &self.ldl, self.b.as_deref(), self.c, x, slab)
+        plan::exec::execute_dof(
+            program,
+            graph,
+            &self.ldl,
+            self.b.as_deref(),
+            self.c,
+            x,
+            panels,
+            slab,
+        )
     }
 
     /// [`Self::compute`] sharded across the process-wide pool (`--threads` /
@@ -251,6 +269,10 @@ impl DofEngine {
             }
             return serial();
         }
+        // Pack weight panels ONCE for the whole call and share them
+        // read-only across shards — repacking per shard would undo the
+        // point of packing.
+        let panels = plan::pack_panels(program.steps(), graph);
         let shards = pool.run_sharded(ranges, |_, r| {
             let rows = r.end - r.start;
             let xs = Tensor::from_vec(&[rows, n], x.data()[r.start * n..r.end * n].to_vec());
@@ -262,7 +284,9 @@ impl DofEngine {
                 program: program.key().fingerprint,
                 rows,
             };
-            with_program_slab(key, |slab| self.execute_with_slab(program, graph, &xs, slab))
+            with_program_slab(key, |slab| {
+                self.execute_with_slab(program, graph, &xs, &panels, slab)
+            })
         });
         merge_dof_shards(shards, batch)
     }
@@ -356,6 +380,8 @@ impl DofEngine {
                     kernels::linear_forward(
                         weight,
                         bias,
+                        GemmPlan::choose(t + 2, in_d, out_d),
+                        None,
                         batch,
                         t,
                         p.v.data(),

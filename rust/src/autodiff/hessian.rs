@@ -29,7 +29,7 @@
 use crate::graph::{Graph, Op};
 use crate::parallel::{self, Pool};
 use crate::plan::hessian::{execute_hessian, global_hessian_cache, HessianPlan};
-use crate::plan::{kernels, OperatorProgram};
+use crate::plan::{self, kernels, OperatorProgram, PanelSet};
 use crate::tensor::Tensor;
 
 use super::arena::{with_program_slab, SlabKey};
@@ -138,12 +138,18 @@ impl HessianEngine {
         let batch = x.dims()[0];
         let nin = x.dims()[1];
         let ranges = parallel::split_rows(batch, shard_rows);
+        // Pack weight panels ONCE for the whole call and share them
+        // read-only across shards — repacking per shard would undo the
+        // point of packing.
+        let panels = plan::pack_panels(plan.steps(), graph);
         if ranges.len() <= 1 {
             // A 1-thread pool means genuinely serial, including the GEMMs.
             if pool.threads() == 1 {
-                return parallel::with_serial_guard(|| self.execute_planned(plan, graph, x));
+                return parallel::with_serial_guard(|| {
+                    self.execute_planned(plan, graph, x, &panels)
+                });
             }
-            return self.execute_planned(plan, graph, x);
+            return self.execute_planned(plan, graph, x, &panels);
         }
         let shards = pool.run_sharded(ranges, |_, r| {
             let rows = r.end - r.start;
@@ -151,7 +157,7 @@ impl HessianEngine {
                 &[rows, nin],
                 x.data()[r.start * nin..r.end * nin].to_vec(),
             );
-            self.execute_planned(plan, graph, &xs)
+            self.execute_planned(plan, graph, &xs, &panels)
         });
         merge_hessian_shards(shards, batch)
     }
@@ -171,7 +177,7 @@ impl HessianEngine {
     /// program-keyed pool.
     pub fn compute(&self, graph: &Graph, x: &Tensor) -> HessianResult {
         let plan = global_hessian_cache().get_or_compile(graph);
-        self.execute_planned(&plan, graph, x)
+        self.execute(&plan, graph, x)
     }
 
     /// [`Self::compute`] over a shared [`OperatorProgram`]: the program
@@ -192,7 +198,7 @@ impl HessianEngine {
         );
         assert_eq!(program.node_count(), graph.len(), "program/graph mismatch");
         let plan = program.hessian_plan(graph);
-        self.execute_planned(&plan, graph, x)
+        self.execute(&plan, graph, x)
     }
 
     /// Execute a caller-held compiled plan (the compile-once half already
@@ -200,13 +206,21 @@ impl HessianEngine {
     /// Storage comes from the program-keyed slab pool like every other
     /// `compute*` entry point.
     pub fn execute(&self, plan: &HessianPlan, graph: &Graph, x: &Tensor) -> HessianResult {
-        self.execute_planned(plan, graph, x)
+        let panels = plan::pack_panels(plan.steps(), graph);
+        self.execute_planned(plan, graph, x, &panels)
     }
 
     /// Execute a compiled plan with an exact-fit slab from the
     /// program-keyed pool (the plan's key fingerprint is domain-tagged, so
-    /// Hessian slabs never alias DOF program slabs).
-    fn execute_planned(&self, plan: &HessianPlan, graph: &Graph, x: &Tensor) -> HessianResult {
+    /// Hessian slabs never alias DOF program slabs) and caller-packed
+    /// weight panels (an all-`None` set is always valid and bit-identical).
+    fn execute_planned(
+        &self,
+        plan: &HessianPlan,
+        graph: &Graph,
+        x: &Tensor,
+        panels: &PanelSet,
+    ) -> HessianResult {
         let key = SlabKey {
             program: plan.key().fingerprint,
             rows: x.dims()[0],
@@ -219,6 +233,7 @@ impl HessianEngine {
                 self.b.as_deref(),
                 self.c,
                 x,
+                panels,
                 slab,
             )
         })

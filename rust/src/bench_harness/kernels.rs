@@ -1,0 +1,287 @@
+//! Kernel-level microbench: per-helper ns/element for the chunked lane
+//! sweeps and packed-vs-unpacked throughput for the planned NT GEMM —
+//! `dof bench kernels`.
+//!
+//! Emits the schema-v5 `BENCH_kernels.json` trajectory file. Two column
+//! classes:
+//!
+//! * **analytic** — element counts, MAC counts, and the [`GemmPlan`] each
+//!   shape compiles to. Exact, machine-independent, asserted in tests and
+//!   grepped by CI (a silent change to the micro-kernel selection shows up
+//!   as a column change here, not just as a perf drift);
+//! * **measured** — wall-clock ns/element and GFLOP/s. Machine-dependent
+//!   perf trajectory; may be near-noise on tiny configs.
+
+use crate::tensor::lanes::{self, LANES};
+use crate::tensor::{
+    matmul_nt_dot, matmul_nt_planned, GemmForm, GemmPlan, PackedPanel, GEMM_DOT_MAX_MACS,
+};
+use crate::util::Xoshiro256;
+
+use super::{BenchConfig, Bencher};
+
+/// `dof bench kernels` configuration.
+#[derive(Debug, Clone)]
+pub struct KernelsConfig {
+    /// Elementwise sweep length (deliberately not a multiple of the lane
+    /// width so the measured loop includes the scalar tail).
+    pub len: usize,
+    /// NT-GEMM shapes `(m, k, n)` to measure in all three forms.
+    pub gemm_shapes: Vec<(usize, usize, usize)>,
+    pub seed: u64,
+    pub bench: BenchConfig,
+}
+
+impl Default for KernelsConfig {
+    fn default() -> Self {
+        Self {
+            len: 8 * 1024 + 3,
+            gemm_shapes: vec![(10, 16, 16), (66, 64, 64), (258, 128, 128)],
+            seed: 17,
+            bench: BenchConfig::default(),
+        }
+    }
+}
+
+/// One elementwise lane-helper measurement.
+#[derive(Debug, Clone)]
+pub struct KernelCell {
+    pub name: &'static str,
+    /// Elements per invocation (analytic).
+    pub elements: usize,
+    /// Median wall-clock per element (measured).
+    pub ns_per_element: f64,
+}
+
+/// One NT-GEMM shape measured in all three dispatch forms.
+#[derive(Debug, Clone)]
+pub struct GemmCell {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// `m·k·n` multiply-accumulates (analytic).
+    pub macs: usize,
+    /// What [`GemmPlan::choose`] compiles for this shape when the whole
+    /// `m` is one batch item (analytic).
+    pub plan: GemmPlan,
+    /// Measured GFLOP/s (2 FLOPs per MAC) per form.
+    pub dot_gflops: f64,
+    pub unpacked_gflops: f64,
+    pub packed_gflops: f64,
+}
+
+/// Output of [`run_kernel_bench`].
+#[derive(Debug, Clone)]
+pub struct KernelsReport {
+    pub elementwise: Vec<KernelCell>,
+    pub gemm: Vec<GemmCell>,
+}
+
+fn randv(rng: &mut Xoshiro256, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Run the kernel microbench: every public lane helper at `cfg.len`
+/// elements, then each GEMM shape through the dot, ad-hoc-transpose AXPY,
+/// and packed-panel AXPY forms.
+pub fn run_kernel_bench(cfg: &KernelsConfig) -> KernelsReport {
+    let bencher = Bencher::new(cfg.bench);
+    let mut rng = Xoshiro256::new(cfg.seed);
+    let len = cfg.len;
+    let a = randv(&mut rng, len);
+    let b = randv(&mut rng, len);
+    let c = randv(&mut rng, len);
+    let e = randv(&mut rng, len);
+    let mut dst = randv(&mut rng, len);
+    let alpha = rng.normal();
+
+    let mut elementwise = Vec::new();
+    // Measure each helper through one monomorphized closure shape so the
+    // per-helper numbers are comparable.
+    macro_rules! bench_helper {
+        ($name:ident, $body:expr) => {{
+            let m = bencher.run(concat!("kernels/", stringify!($name)), || {
+                $body;
+                std::hint::black_box(&dst);
+                (None, None)
+            });
+            elementwise.push(KernelCell {
+                name: stringify!($name),
+                elements: len,
+                ns_per_element: m.seconds.median * 1e9 / len as f64,
+            });
+        }};
+    }
+    bench_helper!(add_into, lanes::add_into(&mut dst, &a, &b));
+    bench_helper!(mul_into, lanes::mul_into(&mut dst, &a, &b));
+    bench_helper!(scale_into, lanes::scale_into(&mut dst, &a, alpha));
+    bench_helper!(add_assign, lanes::add_assign(&mut dst, &a));
+    bench_helper!(mul_assign, lanes::mul_assign(&mut dst, &a));
+    bench_helper!(axpy, lanes::axpy(&mut dst, alpha, &a));
+    bench_helper!(mul_acc, lanes::mul_acc(&mut dst, &a, &b));
+    bench_helper!(scaled_mul_acc, lanes::scaled_mul_acc(&mut dst, alpha, &a, &b));
+    bench_helper!(scaled_sq_acc, lanes::scaled_sq_acc(&mut dst, alpha, &a));
+    bench_helper!(
+        mul_mul_add_into,
+        lanes::mul_mul_add_into(&mut dst, &a, &b, &c, &e)
+    );
+
+    let mut gemm = Vec::new();
+    for &(m, k, n) in &cfg.gemm_shapes {
+        let ga = randv(&mut rng, m * k);
+        let gb = randv(&mut rng, n * k);
+        let mut gc = vec![0.0f64; m * n];
+        let macs = m * k * n;
+        let flops = (2 * macs) as f64;
+        let gflops = |median: f64| flops / median.max(1e-12) / 1e9;
+
+        let dot = bencher.run(&format!("kernels/gemm_dot/{m}x{k}x{n}"), || {
+            gc.fill(0.0);
+            matmul_nt_dot(&ga, &gb, &mut gc, m, k, n);
+            std::hint::black_box(&gc);
+            (None, None)
+        });
+        let axpy_plan = GemmPlan {
+            form: GemmForm::PackedAxpy,
+            parallel: false,
+        };
+        let unpacked = bencher.run(&format!("kernels/gemm_unpacked/{m}x{k}x{n}"), || {
+            gc.fill(0.0);
+            matmul_nt_planned(&ga, &gb, None, axpy_plan, &mut gc, m, k, n);
+            std::hint::black_box(&gc);
+            (None, None)
+        });
+        let panel = PackedPanel::pack(&gb, k, n);
+        let packed = bencher.run(&format!("kernels/gemm_packed/{m}x{k}x{n}"), || {
+            gc.fill(0.0);
+            matmul_nt_planned(&ga, &gb, Some(&panel), axpy_plan, &mut gc, m, k, n);
+            std::hint::black_box(&gc);
+            (None, None)
+        });
+        gemm.push(GemmCell {
+            m,
+            k,
+            n,
+            macs,
+            plan: GemmPlan::choose(m, k, n),
+            dot_gflops: gflops(dot.seconds.median),
+            unpacked_gflops: gflops(unpacked.seconds.median),
+            packed_gflops: gflops(packed.seconds.median),
+        });
+    }
+
+    KernelsReport { elementwise, gemm }
+}
+
+/// Serialize to the schema-v5 `BENCH_kernels.json` format: a top-level
+/// `kernels` object carrying the analytic selection constants, the
+/// per-helper ns/element rows, and the packed-vs-unpacked GEMM rows.
+pub fn kernels_json(cfg: &KernelsConfig, report: &KernelsReport) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"kernels\",\n");
+    s.push_str("  \"schema\": 5,\n");
+    s.push_str(
+        "  \"provenance\": \"schema v5 (SIMD-ized kernels + plan-time micro-kernel \
+         specialization): adds the kernels object — per-helper ns/element for the \
+         chunked lane sweeps and dot vs unpacked-AXPY vs packed-panel NT-GEMM \
+         throughput, with the analytic GemmPlan choice per shape; v4 added the \
+         robustness object, v3 the pool object, v2 the order column\",\n",
+    );
+    s.push_str(&format!(
+        "  \"config\": {{\"len\": {}, \"seed\": {}}},\n",
+        cfg.len, cfg.seed
+    ));
+    s.push_str("  \"kernels\": {\n");
+    s.push_str(&format!("    \"lanes\": {LANES},\n"));
+    s.push_str(&format!("    \"dot_max_macs\": {GEMM_DOT_MAX_MACS},\n"));
+    s.push_str("    \"elementwise\": [\n");
+    for (i, cell) in report.elementwise.iter().enumerate() {
+        s.push_str(&format!(
+            "      {{\"name\": \"{}\", \"elements\": {}, \"ns_per_element\": {:.4}}}{}\n",
+            cell.name,
+            cell.elements,
+            cell.ns_per_element,
+            if i + 1 < report.elementwise.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("    ],\n");
+    s.push_str("    \"gemm\": [\n");
+    for (i, g) in report.gemm.iter().enumerate() {
+        let form = match g.plan.form {
+            GemmForm::Dot => "dot",
+            GemmForm::PackedAxpy => "packed_axpy",
+        };
+        s.push_str(&format!(
+            "      {{\"m\": {}, \"k\": {}, \"n\": {}, \"macs\": {}, \
+             \"plan_form\": \"{}\", \"plan_parallel\": {}, \
+             \"dot_gflops\": {:.3}, \"unpacked_gflops\": {:.3}, \"packed_gflops\": {:.3}}}{}\n",
+            g.m,
+            g.k,
+            g.n,
+            g.macs,
+            form,
+            g.plan.parallel,
+            g.dot_gflops,
+            g.unpacked_gflops,
+            g.packed_gflops,
+            if i + 1 < report.gemm.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("    ]\n");
+    s.push_str("  }\n}\n");
+    s
+}
+
+/// Write the kernels JSON to `path`.
+pub fn write_kernels_json(
+    path: &str,
+    cfg: &KernelsConfig,
+    report: &KernelsReport,
+) -> std::io::Result<()> {
+    use std::io::Write as _;
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(kernels_json(cfg, report).as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_bench_runs_and_serializes_schema_v5() {
+        let cfg = KernelsConfig {
+            len: 67,
+            gemm_shapes: vec![(3, 5, 7), (66, 64, 64)],
+            seed: 3,
+            bench: BenchConfig {
+                warmup_iters: 0,
+                measure_iters: 1,
+                max_seconds: 5.0,
+            },
+        };
+        let report = run_kernel_bench(&cfg);
+        assert_eq!(report.elementwise.len(), 10);
+        assert!(report.elementwise.iter().all(|c| c.elements == 67));
+        assert_eq!(report.gemm.len(), 2);
+        // Analytic columns are exact: MAC counts and the compiled plan.
+        assert_eq!(report.gemm[0].macs, 3 * 5 * 7);
+        assert_eq!(report.gemm[0].plan.form, GemmForm::Dot);
+        assert!(!report.gemm[0].plan.parallel);
+        assert_eq!(report.gemm[1].plan.form, GemmForm::PackedAxpy);
+        assert!(report.gemm[1].plan.parallel);
+        let json = kernels_json(&cfg, &report);
+        assert!(json.contains("\"bench\": \"kernels\""));
+        assert!(json.contains("\"schema\": 5"));
+        assert!(json.contains("\"kernels\""));
+        assert!(json.contains(&format!("\"lanes\": {LANES}")));
+        assert!(json.contains(&format!("\"dot_max_macs\": {GEMM_DOT_MAX_MACS}")));
+        assert!(json.contains("\"name\": \"mul_mul_add_into\""));
+        assert!(json.contains("\"plan_form\": \"dot\""));
+        assert!(json.contains("\"plan_form\": \"packed_axpy\""));
+        assert!(json.contains("\"packed_gflops\""));
+        assert!(json.ends_with("}\n"));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+}

@@ -8,6 +8,7 @@
 //! machine-readable `BENCH_table1.json` perf-trajectory file.
 
 pub mod jet_grid;
+pub mod kernels;
 pub mod report;
 pub mod table1;
 pub mod table2;

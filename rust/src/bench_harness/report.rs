@@ -371,15 +371,18 @@ pub fn grid_json(cfg: &Table1Config, report: &GridReport) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"table1_mlp_grid\",\n");
-    s.push_str("  \"schema\": 4,\n");
+    s.push_str("  \"schema\": 5,\n");
     s.push_str("  \"order\": 2,\n");
     s.push_str("  \"operator\": \"elliptic\",\n");
     s.push_str(
-        "  \"provenance\": \"schema v4 (fault-tolerant serving tier): adds the robustness \
-         object — exact shed/retry/deadline/quarantine counters from a scripted \
-         fault-injection serving run; v3 added the pool object (cold vs warm region \
-         dispatch, spawn events); v2 added the order column so order-2 (DOF) and \
-         order-4 (jet) grids share one trajectory format\",\n",
+        "  \"provenance\": \"schema v5 (SIMD-ized kernels + plan-time micro-kernel \
+         specialization): grid cells now execute over plan-recorded GemmPlan dispatch \
+         and per-call packed weight panels, and the companion `dof bench kernels` \
+         report carries the kernels object; v4 added the robustness object (exact \
+         shed/retry/deadline/quarantine counters from a scripted fault-injection \
+         serving run); v3 added the pool object (cold vs warm region dispatch, spawn \
+         events); v2 added the order column so order-2 (DOF) and order-4 (jet) grids \
+         share one trajectory format\",\n",
     );
     s.push_str(&format!(
         "  \"config\": {{\"n\": {}, \"hidden\": {}, \"layers\": {}, \"seed\": {}, \"shard_rows\": {}}},\n",
@@ -499,7 +502,7 @@ mod tests {
         assert_eq!((r.healthy_replicas, r.replicas), (2, 2));
         let json = grid_json(&cfg, &report);
         assert!(json.contains("\"bench\": \"table1_mlp_grid\""));
-        assert!(json.contains("\"schema\": 4"));
+        assert!(json.contains("\"schema\": 5"));
         assert!(json.contains("\"order\": 2"));
         assert!(json.contains("\"plan\""));
         assert!(json.contains("\"compile_ms\""));

@@ -569,6 +569,10 @@ impl ModelServer {
         let width = graph.input_dim();
         let program =
             plan::global_cache().get_or_compile(&graph, &engine.ldl, engine.plan_options());
+        // Weight values are fixed for the server's lifetime (the graph is
+        // moved into the closure), so the packed panels are too — pack once
+        // at spawn instead of per batch.
+        let panels = plan::pack_panels(program.steps(), &graph);
         let compute = move |data: &[f32], w: usize| -> Result<(Vec<f32>, Vec<f32>)> {
             let rows = data.len() / w;
             let x = Tensor::from_vec(
@@ -587,7 +591,7 @@ impl ModelServer {
                 rows,
             };
             let res = with_program_slab(key, |slab| {
-                engine.execute_with_slab(&program, &graph, &x, slab)
+                engine.execute_with_slab(&program, &graph, &x, &panels, slab)
             });
             Ok((
                 res.values.data().iter().map(|&v| v as f32).collect(),
@@ -628,6 +632,9 @@ impl ModelServer {
             engine.basis(),
             engine.constant().is_some(),
         );
+        // Same spawn-time packing as the DOF backend: weights are fixed
+        // for the server's lifetime.
+        let panels = plan::pack_panels(program.steps(), &graph);
         let compute = move |data: &[f32], w: usize| -> Result<(Vec<f32>, Vec<f32>)> {
             let rows = data.len() / w;
             let x = Tensor::from_vec(
@@ -640,7 +647,7 @@ impl ModelServer {
                 rows,
             };
             let res = with_program_slab(key, |slab| {
-                engine.execute_with_slab(&program, &graph, &x, slab)
+                engine.execute_with_slab(&program, &graph, &x, &panels, slab)
             });
             Ok((
                 res.values.data().iter().map(|&v| v as f32).collect(),

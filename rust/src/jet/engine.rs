@@ -8,6 +8,7 @@ use crate::autodiff::arena::{with_program_slab, SlabKey, TangentArena};
 use crate::autodiff::{Cost, PeakTracker};
 use crate::graph::{Graph, Op};
 use crate::parallel::{self, Pool};
+use crate::plan::{self, PanelSet};
 use crate::tensor::{matmul_nt, Tensor};
 
 use super::basis::DirectionBasis;
@@ -106,18 +107,24 @@ impl JetEngine {
             program: program.key().fingerprint,
             rows: x.dims()[0],
         };
-        with_program_slab(key, |slab| self.execute_with_slab(program, graph, x, slab))
+        let panels = plan::pack_panels(program.steps(), graph);
+        with_program_slab(key, |slab| {
+            self.execute_with_slab(program, graph, x, &panels, slab)
+        })
     }
 
-    /// Execute a precompiled program with caller-supplied slab storage.
+    /// Execute a precompiled program with caller-supplied slab storage and
+    /// pre-packed weight panels (an all-`None` set is always valid and
+    /// bit-identical).
     pub fn execute_with_slab(
         &self,
         program: &JetProgram,
         graph: &Graph,
         x: &Tensor,
+        panels: &PanelSet,
         slab: &mut Vec<f64>,
     ) -> JetResult {
-        execute_jet(program, graph, &self.basis, self.c, x, slab)
+        execute_jet(program, graph, &self.basis, self.c, x, panels, slab)
     }
 
     /// [`Self::compute`] sharded across the process-wide pool
@@ -168,6 +175,10 @@ impl JetEngine {
             }
             return serial();
         }
+        // Pack weight panels ONCE for the whole call and share them
+        // read-only across shards — repacking per shard would undo the
+        // point of packing.
+        let panels = plan::pack_panels(program.steps(), graph);
         let shards = pool.run_sharded(ranges, |_, r| {
             let rows = r.end - r.start;
             let xs = Tensor::from_vec(&[rows, n], x.data()[r.start * n..r.end * n].to_vec());
@@ -175,7 +186,9 @@ impl JetEngine {
                 program: program.key().fingerprint,
                 rows,
             };
-            with_program_slab(key, |slab| self.execute_with_slab(program, graph, &xs, slab))
+            with_program_slab(key, |slab| {
+                self.execute_with_slab(program, graph, &xs, &panels, slab)
+            })
         });
         merge_jet_shards(shards, batch)
     }

@@ -28,8 +28,8 @@ use std::ops::Range;
 use crate::autodiff::Cost;
 use crate::graph::{Graph, Op};
 use crate::plan::layout::SlabLayout;
-use crate::plan::{self, Step, StepKind};
-use crate::tensor::{matmul_nt_into, Tensor};
+use crate::plan::{self, PanelSet, Step, StepKind};
+use crate::tensor::{matmul_nt_planned, GemmPlan, PackedPanel, Tensor};
 
 use super::basis::DirectionBasis;
 use super::{
@@ -127,7 +127,19 @@ impl JetProgram {
         for i in 0..graph.len() {
             frees_at[tau[i]].push(i);
         }
-        let steps = plan::build_schedule(graph, &tau);
+        let mut steps = plan::build_schedule(graph, &tau);
+
+        // Plan-time micro-kernel selection: every (batch, direction, order)
+        // row goes through the Linear GEMM, so the batch-invariant per-item
+        // row count is `t·(k+1)`.
+        for step in steps.iter_mut() {
+            if let StepKind::Linear { gemm, .. } = &mut step.kind {
+                if let Op::Linear { weight, .. } = &graph.node(step.node).op {
+                    let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+                    *gemm = GemmPlan::choose(t * (k + 1), in_d, out_d);
+                }
+            }
+        }
 
         // ---- static slot assignment (per-row scalar units) --------------
         let mut nodes: Vec<JetNodePlan> = graph
@@ -145,7 +157,10 @@ impl JetProgram {
                     lay.free(nodes[i].slot, node_size(nodes[i].dim));
                 }
             }
-            if let StepKind::Linear { fused_act: Some(a) } = &step.kind {
+            if let StepKind::Linear {
+                fused_act: Some(a), ..
+            } = &step.kind
+            {
                 let a = *a;
                 nodes[a].slot = lay.alloc(node_size(nodes[a].dim));
                 for &i in &frees_at[a] {
@@ -267,7 +282,7 @@ impl JetProgram {
     pub fn fused_steps(&self) -> usize {
         self.steps
             .iter()
-            .filter(|s| matches!(s.kind, StepKind::Linear { fused_act: Some(_) }))
+            .filter(|s| matches!(s.kind, StepKind::Linear { fused_act: Some(_), .. }))
             .count()
     }
 
@@ -330,12 +345,18 @@ fn rd<'a>(pre: &'a [f64], post: &'a [f64], w: &Range<usize>, r: Range<usize>) ->
 /// jet storage (grown on first use, reused verbatim afterwards). The
 /// arithmetic shares its per-component kernels ([`compose5`], [`cauchy5`])
 /// with the reference interpreter, so the two paths are bit-identical.
+///
+/// `panels` is the per-call [`PanelSet`] from [`plan::pack_panels`] —
+/// packed once per top-level execution, shared read-only across shards,
+/// never cached with the program. An all-`None` set is always valid and
+/// bit-identical.
 pub fn execute_jet(
     program: &JetProgram,
     graph: &Graph,
     basis: &DirectionBasis,
     c_coef: Option<f64>,
     x: &Tensor,
+    panels: &PanelSet,
     slab: &mut Vec<f64>,
 ) -> JetResult {
     assert_eq!(x.rank(), 2, "input must be [batch, N]");
@@ -361,8 +382,9 @@ pub fn execute_jet(
             StepKind::Input { in_off } => {
                 input_step(program, basis, x, batch, slab, step.node, *in_off)
             }
-            StepKind::Linear { fused_act } => {
-                linear_step(program, graph, batch, slab, step.node);
+            StepKind::Linear { fused_act, gemm } => {
+                let panel = panels.get(step.node).and_then(|p| p.as_ref());
+                linear_step(program, graph, batch, slab, step.node, *gemm, panel);
                 if let Some(a) = fused_act {
                     activation_step(program, graph, batch, slab, *a);
                 }
@@ -423,7 +445,16 @@ fn input_step(
     }
 }
 
-fn linear_step(program: &JetProgram, graph: &Graph, batch: usize, slab: &mut [f64], id: usize) {
+#[allow(clippy::too_many_arguments)]
+fn linear_step(
+    program: &JetProgram,
+    graph: &Graph,
+    batch: usize,
+    slab: &mut [f64],
+    id: usize,
+    gemm: GemmPlan,
+    panel: Option<&PackedPanel>,
+) {
     let node = graph.node(id);
     let (weight, bias) = match &node.op {
         Op::Linear { weight, bias } => (weight, bias),
@@ -438,10 +469,11 @@ fn linear_step(program: &JetProgram, graph: &Graph, batch: usize, slab: &mut [f6
     let w = block_rng(np, batch, t, k);
     let (pre, win, post) = split3(slab, &w);
     let pg = rd(pre, post, &w, block_rng(pp, batch, t, k));
-    // One GEMM over every (batch, direction, order) row; matmul_nt_into
-    // accumulates, so the destination is zeroed first.
+    // One GEMM over every (batch, direction, order) row, on the plan-time
+    // micro-kernel; the GEMM accumulates, so the destination is zeroed
+    // first.
     win.fill(0.0);
-    matmul_nt_into(pg, weight.data(), win, rows, in_d, out_d);
+    matmul_nt_planned(pg, weight.data(), panel, gemm, win, rows, in_d, out_d);
     // Bias on the m = 0 (value) rows only.
     for b in 0..batch {
         for j in 0..t {

@@ -75,6 +75,41 @@
 //! single-kernel invariant (add a storage policy, never a second copy of
 //! the arithmetic).
 //!
+//! ## Kernel specialization
+//!
+//! Below the shared kernels sits a vectorization and dispatch layer, all
+//! stable Rust (no nightly `std::simd` — CI greps it out):
+//!
+//! * **Chunked lane sweeps** ([`tensor::lanes`]) — every elementwise hot
+//!   loop walks `chunks_exact(8)` over fixed `[f64; 8]` arrays (which the
+//!   autovectorizer turns into vector code on any ISA) followed by a
+//!   scalar tail. Chunking never touches a *reduction*: sums and dots keep
+//!   their single-accumulator ascending-`k` loops, because reordering a
+//!   reduction tree changes float results and would break every bitwise
+//!   oracle.
+//! * **Plan-time micro-kernel selection** — each compiled Linear step
+//!   records a [`tensor::GemmPlan`] chosen once at compile time from the
+//!   **batch-invariant** per-item tangent-row count (DOF `t+2`, jet
+//!   `t·(k+1)`, Hessian forward `N`) and the weight dims: below
+//!   [`tensor::GEMM_DOT_MAX_MACS`] per-item MACs the serial dot form runs;
+//!   above it, the blocked-AXPY form with row-parallel dispatch. The
+//!   executors just read the recorded plan — no per-call branching.
+//! * **Packed weight panels** ([`tensor::PackedPanel`]) — engines
+//!   pre-transpose each AXPY-form Linear's weights once per top-level call
+//!   ([`plan::pack_panels`]) and share the panels read-only across shards.
+//!   Panels hold weight *values*, so they are never stored in the
+//!   structure-keyed program caches (the `cache_soundness` pins).
+//!
+//! All of this is safe because of one stated invariant, the
+//! **bitwise-summation-order contract**: every NT-GEMM output element is a
+//! single-accumulator dot over `k` ascending from `+0.0`, in every form —
+//! dot, ad-hoc transpose, packed panel. Forms are therefore `==`-identical
+//! for every shape, and plans may record either freely without perturbing
+//! the oracle hierarchy. `rust/tests/simd_tails.rs` pins the contract at
+//! awkward lengths (dims 1/3/5/7/9, non-multiple-of-8 widths, scalar-tail
+//! boundaries) across 1/2/4/8 threads, and `dof bench kernels` reports the
+//! per-helper and packed-vs-unpacked throughput trajectory.
+//!
 //! ## Testing strategy: the oracle hierarchy
 //!
 //! Correctness rests on three independent layers, each checked in CI:

@@ -5,6 +5,7 @@
 //! dof bench table2 [--batch 8 --reps 10 --threads 8]
 //! dof bench grid   [--batches 8,64,256 --threads-grid 1,2,4,8 --out BENCH_table1.json]
 //! dof bench xla    [--artifact dof_mlp_elliptic --reps 20]
+//! dof bench kernels [--len 8195 --gemm-shapes 10x16x16,66x64x64 --out BENCH_kernels.json]
 //! dof train  [--pde heat|klein-gordon|poisson|fokker-planck --steps 300 ...]
 //! dof decompose [--spec elliptic|lowrank|general --n 64]
 //! dof inspect [--artifacts artifacts]
@@ -15,6 +16,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 use dof::bench_harness::jet_grid::{run_jet_grid, write_jet_grid_json, JetGridConfig};
+use dof::bench_harness::kernels::{run_kernel_bench, write_kernels_json, KernelsConfig};
 use dof::bench_harness::report::{run_table1_grid, write_grid_json};
 use dof::bench_harness::table1::{run_table1, Table1Config};
 use dof::bench_harness::table2::{run_table2, Table2Config};
@@ -77,6 +79,9 @@ const USAGE: &str = "dof — Differential Operators with Forward propagation
 
 USAGE:
   dof bench table1|table2|xla [options]   regenerate the paper's tables
+  dof bench kernels [--len 8195]          lane-helper ns/element + packed
+            [--gemm-shapes 66x64x64,...]  vs unpacked NT-GEMM throughput
+            [--out BENCH_kernels.json]    (schema-v5 kernels object)
   dof bench grid [--batches 8,64,256]     batch × threads sweep → BENCH_table1.json
             [--threads-grid 1,2,4,8]
             [--order 2|4]                 4 = biharmonic Δ² via the jet
@@ -259,7 +264,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
             eprintln!("grid written to {out}");
         }
         "xla" => cmd_bench_xla(args)?,
-        other => return Err(anyhow!("unknown bench {other:?} (table1|table2|grid|xla)")),
+        "kernels" => cmd_bench_kernels(args)?,
+        other => {
+            return Err(anyhow!(
+                "unknown bench {other:?} (table1|table2|grid|xla|kernels)"
+            ))
+        }
     }
     Ok(())
 }
@@ -319,6 +329,64 @@ fn cmd_bench_jet_grid(args: &Args) -> Result<()> {
     }
     write_jet_grid_json(&out, &cfg, &report)?;
     eprintln!("jet grid written to {out}");
+    Ok(())
+}
+
+/// `dof bench kernels`: per-helper ns/element for the chunked lane sweeps
+/// and dot vs unpacked-AXPY vs packed-panel NT-GEMM throughput, with the
+/// analytic [`dof::tensor::GemmPlan`] choice per shape (schema-v5 JSON).
+fn cmd_bench_kernels(args: &Args) -> Result<()> {
+    let mut cfg = KernelsConfig {
+        len: args.usize_or("len", KernelsConfig::default().len),
+        seed: args.u64_or("seed", 17),
+        bench: bench_config(args),
+        ..Default::default()
+    };
+    if let Some(spec) = args.get("gemm-shapes") {
+        // "10x16x16,66x64x64" → [(10,16,16), (66,64,64)]
+        cfg.gemm_shapes = spec
+            .split(',')
+            .map(|shape| {
+                let dims = shape
+                    .split('x')
+                    .map(|d| d.trim().parse::<usize>())
+                    .collect::<std::result::Result<Vec<_>, _>>()
+                    .map_err(|e| anyhow!("bad --gemm-shapes entry {shape:?}: {e}"))?;
+                match dims[..] {
+                    [m, k, n] if m > 0 && k > 0 && n > 0 => Ok((m, k, n)),
+                    _ => Err(anyhow!("bad --gemm-shapes entry {shape:?} (want MxKxN)")),
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    let out = args.get_or("out", "BENCH_kernels.json");
+    eprintln!(
+        "kernels: {} elements/helper, GEMM shapes {:?} …",
+        cfg.len, cfg.gemm_shapes
+    );
+    let report = run_kernel_bench(&cfg);
+    println!("| helper | elements | ns/element |");
+    println!("|--------|----------|------------|");
+    for c in &report.elementwise {
+        println!("| {} | {} | {:.3} |", c.name, c.elements, c.ns_per_element);
+    }
+    println!("| m×k×n | plan | dot GF/s | unpacked GF/s | packed GF/s |");
+    println!("|-------|------|----------|---------------|-------------|");
+    for g in &report.gemm {
+        println!(
+            "| {}×{}×{} | {:?}{} | {:.2} | {:.2} | {:.2} |",
+            g.m,
+            g.k,
+            g.n,
+            g.plan.form,
+            if g.plan.parallel { "∥" } else { "" },
+            g.dot_gflops,
+            g.unpacked_gflops,
+            g.packed_gflops
+        );
+    }
+    write_kernels_json(&out, &cfg, &report)?;
+    eprintln!("kernels written to {out}");
     Ok(())
 }
 

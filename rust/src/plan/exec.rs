@@ -30,10 +30,10 @@ use crate::autodiff::forward_jacobian::TangentBatch;
 use crate::autodiff::Cost;
 use crate::graph::{Graph, Op};
 use crate::linalg::LdlDecomposition;
-use crate::tensor::Tensor;
+use crate::tensor::{GemmPlan, PackedPanel, Tensor};
 
 use super::kernels;
-use super::{NodePlan, OperatorProgram, StepKind};
+use super::{NodePlan, OperatorProgram, PanelSet, StepKind};
 
 // ---- slab addressing -----------------------------------------------------
 
@@ -126,6 +126,11 @@ fn streams(win: &mut [f64], batch: usize, d: usize) -> (&mut [f64], &mut [f64], 
 /// only tangent storage (grown on first use, reused verbatim afterwards —
 /// steady-state executions perform no heap allocation beyond the returned
 /// result tensors).
+///
+/// `panels` is the per-call [`PanelSet`] from [`super::pack_panels`] —
+/// packed once per top-level execution by the engine and shared read-only
+/// across shards (never cached with the program: panels hold weight
+/// values). An all-`None` set is always valid and bit-identical.
 pub fn execute_dof(
     program: &OperatorProgram,
     graph: &Graph,
@@ -133,6 +138,7 @@ pub fn execute_dof(
     b_coef: Option<&[f64]>,
     c_coef: Option<f64>,
     x: &Tensor,
+    panels: &PanelSet,
     slab: &mut Vec<f64>,
 ) -> DofResult {
     assert_eq!(x.rank(), 2, "input must be [batch, N]");
@@ -156,8 +162,9 @@ pub fn execute_dof(
             StepKind::Input { in_off } => {
                 input_step(program, ldl, b_coef, x, batch, slab, step.node, *in_off)
             }
-            StepKind::Linear { fused_act } => {
-                linear_step(program, graph, batch, slab, step.node);
+            StepKind::Linear { fused_act, gemm } => {
+                let panel = panels.get(step.node).and_then(|p| p.as_ref());
+                linear_step(program, graph, batch, slab, step.node, *gemm, panel);
                 if let Some(a) = fused_act {
                     activation_step(program, graph, ldl, batch, slab, *a);
                 }
@@ -219,7 +226,16 @@ fn input_step(
     );
 }
 
-fn linear_step(program: &OperatorProgram, graph: &Graph, batch: usize, slab: &mut [f64], id: usize) {
+#[allow(clippy::too_many_arguments)]
+fn linear_step(
+    program: &OperatorProgram,
+    graph: &Graph,
+    batch: usize,
+    slab: &mut [f64],
+    id: usize,
+    gemm: GemmPlan,
+    panel: Option<&PackedPanel>,
+) {
     let node = graph.node(id);
     let (weight, bias) = match &node.op {
         Op::Linear { weight, bias } => (weight, bias),
@@ -240,7 +256,9 @@ fn linear_step(program: &OperatorProgram, graph: &Graph, batch: usize, slab: &mu
     let pv = rd(&ros, v_rng(pp, batch));
     let ps = rd(&ros, s_rng(pp, batch));
     let pg = rd(&ros, g_rng(pp, batch));
-    kernels::linear_forward(weight, bias, batch, t, pv, ps, pg, stacked, gout, v, s, g);
+    kernels::linear_forward(
+        weight, bias, gemm, panel, batch, t, pv, ps, pg, stacked, gout, v, s, g,
+    );
 }
 
 fn activation_step(
@@ -520,7 +538,10 @@ pub fn execute_tape(
             &mut scalars,
             &mut cost,
         );
-        if let StepKind::Linear { fused_act: Some(a) } = &step.kind {
+        if let StepKind::Linear {
+            fused_act: Some(a), ..
+        } = &step.kind
+        {
             tape_node(
                 graph,
                 ldl,
@@ -598,6 +619,10 @@ fn tape_node(
         }
         Op::Linear { weight, bias } => {
             let p = node.inputs[0];
+            let gemm = match kind {
+                StepKind::Linear { gemm, .. } => *gemm,
+                _ => unreachable!("linear node scheduled as non-linear step"),
+            };
             let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
             let rows = batch * (r + 2);
             let mut stacked = Tensor::zeros(&[rows, in_d]);
@@ -608,6 +633,8 @@ fn tape_node(
             kernels::linear_forward(
                 weight,
                 bias,
+                gemm,
+                None,
                 batch,
                 r,
                 values[p].data(),

@@ -44,13 +44,13 @@ use crate::autodiff::backward::backward;
 use crate::autodiff::hessian::HessianResult;
 use crate::autodiff::Cost;
 use crate::graph::{Graph, Op};
-use crate::tensor::{matmul_nt_into, Tensor};
+use crate::tensor::{matmul_nt_planned, GemmPlan, Tensor};
 use crate::util::keyed_cache::KeyedCache;
 
 use super::exec::{carve1, rd};
 use super::kernels;
 use super::layout::SlabLayout;
-use super::{build_schedule, hash_graph_structure, Fnv, Step, StepKind};
+use super::{build_schedule, hash_graph_structure, Fnv, PanelSet, Step, StepKind};
 
 /// Cache key: graph structure + `N`, domain-tagged so Hessian slabs never
 /// collide with DOF program slabs of the same graph in the program-keyed
@@ -105,7 +105,18 @@ impl HessianPlan {
         assert!(len > 0, "cannot compile an empty graph");
         let out_id = graph.output();
         let tau = graph.tau();
-        let steps = build_schedule(graph, &tau);
+        let mut steps = build_schedule(graph, &tau);
+        // Plan-time micro-kernel selection: the Jacobian sweep pushes `n`
+        // width-`N` tangent rows per batch row through each Linear, so the
+        // batch-invariant per-item row count is `n` itself.
+        for step in steps.iter_mut() {
+            if let StepKind::Linear { gemm, .. } = &mut step.kind {
+                if let Op::Linear { weight, .. } = &graph.node(step.node).op {
+                    let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+                    *gemm = GemmPlan::choose(n, in_d, out_d);
+                }
+            }
+        }
         let dim = |j: usize| graph.node(j).dim;
         let is_input = |j: usize| matches!(graph.node(j).op, Op::Input { .. });
 
@@ -196,6 +207,12 @@ impl HessianPlan {
 
     pub fn key(&self) -> HessianKey {
         self.key
+    }
+
+    /// The compiled schedule — exposed so callers can pack weight panels
+    /// ([`super::pack_panels`]) once per top-level execution.
+    pub fn steps(&self) -> &[Step] {
+        &self.steps
     }
 
     pub fn input_dim(&self) -> usize {
@@ -363,6 +380,7 @@ fn block(slot: usize, units: usize, batch: usize) -> Range<usize> {
 /// bit-identical to [`crate::autodiff::HessianEngine::compute_reference`];
 /// `cost` and `peak_tangent_bytes` are the plan's exact analytic replay of
 /// the reference's measured counters.
+#[allow(clippy::too_many_arguments)]
 pub fn execute_hessian(
     plan: &HessianPlan,
     graph: &Graph,
@@ -370,6 +388,7 @@ pub fn execute_hessian(
     b_coef: Option<&[f64]>,
     c_coef: Option<f64>,
     x: &Tensor,
+    panels: &PanelSet,
     slab: &mut Vec<f64>,
 ) -> HessianResult {
     assert_eq!(x.rank(), 2, "input must be [batch, N]");
@@ -402,8 +421,14 @@ pub fn execute_hessian(
     // (2) forward Jacobian tangents (eq. 13) on the slab, schedule-driven.
     let seed = plan.identity_seed();
     for step in plan.steps.iter() {
-        forward_node(plan, graph, seed, &values, batch, slab, step.node, &step.kind);
-        if let StepKind::Linear { fused_act: Some(ai) } = &step.kind {
+        forward_node(
+            plan, graph, seed, &values, batch, slab, step.node, &step.kind, panels,
+        );
+        if let StepKind::Linear {
+            fused_act: Some(ai),
+            ..
+        } = &step.kind
+        {
             forward_node(
                 plan,
                 graph,
@@ -413,6 +438,7 @@ pub fn execute_hessian(
                 slab,
                 *ai,
                 &StepKind::Activation,
+                panels,
             );
         }
     }
@@ -657,6 +683,7 @@ fn forward_node(
     slab: &mut [f64],
     id: usize,
     kind: &StepKind,
+    panels: &PanelSet,
 ) {
     let n = plan.n;
     let node = graph.node(id);
@@ -678,11 +705,16 @@ fn forward_node(
             }
         }
         Op::Linear { weight, .. } => {
+            let gemm = match kind {
+                StepKind::Linear { gemm, .. } => *gemm,
+                _ => unreachable!("linear node scheduled as non-linear step"),
+            };
+            let panel = panels.get(id).and_then(|pn| pn.as_ref());
             let p = node.inputs[0];
             let in_d = weight.dims()[1];
             let pg = rd(&ros, fwd(p));
             win.fill(0.0);
-            matmul_nt_into(pg, weight.data(), win, batch * n, in_d, d);
+            matmul_nt_planned(pg, weight.data(), panel, gemm, win, batch * n, in_d, d);
         }
         Op::Activation { act } => {
             let p = node.inputs[0];

@@ -41,9 +41,18 @@
 //! equivalence suites (`plan_equivalence.rs`, `jet_equivalence.rs`,
 //! `cross_engine_fuzz.rs`) assert planned ≡ interpreter *bitwise* — by
 //! construction, not by coincidence.
+//!
+//! Vectorization: every elementwise inner loop runs through the chunked
+//! lane helpers ([`crate::tensor::lanes`] — explicit 8-wide stable-Rust
+//! chunks with scalar tails, per-element expressions unchanged, so the
+//! rewrite is bit-preserving by construction), and the Linear GEMM
+//! dispatches on the plan-time [`GemmPlan`] recorded in the schedule
+//! (optionally over a caller-packed [`PackedPanel`]) instead of a per-call
+//! row-count branch. `rust/tests/simd_tails.rs` pins the chunked kernels
+//! against retained scalar references at awkward widths.
 
 use crate::graph::Act;
-use crate::tensor::{matmul_into, matmul_nt_into, Tensor};
+use crate::tensor::{lanes, matmul_into, matmul_nt_planned, GemmPlan, PackedPanel, Tensor};
 
 // ---- DOF tuple kernels (eqs. 7–9) ----------------------------------------
 
@@ -94,10 +103,17 @@ pub(crate) fn input_seed(
 /// parent into `stacked` (`batch·(t+2)` rows of `in_d`), run ONE GEMM into
 /// the zero-filled `gout`, scatter back into the node's streams, and add
 /// the bias on the value rows only.
+///
+/// The GEMM runs the micro-kernel `gemm` recorded at plan time (both forms
+/// are bit-identical — see [`crate::tensor::matmul_nt_planned`]); `panel`
+/// is the weight's pre-packed `Bᵀ` when the engine packed one for this
+/// call, `None` on interpreter/tape paths (same bits either way).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn linear_forward(
     weight: &Tensor,
     bias: &[f64],
+    gemm: GemmPlan,
+    panel: Option<&PackedPanel>,
     batch: usize,
     t: usize,
     pv: &[f64],
@@ -117,14 +133,12 @@ pub(crate) fn linear_forward(
     stacked[batch * in_d..2 * batch * in_d].copy_from_slice(ps);
     stacked[2 * batch * in_d..].copy_from_slice(pg);
     gout.fill(0.0);
-    matmul_nt_into(stacked, weight.data(), gout, rows, in_d, out_d);
+    matmul_nt_planned(stacked, weight.data(), panel, gemm, gout, rows, in_d, out_d);
     v.copy_from_slice(&gout[..batch * out_d]);
     s.copy_from_slice(&gout[batch * out_d..2 * batch * out_d]);
     g.copy_from_slice(&gout[2 * batch * out_d..]);
     for b in 0..batch {
-        for (o, &bi) in v[b * out_d..(b + 1) * out_d].iter_mut().zip(bias.iter()) {
-            *o += bi;
-        }
+        lanes::add_assign(&mut v[b * out_d..(b + 1) * out_d], bias);
     }
 }
 
@@ -152,29 +166,30 @@ pub(crate) fn activation_forward(
     for (dst, &src) in v.iter_mut().zip(h.iter()) {
         *dst = act.f(src);
     }
+    // σ' and σ'' are evaluated once per (batch, component) — transcendental
+    // calls don't lane-ize; everything downstream of them does.
     let mut df = vec![0.0; d];
+    let mut d2 = vec![0.0; d];
     let mut quad = vec![0.0; d];
     for b in 0..batch {
         let hrow = &h[b * d..(b + 1) * d];
         for (dv, &hv) in df.iter_mut().zip(hrow.iter()) {
             *dv = act.df(hv);
         }
-        quad.iter_mut().for_each(|q| *q = 0.0);
+        quad.fill(0.0);
         for (kk, &k) in active.iter().enumerate() {
             let sign = signs[k];
             let src = &pg[(b * t + kk) * d..(b * t + kk + 1) * d];
             let dst = &mut g[(b * t + kk) * d..(b * t + kk + 1) * d];
-            for c in 0..d {
-                let gv = src[c];
-                quad[c] += sign * gv * gv;
-                dst[c] = df[c] * gv;
-            }
+            lanes::scaled_sq_acc(&mut quad, sign, src);
+            lanes::mul_into(dst, &df, src);
+        }
+        for (dv, &hv) in d2.iter_mut().zip(hrow.iter()) {
+            *dv = act.d2f(hv);
         }
         let psr = &ps[b * d..(b + 1) * d];
         let sp = &mut s[b * d..(b + 1) * d];
-        for c in 0..d {
-            sp[c] = act.d2f(hrow[c]) * quad[c] + df[c] * psr[c];
-        }
+        lanes::mul_mul_add_into(sp, &d2, &quad, &df, psr);
     }
 }
 
@@ -208,9 +223,7 @@ pub(crate) fn mul_forward(
     // Value chain v = Π_p v^p.
     v.copy_from_slice(pvals[0]);
     for pv in &pvals[1..] {
-        for (dst, &sv) in v.iter_mut().zip(pv.iter()) {
-            *dst *= sv;
-        }
+        lanes::mul_assign(v, pv);
     }
     s.fill(0.0);
     g.fill(0.0);
@@ -221,53 +234,41 @@ pub(crate) fn mul_forward(
     for b in 0..batch {
         for pi in 0..k {
             // Leave-one-out coefficient Π_{q≠pi} v^q.
-            coef.iter_mut().for_each(|c| *c = 1.0);
+            coef.fill(1.0);
             for (qi, pv) in pvals.iter().enumerate() {
                 if qi != pi {
-                    for (c, &xv) in coef.iter_mut().zip(&pv[b * d..(b + 1) * d]) {
-                        *c *= xv;
-                    }
+                    lanes::mul_assign(&mut coef, &pv[b * d..(b + 1) * d]);
                 }
             }
             // Tangent stream (eq. 8 term).
             for kk in 0..t {
                 let src = &aligned[pi][(b * t + kk) * d..(b * t + kk + 1) * d];
                 let dst = &mut g[(b * t + kk) * d..(b * t + kk + 1) * d];
-                for c in 0..d {
-                    dst[c] += coef[c] * src[c];
-                }
+                lanes::mul_acc(dst, &coef, src);
             }
             // Scalar stream, first-order part.
             {
                 let psr = &psums[pi][b * d..(b + 1) * d];
                 let srow = &mut s[b * d..(b + 1) * d];
-                for c in 0..d {
-                    srow[c] += coef[c] * psr[c];
-                }
+                lanes::mul_acc(srow, &coef, psr);
             }
             // Cross term over unordered pairs (pi, qi).
             for qi in (pi + 1)..k {
-                coef2.iter_mut().for_each(|c| *c = 1.0);
+                coef2.fill(1.0);
                 for (ri, pv) in pvals.iter().enumerate() {
                     if ri != pi && ri != qi {
-                        for (c, &xv) in coef2.iter_mut().zip(&pv[b * d..(b + 1) * d]) {
-                            *c *= xv;
-                        }
+                        lanes::mul_assign(&mut coef2, &pv[b * d..(b + 1) * d]);
                     }
                 }
-                cross.iter_mut().for_each(|c| *c = 0.0);
+                cross.fill(0.0);
                 for (kk, &kglob) in active.iter().enumerate() {
                     let sign = signs[kglob];
                     let gp = &aligned[pi][(b * t + kk) * d..(b * t + kk + 1) * d];
                     let gq = &aligned[qi][(b * t + kk) * d..(b * t + kk + 1) * d];
-                    for c in 0..d {
-                        cross[c] += sign * gp[c] * gq[c];
-                    }
+                    lanes::scaled_mul_acc(&mut cross, sign, gp, gq);
                 }
                 let srow = &mut s[b * d..(b + 1) * d];
-                for c in 0..d {
-                    srow[c] += 2.0 * coef2[c] * cross[c];
-                }
+                lanes::scaled_mul_acc(srow, 2.0, &coef2, &cross);
             }
         }
     }
@@ -278,11 +279,14 @@ pub(crate) fn mul_forward(
 // Width-t tangent propagation without the (v, s) streams — the Hessian
 // baseline's forward sweep, shared by `autodiff::forward_jacobian::
 // propagate_tangent` (owned tensors) and `plan::hessian` (slab slots).
-// Linear is a plain `G Wᵀ` GEMM and lives in `tensor::matmul_nt_into`;
+// Linear is a plain `G Wᵀ` GEMM dispatched through the plan-recorded
+// [`crate::tensor::matmul_nt_planned`] (Dot or packed-panel AXPY — both
+// `==`-identical by the summation-order contract);
 // Slice/Add/SumReduce/Concat are pure copies/sums.
 
-/// `G' = σ'(h) ⊙ G`, full assignment (σ' evaluated per (row, component),
-/// exactly as the pre-kernel interpreter did).
+/// `G' = σ'(h) ⊙ G`, full assignment (σ' evaluated once per (batch,
+/// component) and reused across the `t` tangent rows — same values, same
+/// products, so bitwise identical to the per-row evaluation it replaced).
 pub(crate) fn jac_activation(
     act: Act,
     batch: usize,
@@ -293,14 +297,16 @@ pub(crate) fn jac_activation(
     g: &mut [f64],
 ) {
     debug_assert_eq!(g.len(), batch * t * d);
+    let mut df = vec![0.0; d];
     for b in 0..batch {
         let hrow = &h[b * d..(b + 1) * d];
+        for (dv, &hv) in df.iter_mut().zip(hrow.iter()) {
+            *dv = act.df(hv);
+        }
         for kk in 0..t {
             let src = &pg[(b * t + kk) * d..(b * t + kk + 1) * d];
             let dst = &mut g[(b * t + kk) * d..(b * t + kk + 1) * d];
-            for j in 0..d {
-                dst[j] = src[j] * act.df(hrow[j]);
-            }
+            lanes::mul_into(dst, src, &df);
         }
     }
 }
@@ -319,22 +325,19 @@ pub(crate) fn jac_mul(
     debug_assert_eq!(ptangents.len(), k);
     debug_assert_eq!(g.len(), batch * t * d);
     g.fill(0.0);
+    let mut coef = vec![1.0; d];
     for pi in 0..k {
         for b in 0..batch {
-            let mut coef = vec![1.0; d];
+            coef.fill(1.0);
             for (qi, pv) in pvals.iter().enumerate() {
                 if qi != pi {
-                    for (c, &xv) in coef.iter_mut().zip(&pv[b * d..(b + 1) * d]) {
-                        *c *= xv;
-                    }
+                    lanes::mul_assign(&mut coef, &pv[b * d..(b + 1) * d]);
                 }
             }
             for kk in 0..t {
                 let src = &ptangents[pi][(b * t + kk) * d..(b * t + kk + 1) * d];
                 let dst = &mut g[(b * t + kk) * d..(b * t + kk + 1) * d];
-                for j in 0..d {
-                    dst[j] += coef[j] * src[j];
-                }
+                lanes::mul_acc(dst, &coef, src);
             }
         }
     }
@@ -389,9 +392,7 @@ pub(crate) fn hess_activation_reverse(
             let gj = &gbar_j[(b * t + kk) * d..(b * t + kk + 1) * d];
             let gpt = &gp[(b * t + kk) * d..(b * t + kk + 1) * d];
             let dst = &mut contrib[(b * t + kk) * d..(b * t + kk + 1) * d];
-            for c in 0..d {
-                dst[c] = coef1[c] * gj[c] + coef2[c] * gpt[c];
-            }
+            lanes::mul_mul_add_into(dst, &coef1, gj, &coef2, gpt);
         }
     }
 }
@@ -414,45 +415,36 @@ pub(crate) fn hess_mul_reverse_parent(
 ) {
     let k = pvals.len();
     debug_assert_eq!(contrib.len(), batch * t * d);
+    let mut coefp = vec![1.0; d];
+    let mut coefpq = vec![1.0; d];
+    let mut scal = vec![0.0; d];
     for b in 0..batch {
-        let mut coefp = vec![1.0; d];
+        coefp.fill(1.0);
         for (qi, pv) in pvals.iter().enumerate() {
             if qi != pi {
-                for (cc, &v) in coefp.iter_mut().zip(&pv[b * d..(b + 1) * d]) {
-                    *cc *= v;
-                }
+                lanes::mul_assign(&mut coefp, &pv[b * d..(b + 1) * d]);
             }
         }
         for kk in 0..t {
             let gj = &gbar_j[(b * t + kk) * d..(b * t + kk + 1) * d];
             let dst = &mut contrib[(b * t + kk) * d..(b * t + kk + 1) * d];
-            for c in 0..d {
-                dst[c] = coefp[c] * gj[c];
-            }
+            lanes::mul_into(dst, &coefp, gj);
         }
         for qi in 0..k {
             if qi == pi {
                 continue;
             }
-            let mut coefpq = vec![1.0; d];
+            coefpq.fill(1.0);
             for (ri, pv) in pvals.iter().enumerate() {
                 if ri != pi && ri != qi {
-                    for (cc, &v) in coefpq.iter_mut().zip(&pv[b * d..(b + 1) * d]) {
-                        *cc *= v;
-                    }
+                    lanes::mul_assign(&mut coefpq, &pv[b * d..(b + 1) * d]);
                 }
             }
-            let scal: Vec<f64> = coefpq
-                .iter()
-                .zip(&vbar[b * d..(b + 1) * d])
-                .map(|(&cc, &vb)| cc * vb)
-                .collect();
+            lanes::mul_into(&mut scal, &coefpq, &vbar[b * d..(b + 1) * d]);
             for kk in 0..t {
                 let gqt = &ptangents[qi][(b * t + kk) * d..(b * t + kk + 1) * d];
                 let dst = &mut contrib[(b * t + kk) * d..(b * t + kk + 1) * d];
-                for c in 0..d {
-                    dst[c] += scal[c] * gqt[c];
-                }
+                lanes::mul_acc(dst, &scal, gqt);
             }
         }
     }

@@ -20,6 +20,11 @@
 //!   components pushed through the graph), so the per-call rescans of `L`
 //!   at input nodes and the runtime zero-row compaction at slice nodes
 //!   disappear from execution;
+//! * **micro-kernel selection** — each fused `Linear → Activation` step
+//!   records the [`GemmPlan`] its stacked GEMM should run (`Dot` vs
+//!   `PackedAxpy`, serial vs parallel-eligible), chosen at compile time
+//!   from the batch-invariant per-item shape instead of branching on row
+//!   counts inside every GEMM call (see [`crate::tensor::matmul_nt_planned`]);
 //! * **analytic costs** — exact per-row FLOP counts and peak tangent bytes
 //!   (both are exactly linear in the batch), so benches can report them
 //!   without executing, plus the Appendix B/D closed-form models.
@@ -46,6 +51,7 @@ use crate::autodiff::flops::{graph_counts, CostModel, GraphCounts};
 use crate::autodiff::Cost;
 use crate::graph::{Act, Graph, Op};
 use crate::linalg::LdlDecomposition;
+use crate::tensor::{GemmForm, GemmPlan, PackedPanel};
 
 use layout::SlabLayout;
 
@@ -82,8 +88,14 @@ pub enum StepKind {
     /// precomputed).
     Input { in_off: usize },
     /// Affine node; `fused_act` is the id of the following activation node
-    /// when the pair was fused into one step.
-    Linear { fused_act: Option<usize> },
+    /// when the pair was fused into one step, `gemm` the micro-kernel the
+    /// compiler selected for this step's stacked GEMM (batch-invariant —
+    /// chosen from the per-item row count `t + 2`, never the batch; both
+    /// forms are bit-identical, see [`crate::tensor::matmul_nt_planned`]).
+    Linear {
+        fused_act: Option<usize>,
+        gemm: GemmPlan,
+    },
     Activation,
     Slice,
     Add,
@@ -183,7 +195,22 @@ impl OperatorProgram {
         let (actives, keeps, parent_poss) = propagate_support(graph, ldl, r, opts.sparsity);
 
         // ---- schedule with Linear→Activation fusion ---------------------
-        let steps = build_schedule(graph, &tau);
+        let mut steps = build_schedule(graph, &tau);
+
+        // ---- plan-time micro-kernel selection ---------------------------
+        // Specialize each Linear step's GEMM from its batch-invariant
+        // per-item shape: the stacked operand carries `t + 2` rows per
+        // batch row (value + scalar + t tangent rows), with `t` read off
+        // the §3.2 active sets just computed.
+        for step in steps.iter_mut() {
+            if let StepKind::Linear { gemm, .. } = &mut step.kind {
+                if let Op::Linear { weight, .. } = &graph.node(step.node).op {
+                    let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+                    let t = actives[step.node].len();
+                    *gemm = GemmPlan::choose(t + 2, in_d, out_d);
+                }
+            }
+        }
 
         // ---- static slot assignment (per-row units) ---------------------
         let mut nodes: Vec<NodePlan> = (0..len)
@@ -224,7 +251,7 @@ impl OperatorProgram {
                 }
             }
             if let StepKind::Linear {
-                fused_act: Some(a),
+                fused_act: Some(a), ..
             } = &step.kind
             {
                 let a = *a;
@@ -319,7 +346,7 @@ impl OperatorProgram {
     pub fn fused_steps(&self) -> usize {
         self.steps
             .iter()
-            .filter(|s| matches!(s.kind, StepKind::Linear { fused_act: Some(_) }))
+            .filter(|s| matches!(s.kind, StepKind::Linear { fused_act: Some(_), .. }))
             .count()
     }
 
@@ -416,6 +443,10 @@ pub(crate) fn build_schedule(graph: &Graph, tau: &[usize]) -> Vec<Step> {
                     && graph.node(j + 1).inputs == [j];
                 StepKind::Linear {
                     fused_act: if fusable { Some(j + 1) } else { None },
+                    // Neutral pre-specialization default; each compiler
+                    // (operator / jet / Hessian) overwrites it with its own
+                    // per-item row count before the schedule is executed.
+                    gemm: GemmPlan::default(),
                 }
             }
             Op::Activation { .. } => StepKind::Activation,
@@ -425,11 +456,40 @@ pub(crate) fn build_schedule(graph: &Graph, tau: &[usize]) -> Vec<Step> {
             Op::SumReduce => StepKind::SumReduce,
             Op::Concat => StepKind::Concat,
         };
-        let fused = matches!(kind, StepKind::Linear { fused_act: Some(_) });
+        let fused = matches!(kind, StepKind::Linear { fused_act: Some(_), .. });
         steps.push(Step { node: j, kind });
         j += if fused { 2 } else { 1 };
     }
     steps
+}
+
+/// Per-node packed weight panels for one top-level execution, indexed by
+/// graph node id (`None` for non-Linear nodes and Dot-form steps).
+pub type PanelSet = Vec<Option<PackedPanel>>;
+
+/// Pack the `Bᵀ` weight panels for every `PackedAxpy`-form Linear step of a
+/// schedule.
+///
+/// Panels hold weight **values**, so they must never be stored in the
+/// structure-keyed plan caches (which deliberately survive weight moves —
+/// see [`cache::PlanCache`] and `rust/tests/cache_soundness.rs`). Engines
+/// call this once per top-level execution and share the resulting set
+/// read-only across shards; interpreters and the tape executor pass `None`
+/// panels instead (the ad-hoc transpose is bit-identical to the packed
+/// layout, see [`crate::tensor::PackedPanel`]).
+pub fn pack_panels(steps: &[Step], graph: &Graph) -> PanelSet {
+    let mut panels: PanelSet = (0..graph.len()).map(|_| None).collect();
+    for step in steps {
+        if let StepKind::Linear { gemm, .. } = &step.kind {
+            if gemm.form == GemmForm::PackedAxpy {
+                if let Op::Linear { weight, .. } = &graph.node(step.node).op {
+                    let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+                    panels[step.node] = Some(PackedPanel::pack(weight.data(), in_d, out_d));
+                }
+            }
+        }
+    }
+    panels
 }
 
 /// Exact per-row FLOP accumulation, mirroring the reference interpreter's
@@ -947,6 +1007,50 @@ mod tests {
             lower_order_c: false,
         };
         assert_ne!(plan_key(&g1, &ldl, opts), plan_key(&g1, &ldl, opts2));
+    }
+
+    #[test]
+    fn linear_steps_record_shape_driven_gemm_plans() {
+        let mut rng = Xoshiro256::new(6);
+        let g = mlp_graph(&random_layers(&[8, 32, 32, 1], &mut rng), Act::Tanh);
+        let ldl = LdlDecomposition::of(&random_symmetric(8, &mut rng));
+        let p = OperatorProgram::compile(
+            &g,
+            &ldl,
+            PlanOptions {
+                sparsity: true,
+                lower_order_c: false,
+            },
+        );
+        let (mut saw_dot, mut saw_axpy) = (false, false);
+        for step in p.steps() {
+            if let StepKind::Linear { gemm, .. } = &step.kind {
+                let Op::Linear { weight, .. } = &g.node(step.node).op else {
+                    panic!("Linear step on non-Linear node");
+                };
+                let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+                let t = p.node_plan(step.node).t();
+                assert_eq!(*gemm, GemmPlan::choose(t + 2, in_d, out_d));
+                match gemm.form {
+                    GemmForm::Dot => saw_dot = true,
+                    GemmForm::PackedAxpy => saw_axpy = true,
+                }
+            }
+        }
+        assert!(
+            saw_dot && saw_axpy,
+            "[8,32,32,1] should select both GEMM forms"
+        );
+        // Panels are packed exactly for the PackedAxpy-form steps.
+        let panels = pack_panels(p.steps(), &g);
+        for step in p.steps() {
+            if let StepKind::Linear { gemm, .. } = &step.kind {
+                assert_eq!(
+                    panels[step.node].is_some(),
+                    gemm.form == GemmForm::PackedAxpy
+                );
+            }
+        }
     }
 
     #[test]

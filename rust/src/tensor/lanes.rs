@@ -1,0 +1,341 @@
+//! Stable-Rust chunked "lane" helpers — the single home for every
+//! elementwise inner loop in the crate.
+//!
+//! Each helper walks its slices in explicit [`LANES`]-wide chunks
+//! (`chunks_exact` over fixed-size `[f64; LANES]` arrays, so the compiler
+//! sees a branch-free fixed-trip inner loop and vectorizes it on stable
+//! Rust — no nightly `std::simd`) followed by a scalar tail over the
+//! remainder. The per-element arithmetic expression is written once per
+//! helper and is **identical between the lane body and the tail**, so the
+//! chunked sweep is bit-for-bit the scalar sweep for every length —
+//! elementwise ops carry no cross-element accumulation, hence no
+//! summation-order hazard. (Reductions — `sum`, `dot`, `norm_sq` — are
+//! deliberately *not* chunked: lane-wise partial sums would change the
+//! accumulation order and break the bitwise oracles.)
+//!
+//! The [`scalar`] submodule retains plain one-element-at-a-time twins of
+//! every helper. They are not called by the engines; they exist so
+//! `rust/tests/simd_tails.rs` can assert `chunked ≡ scalar` bitwise at
+//! awkward (non-multiple-of-[`LANES`]) lengths.
+
+/// Lane width of the chunked sweeps. Eight f64 lanes span two AVX2
+/// registers or one AVX-512 register; narrower targets split the fixed
+/// 8-trip body into as many native vectors as fit.
+pub const LANES: usize = 8;
+
+#[inline(always)]
+fn lane_zip2(dst: &mut [f64], a: &[f64], mut f: impl FnMut(&mut f64, f64)) {
+    debug_assert_eq!(dst.len(), a.len());
+    let mut d = dst.chunks_exact_mut(LANES);
+    let mut x = a.chunks_exact(LANES);
+    for (d, x) in (&mut d).zip(&mut x) {
+        let d: &mut [f64; LANES] = d.try_into().unwrap();
+        let x: &[f64; LANES] = x.try_into().unwrap();
+        for (d, &x) in d.iter_mut().zip(x) {
+            f(d, x);
+        }
+    }
+    for (d, &x) in d.into_remainder().iter_mut().zip(x.remainder()) {
+        f(d, x);
+    }
+}
+
+#[inline(always)]
+fn lane_zip3(dst: &mut [f64], a: &[f64], b: &[f64], mut f: impl FnMut(&mut f64, f64, f64)) {
+    debug_assert_eq!(dst.len(), a.len());
+    debug_assert_eq!(dst.len(), b.len());
+    let mut d = dst.chunks_exact_mut(LANES);
+    let mut x = a.chunks_exact(LANES);
+    let mut y = b.chunks_exact(LANES);
+    for ((d, x), y) in (&mut d).zip(&mut x).zip(&mut y) {
+        let d: &mut [f64; LANES] = d.try_into().unwrap();
+        let x: &[f64; LANES] = x.try_into().unwrap();
+        let y: &[f64; LANES] = y.try_into().unwrap();
+        for ((d, &x), &y) in d.iter_mut().zip(x).zip(y) {
+            f(d, x, y);
+        }
+    }
+    for ((d, &x), &y) in d
+        .into_remainder()
+        .iter_mut()
+        .zip(x.remainder())
+        .zip(y.remainder())
+    {
+        f(d, x, y);
+    }
+}
+
+#[inline(always)]
+#[allow(clippy::type_complexity)]
+fn lane_zip5(
+    dst: &mut [f64],
+    a: &[f64],
+    b: &[f64],
+    c: &[f64],
+    e: &[f64],
+    mut f: impl FnMut(&mut f64, f64, f64, f64, f64),
+) {
+    debug_assert_eq!(dst.len(), a.len());
+    debug_assert_eq!(dst.len(), b.len());
+    debug_assert_eq!(dst.len(), c.len());
+    debug_assert_eq!(dst.len(), e.len());
+    let mut d = dst.chunks_exact_mut(LANES);
+    let mut xa = a.chunks_exact(LANES);
+    let mut xb = b.chunks_exact(LANES);
+    let mut xc = c.chunks_exact(LANES);
+    let mut xe = e.chunks_exact(LANES);
+    for ((((d, xa), xb), xc), xe) in (&mut d).zip(&mut xa).zip(&mut xb).zip(&mut xc).zip(&mut xe) {
+        let d: &mut [f64; LANES] = d.try_into().unwrap();
+        let xa: &[f64; LANES] = xa.try_into().unwrap();
+        let xb: &[f64; LANES] = xb.try_into().unwrap();
+        let xc: &[f64; LANES] = xc.try_into().unwrap();
+        let xe: &[f64; LANES] = xe.try_into().unwrap();
+        for ((((d, &xa), &xb), &xc), &xe) in
+            d.iter_mut().zip(xa).zip(xb).zip(xc).zip(xe)
+        {
+            f(d, xa, xb, xc, xe);
+        }
+    }
+    for ((((d, &xa), &xb), &xc), &xe) in d
+        .into_remainder()
+        .iter_mut()
+        .zip(xa.remainder())
+        .zip(xb.remainder())
+        .zip(xc.remainder())
+        .zip(xe.remainder())
+    {
+        f(d, xa, xb, xc, xe);
+    }
+}
+
+/// `dst[i] = a[i] + b[i]`.
+#[inline]
+pub fn add_into(dst: &mut [f64], a: &[f64], b: &[f64]) {
+    lane_zip3(dst, a, b, |d, x, y| *d = x + y);
+}
+
+/// `dst[i] = a[i] - b[i]`.
+#[inline]
+pub fn sub_into(dst: &mut [f64], a: &[f64], b: &[f64]) {
+    lane_zip3(dst, a, b, |d, x, y| *d = x - y);
+}
+
+/// `dst[i] = a[i] * b[i]`.
+#[inline]
+pub fn mul_into(dst: &mut [f64], a: &[f64], b: &[f64]) {
+    lane_zip3(dst, a, b, |d, x, y| *d = x * y);
+}
+
+/// `dst[i] = a[i] * s`.
+#[inline]
+pub fn scale_into(dst: &mut [f64], a: &[f64], s: f64) {
+    lane_zip2(dst, a, |d, x| *d = x * s);
+}
+
+/// `dst[i] += a[i]`.
+#[inline]
+pub fn add_assign(dst: &mut [f64], a: &[f64]) {
+    lane_zip2(dst, a, |d, x| *d += x);
+}
+
+/// `dst[i] *= a[i]`.
+#[inline]
+pub fn mul_assign(dst: &mut [f64], a: &[f64]) {
+    lane_zip2(dst, a, |d, x| *d *= x);
+}
+
+/// `dst[i] += alpha * a[i]` (AXPY).
+#[inline]
+pub fn axpy(dst: &mut [f64], alpha: f64, a: &[f64]) {
+    lane_zip2(dst, a, |d, x| *d += alpha * x);
+}
+
+/// `dst[i] += a[i] * b[i]`.
+#[inline]
+pub fn mul_acc(dst: &mut [f64], a: &[f64], b: &[f64]) {
+    lane_zip3(dst, a, b, |d, x, y| *d += x * y);
+}
+
+/// `dst[i] += k * a[i] * b[i]` (left-associated, `(k·a)·b`).
+#[inline]
+pub fn scaled_mul_acc(dst: &mut [f64], k: f64, a: &[f64], b: &[f64]) {
+    lane_zip3(dst, a, b, |d, x, y| *d += k * x * y);
+}
+
+/// `dst[i] += k * a[i] * a[i]` (left-associated, `(k·a)·a`).
+#[inline]
+pub fn scaled_sq_acc(dst: &mut [f64], k: f64, a: &[f64]) {
+    lane_zip2(dst, a, |d, x| *d += k * x * x);
+}
+
+/// `dst[i] = a[i]*b[i] + c[i]*e[i]` — the fused two-product form shared by
+/// the activation scalar stream and the Hessian activation reverse kernel.
+#[inline]
+pub fn mul_mul_add_into(dst: &mut [f64], a: &[f64], b: &[f64], c: &[f64], e: &[f64]) {
+    lane_zip5(dst, a, b, c, e, |d, xa, xb, xc, xe| *d = xa * xb + xc * xe);
+}
+
+/// Plain scalar twins of every lane helper, retained as the bitwise
+/// reference for `rust/tests/simd_tails.rs`. Each body is the textbook
+/// one-element loop with the *same* per-element expression as the chunked
+/// helper above it.
+#[doc(hidden)]
+pub mod scalar {
+    pub fn add_into(dst: &mut [f64], a: &[f64], b: &[f64]) {
+        for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+            *d = x + y;
+        }
+    }
+
+    pub fn sub_into(dst: &mut [f64], a: &[f64], b: &[f64]) {
+        for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+            *d = x - y;
+        }
+    }
+
+    pub fn mul_into(dst: &mut [f64], a: &[f64], b: &[f64]) {
+        for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+            *d = x * y;
+        }
+    }
+
+    pub fn scale_into(dst: &mut [f64], a: &[f64], s: f64) {
+        for (d, &x) in dst.iter_mut().zip(a) {
+            *d = x * s;
+        }
+    }
+
+    pub fn add_assign(dst: &mut [f64], a: &[f64]) {
+        for (d, &x) in dst.iter_mut().zip(a) {
+            *d += x;
+        }
+    }
+
+    pub fn mul_assign(dst: &mut [f64], a: &[f64]) {
+        for (d, &x) in dst.iter_mut().zip(a) {
+            *d *= x;
+        }
+    }
+
+    pub fn axpy(dst: &mut [f64], alpha: f64, a: &[f64]) {
+        for (d, &x) in dst.iter_mut().zip(a) {
+            *d += alpha * x;
+        }
+    }
+
+    pub fn mul_acc(dst: &mut [f64], a: &[f64], b: &[f64]) {
+        for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+            *d += x * y;
+        }
+    }
+
+    pub fn scaled_mul_acc(dst: &mut [f64], k: f64, a: &[f64], b: &[f64]) {
+        for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+            *d += k * x * y;
+        }
+    }
+
+    pub fn scaled_sq_acc(dst: &mut [f64], k: f64, a: &[f64]) {
+        for (d, &x) in dst.iter_mut().zip(a) {
+            *d += k * x * x;
+        }
+    }
+
+    pub fn mul_mul_add_into(dst: &mut [f64], a: &[f64], b: &[f64], c: &[f64], e: &[f64]) {
+        for ((((d, &xa), &xb), &xc), &xe) in dst.iter_mut().zip(a).zip(b).zip(c).zip(e) {
+            *d = xa * xb + xc * xe;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn randv(rng: &mut Xoshiro256, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Every helper, bit-identical to its scalar twin at lengths straddling
+    /// the lane width (the dedicated tail suite widens this to the engine
+    /// level; this is the in-crate smoke check).
+    #[test]
+    fn chunked_matches_scalar_at_awkward_lengths() {
+        let mut rng = Xoshiro256::new(0x1a7e5);
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 33] {
+            let a = randv(&mut rng, n);
+            let b = randv(&mut rng, n);
+            let c = randv(&mut rng, n);
+            let e = randv(&mut rng, n);
+            let seed = randv(&mut rng, n);
+            let k = rng.normal();
+
+            let mut got = seed.clone();
+            let mut want = seed.clone();
+            add_into(&mut got, &a, &b);
+            scalar::add_into(&mut want, &a, &b);
+            assert_eq!(got, want, "add_into n={n}");
+
+            got.copy_from_slice(&seed);
+            want.copy_from_slice(&seed);
+            sub_into(&mut got, &a, &b);
+            scalar::sub_into(&mut want, &a, &b);
+            assert_eq!(got, want, "sub_into n={n}");
+
+            got.copy_from_slice(&seed);
+            want.copy_from_slice(&seed);
+            mul_into(&mut got, &a, &b);
+            scalar::mul_into(&mut want, &a, &b);
+            assert_eq!(got, want, "mul_into n={n}");
+
+            got.copy_from_slice(&seed);
+            want.copy_from_slice(&seed);
+            scale_into(&mut got, &a, k);
+            scalar::scale_into(&mut want, &a, k);
+            assert_eq!(got, want, "scale_into n={n}");
+
+            got.copy_from_slice(&seed);
+            want.copy_from_slice(&seed);
+            add_assign(&mut got, &a);
+            scalar::add_assign(&mut want, &a);
+            assert_eq!(got, want, "add_assign n={n}");
+
+            got.copy_from_slice(&seed);
+            want.copy_from_slice(&seed);
+            mul_assign(&mut got, &a);
+            scalar::mul_assign(&mut want, &a);
+            assert_eq!(got, want, "mul_assign n={n}");
+
+            got.copy_from_slice(&seed);
+            want.copy_from_slice(&seed);
+            axpy(&mut got, k, &a);
+            scalar::axpy(&mut want, k, &a);
+            assert_eq!(got, want, "axpy n={n}");
+
+            got.copy_from_slice(&seed);
+            want.copy_from_slice(&seed);
+            mul_acc(&mut got, &a, &b);
+            scalar::mul_acc(&mut want, &a, &b);
+            assert_eq!(got, want, "mul_acc n={n}");
+
+            got.copy_from_slice(&seed);
+            want.copy_from_slice(&seed);
+            scaled_mul_acc(&mut got, k, &a, &b);
+            scalar::scaled_mul_acc(&mut want, k, &a, &b);
+            assert_eq!(got, want, "scaled_mul_acc n={n}");
+
+            got.copy_from_slice(&seed);
+            want.copy_from_slice(&seed);
+            scaled_sq_acc(&mut got, k, &a);
+            scalar::scaled_sq_acc(&mut want, k, &a);
+            assert_eq!(got, want, "scaled_sq_acc n={n}");
+
+            got.copy_from_slice(&seed);
+            want.copy_from_slice(&seed);
+            mul_mul_add_into(&mut got, &a, &b, &c, &e);
+            scalar::mul_mul_add_into(&mut want, &a, &b, &c, &e);
+            assert_eq!(got, want, "mul_mul_add_into n={n}");
+        }
+    }
+}

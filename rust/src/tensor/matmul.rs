@@ -14,21 +14,179 @@
 //! keeping the parallel product bit-identical. Nested parallelism is
 //! suppressed: a GEMM issued from inside a pool worker (e.g. a shard of the
 //! DOF batch) always runs serially.
+//!
+//! ## Planned dispatch and the bitwise-summation-order contract
+//!
+//! The NT product (`C += A·Bᵀ`, the tangent-propagation shape) has two
+//! micro-kernel forms — the dot form ([`matmul_nt_dot`]) and the
+//! transpose-then-blocked-AXPY form riding [`matmul_into`]. **Every GEMM
+//! output element is a single-accumulator sum over `k` in ascending order
+//! starting from `+0.0`; every micro-kernel must preserve this.** Under
+//! that contract the two forms are `==`-identical for every shape, so a
+//! compiled program may record either form per Linear step ([`GemmPlan`],
+//! chosen by [`GemmPlan::choose`] from the batch-invariant per-item shape)
+//! without disturbing the bitwise oracles. Plan-less callers keep the
+//! runtime `m < 32` heuristic in [`matmul_nt_into`]; planned executors
+//! dispatch through [`matmul_nt_planned`], optionally over a
+//! [`PackedPanel`] holding `Bᵀ` pre-transposed.
 
 use super::Tensor;
 
 /// Cache-block edge for the k and j dimensions, chosen empirically: with
-/// `BLOCK = 128` the inner sweep keeps one 128-wide `B` row segment against
-/// four live `C` row segments (~5 KiB, L1-resident) while a full 128×128 `B`
-/// panel (128 KiB) stays L2-resident across the whole `i` sweep; 64 halves
-/// the panel reuse per load without improving L1 behaviour, and 256 spills
-/// the panel out of L2 on smaller parts.
+/// `BLOCK = 128` the inner sweep keeps one 128-wide segment of a `Bᵀ` row
+/// against four live `C` row segments (~5 KiB, L1-resident) while a full
+/// 128×128 `Bᵀ` tile (128 KiB) stays L2-resident across the whole `i`
+/// sweep; 64 halves the tile reuse per load without improving L1
+/// behaviour, and 256 spills the tile out of L2 on smaller parts. The
+/// sizing is unchanged by panel packing: a [`PackedPanel`] stores exactly
+/// the `[k, n]` row-major `Bᵀ` this kernel consumes, so the `kk`/`jj`
+/// tiles walk the packed panel with the same unit-stride access pattern
+/// the ad-hoc transpose produced — packing moves the `n·k` transpose out
+/// of the per-call hot path, not the blocking.
 const BLOCK: usize = 128;
 
 /// Row-parallel dispatch thresholds: below either, the spawn cost of a
 /// scoped parallel region is not worth it.
+///
+/// For plan-less callers these remain a per-call runtime heuristic
+/// ([`runtime_gemm_threads`]). Compiled programs instead record the
+/// decision at plan time: [`GemmPlan::choose`] stores `parallel`
+/// eligibility (the AXPY form may fan out; the dot form never does) in the
+/// schedule's Linear step, and execution only re-checks the *runtime
+/// clamp* — actual row count against these thresholds plus the
+/// nested-parallelism guard — which depends on the shard shape, never on
+/// the plan.
 const PAR_MIN_ROWS: usize = 64;
 const PAR_MIN_MACS: usize = 1 << 21;
+
+/// Per-batch-item MAC threshold of [`GemmPlan::choose`]: below it the
+/// `n·k` transpose (or a packed-panel's cache footprint) would rival the
+/// GEMM itself and the dot form wins; above it the AXPY form's vectorized
+/// unit-stride inner loop wins (see [`matmul_nt_into`]'s perf note).
+pub const GEMM_DOT_MAX_MACS: usize = 4096;
+
+/// Which NT micro-kernel a compiled Linear step runs.
+///
+/// Both forms satisfy the module-level summation-order contract (one
+/// accumulator per output element, ascending `k`, seeded from `+0.0`), so
+/// the choice is a pure performance decision — results are bit-identical
+/// either way, which is what lets plans record a batch-invariant choice
+/// while plan-less calls keep a row-count heuristic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmForm {
+    /// Dot-product form, 4 columns in flight ([`matmul_nt_dot`]): no
+    /// transpose, serial; wins when the per-item product is tiny.
+    Dot,
+    /// Transpose-then-blocked-AXPY form ([`matmul_into`] over `Bᵀ`),
+    /// fed from a [`PackedPanel`] when the caller packed one.
+    PackedAxpy,
+}
+
+/// The plan-time micro-kernel choice recorded in a compiled schedule's
+/// Linear step — per-call branching hoisted to compile time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmPlan {
+    pub form: GemmForm,
+    /// Whether this step may enter the row-parallel dispatcher. Recorded
+    /// at plan time (the dot form is inherently serial); the runtime clamp
+    /// against actual rows / nested parallelism still applies at execute.
+    pub parallel: bool,
+}
+
+impl GemmPlan {
+    /// Choose the micro-kernel from the **batch-invariant** per-item
+    /// shape: `rows_per_item` is the tangent-row count one batch item
+    /// contributes (DOF `t+2`, jet `t·(k+1)`, Hessian forward `N`), `k`/`n`
+    /// the weight dims. Programs must never key on batch size or thread
+    /// count, so the total row count is unavailable here by design — and
+    /// irrelevant, since both forms are bit-identical.
+    pub fn choose(rows_per_item: usize, k: usize, n: usize) -> Self {
+        if rows_per_item * k * n < GEMM_DOT_MAX_MACS {
+            GemmPlan {
+                form: GemmForm::Dot,
+                parallel: false,
+            }
+        } else {
+            GemmPlan {
+                form: GemmForm::PackedAxpy,
+                parallel: true,
+            }
+        }
+    }
+}
+
+impl Default for GemmPlan {
+    /// Neutral pre-specialization value used by the shared schedule
+    /// builder; each program compiler overwrites it per Linear step.
+    fn default() -> Self {
+        GemmPlan {
+            form: GemmForm::PackedAxpy,
+            parallel: true,
+        }
+    }
+}
+
+/// A cache-aware pre-transposed weight panel for the NT GEMM: `Bᵀ` in the
+/// `[k, n]` row-major layout the blocked AXPY kernel consumes.
+///
+/// Panels hold weight **values**, and compiled programs are cached by
+/// structure only (weight-value-independent — the `cache_soundness` pins),
+/// so panels are *never* stored inside a cached program: engines pack once
+/// per top-level call ([`crate::plan::pack_panels`]) and share the packed
+/// set read-only across shards. The packed layout is bit-for-bit the
+/// ad-hoc transpose [`matmul_nt_into`] performs, so packed and unpacked
+/// executions are `==`-identical.
+#[derive(Debug, Clone)]
+pub struct PackedPanel {
+    bt: Vec<f64>,
+    k: usize,
+    n: usize,
+}
+
+impl PackedPanel {
+    /// Pack `b` (`n×k` row-major, the NT operand) into `Bᵀ` (`k×n`).
+    pub fn pack(b: &[f64], k: usize, n: usize) -> Self {
+        assert_eq!(b.len(), n * k, "panel operand must be n*k");
+        PackedPanel {
+            bt: transpose_nt(b, k, n),
+            k,
+            n,
+        }
+    }
+
+    /// `(k, n)` dims of the packed `Bᵀ`.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.k, self.n)
+    }
+
+    /// The packed `Bᵀ` data, `[k, n]` row-major.
+    pub fn bt(&self) -> &[f64] {
+        &self.bt
+    }
+}
+
+/// Transpose the NT operand `b` (`n×k` row-major) into `Bᵀ` (`k×n`).
+fn transpose_nt(b: &[f64], k: usize, n: usize) -> Vec<f64> {
+    let mut bt = vec![0.0f64; k * n];
+    for j in 0..n {
+        let brow = &b[j * k..(j + 1) * k];
+        for (p, &v) in brow.iter().enumerate() {
+            bt[p * n + j] = v;
+        }
+    }
+    bt
+}
+
+/// The runtime thread-count clamp shared by [`matmul_into`] and the
+/// parallel-eligible planned path: serial inside a pool worker or below
+/// the dispatch thresholds, the global pool width otherwise.
+fn runtime_gemm_threads(m: usize, k: usize, n: usize) -> usize {
+    if crate::parallel::in_worker() || m < PAR_MIN_ROWS || m * k * n < PAR_MIN_MACS {
+        1
+    } else {
+        crate::parallel::global().threads()
+    }
+}
 
 /// `C = A · B` where `A` is `m×k`, `B` is `k×n`.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
@@ -47,15 +205,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 /// bit-identical to the serial kernel (see module docs and
 /// [`matmul_into_threads`]).
 pub fn matmul_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
-    let threads = if crate::parallel::in_worker()
-        || m < PAR_MIN_ROWS
-        || m * k * n < PAR_MIN_MACS
-    {
-        1
-    } else {
-        crate::parallel::global().threads()
-    };
-    matmul_into_threads(a, b, c, m, k, n, threads);
+    matmul_into_threads(a, b, c, m, k, n, runtime_gemm_threads(m, k, n));
 }
 
 /// [`matmul_into`] with an explicit worker count (1 = serial). Row chunks
@@ -231,55 +381,98 @@ pub fn matmul_nt_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n
     if m < 32 {
         // Few output rows (small batch × tangent width, e.g. the sparse
         // architecture's per-block streams): the n·k transpose would rival
-        // the GEMM itself. Dot-product form with 4 columns in flight so the
-        // `a` row feeds four accumulator chains.
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            let crow = &mut c[i * n..(i + 1) * n];
-            let mut j = 0;
-            while j + 4 <= n {
-                let (b0, b1, b2, b3) = (
-                    &b[j * k..(j + 1) * k],
-                    &b[(j + 1) * k..(j + 2) * k],
-                    &b[(j + 2) * k..(j + 3) * k],
-                    &b[(j + 3) * k..(j + 4) * k],
-                );
-                let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-                for p in 0..k {
-                    let av = arow[p];
-                    s0 += av * b0[p];
-                    s1 += av * b1[p];
-                    s2 += av * b2[p];
-                    s3 += av * b3[p];
-                }
-                crow[j] += s0;
-                crow[j + 1] += s1;
-                crow[j + 2] += s2;
-                crow[j + 3] += s3;
-                j += 4;
-            }
-            while j < n {
-                let brow = &b[j * k..(j + 1) * k];
-                let mut acc = 0.0;
-                for p in 0..k {
-                    acc += arow[p] * brow[p];
-                }
-                crow[j] += acc;
-                j += 1;
-            }
-        }
+        // the GEMM itself.
+        matmul_nt_dot(a, b, c, m, k, n);
         return;
     }
     // Transpose B (n×k, row-major) into Bᵀ (k×n), then the blocked
     // AXPY-form kernel (see matmul_into's perf note).
-    let mut bt = vec![0.0f64; k * n];
-    for j in 0..n {
-        let brow = &b[j * k..(j + 1) * k];
-        for (p, &v) in brow.iter().enumerate() {
-            bt[p * n + j] = v;
+    let bt = transpose_nt(b, k, n);
+    matmul_into(a, &bt, c, m, k, n);
+}
+
+/// Dot-product form of the NT GEMM, 4 columns in flight so the `a` row
+/// feeds four accumulator chains. One accumulator per output element,
+/// ascending `p`, seeded from `+0.0` — the summation-order contract.
+pub fn matmul_nt_dot(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j + 4 <= n {
+            let (b0, b1, b2, b3) = (
+                &b[j * k..(j + 1) * k],
+                &b[(j + 1) * k..(j + 2) * k],
+                &b[(j + 2) * k..(j + 3) * k],
+                &b[(j + 3) * k..(j + 4) * k],
+            );
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            for p in 0..k {
+                let av = arow[p];
+                s0 += av * b0[p];
+                s1 += av * b1[p];
+                s2 += av * b2[p];
+                s3 += av * b3[p];
+            }
+            crow[j] += s0;
+            crow[j + 1] += s1;
+            crow[j + 2] += s2;
+            crow[j + 3] += s3;
+            j += 4;
+        }
+        while j < n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            crow[j] += acc;
+            j += 1;
         }
     }
-    matmul_into(a, &bt, c, m, k, n);
+}
+
+/// The planned NT GEMM: dispatch on a compiled [`GemmPlan`] instead of the
+/// runtime `m < 32` heuristic, reading `Bᵀ` from a pre-packed
+/// [`PackedPanel`] when the caller holds one (falling back to an ad-hoc
+/// transpose otherwise — same bits either way).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_planned(
+    a: &[f64],
+    b: &[f64],
+    panel: Option<&PackedPanel>,
+    plan: GemmPlan,
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    match plan.form {
+        GemmForm::Dot => matmul_nt_dot(a, b, c, m, k, n),
+        GemmForm::PackedAxpy => {
+            let threads = if plan.parallel {
+                runtime_gemm_threads(m, k, n)
+            } else {
+                1
+            };
+            match panel {
+                Some(p) => {
+                    assert_eq!(p.dims(), (k, n), "packed panel dims mismatch");
+                    matmul_into_threads(a, p.bt(), c, m, k, n, threads);
+                }
+                None => {
+                    let bt = transpose_nt(b, k, n);
+                    matmul_into_threads(a, &bt, c, m, k, n, threads);
+                }
+            }
+        }
+    }
 }
 
 /// Matrix–vector product `y = A·x` (`A: m×n`).
@@ -374,6 +567,69 @@ mod tests {
                 assert_eq!(serial, par, "threads={threads} m={m} k={k} n={n}");
             }
         }
+    }
+
+    #[test]
+    fn nt_forms_bit_identical_packed_and_unpacked() {
+        let mut rng = Xoshiro256::new(6);
+        // Shapes straddling the old m<32 heuristic, the 4-column dot path,
+        // and non-multiple-of-8 widths.
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 5, 7),
+            (31, 9, 5),
+            (32, 9, 5),
+            (40, 17, 33),
+            (97, 12, 19),
+        ] {
+            let a = Tensor::randn(&[m, k], &mut rng);
+            let b = Tensor::randn(&[n, k], &mut rng);
+            let mut want = vec![0.0; m * n];
+            matmul_nt_into(a.data(), b.data(), &mut want, m, k, n);
+            let panel = PackedPanel::pack(b.data(), k, n);
+            let dot = GemmPlan {
+                form: GemmForm::Dot,
+                parallel: false,
+            };
+            let axpy = GemmPlan {
+                form: GemmForm::PackedAxpy,
+                parallel: true,
+            };
+            for (plan, pp) in [
+                (dot, None),
+                (axpy, None),
+                (axpy, Some(&panel)),
+            ] {
+                let mut got = vec![0.0; m * n];
+                matmul_nt_planned(a.data(), b.data(), pp, plan, &mut got, m, k, n);
+                assert_eq!(
+                    got, want,
+                    "plan={plan:?} packed={} m={m} k={k} n={n}",
+                    pp.is_some()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_panel_is_the_adhoc_transpose() {
+        let mut rng = Xoshiro256::new(7);
+        let (k, n) = (13, 9);
+        let b = Tensor::randn(&[n, k], &mut rng);
+        let panel = PackedPanel::pack(b.data(), k, n);
+        assert_eq!(panel.dims(), (k, n));
+        assert_eq!(panel.bt(), transpose_nt(b.data(), k, n).as_slice());
+    }
+
+    #[test]
+    fn gemm_plan_choice_is_shape_driven() {
+        // Tiny per-item products stay in dot form; the fused-MLP hot shape
+        // goes packed. The exact threshold is a perf knob — the invariant
+        // is batch-invariance and that both forms agree bitwise (above).
+        assert_eq!(GemmPlan::choose(4, 6, 6).form, GemmForm::Dot);
+        assert!(!GemmPlan::choose(4, 6, 6).parallel);
+        assert_eq!(GemmPlan::choose(66, 64, 64).form, GemmForm::PackedAxpy);
+        assert!(GemmPlan::choose(66, 64, 64).parallel);
     }
 
     #[test]

@@ -5,12 +5,14 @@
 //! bench harness. No external BLAS: `matmul` uses a cache-blocked
 //! micro-kernel (see [`matmul`]).
 
+pub mod lanes;
 mod matmul;
 mod ops;
 mod shape;
 
 pub use matmul::{
-    matmul, matmul_into, matmul_into_threads, matmul_nt, matmul_nt_into, matmul_tn, matvec,
+    matmul, matmul_into, matmul_into_threads, matmul_nt, matmul_nt_dot, matmul_nt_into,
+    matmul_nt_planned, matmul_tn, matvec, GemmForm, GemmPlan, PackedPanel, GEMM_DOT_MAX_MACS,
 };
 pub use shape::Shape;
 

@@ -1,6 +1,14 @@
 //! Elementwise and reduction operations on [`Tensor`].
+//!
+//! Elementwise arithmetic routes through the chunked lane helpers
+//! ([`super::lanes`]) — the same loops the shared kernels run, so there is
+//! exactly one copy of each elementwise sweep in the crate (the PR 4
+//! single-kernel invariant extended to elementwise arithmetic).
+//! Reductions (`sum`, `dot`, `norm_sq`, …) stay sequential left-to-right:
+//! chunking them would change the accumulation order and break the
+//! bitwise oracles.
 
-use super::Tensor;
+use super::{lanes, Tensor};
 
 impl Tensor {
     /// Elementwise binary op with another tensor of identical shape.
@@ -28,27 +36,36 @@ impl Tensor {
     }
 
     pub fn add(&self, o: &Tensor) -> Tensor {
-        self.zip_with(o, |a, b| a + b)
+        assert_eq!(self.dims(), o.dims(), "add shape mismatch");
+        let mut out = vec![0.0; self.numel()];
+        lanes::add_into(&mut out, self.data(), o.data());
+        Tensor::from_vec(self.dims(), out)
     }
 
     pub fn sub(&self, o: &Tensor) -> Tensor {
-        self.zip_with(o, |a, b| a - b)
+        assert_eq!(self.dims(), o.dims(), "sub shape mismatch");
+        let mut out = vec![0.0; self.numel()];
+        lanes::sub_into(&mut out, self.data(), o.data());
+        Tensor::from_vec(self.dims(), out)
     }
 
     pub fn mul(&self, o: &Tensor) -> Tensor {
-        self.zip_with(o, |a, b| a * b)
+        assert_eq!(self.dims(), o.dims(), "mul shape mismatch");
+        let mut out = vec![0.0; self.numel()];
+        lanes::mul_into(&mut out, self.data(), o.data());
+        Tensor::from_vec(self.dims(), out)
     }
 
     pub fn scale(&self, s: f64) -> Tensor {
-        self.map(|x| x * s)
+        let mut out = vec![0.0; self.numel()];
+        lanes::scale_into(&mut out, self.data(), s);
+        Tensor::from_vec(self.dims(), out)
     }
 
     /// `self += alpha * other` (AXPY), in place.
     pub fn axpy(&mut self, alpha: f64, other: &Tensor) {
         assert_eq!(self.dims(), other.dims(), "axpy shape mismatch");
-        for (a, &b) in self.data_mut().iter_mut().zip(other.data()) {
-            *a += alpha * b;
-        }
+        lanes::axpy(self.data_mut(), alpha, other.data());
     }
 
     /// Sum of all elements.

@@ -1,0 +1,298 @@
+//! SIMD-tail equivalence suite: the chunked lane helpers and the planned
+//! GEMM forms must be **bit-identical** to their retained scalar references
+//! at awkward (non-multiple-of-[`dof::tensor::lanes::LANES`]) lengths — the
+//! shapes where a vectorized rewrite classically diverges in its remainder
+//! handling.
+//!
+//! Three levels, mirroring the oracle hierarchy:
+//!
+//! 1. **helper level** — every `tensor::lanes` helper vs its `lanes::scalar`
+//!    twin, and every planned NT-GEMM form (dot / AXPY / packed AXPY) vs
+//!    the dot reference, at seeded random lengths straddling the lane width;
+//! 2. **engine level** — planned slab executors vs the reference
+//!    interpreters, bitwise, at widths 1/3/5/7/9, batch 1, tangent width
+//!    `t = 1` (rank-1 operator), plus non-multiple-of-8 Hessian widths —
+//!    and across the seeded `prop::generator` architecture families;
+//! 3. **thread level** — the same odd-width fixtures sharded across
+//!    1/2/4/8 threads stay bit-identical (the lane rewrite must not have
+//!    introduced any thread-count-dependent operation order).
+
+use dof::autodiff::{DofEngine, HessianEngine, TangentArena};
+use dof::graph::{builder::random_layers, mlp_graph, Act};
+use dof::jet::{terms_from_symmetric, DirectionBasis, JetEngine};
+use dof::parallel::Pool;
+use dof::prop::generator::random_operator_case;
+use dof::prop::{run_prop, PropResult};
+use dof::tensor::lanes::{self, scalar, LANES};
+use dof::tensor::{matmul_nt_dot, matmul_nt_planned, GemmForm, GemmPlan, PackedPanel, Tensor};
+use dof::util::Xoshiro256;
+
+fn randv(rng: &mut Xoshiro256, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Every lane helper vs its scalar twin, bitwise, at seeded random lengths
+/// biased toward the tail region around multiples of the lane width.
+#[test]
+fn lane_helpers_bitwise_match_scalar_twins() {
+    run_prop("lane helpers vs scalar twins", 120, 0x5EED_7A11, |g| {
+        // Lengths 0..=LANES*4+1, including every straddle of the lane edge.
+        let n = g.usize_in(0, LANES * 4 + 1);
+        let a = randv(g.rng(), n);
+        let b = randv(g.rng(), n);
+        let c = randv(g.rng(), n);
+        let e = randv(g.rng(), n);
+        let seed = randv(g.rng(), n);
+        let k = g.rng().normal();
+
+        let mut got = seed.clone();
+        let mut want = seed.clone();
+        let check = |name: &str, got: &[f64], want: &[f64]| -> PropResult {
+            if got != want {
+                return Err(format!("{name} diverges from scalar twin at n={n}"));
+            }
+            Ok(())
+        };
+
+        macro_rules! pair {
+            ($name:ident, $($arg:expr),*) => {{
+                got.copy_from_slice(&seed);
+                want.copy_from_slice(&seed);
+                lanes::$name(&mut got, $($arg),*);
+                scalar::$name(&mut want, $($arg),*);
+                check(stringify!($name), &got, &want)?;
+            }};
+        }
+
+        pair!(add_into, &a, &b);
+        pair!(sub_into, &a, &b);
+        pair!(mul_into, &a, &b);
+        pair!(scale_into, &a, k);
+        pair!(add_assign, &a);
+        pair!(mul_assign, &a);
+        pair!(axpy, k, &a);
+        pair!(mul_acc, &a, &b);
+        pair!(scaled_mul_acc, k, &a, &b);
+        pair!(scaled_sq_acc, k, &a);
+        pair!(mul_mul_add_into, &a, &b, &c, &e);
+        Ok(())
+    });
+}
+
+/// Every planned NT-GEMM form — dot, ad-hoc-transpose AXPY, packed-panel
+/// AXPY, parallel-eligible or not — agrees bitwise with the dot reference
+/// at seeded shapes straddling the 4-row/4-column micro-kernels and the
+/// lane width.
+#[test]
+fn planned_gemm_forms_bitwise_identical_at_awkward_shapes() {
+    run_prop("planned GEMM forms bitwise", 80, 0x6E44_0075, |g| {
+        let m = g.usize_in(1, 41);
+        let k = g.usize_in(1, 19);
+        let n = g.usize_in(1, 23);
+        let a = randv(g.rng(), m * k);
+        let b = randv(g.rng(), n * k);
+        let mut want = vec![0.0; m * n];
+        matmul_nt_dot(&a, &b, &mut want, m, k, n);
+
+        let panel = PackedPanel::pack(&b, k, n);
+        let plans = [
+            (GemmForm::Dot, false, false),
+            (GemmForm::PackedAxpy, false, false),
+            (GemmForm::PackedAxpy, true, false),
+            (GemmForm::PackedAxpy, false, true),
+            (GemmForm::PackedAxpy, true, true),
+        ];
+        for (form, parallel, packed) in plans {
+            let plan = GemmPlan { form, parallel };
+            let pp = if packed { Some(&panel) } else { None };
+            let mut got = vec![0.0; m * n];
+            matmul_nt_planned(&a, &b, pp, plan, &mut got, m, k, n);
+            if got != want {
+                return Err(format!(
+                    "form={form:?} parallel={parallel} packed={packed} \
+                     diverges at m={m} k={k} n={n}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// DOF planned executor ≡ reference interpreter, bitwise, at hidden widths
+/// 1/3/5/7/9, batch 1, tangent width `t = 1` (rank-1 coefficient matrix) —
+/// the minimal shapes where every chunked sweep is pure scalar tail.
+#[test]
+fn dof_planned_bitwise_at_odd_widths_batch1_t1() {
+    let mut rng = Xoshiro256::new(0x0DD5);
+    for d in [1usize, 3, 5, 7, 9] {
+        let n = 3;
+        let g = mlp_graph(&random_layers(&[n, d, d, 1], &mut rng), Act::Tanh);
+        let x = Tensor::randn(&[1, n], &mut rng).scale(0.5);
+        // Exactly rank-1 coefficient matrix (single diagonal entry) → a
+        // single tangent direction, `L[φ] = 1.5·∂²₀₀φ`.
+        let mut a = Tensor::zeros(&[n, n]);
+        a.set(0, 0, 1.5);
+        let eng = DofEngine::new(&a);
+        assert_eq!(eng.rank(), 1, "rank-1 A must give t=1 (width {d})");
+        let planned = eng.compute(&g, &x);
+        let interp = eng.compute_with_arena(&g, &x, &mut TangentArena::new());
+        assert_eq!(planned.values, interp.values, "values (width {d})");
+        assert_eq!(
+            planned.operator_values, interp.operator_values,
+            "L[φ] (width {d})"
+        );
+        assert_eq!(
+            planned.out_tangent.data, interp.out_tangent.data,
+            "tangent (width {d})"
+        );
+        assert_eq!(planned.cost, interp.cost, "cost (width {d})");
+        assert_eq!(
+            planned.peak_tangent_bytes, interp.peak_tangent_bytes,
+            "peak (width {d})"
+        );
+    }
+}
+
+/// Program-scheduled Hessian ≡ reference path, bitwise, at
+/// non-multiple-of-8 tangent widths (`N` = 5/7/9 is the Jacobian sweep's
+/// per-item row count, so every GEMM and lane sweep carries a tail).
+#[test]
+fn hessian_planned_bitwise_at_non_multiple_of_8_widths() {
+    let mut rng = Xoshiro256::new(0x4E55);
+    for n in [5usize, 7, 9] {
+        let g = mlp_graph(&random_layers(&[n, 9, 7, 1], &mut rng), Act::Sin);
+        let x = Tensor::randn(&[3, n], &mut rng).scale(0.5);
+        let b = Tensor::randn(&[n, n], &mut rng);
+        let a = b.add(&b.transpose()).scale(0.5);
+        let eng = HessianEngine::new(&a);
+        let planned = eng.compute(&g, &x);
+        let reference = eng.compute_reference(&g, &x);
+        assert_eq!(planned.values, reference.values, "values (N={n})");
+        assert_eq!(planned.gradient, reference.gradient, "gradient (N={n})");
+        assert_eq!(planned.hessian, reference.hessian, "Hessian (N={n})");
+        assert_eq!(
+            planned.operator_values, reference.operator_values,
+            "L[φ] (N={n})"
+        );
+        assert_eq!(planned.cost, reference.cost, "cost (N={n})");
+        assert_eq!(
+            planned.peak_tangent_bytes, reference.peak_tangent_bytes,
+            "peak (N={n})"
+        );
+    }
+}
+
+/// The seeded `prop::generator` architecture families (MLP, sparse-product,
+/// add-branches, concat-head) stay bitwise planned ≡ interpreter under the
+/// chunked kernels — all three engines.
+#[test]
+fn generator_families_planned_bitwise_under_chunked_kernels() {
+    run_prop("generator families, chunked kernels", 40, 0x7A11_FA4, |g| {
+        let case = random_operator_case(g);
+        let what = case.family;
+
+        let eng = DofEngine::new(&case.a).with_lower_order(case.b.clone(), case.c);
+        let planned = eng.compute(&case.graph, &case.x);
+        let interp = eng.compute_with_arena(&case.graph, &case.x, &mut TangentArena::new());
+        if planned.values != interp.values
+            || planned.operator_values != interp.operator_values
+            || planned.out_tangent.data != interp.out_tangent.data
+        {
+            return Err(format!("{what}: dof planned vs interpreter diverged"));
+        }
+
+        let hes = HessianEngine::new(&case.a).with_lower_order(case.b.clone(), case.c);
+        let hp = hes.compute(&case.graph, &case.x);
+        let hr = hes.compute_reference(&case.graph, &case.x);
+        if hp.values != hr.values
+            || hp.hessian != hr.hessian
+            || hp.operator_values != hr.operator_values
+        {
+            return Err(format!("{what}: hessian planned vs reference diverged"));
+        }
+
+        let basis = DirectionBasis::from_terms(
+            case.n(),
+            &terms_from_symmetric(&case.a),
+            case.b.as_deref(),
+        );
+        let jeng = JetEngine::new(basis).with_constant(case.c);
+        let jp = jeng.compute(&case.graph, &case.x);
+        let jr = jeng.compute_with_arena(&case.graph, &case.x, &mut TangentArena::new());
+        if jp.values != jr.values
+            || jp.operator_values != jr.operator_values
+            || jp.out_jet.data != jr.out_jet.data
+        {
+            return Err(format!("{what}: jet planned vs interpreter diverged"));
+        }
+        Ok(())
+    });
+}
+
+/// Odd-width fixtures sharded across 1/2/4/8 threads: bit-identical to the
+/// single-thread base and to the unsharded engines on every path (DOF,
+/// Hessian, jet). Guards against any thread-count-dependent operation
+/// order sneaking into the chunked kernels or the packed-panel sharing.
+#[test]
+fn thread_counts_bitwise_invariant_on_odd_widths() {
+    let mut rng = Xoshiro256::new(0x7423_AD5);
+    let n = 7;
+    let g = mlp_graph(&random_layers(&[n, 33, 9, 1], &mut rng), Act::Tanh);
+    // Batch with a short last shard at shard_rows = 4.
+    let x = Tensor::randn(&[13, n], &mut rng).scale(0.5);
+    let b = Tensor::randn(&[n, n], &mut rng);
+    let a = b.add(&b.transpose()).scale(0.5);
+    let shard_rows = 4;
+
+    let dof = DofEngine::new(&a);
+    let dof_full = dof.compute(&g, &x);
+    let dof_base = dof.compute_sharded(&g, &x, &Pool::new(1), shard_rows);
+    assert_eq!(dof_base.values, dof_full.values);
+    assert_eq!(dof_base.operator_values, dof_full.operator_values);
+
+    let hes = HessianEngine::new(&a);
+    let hes_full = hes.compute(&g, &x);
+    let hes_base = hes.compute_sharded(&g, &x, &Pool::new(1), shard_rows);
+    assert_eq!(hes_base.values, hes_full.values);
+    assert_eq!(hes_base.hessian, hes_full.hessian);
+    assert_eq!(hes_base.operator_values, hes_full.operator_values);
+
+    let jeng = JetEngine::new(DirectionBasis::from_terms(
+        n,
+        &terms_from_symmetric(&a),
+        None,
+    ));
+    let jet_full = jeng.compute(&g, &x);
+    let jet_base = jeng.compute_sharded(&g, &x, &Pool::new(1), shard_rows);
+    assert_eq!(jet_base.values, jet_full.values);
+    assert_eq!(jet_base.operator_values, jet_full.operator_values);
+
+    for threads in [2usize, 4, 8] {
+        let pool = Pool::new(threads);
+        let d = dof.compute_sharded(&g, &x, &pool, shard_rows);
+        assert_eq!(d.values, dof_base.values, "dof values at {threads} threads");
+        assert_eq!(
+            d.operator_values, dof_base.operator_values,
+            "dof L[φ] at {threads} threads"
+        );
+        assert_eq!(d.cost, dof_base.cost, "dof cost at {threads} threads");
+
+        let h = hes.compute_sharded(&g, &x, &pool, shard_rows);
+        assert_eq!(h.hessian, hes_base.hessian, "hessian at {threads} threads");
+        assert_eq!(
+            h.operator_values, hes_base.operator_values,
+            "hessian L[φ] at {threads} threads"
+        );
+
+        let j = jeng.compute_sharded(&g, &x, &pool, shard_rows);
+        assert_eq!(j.values, jet_base.values, "jet values at {threads} threads");
+        assert_eq!(
+            j.operator_values, jet_base.operator_values,
+            "jet L[φ] at {threads} threads"
+        );
+        assert_eq!(
+            j.out_jet.data, jet_base.out_jet.data,
+            "jet output at {threads} threads"
+        );
+    }
+}
