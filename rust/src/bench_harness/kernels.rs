@@ -2,7 +2,7 @@
 //! sweeps and packed-vs-unpacked throughput for the planned NT GEMM —
 //! `dof bench kernels`.
 //!
-//! Emits the schema-v5 `BENCH_kernels.json` trajectory file. Two column
+//! Emits the schema-v6 `BENCH_kernels.json` trajectory file. Two column
 //! classes:
 //!
 //! * **analytic** — element counts, MAC counts, and the [`GemmPlan`] each
@@ -173,20 +173,22 @@ pub fn run_kernel_bench(cfg: &KernelsConfig) -> KernelsReport {
     KernelsReport { elementwise, gemm }
 }
 
-/// Serialize to the schema-v5 `BENCH_kernels.json` format: a top-level
+/// Serialize to the schema-v6 `BENCH_kernels.json` format: a top-level
 /// `kernels` object carrying the analytic selection constants, the
 /// per-helper ns/element rows, and the packed-vs-unpacked GEMM rows.
 pub fn kernels_json(cfg: &KernelsConfig, report: &KernelsReport) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"kernels\",\n");
-    s.push_str("  \"schema\": 5,\n");
+    s.push_str("  \"schema\": 6,\n");
     s.push_str(
-        "  \"provenance\": \"schema v5 (SIMD-ized kernels + plan-time micro-kernel \
-         specialization): adds the kernels object — per-helper ns/element for the \
-         chunked lane sweeps and dot vs unpacked-AXPY vs packed-panel NT-GEMM \
-         throughput, with the analytic GemmPlan choice per shape; v4 added the \
-         robustness object, v3 the pool object, v2 the order column\",\n",
+        "  \"provenance\": \"schema v6 (observability): version lockstep with the \
+         grid report, whose v6 adds the latency_percentiles object; v5 (SIMD-ized \
+         kernels + plan-time micro-kernel specialization) added this kernels object \
+         — per-helper ns/element for the chunked lane sweeps and dot vs \
+         unpacked-AXPY vs packed-panel NT-GEMM throughput, with the analytic \
+         GemmPlan choice per shape; v4 added the robustness object, v3 the pool \
+         object, v2 the order column\",\n",
     );
     s.push_str(&format!(
         "  \"config\": {{\"len\": {}, \"seed\": {}}},\n",
@@ -249,7 +251,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn kernel_bench_runs_and_serializes_schema_v5() {
+    fn kernel_bench_runs_and_serializes_schema_v6() {
         let cfg = KernelsConfig {
             len: 67,
             gemm_shapes: vec![(3, 5, 7), (66, 64, 64)],
@@ -272,7 +274,7 @@ mod tests {
         assert!(report.gemm[1].plan.parallel);
         let json = kernels_json(&cfg, &report);
         assert!(json.contains("\"bench\": \"kernels\""));
-        assert!(json.contains("\"schema\": 5"));
+        assert!(json.contains("\"schema\": 6"));
         assert!(json.contains("\"kernels\""));
         assert!(json.contains(&format!("\"lanes\": {LANES}")));
         assert!(json.contains(&format!("\"dot_max_macs\": {GEMM_DOT_MAX_MACS}")));

@@ -26,6 +26,7 @@ use crate::nn::{Mlp, MlpSpec};
 use crate::operators::{CoeffSpec, Operator};
 use crate::parallel::{Pool, DEFAULT_SHARD_ROWS};
 use crate::tensor::Tensor;
+use crate::util::stats::percentile_sorted;
 use crate::util::Xoshiro256;
 
 use super::table1::Table1Config;
@@ -114,14 +115,30 @@ pub struct RobustnessProbe {
     pub replicas: usize,
 }
 
+/// Client-observed latency distribution from a deterministic routed soak
+/// (see [`measure_latency_soak`]): serial capacity-sized requests against
+/// one clean DOF replica, each round trip timed on the client and reduced
+/// to p50/p95/p99 with [`percentile_sorted`]. Schema-v6 records these so a
+/// latency-distribution regression in the serving tier shows up in the
+/// perf trajectory, not just the means.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencySoak {
+    /// Requests the soak drove through the router.
+    pub requests: u64,
+    pub p50_seconds: f64,
+    pub p95_seconds: f64,
+    pub p99_seconds: f64,
+}
+
 /// Grid sweep output: per-cell execute measurements plus the one-time
-/// plan-compile, pool-lifecycle, and fault-tier data.
+/// plan-compile, pool-lifecycle, fault-tier, and latency-soak data.
 #[derive(Debug, Clone)]
 pub struct GridReport {
     pub cells: Vec<GridCell>,
     pub plan: PlanTiming,
     pub pool: PoolTiming,
     pub robustness: RobustnessProbe,
+    pub soak: LatencySoak,
 }
 
 /// Measure [`PoolTiming`]: one region before any other parallel work in
@@ -173,6 +190,7 @@ pub fn measure_robustness(graph: &Graph, op: &Operator) -> RobustnessProbe {
             probe_after_ticks: 4,
             probe_successes: 1,
         },
+        tracer: None,
     });
     let rows = 2usize;
     let policy = BatchPolicy {
@@ -252,6 +270,53 @@ pub fn measure_robustness(graph: &Graph, op: &Operator) -> RobustnessProbe {
         quarantine_events: snap.quarantine_events,
         healthy_replicas: healthy,
         replicas,
+    }
+}
+
+/// Run the latency soak: one clean DOF replica behind a default router,
+/// serial capacity-sized requests (no faults, no deadlines), each round
+/// trip timed on the client. The measured seconds are data-plane wall
+/// clock, but the schedule is fixed, so the sample count and percentile
+/// positions are exact and reproducible.
+pub fn measure_latency_soak(graph: &Graph, op: &Operator) -> LatencySoak {
+    let mut router = Router::new();
+    let rows = 2usize;
+    let policy = BatchPolicy {
+        capacity: rows,
+        max_wait: std::time::Duration::from_millis(1),
+    };
+    let pool = Pool::new(1);
+    router.register(
+        "latency-soak",
+        ModelServer::spawn_dof_cfg(
+            graph.clone(),
+            op.dof_engine(),
+            policy,
+            pool,
+            DEFAULT_SHARD_ROWS,
+            ServeConfig::labeled("latency-soak"),
+        ),
+    );
+    let client = router.client("latency-soak").expect("model registered above");
+    let n = graph.input_dim();
+    let mut rng = Xoshiro256::new(23);
+    let requests = 32u64;
+    let mut lat = Vec::with_capacity(requests as usize);
+    for _ in 0..requests {
+        let pts: Vec<f32> = (0..rows * n).map(|_| rng.normal() as f32).collect();
+        let t0 = std::time::Instant::now();
+        client
+            .eval_blocking(pts)
+            .expect("soak traffic has no fault injection");
+        lat.push(t0.elapsed().as_secs_f64());
+    }
+    router.shutdown();
+    lat.sort_by(f64::total_cmp);
+    LatencySoak {
+        requests,
+        p50_seconds: percentile_sorted(&lat, 0.50),
+        p95_seconds: percentile_sorted(&lat, 0.95),
+        p99_seconds: percentile_sorted(&lat, 0.99),
     }
 }
 
@@ -352,14 +417,17 @@ pub fn run_table1_grid(
         }
     }
     crate::parallel::set_global_threads(ambient_threads);
-    // The fault-tier probe runs last so its (tiny, single-threaded) serving
-    // traffic cannot perturb the pool-lifecycle or per-cell measurements.
+    // The fault-tier probe and latency soak run last so their (tiny,
+    // single-threaded) serving traffic cannot perturb the pool-lifecycle
+    // or per-cell measurements.
     let robustness = measure_robustness(&graph, &op);
+    let soak = measure_latency_soak(&graph, &op);
     GridReport {
         cells,
         plan,
         pool: pool_timing,
         robustness,
+        soak,
     }
 }
 
@@ -371,18 +439,20 @@ pub fn grid_json(cfg: &Table1Config, report: &GridReport) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"table1_mlp_grid\",\n");
-    s.push_str("  \"schema\": 5,\n");
+    s.push_str("  \"schema\": 6,\n");
     s.push_str("  \"order\": 2,\n");
     s.push_str("  \"operator\": \"elliptic\",\n");
     s.push_str(
-        "  \"provenance\": \"schema v5 (SIMD-ized kernels + plan-time micro-kernel \
-         specialization): grid cells now execute over plan-recorded GemmPlan dispatch \
-         and per-call packed weight panels, and the companion `dof bench kernels` \
-         report carries the kernels object; v4 added the robustness object (exact \
-         shed/retry/deadline/quarantine counters from a scripted fault-injection \
-         serving run); v3 added the pool object (cold vs warm region dispatch, spawn \
-         events); v2 added the order column so order-2 (DOF) and order-4 (jet) grids \
-         share one trajectory format\",\n",
+        "  \"provenance\": \"schema v6 (observability): adds the latency_percentiles \
+         object (client-observed p50/p95/p99 from a deterministic routed soak); v5 \
+         (SIMD-ized kernels + plan-time micro-kernel specialization): grid cells \
+         execute over plan-recorded GemmPlan dispatch and per-call packed weight \
+         panels, and the companion `dof bench kernels` report carries the kernels \
+         object; v4 added the robustness object (exact shed/retry/deadline/quarantine \
+         counters from a scripted fault-injection serving run); v3 added the pool \
+         object (cold vs warm region dispatch, spawn events); v2 added the order \
+         column so order-2 (DOF) and order-4 (jet) grids share one trajectory \
+         format\",\n",
     );
     s.push_str(&format!(
         "  \"config\": {{\"n\": {}, \"hidden\": {}, \"layers\": {}, \"seed\": {}, \"shard_rows\": {}}},\n",
@@ -418,6 +488,14 @@ pub fn grid_json(cfg: &Table1Config, report: &GridReport) -> String {
         report.robustness.quarantine_events,
         report.robustness.healthy_replicas,
         report.robustness.replicas
+    ));
+    s.push_str(&format!(
+        "  \"latency_percentiles\": {{\"requests\": {}, \"p50_ms\": {:.4}, \
+         \"p95_ms\": {:.4}, \"p99_ms\": {:.4}}},\n",
+        report.soak.requests,
+        report.soak.p50_seconds * 1e3,
+        report.soak.p95_seconds * 1e3,
+        report.soak.p99_seconds * 1e3
     ));
     s.push_str("  \"cells\": [\n");
     for (i, c) in cells.iter().enumerate() {
@@ -500,9 +578,16 @@ mod tests {
         assert_eq!((r.retries, r.engine_faults), (2, 2));
         assert_eq!(r.quarantine_events, 1);
         assert_eq!((r.healthy_replicas, r.replicas), (2, 2));
+        // The latency soak is a fixed-size schedule; its percentiles are
+        // real client-observed measurements, so only order is asserted.
+        assert_eq!(report.soak.requests, 32);
+        assert!(report.soak.p50_seconds >= 0.0);
+        assert!(report.soak.p50_seconds <= report.soak.p95_seconds);
+        assert!(report.soak.p95_seconds <= report.soak.p99_seconds);
         let json = grid_json(&cfg, &report);
         assert!(json.contains("\"bench\": \"table1_mlp_grid\""));
-        assert!(json.contains("\"schema\": 5"));
+        assert!(json.contains("\"schema\": 6"));
+        assert!(json.contains("\"latency_percentiles\""));
         assert!(json.contains("\"order\": 2"));
         assert!(json.contains("\"plan\""));
         assert!(json.contains("\"compile_ms\""));

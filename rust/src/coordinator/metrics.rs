@@ -45,6 +45,9 @@ struct Inner {
     padded_rows: u64,
     latency: Option<LatencyHistogram>,
     exec_latency: Option<LatencyHistogram>,
+    /// Time requests sat in the worker queue before being cut into a batch
+    /// (the end-to-end latency minus execute minus response plumbing).
+    queue_wait: Option<LatencyHistogram>,
     // Parallel (sharded BatchFn) path.
     shards: u64,
     shard_seconds: f64,
@@ -63,8 +66,14 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub padded_rows: u64,
     pub mean_latency: f64,
+    pub p50_latency: f64,
     pub p95_latency: f64,
+    pub p99_latency: f64,
     pub mean_exec_latency: f64,
+    pub p95_exec_latency: f64,
+    /// Mean time requests waited in the worker queue before batch cut.
+    pub mean_queue_wait: f64,
+    pub p95_queue_wait: f64,
     /// Fraction of executed rows that were real (non-padding).
     pub batch_efficiency: f64,
     /// Shards executed by the parallel `BatchFn` path.
@@ -121,6 +130,15 @@ impl Metrics {
             .record(exec_s);
     }
 
+    /// Record the queue wait of one request at the moment it is cut into a
+    /// batch (enqueue → batch formation).
+    pub fn record_queue_wait(&self, wait_s: f64) {
+        self.guard()
+            .queue_wait
+            .get_or_insert_with(LatencyHistogram::new)
+            .record(wait_s);
+    }
+
     /// Record one parallel (sharded) batch execution: per-shard compute
     /// seconds plus the wall time of the whole sharded region.
     pub fn record_shards(&self, shard_secs: &[f64], wall_s: f64) {
@@ -161,8 +179,21 @@ impl Metrics {
             batches: g.batches,
             padded_rows: g.padded_rows,
             mean_latency: g.latency.as_ref().map(|h| h.mean()).unwrap_or(0.0),
+            p50_latency: g.latency.as_ref().map(|h| h.quantile(0.50)).unwrap_or(0.0),
             p95_latency: g.latency.as_ref().map(|h| h.quantile(0.95)).unwrap_or(0.0),
+            p99_latency: g.latency.as_ref().map(|h| h.quantile(0.99)).unwrap_or(0.0),
             mean_exec_latency: g.exec_latency.as_ref().map(|h| h.mean()).unwrap_or(0.0),
+            p95_exec_latency: g
+                .exec_latency
+                .as_ref()
+                .map(|h| h.quantile(0.95))
+                .unwrap_or(0.0),
+            mean_queue_wait: g.queue_wait.as_ref().map(|h| h.mean()).unwrap_or(0.0),
+            p95_queue_wait: g
+                .queue_wait
+                .as_ref()
+                .map(|h| h.quantile(0.95))
+                .unwrap_or(0.0),
             batch_efficiency: if executed == 0 {
                 1.0
             } else {
@@ -226,6 +257,27 @@ mod tests {
         assert_eq!(s.sharded_batches, 2);
         // 0.058 compute seconds over 0.023 wall seconds ≈ 2.5× concurrency.
         assert!(s.parallel_occupancy > 2.0 && s.parallel_occupancy < 3.0);
+    }
+
+    #[test]
+    fn latency_split_and_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record_request(1, i as f64 * 1e-4);
+        }
+        m.record_queue_wait(5e-4);
+        m.record_queue_wait(7e-4);
+        m.record_batch(2, 2, 3e-4);
+        let s = m.snapshot();
+        // Percentile chain is monotone on the bucket bounds.
+        assert!(s.p50_latency <= s.p95_latency);
+        assert!(s.p95_latency <= s.p99_latency);
+        assert!(s.p50_latency > 0.0);
+        // Queue-wait vs execute split are recorded independently.
+        assert!(s.mean_queue_wait > 0.0);
+        assert!(s.p95_queue_wait >= s.mean_queue_wait * 0.5);
+        assert!(s.mean_exec_latency > 0.0);
+        assert!(s.p95_exec_latency >= s.mean_exec_latency * 0.5);
     }
 
     #[test]

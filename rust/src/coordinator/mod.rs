@@ -37,7 +37,7 @@ pub use fault::{
     TickClock,
 };
 pub use health::{Gate, HealthPolicy, HealthState, HealthTracker};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{ReplicaSnapshot, Router, RouterClient, RouterConfig, RouterModelSnapshot};
 pub use server::{BatchFn, ModelServer, ServeConfig, ServerHandle};
 

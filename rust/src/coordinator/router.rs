@@ -50,8 +50,11 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
+
+use crate::obs::{Span, SpanKind, TraceContext, Tracer};
 
 use super::fault::{ServeError, TickClock};
 use super::health::{Gate, HealthPolicy, HealthState, HealthTracker};
@@ -74,6 +77,13 @@ pub struct RouterConfig {
     pub clock: TickClock,
     /// Health escalation thresholds applied to every replica.
     pub health: HealthPolicy,
+    /// Span sink for request tracing: when set, every routed request
+    /// records a `request → attempt → …` span tree (the serving layers
+    /// below add queue-wait / batch / execute / shard children). Share the
+    /// same tracer with every replica's [`super::ServeConfig`]. `None`
+    /// (the default) records nothing; tracing is bitwise-invisible either
+    /// way.
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 /// Per-model routing counters (shared between the router and its clients).
@@ -399,9 +409,40 @@ impl RouterClient {
         out
     }
 
+    /// Trace boundary: with a tracer configured, allocate the request's
+    /// root span id up front (attempts parent under it) and record the
+    /// root span once the attempt loop resolves. Without one, this is a
+    /// direct call into the attempt loop — same bytes either way.
+    fn route(&self, points: &[f32]) -> std::result::Result<EvalResponse, ServeError> {
+        let Some(tracer) = &self.cfg.tracer else {
+            return self.route_inner(points, None);
+        };
+        let root = tracer.next_id();
+        let start_tick = self.cfg.clock.now();
+        let t0 = Instant::now();
+        let out = self.route_inner(points, Some(root));
+        let width = self.width().max(1);
+        tracer.record(Span {
+            id: root,
+            parent: 0,
+            request: root,
+            kind: SpanKind::Request,
+            label: self.model.clone(),
+            start_tick,
+            end_tick: self.cfg.clock.now(),
+            seconds: t0.elapsed().as_secs_f64(),
+            detail: (points.len() / width) as u64,
+        });
+        out
+    }
+
     /// The attempt loop: pick a replica, dispatch, classify the outcome,
     /// fail over while the budget and deadline allow.
-    fn route(&self, points: &[f32]) -> std::result::Result<EvalResponse, ServeError> {
+    fn route_inner(
+        &self,
+        points: &[f32],
+        root: Option<u64>,
+    ) -> std::result::Result<EvalResponse, ServeError> {
         let clock = &self.cfg.clock;
         let deadline = self
             .cfg
@@ -434,7 +475,37 @@ impl RouterClient {
             let (handle, state) = &self.replicas[idx];
             tried[idx] = true;
             state.attempts.fetch_add(1, Ordering::Relaxed);
-            match handle.eval_with_deadline(points.to_vec(), deadline) {
+            // Attempt span: allocated before dispatch so the replica's
+            // queue/batch/execute spans can parent under it, recorded
+            // after the attempt resolves.
+            let trace = match (&self.cfg.tracer, root) {
+                (Some(tracer), Some(root)) => Some((
+                    tracer,
+                    root,
+                    TraceContext {
+                        request: root,
+                        parent: tracer.next_id(),
+                    },
+                    Instant::now(),
+                )),
+                _ => None,
+            };
+            let result =
+                handle.eval_with_deadline_traced(points.to_vec(), deadline, trace.map(|t| t.2));
+            if let Some((tracer, root, tc, t_at)) = trace {
+                tracer.record(Span {
+                    id: tc.parent,
+                    parent: root,
+                    request: root,
+                    kind: SpanKind::Attempt,
+                    label: format!("replica{idx}"),
+                    start_tick: now,
+                    end_tick: clock.now(),
+                    seconds: t_at.elapsed().as_secs_f64(),
+                    detail: attempt,
+                });
+            }
+            match result {
                 Ok(resp) => {
                     state.completed.fetch_add(1, Ordering::Relaxed);
                     plock(&state.health).on_success();

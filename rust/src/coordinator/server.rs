@@ -31,6 +31,7 @@ use crate::autodiff::arena::{with_program_slab, SlabKey};
 use crate::autodiff::{DofEngine, HessianEngine};
 use crate::graph::Graph;
 use crate::jet::{self, JetEngine};
+use crate::obs::{Span, SpanKind, TraceContext, Tracer};
 use crate::parallel::{split_rows, Pool};
 use crate::plan;
 use crate::plan::hessian::global_hessian_cache;
@@ -48,9 +49,35 @@ pub type BatchFn = Box<dyn FnMut(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)> 
 
 type RespTx = mpsc::Sender<Result<EvalResponse, ServeError>>;
 
+/// Per-request payload the handle ships alongside the [`EvalRequest`]:
+/// the response channel plus queue-wait provenance (captured at enqueue,
+/// on the submitting thread) and the optional trace identity. The batcher
+/// clones it per fragment, so every cut member can account its own wait.
+#[derive(Clone)]
+struct ReqTag {
+    tx: RespTx,
+    enqueued: Instant,
+    enqueue_tick: u64,
+    trace: Option<TraceContext>,
+}
+
 enum Msg {
-    Eval(EvalRequest, RespTx),
+    Eval(EvalRequest, ReqTag),
     Shutdown,
+}
+
+/// Trace identity of one in-flight batch execution, handed to the compute
+/// closure so backend shards can parent their spans under the batch's
+/// pre-allocated `execute` span id.
+pub(crate) struct ExecTrace {
+    pub(crate) tracer: Arc<Tracer>,
+    pub(crate) request: u64,
+    /// Parent (`batch_form`) span id of the execute span.
+    pub(crate) parent: u64,
+    /// Pre-allocated `execute` span id (recorded after compute returns).
+    pub(crate) execute: u64,
+    /// Control-plane tick at batch formation.
+    pub(crate) tick: u64,
 }
 
 /// Robustness knobs for one [`ModelServer`] (the PR 5 spawn signatures are
@@ -69,6 +96,9 @@ pub struct ServeConfig {
     /// Deterministic fault injection (test/harness hook; `None` in
     /// production).
     pub injector: Option<Arc<FaultInjector>>,
+    /// Span sink for request tracing. `None` (the default) keeps the
+    /// serving path span-free; tracing is bitwise-invisible either way.
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 impl Default for ServeConfig {
@@ -78,6 +108,7 @@ impl Default for ServeConfig {
             clock: TickClock::new(),
             label: "model".to_string(),
             injector: None,
+            tracer: None,
         }
     }
 }
@@ -188,6 +219,19 @@ impl ServerHandle {
         points: Vec<f32>,
         deadline_tick: Option<u64>,
     ) -> std::result::Result<EvalResponse, ServeError> {
+        self.eval_with_deadline_traced(points, deadline_tick, None)
+    }
+
+    /// [`Self::eval_with_deadline`] carrying a [`TraceContext`]: spans for
+    /// this request's queue wait, batch formation, execution, and shards
+    /// are recorded under `trace.parent` (a no-op when the server has no
+    /// tracer). Tracing changes no computed value.
+    pub fn eval_with_deadline_traced(
+        &self,
+        points: Vec<f32>,
+        deadline_tick: Option<u64>,
+        trace: Option<TraceContext>,
+    ) -> std::result::Result<EvalResponse, ServeError> {
         // Front door: structured validation instead of the legacy asserts.
         if self.width == 0 || points.is_empty() || points.len() % self.width != 0 {
             self.metrics.record_invalid();
@@ -219,7 +263,7 @@ impl ServerHandle {
             });
         }
         self.metrics.record_accepted();
-        let out = self.eval_admitted(points, deadline_tick);
+        let out = self.eval_admitted(points, deadline_tick, trace);
         self.admission.leave();
         out
     }
@@ -228,6 +272,7 @@ impl ServerHandle {
         &self,
         points: Vec<f32>,
         deadline_tick: Option<u64>,
+        trace: Option<TraceContext>,
     ) -> std::result::Result<EvalResponse, ServeError> {
         let rows = points.len() / self.width;
         let req = EvalRequest {
@@ -238,8 +283,14 @@ impl ServerHandle {
         };
         let t0 = Instant::now();
         let (rtx, rrx) = mpsc::channel();
+        let tag = ReqTag {
+            tx: rtx,
+            enqueued: t0,
+            enqueue_tick: self.clock.now(),
+            trace,
+        };
         self.tx
-            .send(Msg::Eval(req, rtx))
+            .send(Msg::Eval(req, tag))
             .map_err(|_| self.stopped())?;
         let mut phi = Vec::with_capacity(rows);
         let mut lphi = Vec::with_capacity(rows);
@@ -272,6 +323,7 @@ struct WorkerCtx {
     injector: Option<Arc<FaultInjector>>,
     admission: Arc<Admission>,
     label: Arc<str>,
+    tracer: Option<Arc<Tracer>>,
 }
 
 /// The worker event loop — runs on the worker thread; `compute` need not
@@ -283,11 +335,60 @@ struct WorkerCtx {
 /// response routing reads nothing past them.
 fn worker_loop<F>(rx: mpsc::Receiver<Msg>, ctx: WorkerCtx, mut compute: F)
 where
-    F: FnMut(&[f32], usize, usize) -> Result<(Vec<f32>, Vec<f32>)>,
+    F: FnMut(&[f32], usize, usize, Option<&ExecTrace>) -> Result<(Vec<f32>, Vec<f32>)>,
 {
     let width = ctx.width;
-    let mut batcher: Batcher<RespTx> = Batcher::new(width, ctx.policy);
-    let run_batch = |cut: CutBatch<RespTx>, compute: &mut F| {
+    let mut batcher: Batcher<ReqTag> = Batcher::new(width, ctx.policy);
+    let run_batch = |cut: CutBatch<ReqTag>, compute: &mut F| {
+        let cut_tick = ctx.clock.now();
+        // Queue-wait accounting: the split latency metric fires for every
+        // member; spans only for traced ones (and only when this server
+        // has a tracer).
+        for m in &cut.members {
+            let wait_s = m.tag.enqueued.elapsed().as_secs_f64();
+            ctx.metrics.record_queue_wait(wait_s);
+            if let (Some(tracer), Some(tc)) = (&ctx.tracer, m.tag.trace) {
+                tracer.record(Span {
+                    id: tracer.next_id(),
+                    parent: tc.parent,
+                    request: tc.request,
+                    kind: SpanKind::QueueWait,
+                    label: ctx.label.to_string(),
+                    start_tick: m.tag.enqueue_tick,
+                    end_tick: cut_tick,
+                    seconds: wait_s,
+                    detail: m.span.1 as u64,
+                });
+            }
+        }
+        // Batch-level spans attach to the first traced member's tree; the
+        // execute span id is allocated *before* compute so backend shards
+        // can parent under it.
+        let first_trace = cut.members.iter().find_map(|m| m.tag.trace);
+        let exec_trace = match (&ctx.tracer, first_trace) {
+            (Some(tracer), Some(tc)) => {
+                let form_id = tracer.next_id();
+                tracer.record(Span {
+                    id: form_id,
+                    parent: tc.parent,
+                    request: tc.request,
+                    kind: SpanKind::BatchForm,
+                    label: ctx.label.to_string(),
+                    start_tick: cut_tick,
+                    end_tick: cut_tick,
+                    seconds: 0.0,
+                    detail: cut.rows_used as u64,
+                });
+                Some(ExecTrace {
+                    tracer: Arc::clone(tracer),
+                    request: tc.request,
+                    parent: form_id,
+                    execute: tracer.next_id(),
+                    tick: cut_tick,
+                })
+            }
+            _ => None,
+        };
         let plan = match &ctx.injector {
             Some(inj) => inj.next(),
             None => super::fault::FaultPlan::default(),
@@ -300,6 +401,7 @@ where
             // queued requests behind it can expire deterministically.
             ctx.clock.advance(plan.latency_ticks);
         }
+        let exec_start_tick = ctx.clock.now();
         let t0 = Instant::now();
         // Panic isolation: a panicking engine (or injected panic) fails
         // this batch's requests with EngineFault; the worker — and every
@@ -309,10 +411,23 @@ where
             if plan.panic {
                 panic!("injected panic (fault injection)");
             }
-            compute(&cut.data, width, cut.rows_used)
+            compute(&cut.data, width, cut.rows_used, exec_trace.as_ref())
         }));
         let exec_s = t0.elapsed().as_secs_f64();
         ctx.metrics.record_batch(cut.rows_used, cut.padded_rows(width), exec_s);
+        if let Some(et) = &exec_trace {
+            et.tracer.record(Span {
+                id: et.execute,
+                parent: et.parent,
+                request: et.request,
+                kind: SpanKind::Execute,
+                label: ctx.label.to_string(),
+                start_tick: exec_start_tick,
+                end_tick: ctx.clock.now(),
+                seconds: exec_s,
+                detail: cut.rows_used as u64,
+            });
+        }
         if plan.occupy_slots > 0 {
             ctx.admission.release(plan.occupy_slots);
         }
@@ -349,7 +464,7 @@ where
             Ok((phi, lphi)) => {
                 for m in cut.members {
                     let (start, rows) = m.span;
-                    let _ = m.tag.send(Ok(EvalResponse {
+                    let _ = m.tag.tx.send(Ok(EvalResponse {
                         phi: phi[start..start + rows].to_vec(),
                         lphi: lphi[start..start + rows].to_vec(),
                     }));
@@ -358,14 +473,14 @@ where
             Err(e) => {
                 ctx.metrics.record_engine_fault();
                 for m in cut.members {
-                    let _ = m.tag.send(Err(e.clone()));
+                    let _ = m.tag.tx.send(Err(e.clone()));
                 }
             }
         }
     };
     loop {
         match rx.recv_timeout(ctx.policy.max_wait) {
-            Ok(Msg::Eval(req, rtx)) => {
+            Ok(Msg::Eval(req, tag)) => {
                 ctx.metrics.record_received();
                 // Deadline check at dequeue: an expired request is
                 // answered immediately instead of entering a batch.
@@ -373,7 +488,7 @@ where
                     let now = ctx.clock.now();
                     if now >= dt {
                         ctx.metrics.record_deadline_expired();
-                        let _ = rtx.send(Err(ServeError::DeadlineExceeded {
+                        let _ = tag.tx.send(Err(ServeError::DeadlineExceeded {
                             model: ctx.label.to_string(),
                             deadline_tick: dt,
                             now_tick: now,
@@ -381,7 +496,7 @@ where
                         continue;
                     }
                 }
-                let cuts = batcher.push(req, |_frag| rtx.clone());
+                let cuts = batcher.push(req, |_frag| tag.clone());
                 for cut in cuts {
                     run_batch(cut, &mut compute);
                 }
@@ -424,7 +539,9 @@ impl ModelServer {
         compute: F,
     ) -> Self
     where
-        F: FnMut(&[f32], usize, usize) -> Result<(Vec<f32>, Vec<f32>)> + Send + 'static,
+        F: FnMut(&[f32], usize, usize, Option<&ExecTrace>) -> Result<(Vec<f32>, Vec<f32>)>
+            + Send
+            + 'static,
     {
         let (tx, rx) = mpsc::channel::<Msg>();
         let admission = Arc::new(Admission::new(cfg.queue_cap));
@@ -437,6 +554,7 @@ impl ModelServer {
             injector: cfg.injector,
             admission: Arc::clone(&admission),
             label: Arc::clone(&label),
+            tracer: cfg.tracer.clone(),
         };
         let join = std::thread::spawn(move || {
             worker_loop(rx, ctx, compute);
@@ -469,9 +587,13 @@ impl ModelServer {
         compute: BatchFn,
     ) -> Self {
         let mut compute = compute;
-        Self::spawn_with(width, policy, Arc::new(Metrics::new()), cfg, move |data, w, _rows| {
-            compute(data, w)
-        })
+        Self::spawn_with(
+            width,
+            policy,
+            Arc::new(Metrics::new()),
+            cfg,
+            move |data, w, _rows, _trace| compute(data, w),
+        )
     }
 
     /// Spawn a worker whose batches are **row-sharded across a thread
@@ -513,7 +635,8 @@ impl ModelServer {
         let region_label = cfg.label.clone();
         let compute = move |data: &[f32],
                             w: usize,
-                            rows_used: usize|
+                            rows_used: usize,
+                            trace: Option<&ExecTrace>|
               -> Result<(Vec<f32>, Vec<f32>)> {
             // The Rust engines have no fixed-batch constraint, so padding
             // rows (zeros nobody reads) are skipped entirely.
@@ -528,10 +651,26 @@ impl ModelServer {
             let mut phi = Vec::with_capacity(rows);
             let mut lphi = Vec::with_capacity(rows);
             let mut shard_secs = Vec::with_capacity(shard_out.len());
-            for (res, secs) in shard_out {
+            for (i, (res, secs)) in shard_out.into_iter().enumerate() {
                 let (p, l) = res?;
                 phi.extend(p);
                 lphi.extend(l);
+                // Shard spans are recorded after the parallel region (in
+                // shard order, on the worker thread): recording can never
+                // perturb the pool's scheduling or the shard outputs.
+                if let Some(et) = trace {
+                    et.tracer.record(Span {
+                        id: et.tracer.next_id(),
+                        parent: et.execute,
+                        request: et.request,
+                        kind: SpanKind::Shard,
+                        label: region_label.clone(),
+                        start_tick: et.tick,
+                        end_tick: et.tick,
+                        seconds: secs,
+                        detail: i as u64,
+                    });
+                }
                 shard_secs.push(secs);
             }
             shard_metrics.record_shards(&shard_secs, t0.elapsed().as_secs_f64());
@@ -738,6 +877,7 @@ impl ModelServer {
             injector: cfg.injector,
             admission: Arc::clone(&admission),
             label: Arc::clone(&label),
+            tracer: cfg.tracer.clone(),
         };
         let art = artifact.clone();
         let join = std::thread::spawn(move || {
@@ -761,11 +901,12 @@ impl ModelServer {
             // Non-Send closure is fine: it stays on this thread. The
             // artifact has a fixed batch shape, so the padded rows are
             // executed regardless of rows_used.
-            let compute = move |data: &[f32], w: usize, _rows_used: usize| {
-                let rows = data.len() / w;
-                let outs = exec.run_f32(&art, &[(data, &[rows, w])])?;
-                Ok((outs[0].clone(), outs[1].clone()))
-            };
+            let compute =
+                move |data: &[f32], w: usize, _rows_used: usize, _trace: Option<&ExecTrace>| {
+                    let rows = data.len() / w;
+                    let outs = exec.run_f32(&art, &[(data, &[rows, w])])?;
+                    Ok((outs[0].clone(), outs[1].clone()))
+                };
             worker_loop(rx, ctx, compute);
         });
         match ready_rx.recv() {

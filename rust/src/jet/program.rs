@@ -107,6 +107,11 @@ pub struct JetProgram {
     has_c: bool,
     slab_per_row: usize,
     cost_per_row: Cost,
+    /// Per-row cost of each schedule step (fused activation folded into its
+    /// Linear step); sums with the contraction to `cost_per_row`.
+    step_costs_per_row: Vec<Cost>,
+    /// Per-row cost of the output extraction + contraction phase.
+    contract_cost_per_row: Cost,
     peak_per_row_scalars: u64,
     key: JetKey,
 }
@@ -172,40 +177,64 @@ impl JetProgram {
         }
         let slab_per_row = lay.high_water();
 
-        // ---- exact per-row cost (mirrors the executor term by term) -----
-        let mut cost = Cost::zero();
-        for node in graph.nodes() {
+        // ---- exact per-row cost (mirrors the executor term by term),
+        // stored per step so the profiler's analytic column sums to the
+        // program total by construction.
+        let mut node_costs = vec![Cost::zero(); graph.len()];
+        for (j, node) in graph.nodes().iter().enumerate() {
+            let nc = &mut node_costs[j];
             match &node.op {
                 Op::Input { .. } | Op::Slice { .. } | Op::Concat => {}
                 Op::Linear { weight, .. } => {
                     let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
                     let rows = (t * (k + 1)) as u64;
-                    cost.muls += rows * (out_d * in_d) as u64;
-                    cost.adds += rows * (out_d * in_d) as u64;
-                    cost.adds += (t * out_d) as u64; // bias on m = 0 rows
+                    nc.muls += rows * (out_d * in_d) as u64;
+                    nc.adds += rows * (out_d * in_d) as u64;
+                    nc.adds += (t * out_d) as u64; // bias on m = 0 rows
                 }
                 Op::Activation { .. } => {
                     let (cm, ca) = compose_flops(k);
-                    cost.muls += (t * node.dim) as u64 * cm;
-                    cost.adds += (t * node.dim) as u64 * ca;
+                    nc.muls += (t * node.dim) as u64 * cm;
+                    nc.adds += (t * node.dim) as u64 * ca;
                 }
                 Op::Add => {
                     let extra = (node.inputs.len() - 1) as u64;
-                    cost.adds += extra * (t * (k + 1) * node.dim) as u64;
+                    nc.adds += extra * (t * (k + 1) * node.dim) as u64;
                 }
                 Op::Mul => {
                     let (cm, ca) = cauchy_flops(k);
                     let folds = (node.inputs.len() - 1) as u64;
-                    cost.muls += folds * (t * node.dim) as u64 * cm;
-                    cost.adds += folds * (t * node.dim) as u64 * ca;
+                    nc.muls += folds * (t * node.dim) as u64 * cm;
+                    nc.adds += folds * (t * node.dim) as u64 * ca;
                 }
                 Op::SumReduce => {
                     let pd = graph.node(node.inputs[0]).dim;
-                    cost.adds += (t * (k + 1) * pd) as u64;
+                    nc.adds += (t * (k + 1) * pd) as u64;
                 }
             }
         }
-        cost += contract_flops(basis.weights.len(), has_c, graph.node(out_id).dim);
+        let step_costs_per_row: Vec<Cost> = steps
+            .iter()
+            .map(|step| {
+                let mut c = node_costs[step.node];
+                if let StepKind::Linear {
+                    fused_act: Some(a), ..
+                } = &step.kind
+                {
+                    let ac = node_costs[*a];
+                    c.muls += ac.muls;
+                    c.adds += ac.adds;
+                }
+                c
+            })
+            .collect();
+        let contract_cost_per_row =
+            contract_flops(basis.weights.len(), has_c, graph.node(out_id).dim);
+        let mut cost = contract_cost_per_row;
+        for c in &step_costs_per_row {
+            cost.muls += c.muls;
+            cost.adds += c.adds;
+        }
 
         // ---- peak replay (same alloc/free event order as the arena) -----
         let mut live = 0u64;
@@ -233,6 +262,8 @@ impl JetProgram {
             has_c,
             slab_per_row,
             cost_per_row: cost,
+            step_costs_per_row,
+            contract_cost_per_row,
             peak_per_row_scalars: peak,
             key,
         }
@@ -306,6 +337,26 @@ impl JetProgram {
         }
     }
 
+    /// Exact FLOP count of schedule step `idx` at `batch` rows (a fused
+    /// `Linear→Activation` step carries both nodes' charges). Step costs
+    /// plus [`JetProgram::contract_cost`] sum to [`JetProgram::cost`].
+    pub fn step_cost(&self, idx: usize, batch: usize) -> Cost {
+        let c = self.step_costs_per_row[idx];
+        Cost {
+            muls: c.muls * batch as u64,
+            adds: c.adds * batch as u64,
+        }
+    }
+
+    /// Exact FLOP count of the output extraction + contraction at `batch`
+    /// rows.
+    pub fn contract_cost(&self, batch: usize) -> Cost {
+        Cost {
+            muls: self.contract_cost_per_row.muls * batch as u64,
+            adds: self.contract_cost_per_row.adds * batch as u64,
+        }
+    }
+
     /// Exact peak live jet bytes of a `batch`-row execution (the jet
     /// analogue of the Theorem 2.2 `M₁` measurement; `m = 0` value rows
     /// included — jets carry no separate value stream).
@@ -359,6 +410,26 @@ pub fn execute_jet(
     panels: &PanelSet,
     slab: &mut Vec<f64>,
 ) -> JetResult {
+    execute_jet_profiled(program, graph, basis, c_coef, x, panels, slab, None)
+}
+
+/// [`execute_jet`] with optional per-step profiling. With `profiler: None`
+/// the extra cost is one `is_some()` branch per step and zero allocation;
+/// the arithmetic (and thus the result bits) is identical either way. When
+/// profiling, each step records measured seconds beside the program's
+/// analytic per-step charge, so the records sum exactly to
+/// [`JetProgram::cost`] — asserted by `rust/tests/observability.rs`.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_jet_profiled(
+    program: &JetProgram,
+    graph: &Graph,
+    basis: &DirectionBasis,
+    c_coef: Option<f64>,
+    x: &Tensor,
+    panels: &PanelSet,
+    slab: &mut Vec<f64>,
+    mut profiler: Option<&mut crate::obs::StepProfiler>,
+) -> JetResult {
     assert_eq!(x.rank(), 2, "input must be [batch, N]");
     let batch = x.dims()[0];
     assert_eq!(x.dims()[1], program.input_dim(), "input dim mismatch");
@@ -377,7 +448,8 @@ pub fn execute_jet(
     }
     let slab = &mut slab[..need];
 
-    for step in program.steps() {
+    for (si, step) in program.steps.iter().enumerate() {
+        let t0 = profiler.is_some().then(std::time::Instant::now);
         match &step.kind {
             StepKind::Input { in_off } => {
                 input_step(program, basis, x, batch, slab, step.node, *in_off)
@@ -396,9 +468,20 @@ pub fn execute_jet(
             StepKind::SumReduce => sum_reduce_step(program, graph, batch, slab, step.node),
             StepKind::Concat => concat_step(program, graph, batch, slab, step.node),
         }
+        if let (Some(p), Some(t0)) = (profiler.as_deref_mut(), t0) {
+            let c = program.step_cost(si, batch);
+            p.record(
+                step.node,
+                crate::plan::exec::step_label(&step.kind),
+                t0.elapsed().as_secs_f64(),
+                c.muls,
+                c.adds,
+            );
+        }
     }
 
     // Extract the output jet, values, and the contraction.
+    let t_fin = profiler.is_some().then(std::time::Instant::now);
     let np = program.node_plan(program.output());
     let d = np.dim;
     let jet = &slab[block_rng(np, batch, t, k)];
@@ -410,6 +493,16 @@ pub fn execute_jet(
         t,
         k,
     };
+    if let (Some(p), Some(t0)) = (profiler.as_deref_mut(), t_fin) {
+        let c = program.contract_cost(batch);
+        p.record(
+            usize::MAX,
+            "contract",
+            t0.elapsed().as_secs_f64(),
+            c.muls,
+            c.adds,
+        );
+    }
     JetResult {
         values,
         operator_values,
@@ -656,6 +749,23 @@ mod tests {
         assert_eq!(c5.adds, 5 * c1.adds);
         assert_eq!(p.peak_jet_bytes(5), 5 * p.peak_jet_bytes(1));
         assert_eq!(p.slab_len(5), 5 * p.slab_per_row());
+    }
+
+    #[test]
+    fn step_costs_sum_to_program_cost() {
+        let (g, basis) = fixture();
+        for has_c in [false, true] {
+            let p = JetProgram::compile(&g, &basis, has_c);
+            for batch in [1usize, 4, 9] {
+                let mut sum = p.contract_cost(batch);
+                for si in 0..p.steps().len() {
+                    let c = p.step_cost(si, batch);
+                    sum.muls += c.muls;
+                    sum.adds += c.adds;
+                }
+                assert_eq!(sum, p.cost(batch));
+            }
+        }
     }
 
     #[test]

@@ -23,7 +23,8 @@
 //!   Kuramoto–Sivashinsky — on the same plan/parallel rails)
 //! * applications: [`operators`], [`nn`], [`pde`], [`train`]
 //! * infrastructure: [`runtime`] (XLA-PJRT artifact execution),
-//!   [`coordinator`] (batching / serving), [`bench_harness`]
+//!   [`coordinator`] (batching / serving), [`obs`] (tracing / profiling /
+//!   telemetry export), [`bench_harness`]
 //!
 //! ## Compile-once operator programs
 //!
@@ -212,6 +213,37 @@
 //! inline. `dof bench table1 --threads N` and `dof bench grid` sweep the
 //! knob and emit `BENCH_table1.json` for trend tracking.
 //!
+//! ## Observability
+//!
+//! The [`obs`] subsystem makes the serving stack inspectable without
+//! perturbing it — **observation is bitwise invisible** (traced ≡ untraced
+//! results across 1/2/4/8 threads, pinned by
+//! `rust/tests/observability.rs`):
+//!
+//! * **Request tracing** — an [`obs::TraceContext`] (request id + parent
+//!   span id) rides each request through
+//!   `RouterClient → dispatch → admission/queue/batch → engine → shards`;
+//!   each layer records spans (request, attempt, queue wait, batch
+//!   formation, execute, per-shard) into the bounded lock-sharded
+//!   [`obs::Tracer`] ring. Span *timestamps* are logical
+//!   [`coordinator::TickClock`] ticks (the control-plane no-wall-clock
+//!   rule, CI-greps enforced); *durations* are real seconds measured by
+//!   the layer owning the execution. Under ring pressure the oldest spans
+//!   are evicted, counted exactly in `dropped_spans`.
+//! * **Per-step profiling** — the planned executors accept an optional
+//!   [`obs::StepProfiler`] (`Option<&mut _>`, one branch per step, zero
+//!   allocation when absent) recording measured seconds per program step
+//!   beside the step's exact analytic FLOPs — the same per-step costs the
+//!   programs sum into `cost(batch)`, so the efficiency table's two
+//!   columns are mutually consistent by construction.
+//! * **Telemetry export** — [`obs::Registry`] aggregates metrics
+//!   snapshots, router/replica snapshots, program-cache + slab-pool +
+//!   worker-pool counters, span logs, and profile summaries into one
+//!   `"telemetry_schema"`-tagged JSON document (spans one-per-line) plus a
+//!   Prometheus text exposition. `dof serve --telemetry <path>` dumps it
+//!   periodically and on drain; `dof trace --dump <path>` pretty-prints a
+//!   request's span tree from a dump.
+//!
 //! ## Error taxonomy & failure semantics
 //!
 //! The serving tier never panics across a request boundary: every failure
@@ -258,6 +290,7 @@ pub mod graph;
 pub mod jet;
 pub mod linalg;
 pub mod nn;
+pub mod obs;
 pub mod operators;
 pub mod parallel;
 pub mod pde;

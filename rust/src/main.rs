@@ -10,8 +10,11 @@
 //! dof decompose [--spec elliptic|lowrank|general --n 64]
 //! dof inspect [--artifacts artifacts]
 //! dof serve  [--engine rust|xla --artifact dof_mlp_elliptic --requests 64 --rows 8]
+//! dof trace  [--dump TELEMETRY.json --request N]
 //! ```
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
@@ -26,6 +29,7 @@ use dof::coordinator::{
 };
 use dof::graph::{Act, Graph};
 use dof::nn::{Mlp, MlpSpec};
+use dof::obs::{parse_spans, render_tree, Registry, Tracer};
 use dof::operators::{CoeffSpec, HigherOrderOperator, HigherOrderSpec, Operator};
 use dof::parallel::{self, Pool};
 use dof::pde::trainer::{PinnConfig, PinnTrainer};
@@ -67,6 +71,7 @@ fn run(args: &Args) -> Result<()> {
         Some("decompose") => cmd_decompose(args),
         Some("inspect") => cmd_inspect(args),
         Some("serve") => cmd_serve(args),
+        Some("trace") => cmd_trace(args),
         Some(other) => Err(anyhow!("unknown command {other:?}\n{USAGE}")),
         None => {
             println!("{USAGE}");
@@ -81,7 +86,7 @@ USAGE:
   dof bench table1|table2|xla [options]   regenerate the paper's tables
   dof bench kernels [--len 8195]          lane-helper ns/element + packed
             [--gemm-shapes 66x64x64,...]  vs unpacked NT-GEMM throughput
-            [--out BENCH_kernels.json]    (schema-v5 kernels object)
+            [--out BENCH_kernels.json]    (schema-v6 kernels object)
   dof bench grid [--batches 8,64,256]     batch × threads sweep → BENCH_table1.json
             [--threads-grid 1,2,4,8]
             [--order 2|4]                 4 = biharmonic Δ² via the jet
@@ -108,6 +113,13 @@ USAGE:
                                           completed request; 0 = none)
             [--retries N]                 failover attempts after the first
                                           on retryable errors
+            [--telemetry PATH]            trace every request and export the
+                                          telemetry registry: PATH (JSON,
+                                          periodic + final on drain) and
+                                          PATH.prom (Prometheus text)
+  dof trace --dump PATH [--request N]     pretty-print the span tree(s) of a
+                                          telemetry dump (one request, or
+                                          every retained request)
 
   --threads N (or DOF_THREADS=N) sizes the worker team for batch sharding
   and the row-parallel GEMM; OS threads spawn once per process and are
@@ -334,7 +346,7 @@ fn cmd_bench_jet_grid(args: &Args) -> Result<()> {
 
 /// `dof bench kernels`: per-helper ns/element for the chunked lane sweeps
 /// and dot vs unpacked-AXPY vs packed-panel NT-GEMM throughput, with the
-/// analytic [`dof::tensor::GemmPlan`] choice per shape (schema-v5 JSON).
+/// analytic [`dof::tensor::GemmPlan`] choice per shape (schema-v6 JSON).
 fn cmd_bench_kernels(args: &Args) -> Result<()> {
     let mut cfg = KernelsConfig {
         len: args.usize_or("len", KernelsConfig::default().len),
@@ -549,11 +561,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // the control plane never reads wall clock.
     let clock = TickClock::new();
     let deadline_ticks = args.u64_or("deadline-ticks", 0);
+    // `--telemetry PATH` turns on request tracing (router + every replica
+    // share one span log) and exports the telemetry registry to PATH —
+    // periodically while serving, and once more on drain. Tracing is
+    // bitwise-invisible: responses are identical with or without it.
+    let telemetry_path = args.get("telemetry").map(String::from);
+    let tracer = telemetry_path.as_ref().map(|_| Arc::new(Tracer::new()));
     let router_cfg = RouterConfig {
         deadline_ticks: (deadline_ticks > 0).then_some(deadline_ticks),
         retries: args.u64_or("retries", 0) as u32,
         clock: clock.clone(),
         health: HealthPolicy::default(),
+        tracer: tracer.clone(),
     };
     // All traffic flows through the multi-model Router: each backend is a
     // registered per-model worker, clients dispatch tagged requests, and
@@ -561,7 +580,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // reported at the end (the autoscaling signals).
     let mut router = Router::with_config(router_cfg);
     match args.get_or("engine", default_engine).as_str() {
-        "rust" => register_rust_models(args, &mut router, &clock)?,
+        "rust" => register_rust_models(args, &mut router, &clock, &tracer)?,
         "xla" => {
             let dir = args.get_or("artifacts", "artifacts");
             let artifact = args.get_or("artifact", "dof_mlp_elliptic");
@@ -592,6 +611,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         model_clients.len(),
         router.models().join(", ")
     );
+    // Periodic telemetry dumps while traffic runs: the span log (and its
+    // exact drop counter) refresh on an interval so an operator can tail
+    // the dump mid-run; the final dump below adds the full registry.
+    let dump_stop = Arc::new(AtomicBool::new(false));
+    let dumper = match (&telemetry_path, &tracer) {
+        (Some(path), Some(tracer)) => {
+            let path = path.clone();
+            let tracer = Arc::clone(tracer);
+            let stop = Arc::clone(&dump_stop);
+            Some(std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(200));
+                    let mut reg = Registry::new();
+                    reg.set_spans(&tracer);
+                    let _ = std::fs::write(&path, reg.to_json());
+                }
+            }))
+        }
+        _ => None,
+    };
     let t0 = std::time::Instant::now();
     let threads: Vec<_> = (0..clients)
         .map(|c| {
@@ -690,7 +729,62 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "worker pool: {} warm threads, {} spawn event(s), {} parallel regions",
         pstats.workers, pstats.spawn_events, pstats.regions
     );
+    // Final telemetry dump on drain: the full registry — per-model metrics,
+    // router/replica snapshots, compile caches, slab pool, worker pool, and
+    // the span log — as schema-tagged JSON plus a Prometheus exposition.
+    dump_stop.store(true, Ordering::Relaxed);
+    if let Some(d) = dumper {
+        let _ = d.join();
+    }
+    if let Some(path) = &telemetry_path {
+        let mut reg = Registry::new();
+        for m in router.snapshot() {
+            reg.add_model(&m.model, m.server.clone());
+            reg.add_router(m);
+        }
+        reg.add_cache("plan", dof::plan::global_cache().stats());
+        reg.add_cache("jet", dof::jet::global_jet_cache().stats());
+        reg.add_cache("hessian", dof::plan::hessian::global_hessian_cache().stats());
+        reg.set_slab_pool(dof::autodiff::arena::slab_pool_stats());
+        reg.set_pool(pstats);
+        if let Some(tracer) = &tracer {
+            reg.set_spans(tracer);
+            println!(
+                "telemetry: {} spans retained ({} dropped) → {path} (+ .prom)",
+                reg.spans().len(),
+                tracer.dropped_spans()
+            );
+        }
+        std::fs::write(path, reg.to_json())?;
+        std::fs::write(format!("{path}.prom"), reg.to_prometheus())?;
+    }
     router.shutdown();
+    Ok(())
+}
+
+/// `dof trace`: re-parse a telemetry dump's span lines and pretty-print the
+/// span tree of one request (`--request N`) or of every retained request.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = args
+        .get("dump")
+        .ok_or_else(|| anyhow!("dof trace needs --dump <telemetry.json>"))?;
+    let dump = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("cannot read telemetry dump {path:?}: {e}"))?;
+    let spans = parse_spans(&dump);
+    if spans.is_empty() {
+        return Err(anyhow!(
+            "no spans in {path:?} — was the dump produced by `dof serve --telemetry`?"
+        ));
+    }
+    let request = args.get("request").map(|r| {
+        r.parse::<u64>()
+            .map_err(|e| anyhow!("bad --request {r:?}: {e}"))
+    });
+    let request = match request {
+        Some(r) => Some(r?),
+        None => None,
+    };
+    print!("{}", render_tree(&spans, request));
     Ok(())
 }
 
@@ -702,7 +796,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// instead of the second-order DOF elliptic; `--multi` registers the DOF,
 /// Hessian-baseline, and jet models together so the router carries mixed
 /// traffic.
-fn register_rust_models(args: &Args, router: &mut Router, clock: &TickClock) -> Result<()> {
+fn register_rust_models(
+    args: &Args,
+    router: &mut Router,
+    clock: &TickClock,
+    tracer: &Option<Arc<Tracer>>,
+) -> Result<()> {
     let order = args.usize_or("order", 2);
     let multi = args.flag("multi");
     let n = args.usize_or("n", if order == 4 { 8 } else { 64 });
@@ -717,6 +816,7 @@ fn register_rust_models(args: &Args, router: &mut Router, clock: &TickClock) -> 
         clock: clock.clone(),
         label: label.to_string(),
         injector: None,
+        tracer: tracer.clone(),
     };
     let mlp = |in_dim: usize| {
         Mlp::init(

@@ -1,0 +1,39 @@
+//! Crate-wide observability: request tracing, per-step execution profiling,
+//! and the exportable telemetry registry.
+//!
+//! Three subsystems, one design rule — **observation must be bitwise
+//! invisible**. Turning any of them on changes no computed value, no shard
+//! decomposition, and no scheduling decision; `rust/tests/observability.rs`
+//! asserts traced ≡ untraced bit-for-bit across thread counts.
+//!
+//! * [`span`] — [`TraceContext`] identifies a request as it flows
+//!   `RouterClient → dispatch → admission/queue/batch → engine → shards`;
+//!   every layer records finished [`Span`]s into the bounded, lock-sharded
+//!   [`Tracer`] ring (oldest evicted, drops counted exactly). Control-plane
+//!   timestamps are logical [`TickClock`](crate::coordinator::TickClock)
+//!   ticks; data-plane durations are measured seconds passed in by the
+//!   layer that owns the execution.
+//! * [`profile`] — [`StepProfiler`] records measured seconds per program
+//!   step beside the step's exact analytic FLOPs (the same per-step costs
+//!   the compiled programs sum into `cost(batch)`), yielding a
+//!   measured-vs-analytic efficiency table per program fingerprint.
+//! * [`registry`] + [`trace_view`] — [`Registry`] aggregates metrics,
+//!   router, cache, slab-pool, pool, span, and profile snapshots into one
+//!   `"telemetry_schema"`-tagged JSON document (plus a Prometheus text
+//!   exposition); `dof trace` re-parses a dump's span lines and
+//!   pretty-prints a request's span tree.
+//!
+//! Like `coordinator/`, this module tree must not panic on the serving
+//! path, so `unwrap`/`expect` are denied below.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod profile;
+pub mod registry;
+pub mod span;
+pub mod trace_view;
+
+pub use profile::{StepProfiler, StepRecord};
+pub use registry::{ProfileSummary, Registry, TELEMETRY_SCHEMA};
+pub use span::{Span, SpanKind, TraceContext, Tracer};
+pub use trace_view::{parse_spans, render_tree};

@@ -1,0 +1,171 @@
+//! Per-step execution profiling: measured time next to analytic cost.
+//!
+//! The planned executors (`plan/exec.rs`, `plan/hessian.rs`,
+//! `jet/program.rs`) optionally carry an `Option<&mut StepProfiler>`; when
+//! absent the hot path pays one `is_some()` branch per step and zero
+//! allocation. When present, each program step records its measured wall
+//! seconds (timed by the executor — this type is pure storage) beside the
+//! step's **exact** analytic mul/add counts, taken from the same per-node
+//! cost model the programs' `cost(batch)` is summed from. By construction
+//! the profiler's FLOP totals equal the program's analytic cost — asserted
+//! by `rust/tests/observability.rs` — so the table below is a true
+//! measured-vs-analytic efficiency report, not two unrelated estimates.
+
+use crate::util::fmt_duration;
+
+/// One profiled program step.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    /// Graph node id the step computed (usize::MAX for synthetic phases
+    /// like output contraction that have no single node).
+    pub node: usize,
+    /// Static phase label ("linear", "activation", "contract", …).
+    pub label: &'static str,
+    /// Measured execution seconds for this step.
+    pub seconds: f64,
+    /// Analytic multiply count for this step at the executed batch size.
+    pub muls: u64,
+    /// Analytic addition count for this step at the executed batch size.
+    pub adds: u64,
+}
+
+/// Collected per-step records for one program execution (or several:
+/// records accumulate until [`StepProfiler::clear`]).
+#[derive(Debug, Clone, Default)]
+pub struct StepProfiler {
+    records: Vec<StepRecord>,
+}
+
+impl StepProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one step's measurement.
+    pub fn record(&mut self, node: usize, label: &'static str, seconds: f64, muls: u64, adds: u64) {
+        self.records.push(StepRecord {
+            node,
+            label,
+            seconds,
+            muls,
+            adds,
+        });
+    }
+
+    pub fn records(&self) -> &[StepRecord] {
+        &self.records
+    }
+
+    pub fn clear(&mut self) {
+        self.records.clear();
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.records.iter().map(|r| r.seconds).sum()
+    }
+
+    pub fn total_muls(&self) -> u64 {
+        self.records.iter().map(|r| r.muls).sum()
+    }
+
+    pub fn total_adds(&self) -> u64 {
+        self.records.iter().map(|r| r.adds).sum()
+    }
+
+    /// Total analytic FLOPs (muls + adds) across all recorded steps.
+    pub fn total_flops(&self) -> u64 {
+        self.total_muls() + self.total_adds()
+    }
+
+    /// Render the measured-vs-analytic efficiency table. One row per step:
+    /// the analytic FLOPs the cost model charges, the measured seconds,
+    /// and the implied throughput — a step whose GFLOP/s is far below its
+    /// siblings is memory-bound or mis-planned. Rows with zero analytic
+    /// cost (value evaluation, copies) show time only.
+    pub fn render_table(&self, title: &str) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("efficiency table: {title}\n"));
+        out.push_str(&format!(
+            "{:>6}  {:<12} {:>12} {:>12} {:>10} {:>10}\n",
+            "node", "step", "muls", "adds", "time", "gflops"
+        ));
+        for r in &self.records {
+            let node = if r.node == usize::MAX {
+                "-".to_string()
+            } else {
+                r.node.to_string()
+            };
+            let flops = r.muls + r.adds;
+            let gflops = if r.seconds > 0.0 && flops > 0 {
+                format!("{:.2}", flops as f64 / r.seconds / 1e9)
+            } else {
+                "-".to_string()
+            };
+            out.push_str(&format!(
+                "{:>6}  {:<12} {:>12} {:>12} {:>10} {:>10}\n",
+                node,
+                r.label,
+                r.muls,
+                r.adds,
+                fmt_duration(r.seconds),
+                gflops
+            ));
+        }
+        let total_flops = self.total_flops();
+        let secs = self.total_seconds();
+        let total_gflops = if secs > 0.0 && total_flops > 0 {
+            format!("{:.2}", total_flops as f64 / secs / 1e9)
+        } else {
+            "-".to_string()
+        };
+        out.push_str(&format!(
+            "{:>6}  {:<12} {:>12} {:>12} {:>10} {:>10}\n",
+            "",
+            "total",
+            self.total_muls(),
+            self.total_adds(),
+            fmt_duration(secs),
+            total_gflops
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_sum_records() {
+        let mut p = StepProfiler::new();
+        p.record(0, "input", 1e-6, 0, 0);
+        p.record(1, "linear", 2e-6, 100, 80);
+        p.record(2, "activation", 3e-6, 40, 20);
+        assert_eq!(p.total_muls(), 140);
+        assert_eq!(p.total_adds(), 100);
+        assert_eq!(p.total_flops(), 240);
+        assert!((p.total_seconds() - 6e-6).abs() < 1e-15);
+        assert_eq!(p.records().len(), 3);
+        p.clear();
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let mut p = StepProfiler::new();
+        p.record(3, "linear", 1e-3, 1_000_000, 900_000);
+        p.record(usize::MAX, "contract", 0.0, 0, 0);
+        let t = p.render_table("fp=deadbeef batch=32");
+        assert!(t.contains("linear"));
+        assert!(t.contains("contract"));
+        assert!(t.contains("total"));
+        assert!(t.contains("deadbeef"));
+        // Zero-cost, zero-time rows render a dash throughput.
+        assert!(t.lines().any(|l| l.contains("contract") && l.ends_with('-')));
+    }
+}

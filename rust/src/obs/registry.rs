@@ -1,0 +1,473 @@
+//! The exportable telemetry registry: one schema-versioned document
+//! aggregating every observable surface of the serving stack — model
+//! metrics snapshots, router/replica snapshots, program-cache and slab-pool
+//! counters, worker-pool lifecycle counters, the span log, and per-program
+//! profile summaries.
+//!
+//! **Control-plane file: no wall clock** (same CI-enforced invariant as
+//! `coordinator/fault.rs` and `obs/span.rs`). The registry only *renders*
+//! durations its inputs already measured.
+//!
+//! Two renderings share one registry:
+//!
+//! * [`Registry::to_json`] — a hand-rolled JSON document tagged
+//!   `"telemetry_schema": 1`. Spans are emitted one object per line so the
+//!   `dof trace` viewer ([`super::trace_view`]) can re-parse a dump with a
+//!   line scanner instead of a JSON parser (this crate deliberately carries
+//!   no serde).
+//! * [`Registry::to_prometheus`] — a Prometheus-style text exposition of
+//!   the counter/gauge subset (`# TYPE` lines included), for scraping.
+
+use crate::autodiff::arena::SlabPoolStats;
+use crate::coordinator::{MetricsSnapshot, RouterModelSnapshot};
+use crate::parallel::pool::PoolStats;
+use crate::util::CacheStats;
+
+use super::profile::StepProfiler;
+use super::span::{Span, Tracer};
+
+/// Version tag of the JSON document layout.
+pub const TELEMETRY_SCHEMA: u32 = 1;
+
+/// Roll-up of one program's profiled execution(s).
+#[derive(Debug, Clone)]
+pub struct ProfileSummary {
+    /// Recorded step count.
+    pub steps: usize,
+    /// Summed measured seconds.
+    pub seconds: f64,
+    /// Summed analytic multiplications.
+    pub muls: u64,
+    /// Summed analytic additions.
+    pub adds: u64,
+}
+
+/// Aggregates snapshots into one exportable document (see module docs).
+/// Build-once: populate with the `add_*`/`set_*` methods, then render.
+#[derive(Debug, Default)]
+pub struct Registry {
+    models: Vec<(String, MetricsSnapshot)>,
+    routers: Vec<RouterModelSnapshot>,
+    caches: Vec<(String, CacheStats)>,
+    slab_pool: Option<SlabPoolStats>,
+    pool: Option<PoolStats>,
+    spans: Vec<Span>,
+    dropped_spans: u64,
+    profiles: Vec<(String, ProfileSummary)>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one model server's metrics snapshot under `label`.
+    pub fn add_model(&mut self, label: &str, snap: MetricsSnapshot) {
+        self.models.push((label.to_string(), snap));
+    }
+
+    /// Record one router model snapshot (replica scalars included; the
+    /// aggregated server metrics belong in [`Registry::add_model`]).
+    pub fn add_router(&mut self, snap: RouterModelSnapshot) {
+        self.routers.push(snap);
+    }
+
+    /// Record one keyed-cache counter set under `name` (plan, jet, hessian).
+    pub fn add_cache(&mut self, name: &str, stats: CacheStats) {
+        self.caches.push((name.to_string(), stats));
+    }
+
+    pub fn set_slab_pool(&mut self, stats: SlabPoolStats) {
+        self.slab_pool = Some(stats);
+    }
+
+    pub fn set_pool(&mut self, stats: PoolStats) {
+        self.pool = Some(stats);
+    }
+
+    /// Capture the tracer's current span log and exact drop counter.
+    pub fn set_spans(&mut self, tracer: &Tracer) {
+        self.spans = tracer.snapshot();
+        self.dropped_spans = tracer.dropped_spans();
+    }
+
+    /// Record a profile roll-up for one program (keyed by fingerprint or
+    /// any stable name).
+    pub fn add_profile(&mut self, name: &str, profiler: &StepProfiler) {
+        self.profiles.push((
+            name.to_string(),
+            ProfileSummary {
+                steps: profiler.records().len(),
+                seconds: profiler.total_seconds(),
+                muls: profiler.total_muls(),
+                adds: profiler.total_adds(),
+            },
+        ));
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    // ---- JSON rendering --------------------------------------------------
+
+    /// Render the full document (see module docs for the layout contract).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"telemetry_schema\": {TELEMETRY_SCHEMA},\n"));
+
+        s.push_str("  \"models\": {\n");
+        for (i, (label, m)) in self.models.iter().enumerate() {
+            let comma = if i + 1 < self.models.len() { "," } else { "" };
+            s.push_str(&format!("    \"{}\": {}{}\n", esc(label), metrics_json(m), comma));
+        }
+        s.push_str("  },\n");
+
+        s.push_str("  \"routers\": [\n");
+        for (i, r) in self.routers.iter().enumerate() {
+            let comma = if i + 1 < self.routers.len() { "," } else { "" };
+            s.push_str(&format!("    {}{}\n", router_json(r), comma));
+        }
+        s.push_str("  ],\n");
+
+        s.push_str("  \"caches\": {\n");
+        for (i, (name, c)) in self.caches.iter().enumerate() {
+            let comma = if i + 1 < self.caches.len() { "," } else { "" };
+            s.push_str(&format!(
+                "    \"{}\": {{\"hits\": {}, \"misses\": {}, \"entries\": {}}}{}\n",
+                esc(name),
+                c.hits,
+                c.misses,
+                c.entries,
+                comma
+            ));
+        }
+        s.push_str("  },\n");
+
+        if let Some(sp) = &self.slab_pool {
+            s.push_str(&format!(
+                "  \"slab_pool\": {{\"hits\": {}, \"misses\": {}, \"retained\": {}}},\n",
+                sp.hits, sp.misses, sp.retained
+            ));
+        }
+        if let Some(p) = &self.pool {
+            s.push_str(&format!(
+                "  \"pool\": {{\"workers\": {}, \"spawn_events\": {}, \"regions\": {}}},\n",
+                p.workers, p.spawn_events, p.regions
+            ));
+        }
+
+        s.push_str("  \"profiles\": {\n");
+        for (i, (name, p)) in self.profiles.iter().enumerate() {
+            let comma = if i + 1 < self.profiles.len() { "," } else { "" };
+            s.push_str(&format!(
+                "    \"{}\": {{\"steps\": {}, \"seconds\": {}, \"muls\": {}, \"adds\": {}}}{}\n",
+                esc(name),
+                p.steps,
+                num(p.seconds),
+                p.muls,
+                p.adds,
+                comma
+            ));
+        }
+        s.push_str("  },\n");
+
+        s.push_str(&format!("  \"dropped_spans\": {},\n", self.dropped_spans));
+        // One span object per line — the `dof trace` parsing contract.
+        s.push_str("  \"spans\": [\n");
+        for (i, sp) in self.spans.iter().enumerate() {
+            let comma = if i + 1 < self.spans.len() { "," } else { "" };
+            s.push_str(&format!("    {}{}\n", span_json(sp), comma));
+        }
+        s.push_str("  ]\n");
+        s.push_str("}\n");
+        s
+    }
+
+    // ---- Prometheus rendering --------------------------------------------
+
+    /// Render the counter/gauge subset as Prometheus text exposition.
+    pub fn to_prometheus(&self) -> String {
+        let mut s = String::new();
+        let mut counter = |name: &str, help: &str| {
+            s.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n"));
+        };
+        counter("dof_requests_total", "Completed requests per model server.");
+        let mut body = String::new();
+        for (label, m) in &self.models {
+            let l = esc(label);
+            body.push_str(&format!("dof_requests_total{{model=\"{l}\"}} {}\n", m.requests));
+        }
+        s.push_str(&body);
+        s.push_str("# TYPE dof_rows_total counter\n");
+        s.push_str("# TYPE dof_batches_total counter\n");
+        s.push_str("# TYPE dof_shed_total counter\n");
+        s.push_str("# TYPE dof_latency_seconds gauge\n");
+        s.push_str("# TYPE dof_queue_wait_seconds gauge\n");
+        for (label, m) in &self.models {
+            let l = esc(label);
+            s.push_str(&format!("dof_rows_total{{model=\"{l}\"}} {}\n", m.rows));
+            s.push_str(&format!("dof_batches_total{{model=\"{l}\"}} {}\n", m.batches));
+            s.push_str(&format!("dof_shed_total{{model=\"{l}\"}} {}\n", m.shed));
+            for (q, v) in [
+                ("0.5", m.p50_latency),
+                ("0.95", m.p95_latency),
+                ("0.99", m.p99_latency),
+            ] {
+                s.push_str(&format!(
+                    "dof_latency_seconds{{model=\"{l}\",quantile=\"{q}\"}} {}\n",
+                    num(v)
+                ));
+            }
+            s.push_str(&format!(
+                "dof_queue_wait_seconds{{model=\"{l}\",quantile=\"0.95\"}} {}\n",
+                num(m.p95_queue_wait)
+            ));
+        }
+        s.push_str("# TYPE dof_router_dispatched_total counter\n");
+        s.push_str("# TYPE dof_router_failed_total counter\n");
+        s.push_str("# TYPE dof_router_retries_total counter\n");
+        for r in &self.routers {
+            let l = esc(&r.model);
+            s.push_str(&format!(
+                "dof_router_dispatched_total{{model=\"{l}\"}} {}\n",
+                r.dispatched
+            ));
+            s.push_str(&format!("dof_router_failed_total{{model=\"{l}\"}} {}\n", r.failed));
+            s.push_str(&format!("dof_router_retries_total{{model=\"{l}\"}} {}\n", r.retries));
+        }
+        s.push_str("# TYPE dof_cache_hits_total counter\n");
+        s.push_str("# TYPE dof_cache_misses_total counter\n");
+        for (name, c) in &self.caches {
+            let n = esc(name);
+            s.push_str(&format!("dof_cache_hits_total{{cache=\"{n}\"}} {}\n", c.hits));
+            s.push_str(&format!("dof_cache_misses_total{{cache=\"{n}\"}} {}\n", c.misses));
+        }
+        if let Some(sp) = &self.slab_pool {
+            s.push_str("# TYPE dof_slab_pool_hits_total counter\n");
+            s.push_str(&format!("dof_slab_pool_hits_total {}\n", sp.hits));
+            s.push_str(&format!("dof_slab_pool_misses_total {}\n", sp.misses));
+            s.push_str(&format!("dof_slab_pool_retained {}\n", sp.retained));
+        }
+        if let Some(p) = &self.pool {
+            s.push_str("# TYPE dof_pool_regions_total counter\n");
+            s.push_str(&format!("dof_pool_workers {}\n", p.workers));
+            s.push_str(&format!("dof_pool_regions_total {}\n", p.regions));
+        }
+        s.push_str("# TYPE dof_dropped_spans_total counter\n");
+        s.push_str(&format!("dof_dropped_spans_total {}\n", self.dropped_spans));
+        s.push_str(&format!("dof_retained_spans {}\n", self.spans.len()));
+        s
+    }
+}
+
+/// Escape a string for embedding in a JSON string literal (labels here are
+/// model/cache names; control characters are dropped to hex escapes).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Finite-number rendering (JSON has no NaN/inf; those become 0).
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn metrics_json(m: &MetricsSnapshot) -> String {
+    format!(
+        "{{\"requests\": {}, \"received\": {}, \"rows\": {}, \"batches\": {}, \
+         \"padded_rows\": {}, \"mean_latency\": {}, \"p50_latency\": {}, \
+         \"p95_latency\": {}, \"p99_latency\": {}, \"mean_exec_latency\": {}, \
+         \"p95_exec_latency\": {}, \"mean_queue_wait\": {}, \"p95_queue_wait\": {}, \
+         \"batch_efficiency\": {}, \"shards\": {}, \"sharded_batches\": {}, \
+         \"parallel_occupancy\": {}, \"accepted\": {}, \"shed\": {}, \"invalid\": {}, \
+         \"deadline_expired\": {}, \"engine_faults\": {}}}",
+        m.requests,
+        m.received,
+        m.rows,
+        m.batches,
+        m.padded_rows,
+        num(m.mean_latency),
+        num(m.p50_latency),
+        num(m.p95_latency),
+        num(m.p99_latency),
+        num(m.mean_exec_latency),
+        num(m.p95_exec_latency),
+        num(m.mean_queue_wait),
+        num(m.p95_queue_wait),
+        num(m.batch_efficiency),
+        m.shards,
+        m.sharded_batches,
+        num(m.parallel_occupancy),
+        m.accepted,
+        m.shed,
+        m.invalid,
+        m.deadline_expired,
+        m.engine_faults,
+    )
+}
+
+fn router_json(r: &RouterModelSnapshot) -> String {
+    let replicas: Vec<String> = r
+        .replicas
+        .iter()
+        .map(|rep| {
+            format!(
+                "{{\"index\": {}, \"state\": \"{}\", \"consecutive_failures\": {}, \
+                 \"quarantine_events\": {}, \"attempts\": {}, \"completed\": {}, \
+                 \"failed\": {}, \"inflight\": {}}}",
+                rep.index,
+                rep.state,
+                rep.consecutive_failures,
+                rep.quarantine_events,
+                rep.attempts,
+                rep.completed,
+                rep.failed,
+                rep.inflight,
+            )
+        })
+        .collect();
+    format!(
+        "{{\"model\": \"{}\", \"dispatched\": {}, \"completed\": {}, \"failed\": {}, \
+         \"shed\": {}, \"retries\": {}, \"deadline_expired\": {}, \"invalid\": {}, \
+         \"engine_faults\": {}, \"quarantine_events\": {}, \"queue_depth\": {}, \
+         \"peak_queue_depth\": {}, \"replicas\": [{}]}}",
+        esc(&r.model),
+        r.dispatched,
+        r.completed,
+        r.failed,
+        r.shed,
+        r.retries,
+        r.deadline_expired,
+        r.invalid,
+        r.engine_faults,
+        r.quarantine_events,
+        r.queue_depth,
+        r.peak_queue_depth,
+        replicas.join(", "),
+    )
+}
+
+/// One span as a single-line JSON object (the `dof trace` line contract:
+/// every key below is extracted by [`super::trace_view::parse_spans`]).
+fn span_json(sp: &Span) -> String {
+    format!(
+        "{{\"id\": {}, \"parent\": {}, \"request\": {}, \"kind\": \"{}\", \
+         \"label\": \"{}\", \"start_tick\": {}, \"end_tick\": {}, \"seconds\": {}, \
+         \"detail\": {}}}",
+        sp.id,
+        sp.parent,
+        sp.request,
+        sp.kind.name(),
+        esc(&sp.label),
+        sp.start_tick,
+        sp.end_tick,
+        num(sp.seconds),
+        sp.detail,
+    )
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::super::span::{SpanKind, TraceContext};
+    use super::*;
+    use crate::coordinator::Metrics;
+
+    fn sample_span(t: &Tracer, parent: u64, kind: SpanKind) -> Span {
+        let id = t.next_id();
+        Span {
+            id,
+            parent,
+            request: 1,
+            kind,
+            label: "m".to_string(),
+            start_tick: 2,
+            end_tick: 3,
+            seconds: 0.25,
+            detail: 8,
+        }
+    }
+
+    #[test]
+    fn json_has_schema_models_and_span_lines() {
+        let m = Metrics::new();
+        m.record_request(4, 0.001);
+        let mut reg = Registry::new();
+        reg.add_model("dof-east", m.snapshot());
+        reg.add_cache(
+            "plan",
+            CacheStats {
+                hits: 3,
+                misses: 1,
+                entries: 1,
+            },
+        );
+        let t = Tracer::with_shards(1, 8);
+        let root = sample_span(&t, 0, SpanKind::Request);
+        let _ctx = TraceContext {
+            request: root.id,
+            parent: root.id,
+        };
+        t.record(root);
+        t.record(sample_span(&t, 1, SpanKind::Execute));
+        reg.set_spans(&t);
+        let json = reg.to_json();
+        assert!(json.contains("\"telemetry_schema\": 1"));
+        assert!(json.contains("\"dof-east\""));
+        assert!(json.contains("\"p99_latency\""));
+        assert!(json.contains("\"dropped_spans\": 0"));
+        // One span per line, parseable by the trace viewer.
+        let span_lines = json
+            .lines()
+            .filter(|l| l.trim_start().starts_with("{\"id\":"))
+            .count();
+        assert_eq!(span_lines, 2);
+        // Balanced braces (cheap well-formedness check without a parser).
+        let open = json.matches('{').count();
+        let close = json.matches('}').count();
+        assert_eq!(open, close);
+    }
+
+    #[test]
+    fn prometheus_exposition_has_types_and_values() {
+        let m = Metrics::new();
+        m.record_request(4, 0.001);
+        m.record_shed();
+        let mut reg = Registry::new();
+        reg.add_model("dof", m.snapshot());
+        reg.set_slab_pool(SlabPoolStats {
+            hits: 5,
+            misses: 2,
+            retained: 1,
+        });
+        let text = reg.to_prometheus();
+        assert!(text.contains("# TYPE dof_requests_total counter"));
+        assert!(text.contains("dof_requests_total{model=\"dof\"} 1"));
+        assert!(text.contains("dof_shed_total{model=\"dof\"} 1"));
+        assert!(text.contains("quantile=\"0.99\""));
+        assert!(text.contains("dof_slab_pool_hits_total 5"));
+    }
+
+    #[test]
+    fn labels_are_escaped() {
+        let m = Metrics::new();
+        let mut reg = Registry::new();
+        reg.add_model("we\"ird\\label", m.snapshot());
+        let json = reg.to_json();
+        assert!(json.contains("we\\\"ird\\\\label"));
+    }
+}

@@ -1,0 +1,245 @@
+//! Request spans and the bounded, lock-sharded span log.
+//!
+//! **Control-plane file: no wall clock.** Span *timestamps* are logical
+//! [`TickClock`](crate::coordinator::TickClock) ticks — the same invariant
+//! `coordinator/fault.rs` holds, enforced by the same CI grep — so a span
+//! tree recorded under a scripted tick schedule is exactly reproducible.
+//! Data-plane *durations* (`seconds`) are measured by the callers that own
+//! an execution (router attempt, worker batch, pool shard) and passed in;
+//! this module never reads time itself.
+//!
+//! The log is a fixed-capacity ring: under pressure the **oldest** spans
+//! are evicted (latest activity is what an incident investigation needs)
+//! and every eviction is counted exactly in `dropped_spans`. Sharding is
+//! by span id, so a single-shard tracer gives deterministic ring contents
+//! for tests while the default spreads lock contention across shards.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// What phase of a request's life a span covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Root span: one per routed request (owned by the router client).
+    Request,
+    /// One dispatch attempt against a replica (retries create several).
+    Attempt,
+    /// Time a request sat in the worker queue before being cut into a batch.
+    QueueWait,
+    /// Formation of one batch (detail = rows used).
+    BatchForm,
+    /// Engine execution of one batch.
+    Execute,
+    /// One pool shard of a sharded execution (detail = shard index).
+    Shard,
+}
+
+impl SpanKind {
+    /// Stable lowercase name used in the telemetry dump.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::Attempt => "attempt",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::BatchForm => "batch_form",
+            SpanKind::Execute => "execute",
+            SpanKind::Shard => "shard",
+        }
+    }
+}
+
+/// One recorded span. `parent == 0` means "no parent" (span ids start at 1).
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// Monotonically assigned id (unique per [`Tracer`], never 0).
+    pub id: u64,
+    /// Parent span id within the same request tree (0 at the root).
+    pub parent: u64,
+    /// The request this span belongs to (the root span's id).
+    pub request: u64,
+    pub kind: SpanKind,
+    /// Human label: model name, replica label, engine region, …
+    pub label: String,
+    /// Logical tick when the phase began.
+    pub start_tick: u64,
+    /// Logical tick when the phase ended (== `start_tick` when the clock
+    /// did not advance during the phase).
+    pub end_tick: u64,
+    /// Measured data-plane duration in seconds (0.0 for pure control-plane
+    /// spans that only exist for tree structure).
+    pub seconds: f64,
+    /// Kind-specific payload: rows for `BatchForm`/`Execute`, shard index
+    /// for `Shard`, attempt ordinal for `Attempt`, 0 otherwise.
+    pub detail: u64,
+}
+
+/// Identity a request carries through the serving stack: enough for any
+/// layer to attach a child span without seeing the tracer's internals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceContext {
+    /// Root span id of the request.
+    pub request: u64,
+    /// Span id the next child should attach under.
+    pub parent: u64,
+}
+
+impl TraceContext {
+    /// The same request, re-parented under `span` (for handing to a layer
+    /// whose spans should nest under one we just opened).
+    pub fn child_of(self, span: u64) -> TraceContext {
+        TraceContext {
+            request: self.request,
+            parent: span,
+        }
+    }
+}
+
+/// Bounded, lock-sharded span log plus the monotone id source.
+#[derive(Debug)]
+pub struct Tracer {
+    shards: Vec<Mutex<VecDeque<Span>>>,
+    cap_per_shard: usize,
+    next_id: AtomicU64,
+    dropped: AtomicU64,
+}
+
+/// Poison-recovering lock: the span log must stay readable even if a
+/// recording thread panicked mid-push (same rationale as `Metrics`).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Tracer {
+    /// Default log: 8 shards, 4096 retained spans per shard.
+    pub fn new() -> Self {
+        Self::with_shards(8, 4096)
+    }
+
+    /// Explicit geometry. `shards == 1` makes ring contents and drop
+    /// accounting fully deterministic (used by tests); capacity is
+    /// per-shard. Zero values are clamped to 1.
+    pub fn with_shards(shards: usize, cap_per_shard: usize) -> Self {
+        let shards = shards.max(1);
+        Tracer {
+            shards: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            cap_per_shard: cap_per_shard.max(1),
+            next_id: AtomicU64::new(1),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Allocate the next span id (monotone, never 0, unique per tracer).
+    pub fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Append a finished span. Under pressure the oldest span in the
+    /// target shard is evicted and counted in [`Tracer::dropped_spans`].
+    pub fn record(&self, span: Span) {
+        let shard = (span.id % self.shards.len() as u64) as usize;
+        let mut ring = lock(&self.shards[shard]);
+        if ring.len() >= self.cap_per_shard {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(span);
+    }
+
+    /// Exact count of spans evicted from the ring since creation.
+    pub fn dropped_spans(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Spans currently retained across all shards, sorted by id (which is
+    /// also record order per shard, so the merge is globally consistent).
+    pub fn snapshot(&self) -> Vec<Span> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            out.extend(lock(shard).iter().cloned());
+        }
+        out.sort_by_key(|s| s.id);
+        out
+    }
+
+    /// Number of spans currently retained.
+    pub fn retained(&self) -> usize {
+        self.shards.iter().map(|s| lock(s).len()).sum()
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn span(tracer: &Tracer, parent: u64, kind: SpanKind) -> Span {
+        let id = tracer.next_id();
+        Span {
+            id,
+            parent,
+            request: 1,
+            kind,
+            label: String::new(),
+            start_tick: 0,
+            end_tick: 0,
+            seconds: 0.0,
+            detail: 0,
+        }
+    }
+
+    #[test]
+    fn ids_are_monotone_and_nonzero() {
+        let t = Tracer::new();
+        let a = t.next_id();
+        let b = t.next_id();
+        assert!(a >= 1);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_exactly() {
+        let t = Tracer::with_shards(1, 4);
+        for _ in 0..10 {
+            let s = span(&t, 0, SpanKind::Execute);
+            t.record(s);
+        }
+        assert_eq!(t.retained(), 4);
+        assert_eq!(t.dropped_spans(), 6);
+        // Latest spans survive: ids 7..=10.
+        let kept: Vec<u64> = t.snapshot().iter().map(|s| s.id).collect();
+        assert_eq!(kept, vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn snapshot_is_id_sorted_across_shards() {
+        let t = Tracer::with_shards(4, 16);
+        for _ in 0..13 {
+            let s = span(&t, 0, SpanKind::Shard);
+            t.record(s);
+        }
+        let ids: Vec<u64> = t.snapshot().iter().map(|s| s.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted);
+        assert_eq!(ids.len(), 13);
+        assert_eq!(t.dropped_spans(), 0);
+    }
+
+    #[test]
+    fn child_of_reparents() {
+        let ctx = TraceContext {
+            request: 7,
+            parent: 7,
+        };
+        let child = ctx.child_of(12);
+        assert_eq!(child.request, 7);
+        assert_eq!(child.parent, 12);
+    }
+}

@@ -1,0 +1,263 @@
+//! `dof trace`: re-parse a telemetry dump's span lines and pretty-print a
+//! request's span tree.
+//!
+//! The parser is a line scanner, not a JSON parser: [`super::registry`]
+//! guarantees every span is rendered as a single line starting with
+//! `{"id":`, with a fixed key set. That contract keeps this crate free of
+//! serde while still making dumps greppable and machine-extractable.
+
+use super::span::{Span, SpanKind};
+use crate::util::fmt_duration;
+
+/// Extract the raw text after `"key": ` up to the next `,` or `}`.
+fn raw_field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let rest = line[at..].trim_start();
+    let end = rest
+        .char_indices()
+        .find(|&(i, c)| {
+            if rest.starts_with('"') {
+                // String value: close at the first unescaped quote.
+                i > 0 && c == '"' && !rest[..i].ends_with('\\')
+            } else {
+                c == ',' || c == '}'
+            }
+        })
+        .map(|(i, _)| i)?;
+    if rest.starts_with('"') {
+        Some(&rest[1..end])
+    } else {
+        Some(rest[..end].trim())
+    }
+}
+
+fn field_u64(line: &str, key: &str) -> Option<u64> {
+    raw_field(line, key)?.parse().ok()
+}
+
+fn field_f64(line: &str, key: &str) -> Option<f64> {
+    raw_field(line, key)?.parse().ok()
+}
+
+/// Undo the registry's minimal JSON escaping.
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+fn kind_from_name(name: &str) -> SpanKind {
+    match name {
+        "request" => SpanKind::Request,
+        "attempt" => SpanKind::Attempt,
+        "queue_wait" => SpanKind::QueueWait,
+        "batch_form" => SpanKind::BatchForm,
+        "shard" => SpanKind::Shard,
+        _ => SpanKind::Execute,
+    }
+}
+
+/// Parse every span line of a telemetry dump (other lines are skipped).
+pub fn parse_spans(dump: &str) -> Vec<Span> {
+    let mut out = Vec::new();
+    for line in dump.lines() {
+        let t = line.trim_start();
+        if !t.starts_with("{\"id\":") {
+            continue;
+        }
+        let (Some(id), Some(parent), Some(request)) = (
+            field_u64(t, "id"),
+            field_u64(t, "parent"),
+            field_u64(t, "request"),
+        ) else {
+            continue;
+        };
+        out.push(Span {
+            id,
+            parent,
+            request,
+            kind: kind_from_name(raw_field(t, "kind").unwrap_or("execute")),
+            label: unescape(raw_field(t, "label").unwrap_or("")),
+            start_tick: field_u64(t, "start_tick").unwrap_or(0),
+            end_tick: field_u64(t, "end_tick").unwrap_or(0),
+            seconds: field_f64(t, "seconds").unwrap_or(0.0),
+            detail: field_u64(t, "detail").unwrap_or(0),
+        });
+    }
+    out.sort_by_key(|s| s.id);
+    out
+}
+
+fn render_span_line(out: &mut String, s: &Span, depth: usize) {
+    let indent = "  ".repeat(depth + 1);
+    let label = if s.label.is_empty() {
+        String::new()
+    } else {
+        format!(" {}", s.label)
+    };
+    let detail = match s.kind {
+        SpanKind::BatchForm | SpanKind::Execute => format!(" rows={}", s.detail),
+        SpanKind::Shard => format!(" shard={}", s.detail),
+        SpanKind::Attempt => format!(" attempt={}", s.detail),
+        SpanKind::QueueWait => format!(" rows={}", s.detail),
+        SpanKind::Request => format!(" rows={}", s.detail),
+    };
+    out.push_str(&format!(
+        "{indent}#{} {}{label} ticks {}..{}{} {}\n",
+        s.id,
+        s.kind.name(),
+        s.start_tick,
+        s.end_tick,
+        detail,
+        fmt_duration(s.seconds),
+    ));
+}
+
+fn render_subtree(
+    out: &mut String,
+    spans: &[Span],
+    children: &[Vec<usize>],
+    idx: usize,
+    depth: usize,
+) {
+    render_span_line(out, &spans[idx], depth);
+    for &c in &children[idx] {
+        render_subtree(out, spans, children, c, depth + 1);
+    }
+}
+
+/// Render the span tree(s) of `spans`, optionally restricted to one
+/// request id. Spans whose parent was evicted from the ring are promoted to
+/// roots of their request (marked by their non-zero parent id in the line).
+pub fn render_tree(spans: &[Span], request: Option<u64>) -> String {
+    let mut spans: Vec<Span> = spans
+        .iter()
+        .filter(|s| match request {
+            Some(r) => s.request == r,
+            None => true,
+        })
+        .cloned()
+        .collect();
+    spans.sort_by_key(|s| s.id);
+    if spans.is_empty() {
+        return "no spans\n".to_string();
+    }
+    let index_of = |id: u64| spans.iter().position(|s| s.id == id);
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); spans.len()];
+    let mut roots: Vec<usize> = Vec::new();
+    for (i, s) in spans.iter().enumerate() {
+        match (s.parent, index_of(s.parent)) {
+            (0, _) | (_, None) => roots.push(i),
+            (_, Some(p)) => children[p].push(i),
+        }
+    }
+    let mut out = String::new();
+    let mut last_req = None;
+    for &r in &roots {
+        if last_req != Some(spans[r].request) {
+            last_req = Some(spans[r].request);
+            out.push_str(&format!("request {}\n", spans[r].request));
+        }
+        render_subtree(&mut out, &spans, &children, r, 0);
+    }
+    out
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn dump() -> String {
+        concat!(
+            "{\n",
+            "  \"telemetry_schema\": 1,\n",
+            "  \"spans\": [\n",
+            "    {\"id\": 1, \"parent\": 0, \"request\": 1, \"kind\": \"request\", \
+             \"label\": \"dof\", \"start_tick\": 0, \"end_tick\": 5, \"seconds\": 0.01, \
+             \"detail\": 8},\n",
+            "    {\"id\": 2, \"parent\": 1, \"request\": 1, \"kind\": \"attempt\", \
+             \"label\": \"replica0\", \"start_tick\": 0, \"end_tick\": 5, \
+             \"seconds\": 0.009, \"detail\": 0},\n",
+            "    {\"id\": 3, \"parent\": 2, \"request\": 1, \"kind\": \"execute\", \
+             \"label\": \"dof\", \"start_tick\": 1, \"end_tick\": 4, \"seconds\": 0.005, \
+             \"detail\": 8},\n",
+            "    {\"id\": 4, \"parent\": 3, \"request\": 1, \"kind\": \"shard\", \
+             \"label\": \"s\", \"start_tick\": 1, \"end_tick\": 1, \"seconds\": 0.002, \
+             \"detail\": 1}\n",
+            "  ]\n",
+            "}\n",
+        )
+        .to_string()
+    }
+
+    #[test]
+    fn parses_span_lines_only() {
+        let spans = parse_spans(&dump());
+        assert_eq!(spans.len(), 4);
+        assert_eq!(spans[0].kind, SpanKind::Request);
+        assert_eq!(spans[0].label, "dof");
+        assert_eq!(spans[1].parent, 1);
+        assert_eq!(spans[3].detail, 1);
+        assert!((spans[2].seconds - 0.005).abs() < 1e-12);
+        assert_eq!(spans[2].end_tick, 4);
+    }
+
+    #[test]
+    fn tree_is_nested_in_parent_order() {
+        let spans = parse_spans(&dump());
+        let tree = render_tree(&spans, Some(1));
+        let lines: Vec<&str> = tree.lines().collect();
+        assert_eq!(lines[0], "request 1");
+        assert!(lines[1].starts_with("  #1 request dof"));
+        assert!(lines[2].starts_with("    #2 attempt replica0"));
+        assert!(lines[3].starts_with("      #3 execute dof"));
+        assert!(lines[4].starts_with("        #4 shard s"));
+        assert!(lines[3].contains("rows=8"));
+        assert!(lines[4].contains("shard=1"));
+    }
+
+    #[test]
+    fn orphaned_spans_become_roots() {
+        // Parent 2 evicted: span 3's subtree must still render.
+        let d = dump();
+        let filtered: String = d
+            .lines()
+            .filter(|l| !l.contains("\"id\": 2"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let spans = parse_spans(&filtered);
+        assert_eq!(spans.len(), 3);
+        let tree = render_tree(&spans, None);
+        assert!(tree.contains("#3 execute"));
+        assert!(tree.contains("#4 shard"));
+        let other = render_tree(&spans, Some(99));
+        assert_eq!(other, "no spans\n");
+    }
+
+    #[test]
+    fn escaped_labels_round_trip() {
+        let line = "{\"id\": 9, \"parent\": 0, \"request\": 9, \"kind\": \"request\", \
+                    \"label\": \"we\\\"ird\\\\label\", \"start_tick\": 0, \"end_tick\": 0, \
+                    \"seconds\": 0, \"detail\": 0}";
+        let spans = parse_spans(line);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].label, "we\"ird\\label");
+    }
+}

@@ -374,7 +374,7 @@ mod tests {
     #[test]
     fn region_results_in_shard_order() {
         let ranges = split_rows(100, 7);
-        let out = run_region(4, ranges.clone(), |i, r| (i, r.start, r.end));
+        let out = run_region(4, "test-region", ranges.clone(), |i, r| (i, r.start, r.end));
         for (i, (j, s, e)) in out.iter().enumerate() {
             assert_eq!(i, *j);
             assert_eq!(*s, ranges[i].start);

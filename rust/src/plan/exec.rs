@@ -23,6 +23,7 @@
 //! the same contract the arena's scratch buffers had.
 
 use std::ops::Range;
+use std::time::Instant;
 
 use crate::autodiff::dof::DofResult;
 use crate::autodiff::dof_tape::DofTape;
@@ -30,6 +31,7 @@ use crate::autodiff::forward_jacobian::TangentBatch;
 use crate::autodiff::Cost;
 use crate::graph::{Graph, Op};
 use crate::linalg::LdlDecomposition;
+use crate::obs::StepProfiler;
 use crate::tensor::{GemmPlan, PackedPanel, Tensor};
 
 use super::kernels;
@@ -141,6 +143,45 @@ pub fn execute_dof(
     panels: &PanelSet,
     slab: &mut Vec<f64>,
 ) -> DofResult {
+    execute_dof_profiled(program, graph, ldl, b_coef, c_coef, x, panels, slab, None)
+}
+
+/// Stable phase label for a schedule step (shared with the jet executor's
+/// profiling hooks).
+pub(crate) fn step_label(kind: &StepKind) -> &'static str {
+    match kind {
+        StepKind::Input { .. } => "input",
+        StepKind::Linear {
+            fused_act: Some(_), ..
+        } => "linear+act",
+        StepKind::Linear { .. } => "linear",
+        StepKind::Activation => "activation",
+        StepKind::Slice => "slice",
+        StepKind::Add => "add",
+        StepKind::Mul => "mul",
+        StepKind::SumReduce => "sum_reduce",
+        StepKind::Concat => "concat",
+    }
+}
+
+/// [`execute_dof`] with optional per-step profiling. With `profiler: None`
+/// the hot path pays one branch per step and zero allocation — the two
+/// paths run the identical kernel sequence on the identical storage, so
+/// profiled execution is bitwise-invisible (asserted by
+/// `rust/tests/observability.rs`). Each recorded step carries its measured
+/// seconds beside the program's exact analytic step cost.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_dof_profiled(
+    program: &OperatorProgram,
+    graph: &Graph,
+    ldl: &LdlDecomposition,
+    b_coef: Option<&[f64]>,
+    c_coef: Option<f64>,
+    x: &Tensor,
+    panels: &PanelSet,
+    slab: &mut Vec<f64>,
+    mut profiler: Option<&mut StepProfiler>,
+) -> DofResult {
     assert_eq!(x.rank(), 2, "input must be [batch, N]");
     let batch = x.dims()[0];
     assert_eq!(x.dims()[1], program.input_dim(), "input dim mismatch");
@@ -157,7 +198,8 @@ pub fn execute_dof(
     }
     let slab = &mut slab[..need];
 
-    for step in program.steps() {
+    for (si, step) in program.steps().iter().enumerate() {
+        let t0 = profiler.is_some().then(Instant::now);
         match &step.kind {
             StepKind::Input { in_off } => {
                 input_step(program, ldl, b_coef, x, batch, slab, step.node, *in_off)
@@ -176,8 +218,19 @@ pub fn execute_dof(
             StepKind::SumReduce => sum_reduce_step(program, graph, batch, slab, step.node),
             StepKind::Concat => concat_step(program, graph, batch, slab, step.node),
         }
+        if let (Some(p), Some(t0)) = (profiler.as_deref_mut(), t0) {
+            let c = program.step_cost(si, batch);
+            p.record(
+                step.node,
+                step_label(&step.kind),
+                t0.elapsed().as_secs_f64(),
+                c.muls,
+                c.adds,
+            );
+        }
     }
 
+    let t_fin = profiler.is_some().then(Instant::now);
     // Extract the output tuple into owned tensors.
     let np = program.node_plan(program.output());
     let d = np.dim;
@@ -195,6 +248,16 @@ pub fn execute_dof(
                 op_vals.set(b, o, op_vals.at(b, o) + c * values.at(b, o));
             }
         }
+    }
+    if let (Some(p), Some(t0)) = (profiler.as_deref_mut(), t_fin) {
+        let c = program.finalize_cost(batch);
+        p.record(
+            usize::MAX,
+            "finalize",
+            t0.elapsed().as_secs_f64(),
+            c.muls,
+            c.adds,
+        );
     }
     DofResult {
         values,

@@ -39,15 +39,17 @@
 
 use std::ops::Range;
 use std::sync::{Arc, OnceLock};
+use std::time::Instant;
 
 use crate::autodiff::backward::backward;
 use crate::autodiff::hessian::HessianResult;
 use crate::autodiff::Cost;
 use crate::graph::{Graph, Op};
+use crate::obs::StepProfiler;
 use crate::tensor::{matmul_nt_planned, GemmPlan, Tensor};
 use crate::util::keyed_cache::KeyedCache;
 
-use super::exec::{carve1, rd};
+use super::exec::{carve1, rd, step_label};
 use super::kernels;
 use super::layout::SlabLayout;
 use super::{build_schedule, hash_graph_structure, Fnv, PanelSet, Step, StepKind};
@@ -92,6 +94,17 @@ pub struct HessianPlan {
     n: usize,
     slab_per_row: usize,
     cost_per_row: Cost,
+    /// Per-row cost of each forward-Jacobian step (fused activation folded
+    /// into its Linear step, mirroring the schedule).
+    fwd_step_costs: Vec<Cost>,
+    /// Per-row cost of the eq. 12 adjoint sweep (one `backward` pass).
+    adjoint_cost_per_row: Cost,
+    /// Per-row cost of each node's eq. 14 reverse-sweep visit (indexed by
+    /// node id; zero for inputs and flop-free reshapes).
+    rev_node_costs: Vec<Cost>,
+    /// Per-row cost of the final `Σ aᵢⱼ Hᵢⱼ` contraction (lower-order `b`/`c`
+    /// extras are engine configuration, charged at execution).
+    contract_cost_per_row: Cost,
     peak_per_row: u64,
     key: HessianKey,
     identity_seed: OnceLock<Tensor>,
@@ -186,8 +199,37 @@ impl HessianPlan {
             cur = cur.saturating_sub((n * dim(j)) as u64);
         }
 
-        // ---- exact per-row cost (mirrors the reference charge by charge)
-        let cost_per_row = cost_per_row(graph, n);
+        // ---- exact per-row cost (mirrors the reference charge by charge),
+        // stored per phase/step so the profiler's analytic column sums to
+        // the plan total by construction.
+        let phases = phase_costs(graph, n);
+        let fwd_step_costs: Vec<Cost> = steps
+            .iter()
+            .map(|step| {
+                let mut c = phases.fwd[step.node];
+                if let StepKind::Linear {
+                    fused_act: Some(ai),
+                    ..
+                } = &step.kind
+                {
+                    let ac = phases.fwd[*ai];
+                    c.muls += ac.muls;
+                    c.adds += ac.adds;
+                }
+                c
+            })
+            .collect();
+        let contract_cost_per_row = Cost {
+            muls: (n * n) as u64,
+            adds: (n * n) as u64,
+        };
+        let mut cost_per_row = contract_cost_per_row;
+        cost_per_row.muls += phases.adjoint.muls;
+        cost_per_row.adds += phases.adjoint.adds;
+        for c in fwd_step_costs.iter().chain(phases.rev.iter()) {
+            cost_per_row.muls += c.muls;
+            cost_per_row.adds += c.adds;
+        }
 
         HessianPlan {
             steps,
@@ -199,6 +241,10 @@ impl HessianPlan {
             n,
             slab_per_row,
             cost_per_row,
+            fwd_step_costs,
+            adjoint_cost_per_row: phases.adjoint,
+            rev_node_costs: phases.rev,
+            contract_cost_per_row,
             peak_per_row: peak,
             key: hessian_key(graph),
             identity_seed: OnceLock::new(),
@@ -263,12 +309,24 @@ impl HessianPlan {
     }
 }
 
-/// Every charge the reference path accumulates, per batch row: the forward
-/// Jacobian (eq. 13 via `propagate_tangent`), the eq. 12 adjoint sweep,
-/// the eq. 14 second-order reverse sweep, and the `A`-contraction.
-fn cost_per_row(graph: &Graph, n: usize) -> Cost {
-    let mut c = Cost::zero();
-    for node in graph.nodes() {
+/// Per-row charges of the reference path, split by execution phase. The sum
+/// of every entry plus the contraction reproduces the reference's runtime
+/// accumulation charge by charge (the old single-total formula, exploded so
+/// the profiler can attribute each step exactly).
+struct PhaseCosts {
+    /// Forward Jacobian (eq. 13) cost per node.
+    fwd: Vec<Cost>,
+    /// The whole eq. 12 adjoint sweep (one tiny `backward` pass).
+    adjoint: Cost,
+    /// Eq. 14 reverse-sweep cost per node.
+    rev: Vec<Cost>,
+}
+
+fn phase_costs(graph: &Graph, n: usize) -> PhaseCosts {
+    let mut fwd = vec![Cost::zero(); graph.len()];
+    let mut adjoint = Cost::zero();
+    let mut rev = vec![Cost::zero(); graph.len()];
+    for (j, node) in graph.nodes().iter().enumerate() {
         let d = node.dim;
         match &node.op {
             Op::Input { .. } | Op::Slice { .. } | Op::Concat => {}
@@ -276,41 +334,45 @@ fn cost_per_row(graph: &Graph, n: usize) -> Cost {
                 let (o, i) = (weight.dims()[0], weight.dims()[1]);
                 // forward n·o·i (+adds), backward o·i (+adds),
                 // sweep n·o·i (+adds).
-                c.muls += (2 * n * o * i + o * i) as u64;
-                c.adds += (2 * n * o * i + o * i) as u64;
+                fwd[j].muls += (n * o * i) as u64;
+                fwd[j].adds += (n * o * i) as u64;
+                adjoint.muls += (o * i) as u64;
+                adjoint.adds += (o * i) as u64;
+                rev[j].muls += (n * o * i) as u64;
+                rev[j].adds += (n * o * i) as u64;
             }
             Op::Activation { .. } => {
                 // forward n·d; backward d; sweep d + 2·n·d (+ n·d adds).
-                c.muls += (n * d + d + d + 2 * n * d) as u64;
-                c.adds += (n * d) as u64;
+                fwd[j].muls += (n * d) as u64;
+                adjoint.muls += d as u64;
+                rev[j].muls += (d + 2 * n * d) as u64;
+                rev[j].adds += (n * d) as u64;
             }
             Op::Add => {
                 let k = node.inputs.len();
                 // forward (k−1)·n·d adds; backward k·d adds.
-                c.adds += ((k - 1) * n * d + k * d) as u64;
+                fwd[j].adds += ((k - 1) * n * d) as u64;
+                adjoint.adds += (k * d) as u64;
             }
             Op::Mul => {
                 let k = node.inputs.len();
                 // forward: per parent (k−1)·d + n·d muls, n·d adds.
-                c.muls += (k * ((k - 1) * d + n * d)) as u64;
-                c.adds += (k * n * d) as u64;
+                fwd[j].muls += (k * ((k - 1) * d + n * d)) as u64;
+                fwd[j].adds += (k * n * d) as u64;
                 // backward: per parent (k−1)·d muls.
-                c.muls += (k * (k - 1) * d) as u64;
+                adjoint.muls += (k * (k - 1) * d) as u64;
                 // sweep: per parent n·d + (k−1)·(d + n·d) muls,
                 // (k−1)·n·d adds.
-                c.muls += (k * (n * d + (k - 1) * (d + n * d))) as u64;
-                c.adds += (k * (k - 1) * n * d) as u64;
+                rev[j].muls += (k * (n * d + (k - 1) * (d + n * d))) as u64;
+                rev[j].adds += (k * (k - 1) * n * d) as u64;
             }
             Op::SumReduce => {
                 let pd = graph.node(node.inputs[0]).dim;
-                c.adds += (n * pd) as u64;
+                fwd[j].adds += (n * pd) as u64;
             }
         }
     }
-    // Contraction Σ a_ij H_ij.
-    c.muls += (n * n) as u64;
-    c.adds += (n * n) as u64;
-    c
+    PhaseCosts { fwd, adjoint, rev }
 }
 
 // ---- plan cache ----------------------------------------------------------
@@ -391,6 +453,27 @@ pub fn execute_hessian(
     panels: &PanelSet,
     slab: &mut Vec<f64>,
 ) -> HessianResult {
+    execute_hessian_profiled(plan, graph, a, b_coef, c_coef, x, panels, slab, None)
+}
+
+/// [`execute_hessian`] with optional per-step profiling. With
+/// `profiler: None` the extra cost is one `is_some()` branch per step and
+/// zero allocation; the arithmetic (and thus the result bits) is identical
+/// either way. When profiling, each phase records measured seconds beside
+/// the plan's analytic per-phase charge, so the records sum exactly to
+/// [`HessianPlan::cost`] — asserted by `rust/tests/observability.rs`.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_hessian_profiled(
+    plan: &HessianPlan,
+    graph: &Graph,
+    a: &Tensor,
+    b_coef: Option<&[f64]>,
+    c_coef: Option<f64>,
+    x: &Tensor,
+    panels: &PanelSet,
+    slab: &mut Vec<f64>,
+    mut profiler: Option<&mut StepProfiler>,
+) -> HessianResult {
     assert_eq!(x.rank(), 2, "input must be [batch, N]");
     let n = plan.n;
     let batch = x.dims()[0];
@@ -416,11 +499,17 @@ pub fn execute_hessian(
     };
 
     // (1) forward values (the schedule is the topological node order).
+    let t0 = profiler.is_some().then(Instant::now);
     let values = graph.eval_all(x);
+    if let (Some(p), Some(t0)) = (profiler.as_deref_mut(), t0) {
+        // Value evaluation is uncharged in the reference cost model.
+        p.record(usize::MAX, "values", t0.elapsed().as_secs_f64(), 0, 0);
+    }
 
     // (2) forward Jacobian tangents (eq. 13) on the slab, schedule-driven.
     let seed = plan.identity_seed();
-    for step in plan.steps.iter() {
+    for (si, step) in plan.steps.iter().enumerate() {
+        let t0 = profiler.is_some().then(Instant::now);
         forward_node(
             plan, graph, seed, &values, batch, slab, step.node, &step.kind, panels,
         );
@@ -441,11 +530,32 @@ pub fn execute_hessian(
                 panels,
             );
         }
+        if let (Some(p), Some(t0)) = (profiler.as_deref_mut(), t0) {
+            let c = plan.fwd_step_costs[si];
+            p.record(
+                step.node,
+                step_label(&step.kind),
+                t0.elapsed().as_secs_f64(),
+                c.muls * batch as u64,
+                c.adds * batch as u64,
+            );
+        }
     }
 
     // (3) reverse adjoints (eq. 12) — [batch, d] buffers, no tangents.
+    let t0 = profiler.is_some().then(Instant::now);
     let ones = Tensor::full(&[batch, 1], 1.0);
     let bw = backward(graph, &values, &ones, false);
+    if let (Some(p), Some(t0)) = (profiler.as_deref_mut(), t0) {
+        let c = plan.adjoint_cost_per_row;
+        p.record(
+            usize::MAX,
+            "adjoint",
+            t0.elapsed().as_secs_f64(),
+            c.muls * batch as u64,
+            c.adds * batch as u64,
+        );
+    }
 
     // (4) second-order reverse sweep (eq. 14) on the slab, reverse
     // schedule order (= reverse node order, fused steps expanded).
@@ -461,6 +571,7 @@ pub fn execute_hessian(
             // Keep: its ∇v̄ is a block of Hessian rows, extracted below.
             continue;
         }
+        let t0 = profiler.is_some().then(Instant::now);
         if !has_gbar[j] {
             // Node does not influence the output; nothing flows.
             let (win, _ros) = carve1(slab, &gbar(j));
@@ -580,7 +691,21 @@ pub fn execute_hessian(
                 }
             }
         }
+        if let (Some(p), Some(t0)) = (profiler.as_deref_mut(), t0) {
+            let c = plan.rev_node_costs[j];
+            p.record(
+                j,
+                rev_label(&node.op),
+                t0.elapsed().as_secs_f64(),
+                c.muls * batch as u64,
+                c.adds * batch as u64,
+            );
+        }
     }
+
+    // Assemble the Hessian (+ contraction + lower-order terms) — one
+    // profiled "contract" phase whose charge carries the `b`/`c` extras.
+    let t_fin = profiler.is_some().then(Instant::now);
 
     // Assemble the Hessian from input-node ∇v̄ blocks.
     let mut hessian = Tensor::zeros(&[batch, n, n]);
@@ -637,6 +762,24 @@ pub fn execute_hessian(
         }
     }
 
+    if let (Some(p), Some(t0)) = (profiler.as_deref_mut(), t_fin) {
+        let c = plan.contract_cost_per_row;
+        let mut muls = c.muls * batch as u64;
+        if b_coef.is_some() {
+            muls += (batch * n) as u64;
+        }
+        if c_coef.is_some() {
+            muls += batch as u64;
+        }
+        p.record(
+            usize::MAX,
+            "contract",
+            t0.elapsed().as_secs_f64(),
+            muls,
+            c.adds * batch as u64,
+        );
+    }
+
     HessianResult {
         values: values_out,
         gradient,
@@ -644,6 +787,20 @@ pub fn execute_hessian(
         operator_values: op_vals,
         cost: plan.cost(batch, b_coef.is_some(), c_coef.is_some()),
         peak_tangent_bytes: plan.peak_tangent_bytes(batch),
+    }
+}
+
+/// Profile label for one reverse-sweep node visit.
+fn rev_label(op: &Op) -> &'static str {
+    match op {
+        Op::Input { .. } => "rev:input",
+        Op::Linear { .. } => "rev:linear",
+        Op::Activation { .. } => "rev:activation",
+        Op::Slice { .. } => "rev:slice",
+        Op::Add => "rev:add",
+        Op::Mul => "rev:mul",
+        Op::SumReduce => "rev:sum_reduce",
+        Op::Concat => "rev:concat",
     }
 }
 
@@ -794,6 +951,25 @@ mod tests {
         assert_eq!(p.peak_tangent_bytes(7), 7 * p.peak_tangent_bytes(1));
         assert_eq!(p.slab_len(7), 7 * p.slab_per_row());
         assert!(p.slab_per_row() > 0);
+    }
+
+    #[test]
+    fn phase_costs_sum_to_plan_cost() {
+        let mut rng = Xoshiro256::new(63);
+        let g = mlp_graph(&random_layers(&[5, 11, 7, 1], &mut rng), Act::Tanh);
+        let p = HessianPlan::compile(&g);
+        let mut sum = p.contract_cost_per_row;
+        sum.muls += p.adjoint_cost_per_row.muls;
+        sum.adds += p.adjoint_cost_per_row.adds;
+        for c in p.fwd_step_costs.iter().chain(p.rev_node_costs.iter()) {
+            sum.muls += c.muls;
+            sum.adds += c.adds;
+        }
+        assert_eq!(sum, p.cost_per_row);
+        // Lower-order extras ride on top of the per-row total.
+        let c = p.cost(3, true, true);
+        assert_eq!(c.muls, 3 * p.cost_per_row.muls + 3 * p.input_dim() as u64 + 3);
+        assert_eq!(c.adds, 3 * p.cost_per_row.adds);
     }
 
     #[test]

@@ -163,6 +163,14 @@ pub struct OperatorProgram {
     rank: usize,
     slab_per_row: usize,
     cost_per_row: Cost,
+    /// Exact per-row cost of each schedule step (fused activation included
+    /// in its Linear step). Summed with `finalize_cost_per_row` this equals
+    /// `cost_per_row` identically — the invariant the per-step profiler
+    /// (`rust/tests/observability.rs`) rides on.
+    step_costs_per_row: Vec<Cost>,
+    /// Per-row cost of the output finalization (the lower-order `c·φ`
+    /// term); zero when `lower_order_c` is off.
+    finalize_cost_per_row: Cost,
     peak_per_row_scalars: u64,
     opts: PlanOptions,
     key: PlanKey,
@@ -266,7 +274,37 @@ impl OperatorProgram {
         let slab_per_row = lay.high_water();
 
         // ---- exact per-row cost & liveness peak (both linear in batch) --
-        let cost_per_row = cost_per_row(graph, &nodes, opts, out_id);
+        // Per-step costs are summed into the program total, so the two can
+        // never disagree (the profiler's measured-vs-analytic table keys on
+        // this).
+        let step_costs_per_row: Vec<Cost> = steps
+            .iter()
+            .map(|step| {
+                let mut c = node_cost_per_row(graph, &nodes, step.node);
+                if let StepKind::Linear {
+                    fused_act: Some(a), ..
+                } = &step.kind
+                {
+                    let ac = node_cost_per_row(graph, &nodes, *a);
+                    c.muls += ac.muls;
+                    c.adds += ac.adds;
+                }
+                c
+            })
+            .collect();
+        let finalize_cost_per_row = if opts.lower_order_c {
+            Cost {
+                muls: nodes[out_id].dim as u64,
+                adds: 0,
+            }
+        } else {
+            Cost::zero()
+        };
+        let mut cost_per_row = finalize_cost_per_row;
+        for c in &step_costs_per_row {
+            cost_per_row.muls += c.muls;
+            cost_per_row.adds += c.adds;
+        }
         let peak_per_row_scalars = peak_per_row(graph, &nodes, &frees_at, out_id);
 
         // ---- closed-form models (Appendix B/D) --------------------------
@@ -298,6 +336,8 @@ impl OperatorProgram {
             rank: r,
             slab_per_row,
             cost_per_row,
+            step_costs_per_row,
+            finalize_cost_per_row,
             peak_per_row_scalars,
             opts,
             key,
@@ -367,6 +407,27 @@ impl OperatorProgram {
         Cost {
             muls: self.cost_per_row.muls * batch as u64,
             adds: self.cost_per_row.adds * batch as u64,
+        }
+    }
+
+    /// Exact FLOP count of schedule step `idx` at `batch` rows (a fused
+    /// activation is charged to its Linear step, matching execution). The
+    /// step costs plus [`Self::finalize_cost`] sum to [`Self::cost`]
+    /// identically.
+    pub fn step_cost(&self, idx: usize, batch: usize) -> Cost {
+        let c = self.step_costs_per_row[idx];
+        Cost {
+            muls: c.muls * batch as u64,
+            adds: c.adds * batch as u64,
+        }
+    }
+
+    /// Exact FLOP count of the output finalization (the lower-order `c·φ`
+    /// term) at `batch` rows; zero when `lower_order_c` is off.
+    pub fn finalize_cost(&self, batch: usize) -> Cost {
+        Cost {
+            muls: self.finalize_cost_per_row.muls * batch as u64,
+            adds: self.finalize_cost_per_row.adds * batch as u64,
         }
     }
 
@@ -492,50 +553,49 @@ pub fn pack_panels(steps: &[Step], graph: &Graph) -> PanelSet {
     panels
 }
 
-/// Exact per-row FLOP accumulation, mirroring the reference interpreter's
-/// counting term by term (see `DofEngine::compute_with_arena`).
-fn cost_per_row(graph: &Graph, nodes: &[NodePlan], opts: PlanOptions, out_id: usize) -> Cost {
+/// Exact per-row FLOP cost of one node's eq. 7–9 propagation, mirroring
+/// the reference interpreter's counting term by term (see
+/// `DofEngine::compute_with_arena`). The program total is the sum of these
+/// over all nodes plus the output finalization — there is exactly one cost
+/// model, summed at different granularities.
+pub(crate) fn node_cost_per_row(graph: &Graph, nodes: &[NodePlan], j: usize) -> Cost {
+    let node = graph.node(j);
+    let d = nodes[j].dim;
+    let t = nodes[j].t();
     let mut c = Cost::zero();
-    for (j, node) in graph.nodes().iter().enumerate() {
-        let d = nodes[j].dim;
-        let t = nodes[j].t();
-        match &node.op {
-            Op::Input { .. } | Op::Slice { .. } | Op::Concat => {}
-            Op::Linear { weight, .. } => {
-                let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
-                c.muls += ((t + 2) * out_d * in_d) as u64;
-                c.adds += (t * out_d * in_d) as u64;
-            }
-            Op::Activation { .. } => {
-                c.muls += (2 * t * d + 2 * d) as u64;
-                c.adds += (t * d + d) as u64;
-            }
-            Op::Add => {
-                let extra = node.inputs.len().saturating_sub(1);
-                c.adds += (extra * (t * d + 2 * d)) as u64;
-            }
-            Op::Mul => {
-                let k = node.inputs.len();
-                // Value chain (outside the per-row loop in the interpreter,
-                // but batch-linear all the same).
-                c.muls += ((k - 1) * d) as u64;
-                // Per parent: leave-one-out coefficient, tangent scale,
-                // scalar-stream scale.
-                c.muls += (k * ((k - 1) * d + t * d + d)) as u64;
-                // Per unordered pair: cross contraction + 2× scale.
-                let pairs = k * (k - 1) / 2;
-                c.muls += (pairs * (t * d + 2 * d)) as u64;
-            }
-            Op::SumReduce => {
-                let p = node.inputs[0];
-                let pd = nodes[p].dim;
-                let pt = nodes[p].t();
-                c.adds += (pt * pd + 2 * pd) as u64;
-            }
+    match &node.op {
+        Op::Input { .. } | Op::Slice { .. } | Op::Concat => {}
+        Op::Linear { weight, .. } => {
+            let (out_d, in_d) = (weight.dims()[0], weight.dims()[1]);
+            c.muls += ((t + 2) * out_d * in_d) as u64;
+            c.adds += (t * out_d * in_d) as u64;
         }
-    }
-    if opts.lower_order_c {
-        c.muls += nodes[out_id].dim as u64;
+        Op::Activation { .. } => {
+            c.muls += (2 * t * d + 2 * d) as u64;
+            c.adds += (t * d + d) as u64;
+        }
+        Op::Add => {
+            let extra = node.inputs.len().saturating_sub(1);
+            c.adds += (extra * (t * d + 2 * d)) as u64;
+        }
+        Op::Mul => {
+            let k = node.inputs.len();
+            // Value chain (outside the per-row loop in the interpreter,
+            // but batch-linear all the same).
+            c.muls += ((k - 1) * d) as u64;
+            // Per parent: leave-one-out coefficient, tangent scale,
+            // scalar-stream scale.
+            c.muls += (k * ((k - 1) * d + t * d + d)) as u64;
+            // Per unordered pair: cross contraction + 2× scale.
+            let pairs = k * (k - 1) / 2;
+            c.muls += (pairs * (t * d + 2 * d)) as u64;
+        }
+        Op::SumReduce => {
+            let p = node.inputs[0];
+            let pd = nodes[p].dim;
+            let pt = nodes[p].t();
+            c.adds += (pt * pd + 2 * pd) as u64;
+        }
     }
     c
 }
@@ -984,6 +1044,33 @@ mod tests {
         assert_eq!(c7.adds, 7 * c1.adds);
         assert_eq!(p.peak_tangent_bytes(7), 7 * p.peak_tangent_bytes(1));
         assert_eq!(p.slab_len(7), 7 * p.slab_per_row());
+    }
+
+    #[test]
+    fn step_costs_sum_to_program_cost() {
+        let mut rng = Xoshiro256::new(9);
+        let g = mlp_graph(&random_layers(&[5, 11, 7, 1], &mut rng), Act::Gelu);
+        let ldl = LdlDecomposition::of(&random_symmetric(5, &mut rng));
+        for lower in [false, true] {
+            let p = OperatorProgram::compile(
+                &g,
+                &ldl,
+                PlanOptions {
+                    sparsity: true,
+                    lower_order_c: lower,
+                },
+            );
+            for batch in [1usize, 3, 16] {
+                let mut sum = p.finalize_cost(batch);
+                for i in 0..p.steps().len() {
+                    let c = p.step_cost(i, batch);
+                    sum.muls += c.muls;
+                    sum.adds += c.adds;
+                }
+                assert_eq!(sum.muls, p.cost(batch).muls);
+                assert_eq!(sum.adds, p.cost(batch).adds);
+            }
+        }
     }
 
     #[test]

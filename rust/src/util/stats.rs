@@ -30,8 +30,10 @@ impl Summary {
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
             / (n.max(2) - 1) as f64;
+        // Total order so a NaN measurement (e.g. a poisoned timing sample)
+        // sorts deterministically instead of aborting telemetry mid-incident.
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         Summary {
             n,
             mean,
@@ -207,6 +209,66 @@ mod tests {
         assert_eq!(h.count(), 1000);
         assert!(h.quantile(0.5) <= h.quantile(0.95));
         assert!(h.mean() > 0.0);
+    }
+
+    #[test]
+    fn summary_survives_nan_sample() {
+        // A NaN measurement must not abort the summary (total_cmp sorts
+        // NaN after every finite value); the finite order statistics stay
+        // meaningful.
+        let s = Summary::of(&[2.0, f64::NAN, 1.0, 3.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+        assert!(s.mean.is_nan());
+        // Median of [1, 2, 3, NaN] interpolates between 2.0 and 3.0.
+        assert!((s.median - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_endpoints_exact() {
+        let xs = [1.0, 2.0, 4.0, 8.0];
+        // Endpoints return the extreme samples exactly (no interpolation).
+        assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 8.0);
+        // Out-of-range q clamps to the endpoints.
+        assert_eq!(percentile_sorted(&xs, -0.5), 1.0);
+        assert_eq!(percentile_sorted(&xs, 1.5), 8.0);
+        // Interior q interpolates linearly between neighbors.
+        assert!((percentile_sorted(&xs, 0.5) - 3.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn histogram_empty_and_single() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+
+        let mut h = LatencyHistogram::new();
+        h.record(1e-3);
+        assert_eq!(h.count(), 1);
+        // Every quantile of a single sample lands in that sample's bucket:
+        // the reported bound must bracket the measurement from above.
+        let q50 = h.quantile(0.5);
+        let q99 = h.quantile(0.99);
+        assert_eq!(q50, q99);
+        assert!(q50 >= 1e-3 && q50 <= 1.78e-3 * 1.0001);
+    }
+
+    #[test]
+    fn histogram_all_equal_samples() {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..100 {
+            h.record(2e-4);
+        }
+        assert_eq!(h.count(), 100);
+        // All mass in one bucket: every quantile reports the same bound.
+        let (q01, q50, q99) = (h.quantile(0.01), h.quantile(0.5), h.quantile(0.99));
+        assert_eq!(q01, q50);
+        assert_eq!(q50, q99);
+        assert!((h.mean() - 2e-4).abs() < 1e-12);
     }
 
     #[test]

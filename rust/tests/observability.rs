@@ -1,0 +1,465 @@
+//! Observability battery: the PR 8 contract that tracing and profiling are
+//! **measurement, never perturbation**.
+//!
+//! * **Bitwise invisibility** — routed results with a tracer installed are
+//!   bit-identical to untraced serving, across worker pools of 1/2/4/8
+//!   threads (tracing composes with the PR 1 determinism contract).
+//! * **Span-tree exactness** — under a scripted [`TickClock`] schedule a
+//!   single routed request records exactly the documented tree
+//!   (`request → attempt → queue_wait/batch_form → execute → shard*`) with
+//!   exact ids, parents, ticks, labels, and detail payloads.
+//! * **Drop accounting** — a single-shard ring under pressure retains
+//!   exactly its capacity and counts every eviction.
+//! * **Profiler ≡ analytic cost** — the per-step profiler's FLOP totals
+//!   equal the compiled programs' `cost(batch)` for all three planned
+//!   executors (DOF, Hessian baseline, jet), and profiled execution is
+//!   bit-identical to unprofiled.
+//! * **Dump round trip** — `Registry::to_json` → `parse_spans` reproduces
+//!   the span log field-for-field and renders the identical tree.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dof::coordinator::{BatchPolicy, ModelServer, Router, RouterConfig, ServeConfig, TickClock};
+use dof::graph::{builder::random_layers, mlp_graph, Act, Graph};
+use dof::jet::program::{execute_jet, execute_jet_profiled};
+use dof::jet::{biharmonic_terms, DirectionBasis, JetProgram};
+use dof::obs::{parse_spans, render_tree, Registry, Span, SpanKind, StepProfiler, Tracer};
+use dof::operators::{CoeffSpec, Operator};
+use dof::parallel::Pool;
+use dof::plan::exec::{execute_dof, execute_dof_profiled};
+use dof::plan::hessian::{execute_hessian, execute_hessian_profiled, HessianPlan};
+use dof::plan::pack_panels;
+use dof::tensor::Tensor;
+use dof::util::Xoshiro256;
+
+/// Deterministic f32 request points for `(tag, iter)`.
+fn points(tag: u64, iter: usize, rows: usize, width: usize) -> Vec<f32> {
+    let mut rng = Xoshiro256::new(0x0B5 ^ tag.wrapping_mul(0x9E37_79B9) ^ iter as u64);
+    (0..rows * width).map(|_| rng.normal() as f32).collect()
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn bits64(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn batch_input(rng: &mut Xoshiro256, rows: usize, n: usize) -> Tensor {
+    Tensor::from_vec(&[rows, n], (0..rows * n).map(|_| rng.normal()).collect())
+}
+
+/// Route 6 requests of varying row counts through a one-replica DOF model
+/// and return the bit patterns of every response. `tracer: None` is the
+/// untraced baseline the traced runs must reproduce exactly.
+fn run_traffic(
+    graph: &Graph,
+    op: &Operator,
+    threads: usize,
+    tracer: Option<Arc<Tracer>>,
+) -> Vec<(Vec<u32>, Vec<u32>)> {
+    let clock = TickClock::new();
+    let mut router = Router::with_config(RouterConfig {
+        clock: clock.clone(),
+        tracer: tracer.clone(),
+        ..RouterConfig::default()
+    });
+    router.register(
+        "dof",
+        ModelServer::spawn_dof_cfg(
+            graph.clone(),
+            op.dof_engine(),
+            BatchPolicy {
+                capacity: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            Pool::new(threads),
+            2,
+            ServeConfig {
+                clock: clock.clone(),
+                tracer,
+                ..ServeConfig::labeled("dof")
+            },
+        ),
+    );
+    let client = router.client("dof").unwrap();
+    let n = graph.input_dim();
+    let mut out = Vec::new();
+    for it in 0..6 {
+        let rows = 1 + it % 4;
+        let resp = client.eval_blocking(points(1, it, rows, n)).unwrap();
+        out.push((bits32(&resp.phi), bits32(&resp.lphi)));
+        clock.advance(1);
+    }
+    router.shutdown();
+    out
+}
+
+/// Tracing is bitwise-invisible: traced responses equal untraced ones bit
+/// for bit, at every pool width, and all widths agree with each other.
+#[test]
+fn traced_serving_is_bitwise_identical_to_untraced_across_pool_widths() {
+    let mut rng = Xoshiro256::new(0x0B5E);
+    let n = 4;
+    let graph = mlp_graph(&random_layers(&[n, 9, 1], &mut rng), Act::Tanh);
+    let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed: 51 });
+    let mut baseline: Option<Vec<(Vec<u32>, Vec<u32>)>> = None;
+    for threads in [1usize, 2, 4, 8] {
+        let untraced = run_traffic(&graph, &op, threads, None);
+        let tracer = Arc::new(Tracer::new());
+        let traced = run_traffic(&graph, &op, threads, Some(Arc::clone(&tracer)));
+        assert_eq!(
+            untraced, traced,
+            "tracer perturbed served bytes at pool width {threads}"
+        );
+        // The traced run actually recorded something (6 requests, each with
+        // a full span chain) — invisibility is not vacuous.
+        assert!(
+            tracer.retained() >= 6 * 5,
+            "traced run retained only {} spans",
+            tracer.retained()
+        );
+        match &baseline {
+            None => baseline = Some(untraced),
+            Some(b) => assert_eq!(b, &untraced, "pool width {threads} diverged bitwise"),
+        }
+    }
+}
+
+/// One routed request under a scripted tick schedule records exactly the
+/// documented span tree, with exact ids, parents, ticks, and details.
+#[test]
+fn span_tree_is_exact_under_a_scripted_tick_schedule() {
+    let mut rng = Xoshiro256::new(0x7EE);
+    let n = 3;
+    let graph = mlp_graph(&random_layers(&[n, 6, 1], &mut rng), Act::Tanh);
+    let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed: 5 });
+    let tracer = Arc::new(Tracer::with_shards(1, 1024));
+    let clock = TickClock::new();
+    // Scripted schedule: park the clock at tick 7 for the whole request —
+    // every control-plane timestamp in the tree must read exactly 7.
+    clock.advance(7);
+    let mut router = Router::with_config(RouterConfig {
+        clock: clock.clone(),
+        tracer: Some(Arc::clone(&tracer)),
+        ..RouterConfig::default()
+    });
+    router.register(
+        "dof",
+        ModelServer::spawn_dof_cfg(
+            graph.clone(),
+            op.dof_engine(),
+            // Capacity-sized request: the 2-row submission cuts immediately,
+            // max_wait never gates.
+            BatchPolicy {
+                capacity: 2,
+                max_wait: Duration::from_secs(30),
+            },
+            Pool::new(1),
+            // shard_rows 1: the 2-row batch decomposes into exactly 2 shards.
+            1,
+            ServeConfig {
+                clock: clock.clone(),
+                tracer: Some(Arc::clone(&tracer)),
+                ..ServeConfig::labeled("dof")
+            },
+        ),
+    );
+    let client = router.client("dof").unwrap();
+    client.eval_blocking(points(2, 0, 2, n)).unwrap();
+    router.shutdown();
+
+    assert_eq!(tracer.dropped_spans(), 0);
+    let spans = tracer.snapshot();
+    assert_eq!(spans.len(), 7, "request/attempt/queue_wait/batch_form/execute/2×shard");
+
+    // Ids are monotone from 1 in allocation order; the snapshot is id-sorted.
+    let ids: Vec<u64> = spans.iter().map(|s| s.id).collect();
+    assert_eq!(ids, vec![1, 2, 3, 4, 5, 6, 7]);
+    let kinds: Vec<SpanKind> = spans.iter().map(|s| s.kind).collect();
+    assert_eq!(
+        kinds,
+        vec![
+            SpanKind::Request,
+            SpanKind::Attempt,
+            SpanKind::QueueWait,
+            SpanKind::BatchForm,
+            SpanKind::Execute,
+            SpanKind::Shard,
+            SpanKind::Shard,
+        ]
+    );
+    // Tree shape: attempt under request, queue-wait and batch-form under
+    // the attempt, execute under batch-form, shards under execute.
+    let parents: Vec<u64> = spans.iter().map(|s| s.parent).collect();
+    assert_eq!(parents, vec![0, 1, 2, 2, 4, 5, 5]);
+    // Every span belongs to request 1 and reads the scripted tick exactly.
+    for s in &spans {
+        assert_eq!(s.request, 1, "span {} request id", s.id);
+        assert_eq!((s.start_tick, s.end_tick), (7, 7), "span {} ticks", s.id);
+        assert!(s.seconds >= 0.0, "span {} duration", s.id);
+    }
+    // Detail payloads: rows for request/queue_wait/batch_form/execute,
+    // attempt ordinal for attempt, shard index for shards.
+    let details: Vec<u64> = spans.iter().map(|s| s.detail).collect();
+    assert_eq!(details, vec![2, 0, 2, 2, 2, 0, 1]);
+    // Labels: model name at the root, replica index on the attempt, the
+    // serve label everywhere below.
+    assert_eq!(spans[0].label, "dof");
+    assert_eq!(spans[1].label, "replica0");
+    for s in &spans[2..] {
+        assert_eq!(s.label, "dof", "span {} label", s.id);
+    }
+    // Batch formation is a pure control-plane marker: zero duration.
+    assert_eq!(spans[3].seconds, 0.0);
+    // The rendered tree carries the whole request.
+    let tree = render_tree(&spans, Some(1));
+    assert!(tree.contains("request 1"), "{tree}");
+    for name in ["request", "attempt", "queue_wait", "batch_form", "execute", "shard"] {
+        assert!(tree.contains(name), "tree missing {name}:\n{tree}");
+    }
+}
+
+/// Ring pressure: a single-shard tracer with capacity 5 retains exactly 5
+/// spans, counts every eviction, and keeps the latest activity.
+#[test]
+fn span_ring_drop_accounting_is_exact_under_pressure() {
+    let mut rng = Xoshiro256::new(0xD40);
+    let n = 3;
+    let graph = mlp_graph(&random_layers(&[n, 5, 1], &mut rng), Act::Sin);
+    let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed: 9 });
+    let tracer = Arc::new(Tracer::with_shards(1, 5));
+    let clock = TickClock::new();
+    let mut router = Router::with_config(RouterConfig {
+        clock: clock.clone(),
+        tracer: Some(Arc::clone(&tracer)),
+        ..RouterConfig::default()
+    });
+    router.register(
+        "dof",
+        ModelServer::spawn_dof_cfg(
+            graph.clone(),
+            op.dof_engine(),
+            BatchPolicy {
+                capacity: 1,
+                max_wait: Duration::from_secs(30),
+            },
+            Pool::new(1),
+            // shard_rows ≥ rows: every 1-row batch is exactly 1 shard, so
+            // each request records exactly 6 spans.
+            8,
+            ServeConfig {
+                clock: clock.clone(),
+                tracer: Some(Arc::clone(&tracer)),
+                ..ServeConfig::labeled("dof")
+            },
+        ),
+    );
+    let client = router.client("dof").unwrap();
+    let requests = 8u64;
+    for it in 0..requests as usize {
+        client.eval_blocking(points(3, it, 1, n)).unwrap();
+        clock.advance(1);
+    }
+    router.shutdown();
+
+    // Serial traffic: span recording is strictly ordered, so the ring
+    // arithmetic is exact — 6 spans per request, capacity 5 retained.
+    let recorded = 6 * requests;
+    assert_eq!(tracer.retained(), 5);
+    assert_eq!(tracer.dropped_spans(), recorded - 5);
+    // The survivors are all from the final request (root id 6·7 + 1 = 43):
+    // eviction discards oldest-first.
+    let last_root = 6 * (requests - 1) + 1;
+    for s in tracer.snapshot() {
+        assert_eq!(
+            s.request, last_root,
+            "retained span {} belongs to an evicted request",
+            s.id
+        );
+    }
+}
+
+/// The per-step profiler's FLOP totals equal the compiled programs' exact
+/// analytic `cost(batch)` for all three planned executors, and profiled
+/// execution returns bit-identical results to unprofiled.
+#[test]
+fn profiler_flop_totals_equal_analytic_program_costs() {
+    let mut rng = Xoshiro256::new(0x9F0F);
+    let batch = 5usize;
+
+    // DOF (order 2, planned slab executor).
+    let n = 4;
+    let graph = mlp_graph(&random_layers(&[n, 9, 1], &mut rng), Act::Tanh);
+    let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed: 77 });
+    let eng = op.dof_engine();
+    let program = eng.plan(&graph);
+    let panels = pack_panels(program.steps(), &graph);
+    let x = batch_input(&mut rng, batch, n);
+    let mut slab = Vec::new();
+    let plain = execute_dof(
+        &program,
+        &graph,
+        &eng.ldl,
+        eng.b.as_deref(),
+        eng.c,
+        &x,
+        &panels,
+        &mut slab,
+    );
+    let mut prof = StepProfiler::new();
+    let mut slab2 = Vec::new();
+    let profiled = execute_dof_profiled(
+        &program,
+        &graph,
+        &eng.ldl,
+        eng.b.as_deref(),
+        eng.c,
+        &x,
+        &panels,
+        &mut slab2,
+        Some(&mut prof),
+    );
+    assert!(!prof.is_empty());
+    let want = program.cost(batch);
+    assert_eq!(prof.total_muls(), want.muls, "DOF profiler muls");
+    assert_eq!(prof.total_adds(), want.adds, "DOF profiler adds");
+    assert_eq!(profiled.cost, want, "DOF executed cost");
+    assert!(prof.total_seconds() >= 0.0);
+    assert_eq!(
+        bits64(plain.values.data()),
+        bits64(profiled.values.data()),
+        "DOF profiling perturbed φ"
+    );
+    assert_eq!(
+        bits64(plain.operator_values.data()),
+        bits64(profiled.operator_values.data()),
+        "DOF profiling perturbed L[φ]"
+    );
+
+    // Hessian baseline (planned reverse-over-forward).
+    let heng = op.hessian_engine();
+    let hplan = HessianPlan::compile(&graph);
+    let hpanels = pack_panels(hplan.steps(), &graph);
+    let mut hslab = Vec::new();
+    let hplain = execute_hessian(
+        &hplan,
+        &graph,
+        &heng.a,
+        heng.b.as_deref(),
+        heng.c,
+        &x,
+        &hpanels,
+        &mut hslab,
+    );
+    let mut hprof = StepProfiler::new();
+    let mut hslab2 = Vec::new();
+    let hprofiled = execute_hessian_profiled(
+        &hplan,
+        &graph,
+        &heng.a,
+        heng.b.as_deref(),
+        heng.c,
+        &x,
+        &hpanels,
+        &mut hslab2,
+        Some(&mut hprof),
+    );
+    assert!(!hprof.is_empty());
+    let hwant = hplan.cost(batch, heng.b.is_some(), heng.c.is_some());
+    assert_eq!(hprof.total_muls(), hwant.muls, "Hessian profiler muls");
+    assert_eq!(hprof.total_adds(), hwant.adds, "Hessian profiler adds");
+    assert_eq!(hprofiled.cost, hwant, "Hessian executed cost");
+    assert_eq!(
+        bits64(hplain.operator_values.data()),
+        bits64(hprofiled.operator_values.data()),
+        "Hessian profiling perturbed L[φ]"
+    );
+
+    // Jet (order-4 biharmonic Taylor-mode).
+    let d = 3;
+    let jgraph = mlp_graph(&random_layers(&[d, 7, 1], &mut rng), Act::Tanh);
+    let basis = DirectionBasis::from_terms(d, &biharmonic_terms(d, 1.0), None);
+    let jprogram = JetProgram::compile(&jgraph, &basis, false);
+    let jpanels = pack_panels(jprogram.steps(), &jgraph);
+    let xj = batch_input(&mut rng, batch, d);
+    let mut jslab = Vec::new();
+    let jplain = execute_jet(&jprogram, &jgraph, &basis, None, &xj, &jpanels, &mut jslab);
+    let mut jprof = StepProfiler::new();
+    let mut jslab2 = Vec::new();
+    let jprofiled = execute_jet_profiled(
+        &jprogram,
+        &jgraph,
+        &basis,
+        None,
+        &xj,
+        &jpanels,
+        &mut jslab2,
+        Some(&mut jprof),
+    );
+    assert!(!jprof.is_empty());
+    let jwant = jprogram.cost(batch);
+    assert_eq!(jprof.total_muls(), jwant.muls, "jet profiler muls");
+    assert_eq!(jprof.total_adds(), jwant.adds, "jet profiler adds");
+    assert_eq!(jprofiled.cost, jwant, "jet executed cost");
+    assert_eq!(
+        bits64(jplain.operator_values.data()),
+        bits64(jprofiled.operator_values.data()),
+        "jet profiling perturbed L[φ]"
+    );
+
+    // The efficiency table renders every step plus the total row.
+    let table = prof.render_table("dof");
+    assert!(table.lines().count() >= prof.records().len() + 2, "{table}");
+}
+
+/// `Registry::to_json` → `parse_spans` reproduces the span log field for
+/// field (f64 seconds round-trip exactly through shortest-representation
+/// formatting), and both sides render the identical tree.
+#[test]
+fn telemetry_dump_round_trips_the_span_tree() {
+    let tracer = Tracer::with_shards(1, 64);
+    let root = tracer.next_id();
+    let attempt = tracer.next_id();
+    let execute = tracer.next_id();
+    for (id, parent, kind, label, seconds, detail) in [
+        (root, 0, SpanKind::Request, "model \"a\"", 0.012_345_678_9, 4),
+        (attempt, root, SpanKind::Attempt, "replica0", 0.011, 0),
+        (execute, attempt, SpanKind::Execute, "dof", 0.009, 4),
+    ] {
+        tracer.record(Span {
+            id,
+            parent,
+            request: root,
+            kind,
+            label: label.to_string(),
+            start_tick: 3,
+            end_tick: 5,
+            seconds,
+            detail,
+        });
+    }
+    let mut reg = Registry::new();
+    reg.set_spans(&tracer);
+    let json = reg.to_json();
+    assert!(json.contains("\"telemetry_schema\": 1"));
+
+    let parsed = parse_spans(&json);
+    let orig = tracer.snapshot();
+    assert_eq!(parsed.len(), orig.len());
+    for (a, b) in orig.iter().zip(&parsed) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.parent, b.parent);
+        assert_eq!(a.request, b.request);
+        assert_eq!(a.kind, b.kind);
+        assert_eq!(a.label, b.label, "label survives JSON escaping");
+        assert_eq!(a.start_tick, b.start_tick);
+        assert_eq!(a.end_tick, b.end_tick);
+        assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "span {} seconds", a.id);
+        assert_eq!(a.detail, b.detail);
+    }
+    assert_eq!(render_tree(&orig, None), render_tree(&parsed, None));
+    assert!(render_tree(&parsed, Some(root)).contains("request 1"));
+}
