@@ -197,6 +197,7 @@ pub fn measure_robustness(graph: &Graph, op: &Operator) -> RobustnessProbe {
         // Capacity-sized requests cut immediately; max_wait never gates.
         capacity: rows,
         max_wait: std::time::Duration::from_millis(1),
+        max_wait_ticks: None,
     };
     let pool = Pool::new(1);
     let spawn = |injector| {
@@ -284,6 +285,7 @@ pub fn measure_latency_soak(graph: &Graph, op: &Operator) -> LatencySoak {
     let policy = BatchPolicy {
         capacity: rows,
         max_wait: std::time::Duration::from_millis(1),
+        max_wait_ticks: None,
     };
     let pool = Pool::new(1);
     router.register(

@@ -1,0 +1,382 @@
+//! Deterministic, tick-driven autoscaler over the [`Router`]'s replica
+//! sets.
+//!
+//! The ROADMAP serving item asks for an autoscaler loop that consumes
+//! [`RouterModelSnapshot`]s and spawns or retires replicas when queue
+//! depth or occupancy crosses thresholds. The design constraint is the
+//! same one the whole control plane lives under: **no wall clock, no
+//! background nondeterminism**. So the autoscaler is not a thread — it is
+//! a pure decision step, [`Autoscaler::step`], that the serve loop (or a
+//! test driver) calls explicitly. Every input is either an exact counter
+//! (`interval_peak_queue_depth`, replica counts) or the shared
+//! [`TickClock`](super::fault::TickClock) read through
+//! [`Router::clock`]; given the same scripted load and tick schedule, the
+//! same scale events fire at the same ticks with the same replica counts
+//! (asserted by `rust/tests/autoscaler.rs`).
+//!
+//! Each step, per model, in registration order:
+//!
+//! 1. Read the model's scaling snapshot — this swap-resets
+//!    `interval_peak_queue_depth`, so the step sees the queue-depth
+//!    high-water mark **since the previous step**.
+//! 2. If the model scaled within the last
+//!    [`cooldown_ticks`](AutoscalerConfig::cooldown_ticks), do nothing
+//!    (hysteresis: the observation is discarded, not deferred).
+//! 3. Otherwise scale **up** by one replica (via the model's registered
+//!    [`ReplicaFactory`](super::router::ReplicaFactory)) when the replica
+//!    count is below [`min_replicas`](AutoscalerConfig::min_replicas), or
+//!    when the interval peak reaches
+//!    [`up_queue_depth`](AutoscalerConfig::up_queue_depth) — or the
+//!    aggregated `parallel_occupancy` reaches
+//!    [`up_occupancy`](AutoscalerConfig::up_occupancy) — with the count
+//!    below [`max_replicas`](AutoscalerConfig::max_replicas).
+//! 4. Else scale **down** by one replica when the interval peak is at or
+//!    below [`down_queue_depth`](AutoscalerConfig::down_queue_depth), the
+//!    occupancy is at or below
+//!    [`down_occupancy`](AutoscalerConfig::down_occupancy), and the count
+//!    is above `min_replicas`. Retirement is draining: the router
+//!    unpublishes the replica first and then runs its graceful shutdown,
+//!    so no admitted request is lost.
+//!
+//! At most one replica is added or removed per model per step — scaling
+//! is gradual by construction, and combined with the cooldown this gives
+//! classic hysteresis (a spike must persist across steps to reach
+//! `max_replicas`; a lull must persist to drain back down).
+//!
+//! The occupancy thresholds deserve a caveat: `parallel_occupancy` is
+//! derived from measured compute seconds (data plane), so decisions gated
+//! on it are load-aware but not replayable tick-for-tick. Both default to
+//! infinity (disabled); the queue-depth thresholds alone keep the scaler
+//! fully deterministic.
+
+use std::collections::HashMap;
+
+use super::router::{Router, RouterModelSnapshot};
+
+/// Scaling thresholds and hysteresis knobs (see module docs).
+#[derive(Debug, Clone)]
+pub struct AutoscalerConfig {
+    /// Floor on the replica count; the scaler also grows a model back up
+    /// to this floor regardless of load. Must be ≥ 1.
+    pub min_replicas: usize,
+    /// Ceiling on the replica count. Must be ≥ `min_replicas`.
+    pub max_replicas: usize,
+    /// Scale up when the interval peak queue depth reaches this. Must be
+    /// greater than `down_queue_depth` (the dead band between the two is
+    /// what prevents flapping).
+    pub up_queue_depth: usize,
+    /// Scale up when aggregated `parallel_occupancy` reaches this
+    /// (measured-seconds signal; `f64::INFINITY` = disabled).
+    pub up_occupancy: f64,
+    /// Scale down when the interval peak queue depth is at or below this.
+    pub down_queue_depth: usize,
+    /// Scale down only while aggregated `parallel_occupancy` is at or
+    /// below this (`f64::INFINITY` = no occupancy condition).
+    pub down_occupancy: f64,
+    /// Ticks that must elapse after a model's last scale event before it
+    /// may scale again.
+    pub cooldown_ticks: u64,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        Self {
+            min_replicas: 1,
+            max_replicas: 4,
+            up_queue_depth: 8,
+            up_occupancy: f64::INFINITY,
+            down_queue_depth: 1,
+            down_occupancy: f64::INFINITY,
+            cooldown_ticks: 16,
+        }
+    }
+}
+
+/// Which way a scale event moved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDirection {
+    Up,
+    Down,
+}
+
+/// One scaling action, recorded for telemetry and test assertions.
+#[derive(Debug, Clone)]
+pub struct ScaleEvent {
+    pub model: String,
+    pub direction: ScaleDirection,
+    /// Logical tick at which the step fired the event.
+    pub tick: u64,
+    pub replicas_before: usize,
+    pub replicas_after: usize,
+    /// The queue-depth high-water mark that drove the decision.
+    pub interval_peak_queue_depth: usize,
+    /// Aggregated `parallel_occupancy` at decision time (informational;
+    /// exact assertions should use the queue-depth field).
+    pub occupancy: f64,
+}
+
+/// Point-in-time autoscaler accounting (rendered into telemetry by
+/// `obs::Registry::add_autoscaler`).
+#[derive(Debug, Clone, Default)]
+pub struct AutoscalerSnapshot {
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Every event since construction, in firing order.
+    pub events: Vec<ScaleEvent>,
+}
+
+/// The decision engine (see module docs). Owns only hysteresis state and
+/// the event log; all load state lives in the router's counters.
+pub struct Autoscaler {
+    cfg: AutoscalerConfig,
+    /// Tick of each model's most recent scale event.
+    last_action: HashMap<String, u64>,
+    scale_ups: u64,
+    scale_downs: u64,
+    events: Vec<ScaleEvent>,
+}
+
+impl Autoscaler {
+    /// Panics on an inconsistent config: the replica bounds must satisfy
+    /// `1 ≤ min ≤ max`, and the queue thresholds must leave a dead band
+    /// (`up_queue_depth > down_queue_depth`).
+    pub fn new(cfg: AutoscalerConfig) -> Self {
+        assert!(cfg.min_replicas >= 1, "min_replicas must be at least 1");
+        assert!(
+            cfg.max_replicas >= cfg.min_replicas,
+            "max_replicas must be >= min_replicas"
+        );
+        assert!(
+            cfg.up_queue_depth > cfg.down_queue_depth,
+            "up_queue_depth must exceed down_queue_depth (dead band)"
+        );
+        Self {
+            cfg,
+            last_action: HashMap::new(),
+            scale_ups: 0,
+            scale_downs: 0,
+            events: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &AutoscalerConfig {
+        &self.cfg
+    }
+
+    /// Run one decision step over every registered model. Returns the
+    /// events fired by this step (also appended to the cumulative log).
+    pub fn step(&mut self, router: &mut Router) -> Vec<ScaleEvent> {
+        let now = router.clock().now();
+        let snaps = router.scaling_snapshot();
+        let mut fired = Vec::new();
+        for snap in &snaps {
+            if let Some(ev) = self.step_model(router, snap, now) {
+                fired.push(ev);
+            }
+        }
+        self.events.extend(fired.iter().cloned());
+        fired
+    }
+
+    /// Cumulative accounting since construction.
+    pub fn snapshot(&self) -> AutoscalerSnapshot {
+        AutoscalerSnapshot {
+            scale_ups: self.scale_ups,
+            scale_downs: self.scale_downs,
+            events: self.events.clone(),
+        }
+    }
+
+    fn step_model(
+        &mut self,
+        router: &mut Router,
+        snap: &RouterModelSnapshot,
+        now: u64,
+    ) -> Option<ScaleEvent> {
+        let before = snap.replicas.len();
+        if let Some(&t) = self.last_action.get(&snap.model) {
+            if now.saturating_sub(t) < self.cfg.cooldown_ticks {
+                return None;
+            }
+        }
+        let peak = snap.interval_peak_queue_depth;
+        let occupancy = snap.server.parallel_occupancy;
+        let below_floor = before < self.cfg.min_replicas;
+        let overloaded = (peak >= self.cfg.up_queue_depth || occupancy >= self.cfg.up_occupancy)
+            && before < self.cfg.max_replicas;
+        let idle = peak <= self.cfg.down_queue_depth
+            && occupancy <= self.cfg.down_occupancy
+            && before > self.cfg.min_replicas;
+        let (direction, after) = if below_floor || overloaded {
+            // A model without a registered factory cannot grow; treat it
+            // as unscalable rather than an error so mixed fleets work.
+            (ScaleDirection::Up, router.scale_up(&snap.model).ok()?)
+        } else if idle {
+            (ScaleDirection::Down, router.retire_replica(&snap.model).ok()?)
+        } else {
+            return None;
+        };
+        self.last_action.insert(snap.model.clone(), now);
+        match direction {
+            ScaleDirection::Up => self.scale_ups += 1,
+            ScaleDirection::Down => self.scale_downs += 1,
+        }
+        Some(ScaleEvent {
+            model: snap.model.clone(),
+            direction,
+            tick: now,
+            replicas_before: before,
+            replicas_after: after,
+            interval_peak_queue_depth: peak,
+            occupancy,
+        })
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatchFn, BatchPolicy, ModelServer, RouterConfig, TickClock};
+
+    fn echo_server() -> ModelServer {
+        let compute: BatchFn = Box::new(|data, _| Ok((data.to_vec(), data.to_vec())));
+        ModelServer::spawn(1, BatchPolicy::ticks(8, 0), compute)
+    }
+
+    fn scaler(cooldown: u64, max: usize) -> Autoscaler {
+        Autoscaler::new(AutoscalerConfig {
+            min_replicas: 1,
+            max_replicas: max,
+            up_queue_depth: 1,
+            down_queue_depth: 0,
+            cooldown_ticks: cooldown,
+            ..AutoscalerConfig::default()
+        })
+    }
+
+    fn router_with_factory(clock: &TickClock) -> Router {
+        let mut router = Router::with_config(RouterConfig {
+            clock: clock.clone(),
+            ..RouterConfig::default()
+        });
+        router.register("m", echo_server());
+        router
+            .set_replica_factory("m", Box::new(echo_server))
+            .unwrap();
+        router
+    }
+
+    #[test]
+    fn scales_up_and_down_at_exact_ticks() {
+        let clock = TickClock::new();
+        let mut router = router_with_factory(&clock);
+        let mut scaler = scaler(5, 3);
+
+        // Tick 0: traffic happened (interval peak >= 1) → scale up.
+        router.eval_blocking("m", vec![1.0]).unwrap();
+        let events = scaler.step(&mut router);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].direction, ScaleDirection::Up);
+        assert_eq!(events[0].tick, 0);
+        assert_eq!((events[0].replicas_before, events[0].replicas_after), (1, 2));
+        assert_eq!(router.replica_count("m"), Some(2));
+
+        // Still tick 0: cooldown discards the next observation entirely.
+        router.eval_blocking("m", vec![1.0]).unwrap();
+        assert!(scaler.step(&mut router).is_empty());
+        assert_eq!(router.replica_count("m"), Some(2));
+
+        // Tick 4: one tick short of the cooldown — still held.
+        clock.advance(4);
+        assert!(scaler.step(&mut router).is_empty());
+
+        // Tick 5: cooldown over, interval quiet (peak 0) → scale down.
+        clock.advance(1);
+        let events = scaler.step(&mut router);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].direction, ScaleDirection::Down);
+        assert_eq!(events[0].tick, 5);
+        assert_eq!((events[0].replicas_before, events[0].replicas_after), (2, 1));
+        assert_eq!(router.replica_count("m"), Some(1));
+
+        // Tick 10: still quiet but already at min_replicas → no event.
+        clock.advance(5);
+        assert!(scaler.step(&mut router).is_empty());
+        assert_eq!(router.replica_count("m"), Some(1));
+
+        let snap = scaler.snapshot();
+        assert_eq!((snap.scale_ups, snap.scale_downs), (1, 1));
+        assert_eq!(snap.events.len(), 2);
+        router.shutdown();
+    }
+
+    #[test]
+    fn max_replicas_caps_growth() {
+        let clock = TickClock::new();
+        let mut router = router_with_factory(&clock);
+        let mut scaler = scaler(1, 2);
+        for _ in 0..4 {
+            router.eval_blocking("m", vec![1.0]).unwrap();
+            scaler.step(&mut router);
+            clock.advance(1);
+        }
+        assert_eq!(router.replica_count("m"), Some(2), "capped at max");
+        assert_eq!(scaler.snapshot().scale_ups, 1);
+        router.shutdown();
+    }
+
+    #[test]
+    fn grows_to_min_replicas_without_load() {
+        let clock = TickClock::new();
+        let mut router = router_with_factory(&clock);
+        let mut scaler = Autoscaler::new(AutoscalerConfig {
+            min_replicas: 3,
+            max_replicas: 4,
+            cooldown_ticks: 2,
+            ..AutoscalerConfig::default()
+        });
+        // One replica per step, cooldown-paced, no traffic at all.
+        assert_eq!(scaler.step(&mut router).len(), 1);
+        clock.advance(2);
+        assert_eq!(scaler.step(&mut router).len(), 1);
+        clock.advance(2);
+        assert!(scaler.step(&mut router).is_empty(), "floor reached");
+        assert_eq!(router.replica_count("m"), Some(3));
+        router.shutdown();
+    }
+
+    #[test]
+    fn model_without_factory_is_left_alone() {
+        let clock = TickClock::new();
+        let mut router = Router::with_config(RouterConfig {
+            clock: clock.clone(),
+            ..RouterConfig::default()
+        });
+        router.register("m", echo_server());
+        let mut scaler = scaler(1, 4);
+        router.eval_blocking("m", vec![1.0]).unwrap();
+        assert!(scaler.step(&mut router).is_empty());
+        assert_eq!(router.replica_count("m"), Some(1));
+        router.shutdown();
+    }
+
+    #[test]
+    #[should_panic(expected = "dead band")]
+    fn overlapping_thresholds_rejected() {
+        let _ = Autoscaler::new(AutoscalerConfig {
+            up_queue_depth: 1,
+            down_queue_depth: 1,
+            ..AutoscalerConfig::default()
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "min_replicas")]
+    fn zero_min_replicas_rejected() {
+        let _ = Autoscaler::new(AutoscalerConfig {
+            min_replicas: 0,
+            ..AutoscalerConfig::default()
+        });
+    }
+}

@@ -2,11 +2,34 @@
 //!
 //! The AOT artifacts have a fixed batch dimension `B`; the batcher packs
 //! incoming requests' rows into a `B×width` buffer, cutting a batch when
-//! (a) it is full, (b) the oldest request has waited past `max_wait`, or
-//! (c) `flush()` is called. A request larger than `B` is split across
-//! batches transparently.
+//! (a) it is full, (b) the oldest request has waited past the wait policy,
+//! or (c) `cut()` is called explicitly (shutdown flush). A request larger
+//! than `B` is split across batches transparently.
+//!
+//! ## Wait policy: logical ticks, with a legacy wall-clock mode
+//!
+//! Batch *composition* (`rows_used`, member spans, and therefore every
+//! queue-wait sample) is a control-plane decision. Under
+//! [`BatchPolicy::max_wait_ticks`] the cut deadline is measured on the
+//! shared [`TickClock`](super::TickClock): the worker threads the current
+//! tick into [`Batcher::push`] and [`Batcher::deadline_expired`], so batch
+//! composition replays exactly under a scripted clock. When
+//! `max_wait_ticks` is `None` (the legacy default) the batcher makes no
+//! wait decision at all — the worker owns the wall-clock age of the oldest
+//! pending row on its side of the channel and simply calls `cut()` when
+//! `max_wait` elapses. Either way this file never reads wall time (CI
+//! pins that).
+//!
+//! ## Buffer recycling
+//!
+//! `cut()` hands out the accumulation buffer and swaps in a spare instead
+//! of allocating a fresh zeroed `B×width` buffer per cut; the worker hands
+//! the buffer back via [`Batcher::recycle`], which zeroes **only the rows
+//! the cut actually used** (padding rows were never written, so they are
+//! still zero). The cut contents are bitwise identical to the old
+//! allocate-per-cut path — the module tests pin this.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use super::EvalRequest;
 
@@ -15,8 +38,19 @@ use super::EvalRequest;
 pub struct BatchPolicy {
     /// Artifact batch capacity `B` (rows).
     pub capacity: usize,
-    /// Max time the oldest row may wait before a partial batch is cut.
+    /// Legacy wall-clock wait: max time the oldest row may wait before a
+    /// partial batch is cut. Consulted only when [`Self::max_wait_ticks`]
+    /// is `None`, and then only *outside* the batcher (the worker tracks
+    /// the age on its side of the channel — this type never reads wall
+    /// time). It doubles as the worker's channel poll interval in both
+    /// modes.
     pub max_wait: Duration,
+    /// Tick-based wait: cut a partial batch once the oldest accumulated
+    /// row has waited `>= max_wait_ticks` logical ticks on the shared
+    /// clock (the deadline fires exactly *at* the boundary). `Some(0)`
+    /// cuts on the first wait check after any row lands. `None` (the
+    /// legacy default) selects the wall-clock path above.
+    pub max_wait_ticks: Option<u64>,
 }
 
 impl Default for BatchPolicy {
@@ -24,6 +58,19 @@ impl Default for BatchPolicy {
         Self {
             capacity: 32,
             max_wait: Duration::from_millis(2),
+            max_wait_ticks: None,
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// Tick-driven policy: cut a partial batch once the oldest row has
+    /// waited `max_wait_ticks` logical ticks.
+    pub fn ticks(capacity: usize, max_wait_ticks: u64) -> Self {
+        Self {
+            capacity,
+            max_wait_ticks: Some(max_wait_ticks),
+            ..Self::default()
         }
     }
 }
@@ -49,9 +96,12 @@ pub struct CutBatch<T> {
 impl<T> CutBatch<T> {
     /// Total rows in the padded buffer (the batch capacity it was cut at) —
     /// what the server's executed-rows metrics are measured against.
+    /// `width` must be positive ([`Batcher::new`] rejects zero widths, so
+    /// a cut produced by a batcher always has one).
     pub fn padded_rows(&self, width: usize) -> usize {
-        debug_assert_eq!(self.data.len() % width.max(1), 0);
-        self.data.len() / width.max(1)
+        debug_assert!(width > 0, "padded_rows requires a positive width");
+        debug_assert_eq!(self.data.len() % width, 0);
+        self.data.len() / width
     }
 }
 
@@ -60,20 +110,30 @@ pub struct Batcher<T> {
     policy: BatchPolicy,
     width: usize,
     buf: Vec<f32>,
+    /// Recycled all-zero buffer for the next cut (two-buffer swap).
+    spare: Option<Vec<f32>>,
     rows: usize,
     members: Vec<PendingRequest<T>>,
-    oldest: Option<Instant>,
+    /// Logical tick at which the oldest accumulated row arrived.
+    oldest_tick: Option<u64>,
 }
 
 impl<T> Batcher<T> {
+    /// Build a batcher. Panics on `width == 0` or `capacity == 0`: a
+    /// zero-width batcher cannot hold rows, and masking it downstream
+    /// (the old `width.max(1)` in `padded_rows`) would silently misreport
+    /// padding metrics instead.
     pub fn new(width: usize, policy: BatchPolicy) -> Self {
+        assert!(width > 0, "batcher width must be positive");
+        assert!(policy.capacity > 0, "batch capacity must be positive");
         Self {
             policy,
             width,
             buf: vec![0.0; policy.capacity * width],
+            spare: None,
             rows: 0,
             members: Vec::new(),
-            oldest: None,
+            oldest_tick: None,
         }
     }
 
@@ -85,9 +145,16 @@ impl<T> Batcher<T> {
         self.policy.capacity - self.rows
     }
 
-    /// Push a request; returns any batches that became full while packing
-    /// (a request larger than the capacity spans several).
-    pub fn push(&mut self, req: EvalRequest, tag_for_fragment: impl Fn(usize) -> T) -> Vec<CutBatch<T>> {
+    /// Push a request at logical tick `now`; returns any batches that
+    /// became full while packing (a request larger than the capacity spans
+    /// several). `now` only seeds the tick-deadline bookkeeping — under
+    /// the legacy wall-clock policy callers may pass any value.
+    pub fn push(
+        &mut self,
+        req: EvalRequest,
+        now: u64,
+        tag_for_fragment: impl Fn(usize) -> T,
+    ) -> Vec<CutBatch<T>> {
         assert_eq!(req.width, self.width, "request width mismatch");
         let mut cut = Vec::new();
         let mut row_off = 0usize;
@@ -106,8 +173,8 @@ impl<T> Batcher<T> {
                 span: (self.rows, take),
             });
             self.rows += take;
-            if self.oldest.is_none() {
-                self.oldest = Some(Instant::now());
+            if self.oldest_tick.is_none() {
+                self.oldest_tick = Some(now);
             }
             row_off += take;
             fragment += 1;
@@ -118,29 +185,55 @@ impl<T> Batcher<T> {
         cut
     }
 
-    /// Should a partial batch be cut due to the wait deadline?
-    pub fn deadline_expired(&self) -> bool {
-        match self.oldest {
-            Some(t) => t.elapsed() >= self.policy.max_wait && self.rows > 0,
-            None => false,
+    /// Should a partial batch be cut due to the tick-wait deadline at
+    /// logical tick `now`? Always `false` under the legacy wall-clock
+    /// policy (`max_wait_ticks == None`) — there the worker owns the wait.
+    pub fn deadline_expired(&self, now: u64) -> bool {
+        match (self.policy.max_wait_ticks, self.oldest_tick) {
+            (Some(wait), Some(t0)) => {
+                self.rows > 0 && now.saturating_sub(t0) >= wait
+            }
+            _ => false,
         }
     }
 
-    /// Cut whatever is accumulated (pads with zero rows).
+    /// Cut whatever is accumulated (pads with zero rows). Swaps in the
+    /// recycled spare buffer when one is available; otherwise allocates.
     pub fn cut(&mut self) -> CutBatch<T> {
-        let data = std::mem::replace(
-            &mut self.buf,
-            vec![0.0; self.policy.capacity * self.width],
-        );
+        let cap = self.policy.capacity * self.width;
+        let fresh = match self.spare.take() {
+            Some(b) => {
+                debug_assert_eq!(b.len(), cap);
+                debug_assert!(b.iter().all(|&v| v == 0.0), "recycled buffer not clean");
+                b
+            }
+            None => vec![0.0; cap],
+        };
+        let data = std::mem::replace(&mut self.buf, fresh);
         let rows_used = self.rows;
         let members = std::mem::take(&mut self.members);
         self.rows = 0;
-        self.oldest = None;
+        self.oldest_tick = None;
         CutBatch {
             data,
             rows_used,
             members,
         }
+    }
+
+    /// Hand a consumed cut's buffer back for reuse by the next `cut()`.
+    /// Zeroes only the `rows_used` rows the cut wrote — the padding rows
+    /// beyond were never touched, so the buffer is all-zero again.
+    /// Buffers of the wrong size (e.g. from a batcher with a different
+    /// policy) are dropped instead of poisoning the swap.
+    pub fn recycle(&mut self, mut data: Vec<f32>, rows_used: usize) {
+        let cap = self.policy.capacity * self.width;
+        if data.len() != cap {
+            return;
+        }
+        let used = (rows_used * self.width).min(cap);
+        data[..used].fill(0.0);
+        self.spare = Some(data);
     }
 }
 
@@ -152,11 +245,15 @@ mod tests {
         EvalRequest::new(vec![fill; rows * width], width)
     }
 
+    fn tick_policy(capacity: usize) -> BatchPolicy {
+        BatchPolicy::ticks(capacity, 1_000)
+    }
+
     #[test]
     fn packs_multiple_requests_into_one_batch() {
-        let mut b: Batcher<usize> = Batcher::new(2, BatchPolicy { capacity: 8, max_wait: Duration::from_secs(1) });
-        assert!(b.push(req(3, 2, 1.0), |_| 0).is_empty());
-        assert!(b.push(req(4, 2, 2.0), |_| 1).is_empty());
+        let mut b: Batcher<usize> = Batcher::new(2, tick_policy(8));
+        assert!(b.push(req(3, 2, 1.0), 0, |_| 0).is_empty());
+        assert!(b.push(req(4, 2, 2.0), 0, |_| 1).is_empty());
         let cut = b.cut();
         assert_eq!(cut.rows_used, 7);
         assert_eq!(cut.members.len(), 2);
@@ -168,8 +265,8 @@ mod tests {
 
     #[test]
     fn full_batch_auto_cuts() {
-        let mut b: Batcher<usize> = Batcher::new(1, BatchPolicy { capacity: 4, max_wait: Duration::from_secs(1) });
-        let cuts = b.push(req(4, 1, 3.0), |_| 7);
+        let mut b: Batcher<usize> = Batcher::new(1, tick_policy(4));
+        let cuts = b.push(req(4, 1, 3.0), 0, |_| 7);
         assert_eq!(cuts.len(), 1);
         assert_eq!(cuts[0].rows_used, 4);
         assert!(b.is_empty());
@@ -177,8 +274,8 @@ mod tests {
 
     #[test]
     fn oversize_request_spans_batches() {
-        let mut b: Batcher<usize> = Batcher::new(1, BatchPolicy { capacity: 4, max_wait: Duration::from_secs(1) });
-        let cuts = b.push(req(10, 1, 1.0), |frag| frag);
+        let mut b: Batcher<usize> = Batcher::new(1, tick_policy(4));
+        let cuts = b.push(req(10, 1, 1.0), 0, |frag| frag);
         // 10 rows over capacity 4: two full cuts, 2 rows remain.
         assert_eq!(cuts.len(), 2);
         assert_eq!(b.free_rows(), 2);
@@ -191,21 +288,123 @@ mod tests {
     }
 
     #[test]
+    fn oversize_fragment_tags_survive_recycling_across_cuts() {
+        // Same fragment-tag sequence when the cut buffers are recycled:
+        // the swap must not disturb member bookkeeping.
+        let mut b: Batcher<usize> = Batcher::new(1, tick_policy(3));
+        let cuts = b.push(req(7, 1, 2.0), 5, |frag| frag);
+        assert_eq!(cuts.len(), 2);
+        for cut in cuts {
+            assert_eq!(cut.members.len(), 1);
+            let used = cut.rows_used;
+            b.recycle(cut.data, used);
+        }
+        // Remaining single row is fragment 2 and the deadline tracks the
+        // push tick, not the recycle.
+        assert!(!b.deadline_expired(5));
+        let tail = b.cut();
+        assert_eq!(tail.members[0].tag, 2);
+        assert_eq!(tail.rows_used, 1);
+    }
+
+    #[test]
     fn cut_batch_padded_rows() {
-        let mut b: Batcher<usize> =
-            Batcher::new(2, BatchPolicy { capacity: 8, max_wait: Duration::from_secs(1) });
-        b.push(req(5, 2, 1.0), |_| 0);
+        let mut b: Batcher<usize> = Batcher::new(2, tick_policy(8));
+        b.push(req(5, 2, 1.0), 0, |_| 0);
         let cut = b.cut();
         assert_eq!(cut.padded_rows(2), 8);
         assert_eq!(cut.rows_used, 5);
     }
 
     #[test]
-    fn deadline() {
-        let mut b: Batcher<usize> = Batcher::new(1, BatchPolicy { capacity: 4, max_wait: Duration::from_millis(1) });
-        assert!(!b.deadline_expired());
-        b.push(req(1, 1, 1.0), |_| 0);
-        std::thread::sleep(Duration::from_millis(3));
-        assert!(b.deadline_expired());
+    fn tick_deadline_fires_exactly_at_boundary() {
+        let mut b: Batcher<usize> = Batcher::new(1, BatchPolicy::ticks(4, 3));
+        // Empty batcher never expires.
+        assert!(!b.deadline_expired(u64::MAX));
+        b.push(req(1, 1, 1.0), 10, |_| 0);
+        assert!(!b.deadline_expired(10)); // age 0
+        assert!(!b.deadline_expired(12)); // age 2 < 3
+        assert!(b.deadline_expired(13)); // age 3: exactly at the boundary
+        assert!(b.deadline_expired(20));
+        let _ = b.cut();
+        // Cleared by the cut.
+        assert!(!b.deadline_expired(u64::MAX));
+    }
+
+    #[test]
+    fn zero_tick_wait_expires_immediately() {
+        let mut b: Batcher<usize> = Batcher::new(1, BatchPolicy::ticks(4, 0));
+        assert!(!b.deadline_expired(0));
+        b.push(req(1, 1, 1.0), 7, |_| 0);
+        assert!(b.deadline_expired(7));
+    }
+
+    #[test]
+    fn legacy_wall_policy_never_expires_inside_the_batcher() {
+        // Under the legacy Duration policy the worker owns the wait; the
+        // batcher itself must never report expiry regardless of ticks.
+        let mut b: Batcher<usize> = Batcher::new(1, BatchPolicy::default());
+        b.push(req(1, 1, 1.0), 0, |_| 0);
+        assert!(!b.deadline_expired(u64::MAX));
+    }
+
+    #[test]
+    fn recycled_buffer_cuts_are_bitwise_identical_to_fresh_allocations() {
+        // `a` recycles its cut buffers; `b` allocates fresh per cut (the
+        // old path). Every cut must match bitwise, including padding after
+        // a smaller second batch.
+        let p = tick_policy(4);
+        let mut a: Batcher<usize> = Batcher::new(2, p);
+        let mut b: Batcher<usize> = Batcher::new(2, p);
+        let r1 = EvalRequest::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2);
+        assert!(a.push(r1.clone(), 0, |_| 0).is_empty());
+        assert!(b.push(r1, 0, |_| 0).is_empty());
+        let ca = a.cut();
+        let cb = b.cut();
+        assert_eq!(ca.rows_used, 3);
+        assert_eq!(ca.data, cb.data);
+        a.recycle(ca.data, ca.rows_used);
+        // Second round uses fewer rows: recycled padding must still be zero.
+        let r2 = EvalRequest::new(vec![9.0, 8.0], 2);
+        assert!(a.push(r2.clone(), 1, |_| 0).is_empty());
+        assert!(b.push(r2, 1, |_| 0).is_empty());
+        let ca = a.cut();
+        let cb = b.cut();
+        assert_eq!(ca.rows_used, 1);
+        assert_eq!(ca.data, cb.data);
+        assert!(ca.data[2..].iter().all(|&v| v == 0.0));
+        a.recycle(ca.data, ca.rows_used);
+        // Third round fills the batch exactly, exercising the swap's
+        // steady state through push's auto-cut.
+        let r3 = EvalRequest::new(vec![7.0; 8], 2);
+        let cuts_a = a.push(r3.clone(), 2, |f| f);
+        let cuts_b = b.push(r3, 2, |f| f);
+        assert_eq!(cuts_a.len(), 1);
+        assert_eq!(cuts_b.len(), 1);
+        assert_eq!(cuts_a[0].data, cuts_b[0].data);
+    }
+
+    #[test]
+    fn recycle_rejects_foreign_buffer_sizes() {
+        let mut b: Batcher<usize> = Batcher::new(2, tick_policy(4));
+        b.recycle(vec![1.0; 3], 1); // wrong size: dropped
+        b.push(req(1, 2, 5.0), 0, |_| 0);
+        let cut = b.cut();
+        // The cut came from a correctly sized (freshly allocated) buffer.
+        assert_eq!(cut.data.len(), 8);
+        assert_eq!(&cut.data[..2], &[5.0, 5.0]);
+        assert!(cut.data[2..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "width must be positive")]
+    fn zero_width_rejected_at_construction() {
+        let _b: Batcher<usize> = Batcher::new(0, tick_policy(4));
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be positive")]
+    fn zero_capacity_rejected_at_construction() {
+        let _b: Batcher<usize> = Batcher::new(1, tick_policy(0));
     }
 }

@@ -55,6 +55,34 @@ struct Inner {
     sharded_wall_seconds: f64,
 }
 
+impl Inner {
+    /// Fold another recorder's state into this one: counts sum,
+    /// histograms merge bucket-wise, and the occupancy numerator /
+    /// denominator (`shard_seconds` / `sharded_wall_seconds`) sum — so an
+    /// aggregate's `parallel_occupancy` is the per-part occupancies
+    /// weighted by their sharded wall seconds.
+    fn merge(&mut self, other: &Inner) {
+        self.requests += other.requests;
+        self.received += other.received;
+        self.rows += other.rows;
+        self.batches += other.batches;
+        self.padded_rows += other.padded_rows;
+        merge_hist(&mut self.latency, &other.latency);
+        merge_hist(&mut self.exec_latency, &other.exec_latency);
+        merge_hist(&mut self.queue_wait, &other.queue_wait);
+        self.shards += other.shards;
+        self.shard_seconds += other.shard_seconds;
+        self.sharded_batches += other.sharded_batches;
+        self.sharded_wall_seconds += other.sharded_wall_seconds;
+    }
+}
+
+fn merge_hist(into: &mut Option<LatencyHistogram>, from: &Option<LatencyHistogram>) {
+    if let Some(h) = from {
+        into.get_or_insert_with(LatencyHistogram::new).merge(h);
+    }
+}
+
 /// Point-in-time snapshot for display.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
@@ -169,8 +197,60 @@ impl Metrics {
         self.engine_faults.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Cheap read of `parallel_occupancy` alone — the dispatch hot path
+    /// scores replicas per pick, so it must not pay for a full snapshot
+    /// (histogram quantiles) per replica per request.
+    pub fn occupancy(&self) -> f64 {
+        let g = self.guard();
+        if g.sharded_wall_seconds > 0.0 {
+            g.shard_seconds / g.sharded_wall_seconds
+        } else {
+            0.0
+        }
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.guard();
+        Self::derive(
+            &g,
+            [
+                self.accepted.load(Ordering::Relaxed),
+                self.shed.load(Ordering::Relaxed),
+                self.invalid.load(Ordering::Relaxed),
+                self.deadline_expired.load(Ordering::Relaxed),
+                self.engine_faults.load(Ordering::Relaxed),
+            ],
+        )
+    }
+
+    /// Aggregate snapshot across several recorders (one per replica):
+    /// counts and robustness counters sum, latency / exec / queue-wait
+    /// percentiles come from bucket-merged histograms, and
+    /// `parallel_occupancy` weights each part by its sharded wall seconds
+    /// (summed shard-compute seconds over summed wall seconds). An empty
+    /// iterator yields the all-zero snapshot. This is what
+    /// `RouterModelSnapshot.server` reports for multi-replica models —
+    /// never a single replica's view.
+    pub fn aggregate<'a, I>(parts: I) -> MetricsSnapshot
+    where
+        I: IntoIterator<Item = &'a Metrics>,
+    {
+        let mut merged = Inner::default();
+        let mut robust = [0u64; 5];
+        for m in parts {
+            merged.merge(&m.guard());
+            robust[0] += m.accepted.load(Ordering::Relaxed);
+            robust[1] += m.shed.load(Ordering::Relaxed);
+            robust[2] += m.invalid.load(Ordering::Relaxed);
+            robust[3] += m.deadline_expired.load(Ordering::Relaxed);
+            robust[4] += m.engine_faults.load(Ordering::Relaxed);
+        }
+        Self::derive(&merged, robust)
+    }
+
+    /// Shared snapshot derivation. `robust` is
+    /// `[accepted, shed, invalid, deadline_expired, engine_faults]`.
+    fn derive(g: &Inner, robust: [u64; 5]) -> MetricsSnapshot {
         let executed = g.rows + g.padded_rows;
         MetricsSnapshot {
             requests: g.requests,
@@ -206,11 +286,11 @@ impl Metrics {
             } else {
                 0.0
             },
-            accepted: self.accepted.load(Ordering::Relaxed),
-            shed: self.shed.load(Ordering::Relaxed),
-            invalid: self.invalid.load(Ordering::Relaxed),
-            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
-            engine_faults: self.engine_faults.load(Ordering::Relaxed),
+            accepted: robust[0],
+            shed: robust[1],
+            invalid: robust[2],
+            deadline_expired: robust[3],
+            engine_faults: robust[4],
         }
     }
 }
@@ -278,6 +358,56 @@ mod tests {
         assert!(s.p95_queue_wait >= s.mean_queue_wait * 0.5);
         assert!(s.mean_exec_latency > 0.0);
         assert!(s.p95_exec_latency >= s.mean_exec_latency * 0.5);
+    }
+
+    #[test]
+    fn aggregate_sums_counts_and_weights_occupancy_by_wall_seconds() {
+        let a = Metrics::new();
+        let b = Metrics::new();
+        a.record_received();
+        a.record_request(4, 1e-3);
+        a.record_batch(4, 8, 5e-4);
+        a.record_queue_wait(2e-4);
+        a.record_accepted();
+        a.record_shed();
+        // Replica a: occupancy 2.0 over 0.010 wall seconds.
+        a.record_shards(&[0.010, 0.010], 0.010);
+        b.record_received();
+        b.record_received();
+        b.record_request(2, 2e-3);
+        b.record_request(2, 2e-3);
+        b.record_batch(4, 8, 5e-4);
+        b.record_engine_fault();
+        b.record_deadline_expired();
+        b.record_invalid();
+        // Replica b: occupancy 4.0 over 0.030 wall seconds.
+        b.record_shards(&[0.060, 0.060], 0.030);
+        let s = Metrics::aggregate([&a, &b]);
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.received, 3);
+        assert_eq!(s.rows, 8);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.padded_rows, 8);
+        assert!((s.batch_efficiency - 0.5).abs() < 1e-12);
+        assert_eq!((s.accepted, s.shed, s.invalid), (1, 1, 1));
+        assert_eq!((s.deadline_expired, s.engine_faults), (1, 1));
+        assert_eq!(s.shards, 4);
+        assert_eq!(s.sharded_batches, 2);
+        // Wall-second weighted: (0.020 + 0.120) / (0.010 + 0.030) = 3.5,
+        // not the unweighted mean of 2.0 and 4.0.
+        assert!((s.parallel_occupancy - 3.5).abs() < 1e-9);
+        // Histograms merged: aggregate mean over all three requests.
+        assert!((s.mean_latency - (1e-3 + 2e-3 + 2e-3) / 3.0).abs() < 1e-12);
+        // Aggregating a single part reproduces its own snapshot.
+        let solo = a.snapshot();
+        let agg1 = Metrics::aggregate([&a]);
+        assert_eq!(solo.requests, agg1.requests);
+        assert_eq!(solo.p95_latency, agg1.p95_latency);
+        assert_eq!(solo.parallel_occupancy, agg1.parallel_occupancy);
+        // Empty aggregation is the zero snapshot.
+        let none = Metrics::aggregate(std::iter::empty::<&Metrics>());
+        assert_eq!(none.requests, 0);
+        assert_eq!(none.batch_efficiency, 1.0);
     }
 
     #[test]

@@ -11,9 +11,11 @@
 //!
 //! Multi-model traffic goes through the [`Router`]: per-model replica sets
 //! of [`ModelServer`]s (DOF / Hessian / jet engines mixed) registered
-//! under names, tagged dispatch with retry/failover, and per-model
-//! queue-depth + occupancy + robustness metrics for autoscaling decisions
-//! — see [`router`].
+//! under names, tagged dispatch with retry/failover scored by
+//! [`DispatchPolicy`], and per-model queue-depth + occupancy + robustness
+//! metrics (aggregated across replicas) — see [`router`]. The
+//! [`Autoscaler`] consumes those snapshots and grows/drains replica sets
+//! deterministically on the shared [`TickClock`] — see [`autoscaler`].
 //!
 //! The fault tier ([`fault`], [`health`]) defines the serving error
 //! taxonomy ([`ServeError`]), admission control, logical-tick deadlines,
@@ -24,6 +26,7 @@
 //! a panic.
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
+pub mod autoscaler;
 pub mod batcher;
 pub mod fault;
 pub mod health;
@@ -31,6 +34,9 @@ pub mod metrics;
 pub mod router;
 pub mod server;
 
+pub use autoscaler::{
+    Autoscaler, AutoscalerConfig, AutoscalerSnapshot, ScaleDirection, ScaleEvent,
+};
 pub use batcher::{BatchPolicy, Batcher, PendingRequest};
 pub use fault::{
     FaultConfig, FaultInjector, FaultInjectorSnapshot, FaultPlan, RetryPolicy, ServeError,
@@ -38,7 +44,10 @@ pub use fault::{
 };
 pub use health::{Gate, HealthPolicy, HealthState, HealthTracker};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use router::{ReplicaSnapshot, Router, RouterClient, RouterConfig, RouterModelSnapshot};
+pub use router::{
+    DispatchPolicy, ReplicaFactory, ReplicaSnapshot, Router, RouterClient, RouterConfig,
+    RouterModelSnapshot,
+};
 pub use server::{BatchFn, ModelServer, ServeConfig, ServerHandle};
 
 /// Poison-recovering lock used across the coordinator: a panicking holder

@@ -9,40 +9,62 @@
 //! * **Registration** — each model (DOF / Hessian-baseline / jet engines
 //!   mixed, or an XLA artifact worker) is registered once under a name;
 //!   widths may differ per model. [`Router::add_replica`] attaches more
-//!   servers to an existing name — the first slice of the ROADMAP's
-//!   multi-replica direction.
-//! * **Tagged dispatch with failover** — a request names its model;
-//!   [`RouterClient::eval_blocking`] routes it to the least-loaded healthy
-//!   replica and blocks for the response. On a retryable failure
-//!   ([`ServeError::retryable`]) the attempt budget
+//!   servers to an existing name, and a registered
+//!   [`ReplicaFactory`](Router::set_replica_factory) lets the autoscaler
+//!   spawn further replicas on demand ([`Router::scale_up`] /
+//!   [`Router::retire_replica`]).
+//! * **Load-aware dispatch** — a request names its model;
+//!   [`RouterClient::eval_blocking`] routes it to the healthy replica with
+//!   the lowest [`DispatchPolicy`] score
+//!   (`inflight_weight · router_inflight + queue_weight · admission_depth
+//!   + occupancy_weight · parallel_occupancy`, ties to the lowest index).
+//!   The default weights score exact counters only, so replica choice is
+//!   deterministic under a deterministic schedule; `occupancy_weight`
+//!   opts into the measured-seconds occupancy signal. On a retryable
+//!   failure ([`ServeError::retryable`]) the attempt budget
 //!   ([`RouterConfig::retries`]) fails over to another replica. Routing
 //!   adds counters only — the bytes flow through the same `ServerHandle`
 //!   path as a direct caller, so routed results are **bitwise identical**
 //!   to direct engine calls (asserted by `rust/tests/router_serving.rs`).
+//! * **Elastic replica sets** — each model's dispatch list lives behind an
+//!   epoch-versioned shared handle: [`Router::scale_up`] and
+//!   [`Router::retire_replica`] publish a new list and bump the epoch, and
+//!   every existing [`RouterClient`] picks the change up on its next
+//!   request (no client re-creation). Retirement publishes first and
+//!   drains second, so every request admitted before the retire completes
+//!   is answered.
 //! * **Health gating** — each replica carries a
 //!   [`HealthTracker`](super::health::HealthTracker): consecutive engine
 //!   faults quarantine it, and once its logical-tick probe window opens the
 //!   next live request is routed to it as a probe (opportunistic probing:
 //!   re-admission needs no background thread and stays deterministic under
-//!   a deterministic request schedule).
+//!   a deterministic request schedule). The probe is consumed exactly once
+//!   even under concurrent callers (`begin_probe` runs under the health
+//!   mutex).
 //! * **Deadlines** — [`RouterConfig::deadline_ticks`] stamps each request
 //!   with an absolute deadline on the shared [`TickClock`]; the router
 //!   checks it between attempts and the worker checks it at dequeue. No
 //!   wall clock anywhere in the control plane.
 //! * **Autoscaling signals** — per-model [`RouterModelSnapshot`]s expose
 //!   exact dispatch/completion/shed/retry/deadline/fault counters, the
-//!   instantaneous and peak **queue depth**, per-replica health
-//!   ([`ReplicaSnapshot`]), and the underlying server metrics including
-//!   `parallel_occupancy`.
+//!   instantaneous, peak, and per-interval **queue depth**, the replica-set
+//!   epoch, per-replica health ([`ReplicaSnapshot`]), and server metrics.
+//!   The `server` field aggregates **all** replicas
+//!   ([`Metrics::aggregate`]): counts are summed, latency histograms
+//!   merged, and `parallel_occupancy` weighted by per-replica sharded wall
+//!   seconds. [`super::Autoscaler`](super::autoscaler::Autoscaler)
+//!   consumes these snapshots.
 //! * **Draining shutdown** — [`Router::shutdown`] stops every worker
 //!   (quarantined replicas included) via its graceful path: partial
 //!   batches are flushed and every in-flight request receives its response
 //!   before the worker exits.
 //!
-//! Concurrency model: the router itself is registration-then-read-only;
-//! clients obtain a cheap [`RouterClient`] per model (cloneable, `Send`)
-//! and submit from as many threads as they like — counters are atomics,
-//! health trackers sit behind poison-recovering mutexes.
+//! Concurrency model: registration and scaling happen on the thread that
+//! owns the `Router` (`&mut self`); clients obtain a cheap
+//! [`RouterClient`] per model (cloneable, `Send`) and submit from as many
+//! threads as they like — counters are atomics, health trackers sit
+//! behind poison-recovering mutexes, and the dispatch list is an
+//! `Arc`-swapped snapshot read once per request.
 //!
 //! For deadlines and health probes to mean anything, pass the **same**
 //! [`TickClock`] to the [`RouterConfig`] and to every replica's
@@ -58,13 +80,62 @@ use crate::obs::{Span, SpanKind, TraceContext, Tracer};
 
 use super::fault::{ServeError, TickClock};
 use super::health::{Gate, HealthPolicy, HealthState, HealthTracker};
-use super::metrics::MetricsSnapshot;
+use super::metrics::{Metrics, MetricsSnapshot};
 use super::plock;
 use super::server::{ModelServer, ServerHandle};
 use super::EvalResponse;
 
+/// Replica-scoring weights for load-aware dispatch. Lower score wins;
+/// exact ties break to the lowest replica index, and a replica the
+/// current request has not yet tried always beats one it has.
+///
+/// `score = inflight_weight · router_inflight`
+/// `      + queue_weight · admission_depth`
+/// `      + occupancy_weight · parallel_occupancy`
+///
+/// where `router_inflight` is the replica's unresolved routed attempts
+/// (exact atomic accounting), `admission_depth` is the replica server's
+/// admitted-but-unanswered count ([`ServerHandle::inflight`]), and
+/// `parallel_occupancy` is the replica's measured shard-seconds per wall
+/// second ([`Metrics::occupancy`]).
+///
+/// The default weights (1, 1, 0) use exact counters only — replica choice
+/// stays deterministic under a deterministic request schedule, and on
+/// idle replicas reproduces classic least-inflight with lowest-index
+/// ties. Setting `occupancy_weight > 0` folds in the wall-clock-derived
+/// occupancy signal; results remain bitwise identical either way because
+/// replica choice never affects the computed bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct DispatchPolicy {
+    /// Weight on the replica's unresolved routed attempts.
+    pub inflight_weight: f64,
+    /// Weight on the replica's admission-gate depth.
+    pub queue_weight: f64,
+    /// Weight on the replica's `parallel_occupancy` (0 = never read it).
+    pub occupancy_weight: f64,
+}
+
+impl Default for DispatchPolicy {
+    fn default() -> Self {
+        Self {
+            inflight_weight: 1.0,
+            queue_weight: 1.0,
+            occupancy_weight: 0.0,
+        }
+    }
+}
+
+impl DispatchPolicy {
+    /// The dispatch score (see type docs); lower is better.
+    pub fn score(&self, router_inflight: u64, admission_depth: usize, occupancy: f64) -> f64 {
+        self.inflight_weight * router_inflight as f64
+            + self.queue_weight * admission_depth as f64
+            + self.occupancy_weight * occupancy
+    }
+}
+
 /// Routing policy knobs (all logical-tick based; `Default` reproduces the
-/// PR 5 behaviour: no deadlines, no retries).
+/// PR 5 behaviour: no deadlines, no retries, least-loaded dispatch).
 #[derive(Clone, Default)]
 pub struct RouterConfig {
     /// Relative deadline stamped on every routed request: absolute
@@ -77,6 +148,8 @@ pub struct RouterConfig {
     pub clock: TickClock,
     /// Health escalation thresholds applied to every replica.
     pub health: HealthPolicy,
+    /// Replica-scoring weights for dispatch (see [`DispatchPolicy`]).
+    pub dispatch: DispatchPolicy,
     /// Span sink for request tracing: when set, every routed request
     /// records a `request → attempt → …` span tree (the serving layers
     /// below add queue-wait / batch / execute / shard children). Share the
@@ -85,6 +158,12 @@ pub struct RouterConfig {
     /// way.
     pub tracer: Option<Arc<Tracer>>,
 }
+
+/// Spawns one more replica server for a model — registered via
+/// [`Router::set_replica_factory`] so [`Router::scale_up`] (and through
+/// it the autoscaler) can grow the replica set. Spawning re-hits the
+/// compile-once program caches, so factories are cheap to call.
+pub type ReplicaFactory = Box<dyn Fn() -> ModelServer + Send>;
 
 /// Per-model routing counters (shared between the router and its clients).
 #[derive(Default)]
@@ -110,6 +189,9 @@ struct Counters {
     queue_depth: AtomicUsize,
     /// High-water mark of `queue_depth`.
     peak_queue_depth: AtomicUsize,
+    /// High-water mark of `queue_depth` since the last autoscaler
+    /// observation (swap-reset by `Router::scaling_snapshot`).
+    interval_peak_queue_depth: AtomicUsize,
 }
 
 /// Shared per-replica routing state (health + exact attempt accounting).
@@ -136,10 +218,58 @@ struct ReplicaSlot {
     state: Arc<ReplicaState>,
 }
 
+/// The dispatch view of a replica set, read once per routed request.
+type ReplicaSet = Arc<Vec<(ServerHandle, Arc<ReplicaState>)>>;
+
+/// The epoch-versioned dispatch list shared between the router (writer,
+/// on scale-up / retire) and every `RouterClient` (readers). Clients
+/// clone the current `Arc` per request, so a published change is visible
+/// to all of them on their very next request.
+struct SharedReplicas {
+    epoch: AtomicU64,
+    list: Mutex<ReplicaSet>,
+}
+
+impl SharedReplicas {
+    fn new(list: Vec<(ServerHandle, Arc<ReplicaState>)>) -> Self {
+        Self {
+            epoch: AtomicU64::new(1),
+            list: Mutex::new(Arc::new(list)),
+        }
+    }
+
+    fn current(&self) -> ReplicaSet {
+        plock(&self.list).clone()
+    }
+
+    fn publish(&self, list: Vec<(ServerHandle, Arc<ReplicaState>)>) {
+        *plock(&self.list) = Arc::new(list);
+        self.epoch.fetch_add(1, Ordering::Release);
+    }
+}
+
 struct Entry {
     name: String,
+    /// Row width every replica of this model must share (recorded at
+    /// registration so clients never depend on the mutable replica list).
+    width: usize,
     replicas: Vec<ReplicaSlot>,
+    shared: Arc<SharedReplicas>,
     counters: Arc<Counters>,
+    factory: Option<ReplicaFactory>,
+}
+
+impl Entry {
+    /// Rebuild the client-visible dispatch list from `replicas` and bump
+    /// the epoch.
+    fn publish(&self) {
+        self.shared.publish(
+            self.replicas
+                .iter()
+                .map(|r| (r.server.handle(), Arc::clone(&r.state)))
+                .collect(),
+        );
+    }
 }
 
 /// The multi-model front door (see module docs).
@@ -151,11 +281,14 @@ pub struct Router {
 
 /// A client for one registered model: routes requests across the model's
 /// replicas and maintains the model's counters. Cloneable and `Send` —
-/// hand one clone per client thread.
+/// hand one clone per client thread. Reads the model's epoch-versioned
+/// replica list once per request, so autoscaler changes apply to existing
+/// clients immediately.
 #[derive(Clone)]
 pub struct RouterClient {
     model: String,
-    replicas: Vec<(ServerHandle, Arc<ReplicaState>)>,
+    width: usize,
+    shared: Arc<SharedReplicas>,
     counters: Arc<Counters>,
     cfg: RouterConfig,
 }
@@ -206,8 +339,17 @@ pub struct RouterModelSnapshot {
     pub queue_depth: usize,
     /// High-water mark of `queue_depth` since registration.
     pub peak_queue_depth: usize,
-    /// Replica 0's server metrics (kept for single-replica callers; use
-    /// `replicas` for the full set).
+    /// High-water mark of `queue_depth` since the last autoscaler
+    /// observation (the autoscaler swap-resets it each step; plain
+    /// `snapshot()` reads it non-destructively).
+    pub interval_peak_queue_depth: usize,
+    /// Replica-set epoch: bumped by every scale-up / retire. Existing
+    /// clients pick up the new set on their next request.
+    pub epoch: u64,
+    /// Server metrics aggregated across **all** replicas
+    /// ([`Metrics::aggregate`]): counts summed, latency histograms
+    /// merged, `parallel_occupancy` weighted by sharded wall seconds.
+    /// Per-replica metrics live in `replicas`.
     pub server: MetricsSnapshot,
     /// Per-replica health + accounting, in registration order.
     pub replicas: Vec<ReplicaSnapshot>,
@@ -218,7 +360,7 @@ impl Router {
         Self::with_config(RouterConfig::default())
     }
 
-    /// A router with deadlines / retry / health policy.
+    /// A router with deadlines / retry / health / dispatch policy.
     pub fn with_config(cfg: RouterConfig) -> Self {
         Self {
             models: Vec::new(),
@@ -240,37 +382,106 @@ impl Router {
             self.models.iter().all(|e| e.name != name),
             "router already has a model named {name:?}"
         );
+        let width = server.handle().width();
+        let state = Arc::new(ReplicaState::new(self.cfg.health));
+        let shared = Arc::new(SharedReplicas::new(vec![(
+            server.handle(),
+            Arc::clone(&state),
+        )]));
         self.models.push(Entry {
             name: name.to_string(),
-            replicas: vec![ReplicaSlot {
-                server,
-                state: Arc::new(ReplicaState::new(self.cfg.health)),
-            }],
+            width,
+            replicas: vec![ReplicaSlot { server, state }],
+            shared,
             counters: Arc::new(Counters::default()),
+            factory: None,
         });
     }
 
-    /// Attach another replica to an existing model name (failover target;
-    /// width must match the model's existing replicas).
-    pub fn add_replica(&mut self, name: &str, server: ModelServer) -> Result<()> {
-        let cfg_health = self.cfg.health;
-        let entry = self
-            .models
+    fn entry_mut(&mut self, name: &str) -> Result<&mut Entry> {
+        self.models
             .iter_mut()
             .find(|e| e.name == name)
-            .ok_or_else(|| anyhow!("router has no model named {name:?}"))?;
-        let want = entry.replicas[0].server.handle().width();
+            .ok_or_else(|| anyhow!("router has no model named {name:?}"))
+    }
+
+    /// Attach another replica to an existing model name (failover target;
+    /// width must match the model's existing replicas). Existing clients
+    /// see it on their next request.
+    pub fn add_replica(&mut self, name: &str, server: ModelServer) -> Result<()> {
+        let cfg_health = self.cfg.health;
+        let entry = self.entry_mut(name)?;
         let got = server.handle().width();
-        if got != want {
+        if got != entry.width {
             return Err(anyhow!(
-                "replica width {got} does not match model {name:?} width {want}"
+                "replica width {got} does not match model {name:?} width {}",
+                entry.width
             ));
         }
         entry.replicas.push(ReplicaSlot {
             server,
             state: Arc::new(ReplicaState::new(cfg_health)),
         });
+        entry.publish();
         Ok(())
+    }
+
+    /// Register the spawn factory [`Router::scale_up`] uses for `name`.
+    pub fn set_replica_factory(&mut self, name: &str, factory: ReplicaFactory) -> Result<()> {
+        self.entry_mut(name)?.factory = Some(factory);
+        Ok(())
+    }
+
+    /// Spawn one more replica for `name` via its registered factory and
+    /// publish it to clients. Returns the new replica count.
+    pub fn scale_up(&mut self, name: &str) -> Result<usize> {
+        let cfg_health = self.cfg.health;
+        let entry = self.entry_mut(name)?;
+        let server = match &entry.factory {
+            Some(f) => f(),
+            None => return Err(anyhow!("model {name:?} has no replica factory")),
+        };
+        let got = server.handle().width();
+        if got != entry.width {
+            return Err(anyhow!(
+                "factory produced width {got}, model {name:?} expects width {}",
+                entry.width
+            ));
+        }
+        entry.replicas.push(ReplicaSlot {
+            server,
+            state: Arc::new(ReplicaState::new(cfg_health)),
+        });
+        entry.publish();
+        Ok(entry.replicas.len())
+    }
+
+    /// Retire the highest-index replica of `name`: publish the shrunken
+    /// dispatch list first (no new request can pick the retiring replica),
+    /// then drain it via the graceful shutdown path — every request
+    /// admitted before the publish is answered, so nothing is lost.
+    /// Refuses to drop the last replica. Returns the new replica count.
+    pub fn retire_replica(&mut self, name: &str) -> Result<usize> {
+        let entry = self.entry_mut(name)?;
+        if entry.replicas.len() <= 1 {
+            return Err(anyhow!("model {name:?} is already at its last replica"));
+        }
+        let slot = match entry.replicas.pop() {
+            Some(s) => s,
+            None => return Err(anyhow!("model {name:?} has no replicas")),
+        };
+        entry.publish();
+        let remaining = entry.replicas.len();
+        slot.server.shutdown();
+        Ok(remaining)
+    }
+
+    /// Current replica count for `name` (`None` for an unknown model).
+    pub fn replica_count(&self, name: &str) -> Option<usize> {
+        self.models
+            .iter()
+            .find(|e| e.name == name)
+            .map(|e| e.replicas.len())
     }
 
     /// Registered model names, in registration order.
@@ -287,11 +498,8 @@ impl Router {
             .ok_or_else(|| anyhow!("router has no model named {model:?}"))?;
         Ok(RouterClient {
             model: entry.name.clone(),
-            replicas: entry
-                .replicas
-                .iter()
-                .map(|r| (r.server.handle(), Arc::clone(&r.state)))
-                .collect(),
+            width: entry.width,
+            shared: Arc::clone(&entry.shared),
             counters: Arc::clone(&entry.counters),
             cfg: self.cfg.clone(),
         })
@@ -303,8 +511,21 @@ impl Router {
     }
 
     /// Routing + health + server metrics for every model, in registration
-    /// order.
+    /// order. Non-destructive (see `scaling_snapshot` for the autoscaler's
+    /// interval-resetting variant).
     pub fn snapshot(&self) -> Vec<RouterModelSnapshot> {
+        self.snapshot_impl(false)
+    }
+
+    /// The autoscaler's observation: identical to [`Router::snapshot`]
+    /// except `interval_peak_queue_depth` is swap-reset to the current
+    /// depth, so each step sees the high-water mark since the previous
+    /// step.
+    pub(crate) fn scaling_snapshot(&self) -> Vec<RouterModelSnapshot> {
+        self.snapshot_impl(true)
+    }
+
+    fn snapshot_impl(&self, reset_interval: bool) -> Vec<RouterModelSnapshot> {
         self.models
             .iter()
             .map(|e| {
@@ -328,6 +549,20 @@ impl Router {
                         }
                     })
                     .collect();
+                let metrics: Vec<Arc<Metrics>> = e
+                    .replicas
+                    .iter()
+                    .map(|r| Arc::clone(&r.server.handle().metrics))
+                    .collect();
+                let server = Metrics::aggregate(metrics.iter().map(|m| m.as_ref()));
+                let interval_peak = if reset_interval {
+                    let depth = e.counters.queue_depth.load(Ordering::Relaxed);
+                    e.counters
+                        .interval_peak_queue_depth
+                        .swap(depth, Ordering::Relaxed)
+                } else {
+                    e.counters.interval_peak_queue_depth.load(Ordering::Relaxed)
+                };
                 RouterModelSnapshot {
                     model: e.name.clone(),
                     dispatched: e.counters.dispatched.load(Ordering::Relaxed),
@@ -341,7 +576,9 @@ impl Router {
                     quarantine_events: replicas.iter().map(|r| r.quarantine_events).sum(),
                     queue_depth: e.counters.queue_depth.load(Ordering::Relaxed),
                     peak_queue_depth: e.counters.peak_queue_depth.load(Ordering::Relaxed),
-                    server: e.replicas[0].server.handle().metrics.snapshot(),
+                    interval_peak_queue_depth: interval_peak,
+                    epoch: e.shared.epoch.load(Ordering::Acquire),
+                    server,
                     replicas,
                 }
             })
@@ -369,7 +606,13 @@ impl RouterClient {
 
     /// Row width (input dimension) the model expects.
     pub fn width(&self) -> usize {
-        self.replicas[0].0.width()
+        self.width
+    }
+
+    /// The replica-set epoch this client currently observes (bumped by
+    /// every scale-up / retire).
+    pub fn epoch(&self) -> u64 {
+        self.shared.epoch.load(Ordering::Acquire)
     }
 
     /// Route one request and block for the response, maintaining the
@@ -381,6 +624,8 @@ impl RouterClient {
         c.dispatched.fetch_add(1, Ordering::Relaxed);
         let depth = c.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
         c.peak_queue_depth.fetch_max(depth, Ordering::Relaxed);
+        c.interval_peak_queue_depth
+            .fetch_max(depth, Ordering::Relaxed);
         let out = self.route(&points);
         // Outcome before depth: a snapshot must never observe a request
         // missing from dispatched == completed + failed + queue_depth.
@@ -437,19 +682,23 @@ impl RouterClient {
     }
 
     /// The attempt loop: pick a replica, dispatch, classify the outcome,
-    /// fail over while the budget and deadline allow.
+    /// fail over while the budget and deadline allow. The replica set is
+    /// read once per request, so a concurrent scale-up/retire applies to
+    /// the *next* request; a retired replica still drains everything this
+    /// request managed to enqueue.
     fn route_inner(
         &self,
         points: &[f32],
         root: Option<u64>,
     ) -> std::result::Result<EvalResponse, ServeError> {
         let clock = &self.cfg.clock;
+        let replicas = self.shared.current();
         let deadline = self
             .cfg
             .deadline_ticks
             .map(|d| clock.now().saturating_add(d));
         let mut last: Option<ServeError> = None;
-        let mut tried = vec![false; self.replicas.len()];
+        let mut tried = vec![false; replicas.len()];
         for attempt in 0..u64::from(self.cfg.retries) + 1 {
             if attempt > 0 {
                 self.counters.retries.fetch_add(1, Ordering::Relaxed);
@@ -466,13 +715,13 @@ impl RouterClient {
                     });
                 }
             }
-            let Some((idx, is_probe)) = self.pick(now, &tried) else {
+            let Some((idx, is_probe)) = self.pick(&replicas, now, &tried) else {
                 return Err(last.unwrap_or_else(|| ServeError::Overloaded {
                     model: self.model.clone(),
                     reason: "no replica available (all quarantined)".to_string(),
                 }));
             };
-            let (handle, state) = &self.replicas[idx];
+            let (handle, state) = &replicas[idx];
             tried[idx] = true;
             state.attempts.fetch_add(1, Ordering::Relaxed);
             // Attempt span: allocated before dispatch so the replica's
@@ -536,13 +785,20 @@ impl RouterClient {
 
     /// Replica choice at tick `now`: a quarantined replica whose probe
     /// window is open takes the request as its probe (health recovery
-    /// rides on live traffic); otherwise the least-loaded `Open` replica,
-    /// ties to the lowest index. Replicas already `tried` by this request
-    /// are skipped so a failover attempt actually moves — unless every
+    /// rides on live traffic; `begin_probe` under the health mutex means
+    /// concurrent callers consume the probe exactly once); otherwise the
+    /// `Open` replica with the lowest [`DispatchPolicy`] score, ties to
+    /// the lowest index. Replicas already `tried` by this request are
+    /// deprioritised so a failover attempt actually moves — unless every
     /// open replica has been tried, in which case retrying one beats
     /// failing outright. `None` when every replica is gated.
-    fn pick(&self, now: u64, tried: &[bool]) -> Option<(usize, bool)> {
-        for (i, (_, state)) in self.replicas.iter().enumerate() {
+    fn pick(
+        &self,
+        replicas: &[(ServerHandle, Arc<ReplicaState>)],
+        now: u64,
+        tried: &[bool],
+    ) -> Option<(usize, bool)> {
+        for (i, (_, state)) in replicas.iter().enumerate() {
             if tried[i] {
                 continue;
             }
@@ -552,21 +808,35 @@ impl RouterClient {
                 return Some((i, true));
             }
         }
-        let mut best: Option<(usize, usize)> = None;
+        let policy = self.cfg.dispatch;
+        let mut best: Option<(usize, f64)> = None;
         let mut best_untried = false;
-        for (i, (handle, state)) in self.replicas.iter().enumerate() {
+        for (i, (handle, state)) in replicas.iter().enumerate() {
             if plock(&state.health).gate(now) != Gate::Open {
                 continue;
             }
             let untried = !tried[i];
-            let depth = handle.inflight();
+            // Unresolved routed attempts; saturating because a concurrent
+            // resolution can land between the relaxed loads.
+            let resolved = state.completed.load(Ordering::Relaxed)
+                + state.failed.load(Ordering::Relaxed);
+            let inflight = state
+                .attempts
+                .load(Ordering::Relaxed)
+                .saturating_sub(resolved);
+            let occupancy = if policy.occupancy_weight != 0.0 {
+                handle.metrics.occupancy()
+            } else {
+                0.0
+            };
+            let score = policy.score(inflight, handle.inflight(), occupancy);
             let better = match (untried, best_untried) {
                 (true, false) => true,
                 (false, true) => false,
-                _ => best.map_or(true, |(_, d)| depth < d),
+                _ => best.map_or(true, |(_, s)| score < s),
             };
             if better {
-                best = Some((i, depth));
+                best = Some((i, score));
                 best_untried = untried;
             }
         }
@@ -585,6 +855,7 @@ mod tests {
         BatchPolicy {
             capacity: 8,
             max_wait: Duration::from_millis(1),
+            max_wait_ticks: None,
         }
     }
 
@@ -631,6 +902,7 @@ mod tests {
         assert!(snap[1].peak_queue_depth >= 1);
         assert_eq!(snap[0].replicas.len(), 1);
         assert_eq!(snap[0].replicas[0].state, HealthState::Healthy);
+        assert_eq!(snap[0].epoch, 1, "no scaling yet");
         assert!(router.eval_blocking("nope", vec![1.0]).is_err());
         router.shutdown();
     }
@@ -698,7 +970,7 @@ mod tests {
         });
         router.register("m", failing_server(1, "replica 0 exploded"));
         router.add_replica("m", scaled_sum_server(1, 2.0)).unwrap();
-        // Replica 0 is picked first (lowest index on equal depth), faults,
+        // Replica 0 is picked first (lowest index on equal score), faults,
         // and the retry lands on replica 1.
         let resp = router.eval_blocking("m", vec![3.0]).unwrap();
         assert_eq!(resp.lphi, vec![6.0]);
@@ -709,6 +981,261 @@ mod tests {
         assert_eq!(m.engine_faults, 1);
         assert_eq!(m.replicas[0].failed, 1);
         assert_eq!(m.replicas[1].completed, 1);
+        router.shutdown();
+    }
+
+    #[test]
+    fn idle_ties_break_to_lowest_index() {
+        // Default dispatch weights on idle replicas reproduce classic
+        // least-inflight with lowest-index ties: sequential traffic pins
+        // to replica 0 and never wanders.
+        let mut router = Router::new();
+        router.register("m", scaled_sum_server(1, 2.0));
+        router.add_replica("m", scaled_sum_server(1, 2.0)).unwrap();
+        router.add_replica("m", scaled_sum_server(1, 2.0)).unwrap();
+        let client = router.client("m").unwrap();
+        for i in 0..4 {
+            let resp = client.eval_blocking(vec![i as f32]).unwrap();
+            assert_eq!(resp.lphi, vec![2.0 * i as f32]);
+        }
+        let snap = router.snapshot();
+        assert_eq!(snap[0].replicas[0].completed, 4);
+        assert_eq!(snap[0].replicas[1].attempts, 0);
+        assert_eq!(snap[0].replicas[2].attempts, 0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn occupancy_weight_steers_dispatch_away_from_busy_replica() {
+        let mut router = Router::with_config(RouterConfig {
+            dispatch: DispatchPolicy {
+                inflight_weight: 0.0,
+                queue_weight: 0.0,
+                occupancy_weight: 1.0,
+            },
+            ..RouterConfig::default()
+        });
+        router.register("m", scaled_sum_server(1, 2.0));
+        router.add_replica("m", scaled_sum_server(1, 2.0)).unwrap();
+        // Seed the occupancy signal directly: replica 0 looks saturated
+        // (4 shard-seconds per wall second), replica 1 light (1.0).
+        router.models[0].replicas[0]
+            .server
+            .handle()
+            .metrics
+            .record_shards(&[2.0, 2.0], 1.0);
+        router.models[0].replicas[1]
+            .server
+            .handle()
+            .metrics
+            .record_shards(&[0.5, 0.5], 1.0);
+        let client = router.client("m").unwrap();
+        let resp = client.eval_blocking(vec![3.0]).unwrap();
+        assert_eq!(resp.lphi, vec![6.0]);
+        let snap = router.snapshot();
+        assert_eq!(snap[0].replicas[0].attempts, 0, "busy replica skipped");
+        assert_eq!(snap[0].replicas[1].completed, 1);
+        router.shutdown();
+    }
+
+    #[test]
+    fn all_open_replicas_tried_falls_back_to_retry() {
+        // A single replica that faults exactly once: attempt 1 marks it
+        // tried, and with no untried replica left the retry must re-pick
+        // it rather than fail outright.
+        use std::sync::atomic::AtomicBool;
+        let first = Arc::new(AtomicBool::new(true));
+        let f = Arc::clone(&first);
+        let compute: BatchFn = Box::new(move |data, _| {
+            if f.swap(false, Ordering::SeqCst) {
+                Err(anyhow!("transient fault"))
+            } else {
+                Ok((data.to_vec(), data.to_vec()))
+            }
+        });
+        let mut router = Router::with_config(RouterConfig {
+            retries: 1,
+            ..RouterConfig::default()
+        });
+        router.register("m", ModelServer::spawn(1, policy(), compute));
+        let resp = router.eval_blocking("m", vec![5.0]).unwrap();
+        assert_eq!(resp.phi, vec![5.0]);
+        let snap = router.snapshot();
+        assert_eq!((snap[0].completed, snap[0].retries), (1, 1));
+        assert_eq!(snap[0].replicas[0].attempts, 2, "same replica re-picked");
+        router.shutdown();
+    }
+
+    #[test]
+    fn probe_consumed_exactly_once_under_concurrent_callers() {
+        let clock = TickClock::new();
+        let mut router = Router::with_config(RouterConfig {
+            retries: 1,
+            clock: clock.clone(),
+            health: HealthPolicy {
+                degrade_after: 1,
+                quarantine_after: 2,
+                probe_after_ticks: 4,
+                probe_successes: 1,
+            },
+            ..RouterConfig::default()
+        });
+        router.register("m", failing_server(1, "replica 0 is down"));
+        router.add_replica("m", scaled_sum_server(1, 2.0)).unwrap();
+        let client = router.client("m").unwrap();
+
+        // Two failovers quarantine replica 0 (each request still succeeds
+        // on replica 1 via the retry budget).
+        for _ in 0..2 {
+            assert!(client.eval_blocking(vec![1.0]).is_ok());
+        }
+        let snap = router.snapshot();
+        assert_eq!(snap[0].replicas[0].state, HealthState::Quarantined);
+        assert_eq!(snap[0].replicas[0].attempts, 2);
+
+        // Open the probe window, then fire concurrent traffic: exactly one
+        // request may consume the probe (begin_probe under the health
+        // mutex); the rest see the window closed and go to replica 1. The
+        // probe fails (backend still down) and re-quarantines with backoff,
+        // so no second probe can slip in while the clock is frozen.
+        clock.advance(5);
+        let joins: Vec<_> = (0..8)
+            .map(|i| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    let resp = c.eval_blocking(vec![i as f32]).unwrap();
+                    assert_eq!(resp.lphi, vec![2.0 * i as f32]);
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap();
+        }
+        let snap = router.snapshot();
+        assert_eq!(
+            snap[0].replicas[0].attempts,
+            3,
+            "probe consumed exactly once"
+        );
+        assert_eq!(snap[0].replicas[1].completed, 10);
+        router.shutdown();
+    }
+
+    #[test]
+    fn scale_up_is_visible_to_existing_clients() {
+        // Quarantine the sole replica, then scale up through the factory:
+        // a client created *before* the scale-up must route to the new
+        // replica on its very next request (epoch-versioned replica list).
+        let mut router = Router::with_config(RouterConfig {
+            health: HealthPolicy {
+                degrade_after: 1,
+                quarantine_after: 1,
+                probe_after_ticks: 1000,
+                probe_successes: 1,
+            },
+            ..RouterConfig::default()
+        });
+        router.register("m", failing_server(1, "replica 0 is down"));
+        router
+            .set_replica_factory("m", Box::new(|| scaled_sum_server(1, 2.0)))
+            .unwrap();
+        let client = router.client("m").unwrap();
+        assert_eq!(client.epoch(), 1);
+        assert!(client.eval_blocking(vec![1.0]).is_err());
+
+        assert_eq!(router.scale_up("m").unwrap(), 2);
+        assert_eq!(router.replica_count("m"), Some(2));
+        assert_eq!(client.epoch(), 2);
+        let resp = client.eval_blocking(vec![3.0]).unwrap();
+        assert_eq!(resp.lphi, vec![6.0]);
+        let snap = router.snapshot();
+        assert_eq!(snap[0].epoch, 2);
+        assert_eq!(snap[0].replicas[1].completed, 1);
+        router.shutdown();
+    }
+
+    #[test]
+    fn retire_drops_highest_index_and_guards_the_last_replica() {
+        let mut router = Router::new();
+        router.register("m", scaled_sum_server(1, 2.0));
+        router.add_replica("m", scaled_sum_server(1, 2.0)).unwrap();
+        let client = router.client("m").unwrap();
+        assert_eq!(client.epoch(), 2, "add_replica bumped the epoch");
+
+        assert_eq!(router.retire_replica("m").unwrap(), 1);
+        assert_eq!(router.replica_count("m"), Some(1));
+        assert_eq!(client.epoch(), 3);
+        // Traffic keeps flowing on the surviving replica.
+        let resp = client.eval_blocking(vec![4.0]).unwrap();
+        assert_eq!(resp.lphi, vec![8.0]);
+        // The last replica cannot be retired.
+        assert!(router.retire_replica("m").is_err());
+        assert_eq!(router.replica_count("m"), Some(1));
+        router.shutdown();
+    }
+
+    #[test]
+    fn scale_up_requires_factory_and_matching_width() {
+        let mut router = Router::new();
+        router.register("m", scaled_sum_server(2, 1.0));
+        let err = router.scale_up("m").unwrap_err();
+        assert!(err.to_string().contains("factory"), "{err}");
+        router
+            .set_replica_factory("m", Box::new(|| scaled_sum_server(3, 1.0)))
+            .unwrap();
+        let err = router.scale_up("m").unwrap_err();
+        assert!(err.to_string().contains("width"), "{err}");
+        assert_eq!(router.replica_count("m"), Some(1));
+        assert!(router.set_replica_factory("ghost", Box::new(|| scaled_sum_server(1, 1.0))).is_err());
+        router.shutdown();
+    }
+
+    #[test]
+    fn snapshot_server_field_aggregates_all_replicas() {
+        // Replica 0 faults every request, replica 1 answers it on retry:
+        // both replicas see every request, so the model-level `server`
+        // metrics must be the cross-replica sum — not replica 0's alone.
+        let mut router = Router::with_config(RouterConfig {
+            retries: 1,
+            ..RouterConfig::default()
+        });
+        router.register("m", failing_server(1, "replica 0 exploded"));
+        router.add_replica("m", scaled_sum_server(1, 2.0)).unwrap();
+        for i in 0..3 {
+            assert!(router.eval_blocking("m", vec![i as f32]).is_ok());
+        }
+        let snap = router.snapshot();
+        let m = &snap[0];
+        let received_sum: u64 = m.replicas.iter().map(|r| r.server.received).sum();
+        let requests_sum: u64 = m.replicas.iter().map(|r| r.server.requests).sum();
+        let faults_sum: u64 = m.replicas.iter().map(|r| r.server.engine_faults).sum();
+        assert_eq!(m.server.received, received_sum);
+        assert_eq!(m.server.requests, requests_sum);
+        assert_eq!(m.server.engine_faults, faults_sum);
+        assert_eq!(m.server.received, 6, "both replicas saw all 3 requests");
+        assert!(
+            m.server.received > m.replicas[0].server.received,
+            "aggregate is not replica 0's snapshot"
+        );
+        router.shutdown();
+    }
+
+    #[test]
+    fn scaling_snapshot_resets_interval_peak() {
+        let mut router = Router::new();
+        router.register("m", scaled_sum_server(1, 2.0));
+        for _ in 0..3 {
+            assert!(router.eval_blocking("m", vec![1.0]).is_ok());
+        }
+        // Plain snapshot reads non-destructively.
+        assert!(router.snapshot()[0].interval_peak_queue_depth >= 1);
+        assert!(router.snapshot()[0].interval_peak_queue_depth >= 1);
+        // The scaling snapshot consumes the interval peak...
+        assert!(router.scaling_snapshot()[0].interval_peak_queue_depth >= 1);
+        // ...so with no traffic since, the next interval is quiet.
+        assert_eq!(router.scaling_snapshot()[0].interval_peak_queue_depth, 0);
+        // Cumulative peak survives the resets.
+        assert!(router.snapshot()[0].peak_queue_depth >= 1);
         router.shutdown();
     }
 

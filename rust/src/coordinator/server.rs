@@ -339,7 +339,14 @@ where
 {
     let width = ctx.width;
     let mut batcher: Batcher<ReqTag> = Batcher::new(width, ctx.policy);
-    let run_batch = |cut: CutBatch<ReqTag>, compute: &mut F| {
+    // Legacy wall-clock wait (`policy.max_wait_ticks == None`): the batcher
+    // never reads wall time, so the worker tracks the oldest pending row's
+    // enqueue time on its side of the channel. Under the tick policy the
+    // batcher itself owns the deadline and this stays `None`.
+    let mut oldest_wall: Option<Instant> = None;
+    // Runs one cut and returns its buffer so the caller can recycle it
+    // back into the batcher (two-buffer swap — no per-cut allocation).
+    let run_batch = |cut: CutBatch<ReqTag>, compute: &mut F| -> Vec<f32> {
         let cut_tick = ctx.clock.now();
         // Queue-wait accounting: the split latency metric fires for every
         // member; spans only for traced ones (and only when this server
@@ -477,6 +484,7 @@ where
                 }
             }
         }
+        cut.data
     };
     loop {
         match rx.recv_timeout(ctx.policy.max_wait) {
@@ -496,25 +504,51 @@ where
                         continue;
                     }
                 }
-                let cuts = batcher.push(req, |_frag| tag.clone());
+                let cuts = batcher.push(req, ctx.clock.now(), |_frag| tag.clone());
+                let had_cuts = !cuts.is_empty();
                 for cut in cuts {
-                    run_batch(cut, &mut compute);
+                    let used = cut.rows_used;
+                    let buf = run_batch(cut, &mut compute);
+                    batcher.recycle(buf, used);
+                }
+                // Tick-mode starvation guard: a steady arrival stream must
+                // not carry a partial batch past its tick deadline (the
+                // legacy wall policy always returns false here).
+                if batcher.deadline_expired(ctx.clock.now()) {
+                    let cut = batcher.cut();
+                    let used = cut.rows_used;
+                    let buf = run_batch(cut, &mut compute);
+                    batcher.recycle(buf, used);
+                    oldest_wall = None;
+                } else if batcher.is_empty() {
+                    oldest_wall = None;
+                } else if had_cuts || oldest_wall.is_none() {
+                    // The oldest remaining row arrived during this push.
+                    oldest_wall = Some(Instant::now());
                 }
             }
             Ok(Msg::Shutdown) => {
                 if !batcher.is_empty() {
-                    run_batch(batcher.cut(), &mut compute);
+                    let _ = run_batch(batcher.cut(), &mut compute);
                 }
                 break;
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                if batcher.deadline_expired() {
-                    run_batch(batcher.cut(), &mut compute);
+                let tick_due = batcher.deadline_expired(ctx.clock.now());
+                let wall_due = ctx.policy.max_wait_ticks.is_none()
+                    && !batcher.is_empty()
+                    && oldest_wall.is_some_and(|t| t.elapsed() >= ctx.policy.max_wait);
+                if tick_due || wall_due {
+                    let cut = batcher.cut();
+                    let used = cut.rows_used;
+                    let buf = run_batch(cut, &mut compute);
+                    batcher.recycle(buf, used);
+                    oldest_wall = None;
                 }
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 if !batcher.is_empty() {
-                    run_batch(batcher.cut(), &mut compute);
+                    let _ = run_batch(batcher.cut(), &mut compute);
                 }
                 break;
             }
@@ -862,6 +896,7 @@ impl ModelServer {
         let policy = BatchPolicy {
             capacity: batch,
             max_wait: policy_wait,
+            max_wait_ticks: None,
         };
         let cfg = ServeConfig::labeled(&artifact);
         let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
@@ -979,6 +1014,7 @@ mod tests {
             BatchPolicy {
                 capacity: 8,
                 max_wait: Duration::from_millis(1),
+                max_wait_ticks: None,
             },
             mock_compute(),
         );
@@ -996,6 +1032,7 @@ mod tests {
             BatchPolicy {
                 capacity: 16,
                 max_wait: Duration::from_millis(2),
+                max_wait_ticks: None,
             },
             mock_compute(),
         );
@@ -1026,6 +1063,7 @@ mod tests {
             BatchPolicy {
                 capacity: 4,
                 max_wait: Duration::from_millis(1),
+                max_wait_ticks: None,
             },
             mock_compute(),
         );
@@ -1054,6 +1092,7 @@ mod tests {
             BatchPolicy {
                 capacity: 8,
                 max_wait: Duration::from_millis(1),
+                max_wait_ticks: None,
             },
             Pool::new(4),
             2,
@@ -1084,6 +1123,7 @@ mod tests {
             BatchPolicy {
                 capacity: 4,
                 max_wait: Duration::from_millis(1),
+                max_wait_ticks: None,
             },
             Pool::new(2),
             1,
@@ -1115,6 +1155,7 @@ mod tests {
             BatchPolicy {
                 capacity: 8,
                 max_wait: Duration::from_millis(1),
+                max_wait_ticks: None,
             },
             Pool::new(2),
             2,
@@ -1154,6 +1195,7 @@ mod tests {
             BatchPolicy {
                 capacity: 8,
                 max_wait: Duration::from_millis(1),
+                max_wait_ticks: None,
             },
             Pool::new(2),
             2,
@@ -1187,6 +1229,7 @@ mod tests {
             BatchPolicy {
                 capacity: 2,
                 max_wait: Duration::from_millis(1),
+                max_wait_ticks: None,
             },
             failing,
         );
@@ -1203,6 +1246,7 @@ mod tests {
             BatchPolicy {
                 capacity: 8,
                 max_wait: Duration::from_millis(1),
+                max_wait_ticks: None,
             },
             mock_compute(),
         );
@@ -1238,6 +1282,7 @@ mod tests {
             BatchPolicy {
                 capacity: 1,
                 max_wait: Duration::from_millis(1),
+                max_wait_ticks: None,
             },
             panicking,
         );
@@ -1266,6 +1311,7 @@ mod tests {
             BatchPolicy {
                 capacity: 2,
                 max_wait: Duration::from_millis(1),
+                max_wait_ticks: None,
             },
             nan_compute,
         );
@@ -1284,6 +1330,7 @@ mod tests {
             BatchPolicy {
                 capacity: 64,
                 max_wait: Duration::from_secs(30),
+                max_wait_ticks: None,
             },
             ServeConfig {
                 queue_cap: 2,
@@ -1330,6 +1377,7 @@ mod tests {
             BatchPolicy {
                 capacity: 2,
                 max_wait: Duration::from_millis(1),
+                max_wait_ticks: None,
             },
             ServeConfig {
                 clock: clock.clone(),

@@ -192,11 +192,28 @@
 //! * **Serving** — `coordinator::ModelServer::spawn_dof` /
 //!   `spawn_hessian` / `spawn_jet` each own a worker thread executing a
 //!   precompiled program per shard; the multi-model
-//!   [`coordinator::Router`] registers them under names, dispatches
-//!   tagged requests, and exposes per-model queue-depth and
-//!   `parallel_occupancy` metrics — the autoscaling signals. Routed
-//!   results are bitwise identical to direct engine calls
-//!   (`rust/tests/router_serving.rs`), and shutdown drains every queued
+//!   [`coordinator::Router`] registers them under names and picks a
+//!   replica per request by [`coordinator::DispatchPolicy`] score
+//!   (`inflight_weight · router inflight + queue_weight · admission
+//!   depth + occupancy_weight · parallel_occupancy`; lower wins, lowest
+//!   index breaks exact ties, untried replicas beat already-tried ones
+//!   on failover). The default weights (1, 1, 0) read exact counters
+//!   only; `occupancy_weight > 0` opts into the measured-seconds
+//!   signal. Replica sets are **elastic**: the dispatch list is
+//!   epoch-versioned, so `Router::scale_up` (via a registered
+//!   `ReplicaFactory`) and `Router::retire_replica` (publish the
+//!   shrunken list first, then drain — no request lost) reach existing
+//!   clients on their very next request, and the deterministic
+//!   [`coordinator::Autoscaler`] steps on the shared logical clock:
+//!   interval queue-depth peaks against dead-band thresholds, cooldown
+//!   hysteresis, min/max replica bounds, at most one change per model
+//!   per step, zero wall-clock reads in the decision path
+//!   (CI-enforced). Per-model snapshots aggregate server metrics across
+//!   the whole replica set — counts summed, latency histograms merged,
+//!   occupancy weighted by sharded wall seconds. Routed results are
+//!   bitwise identical to direct engine calls before, during, and after
+//!   scaling (`rust/tests/router_serving.rs`,
+//!   `rust/tests/autoscaler.rs`), and shutdown drains every queued
 //!   request.
 //!
 //! **Determinism contract:** shard boundaries are a function of the batch

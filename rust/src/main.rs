@@ -25,7 +25,8 @@ use dof::bench_harness::table1::{run_table1, Table1Config};
 use dof::bench_harness::table2::{run_table2, Table2Config};
 use dof::bench_harness::{render_table, BenchConfig};
 use dof::coordinator::{
-    BatchPolicy, HealthPolicy, ModelServer, Router, RouterConfig, ServeConfig, TickClock,
+    Autoscaler, AutoscalerConfig, BatchPolicy, HealthPolicy, ModelServer, Router, RouterConfig,
+    ScaleDirection, ServeConfig, TickClock,
 };
 use dof::graph::{Act, Graph};
 use dof::nn::{Mlp, MlpSpec};
@@ -113,6 +114,17 @@ USAGE:
                                           completed request; 0 = none)
             [--retries N]                 failover attempts after the first
                                           on retryable errors
+            [--autoscale]                 grow/drain replica sets from queue
+                                          depth on the tick clock (rust
+                                          engine; deterministic decisions)
+            [--autoscale-min N]           replica floor (default 1)
+            [--autoscale-max N]           replica ceiling (default 4)
+            [--autoscale-up-depth N]      scale up at interval peak queue
+                                          depth >= N (default 8)
+            [--autoscale-down-depth N]    scale down at interval peak queue
+                                          depth <= N (default 1)
+            [--autoscale-cooldown N]      ticks between scale events per
+                                          model (default 16)
             [--telemetry PATH]            trace every request and export the
                                           telemetry registry: PATH (JSON,
                                           periodic + final on drain) and
@@ -601,6 +613,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         other => return Err(anyhow!("unknown engine {other:?} (rust|xla)")),
     }
+    // `--autoscale` turns on the deterministic autoscaler: decisions use
+    // exact counters and the shared tick clock only (the wall-clock sleep
+    // below just paces how often the step runs while clients drive load;
+    // the scripted-tick test suite calls `step` explicitly instead).
+    let mut scaler = args.flag("autoscale").then(|| {
+        Autoscaler::new(AutoscalerConfig {
+            min_replicas: args.usize_or("autoscale-min", 1).max(1),
+            max_replicas: args.usize_or("autoscale-max", 4),
+            up_queue_depth: args.usize_or("autoscale-up-depth", 8),
+            down_queue_depth: args.usize_or("autoscale-down-depth", 1),
+            cooldown_ticks: args.u64_or("autoscale-cooldown", 16),
+            ..AutoscalerConfig::default()
+        })
+    });
     let model_clients = router
         .models()
         .into_iter()
@@ -664,6 +690,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
             })
         })
         .collect();
+    if let Some(scaler) = scaler.as_mut() {
+        // Step the scaler while the clients drive load; each fired event
+        // is printed as it happens and kept in the cumulative log for the
+        // final telemetry dump.
+        while !threads.iter().all(|t| t.is_finished()) {
+            for ev in scaler.step(&mut router) {
+                let dir = match ev.direction {
+                    ScaleDirection::Up => "up",
+                    ScaleDirection::Down => "down",
+                };
+                println!(
+                    "[autoscale] {} {}: {} -> {} replicas at tick {} (interval peak {})",
+                    ev.model,
+                    dir,
+                    ev.replicas_before,
+                    ev.replicas_after,
+                    ev.tick,
+                    ev.interval_peak_queue_depth
+                );
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // One more step after drain so an idle tail can record its
+        // scale-down signal before the final report.
+        let _ = scaler.step(&mut router);
+    }
     let (mut total, mut total_failed) = (0, 0);
     for t in threads {
         let (done, failed) = t.join().map_err(|_| anyhow!("client panicked"))??;
@@ -724,6 +776,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         total_rows as f64 / wall,
         clock.now()
     );
+    if let Some(scaler) = &scaler {
+        let s = scaler.snapshot();
+        println!(
+            "autoscaler: {} scale-up(s), {} scale-down(s), {} event(s) logged",
+            s.scale_ups,
+            s.scale_downs,
+            s.events.len()
+        );
+    }
     let pstats = parallel::pool::stats();
     println!(
         "worker pool: {} warm threads, {} spawn event(s), {} parallel regions",
@@ -747,6 +808,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         reg.add_cache("hessian", dof::plan::hessian::global_hessian_cache().stats());
         reg.set_slab_pool(dof::autodiff::arena::slab_pool_stats());
         reg.set_pool(pstats);
+        if let Some(scaler) = &scaler {
+            reg.set_autoscaler(scaler.snapshot());
+        }
         if let Some(tracer) = &tracer {
             reg.set_spans(tracer);
             println!(
@@ -835,6 +899,7 @@ fn register_rust_models(
     let policy = BatchPolicy {
         capacity: batch,
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)),
+        max_wait_ticks: None,
     };
     if order != 2 && order != 4 {
         return Err(anyhow!(
@@ -877,6 +942,23 @@ fn register_rust_models(
             // cache hit, not a recompile.
             router.add_replica("dof", spawn(graph.clone()))?;
         }
+        // Autoscaler spawn factory: rebuilds the engine from its spec
+        // (same seed → identical decomposition → identical bytes; the
+        // compile-once caches make each spawn a cache hit).
+        let fgraph = graph.clone();
+        let fcfg = serve_cfg("dof");
+        let factory = move || {
+            let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed });
+            ModelServer::spawn_dof_cfg(
+                fgraph.clone(),
+                op.dof_engine(),
+                policy,
+                pool,
+                parallel::DEFAULT_SHARD_ROWS,
+                fcfg.clone(),
+            )
+        };
+        router.set_replica_factory("dof", Box::new(factory))?;
         if multi {
             // The Table-1 baseline behind the same front door: mixed
             // DOF/Hessian traffic exercises the serving-scale comparison.
@@ -895,6 +977,20 @@ fn register_rust_models(
             for _ in 1..replicas {
                 router.add_replica("hessian", spawn(graph.clone()))?;
             }
+            let fgraph = graph.clone();
+            let fcfg = serve_cfg("hessian");
+            let factory = move || {
+                let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed });
+                ModelServer::spawn_hessian_cfg(
+                    fgraph.clone(),
+                    op.hessian_engine(),
+                    policy,
+                    pool,
+                    parallel::DEFAULT_SHARD_ROWS,
+                    fcfg.clone(),
+                )
+            };
+            router.set_replica_factory("hessian", Box::new(factory))?;
             println!("[hessian] rust Hessian baseline (N={n}, batch {batch})");
         }
     }
@@ -934,6 +1030,20 @@ fn register_rust_models(
         for _ in 1..replicas {
             router.add_replica("jet", spawn(graph.clone()))?;
         }
+        let fgraph = graph.clone();
+        let fcfg = serve_cfg("jet");
+        let factory = move || {
+            let op = HigherOrderOperator::from_spec(HigherOrderSpec::Biharmonic { d: jn });
+            ModelServer::spawn_jet_cfg(
+                fgraph.clone(),
+                op.jet_engine(),
+                policy,
+                pool,
+                parallel::DEFAULT_SHARD_ROWS,
+                fcfg.clone(),
+            )
+        };
+        router.set_replica_factory("jet", Box::new(factory))?;
     }
     Ok(())
 }

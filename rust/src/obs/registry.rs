@@ -19,7 +19,9 @@
 //!   the counter/gauge subset (`# TYPE` lines included), for scraping.
 
 use crate::autodiff::arena::SlabPoolStats;
-use crate::coordinator::{MetricsSnapshot, RouterModelSnapshot};
+use crate::coordinator::{
+    AutoscalerSnapshot, MetricsSnapshot, RouterModelSnapshot, ScaleDirection,
+};
 use crate::parallel::pool::PoolStats;
 use crate::util::CacheStats;
 
@@ -54,6 +56,7 @@ pub struct Registry {
     spans: Vec<Span>,
     dropped_spans: u64,
     profiles: Vec<(String, ProfileSummary)>,
+    autoscaler: Option<AutoscalerSnapshot>,
 }
 
 impl Registry {
@@ -70,6 +73,12 @@ impl Registry {
     /// aggregated server metrics belong in [`Registry::add_model`]).
     pub fn add_router(&mut self, snap: RouterModelSnapshot) {
         self.routers.push(snap);
+    }
+
+    /// Record the autoscaler's cumulative accounting (scale-up/down
+    /// counters plus the full tick-stamped event log).
+    pub fn set_autoscaler(&mut self, snap: AutoscalerSnapshot) {
+        self.autoscaler = Some(snap);
     }
 
     /// Record one keyed-cache counter set under `name` (plan, jet, hessian).
@@ -130,6 +139,16 @@ impl Registry {
             s.push_str(&format!("    {}{}\n", router_json(r), comma));
         }
         s.push_str("  ],\n");
+
+        if let Some(a) = &self.autoscaler {
+            let events: Vec<String> = a.events.iter().map(scale_event_json).collect();
+            s.push_str(&format!(
+                "  \"autoscaler\": {{\"scale_ups\": {}, \"scale_downs\": {}, \"events\": [{}]}},\n",
+                a.scale_ups,
+                a.scale_downs,
+                events.join(", "),
+            ));
+        }
 
         s.push_str("  \"caches\": {\n");
         for (i, (name, c)) in self.caches.iter().enumerate() {
@@ -236,6 +255,15 @@ impl Registry {
             ));
             s.push_str(&format!("dof_router_failed_total{{model=\"{l}\"}} {}\n", r.failed));
             s.push_str(&format!("dof_router_retries_total{{model=\"{l}\"}} {}\n", r.retries));
+        }
+        if let Some(a) = &self.autoscaler {
+            s.push_str("# TYPE dof_autoscaler_scale_ups_total counter\n");
+            s.push_str(&format!("dof_autoscaler_scale_ups_total {}\n", a.scale_ups));
+            s.push_str("# TYPE dof_autoscaler_scale_downs_total counter\n");
+            s.push_str(&format!(
+                "dof_autoscaler_scale_downs_total {}\n",
+                a.scale_downs
+            ));
         }
         s.push_str("# TYPE dof_cache_hits_total counter\n");
         s.push_str("# TYPE dof_cache_misses_total counter\n");
@@ -344,7 +372,8 @@ fn router_json(r: &RouterModelSnapshot) -> String {
         "{{\"model\": \"{}\", \"dispatched\": {}, \"completed\": {}, \"failed\": {}, \
          \"shed\": {}, \"retries\": {}, \"deadline_expired\": {}, \"invalid\": {}, \
          \"engine_faults\": {}, \"quarantine_events\": {}, \"queue_depth\": {}, \
-         \"peak_queue_depth\": {}, \"replicas\": [{}]}}",
+         \"peak_queue_depth\": {}, \"interval_peak_queue_depth\": {}, \"epoch\": {}, \
+         \"replicas\": [{}]}}",
         esc(&r.model),
         r.dispatched,
         r.completed,
@@ -357,7 +386,28 @@ fn router_json(r: &RouterModelSnapshot) -> String {
         r.quarantine_events,
         r.queue_depth,
         r.peak_queue_depth,
+        r.interval_peak_queue_depth,
+        r.epoch,
         replicas.join(", "),
+    )
+}
+
+fn scale_event_json(ev: &crate::coordinator::ScaleEvent) -> String {
+    let dir = match ev.direction {
+        ScaleDirection::Up => "up",
+        ScaleDirection::Down => "down",
+    };
+    format!(
+        "{{\"model\": \"{}\", \"direction\": \"{}\", \"tick\": {}, \
+         \"replicas_before\": {}, \"replicas_after\": {}, \
+         \"interval_peak_queue_depth\": {}, \"occupancy\": {}}}",
+        esc(&ev.model),
+        dir,
+        ev.tick,
+        ev.replicas_before,
+        ev.replicas_after,
+        ev.interval_peak_queue_depth,
+        num(ev.occupancy),
     )
 }
 
@@ -460,6 +510,36 @@ mod tests {
         assert!(text.contains("dof_shed_total{model=\"dof\"} 1"));
         assert!(text.contains("quantile=\"0.99\""));
         assert!(text.contains("dof_slab_pool_hits_total 5"));
+    }
+
+    #[test]
+    fn autoscaler_section_renders_events_and_counters() {
+        use crate::coordinator::ScaleEvent;
+        let mut reg = Registry::new();
+        reg.set_autoscaler(AutoscalerSnapshot {
+            scale_ups: 2,
+            scale_downs: 1,
+            events: vec![ScaleEvent {
+                model: "dof".to_string(),
+                direction: ScaleDirection::Up,
+                tick: 7,
+                replicas_before: 1,
+                replicas_after: 2,
+                interval_peak_queue_depth: 9,
+                occupancy: 0.0,
+            }],
+        });
+        let json = reg.to_json();
+        assert!(json.contains("\"autoscaler\": {\"scale_ups\": 2, \"scale_downs\": 1"));
+        assert!(json.contains("\"direction\": \"up\""));
+        assert!(json.contains("\"tick\": 7"));
+        assert!(json.contains("\"interval_peak_queue_depth\": 9"));
+        let open = json.matches('{').count();
+        let close = json.matches('}').count();
+        assert_eq!(open, close);
+        let text = reg.to_prometheus();
+        assert!(text.contains("dof_autoscaler_scale_ups_total 2"));
+        assert!(text.contains("dof_autoscaler_scale_downs_total 1"));
     }
 
     #[test]

@@ -121,6 +121,20 @@ impl LatencyHistogram {
         }
     }
 
+    /// Fold another histogram's samples into this one (element-wise bucket
+    /// addition). Every instance is built with the same log-spaced bounds
+    /// (see [`Self::new`]), so merging loses nothing beyond the bucket
+    /// resolution both sides already had — this is how the router
+    /// aggregates per-replica latency into a per-model histogram.
+    pub fn merge(&mut self, other: &Self) {
+        debug_assert_eq!(self.bounds.len(), other.bounds.len());
+        for (c, &o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+    }
+
     /// Approximate quantile from bucket boundaries.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.total == 0 {
@@ -269,6 +283,35 @@ mod tests {
         assert_eq!(q01, q50);
         assert_eq!(q50, q99);
         assert!((h.mean() - 2e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_merge_equals_recording_into_one() {
+        // Merging two histograms must be indistinguishable from having
+        // recorded every sample into a single one.
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut one = LatencyHistogram::new();
+        for i in 1..=40 {
+            let s = i as f64 * 3e-5;
+            a.record(s);
+            one.record(s);
+        }
+        for i in 1..=25 {
+            let s = i as f64 * 2e-3;
+            b.record(s);
+            one.record(s);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), one.count());
+        assert_eq!(a.mean(), one.mean());
+        for q in [0.01, 0.5, 0.9, 0.95, 0.99] {
+            assert_eq!(a.quantile(q), one.quantile(q));
+        }
+        // Merging an empty histogram is a no-op.
+        let before = (a.count(), a.mean(), a.quantile(0.5));
+        a.merge(&LatencyHistogram::new());
+        assert_eq!(before, (a.count(), a.mean(), a.quantile(0.5)));
     }
 
     #[test]

@@ -1,0 +1,454 @@
+//! Scripted-load battery for the deterministic [`Autoscaler`] driving a
+//! real DOF serving stack:
+//!
+//! * **Exact scale ticks** — under a scripted backlog the scaler fires Up
+//!   at the exact logical tick the thresholds predict, with the exact
+//!   replica counts and the observed interval peak in the event; cooldown
+//!   hysteresis discards the very next observation.
+//! * **Elasticity is arithmetic-free** — requests served before, during,
+//!   and after scale-up/retire return **bitwise-identical** f32 results
+//!   to direct engine calls, across worker pools of 1/2/4/8 threads
+//!   (`DOF_THREADS` picks the pool width for the env-driven tests).
+//! * **No request lost** — retirement publishes the shrunken dispatch
+//!   list before draining the retiring replica, so concurrent clients
+//!   (with one failover retry for the stale-handle race) complete every
+//!   request; counters are asserted exactly.
+//! * **Factories recompile nothing** — scaled-up replicas are spawned
+//!   from a [`ReplicaFactory`] that rebuilds the engine from its spec;
+//!   same spec → identical decomposition → identical bytes.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dof::coordinator::{
+    Autoscaler, AutoscalerConfig, BatchPolicy, ModelServer, Router, RouterConfig, ScaleDirection,
+};
+use dof::graph::{builder::random_layers, mlp_graph, Act, Graph};
+use dof::operators::{CoeffSpec, Operator};
+use dof::parallel::Pool;
+use dof::tensor::Tensor;
+use dof::util::Xoshiro256;
+
+/// Deterministic f32 request points for `(tag, client, iter)`.
+fn points(tag: u64, client: usize, iter: usize, rows: usize, width: usize) -> Vec<f32> {
+    let mut rng = Xoshiro256::new(
+        0xA5CA ^ tag.wrapping_mul(0x9E37_79B9) ^ ((client as u64) << 32) ^ iter as u64,
+    );
+    (0..rows * width).map(|_| rng.normal() as f32).collect()
+}
+
+/// The serving cast: f32 points → f64 tensor (exact), engine output → f32.
+fn expect_direct(
+    op: &Operator,
+    g: &Graph,
+    pts: &[f32],
+    rows: usize,
+    width: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let x = Tensor::from_vec(
+        &[rows, width],
+        pts.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
+    );
+    let r = op.dof_engine().compute(g, &x);
+    let cast = |t: &Tensor| t.data().iter().map(|&v| v as f32).collect::<Vec<f32>>();
+    (cast(&r.values), cast(&r.operator_values))
+}
+
+fn dof_model(n: usize, seed: u64, rng_seed: u64) -> (Graph, Operator) {
+    let mut rng = Xoshiro256::new(rng_seed);
+    let graph = mlp_graph(&random_layers(&[n, 7, 1], &mut rng), Act::Tanh);
+    let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed });
+    (graph, op)
+}
+
+/// A fast-completing DOF replica: a 2-row request fills capacity 2 and
+/// cuts (and completes) immediately.
+fn fast_replica(graph: &Graph, op: &Operator, pool: Pool) -> ModelServer {
+    ModelServer::spawn_dof(
+        graph.clone(),
+        op.dof_engine(),
+        BatchPolicy {
+            capacity: 2,
+            max_wait: Duration::from_millis(1),
+            max_wait_ticks: None,
+        },
+        pool,
+        2,
+    )
+}
+
+/// Register the scale-up spawn factory for `model`: rebuilds the operator
+/// from its spec (identical decomposition, compile-cache hit) and spawns
+/// a fast replica.
+fn install_factory(
+    router: &mut Router,
+    model: &str,
+    graph: &Graph,
+    n: usize,
+    seed: u64,
+    pool: Pool,
+) {
+    let graph = graph.clone();
+    let factory = move || {
+        let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed });
+        fast_replica(&graph, &op, pool)
+    };
+    router.set_replica_factory(model, Box::new(factory)).unwrap();
+}
+
+/// Bounded poll for a router-observable condition; panics (instead of
+/// hanging CI) if it never holds.
+fn wait_for(router: &Router, what: &str, cond: impl Fn(&Router) -> bool) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while !cond(router) {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "condition not reached within 10 s: {what}"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Scripted backlog: four requests park in replica 0's batcher (capacity
+/// 64 is never filled, the wall deadline is 30 s away), so the interval
+/// peak queue depth is exactly 4 when the scaler observes. The step at
+/// tick 0 must fire Up with exact before/after counts; the immediate
+/// second step is inside the cooldown window and must discard; live
+/// traffic then steers to the new replica (lower dispatch score than the
+/// backlogged one) and matches the direct oracle bitwise; shutdown drains
+/// the parked requests without loss.
+#[test]
+fn parked_backlog_scales_up_at_exact_tick_and_cooldown_discards() {
+    let n = 4;
+    let (graph, op) = dof_model(n, 17, 0x5CA1E);
+    let pool = Pool::from_env();
+    let mut router = Router::new();
+    router.register(
+        "dof",
+        ModelServer::spawn_dof(
+            graph.clone(),
+            op.dof_engine(),
+            BatchPolicy {
+                capacity: 64,
+                max_wait: Duration::from_secs(30),
+                max_wait_ticks: None,
+            },
+            pool,
+            2,
+        ),
+    );
+    install_factory(&mut router, "dof", &graph, n, 17, pool);
+    let client = router.client("dof").unwrap();
+
+    // Park exactly four 2-row requests on replica 0.
+    let parked: Vec<_> = (0..4)
+        .map(|c| {
+            let client = client.clone();
+            std::thread::spawn(move || {
+                let pts = points(1, c, 0, 2, n);
+                let resp = client.eval_blocking(pts.clone()).unwrap();
+                (pts, resp)
+            })
+        })
+        .collect();
+    wait_for(&router, "4 requests parked on replica 0", |r| {
+        let m = &r.snapshot()[0];
+        m.queue_depth == 4 && m.replicas[0].server.received == 4
+    });
+
+    let mut scaler = Autoscaler::new(AutoscalerConfig {
+        min_replicas: 1,
+        max_replicas: 2,
+        up_queue_depth: 4,
+        down_queue_depth: 1,
+        cooldown_ticks: 8,
+        ..AutoscalerConfig::default()
+    });
+
+    // Tick 0: the observed interval peak (4) reaches the threshold → Up.
+    let events = scaler.step(&mut router);
+    assert_eq!(events.len(), 1, "exactly one scale event");
+    let ev = &events[0];
+    assert_eq!(ev.model, "dof");
+    assert_eq!(ev.direction, ScaleDirection::Up);
+    assert_eq!(ev.tick, 0, "fired at the exact observation tick");
+    assert_eq!((ev.replicas_before, ev.replicas_after), (1, 2));
+    assert_eq!(ev.interval_peak_queue_depth, 4, "exact backlog observed");
+    assert_eq!(router.replica_count("dof"), Some(2));
+    assert_eq!(router.snapshot()[0].epoch, 2, "scale-up bumped the epoch");
+
+    // Same backlog, same tick: inside the cooldown window → discarded.
+    assert!(
+        scaler.step(&mut router).is_empty(),
+        "cooldown must discard the immediate re-observation"
+    );
+    assert_eq!(router.replica_count("dof"), Some(2));
+
+    // Live traffic now scores replica 1 (inflight 0) below the backlogged
+    // replica 0 (inflight 4): every request lands on the new replica and
+    // matches the direct engine bitwise.
+    for it in 0..3 {
+        let pts = points(2, 9, it, 2, n);
+        let resp = client.eval_blocking(pts.clone()).unwrap();
+        let (want_phi, want_lphi) = expect_direct(&op, &graph, &pts, 2, n);
+        assert_eq!(resp.phi, want_phi, "scaled-up response not bitwise (it {it})");
+        assert_eq!(resp.lphi, want_lphi);
+    }
+    {
+        let m = &router.snapshot()[0];
+        assert_eq!(m.replicas[1].completed, 3, "dispatch steered around the backlog");
+        assert_eq!(m.replicas[1].attempts, 3);
+        assert_eq!((m.dispatched, m.completed, m.failed), (7, 3, 0));
+        assert_eq!(m.queue_depth, 4, "the parked backlog is still in flight");
+    }
+
+    // Past the cooldown the backlog still pins the interval peak at ≥ 4,
+    // and the replica set is at max: no event may fire (dead band + cap).
+    router.clock().advance(8);
+    assert!(scaler.step(&mut router).is_empty(), "capped and backlogged: no event");
+    assert_eq!(router.replica_count("dof"), Some(2));
+
+    let snap = scaler.snapshot();
+    assert_eq!((snap.scale_ups, snap.scale_downs), (1, 0));
+    assert_eq!(snap.events.len(), 1);
+
+    // Drain: the four parked requests are flushed and answered bitwise.
+    router.shutdown();
+    for j in parked {
+        let (pts, resp) = j.join().expect("parked client panicked");
+        let (want_phi, want_lphi) = expect_direct(&op, &graph, &pts, 2, n);
+        assert_eq!(resp.phi, want_phi, "drained response not bitwise");
+        assert_eq!(resp.lphi, want_lphi);
+    }
+}
+
+/// Idle two-replica model: the scaler retires one replica at the exact
+/// tick of the observation, the event records the exact interval peak
+/// (1, from strictly sequential traffic), the epoch bumps, and traffic
+/// after retirement still matches the direct oracle — no request lost.
+#[test]
+fn idle_model_scales_down_at_exact_tick_without_losing_requests() {
+    let n = 3;
+    let (graph, op) = dof_model(n, 23, 0xD02F);
+    let pool = Pool::from_env();
+    let mut router = Router::with_config(RouterConfig {
+        retries: 1,
+        ..RouterConfig::default()
+    });
+    router.register("dof", fast_replica(&graph, &op, pool));
+    let second = fast_replica(&graph, &op, pool);
+    router.add_replica("dof", second).unwrap();
+
+    let client = router.client("dof").unwrap();
+    // Sequential traffic: each request completes before the next, so the
+    // queue-depth high-water mark is exactly 1.
+    for it in 0..4 {
+        let pts = points(3, 0, it, 2, n);
+        let resp = client.eval_blocking(pts.clone()).unwrap();
+        let (want_phi, want_lphi) = expect_direct(&op, &graph, &pts, 2, n);
+        assert_eq!(resp.phi, want_phi, "pre-retire response not bitwise (it {it})");
+        assert_eq!(resp.lphi, want_lphi);
+    }
+
+    router.clock().advance(5);
+    let mut scaler = Autoscaler::new(AutoscalerConfig {
+        min_replicas: 1,
+        max_replicas: 2,
+        up_queue_depth: 4,
+        down_queue_depth: 1,
+        cooldown_ticks: 3,
+        ..AutoscalerConfig::default()
+    });
+    let events = scaler.step(&mut router);
+    assert_eq!(events.len(), 1);
+    let ev = &events[0];
+    assert_eq!(ev.direction, ScaleDirection::Down);
+    assert_eq!(ev.tick, 5, "fired at the exact observation tick");
+    assert_eq!((ev.replicas_before, ev.replicas_after), (2, 1));
+    assert_eq!(ev.interval_peak_queue_depth, 1, "sequential traffic peaks at 1");
+    assert_eq!(router.replica_count("dof"), Some(1));
+    assert_eq!(
+        router.snapshot()[0].epoch,
+        3,
+        "register(1) + add_replica(2) + retire(3)"
+    );
+
+    // Inside the cooldown window, and at the floor afterwards: no event.
+    assert!(scaler.step(&mut router).is_empty(), "cooldown discards");
+    router.clock().advance(3);
+    assert!(scaler.step(&mut router).is_empty(), "at min_replicas: no event");
+    assert_eq!(router.replica_count("dof"), Some(1));
+
+    // Post-retirement traffic (existing client, new epoch on its next
+    // request) is still bitwise-exact and fully accounted.
+    for it in 4..6 {
+        let pts = points(3, 0, it, 2, n);
+        let resp = client.eval_blocking(pts.clone()).unwrap();
+        let (want_phi, want_lphi) = expect_direct(&op, &graph, &pts, 2, n);
+        assert_eq!(resp.phi, want_phi, "post-retire response not bitwise (it {it})");
+        assert_eq!(resp.lphi, want_lphi);
+    }
+    let m = &router.snapshot()[0];
+    assert_eq!((m.dispatched, m.completed, m.failed), (6, 6, 0));
+    let snap = scaler.snapshot();
+    assert_eq!((snap.scale_ups, snap.scale_downs), (0, 1));
+    router.shutdown();
+}
+
+/// Retirement under concurrent fire: four client threads hammer a model
+/// while the scaler retires a replica mid-stream. The shrunken dispatch
+/// list is published before the drain, and the one racy window — a
+/// client holding the stale list sends to the retiring replica after its
+/// channel closed — is covered by the failover retry. Every request must
+/// complete bitwise; `failed` must be 0.
+#[test]
+fn retirement_under_concurrent_load_loses_no_requests() {
+    let n = 3;
+    let (graph, op) = dof_model(n, 29, 0xF1FE);
+    let pool = Pool::from_env();
+    let mut router = Router::with_config(RouterConfig {
+        retries: 1,
+        ..RouterConfig::default()
+    });
+    router.register("dof", fast_replica(&graph, &op, pool));
+    install_factory(&mut router, "dof", &graph, n, 29, pool);
+    assert_eq!(router.scale_up("dof").unwrap(), 2, "factory-grown second replica");
+
+    let client = router.client("dof").unwrap();
+    let graph2 = graph.clone();
+    let op2 = Arc::new(op);
+    let clients = 4;
+    let per_client = 8;
+    let joins: Vec<_> = (0..clients)
+        .map(|c| {
+            let client = client.clone();
+            let graph = graph2.clone();
+            let op = Arc::clone(&op2);
+            std::thread::spawn(move || {
+                for it in 0..per_client {
+                    let pts = points(4, c, it, 2, n);
+                    let resp = client.eval_blocking(pts.clone()).unwrap();
+                    let (want_phi, want_lphi) = expect_direct(&op, &graph, &pts, 2, n);
+                    assert_eq!(resp.phi, want_phi, "client {c} it {it} phi (bitwise)");
+                    assert_eq!(resp.lphi, want_lphi, "client {c} it {it} L[φ] (bitwise)");
+                }
+            })
+        })
+        .collect();
+
+    // Retire mid-stream: thresholds chosen so any observed peak (≤ 4
+    // concurrent clients) reads as idle, with no cooldown in the way.
+    wait_for(&router, "traffic reached the model", |r| {
+        r.snapshot()[0].completed >= 4
+    });
+    let mut scaler = Autoscaler::new(AutoscalerConfig {
+        min_replicas: 1,
+        max_replicas: 2,
+        up_queue_depth: 9,
+        down_queue_depth: 8,
+        cooldown_ticks: 0,
+        ..AutoscalerConfig::default()
+    });
+    let events = scaler.step(&mut router);
+    assert_eq!(events.len(), 1, "mid-stream retirement fired");
+    assert_eq!(events[0].direction, ScaleDirection::Down);
+    assert_eq!(router.replica_count("dof"), Some(1));
+
+    for j in joins {
+        j.join().expect("client thread panicked");
+    }
+    let m = &router.snapshot()[0];
+    let sent = (clients * per_client) as u64;
+    assert_eq!(m.completed, sent, "every request answered across retirement");
+    assert_eq!(m.failed, 0, "no request lost");
+    assert_eq!(m.dispatched, sent);
+    assert_eq!(m.queue_depth, 0, "queue drained");
+    // Cross-replica aggregate accounts for every attempt: the per-model
+    // `server` snapshot sums the live replica and the retired one's
+    // metrics are gone with it, so only assert the live set's coverage.
+    assert_eq!(
+        m.server.received,
+        m.replicas.iter().map(|r| r.server.received).sum::<u64>(),
+        "aggregated snapshot covers the live replica set exactly"
+    );
+    router.shutdown();
+}
+
+/// Routed results are bitwise identical across pool widths 1/2/4/8 while
+/// the replica set grows and shrinks mid-sequence: shard boundaries are a
+/// function of batch size only, and replica choice never touches the
+/// computed bytes.
+#[test]
+fn scaling_is_bitwise_invisible_across_pool_widths() {
+    let n = 4;
+    let (graph, op) = dof_model(n, 31, 0xB17);
+    let mut baseline: Option<Vec<(Vec<f32>, Vec<f32>)>> = None;
+    for threads in [1usize, 2, 4, 8] {
+        let pool = Pool::new(threads);
+        let mut router = Router::new();
+        router.register("dof", fast_replica(&graph, &op, pool));
+        install_factory(&mut router, "dof", &graph, n, 31, pool);
+        let client = router.client("dof").unwrap();
+        let mut got = Vec::new();
+        let run = |lo: usize, hi: usize, got: &mut Vec<(Vec<f32>, Vec<f32>)>| {
+            for it in lo..hi {
+                let rows = 1 + it % 4;
+                let pts = points(5, 0, it, rows, n);
+                let resp = client.eval_blocking(pts.clone()).unwrap();
+                let (want_phi, want_lphi) = expect_direct(&op, &graph, &pts, rows, n);
+                assert_eq!(resp.phi, want_phi, "width {threads} it {it} vs direct");
+                assert_eq!(resp.lphi, want_lphi);
+                got.push((resp.phi, resp.lphi));
+            }
+        };
+        run(0, 3, &mut got); // before scaling
+        assert_eq!(router.scale_up("dof").unwrap(), 2);
+        run(3, 6, &mut got); // during (2 replicas)
+        assert_eq!(router.retire_replica("dof").unwrap(), 1);
+        run(6, 9, &mut got); // after retirement
+        router.shutdown();
+        match &baseline {
+            None => baseline = Some(got),
+            Some(b) => assert_eq!(b, &got, "pool width {threads} diverged bitwise"),
+        }
+    }
+}
+
+/// The floor grows an under-provisioned model without any load: one
+/// factory spawn per step (bounded change per step), each at its own
+/// tick, until `min_replicas` is met; further steps are no-ops.
+#[test]
+fn floor_grows_to_min_replicas_one_step_at_a_time() {
+    let n = 3;
+    let (graph, op) = dof_model(n, 37, 0xF100);
+    let pool = Pool::from_env();
+    let mut router = Router::new();
+    router.register("dof", fast_replica(&graph, &op, pool));
+    install_factory(&mut router, "dof", &graph, n, 37, pool);
+
+    let mut scaler = Autoscaler::new(AutoscalerConfig {
+        min_replicas: 3,
+        max_replicas: 3,
+        up_queue_depth: 100,
+        down_queue_depth: 0,
+        cooldown_ticks: 2,
+        ..AutoscalerConfig::default()
+    });
+    for (tick, want) in [(0u64, 2usize), (2, 3)] {
+        let events = scaler.step(&mut router);
+        assert_eq!(events.len(), 1, "one spawn per step");
+        assert_eq!(events[0].tick, tick);
+        assert_eq!(events[0].replicas_after, want);
+        assert_eq!(router.replica_count("dof"), Some(want));
+        router.clock().advance(2);
+    }
+    assert!(scaler.step(&mut router).is_empty(), "at the floor: no event");
+
+    // The grown set serves bitwise-exact results.
+    let client = router.client("dof").unwrap();
+    let pts = points(6, 0, 0, 2, n);
+    let resp = client.eval_blocking(pts.clone()).unwrap();
+    let (want_phi, want_lphi) = expect_direct(&op, &graph, &pts, 2, n);
+    assert_eq!((resp.phi, resp.lphi), (want_phi, want_lphi));
+    router.shutdown();
+}

@@ -104,6 +104,7 @@ fn coordinator_serves_rust_dof_backend() {
         BatchPolicy {
             capacity: 8,
             max_wait: Duration::from_millis(1),
+            max_wait_ticks: None,
         },
         compute,
     );

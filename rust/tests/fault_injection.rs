@@ -37,6 +37,7 @@ fn policy(capacity: usize) -> BatchPolicy {
     BatchPolicy {
         capacity,
         max_wait: Duration::from_millis(1),
+        max_wait_ticks: None,
     }
 }
 

@@ -74,6 +74,7 @@ fn run_traffic(
             BatchPolicy {
                 capacity: 8,
                 max_wait: Duration::from_millis(1),
+                max_wait_ticks: None,
             },
             Pool::new(threads),
             2,
@@ -156,6 +157,7 @@ fn span_tree_is_exact_under_a_scripted_tick_schedule() {
             BatchPolicy {
                 capacity: 2,
                 max_wait: Duration::from_secs(30),
+                max_wait_ticks: None,
             },
             Pool::new(1),
             // shard_rows 1: the 2-row batch decomposes into exactly 2 shards.
@@ -245,6 +247,7 @@ fn span_ring_drop_accounting_is_exact_under_pressure() {
             BatchPolicy {
                 capacity: 1,
                 max_wait: Duration::from_secs(30),
+                max_wait_ticks: None,
             },
             Pool::new(1),
             // shard_rows ≥ rows: every 1-row batch is exactly 1 shard, so

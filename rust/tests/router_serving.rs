@@ -48,6 +48,7 @@ fn policy() -> BatchPolicy {
     BatchPolicy {
         capacity: 8,
         max_wait: Duration::from_millis(1),
+        max_wait_ticks: None,
     }
 }
 
@@ -211,6 +212,7 @@ fn shutdown_drains_queued_requests_without_loss() {
             BatchPolicy {
                 capacity: 64,
                 max_wait: Duration::from_secs(30),
+                max_wait_ticks: None,
             },
             Pool::new(2),
             2,
@@ -321,6 +323,7 @@ fn shutdown_drains_while_a_replica_is_quarantined() {
                 BatchPolicy {
                     capacity: 2,
                     max_wait: Duration::from_secs(30),
+                    max_wait_ticks: None,
                 },
                 Pool::new(2),
                 2,
@@ -377,6 +380,16 @@ fn shutdown_drains_while_a_replica_is_quarantined() {
             (2, 2),
             "no traffic reached the quarantined replica"
         );
+        // The per-model `server` snapshot aggregates *all* replicas, not
+        // replica 0 alone: the quarantined replica's engine faults and the
+        // healthy replica's completions both surface in it.
+        assert_eq!(
+            m.server.received,
+            m.replicas.iter().map(|r| r.server.received).sum::<u64>(),
+            "aggregate received sums the replica set"
+        );
+        assert_eq!(m.server.engine_faults, 2, "replica 0's faults in the aggregate");
+        assert_eq!(m.server.requests, 4, "replica 1's completions in the aggregate");
     }
     router.shutdown();
     for j in joins {
@@ -405,6 +418,7 @@ fn shutdown_drains_retries_in_flight() {
                 BatchPolicy {
                     capacity: 64,
                     max_wait: Duration::from_secs(30),
+                    max_wait_ticks: None,
                 },
                 ServeConfig::labeled("m"),
             ),
@@ -459,6 +473,7 @@ fn shed_requests_are_counted_exactly_and_drain_completes() {
             BatchPolicy {
                 capacity: 64,
                 max_wait: Duration::from_secs(30),
+                max_wait_ticks: None,
             },
             ServeConfig {
                 queue_cap: 1,
