@@ -130,8 +130,33 @@ pub struct LatencySoak {
     pub p99_seconds: f64,
 }
 
+/// One variance-vs-samples measurement of the stochastic (STDE) estimator
+/// against the exact DOF engine on the same points: schema v7 records the
+/// empirical error alongside the estimator's own variance report, so both
+/// a perf regression *and* a silent estimator-quality regression (variance
+/// no longer shrinking ~1/S) show up in the trajectory.
+#[derive(Debug, Clone, Copy)]
+pub struct StochasticTier {
+    /// Sample count (direction groups per point).
+    pub samples: u32,
+    /// Median wall-clock of one sharded batch evaluation.
+    pub seconds: f64,
+    /// Mean |estimate − exact| over the probe points.
+    pub mean_abs_error: f64,
+    /// Mean Bessel-corrected sample variance reported by the engine.
+    pub mean_variance: f64,
+    /// Mean standard error `sqrt(variance / samples)`.
+    pub mean_std_error: f64,
+    /// Total jet directions pushed per point at this tier.
+    pub dirs_per_point: usize,
+}
+
+/// Sample counts the grid's stochastic probe sweeps.
+pub const STOCHASTIC_SAMPLE_TIERS: [u32; 3] = [8, 32, 128];
+
 /// Grid sweep output: per-cell execute measurements plus the one-time
-/// plan-compile, pool-lifecycle, fault-tier, and latency-soak data.
+/// plan-compile, pool-lifecycle, fault-tier, latency-soak, and
+/// stochastic-estimator data.
 #[derive(Debug, Clone)]
 pub struct GridReport {
     pub cells: Vec<GridCell>,
@@ -139,6 +164,7 @@ pub struct GridReport {
     pub pool: PoolTiming,
     pub robustness: RobustnessProbe,
     pub soak: LatencySoak,
+    pub stochastic: Vec<StochasticTier>,
 }
 
 /// Measure [`PoolTiming`]: one region before any other parallel work in
@@ -322,6 +348,57 @@ pub fn measure_latency_soak(graph: &Graph, op: &Operator) -> LatencySoak {
     }
 }
 
+/// Run the variance-vs-samples probe: the stochastic (STDE) engine over a
+/// fixed seeded 8-point batch at each tier in [`STOCHASTIC_SAMPLE_TIERS`],
+/// timed per tier and compared against the exact DOF engine on the same
+/// points. Estimates are a pure function of `(seed, point index, sample
+/// index)`, so the error/variance columns are bit-reproducible; only the
+/// seconds are wall-clock.
+pub fn measure_stochastic_tiers(
+    cfg: &Table1Config,
+    graph: &Graph,
+    op: &Operator,
+    bencher: &Bencher,
+) -> Vec<StochasticTier> {
+    use crate::jet::DirectionSampling;
+    let rows = 8usize;
+    let mut rng = Xoshiro256::new(cfg.seed ^ 0x57DE);
+    let x = Tensor::randn(&[rows, cfg.n], &mut rng);
+    let pool = Pool::new(1);
+    let dof_engine = op.dof_engine();
+    let program = dof_engine.plan(graph);
+    let exact = dof_engine.execute_sharded(&program, graph, &x, &pool, DEFAULT_SHARD_ROWS);
+    let exact_vals: Vec<f64> = exact.operator_values.data().to_vec();
+    let mut tiers = Vec::with_capacity(STOCHASTIC_SAMPLE_TIERS.len());
+    for &s in &STOCHASTIC_SAMPLE_TIERS {
+        let engine = op.stochastic_engine(DirectionSampling::Gaussian, s, cfg.seed);
+        let timing = bencher.run(&format!("grid/stochastic/s{s}"), || {
+            let r = engine.compute_sharded(graph, &x, &pool, DEFAULT_SHARD_ROWS);
+            std::hint::black_box(&r.operator_values);
+            (Some(r.cost.muls), Some(r.peak_jet_bytes))
+        });
+        let r = engine.compute_sharded(graph, &x, &pool, DEFAULT_SHARD_ROWS);
+        let est = r.operator_values.data();
+        let mean_abs_error = est
+            .iter()
+            .zip(exact_vals.iter())
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>()
+            / rows as f64;
+        let mean_variance = r.variance.data().iter().sum::<f64>() / rows as f64;
+        let mean_std_error = r.std_error.data().iter().sum::<f64>() / rows as f64;
+        tiers.push(StochasticTier {
+            samples: s,
+            seconds: timing.seconds.median,
+            mean_abs_error,
+            mean_variance,
+            mean_std_error,
+            dirs_per_point: engine.directions_per_point(),
+        });
+    }
+    tiers
+}
+
 /// Sweep the Table-1 MLP (elliptic full-rank operator) over a batch ×
 /// threads grid. The model, graph, and operator are built once; per cell
 /// the engines run through the same sharded path the CLI exposes.
@@ -424,12 +501,14 @@ pub fn run_table1_grid(
     // or per-cell measurements.
     let robustness = measure_robustness(&graph, &op);
     let soak = measure_latency_soak(&graph, &op);
+    let stochastic = measure_stochastic_tiers(cfg, &graph, &op, &bencher);
     GridReport {
         cells,
         plan,
         pool: pool_timing,
         robustness,
         soak,
+        stochastic,
     }
 }
 
@@ -441,11 +520,15 @@ pub fn grid_json(cfg: &Table1Config, report: &GridReport) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"table1_mlp_grid\",\n");
-    s.push_str("  \"schema\": 6,\n");
+    s.push_str("  \"schema\": 7,\n");
     s.push_str("  \"order\": 2,\n");
     s.push_str("  \"operator\": \"elliptic\",\n");
     s.push_str(
-        "  \"provenance\": \"schema v6 (observability): adds the latency_percentiles \
+        "  \"provenance\": \"schema v7 (stochastic estimation): adds the stochastic \
+         object (variance-vs-samples sweep of the STDE engine against the exact DOF \
+         engine: per sample tier the empirical |estimate-exact| error, the engine's \
+         own variance/std_error report, and the per-batch seconds); v6 \
+         (observability): adds the latency_percentiles \
          object (client-observed p50/p95/p99 from a deterministic routed soak); v5 \
          (SIMD-ized kernels + plan-time micro-kernel specialization): grid cells \
          execute over plan-recorded GemmPlan dispatch and per-call packed weight \
@@ -499,6 +582,22 @@ pub fn grid_json(cfg: &Table1Config, report: &GridReport) -> String {
         report.soak.p95_seconds * 1e3,
         report.soak.p99_seconds * 1e3
     ));
+    s.push_str("  \"stochastic\": {\"sampling\": \"gaussian\", \"rows\": 8, \"tiers\": [\n");
+    for (i, t) in report.stochastic.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"samples\": {}, \"seconds\": {:.6}, \"mean_abs_error\": {:.6e}, \
+             \"mean_variance\": {:.6e}, \"mean_std_error\": {:.6e}, \
+             \"dirs_per_point\": {}}}{}\n",
+            t.samples,
+            t.seconds,
+            t.mean_abs_error,
+            t.mean_variance,
+            t.mean_std_error,
+            t.dirs_per_point,
+            if i + 1 < report.stochastic.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]},\n");
     s.push_str("  \"cells\": [\n");
     for (i, c) in cells.iter().enumerate() {
         s.push_str(&format!(
@@ -586,9 +685,23 @@ mod tests {
         assert!(report.soak.p50_seconds >= 0.0);
         assert!(report.soak.p50_seconds <= report.soak.p95_seconds);
         assert!(report.soak.p95_seconds <= report.soak.p99_seconds);
+        // The stochastic probe sweeps every tier; its error/variance
+        // columns are seeded and finite, and the estimator pays more
+        // directions per point at higher sample counts.
+        assert_eq!(report.stochastic.len(), STOCHASTIC_SAMPLE_TIERS.len());
+        for t in &report.stochastic {
+            assert!(t.mean_abs_error.is_finite() && t.mean_abs_error >= 0.0);
+            assert!(t.mean_variance.is_finite() && t.mean_variance >= 0.0);
+            assert!(t.mean_std_error.is_finite() && t.mean_std_error >= 0.0);
+        }
+        assert!(
+            report.stochastic[0].dirs_per_point < report.stochastic[2].dirs_per_point
+        );
         let json = grid_json(&cfg, &report);
         assert!(json.contains("\"bench\": \"table1_mlp_grid\""));
-        assert!(json.contains("\"schema\": 6"));
+        assert!(json.contains("\"schema\": 7"));
+        assert!(json.contains("\"stochastic\""));
+        assert!(json.contains("\"mean_std_error\""));
         assert!(json.contains("\"latency_percentiles\""));
         assert!(json.contains("\"order\": 2"));
         assert!(json.contains("\"plan\""));

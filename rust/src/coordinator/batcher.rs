@@ -91,6 +91,11 @@ pub struct CutBatch<T> {
     pub data: Vec<f32>,
     pub rows_used: usize,
     pub members: Vec<PendingRequest<T>>,
+    /// The sample-count group every member of this cut shares (see
+    /// [`EvalRequest::samples`]): the batcher cuts the pending batch
+    /// before admitting a request with a different `samples` value, so a
+    /// stochastic backend can apply one override to the whole cut.
+    pub samples: Option<u32>,
 }
 
 impl<T> CutBatch<T> {
@@ -116,6 +121,9 @@ pub struct Batcher<T> {
     members: Vec<PendingRequest<T>>,
     /// Logical tick at which the oldest accumulated row arrived.
     oldest_tick: Option<u64>,
+    /// Sample-count group of the pending rows (meaningful only while
+    /// `rows > 0`; a request with a different group forces a cut first).
+    group: Option<u32>,
 }
 
 impl<T> Batcher<T> {
@@ -134,6 +142,7 @@ impl<T> Batcher<T> {
             rows: 0,
             members: Vec::new(),
             oldest_tick: None,
+            group: None,
         }
     }
 
@@ -157,11 +166,19 @@ impl<T> Batcher<T> {
     ) -> Vec<CutBatch<T>> {
         assert_eq!(req.width, self.width, "request width mismatch");
         let mut cut = Vec::new();
+        // Sample-count groups never mix: a pending partial batch with a
+        // different group is cut before this request's rows land.
+        if self.rows > 0 && self.group != req.samples {
+            cut.push(self.cut());
+        }
+        self.group = req.samples;
         let mut row_off = 0usize;
         let mut fragment = 0usize;
         while row_off < req.rows {
             if self.rows == self.policy.capacity {
                 cut.push(self.cut());
+                // The remaining rows of this request stay in its group.
+                self.group = req.samples;
             }
             let take = (req.rows - row_off).min(self.free_rows());
             let src =
@@ -212,12 +229,14 @@ impl<T> Batcher<T> {
         let data = std::mem::replace(&mut self.buf, fresh);
         let rows_used = self.rows;
         let members = std::mem::take(&mut self.members);
+        let samples = self.group.take();
         self.rows = 0;
         self.oldest_tick = None;
         CutBatch {
             data,
             rows_used,
             members,
+            samples,
         }
     }
 
@@ -394,6 +413,50 @@ mod tests {
         assert_eq!(cut.data.len(), 8);
         assert_eq!(&cut.data[..2], &[5.0, 5.0]);
         assert!(cut.data[2..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn samples_group_mismatch_forces_a_cut() {
+        let mut b: Batcher<usize> = Batcher::new(1, tick_policy(8));
+        assert!(b.push(req(2, 1, 1.0), 0, |_| 0).is_empty());
+        // Same group (None) packs into the same batch.
+        assert!(b.push(req(1, 1, 2.0), 0, |_| 1).is_empty());
+        // Different group: the pending None-batch is cut first.
+        let cuts = b.push(req(3, 1, 3.0).with_samples(Some(64)), 0, |_| 2);
+        assert_eq!(cuts.len(), 1);
+        assert_eq!(cuts[0].rows_used, 3);
+        assert_eq!(cuts[0].samples, None);
+        assert_eq!(cuts[0].members.len(), 2);
+        // The new group's rows are pending under its own tag.
+        let tail = b.cut();
+        assert_eq!(tail.rows_used, 3);
+        assert_eq!(tail.samples, Some(64));
+        // Matching groups keep packing; a fresh batcher carries the group.
+        assert!(b
+            .push(req(1, 1, 4.0).with_samples(Some(64)), 0, |_| 3)
+            .is_empty());
+        assert!(b
+            .push(req(1, 1, 5.0).with_samples(Some(64)), 0, |_| 4)
+            .is_empty());
+        let same = b.cut();
+        assert_eq!(same.rows_used, 2);
+        assert_eq!(same.samples, Some(64));
+    }
+
+    #[test]
+    fn oversize_request_keeps_its_samples_group_across_auto_cuts() {
+        let mut b: Batcher<usize> = Batcher::new(1, tick_policy(4));
+        let cuts = b.push(req(10, 1, 1.0).with_samples(Some(16)), 0, |frag| frag);
+        assert_eq!(cuts.len(), 2);
+        for c in &cuts {
+            assert_eq!(c.samples, Some(16), "every auto-cut stays in the group");
+        }
+        let tail = b.cut();
+        assert_eq!(tail.rows_used, 2);
+        assert_eq!(tail.samples, Some(16));
+        // Group cleared by the cut: the next batch starts fresh.
+        b.push(req(1, 1, 2.0), 0, |_| 0);
+        assert_eq!(b.cut().samples, None);
     }
 
     #[test]

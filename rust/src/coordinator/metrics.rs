@@ -122,6 +122,9 @@ pub struct MetricsSnapshot {
     pub deadline_expired: u64,
     /// Batches failed with `EngineFault`.
     pub engine_faults: u64,
+    /// Non-finite latency samples rejected across the latency / exec /
+    /// queue-wait histograms (exact; see `LatencyHistogram::record`).
+    pub dropped_latency_samples: u64,
 }
 
 impl Metrics {
@@ -291,6 +294,10 @@ impl Metrics {
             invalid: robust[2],
             deadline_expired: robust[3],
             engine_faults: robust[4],
+            dropped_latency_samples: [&g.latency, &g.exec_latency, &g.queue_wait]
+                .iter()
+                .map(|h| h.as_ref().map(|h| h.dropped_samples()).unwrap_or(0))
+                .sum(),
         }
     }
 }
@@ -408,6 +415,33 @@ mod tests {
         let none = Metrics::aggregate(std::iter::empty::<&Metrics>());
         assert_eq!(none.requests, 0);
         assert_eq!(none.batch_efficiency, 1.0);
+    }
+
+    #[test]
+    fn aggregate_p50_no_longer_one_microsecond_and_nan_latency_no_longer_poisons_mean() {
+        // Two replicas whose requests are all slow (~2s), one of which also
+        // recorded a NaN latency. Before the stats.rs fixes the router's
+        // per-model aggregate reported p50 = bounds[0] (1µs) for q-style
+        // lookups with empty leading buckets and mean_latency = NaN forever.
+        let a = Metrics::new();
+        let b = Metrics::new();
+        for _ in 0..4 {
+            a.record_request(1, 2.0);
+            b.record_request(1, 2.0);
+        }
+        b.record_request(1, f64::NAN);
+        let s = Metrics::aggregate([&a, &b]);
+        // NaN sample dropped, not folded into sum: mean stays finite and
+        // reflects only the 8 real samples.
+        assert!(s.mean_latency.is_finite());
+        assert!((s.mean_latency - 2.0).abs() < 0.5);
+        assert_eq!(s.dropped_latency_samples, 1);
+        // The NaN request still counted as a request (it completed), only
+        // its latency sample was rejected.
+        assert_eq!(s.requests, 9);
+        // Quantiles of the merged histogram skip the empty fast buckets.
+        assert!(s.p50_latency >= 1.0);
+        assert!(s.p95_latency >= s.p50_latency);
     }
 
     #[test]

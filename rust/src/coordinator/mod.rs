@@ -69,6 +69,12 @@ pub struct EvalRequest {
     /// dequeues the request — an expired request is answered with
     /// [`ServeError::DeadlineExceeded`] instead of entering a batch.
     pub deadline_tick: Option<u64>,
+    /// Per-request sample-count override for stochastic (STDE) backends;
+    /// `None` = the backend's spawn-time default. The batcher never mixes
+    /// requests with different `samples` in one batch (the sample count is
+    /// a property of the whole cut), and non-stochastic backends ignore
+    /// it. See [`ServerHandle::eval_with_samples`].
+    pub samples: Option<u32>,
 }
 
 impl EvalRequest {
@@ -112,7 +118,15 @@ impl EvalRequest {
             rows,
             width,
             deadline_tick,
+            samples: None,
         })
+    }
+
+    /// Attach a per-request sample-count override (stochastic backends
+    /// only; see the field docs on [`EvalRequest::samples`]).
+    pub fn with_samples(mut self, samples: Option<u32>) -> Self {
+        self.samples = samples;
+        self
     }
 }
 

@@ -620,13 +620,26 @@ impl RouterClient {
     /// per call; depth incremented for the duration of the round trip,
     /// retries included).
     pub fn eval_blocking(&self, points: Vec<f32>) -> std::result::Result<EvalResponse, ServeError> {
+        self.eval_blocking_with_samples(points, None)
+    }
+
+    /// [`Self::eval_blocking`] with a per-request sample-count override
+    /// (stochastic/STDE models only — see
+    /// [`super::ServerHandle::eval_with_samples`]; other models ignore
+    /// it). The override survives failover: every retry attempt carries
+    /// the same `samples`.
+    pub fn eval_blocking_with_samples(
+        &self,
+        points: Vec<f32>,
+        samples: Option<u32>,
+    ) -> std::result::Result<EvalResponse, ServeError> {
         let c = &*self.counters;
         c.dispatched.fetch_add(1, Ordering::Relaxed);
         let depth = c.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
         c.peak_queue_depth.fetch_max(depth, Ordering::Relaxed);
         c.interval_peak_queue_depth
             .fetch_max(depth, Ordering::Relaxed);
-        let out = self.route(&points);
+        let out = self.route(&points, samples);
         // Outcome before depth: a snapshot must never observe a request
         // missing from dispatched == completed + failed + queue_depth.
         match &out {
@@ -658,14 +671,18 @@ impl RouterClient {
     /// root span id up front (attempts parent under it) and record the
     /// root span once the attempt loop resolves. Without one, this is a
     /// direct call into the attempt loop — same bytes either way.
-    fn route(&self, points: &[f32]) -> std::result::Result<EvalResponse, ServeError> {
+    fn route(
+        &self,
+        points: &[f32],
+        samples: Option<u32>,
+    ) -> std::result::Result<EvalResponse, ServeError> {
         let Some(tracer) = &self.cfg.tracer else {
-            return self.route_inner(points, None);
+            return self.route_inner(points, samples, None);
         };
         let root = tracer.next_id();
         let start_tick = self.cfg.clock.now();
         let t0 = Instant::now();
-        let out = self.route_inner(points, Some(root));
+        let out = self.route_inner(points, samples, Some(root));
         let width = self.width().max(1);
         tracer.record(Span {
             id: root,
@@ -689,6 +706,7 @@ impl RouterClient {
     fn route_inner(
         &self,
         points: &[f32],
+        samples: Option<u32>,
         root: Option<u64>,
     ) -> std::result::Result<EvalResponse, ServeError> {
         let clock = &self.cfg.clock;
@@ -740,7 +758,7 @@ impl RouterClient {
                 _ => None,
             };
             let result =
-                handle.eval_with_deadline_traced(points.to_vec(), deadline, trace.map(|t| t.2));
+                handle.eval_opts(points.to_vec(), deadline, trace.map(|t| t.2), samples);
             if let Some((tracer, root, tc, t_at)) = trace {
                 tracer.record(Span {
                     id: tc.parent,

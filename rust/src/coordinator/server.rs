@@ -27,10 +27,12 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use std::collections::HashMap;
+
 use crate::autodiff::arena::{with_program_slab, SlabKey};
 use crate::autodiff::{DofEngine, HessianEngine};
 use crate::graph::Graph;
-use crate::jet::{self, JetEngine};
+use crate::jet::{self, JetEngine, StochasticJetEngine};
 use crate::obs::{Span, SpanKind, TraceContext, Tracer};
 use crate::parallel::{split_rows, Pool};
 use crate::plan;
@@ -222,6 +224,19 @@ impl ServerHandle {
         self.eval_with_deadline_traced(points, deadline_tick, None)
     }
 
+    /// Submit a request with a per-request **sample-count override**
+    /// (stochastic/STDE backends only — other backends ignore it): the
+    /// batcher never mixes different `samples` values in one cut, and the
+    /// stochastic worker runs the whole cut at this count. `None` = the
+    /// backend's spawn-time default; `Some(0)` is rejected as invalid.
+    pub fn eval_with_samples(
+        &self,
+        points: Vec<f32>,
+        samples: Option<u32>,
+    ) -> std::result::Result<EvalResponse, ServeError> {
+        self.eval_opts(points, None, None, samples)
+    }
+
     /// [`Self::eval_with_deadline`] carrying a [`TraceContext`]: spans for
     /// this request's queue wait, batch formation, execution, and shards
     /// are recorded under `trace.parent` (a no-op when the server has no
@@ -232,7 +247,25 @@ impl ServerHandle {
         deadline_tick: Option<u64>,
         trace: Option<TraceContext>,
     ) -> std::result::Result<EvalResponse, ServeError> {
+        self.eval_opts(points, deadline_tick, trace, None)
+    }
+
+    /// The full submit path: deadline + trace + sample-count override in
+    /// one call (every other `eval_*` method delegates here).
+    pub fn eval_opts(
+        &self,
+        points: Vec<f32>,
+        deadline_tick: Option<u64>,
+        trace: Option<TraceContext>,
+        samples: Option<u32>,
+    ) -> std::result::Result<EvalResponse, ServeError> {
         // Front door: structured validation instead of the legacy asserts.
+        if samples == Some(0) {
+            self.metrics.record_invalid();
+            return Err(ServeError::InvalidRequest {
+                reason: "sample-count override must be ≥ 1".to_string(),
+            });
+        }
         if self.width == 0 || points.is_empty() || points.len() % self.width != 0 {
             self.metrics.record_invalid();
             return Err(ServeError::InvalidRequest {
@@ -263,7 +296,7 @@ impl ServerHandle {
             });
         }
         self.metrics.record_accepted();
-        let out = self.eval_admitted(points, deadline_tick, trace);
+        let out = self.eval_admitted(points, deadline_tick, trace, samples);
         self.admission.leave();
         out
     }
@@ -273,6 +306,7 @@ impl ServerHandle {
         points: Vec<f32>,
         deadline_tick: Option<u64>,
         trace: Option<TraceContext>,
+        samples: Option<u32>,
     ) -> std::result::Result<EvalResponse, ServeError> {
         let rows = points.len() / self.width;
         let req = EvalRequest {
@@ -280,6 +314,7 @@ impl ServerHandle {
             rows,
             width: self.width,
             deadline_tick,
+            samples,
         };
         let t0 = Instant::now();
         let (rtx, rrx) = mpsc::channel();
@@ -329,13 +364,15 @@ struct WorkerCtx {
 /// The worker event loop — runs on the worker thread; `compute` need not
 /// be `Send` because it never leaves this thread.
 ///
-/// `compute` receives `(padded_data, width, rows_used)`: fixed-shape
-/// backends (XLA artifacts) consume the whole padded buffer, while
-/// shape-flexible backends may compute only the first `rows_used` rows —
-/// response routing reads nothing past them.
+/// `compute` receives `(padded_data, width, rows_used, samples)`:
+/// fixed-shape backends (XLA artifacts) consume the whole padded buffer,
+/// while shape-flexible backends may compute only the first `rows_used`
+/// rows — response routing reads nothing past them. `samples` is the
+/// cut's sample-count group (stochastic backends honor it; all others
+/// ignore it).
 fn worker_loop<F>(rx: mpsc::Receiver<Msg>, ctx: WorkerCtx, mut compute: F)
 where
-    F: FnMut(&[f32], usize, usize, Option<&ExecTrace>) -> Result<(Vec<f32>, Vec<f32>)>,
+    F: FnMut(&[f32], usize, usize, Option<u32>, Option<&ExecTrace>) -> Result<(Vec<f32>, Vec<f32>)>,
 {
     let width = ctx.width;
     let mut batcher: Batcher<ReqTag> = Batcher::new(width, ctx.policy);
@@ -418,7 +455,7 @@ where
             if plan.panic {
                 panic!("injected panic (fault injection)");
             }
-            compute(&cut.data, width, cut.rows_used, exec_trace.as_ref())
+            compute(&cut.data, width, cut.rows_used, cut.samples, exec_trace.as_ref())
         }));
         let exec_s = t0.elapsed().as_secs_f64();
         ctx.metrics.record_batch(cut.rows_used, cut.padded_rows(width), exec_s);
@@ -573,7 +610,7 @@ impl ModelServer {
         compute: F,
     ) -> Self
     where
-        F: FnMut(&[f32], usize, usize, Option<&ExecTrace>) -> Result<(Vec<f32>, Vec<f32>)>
+        F: FnMut(&[f32], usize, usize, Option<u32>, Option<&ExecTrace>) -> Result<(Vec<f32>, Vec<f32>)>
             + Send
             + 'static,
     {
@@ -626,7 +663,7 @@ impl ModelServer {
             policy,
             Arc::new(Metrics::new()),
             cfg,
-            move |data, w, _rows, _trace| compute(data, w),
+            move |data, w, _rows, _samples, _trace| compute(data, w),
         )
     }
 
@@ -670,6 +707,7 @@ impl ModelServer {
         let compute = move |data: &[f32],
                             w: usize,
                             rows_used: usize,
+                            _samples: Option<u32>,
                             trace: Option<&ExecTrace>|
               -> Result<(Vec<f32>, Vec<f32>)> {
             // The Rust engines have no fixed-batch constraint, so padding
@@ -830,6 +868,92 @@ impl ModelServer {
         Self::spawn_sharded_cfg(width, policy, pool, shard_rows, cfg, compute)
     }
 
+    /// Spawn a worker around the **stochastic Taylor jet engine** (STDE,
+    /// [`crate::jet::StochasticJetEngine`]): `lphi` carries the unbiased
+    /// sampled estimate of the operator, `phi` the exact model values.
+    /// Sharding happens *inside* the engine's `compute_sharded` — its
+    /// per-point direction streams are keyed by the point's global index
+    /// within the cut batch, so a batch's bytes are independent of the
+    /// thread count and shard decomposition (the PR 1 determinism
+    /// contract; estimates do depend on how the coordinator composed the
+    /// batch, which is inherent to per-point counter-based streams).
+    ///
+    /// The per-request [`ServerHandle::eval_with_samples`] override is
+    /// honored here: each distinct sample count gets its own engine
+    /// (lazily built from the spawn-time engine and cached for the
+    /// worker's lifetime; the underlying jet program is shared through
+    /// the global jet cache whenever the direction structure matches).
+    pub fn spawn_stochastic(
+        graph: Graph,
+        engine: StochasticJetEngine,
+        policy: BatchPolicy,
+        pool: Pool,
+        shard_rows: usize,
+    ) -> Self {
+        Self::spawn_stochastic_cfg(
+            graph,
+            engine,
+            policy,
+            pool,
+            shard_rows,
+            ServeConfig::labeled("stochastic"),
+        )
+    }
+
+    /// [`Self::spawn_stochastic`] with robustness knobs.
+    pub fn spawn_stochastic_cfg(
+        graph: Graph,
+        engine: StochasticJetEngine,
+        policy: BatchPolicy,
+        pool: Pool,
+        shard_rows: usize,
+        cfg: ServeConfig,
+    ) -> Self {
+        let width = graph.input_dim();
+        // Warm the compile-once program cache for the default sample count.
+        let _ = engine.program(&graph);
+        let default_samples = engine.samples();
+        let mut engines: HashMap<u32, StochasticJetEngine> = HashMap::new();
+        engines.insert(default_samples, engine);
+        let compute = move |data: &[f32],
+                            w: usize,
+                            rows_used: usize,
+                            samples: Option<u32>,
+                            _trace: Option<&ExecTrace>|
+              -> Result<(Vec<f32>, Vec<f32>)> {
+            // Shape-flexible backend: padding rows are skipped entirely.
+            let rows = rows_used.min(data.len() / w);
+            if rows == 0 {
+                return Ok((Vec::new(), Vec::new()));
+            }
+            let s = samples.unwrap_or(default_samples);
+            if !engines.contains_key(&s) {
+                let base = engines
+                    .get(&default_samples)
+                    .ok_or_else(|| anyhow!("default stochastic engine missing"))?
+                    .clone();
+                engines.insert(s, base.with_samples(s));
+            }
+            let eng = engines
+                .get(&s)
+                .ok_or_else(|| anyhow!("stochastic engine for {s} samples missing"))?;
+            let x = Tensor::from_vec(
+                &[rows, w],
+                data[..rows * w]
+                    .iter()
+                    .map(|&v| v as f64)
+                    .collect::<Vec<f64>>(),
+            );
+            eng.validate_input(&graph, &x).map_err(anyhow::Error::msg)?;
+            let res = eng.compute_sharded(&graph, &x, &pool, shard_rows);
+            Ok((
+                res.values.data().iter().map(|&v| v as f32).collect(),
+                res.operator_values.data().iter().map(|&v| v as f32).collect(),
+            ))
+        };
+        Self::spawn_with(width, policy, Arc::new(Metrics::new()), cfg, compute)
+    }
+
     /// Spawn a sharded worker around the **Hessian baseline engine** with
     /// compile-once execution: the structure-keyed
     /// [`crate::plan::hessian::HessianPlan`] is fetched from the global
@@ -936,12 +1060,15 @@ impl ModelServer {
             // Non-Send closure is fine: it stays on this thread. The
             // artifact has a fixed batch shape, so the padded rows are
             // executed regardless of rows_used.
-            let compute =
-                move |data: &[f32], w: usize, _rows_used: usize, _trace: Option<&ExecTrace>| {
-                    let rows = data.len() / w;
-                    let outs = exec.run_f32(&art, &[(data, &[rows, w])])?;
-                    Ok((outs[0].clone(), outs[1].clone()))
-                };
+            let compute = move |data: &[f32],
+                                w: usize,
+                                _rows_used: usize,
+                                _samples: Option<u32>,
+                                _trace: Option<&ExecTrace>| {
+                let rows = data.len() / w;
+                let outs = exec.run_f32(&art, &[(data, &[rows, w])])?;
+                Ok((outs[0].clone(), outs[1].clone()))
+            };
             worker_loop(rx, ctx, compute);
         });
         match ready_rx.recv() {
@@ -1218,6 +1345,63 @@ mod tests {
                 direct.operator_values.at(b, 0)
             );
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn stochastic_backend_serves_estimates_and_honors_samples_override() {
+        use crate::graph::{builder::random_layers, mlp_graph, Act};
+        use crate::jet::DirectionSampling;
+        use crate::operators::{HigherOrderOperator, HigherOrderSpec};
+        use crate::util::Xoshiro256;
+        let mut rng = Xoshiro256::new(79);
+        let n = 3;
+        let graph = mlp_graph(&random_layers(&[n, 8, 1], &mut rng), Act::Tanh);
+        let op = HigherOrderOperator::from_spec(HigherOrderSpec::Biharmonic { d: n });
+        let engine = op.stochastic_engine(DirectionSampling::Gaussian, 8, 42);
+        let server = ModelServer::spawn_stochastic(
+            graph.clone(),
+            engine,
+            BatchPolicy {
+                capacity: 8,
+                max_wait: Duration::from_millis(1),
+                max_wait_ticks: None,
+            },
+            Pool::new(2),
+            2,
+        );
+        let h = server.handle();
+        let pts: Vec<f32> = (0..4 * n).map(|i| (i as f32) * 0.1).collect();
+        let resp = h.eval_blocking(pts.clone()).unwrap();
+        assert_eq!(resp.phi.len(), 4);
+        assert_eq!(resp.lphi.len(), 4);
+        // Served bytes match a direct engine call with the same point
+        // indices (serving casts through f32).
+        let x = Tensor::from_vec(&[4, n], pts.iter().map(|&v| v as f64).collect::<Vec<f64>>());
+        let direct = op
+            .stochastic_engine(DirectionSampling::Gaussian, 8, 42)
+            .compute(&graph, &x);
+        for b in 0..4 {
+            assert_eq!(resp.phi[b], direct.values.at(b, 0) as f32, "phi exact");
+            assert_eq!(
+                resp.lphi[b],
+                direct.operator_values.at(b, 0) as f32,
+                "row {b}: served estimate must be the engine's bytes"
+            );
+        }
+        // Per-request override: same request at 32 samples matches a
+        // 32-sample engine, not the spawn default.
+        let resp32 = h.eval_with_samples(pts.clone(), Some(32)).unwrap();
+        let direct32 = op
+            .stochastic_engine(DirectionSampling::Gaussian, 32, 42)
+            .compute(&graph, &x);
+        for b in 0..4 {
+            assert_eq!(resp32.lphi[b], direct32.operator_values.at(b, 0) as f32);
+        }
+        assert_ne!(resp.lphi, resp32.lphi, "different sample counts differ");
+        // samples = 0 is rejected at the front door.
+        let err = h.eval_with_samples(pts, Some(0)).unwrap_err();
+        assert!(matches!(err, ServeError::InvalidRequest { .. }), "{err}");
         server.shutdown();
     }
 

@@ -44,11 +44,13 @@ pub mod basis;
 pub mod cache;
 pub mod engine;
 pub mod program;
+pub mod stochastic;
 
 pub use basis::{biharmonic_terms, laplacian_terms, terms_from_symmetric, DirectionBasis, JetTerm};
 pub use cache::global_jet_cache;
 pub use engine::{JetEngine, JetResult};
 pub use program::JetProgram;
+pub use stochastic::{DirectionSampling, StochasticJetEngine, StochasticJetResult};
 
 use crate::autodiff::Cost;
 use crate::graph::{Graph, Op};

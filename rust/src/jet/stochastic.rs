@@ -1,0 +1,728 @@
+//! **Stochastic Taylor jet engine (STDE)** — unbiased Monte-Carlo
+//! estimation of arbitrary order-≤4 constant-coefficient operators on the
+//! exact jet rails, for the regime where the exact polarization basis is
+//! the scaling wall (`Δ²` at dimension `d` needs `d²` exact directions;
+//! the estimator's direction count is independent of `d`).
+//!
+//! ## Estimator
+//!
+//! For an order-`m` term group `Σ coef·∂^α φ = Σ coef·Tₘ(e_{α₁},…,e_{αₘ})`
+//! (`Tₘ` the symmetric m-linear differential form), draw `m` **independent
+//! isotropic** vectors `u₁…uₘ` with `E[u uᵀ] = I` and form
+//!
+//! ```text
+//! R = Tₘ(u₁,…,uₘ) · Aₘ,    Aₘ = Σ_terms coef · Π_l u_l[α_l]
+//! ```
+//!
+//! Independence gives `E[Π_l u_l[i_l]·u_l[α_l]] = Π_l δ_{i_l α_l}`, so
+//! `E[R] = Σ coef·∂^α φ` exactly — **unbiased** for any term list, both
+//! sampling families. `Tₘ(u₁…uₘ)` itself is read off one jet propagation
+//! by the polarization identity (`2⁻ᵐ Σ_ε (Πε)·cₘ(Σεₗuₗ)`, sign-
+//! canonicalized to `2^{m−1}` directions per order per sample). First-order
+//! terms and `b·∇` are carried **exactly** as one extra deterministic
+//! direction (zero variance contribution), and `c·φ` exactly at the output.
+//!
+//! ## Single-kernel invariant
+//!
+//! This module introduces **no new arithmetic**: sampled directions are
+//! packed into a [`DirectionBasis`] and pushed through the compiled
+//! [`JetProgram`] executor — the same `compose5`/`cauchy5` kernels, slab
+//! layout, and GEMM plans as the exact engine. The program is compiled
+//! **once** per `(graph, structure)` from a canonical all-ones pattern
+//! basis (direction *values* are execution inputs; only the structure keys
+//! the cache), so per-point random bases cause no plan-cache thrash.
+//!
+//! ## Determinism contract (PR 1)
+//!
+//! Per-point direction streams are derived counter-style from
+//! `(seed, point index, sample index)` — every `(point, sample)` pair owns
+//! an independent [`Xoshiro256`] stream, so results are a pure function of
+//! the seed and the point's **global** batch index: bit-identical across
+//! 1/2/4/8 threads and independent of the shard decomposition
+//! (`rust/tests/stochastic_convergence.rs`).
+
+use std::sync::Arc;
+
+use crate::autodiff::arena::{with_program_slab, SlabKey};
+use crate::autodiff::Cost;
+use crate::graph::Graph;
+use crate::parallel::{self, Pool};
+use crate::plan::{self, PanelSet};
+use crate::tensor::Tensor;
+use crate::util::Xoshiro256;
+
+use super::basis::{DirectionBasis, JetTerm};
+use super::cache::global_jet_cache;
+use super::program::{execute_jet, JetProgram};
+
+/// Direction sampling family. Both are isotropic (`E[u uᵀ] = I`), which is
+/// all the unbiasedness argument needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DirectionSampling {
+    /// Dense standard normal `u ~ N(0, I)`.
+    Gaussian,
+    /// Sparse Rademacher: `nnz` distinct coordinates set to
+    /// `±sqrt(n/nnz)`, the rest zero. `E[uᵢ²] = (nnz/n)·(n/nnz) = 1`,
+    /// off-diagonals vanish by sign symmetry.
+    SparseRademacher {
+        /// Non-zeros per direction (clamped to `1..=n` at engine build).
+        nnz: usize,
+    },
+}
+
+/// Output of [`StochasticJetEngine::compute`].
+pub struct StochasticJetResult {
+    /// `φ(x)`, `[batch, out]` — exact (the value rows of the jet).
+    pub values: Tensor,
+    /// Unbiased estimate of `L[φ](x)`, `[batch, out]`.
+    pub operator_values: Tensor,
+    /// Bessel-corrected sample variance of the per-sample estimates,
+    /// `[batch, out]` (zero when the operator has no stochastic part or
+    /// `samples == 1`).
+    pub variance: Tensor,
+    /// Standard error `sqrt(variance / samples)`, `[batch, out]`.
+    pub std_error: Tensor,
+    /// Sample count the estimate used.
+    pub samples: u32,
+    /// Exact FLOP count of the run (program cost; batch-linear).
+    pub cost: Cost,
+    /// Peak live jet bytes of any single-point execution.
+    pub peak_jet_bytes: u64,
+}
+
+/// One order-`m ≥ 2` term group: `(m, [(axes, coef)])`.
+type OrderGroup = (usize, Vec<(Vec<usize>, f64)>);
+
+/// The stochastic Taylor jet engine.
+#[derive(Clone)]
+pub struct StochasticJetEngine {
+    n: usize,
+    /// Order-≥2 term groups, ascending by order.
+    orders: Vec<OrderGroup>,
+    /// Combined exact first-order direction (order-1 terms + `b`), if any.
+    exact_dir: Option<Vec<f64>>,
+    /// Zeroth-order coefficient (`c·φ` at the output, exact).
+    c: Option<f64>,
+    /// Jet order `k` (max term order, ≥ 1).
+    k: usize,
+    samples: u32,
+    seed: u64,
+    sampling: DirectionSampling,
+    /// Canonical all-ones pattern basis the program compiles from.
+    pattern: DirectionBasis,
+    /// Kept for re-assembly in the builder methods.
+    terms: Vec<JetTerm>,
+    b: Option<Vec<f64>>,
+}
+
+/// Counter-style per-`(point, sample)` stream seed: sequential multiply-mix
+/// (repo idiom, cf. `prop::run_prop`), then [`Xoshiro256::new`]'s SplitMix
+/// expansion finishes the avalanche.
+fn stream_seed(seed: u64, point: u64, sample: u64) -> u64 {
+    let h = (seed ^ point.wrapping_mul(0x9E3779B97F4A7C15))
+        .wrapping_mul(0xD1B54A32D192ED03);
+    (h ^ sample).wrapping_mul(0x94D049BB133111EB)
+}
+
+impl StochasticJetEngine {
+    /// Build from explicit terms on `R^n`.
+    pub fn from_terms(
+        n: usize,
+        terms: Vec<JetTerm>,
+        sampling: DirectionSampling,
+        samples: u32,
+        seed: u64,
+    ) -> Self {
+        Self::assemble(n, terms, None, None, sampling, samples, seed)
+    }
+
+    /// Attach lower-order terms (`b·∇` merges into the exact first-order
+    /// direction; `c·φ` applies at the output).
+    pub fn with_lower_order(self, b: Option<Vec<f64>>, c: Option<f64>) -> Self {
+        Self::assemble(
+            self.n,
+            self.terms,
+            b,
+            c,
+            self.sampling,
+            self.samples,
+            self.seed,
+        )
+    }
+
+    /// Override the sample count (the accuracy↔latency dial; the
+    /// per-request serving knob lands here).
+    pub fn with_samples(self, samples: u32) -> Self {
+        Self::assemble(
+            self.n,
+            self.terms,
+            self.b,
+            self.c,
+            self.sampling,
+            samples,
+            self.seed,
+        )
+    }
+
+    fn assemble(
+        n: usize,
+        terms: Vec<JetTerm>,
+        b: Option<Vec<f64>>,
+        c: Option<f64>,
+        sampling: DirectionSampling,
+        samples: u32,
+        seed: u64,
+    ) -> Self {
+        assert!(n > 0, "input dimension must be positive");
+        assert!(samples >= 1, "sample count must be ≥ 1");
+        assert!(
+            !terms.is_empty() || b.is_some(),
+            "operator needs at least one term"
+        );
+        for t in &terms {
+            assert!(
+                t.axes.iter().all(|&a| a < n),
+                "term axis out of range: {:?} for N = {n}",
+                t.axes
+            );
+        }
+        let sampling = match sampling {
+            DirectionSampling::SparseRademacher { nnz } => DirectionSampling::SparseRademacher {
+                nnz: nnz.clamp(1, n),
+            },
+            s => s,
+        };
+        // Exact first-order carry: Σ order-1 coef·e_a + b in one direction.
+        let mut g = vec![0.0; n];
+        let mut has_first = false;
+        for t in terms.iter().filter(|t| t.order() == 1) {
+            g[t.axes[0]] += t.coef;
+            has_first = true;
+        }
+        if let Some(bv) = &b {
+            assert_eq!(bv.len(), n, "b length must be N");
+            for (gi, &bi) in g.iter_mut().zip(bv.iter()) {
+                *gi += bi;
+            }
+            has_first = true;
+        }
+        let exact_dir = has_first.then_some(g);
+        // Order-≥2 groups, ascending.
+        let mut orders: Vec<OrderGroup> = Vec::new();
+        for m in 2..=4 {
+            let group: Vec<(Vec<usize>, f64)> = terms
+                .iter()
+                .filter(|t| t.order() == m)
+                .map(|t| (t.axes.clone(), t.coef))
+                .collect();
+            if !group.is_empty() {
+                orders.push((m, group));
+            }
+        }
+        let mut k = orders.last().map(|&(m, _)| m).unwrap_or(0);
+        if exact_dir.is_some() {
+            k = k.max(1);
+        }
+        assert!(k >= 1, "operator needs at least one differential term");
+        let pattern = Self::pattern_basis(n, k, exact_dir.is_some(), &orders, samples);
+        Self {
+            n,
+            orders,
+            exact_dir,
+            c,
+            k,
+            samples,
+            seed,
+            sampling,
+            pattern,
+            terms,
+            b,
+        }
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Jet order `k`.
+    pub fn order(&self) -> usize {
+        self.k
+    }
+
+    pub fn samples(&self) -> u32 {
+        self.samples
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn sampling(&self) -> DirectionSampling {
+        self.sampling
+    }
+
+    pub fn constant(&self) -> Option<f64> {
+        self.c
+    }
+
+    /// Sampled polarization directions per sample
+    /// (`Σ_{orders m} 2^{m−1}`; zero for a purely first-order operator).
+    pub fn dirs_per_sample(&self) -> usize {
+        self.orders.iter().map(|&(m, _)| 1usize << (m - 1)).sum()
+    }
+
+    /// Total jet directions per point
+    /// (`exact carry + samples · dirs_per_sample`).
+    pub fn directions_per_point(&self) -> usize {
+        self.exact_dir.is_some() as usize + self.samples as usize * self.dirs_per_sample()
+    }
+
+    /// Structured batch-input validation (shared engine-wide gate).
+    pub fn validate_input(&self, graph: &Graph, x: &Tensor) -> Result<(), String> {
+        crate::tensor::ops::validate_batch_input(graph.input_dim(), x)
+    }
+
+    /// The cached jet program (compiled on first use from the pattern
+    /// basis; shared across every point and sample).
+    pub fn program(&self, graph: &Graph) -> Arc<JetProgram> {
+        global_jet_cache().get_or_compile(graph, &self.pattern, self.c.is_some())
+    }
+
+    // ---- basis assembly --------------------------------------------------
+
+    /// The canonical compile-time basis: all-ones directions, unit weights,
+    /// same `(t, k, weight-structure, has_c)` as every sampled per-point
+    /// basis — so one cache entry serves all points and samples.
+    fn pattern_basis(
+        n: usize,
+        k: usize,
+        has_exact: bool,
+        orders: &[OrderGroup],
+        samples: u32,
+    ) -> DirectionBasis {
+        let dirs_per_sample: usize = orders.iter().map(|&(m, _)| 1usize << (m - 1)).sum();
+        let t = has_exact as usize + samples as usize * dirs_per_sample;
+        let mut weights = Vec::with_capacity(t);
+        let mut row = 0usize;
+        if has_exact {
+            weights.push((row, 1usize, 1.0));
+            row += 1;
+        }
+        for _ in 0..samples {
+            for &(m, _) in orders {
+                for _ in 0..(1usize << (m - 1)) {
+                    weights.push((row, m, 1.0));
+                    row += 1;
+                }
+            }
+        }
+        DirectionBasis {
+            n,
+            order: k,
+            dirs: Tensor::from_vec(&[t, n], vec![1.0; t * n]),
+            weights,
+        }
+    }
+
+    /// Draw one isotropic direction from `rng`.
+    fn draw(&self, rng: &mut Xoshiro256) -> Vec<f64> {
+        let n = self.n;
+        match self.sampling {
+            DirectionSampling::Gaussian => (0..n).map(|_| rng.normal()).collect(),
+            DirectionSampling::SparseRademacher { nnz } => {
+                let mut u = vec![0.0; n];
+                let v = (n as f64 / nnz as f64).sqrt();
+                let mut chosen: Vec<usize> = Vec::with_capacity(nnz);
+                while chosen.len() < nnz {
+                    let i = rng.below(n);
+                    if !chosen.contains(&i) {
+                        chosen.push(i);
+                        u[i] = if rng.bernoulli(0.5) { v } else { -v };
+                    }
+                }
+                u
+            }
+        }
+    }
+
+    /// Sampled per-point basis. The weight list has the exact same
+    /// `(direction, order)` structure as the pattern basis (zero-valued
+    /// entries retained), so the compiled program's contraction cost stays
+    /// exact. Pure function of `(seed, point_index)`.
+    fn point_basis(&self, point_index: u64) -> DirectionBasis {
+        let n = self.n;
+        let t = self.directions_per_point();
+        let s_count = self.samples as usize;
+        let inv_s = 1.0 / s_count as f64;
+        let mut dirs = vec![0.0; t * n];
+        let mut weights = Vec::with_capacity(t);
+        let mut row = 0usize;
+        if let Some(g) = &self.exact_dir {
+            dirs[..n].copy_from_slice(g);
+            weights.push((0, 1usize, 1.0));
+            row = 1;
+        }
+        for s in 0..s_count {
+            let mut rng = Xoshiro256::new(stream_seed(self.seed, point_index, s as u64));
+            for (m, group) in &self.orders {
+                let m = *m;
+                let u: Vec<Vec<f64>> = (0..m).map(|_| self.draw(&mut rng)).collect();
+                // Aₘ = Σ coef·Π_l u_l[α_l] (raw axis assignment is valid
+                // because Tₘ is symmetric).
+                let mut a_m = 0.0;
+                for (axes, coef) in group {
+                    let mut p = *coef;
+                    for (l, &ax) in axes.iter().enumerate() {
+                        p *= u[l][ax];
+                    }
+                    a_m += p;
+                }
+                // Sign-canonicalized polarization: ε₁ = +1 fixed, the two
+                // half-orbits contribute equally, so each of the 2^{m−1}
+                // directions carries 2·2⁻ᵐ·(Πε)·Aₘ / S.
+                let scale = a_m * inv_s * (2f64).powi(1 - m as i32);
+                for eps in 0..(1usize << (m - 1)) {
+                    let d = &mut dirs[row * n..(row + 1) * n];
+                    d.copy_from_slice(&u[0]);
+                    let mut parity = 1.0;
+                    for (l, ul) in u.iter().enumerate().skip(1) {
+                        if (eps >> (l - 1)) & 1 == 1 {
+                            parity = -parity;
+                            for (di, &vi) in d.iter_mut().zip(ul.iter()) {
+                                *di -= vi;
+                            }
+                        } else {
+                            for (di, &vi) in d.iter_mut().zip(ul.iter()) {
+                                *di += vi;
+                            }
+                        }
+                    }
+                    weights.push((row, m, parity * scale));
+                    row += 1;
+                }
+            }
+        }
+        debug_assert_eq!(row, t);
+        DirectionBasis {
+            n,
+            order: self.k,
+            dirs: Tensor::from_vec(&[t, n], dirs),
+            weights,
+        }
+    }
+
+    // ---- execution -------------------------------------------------------
+
+    /// Estimate `L[φ]` on `x: [batch, N]` (serial point loop; point `b`
+    /// uses global index `b`).
+    pub fn compute(&self, graph: &Graph, x: &Tensor) -> StochasticJetResult {
+        let program = self.program(graph);
+        let panels = plan::pack_panels(program.steps(), graph);
+        self.compute_points(&program, graph, x, &panels, 0)
+    }
+
+    /// [`Self::compute`] sharded across `pool` in `shard_rows`-row chunks.
+    ///
+    /// Determinism contract: shard boundaries depend only on the batch size
+    /// and `shard_rows`; each point's direction streams are keyed by its
+    /// **global** index (`range.start + i`); shard results concatenate in
+    /// shard order — so the result is bit-identical across thread counts
+    /// and shard decompositions, and matches the unsharded [`Self::compute`].
+    pub fn compute_sharded(
+        &self,
+        graph: &Graph,
+        x: &Tensor,
+        pool: &Pool,
+        shard_rows: usize,
+    ) -> StochasticJetResult {
+        let batch = x.dims()[0];
+        let n = x.dims()[1];
+        let program = self.program(graph);
+        let ranges = parallel::split_rows(batch, shard_rows);
+        let panels = plan::pack_panels(program.steps(), graph);
+        if ranges.len() <= 1 {
+            let serial = || self.compute_points(&program, graph, x, &panels, 0);
+            if pool.threads() == 1 {
+                return parallel::with_serial_guard(serial);
+            }
+            return serial();
+        }
+        let shards = pool.run_sharded(ranges, |_, r| {
+            let rows = r.end - r.start;
+            let xs = Tensor::from_vec(&[rows, n], x.data()[r.start * n..r.end * n].to_vec());
+            self.compute_points(&program, graph, &xs, &panels, r.start as u64)
+        });
+        merge_stochastic_shards(shards, batch)
+    }
+
+    /// Serial per-point loop: each point gets its own sampled basis and a
+    /// `rows = 1` execution of the shared program (the program's
+    /// `input_step` seeds one basis for all batch rows, so per-point random
+    /// directions require per-point execution).
+    fn compute_points(
+        &self,
+        program: &JetProgram,
+        graph: &Graph,
+        x: &Tensor,
+        panels: &PanelSet,
+        base_index: u64,
+    ) -> StochasticJetResult {
+        assert_eq!(x.rank(), 2, "input must be [batch, N]");
+        let batch = x.dims()[0];
+        let n = x.dims()[1];
+        assert_eq!(n, self.n, "input dim mismatch");
+        let s_count = self.samples as usize;
+        let k = self.k;
+        let d_w = self.dirs_per_sample();
+        let out_d = graph.node(graph.output()).dim;
+
+        let mut values = Tensor::zeros(&[batch, out_d]);
+        let mut estimates = Tensor::zeros(&[batch, out_d]);
+        let mut variance = Tensor::zeros(&[batch, out_d]);
+        let mut std_error = Tensor::zeros(&[batch, out_d]);
+        let mut cost = Cost::zero();
+        let mut peak = 0u64;
+        let mut x_s = vec![0.0; out_d];
+        let key = SlabKey {
+            program: program.key().fingerprint,
+            rows: 1,
+        };
+
+        for b in 0..batch {
+            let basis = self.point_basis(base_index + b as u64);
+            let xs = Tensor::from_vec(&[1, n], x.row(b).to_vec());
+            let res = with_program_slab(key, |slab| {
+                execute_jet(program, graph, &basis, self.c, &xs, panels, slab)
+            });
+            values.row_mut(b).copy_from_slice(res.values.row(0));
+            estimates
+                .row_mut(b)
+                .copy_from_slice(res.operator_values.row(0));
+            cost += res.cost;
+            peak = peak.max(res.peak_jet_bytes);
+
+            // Per-sample estimates Xₛ = Rₛ + exact part, recomputed from
+            // the output jet: the mean of the Xₛ is the estimate (up to
+            // float-summation order) and their Bessel-corrected spread is
+            // the variance report.
+            if s_count > 1 && d_w > 0 {
+                let jet = res.out_jet.data.data();
+                let base_w = self.exact_dir.is_some() as usize;
+                // Exact contribution shared by every sample.
+                let mut exact = vec![0.0; out_d];
+                if self.exact_dir.is_some() {
+                    let (row, m, w) = basis.weights[0];
+                    let r = row * (k + 1) + m;
+                    for (e, &j) in exact.iter_mut().zip(jet[r * out_d..(r + 1) * out_d].iter())
+                    {
+                        *e += w * j;
+                    }
+                }
+                if let Some(c) = self.c {
+                    for (e, &v) in exact.iter_mut().zip(res.values.row(0).iter()) {
+                        *e += c * v;
+                    }
+                }
+                let mut mean = vec![0.0; out_d];
+                let mut m2 = vec![0.0; out_d];
+                let est = estimates.row(b);
+                for s in 0..s_count {
+                    x_s.copy_from_slice(&exact);
+                    for &(row, m, w) in &basis.weights[base_w + s * d_w..base_w + (s + 1) * d_w]
+                    {
+                        let r = row * (k + 1) + m;
+                        // Weights carry 1/S; the per-sample value undoes it.
+                        let ws = w * s_count as f64;
+                        for (xo, &j) in
+                            x_s.iter_mut().zip(jet[r * out_d..(r + 1) * out_d].iter())
+                        {
+                            *xo += ws * j;
+                        }
+                    }
+                    for o in 0..out_d {
+                        mean[o] += x_s[o];
+                        let dev = x_s[o] - est[o];
+                        m2[o] += dev * dev;
+                    }
+                }
+                let var_row = variance.row_mut(b);
+                for o in 0..out_d {
+                    var_row[o] = m2[o] / (s_count - 1) as f64;
+                }
+                let se_row = std_error.row_mut(b);
+                for o in 0..out_d {
+                    se_row[o] = (var_row[o] / s_count as f64).sqrt();
+                }
+            }
+        }
+        StochasticJetResult {
+            values,
+            operator_values: estimates,
+            variance,
+            std_error,
+            samples: self.samples,
+            cost,
+            peak_jet_bytes: peak,
+        }
+    }
+}
+
+/// Concatenate per-shard results in shard (= batch) order; cost sums, peak
+/// is the per-shard maximum.
+fn merge_stochastic_shards(
+    shards: Vec<StochasticJetResult>,
+    batch: usize,
+) -> StochasticJetResult {
+    let d = shards[0].values.dims()[1];
+    let samples = shards[0].samples;
+    let mut values = Tensor::zeros(&[batch, d]);
+    let mut est = Tensor::zeros(&[batch, d]);
+    let mut var = Tensor::zeros(&[batch, d]);
+    let mut se = Tensor::zeros(&[batch, d]);
+    let mut cost = Cost::zero();
+    let mut peak = 0u64;
+    let mut row = 0usize;
+    for s in shards {
+        let rows = s.values.dims()[0];
+        values.data_mut()[row * d..(row + rows) * d].copy_from_slice(s.values.data());
+        est.data_mut()[row * d..(row + rows) * d].copy_from_slice(s.operator_values.data());
+        var.data_mut()[row * d..(row + rows) * d].copy_from_slice(s.variance.data());
+        se.data_mut()[row * d..(row + rows) * d].copy_from_slice(s.std_error.data());
+        cost += s.cost;
+        peak = peak.max(s.peak_jet_bytes);
+        row += rows;
+    }
+    StochasticJetResult {
+        values,
+        operator_values: est,
+        variance: var,
+        std_error: se,
+        samples,
+        cost,
+        peak_jet_bytes: peak,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{builder::random_layers, mlp_graph, Act};
+    use crate::jet::basis::laplacian_terms;
+    use crate::jet::JetEngine;
+
+    fn fixture(d: usize) -> (Graph, Tensor) {
+        let mut rng = Xoshiro256::new(71);
+        let g = mlp_graph(&random_layers(&[d, 8, 1], &mut rng), Act::Tanh);
+        let x = Tensor::randn(&[3, d], &mut rng).scale(0.5);
+        (g, x)
+    }
+
+    #[test]
+    fn first_order_only_is_exact_with_zero_variance() {
+        let (g, x) = fixture(3);
+        let terms = vec![JetTerm::new(&[0], 0.7), JetTerm::new(&[2], -1.1)];
+        let eng = StochasticJetEngine::from_terms(
+            3,
+            terms.clone(),
+            DirectionSampling::Gaussian,
+            4,
+            9,
+        );
+        let got = eng.compute(&g, &x);
+        let exact = JetEngine::new(DirectionBasis::from_terms(3, &terms, None)).compute(&g, &x);
+        for b in 0..3 {
+            assert!(
+                (got.operator_values.at(b, 0) - exact.operator_values.at(b, 0)).abs() < 1e-12
+            );
+            assert_eq!(got.variance.at(b, 0), 0.0);
+            assert_eq!(got.std_error.at(b, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn laplacian_estimate_converges_with_samples() {
+        let (g, x) = fixture(4);
+        let terms = laplacian_terms(4, 1.0);
+        let exact = JetEngine::new(DirectionBasis::from_terms(4, &terms, None)).compute(&g, &x);
+        for sampling in [
+            DirectionSampling::Gaussian,
+            DirectionSampling::SparseRademacher { nnz: 2 },
+        ] {
+            let eng =
+                StochasticJetEngine::from_terms(4, terms.clone(), sampling, 4096, 17);
+            let got = eng.compute(&g, &x);
+            for b in 0..3 {
+                let want = exact.operator_values.at(b, 0);
+                let se = got.std_error.at(b, 0);
+                assert!(
+                    (got.operator_values.at(b, 0) - want).abs() < 6.0 * se + 1e-6,
+                    "{sampling:?} row {b}: {} vs {want} (se {se})",
+                    got.operator_values.at(b, 0)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_is_bitwise_identical_across_threads_and_shard_rows() {
+        let (g, x) = fixture(3);
+        let eng = StochasticJetEngine::from_terms(
+            3,
+            laplacian_terms(3, 1.0),
+            DirectionSampling::SparseRademacher { nnz: 2 },
+            16,
+            5,
+        )
+        .with_lower_order(Some(vec![0.3, -0.2, 0.1]), Some(0.5));
+        let base = eng.compute(&g, &x);
+        for threads in [1usize, 2, 4, 8] {
+            for shard_rows in [1usize, 2, 64] {
+                let pool = Pool::new(threads);
+                let got = eng.compute_sharded(&g, &x, &pool, shard_rows);
+                assert_eq!(got.operator_values.data(), base.operator_values.data());
+                assert_eq!(got.variance.data(), base.variance.data());
+                assert_eq!(got.values.data(), base.values.data());
+            }
+        }
+    }
+
+    #[test]
+    fn values_are_exact_not_estimated() {
+        let (g, x) = fixture(3);
+        let eng = StochasticJetEngine::from_terms(
+            3,
+            laplacian_terms(3, 1.0),
+            DirectionSampling::Gaussian,
+            2,
+            1,
+        );
+        let got = eng.compute(&g, &x);
+        let eval = g.eval(&x);
+        for b in 0..3 {
+            assert_eq!(got.values.at(b, 0), eval.at(b, 0));
+        }
+    }
+
+    #[test]
+    fn pattern_basis_structure_matches_point_basis() {
+        let eng = StochasticJetEngine::from_terms(
+            3,
+            crate::jet::biharmonic_terms(3, 1.0),
+            DirectionSampling::Gaussian,
+            3,
+            2,
+        );
+        let p = eng.point_basis(0);
+        assert_eq!(p.dirs.dims(), eng.pattern.dirs.dims());
+        assert_eq!(p.order, eng.pattern.order);
+        assert_eq!(p.weights.len(), eng.pattern.weights.len());
+        for (a, b) in p.weights.iter().zip(eng.pattern.weights.iter()) {
+            assert_eq!((a.0, a.1), (b.0, b.1), "weight structure must match");
+        }
+        // Different points draw different directions.
+        let q = eng.point_basis(1);
+        assert_ne!(p.dirs.data(), q.dirs.data());
+    }
+}

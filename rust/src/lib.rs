@@ -158,6 +158,45 @@
 //! across 1/2/4/8 threads — `rust/tests/jet_equivalence.rs`), serving via
 //! `ModelServer::spawn_jet`, and `dof bench grid --order 4`.
 //!
+//! ## Stochastic Taylor jets (STDE)
+//!
+//! The exact engines pay `O(N)` (DOF) or `O(d²)` (polarized order-4 jets)
+//! directions per point. For high-dimensional operators the
+//! [`jet::StochasticJetEngine`] trades exactness for dimension-free cost:
+//! it pushes `S` *sampled* direction groups per point through the **same
+//! compiled jet programs** (a direction-seeding and contraction policy
+//! over the existing rails — no new arithmetic, preserving the
+//! single-kernel invariant) and returns an **unbiased estimate** of the
+//! contraction.
+//!
+//! * **Estimator.** For each order-`m` term group `Tₘ·Aₘ` (the `m`-th
+//!   directional-derivative tensor contracted with the operator's
+//!   coefficient tensor), draw `m` independent isotropic directions
+//!   `u₁..uₘ` (`E[u uᵀ] = I`; Gaussian or sparse-Rademacher — see
+//!   [`jet::DirectionSampling`]) and evaluate `Tₘ(u₁,…,uₘ) · Aₘ(u₁,…,uₘ)`
+//!   via polarization over `2^{m−1}` signed combinations. Independence of
+//!   the `uₗ` makes `E[Tₘ(u₁..uₘ)·Aₘ(u₁..uₘ)] = Tₘ·Aₘ` exactly; averaging
+//!   `S` i.i.d. samples gives the estimate, and their Bessel-corrected
+//!   spread gives an exact per-point `variance` / `std_error` report.
+//!   First-order terms and `c·φ` are carried **exactly** (one
+//!   deterministic direction), and `φ` itself is never estimated — the
+//!   value row is bitwise identical to the exact engines.
+//! * **Determinism.** Direction streams are counter-derived from
+//!   `(seed, global point index, sample index)` — no shared mutable RNG —
+//!   so a fixed seed is bit-identical across 1/2/4/8 threads and every
+//!   shard decomposition (`compute_sharded` keys each point by its global
+//!   batch index), and estimates replay exactly from the telemetry-logged
+//!   seed. `rust/tests/stochastic_convergence.rs` pins unbiasedness over
+//!   the fuzz families, the ~1/√S error law, stream determinism, and
+//!   variance honesty; the engine is the *fourth participant* in
+//!   `cross_engine_fuzz.rs` (`DOF_STDE_SAMPLES` scales the scheduled job).
+//! * **Serving & bench.** `ModelServer::spawn_stochastic` serves estimates
+//!   behind the router with a per-request `samples` override
+//!   ([`coordinator::EvalRequest::samples`]; the batcher never mixes
+//!   sample groups in one cut); `dof serve --stochastic` registers the
+//!   backend, and the schema-v7 `dof bench grid` report carries a
+//!   variance-vs-samples sweep against the exact DOF engine.
+//!
 //! ## Parallel execution & the serving runtime
 //!
 //! The hot path scales across cores without giving up exactness, and the

@@ -29,8 +29,9 @@ use dof::coordinator::{
     ScaleDirection, ServeConfig, TickClock,
 };
 use dof::graph::{Act, Graph};
+use dof::jet::DirectionSampling;
 use dof::nn::{Mlp, MlpSpec};
-use dof::obs::{parse_spans, render_tree, Registry, Tracer};
+use dof::obs::{parse_spans, render_tree, Registry, StochasticConfig, Tracer};
 use dof::operators::{CoeffSpec, HigherOrderOperator, HigherOrderSpec, Operator};
 use dof::parallel::{self, Pool};
 use dof::pde::trainer::{PinnConfig, PinnTrainer};
@@ -125,6 +126,20 @@ USAGE:
                                           depth <= N (default 1)
             [--autoscale-cooldown N]      ticks between scale events per
                                           model (default 16)
+            [--stochastic]                rust engine: also register the
+                                          stochastic (STDE) backend — an
+                                          unbiased sampled estimator of the
+                                          same operator through the jet
+                                          rails; O(samples) dirs per point
+                                          instead of O(N) / O(N²)
+            [--stde-samples N]            STDE default sample count per
+                                          point (default 64)
+            [--stde-nnz K]                K > 0: sparse-Rademacher sampling
+                                          with K nonzero coords per
+                                          direction (default 0 = Gaussian)
+            [--stde-request-samples N]    clients override the sample count
+                                          per request on the stochastic
+                                          model (0 = use backend default)
             [--telemetry PATH]            trace every request and export the
                                           telemetry registry: PATH (JSON,
                                           periodic + final on drain) and
@@ -591,8 +606,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // the router's per-model queue-depth/occupancy/robustness metrics are
     // reported at the end (the autoscaling signals).
     let mut router = Router::with_config(router_cfg);
+    let mut stochastic_cfgs = Vec::new();
     match args.get_or("engine", default_engine).as_str() {
-        "rust" => register_rust_models(args, &mut router, &clock, &tracer)?,
+        "rust" => stochastic_cfgs = register_rust_models(args, &mut router, &clock, &tracer)?,
         "xla" => {
             let dir = args.get_or("artifacts", "artifacts");
             let artifact = args.get_or("artifact", "dof_mlp_elliptic");
@@ -657,6 +673,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         _ => None,
     };
+    // Per-request sample override, exercised against the stochastic model
+    // only: the router forwards it through retry/failover unchanged.
+    let stde_request_samples = args.u64_or("stde-request-samples", 0) as u32;
     let t0 = std::time::Instant::now();
     let threads: Vec<_> = (0..clients)
         .map(|c| {
@@ -668,6 +687,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             std::thread::spawn(move || -> Result<(usize, usize)> {
                 let mut rng = Xoshiro256::new(100 + c as u64);
                 let width = rc.width();
+                let samples = (stde_request_samples > 0 && rc.model() == "stochastic")
+                    .then_some(stde_request_samples);
                 let (mut done, mut failed) = (0, 0);
                 for _ in 0..per_client {
                     let pts: Vec<f32> =
@@ -675,7 +696,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     // With shedding/deadline knobs on, per-request failures
                     // are expected operation, not demo failure: count them,
                     // the router snapshot classifies them exactly.
-                    match rc.eval_blocking(pts) {
+                    match rc.eval_blocking_with_samples(pts, samples) {
                         Ok(resp) => {
                             anyhow::ensure!(resp.phi.len() == rows, "short response");
                             done += 1;
@@ -803,6 +824,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             reg.add_model(&m.model, m.server.clone());
             reg.add_router(m);
         }
+        for cfg in &stochastic_cfgs {
+            reg.add_stochastic(cfg.clone());
+        }
         reg.add_cache("plan", dof::plan::global_cache().stats());
         reg.add_cache("jet", dof::jet::global_jet_cache().stats());
         reg.add_cache("hessian", dof::plan::hessian::global_hessian_cache().stats());
@@ -865,7 +889,7 @@ fn register_rust_models(
     router: &mut Router,
     clock: &TickClock,
     tracer: &Option<Arc<Tracer>>,
-) -> Result<()> {
+) -> Result<Vec<StochasticConfig>> {
     let order = args.usize_or("order", 2);
     let multi = args.flag("multi");
     let n = args.usize_or("n", if order == 4 { 8 } else { 64 });
@@ -1045,5 +1069,90 @@ fn register_rust_models(
         };
         router.set_replica_factory("jet", Box::new(factory))?;
     }
-    Ok(())
+    let mut stochastic_cfgs = Vec::new();
+    if args.flag("stochastic") {
+        // The STDE backend: the same contraction family as the exact
+        // engines above, but estimated from `samples` random direction
+        // groups per point — jet cost scales with the sample count, not
+        // with N (order 2) or N² (order 4). Per-point direction streams
+        // are counter-derived from (seed, point index, sample index), so
+        // responses are bit-identical at any thread count.
+        let samples = args.u64_or("stde-samples", 64) as u32;
+        if samples == 0 {
+            return Err(anyhow!("--stde-samples must be >= 1"));
+        }
+        let nnz = args.usize_or("stde-nnz", 0);
+        let sampling = if nnz > 0 {
+            DirectionSampling::SparseRademacher { nnz }
+        } else {
+            DirectionSampling::Gaussian
+        };
+        let (sn, engine, what) = if order == 4 {
+            let op = HigherOrderOperator::from_spec(HigherOrderSpec::Biharmonic { d: n });
+            (n, op.stochastic_engine(sampling, samples, seed), "Δ² (biharmonic)")
+        } else {
+            let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed });
+            (n, op.stochastic_engine(sampling, samples, seed), "elliptic Σ aᵢⱼ ∂ᵢ∂ⱼ")
+        };
+        let graph = mlp(sn).to_graph();
+        let t0 = std::time::Instant::now();
+        let program = engine.program(&graph);
+        let sampling_desc = match sampling {
+            DirectionSampling::Gaussian => "gaussian".to_string(),
+            DirectionSampling::SparseRademacher { nnz } => {
+                format!("sparse-rademacher({nnz})")
+            }
+        };
+        println!(
+            "[stochastic] rust STDE engine for {what}: N={sn}, {} samples × {} \
+             dirs/sample ({} dirs/point total, {sampling_desc}), seed {seed}",
+            engine.samples(),
+            engine.dirs_per_sample(),
+            engine.directions_per_point(),
+        );
+        println!(
+            "[stochastic] compiled pattern program in {}: {} steps ({} fused), \
+             {} slab scalars/row",
+            fmt_duration(t0.elapsed().as_secs_f64()),
+            program.steps().len(),
+            program.fused_steps(),
+            program.slab_per_row(),
+        );
+        stochastic_cfgs.push(StochasticConfig {
+            model: "stochastic".to_string(),
+            samples,
+            seed,
+            sampling: sampling_desc,
+            dirs_per_point: engine.directions_per_point(),
+        });
+        let spawn = |graph: Graph, engine: dof::jet::StochasticJetEngine| {
+            ModelServer::spawn_stochastic_cfg(
+                graph,
+                engine,
+                policy,
+                pool,
+                parallel::DEFAULT_SHARD_ROWS,
+                serve_cfg("stochastic"),
+            )
+        };
+        router.register("stochastic", spawn(graph.clone(), engine.clone()));
+        for _ in 1..replicas {
+            router.add_replica("stochastic", spawn(graph.clone(), engine.clone()))?;
+        }
+        let fgraph = graph.clone();
+        let fcfg = serve_cfg("stochastic");
+        let fengine = engine.clone();
+        let factory = move || {
+            ModelServer::spawn_stochastic_cfg(
+                fgraph.clone(),
+                fengine.clone(),
+                policy,
+                pool,
+                parallel::DEFAULT_SHARD_ROWS,
+                fcfg.clone(),
+            )
+        };
+        router.set_replica_factory("stochastic", Box::new(factory))?;
+    }
+    Ok(stochastic_cfgs)
 }

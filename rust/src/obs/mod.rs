@@ -34,6 +34,6 @@ pub mod span;
 pub mod trace_view;
 
 pub use profile::{StepProfiler, StepRecord};
-pub use registry::{ProfileSummary, Registry, TELEMETRY_SCHEMA};
+pub use registry::{ProfileSummary, Registry, StochasticConfig, TELEMETRY_SCHEMA};
 pub use span::{Span, SpanKind, TraceContext, Tracer};
 pub use trace_view::{parse_spans, render_tree};

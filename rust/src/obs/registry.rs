@@ -31,6 +31,23 @@ use super::span::{Span, Tracer};
 /// Version tag of the JSON document layout.
 pub const TELEMETRY_SCHEMA: u32 = 1;
 
+/// Static configuration of one stochastic (STDE) backend, exported so a
+/// telemetry dump is self-describing: an estimate in the dump can be traced
+/// back to the sample count / sampling law / seed that produced it.
+#[derive(Debug, Clone)]
+pub struct StochasticConfig {
+    /// Model label the backend is registered under.
+    pub model: String,
+    /// Default directions-per-group sample count.
+    pub samples: u32,
+    /// Base seed of the counter-derived per-point direction streams.
+    pub seed: u64,
+    /// Human-readable sampling law ("gaussian" or "sparse-rademacher(nnz)").
+    pub sampling: String,
+    /// Total direction count pushed per point (exact carry + sampled).
+    pub dirs_per_point: usize,
+}
+
 /// Roll-up of one program's profiled execution(s).
 #[derive(Debug, Clone)]
 pub struct ProfileSummary {
@@ -57,6 +74,7 @@ pub struct Registry {
     dropped_spans: u64,
     profiles: Vec<(String, ProfileSummary)>,
     autoscaler: Option<AutoscalerSnapshot>,
+    stochastic: Vec<StochasticConfig>,
 }
 
 impl Registry {
@@ -79,6 +97,11 @@ impl Registry {
     /// counters plus the full tick-stamped event log).
     pub fn set_autoscaler(&mut self, snap: AutoscalerSnapshot) {
         self.autoscaler = Some(snap);
+    }
+
+    /// Record one stochastic backend's static estimator configuration.
+    pub fn add_stochastic(&mut self, cfg: StochasticConfig) {
+        self.stochastic.push(cfg);
     }
 
     /// Record one keyed-cache counter set under `name` (plan, jet, hessian).
@@ -148,6 +171,11 @@ impl Registry {
                 a.scale_downs,
                 events.join(", "),
             ));
+        }
+
+        if !self.stochastic.is_empty() {
+            let cfgs: Vec<String> = self.stochastic.iter().map(stochastic_json).collect();
+            s.push_str(&format!("  \"stochastic\": [{}],\n", cfgs.join(", ")));
         }
 
         s.push_str("  \"caches\": {\n");
@@ -222,6 +250,7 @@ impl Registry {
         s.push_str("# TYPE dof_rows_total counter\n");
         s.push_str("# TYPE dof_batches_total counter\n");
         s.push_str("# TYPE dof_shed_total counter\n");
+        s.push_str("# TYPE dof_dropped_latency_samples_total counter\n");
         s.push_str("# TYPE dof_latency_seconds gauge\n");
         s.push_str("# TYPE dof_queue_wait_seconds gauge\n");
         for (label, m) in &self.models {
@@ -229,6 +258,10 @@ impl Registry {
             s.push_str(&format!("dof_rows_total{{model=\"{l}\"}} {}\n", m.rows));
             s.push_str(&format!("dof_batches_total{{model=\"{l}\"}} {}\n", m.batches));
             s.push_str(&format!("dof_shed_total{{model=\"{l}\"}} {}\n", m.shed));
+            s.push_str(&format!(
+                "dof_dropped_latency_samples_total{{model=\"{l}\"}} {}\n",
+                m.dropped_latency_samples
+            ));
             for (q, v) in [
                 ("0.5", m.p50_latency),
                 ("0.95", m.p95_latency),
@@ -322,7 +355,8 @@ fn metrics_json(m: &MetricsSnapshot) -> String {
          \"p95_exec_latency\": {}, \"mean_queue_wait\": {}, \"p95_queue_wait\": {}, \
          \"batch_efficiency\": {}, \"shards\": {}, \"sharded_batches\": {}, \
          \"parallel_occupancy\": {}, \"accepted\": {}, \"shed\": {}, \"invalid\": {}, \
-         \"deadline_expired\": {}, \"engine_faults\": {}}}",
+         \"deadline_expired\": {}, \"engine_faults\": {}, \
+         \"dropped_latency_samples\": {}}}",
         m.requests,
         m.received,
         m.rows,
@@ -345,6 +379,19 @@ fn metrics_json(m: &MetricsSnapshot) -> String {
         m.invalid,
         m.deadline_expired,
         m.engine_faults,
+        m.dropped_latency_samples,
+    )
+}
+
+fn stochastic_json(c: &StochasticConfig) -> String {
+    format!(
+        "{{\"model\": \"{}\", \"samples\": {}, \"seed\": {}, \
+         \"sampling\": \"{}\", \"dirs_per_point\": {}}}",
+        esc(&c.model),
+        c.samples,
+        c.seed,
+        esc(&c.sampling),
+        c.dirs_per_point,
     )
 }
 
@@ -540,6 +587,35 @@ mod tests {
         let text = reg.to_prometheus();
         assert!(text.contains("dof_autoscaler_scale_ups_total 2"));
         assert!(text.contains("dof_autoscaler_scale_downs_total 1"));
+    }
+
+    #[test]
+    fn stochastic_section_and_dropped_samples_render() {
+        let m = Metrics::new();
+        m.record_request(4, 0.001);
+        m.record_request(4, f64::NAN); // dropped, counted exactly
+        let mut reg = Registry::new();
+        reg.add_model("stochastic", m.snapshot());
+        reg.add_stochastic(StochasticConfig {
+            model: "stochastic".to_string(),
+            samples: 64,
+            seed: 42,
+            sampling: "sparse-rademacher(4)".to_string(),
+            dirs_per_point: 129,
+        });
+        let json = reg.to_json();
+        assert!(json.contains("\"dropped_latency_samples\": 1"));
+        assert!(json.contains(
+            "\"stochastic\": [{\"model\": \"stochastic\", \"samples\": 64, \
+             \"seed\": 42, \"sampling\": \"sparse-rademacher(4)\", \
+             \"dirs_per_point\": 129}]"
+        ));
+        let open = json.matches('{').count();
+        let close = json.matches('}').count();
+        assert_eq!(open, close);
+        let text = reg.to_prometheus();
+        assert!(text
+            .contains("dof_dropped_latency_samples_total{model=\"stochastic\"} 1"));
     }
 
     #[test]

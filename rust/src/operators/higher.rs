@@ -12,7 +12,9 @@
 use std::sync::Arc;
 
 use crate::graph::Graph;
-use crate::jet::{self, DirectionBasis, JetEngine, JetProgram, JetTerm};
+use crate::jet::{
+    self, DirectionBasis, DirectionSampling, JetEngine, JetProgram, JetTerm, StochasticJetEngine,
+};
 
 use super::coeff::HigherOrderSpec;
 
@@ -97,6 +99,18 @@ impl HigherOrderOperator {
     /// internally.
     pub fn jet_program(&self, graph: &Graph) -> Arc<JetProgram> {
         jet::global_jet_cache().get_or_compile(graph, &self.basis, self.c.is_some())
+    }
+
+    /// Configured stochastic (STDE) engine: unbiased sampled estimate of
+    /// the same contraction, with the exact engines above as its oracle.
+    pub fn stochastic_engine(
+        &self,
+        sampling: DirectionSampling,
+        samples: u32,
+        seed: u64,
+    ) -> StochasticJetEngine {
+        StochasticJetEngine::from_terms(self.n, self.terms.clone(), sampling, samples, seed)
+            .with_lower_order(self.b.clone(), self.c)
     }
 }
 

@@ -29,6 +29,7 @@ use std::sync::Arc;
 
 use crate::autodiff::{DofEngine, HessianEngine};
 use crate::graph::Graph;
+use crate::jet::{terms_from_symmetric, DirectionSampling, StochasticJetEngine};
 use crate::linalg::LdlDecomposition;
 use crate::plan::{self, OperatorProgram, PlanOptions};
 use crate::tensor::Tensor;
@@ -102,6 +103,19 @@ impl Operator {
     /// Configured Hessian-baseline engine.
     pub fn hessian_engine(&self) -> HessianEngine {
         HessianEngine::new(&self.a).with_lower_order(self.b.clone(), self.c)
+    }
+
+    /// Configured stochastic (STDE) engine over the same contraction
+    /// (`A` lowered to jet terms via [`terms_from_symmetric`]); the exact
+    /// DOF/Hessian engines are its convergence oracle.
+    pub fn stochastic_engine(
+        &self,
+        sampling: DirectionSampling,
+        samples: u32,
+        seed: u64,
+    ) -> StochasticJetEngine {
+        StochasticJetEngine::from_terms(self.n(), terms_from_symmetric(&self.a), sampling, samples, seed)
+            .with_lower_order(self.b.clone(), self.c)
     }
 
     /// The compile-once DOF program for `graph`, fetched from the keyed

@@ -70,6 +70,8 @@ pub struct LatencyHistogram {
     counts: Vec<u64>,
     total: u64,
     sum: f64,
+    /// Non-finite samples rejected at [`Self::record`] (exact count).
+    dropped_samples: u64,
 }
 
 impl Default for LatencyHistogram {
@@ -95,10 +97,20 @@ impl LatencyHistogram {
             counts: vec![0; n + 1],
             total: 0,
             sum: 0.0,
+            dropped_samples: 0,
         }
     }
 
+    /// Record one sample. Non-finite samples (NaN / ±inf from a poisoned
+    /// timing source) are rejected and counted in
+    /// [`Self::dropped_samples`] — the same NaN-safe stance
+    /// [`percentile_sorted`] takes — so a single bad sample can never make
+    /// `mean()` NaN forever or leave telemetry JSON non-round-trippable.
     pub fn record(&mut self, seconds: f64) {
+        if !seconds.is_finite() {
+            self.dropped_samples += 1;
+            return;
+        }
         let idx = self
             .bounds
             .iter()
@@ -111,6 +123,11 @@ impl LatencyHistogram {
 
     pub fn count(&self) -> u64 {
         self.total
+    }
+
+    /// Exact count of non-finite samples rejected by [`Self::record`].
+    pub fn dropped_samples(&self) -> u64 {
+        self.dropped_samples
     }
 
     pub fn mean(&self) -> f64 {
@@ -133,16 +150,25 @@ impl LatencyHistogram {
         }
         self.total += other.total;
         self.sum += other.sum;
+        self.dropped_samples += other.dropped_samples;
     }
 
-    /// Approximate quantile from bucket boundaries.
+    /// Approximate quantile from bucket boundaries: the upper bound of the
+    /// bucket holding the `⌈q·total⌉`-th sample. The target rank is clamped
+    /// to ≥ 1, so `q = 0.0` reports the first *non-empty* bucket (the
+    /// minimum sample's bucket) instead of `bounds[0]` — a rank of 0 would
+    /// otherwise satisfy `cum >= target` at the very first bucket even
+    /// when every sample sits in high buckets.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.total == 0 {
             return 0.0;
         }
-        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let target = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
         let mut cum = 0;
         for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
             cum += c;
             if cum >= target {
                 return if i < self.bounds.len() {
@@ -156,8 +182,17 @@ impl LatencyHistogram {
     }
 }
 
-/// Human-friendly duration formatting (ns/µs/ms/s).
+/// Human-friendly duration formatting (ns/µs/ms/s). Negative durations
+/// (clock skew between two timestamps) keep their sign in the natural
+/// magnitude unit, and non-finite inputs are printed verbatim — neither
+/// falls through to the `< 1e-6` branch as nanoseconds.
 pub fn fmt_duration(seconds: f64) -> String {
+    if !seconds.is_finite() {
+        return format!("{seconds}s");
+    }
+    if seconds < 0.0 {
+        return format!("-{}", fmt_duration(-seconds));
+    }
     if seconds < 1e-6 {
         format!("{:.1}ns", seconds * 1e9)
     } else if seconds < 1e-3 {
@@ -320,5 +355,84 @@ mod tests {
         assert!(fmt_duration(3.0).contains('s'));
         assert_eq!(fmt_bytes(512), "512B");
         assert!(fmt_bytes(10 * 1024 * 1024).contains("MiB"));
+    }
+
+    #[test]
+    fn quantile_zero_no_longer_reports_one_microsecond_for_slow_samples() {
+        // Old bug: q=0.0 gave target rank 0, so the scan satisfied
+        // `cum >= target` at the very first (empty) bucket and reported
+        // bounds[0] = 1µs even when every sample took seconds.
+        let mut h = LatencyHistogram::new();
+        for _ in 0..10 {
+            h.record(2.0); // 2 seconds each
+        }
+        let q0 = h.quantile(0.0);
+        assert!(
+            q0 >= 1.0,
+            "q=0 must land in the slow samples' bucket, got {q0}"
+        );
+        // q=0 and q=0.01 agree when all mass sits in one bucket.
+        assert_eq!(q0, h.quantile(0.01));
+        // Monotone through the full quantile range.
+        assert!(h.quantile(0.0) <= h.quantile(1.0));
+    }
+
+    #[test]
+    fn quantile_zero_fix_holds_through_router_merge_path() {
+        // The router aggregates per-replica latency by merging histograms
+        // (Metrics::aggregate → merge); the q=0 fix must survive that
+        // path too: merging slow-only samples into a fresh histogram (the
+        // aggregate accumulator starts empty) must not resurrect the
+        // 1µs floor.
+        let mut replica = LatencyHistogram::new();
+        for _ in 0..5 {
+            replica.record(0.5);
+        }
+        let mut aggregate = LatencyHistogram::new();
+        aggregate.merge(&replica);
+        assert!(aggregate.quantile(0.0) >= 0.5 * 0.99);
+        assert_eq!(aggregate.quantile(0.0), replica.quantile(0.0));
+    }
+
+    #[test]
+    fn nan_record_no_longer_poisons_mean_forever() {
+        // Old bug: a NaN sample fell past every bound into the overflow
+        // bucket and was added to `sum`, so mean() was NaN for the rest of
+        // the histogram's life (and telemetry JSON exported NaN).
+        let mut h = LatencyHistogram::new();
+        h.record(1e-3);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(f64::NEG_INFINITY);
+        assert_eq!(h.count(), 1, "non-finite samples are not recorded");
+        assert_eq!(h.dropped_samples(), 3);
+        assert!((h.mean() - 1e-3).abs() < 1e-15, "mean stays finite");
+        assert!(h.quantile(0.99).is_finite());
+    }
+
+    #[test]
+    fn merge_carries_dropped_sample_counts() {
+        let mut a = LatencyHistogram::new();
+        a.record(f64::NAN);
+        let mut b = LatencyHistogram::new();
+        b.record(f64::INFINITY);
+        b.record(2e-4);
+        a.merge(&b);
+        assert_eq!(a.dropped_samples(), 2);
+        assert_eq!(a.count(), 1);
+        assert!(a.mean().is_finite());
+    }
+
+    #[test]
+    fn fmt_duration_negative_no_longer_prints_as_nanoseconds() {
+        // Old bug: -3.0 satisfied `seconds < 1e-6` and printed as
+        // "-3000000000.0ns"; NaN/inf fell into the same branch.
+        assert_eq!(fmt_duration(-3.0), "-3.000s");
+        assert_eq!(fmt_duration(-2.5e-3), "-2.500ms");
+        assert!(fmt_duration(-5e-7).ends_with("ns"));
+        assert!(fmt_duration(f64::NAN).contains("NaN"));
+        assert_eq!(fmt_duration(f64::INFINITY), "infs");
+        assert_eq!(fmt_duration(f64::NEG_INFINITY), "-infs");
+        assert!(fmt_duration(0.0).ends_with("ns"));
     }
 }

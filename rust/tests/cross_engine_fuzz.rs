@@ -11,7 +11,13 @@
 //!    bitwise, `L[φ]` at tolerance);
 //! 3. **finite differences** — everything ≡ a central finite difference of
 //!    the graph's plain forward evaluation, the only oracle that shares no
-//!    code with any engine.
+//!    code with any engine;
+//! 4. **stochastic (STDE)** — the sampled estimator's `φ` is bitwise
+//!    identical to DOF (the value row is exact, never estimated), its
+//!    `L[φ]` estimate lands within a few of its own reported standard
+//!    errors of the exact answer, and a fixed seed replays the estimate
+//!    bit-for-bit. `DOF_STDE_SAMPLES=<n>` raises the sample count (the
+//!    scheduled CI job uses a larger count, tightening the bound).
 //!
 //! ≥200 seeded cases by default; `DOF_FUZZ_CASES=<n>` scales the run (the
 //! scheduled CI job uses a larger count). Failures print the reproducing
@@ -20,7 +26,9 @@
 use dof::autodiff::dof_tape::dof_forward_tape;
 use dof::autodiff::{DofEngine, DofResult, HessianEngine, HessianResult, TangentArena};
 use dof::graph::Graph;
-use dof::jet::{terms_from_symmetric, DirectionBasis, JetEngine};
+use dof::jet::{
+    terms_from_symmetric, DirectionBasis, DirectionSampling, JetEngine, StochasticJetEngine,
+};
 use dof::parallel::Pool;
 use dof::plan::{OperatorProgram, PlanOptions};
 use dof::prop::generator::{random_operator_case, OperatorCase};
@@ -46,6 +54,27 @@ fn jet_engine(case: &OperatorCase) -> JetEngine {
     let n = case.n();
     let basis = DirectionBasis::from_terms(n, &terms_from_symmetric(&case.a), case.b.as_deref());
     JetEngine::new(basis).with_constant(case.c)
+}
+
+fn stde_samples() -> u32 {
+    // Modest default: the acceptance bound scales with the estimator's own
+    // reported std_error, so fewer samples loosen (never weaken) the check;
+    // the scheduled job raises this to tighten it.
+    std::env::var("DOF_STDE_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128)
+}
+
+fn stochastic_engine(case: &OperatorCase, samples: u32, seed: u64) -> StochasticJetEngine {
+    StochasticJetEngine::from_terms(
+        case.n(),
+        terms_from_symmetric(&case.a),
+        DirectionSampling::Gaussian,
+        samples,
+        seed,
+    )
+    .with_lower_order(case.b.clone(), case.c)
 }
 
 fn assert_dof_bitwise(planned: &DofResult, reference: &DofResult, what: &str) -> PropResult {
@@ -237,6 +266,35 @@ fn one_case(g: &mut Gen) -> PropResult {
         close(planned.operator_values.at(bi, 0), fd, 2e-3)
             .map_err(|e| format!("{}: dof vs FD row {bi}: {e}", case.family))?;
     }
+
+    // 4. Stochastic (STDE) fourth participant: φ bitwise vs DOF, the
+    // estimate within a few of its own standard errors of the exact L[φ],
+    // and the same seed replays the estimate bit-for-bit.
+    let seed = g.rng().next_u64();
+    let st_eng = stochastic_engine(&case, stde_samples(), seed);
+    let st = st_eng.compute(&case.graph, &case.x);
+    let st2 = st_eng.compute(&case.graph, &case.x);
+    if st.operator_values != st2.operator_values || st.values != st2.values {
+        return Err(what("stochastic estimate not seed-replayable"));
+    }
+    if st.values != planned.values {
+        return Err(what("stochastic vs dof: φ values differ bitwise"));
+    }
+    for bi in 0..case.batch() {
+        let exact = planned.operator_values.at(bi, 0);
+        let est = st.operator_values.at(bi, 0);
+        // 8 standard errors plus a floor for (near-)deterministic
+        // operators whose reported variance is ~0.
+        let tol = 8.0 * st.std_error.at(bi, 0) + 1e-6 * (1.0 + exact.abs());
+        if (est - exact).abs() > tol {
+            return Err(format!(
+                "{}: stochastic row {bi}: estimate {est} vs exact {exact} \
+                 exceeds {tol} ({} samples, seed {seed})",
+                case.family,
+                st.samples
+            ));
+        }
+    }
     Ok(())
 }
 
@@ -351,10 +409,14 @@ fn poisoned_inputs_rejected_identically_by_every_engine() {
         if !expected.contains("non-finite input at row") {
             return Err(format!("unexpected gate message: {expected}"));
         }
-        let engines: [(&str, Result<(), String>); 3] = [
+        let engines: [(&str, Result<(), String>); 4] = [
             ("dof", dof_engine(case).validate_input(&case.graph, &case.x)),
             ("hessian", hessian_engine(case).validate_input(&case.graph, &case.x)),
             ("jet", jet_engine(case).validate_input(&case.graph, &case.x)),
+            (
+                "stochastic",
+                stochastic_engine(case, 4, 1).validate_input(&case.graph, &case.x),
+            ),
         ];
         for (name, res) in engines {
             match res {
@@ -373,8 +435,11 @@ fn poisoned_inputs_rejected_identically_by_every_engine() {
         let e1 = dof_engine(case).validate_input(&case.graph, &wrong);
         let e2 = hessian_engine(case).validate_input(&case.graph, &wrong);
         let e3 = jet_engine(case).validate_input(&case.graph, &wrong);
-        if e1.is_ok() || e1 != e2 || e2 != e3 {
-            return Err(format!("width rejection differs: {e1:?} / {e2:?} / {e3:?}"));
+        let e4 = stochastic_engine(case, 4, 1).validate_input(&case.graph, &wrong);
+        if e1.is_ok() || e1 != e2 || e2 != e3 || e3 != e4 {
+            return Err(format!(
+                "width rejection differs: {e1:?} / {e2:?} / {e3:?} / {e4:?}"
+            ));
         }
         Ok(())
     });

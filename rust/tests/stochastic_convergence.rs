@@ -1,0 +1,267 @@
+//! Convergence and determinism battery for the stochastic Taylor jet
+//! engine (STDE):
+//!
+//! * **Unbiasedness, fuzzed** — over ≥50 seeded `prop::generator` operator
+//!   families, the estimate lands within a few of its own reported
+//!   standard errors of the exact DOF answer, for both Gaussian and
+//!   sparse-Rademacher direction sampling (`E[estimate] = exact`; the
+//!   reported `std_error` is the certificate).
+//! * **Convergence rate** — on a fixed operator, the mean absolute error
+//!   shrinks as the sample count grows (the ~1/√S law, checked end to
+//!   end rather than per-point).
+//! * **Determinism** — per-point direction streams are counter-derived
+//!   from `(seed, global point index, sample index)`, so a fixed seed is
+//!   bit-identical across 1/2/4/8 threads and every shard decomposition,
+//!   and matches the unsharded path.
+//! * **Variance honesty** — the engine's reported `variance / samples`
+//!   tracks the empirical spread of independent estimates.
+//!
+//! `DOF_STDE_SAMPLES=<n>` raises the sample count (the scheduled CI job
+//! uses a larger count, tightening every bound here).
+
+use dof::autodiff::DofEngine;
+use dof::graph::{Act, Graph};
+use dof::jet::{terms_from_symmetric, DirectionSampling, StochasticJetEngine};
+use dof::nn::{Mlp, MlpSpec};
+use dof::operators::{CoeffSpec, HigherOrderOperator, HigherOrderSpec, Operator};
+use dof::parallel::Pool;
+use dof::prop::generator::{random_operator_case, OperatorCase};
+use dof::prop::{run_prop, PropResult};
+use dof::tensor::Tensor;
+use dof::util::Xoshiro256;
+
+fn stde_samples() -> u32 {
+    std::env::var("DOF_STDE_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256)
+}
+
+fn mlp(n: usize, seed: u64) -> Graph {
+    Mlp::init(
+        MlpSpec {
+            in_dim: n,
+            hidden: 16,
+            layers: 2,
+            out_dim: 1,
+            act: Act::Tanh,
+        },
+        seed,
+    )
+    .to_graph()
+}
+
+fn case_engine(
+    case: &OperatorCase,
+    sampling: DirectionSampling,
+    samples: u32,
+    seed: u64,
+) -> StochasticJetEngine {
+    StochasticJetEngine::from_terms(
+        case.n(),
+        terms_from_symmetric(&case.a),
+        sampling,
+        samples,
+        seed,
+    )
+    .with_lower_order(case.b.clone(), case.c)
+}
+
+/// The estimate must land within `8·std_error` (plus a floor for
+/// operators whose stochastic part is ~0) of the exact value, per row.
+fn assert_within_reported_error(
+    exact: &Tensor,
+    est: &Tensor,
+    std_error: &Tensor,
+    batch: usize,
+    what: &str,
+) -> PropResult {
+    for bi in 0..batch {
+        let e = exact.at(bi, 0);
+        let v = est.at(bi, 0);
+        let tol = 8.0 * std_error.at(bi, 0) + 1e-6 * (1.0 + e.abs());
+        if (v - e).abs() > tol {
+            return Err(format!(
+                "{what}: row {bi}: estimate {v} vs exact {e} exceeds {tol}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// ≥50 fuzzed operator families, both sampling laws: the estimate agrees
+/// with the exact DOF engine to within its own error report, and φ (never
+/// estimated) is bitwise identical.
+#[test]
+fn estimator_is_unbiased_over_fuzz_families() {
+    let samples = stde_samples();
+    run_prop("stde unbiasedness", 50, 0x57DE_0001, |g| {
+        let case = random_operator_case(g);
+        let exact = DofEngine::new(&case.a)
+            .with_lower_order(case.b.clone(), case.c)
+            .compute(&case.graph, &case.x);
+        let nnz = (case.n() / 2).max(1);
+        let laws = [
+            ("gaussian", DirectionSampling::Gaussian),
+            ("sparse", DirectionSampling::SparseRademacher { nnz }),
+        ];
+        for (name, sampling) in laws {
+            let seed = g.rng().next_u64();
+            let st = case_engine(&case, sampling, samples, seed)
+                .compute(&case.graph, &case.x);
+            if st.values != exact.values {
+                return Err(format!("{}: {name}: φ differs bitwise", case.family));
+            }
+            assert_within_reported_error(
+                &exact.operator_values,
+                &st.operator_values,
+                &st.std_error,
+                case.batch(),
+                &format!("{} ({name}, seed {seed})", case.family),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// The ~1/√S law, end to end: on a fixed elliptic operator, the mean
+/// absolute error over 16 points shrinks from S=8 to S=256 (a 32×
+/// sample-budget increase buys ~5.7× less error; asserting a strict
+/// decrease leaves many standard deviations of slack).
+#[test]
+fn mean_abs_error_shrinks_as_samples_grow() {
+    let n = 6;
+    let graph = mlp(n, 5);
+    let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed: 3 });
+    let mut rng = Xoshiro256::new(17);
+    let x = Tensor::randn(&[16, n], &mut rng).scale(0.5);
+    let exact = op.dof_engine().compute(&graph, &x);
+    let mean_abs_err = |samples: u32| -> f64 {
+        let st = op
+            .stochastic_engine(DirectionSampling::Gaussian, samples, 99)
+            .compute(&graph, &x);
+        (0..16)
+            .map(|bi| (st.operator_values.at(bi, 0) - exact.operator_values.at(bi, 0)).abs())
+            .sum::<f64>()
+            / 16.0
+    };
+    let coarse = mean_abs_err(8);
+    let mid = mean_abs_err(64);
+    let fine = mean_abs_err(256);
+    assert!(
+        fine < coarse,
+        "error must shrink with samples: S=8 → {coarse:.3e}, S=64 → {mid:.3e}, \
+         S=256 → {fine:.3e}"
+    );
+    assert!(fine.is_finite() && coarse.is_finite());
+}
+
+/// The determinism contract: a fixed seed is bit-identical across thread
+/// counts and shard decompositions, and every sharded run matches the
+/// unsharded [`StochasticJetEngine::compute`]. Covers both the elliptic
+/// (order-2) and biharmonic (order-4) paths.
+#[test]
+fn fixed_seed_estimates_are_thread_and_shard_invariant() {
+    let elliptic_n = 5;
+    let elliptic = (
+        mlp(elliptic_n, 2),
+        Operator::from_spec(CoeffSpec::EllipticGram {
+            n: elliptic_n,
+            rank: elliptic_n,
+            seed: 7,
+        })
+        .stochastic_engine(DirectionSampling::Gaussian, 16, 42),
+        elliptic_n,
+    );
+    let bi_d = 3;
+    let biharmonic = (
+        mlp(bi_d, 4),
+        HigherOrderOperator::from_spec(HigherOrderSpec::Biharmonic { d: bi_d })
+            .stochastic_engine(DirectionSampling::SparseRademacher { nnz: 2 }, 16, 42),
+        bi_d,
+    );
+    for (graph, engine, n) in [elliptic, biharmonic] {
+        let mut rng = Xoshiro256::new(31);
+        // 11 rows: never a whole number of any shard size below.
+        let x = Tensor::randn(&[11, n], &mut rng).scale(0.5);
+        let base = engine.compute(&graph, &x);
+        for threads in [1usize, 2, 4, 8] {
+            let pool = Pool::new(threads);
+            for shard_rows in [1usize, 3, 4, 5, 32] {
+                let r = engine.compute_sharded(&graph, &x, &pool, shard_rows);
+                assert_eq!(
+                    r.operator_values, base.operator_values,
+                    "estimate not invariant at {threads} threads, shard_rows {shard_rows}"
+                );
+                assert_eq!(r.values, base.values);
+                assert_eq!(r.variance, base.variance);
+                assert_eq!(r.std_error, base.std_error);
+                assert_eq!(r.cost, base.cost);
+                assert_eq!(r.samples, base.samples);
+            }
+        }
+    }
+}
+
+/// Variance honesty: over 48 independent seeds, the empirical variance of
+/// the estimates tracks the engine's mean reported `variance / samples`
+/// (the squared standard error) within a loose constant factor.
+#[test]
+fn variance_report_tracks_empirical_spread() {
+    let n = 4;
+    let graph = mlp(n, 9);
+    let op = Operator::from_spec(CoeffSpec::EllipticGram { n, rank: n, seed: 13 });
+    let mut rng = Xoshiro256::new(23);
+    let x = Tensor::randn(&[1, n], &mut rng).scale(0.5);
+    let samples = 32u32;
+    let reps = 48usize;
+    let mut estimates = Vec::with_capacity(reps);
+    let mut reported = 0.0;
+    for seed in 0..reps as u64 {
+        let st = op
+            .stochastic_engine(DirectionSampling::Gaussian, samples, 1000 + seed)
+            .compute(&graph, &x);
+        estimates.push(st.operator_values.at(0, 0));
+        reported += st.std_error.at(0, 0).powi(2);
+    }
+    reported /= reps as f64;
+    let mean = estimates.iter().sum::<f64>() / reps as f64;
+    let empirical = estimates.iter().map(|e| (e - mean).powi(2)).sum::<f64>()
+        / (reps - 1) as f64;
+    assert!(
+        reported > 0.0 && empirical > 0.0,
+        "a nontrivial operator must have nonzero estimator variance"
+    );
+    let ratio = empirical / reported;
+    assert!(
+        (0.35..=2.8).contains(&ratio),
+        "empirical spread {empirical:.3e} vs reported std_error² {reported:.3e} \
+         (ratio {ratio:.2}) — the variance report is dishonest"
+    );
+}
+
+/// The order-4 path against its exact oracle: the biharmonic estimate
+/// agrees with the exact jet engine to within its own error report.
+#[test]
+fn biharmonic_estimate_converges_to_exact_jet() {
+    let d = 3;
+    let graph = mlp(d, 6);
+    let op = HigherOrderOperator::from_spec(HigherOrderSpec::Biharmonic { d });
+    let mut rng = Xoshiro256::new(41);
+    let x = Tensor::randn(&[2, d], &mut rng).scale(0.5);
+    let exact = op.jet_engine().compute(&graph, &x);
+    let samples = stde_samples().max(128);
+    let st = op
+        .stochastic_engine(DirectionSampling::Gaussian, samples, 77)
+        .compute(&graph, &x);
+    assert_eq!(st.values, exact.values, "φ is exact, never estimated");
+    for bi in 0..2 {
+        let e = exact.operator_values.at(bi, 0);
+        let v = st.operator_values.at(bi, 0);
+        let tol = 8.0 * st.std_error.at(bi, 0) + 1e-6 * (1.0 + e.abs());
+        assert!(
+            (v - e).abs() <= tol,
+            "row {bi}: Δ²φ estimate {v} vs exact {e} exceeds {tol} ({samples} samples)"
+        );
+    }
+}
